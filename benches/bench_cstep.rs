@@ -1,0 +1,43 @@
+//! C-step operator benchmarks (paper §4.2 runtime claims):
+//! binarization O(P), binarization+scale O(P), ternarization+scale
+//! O(P log P), powers-of-two O(1)/weight, fixed-codebook O(log K)/weight.
+//! Sizes match the paper's nets: LeNet300 (266k), LeNet5 (430k), VGG (14M).
+
+use lcquant::quant::{binary, fixed, pow2, ternary};
+use lcquant::util::rng::Rng;
+use lcquant::util::timer::bench;
+
+fn main() {
+    println!("== bench_cstep: quantization operators ==");
+    let sizes = [266_200usize, 430_500, 14_022_016];
+    for &p in &sizes {
+        let mut rng = Rng::new(42);
+        let w: Vec<f32> = (0..p).map(|_| rng.normal(0.0, 0.1)).collect();
+        let iters = if p > 1_000_000 { 10 } else { 40 };
+
+        let s = bench(&format!("binarize            P={p}"), iters, || binary::binarize(&w));
+        println!("{}  ({:.2} ns/weight)", s.report(), s.median_s * 1e9 / p as f64);
+
+        let s = bench(&format!("binarize_with_scale P={p}"), iters, || {
+            binary::binarize_with_scale(&w)
+        });
+        println!("{}  ({:.2} ns/weight)", s.report(), s.median_s * 1e9 / p as f64);
+
+        let s = bench(&format!("ternarize_with_scale P={p}"), iters, || {
+            ternary::ternarize_with_scale(&w)
+        });
+        println!("{}  ({:.2} ns/weight)", s.report(), s.median_s * 1e9 / p as f64);
+
+        let s = bench(&format!("pow2 C=6            P={p}"), iters, || {
+            pow2::quantize_pow2(&w, 6)
+        });
+        println!("{}  ({:.2} ns/weight)", s.report(), s.median_s * 1e9 / p as f64);
+
+        let cb: Vec<f32> = (0..16).map(|i| -0.4 + i as f32 * 0.05).collect();
+        let s = bench(&format!("fixed K=16          P={p}"), iters, || {
+            fixed::quantize_fixed(&w, &cb)
+        });
+        println!("{}  ({:.2} ns/weight)", s.report(), s.median_s * 1e9 / p as f64);
+        println!();
+    }
+}

@@ -1,0 +1,64 @@
+//! End-to-end LC iteration cost, LeNet300 K∈{2,64}: wall-clock of one
+//! (L step + C step + multiplier update) cycle, and the L/C split — the
+//! paper's §3.3 claim is that C-step time is negligible.
+
+use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
+use lcquant::coordinator::{Backend, NativeBackend};
+use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::nn::{Mlp, MlpSpec};
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::util::timer::{bench, Timer};
+
+fn main() {
+    println!("== bench_e2e: one LC iteration (LeNet300, 20 SGD steps/L-step) ==");
+    let mut data = SynthMnist::generate(1_024, 1);
+    data.subtract_mean(None);
+    let spec = MlpSpec::lenet300();
+    let net = Mlp::new(&spec, 1);
+    let mut backend = NativeBackend::new(net, data, None, 128, 1);
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+    let l_steps = 20;
+
+    for &k in &[2usize, 64] {
+        let mut quantizers: Vec<LayerQuantizer> = (0..backend.n_layers())
+            .map(|l| LayerQuantizer::new(Scheme::AdaptiveCodebook { k }, l as u64))
+            .collect();
+        // initialize wc/lambda
+        let w0 = backend.weights();
+        let mut wc: Vec<Vec<f32>> = w0
+            .iter()
+            .zip(quantizers.iter_mut())
+            .map(|(wl, q)| q.compress(wl).wc)
+            .collect();
+        let mut lambda: Vec<Vec<f32>> = w0.iter().map(|l| vec![0.0; l.len()]).collect();
+        let mu = 0.01f32;
+
+        let mut l_time = 0.0f64;
+        let mut c_time = 0.0f64;
+        let s = bench(&format!("LC iteration K={k}"), 10, || {
+            // L step
+            let t = Timer::start();
+            let penalty = PenaltyState { wc: wc.clone(), lambda: lambda.clone(), mu };
+            run_sgd(&mut backend, &mut opt, l_steps, 0.02, Some(&penalty));
+            l_time += t.elapsed_s();
+            // C step
+            let t = Timer::start();
+            let w = backend.weights();
+            for (l, q) in quantizers.iter_mut().enumerate() {
+                let out = q.compress(&w[l]);
+                wc[l] = out.wc;
+            }
+            for l in 0..w.len() {
+                lcquant::linalg::vecops::update_multipliers(&mut lambda[l], &w[l], &wc[l], mu);
+            }
+            c_time += t.elapsed_s();
+        });
+        println!("{}", s.report());
+        // l_time/c_time include warmup runs; the *ratio* is what matters.
+        let frac = c_time / (l_time + c_time);
+        println!(
+            "  split: C step is {:.2}% of the LC cycle (paper: negligible)",
+            100.0 * frac
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! One-command regeneration of every paper table/figure at quick scale —
+//! `cargo bench` therefore reproduces the paper's evaluation section
+//! end-to-end (rows land in results-bench/, shapes discussed in
+//! EXPERIMENTS.md).
+
+use lcquant::experiments::{self, Scale};
+use lcquant::util::timer::Timer;
+
+fn main() {
+    lcquant::util::log::set_level(lcquant::util::log::Level::Warn);
+    let out = "results-bench";
+    std::fs::create_dir_all(out).expect("mkdir");
+    println!("== bench_experiments: regenerating all paper tables/figures (quick scale) ==");
+    for id in experiments::ALL {
+        let t = Timer::start();
+        match experiments::run(id, out, Scale::Quick, 42) {
+            Ok(()) => println!("[{id}] done in {:.1}s", t.elapsed_s()),
+            Err(e) => println!("[{id}] FAILED: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! k-means benchmarks: the O(P log K) sorted-assignment step vs a naive
+//! O(PK) scan (paper §4.1), cold k-means++ starts vs warm starts
+//! (paper §3.3 / Fig. 10).
+
+use lcquant::quant::kmeans::{kmeans_1d, kmeans_pp_init, midpoints, nearest_sorted, nearest_via_mids};
+use lcquant::util::rng::Rng;
+use lcquant::util::timer::bench;
+
+fn naive_assign(data: &[f32], centroids: &[f32]) -> Vec<u32> {
+    data.iter()
+        .map(|&x| {
+            let mut best = 0u32;
+            let mut bd = f32::INFINITY;
+            for (i, &c) in centroids.iter().enumerate() {
+                let d = (x - c).abs();
+                if d < bd {
+                    bd = d;
+                    best = i as u32;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== bench_kmeans ==");
+    let p = 266_200usize;
+    let mut rng = Rng::new(1);
+    let data: Vec<f32> = (0..p).map(|_| rng.normal(0.0, 0.1)).collect();
+
+    for &k in &[2usize, 16, 64, 256] {
+        let centroids = kmeans_pp_init(&data, k, &mut rng);
+        let s = bench(&format!("assign naive  O(PK)    K={k}"), 20, || {
+            naive_assign(&data, &centroids)
+        });
+        println!("{}", s.report());
+        let s = bench(&format!("assign bsearch O(PlogK) K={k}"), 20, || {
+            data.iter()
+                .map(|&x| nearest_sorted(&centroids, x) as u32)
+                .collect::<Vec<u32>>()
+        });
+        println!("{}", s.report());
+        let s = bench(&format!("assign midpoint scan    K={k}"), 20, || {
+            let mids = midpoints(&centroids);
+            data.iter()
+                .map(|&x| nearest_via_mids(&mids, x) as u32)
+                .collect::<Vec<u32>>()
+        });
+        println!("{}", s.report());
+    }
+
+    println!();
+    for &k in &[4usize, 64] {
+        let s = bench(&format!("kmeans cold (kmeans++ + Lloyd) K={k}"), 5, || {
+            let mut rng = Rng::new(3);
+            let mut c = kmeans_pp_init(&data, k, &mut rng);
+            kmeans_1d(&data, &mut c, 200).iterations
+        });
+        println!("{}", s.report());
+        // warm start: fully converged centroids (Lloyd can need hundreds of
+        // iterations at K=64 on gaussian data; run to true convergence)
+        let mut rng2 = Rng::new(3);
+        let mut warm = kmeans_pp_init(&data, k, &mut rng2);
+        kmeans_1d(&data, &mut warm, 20_000);
+        let s = bench(&format!("kmeans warm (converged start)  K={k}"), 10, || {
+            let mut c = warm.clone();
+            kmeans_1d(&data, &mut c, 200).iterations
+        });
+        println!("{}", s.report());
+    }
+
+    // VGG scale: threaded Lloyd assignment (P >= 2M engages the pool)
+    println!();
+    let pv = 14_022_016usize;
+    let mut rngv = Rng::new(9);
+    let big: Vec<f32> = (0..pv).map(|_| rngv.normal(0.0, 0.1)).collect();
+    for &k in &[2usize, 64] {
+        let init = kmeans_pp_init(&big, k, &mut rngv);
+        let s = bench(&format!("kmeans 10-iter P=14M (threaded) K={k}"), 3, || {
+            let mut c = init.clone();
+            kmeans_1d(&big, &mut c, 10).iterations
+        });
+        println!("{}", s.report());
+    }
+}

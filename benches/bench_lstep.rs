@@ -1,0 +1,57 @@
+//! L-step throughput: minibatch loss+grad+update steps per second on the
+//! native backend (and the PJRT backend when artifacts are present),
+//! LeNet300 shapes, batch 128. The C step is benchmarked separately
+//! (bench_cstep) — the paper's claim "C-step runtime is negligible vs the
+//! L step" is checked in bench_e2e.
+
+use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
+use lcquant::coordinator::{Backend, NativeBackend};
+use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::nn::{Mlp, MlpSpec};
+use lcquant::util::rng::Rng;
+use lcquant::util::timer::bench;
+
+fn main() {
+    println!("== bench_lstep ==");
+    let mut data = SynthMnist::generate(1_024, 1);
+    data.subtract_mean(None);
+    let spec = MlpSpec::lenet300();
+    let net = Mlp::new(&spec, 1);
+    let mut backend = NativeBackend::new(net, data.clone(), None, 128, 1);
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+
+    let s = bench("native L-step (batch=128, no penalty)", 30, || {
+        run_sgd(&mut backend, &mut opt, 1, 0.05, None)
+    });
+    println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
+
+    let w = backend.weights();
+    let penalty = PenaltyState {
+        wc: w.iter().map(|l| vec![0.0; l.len()]).collect(),
+        lambda: w.iter().map(|l| vec![0.0; l.len()]).collect(),
+        mu: 0.01,
+    };
+    let s = bench("native L-step (batch=128, with penalty)", 30, || {
+        run_sgd(&mut backend, &mut opt, 1, 0.05, Some(&penalty))
+    });
+    println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
+
+    // PJRT backend, if artifacts were built
+    let dir = lcquant::runtime::Engine::default_dir();
+    if lcquant::runtime::Engine::available(&dir) {
+        let engine = lcquant::runtime::Engine::open(&dir).expect("engine");
+        let mut rng = Rng::new(2);
+        let (train, _) = data.split(0.1, &mut rng);
+        let mut pjrt = lcquant::runtime::PjrtBackend::new(engine, "lenet300", train, None, 3)
+            .expect("pjrt backend");
+        // warm the executable cache
+        let _ = pjrt.next_loss_grads();
+        let mut popt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.95);
+        let s = bench("pjrt L-step (batch from artifact)", 30, || {
+            run_sgd(&mut pjrt, &mut popt, 1, 0.05, None)
+        });
+        println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
+    } else {
+        println!("(artifacts not built; skipping PJRT L-step — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,103 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): train the paper's LeNet300
+//! (266,610 parameters) on synthetic MNIST, log the reference loss curve,
+//! then LC-quantize to K ∈ {2, 4} comparing LC / DC / iDC — the core
+//! protocol of paper §5.3 at a CPU-sized budget.
+//!
+//! ```sh
+//! cargo run --release --example lenet300_mnist -- [--steps 1200] [--n 4000]
+//! ```
+
+use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+use lcquant::coordinator::Backend;
+use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::experiments::common::{run_all_algorithms, train_reference_on, Protocol};
+use lcquant::nn::MlpSpec;
+use lcquant::quant::ratio::compression_ratio;
+use lcquant::quant::Scheme;
+use lcquant::util::cli::Args;
+use lcquant::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    lcquant::util::log::set_level(lcquant::util::log::Level::Info);
+    let args = Args::from_env();
+    let n = args.get_usize("n", 4_000);
+    let ref_steps = args.get_usize("steps", 1_200);
+    let seed = args.get_u64("seed", 42);
+
+    let mut p = Protocol::quick();
+    p.n_data = n;
+    p.ref_steps = ref_steps;
+    p.lc_iterations = 25;
+    p.l_steps = 80;
+
+    let spec = MlpSpec::lenet300();
+    let (p1, p0) = spec.param_counts();
+    println!("LeNet300: P1={p1} weights, P0={p0} biases");
+
+    // --- train reference, logging the loss curve ---
+    let mut data = SynthMnist::generate(n, seed);
+    data.subtract_mean(None);
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let (train, test) = data.split(0.1, &mut rng);
+    // manual training loop to print the loss curve
+    let net = lcquant::nn::Mlp::new(&spec, seed);
+    let mut backend = lcquant::coordinator::NativeBackend::new(net, train, Some(test), p.batch, seed);
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), p.momentum);
+    let chunk = (ref_steps / 10).max(1);
+    let mut done = 0;
+    println!("step,loss,train_err");
+    while done < ref_steps {
+        let k = chunk.min(ref_steps - done);
+        let lr = p.lr0 * p.lr_decay.powi((done / chunk) as i32);
+        run_sgd(&mut backend, &mut opt, k, lr, None);
+        done += k;
+        let (l, e) = backend.eval_train();
+        println!("{done},{l:.5},{e:.2}");
+    }
+    let mut tr = lcquant::experiments::common::TrainedRef {
+        ref_weights: backend.weights(),
+        ref_biases: backend.biases(),
+        ref_train_loss: backend.eval_train().0,
+        ref_train_err: backend.eval_train().1,
+        ref_test_err: backend.eval_test().map(|(_, e)| e),
+        backend,
+    };
+    println!(
+        "reference: loss {:.4}, train err {:.2}%, test err {:.2}%",
+        tr.ref_train_loss,
+        tr.ref_train_err,
+        tr.ref_test_err.unwrap()
+    );
+
+    // --- LC vs DC vs iDC at K = 4 and K = 2 ---
+    for k in [4usize, 2] {
+        let scheme = Scheme::AdaptiveCodebook { k };
+        let (lc, dc, idc) = run_all_algorithms(&mut tr, &scheme, &p, seed + k as u64);
+        let rho = compression_ratio(p1, p0, k, spec.n_layers());
+        println!("\nK={k} (rho ~ x{rho:.1}):");
+        println!(
+            "  LC : train loss {:.5} | train err {:.2}% | test err {:.2}%",
+            lc.train_loss,
+            lc.train_err,
+            lc.test_err.unwrap()
+        );
+        println!(
+            "  DC : train loss {:.5} | train err {:.2}% | test err {:.2}%",
+            dc.train_loss,
+            dc.train_err,
+            dc.test_err.unwrap()
+        );
+        println!(
+            "  iDC: train loss {:.5} | train err {:.2}% | test err {:.2}%",
+            idc.train_loss,
+            idc.train_err,
+            idc.test_err.unwrap()
+        );
+        for (l, cb) in lc.codebooks.iter().enumerate() {
+            println!("  LC layer-{} codebook: {:?}", l + 1, cb);
+        }
+    }
+    // keep the helper referenced for docs parity
+    let _ = train_reference_on;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Paper §5.2 workload as a standalone example: quantize a linear
+//! super-resolution regressor (clustered, non-Gaussian weights) with exact
+//! L and C steps, and watch DC/iDC stall while LC improves.
+//!
+//! ```sh
+//! cargo run --release --example linreg_superres -- [--n 500] [--k 2]
+//! ```
+
+use lcquant::data::superres::SuperResData;
+use lcquant::experiments::fig7_linreg::{run_idc, run_lc, LinRegLc};
+use lcquant::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 500);
+    let k = args.get_usize("k", 2);
+    let seed = args.get_u64("seed", 42);
+
+    let data = SuperResData::generate(n, 0.05, seed);
+    println!(
+        "super-resolution data: {} pairs, x dim {}, y dim {}",
+        data.x.rows, data.x.cols, data.y.cols
+    );
+    let mut lr = LinRegLc::new(&data);
+    lr.solve_reference()?;
+    println!("reference loss: {:.6}", lr.loss_of(&lr.w));
+
+    let lc = run_lc(&mut lr, k, 10.0, 1.1, 30, seed)?;
+    let idc = run_idc(&mut lr, k, 30, seed)?;
+    println!("\niter,lc_loss,idc_loss,kmeans_iters");
+    for j in 0..lc.loss_per_iter.len() {
+        println!(
+            "{j},{:.6},{:.6},{}",
+            lc.loss_per_iter[j],
+            idc.loss_per_iter.get(j).copied().unwrap_or(f64::NAN),
+            lc.kmeans_iters.get(j).copied().unwrap_or(0)
+        );
+    }
+    println!(
+        "\nK={k}: DC loss {:.6} (= iDC forever), LC final {:.6}; LC codebook {:?}",
+        idc.loss_per_iter[0],
+        lc.loss_per_iter.last().unwrap(),
+        lc.final_codebook
+    );
+    Ok(())
+}

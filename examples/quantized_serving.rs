@@ -1,0 +1,140 @@
+//! Serve a **quantized** net through the AOT path: LC-binarize LeNet300,
+//! then run batched inference through the PJRT-compiled
+//! `lenet300_quantized_fwd` artifact — the forward pass whose layers are
+//! the L1 Pallas codebook-matmul kernel (assignments u8→i32 + a K-entry
+//! codebook per layer), exactly the hardware argument of paper §2.1.
+//! Reports batch latency and agreement with the native forward.
+//!
+//! Requires `make artifacts`. Falls back with a clear message otherwise.
+//!
+//! ```sh
+//! cargo run --release --example quantized_serving
+//! ```
+
+use anyhow::{anyhow, Result};
+use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+use lcquant::coordinator::{lc_quantize, Backend, LcConfig, MuSchedule, NativeBackend};
+use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::nn::sgd::ClippedLrSchedule;
+use lcquant::nn::{Mlp, MlpSpec};
+use lcquant::quant::kmeans::nearest_sorted;
+use lcquant::quant::Scheme;
+use lcquant::runtime::{literal_f32, literal_i32, Engine};
+use lcquant::util::rng::Rng;
+use lcquant::util::timer::Timer;
+
+fn main() -> Result<()> {
+    lcquant::util::log::set_level(lcquant::util::log::Level::Info);
+    let dir = Engine::default_dir();
+    if !Engine::available(&dir) {
+        return Err(anyhow!(
+            "artifacts not found at {dir:?} — run `make artifacts` first"
+        ));
+    }
+    let mut engine = Engine::open(&dir)?;
+    let spec_art = engine
+        .manifest
+        .artifacts
+        .get("lenet300_quantized_fwd")
+        .ok_or_else(|| anyhow!("artifact lenet300_quantized_fwd missing"))?
+        .clone();
+    let batch = spec_art.meta.get("batch").copied().unwrap_or(128.0) as usize;
+    let k = spec_art.meta.get("k").copied().unwrap_or(2.0) as usize;
+
+    // 1. Train + LC-quantize LeNet300 at K=2 natively.
+    let mut data = SynthMnist::generate(1_500, 42);
+    data.subtract_mean(None);
+    let mut rng = Rng::new(7);
+    let (train, test) = data.split(0.1, &mut rng);
+    let spec = MlpSpec::lenet300();
+    let net = Mlp::new(&spec, 1);
+    let mut backend = NativeBackend::new(net, train, Some(test), 128, 1);
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+    run_sgd(&mut backend, &mut opt, 400, 0.1, None);
+    let cfg = LcConfig {
+        scheme: Scheme::AdaptiveCodebook { k },
+        mu: MuSchedule::new(1e-3, 1.5),
+        iterations: 12,
+        l_steps: 50,
+        lr: ClippedLrSchedule { eta0: 0.05, decay: 0.99 },
+        eval_every: 0,
+        ..LcConfig::default()
+    };
+    let lc = lc_quantize(&mut backend, &cfg);
+    println!(
+        "quantized net ready: train err {:.2}%, codebooks {:?}",
+        lc.train_err, lc.codebooks
+    );
+
+    // 2. Pack weights as (assignments, codebook) pairs for the kernel.
+    let mut inputs: Vec<xla::Literal> = Vec::new();
+    let test_set = backend.test.as_ref().unwrap();
+    let mut x = vec![0.0f32; batch * 784];
+    let mut labels = Vec::with_capacity(batch);
+    for r in 0..batch {
+        let i = r % test_set.len();
+        x[r * 784..(r + 1) * 784].copy_from_slice(test_set.images.row(i));
+        labels.push(test_set.labels[i]);
+    }
+    inputs.push(literal_f32(&x, &[batch, 784])?);
+    let biases = backend.biases();
+    for (l, (wl, cb)) in lc.wc.iter().zip(&lc.codebooks).enumerate() {
+        let assigns: Vec<i32> = wl
+            .iter()
+            .map(|&v| nearest_sorted(cb, v) as i32)
+            .collect();
+        let shape = [spec.sizes[l], spec.sizes[l + 1]];
+        inputs.push(literal_i32(&assigns, &shape)?);
+        let mut cb_padded = cb.clone();
+        cb_padded.resize(k, *cb.last().unwrap_or(&0.0));
+        inputs.push(literal_f32(&cb_padded, &[k])?);
+        inputs.push(literal_f32(&biases[l], &[biases[l].len()])?);
+    }
+
+    // 3. Serve: compile once, then measure steady-state batch latency.
+    engine.compile("lenet300_quantized_fwd")?;
+    let mut latencies = Vec::new();
+    let mut logits = Vec::new();
+    for _ in 0..20 {
+        let t = Timer::start();
+        let out = engine.execute("lenet300_quantized_fwd", &inputs)?;
+        latencies.push(t.elapsed_ms());
+        logits = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = latencies[latencies.len() / 2];
+    println!(
+        "served {batch}-image batches: median latency {med:.2} ms ({:.0} img/s)",
+        batch as f64 / (med / 1e3)
+    );
+
+    // 4. Agreement with the native quantized forward.
+    let mut xm = lcquant::linalg::Mat::zeros(batch, 784);
+    xm.data.copy_from_slice(&x);
+    backend.set_weights(&lc.wc);
+    let (native_logits, _) = backend.net.forward(&xm, false, None);
+    let mut max_dev = 0.0f32;
+    for (a, b) in logits.iter().zip(&native_logits.data) {
+        max_dev = max_dev.max((a - b).abs());
+    }
+    println!("max |pjrt - native| logit deviation: {max_dev:.2e}");
+    let errs = native_logits
+        .data
+        .chunks(10)
+        .zip(&labels)
+        .filter(|(row, &l)| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+                != l as usize
+        })
+        .count();
+    println!("batch error rate: {:.1}%", 100.0 * errs as f64 / batch as f64);
+    if max_dev > 1e-3 {
+        return Err(anyhow!("kernel/native mismatch too large"));
+    }
+    println!("quantized_serving OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: train a small classifier on synthetic MNIST, quantize it to
+//! 1 bit/weight with the LC algorithm, and compare against direct
+//! compression.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+use lcquant::coordinator::{baselines, lc_quantize, Backend, LcConfig, MuSchedule, NativeBackend};
+use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::nn::sgd::ClippedLrSchedule;
+use lcquant::nn::{Mlp, MlpSpec};
+use lcquant::quant::ratio::compression_ratio;
+use lcquant::quant::Scheme;
+use lcquant::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    lcquant::util::log::set_level(lcquant::util::log::Level::Info);
+
+    // 1. Data: deterministic synthetic MNIST (90/10 split, zero-mean).
+    let mut data = SynthMnist::generate(2_000, 42);
+    data.subtract_mean(None);
+    let mut rng = Rng::new(7);
+    let (train, test) = data.split(0.1, &mut rng);
+
+    // 2. Reference net: 784-64-10 tanh MLP, Nesterov SGD.
+    let spec = MlpSpec::single_hidden(784, 64, 10);
+    let (p1, p0) = spec.param_counts();
+    let net = Mlp::new(&spec, 1);
+    let mut backend = NativeBackend::new(net, train, Some(test), 128, 1);
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+    run_sgd(&mut backend, &mut opt, 600, 0.1, None);
+    let (ref_loss, ref_err) = backend.eval_train();
+    let ref_test = backend.eval_test().unwrap().1;
+    println!("reference net: train loss {ref_loss:.4}, train err {ref_err:.2}%, test err {ref_test:.2}%");
+
+    // 3. Direct compression at K=2 (1 bit/weight): quantize-and-hope.
+    let w_ref = backend.weights();
+    let dc = baselines::direct_compression(&mut backend, &Scheme::AdaptiveCodebook { k: 2 }, 9);
+    println!(
+        "direct compression K=2: train loss {:.4}, test err {:.2}%",
+        dc.train_loss,
+        dc.test_err.unwrap()
+    );
+
+    // 4. LC algorithm at K=2.
+    backend.set_weights(&w_ref);
+    let cfg = LcConfig {
+        scheme: Scheme::AdaptiveCodebook { k: 2 },
+        mu: MuSchedule::new(1e-3, 1.4),
+        iterations: 20,
+        l_steps: 60,
+        lr: ClippedLrSchedule { eta0: 0.05, decay: 0.99 },
+        momentum: 0.95,
+        ..LcConfig::default()
+    };
+    let lc = lc_quantize(&mut backend, &cfg);
+    println!(
+        "LC K=2: train loss {:.4}, test err {:.2}% — codebooks {:?}",
+        lc.train_loss,
+        lc.test_err.unwrap(),
+        lc.codebooks
+    );
+    println!(
+        "compression ratio rho = x{:.1} ({} weights at 1 bit + {} float biases)",
+        compression_ratio(p1, p0, 2, spec.n_layers()),
+        p1,
+        p0
+    );
+    println!(
+        "LC improves training loss over DC by {:.1}x",
+        dc.train_loss / lc.train_loss.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Fig. 6 workload as an example: sweep hidden-layer width H and codebook
+//! size K, and print the loss/size surface plus the smallest net meeting a
+//! target loss.
+//!
+//! ```sh
+//! cargo run --release --example tradeoff_sweep -- [--hs 2,5,10] [--log2ks 1,2,4]
+//! ```
+
+use lcquant::experiments::{fig6_tradeoff, Scale};
+use lcquant::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    lcquant::util::log::set_level(lcquant::util::log::Level::Info);
+    let args = Args::from_env();
+    let out = args.get_or("out", "results");
+    std::fs::create_dir_all(out)?;
+    let scale = Scale::from_str(args.get_or("scale", "quick"));
+    fig6_tradeoff::run(out, scale, args.get_u64("seed", 42))?;
+    println!("surface written to {out}/fig6_surface.csv");
+    Ok(())
+}

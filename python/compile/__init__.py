@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 kernels + L2 models + AOT lowering).
+
+Python NEVER runs on the request path: `make artifacts` lowers everything
+to HLO text once; the rust coordinator loads the artifacts via PJRT.
+"""

@@ -1,0 +1,202 @@
+"""AOT lowering: JAX graphs → HLO **text** artifacts + manifest.json.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the published `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--batch 128]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+# x64 must be on before any tracing: the linreg L-step solves its SPD
+# system in f64 internally (f32 interface). The other artifacts specify
+# f32 shapes explicitly and are unaffected.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a python function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def tensor_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_artifacts(out_dir: str, batch: int, quant_k: int, progress=print):
+    """Lower every artifact; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": {}}
+
+    def emit(name, fn, in_specs, inputs_meta, outputs_meta, meta=None):
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(fn, in_specs)
+        # The HLO text printer ELIDES large dense constants ("{...}") and
+        # the parser zero-fills them — silently corrupting numerics on the
+        # rust side. Any artifact with a large constant is a bug: pass the
+        # tensor as an input instead.
+        if "constant({...})" in text:
+            raise ValueError(
+                f"artifact '{name}' contains an elided large constant; "
+                "pass it as an input instead (see linreg_lstep_fn docs)"
+            )
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "path": path,
+            "inputs": inputs_meta,
+            "outputs": outputs_meta,
+            "meta": meta or {},
+        }
+        progress(f"  {name}: {len(text)} chars")
+
+    sizes = model.LENET300_SIZES
+    n_out = sizes[-1]
+    pspecs = model.lenet300_param_specs()
+
+    # ---- lenet300_grad -------------------------------------------------
+    grad_in = [spec(s) for _, s in pspecs] + [
+        spec((batch, sizes[0])),
+        spec((batch, n_out)),
+    ]
+    grad_inputs = [tensor_entry(n, s) for n, s in pspecs] + [
+        tensor_entry("x", (batch, sizes[0])),
+        tensor_entry("y", (batch, n_out)),
+    ]
+    grad_outputs = [tensor_entry("loss", ())] + [
+        tensor_entry(f"d{n}", s) for n, s in pspecs
+    ]
+    emit(
+        "lenet300_grad",
+        model.mlp_grad_fn(sizes),
+        grad_in,
+        grad_inputs,
+        grad_outputs,
+        {"batch": batch},
+    )
+
+    # ---- lenet300_grad_pallas (hidden layers through the L1 kernel) ----
+    emit(
+        "lenet300_grad_pallas",
+        model.mlp_grad_fn(sizes, use_pallas=True),
+        grad_in,
+        grad_inputs,
+        grad_outputs,
+        {"batch": batch, "pallas": 1},
+    )
+
+    # ---- lenet300_eval --------------------------------------------------
+    emit(
+        "lenet300_eval",
+        model.mlp_eval_fn(sizes),
+        grad_in,
+        grad_inputs,
+        [tensor_entry("loss", ()), tensor_entry("errors", ())],
+        {"batch": batch},
+    )
+
+    # ---- lenet300_quantized_fwd (L1 codebook-matmul kernel, all layers) -
+    qk = quant_k
+    q_in = [spec((batch, sizes[0]))]
+    q_inputs = [tensor_entry("x", (batch, sizes[0]))]
+    for l in range(len(sizes) - 1):
+        q_in += [
+            spec((sizes[l], sizes[l + 1]), jnp.int32),
+            spec((qk,)),
+            spec((sizes[l + 1],)),
+        ]
+        q_inputs += [
+            tensor_entry(f"assign{l+1}", (sizes[l], sizes[l + 1]), "i32"),
+            tensor_entry(f"codebook{l+1}", (qk,)),
+            tensor_entry(f"b{l+1}", (sizes[l + 1],)),
+        ]
+    emit(
+        "lenet300_quantized_fwd",
+        model.quantized_fwd_fn(sizes),
+        q_in,
+        q_inputs,
+        [tensor_entry("logits", (batch, n_out))],
+        {"batch": batch, "k": qk},
+    )
+
+    # ---- linreg_lstep ----------------------------------------------------
+    d_in, d_out = 196, 784
+    d = d_in + 1
+    emit(
+        "linreg_lstep",
+        model.linreg_lstep_fn(d_in, d_out),
+        [spec((d, d)), spec((d_out, d)), spec((d, d))],
+        [
+            tensor_entry("A", (d, d)),
+            tensor_entry("rhs", (d_out, d)),
+            tensor_entry("eye", (d, d)),
+        ],
+        [tensor_entry("W", (d_out, d))],
+        {"d_in": d_in, "d_out": d_out},
+    )
+
+    # ---- vgg_small grad/eval (conv substrate for §5.4) ------------------
+    vshapes = model.vgg_small_shapes()
+    vbatch = max(batch // 4, 8)
+    v_in = [spec(s) for _, s in vshapes] + [
+        spec((vbatch, 3, 32, 32)),
+        spec((vbatch, 10)),
+    ]
+    v_inputs = [tensor_entry(n, s) for n, s in vshapes] + [
+        tensor_entry("x", (vbatch, 3, 32, 32)),
+        tensor_entry("y", (vbatch, 10)),
+    ]
+    emit(
+        "vgg_small_grad",
+        model.vgg_small_grad_fn(),
+        v_in,
+        v_inputs,
+        [tensor_entry("loss", ())] + [tensor_entry(f"d{n}", s) for n, s in vshapes],
+        {"batch": vbatch},
+    )
+    emit(
+        "vgg_small_eval",
+        model.vgg_small_eval_fn(),
+        v_in,
+        v_inputs,
+        [tensor_entry("loss", ()), tensor_entry("errors", ())],
+        {"batch": vbatch},
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    progress(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--quant-k", type=int, default=2)
+    args = ap.parse_args()
+    build_artifacts(args.out, args.batch, args.quant_k)
+
+
+if __name__ == "__main__":
+    main()

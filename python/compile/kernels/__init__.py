@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered with interpret=True so the
+CPU PJRT client can execute them — real-TPU lowering would emit Mosaic
+custom-calls the CPU plugin cannot run)."""

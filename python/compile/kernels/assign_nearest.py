@@ -1,0 +1,42 @@
+"""Nearest-centroid assignment Pallas kernel — the C-step inner operation
+(eq. 11): each weight maps to the Voronoi cell of a sorted codebook, whose
+boundaries are the centroid midpoints. The kernel is a K−1-way comparison
+accumulation per weight (O(K) on the VPU; the rust hot path uses the
+O(log K) binary-search form — both are checked against each other)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, mids_ref, o_ref):
+    w = w_ref[...]
+    mids = mids_ref[...]
+    # cell index = #midpoints <= w (upper-cell tie-break, eq. 11)
+    o_ref[...] = jnp.sum(
+        (w[:, None] >= mids[None, :]).astype(jnp.int32), axis=1
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def assign_nearest(w, codebook, block_n=None):
+    """w: (N,) f32, codebook: (K,) f32 sorted ascending → (N,) i32."""
+    n = w.shape[0]
+    k = codebook.shape[0]
+    assert k >= 2, "use K >= 2 (K=1 assigns everything to 0)"
+    bn = block_n or n
+    assert n % bn == 0, "block_n must divide N"
+    mids = 0.5 * (codebook[:-1] + codebook[1:])
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda g: (g,)),
+            pl.BlockSpec((k - 1,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(w, mids)

@@ -1,0 +1,114 @@
+"""Codebook-quantized matmul — the paper's §2.1 hardware argument as an L1
+Pallas kernel.
+
+A quantized dense layer stores, instead of a float weight matrix W (I, O),
+an assignment matrix `assign` (I, O) of small integers plus a codebook
+(K,) of floats: W[i, j] = codebook[assign[i, j]]. Two kernels compute
+x @ W + b from that representation:
+
+* `codebook_matmul` — gather-then-matmul: decode the weight tile in VMEM
+  (K floats + the int tile are far smaller than the float tile in HBM) and
+  feed the MXU a standard tile matmul. This is the schedule a TPU would
+  actually run: HBM traffic is ~⌈log2 K⌉/32 of the dense layer, decoding is
+  elementwise on the VPU, and the MXU sees a dense (block_b × I)·(I ×
+  block_o) contraction.
+
+* `codebook_matmul_centroid` — the paper's §2.1 formulation made literal:
+  accumulate activations per centroid (a one-hot contraction) and finish
+  with a length-K scalar contraction. Same math; this schedule replaces
+  the I-deep float multiply-accumulate with an I-deep *select-accumulate*
+  plus K multiplies per output — the digital-filter trick the paper cites
+  for K=2 codebooks in hardware.
+
+Both run under `interpret=True` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness vs `ref.py` is asserted in pytest, and the
+VMEM/MXU analysis lives in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(x_ref, a_ref, c_ref, b_ref, o_ref):
+    # decode the weight tile from (assignments, codebook), then tile-matmul
+    w = c_ref[...][a_ref[...]]  # (I, block_o) gather on the VPU
+    o_ref[...] = x_ref[...] @ w + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o"))
+def codebook_matmul(x, assign, codebook, bias, block_b=None, block_o=None):
+    """x: (B, I) f32, assign: (I, O) i32, codebook: (K,) f32, bias: (O,).
+
+    Block sizes must divide B and O (default: whole array — one grid cell).
+    """
+    b, i = x.shape
+    i2, o = assign.shape
+    assert i == i2, f"inner dims {i} vs {i2}"
+    bb = block_b or b
+    bo = block_o or o
+    assert b % bb == 0 and o % bo == 0, "block sizes must divide shapes"
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(b // bb, o // bo),
+        in_specs=[
+            pl.BlockSpec((bb, i), lambda gb, go: (gb, 0)),
+            pl.BlockSpec((i, bo), lambda gb, go: (0, go)),
+            pl.BlockSpec(codebook.shape, lambda gb, go: (0,)),
+            pl.BlockSpec((bo,), lambda gb, go: (go,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bo), lambda gb, go: (gb, go)),
+        out_shape=jax.ShapeDtypeStruct((b, o), x.dtype),
+        interpret=True,
+    )(x, assign, codebook, bias)
+
+
+def _centroid_kernel(k: int, x_ref, a_ref, c_ref, b_ref, o_ref):
+    # §2.1 schedule: per-centroid activation sums, then K multiplies.
+    x = x_ref[...]                      # (bb, I)
+    a = a_ref[...]                      # (I, bo)
+    c = c_ref[...]                      # (K,)
+    onehot = (a[:, :, None] == jnp.arange(k)[None, None, :]).astype(x.dtype)
+    # sums[b, o, k] = Σ_i x[b, i] · 1[assign[i, o] = k]
+    sums = jnp.einsum("bi,iok->bok", x, onehot)
+    o_ref[...] = jnp.einsum("bok,k->bo", sums, c) + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o"))
+def codebook_matmul_centroid(x, assign, codebook, bias, block_b=None, block_o=None):
+    """Same contract as `codebook_matmul`, centroid-accumulation schedule."""
+    b, i = x.shape
+    _, o = assign.shape
+    k = codebook.shape[0]
+    bb = block_b or b
+    bo = block_o or o
+    assert b % bb == 0 and o % bo == 0, "block sizes must divide shapes"
+    return pl.pallas_call(
+        functools.partial(_centroid_kernel, k),
+        grid=(b // bb, o // bo),
+        in_specs=[
+            pl.BlockSpec((bb, i), lambda gb, go: (gb, 0)),
+            pl.BlockSpec((i, bo), lambda gb, go: (0, go)),
+            pl.BlockSpec((k,), lambda gb, go: (0,)),
+            pl.BlockSpec((bo,), lambda gb, go: (go,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bo), lambda gb, go: (gb, go)),
+        out_shape=jax.ShapeDtypeStruct((b, o), x.dtype),
+        interpret=True,
+    )(x, assign, codebook, bias)
+
+
+def vmem_bytes(block_b: int, i: int, block_o: int, k: int) -> int:
+    """Estimated VMEM working set of one `codebook_matmul` grid cell:
+    x tile + int8 assignment tile + decoded f32 weight tile + codebook +
+    bias + output tile. Used by the DESIGN.md §Perf roofline estimate."""
+    return (
+        4 * block_b * i          # x tile f32
+        + 1 * i * block_o        # assignments as i8 (i32 in the demo artifact)
+        + 4 * i * block_o        # decoded weight tile f32
+        + 4 * k                  # codebook
+        + 4 * block_o            # bias
+        + 4 * block_b * block_o  # output tile
+    )

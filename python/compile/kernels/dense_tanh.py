@@ -1,0 +1,61 @@
+"""Fused dense+tanh Pallas kernel: tanh(x @ w + b) in one VMEM-resident
+tile pass (the L-step forward's hot op). MXU-shaped tiling: the grid walks
+(batch, out) tiles; each cell is one (bb × I)·(I × bo) contraction plus a
+VPU tanh — no intermediate HBM round-trip between the matmul and the
+activation, which is the fusion XLA would have to rediscover."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    z = x_ref[...] @ w_ref[...] + b_ref[...][None, :]
+    o_ref[...] = jnp.tanh(z)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o"))
+def dense_tanh(x, w, b, block_b=None, block_o=None):
+    """x: (B, I), w: (I, O), b: (O,) → tanh(x@w+b): (B, O)."""
+    bsz, i = x.shape
+    i2, o = w.shape
+    assert i == i2
+    bb = block_b or bsz
+    bo = block_o or o
+    assert bsz % bb == 0 and o % bo == 0, "block sizes must divide shapes"
+    return pl.pallas_call(
+        _kernel,
+        grid=(bsz // bb, o // bo),
+        in_specs=[
+            pl.BlockSpec((bb, i), lambda gb, go: (gb, 0)),
+            pl.BlockSpec((i, bo), lambda gb, go: (0, go)),
+            pl.BlockSpec((bo,), lambda gb, go: (go,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bo), lambda gb, go: (gb, go)),
+        out_shape=jax.ShapeDtypeStruct((bsz, o), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+# interpret-mode pallas_call has no reverse-mode autodiff rule, so the
+# training graph uses this custom_vjp wrapper: forward through the kernel,
+# analytic backward (tanh' = 1 − y²) in plain jnp — XLA fuses it anyway.
+@jax.custom_vjp
+def dense_tanh_ad(x, w, b):
+    return dense_tanh(x, w, b)
+
+
+def _dense_tanh_fwd(x, w, b):
+    y = dense_tanh(x, w, b)
+    return y, (x, w, y)
+
+
+def _dense_tanh_bwd(res, dy):
+    x, w, y = res
+    dz = dy * (1.0 - y * y)
+    return (dz @ w.T, x.T @ dz, jnp.sum(dz, axis=0))
+
+
+dense_tanh_ad.defvjp(_dense_tanh_fwd, _dense_tanh_bwd)

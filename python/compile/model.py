@@ -1,0 +1,249 @@
+"""L2: JAX compute graphs for the LC system, lowered once by `aot.py`.
+
+The rust coordinator owns parameters and optimizer state; these graphs are
+pure functions:
+
+* `mlp_grad_fn(sizes)`   — (w1,b1,…,wL,bL, x, y1hot) → (loss, dw1,db1,…)
+* `mlp_eval_fn(sizes)`   — (params…, x, y1hot) → (loss, error_count)
+* `quantized_fwd_fn(sizes, k)` — codebook-quantized forward through the L1
+  Pallas kernel (assignments i32 + per-layer codebooks)
+* `linreg_lstep_fn(d, out)` — exact penalized normal-equations L step for
+  the §5.2 experiment
+* `vgg_small_*` — a small conv net (§5.4 conv substrate) using lax.conv
+
+The penalty term μ/2‖w − w_C − λ/μ‖² is *not* baked into the graph: its
+gradient μ(w−w_C)−λ is elementwise and the rust side adds it, which keeps
+one artifact valid for every μ, scheme and penalty mode (and lets
+BinaryConnect reuse the same artifact).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.codebook_matmul import codebook_matmul
+from .kernels.dense_tanh import dense_tanh_ad as dense_tanh
+
+
+# ---------------------------------------------------------------- MLP ----
+
+def mlp_forward(params, x, activation=jnp.tanh, use_pallas=False):
+    """params: flat tuple (w1, b1, ..., wL, bL). Hidden layers activated,
+    output layer linear. With use_pallas=True the hidden tanh layers run
+    through the fused L1 dense_tanh kernel."""
+    n_layers = len(params) // 2
+    h = x
+    for l in range(n_layers):
+        w, b = params[2 * l], params[2 * l + 1]
+        if l + 1 == n_layers:
+            h = h @ w + b[None, :]
+        elif use_pallas and activation is jnp.tanh:
+            h = dense_tanh(h, w, b)
+        else:
+            h = activation(h @ w + b[None, :])
+    return h
+
+
+def mlp_loss(params, x, y, activation=jnp.tanh, use_pallas=False):
+    """Mean cross-entropy of logits vs one-hot y."""
+    logits = mlp_forward(params, x, activation, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y * logp, axis=-1))
+
+
+def mlp_grad_fn(sizes, activation=jnp.tanh, use_pallas=False):
+    """Returns f(*params, x, y) -> (loss, *grads) with grads interleaved
+    (dw1, db1, dw2, db2, ...)."""
+    n_layers = len(sizes) - 1
+
+    def f(*args):
+        params = args[: 2 * n_layers]
+        x, y = args[2 * n_layers], args[2 * n_layers + 1]
+        loss, grads = jax.value_and_grad(
+            lambda p: mlp_loss(p, x, y, activation, use_pallas)
+        )(params)
+        return (loss, *grads)
+
+    return f
+
+
+def mlp_eval_fn(sizes, activation=jnp.tanh):
+    """Returns f(*params, x, y) -> (loss, error_count)."""
+    n_layers = len(sizes) - 1
+
+    def f(*args):
+        params = args[: 2 * n_layers]
+        x, y = args[2 * n_layers], args[2 * n_layers + 1]
+        logits = mlp_forward(params, x, activation)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.sum(y * logp, axis=-1))
+        errors = jnp.sum(
+            (jnp.argmax(logits, axis=-1) != jnp.argmax(y, axis=-1)).astype(
+                jnp.float32
+            )
+        )
+        return (loss, errors)
+
+    return f
+
+
+def quantized_fwd_fn(sizes, activation=jnp.tanh):
+    """Fully quantized forward pass: every layer is the L1 codebook-matmul
+    kernel. f(x, a1, c1, b1, ..., aL, cL, bL) -> (logits,)."""
+    n_layers = len(sizes) - 1
+
+    def f(x, *args):
+        h = x
+        for l in range(n_layers):
+            a, c, b = args[3 * l], args[3 * l + 1], args[3 * l + 2]
+            h = codebook_matmul(h, a, c, b)
+            if l + 1 < n_layers:
+                h = activation(h)
+        return (h,)
+
+    return f
+
+
+# ------------------------------------------------------------- linreg ----
+
+def linreg_lstep_fn(d_in, d_out, ns_iters=30):
+    """Exact penalized L step for §5.2: f(A, rhs, eye) -> (W,), where the
+    caller (rust) assembles the SPD system A = 2·X̃X̃ᵀ/N + μ·diag(mask) +
+    ridge and rhs = 2·YX̃ᵀ/N + μ·T (see `fig7_linreg.rs`), and `eye` is the
+    (d+1)² identity. The graph solves W·A = rhs.
+
+    Three AOT-interchange constraints shaped this design (each verified by
+    a staged numeric probe against the rust oracle):
+    * `jnp.linalg.solve` lowers to a LAPACK typed-FFI custom-call that
+      xla_extension 0.5.1 (the `xla` crate's pinned XLA) cannot execute;
+    * an HLO `while` (from a CG `fori_loop`) mis-executes after the text
+      round-trip on that version;
+    * large dense constants are **elided** by the HLO text printer
+      (`constant({...})`) and parsed back as zeros — so the identity
+      matrix must be an *input*, not a baked-in constant.
+    Hence: unrolled Newton–Schulz inversion (X ← X(2I − AX)) in f64 — a
+    fixed chain of matmuls, the most boring possible HLO — quadratically
+    convergent, reaching f64 roundoff in 30 iterations for cond(A) ≲ 1e6."""
+
+    def f(a, rhs, eye):
+        # f64 internally; f32 interface.
+        a = a.astype(jnp.float64)
+        rhs = rhs.astype(jnp.float64)
+        eye2 = 2.0 * eye.astype(jnp.float64)
+        # Newton–Schulz: X0 = Aᵀ/(‖A‖₁‖A‖∞) guarantees ‖I − AX0‖ < 1.
+        norm1 = jnp.max(jnp.sum(jnp.abs(a), axis=0))
+        norminf = jnp.max(jnp.sum(jnp.abs(a), axis=1))
+        x = a.T / (norm1 * norminf)
+        for _ in range(ns_iters):
+            x = x @ (eye2 - a @ x)
+        # W A = rhs  ⇒  W = rhs · A⁻¹
+        w = rhs @ x
+        return (w.astype(jnp.float32),)
+
+    return f
+
+
+# ----------------------------------------------------- small conv net ----
+
+def conv_layer(x, w, b, stride=1):
+    """NCHW conv with SAME padding + bias."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def max_pool(x, size=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, size, size),
+        window_strides=(1, 1, size, size),
+        padding="VALID",
+    )
+
+
+VGG_SMALL_CHANNELS = (16, 32)
+VGG_SMALL_DENSE = 64
+
+
+def vgg_small_forward(params, x):
+    """A scaled §5.4 conv net: 2×(conv3×3 + ReLU + maxpool) + dense + out.
+    x: (B, 3, 32, 32); params = (cw1, cb1, cw2, cb2, dw1, db1, dw2, db2)."""
+    cw1, cb1, cw2, cb2, dw1, db1, dw2, db2 = params
+    h = jax.nn.relu(conv_layer(x, cw1, cb1))
+    h = max_pool(h)  # (B, c1, 16, 16)
+    h = jax.nn.relu(conv_layer(h, cw2, cb2))
+    h = max_pool(h)  # (B, c2, 8, 8)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ dw1 + db1[None, :])
+    return h @ dw2 + db2[None, :]
+
+
+def vgg_small_shapes(n_classes=10):
+    c1, c2 = VGG_SMALL_CHANNELS
+    return [
+        ("cw1", (c1, 3, 3, 3)),
+        ("cb1", (c1,)),
+        ("cw2", (c2, c1, 3, 3)),
+        ("cb2", (c2,)),
+        ("dw1", (c2 * 8 * 8, VGG_SMALL_DENSE)),
+        ("db1", (VGG_SMALL_DENSE,)),
+        ("dw2", (VGG_SMALL_DENSE, n_classes)),
+        ("db2", (n_classes,)),
+    ]
+
+
+def vgg_small_grad_fn():
+    """f(*params, x, y) -> (loss, *grads)."""
+
+    def f(*args):
+        params = args[:8]
+        x, y = args[8], args[9]
+
+        def loss_fn(p):
+            logits = vgg_small_forward(p, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.sum(y * logp, axis=-1))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return f
+
+
+def vgg_small_eval_fn():
+    def f(*args):
+        params = args[:8]
+        x, y = args[8], args[9]
+        logits = vgg_small_forward(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.sum(y * logp, axis=-1))
+        errors = jnp.sum(
+            (jnp.argmax(logits, -1) != jnp.argmax(y, -1)).astype(jnp.float32)
+        )
+        return (loss, errors)
+
+    return f
+
+
+# ------------------------------------------------------------ helpers ----
+
+LENET300_SIZES = (784, 300, 100, 10)
+
+
+@functools.lru_cache(maxsize=None)
+def lenet300_param_specs():
+    """[(name, shape), ...] for the LeNet300 artifact signature."""
+    specs = []
+    sizes = LENET300_SIZES
+    for l in range(len(sizes) - 1):
+        specs.append((f"w{l+1}", (sizes[l], sizes[l + 1])))
+        specs.append((f"b{l+1}", (sizes[l + 1],)))
+    return specs

@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas kernels (interpret mode) vs pure-jnp
+oracles, with hypothesis sweeping shapes, codebook sizes and block splits.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.assign_nearest import assign_nearest
+from compile.kernels.codebook_matmul import (
+    codebook_matmul,
+    codebook_matmul_centroid,
+    vmem_bytes,
+)
+from compile.kernels.dense_tanh import dense_tanh
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def make_case(seed, b, i, o, k):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(ks[0], b, i)
+    assign = jax.random.randint(ks[1], (i, o), 0, k, dtype=jnp.int32)
+    codebook = jnp.sort(rand(ks[2], k))
+    bias = rand(ks[3], o)
+    return x, assign, codebook, bias
+
+
+# --------------------------------------------------------------- gather --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**30),
+    b=st.sampled_from([1, 2, 4, 8]),
+    i=st.sampled_from([3, 8, 17]),
+    o=st.sampled_from([2, 6, 12]),
+    k=st.sampled_from([2, 3, 4, 16]),
+)
+def test_codebook_matmul_matches_ref(seed, b, i, o, k):
+    x, assign, codebook, bias = make_case(seed, b, i, o, k)
+    got = codebook_matmul(x, assign, codebook, bias)
+    want = ref.codebook_matmul_ref(x, assign, codebook, bias)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_codebook_matmul_blocked_grid(seed):
+    # block sizes that split the grid multiple ways
+    x, assign, codebook, bias = make_case(seed, 8, 16, 12, 4)
+    want = ref.codebook_matmul_ref(x, assign, codebook, bias)
+    for bb, bo in [(4, 12), (8, 6), (2, 4)]:
+        got = codebook_matmul(x, assign, codebook, bias, block_b=bb, block_o=bo)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_codebook_matmul_rejects_bad_blocks():
+    x, assign, codebook, bias = make_case(0, 8, 16, 12, 4)
+    with pytest.raises(AssertionError):
+        codebook_matmul(x, assign, codebook, bias, block_b=3)
+
+
+# ------------------------------------------------------------- centroid --
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**30),
+    b=st.sampled_from([1, 4]),
+    i=st.sampled_from([5, 9]),
+    o=st.sampled_from([3, 8]),
+    k=st.sampled_from([2, 3, 8]),
+)
+def test_centroid_schedule_matches_gather(seed, b, i, o, k):
+    x, assign, codebook, bias = make_case(seed, b, i, o, k)
+    gather = codebook_matmul(x, assign, codebook, bias)
+    centroid = codebook_matmul_centroid(x, assign, codebook, bias)
+    want = ref.codebook_matmul_centroid_ref(x, assign, codebook, bias)
+    assert_allclose(np.asarray(centroid), np.asarray(want), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(centroid), np.asarray(gather), rtol=1e-4, atol=1e-4)
+
+
+def test_k2_binary_codebook_exact():
+    # K=2 (binarization) — paper table 2 regime; exact values survive
+    x = jnp.ones((2, 3), jnp.float32)
+    assign = jnp.array([[0, 1], [1, 1], [0, 0]], jnp.int32)
+    codebook = jnp.array([-0.5, 0.25], jnp.float32)
+    bias = jnp.zeros(2, jnp.float32)
+    got = codebook_matmul(x, assign, codebook, bias)
+    # col0: -0.5+0.25-0.5 = -0.75 ; col1: 0.25+0.25+(-0.5)... wait:
+    want = ref.codebook_matmul_ref(x, assign, codebook, bias)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+# ------------------------------------------------------------ dense tanh --
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**30),
+    b=st.sampled_from([1, 2, 8]),
+    i=st.sampled_from([4, 11]),
+    o=st.sampled_from([2, 10]),
+)
+def test_dense_tanh_matches_ref(seed, b, i, o):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w, bias = rand(ks[0], b, i), rand(ks[1], i, o), rand(ks[2], o)
+    got = dense_tanh(x, w, bias)
+    want = ref.dense_tanh_ref(x, w, bias)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_tanh_blocked():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x, w, bias = rand(ks[0], 8, 12), rand(ks[1], 12, 6), rand(ks[2], 6)
+    want = ref.dense_tanh_ref(x, w, bias)
+    got = dense_tanh(x, w, bias, block_b=2, block_o=3)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_tanh_output_bounded():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x, w, bias = rand(ks[0], 4, 5) * 100, rand(ks[1], 5, 3) * 100, rand(ks[2], 3)
+    got = np.asarray(dense_tanh(x, w, bias))
+    assert np.all(got <= 1.0) and np.all(got >= -1.0)
+
+
+# -------------------------------------------------------- assign nearest --
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**30),
+    n=st.sampled_from([1, 7, 32]),
+    k=st.sampled_from([2, 3, 5, 16]),
+)
+def test_assign_nearest_matches_ref(seed, n, k):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    w = rand(ks[0], n)
+    codebook = jnp.sort(rand(ks[1], k))
+    got = assign_nearest(w, codebook)
+    want = ref.assign_nearest_ref(w, codebook)
+    assert_allclose(np.asarray(got), np.asarray(want))
+    # every assignment is actually a nearest entry
+    cb = np.asarray(codebook)
+    for wi, ai in zip(np.asarray(w), np.asarray(got)):
+        dists = np.abs(cb - wi)
+        assert dists[ai] <= dists.min() + 1e-6
+
+
+def test_assign_nearest_tie_breaks_upward():
+    # value exactly at a midpoint goes to the upper cell (eq. 11)
+    codebook = jnp.array([0.0, 1.0], jnp.float32)
+    w = jnp.array([0.5, 0.4999, 0.5001], jnp.float32)
+    got = np.asarray(assign_nearest(w, codebook))
+    assert list(got) == [1, 0, 1]
+
+
+def test_assign_nearest_blocked():
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    w = rand(ks[0], 24)
+    codebook = jnp.sort(rand(ks[1], 4))
+    want = ref.assign_nearest_ref(w, codebook)
+    got = assign_nearest(w, codebook, block_n=8)
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------------- misc --
+
+def test_vmem_estimate_monotone():
+    base = vmem_bytes(8, 784, 128, 2)
+    assert vmem_bytes(16, 784, 128, 2) > base
+    assert vmem_bytes(8, 784, 256, 2) > base
+    assert vmem_bytes(8, 784, 128, 256) > base
+    # LeNet300 layer-1 tile fits in 16 MiB VMEM comfortably
+    assert vmem_bytes(128, 784, 128, 2) < 16 * 2**20

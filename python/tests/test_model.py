@@ -1,0 +1,163 @@
+"""L2 graph correctness: gradients vs finite differences, eval metrics,
+the exact linreg L step, the quantized forward, and the conv net."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", False)
+
+
+def init_mlp(sizes, key):
+    params = []
+    for l in range(len(sizes) - 1):
+        key, k1 = jax.random.split(key)
+        limit = np.sqrt(6.0 / (sizes[l] + sizes[l + 1]))
+        params.append(
+            jax.random.uniform(
+                k1, (sizes[l], sizes[l + 1]), jnp.float32, -limit, limit
+            )
+        )
+        params.append(jnp.zeros(sizes[l + 1], jnp.float32))
+    return tuple(params)
+
+
+def batch(key, b, d, classes):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (b, d), jnp.float32)
+    labels = jax.random.randint(k2, (b,), 0, classes)
+    y = jax.nn.one_hot(labels, classes, dtype=jnp.float32)
+    return x, y, labels
+
+
+def test_grad_fn_matches_finite_differences():
+    sizes = (6, 5, 3)
+    params = init_mlp(sizes, jax.random.PRNGKey(0))
+    x, y, _ = batch(jax.random.PRNGKey(1), 7, 6, 3)
+    out = model.mlp_grad_fn(sizes)(*params, x, y)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(loss)
+    eps = 1e-3
+    p0 = np.asarray(params[0])
+    for idx in [(0, 0), (3, 2), (5, 4)]:
+        pp = p0.copy()
+        pp[idx] += eps
+        lp = model.mlp_loss((jnp.asarray(pp),) + params[1:], x, y)
+        pm = p0.copy()
+        pm[idx] -= eps
+        lm = model.mlp_loss((jnp.asarray(pm),) + params[1:], x, y)
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - np.asarray(grads[0])[idx]) < 2e-3
+
+
+def test_grad_fn_pallas_matches_plain():
+    sizes = (8, 6, 4)
+    params = init_mlp(sizes, jax.random.PRNGKey(2))
+    x, y, _ = batch(jax.random.PRNGKey(3), 4, 8, 4)
+    plain = model.mlp_grad_fn(sizes, use_pallas=False)(*params, x, y)
+    pallas = model.mlp_grad_fn(sizes, use_pallas=True)(*params, x, y)
+    for a, b in zip(plain, pallas):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_eval_fn_counts_errors():
+    sizes = (4, 3)
+    # identity-ish single layer: logits = x @ w
+    w = jnp.eye(4, 3, dtype=jnp.float32) * 10
+    b = jnp.zeros(3, jnp.float32)
+    x = jnp.eye(3, 4, dtype=jnp.float32)  # 3 samples, sample i peaks class i
+    y = jnp.eye(3, dtype=jnp.float32)
+    loss, errors = model.mlp_eval_fn(sizes)(w, b, x, y)
+    assert errors == 0
+    y_wrong = jnp.roll(y, 1, axis=0)
+    _, errors2 = model.mlp_eval_fn(sizes)(w, b, x, y_wrong)
+    assert errors2 == 3
+
+
+def test_quantized_fwd_equals_dense_forward():
+    sizes = (6, 5, 3)
+    key = jax.random.PRNGKey(4)
+    x, _, _ = batch(key, 4, 6, 3)
+    args = [x]
+    dense_params = []
+    for l in range(len(sizes) - 1):
+        key, k1, k2 = jax.random.split(key, 3)
+        k_entries = 4
+        codebook = jnp.sort(jax.random.normal(k1, (k_entries,), jnp.float32))
+        assign = jax.random.randint(
+            k2, (sizes[l], sizes[l + 1]), 0, k_entries, dtype=jnp.int32
+        )
+        bias = jnp.zeros(sizes[l + 1], jnp.float32)
+        args += [assign, codebook, bias]
+        dense_params += [codebook[assign], bias]
+    (logits,) = model.quantized_fwd_fn(sizes)(*args)
+    want = model.mlp_forward(tuple(dense_params), x)
+    assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_linreg_lstep_solves_normal_equations():
+    d_in, d_out, n = 5, 4, 50
+    d = d_in + 1
+    key = jax.random.PRNGKey(5)
+    k1, k2, k3 = jax.random.split(key, 3)
+    xa = jnp.concatenate(
+        [jax.random.normal(k1, (n, d_in)), jnp.ones((n, 1))], axis=1
+    )
+    w_true = jax.random.normal(k2, (d_out, d))
+    y = xa @ w_true.T + 0.01 * jax.random.normal(k3, (n, d_out))
+    g = np.asarray(xa.T @ xa / n, np.float64)
+    h = np.asarray(y.T @ xa / n, np.float64)
+    mask = np.concatenate([np.ones(d_in), np.zeros(1)])
+    eye = np.eye(d, dtype=np.float32)
+
+    def assemble(mu):
+        a = 2.0 * g + np.diag(mu * mask + 1e-6)
+        rhs = 2.0 * h  # target T = 0
+        return a.astype(np.float32), rhs.astype(np.float32)
+
+    fn = model.linreg_lstep_fn(d_in, d_out)
+    # mu -> 0: recovers least squares
+    a, rhs = assemble(1e-8)
+    (w,) = fn(jnp.asarray(a), jnp.asarray(rhs), jnp.asarray(eye))
+    assert_allclose(np.asarray(w), np.asarray(w_true), atol=0.1)
+    # mu huge: weight block pinned to target (= 0), bias free
+    a, rhs = assemble(1e7)
+    (w_pin,) = fn(jnp.asarray(a), jnp.asarray(rhs), jnp.asarray(eye))
+    assert np.abs(np.asarray(w_pin)[:, :d_in]).max() < 1e-2
+    # solution actually satisfies W A = rhs
+    a, rhs = assemble(0.5)
+    (w_mid,) = fn(jnp.asarray(a), jnp.asarray(rhs), jnp.asarray(eye))
+    resid = np.abs(np.asarray(w_mid) @ a - rhs).max()
+    assert resid < 1e-3, f"residual {resid}"
+
+
+def test_vgg_small_shapes_and_grads():
+    shapes = model.vgg_small_shapes()
+    key = jax.random.PRNGKey(6)
+    params = []
+    for _, s in shapes:
+        key, k1 = jax.random.split(key)
+        params.append(0.1 * jax.random.normal(k1, s, jnp.float32))
+    x = jax.random.normal(key, (2, 3, 32, 32), jnp.float32)
+    y = jax.nn.one_hot(jnp.array([1, 7]), 10, dtype=jnp.float32)
+    out = model.vgg_small_grad_fn()(*params, x, y)
+    assert np.isfinite(out[0])
+    assert len(out) == 1 + len(params)
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+    loss, errors = model.vgg_small_eval_fn()(*params, x, y)
+    assert np.isfinite(loss) and 0 <= errors <= 2
+
+
+def test_lenet300_param_specs():
+    specs = model.lenet300_param_specs()
+    names = [n for n, _ in specs]
+    assert names == ["w1", "b1", "w2", "b2", "w3", "b3"]
+    p1 = sum(int(np.prod(s)) for n, s in specs if n.startswith("w"))
+    p0 = sum(int(np.prod(s)) for n, s in specs if n.startswith("b"))
+    assert p1 == 266_200 and p0 == 410  # paper's counts

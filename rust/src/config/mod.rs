@@ -1,0 +1,245 @@
+//! Config system: JSON experiment/run configuration with CLI overrides.
+//!
+//! A run config fully determines a training + quantization run (net
+//! architecture, data, schedules, scheme), so experiments are reproducible
+//! from a single file. See `configs/*.json` in the repo root.
+
+use crate::coordinator::{LcConfig, MuSchedule, PenaltyMode};
+use crate::nn::sgd::ClippedLrSchedule;
+use crate::nn::{Activation, MlpSpec};
+use crate::quant::Scheme;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Top-level run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub name: String,
+    pub net: MlpSpec,
+    pub data: DataConfig,
+    pub train: TrainConfig,
+    pub lc: LcConfig,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// "synth_mnist" or "cifar_like".
+    pub kind: String,
+    pub n: usize,
+    pub test_frac: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// SGD steps to train the reference net.
+    pub ref_steps: usize,
+    pub batch: usize,
+    pub lr0: f32,
+    pub lr_decay: f32,
+    pub momentum: f32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "lenet300-k2".into(),
+            net: MlpSpec::lenet300(),
+            data: DataConfig { kind: "synth_mnist".into(), n: 2000, test_frac: 0.1 },
+            train: TrainConfig { ref_steps: 800, batch: 128, lr0: 0.1, lr_decay: 0.99, momentum: 0.95 },
+            lc: LcConfig::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// Parse a quantization scheme from a string like `adaptive:4`, `binary`,
+/// `binary_scale`, `ternary`, `ternary_scale`, `pow2:4`, `fixed:-1,0,1`.
+pub fn parse_scheme(s: &str) -> Result<Scheme> {
+    let (head, arg) = match s.split_once(':') {
+        Some((h, a)) => (h, Some(a)),
+        None => (s, None),
+    };
+    Ok(match head {
+        "adaptive" => Scheme::AdaptiveCodebook {
+            k: arg
+                .ok_or_else(|| anyhow!("adaptive:K requires K"))?
+                .parse()
+                .context("bad K")?,
+        },
+        "adaptive_zero" => Scheme::AdaptiveWithZero {
+            k: arg
+                .ok_or_else(|| anyhow!("adaptive_zero:K requires K"))?
+                .parse()
+                .context("bad K")?,
+        },
+        "binary" => Scheme::Binary,
+        "binary_scale" => Scheme::BinaryScale,
+        "ternary" => Scheme::Ternary,
+        "ternary_scale" => Scheme::TernaryScale,
+        "pow2" => Scheme::PowersOfTwo {
+            c: arg.ok_or_else(|| anyhow!("pow2:C requires C"))?.parse().context("bad C")?,
+        },
+        "fixed" => Scheme::FixedCodebook {
+            codebook: arg
+                .ok_or_else(|| anyhow!("fixed:v1,v2,... requires values"))?
+                .split(',')
+                .map(|v| v.trim().parse::<f32>().context("bad codebook value"))
+                .collect::<Result<Vec<_>>>()?,
+        },
+        _ => bail!("unknown scheme '{s}'"),
+    })
+}
+
+fn get_f(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+fn get_u(j: &Json, key: &str, default: usize) -> usize {
+    j.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+}
+fn get_s<'a>(j: &'a Json, key: &str, default: &'a str) -> &'a str {
+    j.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+}
+
+impl RunConfig {
+    /// Parse from JSON text; missing fields fall back to defaults.
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let d = RunConfig::default();
+
+        let net = match j.get("net") {
+            Some(n) => {
+                let sizes: Vec<usize> = n
+                    .get("sizes")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_else(|| d.net.sizes.clone());
+                let act = match get_s(n, "activation", "tanh") {
+                    "relu" => Activation::Relu,
+                    _ => Activation::Tanh,
+                };
+                let dropout: Vec<f32> = n
+                    .get("dropout_keep")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|f| f as f32).collect())
+                    .unwrap_or_default();
+                MlpSpec { sizes, hidden_activation: act, dropout_keep: dropout }
+            }
+            None => d.net.clone(),
+        };
+
+        let data = match j.get("data") {
+            Some(n) => DataConfig {
+                kind: get_s(n, "kind", &d.data.kind).to_string(),
+                n: get_u(n, "n", d.data.n),
+                test_frac: get_f(n, "test_frac", d.data.test_frac),
+            },
+            None => d.data.clone(),
+        };
+
+        let train = match j.get("train") {
+            Some(n) => TrainConfig {
+                ref_steps: get_u(n, "ref_steps", d.train.ref_steps),
+                batch: get_u(n, "batch", d.train.batch),
+                lr0: get_f(n, "lr0", d.train.lr0 as f64) as f32,
+                lr_decay: get_f(n, "lr_decay", d.train.lr_decay as f64) as f32,
+                momentum: get_f(n, "momentum", d.train.momentum as f64) as f32,
+            },
+            None => d.train.clone(),
+        };
+
+        let lc = match j.get("lc") {
+            Some(n) => LcConfig {
+                scheme: parse_scheme(get_s(n, "scheme", "adaptive:2"))?,
+                mu: MuSchedule::new(
+                    get_f(n, "mu0", 9.76e-5) as f32,
+                    get_f(n, "mu_mult", 1.1) as f32,
+                ),
+                iterations: get_u(n, "iterations", 30),
+                l_steps: get_u(n, "l_steps", 200),
+                lr: ClippedLrSchedule {
+                    eta0: get_f(n, "lr0", 0.1) as f32,
+                    decay: get_f(n, "lr_decay", 0.99) as f32,
+                },
+                momentum: get_f(n, "momentum", 0.95) as f32,
+                mode: match get_s(n, "penalty", "augmented_lagrangian") {
+                    "quadratic" => PenaltyMode::QuadraticPenalty,
+                    _ => PenaltyMode::AugmentedLagrangian,
+                },
+                tol: get_f(n, "tol", 1e-4) as f32,
+                seed: get_u(n, "seed", 0) as u64,
+                eval_every: get_u(n, "eval_every", 1),
+                n_weight_samples: get_u(n, "n_weight_samples", 0),
+            },
+            None => d.lc.clone(),
+        };
+
+        Ok(RunConfig {
+            name: get_s(&j, "name", &d.name).to_string(),
+            net,
+            data,
+            train,
+            lc,
+            seed: get_u(&j, "seed", d.seed as usize) as u64,
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        RunConfig::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(parse_scheme("adaptive:8").unwrap(), Scheme::AdaptiveCodebook { k: 8 });
+        assert_eq!(parse_scheme("binary").unwrap(), Scheme::Binary);
+        assert_eq!(parse_scheme("binary_scale").unwrap(), Scheme::BinaryScale);
+        assert_eq!(parse_scheme("pow2:3").unwrap(), Scheme::PowersOfTwo { c: 3 });
+        assert_eq!(
+            parse_scheme("fixed:-1,0,1").unwrap(),
+            Scheme::FixedCodebook { codebook: vec![-1.0, 0.0, 1.0] }
+        );
+        assert!(parse_scheme("bogus").is_err());
+        assert!(parse_scheme("adaptive").is_err());
+    }
+
+    #[test]
+    fn full_json_config() {
+        let text = r#"{
+            "name": "test-run",
+            "seed": 7,
+            "net": {"sizes": [784, 50, 10], "activation": "relu"},
+            "data": {"kind": "synth_mnist", "n": 500, "test_frac": 0.2},
+            "train": {"ref_steps": 100, "batch": 64, "lr0": 0.05},
+            "lc": {"scheme": "adaptive:4", "mu0": 0.001, "iterations": 10, "penalty": "quadratic"}
+        }"#;
+        let c = RunConfig::from_json(text).unwrap();
+        assert_eq!(c.name, "test-run");
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.net.sizes, vec![784, 50, 10]);
+        assert_eq!(c.net.hidden_activation, Activation::Relu);
+        assert_eq!(c.data.n, 500);
+        assert_eq!(c.train.batch, 64);
+        assert_eq!(c.lc.scheme, Scheme::AdaptiveCodebook { k: 4 });
+        assert_eq!(c.lc.mode, PenaltyMode::QuadraticPenalty);
+        assert_eq!(c.lc.iterations, 10);
+    }
+
+    #[test]
+    fn empty_json_gives_defaults() {
+        let c = RunConfig::from_json("{}").unwrap();
+        assert_eq!(c.net.sizes, vec![784, 300, 100, 10]);
+        assert_eq!(c.lc.iterations, 30);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(RunConfig::from_json("{not json").is_err());
+        assert!(RunConfig::from_json(r#"{"lc": {"scheme": "nope"}}"#).is_err());
+    }
+}

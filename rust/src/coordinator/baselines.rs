@@ -1,0 +1,217 @@
+//! Baselines the paper compares against (§5):
+//!
+//! * **DC** (direct compression) — quantize the reference net once,
+//!   regardless of the loss (Gong et al. 2015).
+//! * **iDC** (iterated DC) — alternate re-training (no penalty) and
+//!   quantization (Han et al. 2015's "trained quantization").
+//! * **BinaryConnect** — gradient at quantized weights, update to
+//!   continuous weights (Courbariaux et al. 2015).
+
+use super::sgd_driver::{run_quantized_grad_sgd, run_sgd, FlatNesterov};
+use super::Backend;
+use crate::nn::sgd::ClippedLrSchedule;
+use crate::quant::{LayerQuantizer, Scheme};
+
+/// Result common to the baselines.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    pub wc: Vec<Vec<f32>>,
+    pub codebooks: Vec<Vec<f32>>,
+    pub train_loss: f32,
+    pub train_err: f32,
+    pub test_err: Option<f32>,
+    /// Per-outer-iteration quantized-net training loss (iDC/BC curves).
+    pub loss_history: Vec<f32>,
+    /// Per-outer-iteration codebook snapshots (iDC; Figs. 12–13).
+    pub codebook_history: Vec<Vec<Vec<f32>>>,
+}
+
+fn eval_with(backend: &mut dyn Backend, wc: &[Vec<f32>], restore: &[Vec<f32>]) -> (f32, f32, Option<f32>) {
+    backend.set_weights(wc);
+    let (l, e) = backend.eval_train();
+    let te = backend.eval_test().map(|(_, e)| e);
+    backend.set_weights(restore);
+    (l, e, te)
+}
+
+/// DC: quantize the (already trained) reference weights once.
+/// Leaves the backend holding the quantized weights.
+pub fn direct_compression(backend: &mut dyn Backend, scheme: &Scheme, seed: u64) -> BaselineResult {
+    let w = backend.weights();
+    let mut wc = Vec::new();
+    let mut codebooks = Vec::new();
+    for (l, wl) in w.iter().enumerate() {
+        let mut q = LayerQuantizer::new(scheme.clone(), seed.wrapping_add(l as u64));
+        let out = q.compress(wl);
+        wc.push(out.wc);
+        codebooks.push(out.codebook);
+    }
+    let (train_loss, train_err, test_err) = eval_with(backend, &wc, &wc);
+    BaselineResult { wc, codebooks, train_loss, train_err, test_err, loss_history: vec![train_loss], codebook_history: Vec::new() }
+}
+
+/// iDC: alternate (a) SGD on the unpenalized loss starting from the
+/// quantized weights, (b) re-quantization. `iterations` outer loops of
+/// `l_steps` SGD steps each — matched to the LC algorithm's budget for a
+/// fair comparison.
+#[allow(clippy::too_many_arguments)]
+pub fn iterated_direct_compression(
+    backend: &mut dyn Backend,
+    scheme: &Scheme,
+    iterations: usize,
+    l_steps: usize,
+    lr: ClippedLrSchedule,
+    momentum: f32,
+    seed: u64,
+    eval_every: usize,
+) -> BaselineResult {
+    let n_layers = backend.n_layers();
+    let mut quantizers: Vec<LayerQuantizer> = (0..n_layers)
+        .map(|l| LayerQuantizer::new(scheme.clone(), seed.wrapping_add(l as u64)))
+        .collect();
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), momentum);
+    let mut loss_history = Vec::new();
+    let mut codebook_history: Vec<Vec<Vec<f32>>> = Vec::new();
+
+    // initial DC
+    let w0 = backend.weights();
+    let mut wc: Vec<Vec<f32>> = Vec::new();
+    let mut codebooks: Vec<Vec<f32>> = Vec::new();
+    for (l, q) in quantizers.iter_mut().enumerate() {
+        let out = q.compress(&w0[l]);
+        wc.push(out.wc);
+        codebooks.push(out.codebook);
+    }
+
+    for j in 0..iterations {
+        // (a) retrain from the quantized weights, no penalty
+        backend.set_weights(&wc);
+        opt.reset();
+        run_sgd(backend, &mut opt, l_steps, lr.lr(j, 0.0), None);
+        // (b) re-quantize
+        let w = backend.weights();
+        for l in 0..n_layers {
+            let out = quantizers[l].compress(&w[l]);
+            wc[l] = out.wc;
+            codebooks[l] = out.codebook;
+        }
+        codebook_history.push(codebooks.clone());
+        if eval_every > 0 && (j % eval_every == 0 || j + 1 == iterations) {
+            let (l, _, _) = eval_with(backend, &wc, &w);
+            loss_history.push(l);
+        }
+    }
+    let w = backend.weights();
+    let (train_loss, train_err, test_err) = eval_with(backend, &wc, &w);
+    backend.set_weights(&wc);
+    BaselineResult { wc, codebooks, train_loss, train_err, test_err, loss_history, codebook_history }
+}
+
+/// BinaryConnect (generalized to any fixed scheme): `steps` minibatch
+/// updates with gradients taken at the quantized weights, followed by a
+/// final hard quantization.
+pub fn binary_connect(
+    backend: &mut dyn Backend,
+    scheme: &Scheme,
+    steps: usize,
+    lr: f32,
+    momentum: f32,
+    seed: u64,
+) -> BaselineResult {
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), momentum);
+    run_quantized_grad_sgd(backend, &mut opt, steps, lr, scheme, seed);
+    // final drastic quantization (the deployed net must be quantized)
+    let w = backend.weights();
+    let mut wc = Vec::new();
+    let mut codebooks = Vec::new();
+    for (l, wl) in w.iter().enumerate() {
+        let mut q = LayerQuantizer::new(scheme.clone(), seed.wrapping_add(100 + l as u64));
+        let out = q.compress(wl);
+        wc.push(out.wc);
+        codebooks.push(out.codebook);
+    }
+    let (train_loss, train_err, test_err) = eval_with(backend, &wc, &w);
+    backend.set_weights(&wc);
+    BaselineResult { wc, codebooks, train_loss, train_err, test_err, loss_history: vec![train_loss], codebook_history: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::test_support::small_backend;
+
+    fn trained(seed: u64) -> crate::coordinator::NativeBackend {
+        let mut b = small_backend(seed);
+        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        run_sgd(&mut b, &mut opt, 150, 0.1, None);
+        b
+    }
+
+    #[test]
+    fn dc_outputs_quantized_weights() {
+        let mut b = trained(30);
+        let r = direct_compression(&mut b, &Scheme::AdaptiveCodebook { k: 4 }, 1);
+        for (wl, cb) in r.wc.iter().zip(&r.codebooks) {
+            for v in wl {
+                assert!(cb.iter().any(|c| (c - v).abs() < 1e-6));
+            }
+        }
+        assert!(r.train_loss.is_finite());
+    }
+
+    #[test]
+    fn dc_with_large_k_barely_hurts() {
+        let mut b = trained(31);
+        let (l_ref, _) = b.eval_train();
+        let r = direct_compression(&mut b, &Scheme::AdaptiveCodebook { k: 64 }, 2);
+        assert!(
+            r.train_loss < l_ref * 1.5 + 0.05,
+            "K=64 DC loss {} vs ref {}",
+            r.train_loss,
+            l_ref
+        );
+    }
+
+    #[test]
+    fn idc_improves_over_dc_at_small_k() {
+        let mut b = trained(32);
+        let w_ref = b.weights();
+        let dc = direct_compression(&mut b, &Scheme::AdaptiveCodebook { k: 2 }, 3);
+        b.set_weights(&w_ref);
+        let idc = iterated_direct_compression(
+            &mut b,
+            &Scheme::AdaptiveCodebook { k: 2 },
+            10,
+            40,
+            ClippedLrSchedule { eta0: 0.05, decay: 0.98 },
+            0.9,
+            3,
+            0,
+        );
+        // paper: iDC improves somewhat over DC (but less than LC)
+        assert!(
+            idc.train_loss < dc.train_loss,
+            "iDC {} should improve on DC {}",
+            idc.train_loss,
+            dc.train_loss
+        );
+    }
+
+    #[test]
+    fn binary_connect_produces_binary_net() {
+        let mut b = trained(33);
+        let r = binary_connect(&mut b, &Scheme::Binary, 60, 0.05, 0.9, 4);
+        for wl in &r.wc {
+            for v in wl {
+                assert!(v.abs() == 1.0, "non-binary weight {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn baselines_leave_backend_on_quantized_weights() {
+        let mut b = trained(34);
+        let r = direct_compression(&mut b, &Scheme::Ternary, 5);
+        assert_eq!(b.weights(), r.wc);
+    }
+}

@@ -1,0 +1,402 @@
+//! The learning-compression (LC) algorithm (paper §3, Figs. 2–4).
+//!
+//! Augmented-Lagrangian version:
+//!
+//! ```text
+//! w ← reference net
+//! (C, Z) ← Π(w)                       # first C step = direct compression
+//! λ ← 0
+//! for μ = μ₀ < μ₁ < …:
+//!     w ← argmin_w L(w) + μ/2 ‖w − w_C − λ/μ‖²     # L step (SGD)
+//!     (C, Z) ← Π(w − λ/μ)                          # C step (quantize)
+//!     λ ← λ − μ(w − w_C)                           # multiplier update
+//!     stop when ‖w − w_C‖ small
+//! ```
+//!
+//! The quadratic-penalty variant keeps λ ≡ 0. The C step dispatches on
+//! [`Scheme`]: k-means (warm-started) for adaptive codebooks, the closed
+//! forms of Fig. 5 for fixed ones.
+
+use super::schedule::MuSchedule;
+use super::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
+use super::Backend;
+use crate::nn::sgd::ClippedLrSchedule;
+use crate::quant::{LayerQuantizer, Scheme};
+
+/// Penalty method used by the outer loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PenaltyMode {
+    /// Augmented Lagrangian (paper's choice: "faster and far more robust").
+    AugmentedLagrangian,
+    /// Quadratic penalty (λ ≡ 0).
+    QuadraticPenalty,
+}
+
+/// LC hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct LcConfig {
+    pub scheme: Scheme,
+    pub mu: MuSchedule,
+    /// Outer LC iterations (the paper uses 30).
+    pub iterations: usize,
+    /// SGD minibatch steps per L step (paper: 2k–4k).
+    pub l_steps: usize,
+    /// Base learning-rate schedule for the L step; clipped at 1/μ.
+    pub lr: ClippedLrSchedule,
+    pub momentum: f32,
+    pub mode: PenaltyMode,
+    /// Stop when ‖w − w_C‖ / ‖w‖ falls below this.
+    pub tol: f32,
+    pub seed: u64,
+    /// Evaluate train/test metrics every `eval_every` LC iterations
+    /// (0 = only at the end).
+    pub eval_every: usize,
+    /// Record this many per-layer continuous-weight trajectories in the
+    /// history (sampled at evenly spaced indices; Fig. 11's right panels).
+    pub n_weight_samples: usize,
+}
+
+impl Default for LcConfig {
+    fn default() -> LcConfig {
+        LcConfig {
+            scheme: Scheme::AdaptiveCodebook { k: 2 },
+            mu: MuSchedule::new(9.76e-5, 1.1),
+            iterations: 30,
+            l_steps: 200,
+            lr: ClippedLrSchedule { eta0: 0.1, decay: 0.99 },
+            momentum: 0.95,
+            mode: PenaltyMode::AugmentedLagrangian,
+            tol: 1e-4,
+            seed: 0,
+            eval_every: 1,
+            n_weight_samples: 0,
+        }
+    }
+}
+
+/// Per-iteration telemetry.
+#[derive(Clone, Debug)]
+pub struct LcRecord {
+    pub iter: usize,
+    pub mu: f32,
+    /// Average minibatch loss during this L step (continuous weights).
+    pub lstep_loss: f32,
+    /// ‖w − w_C‖ over all layers.
+    pub feasibility: f32,
+    /// k-means iterations per layer in this C step.
+    pub kmeans_iters: Vec<usize>,
+    /// Loss/error of the *quantized* net, when evaluated.
+    pub train_loss_wc: Option<f32>,
+    pub train_err_wc: Option<f32>,
+    pub test_err_wc: Option<f32>,
+    /// Codebook snapshot per layer.
+    pub codebooks: Vec<Vec<f32>>,
+    /// Sampled continuous weights per layer (empty unless
+    /// `n_weight_samples > 0`).
+    pub weight_samples: Vec<Vec<f32>>,
+}
+
+/// Final result.
+#[derive(Clone, Debug)]
+pub struct LcResult {
+    /// Quantized weights per layer (the deliverable).
+    pub wc: Vec<Vec<f32>>,
+    /// Final codebook per layer.
+    pub codebooks: Vec<Vec<f32>>,
+    /// Continuous weights at termination.
+    pub w: Vec<Vec<f32>>,
+    pub history: Vec<LcRecord>,
+    /// (loss, err%) of the quantized net on train, and err% on test.
+    pub train_loss: f32,
+    pub train_err: f32,
+    pub test_err: Option<f32>,
+}
+
+fn feasibility_norm(w: &[Vec<f32>], wc: &[Vec<f32>]) -> (f32, f32) {
+    let mut dist2 = 0.0f64;
+    let mut norm2 = 0.0f64;
+    for (wl, wcl) in w.iter().zip(wc) {
+        for (a, b) in wl.iter().zip(wcl) {
+            dist2 += ((a - b) as f64).powi(2);
+            norm2 += (*a as f64).powi(2);
+        }
+    }
+    (dist2.sqrt() as f32, norm2.sqrt() as f32)
+}
+
+/// Evaluate the quantized net without disturbing the continuous weights.
+fn eval_quantized(
+    backend: &mut dyn Backend,
+    w: &[Vec<f32>],
+    wc: &[Vec<f32>],
+) -> (f32, f32, Option<f32>) {
+    backend.set_weights(wc);
+    let (l, e) = backend.eval_train();
+    let te = backend.eval_test().map(|(_, e)| e);
+    backend.set_weights(w);
+    (l, e, te)
+}
+
+/// Run the LC algorithm on a (trained) reference net held by `backend`.
+pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
+    let n_layers = backend.n_layers();
+    let mut quantizers: Vec<LayerQuantizer> = (0..n_layers)
+        .map(|l| LayerQuantizer::new(cfg.scheme.clone(), cfg.seed.wrapping_add(l as u64)))
+        .collect();
+
+    // --- initial C step (μ → 0⁺): direct compression of the reference ---
+    let mut w = backend.weights();
+    let mut wc: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    let mut codebooks: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    for (l, q) in quantizers.iter_mut().enumerate() {
+        let out = q.compress(&w[l]);
+        wc.push(out.wc);
+        codebooks.push(out.codebook);
+    }
+    let mut lambda: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
+
+    let mut opt = FlatNesterov::new(&w, &backend.biases(), cfg.momentum);
+    let mut history: Vec<LcRecord> = Vec::with_capacity(cfg.iterations);
+    let mut shifted: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
+
+    for j in 0..cfg.iterations {
+        let mu = cfg.mu.mu(j);
+        let lr = cfg.lr.lr(j, mu);
+
+        // ---- L step: SGD on L(w) + μ/2 ‖w − w_C − λ/μ‖² ----
+        // fresh velocities: the penalized objective changed (new μ, w_C, λ)
+        opt.reset();
+        let penalty = PenaltyState { wc: wc.clone(), lambda: lambda.clone(), mu };
+        let lstep_loss = run_sgd(backend, &mut opt, cfg.l_steps, lr, Some(&penalty));
+        w = backend.weights();
+
+        // ---- C step: Θ = Π(w − λ/μ) ----
+        let mut kmeans_iters = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            match cfg.mode {
+                PenaltyMode::AugmentedLagrangian => {
+                    crate::linalg::vecops::shift_by_multipliers(
+                        &w[l],
+                        &lambda[l],
+                        mu,
+                        &mut shifted[l],
+                    );
+                }
+                PenaltyMode::QuadraticPenalty => shifted[l].copy_from_slice(&w[l]),
+            }
+            let out = quantizers[l].compress(&shifted[l]);
+            wc[l] = out.wc;
+            codebooks[l] = out.codebook;
+            kmeans_iters.push(out.iterations);
+        }
+
+        // ---- multiplier update: λ ← λ − μ(w − w_C) ----
+        if cfg.mode == PenaltyMode::AugmentedLagrangian {
+            for l in 0..n_layers {
+                crate::linalg::vecops::update_multipliers(&mut lambda[l], &w[l], &wc[l], mu);
+            }
+        }
+
+        let (dist, norm) = feasibility_norm(&w, &wc);
+        let do_eval = cfg.eval_every > 0 && (j % cfg.eval_every == 0 || j + 1 == cfg.iterations);
+        let (tl, te, tst) = if do_eval {
+            let (a, b, c) = eval_quantized(backend, &w, &wc);
+            (Some(a), Some(b), c)
+        } else {
+            (None, None, None)
+        };
+        let weight_samples = if cfg.n_weight_samples > 0 {
+            w.iter()
+                .map(|wl| {
+                    let stride = (wl.len() / cfg.n_weight_samples).max(1);
+                    wl.iter().step_by(stride).take(cfg.n_weight_samples).copied().collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        history.push(LcRecord {
+            iter: j,
+            mu,
+            lstep_loss,
+            feasibility: dist,
+            kmeans_iters,
+            train_loss_wc: tl,
+            train_err_wc: te,
+            test_err_wc: tst,
+            codebooks: codebooks.clone(),
+            weight_samples,
+        });
+        crate::debug!(
+            "LC iter {j}: mu={mu:.4e} lr={lr:.4e} lstep_loss={lstep_loss:.5} ||w-wc||={dist:.4e}"
+        );
+
+        if dist <= cfg.tol * norm.max(1e-12) {
+            break;
+        }
+    }
+
+    // Final: adopt the quantized weights (the solution is w_C = Δ(C, Z)).
+    let (train_loss, train_err, test_err) = eval_quantized(backend, &w, &wc);
+    backend.set_weights(&wc);
+    LcResult { wc, codebooks, w, history, train_loss, train_err, test_err }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::test_support::small_backend;
+    use crate::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+
+    fn trained_backend(seed: u64) -> crate::coordinator::NativeBackend {
+        let mut b = small_backend(seed);
+        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        run_sgd(&mut b, &mut opt, 150, 0.1, None);
+        b
+    }
+
+    fn quick_cfg(scheme: Scheme) -> LcConfig {
+        LcConfig {
+            scheme,
+            mu: MuSchedule::new(0.001, 1.4),
+            iterations: 14,
+            l_steps: 40,
+            lr: ClippedLrSchedule { eta0: 0.05, decay: 0.98 },
+            momentum: 0.9,
+            mode: PenaltyMode::AugmentedLagrangian,
+            tol: 1e-4,
+            seed: 7,
+            eval_every: 0,
+            n_weight_samples: 0,
+        }
+    }
+
+    #[test]
+    fn output_weights_are_quantized() {
+        let mut b = trained_backend(20);
+        let res = lc_quantize(&mut b, &quick_cfg(Scheme::AdaptiveCodebook { k: 4 }));
+        for (wl, cb) in res.wc.iter().zip(&res.codebooks) {
+            assert!(cb.len() <= 4);
+            for v in wl {
+                assert!(
+                    cb.iter().any(|c| (c - v).abs() < 1e-6),
+                    "{v} not in codebook {cb:?}"
+                );
+            }
+        }
+        // backend ends up holding the quantized weights
+        let bw = b.weights();
+        assert_eq!(bw, res.wc);
+    }
+
+    #[test]
+    fn feasibility_decreases_over_iterations() {
+        let mut b = trained_backend(21);
+        let res = lc_quantize(&mut b, &quick_cfg(Scheme::AdaptiveCodebook { k: 2 }));
+        let first = res.history.first().unwrap().feasibility;
+        let last = res.history.last().unwrap().feasibility;
+        assert!(
+            last < first * 0.7,
+            "||w-wc|| {first} -> {last} did not shrink"
+        );
+    }
+
+    #[test]
+    fn lc_beats_direct_compression_at_k2() {
+        // The paper's headline claim: LC << DC at high compression.
+        let mut b = trained_backend(22);
+        let w_ref = b.weights();
+        // DC: quantize reference, evaluate
+        let dc = crate::coordinator::baselines::direct_compression(
+            &mut b,
+            &Scheme::AdaptiveCodebook { k: 2 },
+            99,
+        );
+        b.set_weights(&w_ref);
+        let mut cfg = quick_cfg(Scheme::AdaptiveCodebook { k: 2 });
+        cfg.iterations = 20;
+        let lc = lc_quantize(&mut b, &cfg);
+        assert!(
+            lc.train_loss < dc.train_loss,
+            "LC {} should beat DC {}",
+            lc.train_loss,
+            dc.train_loss
+        );
+    }
+
+    #[test]
+    fn binarization_with_scale_converges_to_two_values() {
+        let mut b = trained_backend(23);
+        let res = lc_quantize(&mut b, &quick_cfg(Scheme::BinaryScale));
+        for (wl, cb) in res.wc.iter().zip(&res.codebooks) {
+            assert_eq!(cb.len(), 2);
+            assert!((cb[0] + cb[1]).abs() < 1e-5, "scaled binary: ±a, got {cb:?}");
+            let distinct: std::collections::BTreeSet<i64> =
+                wl.iter().map(|v| (v * 1e7) as i64).collect();
+            assert!(distinct.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn quadratic_penalty_mode_runs() {
+        let mut b = trained_backend(24);
+        let mut cfg = quick_cfg(Scheme::AdaptiveCodebook { k: 4 });
+        cfg.mode = PenaltyMode::QuadraticPenalty;
+        let res = lc_quantize(&mut b, &cfg);
+        assert!(res.train_loss.is_finite());
+        assert_eq!(res.history.last().unwrap().kmeans_iters.len(), 2);
+    }
+
+    #[test]
+    fn history_records_telemetry() {
+        let mut b = trained_backend(25);
+        let mut cfg = quick_cfg(Scheme::AdaptiveCodebook { k: 4 });
+        cfg.eval_every = 2;
+        cfg.iterations = 6;
+        cfg.tol = 0.0; // force all iterations
+        let res = lc_quantize(&mut b, &cfg);
+        assert_eq!(res.history.len(), 6);
+        for (j, rec) in res.history.iter().enumerate() {
+            assert_eq!(rec.iter, j);
+            assert!(rec.mu > 0.0);
+            let evaluated = rec.train_loss_wc.is_some();
+            assert_eq!(evaluated, j % 2 == 0 || j == 5);
+        }
+        // mu grows geometrically
+        assert!(res.history[5].mu > res.history[0].mu);
+    }
+
+    #[test]
+    fn warm_started_kmeans_needs_few_iterations_later() {
+        // paper Fig. 10: once the LC run settles (large μ), warm-started C
+        // steps take ~1 k-means iteration, vs tens for the cold k-means++
+        // start on the reference weights.
+        let mut b = trained_backend(26);
+        let cold_max = b
+            .weights()
+            .iter()
+            .map(|wl| {
+                let mut q = LayerQuantizer::new(Scheme::AdaptiveCodebook { k: 4 }, 99);
+                q.compress(wl).iterations
+            })
+            .max()
+            .unwrap();
+        let mut cfg = quick_cfg(Scheme::AdaptiveCodebook { k: 4 });
+        cfg.iterations = 20;
+        cfg.mu = MuSchedule::new(0.001, 1.7); // drive to convergence
+        cfg.tol = 0.0;
+        let res = lc_quantize(&mut b, &cfg);
+        let late_max = *res
+            .history
+            .last()
+            .unwrap()
+            .kmeans_iters
+            .iter()
+            .max()
+            .unwrap();
+        assert!(
+            late_max <= 3 && late_max < cold_max.max(2),
+            "late kmeans iters {late_max} vs cold {cold_max}"
+        );
+    }
+}

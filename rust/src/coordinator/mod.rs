@@ -1,0 +1,174 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! The LC algorithm ([`lc`]) alternates an L step (SGD on the penalized
+//! loss, driven by [`sgd_driver`] over any [`Backend`]) with a C step (the
+//! operators in [`crate::quant`]), plus Lagrange-multiplier updates and the
+//! μ schedule ([`schedule`]). [`baselines`] implements DC, iDC and
+//! BinaryConnect for the paper's comparisons.
+//!
+//! Two interchangeable backends compute loss/gradients:
+//! * [`NativeBackend`] — the pure-rust MLP ([`crate::nn`]);
+//! * [`crate::runtime::PjrtBackend`] — the AOT JAX artifact via PJRT.
+//!
+//! The coordinator owns the optimizer state, so BinaryConnect (gradient at
+//! quantized weights, update to continuous weights) works identically on
+//! both backends.
+
+pub mod baselines;
+pub mod lc;
+pub mod schedule;
+pub mod sgd_driver;
+
+pub use lc::{lc_quantize, LcConfig, LcRecord, LcResult, PenaltyMode};
+pub use schedule::MuSchedule;
+
+use crate::data::batcher::Batcher;
+use crate::data::Dataset;
+use crate::nn::Mlp;
+use crate::util::rng::Rng;
+
+/// Loss gradients in backend-independent form: per-layer weight and bias
+/// gradient vectors (row-major, matching the layer's weight layout).
+#[derive(Clone, Debug)]
+pub struct FlatGrads {
+    pub dw: Vec<Vec<f32>>,
+    pub db: Vec<Vec<f32>>,
+}
+
+/// A source of minibatch loss/gradients for the L step. Implementations
+/// hold the model parameters; the coordinator reads/writes them around the
+/// C step.
+pub trait Backend {
+    fn n_layers(&self) -> usize;
+    /// Per-layer multiplicative weights.
+    fn weights(&self) -> Vec<Vec<f32>>;
+    fn set_weights(&mut self, w: &[Vec<f32>]);
+    /// Per-layer biases.
+    fn biases(&self) -> Vec<Vec<f32>>;
+    fn set_biases(&mut self, b: &[Vec<f32>]);
+    /// Loss and gradients at the current parameters on the next minibatch.
+    fn next_loss_grads(&mut self) -> (f32, FlatGrads);
+    /// (loss, error %) on the training set.
+    fn eval_train(&mut self) -> (f32, f32);
+    /// (loss, error %) on the test set, if one exists.
+    fn eval_test(&mut self) -> Option<(f32, f32)>;
+}
+
+/// Pure-rust backend over [`Mlp`] + a minibatcher.
+pub struct NativeBackend {
+    pub net: Mlp,
+    pub train: Dataset,
+    pub test: Option<Dataset>,
+    batcher: Batcher,
+    rng: Rng,
+    /// Chunk size for dataset evaluation.
+    pub eval_chunk: usize,
+}
+
+impl NativeBackend {
+    pub fn new(net: Mlp, train: Dataset, test: Option<Dataset>, batch: usize, seed: u64) -> Self {
+        let batcher = Batcher::new(train.len(), batch.min(train.len()), seed);
+        NativeBackend { net, train, test, batcher, rng: Rng::new(seed ^ 0xABCD), eval_chunk: 1024 }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn n_layers(&self) -> usize {
+        self.net.n_layers()
+    }
+    fn weights(&self) -> Vec<Vec<f32>> {
+        self.net.weights_cloned()
+    }
+    fn set_weights(&mut self, w: &[Vec<f32>]) {
+        self.net.set_weights(w);
+    }
+    fn biases(&self) -> Vec<Vec<f32>> {
+        self.net.layers.iter().map(|l| l.b.clone()).collect()
+    }
+    fn set_biases(&mut self, b: &[Vec<f32>]) {
+        for (l, bb) in self.net.layers.iter_mut().zip(b) {
+            l.b.copy_from_slice(bb);
+        }
+    }
+    fn next_loss_grads(&mut self) -> (f32, FlatGrads) {
+        let batch = self.batcher.next_batch(&self.train);
+        let has_dropout = self.net.layers.iter().any(|l| l.keep < 1.0);
+        let rng = if has_dropout { Some(&mut self.rng) } else { None };
+        let (loss, _err, grads) =
+            self.net
+                .loss_and_grads(&batch.x, &batch.y, &batch.labels, has_dropout, rng);
+        (
+            loss,
+            FlatGrads {
+                dw: grads.dw.into_iter().map(|m| m.data).collect(),
+                db: grads.db,
+            },
+        )
+    }
+    fn eval_train(&mut self) -> (f32, f32) {
+        self.net.evaluate_dataset(&self.train, self.eval_chunk)
+    }
+    fn eval_test(&mut self) -> Option<(f32, f32)> {
+        self.test
+            .as_ref()
+            .map(|t| self.net.evaluate_dataset(t, self.eval_chunk))
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::data::synth_mnist::SynthMnist;
+    use crate::nn::MlpSpec;
+
+    pub fn small_backend(seed: u64) -> NativeBackend {
+        let data = SynthMnist::generate(200, seed);
+        let mut rng = Rng::new(seed);
+        let (train, test) = data.split(0.2, &mut rng);
+        let spec = MlpSpec::single_hidden(784, 16, 10);
+        let net = Mlp::new(&spec, seed);
+        NativeBackend::new(net, train, Some(test), 32, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::small_backend;
+    use super::*;
+
+    #[test]
+    fn backend_roundtrips_params() {
+        let mut b = small_backend(1);
+        let mut w = b.weights();
+        w[0][0] = 42.0;
+        b.set_weights(&w);
+        assert_eq!(b.weights()[0][0], 42.0);
+        let mut bias = b.biases();
+        bias[1][2] = -1.0;
+        b.set_biases(&bias);
+        assert_eq!(b.biases()[1][2], -1.0);
+    }
+
+    #[test]
+    fn grads_have_matching_shapes() {
+        let mut b = small_backend(2);
+        let (loss, g) = b.next_loss_grads();
+        assert!(loss.is_finite() && loss > 0.0);
+        let w = b.weights();
+        assert_eq!(g.dw.len(), w.len());
+        for (gw, ww) in g.dw.iter().zip(&w) {
+            assert_eq!(gw.len(), ww.len());
+        }
+    }
+
+    #[test]
+    fn eval_returns_finite_metrics() {
+        let mut b = small_backend(3);
+        let (l, e) = b.eval_train();
+        assert!(l.is_finite());
+        assert!((0.0..=100.0).contains(&e));
+        let (lt, et) = b.eval_test().unwrap();
+        assert!(lt.is_finite());
+        assert!((0.0..=100.0).contains(&et));
+    }
+}

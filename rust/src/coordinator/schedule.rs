@@ -1,0 +1,51 @@
+//! Penalty-parameter and learning-rate schedules (paper §3.3).
+
+/// Multiplicative μ schedule: μ_j = μ₀ · aʲ (paper: e.g. μ₀ = 9.76e-5,
+/// a = 1.1 for the LeNet experiments; μ₀ = 10, a = 1.1 for linreg).
+#[derive(Clone, Copy, Debug)]
+pub struct MuSchedule {
+    pub mu0: f32,
+    pub mult: f32,
+}
+
+impl MuSchedule {
+    pub fn new(mu0: f32, mult: f32) -> MuSchedule {
+        assert!(mu0 > 0.0, "mu0 must be positive");
+        assert!(mult >= 1.0, "mu must be non-decreasing");
+        MuSchedule { mu0, mult }
+    }
+
+    pub fn mu(&self, j: usize) -> f32 {
+        self.mu0 * self.mult.powi(j as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_growth() {
+        let s = MuSchedule::new(10.0, 1.1);
+        assert_eq!(s.mu(0), 10.0);
+        assert!((s.mu(1) - 11.0).abs() < 1e-5);
+        assert!((s.mu(2) - 12.1).abs() < 1e-4);
+        // paper's LeNet schedule
+        let p = MuSchedule::new(9.76e-5, 1.1);
+        assert!(p.mu(30) > p.mu(0) * 15.0);
+    }
+
+    #[test]
+    fn monotone() {
+        let s = MuSchedule::new(0.001, 1.2);
+        for j in 0..40 {
+            assert!(s.mu(j + 1) > s.mu(j));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_decreasing() {
+        let _ = MuSchedule::new(1.0, 0.9);
+    }
+}

@@ -1,0 +1,112 @@
+//! Minibatch iteration with epoch shuffling.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// A minibatch: inputs `[b, dim]`, one-hot targets `[b, n_classes]` and the
+/// raw labels.
+pub struct Batch {
+    pub x: Mat,
+    pub y: Mat,
+    pub labels: Vec<u8>,
+}
+
+/// Cyclic minibatcher: shuffles indices each epoch, yields fixed-size
+/// batches (the last partial batch of an epoch is dropped, like the paper's
+/// fixed 512-point minibatches).
+pub struct Batcher {
+    order: Vec<usize>,
+    pos: usize,
+    pub batch_size: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch_size: usize, seed: u64) -> Batcher {
+        assert!(batch_size > 0 && batch_size <= n, "batch {batch_size} > n {n}");
+        let mut rng = Rng::new(seed);
+        let order = rng.permutation(n);
+        Batcher { order, pos: 0, batch_size, rng, epoch: 0 }
+    }
+
+    /// Next batch of indices; reshuffles when the epoch is exhausted.
+    pub fn next_indices(&mut self) -> &[usize] {
+        if self.pos + self.batch_size > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+            self.epoch += 1;
+        }
+        let s = &self.order[self.pos..self.pos + self.batch_size];
+        self.pos += self.batch_size;
+        s
+    }
+
+    /// Materialize the next batch from a dataset.
+    pub fn next_batch(&mut self, data: &Dataset) -> Batch {
+        let b = self.batch_size;
+        let idx: Vec<usize> = self.next_indices().to_vec();
+        let mut x = Mat::zeros(b, data.dim());
+        let mut y = Mat::zeros(b, data.n_classes);
+        let mut labels = Vec::with_capacity(b);
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(data.images.row(i));
+            y[(r, data.labels[i] as usize)] = 1.0;
+            labels.push(data.labels[i]);
+        }
+        Batch { x, y, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist::SynthMnist;
+
+    #[test]
+    fn batches_cover_epoch() {
+        let mut b = Batcher::new(10, 3, 1);
+        let mut seen = vec![0usize; 10];
+        for _ in 0..3 {
+            for &i in b.next_indices() {
+                seen[i] += 1;
+            }
+        }
+        // 9 of 10 indices seen exactly once in epoch 0 (last partial dropped)
+        assert_eq!(seen.iter().sum::<usize>(), 9);
+        assert!(seen.iter().all(|&c| c <= 1));
+        assert_eq!(b.epoch, 0);
+        b.next_indices();
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn batch_contents_match_dataset() {
+        let data = SynthMnist::generate(20, 2);
+        let mut b = Batcher::new(20, 4, 3);
+        let batch = b.next_batch(&data);
+        assert_eq!(batch.x.rows, 4);
+        assert_eq!(batch.y.rows, 4);
+        for r in 0..4 {
+            let l = batch.labels[r] as usize;
+            assert_eq!(batch.y[(r, l)], 1.0);
+            assert_eq!(batch.y.row(r).iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Batcher::new(50, 8, 7);
+        let mut b = Batcher::new(50, 8, 7);
+        for _ in 0..20 {
+            assert_eq!(a.next_indices(), b.next_indices());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn batch_larger_than_dataset_panics() {
+        let _ = Batcher::new(5, 10, 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! CIFAR10 stand-in: 32×32×3 synthetic images (paper §5.4).
+//!
+//! Each class is a smooth random color field (low-frequency cosine mixture
+//! with class-specific coefficients) composited with a class-specific
+//! geometric blob; instances add random phase shifts and pixel noise. The
+//! set is learnable by a small conv/dense net but not linearly trivial,
+//! which is what the §5.4 experiment needs (train a net, quantize at K=2,
+//! compare test error).
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const DIM: usize = SIDE * SIDE * CHANNELS;
+
+/// Class-conditional cosine-mixture texture parameters.
+struct ClassProto {
+    // per channel: (freq_x, freq_y, phase, amplitude) × 3 components
+    comps: [[(f32, f32, f32, f32); 3]; CHANNELS],
+    // blob centre/radius per class
+    blob: (f32, f32, f32),
+}
+
+fn proto(class: u8, rng: &mut Rng) -> ClassProto {
+    // Derive deterministic per-class parameters from a class-seeded stream.
+    let mut crng = Rng::new(0xC1FA_u64 * 131 + class as u64);
+    let mut comps = [[(0.0, 0.0, 0.0, 0.0); 3]; CHANNELS];
+    for ch in comps.iter_mut() {
+        for comp in ch.iter_mut() {
+            *comp = (
+                crng.uniform_in(0.5, 3.5),
+                crng.uniform_in(0.5, 3.5),
+                crng.uniform_in(0.0, std::f32::consts::TAU),
+                crng.uniform_in(0.1, 0.35),
+            );
+        }
+    }
+    let blob = (
+        crng.uniform_in(0.25, 0.75) + rng.normal(0.0, 0.04),
+        crng.uniform_in(0.25, 0.75) + rng.normal(0.0, 0.04),
+        crng.uniform_in(0.12, 0.3),
+    );
+    ClassProto { comps, blob }
+}
+
+/// Generate `n` images. Layout: channel-major rows, i.e. `[c][y][x]`
+/// flattened — matches how the conv net in `python/compile/model.py`
+/// interprets the input.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = Mat::zeros(n, DIM);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = (i % 10) as u8;
+        let p = proto(class, &mut rng);
+        let phase_jitter = rng.uniform_in(0.0, 1.5);
+        let noise = 0.06;
+        let row = images.row_mut(i);
+        for c in 0..CHANNELS {
+            for y in 0..SIDE {
+                for x in 0..SIDE {
+                    let (fx, fy) = (x as f32 / SIDE as f32, y as f32 / SIDE as f32);
+                    let mut v = 0.5f32;
+                    for &(wx, wy, ph, amp) in &p.comps[c] {
+                        v += amp
+                            * (std::f32::consts::TAU * (wx * fx + wy * fy)
+                                + ph
+                                + phase_jitter)
+                                .cos();
+                    }
+                    // blob mask raises one channel inside the class blob
+                    let d2 = (fx - p.blob.0).powi(2) + (fy - p.blob.1).powi(2);
+                    if c == (class as usize % 3) {
+                        v += 0.5 * (-d2 / (p.blob.2 * p.blob.2)).exp();
+                    }
+                    v += rng.normal(0.0, noise);
+                    row[c * SIDE * SIDE + y * SIDE + x] = v.clamp(0.0, 1.0);
+                }
+            }
+        }
+        labels.push(class);
+    }
+    let perm = rng.permutation(n);
+    let mut shuffled = Mat::zeros(n, DIM);
+    let mut shuffled_labels = vec![0u8; n];
+    for (dst, &src) in perm.iter().enumerate() {
+        shuffled.row_mut(dst).copy_from_slice(images.row(src));
+        shuffled_labels[dst] = labels[src];
+    }
+    Dataset { images: shuffled, labels: shuffled_labels, n_classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = generate(20, 4);
+        assert_eq!(a.dim(), DIM);
+        assert_eq!(a.len(), 20);
+        let b = generate(20, 4);
+        assert_eq!(a.images.data, b.images.data);
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let d = generate(10, 6);
+        assert!(d.images.data.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn classes_distinguishable() {
+        let d = generate(100, 8);
+        // nearest-centroid in pixel space should beat chance comfortably
+        let mut centroids = vec![vec![0.0f64; DIM]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..50 {
+            let l = d.labels[i] as usize;
+            counts[l] += 1;
+            for (j, &v) in d.images.row(i).iter().enumerate() {
+                centroids[l][j] += v as f64;
+            }
+        }
+        for (c, cnt) in centroids.iter_mut().zip(counts) {
+            for v in c.iter_mut() {
+                *v /= cnt.max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 50..100 {
+            let row = d.images.row(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = row
+                        .iter()
+                        .zip(&centroids[a])
+                        .map(|(x, c)| (*x as f64 - c).powi(2))
+                        .sum();
+                    let db: f64 = row
+                        .iter()
+                        .zip(&centroids[b])
+                        .map(|(x, c)| (*x as f64 - c).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == d.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 25, "nearest-centroid accuracy too low: {correct}/50");
+    }
+}

@@ -1,0 +1,125 @@
+//! Dataset substrate.
+//!
+//! The paper trains on MNIST and CIFAR10; this environment has no network
+//! access, so we build deterministic **synthetic** stand-ins that exercise
+//! the same code paths (multi-class image classification with a learnable
+//! structure, and a bicubic super-resolution regression set). The
+//! substitution rationale is in DESIGN.md §3.
+
+pub mod batcher;
+pub mod cifar_like;
+pub mod superres;
+pub mod synth_mnist;
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// An in-memory classification dataset: row-major images `[n, dim]` plus
+/// integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Mat,
+    pub labels: Vec<u8>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+    pub fn dim(&self) -> usize {
+        self.images.cols
+    }
+
+    /// Normalize pixels to zero mean (paper §5.3: "normalize the pixel
+    /// grayscales to [0,1] and then subtract the mean"). Returns the mean so
+    /// a test set can reuse the train-set statistics.
+    pub fn subtract_mean(&mut self, mean: Option<f32>) -> f32 {
+        let m = mean.unwrap_or_else(|| {
+            self.images.data.iter().sum::<f32>() / self.images.data.len() as f32
+        });
+        for v in self.images.data.iter_mut() {
+            *v -= m;
+        }
+        m
+    }
+
+    /// Random split into (train, test) with `test_frac` held out
+    /// (paper: 90%/10%).
+    pub fn split(&self, test_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.len();
+        let n_test = ((n as f64) * test_frac).round() as usize;
+        let perm = rng.permutation(n);
+        let take = |idx: &[usize]| -> Dataset {
+            let mut images = Mat::zeros(idx.len(), self.dim());
+            let mut labels = Vec::with_capacity(idx.len());
+            for (r, &i) in idx.iter().enumerate() {
+                images.row_mut(r).copy_from_slice(self.images.row(i));
+                labels.push(self.labels[i]);
+            }
+            Dataset { images, labels, n_classes: self.n_classes }
+        };
+        (take(&perm[n_test..]), take(&perm[..n_test]))
+    }
+
+    /// One-hot encode labels as an `[n, n_classes]` matrix.
+    pub fn one_hot(&self) -> Mat {
+        let mut y = Mat::zeros(self.len(), self.n_classes);
+        for (i, &l) in self.labels.iter().enumerate() {
+            y[(i, l as usize)] = 1.0;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let images = Mat::from_vec(4, 2, vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        Dataset { images, labels: vec![0, 1, 0, 1], n_classes: 2 }
+    }
+
+    #[test]
+    fn split_sizes_and_contents() {
+        let d = tiny();
+        let mut rng = Rng::new(3);
+        let (tr, te) = d.split(0.25, &mut rng);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(te.len(), 1);
+        // Every original row appears exactly once across the two splits.
+        let mut rows: Vec<Vec<i64>> = Vec::new();
+        for ds in [&tr, &te] {
+            for r in 0..ds.len() {
+                rows.push(ds.images.row(r).iter().map(|v| *v as i64).collect());
+            }
+        }
+        rows.sort();
+        assert_eq!(rows, vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]]);
+    }
+
+    #[test]
+    fn mean_subtraction() {
+        let mut d = tiny();
+        let m = d.subtract_mean(None);
+        assert!((m - 3.5).abs() < 1e-6);
+        let new_mean: f32 = d.images.data.iter().sum::<f32>() / 8.0;
+        assert!(new_mean.abs() < 1e-6);
+        // Reusing a provided mean shifts by exactly that value.
+        let mut d2 = tiny();
+        d2.subtract_mean(Some(1.0));
+        assert_eq!(d2.images[(0, 0)], -1.0);
+    }
+
+    #[test]
+    fn one_hot_encoding() {
+        let d = tiny();
+        let y = d.one_hot();
+        assert_eq!(y.row(0), &[1.0, 0.0]);
+        assert_eq!(y.row(1), &[0.0, 1.0]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Shared experiment harness: dataset construction, reference-net training,
+//! and the LC/DC/iDC protocol used across the paper's figures.
+
+use crate::coordinator::baselines::{self, BaselineResult};
+use crate::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+use crate::coordinator::{lc_quantize, Backend, LcConfig, LcResult, MuSchedule, NativeBackend};
+use crate::data::synth_mnist::SynthMnist;
+use crate::data::Dataset;
+use crate::nn::sgd::ClippedLrSchedule;
+use crate::nn::{Mlp, MlpSpec};
+use crate::quant::Scheme;
+use crate::util::rng::Rng;
+
+/// Experiment-scale knobs shared by the drivers.
+pub struct Protocol {
+    pub n_data: usize,
+    pub ref_steps: usize,
+    pub batch: usize,
+    pub lc_iterations: usize,
+    pub l_steps: usize,
+    pub lr0: f32,
+    pub lr_decay: f32,
+    pub momentum: f32,
+    pub mu0: f32,
+    pub mu_mult: f32,
+}
+
+impl Protocol {
+    /// Scaled-down protocol (minutes, preserves the paper's shape).
+    pub fn quick() -> Protocol {
+        Protocol {
+            n_data: 2_000,
+            ref_steps: 500,
+            batch: 128,
+            lc_iterations: 20,
+            l_steps: 80,
+            lr0: 0.1,
+            lr_decay: 0.99,
+            momentum: 0.95,
+            mu0: 1e-3,
+            mu_mult: 1.4,
+        }
+    }
+
+    /// Closer to the paper's §5.3 protocol (much slower).
+    pub fn full() -> Protocol {
+        Protocol {
+            n_data: 10_000,
+            ref_steps: 4_000,
+            batch: 256,
+            lc_iterations: 30,
+            l_steps: 400,
+            lr0: 0.1,
+            lr_decay: 0.99,
+            momentum: 0.95,
+            mu0: 9.76e-5,
+            mu_mult: 1.3,
+        }
+    }
+
+    pub fn for_scale(scale: super::Scale) -> Protocol {
+        match scale {
+            super::Scale::Quick => Protocol::quick(),
+            super::Scale::Full => Protocol::full(),
+        }
+    }
+
+    pub fn lc_config(&self, scheme: Scheme, seed: u64) -> LcConfig {
+        LcConfig {
+            scheme,
+            mu: MuSchedule::new(self.mu0, self.mu_mult),
+            iterations: self.lc_iterations,
+            l_steps: self.l_steps,
+            lr: ClippedLrSchedule { eta0: self.lr0, decay: self.lr_decay },
+            momentum: self.momentum,
+            mode: crate::coordinator::PenaltyMode::AugmentedLagrangian,
+            tol: 1e-4,
+            seed,
+            eval_every: 1,
+            n_weight_samples: 0,
+        }
+    }
+}
+
+/// A trained reference net + its data, ready for quantization runs.
+pub struct TrainedRef {
+    pub backend: NativeBackend,
+    pub ref_weights: Vec<Vec<f32>>,
+    pub ref_biases: Vec<Vec<f32>>,
+    pub ref_train_loss: f32,
+    pub ref_train_err: f32,
+    pub ref_test_err: Option<f32>,
+}
+
+impl TrainedRef {
+    /// Restore the backend to the reference parameters.
+    pub fn reset(&mut self) {
+        self.backend.set_weights(&self.ref_weights);
+        self.backend.set_biases(&self.ref_biases);
+    }
+}
+
+/// Build a synth-MNIST classification backend and train the reference net.
+pub fn train_reference(spec: &MlpSpec, p: &Protocol, seed: u64) -> TrainedRef {
+    let mut data = SynthMnist::generate(p.n_data, seed);
+    data.subtract_mean(None);
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let (train, test) = data.split(0.1, &mut rng);
+    train_reference_on(spec, train, Some(test), p, seed)
+}
+
+/// Same, over a caller-supplied dataset.
+pub fn train_reference_on(
+    spec: &MlpSpec,
+    train: Dataset,
+    test: Option<Dataset>,
+    p: &Protocol,
+    seed: u64,
+) -> TrainedRef {
+    let net = Mlp::new(spec, seed);
+    let mut backend = NativeBackend::new(net, train, test, p.batch, seed);
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), p.momentum);
+    // Nesterov with decaying lr, matching the paper's reference training.
+    let chunk = 100.max(p.ref_steps / 20);
+    let mut step = 0;
+    while step < p.ref_steps {
+        let n = chunk.min(p.ref_steps - step);
+        let lr = p.lr0 * p.lr_decay.powi((step / chunk) as i32);
+        run_sgd(&mut backend, &mut opt, n, lr, None);
+        step += n;
+    }
+    let (l, e) = backend.eval_train();
+    let te = backend.eval_test().map(|(_, e)| e);
+    crate::info!("reference trained: loss={l:.5} train_err={e:.2}% test_err={te:?}");
+    TrainedRef {
+        ref_weights: backend.weights(),
+        ref_biases: backend.biases(),
+        backend,
+        ref_train_loss: l,
+        ref_train_err: e,
+        ref_test_err: te,
+    }
+}
+
+/// Run the three algorithms (LC / DC / iDC) from the same reference under a
+/// matched budget. Returns (lc, dc, idc).
+pub fn run_all_algorithms(
+    tr: &mut TrainedRef,
+    scheme: &Scheme,
+    p: &Protocol,
+    seed: u64,
+) -> (LcResult, BaselineResult, BaselineResult) {
+    tr.reset();
+    let dc = baselines::direct_compression(&mut tr.backend, scheme, seed);
+
+    tr.reset();
+    let idc = baselines::iterated_direct_compression(
+        &mut tr.backend,
+        scheme,
+        p.lc_iterations,
+        p.l_steps,
+        ClippedLrSchedule { eta0: p.lr0, decay: p.lr_decay },
+        p.momentum,
+        seed,
+        1,
+    );
+
+    tr.reset();
+    let lc = lc_quantize(&mut tr.backend, &p.lc_config(scheme.clone(), seed));
+    (lc, dc, idc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_training_learns() {
+        let mut p = Protocol::quick();
+        p.n_data = 300;
+        p.ref_steps = 120;
+        let spec = MlpSpec::single_hidden(784, 12, 10);
+        let tr = train_reference(&spec, &p, 5);
+        // far better than chance (90% error)
+        assert!(tr.ref_train_err < 45.0, "train err {}", tr.ref_train_err);
+        assert!(tr.ref_train_loss < 2.0);
+    }
+
+    #[test]
+    fn reset_restores_reference() {
+        let mut p = Protocol::quick();
+        p.n_data = 200;
+        p.ref_steps = 50;
+        let spec = MlpSpec::single_hidden(784, 8, 10);
+        let mut tr = train_reference(&spec, &p, 6);
+        let w0 = tr.ref_weights.clone();
+        // clobber
+        let zeros: Vec<Vec<f32>> = w0.iter().map(|l| vec![0.0; l.len()]).collect();
+        tr.backend.set_weights(&zeros);
+        tr.reset();
+        assert_eq!(tr.backend.weights(), w0);
+    }
+}

@@ -1,0 +1,63 @@
+//! E5 (paper Fig. 10): number of k-means iterations inside each C step over
+//! the LC run (K=4). The first C step (k-means++ from scratch) takes tens of
+//! iterations; warm-started later C steps take ~1.
+
+use super::common::{train_reference, Protocol};
+use super::Scale;
+use crate::coordinator::{lc_quantize, Backend as _};
+use crate::metrics::History;
+use crate::nn::MlpSpec;
+use crate::quant::{LayerQuantizer, Scheme};
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let p = Protocol::for_scale(scale);
+    let spec = MlpSpec::lenet300();
+    let mut tr = train_reference(&spec, &p, seed);
+
+    // the first (DC) compression is outside the LC history; measure it here
+    let w = tr.backend.weights();
+    let mut first_iters = Vec::new();
+    for (l, wl) in w.iter().enumerate() {
+        let mut q = LayerQuantizer::new(Scheme::AdaptiveCodebook { k: 4 }, seed + l as u64);
+        first_iters.push(q.compress(wl).iterations);
+    }
+
+    tr.reset();
+    let mut cfg = p.lc_config(Scheme::AdaptiveCodebook { k: 4 }, seed);
+    cfg.tol = 0.0;
+    cfg.eval_every = 0;
+    let lc = lc_quantize(&mut tr.backend, &cfg);
+
+    let n_layers = spec.n_layers();
+    let mut cols: Vec<String> = vec!["iter".into()];
+    for l in 0..n_layers {
+        cols.push(format!("layer{}", l + 1));
+    }
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut hist = History::new(&colrefs);
+    let mut row0: Vec<f64> = vec![0.0];
+    row0.extend(first_iters.iter().map(|&i| i as f64));
+    hist.push(row0);
+    for rec in &lc.history {
+        let mut row: Vec<f64> = vec![(rec.iter + 1) as f64];
+        row.extend(rec.kmeans_iters.iter().map(|&i| i as f64));
+        hist.push(row);
+    }
+    hist.save_csv(&Path::new(out_dir).join("fig10_kmeans_iters.csv"))?;
+
+    let late_max = lc
+        .history
+        .iter()
+        .skip(2)
+        .flat_map(|r| r.kmeans_iters.iter())
+        .max()
+        .copied()
+        .unwrap_or(0);
+    println!(
+        "Fig. 10 — k-means iterations per C step: first compression {:?}, max after warm start {}",
+        first_iters, late_max
+    );
+    Ok(())
+}

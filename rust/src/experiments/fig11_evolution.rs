@@ -1,0 +1,101 @@
+//! E6 (paper Figs. 11–12): evolution of the weight distribution and the
+//! codebook centroids over LC iterations (and iDC for contrast), per layer,
+//! K=4. Emits centroid trajectories, sampled weight trajectories, and KDEs
+//! of the weight distribution at iterations 0 / 1 / final.
+
+use super::common::{train_reference, Protocol};
+use super::Scale;
+use crate::coordinator::baselines;
+use crate::coordinator::lc_quantize;
+use crate::metrics::{kde, History};
+use crate::nn::sgd::ClippedLrSchedule;
+use crate::nn::MlpSpec;
+use crate::quant::Scheme;
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let p = Protocol::for_scale(scale);
+    let k = 4usize;
+    let spec = MlpSpec::lenet300();
+    let mut tr = train_reference(&spec, &p, seed);
+    let w_ref = tr.ref_weights.clone();
+
+    tr.reset();
+    let mut cfg = p.lc_config(Scheme::AdaptiveCodebook { k }, seed);
+    cfg.tol = 0.0;
+    cfg.eval_every = 0;
+    cfg.n_weight_samples = 40; // paper: "40 randomly chosen weights"
+    let lc = lc_quantize(&mut tr.backend, &cfg);
+
+    tr.reset();
+    let idc = baselines::iterated_direct_compression(
+        &mut tr.backend,
+        &Scheme::AdaptiveCodebook { k },
+        p.lc_iterations,
+        p.l_steps,
+        ClippedLrSchedule { eta0: p.lr0, decay: p.lr_decay },
+        p.momentum,
+        seed,
+        0,
+    );
+
+    // --- centroid trajectories (LC vs iDC) ---
+    let mut cent = History::new(&["algo", "iter", "layer", "centroid_idx", "value"]);
+    for (algo, snapshots) in [
+        (0.0, lc.history.iter().map(|r| &r.codebooks).collect::<Vec<_>>()),
+        (1.0, idc.codebook_history.iter().collect::<Vec<_>>()),
+    ] {
+        for (j, cbs) in snapshots.iter().enumerate() {
+            for (l, cb) in cbs.iter().enumerate() {
+                for (ci, &c) in cb.iter().enumerate() {
+                    cent.push(vec![algo, j as f64, l as f64, ci as f64, c as f64]);
+                }
+            }
+        }
+    }
+    cent.save_csv(&Path::new(out_dir).join("fig11_centroids.csv"))?;
+
+    // --- sampled weight trajectories (LC) ---
+    let mut traj = History::new(&["iter", "layer", "weight_idx", "value"]);
+    for rec in &lc.history {
+        for (l, samples) in rec.weight_samples.iter().enumerate() {
+            for (wi, &v) in samples.iter().enumerate() {
+                traj.push(vec![rec.iter as f64, l as f64, wi as f64, v as f64]);
+            }
+        }
+    }
+    traj.save_csv(&Path::new(out_dir).join("fig11_weight_trajectories.csv"))?;
+
+    // --- weight-distribution KDEs at iteration 0 (reference), 1 (DC-ish)
+    //     and final, per layer ---
+    let grid: Vec<f32> = (0..241).map(|i| -0.6 + i as f32 * 0.005).collect();
+    let mut dens = History::new(&["layer", "stage", "x", "density"]);
+    for l in 0..spec.n_layers() {
+        // stage 1 = direct compression of the reference layer
+        let mut dc_q = crate::quant::LayerQuantizer::new(Scheme::AdaptiveCodebook { k }, seed);
+        let dc_wc = dc_q.compress(&w_ref[l]).wc;
+        let stages: Vec<(f64, &[f32])> =
+            vec![(0.0, &w_ref[l][..]), (1.0, &dc_wc[..]), (2.0, &lc.wc[l][..])];
+        for (stage, data) in stages {
+            let d = kde(data, &grid, 0.01);
+            for (x, v) in grid.iter().zip(&d) {
+                dens.push(vec![l as f64, stage, *x as f64, *v as f64]);
+            }
+        }
+    }
+    dens.save_csv(&Path::new(out_dir).join("fig11_weight_kde.csv"))?;
+
+    // console summary: did LC converge to deltas at the centroids?
+    for (l, (wl, cb)) in lc.wc.iter().zip(&lc.codebooks).enumerate() {
+        let distinct: std::collections::BTreeSet<i64> =
+            wl.iter().map(|v| (v * 1e6).round() as i64).collect();
+        println!(
+            "layer {}: final LC weights take {} distinct values; centroids {:?}",
+            l + 1,
+            distinct.len(),
+            cb.iter().map(|c| format!("{c:.3}")).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! E7 (paper Fig. 13): final centroid distributions learnt by LC and iDC
+//! per layer, for K = 2..64, plus mean/std of each centroid set.
+
+use super::common::{train_reference, Protocol};
+use super::Scale;
+use crate::coordinator::baselines;
+use crate::coordinator::lc_quantize;
+use crate::metrics::History;
+use crate::nn::sgd::ClippedLrSchedule;
+use crate::nn::MlpSpec;
+use crate::quant::Scheme;
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let p = Protocol::for_scale(scale);
+    let ks: Vec<usize> = match scale {
+        Scale::Quick => vec![2, 4, 16],
+        Scale::Full => vec![2, 4, 8, 16, 32, 64],
+    };
+    let spec = MlpSpec::lenet300();
+    let mut tr = train_reference(&spec, &p, seed);
+
+    let mut cent = History::new(&["algo", "k", "layer", "centroid_idx", "value"]);
+    let mut stats = History::new(&["algo", "k", "layer", "mean", "std"]);
+
+    for &k in &ks {
+        let scheme = Scheme::AdaptiveCodebook { k };
+        tr.reset();
+        let lc = lc_quantize(&mut tr.backend, &p.lc_config(scheme.clone(), seed));
+        tr.reset();
+        let idc = baselines::iterated_direct_compression(
+            &mut tr.backend,
+            &scheme,
+            p.lc_iterations,
+            p.l_steps,
+            ClippedLrSchedule { eta0: p.lr0, decay: p.lr_decay },
+            p.momentum,
+            seed,
+            0,
+        );
+        for (algo, cbs) in [(0.0, &lc.codebooks), (1.0, &idc.codebooks)] {
+            for (l, cb) in cbs.iter().enumerate() {
+                for (ci, &c) in cb.iter().enumerate() {
+                    cent.push(vec![algo, k as f64, l as f64, ci as f64, c as f64]);
+                }
+                let s = crate::metrics::summary(cb);
+                stats.push(vec![algo, k as f64, l as f64, s["mean"], s["std"]]);
+            }
+        }
+        println!(
+            "K={k}: LC layer-3 centroids {:?}",
+            lc.codebooks
+                .last()
+                .unwrap()
+                .iter()
+                .map(|c| format!("{c:.3}"))
+                .collect::<Vec<_>>()
+        );
+    }
+    // reference-net per-layer mean/std (the "∞" column of Fig. 13 bottom)
+    for (l, wl) in tr.ref_weights.iter().enumerate() {
+        let s = crate::metrics::summary(wl);
+        stats.push(vec![2.0, f64::INFINITY, l as f64, s["mean"], s["std"]]);
+    }
+    cent.save_csv(&Path::new(out_dir).join("fig13_centroids.csv"))?;
+    stats.save_csv(&Path::new(out_dir).join("fig13_stats.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! E1 (paper Fig. 6): interplay between loss, model complexity (hidden
+//! units H) and compression level (codebook size K) for a single-hidden-
+//! layer net. For each (H, K) we train a reference and LC-quantize it, then
+//! report the loss surface L(K,H), the size surface C(K,H) and the best
+//! operational point (K*, H*) for a set of target losses.
+
+use super::common::{train_reference, Protocol};
+use super::Scale;
+use crate::coordinator::lc_quantize;
+use crate::metrics::History;
+use crate::nn::MlpSpec;
+use crate::quant::ratio::quantized_bits;
+use crate::quant::Scheme;
+use crate::report::{f, Table};
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let mut p = Protocol::for_scale(scale);
+    // Fig. 6 trains many small nets; trim per-net budget at quick scale.
+    let (hs, log2ks): (Vec<usize>, Vec<usize>) = match scale {
+        Scale::Quick => {
+            p.n_data = 1_200;
+            p.ref_steps = 250;
+            p.lc_iterations = 12;
+            p.l_steps = 40;
+            (vec![2, 5, 10, 20, 40], vec![1, 2, 4, 8])
+        }
+        Scale::Full => (vec![2, 4, 8, 12, 16, 24, 32, 40], (1..=8).collect()),
+    };
+
+    let mut hist = History::new(&["h", "log2k", "loss", "err", "bits"]);
+    for &h in &hs {
+        let spec = MlpSpec::single_hidden(784, h, 10);
+        let (p1, p0) = spec.param_counts();
+        let mut tr = train_reference(&spec, &p, seed + h as u64);
+        // K = ∞ (reference, uncompressed): bits = (P1+P0)*32
+        hist.push(vec![
+            h as f64,
+            f64::INFINITY,
+            tr.ref_train_loss as f64,
+            tr.ref_train_err as f64,
+            crate::quant::ratio::reference_bits(p1, p0) as f64,
+        ]);
+        for &l2k in &log2ks {
+            let k = 1usize << l2k;
+            tr.reset();
+            let mut cfg = p.lc_config(Scheme::AdaptiveCodebook { k }, seed);
+            cfg.eval_every = 0;
+            let lc = lc_quantize(&mut tr.backend, &cfg);
+            let bits = quantized_bits(p1, p0, k, spec.n_layers());
+            hist.push(vec![
+                h as f64,
+                l2k as f64,
+                lc.train_loss as f64,
+                lc.train_err as f64,
+                bits as f64,
+            ]);
+            crate::info!("fig6 H={h} K={k}: loss={:.4} bits={bits}", lc.train_loss);
+        }
+    }
+    hist.save_csv(&Path::new(out_dir).join("fig6_surface.csv"))?;
+
+    // Best operational point (K*, H*) for target losses (Fig. 6 middle).
+    let targets = [0.05f64, 0.1, 0.3, 0.7];
+    let mut t = Table::new(&["L_max", "H*", "log2K*", "bits", "loss"]);
+    for &lmax in &targets {
+        let best = hist
+            .rows
+            .iter()
+            .filter(|r| r[2] <= lmax)
+            .min_by(|a, b| a[4].partial_cmp(&b[4]).unwrap());
+        match best {
+            Some(r) => t.row(vec![
+                f(lmax, 3),
+                f(r[0], 0),
+                if r[1].is_infinite() { "inf".into() } else { f(r[1], 0) },
+                f(r[4], 0),
+                f(r[2], 4),
+            ]),
+            None => t.row(vec![f(lmax, 3), "-".into(), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    println!("\nFig. 6 — best operational points (smallest net with L <= L_max):\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,445 @@
+//! E2 (paper §5.2, Fig. 7): quantizing linear regression on a simulated
+//! super-resolution task, with a clustered non-Gaussian weight
+//! distribution.
+//!
+//! The loss is L(W, b) = (1/N)Σ‖yₙ − W xₙ − b‖². Both the reference model
+//! and the penalized L step have **exact closed-form solutions** via the
+//! normal equations (solved by Cholesky on the Gram matrix), so this
+//! experiment isolates the algorithmic comparison: with exact L and C
+//! steps, DC and iDC are *identical* and stuck, while LC keeps improving.
+
+use super::Scale;
+use crate::data::superres::SuperResData;
+use crate::linalg::gemm::matmul_at_b;
+use crate::linalg::solve::Cholesky;
+use crate::linalg::Mat;
+use crate::metrics::{kde, History};
+use crate::quant::{LayerQuantizer, Scheme};
+use crate::report::{f, Table};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Closed-form penalized linear regression on precomputed Gram matrices.
+///
+/// Weights are augmented with a bias column: W̃ = [W | b], X̃ = [X; 1ᵀ].
+/// The penalty applies to the weight columns only (biases unquantized).
+pub struct LinRegLc {
+    /// G = X̃X̃ᵀ/N, (d+1, d+1).
+    g: Mat,
+    /// H = YX̃ᵀ/N, (out, d+1).
+    h: Mat,
+    /// (1/N)Σ‖yₙ‖² — constant term of the loss.
+    y2: f64,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Current solution [W | b], (out, d+1).
+    pub w: Mat,
+}
+
+impl LinRegLc {
+    pub fn new(data: &SuperResData) -> LinRegLc {
+        let n = data.x.rows;
+        let d_in = data.x.cols;
+        let d_out = data.y.cols;
+        // augmented design matrix rows: [x; 1]
+        let mut xa = Mat::zeros(n, d_in + 1);
+        for r in 0..n {
+            xa.row_mut(r)[..d_in].copy_from_slice(data.x.row(r));
+            xa.row_mut(r)[d_in] = 1.0;
+        }
+        let mut g = matmul_at_b(&xa, &xa);
+        // Yᵀ is (d_out, n) as columns of data.y; matmul_at_b(Y, X̃) = YᵀX̃ has
+        // shape (d_out, d_in+1) — exactly H's layout, just scale by 1/N.
+        let mut h = matmul_at_b(&data.y, &xa);
+        for v in h.data.iter_mut() {
+            *v /= n as f32;
+        }
+        for v in g.data.iter_mut() {
+            *v /= n as f32;
+        }
+        let y2 = data.y.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64;
+        let w = Mat::zeros(d_out, d_in + 1);
+        LinRegLc { g, h, y2, d_in, d_out, w }
+    }
+
+    /// Exact unpenalized solve (the reference model): W̃ G = H.
+    pub fn solve_reference(&mut self) -> Result<()> {
+        // tiny ridge for numerical safety
+        let mut a = self.g.clone();
+        for i in 0..a.rows {
+            a[(i, i)] += 1e-6;
+        }
+        let ch = Cholesky::factor(&a).ok_or_else(|| anyhow!("gram not SPD"))?;
+        for r in 0..self.d_out {
+            let x = ch.solve_vec(self.h.row(r));
+            self.w.row_mut(r).copy_from_slice(&x);
+        }
+        Ok(())
+    }
+
+    /// Exact penalized L step: minimize L(W̃) + μ/2‖(W − T)‖² where T is
+    /// the (out, d_in) matrix of targets (w_C + λ/μ), bias unpenalized.
+    pub fn solve_penalized(&mut self, target: &Mat, mu: f32) -> Result<()> {
+        assert_eq!(target.rows, self.d_out);
+        assert_eq!(target.cols, self.d_in);
+        // per-row system: w̃ᵣ (2G + μ diag(m)) = 2hᵣ + μ tᵣ (m masks bias)
+        let mut a = self.g.clone();
+        for v in a.data.iter_mut() {
+            *v *= 2.0;
+        }
+        // tiny constant ridge (as in solve_reference) keeps the factorization
+        // SPD even when n < d and mu -> 0
+        for i in 0..self.d_in {
+            a[(i, i)] += mu + 1e-6;
+        }
+        a[(self.d_in, self.d_in)] += 1e-6;
+        let ch = Cholesky::factor(&a).ok_or_else(|| anyhow!("penalized gram not SPD"))?;
+        let mut rhs = vec![0.0f32; self.d_in + 1];
+        for r in 0..self.d_out {
+            for j in 0..=self.d_in {
+                rhs[j] = 2.0 * self.h[(r, j)];
+            }
+            for j in 0..self.d_in {
+                rhs[j] += mu * target[(r, j)];
+            }
+            let x = ch.solve_vec(&rhs);
+            self.w.row_mut(r).copy_from_slice(&x);
+        }
+        Ok(())
+    }
+
+    /// Loss of an arbitrary [W | b] matrix via the Gram identity:
+    /// L = y² + Σᵣ (w̃ᵣ G w̃ᵣᵀ − 2 w̃ᵣ·hᵣ).
+    pub fn loss_of(&self, w: &Mat) -> f64 {
+        // f64 accumulation throughout: the three terms cancel to ~1e-7 of
+        // their magnitude at the optimum, far below f32 resolution.
+        let d = self.d_in + 1;
+        let mut total = self.y2;
+        let mut gw = vec![0.0f64; d];
+        for r in 0..self.d_out {
+            let wr = w.row(r);
+            for (i, gwi) in gw.iter_mut().enumerate() {
+                let grow = self.g.row(i);
+                let mut s = 0.0f64;
+                for j in 0..d {
+                    s += grow[j] as f64 * wr[j] as f64;
+                }
+                *gwi = s;
+            }
+            let mut quad = 0.0f64;
+            let mut lin = 0.0f64;
+            let hrow = self.h.row(r);
+            for j in 0..d {
+                quad += wr[j] as f64 * gw[j];
+                lin += wr[j] as f64 * hrow[j] as f64;
+            }
+            total += quad - 2.0 * lin;
+        }
+        total.max(0.0)
+    }
+
+    /// Gram matrix accessor (X̃X̃ᵀ/N) — used by the PJRT integration test
+    /// to feed the `linreg_lstep` artifact the same inputs.
+    pub fn gram(&self) -> &Mat {
+        &self.g
+    }
+
+    /// H = YX̃ᵀ/N accessor.
+    pub fn h_mat(&self) -> &Mat {
+        &self.h
+    }
+
+    /// Assemble the penalized normal-equation system exactly as
+    /// `solve_penalized` does: A = 2G + diag(μ·mask + ridge),
+    /// rhs = 2H + μ·[T | 0]. This is the input contract of the
+    /// `linreg_lstep` AOT artifact.
+    pub fn assemble_system(&self, target: &Mat, mu: f32) -> (Mat, Mat) {
+        let d = self.d_in + 1;
+        let mut a = self.g.clone();
+        for v in a.data.iter_mut() {
+            *v *= 2.0;
+        }
+        for i in 0..self.d_in {
+            a[(i, i)] += mu + 1e-6;
+        }
+        a[(self.d_in, self.d_in)] += 1e-6;
+        let mut rhs = Mat::zeros(self.d_out, d);
+        for r in 0..self.d_out {
+            for j in 0..d {
+                rhs[(r, j)] = 2.0 * self.h[(r, j)];
+            }
+            for j in 0..self.d_in {
+                rhs[(r, j)] += mu * target[(r, j)];
+            }
+        }
+        (a, rhs)
+    }
+
+    /// Extract the weight block (out × d_in) as a flat vector.
+    pub fn weights_flat(&self, w: &Mat) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.d_out * self.d_in);
+        for r in 0..self.d_out {
+            out.extend_from_slice(&w.row(r)[..self.d_in]);
+        }
+        out
+    }
+
+    /// Write a flat weight vector back into the weight block of `w`.
+    pub fn set_weights_flat(&self, w: &mut Mat, flat: &[f32]) {
+        assert_eq!(flat.len(), self.d_out * self.d_in);
+        for r in 0..self.d_out {
+            w.row_mut(r)[..self.d_in]
+                .copy_from_slice(&flat[r * self.d_in..(r + 1) * self.d_in]);
+        }
+    }
+}
+
+/// Outcome of one algorithm run on the linreg problem.
+pub struct LinRegOutcome {
+    pub loss_per_iter: Vec<f64>,
+    pub kmeans_iters: Vec<usize>,
+    pub final_codebook: Vec<f32>,
+    pub final_wc_flat: Vec<f32>,
+}
+
+/// Run LC with exact L steps. μ_j = μ₀·aʲ (paper: μ₀=10, a=1.1, 30 iters).
+pub fn run_lc(
+    lr: &mut LinRegLc,
+    k: usize,
+    mu0: f32,
+    mult: f32,
+    iterations: usize,
+    seed: u64,
+) -> Result<LinRegOutcome> {
+    lr.solve_reference()?;
+    let mut quantizer = LayerQuantizer::new(Scheme::AdaptiveCodebook { k }, seed);
+    let p = lr.d_out * lr.d_in;
+    let mut lambda = vec![0.0f32; p];
+    // initial C step on the reference weights (direct compression)
+    let w_flat = lr.weights_flat(&lr.w);
+    let out = quantizer.compress(&w_flat);
+    let mut wc = out.wc;
+    let mut codebook = out.codebook;
+    let mut loss_per_iter = Vec::new();
+    let mut kmeans_iters = vec![out.iterations];
+    // loss of the DC point
+    let mut wq = lr.w.clone();
+    lr.set_weights_flat(&mut wq, &wc);
+    loss_per_iter.push(lr.loss_of(&wq));
+
+    let mut shifted = vec![0.0f32; p];
+    let mut target = Mat::zeros(lr.d_out, lr.d_in);
+    for j in 0..iterations {
+        let mu = mu0 * mult.powi(j as i32);
+        // L step: target T = w_C + λ/μ
+        for (t, (c, l)) in target.data.iter_mut().zip(wc.iter().zip(&lambda)) {
+            *t = c + l / mu;
+        }
+        lr.solve_penalized(&target, mu)?;
+        // C step on w − λ/μ
+        let w_flat = lr.weights_flat(&lr.w);
+        crate::linalg::vecops::shift_by_multipliers(&w_flat, &lambda, mu, &mut shifted);
+        let out = quantizer.compress(&shifted);
+        wc = out.wc;
+        codebook = out.codebook;
+        kmeans_iters.push(out.iterations);
+        // λ ← λ − μ(w − w_C)
+        crate::linalg::vecops::update_multipliers(&mut lambda, &w_flat, &wc, mu);
+        let mut wq = lr.w.clone();
+        lr.set_weights_flat(&mut wq, &wc);
+        loss_per_iter.push(lr.loss_of(&wq));
+    }
+    Ok(LinRegOutcome {
+        loss_per_iter,
+        kmeans_iters,
+        final_codebook: codebook,
+        final_wc_flat: wc,
+    })
+}
+
+/// Run DC/iDC with the exact L step. With a unique global optimum, iDC
+/// cycles between the reference and its quantization — its loss history is
+/// flat after iteration 1 (the paper's point).
+pub fn run_idc(lr: &mut LinRegLc, k: usize, iterations: usize, seed: u64) -> Result<LinRegOutcome> {
+    lr.solve_reference()?;
+    let mut quantizer = LayerQuantizer::new(Scheme::AdaptiveCodebook { k }, seed);
+    let mut loss_per_iter = Vec::new();
+    let mut kmeans_iters = Vec::new();
+    let mut codebook = Vec::new();
+    let mut wc = Vec::new();
+    for _ in 0..=iterations {
+        // L step: exact, unpenalized — returns to the reference solution
+        lr.solve_reference()?;
+        // C step
+        let w_flat = lr.weights_flat(&lr.w);
+        let out = quantizer.compress(&w_flat);
+        wc = out.wc;
+        codebook = out.codebook;
+        kmeans_iters.push(out.iterations);
+        let mut wq = lr.w.clone();
+        lr.set_weights_flat(&mut wq, &wc);
+        loss_per_iter.push(lr.loss_of(&wq));
+        // iDC restarts training *from* the quantized weights; with an exact
+        // convex solve the restart point is irrelevant.
+        lr.set_weights_flat(&mut lr.w.clone(), &wc);
+    }
+    Ok(LinRegOutcome { loss_per_iter, kmeans_iters, final_codebook: codebook, final_wc_flat: wc })
+}
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let (n, iterations) = match scale {
+        Scale::Quick => (300usize, 30usize),
+        Scale::Full => (1000, 30),
+    };
+    let data = SuperResData::generate(n, 0.05, seed);
+    let mut lr = LinRegLc::new(&data);
+    lr.solve_reference()?;
+    let ref_loss = lr.loss_of(&lr.w);
+    let w_ref_flat = lr.weights_flat(&lr.w);
+    println!("reference linreg loss: {ref_loss:.6}");
+
+    let mut curves = History::new(&["k", "iter", "lc_loss", "idc_loss", "lc_kmeans_iters"]);
+    let mut table = Table::new(&["K", "reference", "DC", "iDC", "LC"]);
+    let mut kdes = History::new(&["k", "stage", "x", "density"]);
+    let grid: Vec<f32> = (0..361).map(|i| -0.4 + i as f32 * 0.004).collect();
+
+    for &k in &[4usize, 2] {
+        let lc = run_lc(&mut lr, k, 10.0, 1.1, iterations, seed)?;
+        let idc = run_idc(&mut lr, k, iterations, seed)?;
+        let dc_loss = idc.loss_per_iter[0];
+        for j in 0..lc.loss_per_iter.len() {
+            curves.push(vec![
+                k as f64,
+                j as f64,
+                lc.loss_per_iter[j],
+                idc.loss_per_iter.get(j).copied().unwrap_or(f64::NAN),
+                lc.kmeans_iters.get(j).copied().unwrap_or(0) as f64,
+            ]);
+        }
+        table.row(vec![
+            k.to_string(),
+            f(ref_loss, 6),
+            f(dc_loss, 6),
+            f(*idc.loss_per_iter.last().unwrap(), 6),
+            f(*lc.loss_per_iter.last().unwrap(), 6),
+        ]);
+        // weight-distribution KDEs: reference (0), DC (1), LC final (2);
+        // plus centroid locations as stage 3 (LC) / 4 (DC fit to reference)
+        let mut dc_q = LayerQuantizer::new(Scheme::AdaptiveCodebook { k }, seed);
+        let dc_out = dc_q.compress(&w_ref_flat);
+        for (stage, dat) in [
+            (0.0, &w_ref_flat),
+            (1.0, &dc_out.wc),
+            (2.0, &lc.final_wc_flat),
+        ] {
+            let d = kde(dat, &grid, 0.006);
+            for (x, v) in grid.iter().zip(&d) {
+                kdes.push(vec![k as f64, stage, *x as f64, *v as f64]);
+            }
+        }
+        for &c in &lc.final_codebook {
+            kdes.push(vec![k as f64, 3.0, c as f64, 0.0]);
+        }
+        for &c in &dc_out.codebook {
+            kdes.push(vec![k as f64, 4.0, c as f64, 0.0]);
+        }
+        println!(
+            "K={k}: DC={dc_loss:.6} iDC(final)={:.6} LC(final)={:.6}  LC codebook {:?}",
+            idc.loss_per_iter.last().unwrap(),
+            lc.loss_per_iter.last().unwrap(),
+            lc.final_codebook
+        );
+    }
+    println!("\nFig. 7 — linreg super-resolution training loss:\n{}", table.render());
+    curves.save_csv(&Path::new(out_dir).join("fig7_curves.csv"))?;
+    kdes.save_csv(&Path::new(out_dir).join("fig7_weight_kde.csv"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_problem(seed: u64) -> (SuperResData, LinRegLc) {
+        let data = SuperResData::generate(80, 0.05, seed);
+        let lr = LinRegLc::new(&data);
+        (data, lr)
+    }
+
+    #[test]
+    fn reference_solution_fits_training_data() {
+        let (data, mut lr) = small_problem(1);
+        lr.solve_reference().unwrap();
+        let loss = lr.loss_of(&lr.w);
+        // direct check against the definition of the loss
+        let mut direct = 0.0f64;
+        for nidx in 0..data.x.rows {
+            let x = data.x.row(nidx);
+            for r in 0..lr.d_out {
+                let wr = lr.w.row(r);
+                let pred = crate::linalg::vecops::dot(&wr[..lr.d_in], x) + wr[lr.d_in];
+                direct += ((data.y[(nidx, r)] - pred) as f64).powi(2);
+            }
+        }
+        direct /= data.x.rows as f64;
+        assert!(
+            (loss - direct).abs() < 1e-2 * direct.max(1e-3),
+            "gram loss {loss} vs direct {direct}"
+        );
+    }
+
+    #[test]
+    fn penalized_solve_interpolates_to_target_as_mu_grows() {
+        let (_, mut lr) = small_problem(2);
+        lr.solve_reference().unwrap();
+        let target = Mat::zeros(lr.d_out, lr.d_in); // pull weights to 0
+        lr.solve_penalized(&target, 1e6).unwrap();
+        let flat = lr.weights_flat(&lr.w);
+        let maxw = flat.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(maxw < 1e-2, "weights should be ~0 under huge mu, max {maxw}");
+    }
+
+    #[test]
+    fn penalized_solve_with_mu_zero_like_matches_reference_loss() {
+        // With n < d the Gram is singular and weights are not identifiable;
+        // compare achieved losses instead of raw weights.
+        let (_, mut lr) = small_problem(3);
+        lr.solve_reference().unwrap();
+        let ref_loss = lr.loss_of(&lr.w);
+        let target = Mat::zeros(lr.d_out, lr.d_in);
+        lr.solve_penalized(&target, 1e-9).unwrap();
+        let pen_loss = lr.loss_of(&lr.w);
+        assert!(
+            (pen_loss - ref_loss).abs() < 1e-4 + 0.05 * ref_loss.abs(),
+            "mu->0 loss {pen_loss} vs reference {ref_loss}"
+        );
+    }
+
+    #[test]
+    fn lc_beats_dc_and_idc_is_flat() {
+        let (_, mut lr) = small_problem(4);
+        let lc = run_lc(&mut lr, 2, 10.0, 1.2, 15, 7).unwrap();
+        let idc = run_idc(&mut lr, 2, 15, 7).unwrap();
+        let dc = idc.loss_per_iter[0];
+        // iDC identical to DC forever (exact L step)
+        for &l in &idc.loss_per_iter {
+            assert!((l - dc).abs() < 1e-6 * dc.max(1e-9), "iDC moved: {l} vs {dc}");
+        }
+        // LC strictly better at the end
+        let lc_final = *lc.loss_per_iter.last().unwrap();
+        assert!(
+            lc_final < dc * 0.9,
+            "LC {lc_final} should clearly beat DC {dc}"
+        );
+    }
+
+    #[test]
+    fn lc_final_weights_are_quantized() {
+        let (_, mut lr) = small_problem(5);
+        let lc = run_lc(&mut lr, 4, 10.0, 1.3, 12, 9).unwrap();
+        for v in &lc.final_wc_flat {
+            assert!(lc.final_codebook.iter().any(|c| (c - v).abs() < 1e-6));
+        }
+        assert!(lc.final_codebook.len() <= 4);
+    }
+}

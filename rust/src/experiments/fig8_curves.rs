@@ -1,0 +1,70 @@
+//! E3 (paper Fig. 8): learning curves — quantized-net training loss over LC
+//! iterations for several codebook sizes, LC vs iDC, on the LeNet nets.
+
+use super::common::{train_reference, Protocol};
+use super::Scale;
+use crate::coordinator::baselines;
+use crate::coordinator::lc_quantize;
+use crate::metrics::History;
+use crate::nn::sgd::ClippedLrSchedule;
+use crate::nn::MlpSpec;
+use crate::quant::Scheme;
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let p = Protocol::for_scale(scale);
+    let ks: Vec<usize> = match scale {
+        Scale::Quick => vec![2, 4, 32],
+        Scale::Full => vec![2, 4, 8, 32],
+    };
+    let spec = MlpSpec::lenet300();
+    let mut tr = train_reference(&spec, &p, seed);
+
+    let mut hist = History::new(&["k", "iter", "lc_loss", "idc_loss", "lc_feas"]);
+    for &k in &ks {
+        let scheme = Scheme::AdaptiveCodebook { k };
+        tr.reset();
+        let mut cfg = p.lc_config(scheme.clone(), seed);
+        cfg.eval_every = 1;
+        cfg.tol = 0.0; // trace the full curve
+        let lc = lc_quantize(&mut tr.backend, &cfg);
+
+        tr.reset();
+        let idc = baselines::iterated_direct_compression(
+            &mut tr.backend,
+            &scheme,
+            p.lc_iterations,
+            p.l_steps,
+            ClippedLrSchedule { eta0: p.lr0, decay: p.lr_decay },
+            p.momentum,
+            seed,
+            1,
+        );
+
+        for (j, rec) in lc.history.iter().enumerate() {
+            let lc_loss = rec.train_loss_wc.unwrap_or(f32::NAN);
+            let idc_loss = idc.loss_history.get(j).copied().unwrap_or(f32::NAN);
+            hist.push(vec![
+                k as f64,
+                j as f64,
+                lc_loss as f64,
+                idc_loss as f64,
+                rec.feasibility as f64,
+            ]);
+        }
+        let last = lc.history.last().unwrap();
+        crate::info!(
+            "fig8 K={k}: final LC loss={:.4} iDC loss={:.4} feas={:.3e}",
+            last.train_loss_wc.unwrap_or(f32::NAN),
+            idc.train_loss,
+            last.feasibility
+        );
+        println!(
+            "K={k}: LC final quantized-net loss {:.4}, iDC {:.4} (reference {:.4})",
+            lc.train_loss, idc.train_loss, tr.ref_train_loss
+        );
+    }
+    hist.save_csv(&Path::new(out_dir).join("fig8_curves.csv"))?;
+    Ok(())
+}

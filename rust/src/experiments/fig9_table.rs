@@ -1,0 +1,91 @@
+//! E4 (paper Fig. 9): compression results for the LeNet nets — for each
+//! codebook size K ∈ {2,4,8,16,32,64}, run LC / DC / iDC from the same
+//! reference and report log₁₀ L, E_train (%), E_test (%) and ρ(K).
+
+use super::common::{run_all_algorithms, train_reference, Protocol};
+use super::Scale;
+use crate::metrics::History;
+use crate::nn::MlpSpec;
+use crate::quant::ratio::compression_ratio;
+use crate::quant::Scheme;
+use crate::report::{f, Table};
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let p = Protocol::for_scale(scale);
+    let ks: Vec<usize> = match scale {
+        Scale::Quick => vec![2, 4, 16, 64],
+        Scale::Full => vec![2, 4, 8, 16, 32, 64],
+    };
+    let nets: Vec<(&str, MlpSpec)> = match scale {
+        Scale::Quick => vec![("lenet300", MlpSpec::lenet300())],
+        Scale::Full => vec![
+            ("lenet300", MlpSpec::lenet300()),
+            ("lenet5_mlp", MlpSpec::lenet5_mlp()),
+        ],
+    };
+
+    let mut hist = History::new(&[
+        "net", "k", "rho", "lc_logL", "lc_etrain", "lc_etest", "dc_logL", "dc_etrain",
+        "dc_etest", "idc_logL", "idc_etrain", "idc_etest",
+    ]);
+    let mut table = Table::new(&[
+        "net", "K", "rho", "LC logL", "LC Etr", "LC Ete", "DC logL", "DC Etr", "DC Ete",
+        "iDC logL", "iDC Etr", "iDC Ete",
+    ]);
+
+    for (net_id, (name, spec)) in nets.iter().enumerate() {
+        let mut tr = train_reference(spec, &p, seed);
+        let (p1, p0) = spec.param_counts();
+        crate::info!(
+            "{name}: reference logL={:.3} E_train={:.2}% E_test={:?}",
+            tr.ref_train_loss.max(1e-12).log10(),
+            tr.ref_train_err,
+            tr.ref_test_err
+        );
+        for &k in &ks {
+            let scheme = Scheme::AdaptiveCodebook { k };
+            let (lc, dc, idc) = run_all_algorithms(&mut tr, &scheme, &p, seed + k as u64);
+            let rho = compression_ratio(p1, p0, k, spec.n_layers());
+            let log = |l: f32| (l.max(1e-12) as f64).log10();
+            hist.push(vec![
+                net_id as f64,
+                k as f64,
+                rho,
+                log(lc.train_loss),
+                lc.train_err as f64,
+                lc.test_err.unwrap_or(f32::NAN) as f64,
+                log(dc.train_loss),
+                dc.train_err as f64,
+                dc.test_err.unwrap_or(f32::NAN) as f64,
+                log(idc.train_loss),
+                idc.train_err as f64,
+                idc.test_err.unwrap_or(f32::NAN) as f64,
+            ]);
+            table.row(vec![
+                name.to_string(),
+                k.to_string(),
+                format!("x{:.1}", rho),
+                f(log(lc.train_loss), 2),
+                f(lc.train_err as f64, 2),
+                f(lc.test_err.unwrap_or(f32::NAN) as f64, 2),
+                f(log(dc.train_loss), 2),
+                f(dc.train_err as f64, 2),
+                f(dc.test_err.unwrap_or(f32::NAN) as f64, 2),
+                f(log(idc.train_loss), 2),
+                f(idc.train_err as f64, 2),
+                f(idc.test_err.unwrap_or(f32::NAN) as f64, 2),
+            ]);
+            crate::info!(
+                "{name} K={k}: LC logL={:.2} | DC logL={:.2} | iDC logL={:.2}",
+                log(lc.train_loss),
+                log(dc.train_loss),
+                log(idc.train_loss)
+            );
+        }
+    }
+    println!("\nFig. 9 — compression results (LC vs DC vs iDC):\n{}", table.render());
+    hist.save_csv(&Path::new(out_dir).join("fig9_table.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Experiment drivers: one module per paper table/figure (see DESIGN.md §5).
+
+pub mod common;
+pub mod fig6_tradeoff;
+pub mod fig7_linreg;
+pub mod fig8_curves;
+pub mod fig9_table;
+pub mod fig10_kmeans;
+pub mod fig11_evolution;
+pub mod fig13_centroids;
+pub mod sec54_cifar;
+pub mod table2_binary;
+
+use anyhow::{bail, Result};
+
+/// Scale knob for experiment runs: `quick` for CI/tests, `paper` for the
+/// full (hours-long) protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+impl Scale {
+    pub fn from_str(s: &str) -> Scale {
+        if s == "full" {
+            Scale::Full
+        } else {
+            Scale::Quick
+        }
+    }
+}
+
+/// Run an experiment by id, writing outputs under `out_dir`.
+pub fn run(id: &str, out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    match id {
+        "fig6" => fig6_tradeoff::run(out_dir, scale, seed),
+        "fig7" => fig7_linreg::run(out_dir, scale, seed),
+        "fig8" => fig8_curves::run(out_dir, scale, seed),
+        "fig9" => fig9_table::run(out_dir, scale, seed),
+        "fig10" => fig10_kmeans::run(out_dir, scale, seed),
+        "fig11" => fig11_evolution::run(out_dir, scale, seed),
+        "fig13" => fig13_centroids::run(out_dir, scale, seed),
+        "table2" => table2_binary::run(out_dir, scale, seed),
+        "sec54" => sec54_cifar::run(out_dir, scale, seed),
+        "all" => {
+            for e in ALL {
+                crate::info!("=== experiment {e} ===");
+                run(e, out_dir, scale, seed)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment '{id}'; known: {ALL:?} or 'all'"),
+    }
+}
+
+/// All experiment ids.
+pub const ALL: &[&str] = &[
+    "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig13", "table2", "sec54",
+];

@@ -1,0 +1,87 @@
+//! E8 (paper Table 2): binarization of LeNet300 — LC with an adaptive K=2
+//! codebook vs BinaryConnect vs the reference, plus the per-layer codebook
+//! values LC learns (which differ markedly from ±1, especially in the
+//! output layer).
+
+use super::common::{train_reference, Protocol};
+use super::Scale;
+use crate::coordinator::baselines;
+use crate::coordinator::lc_quantize;
+use crate::metrics::History;
+use crate::nn::MlpSpec;
+use crate::quant::ratio::compression_ratio;
+use crate::quant::Scheme;
+use crate::report::{f, Table};
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(out_dir: &str, scale: Scale, seed: u64) -> Result<()> {
+    let p = Protocol::for_scale(scale);
+    let spec = MlpSpec::lenet300();
+    let mut tr = train_reference(&spec, &p, seed);
+    let (p1, p0) = spec.param_counts();
+    let rho = compression_ratio(p1, p0, 2, spec.n_layers());
+
+    // LC with adaptive K=2
+    tr.reset();
+    let lc = lc_quantize(
+        &mut tr.backend,
+        &p.lc_config(Scheme::AdaptiveCodebook { k: 2 }, seed),
+    );
+
+    // BinaryConnect under a matched step budget
+    tr.reset();
+    let bc_steps = p.lc_iterations * p.l_steps;
+    let bc = baselines::binary_connect(
+        &mut tr.backend,
+        &Scheme::Binary,
+        bc_steps,
+        p.lr0 * 0.1,
+        p.momentum,
+        seed,
+    );
+
+    let log = |l: f32| (l.max(1e-12) as f64).log10();
+    let mut t = Table::new(&["method", "logL", "E_train %", "E_test %"]);
+    t.row(vec![
+        "reference".into(),
+        f(log(tr.ref_train_loss), 2),
+        f(tr.ref_train_err as f64, 3),
+        f(tr.ref_test_err.unwrap_or(f32::NAN) as f64, 2),
+    ]);
+    t.row(vec![
+        "LC (K=2)".into(),
+        f(log(lc.train_loss), 2),
+        f(lc.train_err as f64, 3),
+        f(lc.test_err.unwrap_or(f32::NAN) as f64, 2),
+    ]);
+    t.row(vec![
+        "BinaryConnect".into(),
+        f(log(bc.train_loss), 2),
+        f(bc.train_err as f64, 3),
+        f(bc.test_err.unwrap_or(f32::NAN) as f64, 2),
+    ]);
+    println!("\nTable 2 — binarization of LeNet300 (rho ~ x{rho:.1}):\n{}", t.render());
+
+    let mut cb = Table::new(&["layer", "LC codebook values"]);
+    for (l, c) in lc.codebooks.iter().enumerate() {
+        cb.row(vec![
+            format!("{}", l + 1),
+            c.iter().map(|v| format!("{v:.3}")).collect::<Vec<_>>().join(", "),
+        ]);
+    }
+    println!("{}", cb.render());
+
+    let mut hist = History::new(&["method", "logL", "etrain", "etest"]);
+    hist.push(vec![0.0, log(tr.ref_train_loss), tr.ref_train_err as f64, tr.ref_test_err.unwrap_or(f32::NAN) as f64]);
+    hist.push(vec![1.0, log(lc.train_loss), lc.train_err as f64, lc.test_err.unwrap_or(f32::NAN) as f64]);
+    hist.push(vec![2.0, log(bc.train_loss), bc.train_err as f64, bc.test_err.unwrap_or(f32::NAN) as f64]);
+    hist.save_csv(&Path::new(out_dir).join("table2_binary.csv"))?;
+
+    let mut cbh = History::new(&["layer", "c1", "c2"]);
+    for (l, c) in lc.codebooks.iter().enumerate() {
+        cbh.push(vec![l as f64, c[0] as f64, *c.get(1).unwrap_or(&f32::NAN) as f64]);
+    }
+    cbh.save_csv(&Path::new(out_dir).join("table2_codebooks.csv"))?;
+    Ok(())
+}

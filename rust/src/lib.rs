@@ -1,0 +1,49 @@
+//! # lcquant — Learning-Compression quantization of neural nets
+//!
+//! Reproduction of Carreira-Perpiñán & Idelbayev (2017), *"Model compression
+//! as constrained optimization, with application to neural nets. Part II:
+//! quantization"*.
+//!
+//! The library is organised as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   augmented-Lagrangian LC loop ([`coordinator`]), the C-step quantization
+//!   operators ([`quant`]), the DC / iDC / BinaryConnect baselines, the
+//!   experiment harness ([`experiments`]) and every substrate they need
+//!   ([`linalg`], [`nn`], [`data`], [`util`], [`config`], [`metrics`]).
+//! * **L2** — a JAX training graph (`python/compile/model.py`), lowered once
+//!   (AOT) to HLO text and executed from rust via PJRT ([`runtime`]).
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the codebook
+//!   matmul hot-spot, validated against a pure-jnp oracle at build time.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lcquant::coordinator::{LcConfig, lc_quantize};
+//! use lcquant::nn::{Mlp, MlpSpec};
+//! use lcquant::data::synth_mnist::SynthMnist;
+//! use lcquant::quant::Scheme;
+//!
+//! let data = SynthMnist::generate(2_000, 42);
+//! let mut net = Mlp::new(&MlpSpec::lenet300(), 1);
+//! // ... train the reference net, then:
+//! let cfg = LcConfig { scheme: Scheme::AdaptiveCodebook { k: 2 }, ..LcConfig::default() };
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod nn;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

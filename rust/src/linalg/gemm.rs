@@ -1,0 +1,278 @@
+//! Blocked, multi-threaded sgemm and the transposed variants the MLP
+//! backward pass needs. Row-major layout throughout.
+//!
+//! The inner loop is the classic `i,k,j` order (rank-1 update of a C row by
+//! a scalar of A times a row of B), which streams both B and C rows and
+//! autovectorizes. Blocking over k keeps the active B panel in L1/L2;
+//! threading splits the rows of C, which are disjoint, so no locks.
+
+use super::Mat;
+
+/// Rows-per-thread threshold below which we stay single-threaded.
+const PAR_MIN_ROWS: usize = 64;
+/// k-panel block size.
+const KC: usize = 256;
+
+fn num_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// C(m,n) = A(m,k) · B(k,n). `c` is overwritten.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.fill(0.0);
+    let do_rows = |rows: std::ops::Range<usize>, cdata: &mut [f32]| {
+        // cdata covers rows `rows` of C.
+        for kk in (0..k).step_by(KC) {
+            let kend = (kk + KC).min(k);
+            for (local_i, i) in rows.clone().enumerate() {
+                let arow = a.row(i);
+                let crow = &mut cdata[local_i * n..(local_i + 1) * n];
+                for p in kk..kend {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(p);
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    };
+    let nt = num_threads();
+    if m < PAR_MIN_ROWS || nt == 1 {
+        do_rows(0..m, &mut c.data);
+        return;
+    }
+    let rows_per = m.div_ceil(nt);
+    let chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = {
+        let mut out = Vec::new();
+        let mut rest = c.data.as_mut_slice();
+        let mut start = 0;
+        while start < m {
+            let end = (start + rows_per).min(m);
+            let (head, tail) = rest.split_at_mut((end - start) * n);
+            out.push((start..end, head));
+            rest = tail;
+            start = end;
+        }
+        out
+    };
+    std::thread::scope(|s| {
+        for (range, chunk) in chunks {
+            s.spawn(move || do_rows(range, chunk));
+        }
+    });
+}
+
+/// Allocating convenience wrapper.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C(k,n) = Aᵀ(k,m) · B(m,n) where A is (m,k). Used for weight gradients
+/// `dW = Xᵀ·dY` without materializing the transpose.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "inner dims (rows of A and B)");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(k, n);
+    // C[p, j] = sum_i A[i, p] * B[i, j]  — accumulate rank-1 updates row-wise
+    // over i; each i touches all of C, so for threading we split over the
+    // columns p of A (rows of C).
+    let nt = num_threads();
+    let do_cols = |cols: std::ops::Range<usize>, cdata: &mut [f32]| {
+        for i in 0..m {
+            let arow = a.row(i);
+            let brow = b.row(i);
+            for (local_p, p) in cols.clone().enumerate() {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut cdata[local_p * n..(local_p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    };
+    if k < PAR_MIN_ROWS || nt == 1 {
+        do_cols(0..k, &mut c.data);
+        return c;
+    }
+    let per = k.div_ceil(nt);
+    let mut chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
+    {
+        let mut rest = c.data.as_mut_slice();
+        let mut start = 0;
+        while start < k {
+            let end = (start + per).min(k);
+            let (head, tail) = rest.split_at_mut((end - start) * n);
+            chunks.push((start..end, head));
+            rest = tail;
+            start = end;
+        }
+    }
+    std::thread::scope(|s| {
+        for (range, chunk) in chunks {
+            s.spawn(move || do_cols(range, chunk));
+        }
+    });
+    c
+}
+
+/// C(m,k) = A(m,n) · Bᵀ(n,k) where B is (k,n). Used for input gradients
+/// `dX = dY·Wᵀ` without materializing the transpose.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "inner dims (cols of A and B)");
+    let (m, k) = (a.rows, b.rows);
+    let mut c = Mat::zeros(m, k);
+    let do_rows = |rows: std::ops::Range<usize>, cdata: &mut [f32]| {
+        for (local_i, i) in rows.clone().enumerate() {
+            let arow = a.row(i);
+            let crow = &mut cdata[local_i * k..(local_i + 1) * k];
+            for j in 0..k {
+                crow[j] = super::vecops::dot(arow, b.row(j));
+            }
+        }
+    };
+    let nt = num_threads();
+    if m < PAR_MIN_ROWS || nt == 1 {
+        do_rows(0..m, &mut c.data);
+        return c;
+    }
+    let per = m.div_ceil(nt);
+    let mut chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
+    {
+        let mut rest = c.data.as_mut_slice();
+        let mut start = 0;
+        while start < m {
+            let end = (start + per).min(m);
+            let (head, tail) = rest.split_at_mut((end - start) * k);
+            chunks.push((start..end, head));
+            rest = tail;
+            start = end;
+        }
+    }
+    std::thread::scope(|s| {
+        for (range, chunk) in chunks {
+            s.spawn(move || do_rows(range, chunk));
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for p in 0..a.cols {
+                    s += (a[(i, p)] * b[(p, j)]) as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.cols, b.cols);
+        for i in 0..a.data.len() {
+            assert!(
+                (a.data[i] - b.data[i]).abs() < tol,
+                "idx {i}: {} vs {}",
+                a.data[i],
+                b.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        check("gemm==naive", 30, |g| {
+            let mut rng = g.rng.split();
+            let (m, k, n) = (g.usize_in(1, 40), g.usize_in(1, 40), g.usize_in(1, 40));
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-3);
+        });
+    }
+
+    #[test]
+    fn matmul_threaded_path_matches_naive() {
+        let mut rng = Rng::new(31);
+        let a = rand_mat(&mut rng, 200, 64);
+        let b = rand_mat(&mut rng, 64, 48);
+        assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-3);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        check("AtB", 20, |g| {
+            let mut rng = g.rng.split();
+            let (m, k, n) = (g.usize_in(1, 30), g.usize_in(1, 30), g.usize_in(1, 30));
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, m, n);
+            assert_close(&matmul_at_b(&a, &b), &naive(&a.transpose(), &b), 1e-3);
+        });
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        check("ABt", 20, |g| {
+            let mut rng = g.rng.split();
+            let (m, n, k) = (g.usize_in(1, 30), g.usize_in(1, 30), g.usize_in(1, 30));
+            let a = rand_mat(&mut rng, m, n);
+            let b = rand_mat(&mut rng, k, n);
+            assert_close(&matmul_a_bt(&a, &b), &naive(&a, &b.transpose()), 1e-3);
+        });
+    }
+
+    #[test]
+    fn at_b_threaded_path() {
+        let mut rng = Rng::new(77);
+        let a = rand_mat(&mut rng, 128, 100);
+        let b = rand_mat(&mut rng, 128, 32);
+        assert_close(&matmul_at_b(&a, &b), &naive(&a.transpose(), &b), 2e-3);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(5);
+        let a = rand_mat(&mut rng, 10, 10);
+        assert_close(&matmul(&a, &Mat::eye(10)), &a, 1e-6);
+        assert_close(&matmul(&Mat::eye(10), &a), &a, 1e-6);
+    }
+}

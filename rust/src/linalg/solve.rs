@@ -1,0 +1,177 @@
+//! Cholesky factorization / solves for symmetric positive-definite systems.
+//!
+//! Used by the closed-form L step of the linear-regression experiment (E2,
+//! paper §5.2): the penalized least-squares solution is
+//! `W (XXᵀ/N + (μ/2)·I_masked) = YXᵀ/N + (μ/2)·T_masked`, an SPD system in
+//! the Gram matrix. f64 internally for numerical robustness.
+
+use super::Mat;
+
+/// Cholesky factor L (lower-triangular, row-major, n×n) of an SPD matrix.
+pub struct Cholesky {
+    n: usize,
+    l: Vec<f64>,
+}
+
+impl Cholesky {
+    /// Factor `a` (symmetric positive definite). Returns `None` if a pivot
+    /// is non-positive (matrix not SPD within tolerance).
+    pub fn factor(a: &Mat) -> Option<Cholesky> {
+        assert_eq!(a.rows, a.cols, "square required");
+        let n = a.rows;
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)] as f64;
+                for p in 0..j {
+                    s -= l[i * n + p] * l[j * n + p];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Some(Cholesky { n, l })
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve_vec(&self, b: &[f32]) -> Vec<f32> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        let mut y = vec![0.0f64; n];
+        // forward: L y = b
+        for i in 0..n {
+            let mut s = b[i] as f64;
+            for p in 0..i {
+                s -= self.l[i * n + p] * y[p];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        // backward: Lᵀ x = y
+        let mut x = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for p in i + 1..n {
+                s -= self.l[p * n + i] * x[p];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        x.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Solve `A X = B` column-wise; `b` is (n, m), the result is (n, m).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.n);
+        let mut out = Mat::zeros(b.rows, b.cols);
+        // Work column by column (gathers are fine at these sizes: n ≤ ~800).
+        let mut col = vec![0.0f32; b.rows];
+        for j in 0..b.cols {
+            for i in 0..b.rows {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve_vec(&col);
+            for i in 0..b.rows {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+}
+
+/// Solve `x A = b` for a row-vector unknown (i.e. `Aᵀ xᵀ = bᵀ`); since A is
+/// symmetric this is the same as `A xᵀ = bᵀ`. Returns each row of `B`
+/// solved independently: given B (m, n) and SPD A (n, n), returns X (m, n)
+/// with `X A = B`.
+pub fn solve_right(a: &Mat, b: &Mat) -> Option<Mat> {
+    let ch = Cholesky::factor(a)?;
+    let mut out = Mat::zeros(b.rows, b.cols);
+    for r in 0..b.rows {
+        let x = ch.solve_vec(b.row(r));
+        out.row_mut(r).copy_from_slice(&x);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_at_b};
+    use crate::util::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        // A = GᵀG + n·I is SPD.
+        let mut g = Mat::zeros(n, n);
+        rng.fill_normal(&mut g.data, 0.0, 1.0);
+        let mut a = matmul_at_b(&g, &g);
+        for i in 0..n {
+            a[(i, i)] += n as f32;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_identity() {
+        let ch = Cholesky::factor(&Mat::eye(5)).unwrap();
+        let b = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(ch.solve_vec(&b), b);
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let mut rng = Rng::new(42);
+        for n in [1usize, 2, 5, 20, 60] {
+            let a = spd(&mut rng, n);
+            let mut x_true = vec![0.0f32; n];
+            rng.fill_normal(&mut x_true, 0.0, 1.0);
+            // b = A x
+            let b: Vec<f32> = (0..n)
+                .map(|i| crate::linalg::vecops::dot(a.row(i), &x_true))
+                .collect();
+            let x = Cholesky::factor(&a).unwrap().solve_vec(&b);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-2, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let m = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]); // indefinite
+        assert!(Cholesky::factor(&m).is_none());
+        let neg = Mat::from_vec(1, 1, vec![-3.0]);
+        assert!(Cholesky::factor(&neg).is_none());
+    }
+
+    #[test]
+    fn solve_right_matches_reconstruction() {
+        let mut rng = Rng::new(7);
+        let n = 12;
+        let a = spd(&mut rng, n);
+        let mut b = Mat::zeros(4, n);
+        rng.fill_normal(&mut b.data, 0.0, 1.0);
+        let x = solve_right(&a, &b).unwrap();
+        let recon = matmul(&x, &a); // X·A should equal B (A symmetric)
+        for i in 0..b.data.len() {
+            assert!((recon.data[i] - b.data[i]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn solve_mat_multiple_rhs() {
+        let mut rng = Rng::new(9);
+        let n = 10;
+        let a = spd(&mut rng, n);
+        let mut x_true = Mat::zeros(n, 3);
+        rng.fill_normal(&mut x_true.data, 0.0, 1.0);
+        let b = matmul(&a, &x_true);
+        let x = Cholesky::factor(&a).unwrap().solve_mat(&b);
+        for i in 0..x.data.len() {
+            assert!((x.data[i] - x_true.data[i]).abs() < 1e-2);
+        }
+    }
+}

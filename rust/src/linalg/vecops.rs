@@ -1,0 +1,170 @@
+//! Vector primitives used on the LC hot path (penalty gradients, multiplier
+//! updates, SGD). All operate on `&[f32]` slices; the compiler autovectorizes
+//! the simple loops, and the chunked forms below help it along.
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4 independent accumulators to break the dependency chain.
+    let mut acc = [0.0f32; 4];
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        acc[0] += x[b] * y[b];
+        acc[1] += x[b + 1] * y[b + 1];
+        acc[2] += x[b + 2] * y[b + 2];
+        acc[3] += x[b + 3] * y[b + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// ||x - y||_2
+#[inline]
+pub fn l2_dist(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        let d = (a - b) as f64;
+        s += d * d;
+    }
+    s.sqrt() as f32
+}
+
+/// ||x||_2
+#[inline]
+pub fn l2_norm(x: &[f32]) -> f32 {
+    let mut s = 0.0f64;
+    for a in x {
+        s += (*a as f64) * (*a as f64);
+    }
+    s.sqrt() as f32
+}
+
+/// Mean of |x_i| — the optimal binarization scale (Thm A.2).
+#[inline]
+pub fn mean_abs(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = x.iter().map(|v| v.abs() as f64).sum();
+    (s / x.len() as f64) as f32
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// out = x - y (allocating)
+pub fn sub(x: &[f32], y: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+/// z = x - y, written into `out` (non-allocating hot-path form).
+#[inline]
+pub fn sub_into(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// out[i] = w[i] - lambda[i] / mu — the shifted weights the C step quantizes.
+#[inline]
+pub fn shift_by_multipliers(w: &[f32], lambda: &[f32], mu: f32, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), lambda.len());
+    debug_assert_eq!(w.len(), out.len());
+    let inv_mu = 1.0 / mu;
+    for i in 0..w.len() {
+        out[i] = w[i] - lambda[i] * inv_mu;
+    }
+}
+
+/// lambda[i] -= mu * (w[i] - wc[i]) — the augmented-Lagrangian multiplier
+/// update from §3 of the paper.
+#[inline]
+pub fn update_multipliers(lambda: &mut [f32], w: &[f32], wc: &[f32], mu: f32) {
+    debug_assert_eq!(lambda.len(), w.len());
+    debug_assert_eq!(lambda.len(), wc.len());
+    for i in 0..lambda.len() {
+        lambda[i] -= mu * (w[i] - wc[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        check("dot==naive", 100, |g| {
+            let n = g.usize_in(0, 67);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let y: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - naive).abs() < 1e-3);
+        });
+    }
+
+    #[test]
+    fn norms_and_distances() {
+        let x = [3.0, 4.0];
+        assert!((l2_norm(&x) - 5.0).abs() < 1e-6);
+        assert!((l2_dist(&x, &[0.0, 0.0]) - 5.0).abs() < 1e-6);
+        assert!((mean_abs(&[-2.0, 2.0, 4.0]) - 8.0 / 3.0).abs() < 1e-6);
+        assert_eq!(mean_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn multiplier_updates_match_formula() {
+        check("lambda update", 50, |g| {
+            let n = g.usize_in(1, 20);
+            let w: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let wc: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let mut lambda: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let before = lambda.clone();
+            let mu = g.f32_in(0.01, 10.0);
+            update_multipliers(&mut lambda, &w, &wc, mu);
+            for i in 0..n {
+                assert!((lambda[i] - (before[i] - mu * (w[i] - wc[i]))).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn shift_consistency() {
+        let w = [1.0, -1.0];
+        let lam = [0.5, 0.5];
+        let mut out = [0.0; 2];
+        shift_by_multipliers(&w, &lam, 2.0, &mut out);
+        assert_eq!(out, [0.75, -1.25]);
+    }
+}

@@ -1,0 +1,160 @@
+//! `lcquant` CLI — launcher for the LC quantization system.
+//!
+//! ```text
+//! lcquant experiment <id|all> [--out results] [--scale quick|full] [--seed N]
+//! lcquant run --config configs/lenet300_k2.json [--out results]
+//! lcquant pjrt-smoke [--artifacts artifacts]
+//! lcquant list
+//! ```
+
+use anyhow::{anyhow, Result};
+use lcquant::config::RunConfig;
+use lcquant::coordinator::{lc_quantize, NativeBackend};
+use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::experiments::{self, Scale};
+use lcquant::nn::Mlp;
+use lcquant::util::cli::Args;
+use lcquant::util::log::{set_level, Level};
+use lcquant::util::rng::Rng;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:
+  lcquant experiment <id|all> [--out DIR] [--scale quick|full] [--seed N]
+      ids: {:?}
+  lcquant run --config FILE [--out DIR]
+  lcquant pjrt-smoke [--artifacts DIR]
+  lcquant list",
+        experiments::ALL
+    );
+    std::process::exit(2);
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.positional.first().map(String::as_str).unwrap_or("all");
+    let out = args.get_or("out", "results");
+    let scale = Scale::from_str(args.get_or("scale", "quick"));
+    let seed = args.get_u64("seed", 42);
+    std::fs::create_dir_all(out)?;
+    experiments::run(id, out, scale, seed)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    use lcquant::coordinator::Backend;
+    let cfg_path = args
+        .get("config")
+        .ok_or_else(|| anyhow!("run requires --config FILE"))?;
+    let cfg = RunConfig::from_file(cfg_path)?;
+    lcquant::info!("config '{}' loaded from {cfg_path}", cfg.name);
+
+    let mut data = match cfg.data.kind.as_str() {
+        "cifar_like" => lcquant::data::cifar_like::generate(cfg.data.n, cfg.seed),
+        _ => SynthMnist::generate(cfg.data.n, cfg.seed),
+    };
+    data.subtract_mean(None);
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let (train, test) = data.split(cfg.data.test_frac, &mut rng);
+
+    // --backend pjrt runs the L step through the AOT artifact (requires
+    // `make artifacts` and a net matching the artifact's architecture);
+    // default is the pure-rust backend.
+    let mut backend: Box<dyn Backend> = match args.get_or("backend", "native") {
+        "pjrt" => {
+            let dir = lcquant::runtime::Engine::default_dir();
+            if !lcquant::runtime::Engine::available(&dir) {
+                return Err(anyhow!("--backend pjrt requires artifacts at {dir:?}"));
+            }
+            let engine = lcquant::runtime::Engine::open(&dir)?;
+            Box::new(lcquant::runtime::PjrtBackend::new(
+                engine,
+                args.get_or("model", "lenet300"),
+                train,
+                Some(test),
+                cfg.seed,
+            )?)
+        }
+        _ => {
+            let net = Mlp::new(&cfg.net, cfg.seed);
+            Box::new(NativeBackend::new(net, train, Some(test), cfg.train.batch, cfg.seed))
+        }
+    };
+    let backend = backend.as_mut();
+
+    // train the reference
+    use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), cfg.train.momentum);
+    let chunk = 100usize;
+    let mut step = 0;
+    while step < cfg.train.ref_steps {
+        let n = chunk.min(cfg.train.ref_steps - step);
+        let lr = cfg.train.lr0 * cfg.train.lr_decay.powi((step / chunk) as i32);
+        run_sgd(backend, &mut opt, n, lr, None);
+        step += n;
+    }
+    let (rl, re) = backend.eval_train();
+    lcquant::info!("reference: loss={rl:.5} err={re:.2}%");
+
+    let res = lc_quantize(backend, &cfg.lc);
+    println!(
+        "LC done [{}]: quantized train loss {:.5}, train err {:.2}%, test err {:?}",
+        cfg.lc.scheme.label(),
+        res.train_loss,
+        res.train_err,
+        res.test_err
+    );
+    for (l, cb) in res.codebooks.iter().enumerate() {
+        println!("  layer {} codebook: {:?}", l + 1, cb);
+    }
+    // persist history
+    let out = args.get_or("out", "results");
+    let mut hist = lcquant::metrics::History::new(&["iter", "mu", "lstep_loss", "feasibility"]);
+    for r in &res.history {
+        hist.push(vec![r.iter as f64, r.mu as f64, r.lstep_loss as f64, r.feasibility as f64]);
+    }
+    hist.save_csv(&std::path::Path::new(out).join(format!("{}_history.csv", cfg.name)))?;
+    Ok(())
+}
+
+fn cmd_pjrt_smoke(args: &Args) -> Result<()> {
+    use lcquant::coordinator::Backend as _;
+    use lcquant::runtime::{Engine, PjrtBackend};
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    if !Engine::available(&dir) {
+        return Err(anyhow!("no artifacts at {dir:?}; run `make artifacts` first"));
+    }
+    let engine = Engine::open(&dir)?;
+    println!(
+        "manifest artifacts: {:?}",
+        engine.manifest.artifacts.keys().collect::<Vec<_>>()
+    );
+    let mut data = SynthMnist::generate(600, 1);
+    data.subtract_mean(None);
+    let mut rng = Rng::new(2);
+    let (train, test) = data.split(0.2, &mut rng);
+    let mut backend = PjrtBackend::new(engine, "lenet300", train, Some(test), 3)?;
+    let (loss, grads) = backend.next_loss_grads();
+    println!("pjrt grad step: loss={loss:.4}, {} layers", grads.dw.len());
+    let (el, ee) = backend.eval_train();
+    println!("pjrt eval: loss={el:.4} err={ee:.2}%");
+    println!("pjrt-smoke OK");
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    set_level(if args.has("verbose") { Level::Debug } else { Level::Info });
+    let result = match args.command.as_str() {
+        "experiment" => cmd_experiment(&args),
+        "run" => cmd_run(&args),
+        "pjrt-smoke" => cmd_pjrt_smoke(&args),
+        "list" => {
+            println!("experiments: {:?}", experiments::ALL);
+            Ok(())
+        }
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

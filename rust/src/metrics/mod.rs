@@ -1,0 +1,157 @@
+//! Metrics recording: run histories, CSV/JSON emission for the experiment
+//! drivers (each paper figure is regenerated from these files).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// A tabular run history: named columns, rows appended over time.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl History {
+    pub fn new(columns: &[&str]) -> History {
+        History { columns: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn col(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Write a JSON results blob (deterministic key order).
+pub fn save_json(path: &Path, value: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, value.to_string())
+}
+
+/// Summary statistics of a slice.
+pub fn summary(xs: &[f32]) -> BTreeMap<String, f64> {
+    let mut m = BTreeMap::new();
+    if xs.is_empty() {
+        return m;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    let mut sorted: Vec<f32> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    m.insert("mean".into(), mean);
+    m.insert("std".into(), var.sqrt());
+    m.insert("min".into(), sorted[0] as f64);
+    m.insert("max".into(), *sorted.last().unwrap() as f64);
+    m.insert("median".into(), sorted[sorted.len() / 2] as f64);
+    m
+}
+
+/// Kernel density estimate on a fixed grid — used to reproduce the weight
+/// distribution plots (paper Figs. 7, 11–13) as numeric series.
+pub fn kde(xs: &[f32], grid: &[f32], bandwidth: f32) -> Vec<f32> {
+    let h = bandwidth.max(1e-8) as f64;
+    let norm = 1.0 / ((xs.len().max(1) as f64) * h * (2.0 * std::f64::consts::PI).sqrt());
+    grid.iter()
+        .map(|&g| {
+            let mut s = 0.0f64;
+            for &x in xs {
+                let z = ((g - x) as f64) / h;
+                s += (-0.5 * z * z).exp();
+            }
+            (s * norm) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_roundtrip() {
+        let mut h = History::new(&["iter", "loss"]);
+        h.push(vec![0.0, 1.5]);
+        h.push(vec![1.0, 0.7]);
+        let csv = h.to_csv();
+        assert_eq!(csv, "iter,loss\n0,1.5\n1,0.7\n");
+        assert_eq!(h.col("loss").unwrap(), vec![1.5, 0.7]);
+        assert!(h.col("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut h = History::new(&["a"]);
+        h.push(vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s["mean"] - 2.5).abs() < 1e-9);
+        assert_eq!(s["min"], 1.0);
+        assert_eq!(s["max"], 4.0);
+        assert_eq!(s["median"], 3.0);
+        assert!(summary(&[]).is_empty());
+    }
+
+    #[test]
+    fn kde_integrates_to_one() {
+        let xs = [0.0f32, 1.0, -1.0, 0.5];
+        let grid: Vec<f32> = (0..200).map(|i| -5.0 + i as f32 * 0.05).collect();
+        let dens = kde(&xs, &grid, 0.3);
+        let integral: f32 = dens.iter().sum::<f32>() * 0.05;
+        assert!((integral - 1.0).abs() < 0.02, "integral {integral}");
+        // peak near the data
+        let peak_idx = dens
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((grid[peak_idx]).abs() < 1.0);
+    }
+
+    #[test]
+    fn save_files() {
+        let dir = std::env::temp_dir().join("lcquant_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut h = History::new(&["x"]);
+        h.push(vec![1.0]);
+        let p = dir.join("a/b.csv");
+        h.save_csv(&p).unwrap();
+        assert!(p.exists());
+        save_json(&dir.join("r.json"), &Json::obj(vec![("k", Json::from(1.0))])).unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("r.json")).unwrap(), "{\"k\":1}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,148 @@
+//! Softmax + average cross-entropy (the paper's loss for classification).
+
+use crate::linalg::Mat;
+
+/// Row-wise softmax in place (numerically stable).
+pub fn softmax_rows(logits: &mut Mat) {
+    for r in 0..logits.rows {
+        let row = logits.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Average cross-entropy of logits vs one-hot targets. Returns
+/// (loss, probabilities).
+pub fn softmax_cross_entropy(logits: &Mat, targets: &Mat) -> (f32, Mat) {
+    assert_eq!(logits.rows, targets.rows);
+    assert_eq!(logits.cols, targets.cols);
+    let mut probs = logits.clone();
+    softmax_rows(&mut probs);
+    let mut loss = 0.0f64;
+    for r in 0..probs.rows {
+        for c in 0..probs.cols {
+            if targets[(r, c)] > 0.0 {
+                loss -= (targets[(r, c)] as f64) * (probs[(r, c)].max(1e-12) as f64).ln();
+            }
+        }
+    }
+    ((loss / probs.rows as f64) as f32, probs)
+}
+
+/// Gradient of average CE wrt logits: (probs - targets) / batch.
+pub fn cross_entropy_grad(probs: &Mat, targets: &Mat) -> Mat {
+    let b = probs.rows as f32;
+    let mut g = probs.clone();
+    for i in 0..g.data.len() {
+        g.data[i] = (g.data[i] - targets.data[i]) / b;
+    }
+    g
+}
+
+/// Classification error rate (%) from logits and labels.
+pub fn error_rate(logits: &Mat, labels: &[u8]) -> f32 {
+    let mut wrong = 0usize;
+    for r in 0..logits.rows {
+        let row = logits.row(r);
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred != labels[r] as usize {
+            wrong += 1;
+        }
+    }
+    100.0 * wrong as f32 / logits.rows as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -10.0, 0.0, 10.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(m.row(r).iter().all(|&v| v > 0.0));
+        }
+        // larger logit -> larger prob
+        assert!(m[(0, 2)] > m[(0, 1)] && m[(0, 1)] > m[(0, 0)]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut m = Mat::from_vec(1, 2, vec![1000.0, 1001.0]);
+        softmax_rows(&mut m);
+        assert!(m.data.iter().all(|v| v.is_finite()));
+        assert!((m.data.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ce_of_perfect_prediction_near_zero() {
+        let logits = Mat::from_vec(1, 3, vec![100.0, 0.0, 0.0]);
+        let targets = Mat::from_vec(1, 3, vec![1.0, 0.0, 0.0]);
+        let (loss, _) = softmax_cross_entropy(&logits, &targets);
+        assert!(loss < 1e-5);
+    }
+
+    #[test]
+    fn ce_of_uniform_is_log_k() {
+        let logits = Mat::zeros(4, 10);
+        let mut targets = Mat::zeros(4, 10);
+        for r in 0..4 {
+            targets[(r, r)] = 1.0;
+        }
+        let (loss, _) = softmax_cross_entropy(&logits, &targets);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let mut logits = Mat::zeros(3, 5);
+        rng.fill_normal(&mut logits.data, 0.0, 1.0);
+        let mut targets = Mat::zeros(3, 5);
+        for r in 0..3 {
+            targets[(r, r)] = 1.0;
+        }
+        let (_, probs) = softmax_cross_entropy(&logits, &targets);
+        let g = cross_entropy_grad(&probs, &targets);
+        let eps = 1e-3;
+        for idx in [0usize, 4, 7, 14] {
+            let mut lp = logits.clone();
+            lp.data[idx] += eps;
+            let (l1, _) = softmax_cross_entropy(&lp, &targets);
+            let mut lm = logits.clone();
+            lm.data[idx] -= eps;
+            let (l0, _) = softmax_cross_entropy(&lm, &targets);
+            let fd = (l1 - l0) / (2.0 * eps);
+            assert!(
+                (fd - g.data[idx]).abs() < 1e-3,
+                "idx {idx}: fd {fd} vs analytic {}",
+                g.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn error_rate_counts_argmax_mismatches() {
+        let logits = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(error_rate(&logits, &[0, 1]), 0.0);
+        assert_eq!(error_rate(&logits, &[1, 1]), 50.0);
+        assert_eq!(error_rate(&logits, &[1, 0]), 100.0);
+    }
+}

@@ -1,0 +1,513 @@
+//! Multi-layer perceptron with explicit forward/backward.
+//!
+//! Matches the paper's LeNet300 (784-300-100-10, tanh) and the deep-MLP
+//! stand-in for LeNet5 (see DESIGN.md §5). Weights are `(in, out)`
+//! row-major so the forward pass is `X·W + b`.
+
+use crate::linalg::gemm::{matmul, matmul_a_bt, matmul_at_b};
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Tanh,
+    Relu,
+    /// No nonlinearity (output layer; softmax lives in the loss).
+    Linear,
+}
+
+/// Architecture description.
+#[derive(Clone, Debug)]
+pub struct MlpSpec {
+    /// Layer widths including input, e.g. `[784, 300, 100, 10]`.
+    pub sizes: Vec<usize>,
+    /// Activation after each hidden layer (the output layer is linear).
+    pub hidden_activation: Activation,
+    /// Dropout keep-probability per layer input (1.0 = no dropout). Must
+    /// have `sizes.len() - 1` entries or be empty.
+    pub dropout_keep: Vec<f32>,
+}
+
+impl MlpSpec {
+    /// Paper's LeNet300: 784-300-100-10, tanh (P1 = 266,200 weights,
+    /// P0 = 410 biases).
+    pub fn lenet300() -> MlpSpec {
+        MlpSpec {
+            sizes: vec![784, 300, 100, 10],
+            hidden_activation: Activation::Tanh,
+            dropout_keep: vec![],
+        }
+    }
+
+    /// Deep-MLP stand-in for the paper's LeNet5 (ReLU + dropout on the
+    /// dense layers; ≈560k parameters — same order as LeNet5's 430k).
+    pub fn lenet5_mlp() -> MlpSpec {
+        MlpSpec {
+            sizes: vec![784, 500, 300, 100, 10],
+            hidden_activation: Activation::Relu,
+            dropout_keep: vec![1.0, 0.5, 0.5, 1.0],
+        }
+    }
+
+    /// Single-hidden-layer net used by the Fig. 6 tradeoff experiment.
+    pub fn single_hidden(d: usize, h: usize, classes: usize) -> MlpSpec {
+        MlpSpec {
+            sizes: vec![d, h, classes],
+            hidden_activation: Activation::Tanh,
+            dropout_keep: vec![],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    /// Count of multiplicative weights (P1) and biases (P0).
+    pub fn param_counts(&self) -> (usize, usize) {
+        let mut p1 = 0;
+        let mut p0 = 0;
+        for w in self.sizes.windows(2) {
+            p1 += w[0] * w[1];
+            p0 += w[1];
+        }
+        (p1, p0)
+    }
+}
+
+/// One dense layer.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    /// (in, out) row-major.
+    pub w: Mat,
+    pub b: Vec<f32>,
+    pub act: Activation,
+    pub keep: f32,
+}
+
+/// Per-layer gradients.
+#[derive(Clone, Debug)]
+pub struct Grads {
+    pub dw: Vec<Mat>,
+    pub db: Vec<Vec<f32>>,
+}
+
+impl Grads {
+    pub fn zeros_like(net: &Mlp) -> Grads {
+        Grads {
+            dw: net.layers.iter().map(|l| Mat::zeros(l.w.rows, l.w.cols)).collect(),
+            db: net.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+        }
+    }
+}
+
+/// The MLP.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub spec: MlpSpec,
+    pub layers: Vec<Dense>,
+}
+
+/// Activations cached by `forward` for the backward pass.
+pub struct ForwardCache {
+    /// inputs[l] = input to layer l (post-dropout); inputs[0] = x.
+    inputs: Vec<Mat>,
+    /// outputs[l] = activation output of layer l.
+    outputs: Vec<Mat>,
+    /// dropout masks (empty when not training / keep == 1).
+    masks: Vec<Vec<f32>>,
+}
+
+impl Mlp {
+    /// Glorot-uniform initialization.
+    pub fn new(spec: &MlpSpec, seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        let keeps = if spec.dropout_keep.is_empty() {
+            vec![1.0; spec.n_layers()]
+        } else {
+            assert_eq!(spec.dropout_keep.len(), spec.n_layers());
+            spec.dropout_keep.clone()
+        };
+        for (li, win) in spec.sizes.windows(2).enumerate() {
+            let (fan_in, fan_out) = (win[0], win[1]);
+            let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+            let mut w = Mat::zeros(fan_in, fan_out);
+            for v in w.data.iter_mut() {
+                *v = rng.uniform_in(-limit, limit);
+            }
+            let act = if li + 1 == spec.n_layers() {
+                Activation::Linear
+            } else {
+                spec.hidden_activation
+            };
+            layers.push(Dense { w, b: vec![0.0; fan_out], act, keep: keeps[li] });
+        }
+        Mlp { spec: spec.clone(), layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Forward pass. `train` enables dropout (inverted scaling); `rng` is
+    /// only used when dropout is active.
+    pub fn forward(&self, x: &Mat, train: bool, rng: Option<&mut Rng>) -> (Mat, ForwardCache) {
+        let mut cache = ForwardCache { inputs: Vec::new(), outputs: Vec::new(), masks: Vec::new() };
+        let mut cur = x.clone();
+        let mut local_rng = rng;
+        for layer in &self.layers {
+            // dropout on the layer input
+            let mask = if train && layer.keep < 1.0 {
+                let r = local_rng.as_deref_mut().expect("dropout needs rng");
+                let inv = 1.0 / layer.keep;
+                let mut m = vec![0.0f32; cur.data.len()];
+                for (mi, v) in m.iter_mut().zip(cur.data.iter_mut()) {
+                    if (r.uniform() as f32) < layer.keep {
+                        *mi = inv;
+                        *v *= inv;
+                    } else {
+                        *mi = 0.0;
+                        *v = 0.0;
+                    }
+                }
+                m
+            } else {
+                Vec::new()
+            };
+            cache.masks.push(mask);
+            cache.inputs.push(cur.clone());
+            let mut z = matmul(&cur, &layer.w);
+            for r in 0..z.rows {
+                let row = z.row_mut(r);
+                for (v, b) in row.iter_mut().zip(&layer.b) {
+                    *v += b;
+                }
+            }
+            match layer.act {
+                Activation::Tanh => {
+                    for v in z.data.iter_mut() {
+                        *v = v.tanh();
+                    }
+                }
+                Activation::Relu => {
+                    for v in z.data.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+                Activation::Linear => {}
+            }
+            cache.outputs.push(z.clone());
+            cur = z;
+        }
+        (cur, cache)
+    }
+
+    /// Backward pass from the loss gradient wrt logits. Returns parameter
+    /// gradients.
+    pub fn backward(&self, dlogits: &Mat, cache: &ForwardCache) -> Grads {
+        let mut grads = Grads::zeros_like(self);
+        let mut delta = dlogits.clone();
+        for l in (0..self.layers.len()).rev() {
+            let layer = &self.layers[l];
+            // activation derivative (output cached)
+            match layer.act {
+                Activation::Tanh => {
+                    let out = &cache.outputs[l];
+                    for i in 0..delta.data.len() {
+                        let a = out.data[i];
+                        delta.data[i] *= 1.0 - a * a;
+                    }
+                }
+                Activation::Relu => {
+                    let out = &cache.outputs[l];
+                    for i in 0..delta.data.len() {
+                        if out.data[i] <= 0.0 {
+                            delta.data[i] = 0.0;
+                        }
+                    }
+                }
+                Activation::Linear => {}
+            }
+            // dW = Xᵀ·delta ; db = column sums of delta
+            grads.dw[l] = matmul_at_b(&cache.inputs[l], &delta);
+            let db = &mut grads.db[l];
+            for r in 0..delta.rows {
+                for (c, v) in delta.row(r).iter().enumerate() {
+                    db[c] += v;
+                }
+            }
+            if l > 0 {
+                // dX = delta·Wᵀ, then dropout mask
+                let mut dx = matmul_a_bt(&delta, &layer.w);
+                if !cache.masks[l].is_empty() {
+                    for (v, m) in dx.data.iter_mut().zip(&cache.masks[l]) {
+                        *v *= m;
+                    }
+                }
+                delta = dx;
+            }
+        }
+        grads
+    }
+
+    /// Convenience: loss + grads + error for a classification batch.
+    pub fn loss_and_grads(
+        &self,
+        x: &Mat,
+        y_onehot: &Mat,
+        labels: &[u8],
+        train: bool,
+        rng: Option<&mut Rng>,
+    ) -> (f32, f32, Grads) {
+        let (logits, cache) = self.forward(x, train, rng);
+        let (loss, probs) = super::loss::softmax_cross_entropy(&logits, y_onehot);
+        let err = super::loss::error_rate(&logits, labels);
+        let dlogits = super::loss::cross_entropy_grad(&probs, y_onehot);
+        (loss, err, self.backward(&dlogits, &cache))
+    }
+
+    /// Evaluate loss and error (no dropout).
+    pub fn evaluate(&self, x: &Mat, y_onehot: &Mat, labels: &[u8]) -> (f32, f32) {
+        let (logits, _) = self.forward(x, false, None);
+        let (loss, _) = super::loss::softmax_cross_entropy(&logits, y_onehot);
+        (loss, super::loss::error_rate(&logits, labels))
+    }
+
+    /// Evaluate over a dataset in chunks (memory-bounded).
+    pub fn evaluate_dataset(&self, data: &crate::data::Dataset, chunk: usize) -> (f32, f32) {
+        let n = data.len();
+        let mut loss_sum = 0.0f64;
+        let mut err_sum = 0.0f64;
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let b = end - start;
+            let mut x = Mat::zeros(b, data.dim());
+            let mut y = Mat::zeros(b, data.n_classes);
+            let mut labels = Vec::with_capacity(b);
+            for (r, i) in (start..end).enumerate() {
+                x.row_mut(r).copy_from_slice(data.images.row(i));
+                y[(r, data.labels[i] as usize)] = 1.0;
+                labels.push(data.labels[i]);
+            }
+            let (l, e) = self.evaluate(&x, &y, &labels);
+            loss_sum += l as f64 * b as f64;
+            err_sum += e as f64 * b as f64;
+            start = end;
+        }
+        ((loss_sum / n as f64) as f32, (err_sum / n as f64) as f32)
+    }
+
+    // ---- parameter views for the coordinator / quantizer ----------------
+
+    /// Per-layer multiplicative weight slices (the quantized parameters;
+    /// biases stay full precision, paper §5).
+    pub fn weights(&self) -> Vec<&[f32]> {
+        self.layers.iter().map(|l| l.w.data.as_slice()).collect()
+    }
+
+    pub fn weights_mut(&mut self) -> Vec<&mut [f32]> {
+        self.layers.iter_mut().map(|l| l.w.data.as_mut_slice()).collect()
+    }
+
+    /// Copy all multiplicative weights into per-layer owned vectors.
+    pub fn weights_cloned(&self) -> Vec<Vec<f32>> {
+        self.layers.iter().map(|l| l.w.data.clone()).collect()
+    }
+
+    /// Overwrite weights from per-layer vectors.
+    pub fn set_weights(&mut self, per_layer: &[Vec<f32>]) {
+        assert_eq!(per_layer.len(), self.layers.len());
+        for (l, w) in self.layers.iter_mut().zip(per_layer) {
+            assert_eq!(l.w.data.len(), w.len());
+            l.w.data.copy_from_slice(w);
+        }
+    }
+
+    /// Total multiplicative weights (P1) and biases (P0).
+    pub fn param_counts(&self) -> (usize, usize) {
+        self.spec.param_counts()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy_net(seed: u64) -> Mlp {
+        Mlp::new(
+            &MlpSpec {
+                sizes: vec![4, 6, 3],
+                hidden_activation: Activation::Tanh,
+                dropout_keep: vec![],
+            },
+            seed,
+        )
+    }
+
+    fn toy_batch(rng: &mut Rng, b: usize) -> (Mat, Mat, Vec<u8>) {
+        let mut x = Mat::zeros(b, 4);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        let mut y = Mat::zeros(b, 3);
+        let mut labels = Vec::new();
+        for r in 0..b {
+            let l = rng.below(3);
+            y[(r, l)] = 1.0;
+            labels.push(l as u8);
+        }
+        (x, y, labels)
+    }
+
+    #[test]
+    fn param_counts_match_paper() {
+        let (p1, p0) = MlpSpec::lenet300().param_counts();
+        assert_eq!(p1, 266_200); // paper: P1 = 266,200
+        assert_eq!(p0, 410); // paper: P0 = 410
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let net = toy_net(1);
+        let mut rng = Rng::new(2);
+        let (x, _, _) = toy_batch(&mut rng, 5);
+        let (logits, cache) = net.forward(&x, false, None);
+        assert_eq!(logits.rows, 5);
+        assert_eq!(logits.cols, 3);
+        assert_eq!(cache.inputs.len(), 2);
+        assert_eq!(cache.outputs.len(), 2);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut net = toy_net(3);
+        let mut rng = Rng::new(4);
+        let (x, y, labels) = toy_batch(&mut rng, 7);
+        let (_, _, grads) = net.loss_and_grads(&x, &y, &labels, false, None);
+        let eps = 1e-3;
+        // check a scatter of weight and bias entries in every layer
+        for l in 0..net.n_layers() {
+            for &idx in &[0usize, 3, 11] {
+                if idx >= net.layers[l].w.data.len() {
+                    continue;
+                }
+                let orig = net.layers[l].w.data[idx];
+                net.layers[l].w.data[idx] = orig + eps;
+                let (lp, _) = net.evaluate(&x, &y, &labels);
+                net.layers[l].w.data[idx] = orig - eps;
+                let (lm, _) = net.evaluate(&x, &y, &labels);
+                net.layers[l].w.data[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads.dw[l].data[idx];
+                assert!(
+                    (fd - an).abs() < 2e-3,
+                    "layer {l} w[{idx}]: fd {fd} vs analytic {an}"
+                );
+            }
+            for &idx in &[0usize, 2] {
+                if idx >= net.layers[l].b.len() {
+                    continue;
+                }
+                let orig = net.layers[l].b[idx];
+                net.layers[l].b[idx] = orig + eps;
+                let (lp, _) = net.evaluate(&x, &y, &labels);
+                net.layers[l].b[idx] = orig - eps;
+                let (lm, _) = net.evaluate(&x, &y, &labels);
+                net.layers[l].b[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads.db[l][idx];
+                assert!(
+                    (fd - an).abs() < 2e-3,
+                    "layer {l} b[{idx}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relu_gradients_match_finite_differences() {
+        let mut net = Mlp::new(
+            &MlpSpec {
+                sizes: vec![3, 5, 2],
+                hidden_activation: Activation::Relu,
+                dropout_keep: vec![],
+            },
+            5,
+        );
+        let mut rng = Rng::new(6);
+        let mut x = Mat::zeros(4, 3);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        let mut y = Mat::zeros(4, 2);
+        let labels = vec![0u8, 1, 0, 1];
+        for (r, &l) in labels.iter().enumerate() {
+            y[(r, l as usize)] = 1.0;
+        }
+        let (_, _, grads) = net.loss_and_grads(&x, &y, &labels, false, None);
+        let eps = 1e-3;
+        for &idx in &[0usize, 7, 13] {
+            let orig = net.layers[0].w.data[idx];
+            net.layers[0].w.data[idx] = orig + eps;
+            let (lp, _) = net.evaluate(&x, &y, &labels);
+            net.layers[0].w.data[idx] = orig - eps;
+            let (lm, _) = net.evaluate(&x, &y, &labels);
+            net.layers[0].w.data[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - grads.dw[0].data[idx]).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn dropout_scales_expectation() {
+        let spec = MlpSpec {
+            sizes: vec![10, 8, 2],
+            hidden_activation: Activation::Relu,
+            dropout_keep: vec![0.5, 1.0],
+        };
+        let net = Mlp::new(&spec, 7);
+        let x = Mat::from_vec(1, 10, vec![1.0; 10]);
+        // Average many dropout forwards ≈ eval forward (inverted dropout).
+        let mut rng = Rng::new(8);
+        let mut acc = vec![0.0f64; 2];
+        let n = 3000;
+        for _ in 0..n {
+            let (out, _) = net.forward(&x, true, Some(&mut rng));
+            for (a, v) in acc.iter_mut().zip(&out.data) {
+                *a += *v as f64;
+            }
+        }
+        let (eval_out, _) = net.forward(&x, false, None);
+        for (a, e) in acc.iter().zip(&eval_out.data) {
+            let mean = *a / n as f64;
+            assert!(
+                (mean - *e as f64).abs() < 0.25,
+                "dropout mean {mean} vs eval {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn set_weights_roundtrip() {
+        let mut net = toy_net(9);
+        let mut w = net.weights_cloned();
+        w[0][0] = 123.0;
+        net.set_weights(&w);
+        assert_eq!(net.layers[0].w.data[0], 123.0);
+        assert_eq!(net.weights()[0][0], 123.0);
+    }
+
+    #[test]
+    fn training_reduces_loss_on_toy_problem() {
+        use crate::nn::sgd::{Nesterov, SgdConfig};
+        let mut net = toy_net(11);
+        let mut rng = Rng::new(12);
+        let (x, y, labels) = toy_batch(&mut rng, 64);
+        let (loss0, _) = net.evaluate(&x, &y, &labels);
+        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.5, momentum: 0.9 });
+        for _ in 0..100 {
+            let (_, _, g) = net.loss_and_grads(&x, &y, &labels, false, None);
+            opt.step(&mut net, &g, None);
+        }
+        let (loss1, _) = net.evaluate(&x, &y, &labels);
+        assert!(loss1 < loss0 * 0.5, "loss {loss0} -> {loss1}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Pure-rust neural network substrate: dense layers, activations,
+//! softmax/cross-entropy, full forward/backward, and SGD with Nesterov
+//! momentum + the paper's clipped learning-rate schedule.
+//!
+//! This is the **native L-step backend**: it implements exactly the same
+//! math as the AOT JAX artifact (`python/compile/model.py`), letting every
+//! coordinator test and most experiments run without artifacts, and giving
+//! a cross-check for the PJRT path (`runtime::PjrtBackend`).
+
+pub mod loss;
+pub mod mlp;
+pub mod sgd;
+
+pub use loss::{cross_entropy_grad, softmax_cross_entropy};
+pub use mlp::{Activation, Mlp, MlpSpec};
+pub use sgd::{Nesterov, SgdConfig};

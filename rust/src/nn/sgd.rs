@@ -1,0 +1,207 @@
+//! SGD with Nesterov momentum (the paper trains with Nesterov's accelerated
+//! gradient, §5.3) and the penalized L-step gradient.
+//!
+//! The L step of the LC algorithm minimizes
+//! `L(w) + μ/2 ‖w − w_C − λ/μ‖²`, whose gradient adds `μ(w − w_C) − λ`
+//! to the loss gradient **of the multiplicative weights only** (biases are
+//! not quantized). [`Penalty`] carries the per-layer targets.
+
+use super::mlp::{Grads, Mlp};
+use crate::linalg::Mat;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SgdConfig {
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+/// Per-layer penalty targets for the L step.
+pub struct Penalty<'a> {
+    /// Quantized weights Δ(Θ), per layer.
+    pub wc: &'a [Vec<f32>],
+    /// Lagrange multiplier estimates, per layer (zeros for the
+    /// quadratic-penalty method).
+    pub lambda: &'a [Vec<f32>],
+    pub mu: f32,
+}
+
+/// Nesterov-momentum optimizer (Lasagne formulation:
+/// `v ← m·v − lr·g; w ← w + m·v − lr·g`).
+pub struct Nesterov {
+    vw: Vec<Mat>,
+    vb: Vec<Vec<f32>>,
+    pub cfg: SgdConfig,
+}
+
+impl Nesterov {
+    pub fn new(net: &Mlp, cfg: SgdConfig) -> Nesterov {
+        Nesterov {
+            vw: net.layers.iter().map(|l| Mat::zeros(l.w.rows, l.w.cols)).collect(),
+            vb: net.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+            cfg,
+        }
+    }
+
+    /// Reset velocities (used when a new L step starts from a fresh w).
+    pub fn reset(&mut self) {
+        for v in self.vw.iter_mut() {
+            v.data.fill(0.0);
+        }
+        for v in self.vb.iter_mut() {
+            v.fill(0.0);
+        }
+    }
+
+    /// One update. `penalty` augments the weight gradients with
+    /// `μ(w − w_C) − λ`.
+    pub fn step(&mut self, net: &mut Mlp, grads: &Grads, penalty: Option<&Penalty>) {
+        let (lr, m) = (self.cfg.lr, self.cfg.momentum);
+        for l in 0..net.layers.len() {
+            let w = &mut net.layers[l].w.data;
+            let g = &grads.dw[l].data;
+            let v = &mut self.vw[l].data;
+            match penalty {
+                Some(p) => {
+                    let wc = &p.wc[l];
+                    let lam = &p.lambda[l];
+                    debug_assert_eq!(wc.len(), w.len());
+                    for i in 0..w.len() {
+                        let gi = g[i] + p.mu * (w[i] - wc[i]) - lam[i];
+                        v[i] = m * v[i] - lr * gi;
+                        w[i] += m * v[i] - lr * gi;
+                    }
+                }
+                None => {
+                    for i in 0..w.len() {
+                        v[i] = m * v[i] - lr * g[i];
+                        w[i] += m * v[i] - lr * g[i];
+                    }
+                }
+            }
+            let b = &mut net.layers[l].b;
+            let gb = &grads.db[l];
+            let vb = &mut self.vb[l];
+            for i in 0..b.len() {
+                vb[i] = m * vb[i] - lr * gb[i];
+                b[i] += m * vb[i] - lr * gb[i];
+            }
+        }
+    }
+}
+
+/// The paper's clipped learning-rate schedule for the L step (§3.3):
+/// `η′_t = min(η_t, 1/μ)` with a base schedule `η_t = η₀ · decay^t`.
+#[derive(Clone, Copy, Debug)]
+pub struct ClippedLrSchedule {
+    pub eta0: f32,
+    pub decay: f32,
+}
+
+impl ClippedLrSchedule {
+    /// Learning rate for epoch/iteration index `t` under penalty `mu`.
+    pub fn lr(&self, t: usize, mu: f32) -> f32 {
+        let base = self.eta0 * self.decay.powi(t as i32);
+        if mu > 0.0 {
+            base.min(1.0 / mu)
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::MlpSpec;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn momentum_accelerates_descent_on_quadratic() {
+        // minimize 0.5*w² via explicit gradient; momentum should reach small
+        // |w| faster than plain gd with same lr.
+        let run = |momentum: f32| {
+            let mut w = 1.0f32;
+            let mut v = 0.0f32;
+            let lr = 0.02;
+            let mut steps = 0;
+            while w.abs() > 1e-3 && steps < 10_000 {
+                let g = w;
+                v = momentum * v - lr * g;
+                w += momentum * v - lr * g;
+                steps += 1;
+            }
+            steps
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn penalty_pulls_weights_toward_target() {
+        let spec = MlpSpec { sizes: vec![2, 3, 2], hidden_activation: crate::nn::Activation::Tanh, dropout_keep: vec![] };
+        let mut net = Mlp::new(&spec, 1);
+        let wc: Vec<Vec<f32>> = net
+            .weights()
+            .iter()
+            .map(|w| vec![0.5; w.len()])
+            .collect();
+        let lambda: Vec<Vec<f32>> = net.weights().iter().map(|w| vec![0.0; w.len()]).collect();
+        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.05, momentum: 0.9 });
+        // zero loss gradient: only the penalty acts
+        let grads = crate::nn::mlp::Grads::zeros_like(&net);
+        let penalty = Penalty { wc: &wc, lambda: &lambda, mu: 1.0 };
+        let d0: f32 = net
+            .weights()
+            .iter()
+            .flat_map(|w| w.iter().map(|v| (v - 0.5).powi(2)))
+            .sum();
+        for _ in 0..200 {
+            opt.step(&mut net, &grads, Some(&penalty));
+        }
+        let d1: f32 = net
+            .weights()
+            .iter()
+            .flat_map(|w| w.iter().map(|v| (v - 0.5).powi(2)))
+            .sum();
+        assert!(d1 < d0 * 0.01, "penalty distance {d0} -> {d1}");
+    }
+
+    #[test]
+    fn lambda_shifts_the_attractor() {
+        // With wc=0 and λ≠0, minimizing μ/2‖w − 0 − λ/μ‖² settles at λ/μ.
+        let spec = MlpSpec { sizes: vec![1, 1], hidden_activation: crate::nn::Activation::Tanh, dropout_keep: vec![] };
+        let mut net = Mlp::new(&spec, 2);
+        let wc = vec![vec![0.0f32]];
+        let lambda = vec![vec![0.8f32]];
+        let mu = 2.0;
+        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.05, momentum: 0.9 });
+        let grads = crate::nn::mlp::Grads::zeros_like(&net);
+        for _ in 0..500 {
+            opt.step(&mut net, &grads, Some(&Penalty { wc: &wc, lambda: &lambda, mu }));
+        }
+        assert!((net.layers[0].w.data[0] - 0.4).abs() < 1e-3); // λ/μ = 0.4
+    }
+
+    #[test]
+    fn clipped_schedule() {
+        let s = ClippedLrSchedule { eta0: 0.1, decay: 0.99 };
+        assert_eq!(s.lr(0, 0.0), 0.1);
+        assert!((s.lr(1, 0.0) - 0.099).abs() < 1e-6);
+        // clip at 1/mu
+        assert_eq!(s.lr(0, 100.0), 0.01);
+        assert_eq!(s.lr(0, 5.0), 0.1); // 1/5 = 0.2 > 0.1, no clip
+    }
+
+    #[test]
+    fn reset_zeroes_velocity() {
+        let spec = MlpSpec { sizes: vec![2, 2], hidden_activation: crate::nn::Activation::Tanh, dropout_keep: vec![] };
+        let mut net = Mlp::new(&spec, 3);
+        let mut rng = Rng::new(4);
+        let mut g = crate::nn::mlp::Grads::zeros_like(&net);
+        rng.fill_normal(&mut g.dw[0].data, 0.0, 1.0);
+        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.1, momentum: 0.9 });
+        opt.step(&mut net, &g, None);
+        assert!(opt.vw[0].data.iter().any(|&v| v != 0.0));
+        opt.reset();
+        assert!(opt.vw[0].data.iter().all(|&v| v == 0.0));
+    }
+}

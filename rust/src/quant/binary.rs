@@ -1,0 +1,93 @@
+//! Binarization operators (paper Fig. 5, Thm A.2).
+
+/// sgn as defined in eq. (12): sgn(0) = +1.
+#[inline]
+pub fn sgn(t: f32) -> f32 {
+    if t < 0.0 {
+        -1.0
+    } else {
+        1.0
+    }
+}
+
+/// Binarize to {−1, +1}.
+pub fn binarize(w: &[f32]) -> Vec<f32> {
+    w.iter().map(|&t| sgn(t)).collect()
+}
+
+/// Binarize to {−a, +a} with the optimal scale a = mean |wᵢ| (Thm A.2).
+/// Returns (a, quantized weights).
+pub fn binarize_with_scale(w: &[f32]) -> (f32, Vec<f32>) {
+    let a = crate::linalg::vecops::mean_abs(w);
+    (a, w.iter().map(|&t| a * sgn(t)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::distortion;
+    use crate::util::prop::check;
+
+    #[test]
+    fn sgn_convention() {
+        assert_eq!(sgn(-0.1), -1.0);
+        assert_eq!(sgn(0.0), 1.0); // eq. (12): sgn(0) = +1
+        assert_eq!(sgn(0.1), 1.0);
+    }
+
+    #[test]
+    fn binarize_values() {
+        assert_eq!(binarize(&[-2.0, 0.0, 3.0]), vec![-1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn scale_is_mean_abs() {
+        let (a, wc) = binarize_with_scale(&[-2.0, 4.0]);
+        assert_eq!(a, 3.0);
+        assert_eq!(wc, vec![-3.0, 3.0]);
+    }
+
+    #[test]
+    fn scale_optimality_thm_a2() {
+        // E(a) = Σ(wᵢ − a·sgn(wᵢ))² is minimized at a* = mean|wᵢ|:
+        // check a* beats a dense grid of alternative scales.
+        check("thm A.2 optimal", 100, |g| {
+            let w = g.weights(64, 1.0);
+            let (a_star, wc) = binarize_with_scale(&w);
+            let e_star = distortion(&w, &wc);
+            for i in 0..=50 {
+                let a = a_star.max(0.1) * 2.0 * (i as f32) / 50.0;
+                let alt: Vec<f32> = w.iter().map(|&t| a * sgn(t)).collect();
+                let e_alt = distortion(&w, &alt);
+                // tolerance is relative: near the flat minimum f32 rounding
+                // of a* can differ from the grid point by O(eps)
+                assert!(
+                    e_star <= e_alt + 1e-5 + 1e-5 * e_alt,
+                    "a={a} (E={e_alt}) beats a*={a_star} (E={e_star})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn binary_beats_no_assignment_flip() {
+        // For the optimal a, flipping any single sign must not help.
+        check("sign assignment optimal", 60, |g| {
+            let w = g.weights(20, 1.0);
+            let (a, wc) = binarize_with_scale(&w);
+            let base = distortion(&w, &wc);
+            for i in 0..w.len() {
+                let mut alt = wc.clone();
+                alt[i] = -alt[i];
+                assert!(base <= distortion(&w, &alt) + 1e-6, "flip {i} helps; a={a}");
+            }
+        });
+    }
+
+    #[test]
+    fn empty_input() {
+        let (a, wc) = binarize_with_scale(&[]);
+        assert_eq!(a, 0.0);
+        assert!(wc.is_empty());
+    }
+}

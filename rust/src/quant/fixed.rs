@@ -1,0 +1,90 @@
+//! Fixed-codebook C step (paper §4.2, eq. 10–11): each weight maps to its
+//! nearest codebook entry. For scalar weights the solution is independent
+//! of the penalty choice (the real line is totally ordered).
+
+use super::kmeans::{midpoints, nearest_via_mids};
+
+/// Quantize to the nearest entry of a **sorted** codebook (eq. 11).
+pub fn quantize_fixed(w: &[f32], sorted_codebook: &[f32]) -> Vec<f32> {
+    assert!(!sorted_codebook.is_empty());
+    debug_assert!(sorted_codebook.windows(2).all(|p| p[0] <= p[1]));
+    let mids = midpoints(sorted_codebook);
+    w.iter()
+        .map(|&x| sorted_codebook[nearest_via_mids(&mids, x)])
+        .collect()
+}
+
+/// Assignment indices rather than values.
+pub fn assign_fixed(w: &[f32], sorted_codebook: &[f32]) -> Vec<u32> {
+    let mids = midpoints(sorted_codebook);
+    w.iter()
+        .map(|&x| nearest_via_mids(&mids, x) as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::distortion;
+    use crate::util::prop::check;
+
+    #[test]
+    fn voronoi_boundaries_are_midpoints() {
+        let cb = [-1.0f32, 0.0, 2.0];
+        // midpoints: -0.5 and 1.0
+        assert_eq!(quantize_fixed(&[-0.6], &cb), vec![-1.0]);
+        assert_eq!(quantize_fixed(&[-0.4], &cb), vec![0.0]);
+        assert_eq!(quantize_fixed(&[0.99], &cb), vec![0.0]);
+        assert_eq!(quantize_fixed(&[1.01], &cb), vec![2.0]);
+        // exactly at boundary: eq. 11 assigns the upper cell
+        assert_eq!(quantize_fixed(&[1.0], &cb), vec![2.0]);
+    }
+
+    #[test]
+    fn optimality_vs_brute_force() {
+        check("fixed quantization optimal", 150, |g| {
+            let k = g.usize_in(1, 8);
+            let cb = g.sorted_codebook(k, -2.0, 2.0);
+            let w = g.weights(64, 1.5);
+            let wc = quantize_fixed(&w, &cb);
+            // per-element: no codebook entry is strictly closer
+            for (x, q) in w.iter().zip(&wc) {
+                for c in &cb {
+                    assert!(
+                        (x - q).abs() <= (x - c).abs() + 1e-6,
+                        "x={x} q={q} better c={c}"
+                    );
+                }
+            }
+            // global: distortion ≤ any single-entry assignment
+            for c in &cb {
+                let alt: Vec<f32> = vec![*c; w.len()];
+                assert!(distortion(&w, &wc) <= distortion(&w, &alt) + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        check("quantize idempotent", 80, |g| {
+            let k = g.usize_in(1, 6);
+            let cb = g.sorted_codebook(k, -1.0, 1.0);
+            let w = g.weights(32, 1.0);
+            let q1 = quantize_fixed(&w, &cb);
+            let q2 = quantize_fixed(&q1, &cb);
+            assert_eq!(q1, q2);
+        });
+    }
+
+    #[test]
+    fn assignments_match_values() {
+        let cb = [-0.5f32, 0.5];
+        let w = [-1.0f32, -0.1, 0.2, 3.0];
+        let idx = assign_fixed(&w, &cb);
+        let q = quantize_fixed(&w, &cb);
+        for (i, &a) in idx.iter().enumerate() {
+            assert_eq!(q[i], cb[a as usize]);
+        }
+        assert_eq!(idx, vec![0, 0, 1, 1]);
+    }
+}

@@ -1,0 +1,406 @@
+//! 1-D k-means for the adaptive-codebook C step (paper §4.1).
+//!
+//! The paper notes that scalar k-means admits an `O(P log K)` assignment
+//! step: sort the K centroids, then each weight's nearest centroid is found
+//! by binary search over the K−1 midpoints (the Voronoi boundaries of a
+//! 1-D codebook are the midpoints, eq. 11). The centroid step is `O(P)`.
+//! Initialization is k-means++ (Arthur & Vassilvitskii 2007) on the first
+//! compression, warm-started thereafter (§3.3).
+
+use crate::util::rng::Rng;
+
+/// Result of a k-means run.
+pub struct KmeansResult {
+    /// Quantized weights (each input mapped to its centroid).
+    pub wc: Vec<f32>,
+    /// Assignment index per weight (into the *final sorted* centroid array).
+    pub assignments: Vec<u32>,
+    /// Iterations until convergence.
+    pub iterations: usize,
+}
+
+/// k-means++ seeding for scalar data.
+pub fn kmeans_pp_init(data: &[f32], k: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(k >= 1);
+    assert!(!data.is_empty());
+    let mut centroids = Vec::with_capacity(k);
+    centroids.push(data[rng.below(data.len())]);
+    // squared distance to the nearest chosen centroid
+    let mut d2: Vec<f64> = data
+        .iter()
+        .map(|&x| ((x - centroids[0]) as f64).powi(2))
+        .collect();
+    while centroids.len() < k {
+        let idx = rng.sample_weighted(&d2);
+        let c = data[idx];
+        centroids.push(c);
+        for (di, &x) in d2.iter_mut().zip(data) {
+            let nd = ((x - c) as f64).powi(2);
+            if nd < *di {
+                *di = nd;
+            }
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centroids
+}
+
+/// Index of the nearest centroid via binary search over midpoints.
+/// `centroids` must be sorted ascending.
+#[inline]
+pub fn nearest_sorted(centroids: &[f32], x: f32) -> usize {
+    // partition_point gives the count of midpoints <= x; that count is the
+    // Voronoi cell index (eq. 11 with half-open cells).
+    let k = centroids.len();
+    if k == 1 {
+        return 0;
+    }
+    // binary search over implicit midpoints m_i = (c_i + c_{i+1})/2
+    let mut lo = 0usize;
+    let mut hi = k - 1; // cell index range [0, k-1]
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        let boundary = 0.5 * (centroids[mid] + centroids[mid + 1]);
+        if x < boundary {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Voronoi boundaries (midpoints) of a sorted codebook — precompute once,
+/// assign many (§Perf optimization #3).
+pub fn midpoints(centroids: &[f32]) -> Vec<f32> {
+    centroids
+        .windows(2)
+        .map(|p| 0.5 * (p[0] + p[1]))
+        .collect()
+}
+
+/// Cell index from precomputed midpoints: count of boundaries ≤ x
+/// (eq. 11's upper-cell tie-break). For small K a branchless linear scan
+/// beats binary search (no mispredicted branches, autovectorizes); large K
+/// falls back to `partition_point`.
+#[inline]
+pub fn nearest_via_mids(mids: &[f32], x: f32) -> usize {
+    if mids.len() <= 32 {
+        let mut idx = 0usize;
+        for &m in mids {
+            idx += (x >= m) as usize;
+        }
+        idx
+    } else {
+        mids.partition_point(|&m| m <= x)
+    }
+}
+
+/// Data size above which the assignment step fans out across threads.
+/// Spawn cost (~50µs/thread) is paid per Lloyd iteration, so threading
+/// only wins when each pass is ≫ 1ms — i.e. at VGG scale (14M weights),
+/// not at LeNet scale (266k, where the midpoint scan already runs in
+/// ~1.5ms). Measured crossover ≈ 2M (§Perf optimization #4).
+const PAR_MIN_DATA: usize = 2_000_000;
+
+/// One parallel assignment+accumulate pass. Returns (changed, sums, counts).
+fn assign_pass(
+    data: &[f32],
+    mids: &[f32],
+    assignments: &mut [u32],
+    k: usize,
+) -> (bool, Vec<f64>, Vec<usize>) {
+    let nt = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16);
+    if data.len() < PAR_MIN_DATA || nt == 1 {
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        let mut changed = false;
+        for (i, &x) in data.iter().enumerate() {
+            let a = nearest_via_mids(mids, x) as u32;
+            if a != assignments[i] {
+                assignments[i] = a;
+                changed = true;
+            }
+            sums[a as usize] += x as f64;
+            counts[a as usize] += 1;
+        }
+        return (changed, sums, counts);
+    }
+    let chunk = data.len().div_ceil(nt);
+    let results: Vec<(bool, Vec<f64>, Vec<usize>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut arest = &mut assignments[..];
+        let mut drest = data;
+        while !drest.is_empty() {
+            let n = chunk.min(drest.len());
+            let (dhead, dtail) = drest.split_at(n);
+            let (ahead, atail) = arest.split_at_mut(n);
+            drest = dtail;
+            arest = atail;
+            handles.push(s.spawn(move || {
+                let mut sums = vec![0.0f64; k];
+                let mut counts = vec![0usize; k];
+                let mut changed = false;
+                for (i, &x) in dhead.iter().enumerate() {
+                    let a = nearest_via_mids(mids, x) as u32;
+                    if a != ahead[i] {
+                        ahead[i] = a;
+                        changed = true;
+                    }
+                    sums[a as usize] += x as f64;
+                    counts[a as usize] += 1;
+                }
+                (changed, sums, counts)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut sums = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    let mut changed = false;
+    for (c, s, n) in results {
+        changed |= c;
+        for j in 0..k {
+            sums[j] += s[j];
+            counts[j] += n[j];
+        }
+    }
+    (changed, sums, counts)
+}
+
+/// Lloyd iterations until assignments stabilize. `centroids` is used as the
+/// warm start and overwritten with the final (sorted) codebook.
+pub fn kmeans_1d(data: &[f32], centroids: &mut Vec<f32>, max_iter: usize) -> KmeansResult {
+    let k = centroids.len();
+    assert!(k >= 1);
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut assignments: Vec<u32> = vec![u32::MAX; data.len()];
+    let mut iterations = 0;
+    for _ in 0..max_iter {
+        iterations += 1;
+        // assignment step: O(P log K), threaded (§Perf #3/#4)
+        let mids = midpoints(centroids);
+        let (changed, sums, counts) = assign_pass(data, &mids, &mut assignments, k);
+        if !changed && iterations > 1 {
+            iterations -= 1; // final pass only verified convergence
+            break;
+        }
+        // centroid step: empty clusters keep their previous value
+        for j in 0..k {
+            if counts[j] > 0 {
+                centroids[j] = (sums[j] / counts[j] as f64) as f32;
+            }
+        }
+        // means of ordered cells stay ordered, but empty-cluster carry-over
+        // can break ties; re-sort defensively (cheap: K is tiny).
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if !changed {
+            break;
+        }
+    }
+    let wc = assignments
+        .iter()
+        .map(|&a| centroids[a as usize])
+        .collect();
+    KmeansResult { wc, assignments, iterations }
+}
+
+/// Convenience: full k-means from k-means++ init.
+pub fn kmeans(data: &[f32], k: usize, rng: &mut Rng, max_iter: usize) -> (Vec<f32>, KmeansResult) {
+    let mut centroids = kmeans_pp_init(data, k, rng);
+    let res = kmeans_1d(data, &mut centroids, max_iter);
+    (centroids, res)
+}
+
+/// k-means with one centroid **pinned at zero** — the paper's footnote 2:
+/// "we can also achieve *pruning* together with quantization by having one
+/// centroid be fixed to zero". Lloyd iterations where the zero centroid
+/// never moves; weights assigned to it are pruned.
+pub fn kmeans_1d_zero_pinned(
+    data: &[f32],
+    centroids: &mut Vec<f32>,
+    max_iter: usize,
+) -> KmeansResult {
+    let k = centroids.len();
+    assert!(k >= 1);
+    // ensure exactly one entry is 0 (insert if absent, replacing nearest)
+    if !centroids.iter().any(|&c| c == 0.0) {
+        let nearest = (0..k)
+            .min_by(|&a, &b| {
+                centroids[a]
+                    .abs()
+                    .partial_cmp(&centroids[b].abs())
+                    .unwrap()
+            })
+            .unwrap();
+        centroids[nearest] = 0.0;
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut assignments: Vec<u32> = vec![u32::MAX; data.len()];
+    let mut iterations = 0;
+    for _ in 0..max_iter {
+        iterations += 1;
+        let mids = midpoints(centroids);
+        let mut changed = false;
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        for (i, &x) in data.iter().enumerate() {
+            let a = nearest_via_mids(&mids, x) as u32;
+            if a != assignments[i] {
+                assignments[i] = a;
+                changed = true;
+            }
+            sums[a as usize] += x as f64;
+            counts[a as usize] += 1;
+        }
+        if !changed && iterations > 1 {
+            iterations -= 1;
+            break;
+        }
+        for j in 0..k {
+            if centroids[j] != 0.0 && counts[j] > 0 {
+                centroids[j] = (sums[j] / counts[j] as f64) as f32;
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if !changed {
+            break;
+        }
+    }
+    let wc = assignments
+        .iter()
+        .map(|&a| centroids[a as usize])
+        .collect();
+    KmeansResult { wc, assignments, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::distortion;
+    use crate::util::prop::check;
+
+    #[test]
+    fn nearest_sorted_matches_linear_scan() {
+        check("nearest==scan", 200, |g| {
+            let k = g.usize_in(1, 9);
+            let c = g.sorted_codebook(k, -2.0, 2.0);
+            let x = g.f32_in(-3.0, 3.0);
+            let fast = nearest_sorted(&c, x);
+            let slow = (0..k)
+                .min_by(|&a, &b| {
+                    (c[a] - x)
+                        .abs()
+                        .partial_cmp(&(c[b] - x).abs())
+                        .unwrap()
+                })
+                .unwrap();
+            // ties can go either way; accept equal distance
+            assert!(
+                ((c[fast] - x).abs() - (c[slow] - x).abs()).abs() < 1e-6,
+                "x={x} c={c:?} fast={fast} slow={slow}"
+            );
+        });
+    }
+
+    #[test]
+    fn k1_centroid_is_mean() {
+        let data = [1.0f32, 2.0, 3.0, 6.0];
+        let mut c = vec![0.0f32];
+        let res = kmeans_1d(&data, &mut c, 10);
+        assert!((c[0] - 3.0).abs() < 1e-6);
+        assert!(res.wc.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let mut data = Vec::new();
+        for &centre in &[-5.0f32, 0.0, 5.0] {
+            for _ in 0..200 {
+                data.push(centre + rng.normal(0.0, 0.1));
+            }
+        }
+        let (centroids, _res) = kmeans(&data, 3, &mut rng, 100);
+        assert!((centroids[0] + 5.0).abs() < 0.1, "{centroids:?}");
+        assert!(centroids[1].abs() < 0.1, "{centroids:?}");
+        assert!((centroids[2] - 5.0).abs() < 0.1, "{centroids:?}");
+    }
+
+    #[test]
+    fn monotone_distortion_over_iterations() {
+        // each full Lloyd iteration must not increase distortion
+        let mut rng = Rng::new(3);
+        let data: Vec<f32> = (0..2000).map(|_| rng.normal(0.0, 1.0)).collect();
+        let mut centroids = kmeans_pp_init(&data, 8, &mut rng);
+        let mut prev = f64::INFINITY;
+        for _ in 0..20 {
+            let res = kmeans_1d(&data, &mut centroids, 1);
+            let d = distortion(&data, &res.wc);
+            assert!(d <= prev + 1e-9, "distortion increased {prev} -> {d}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn kmeanspp_centroids_come_from_data() {
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..100).map(|_| rng.normal(0.0, 2.0)).collect();
+        let c = kmeans_pp_init(&data, 10, &mut rng);
+        assert_eq!(c.len(), 10);
+        for v in &c {
+            assert!(data.iter().any(|d| (d - v).abs() < 1e-7));
+        }
+        assert!(c.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn more_centroids_never_hurt_distortion() {
+        check("K monotone", 20, |g| {
+            let mut rng = g.rng.split();
+            let data: Vec<f32> = (0..500).map(|_| rng.normal(0.0, 1.0)).collect();
+            let (_, r2) = kmeans(&data, 2, &mut rng, 100);
+            let (_, r8) = kmeans(&data, 8, &mut rng, 100);
+            let d2 = distortion(&data, &r2.wc);
+            let d8 = distortion(&data, &r8.wc);
+            // k-means++ with more K should be clearly better on gaussian data
+            assert!(d8 < d2, "d8={d8} d2={d2}");
+        });
+    }
+
+    #[test]
+    fn assignments_index_final_codebook() {
+        let mut rng = Rng::new(9);
+        let data: Vec<f32> = (0..300).map(|_| rng.normal(0.0, 1.0)).collect();
+        let (centroids, res) = kmeans(&data, 4, &mut rng, 100);
+        for (i, &a) in res.assignments.iter().enumerate() {
+            assert_eq!(res.wc[i], centroids[a as usize]);
+        }
+    }
+
+    #[test]
+    fn converged_state_is_fixed_point() {
+        let mut rng = Rng::new(11);
+        let data: Vec<f32> = (0..1000).map(|_| rng.normal(0.0, 1.0)).collect();
+        let (mut centroids, _) = kmeans(&data, 5, &mut rng, 200);
+        let before = centroids.clone();
+        let res = kmeans_1d(&data, &mut centroids, 200);
+        assert_eq!(res.iterations, 1, "re-running converged kmeans should stop at once");
+        for (a, b) in before.iter().zip(&centroids) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn duplicate_data_more_k_than_distinct_values() {
+        let data = vec![1.0f32; 50];
+        let mut rng = Rng::new(13);
+        let (centroids, res) = kmeans(&data, 4, &mut rng, 50);
+        // all assignments map to a centroid equal to 1.0
+        assert!(res.wc.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        assert!(centroids.iter().any(|&c| (c - 1.0).abs() < 1e-6));
+    }
+}

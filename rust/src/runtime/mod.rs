@@ -1,0 +1,160 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`, produced by `python/compile/aot.py`) and executes them
+//! on the CPU PJRT client. Python never runs here — HLO text is the
+//! interchange format (the image's xla_extension 0.5.1 rejects jax≥0.5's
+//! serialized protos; the text parser reassigns instruction ids).
+
+pub mod manifest;
+pub mod pjrt_backend;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use pjrt_backend::PjrtBackend;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact cache over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client, dir: dir.to_path_buf(), manifest, executables: HashMap::new() })
+    }
+
+    /// Default artifact directory: `$LCQUANT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LCQUANT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if an artifact directory with a manifest exists (used by tests
+    /// to skip PJRT coverage when artifacts haven't been built).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.dir.join(&spec.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+            crate::info!("compiled artifact '{name}' from {path:?}");
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened tuple
+    /// of output literals (aot.py lowers everything with return_tuple=True).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.compile(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal shape {shape:?} != data len {}", data.len()));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal shape {shape:?} != data len {}", data.len()));
+    }
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Read back an f32 literal as a flat vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Read a scalar f32.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .context("scalar read")
+        .map_err(|e| anyhow!("{e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(literal_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn i32_literals() {
+        let l = literal_i32(&[1, 2, 3, 4], &[4]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("LCQUANT_ARTIFACTS", "/tmp/zzz_artifacts");
+        assert_eq!(Engine::default_dir(), PathBuf::from("/tmp/zzz_artifacts"));
+        std::env::remove_var("LCQUANT_ARTIFACTS");
+        assert_eq!(Engine::default_dir(), PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,210 @@
+//! [`PjrtBackend`]: the production L-step backend. Loss/gradients come from
+//! the AOT-compiled JAX graph (L2) executed via PJRT; the coordinator keeps
+//! the parameters and optimizer state in rust, so the LC algorithm,
+//! BinaryConnect, DC and iDC all run unchanged on this backend.
+//!
+//! Artifact conventions (see `python/compile/aot.py`):
+//! * `<model>_grad`: inputs `[w1, b1, …, wL, bL, x, y]` → outputs
+//!   `[loss, dw1, db1, …, dwL, dbL]`, fixed batch size in `meta.batch`.
+//! * `<model>_eval`: same inputs → `[loss, errors]` (errors = count).
+//!
+//! Evaluation walks ⌊n/B⌋ full batches (HLO shapes are static); the ≤B−1
+//! remainder is skipped, which perturbs metrics by <0.1% at our sizes.
+
+use super::{literal_f32, scalar_f32, to_vec_f32, Engine};
+use crate::coordinator::{Backend, FlatGrads};
+use crate::data::batcher::Batcher;
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+pub struct PjrtBackend {
+    engine: Engine,
+    grad_name: String,
+    eval_name: String,
+    w: Vec<Vec<f32>>,
+    b: Vec<Vec<f32>>,
+    w_shapes: Vec<Vec<usize>>,
+    batch: usize,
+    n_classes: usize,
+    pub train: Dataset,
+    pub test: Option<Dataset>,
+    batcher: Batcher,
+}
+
+impl PjrtBackend {
+    /// Build from an engine + artifact pair. Parameters are initialized
+    /// Glorot-uniform (same scheme as the native backend).
+    pub fn new(
+        engine: Engine,
+        model: &str,
+        train: Dataset,
+        test: Option<Dataset>,
+        seed: u64,
+    ) -> Result<PjrtBackend> {
+        let grad_name = format!("{model}_grad");
+        let eval_name = format!("{model}_eval");
+        let spec = engine
+            .manifest
+            .artifacts
+            .get(&grad_name)
+            .ok_or_else(|| anyhow!("manifest lacks '{grad_name}'"))?;
+        let n_inputs = spec.inputs.len();
+        if n_inputs < 4 || (n_inputs - 2) % 2 != 0 {
+            return Err(anyhow!("'{grad_name}' input arity {n_inputs} not 2L+2"));
+        }
+        let n_layers = (n_inputs - 2) / 2;
+        let batch = spec.meta.get("batch").copied().unwrap_or(128.0) as usize;
+        let mut rng = Rng::new(seed);
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        let mut w_shapes = Vec::new();
+        for l in 0..n_layers {
+            let ws = &spec.inputs[2 * l];
+            let bs = &spec.inputs[2 * l + 1];
+            if ws.shape.len() != 2 {
+                return Err(anyhow!("weight input {} not rank-2", ws.name));
+            }
+            let (fan_in, fan_out) = (ws.shape[0], ws.shape[1]);
+            let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+            let mut wl = vec![0.0f32; ws.numel()];
+            for v in wl.iter_mut() {
+                *v = rng.uniform_in(-limit, limit);
+            }
+            w.push(wl);
+            b.push(vec![0.0f32; bs.numel()]);
+            w_shapes.push(ws.shape.clone());
+        }
+        let n_classes = train.n_classes;
+        let batcher = Batcher::new(train.len(), batch.min(train.len()), seed);
+        Ok(PjrtBackend {
+            engine,
+            grad_name,
+            eval_name,
+            w,
+            b,
+            w_shapes,
+            batch,
+            n_classes,
+            train,
+            test,
+            batcher,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(self.w.len() * 2);
+        for l in 0..self.w.len() {
+            lits.push(literal_f32(&self.w[l], &self.w_shapes[l])?);
+            lits.push(literal_f32(&self.b[l], &[self.b[l].len()])?);
+        }
+        Ok(lits)
+    }
+
+    fn batch_literals(&self, x: &Mat, y: &Mat) -> Result<(xla::Literal, xla::Literal)> {
+        Ok((
+            literal_f32(&x.data, &[x.rows, x.cols])?,
+            literal_f32(&y.data, &[y.rows, y.cols])?,
+        ))
+    }
+
+    /// Evaluate (loss, error%) over ⌊n/B⌋ full batches of a dataset.
+    fn eval_dataset(&mut self, which_test: bool) -> Result<(f32, f32)> {
+        let data = if which_test {
+            self.test.as_ref().expect("no test set")
+        } else {
+            &self.train
+        };
+        let b = self.batch;
+        let n_full = data.len() / b;
+        assert!(n_full > 0, "dataset smaller than artifact batch size");
+        let dim = data.dim();
+        let n_classes = self.n_classes;
+        // materialize batches first (borrow gymnastics around engine)
+        let mut batches = Vec::with_capacity(n_full);
+        for bi in 0..n_full {
+            let mut x = Mat::zeros(b, dim);
+            let mut y = Mat::zeros(b, n_classes);
+            for r in 0..b {
+                let i = bi * b + r;
+                x.row_mut(r).copy_from_slice(data.images.row(i));
+                y[(r, data.labels[i] as usize)] = 1.0;
+            }
+            batches.push((x, y));
+        }
+        let mut loss_sum = 0.0f64;
+        let mut err_sum = 0.0f64;
+        for (x, y) in &batches {
+            let (xl, yl) = self.batch_literals(x, y)?;
+            let mut inputs = self.param_literals()?;
+            inputs.push(xl);
+            inputs.push(yl);
+            let out = self.engine.execute(&self.eval_name, &inputs)?;
+            loss_sum += scalar_f32(&out[0])? as f64;
+            err_sum += scalar_f32(&out[1])? as f64; // error count in batch
+        }
+        Ok((
+            (loss_sum / n_full as f64) as f32,
+            (100.0 * err_sum / (n_full * b) as f64) as f32,
+        ))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn n_layers(&self) -> usize {
+        self.w.len()
+    }
+    fn weights(&self) -> Vec<Vec<f32>> {
+        self.w.clone()
+    }
+    fn set_weights(&mut self, w: &[Vec<f32>]) {
+        assert_eq!(w.len(), self.w.len());
+        for (dst, src) in self.w.iter_mut().zip(w) {
+            dst.copy_from_slice(src);
+        }
+    }
+    fn biases(&self) -> Vec<Vec<f32>> {
+        self.b.clone()
+    }
+    fn set_biases(&mut self, b: &[Vec<f32>]) {
+        for (dst, src) in self.b.iter_mut().zip(b) {
+            dst.copy_from_slice(src);
+        }
+    }
+    fn next_loss_grads(&mut self) -> (f32, FlatGrads) {
+        let batch = self.batcher.next_batch(&self.train);
+        let (xl, yl) = self
+            .batch_literals(&batch.x, &batch.y)
+            .expect("batch literals");
+        let mut inputs = self.param_literals().expect("param literals");
+        inputs.push(xl);
+        inputs.push(yl);
+        let out = self
+            .engine
+            .execute(&self.grad_name, &inputs)
+            .expect("grad artifact execution");
+        let loss = scalar_f32(&out[0]).expect("loss scalar");
+        let mut dw = Vec::with_capacity(self.w.len());
+        let mut db = Vec::with_capacity(self.w.len());
+        for l in 0..self.w.len() {
+            dw.push(to_vec_f32(&out[1 + 2 * l]).expect("dw"));
+            db.push(to_vec_f32(&out[2 + 2 * l]).expect("db"));
+        }
+        (loss, FlatGrads { dw, db })
+    }
+    fn eval_train(&mut self) -> (f32, f32) {
+        self.eval_dataset(false).expect("eval train")
+    }
+    fn eval_test(&mut self) -> Option<(f32, f32)> {
+        if self.test.is_some() {
+            Some(self.eval_dataset(true).expect("eval test"))
+        } else {
+            None
+        }
+    }
+}

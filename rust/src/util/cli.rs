@@ -1,0 +1,146 @@
+//! Hand-rolled CLI argument parsing (`clap` is not in the vendored crate
+//! set). Supports `subcommand --flag value --switch positional` style.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare
+/// `--switch` flags and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // --key value form (value must not look like a flag)
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        args.options.insert(name.to_string(), v);
+                    }
+                    _ => args.switches.push(name.to_string()),
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--ks 2,4,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("experiment fig9 --k 4 --out results");
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["fig9"]);
+        assert_eq!(a.get("k"), Some("4"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn equals_form_and_switches() {
+        let a = parse("lc --mu0=0.001 --verbose --seed 9");
+        assert_eq!(a.get_f64("mu0", 0.0), 0.001);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_u64("seed", 0), 9);
+    }
+
+    #[test]
+    fn switch_before_option() {
+        let a = parse("run --fast --n 10");
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("n", 0), 10);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("x --ks 2,4,8,64");
+        assert_eq!(a.get_usize_list("ks", &[]), vec![2, 4, 8, 64]);
+        assert_eq!(a.get_usize_list("hs", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("cmd --lr -0.5");
+        assert_eq!(a.get_f64("lr", 0.0), -0.5);
+    }
+}

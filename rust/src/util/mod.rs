@@ -1,0 +1,10 @@
+//! Foundation utilities built from scratch (the vendored crate set contains
+//! only `xla` + `anyhow`, so PRNG, JSON, CLI parsing, logging and the
+//! property-test harness are all implemented here).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod timer;

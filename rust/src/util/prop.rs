@@ -1,0 +1,118 @@
+//! A miniature property-testing harness (proptest is not in the vendored
+//! crate set). Deterministic: every case derives from a fixed seed, and a
+//! failing case reports its index + seed so it can be replayed.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! use lcquant::util::prop::{check, Gen};
+//! check("abs is non-negative", 256, |g: &mut Gen| {
+//!     let x = g.f32_in(-100.0, 100.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.uniform()
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 0
+    }
+    /// Vector of f32 from N(0, std), occasionally spiked with outliers —
+    /// good stress input for quantizers.
+    pub fn weights(&mut self, max_len: usize, std: f32) -> Vec<f32> {
+        let n = self.usize_in(1, max_len);
+        (0..n)
+            .map(|_| {
+                let v = self.rng.normal(0.0, std);
+                if self.rng.below(50) == 0 {
+                    v * 20.0 // outlier
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+    /// Strictly increasing codebook of size k within [lo, hi].
+    pub fn sorted_codebook(&mut self, k: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let mut c: Vec<f32> = (0..k).map(|_| self.f32_in(lo, hi)).collect();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        c.dedup_by(|a, b| (*a - *b).abs() < 1e-6);
+        while c.len() < k {
+            let last = *c.last().unwrap();
+            c.push(last + 0.1 + 0.1 * c.len() as f32);
+        }
+        c
+    }
+}
+
+/// Run `cases` random cases of the property `f`. Panics (with replay info)
+/// on the first failing case.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+    const SEED: u64 = 0x5eed_1c_0ffee;
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng::new(SEED.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15))),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed base {SEED:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 200, |g| {
+            let n = g.usize_in(3, 9);
+            assert!((3..=9).contains(&n));
+            let x = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&x));
+            let cb = g.sorted_codebook(4, -1.0, 1.0);
+            assert_eq!(cb.len(), 4);
+            assert!(cb.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("always fails eventually", 50, |g| {
+            assert!(g.case < 10);
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<f32> = vec![];
+        check("collect", 5, |g| {
+            first.push(g.f32_in(0.0, 1.0));
+        });
+        let mut second: Vec<f32> = vec![];
+        check("collect", 5, |g| {
+            second.push(g.f32_in(0.0, 1.0));
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,122 @@
+//! Timing helpers for the bench harness (criterion is not vendored; the
+//! `benches/` binaries use [`bench`] with warmup + trimmed statistics).
+
+use std::time::Instant;
+
+/// A simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Statistics over a set of timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}  median {:>12}  mean {:>12}  min {:>12}",
+            self.name,
+            format!("n={}", self.iters),
+            human_time(self.median_s),
+            human_time(self.mean_s),
+            human_time(self.min_s),
+        )
+    }
+
+    /// Throughput helper: items per second at the median time.
+    pub fn per_sec(&self, items: usize) -> f64 {
+        items as f64 / self.median_s
+    }
+}
+
+/// Format seconds in a human unit.
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark `f` : warm up, then time `iters` runs and report statistics.
+/// The closure returns a value that is passed to `std::hint::black_box` to
+/// keep the optimizer honest.
+pub fn bench<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> BenchStats {
+    // Warmup: at least one run, up to ~100ms.
+    let warm = Timer::start();
+    loop {
+        std::hint::black_box(f());
+        if warm.elapsed_s() > 0.1 {
+            break;
+        }
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.elapsed_s());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_s = times[times.len() / 2];
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        median_s,
+        mean_s,
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop-spin", 10, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert!(s.median_s > 0.0);
+        assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(5e-9).ends_with("ns"));
+        assert!(human_time(5e-6).ends_with("µs"));
+        assert!(human_time(5e-3).ends_with("ms"));
+        assert!(human_time(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration tests over the PJRT path: artifact loading, numeric
+//! agreement between the AOT JAX graph and the native rust implementation,
+//! and the LC algorithm running end-to-end on the PJRT backend.
+//!
+//! These tests SKIP (pass trivially with a note) when `artifacts/` has not
+//! been built — run `make artifacts` first for full coverage.
+
+use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+use lcquant::coordinator::{lc_quantize, Backend, LcConfig, MuSchedule, NativeBackend, PenaltyMode};
+use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::nn::sgd::ClippedLrSchedule;
+use lcquant::nn::{Mlp, MlpSpec};
+use lcquant::quant::Scheme;
+use lcquant::runtime::{Engine, PjrtBackend};
+use lcquant::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // cargo test runs from the workspace root
+    let dir = Engine::default_dir();
+    if Engine::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn paired_backends(seed: u64) -> Option<(NativeBackend, PjrtBackend)> {
+    let dir = artifacts_dir()?;
+    let mut data = SynthMnist::generate(640, seed);
+    data.subtract_mean(None);
+    let engine = Engine::open(&dir).expect("engine");
+    let pjrt =
+        PjrtBackend::new(engine, "lenet300", data.clone(), None, seed).expect("pjrt backend");
+    let batch = pjrt.batch_size();
+    let net = Mlp::new(&MlpSpec::lenet300(), seed);
+    let mut native = NativeBackend::new(net, data, None, batch, seed);
+    // force identical parameters
+    let mut pjrt = pjrt;
+    native.set_weights(&pjrt.weights());
+    native.set_biases(&pjrt.biases());
+    Some((native, pjrt))
+}
+
+#[test]
+fn grad_step_matches_native_backend() {
+    let Some((mut native, mut pjrt)) = paired_backends(31) else {
+        return;
+    };
+    // identical batcher seeds → identical minibatch order
+    let (loss_n, g_n) = native.next_loss_grads();
+    let (loss_p, g_p) = pjrt.next_loss_grads();
+    assert!(
+        (loss_n - loss_p).abs() < 1e-4 * loss_n.abs().max(1.0),
+        "losses differ: native {loss_n} pjrt {loss_p}"
+    );
+    for l in 0..g_n.dw.len() {
+        let max_dev = g_n.dw[l]
+            .iter()
+            .zip(&g_p.dw[l])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_dev < 1e-4, "layer {l} dw max dev {max_dev}");
+        let max_dev_b = g_n.db[l]
+            .iter()
+            .zip(&g_p.db[l])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_dev_b < 1e-4, "layer {l} db max dev {max_dev_b}");
+    }
+}
+
+#[test]
+fn eval_matches_native_backend() {
+    let Some((mut native, mut pjrt)) = paired_backends(37) else {
+        return;
+    };
+    let (ln, en) = native.eval_train();
+    let (lp, ep) = pjrt.eval_train();
+    // pjrt walks ⌊n/B⌋ full batches = all 640 samples here
+    assert!((ln - lp).abs() < 1e-4 * ln.max(1.0), "loss {ln} vs {lp}");
+    assert!((en - ep).abs() < 0.5, "err {en}% vs {ep}%");
+}
+
+#[test]
+fn sgd_training_descends_on_pjrt() {
+    let Some((_, mut pjrt)) = paired_backends(41) else {
+        return;
+    };
+    let (l0, _) = pjrt.eval_train();
+    let mut opt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.9);
+    run_sgd(&mut pjrt, &mut opt, 30, 0.1, None);
+    let (l1, _) = pjrt.eval_train();
+    assert!(l1 < l0 * 0.9, "pjrt SGD did not descend: {l0} -> {l1}");
+}
+
+#[test]
+fn lc_runs_end_to_end_on_pjrt_backend() {
+    let Some((_, mut pjrt)) = paired_backends(43) else {
+        return;
+    };
+    // brief reference training then a short LC run at K=2
+    let mut opt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.9);
+    run_sgd(&mut pjrt, &mut opt, 40, 0.1, None);
+    let cfg = LcConfig {
+        scheme: Scheme::AdaptiveCodebook { k: 2 },
+        mu: MuSchedule::new(1e-2, 1.6),
+        iterations: 6,
+        l_steps: 10,
+        lr: ClippedLrSchedule { eta0: 0.05, decay: 0.98 },
+        momentum: 0.9,
+        mode: PenaltyMode::AugmentedLagrangian,
+        tol: 0.0,
+        seed: 1,
+        eval_every: 0,
+        n_weight_samples: 0,
+    };
+    let res = lc_quantize(&mut pjrt, &cfg);
+    assert!(res.train_loss.is_finite());
+    for (wl, cb) in res.wc.iter().zip(&res.codebooks) {
+        assert_eq!(cb.len(), 2);
+        for v in wl {
+            assert!(cb.iter().any(|c| (c - v).abs() < 1e-6));
+        }
+    }
+}
+
+#[test]
+fn linreg_lstep_artifact_matches_cholesky() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    use lcquant::data::superres::SuperResData;
+    use lcquant::experiments::fig7_linreg::LinRegLc;
+    use lcquant::linalg::Mat;
+    use lcquant::runtime::{literal_f32, to_vec_f32};
+
+    let mut engine = Engine::open(&dir).expect("engine");
+    let data = SuperResData::generate(300, 0.05, 7);
+    let mut lr = LinRegLc::new(&data);
+    let target = Mat::zeros(lr.d_out, lr.d_in);
+    let mu = 0.5f32;
+    lr.solve_penalized(&target, mu).unwrap();
+    let rust_w = lr.w.clone();
+
+    // assemble the same system the rust Cholesky solved (target = 0)
+    let d = lr.d_in + 1;
+    let (a, rhs) = lr.assemble_system(&target, mu);
+    let eye = Mat::eye(d);
+    let out = engine
+        .execute(
+            "linreg_lstep",
+            &[
+                literal_f32(&a.data, &[d, d]).unwrap(),
+                literal_f32(&rhs.data, &[lr.d_out, d]).unwrap(),
+                literal_f32(&eye.data, &[d, d]).unwrap(),
+            ],
+        )
+        .expect("linreg artifact");
+    let w_pjrt = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(w_pjrt.len(), rust_w.data.len());
+    let mut max_dev = 0.0f32;
+    for (a, b) in rust_w.data.iter().zip(&w_pjrt) {
+        max_dev = max_dev.max((a - b).abs());
+    }
+    assert!(
+        max_dev < 5e-3,
+        "linreg L-step: rust-Cholesky vs AOT-solve max dev {max_dev}"
+    );
+}
