@@ -1,0 +1,38 @@
+# Build / verify entry points. `make tier1` is the CI gate (ROADMAP.md):
+# release build, tests, bench compilation, and rustfmt check.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: tier1 build test bench-build fmt-check ci artifacts clean
+
+tier1: build test bench-build fmt-check
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Benches are plain binaries (harness = false); --no-run keeps them
+# compiling in tier-1 without paying their runtime.
+bench-build:
+	$(CARGO) bench --no-run
+
+fmt-check:
+	@if $(CARGO) fmt --version >/dev/null 2>&1; then \
+		$(CARGO) fmt -- --check; \
+	else \
+		echo "rustfmt not installed; skipping fmt-check"; \
+	fi
+
+ci: tier1
+
+# AOT-lower the JAX graph to HLO artifacts for the PJRT runtime
+# (requires jax; the rust side then needs `--features pjrt` with real
+# xla-rs bindings, see vendor/xla/README.md).
+artifacts:
+	$(PYTHON) python/compile/aot.py
+
+clean:
+	$(CARGO) clean

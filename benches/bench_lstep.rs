@@ -8,6 +8,7 @@ use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
 use lcquant::coordinator::{Backend, NativeBackend};
 use lcquant::data::synth_mnist::SynthMnist;
 use lcquant::nn::{Mlp, MlpSpec};
+#[cfg(feature = "pjrt")]
 use lcquant::util::rng::Rng;
 use lcquant::util::timer::bench;
 
@@ -36,22 +37,27 @@ fn main() {
     });
     println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
 
-    // PJRT backend, if artifacts were built
-    let dir = lcquant::runtime::Engine::default_dir();
-    if lcquant::runtime::Engine::available(&dir) {
-        let engine = lcquant::runtime::Engine::open(&dir).expect("engine");
-        let mut rng = Rng::new(2);
-        let (train, _) = data.split(0.1, &mut rng);
-        let mut pjrt = lcquant::runtime::PjrtBackend::new(engine, "lenet300", train, None, 3)
-            .expect("pjrt backend");
-        // warm the executable cache
-        let _ = pjrt.next_loss_grads();
-        let mut popt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.95);
-        let s = bench("pjrt L-step (batch from artifact)", 30, || {
-            run_sgd(&mut pjrt, &mut popt, 1, 0.05, None)
-        });
-        println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
-    } else {
-        println!("(artifacts not built; skipping PJRT L-step — run `make artifacts`)");
+    // PJRT backend, if compiled in and artifacts were built
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = lcquant::runtime::Engine::default_dir();
+        if lcquant::runtime::Engine::available(&dir) {
+            let engine = lcquant::runtime::Engine::open(&dir).expect("engine");
+            let mut rng = Rng::new(2);
+            let (train, _) = data.split(0.1, &mut rng);
+            let mut pjrt = lcquant::runtime::PjrtBackend::new(engine, "lenet300", train, None, 3)
+                .expect("pjrt backend");
+            // warm the executable cache
+            let _ = pjrt.next_loss_grads();
+            let mut popt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.95);
+            let s = bench("pjrt L-step (batch from artifact)", 30, || {
+                run_sgd(&mut pjrt, &mut popt, 1, 0.05, None)
+            });
+            println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
+        } else {
+            println!("(artifacts not built; skipping PJRT L-step — run `make artifacts`)");
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the 'pjrt' feature; skipping PJRT L-step)");
 }

@@ -1,0 +1,170 @@
+//! Serving-path benchmarks, LeNet300 shapes (784-300-100-10):
+//!
+//! * packed-LUT forward vs dense f32 GEMM forward at batch 1 / 32 / 256,
+//!   across the codebook families (binary sign path, adaptive K=4/K=64
+//!   grouped path, pow2 shift path) — the §2.1 lookup-vs-multiply claim;
+//! * micro-batching server throughput under concurrent single-image load;
+//! * the PJRT artifact for comparison when built with `--features pjrt`
+//!   and `make artifacts`.
+
+use lcquant::linalg::Mat;
+use lcquant::nn::MlpSpec;
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{LutEngine, MicroBatchServer, PackedModel, Registry, ServerConfig};
+use lcquant::util::rng::Rng;
+use lcquant::util::timer::bench;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Quantize random LeNet300-shaped weights (no training: the bench cares
+/// about FLOPs and memory traffic, not accuracy).
+fn packed_lenet300(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec::lenet300();
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.1)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.05)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+fn main() {
+    println!("== bench_serve: packed-LUT inference vs dense GEMM (LeNet300) ==");
+    let variants: Vec<(&str, Scheme)> = vec![
+        ("binary", Scheme::BinaryScale),
+        ("adaptive-k4", Scheme::AdaptiveCodebook { k: 4 }),
+        ("adaptive-k64", Scheme::AdaptiveCodebook { k: 64 }),
+        ("pow2-c6", Scheme::PowersOfTwo { c: 6 }),
+    ];
+    let mut rng = Rng::new(3);
+    let models: Vec<PackedModel> = variants
+        .iter()
+        .enumerate()
+        .map(|(i, (name, scheme))| packed_lenet300(name, scheme, 10 + i as u64))
+        .collect();
+
+    for batch in [1usize, 32, 256] {
+        let mut x = Mat::zeros(batch, 784);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        let iters = if batch >= 256 { 12 } else { 30 };
+
+        // dense baseline: same weights expanded to f32, Mlp::forward
+        let dense = models[0].to_mlp();
+        let sd = bench(&format!("dense f32 GEMM        batch={batch}"), iters, || {
+            dense.forward(&x, false, None)
+        });
+        println!("{}  ({:.0} img/s)", sd.report(), sd.per_sec(batch));
+
+        for model in &models {
+            let engine = LutEngine::new(model).unwrap();
+            let s = bench(
+                &format!("packed-LUT {:<11} batch={batch}", model.name),
+                iters,
+                || engine.forward(&x),
+            );
+            println!(
+                "{}  ({:.0} img/s, {:.2}x dense time, ×{:.1} on disk)",
+                s.report(),
+                s.per_sec(batch),
+                s.median_s / sd.median_s,
+                model.compression_ratio(),
+            );
+        }
+        println!();
+    }
+
+    // ---- micro-batching server throughput -----------------------------
+    println!("== micro-batch server throughput (binary model, 8 client threads) ==");
+    let mut registry = Registry::new();
+    registry.insert(models[0].clone()).unwrap();
+    let registry = Arc::new(registry);
+    for (max_batch, max_wait_ms) in [(1usize, 0u64), (64, 2)] {
+        let server = MicroBatchServer::start(
+            Arc::clone(&registry),
+            ServerConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+        );
+        let n_threads = 8usize;
+        let per_thread = 128usize;
+        let t = lcquant::util::timer::Timer::start();
+        std::thread::scope(|s| {
+            for th in 0..n_threads {
+                let client = server.client();
+                s.spawn(move || {
+                    let mut trng = Rng::new(100 + th as u64);
+                    let mut x = vec![0.0f32; 784];
+                    for _ in 0..per_thread {
+                        trng.fill_normal(&mut x, 0.0, 1.0);
+                        client.infer("binary", x.clone()).expect("infer");
+                    }
+                });
+            }
+        });
+        let elapsed = t.elapsed_s();
+        let mut server = server;
+        server.stop();
+        let stats = server.stats();
+        println!(
+            "max_batch={max_batch:<3} wait={max_wait_ms}ms: {:>6.0} req/s  p50 {:.2}ms  \
+             p99 {:.2}ms  mean batch {:.1}",
+            stats.requests as f64 / elapsed,
+            stats.p50_ms,
+            stats.p99_ms,
+            stats.mean_batch,
+        );
+    }
+
+    // ---- PJRT artifact, when available --------------------------------
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = lcquant::runtime::Engine::default_dir();
+        if lcquant::runtime::Engine::available(&dir) {
+            if let Err(e) = bench_pjrt(&dir) {
+                println!("(pjrt bench failed: {e})");
+            }
+        } else {
+            println!("(artifacts not built; skipping PJRT comparison — run `make artifacts`)");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the 'pjrt' feature; skipping PJRT comparison)");
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(dir: &std::path::Path) -> anyhow::Result<()> {
+    use anyhow::anyhow;
+    use lcquant::runtime::{literal_f32, literal_i32, Engine};
+    let mut engine = Engine::open(dir)?;
+    let spec_art = engine
+        .manifest
+        .artifacts
+        .get("lenet300_quantized_fwd")
+        .ok_or_else(|| anyhow!("artifact lenet300_quantized_fwd missing"))?
+        .clone();
+    let batch = spec_art.meta.get("batch").copied().unwrap_or(128.0) as usize;
+    let k = spec_art.meta.get("k").copied().unwrap_or(2.0) as usize;
+    let spec = MlpSpec::lenet300();
+    let mut rng = Rng::new(5);
+    let mut x = vec![0.0f32; batch * 784];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut inputs: Vec<xla::Literal> = vec![literal_f32(&x, &[batch, 784])?];
+    let model = packed_lenet300("pjrt", &Scheme::AdaptiveCodebook { k }, 77);
+    for (l, layer) in model.layers.iter().enumerate() {
+        let ids: Vec<i32> = layer.unpack_assignments().iter().map(|&a| a as i32).collect();
+        inputs.push(literal_i32(&ids, &[spec.sizes[l], spec.sizes[l + 1]])?);
+        inputs.push(literal_f32(&layer.codebook, &[k])?);
+        inputs.push(literal_f32(&layer.bias, &[layer.bias.len()])?);
+    }
+    engine.compile("lenet300_quantized_fwd")?;
+    let s = bench(&format!("pjrt artifact          batch={batch}"), 20, || {
+        engine.execute("lenet300_quantized_fwd", &inputs).expect("execute")
+    });
+    println!("{}  ({:.0} img/s)", s.report(), s.per_sec(batch));
+    Ok(())
+}

@@ -1,0 +1,15 @@
+#!/bin/sh
+# Tier-1 verification: release build + tests + bench compilation + fmt.
+# Equivalent to `make tier1`; kept as a script for environments without make.
+set -eu
+
+cargo build --release
+cargo test -q
+cargo bench --no-run
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt -- --check
+else
+    echo "rustfmt not installed; skipping fmt check"
+fi
+
+echo "tier1 OK"

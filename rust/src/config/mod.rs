@@ -19,7 +19,30 @@ pub struct RunConfig {
     pub data: DataConfig,
     pub train: TrainConfig,
     pub lc: LcConfig,
+    pub serve: ServeSettings,
     pub seed: u64,
+}
+
+/// Micro-batching knobs for the serving subsystem (`"serve"` section).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSettings {
+    pub max_batch: usize,
+    pub max_wait_ms: f64,
+}
+
+impl Default for ServeSettings {
+    fn default() -> ServeSettings {
+        ServeSettings { max_batch: 64, max_wait_ms: 2.0 }
+    }
+}
+
+impl ServeSettings {
+    pub fn to_server_config(&self) -> crate::serve::ServerConfig {
+        crate::serve::ServerConfig {
+            max_batch: self.max_batch,
+            max_wait: std::time::Duration::from_secs_f64(self.max_wait_ms / 1e3),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -48,6 +71,7 @@ impl Default for RunConfig {
             data: DataConfig { kind: "synth_mnist".into(), n: 2000, test_frac: 0.1 },
             train: TrainConfig { ref_steps: 800, batch: 128, lr0: 0.1, lr_decay: 0.99, momentum: 0.95 },
             lc: LcConfig::default(),
+            serve: ServeSettings::default(),
             seed: 42,
         }
     }
@@ -174,12 +198,21 @@ impl RunConfig {
             None => d.lc.clone(),
         };
 
+        let serve = match j.get("serve") {
+            Some(n) => ServeSettings {
+                max_batch: get_u(n, "max_batch", d.serve.max_batch),
+                max_wait_ms: get_f(n, "max_wait_ms", d.serve.max_wait_ms),
+            },
+            None => d.serve.clone(),
+        };
+
         Ok(RunConfig {
             name: get_s(&j, "name", &d.name).to_string(),
             net,
             data,
             train,
             lc,
+            serve,
             seed: get_u(&j, "seed", d.seed as usize) as u64,
         })
     }
@@ -235,6 +268,18 @@ mod tests {
         let c = RunConfig::from_json("{}").unwrap();
         assert_eq!(c.net.sizes, vec![784, 300, 100, 10]);
         assert_eq!(c.lc.iterations, 30);
+        assert_eq!(c.serve, ServeSettings::default());
+    }
+
+    #[test]
+    fn serve_section_parses() {
+        let c = RunConfig::from_json(r#"{"serve": {"max_batch": 8, "max_wait_ms": 0.5}}"#)
+            .unwrap();
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.max_wait_ms, 0.5);
+        let sc = c.serve.to_server_config();
+        assert_eq!(sc.max_batch, 8);
+        assert_eq!(sc.max_wait, std::time::Duration::from_micros(500));
     }
 
     #[test]

@@ -103,6 +103,13 @@ pub struct LcResult {
     pub wc: Vec<Vec<f32>>,
     /// Final codebook per layer.
     pub codebooks: Vec<Vec<f32>>,
+    /// Per-layer codebook indices from the final C step
+    /// (`wc[l][i] == codebooks[l][assignments[l][i]]`). This is the low-bit
+    /// representation [`crate::serve`] packs to disk — kept so packing never
+    /// re-runs nearest-centroid search over every weight.
+    pub assignments: Vec<Vec<u32>>,
+    /// The scheme the run used (recorded for packaging/serving).
+    pub scheme: Scheme,
     /// Continuous weights at termination.
     pub w: Vec<Vec<f32>>,
     pub history: Vec<LcRecord>,
@@ -148,10 +155,12 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
     let mut w = backend.weights();
     let mut wc: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
     let mut codebooks: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    let mut assignments: Vec<Vec<u32>> = Vec::with_capacity(n_layers);
     for (l, q) in quantizers.iter_mut().enumerate() {
         let out = q.compress(&w[l]);
         wc.push(out.wc);
         codebooks.push(out.codebook);
+        assignments.push(out.assignments);
     }
     let mut lambda: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
 
@@ -187,6 +196,7 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
             let out = quantizers[l].compress(&shifted[l]);
             wc[l] = out.wc;
             codebooks[l] = out.codebook;
+            assignments[l] = out.assignments;
             kmeans_iters.push(out.iterations);
         }
 
@@ -239,7 +249,17 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
     // Final: adopt the quantized weights (the solution is w_C = Δ(C, Z)).
     let (train_loss, train_err, test_err) = eval_quantized(backend, &w, &wc);
     backend.set_weights(&wc);
-    LcResult { wc, codebooks, w, history, train_loss, train_err, test_err }
+    LcResult {
+        wc,
+        codebooks,
+        assignments,
+        scheme: cfg.scheme.clone(),
+        w,
+        history,
+        train_loss,
+        train_err,
+        test_err,
+    }
 }
 
 #[cfg(test)]
@@ -287,6 +307,15 @@ mod tests {
         // backend ends up holding the quantized weights
         let bw = b.weights();
         assert_eq!(bw, res.wc);
+        // the recorded assignments reproduce wc exactly (what `serve` packs)
+        assert_eq!(res.scheme, Scheme::AdaptiveCodebook { k: 4 });
+        assert_eq!(res.assignments.len(), res.wc.len());
+        for l in 0..res.wc.len() {
+            assert_eq!(res.assignments[l].len(), res.wc[l].len());
+            for (i, &a) in res.assignments[l].iter().enumerate() {
+                assert_eq!(res.wc[l][i], res.codebooks[l][a as usize]);
+            }
+        }
     }
 
     #[test]

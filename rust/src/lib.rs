@@ -6,31 +6,56 @@
 //!
 //! The library is organised as a three-layer stack:
 //!
-//! * **L3 (this crate)** — the paper's coordination contribution: the
-//!   augmented-Lagrangian LC loop ([`coordinator`]), the C-step quantization
-//!   operators ([`quant`]), the DC / iDC / BinaryConnect baselines, the
-//!   experiment harness ([`experiments`]) and every substrate they need
-//!   ([`linalg`], [`nn`], [`data`], [`util`], [`config`], [`metrics`]).
+//! * **L3 (this crate)** — the paper's coordination contribution *and its
+//!   deployment story*: the augmented-Lagrangian LC loop ([`coordinator`]),
+//!   the C-step quantization operators ([`quant`]), the DC / iDC /
+//!   BinaryConnect baselines, the experiment harness ([`experiments`]),
+//!   the **serving subsystem** ([`serve`]: packed `.lcq` model artifacts
+//!   at ⌈log₂K⌉ bits/weight, a LUT inference engine that never expands
+//!   dense weights, a micro-batching server and a multi-model registry),
+//!   and every substrate they need ([`linalg`], [`nn`], [`data`],
+//!   [`util`], [`config`], [`metrics`]).
 //! * **L2** — a JAX training graph (`python/compile/model.py`), lowered once
-//!   (AOT) to HLO text and executed from rust via PJRT ([`runtime`]).
+//!   (AOT) to HLO text and executed from rust via PJRT (the `runtime`
+//!   module, behind the `pjrt` cargo feature; stubbed unless real xla-rs
+//!   bindings are linked — see `vendor/xla/README.md`).
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) for the codebook
 //!   matmul hot-spot, validated against a pure-jnp oracle at build time.
 //!
 //! Python never runs on the request path: after `make artifacts` the rust
 //! binary is self-contained.
 //!
-//! ## Quickstart
+//! ## Quickstart: quantize → pack → serve
 //!
 //! ```no_run
-//! use lcquant::coordinator::{LcConfig, lc_quantize};
-//! use lcquant::nn::{Mlp, MlpSpec};
+//! use lcquant::coordinator::{lc_quantize, Backend, LcConfig, NativeBackend};
 //! use lcquant::data::synth_mnist::SynthMnist;
+//! use lcquant::nn::{Mlp, MlpSpec};
 //! use lcquant::quant::Scheme;
+//! use lcquant::serve::{MicroBatchServer, PackedModel, Registry, ServerConfig};
+//! use std::sync::Arc;
 //!
-//! let data = SynthMnist::generate(2_000, 42);
-//! let mut net = Mlp::new(&MlpSpec::lenet300(), 1);
-//! // ... train the reference net, then:
+//! # fn main() -> anyhow::Result<()> {
+//! let mut data = SynthMnist::generate(2_000, 42);
+//! data.subtract_mean(None);
+//! let spec = MlpSpec::lenet300();
+//! let net = Mlp::new(&spec, 1);
+//! let mut backend = NativeBackend::new(net, data, None, 128, 1);
+//! // ... train the reference net (sgd_driver::run_sgd), then compress:
 //! let cfg = LcConfig { scheme: Scheme::AdaptiveCodebook { k: 2 }, ..LcConfig::default() };
+//! let lc = lc_quantize(&mut backend, &cfg);
+//!
+//! // pack the final C step (log2(K) bits/weight + codebook, paper §5)
+//! let model = PackedModel::from_lc("lenet300-k2", &spec, &lc, &backend.biases())?;
+//! model.save(std::path::Path::new("models/lenet300-k2.lcq"))?;
+//!
+//! // serve it (lookup-based forward, micro-batched; paper §2.1)
+//! let registry = Arc::new(Registry::load_dir(std::path::Path::new("models"))?);
+//! let server = MicroBatchServer::start(registry, ServerConfig::default());
+//! let logits = server.client().infer("lenet300-k2", vec![0.0; 784]);
+//! # let _ = logits;
+//! # Ok(())
+//! # }
 //! ```
 
 pub mod config;
@@ -42,7 +67,9 @@ pub mod metrics;
 pub mod nn;
 pub mod quant;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type.

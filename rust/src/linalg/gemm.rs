@@ -6,19 +6,12 @@
 //! autovectorizes. Blocking over k keeps the active B panel in L1/L2;
 //! threading splits the rows of C, which are disjoint, so no locks.
 
-use super::Mat;
+use super::{num_threads, Mat};
 
 /// Rows-per-thread threshold below which we stay single-threaded.
 const PAR_MIN_ROWS: usize = 64;
 /// k-panel block size.
 const KC: usize = 256;
-
-fn num_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(16)
-}
 
 /// C(m,n) = A(m,k) · B(k,n). `c` is overwritten.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {

@@ -6,6 +6,16 @@ pub mod gemm;
 pub mod solve;
 pub mod vecops;
 
+/// Worker-thread count for the data-parallel kernels, capped at 16 — one
+/// policy shared by gemm, the k-means assignment pass and the serve LUT
+/// engine, so a future change (e.g. an env override) lands everywhere.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
 /// Dense row-major `f32` matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {

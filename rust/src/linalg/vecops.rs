@@ -32,6 +32,47 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     s
 }
 
+/// Σᵢ x[idx[i]] — the gather-accumulate primitive of the LUT forward pass
+/// ([`crate::serve::engine`]): per-centroid partial sums are gathers, the
+/// multiply happens once per centroid instead of once per weight.
+#[inline]
+pub fn gather_sum(x: &[f32], idx: &[u32]) -> f32 {
+    // 4 accumulators, same rationale as `dot`.
+    let mut acc = [0.0f32; 4];
+    let chunks = idx.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        acc[0] += x[idx[b] as usize];
+        acc[1] += x[idx[b + 1] as usize];
+        acc[2] += x[idx[b + 2] as usize];
+        acc[3] += x[idx[b + 3] as usize];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for &i in &idx[chunks * 4..] {
+        s += x[i as usize];
+    }
+    s
+}
+
+/// Sum of all entries.
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let b = i * 4;
+        acc[0] += x[b];
+        acc[1] += x[b + 1];
+        acc[2] += x[b + 2];
+        acc[3] += x[b + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for v in &x[chunks * 4..] {
+        s += v;
+    }
+    s
+}
+
 /// ||x - y||_2
 #[inline]
 pub fn l2_dist(x: &[f32], y: &[f32]) -> f32 {
@@ -141,6 +182,20 @@ mod tests {
         assert!((l2_dist(&x, &[0.0, 0.0]) - 5.0).abs() < 1e-6);
         assert!((mean_abs(&[-2.0, 2.0, 4.0]) - 8.0 / 3.0).abs() < 1e-6);
         assert_eq!(mean_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn gather_sum_matches_naive() {
+        check("gather_sum==naive", 80, |g| {
+            let n = g.usize_in(1, 50);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let m = g.usize_in(0, 70);
+            let idx: Vec<u32> = (0..m).map(|_| g.usize_in(0, n - 1) as u32).collect();
+            let naive: f32 = idx.iter().map(|&i| x[i as usize]).sum();
+            assert!((gather_sum(&x, &idx) - naive).abs() < 1e-3);
+            let total: f32 = x.iter().sum();
+            assert!((sum(&x) - total).abs() < 1e-3);
+        });
     }
 
     #[test]

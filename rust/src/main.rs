@@ -3,6 +3,8 @@
 //! ```text
 //! lcquant experiment <id|all> [--out results] [--scale quick|full] [--seed N]
 //! lcquant run --config configs/lenet300_k2.json [--out results]
+//! lcquant pack --config configs/lenet300_k2.json [--out models]
+//! lcquant serve-smoke --models models [--requests N] [--config FILE]
 //! lcquant pjrt-smoke [--artifacts artifacts]
 //! lcquant list
 //! ```
@@ -23,6 +25,8 @@ fn usage() -> ! {
   lcquant experiment <id|all> [--out DIR] [--scale quick|full] [--seed N]
       ids: {:?}
   lcquant run --config FILE [--out DIR]
+  lcquant pack --config FILE [--out DIR]
+  lcquant serve-smoke --models DIR [--requests N] [--config FILE]
   lcquant pjrt-smoke [--artifacts DIR]
   lcquant list",
         experiments::ALL
@@ -37,6 +41,26 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 42);
     std::fs::create_dir_all(out)?;
     experiments::run(id, out, scale, seed)
+}
+
+/// Train the reference net per the config's train section: chunked SGD
+/// with the decayed learning-rate schedule. Shared by `run` and `pack` so
+/// both produce the same reference net from the same config.
+fn train_reference(
+    backend: &mut dyn lcquant::coordinator::Backend,
+    train: &lcquant::config::TrainConfig,
+) {
+    use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+    use lcquant::coordinator::Backend as _;
+    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), train.momentum);
+    let chunk = 100usize;
+    let mut step = 0;
+    while step < train.ref_steps {
+        let n = chunk.min(train.ref_steps - step);
+        let lr = train.lr0 * train.lr_decay.powi((step / chunk) as i32);
+        run_sgd(backend, &mut opt, n, lr, None);
+        step += n;
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -59,20 +83,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     // `make artifacts` and a net matching the artifact's architecture);
     // default is the pure-rust backend.
     let mut backend: Box<dyn Backend> = match args.get_or("backend", "native") {
-        "pjrt" => {
-            let dir = lcquant::runtime::Engine::default_dir();
-            if !lcquant::runtime::Engine::available(&dir) {
-                return Err(anyhow!("--backend pjrt requires artifacts at {dir:?}"));
-            }
-            let engine = lcquant::runtime::Engine::open(&dir)?;
-            Box::new(lcquant::runtime::PjrtBackend::new(
-                engine,
-                args.get_or("model", "lenet300"),
-                train,
-                Some(test),
-                cfg.seed,
-            )?)
-        }
+        "pjrt" => pjrt_backend(args, train, test, cfg.seed)?,
         _ => {
             let net = Mlp::new(&cfg.net, cfg.seed);
             Box::new(NativeBackend::new(net, train, Some(test), cfg.train.batch, cfg.seed))
@@ -81,16 +92,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let backend = backend.as_mut();
 
     // train the reference
-    use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), cfg.train.momentum);
-    let chunk = 100usize;
-    let mut step = 0;
-    while step < cfg.train.ref_steps {
-        let n = chunk.min(cfg.train.ref_steps - step);
-        let lr = cfg.train.lr0 * cfg.train.lr_decay.powi((step / chunk) as i32);
-        run_sgd(backend, &mut opt, n, lr, None);
-        step += n;
-    }
+    train_reference(backend, &cfg.train);
     let (rl, re) = backend.eval_train();
     lcquant::info!("reference: loss={rl:.5} err={re:.2}%");
 
@@ -115,6 +117,137 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Train + LC-quantize per the config, then pack the result into a
+/// deployable `.lcq` artifact (the compressed bits, not the dense weights).
+fn cmd_pack(args: &Args) -> Result<()> {
+    use lcquant::coordinator::Backend;
+    use lcquant::serve::PackedModel;
+    let cfg_path = args
+        .get("config")
+        .ok_or_else(|| anyhow!("pack requires --config FILE"))?;
+    let cfg = RunConfig::from_file(cfg_path)?;
+    let mut data = match cfg.data.kind.as_str() {
+        "cifar_like" => lcquant::data::cifar_like::generate(cfg.data.n, cfg.seed),
+        _ => SynthMnist::generate(cfg.data.n, cfg.seed),
+    };
+    data.subtract_mean(None);
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let (train, test) = data.split(cfg.data.test_frac, &mut rng);
+    let net = Mlp::new(&cfg.net, cfg.seed);
+    let mut backend = NativeBackend::new(net, train, Some(test), cfg.train.batch, cfg.seed);
+    train_reference(&mut backend, &cfg.train);
+    let res = lc_quantize(&mut backend, &cfg.lc);
+    let model = PackedModel::from_lc(&cfg.name, &cfg.net, &res, &backend.biases())?;
+    let out = std::path::Path::new(args.get_or("out", "models"))
+        .join(format!("{}.lcq", cfg.name));
+    model.save(&out)?;
+    println!(
+        "packed '{}' [{}]: train err {:.2}%, ρ = ×{:.1} ({} bytes) → {out:?}",
+        cfg.name,
+        res.scheme.label(),
+        res.train_err,
+        model.compression_ratio(),
+        model.payload_bits().div_ceil(8),
+    );
+    Ok(())
+}
+
+/// Load a directory of packed models and push random traffic through the
+/// micro-batching server — an in-process serving smoke test. Batching
+/// knobs come from the optional `--config` file's `"serve"` section.
+fn cmd_serve_smoke(args: &Args) -> Result<()> {
+    use lcquant::serve::{MicroBatchServer, Registry};
+    use std::sync::Arc;
+    let dir = std::path::PathBuf::from(
+        args.get("models").ok_or_else(|| anyhow!("serve-smoke requires --models DIR"))?,
+    );
+    let serve_cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?.serve,
+        None => lcquant::config::ServeSettings::default(),
+    };
+    let registry = Arc::new(Registry::load_dir(&dir)?);
+    let names = registry.names();
+    println!(
+        "serving {} model(s): {names:?} (max_batch {}, max_wait {}ms)",
+        registry.len(),
+        serve_cfg.max_batch,
+        serve_cfg.max_wait_ms
+    );
+    let n_requests = args.get_usize("requests", 256).max(1);
+    let server = MicroBatchServer::start(Arc::clone(&registry), serve_cfg.to_server_config());
+    let n_threads = 8usize;
+    let t = lcquant::util::timer::Timer::start();
+    std::thread::scope(|s| {
+        for th in 0..n_threads {
+            let client = server.client();
+            let names = names.clone();
+            let registry = Arc::clone(&registry);
+            // spread the remainder so exactly n_requests are sent
+            let quota = n_requests / n_threads + usize::from(th < n_requests % n_threads);
+            s.spawn(move || {
+                let mut rng = Rng::new(1000 + th as u64);
+                for i in 0..quota {
+                    let name = &names[(th + i) % names.len()];
+                    let in_dim = registry.get(name).unwrap().engine.in_dim();
+                    let mut x = vec![0.0f32; in_dim];
+                    rng.fill_normal(&mut x, 0.0, 1.0);
+                    client.infer(name, x).expect("inference failed");
+                }
+            });
+        }
+    });
+    let elapsed = t.elapsed_s();
+    let mut server = server;
+    server.stop();
+    let stats = server.stats();
+    println!(
+        "{} requests in {elapsed:.2}s ({:.0} req/s): p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms, \
+         mean batch {:.1}",
+        stats.requests,
+        stats.requests as f64 / elapsed,
+        stats.p50_ms,
+        stats.p90_ms,
+        stats.p99_ms,
+        stats.mean_batch,
+    );
+    println!("serve-smoke OK");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(
+    args: &Args,
+    train: lcquant::data::Dataset,
+    test: lcquant::data::Dataset,
+    seed: u64,
+) -> Result<Box<dyn lcquant::coordinator::Backend>> {
+    let dir = lcquant::runtime::Engine::default_dir();
+    if !lcquant::runtime::Engine::available(&dir) {
+        return Err(anyhow!("--backend pjrt requires artifacts at {dir:?}"));
+    }
+    let engine = lcquant::runtime::Engine::open(&dir)?;
+    Ok(Box::new(lcquant::runtime::PjrtBackend::new(
+        engine,
+        args.get_or("model", "lenet300"),
+        train,
+        Some(test),
+        seed,
+    )?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(
+    _args: &Args,
+    _train: lcquant::data::Dataset,
+    _test: lcquant::data::Dataset,
+    _seed: u64,
+) -> Result<Box<dyn lcquant::coordinator::Backend>> {
+    Err(anyhow!(
+        "--backend pjrt requires building with `--features pjrt` (and real xla-rs bindings)"
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt_smoke(args: &Args) -> Result<()> {
     use lcquant::coordinator::Backend as _;
     use lcquant::runtime::{Engine, PjrtBackend};
@@ -140,12 +273,21 @@ fn cmd_pjrt_smoke(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt_smoke(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "pjrt-smoke requires building with `--features pjrt` (and real xla-rs bindings)"
+    ))
+}
+
 fn main() {
     let args = Args::from_env();
     set_level(if args.has("verbose") { Level::Debug } else { Level::Info });
     let result = match args.command.as_str() {
         "experiment" => cmd_experiment(&args),
         "run" => cmd_run(&args),
+        "pack" => cmd_pack(&args),
+        "serve-smoke" => cmd_serve_smoke(&args),
         "pjrt-smoke" => cmd_pjrt_smoke(&args),
         "list" => {
             println!("experiments: {:?}", experiments::ALL);

@@ -75,6 +75,26 @@ pub fn summary(xs: &[f32]) -> BTreeMap<String, f64> {
     m
 }
 
+/// q-th percentile (q ∈ [0, 100]) by nearest-rank over an **already
+/// sorted** ascending slice; returns 0.0 on empty input. Callers needing
+/// several percentiles of one sample (e.g. the serving stats snapshot)
+/// sort once and call this repeatedly.
+pub fn percentile_sorted(sorted: &[f32], q: f64) -> f32 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// q-th percentile by nearest-rank on a sorted copy (one-shot convenience
+/// over [`percentile_sorted`]).
+pub fn percentile(xs: &[f32], q: f64) -> f32 {
+    let mut sorted: Vec<f32> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
 /// Kernel density estimate on a fixed grid — used to reproduce the weight
 /// distribution plots (paper Figs. 7, 11–13) as numeric series.
 pub fn kde(xs: &[f32], grid: &[f32], bandwidth: f32) -> Vec<f32> {
@@ -122,6 +142,19 @@ mod tests {
         assert_eq!(s["max"], 4.0);
         assert_eq!(s["median"], 3.0);
         assert!(summary(&[]).is_empty());
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        let p50 = percentile(&xs, 50.0);
+        assert!((50.0..=51.0).contains(&p50), "{p50}");
+        let p99 = percentile(&xs, 99.0);
+        assert!((99.0..=100.0).contains(&p99), "{p99}");
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub enum Activation {
 }
 
 /// Architecture description.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MlpSpec {
     /// Layer widths including input, e.g. `[784, 300, 100, 10]`.
     pub sizes: Vec<usize>,
@@ -147,6 +147,20 @@ impl Mlp {
 
     pub fn n_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    /// Rebuild a net from per-layer weight vectors and biases (e.g. the
+    /// dense expansion of a packed model). Panics on shape mismatch.
+    pub fn from_parts(spec: &MlpSpec, weights: &[Vec<f32>], biases: &[Vec<f32>]) -> Mlp {
+        let mut net = Mlp::new(spec, 0);
+        assert_eq!(weights.len(), net.n_layers());
+        assert_eq!(biases.len(), net.n_layers());
+        net.set_weights(weights);
+        for (l, b) in net.layers.iter_mut().zip(biases) {
+            assert_eq!(l.b.len(), b.len());
+            l.b.copy_from_slice(b);
+        }
+        net
     }
 
     /// Forward pass. `train` enables dropout (inverted scaling); `rng` is

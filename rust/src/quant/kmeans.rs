@@ -110,10 +110,7 @@ fn assign_pass(
     assignments: &mut [u32],
     k: usize,
 ) -> (bool, Vec<f64>, Vec<usize>) {
-    let nt = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(16);
+    let nt = crate::linalg::num_threads();
     if data.len() < PAR_MIN_DATA || nt == 1 {
         let mut sums = vec![0.0f64; k];
         let mut counts = vec![0usize; k];

@@ -80,8 +80,13 @@ pub struct QuantOut {
     /// Quantized weights w_C = Δ(Θ), same length as the input.
     pub wc: Vec<f32>,
     /// The codebook actually used (learned or fixed; scaled codebooks
-    /// report the scaled entries).
+    /// report the scaled entries). Always sorted ascending.
     pub codebook: Vec<f32>,
+    /// Codebook index per weight: `wc[i] == codebook[assignments[i]]`.
+    /// This is the low-bit representation the packed serving format stores
+    /// (⌈log₂K⌉ bits each, paper §5) — kept here so packing never has to
+    /// re-derive nearest-centroid assignments from the dense `wc`.
+    pub assignments: Vec<u32>,
     /// Inner iterations spent (k-means iterations; 1 for closed forms).
     pub iterations: usize,
 }
@@ -111,33 +116,45 @@ impl LayerQuantizer {
                 };
                 let result = kmeans::kmeans_1d(w, &mut centroids, 200);
                 self.state = Some(centroids.clone());
-                QuantOut { wc: result.wc, codebook: centroids, iterations: result.iterations }
+                QuantOut {
+                    wc: result.wc,
+                    codebook: centroids,
+                    assignments: result.assignments,
+                    iterations: result.iterations,
+                }
             }
             Scheme::FixedCodebook { codebook } => {
                 let mut sorted = codebook.clone();
                 sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                let wc = fixed::quantize_fixed(w, &sorted);
-                QuantOut { wc, codebook: sorted, iterations: 1 }
+                let assignments = fixed::assign_fixed(w, &sorted);
+                let wc = assignments.iter().map(|&a| sorted[a as usize]).collect();
+                QuantOut { wc, codebook: sorted, assignments, iterations: 1 }
             }
             Scheme::Binary => {
                 let wc = binary::binarize(w);
-                QuantOut { wc, codebook: vec![-1.0, 1.0], iterations: 1 }
+                let assignments = sign_assignments(&wc);
+                QuantOut { wc, codebook: vec![-1.0, 1.0], assignments, iterations: 1 }
             }
             Scheme::BinaryScale => {
                 let (a, wc) = binary::binarize_with_scale(w);
-                QuantOut { wc, codebook: vec![-a, a], iterations: 1 }
+                // a == mean|w| ≥ 0, so [-a, a] is sorted; the sign of the
+                // *input* picks the entry (wc is ±a, possibly ±0).
+                let assignments = sign_assignments(w);
+                QuantOut { wc, codebook: vec![-a, a], assignments, iterations: 1 }
             }
             Scheme::Ternary => {
                 let wc = ternary::ternarize(w);
-                QuantOut { wc, codebook: vec![-1.0, 0.0, 1.0], iterations: 1 }
+                let assignments = ternary_assignments(&wc);
+                QuantOut { wc, codebook: vec![-1.0, 0.0, 1.0], assignments, iterations: 1 }
             }
             Scheme::TernaryScale => {
                 let (a, wc) = ternary::ternarize_with_scale(w);
-                QuantOut { wc, codebook: vec![-a, 0.0, a], iterations: 1 }
+                let assignments = ternary_assignments(&wc);
+                QuantOut { wc, codebook: vec![-a, 0.0, a], assignments, iterations: 1 }
             }
             Scheme::PowersOfTwo { c } => {
-                let wc = pow2::quantize_pow2(w, *c);
-                QuantOut { wc, codebook: pow2::codebook(*c), iterations: 1 }
+                let (wc, assignments) = pow2::quantize_pow2_with_assignments(w, *c);
+                QuantOut { wc, codebook: pow2::codebook(*c), assignments, iterations: 1 }
             }
             Scheme::AdaptiveWithZero { k } => {
                 let mut centroids = match self.state.take() {
@@ -154,7 +171,12 @@ impl LayerQuantizer {
                 };
                 let result = kmeans::kmeans_1d_zero_pinned(w, &mut centroids, 200);
                 self.state = Some(centroids.clone());
-                QuantOut { wc: result.wc, codebook: centroids, iterations: result.iterations }
+                QuantOut {
+                    wc: result.wc,
+                    codebook: centroids,
+                    assignments: result.assignments,
+                    iterations: result.iterations,
+                }
             }
         }
     }
@@ -163,6 +185,27 @@ impl LayerQuantizer {
     pub fn reset(&mut self) {
         self.state = None;
     }
+}
+
+/// Codebook index from the sign convention of eq. (12): negative → entry 0,
+/// non-negative (sgn(0) = +1) → entry 1 of a `[-a, a]` codebook.
+fn sign_assignments(w: &[f32]) -> Vec<u32> {
+    w.iter().map(|&t| (t >= 0.0) as u32).collect()
+}
+
+/// Codebook index for a ternarized value in `[-a, 0, a]`.
+fn ternary_assignments(wc: &[f32]) -> Vec<u32> {
+    wc.iter()
+        .map(|&v| {
+            if v == 0.0 {
+                1
+            } else if v < 0.0 {
+                0
+            } else {
+                2
+            }
+        })
+        .collect()
 }
 
 /// Squared distortion ‖w − wc‖² — the quantity the C step minimizes.
@@ -209,6 +252,46 @@ mod tests {
                         out.codebook.iter().any(|&c| (c - v).abs() < 1e-6),
                         "{scheme:?}: {v} not in {:?}",
                         out.codebook
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn assignments_index_sorted_codebook() {
+        // wc[i] == codebook[assignments[i]] for every scheme — the
+        // invariant the packed serving format depends on.
+        check("assignments consistent", 40, |g| {
+            let w = g.weights(150, 1.0);
+            let schemes = [
+                Scheme::AdaptiveCodebook { k: g.usize_in(1, 6) },
+                Scheme::AdaptiveWithZero { k: g.usize_in(2, 6) },
+                Scheme::Binary,
+                Scheme::BinaryScale,
+                Scheme::Ternary,
+                Scheme::TernaryScale,
+                Scheme::PowersOfTwo { c: g.usize_in(0, 5) as u32 },
+                Scheme::FixedCodebook { codebook: vec![0.4, -0.7, 0.0] },
+            ];
+            for scheme in schemes {
+                let mut q = LayerQuantizer::new(scheme.clone(), 3 + g.case as u64);
+                let out = q.compress(&w);
+                assert_eq!(out.assignments.len(), w.len());
+                assert!(
+                    out.codebook.windows(2).all(|p| p[0] <= p[1]),
+                    "{scheme:?}: codebook not sorted: {:?}",
+                    out.codebook
+                );
+                for (i, &a) in out.assignments.iter().enumerate() {
+                    assert!(
+                        (a as usize) < out.codebook.len(),
+                        "{scheme:?}: index {a} out of range"
+                    );
+                    assert_eq!(
+                        out.wc[i], out.codebook[a as usize],
+                        "{scheme:?}: wc[{i}]={} != codebook[{a}]",
+                        out.wc[i]
                     );
                 }
             }

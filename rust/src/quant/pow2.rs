@@ -73,6 +73,36 @@ pub fn quantize_pow2(w: &[f32], c: u32) -> Vec<f32> {
     w.iter().map(|&t| q_pow2(t, c)).collect()
 }
 
+/// Index of a quantized value `v` (an exact output of [`q_pow2`]) in the
+/// sorted [`codebook`], computed in O(1) from the exponent bits: the
+/// ascending order is `[-2⁰, …, -2⁻ᶜ, 0, 2⁻ᶜ, …, 2⁰]`, so `-2⁻ⁱ` sits at
+/// `i` and `+2⁻ⁱ` at `2C+2-i`.
+#[inline]
+pub fn index_in_codebook(v: f32, c: u32) -> u32 {
+    if v == 0.0 {
+        return c + 1;
+    }
+    let i = 127 - ((v.abs().to_bits() >> 23) & 0xff); // v = ±2^(−i)
+    debug_assert!(i <= c, "value {v} not in pow2 codebook C={c}");
+    if v < 0.0 {
+        i
+    } else {
+        2 * c + 2 - i
+    }
+}
+
+/// Quantize a slice and also return codebook indices (for bit-packing).
+pub fn quantize_pow2_with_assignments(w: &[f32], c: u32) -> (Vec<f32>, Vec<u32>) {
+    let mut wc = Vec::with_capacity(w.len());
+    let mut idx = Vec::with_capacity(w.len());
+    for &t in w {
+        let v = q_pow2(t, c);
+        wc.push(v);
+        idx.push(index_in_codebook(v, c));
+    }
+    (wc, idx)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +207,31 @@ mod tests {
         assert_eq!(q_pow2(1e30, 3), 1.0);
         assert_eq!(q_pow2(-1e30, 3), -1.0);
         assert_eq!(q_pow2(0.0, 0), 0.0);
+    }
+
+    #[test]
+    fn index_in_codebook_matches_position() {
+        check("pow2 index", 300, |g| {
+            let c = g.usize_in(0, 6) as u32;
+            let cb = codebook(c);
+            let t = g.f32_in(-2.0, 2.0) * 2.0f32.powi(-(g.usize_in(0, 8) as i32));
+            let v = q_pow2(t, c);
+            let idx = index_in_codebook(v, c) as usize;
+            assert!(idx < cb.len(), "t={t} C={c} idx={idx}");
+            assert_eq!(cb[idx], v, "t={t} C={c}");
+        });
+    }
+
+    #[test]
+    fn assignments_index_codebook() {
+        let w = [0.9f32, -0.3, 0.0, 1e-6, -1.4];
+        let c = 3;
+        let cb = codebook(c);
+        let (wc, idx) = quantize_pow2_with_assignments(&w, c);
+        assert_eq!(wc, quantize_pow2(&w, c));
+        for (v, &a) in wc.iter().zip(&idx) {
+            assert_eq!(cb[a as usize], *v);
+        }
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! LUT inference engine: forward passes straight off the packed
+//! representation — dense f32 weight matrices are never materialized.
+//!
+//! The core identity (paper §2.1's hardware argument): with w[i,j] =
+//! c[a[i,j]], an output unit is
+//!
+//! ```text
+//! y_j = b_j + Σ_i x_i·c[a_ij] = b_j + Σ_k c_k · (Σ_{i: a_ij = k} x_i)
+//! ```
+//!
+//! so the inner loop is *additions into K per-centroid partial sums*
+//! (gathers over columns grouped by centroid, built once at load), followed
+//! by a K-entry LUT combine — K multiplies per output unit instead of one
+//! per weight. Three specializations:
+//!
+//! * **Grouped** — the general path; groups for exactly-zero centroids are
+//!   skipped entirely, so pruned weights (`AdaptiveWithZero`, `Ternary`)
+//!   cost nothing at inference.
+//! * **Signed** — `Binary`/`BinaryScale` (codebook `{−a, +a}`): with
+//!   S⁺ = Σ_{+} x_i and T = Σ x_i, y = b + a·(2S⁺ − T); only the positive
+//!   group is stored (half the index memory, ~half the adds — the
+//!   popcount-style trick in float form).
+//! * **Pow2** — `PowersOfTwo` (codebook `{0, ±2⁻ⁱ}`): the combine multiplies
+//!   by shifting the f32 exponent instead of a float multiply.
+
+use super::packed::{PackedLayer, PackedModel};
+use crate::linalg::{num_threads, vecops, Mat};
+use crate::nn::Activation;
+use crate::quant::Scheme;
+use anyhow::{anyhow, Result};
+
+/// Total adds (batch · in · out) below which a layer forward stays
+/// single-threaded: spawn cost is ~50µs/thread (measured for the k-means
+/// assignment pass, see `quant::kmeans::PAR_MIN_DATA`), so threading only
+/// wins once a layer pass is ≫ 1ms — batch 256 on LeNet300's 784×300
+/// layer qualifies, a micro-batch through the 100×10 layer does not.
+const PAR_MIN_WORK: usize = 2_000_000;
+
+/// Multiply a finite f32 by 2^e via exponent arithmetic (the "shift path").
+/// Falls back to a float multiply for zeros/subnormals/overflow.
+#[inline]
+pub fn mul_pow2(x: f32, e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e), "shift {e} outside f32 exponent range");
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let ne = exp + e;
+    if exp == 0 || exp == 0xff || ne <= 0 || ne >= 0xff {
+        // zero, subnormal, inf/nan, or result leaves the normal range
+        return x * f32::from_bits(((127 + e) as u32) << 23);
+    }
+    f32::from_bits((bits & 0x807f_ffff) | ((ne as u32) << 23))
+}
+
+/// Per-centroid gather structure for one layer (see module docs).
+enum LutPath {
+    /// `indices[offsets[j*k + c] .. offsets[j*k + c + 1]]` are the input
+    /// rows assigned to centroid `c` in output column `j`.
+    Grouped { indices: Vec<u32>, offsets: Vec<usize> },
+    /// Positive-centroid rows per column; `y = b + scale·(2S⁺ − T)`.
+    Signed { pos: Vec<u32>, offsets: Vec<usize>, scale: f32 },
+    /// Grouped, with the combine done by exponent shifts: centroid `c` is
+    /// `signs[c]·2^exps[c]` (`signs[c] == 0` marks the zero centroid).
+    Pow2 { indices: Vec<u32>, offsets: Vec<usize>, exps: Vec<i32>, signs: Vec<f32> },
+}
+
+struct LutLayer {
+    in_dim: usize,
+    out_dim: usize,
+    k: usize,
+    codebook: Vec<f32>,
+    bias: Vec<f32>,
+    act: Activation,
+    path: LutPath,
+}
+
+/// Group a layer's assignments by (output column, centroid): counting sort,
+/// O(P). Returns (indices, offsets) with `offsets.len() == cols*k + 1`.
+fn group_by_column(layer: &PackedLayer) -> (Vec<u32>, Vec<usize>) {
+    let (rows, cols, k) = (layer.rows, layer.cols, layer.codebook.len());
+    let assigns = layer.unpack_assignments();
+    let mut counts = vec![0usize; cols * k];
+    for (idx, &a) in assigns.iter().enumerate() {
+        counts[(idx % cols) * k + a as usize] += 1;
+    }
+    let mut offsets = vec![0usize; cols * k + 1];
+    for g in 0..cols * k {
+        offsets[g + 1] = offsets[g] + counts[g];
+    }
+    let mut cursor: Vec<usize> = offsets[..cols * k].to_vec();
+    let mut indices = vec![0u32; rows * cols];
+    for (idx, &a) in assigns.iter().enumerate() {
+        let g = (idx % cols) * k + a as usize;
+        indices[cursor[g]] = (idx / cols) as u32;
+        cursor[g] += 1;
+    }
+    (indices, offsets)
+}
+
+impl LutLayer {
+    fn build(layer: &PackedLayer, act: Activation, scheme: &Scheme) -> LutLayer {
+        let k = layer.codebook.len();
+        let signed = matches!(scheme, Scheme::Binary | Scheme::BinaryScale)
+            && k == 2
+            && layer.codebook[0] == -layer.codebook[1];
+        let (indices, offsets) = group_by_column(layer);
+        let path = if signed {
+            // keep only each column's positive group (centroid index 1)
+            let mut pos = Vec::with_capacity(indices.len() / 2);
+            let mut pos_offsets = vec![0usize; layer.cols + 1];
+            for j in 0..layer.cols {
+                pos.extend_from_slice(&indices[offsets[j * 2 + 1]..offsets[j * 2 + 2]]);
+                pos_offsets[j + 1] = pos.len();
+            }
+            LutPath::Signed { pos, offsets: pos_offsets, scale: layer.codebook[1] }
+        } else if matches!(scheme, Scheme::PowersOfTwo { .. }) {
+            let mut exps = vec![0i32; k];
+            let mut signs = vec![0.0f32; k];
+            for (c, &v) in layer.codebook.iter().enumerate() {
+                if v != 0.0 {
+                    exps[c] = ((v.abs().to_bits() >> 23) & 0xff) as i32 - 127;
+                    signs[c] = if v < 0.0 { -1.0 } else { 1.0 };
+                }
+            }
+            LutPath::Pow2 { indices, offsets, exps, signs }
+        } else {
+            LutPath::Grouped { indices, offsets }
+        };
+        LutLayer {
+            in_dim: layer.rows,
+            out_dim: layer.cols,
+            k,
+            codebook: layer.codebook.clone(),
+            bias: layer.bias.clone(),
+            act,
+            path,
+        }
+    }
+
+    /// One input row → one output row (pre-activation handled by caller).
+    fn forward_row(&self, x: &[f32], y: &mut [f32]) {
+        match &self.path {
+            LutPath::Grouped { indices, offsets } => {
+                for j in 0..self.out_dim {
+                    let mut acc = self.bias[j];
+                    for c in 0..self.k {
+                        let v = self.codebook[c];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let g = j * self.k + c;
+                        acc += v * vecops::gather_sum(x, &indices[offsets[g]..offsets[g + 1]]);
+                    }
+                    y[j] = acc;
+                }
+            }
+            LutPath::Signed { pos, offsets, scale } => {
+                let total = vecops::sum(x);
+                for j in 0..self.out_dim {
+                    let s_pos = vecops::gather_sum(x, &pos[offsets[j]..offsets[j + 1]]);
+                    y[j] = self.bias[j] + scale * (2.0 * s_pos - total);
+                }
+            }
+            LutPath::Pow2 { indices, offsets, exps, signs } => {
+                for j in 0..self.out_dim {
+                    let mut acc = self.bias[j];
+                    for c in 0..self.k {
+                        if signs[c] == 0.0 {
+                            continue;
+                        }
+                        let g = j * self.k + c;
+                        let s = vecops::gather_sum(x, &indices[offsets[g]..offsets[g + 1]]);
+                        acc += signs[c] * mul_pow2(s, exps[c]);
+                    }
+                    y[j] = acc;
+                }
+            }
+        }
+    }
+
+    fn forward(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.in_dim, "input dim mismatch");
+        let m = x.rows;
+        let n = self.out_dim;
+        let mut out = Mat::zeros(m, n);
+        let do_rows = |rows: std::ops::Range<usize>, odata: &mut [f32]| {
+            for (local, r) in rows.enumerate() {
+                self.forward_row(x.row(r), &mut odata[local * n..(local + 1) * n]);
+            }
+        };
+        let nt = num_threads();
+        if m < 2 || m * self.in_dim * n < PAR_MIN_WORK || nt == 1 {
+            do_rows(0..m, &mut out.data);
+        } else {
+            let per = m.div_ceil(nt);
+            let mut chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
+            {
+                let mut rest = out.data.as_mut_slice();
+                let mut start = 0;
+                while start < m {
+                    let end = (start + per).min(m);
+                    let (head, tail) = rest.split_at_mut((end - start) * n);
+                    chunks.push((start..end, head));
+                    rest = tail;
+                    start = end;
+                }
+            }
+            std::thread::scope(|s| {
+                for (range, chunk) in chunks {
+                    s.spawn(move || do_rows(range, chunk));
+                }
+            });
+        }
+        match self.act {
+            Activation::Tanh => {
+                for v in out.data.iter_mut() {
+                    *v = v.tanh();
+                }
+            }
+            Activation::Relu => {
+                for v in out.data.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            Activation::Linear => {}
+        }
+        out
+    }
+}
+
+/// The engine: grouped-gather structures for every layer of one
+/// [`PackedModel`], ready for batched forward passes.
+pub struct LutEngine {
+    layers: Vec<LutLayer>,
+}
+
+impl LutEngine {
+    /// Build from a packed model (O(P) counting sort per layer; no dense
+    /// weights are created).
+    pub fn new(model: &PackedModel) -> Result<LutEngine> {
+        if model.layers.is_empty() {
+            return Err(anyhow!("packed model has no layers"));
+        }
+        for (l, layer) in model.layers.iter().enumerate() {
+            if l + 1 < model.layers.len() && layer.cols != model.layers[l + 1].rows {
+                return Err(anyhow!(
+                    "layer {l} out dim {} != layer {} in dim {}",
+                    layer.cols,
+                    l + 1,
+                    model.layers[l + 1].rows
+                ));
+            }
+        }
+        let n = model.layers.len();
+        let layers = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, pl)| {
+                let act = if l + 1 == n {
+                    Activation::Linear
+                } else {
+                    model.spec.hidden_activation
+                };
+                LutLayer::build(pl, act, &model.scheme)
+            })
+            .collect();
+        Ok(LutEngine { layers })
+    }
+
+    /// Input dimension (features per request).
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    /// Output dimension (logits per request).
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Batched forward pass: (batch, in_dim) → (batch, out_dim) logits.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut cur = self.layers[0].forward(x);
+        for layer in &self.layers[1..] {
+            cur = layer.forward(&cur);
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::MlpSpec;
+    use crate::quant::LayerQuantizer;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn packed_net(scheme: &Scheme, sizes: Vec<usize>, seed: u64) -> PackedModel {
+        let spec = MlpSpec {
+            sizes,
+            hidden_activation: Activation::Tanh,
+            dropout_keep: vec![],
+        };
+        let mut rng = Rng::new(seed);
+        let mut codebooks = Vec::new();
+        let mut assignments = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..spec.n_layers() {
+            let n = spec.sizes[l] * spec.sizes[l + 1];
+            let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.6)).collect();
+            let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+            codebooks.push(out.codebook);
+            assignments.push(out.assignments);
+            biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.2)).collect());
+        }
+        PackedModel::from_parts("net", &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+    }
+
+    fn max_logit_dev(model: &PackedModel, batch: usize, seed: u64) -> f32 {
+        let engine = LutEngine::new(model).unwrap();
+        let net = model.to_mlp();
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(batch, engine.in_dim());
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        let lut = engine.forward(&x);
+        let (dense, _) = net.forward(&x, false, None);
+        assert_eq!(lut.rows, dense.rows);
+        assert_eq!(lut.cols, dense.cols);
+        let mut dev = 0.0f32;
+        for (a, b) in lut.data.iter().zip(&dense.data) {
+            dev = dev.max((a - b).abs());
+        }
+        dev
+    }
+
+    #[test]
+    fn lut_forward_matches_dense_all_schemes() {
+        let schemes = [
+            Scheme::AdaptiveCodebook { k: 4 },
+            Scheme::AdaptiveCodebook { k: 16 },
+            Scheme::AdaptiveWithZero { k: 5 },
+            Scheme::FixedCodebook { codebook: vec![-0.8, -0.2, 0.0, 0.3, 0.9] },
+            Scheme::Binary,
+            Scheme::BinaryScale,
+            Scheme::Ternary,
+            Scheme::TernaryScale,
+            Scheme::PowersOfTwo { c: 3 },
+        ];
+        for (i, scheme) in schemes.iter().enumerate() {
+            let model = packed_net(scheme, vec![15, 10, 6], 200 + i as u64);
+            let dev = max_logit_dev(&model, 7, 300 + i as u64);
+            assert!(dev <= 1e-3, "{scheme:?}: max logit deviation {dev}");
+        }
+    }
+
+    #[test]
+    fn lut_forward_matches_dense_threaded_batch() {
+        // first layer: 64·200·180 ≈ 2.3M adds > PAR_MIN_WORK, so this
+        // exercises the threaded row split (second layer stays serial)
+        let model = packed_net(&Scheme::BinaryScale, vec![200, 180, 4], 41);
+        let dev = max_logit_dev(&model, 64, 42);
+        assert!(dev <= 1e-3, "threaded: {dev}");
+    }
+
+    #[test]
+    fn lut_forward_property() {
+        check("lut == dense", 25, |g| {
+            let sizes = vec![g.usize_in(2, 12), g.usize_in(1, 10), g.usize_in(1, 6)];
+            let k = g.usize_in(1, 8);
+            let model = packed_net(
+                &Scheme::AdaptiveCodebook { k },
+                sizes,
+                500 + g.case as u64,
+            );
+            let dev = max_logit_dev(&model, g.usize_in(1, 5), 600 + g.case as u64);
+            assert!(dev <= 1e-3, "K={k}: {dev}");
+        });
+    }
+
+    #[test]
+    fn mul_pow2_matches_float_multiply() {
+        check("mul_pow2", 200, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            let e = g.usize_in(0, 12) as i32 - 6;
+            let expect = x * 2.0f32.powi(e);
+            assert_eq!(mul_pow2(x, e), expect, "x={x} e={e}");
+        });
+        assert_eq!(mul_pow2(0.0, -3), 0.0);
+        assert_eq!(mul_pow2(-8.0, -3), -1.0);
+        assert_eq!(mul_pow2(3.0, 0), 3.0);
+        // near-overflow falls back without UB
+        let big = f32::MAX / 2.0;
+        assert!(mul_pow2(big, 2).is_infinite());
+        // subnormal input falls back to the multiply
+        let tiny = f32::MIN_POSITIVE / 4.0;
+        assert_eq!(mul_pow2(tiny, 1), tiny * 2.0);
+    }
+
+    #[test]
+    fn engine_rejects_inconsistent_models() {
+        let mut model = packed_net(&Scheme::Binary, vec![6, 4, 2], 9);
+        // break the chaining
+        model.layers[1].rows = 5;
+        assert!(LutEngine::new(&model).is_err());
+    }
+
+    #[test]
+    fn pruned_centroids_cost_no_groups() {
+        // Ternary groups only ±1; the zero centroid is skipped in the
+        // combine, so heavily pruned nets do proportionally less work.
+        let model = packed_net(&Scheme::TernaryScale, vec![10, 8, 3], 11);
+        let dev = max_logit_dev(&model, 3, 12);
+        assert!(dev <= 1e-3, "{dev}");
+    }
+}

@@ -1,0 +1,53 @@
+//! L3 serving subsystem: ship and execute the *compressed* net.
+//!
+//! The LC coordinator's deliverable is Θ = (codebook, assignments) — yet
+//! until this module existed the repo only kept the dense expansion
+//! `wc = Δ(Θ)`. `serve` closes the loop with the paper's deployment story:
+//!
+//! * [`packed`] — the [`PackedModel`] artifact. Storage is exactly what
+//!   §5's eq. (14) counts: P1 weights at ⌈log₂K⌉ bits each, plus K f32
+//!   codebook entries per layer and the f32 biases (P0). So
+//!   [`PackedModel::compression_ratio`] reproduces the paper's ρ(K)
+//!   numbers (×30.5 for LeNet300 at K=2, etc.) *as measured on disk*, not
+//!   just in a formula.
+//! * [`format`] — versioned little-endian binary `.lcq` files with an
+//!   FNV-1a checksum; corruption and truncation fail loudly at load.
+//! * [`engine`] — the [`LutEngine`] forward pass off the packed form:
+//!   per-centroid partial sums (gathers) + a K-entry LUT combine, the
+//!   hardware argument of §2.1 (additions and lookups instead of one
+//!   multiply per weight). Sign and exponent-shift specializations for the
+//!   binary and powers-of-two codebooks; exact-zero centroids cost
+//!   nothing.
+//! * [`server`] — a micro-batching request queue
+//!   ([`MicroBatchServer`]): single requests coalesce up to a deadline
+//!   into engine-friendly batches, with p50/p90/p99 latency reporting.
+//! * [`registry`] — a [`Registry`] of many packed variants of a net
+//!   (binary / ternary / pow2 / adaptive-K), routed per-request by name,
+//!   so one process serves a whole compression-tradeoff family.
+//!
+//! ```no_run
+//! use lcquant::serve::{MicroBatchServer, PackedModel, Registry, ServerConfig};
+//! use std::sync::Arc;
+//! # fn demo(lc: &lcquant::coordinator::LcResult, spec: &lcquant::nn::MlpSpec,
+//! #         biases: &[Vec<f32>]) -> anyhow::Result<()> {
+//! // pack the LC result and save the deployable artifact
+//! let model = PackedModel::from_lc("lenet300-k2", spec, lc, biases)?;
+//! model.save(std::path::Path::new("models/lenet300-k2.lcq"))?;
+//! // later / elsewhere: load the family and serve
+//! let registry = Arc::new(Registry::load_dir(std::path::Path::new("models"))?);
+//! let server = MicroBatchServer::start(registry, ServerConfig::default());
+//! let _logits = server.client().infer("lenet300-k2", vec![0.0; 784]);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod engine;
+pub mod format;
+pub mod packed;
+pub mod registry;
+pub mod server;
+
+pub use engine::LutEngine;
+pub use packed::{PackedLayer, PackedModel};
+pub use registry::{LoadedModel, Registry};
+pub use server::{Client, MicroBatchServer, ServerConfig, StatsSnapshot};

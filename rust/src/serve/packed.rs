@@ -1,0 +1,351 @@
+//! The packed model artifact: per-layer bit-packed codebook assignments at
+//! ⌈log₂K⌉ bits per weight, plus the codebook, biases and architecture —
+//! exactly the storage the paper's compression-ratio formula (eq. 14)
+//! counts, so [`PackedModel::payload_bits`] agrees with
+//! [`crate::quant::ratio::quantized_bits`] bit for bit.
+
+use crate::coordinator::LcResult;
+use crate::nn::{Mlp, MlpSpec};
+use crate::quant::ratio::{self, bits_per_weight};
+use crate::quant::Scheme;
+use anyhow::{anyhow, Result};
+
+/// One layer: `rows × cols` assignments bit-packed into `u64` words
+/// (row-major, matching [`crate::linalg::Mat`] layout, LSB-first within a
+/// word), a K-entry codebook, and the full-precision bias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedLayer {
+    /// Input dimension (weight matrix rows).
+    pub rows: usize,
+    /// Output dimension (weight matrix cols).
+    pub cols: usize,
+    /// Bits per assignment: ⌈log₂K⌉ (0 when K = 1).
+    pub bits: usize,
+    /// The K codebook entries (sorted ascending, as the C step emits them).
+    pub codebook: Vec<f32>,
+    /// Full-precision bias (paper §5: biases are not quantized).
+    pub bias: Vec<f32>,
+    /// Bit-packed assignments, `⌈rows·cols·bits / 64⌉` words.
+    pub packed: Vec<u64>,
+}
+
+impl PackedLayer {
+    /// Pack assignment indices for one layer.
+    pub fn pack(
+        rows: usize,
+        cols: usize,
+        codebook: Vec<f32>,
+        bias: Vec<f32>,
+        assignments: &[u32],
+    ) -> Result<PackedLayer> {
+        let n = rows * cols;
+        if assignments.len() != n {
+            return Err(anyhow!(
+                "layer {rows}x{cols}: {} assignments, expected {n}",
+                assignments.len()
+            ));
+        }
+        if codebook.is_empty() {
+            return Err(anyhow!("empty codebook"));
+        }
+        if bias.len() != cols {
+            return Err(anyhow!("bias len {} != cols {cols}", bias.len()));
+        }
+        let k = codebook.len();
+        let bits = bits_per_weight(k);
+        let mut packed = vec![0u64; (n * bits).div_ceil(64)];
+        for (i, &a) in assignments.iter().enumerate() {
+            if a as usize >= k {
+                return Err(anyhow!("assignment {a} out of range for K={k}"));
+            }
+            if bits == 0 {
+                continue;
+            }
+            let bitpos = i * bits;
+            let (word, off) = (bitpos / 64, bitpos % 64);
+            packed[word] |= (a as u64) << off;
+            if off + bits > 64 {
+                packed[word + 1] |= (a as u64) >> (64 - off);
+            }
+        }
+        Ok(PackedLayer { rows, cols, bits, codebook, bias, packed })
+    }
+
+    /// Number of weights (P1 contribution) in this layer.
+    pub fn weight_count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Read one assignment.
+    #[inline]
+    pub fn assignment(&self, i: usize) -> u32 {
+        debug_assert!(i < self.weight_count());
+        if self.bits == 0 {
+            return 0;
+        }
+        let mask = (1u64 << self.bits) - 1;
+        let bitpos = i * self.bits;
+        let (word, off) = (bitpos / 64, bitpos % 64);
+        let mut v = self.packed[word] >> off;
+        if off + self.bits > 64 {
+            v |= self.packed[word + 1] << (64 - off);
+        }
+        (v & mask) as u32
+    }
+
+    /// Unpack every assignment index.
+    pub fn unpack_assignments(&self) -> Vec<u32> {
+        (0..self.weight_count()).map(|i| self.assignment(i)).collect()
+    }
+
+    /// Expand to dense f32 weights (row-major) — only for validation and
+    /// interop; the serving path never calls this.
+    pub fn unpack_weights(&self) -> Vec<f32> {
+        (0..self.weight_count())
+            .map(|i| self.codebook[self.assignment(i) as usize])
+            .collect()
+    }
+}
+
+/// A deployable quantized net: the [`MlpSpec`], the [`Scheme`] it was
+/// compressed with, and one [`PackedLayer`] per weight layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedModel {
+    /// Registry key (e.g. `"lenet300-binary"`).
+    pub name: String,
+    pub spec: MlpSpec,
+    pub scheme: Scheme,
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedModel {
+    /// Build from explicit per-layer parts.
+    pub fn from_parts(
+        name: &str,
+        spec: &MlpSpec,
+        scheme: &Scheme,
+        codebooks: &[Vec<f32>],
+        assignments: &[Vec<u32>],
+        biases: &[Vec<f32>],
+    ) -> Result<PackedModel> {
+        let n_layers = spec.n_layers();
+        if codebooks.len() != n_layers || assignments.len() != n_layers || biases.len() != n_layers
+        {
+            return Err(anyhow!(
+                "layer count mismatch: spec {n_layers}, codebooks {}, assignments {}, biases {}",
+                codebooks.len(),
+                assignments.len(),
+                biases.len()
+            ));
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            layers.push(PackedLayer::pack(
+                spec.sizes[l],
+                spec.sizes[l + 1],
+                codebooks[l].clone(),
+                biases[l].clone(),
+                &assignments[l],
+            )?);
+        }
+        Ok(PackedModel {
+            name: name.to_string(),
+            spec: spec.clone(),
+            scheme: scheme.clone(),
+            layers,
+        })
+    }
+
+    /// Package an [`LcResult`] — the final C step's assignments go straight
+    /// into the bit-packing, no re-quantization of the dense weights.
+    pub fn from_lc(
+        name: &str,
+        spec: &MlpSpec,
+        lc: &LcResult,
+        biases: &[Vec<f32>],
+    ) -> Result<PackedModel> {
+        PackedModel::from_parts(name, spec, &lc.scheme, &lc.codebooks, &lc.assignments, biases)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Expand every layer to dense f32 (validation/interop only).
+    pub fn unpack_weights(&self) -> Vec<Vec<f32>> {
+        self.layers.iter().map(|l| l.unpack_weights()).collect()
+    }
+
+    /// Rebuild a dense [`Mlp`] (the baseline the LUT engine is checked
+    /// against).
+    pub fn to_mlp(&self) -> Mlp {
+        let weights = self.unpack_weights();
+        let biases: Vec<Vec<f32>> = self.layers.iter().map(|l| l.bias.clone()).collect();
+        Mlp::from_parts(&self.spec, &weights, &biases)
+    }
+
+    /// Stored bits under eq. (14)'s accounting: Σ_l P1_l·⌈log₂K_l⌉ +
+    /// (P0 + Σ_l K_l)·b. Equals
+    /// [`ratio::quantized_bits`]`(P1, P0, K, n_layers)` when every layer
+    /// shares one K.
+    pub fn payload_bits(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.weight_count() * l.bits + (l.bias.len() + l.codebook.len()) * ratio::FLOAT_BITS
+            })
+            .sum()
+    }
+
+    /// Bits of the float32 reference net with the same architecture.
+    pub fn reference_bits(&self) -> usize {
+        let (p1, p0) = self.spec.param_counts();
+        ratio::reference_bits(p1, p0)
+    }
+
+    /// ρ = reference bits / packed bits (paper eq. 14).
+    pub fn compression_ratio(&self) -> f64 {
+        self.reference_bits() as f64 / self.payload_bits() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::quant::LayerQuantizer;
+    use crate::util::prop::check;
+
+    fn toy_spec(sizes: Vec<usize>) -> MlpSpec {
+        MlpSpec { sizes, hidden_activation: Activation::Tanh, dropout_keep: vec![] }
+    }
+
+    /// Quantize random weights with a scheme, pack, and return both.
+    fn packed_from_scheme(
+        scheme: &Scheme,
+        spec: &MlpSpec,
+        seed: u64,
+    ) -> (PackedModel, Vec<Vec<f32>>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut codebooks = Vec::new();
+        let mut assignments = Vec::new();
+        let mut biases = Vec::new();
+        let mut wcs = Vec::new();
+        for l in 0..spec.n_layers() {
+            let n = spec.sizes[l] * spec.sizes[l + 1];
+            let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.5)).collect();
+            let mut q = LayerQuantizer::new(scheme.clone(), seed + l as u64);
+            let out = q.compress(&w);
+            codebooks.push(out.codebook);
+            assignments.push(out.assignments);
+            wcs.push(out.wc);
+            biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.1)).collect());
+        }
+        let m = PackedModel::from_parts("toy", spec, scheme, &codebooks, &assignments, &biases)
+            .unwrap();
+        (m, wcs)
+    }
+
+    fn all_schemes(k: usize) -> Vec<Scheme> {
+        vec![
+            Scheme::AdaptiveCodebook { k },
+            Scheme::AdaptiveWithZero { k: k.max(2) },
+            Scheme::FixedCodebook {
+                codebook: (0..k).map(|i| -1.0 + 2.0 * i as f32 / k as f32).collect(),
+            },
+            Scheme::Binary,
+            Scheme::BinaryScale,
+            Scheme::Ternary,
+            Scheme::TernaryScale,
+            Scheme::PowersOfTwo { c: 2 },
+        ]
+    }
+
+    #[test]
+    fn pack_unpack_identity_all_schemes_and_k() {
+        // the tentpole round-trip: pack → unpack reproduces wc exactly,
+        // for every Scheme variant and K ∈ {2, 3, 4, 5, 16, 256}
+        let spec = toy_spec(vec![9, 7, 4]);
+        let mut seed = 100;
+        for k in [2usize, 3, 4, 5, 16, 256] {
+            for scheme in all_schemes(k) {
+                seed += 1;
+                let (m, wcs) = packed_from_scheme(&scheme, &spec, seed);
+                assert_eq!(m.unpack_weights(), wcs, "{scheme:?} K={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn packing_is_property_tested() {
+        check("pack roundtrip", 60, |g| {
+            let k = g.usize_in(1, 40);
+            let rows = g.usize_in(1, 20);
+            let cols = g.usize_in(1, 20);
+            let codebook: Vec<f32> = (0..k).map(|i| i as f32 * 0.25 - 1.0).collect();
+            let assignments: Vec<u32> =
+                (0..rows * cols).map(|_| g.usize_in(0, k - 1) as u32).collect();
+            let bias = vec![0.0f32; cols];
+            let layer = PackedLayer::pack(rows, cols, codebook, bias, &assignments).unwrap();
+            assert_eq!(layer.unpack_assignments(), assignments);
+            assert_eq!(layer.bits, bits_per_weight(k));
+        });
+    }
+
+    #[test]
+    fn payload_bits_match_ratio_accounting() {
+        // eq. (14): on-disk payload for uniform K equals quantized_bits()
+        let spec = toy_spec(vec![30, 20, 10]);
+        let (p1, p0) = spec.param_counts();
+        for k in [2usize, 3, 4, 5, 16, 256] {
+            let (m, _) = packed_from_scheme(&Scheme::AdaptiveCodebook { k }, &spec, 7);
+            assert_eq!(
+                m.payload_bits(),
+                ratio::quantized_bits(p1, p0, k, spec.n_layers()),
+                "K={k}"
+            );
+            let rho = m.compression_ratio();
+            let expect = ratio::compression_ratio(p1, p0, k, spec.n_layers());
+            assert!((rho - expect).abs() < 1e-12, "K={k}: {rho} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn to_mlp_reproduces_quantized_forward() {
+        let spec = toy_spec(vec![6, 5, 3]);
+        let (m, wcs) = packed_from_scheme(&Scheme::AdaptiveCodebook { k: 4 }, &spec, 9);
+        let net = m.to_mlp();
+        assert_eq!(net.weights_cloned(), wcs);
+        for (l, pl) in net.layers.iter().zip(&m.layers) {
+            assert_eq!(l.b, pl.bias);
+        }
+    }
+
+    #[test]
+    fn pack_rejects_bad_shapes() {
+        assert!(PackedLayer::pack(2, 2, vec![0.0, 1.0], vec![0.0; 2], &[0, 1, 0]).is_err());
+        assert!(PackedLayer::pack(2, 2, vec![], vec![0.0; 2], &[0; 4]).is_err());
+        assert!(PackedLayer::pack(2, 2, vec![0.0, 1.0], vec![0.0; 3], &[0; 4]).is_err());
+        assert!(PackedLayer::pack(2, 2, vec![0.0, 1.0], vec![0.0; 2], &[0, 1, 2, 0]).is_err());
+    }
+
+    #[test]
+    fn k1_packs_to_zero_bits() {
+        let layer = PackedLayer::pack(3, 2, vec![0.5], vec![0.0; 2], &[0; 6]).unwrap();
+        assert_eq!(layer.bits, 0);
+        assert!(layer.packed.is_empty());
+        assert_eq!(layer.unpack_weights(), vec![0.5f32; 6]);
+    }
+
+    #[test]
+    fn word_boundary_straddling() {
+        // bits=3 over >64 bits exercises the two-word read/write path
+        let k = 5; // 3 bits
+        let assignments: Vec<u32> = (0..50).map(|i| (i * 7 % k) as u32).collect();
+        let codebook: Vec<f32> = (0..k).map(|i| i as f32).collect();
+        let layer = PackedLayer::pack(50, 1, codebook, vec![0.0], &assignments).unwrap();
+        assert_eq!(layer.bits, 3);
+        assert_eq!(layer.packed.len(), 3); // 150 bits → 3 words
+        assert_eq!(layer.unpack_assignments(), assignments);
+    }
+}

@@ -1,0 +1,168 @@
+//! Model registry: many [`PackedModel`]s (e.g. binary / ternary / pow2 /
+//! adaptive-K variants of one net) loaded into one process, each with its
+//! [`LutEngine`] built once, routed per-request by name. One server can
+//! therefore expose a whole compression-tradeoff family and let callers
+//! pick their accuracy/latency point.
+
+use super::engine::LutEngine;
+use super::format::EXTENSION;
+use super::packed::PackedModel;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// A packed model plus its ready-to-serve engine.
+pub struct LoadedModel {
+    pub packed: PackedModel,
+    pub engine: LutEngine,
+}
+
+/// Name → model map. Cheap to share: handing requests to the server takes
+/// an `Arc<Registry>`.
+#[derive(Default)]
+pub struct Registry {
+    models: BTreeMap<String, Arc<LoadedModel>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register a model under its own name, building the LUT engine.
+    /// Replaces any previous model of the same name.
+    pub fn insert(&mut self, packed: PackedModel) -> Result<()> {
+        let engine = LutEngine::new(&packed)
+            .with_context(|| format!("building engine for '{}'", packed.name))?;
+        self.models
+            .insert(packed.name.clone(), Arc::new(LoadedModel { packed, engine }));
+        Ok(())
+    }
+
+    /// Load every `*.lcq` file in a directory.
+    pub fn load_dir(dir: &Path) -> Result<Registry> {
+        let mut reg = Registry::new();
+        let entries =
+            std::fs::read_dir(dir).with_context(|| format!("reading model dir {dir:?}"))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some(EXTENSION) {
+                reg.insert(PackedModel::load(&path)?)?;
+            }
+        }
+        if reg.is_empty() {
+            return Err(anyhow!("no .{EXTENSION} models found in {dir:?}"));
+        }
+        Ok(reg)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<LoadedModel>> {
+        self.models.get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Route one batch through a named model.
+    pub fn infer(&self, name: &str, x: &crate::linalg::Mat) -> Result<crate::linalg::Mat> {
+        let m = self
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not registered (have {:?})", self.names()))?;
+        if x.cols != m.engine.in_dim() {
+            return Err(anyhow!(
+                "model '{name}' expects {} features, got {}",
+                m.engine.in_dim(),
+                x.cols
+            ));
+        }
+        Ok(m.engine.forward(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::nn::{Activation, MlpSpec};
+    use crate::quant::{LayerQuantizer, Scheme};
+    use crate::util::rng::Rng;
+
+    fn toy_packed(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+        let spec = MlpSpec {
+            sizes: vec![8, 6, 3],
+            hidden_activation: Activation::Tanh,
+            dropout_keep: vec![],
+        };
+        let mut rng = Rng::new(seed);
+        let mut codebooks = Vec::new();
+        let mut assignments = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..spec.n_layers() {
+            let n = spec.sizes[l] * spec.sizes[l + 1];
+            let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.5)).collect();
+            let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+            codebooks.push(out.codebook);
+            assignments.push(out.assignments);
+            biases.push(vec![0.1f32; spec.sizes[l + 1]]);
+        }
+        PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+    }
+
+    #[test]
+    fn registry_routes_a_model_family() {
+        let mut reg = Registry::new();
+        reg.insert(toy_packed("binary", &Scheme::Binary, 1)).unwrap();
+        reg.insert(toy_packed("ternary", &Scheme::Ternary, 2)).unwrap();
+        reg.insert(toy_packed("adaptive4", &Scheme::AdaptiveCodebook { k: 4 }, 3))
+            .unwrap();
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.names(), vec!["adaptive4", "binary", "ternary"]);
+
+        let mut x = Mat::zeros(2, 8);
+        let mut rng = Rng::new(9);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        // each name routes to a *different* net
+        let yb = reg.infer("binary", &x).unwrap();
+        let yt = reg.infer("ternary", &x).unwrap();
+        assert_eq!(yb.rows, 2);
+        assert_eq!(yb.cols, 3);
+        assert!(yb.data.iter().zip(&yt.data).any(|(a, b)| a != b));
+        // unknown model and wrong arity are errors
+        assert!(reg.infer("nope", &x).is_err());
+        let bad = Mat::zeros(2, 5);
+        assert!(reg.infer("binary", &bad).is_err());
+    }
+
+    #[test]
+    fn load_dir_roundtrip() {
+        let dir = std::env::temp_dir().join("lcquant_serve_registry_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, scheme) in [
+            ("binary", Scheme::Binary),
+            ("pow2", Scheme::PowersOfTwo { c: 2 }),
+        ] {
+            toy_packed(name, &scheme, 5).save(&dir.join(format!("{name}.lcq"))).unwrap();
+        }
+        // non-model files are ignored
+        std::fs::write(dir.join("notes.txt"), "hi").unwrap();
+        let reg = Registry::load_dir(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["binary", "pow2"]);
+        assert!(reg.get("binary").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+        // empty dir is an error
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Registry::load_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,376 @@
+//! Micro-batching server: coalesces single-image requests into batches.
+//!
+//! Single requests are latency-bound; the LUT engine (like any GEMM-shaped
+//! kernel) is throughput-bound. The batcher thread takes the first queued
+//! request, then keeps draining the channel until either `max_batch`
+//! requests are in hand or `max_wait` has elapsed since the first one —
+//! the classic latency/throughput knob. Batches are grouped per model name
+//! (the registry serves a whole compression family) and per-request
+//! latency is recorded (bounded sample window) for p50/p90/p99 reporting.
+//!
+//! Plain `std::thread` + `mpsc` channels, matching the crate's threading
+//! idiom (no async runtime in the vendored crate set).
+
+use super::registry::Registry;
+use crate::linalg::Mat;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Idle tick at which the batcher re-checks the shutdown flag (clients may
+/// hold live `Sender` clones, so channel disconnection alone cannot signal
+/// shutdown).
+const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
+
+/// Cap on retained latency samples: when full, the oldest half is dropped,
+/// so memory stays bounded on a long-running server and percentiles lean
+/// towards recent traffic. Totals are tracked separately in counters.
+const STATS_CAP: usize = 65_536;
+
+/// Batching knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Hard cap on coalesced batch size.
+    pub max_batch: usize,
+    /// How long the first request in a batch may wait for company.
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Job {
+    model: String,
+    input: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Result<Vec<f32>, String>>,
+}
+
+#[derive(Default)]
+struct Stats {
+    /// Recent per-request latencies (bounded by [`STATS_CAP`]).
+    latencies_ms: Vec<f32>,
+    /// All-time counters.
+    requests: usize,
+    batches: usize,
+    batched_requests: usize,
+    errors: usize,
+}
+
+impl Stats {
+    fn push_latency(&mut self, ms: f32) {
+        if self.latencies_ms.len() >= STATS_CAP {
+            self.latencies_ms.drain(..STATS_CAP / 2);
+        }
+        self.latencies_ms.push(ms);
+        self.requests += 1;
+    }
+}
+
+/// Point-in-time summary of server behaviour.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub errors: usize,
+    pub p50_ms: f32,
+    pub p90_ms: f32,
+    pub p99_ms: f32,
+    pub max_ms: f32,
+    pub mean_batch: f64,
+}
+
+/// Cloneable request handle; blocking [`Client::infer`] calls can be made
+/// from any number of threads.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Job>,
+}
+
+impl Client {
+    /// Send one input and block for its logits.
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job {
+                model: model.to_string(),
+                input,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|_| "server stopped".to_string())?;
+        reply_rx.recv().map_err(|_| "server dropped request".to_string())?
+    }
+}
+
+/// The batcher thread plus its stats. Stops (draining nothing further)
+/// when dropped or [`MicroBatchServer::stop`] is called.
+pub struct MicroBatchServer {
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<Stats>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl MicroBatchServer {
+    /// Spawn the batcher over a shared registry.
+    pub fn start(registry: Arc<Registry>, cfg: ServerConfig) -> MicroBatchServer {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let stats = Arc::new(Mutex::new(Stats::default()));
+        let stats_w = Arc::clone(&stats);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shutdown_w = Arc::clone(&shutdown);
+        let worker =
+            std::thread::spawn(move || batcher_loop(rx, registry, cfg, stats_w, shutdown_w));
+        MicroBatchServer { tx: Some(tx), worker: Some(worker), stats, shutdown }
+    }
+
+    /// A request handle (cloneable, thread-safe).
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.as_ref().expect("server running").clone() }
+    }
+
+    /// Latency/batching summary so far (percentiles over the retained
+    /// sample window, counters over the server's lifetime).
+    pub fn stats(&self) -> StatsSnapshot {
+        // sort once outside the lock so the batcher is not stalled
+        let (mut lat, requests, batches, batched_requests, errors) = {
+            let s = self.stats.lock().unwrap();
+            (s.latencies_ms.clone(), s.requests, s.batches, s.batched_requests, s.errors)
+        };
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        StatsSnapshot {
+            requests,
+            batches,
+            errors,
+            p50_ms: crate::metrics::percentile_sorted(&lat, 50.0),
+            p90_ms: crate::metrics::percentile_sorted(&lat, 90.0),
+            p99_ms: crate::metrics::percentile_sorted(&lat, 99.0),
+            max_ms: lat.last().copied().unwrap_or(0.0),
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                batched_requests as f64 / batches as f64
+            },
+        }
+    }
+
+    /// Stop accepting requests and join the batcher (already-coalesced
+    /// requests are answered first; later ones get a clean error).
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        drop(self.tx.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MicroBatchServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Job>,
+    registry: Arc<Registry>,
+    cfg: ServerConfig,
+    stats: Arc<Mutex<Stats>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let max_batch = cfg.max_batch.max(1);
+    loop {
+        // wait for the head-of-batch request, polling the shutdown flag
+        let first = match rx.recv_timeout(SHUTDOWN_POLL) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return, // all senders gone
+        };
+        let deadline = first.enqueued + cfg.max_wait;
+        let mut jobs = vec![first];
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        run_batch(&registry, jobs, &stats);
+    }
+}
+
+/// Group coalesced jobs per model, forward each group in one batched call,
+/// and answer every request.
+fn run_batch(registry: &Registry, jobs: Vec<Job>, stats: &Arc<Mutex<Stats>>) {
+    // stable grouping by model name (preserves request order per model)
+    let mut groups: Vec<(String, Vec<Job>)> = Vec::new();
+    for job in jobs {
+        match groups.iter_mut().find(|(m, _)| *m == job.model) {
+            Some((_, g)) => g.push(job),
+            None => groups.push((job.model.clone(), vec![job])),
+        }
+    }
+    for (model, group) in groups {
+        let outcome: Result<Mat, String> = (|| {
+            let loaded = registry
+                .get(&model)
+                .ok_or_else(|| format!("model '{model}' not registered"))?;
+            let in_dim = loaded.engine.in_dim();
+            for job in &group {
+                if job.input.len() != in_dim {
+                    return Err(format!(
+                        "model '{model}' expects {in_dim} features, got {}",
+                        job.input.len()
+                    ));
+                }
+            }
+            let mut x = Mat::zeros(group.len(), in_dim);
+            for (r, job) in group.iter().enumerate() {
+                x.row_mut(r).copy_from_slice(&job.input);
+            }
+            Ok(loaded.engine.forward(&x))
+        })();
+        let mut s = stats.lock().unwrap();
+        s.batches += 1;
+        s.batched_requests += group.len();
+        match outcome {
+            Ok(y) => {
+                for (r, job) in group.iter().enumerate() {
+                    s.push_latency(job.enqueued.elapsed().as_secs_f32() * 1e3);
+                    let _ = job.reply.send(Ok(y.row(r).to_vec()));
+                }
+            }
+            Err(e) => {
+                for job in &group {
+                    s.errors += 1;
+                    s.push_latency(job.enqueued.elapsed().as_secs_f32() * 1e3);
+                    let _ = job.reply.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Activation, MlpSpec};
+    use crate::quant::{LayerQuantizer, Scheme};
+    use crate::serve::packed::PackedModel;
+    use crate::util::rng::Rng;
+
+    fn toy_registry() -> (Arc<Registry>, PackedModel) {
+        let spec = MlpSpec {
+            sizes: vec![8, 6, 3],
+            hidden_activation: Activation::Tanh,
+            dropout_keep: vec![],
+        };
+        let mut rng = Rng::new(4);
+        let mut codebooks = Vec::new();
+        let mut assignments = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..spec.n_layers() {
+            let n = spec.sizes[l] * spec.sizes[l + 1];
+            let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.5)).collect();
+            let out = LayerQuantizer::new(Scheme::AdaptiveCodebook { k: 4 }, l as u64)
+                .compress(&w);
+            codebooks.push(out.codebook);
+            assignments.push(out.assignments);
+            biases.push(vec![0.05f32; spec.sizes[l + 1]]);
+        }
+        let packed = PackedModel::from_parts(
+            "toy",
+            &spec,
+            &Scheme::AdaptiveCodebook { k: 4 },
+            &codebooks,
+            &assignments,
+            &biases,
+        )
+        .unwrap();
+        let mut reg = Registry::new();
+        reg.insert(packed.clone()).unwrap();
+        (Arc::new(reg), packed)
+    }
+
+    #[test]
+    fn serves_correct_logits() {
+        let (reg, packed) = toy_registry();
+        let engine = crate::serve::LutEngine::new(&packed).unwrap();
+        let mut server = MicroBatchServer::start(
+            reg,
+            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(31);
+        for _ in 0..10 {
+            let input: Vec<f32> = (0..8).map(|_| rng.normal(0.0, 1.0)).collect();
+            let got = client.infer("toy", input.clone()).unwrap();
+            let mut x = Mat::zeros(1, 8);
+            x.row_mut(0).copy_from_slice(&input);
+            let want = engine.forward(&x);
+            assert_eq!(got, want.row(0).to_vec());
+        }
+        server.stop();
+        let stats = server.stats();
+        assert_eq!(stats.requests, 10);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.p50_ms >= 0.0 && stats.p99_ms >= stats.p50_ms);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_into_batches() {
+        let (reg, _) = toy_registry();
+        let mut server = MicroBatchServer::start(
+            reg,
+            ServerConfig { max_batch: 32, max_wait: Duration::from_millis(100) },
+        );
+        let client = server.client();
+        let n_threads = 12;
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let c = client.clone();
+                s.spawn(move || {
+                    let input = vec![0.1f32 * t as f32; 8];
+                    c.infer("toy", input).unwrap()
+                });
+            }
+        });
+        server.stop();
+        let stats = server.stats();
+        assert_eq!(stats.requests, n_threads);
+        // with a 100ms window, a 12-thread burst must coalesce at least
+        // once: fewer batches than requests ⇔ some batch had size ≥ 2
+        assert!(stats.batches < stats.requests, "no coalescing: {stats:?}");
+        assert!(stats.mean_batch > 1.0, "{stats:?}");
+    }
+
+    #[test]
+    fn unknown_model_and_bad_arity_are_reported() {
+        let (reg, _) = toy_registry();
+        let mut server = MicroBatchServer::start(reg, ServerConfig::default());
+        let client = server.client();
+        let err = client.infer("ghost", vec![0.0; 8]).unwrap_err();
+        assert!(err.contains("not registered"), "{err}");
+        let err = client.infer("toy", vec![0.0; 3]).unwrap_err();
+        assert!(err.contains("features"), "{err}");
+        server.stop();
+        assert_eq!(server.stats().errors, 2);
+        // after stop, requests fail cleanly instead of hanging
+        assert!(client.infer("toy", vec![0.0; 8]).is_err());
+    }
+}

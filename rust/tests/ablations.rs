@@ -173,6 +173,7 @@ fn ablation_scale_helps_binarization() {
 
 /// Runtime failure injection: broken manifests and missing artifacts
 /// surface as errors, not panics.
+#[cfg(feature = "pjrt")]
 #[test]
 fn runtime_failure_paths() {
     use lcquant::runtime::{Engine, Manifest};

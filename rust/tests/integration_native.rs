@@ -222,3 +222,56 @@ fn config_roundtrip_drives_lc() {
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn pack_serve_pipeline_end_to_end() {
+    // train → LC → pack → save → load → registry → micro-batch serve:
+    // the served logits must match the backend's own quantized forward.
+    use lcquant::serve::{MicroBatchServer, PackedModel, Registry, ServerConfig};
+    use std::sync::Arc;
+
+    let mut backend = trained_backend(16, 300, 150, 29);
+    let lc = lc_quantize(&mut backend, &cfg(Scheme::AdaptiveCodebook { k: 4 }, 10));
+    let spec = backend.net.spec.clone();
+    let model = PackedModel::from_lc("it-k4", &spec, &lc, &backend.biases()).unwrap();
+
+    // on-disk accounting matches eq. (14)
+    let (p1, p0) = spec.param_counts();
+    assert_eq!(
+        model.payload_bits(),
+        lcquant::quant::ratio::quantized_bits(p1, p0, 4, spec.n_layers())
+    );
+
+    let dir = std::env::temp_dir().join("lcquant_it_serve");
+    let _ = std::fs::remove_dir_all(&dir);
+    model.save(&dir.join("it-k4.lcq")).unwrap();
+    let registry = Arc::new(Registry::load_dir(&dir).unwrap());
+
+    // backend already holds wc after lc_quantize; its forward is the oracle
+    let test_set = backend.test.as_ref().unwrap();
+    let n = 6usize;
+    let mut x = lcquant::linalg::Mat::zeros(n, 784);
+    for r in 0..n {
+        x.row_mut(r).copy_from_slice(test_set.images.row(r % test_set.len()));
+    }
+    let (oracle, _) = backend.net.forward(&x, false, None);
+
+    let mut server = MicroBatchServer::start(
+        Arc::clone(&registry),
+        ServerConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+    );
+    let client = server.client();
+    for r in 0..n {
+        let logits = client.infer("it-k4", x.row(r).to_vec()).unwrap();
+        assert_eq!(logits.len(), 10);
+        for (a, b) in logits.iter().zip(oracle.row(r)) {
+            assert!(
+                (a - b).abs() <= 1e-3,
+                "row {r}: served {a} vs dense {b}"
+            );
+        }
+    }
+    server.stop();
+    assert_eq!(server.stats().requests, n);
+    let _ = std::fs::remove_dir_all(&dir);
+}

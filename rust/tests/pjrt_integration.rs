@@ -3,7 +3,10 @@
 //! and the LC algorithm running end-to-end on the PJRT backend.
 //!
 //! These tests SKIP (pass trivially with a note) when `artifacts/` has not
-//! been built — run `make artifacts` first for full coverage.
+//! been built — run `make artifacts` first for full coverage. The whole
+//! file is compiled only with the `pjrt` feature (the runtime module is
+//! feature-gated).
+#![cfg(feature = "pjrt")]
 
 use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
 use lcquant::coordinator::{lc_quantize, Backend, LcConfig, MuSchedule, NativeBackend, PenaltyMode};

@@ -1,0 +1,226 @@
+//! Stub of the `xla-rs` binding surface used by `lcquant::runtime`.
+//!
+//! [`Literal`] is functional (a typed host buffer with a shape), so the
+//! literal helpers and their tests work. The PJRT entry points
+//! ([`HloModuleProto::from_text_file`], [`PjRtClient::compile`]) return
+//! errors — executing an artifact needs the real bindings (see README.md).
+
+use std::path::Path;
+
+/// Error type; printed with `{:?}` by callers.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub_err(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: XLA PJRT is stubbed out in this build; link the real xla-rs \
+         bindings (see vendor/xla/README.md)"
+    ))
+}
+
+/// Element types the repo moves across the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    S64,
+    U8,
+}
+
+/// A host value that can live in a [`Literal`].
+pub trait NativeType: Copy + 'static {
+    const TY: ElementType;
+    const SIZE: usize;
+    fn write_le(&self, out: &mut Vec<u8>);
+    fn read_le(buf: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr, $n:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            const SIZE: usize = $n;
+            fn write_le(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn read_le(buf: &[u8]) -> Self {
+                let mut b = [0u8; $n];
+                b.copy_from_slice(&buf[..$n]);
+                <$t>::from_le_bytes(b)
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32, 4);
+native!(f64, ElementType::F64, 8);
+native!(i32, ElementType::S32, 4);
+native!(i64, ElementType::S64, 8);
+native!(u8, ElementType::U8, 1);
+
+/// A typed host buffer with a shape — fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    elem_size: usize,
+    data: Vec<u8>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut bytes = Vec::with_capacity(data.len() * T::SIZE);
+        for v in data {
+            v.write_le(&mut bytes);
+        }
+        Literal { ty: T::TY, elem_size: T::SIZE, data: bytes, dims: vec![data.len() as i64] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len() / self.elem_size
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret under new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        let mut out = self.clone();
+        out.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(XlaError(format!("to_vec: literal is {:?}, not {:?}", self.ty, T::TY)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.elem_size)
+            .map(|c| T::read_le(c))
+            .collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        if T::TY != self.ty {
+            return Err(XlaError(format!("first: literal is {:?}, not {:?}", self.ty, T::TY)));
+        }
+        if self.data.len() < self.elem_size {
+            return Err(XlaError("first: empty literal".into()));
+        }
+        Ok(T::read_le(&self.data))
+    }
+
+    /// Destructure a tuple literal. Stub literals are never tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_err("to_tuple"))
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        if !p.exists() {
+            return Err(XlaError(format!("HLO file not found: {p:?}")));
+        }
+        Err(stub_err("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. `cpu()` succeeds so that artifact-directory probing
+/// and error paths behave as with the real bindings.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_is_functional() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+        let comp = XlaComputation(());
+        assert!(client.compile(&comp).is_err());
+    }
+}
