@@ -1,12 +1,12 @@
 # Build / verify entry points. `make tier1` is the CI gate (ROADMAP.md):
-# release build, tests, bench compilation, and rustfmt check.
+# release build, tests, bench compilation, clippy, and rustfmt check.
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test bench-build fmt-check ci artifacts clean
+.PHONY: tier1 build test bench-build clippy fmt-check ci artifacts clean bench-lstep
 
-tier1: build test bench-build fmt-check
+tier1: build test bench-build clippy fmt-check
 
 build:
 	$(CARGO) build --release
@@ -19,12 +19,26 @@ test:
 bench-build:
 	$(CARGO) bench --no-run
 
+# Lint gate: warnings are errors. Skips (with a note) when the clippy
+# component is not installed; when it runs, failures fail the target.
+clippy:
+	@if $(CARGO) clippy --version >/dev/null 2>&1; then \
+		$(CARGO) clippy -- -D warnings; \
+	else \
+		echo "cargo-clippy not installed; skipping lint"; \
+	fi
+
 fmt-check:
 	@if $(CARGO) fmt --version >/dev/null 2>&1; then \
 		$(CARGO) fmt -- --check; \
 	else \
 		echo "rustfmt not installed; skipping fmt-check"; \
 	fi
+
+# L-step throughput before/after the flat parameter plane; writes
+# BENCH_lstep.json next to the repo root.
+bench-lstep:
+	$(CARGO) bench --bench bench_lstep
 
 ci: tier1
 

@@ -1,12 +1,18 @@
 //! End-to-end LC iteration cost, LeNet300 K∈{2,64}: wall-clock of one
 //! (L step + C step + multiplier update) cycle, and the L/C split — the
 //! paper's §3.3 claim is that C-step time is negligible.
+//!
+//! Runs on the flat parameter plane: w_C and λ are weight-arena-length
+//! buffers, the C step quantizes per-layer arena views through reusable
+//! `QuantOut`s, and the multiplier update is fused with the feasibility
+//! norm.
 
 use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
 use lcquant::coordinator::{Backend, NativeBackend};
 use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::linalg::vecops;
 use lcquant::nn::{Mlp, MlpSpec};
-use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::quant::{LayerQuantizer, QuantOut, Scheme};
 use lcquant::util::timer::{bench, Timer};
 
 fn main() {
@@ -16,21 +22,23 @@ fn main() {
     let spec = MlpSpec::lenet300();
     let net = Mlp::new(&spec, 1);
     let mut backend = NativeBackend::new(net, data, None, 128, 1);
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+    let layout = backend.layout().clone();
+    let mut opt = FlatNesterov::new(&layout, 0.95);
     let l_steps = 20;
 
     for &k in &[2usize, 64] {
-        let mut quantizers: Vec<LayerQuantizer> = (0..backend.n_layers())
+        let n_layers = layout.n_layers();
+        let mut quantizers: Vec<LayerQuantizer> = (0..n_layers)
             .map(|l| LayerQuantizer::new(Scheme::AdaptiveCodebook { k }, l as u64))
             .collect();
-        // initialize wc/lambda
-        let w0 = backend.weights();
-        let mut wc: Vec<Vec<f32>> = w0
-            .iter()
-            .zip(quantizers.iter_mut())
-            .map(|(wl, q)| q.compress(wl).wc)
-            .collect();
-        let mut lambda: Vec<Vec<f32>> = w0.iter().map(|l| vec![0.0; l.len()]).collect();
+        let mut outs: Vec<QuantOut> = (0..n_layers).map(|_| QuantOut::default()).collect();
+        // initialize wc/lambda (flat, allocated once per K)
+        let mut wc = vec![0.0f32; layout.w_len()];
+        let mut lambda = vec![0.0f32; layout.w_len()];
+        for l in 0..n_layers {
+            quantizers[l].compress_into(backend.params().w_layer(l), &mut outs[l]);
+            wc[layout.w_range(l)].copy_from_slice(&outs[l].wc);
+        }
         let mu = 0.01f32;
 
         let mut l_time = 0.0f64;
@@ -38,19 +46,23 @@ fn main() {
         let s = bench(&format!("LC iteration K={k}"), 10, || {
             // L step
             let t = Timer::start();
-            let penalty = PenaltyState { wc: wc.clone(), lambda: lambda.clone(), mu };
-            run_sgd(&mut backend, &mut opt, l_steps, 0.02, Some(&penalty));
+            {
+                let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu };
+                run_sgd(&mut backend, &mut opt, l_steps, 0.02, Some(&penalty));
+            }
             l_time += t.elapsed_s();
-            // C step
+            // C step + fused multiplier/feasibility update
             let t = Timer::start();
-            let w = backend.weights();
-            for (l, q) in quantizers.iter_mut().enumerate() {
-                let out = q.compress(&w[l]);
-                wc[l] = out.wc;
+            for l in 0..n_layers {
+                quantizers[l].compress_into(backend.params().w_layer(l), &mut outs[l]);
+                wc[layout.w_range(l)].copy_from_slice(&outs[l].wc);
             }
-            for l in 0..w.len() {
-                lcquant::linalg::vecops::update_multipliers(&mut lambda[l], &w[l], &wc[l], mu);
-            }
+            let _ = vecops::update_multipliers_fused(
+                &mut lambda,
+                backend.params().w_flat(),
+                &wc,
+                mu,
+            );
             c_time += t.elapsed_s();
         });
         println!("{}", s.report());

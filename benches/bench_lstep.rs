@@ -3,14 +3,123 @@
 //! LeNet300 shapes, batch 128. The C step is benchmarked separately
 //! (bench_cstep) — the paper's claim "C-step runtime is negligible vs the
 //! L step" is checked in bench_e2e.
+//!
+//! Two parameter-plane strategies are measured head-to-head and written to
+//! `BENCH_lstep.json`:
+//!
+//! * **legacy** — the pre-refactor per-layer plane: clone the parameters
+//!   into `Vec<Vec<f32>>`, allocate gradients per step, run a per-layer
+//!   Nesterov loop, then copy everything back with `set_weights`/
+//!   `set_biases` (two full-parameter copies per minibatch step);
+//! * **flat** — the arena plane: gradients stream into one reusable
+//!   `GradBuffer` and the fused `FlatNesterov::step` updates the backend's
+//!   `ParamSet` in place (zero copies, zero steady-state allocation).
+//!
+//! A counting global allocator reports allocations per step for both
+//! (thread-spawns inside the threaded gemm also allocate, so the flat
+//! number is small rather than zero here; the strict zero-allocation
+//! assertion lives in `rust/tests/flat_params.rs` on sub-threshold shapes).
 
-use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use lcquant::coordinator::sgd_driver::{FlatNesterov, PenaltyState};
+#[cfg(feature = "pjrt")]
+use lcquant::coordinator::sgd_driver::run_sgd;
 use lcquant::coordinator::{Backend, NativeBackend};
 use lcquant::data::synth_mnist::SynthMnist;
-use lcquant::nn::{Mlp, MlpSpec};
+use lcquant::nn::{GradBuffer, Mlp, MlpSpec};
 #[cfg(feature = "pjrt")]
 use lcquant::util::rng::Rng;
 use lcquant::util::timer::bench;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// One pre-refactor-style step: allocate gradients, update cloned
+/// per-layer parameter vectors, copy the full parameter set back into the
+/// backend — the exact traffic pattern `run_sgd` used before the flat
+/// parameter plane. Keep in lockstep with `legacy_run_sgd` in
+/// `rust/tests/flat_params.rs`, the golden-parity reference for the same
+/// algorithm (bench targets can't share test code without a lib export).
+#[allow(clippy::too_many_arguments)]
+fn legacy_step(
+    backend: &mut NativeBackend,
+    w: &mut [Vec<f32>],
+    b: &mut [Vec<f32>],
+    vw: &mut [Vec<f32>],
+    vb: &mut [Vec<f32>],
+    lr: f32,
+    momentum: f32,
+    penalty: Option<(&[Vec<f32>], &[Vec<f32>], f32)>,
+) -> f32 {
+    let (loss, grads) = backend.next_loss_grads();
+    let m = momentum;
+    for l in 0..w.len() {
+        let (wl, vl) = (&mut w[l], &mut vw[l]);
+        let gl = grads.w_layer(l);
+        match penalty {
+            Some((wc, lam, mu)) if mu > 0.0 => {
+                for i in 0..wl.len() {
+                    let g = gl[i] + mu * (wl[i] - wc[l][i]) - lam[l][i];
+                    vl[i] = m * vl[i] - lr * g;
+                    wl[i] += m * vl[i] - lr * g;
+                }
+            }
+            _ => {
+                for i in 0..wl.len() {
+                    vl[i] = m * vl[i] - lr * gl[i];
+                    wl[i] += m * vl[i] - lr * gl[i];
+                }
+            }
+        }
+        let (bl, vbl) = (&mut b[l], &mut vb[l]);
+        let gbl = grads.b_layer(l);
+        for i in 0..bl.len() {
+            vbl[i] = m * vbl[i] - lr * gbl[i];
+            bl[i] += m * vbl[i] - lr * gbl[i];
+        }
+    }
+    backend.set_weights(w);
+    backend.set_biases(b);
+    loss
+}
+
+/// (median steps/s, allocations per step) for a closure running one step.
+fn measure<F: FnMut()>(name: &str, iters: usize, mut step: F) -> (f64, f64) {
+    let s = bench(name, iters, &mut step);
+    println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
+    let probe = 50u64;
+    let before = alloc_count();
+    for _ in 0..probe {
+        step();
+    }
+    let per_step = (alloc_count() - before) as f64 / probe as f64;
+    println!("    allocations/step: {per_step:.1}");
+    (1.0 / s.median_s, per_step)
+}
 
 fn main() {
     println!("== bench_lstep ==");
@@ -19,23 +128,82 @@ fn main() {
     let spec = MlpSpec::lenet300();
     let net = Mlp::new(&spec, 1);
     let mut backend = NativeBackend::new(net, data.clone(), None, 128, 1);
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+    let layout = backend.layout().clone();
+    let mut opt = FlatNesterov::new(&layout, 0.95);
 
-    let s = bench("native L-step (batch=128, no penalty)", 30, || {
-        run_sgd(&mut backend, &mut opt, 1, 0.05, None)
-    });
-    println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
+    // ---- legacy parameter plane (per-layer copies + set_weights) --------
+    let mut w = backend.weights();
+    let mut b = backend.biases();
+    let mut vw: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
+    let mut vb: Vec<Vec<f32>> = b.iter().map(|l| vec![0.0; l.len()]).collect();
+    let (legacy_sps, legacy_allocs) =
+        measure("legacy L-step (batch=128, no penalty)", 30, || {
+            legacy_step(&mut backend, &mut w, &mut b, &mut vw, &mut vb, 0.05, 0.95, None);
+        });
 
-    let w = backend.weights();
-    let penalty = PenaltyState {
-        wc: w.iter().map(|l| vec![0.0; l.len()]).collect(),
-        lambda: w.iter().map(|l| vec![0.0; l.len()]).collect(),
-        mu: 0.01,
-    };
-    let s = bench("native L-step (batch=128, with penalty)", 30, || {
-        run_sgd(&mut backend, &mut opt, 1, 0.05, Some(&penalty))
+    let wc_l: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
+    let lam_l: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
+    let (legacy_pen_sps, _) = measure("legacy L-step (batch=128, with penalty)", 30, || {
+        legacy_step(
+            &mut backend,
+            &mut w,
+            &mut b,
+            &mut vw,
+            &mut vb,
+            0.05,
+            0.95,
+            Some((&wc_l, &lam_l, 0.01)),
+        );
     });
-    println!("{}  ({:.1} steps/s)", s.report(), 1.0 / s.median_s);
+
+    // ---- flat parameter plane (in-place fused step; this is exactly the
+    //      inner loop of `run_sgd`, with the per-L-step GradBuffer held
+    //      across iterations as the LC loop does) -------------------------
+    let mut grads = GradBuffer::zeros(layout.clone());
+    let (flat_sps, flat_allocs) = measure("flat L-step (batch=128, no penalty)", 30, || {
+        backend.next_loss_grads_into(&mut grads);
+        opt.step(backend.params_mut(), &grads, 0.05, None);
+    });
+
+    let wc = vec![0.0f32; layout.w_len()];
+    let lambda = vec![0.0f32; layout.w_len()];
+    let (flat_pen_sps, flat_pen_allocs) =
+        measure("flat L-step (batch=128, with penalty)", 30, || {
+            backend.next_loss_grads_into(&mut grads);
+            let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu: 0.01 };
+            opt.step(backend.params_mut(), &grads, 0.05, Some(&penalty));
+        });
+
+    println!(
+        "speedup (no penalty): {:.2}x   (with penalty): {:.2}x",
+        flat_sps / legacy_sps,
+        flat_pen_sps / legacy_pen_sps
+    );
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"lstep\",\n  \"net\": \"lenet300\",\n  \"batch\": 128,\n");
+    json.push_str("  \"before\": {\n");
+    json.push_str("    \"plane\": \"per-layer copies (pre-refactor)\",\n");
+    json.push_str(&format!("    \"steps_per_s\": {legacy_sps:.2},\n"));
+    json.push_str(&format!("    \"steps_per_s_penalty\": {legacy_pen_sps:.2},\n"));
+    json.push_str(&format!("    \"allocs_per_step\": {legacy_allocs:.1}\n"));
+    json.push_str("  },\n  \"after\": {\n");
+    json.push_str("    \"plane\": \"flat ParamSet arena\",\n");
+    json.push_str(&format!("    \"steps_per_s\": {flat_sps:.2},\n"));
+    json.push_str(&format!("    \"steps_per_s_penalty\": {flat_pen_sps:.2},\n"));
+    json.push_str(&format!("    \"allocs_per_step\": {flat_allocs:.1},\n"));
+    json.push_str(&format!("    \"allocs_per_step_penalty\": {flat_pen_allocs:.1}\n"));
+    json.push_str("  },\n");
+    json.push_str(&format!("  \"speedup\": {:.3},\n", flat_sps / legacy_sps));
+    json.push_str(&format!(
+        "  \"speedup_penalty\": {:.3}\n}}\n",
+        flat_pen_sps / legacy_pen_sps
+    ));
+    match std::fs::write("BENCH_lstep.json", &json) {
+        Ok(()) => println!("wrote BENCH_lstep.json"),
+        Err(e) => eprintln!("could not write BENCH_lstep.json: {e}"),
+    }
 
     // PJRT backend, if compiled in and artifacts were built
     #[cfg(feature = "pjrt")]
@@ -49,7 +217,7 @@ fn main() {
                 .expect("pjrt backend");
             // warm the executable cache
             let _ = pjrt.next_loss_grads();
-            let mut popt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.95);
+            let mut popt = FlatNesterov::new(pjrt.layout(), 0.95);
             let s = bench("pjrt L-step (batch from artifact)", 30, || {
                 run_sgd(&mut pjrt, &mut popt, 1, 0.05, None)
             });

@@ -1,11 +1,17 @@
 #!/bin/sh
-# Tier-1 verification: release build + tests + bench compilation + fmt.
-# Equivalent to `make tier1`; kept as a script for environments without make.
+# Tier-1 verification: release build + tests + bench compilation + clippy
+# + fmt. Equivalent to `make tier1`; kept as a script for environments
+# without make.
 set -eu
 
 cargo build --release
 cargo test -q
 cargo bench --no-run
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -- -D warnings
+else
+    echo "cargo-clippy not installed; skipping lint"
+fi
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt -- --check
 else

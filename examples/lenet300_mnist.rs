@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     // manual training loop to print the loss curve
     let net = lcquant::nn::Mlp::new(&spec, seed);
     let mut backend = lcquant::coordinator::NativeBackend::new(net, train, Some(test), p.batch, seed);
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), p.momentum);
+    let mut opt = FlatNesterov::new(backend.layout(), p.momentum);
     let chunk = (ref_steps / 10).max(1);
     let mut done = 0;
     println!("step,loss,train_err");

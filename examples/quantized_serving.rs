@@ -53,7 +53,7 @@ fn main() -> Result<()> {
     let spec = MlpSpec::lenet300();
     let net = Mlp::new(&spec, 1);
     let mut backend = NativeBackend::new(net, train, Some(test), 128, 1);
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+    let mut opt = FlatNesterov::new(backend.layout(), 0.95);
     run_sgd(&mut backend, &mut opt, 400, 0.1, None);
     let w_ref = backend.weights();
     let b_ref = backend.biases();
@@ -74,7 +74,7 @@ fn main() -> Result<()> {
         backend.set_biases(&b_ref);
         let lc = quantize(&mut backend, scheme);
         let biases = backend.biases();
-        let model = PackedModel::from_lc(name, &spec, &lc, &biases)?;
+        let model = PackedModel::from_lc(name, &spec, &lc, backend.params())?;
         println!(
             "{name}: train err {:.2}%, ρ = ×{:.1} on disk ({} KiB vs {} KiB dense)",
             lc.train_err,

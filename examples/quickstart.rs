@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let (p1, p0) = spec.param_counts();
     let net = Mlp::new(&spec, 1);
     let mut backend = NativeBackend::new(net, train, Some(test), 128, 1);
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.95);
+    let mut opt = FlatNesterov::new(backend.layout(), 0.95);
     run_sgd(&mut backend, &mut opt, 600, 0.1, None);
     let (ref_loss, ref_err) = backend.eval_train();
     let ref_test = backend.eval_test().unwrap().1;

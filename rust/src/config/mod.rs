@@ -28,11 +28,13 @@ pub struct RunConfig {
 pub struct ServeSettings {
     pub max_batch: usize,
     pub max_wait_ms: f64,
+    /// Client threads the `serve-smoke` CLI drives traffic with.
+    pub smoke_clients: usize,
 }
 
 impl Default for ServeSettings {
     fn default() -> ServeSettings {
-        ServeSettings { max_batch: 64, max_wait_ms: 2.0 }
+        ServeSettings { max_batch: 64, max_wait_ms: 2.0, smoke_clients: 8 }
     }
 }
 
@@ -202,6 +204,7 @@ impl RunConfig {
             Some(n) => ServeSettings {
                 max_batch: get_u(n, "max_batch", d.serve.max_batch),
                 max_wait_ms: get_f(n, "max_wait_ms", d.serve.max_wait_ms),
+                smoke_clients: get_u(n, "smoke_clients", d.serve.smoke_clients).max(1),
             },
             None => d.serve.clone(),
         };
@@ -273,13 +276,19 @@ mod tests {
 
     #[test]
     fn serve_section_parses() {
-        let c = RunConfig::from_json(r#"{"serve": {"max_batch": 8, "max_wait_ms": 0.5}}"#)
-            .unwrap();
+        let c = RunConfig::from_json(
+            r#"{"serve": {"max_batch": 8, "max_wait_ms": 0.5, "smoke_clients": 3}}"#,
+        )
+        .unwrap();
         assert_eq!(c.serve.max_batch, 8);
         assert_eq!(c.serve.max_wait_ms, 0.5);
+        assert_eq!(c.serve.smoke_clients, 3);
         let sc = c.serve.to_server_config();
         assert_eq!(sc.max_batch, 8);
         assert_eq!(sc.max_wait, std::time::Duration::from_micros(500));
+        // omitted -> default 8
+        let d = RunConfig::from_json(r#"{"serve": {"max_batch": 4}}"#).unwrap();
+        assert_eq!(d.serve.smoke_clients, 8);
     }
 
     #[test]

@@ -6,11 +6,16 @@
 //!   quantization (Han et al. 2015's "trained quantization").
 //! * **BinaryConnect** — gradient at quantized weights, update to
 //!   continuous weights (Courbariaux et al. 2015).
+//!
+//! All three consume the flat parameter plane: quantizers read per-layer
+//! arena views, quantized weights accumulate in one flat buffer, and
+//! swapping parameter sets for evaluation is a flat memcpy
+//! (`set_weights_flat`) rather than per-layer vector traffic.
 
 use super::sgd_driver::{run_quantized_grad_sgd, run_sgd, FlatNesterov};
 use super::Backend;
 use crate::nn::sgd::ClippedLrSchedule;
-use crate::quant::{LayerQuantizer, Scheme};
+use crate::quant::{LayerQuantizer, QuantOut, Scheme};
 
 /// Result common to the baselines.
 #[derive(Clone, Debug)]
@@ -26,28 +31,42 @@ pub struct BaselineResult {
     pub codebook_history: Vec<Vec<Vec<f32>>>,
 }
 
-fn eval_with(backend: &mut dyn Backend, wc: &[Vec<f32>], restore: &[Vec<f32>]) -> (f32, f32, Option<f32>) {
-    backend.set_weights(wc);
+/// Evaluate with `wc` in the arena, then restore `restore` (both flat).
+fn eval_with(
+    backend: &mut dyn Backend,
+    wc: &[f32],
+    restore: &[f32],
+) -> (f32, f32, Option<f32>) {
+    backend.set_weights_flat(wc);
     let (l, e) = backend.eval_train();
     let te = backend.eval_test().map(|(_, e)| e);
-    backend.set_weights(restore);
+    backend.set_weights_flat(restore);
     (l, e, te)
 }
 
 /// DC: quantize the (already trained) reference weights once.
 /// Leaves the backend holding the quantized weights.
 pub fn direct_compression(backend: &mut dyn Backend, scheme: &Scheme, seed: u64) -> BaselineResult {
-    let w = backend.weights();
-    let mut wc = Vec::new();
-    let mut codebooks = Vec::new();
-    for (l, wl) in w.iter().enumerate() {
+    let layout = backend.layout().clone();
+    let mut wc_flat = vec![0.0f32; layout.w_len()];
+    let mut codebooks = Vec::with_capacity(layout.n_layers());
+    let mut out = QuantOut::default();
+    for l in 0..layout.n_layers() {
         let mut q = LayerQuantizer::new(scheme.clone(), seed.wrapping_add(l as u64));
-        let out = q.compress(wl);
-        wc.push(out.wc);
-        codebooks.push(out.codebook);
+        q.compress_into(backend.params().w_layer(l), &mut out);
+        wc_flat[layout.w_range(l)].copy_from_slice(&out.wc);
+        codebooks.push(out.codebook.clone());
     }
-    let (train_loss, train_err, test_err) = eval_with(backend, &wc, &wc);
-    BaselineResult { wc, codebooks, train_loss, train_err, test_err, loss_history: vec![train_loss], codebook_history: Vec::new() }
+    let (train_loss, train_err, test_err) = eval_with(backend, &wc_flat, &wc_flat);
+    BaselineResult {
+        wc: layout.w_per_layer(&wc_flat),
+        codebooks,
+        train_loss,
+        train_err,
+        test_err,
+        loss_history: vec![train_loss],
+        codebook_history: Vec::new(),
+    }
 }
 
 /// iDC: alternate (a) SGD on the unpenalized loss starting from the
@@ -65,46 +84,54 @@ pub fn iterated_direct_compression(
     seed: u64,
     eval_every: usize,
 ) -> BaselineResult {
-    let n_layers = backend.n_layers();
+    let layout = backend.layout().clone();
+    let n_layers = layout.n_layers();
     let mut quantizers: Vec<LayerQuantizer> = (0..n_layers)
         .map(|l| LayerQuantizer::new(scheme.clone(), seed.wrapping_add(l as u64)))
         .collect();
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), momentum);
+    let mut outs: Vec<QuantOut> = (0..n_layers).map(|_| QuantOut::default()).collect();
+    let mut opt = FlatNesterov::new(&layout, momentum);
     let mut loss_history = Vec::new();
     let mut codebook_history: Vec<Vec<Vec<f32>>> = Vec::new();
 
+    let mut wc_flat = vec![0.0f32; layout.w_len()];
+    let mut w_snap = vec![0.0f32; layout.w_len()];
+
     // initial DC
-    let w0 = backend.weights();
-    let mut wc: Vec<Vec<f32>> = Vec::new();
-    let mut codebooks: Vec<Vec<f32>> = Vec::new();
-    for (l, q) in quantizers.iter_mut().enumerate() {
-        let out = q.compress(&w0[l]);
-        wc.push(out.wc);
-        codebooks.push(out.codebook);
+    for l in 0..n_layers {
+        quantizers[l].compress_into(backend.params().w_layer(l), &mut outs[l]);
+        wc_flat[layout.w_range(l)].copy_from_slice(&outs[l].wc);
     }
 
     for j in 0..iterations {
         // (a) retrain from the quantized weights, no penalty
-        backend.set_weights(&wc);
+        backend.set_weights_flat(&wc_flat);
         opt.reset();
         run_sgd(backend, &mut opt, l_steps, lr.lr(j, 0.0), None);
         // (b) re-quantize
-        let w = backend.weights();
         for l in 0..n_layers {
-            let out = quantizers[l].compress(&w[l]);
-            wc[l] = out.wc;
-            codebooks[l] = out.codebook;
+            quantizers[l].compress_into(backend.params().w_layer(l), &mut outs[l]);
+            wc_flat[layout.w_range(l)].copy_from_slice(&outs[l].wc);
         }
-        codebook_history.push(codebooks.clone());
+        codebook_history.push(outs.iter().map(|o| o.codebook.clone()).collect());
         if eval_every > 0 && (j % eval_every == 0 || j + 1 == iterations) {
-            let (l, _, _) = eval_with(backend, &wc, &w);
+            w_snap.copy_from_slice(backend.params().w_flat());
+            let (l, _, _) = eval_with(backend, &wc_flat, &w_snap);
             loss_history.push(l);
         }
     }
-    let w = backend.weights();
-    let (train_loss, train_err, test_err) = eval_with(backend, &wc, &w);
-    backend.set_weights(&wc);
-    BaselineResult { wc, codebooks, train_loss, train_err, test_err, loss_history, codebook_history }
+    w_snap.copy_from_slice(backend.params().w_flat());
+    let (train_loss, train_err, test_err) = eval_with(backend, &wc_flat, &w_snap);
+    backend.set_weights_flat(&wc_flat);
+    BaselineResult {
+        wc: layout.w_per_layer(&wc_flat),
+        codebooks: outs.iter().map(|o| o.codebook.clone()).collect(),
+        train_loss,
+        train_err,
+        test_err,
+        loss_history,
+        codebook_history,
+    }
 }
 
 /// BinaryConnect (generalized to any fixed scheme): `steps` minibatch
@@ -118,21 +145,31 @@ pub fn binary_connect(
     momentum: f32,
     seed: u64,
 ) -> BaselineResult {
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), momentum);
+    let layout = backend.layout().clone();
+    let mut opt = FlatNesterov::new(&layout, momentum);
     run_quantized_grad_sgd(backend, &mut opt, steps, lr, scheme, seed);
     // final drastic quantization (the deployed net must be quantized)
-    let w = backend.weights();
-    let mut wc = Vec::new();
-    let mut codebooks = Vec::new();
-    for (l, wl) in w.iter().enumerate() {
+    let mut wc_flat = vec![0.0f32; layout.w_len()];
+    let mut codebooks = Vec::with_capacity(layout.n_layers());
+    let mut out = QuantOut::default();
+    for l in 0..layout.n_layers() {
         let mut q = LayerQuantizer::new(scheme.clone(), seed.wrapping_add(100 + l as u64));
-        let out = q.compress(wl);
-        wc.push(out.wc);
-        codebooks.push(out.codebook);
+        q.compress_into(backend.params().w_layer(l), &mut out);
+        wc_flat[layout.w_range(l)].copy_from_slice(&out.wc);
+        codebooks.push(out.codebook.clone());
     }
-    let (train_loss, train_err, test_err) = eval_with(backend, &wc, &w);
-    backend.set_weights(&wc);
-    BaselineResult { wc, codebooks, train_loss, train_err, test_err, loss_history: vec![train_loss], codebook_history: Vec::new() }
+    let w_snap = backend.params().w_flat().to_vec();
+    let (train_loss, train_err, test_err) = eval_with(backend, &wc_flat, &w_snap);
+    backend.set_weights_flat(&wc_flat);
+    BaselineResult {
+        wc: layout.w_per_layer(&wc_flat),
+        codebooks,
+        train_loss,
+        train_err,
+        test_err,
+        loss_history: vec![train_loss],
+        codebook_history: Vec::new(),
+    }
 }
 
 #[cfg(test)]
@@ -142,7 +179,7 @@ mod tests {
 
     fn trained(seed: u64) -> crate::coordinator::NativeBackend {
         let mut b = small_backend(seed);
-        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
         run_sgd(&mut b, &mut opt, 150, 0.1, None);
         b
     }

@@ -16,12 +16,22 @@
 //! The quadratic-penalty variant keeps λ ≡ 0. The C step dispatches on
 //! [`Scheme`]: k-means (warm-started) for adaptive codebooks, the closed
 //! forms of Fig. 5 for fixed ones.
+//!
+//! Everything runs on the flat parameter plane: `w` lives in the backend's
+//! [`crate::nn::params::ParamSet`] arena (updated in place by the fused
+//! optimizer), while `w_C`, `λ` and the shifted weights are three flat
+//! weight-arena-length buffers allocated **once** for the whole run. The
+//! [`PenaltyState`] handed to the L step borrows them — the per-iteration
+//! `wc.clone()`/`lambda.clone()` of the per-layer representation is gone —
+//! and the multiplier update + feasibility norm fuse into one pass
+//! ([`crate::linalg::vecops::update_multipliers_fused`]).
 
 use super::schedule::MuSchedule;
 use super::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
 use super::Backend;
+use crate::linalg::vecops;
 use crate::nn::sgd::ClippedLrSchedule;
-use crate::quant::{LayerQuantizer, Scheme};
+use crate::quant::{LayerQuantizer, QuantOut, Scheme};
 
 /// Penalty method used by the outer loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -119,54 +129,48 @@ pub struct LcResult {
     pub test_err: Option<f32>,
 }
 
-fn feasibility_norm(w: &[Vec<f32>], wc: &[Vec<f32>]) -> (f32, f32) {
-    let mut dist2 = 0.0f64;
-    let mut norm2 = 0.0f64;
-    for (wl, wcl) in w.iter().zip(wc) {
-        for (a, b) in wl.iter().zip(wcl) {
-            dist2 += ((a - b) as f64).powi(2);
-            norm2 += (*a as f64).powi(2);
-        }
-    }
-    (dist2.sqrt() as f32, norm2.sqrt() as f32)
-}
-
-/// Evaluate the quantized net without disturbing the continuous weights.
+/// Evaluate the quantized net without disturbing the continuous weights:
+/// snapshot the weight arena into `w_snap`, swap in `wc`, evaluate, swap
+/// back. Flat memcpys, no per-layer traffic.
 fn eval_quantized(
     backend: &mut dyn Backend,
-    w: &[Vec<f32>],
-    wc: &[Vec<f32>],
+    wc: &[f32],
+    w_snap: &mut [f32],
 ) -> (f32, f32, Option<f32>) {
-    backend.set_weights(wc);
+    w_snap.copy_from_slice(backend.params().w_flat());
+    backend.set_weights_flat(wc);
     let (l, e) = backend.eval_train();
     let te = backend.eval_test().map(|(_, e)| e);
-    backend.set_weights(w);
+    backend.set_weights_flat(w_snap);
     (l, e, te)
 }
 
 /// Run the LC algorithm on a (trained) reference net held by `backend`.
 pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
-    let n_layers = backend.n_layers();
+    let layout = backend.layout().clone();
+    let n_layers = layout.n_layers();
+    let w_len = layout.w_len();
     let mut quantizers: Vec<LayerQuantizer> = (0..n_layers)
         .map(|l| LayerQuantizer::new(cfg.scheme.clone(), cfg.seed.wrapping_add(l as u64)))
         .collect();
+    // Per-layer C-step outputs, reused across all iterations.
+    let mut outs: Vec<QuantOut> = (0..n_layers).map(|_| QuantOut::default()).collect();
+
+    // The run's flat buffers, allocated once: quantized weights, Lagrange
+    // multipliers, shifted weights (C-step input), and an eval snapshot.
+    let mut wc = vec![0.0f32; w_len];
+    let mut lambda = vec![0.0f32; w_len];
+    let mut shifted = vec![0.0f32; w_len];
+    let mut w_snap = vec![0.0f32; w_len];
 
     // --- initial C step (μ → 0⁺): direct compression of the reference ---
-    let mut w = backend.weights();
-    let mut wc: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
-    let mut codebooks: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
-    let mut assignments: Vec<Vec<u32>> = Vec::with_capacity(n_layers);
-    for (l, q) in quantizers.iter_mut().enumerate() {
-        let out = q.compress(&w[l]);
-        wc.push(out.wc);
-        codebooks.push(out.codebook);
-        assignments.push(out.assignments);
+    for l in 0..n_layers {
+        quantizers[l].compress_into(backend.params().w_layer(l), &mut outs[l]);
+        wc[layout.w_range(l)].copy_from_slice(&outs[l].wc);
     }
-    let mut lambda: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
 
-    let mut opt = FlatNesterov::new(&w, &backend.biases(), cfg.momentum);
+    let mut opt = FlatNesterov::new(&layout, cfg.momentum);
     let mut history: Vec<LcRecord> = Vec::with_capacity(cfg.iterations);
-    let mut shifted: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
 
     for j in 0..cfg.iterations {
         let mu = cfg.mu.mu(j);
@@ -175,49 +179,55 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
         // ---- L step: SGD on L(w) + μ/2 ‖w − w_C − λ/μ‖² ----
         // fresh velocities: the penalized objective changed (new μ, w_C, λ)
         opt.reset();
-        let penalty = PenaltyState { wc: wc.clone(), lambda: lambda.clone(), mu };
-        let lstep_loss = run_sgd(backend, &mut opt, cfg.l_steps, lr, Some(&penalty));
-        w = backend.weights();
+        let lstep_loss = {
+            let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu };
+            run_sgd(backend, &mut opt, cfg.l_steps, lr, Some(&penalty))
+        };
 
         // ---- C step: Θ = Π(w − λ/μ) ----
         let mut kmeans_iters = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
+            let range = layout.w_range(l);
             match cfg.mode {
                 PenaltyMode::AugmentedLagrangian => {
-                    crate::linalg::vecops::shift_by_multipliers(
-                        &w[l],
-                        &lambda[l],
+                    vecops::shift_by_multipliers(
+                        backend.params().w_layer(l),
+                        &lambda[range.clone()],
                         mu,
-                        &mut shifted[l],
+                        &mut shifted[range.clone()],
                     );
                 }
-                PenaltyMode::QuadraticPenalty => shifted[l].copy_from_slice(&w[l]),
+                PenaltyMode::QuadraticPenalty => {
+                    shifted[range.clone()].copy_from_slice(backend.params().w_layer(l));
+                }
             }
-            let out = quantizers[l].compress(&shifted[l]);
-            wc[l] = out.wc;
-            codebooks[l] = out.codebook;
-            assignments[l] = out.assignments;
-            kmeans_iters.push(out.iterations);
+            quantizers[l].compress_into(&shifted[range.clone()], &mut outs[l]);
+            wc[range].copy_from_slice(&outs[l].wc);
+            kmeans_iters.push(outs[l].iterations);
         }
 
-        // ---- multiplier update: λ ← λ − μ(w − w_C) ----
-        if cfg.mode == PenaltyMode::AugmentedLagrangian {
-            for l in 0..n_layers {
-                crate::linalg::vecops::update_multipliers(&mut lambda[l], &w[l], &wc[l], mu);
+        // ---- multiplier update λ ← λ − μ(w − w_C), fused with the
+        //      feasibility norms (one pass over the weight arena) ----
+        let (dist, norm) = match cfg.mode {
+            PenaltyMode::AugmentedLagrangian => {
+                vecops::update_multipliers_fused(&mut lambda, backend.params().w_flat(), &wc, mu)
             }
-        }
+            PenaltyMode::QuadraticPenalty => {
+                vecops::feasibility(backend.params().w_flat(), &wc)
+            }
+        };
 
-        let (dist, norm) = feasibility_norm(&w, &wc);
         let do_eval = cfg.eval_every > 0 && (j % cfg.eval_every == 0 || j + 1 == cfg.iterations);
         let (tl, te, tst) = if do_eval {
-            let (a, b, c) = eval_quantized(backend, &w, &wc);
+            let (a, b, c) = eval_quantized(backend, &wc, &mut w_snap);
             (Some(a), Some(b), c)
         } else {
             (None, None, None)
         };
         let weight_samples = if cfg.n_weight_samples > 0 {
-            w.iter()
-                .map(|wl| {
+            (0..n_layers)
+                .map(|l| {
+                    let wl = backend.params().w_layer(l);
                     let stride = (wl.len() / cfg.n_weight_samples).max(1);
                     wl.iter().step_by(stride).take(cfg.n_weight_samples).copied().collect()
                 })
@@ -234,7 +244,7 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
             train_loss_wc: tl,
             train_err_wc: te,
             test_err_wc: tst,
-            codebooks: codebooks.clone(),
+            codebooks: outs.iter().map(|o| o.codebook.clone()).collect(),
             weight_samples,
         });
         crate::debug!(
@@ -247,14 +257,15 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
     }
 
     // Final: adopt the quantized weights (the solution is w_C = Δ(C, Z)).
-    let (train_loss, train_err, test_err) = eval_quantized(backend, &w, &wc);
-    backend.set_weights(&wc);
+    let (train_loss, train_err, test_err) = eval_quantized(backend, &wc, &mut w_snap);
+    let w_per_layer = layout.w_per_layer(backend.params().w_flat());
+    backend.set_weights_flat(&wc);
     LcResult {
-        wc,
-        codebooks,
-        assignments,
+        wc: layout.w_per_layer(&wc),
+        codebooks: outs.iter().map(|o| o.codebook.clone()).collect(),
+        assignments: outs.iter().map(|o| o.assignments.clone()).collect(),
         scheme: cfg.scheme.clone(),
-        w,
+        w: w_per_layer,
         history,
         train_loss,
         train_err,
@@ -265,12 +276,12 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::test_support::small_backend;
     use crate::coordinator::sgd_driver::{run_sgd, FlatNesterov};
+    use crate::coordinator::test_support::small_backend;
 
     fn trained_backend(seed: u64) -> crate::coordinator::NativeBackend {
         let mut b = small_backend(seed);
-        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
         run_sgd(&mut b, &mut opt, 150, 0.1, None);
         b
     }

@@ -6,6 +6,13 @@
 //! μ schedule ([`schedule`]). [`baselines`] implements DC, iDC and
 //! BinaryConnect for the paper's comparisons.
 //!
+//! Backends expose their parameters as a **flat contiguous arena**
+//! ([`ParamSet`]): the coordinator reads/writes per-layer views around the
+//! C step and the optimizer updates the whole arena in place, so the
+//! per-minibatch step path performs **no heap allocation and no
+//! full-parameter copies** — gradients stream into a caller-owned
+//! [`GradBuffer`] via [`Backend::next_loss_grads_into`].
+//!
 //! Two interchangeable backends compute loss/gradients:
 //! * [`NativeBackend`] — the pure-rust MLP ([`crate::nn`]);
 //! * [`crate::runtime::PjrtBackend`] — the AOT JAX artifact via PJRT.
@@ -22,45 +29,86 @@ pub mod sgd_driver;
 pub use lc::{lc_quantize, LcConfig, LcRecord, LcResult, PenaltyMode};
 pub use schedule::MuSchedule;
 
-use crate::data::batcher::Batcher;
+use crate::data::batcher::{Batch, Batcher};
 use crate::data::Dataset;
-use crate::nn::Mlp;
+use crate::nn::params::{GradBuffer, ParamLayout, ParamSet};
+use crate::nn::{Mlp, MlpScratch};
 use crate::util::rng::Rng;
 
-/// Loss gradients in backend-independent form: per-layer weight and bias
-/// gradient vectors (row-major, matching the layer's weight layout).
-#[derive(Clone, Debug)]
-pub struct FlatGrads {
-    pub dw: Vec<Vec<f32>>,
-    pub db: Vec<Vec<f32>>,
-}
-
 /// A source of minibatch loss/gradients for the L step. Implementations
-/// hold the model parameters; the coordinator reads/writes them around the
-/// C step.
+/// own the model parameters as a flat [`ParamSet`] arena; the coordinator
+/// and optimizer operate on views of it in place.
 pub trait Backend {
-    fn n_layers(&self) -> usize;
-    /// Per-layer multiplicative weights.
-    fn weights(&self) -> Vec<Vec<f32>>;
-    fn set_weights(&mut self, w: &[Vec<f32>]);
-    /// Per-layer biases.
-    fn biases(&self) -> Vec<Vec<f32>>;
-    fn set_biases(&mut self, b: &[Vec<f32>]);
-    /// Loss and gradients at the current parameters on the next minibatch.
-    fn next_loss_grads(&mut self) -> (f32, FlatGrads);
+    /// The flat parameter arena (weights then biases).
+    fn params(&self) -> &ParamSet;
+
+    /// Mutable access to the arena — the optimizer's in-place update path.
+    fn params_mut(&mut self) -> &mut ParamSet;
+
+    /// Loss at the current parameters on the next minibatch; gradients are
+    /// written (overwriting) into `grads`. Steady-state allocation-free on
+    /// the native backend.
+    fn next_loss_grads_into(&mut self, grads: &mut GradBuffer) -> f32;
+
     /// (loss, error %) on the training set.
     fn eval_train(&mut self) -> (f32, f32);
+
     /// (loss, error %) on the test set, if one exists.
     fn eval_test(&mut self) -> Option<(f32, f32)>;
+
+    // ---- provided conveniences (API edges; allocating forms are not on
+    //      the step path) ------------------------------------------------
+
+    fn layout(&self) -> &ParamLayout {
+        self.params().layout()
+    }
+
+    fn n_layers(&self) -> usize {
+        self.layout().n_layers()
+    }
+
+    /// Per-layer clones of the multiplicative weights.
+    fn weights(&self) -> Vec<Vec<f32>> {
+        self.params().w_cloned()
+    }
+
+    fn set_weights(&mut self, w: &[Vec<f32>]) {
+        self.params_mut().set_w_per_layer(w);
+    }
+
+    /// Overwrite all weights from a flat weight-arena-length slice — one
+    /// memcpy, no per-layer traffic.
+    fn set_weights_flat(&mut self, w: &[f32]) {
+        self.params_mut().w_flat_mut().copy_from_slice(w);
+    }
+
+    /// Per-layer clones of the biases.
+    fn biases(&self) -> Vec<Vec<f32>> {
+        self.params().b_cloned()
+    }
+
+    fn set_biases(&mut self, b: &[Vec<f32>]) {
+        self.params_mut().set_b_per_layer(b);
+    }
+
+    /// Allocating convenience around [`Backend::next_loss_grads_into`].
+    fn next_loss_grads(&mut self) -> (f32, GradBuffer) {
+        let mut grads = GradBuffer::zeros(self.layout().clone());
+        let loss = self.next_loss_grads_into(&mut grads);
+        (loss, grads)
+    }
 }
 
-/// Pure-rust backend over [`Mlp`] + a minibatcher.
+/// Pure-rust backend over [`Mlp`] + a minibatcher, with reusable batch and
+/// activation scratch so the step path never allocates.
 pub struct NativeBackend {
     pub net: Mlp,
     pub train: Dataset,
     pub test: Option<Dataset>,
     batcher: Batcher,
     rng: Rng,
+    scratch: MlpScratch,
+    batch_buf: Batch,
     /// Chunk size for dataset evaluation.
     pub eval_chunk: usize,
 }
@@ -68,42 +116,40 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new(net: Mlp, train: Dataset, test: Option<Dataset>, batch: usize, seed: u64) -> Self {
         let batcher = Batcher::new(train.len(), batch.min(train.len()), seed);
-        NativeBackend { net, train, test, batcher, rng: Rng::new(seed ^ 0xABCD), eval_chunk: 1024 }
+        NativeBackend {
+            net,
+            train,
+            test,
+            batcher,
+            rng: Rng::new(seed ^ 0xABCD),
+            scratch: MlpScratch::new(),
+            batch_buf: Batch::empty(),
+            eval_chunk: 1024,
+        }
     }
 }
 
 impl Backend for NativeBackend {
-    fn n_layers(&self) -> usize {
-        self.net.n_layers()
+    fn params(&self) -> &ParamSet {
+        self.net.params()
     }
-    fn weights(&self) -> Vec<Vec<f32>> {
-        self.net.weights_cloned()
+    fn params_mut(&mut self) -> &mut ParamSet {
+        self.net.params_mut()
     }
-    fn set_weights(&mut self, w: &[Vec<f32>]) {
-        self.net.set_weights(w);
-    }
-    fn biases(&self) -> Vec<Vec<f32>> {
-        self.net.layers.iter().map(|l| l.b.clone()).collect()
-    }
-    fn set_biases(&mut self, b: &[Vec<f32>]) {
-        for (l, bb) in self.net.layers.iter_mut().zip(b) {
-            l.b.copy_from_slice(bb);
-        }
-    }
-    fn next_loss_grads(&mut self) -> (f32, FlatGrads) {
-        let batch = self.batcher.next_batch(&self.train);
-        let has_dropout = self.net.layers.iter().any(|l| l.keep < 1.0);
+    fn next_loss_grads_into(&mut self, grads: &mut GradBuffer) -> f32 {
+        self.batcher.next_batch_into(&self.train, &mut self.batch_buf);
+        let has_dropout = self.net.has_dropout();
         let rng = if has_dropout { Some(&mut self.rng) } else { None };
-        let (loss, _err, grads) =
-            self.net
-                .loss_and_grads(&batch.x, &batch.y, &batch.labels, has_dropout, rng);
-        (
-            loss,
-            FlatGrads {
-                dw: grads.dw.into_iter().map(|m| m.data).collect(),
-                db: grads.db,
-            },
-        )
+        let (loss, _err) = self.net.loss_grads_into(
+            &self.batch_buf.x,
+            &self.batch_buf.y,
+            &self.batch_buf.labels,
+            has_dropout,
+            rng,
+            &mut self.scratch,
+            grads,
+        );
+        loss
     }
     fn eval_train(&mut self) -> (f32, f32) {
         self.net.evaluate_dataset(&self.train, self.eval_chunk)
@@ -143,10 +189,27 @@ mod tests {
         w[0][0] = 42.0;
         b.set_weights(&w);
         assert_eq!(b.weights()[0][0], 42.0);
+        assert_eq!(b.params().w_flat()[0], 42.0);
         let mut bias = b.biases();
         bias[1][2] = -1.0;
         b.set_biases(&bias);
         assert_eq!(b.biases()[1][2], -1.0);
+        assert_eq!(b.params().b_layer(1)[2], -1.0);
+    }
+
+    #[test]
+    fn flat_set_matches_per_layer_set() {
+        let mut b = small_backend(5);
+        let mut flat = b.params().w_flat().to_vec();
+        for (i, v) in flat.iter_mut().enumerate() {
+            *v = i as f32 * 0.01;
+        }
+        b.set_weights_flat(&flat);
+        let per_layer = b.weights();
+        let layout = b.layout().clone();
+        for l in 0..layout.n_layers() {
+            assert_eq!(per_layer[l].as_slice(), layout.w_slice(&flat, l));
+        }
     }
 
     #[test]
@@ -154,11 +217,21 @@ mod tests {
         let mut b = small_backend(2);
         let (loss, g) = b.next_loss_grads();
         assert!(loss.is_finite() && loss > 0.0);
-        let w = b.weights();
-        assert_eq!(g.dw.len(), w.len());
-        for (gw, ww) in g.dw.iter().zip(&w) {
-            assert_eq!(gw.len(), ww.len());
-        }
+        assert_eq!(g.layout(), b.layout());
+        assert_eq!(g.w_flat().len(), b.params().w_flat().len());
+        assert_eq!(g.b_flat().len(), b.params().b_flat().len());
+    }
+
+    #[test]
+    fn grads_into_reuses_buffer_and_overwrites() {
+        let mut b = small_backend(4);
+        let mut g = GradBuffer::zeros(b.layout().clone());
+        let l1 = b.next_loss_grads_into(&mut g);
+        let first = g.w_flat().to_vec();
+        let l2 = b.next_loss_grads_into(&mut g);
+        assert!(l1.is_finite() && l2.is_finite());
+        // different minibatch ⇒ overwritten gradients, same buffer
+        assert_ne!(first, g.w_flat());
     }
 
     #[test]

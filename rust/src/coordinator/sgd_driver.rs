@@ -1,92 +1,24 @@
 //! Backend-independent SGD loop used by the L step, the reference-net
-//! trainer and the BinaryConnect baseline. Owns the Nesterov velocity state
-//! over flat per-layer parameter vectors.
+//! trainer and the BinaryConnect baseline, over the flat parameter plane.
+//!
+//! The per-minibatch step is `next_loss_grads_into` (gradients into a
+//! reusable [`GradBuffer`]) followed by the fused [`FlatNesterov::step`]
+//! directly on the backend's [`crate::nn::params::ParamSet`] arena — no
+//! `set_weights` copies, no per-step allocation. The [`PenaltyState`]
+//! borrows the coordinator's flat `w_C`/`λ` buffers, so starting an L step
+//! clones nothing.
 
-use super::{Backend, FlatGrads};
-use crate::quant::{LayerQuantizer, Scheme};
+use super::Backend;
+use crate::nn::params::GradBuffer;
+use crate::quant::{LayerQuantizer, QuantOut, Scheme};
 
-/// Per-layer penalty targets for the L step (the μ/2‖w − w_C − λ/μ‖² term).
-pub struct PenaltyState {
-    pub wc: Vec<Vec<f32>>,
-    pub lambda: Vec<Vec<f32>>,
-    pub mu: f32,
-}
+pub use crate::nn::sgd::{FlatNesterov, PenaltyState};
 
-impl PenaltyState {
-    pub fn zeros_like(w: &[Vec<f32>]) -> PenaltyState {
-        PenaltyState {
-            wc: w.iter().map(|l| vec![0.0; l.len()]).collect(),
-            lambda: w.iter().map(|l| vec![0.0; l.len()]).collect(),
-            mu: 0.0,
-        }
-    }
-}
-
-/// Nesterov-momentum optimizer over flat per-layer parameters.
-pub struct FlatNesterov {
-    vw: Vec<Vec<f32>>,
-    vb: Vec<Vec<f32>>,
-    pub momentum: f32,
-}
-
-impl FlatNesterov {
-    pub fn new(w: &[Vec<f32>], b: &[Vec<f32>], momentum: f32) -> FlatNesterov {
-        FlatNesterov {
-            vw: w.iter().map(|l| vec![0.0; l.len()]).collect(),
-            vb: b.iter().map(|l| vec![0.0; l.len()]).collect(),
-            momentum,
-        }
-    }
-
-    pub fn reset(&mut self) {
-        for v in self.vw.iter_mut() {
-            v.fill(0.0);
-        }
-        for v in self.vb.iter_mut() {
-            v.fill(0.0);
-        }
-    }
-
-    /// In-place Nesterov update of (w, b) given gradients, lr, and an
-    /// optional penalty (applied to weights only).
-    pub fn step(
-        &mut self,
-        w: &mut [Vec<f32>],
-        b: &mut [Vec<f32>],
-        grads: &FlatGrads,
-        lr: f32,
-        penalty: Option<&PenaltyState>,
-    ) {
-        let m = self.momentum;
-        for l in 0..w.len() {
-            let (wl, gl, vl) = (&mut w[l], &grads.dw[l], &mut self.vw[l]);
-            match penalty {
-                Some(p) if p.mu > 0.0 => {
-                    let (wc, lam, mu) = (&p.wc[l], &p.lambda[l], p.mu);
-                    for i in 0..wl.len() {
-                        let g = gl[i] + mu * (wl[i] - wc[i]) - lam[i];
-                        vl[i] = m * vl[i] - lr * g;
-                        wl[i] += m * vl[i] - lr * g;
-                    }
-                }
-                _ => {
-                    for i in 0..wl.len() {
-                        vl[i] = m * vl[i] - lr * gl[i];
-                        wl[i] += m * vl[i] - lr * gl[i];
-                    }
-                }
-            }
-            let (bl, gbl, vbl) = (&mut b[l], &grads.db[l], &mut self.vb[l]);
-            for i in 0..bl.len() {
-                vbl[i] = m * vbl[i] - lr * gbl[i];
-                bl[i] += m * vbl[i] - lr * gbl[i];
-            }
-        }
-    }
-}
-
-/// Run `steps` SGD minibatch updates on the backend's parameters.
+/// Run `steps` SGD minibatch updates in place on the backend's parameters.
 /// Returns the average minibatch loss (without the penalty term).
+///
+/// One [`GradBuffer`] is allocated per call (not per step); the step loop
+/// itself is allocation- and copy-free.
 pub fn run_sgd(
     backend: &mut dyn Backend,
     opt: &mut FlatNesterov,
@@ -94,15 +26,12 @@ pub fn run_sgd(
     lr: f32,
     penalty: Option<&PenaltyState>,
 ) -> f32 {
-    let mut w = backend.weights();
-    let mut b = backend.biases();
+    let mut grads = GradBuffer::zeros(backend.layout().clone());
     let mut loss_sum = 0.0f64;
     for _ in 0..steps {
-        let (loss, grads) = backend.next_loss_grads();
+        let loss = backend.next_loss_grads_into(&mut grads);
         loss_sum += loss as f64;
-        opt.step(&mut w, &mut b, &grads, lr, penalty);
-        backend.set_weights(&w);
-        backend.set_biases(&b);
+        opt.step(backend.params_mut(), &grads, lr, penalty);
     }
     (loss_sum / steps.max(1) as f64) as f32
 }
@@ -110,7 +39,9 @@ pub fn run_sgd(
 /// Run `steps` BinaryConnect-style updates: the gradient is evaluated at the
 /// *quantized* parameters, the update is applied to the *continuous* ones
 /// (Courbariaux et al. 2015, deterministic rounding; generalized to any
-/// fixed quantization scheme).
+/// fixed quantization scheme). The continuous weights are kept in a flat
+/// side buffer; quantized weights are written into the backend's arena
+/// layer by layer through reusable [`QuantOut`] buffers.
 pub fn run_quantized_grad_sgd(
     backend: &mut dyn Backend,
     opt: &mut FlatNesterov,
@@ -119,26 +50,27 @@ pub fn run_quantized_grad_sgd(
     scheme: &Scheme,
     seed: u64,
 ) -> f32 {
-    let mut w = backend.weights();
-    let mut b = backend.biases();
-    let mut quantizers: Vec<LayerQuantizer> = (0..w.len())
+    let layout = backend.layout().clone();
+    let n_layers = layout.n_layers();
+    let mut quantizers: Vec<LayerQuantizer> = (0..n_layers)
         .map(|l| LayerQuantizer::new(scheme.clone(), seed.wrapping_add(l as u64)))
         .collect();
+    let mut w_cont: Vec<f32> = backend.params().w_flat().to_vec();
+    let mut outs: Vec<QuantOut> = (0..n_layers).map(|_| QuantOut::default()).collect();
+    let mut grads = GradBuffer::zeros(layout.clone());
     let mut loss_sum = 0.0f64;
     for _ in 0..steps {
         // forward/backward at quantized weights
-        let wq: Vec<Vec<f32>> = w
-            .iter()
-            .zip(quantizers.iter_mut())
-            .map(|(wl, q)| q.compress(wl).wc)
-            .collect();
-        backend.set_weights(&wq);
-        let (loss, grads) = backend.next_loss_grads();
+        for l in 0..n_layers {
+            quantizers[l].compress_into(layout.w_slice(&w_cont, l), &mut outs[l]);
+            backend.params_mut().w_layer_mut(l).copy_from_slice(&outs[l].wc);
+        }
+        let loss = backend.next_loss_grads_into(&mut grads);
         loss_sum += loss as f64;
-        // update applied to continuous weights
-        opt.step(&mut w, &mut b, &grads, lr, None);
-        backend.set_weights(&w);
-        backend.set_biases(&b);
+        // update applied to the continuous weights
+        backend.set_weights_flat(&w_cont);
+        opt.step(backend.params_mut(), &grads, lr, None);
+        w_cont.copy_from_slice(backend.params().w_flat());
     }
     (loss_sum / steps.max(1) as f64) as f32
 }
@@ -153,7 +85,7 @@ mod tests {
     fn sgd_reduces_training_loss() {
         let mut b = small_backend(10);
         let (l0, _) = b.eval_train();
-        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
         run_sgd(&mut b, &mut opt, 60, 0.1, None);
         let (l1, _) = b.eval_train();
         assert!(l1 < l0 * 0.8, "loss {l0} -> {l1}");
@@ -162,35 +94,30 @@ mod tests {
     #[test]
     fn penalty_with_huge_mu_dominates() {
         let mut b = small_backend(11);
-        let w0 = b.weights();
-        let target: Vec<Vec<f32>> = w0.iter().map(|l| vec![0.25; l.len()]).collect();
-        let penalty = PenaltyState {
-            wc: target.clone(),
-            lambda: w0.iter().map(|l| vec![0.0; l.len()]).collect(),
-            mu: 1000.0,
-        };
-        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        let w_len = b.layout().w_len();
+        let target = vec![0.25f32; w_len];
+        let lambda = vec![0.0f32; w_len];
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
+        let penalty = PenaltyState { wc: &target, lambda: &lambda, mu: 1000.0 };
         // clipped lr: 1/mu
         run_sgd(&mut b, &mut opt, 150, 1.0 / 1000.0, Some(&penalty));
         // weights should be pulled near 0.25 everywhere
-        let w = b.weights();
-        let mean_dev: f32 = w
-            .iter()
-            .flat_map(|l| l.iter().map(|v| (v - 0.25).abs()))
-            .sum::<f32>()
-            / w.iter().map(|l| l.len()).sum::<usize>() as f32;
+        let w = b.params().w_flat();
+        let mean_dev: f32 =
+            w.iter().map(|v| (v - 0.25).abs()).sum::<f32>() / w.len() as f32;
         assert!(mean_dev < 0.05, "mean deviation from target {mean_dev}");
     }
 
     #[test]
     fn quantized_grad_sgd_keeps_continuous_weights() {
         let mut b = small_backend(12);
-        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
         run_quantized_grad_sgd(&mut b, &mut opt, 30, 0.05, &Scheme::Binary, 1);
         // Continuous weights are restored on the backend after each step,
         // and should NOT be binary.
-        let w = b.weights();
-        let distinct: std::collections::BTreeSet<i64> = w[0]
+        let distinct: std::collections::BTreeSet<i64> = b
+            .params()
+            .w_layer(0)
             .iter()
             .map(|v| (v * 1e6) as i64)
             .collect();
@@ -214,11 +141,25 @@ mod tests {
         b.set_weights(&quantize_all(&w0));
         let (l0, _) = b.eval_train();
         b.set_weights(&w0);
-        let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
         run_quantized_grad_sgd(&mut b, &mut opt, 120, 0.1, &Scheme::BinaryScale, 2);
         let w = b.weights();
         b.set_weights(&quantize_all(&w));
         let (l1, _) = b.eval_train();
         assert!(l1 < l0, "binarized-net loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn run_sgd_leaves_arena_in_sync_with_views() {
+        let mut b = small_backend(14);
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
+        run_sgd(&mut b, &mut opt, 5, 0.05, None);
+        // flat arena and per-layer clones must agree (no stale copies)
+        let flat = b.params().w_flat().to_vec();
+        let per = b.weights();
+        let layout = b.layout().clone();
+        for l in 0..layout.n_layers() {
+            assert_eq!(per[l].as_slice(), layout.w_slice(&flat, l));
+        }
     }
 }

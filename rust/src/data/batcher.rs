@@ -5,11 +5,18 @@ use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
 /// A minibatch: inputs `[b, dim]`, one-hot targets `[b, n_classes]` and the
-/// raw labels.
+/// raw labels. Reused across steps via [`Batcher::next_batch_into`].
 pub struct Batch {
     pub x: Mat,
     pub y: Mat,
     pub labels: Vec<u8>,
+}
+
+impl Batch {
+    /// An empty batch; [`Batcher::next_batch_into`] sizes it on first use.
+    pub fn empty() -> Batch {
+        Batch { x: Mat::zeros(0, 0), y: Mat::zeros(0, 0), labels: Vec::new() }
+    }
 }
 
 /// Cyclic minibatcher: shuffles indices each epoch, yields fixed-size
@@ -43,19 +50,31 @@ impl Batcher {
         s
     }
 
-    /// Materialize the next batch from a dataset.
-    pub fn next_batch(&mut self, data: &Dataset) -> Batch {
+    /// Materialize the next batch into a reusable [`Batch`] — the step-path
+    /// form: after the first call sizes the buffers, subsequent calls
+    /// perform no heap allocation.
+    pub fn next_batch_into(&mut self, data: &Dataset, out: &mut Batch) {
         let b = self.batch_size;
-        let idx: Vec<usize> = self.next_indices().to_vec();
-        let mut x = Mat::zeros(b, data.dim());
-        let mut y = Mat::zeros(b, data.n_classes);
-        let mut labels = Vec::with_capacity(b);
-        for (r, &i) in idx.iter().enumerate() {
-            x.row_mut(r).copy_from_slice(data.images.row(i));
-            y[(r, data.labels[i] as usize)] = 1.0;
-            labels.push(data.labels[i]);
+        if out.x.rows != b || out.x.cols != data.dim() {
+            out.x = Mat::zeros(b, data.dim());
         }
-        Batch { x, y, labels }
+        if out.y.rows != b || out.y.cols != data.n_classes {
+            out.y = Mat::zeros(b, data.n_classes);
+        }
+        out.y.data.fill(0.0);
+        out.labels.clear();
+        for (r, &i) in self.next_indices().iter().enumerate() {
+            out.x.row_mut(r).copy_from_slice(data.images.row(i));
+            out.y[(r, data.labels[i] as usize)] = 1.0;
+            out.labels.push(data.labels[i]);
+        }
+    }
+
+    /// Materialize the next batch from a dataset (allocating convenience).
+    pub fn next_batch(&mut self, data: &Dataset) -> Batch {
+        let mut out = Batch::empty();
+        self.next_batch_into(data, &mut out);
+        out
     }
 }
 
@@ -93,6 +112,22 @@ mod tests {
             assert_eq!(batch.y[(r, l)], 1.0);
             assert_eq!(batch.y.row(r).iter().sum::<f32>(), 1.0);
         }
+    }
+
+    #[test]
+    fn into_form_matches_allocating_form() {
+        let data = SynthMnist::generate(30, 5);
+        let mut a = Batcher::new(30, 8, 9);
+        let mut b = Batcher::new(30, 8, 9);
+        let mut buf = Batch::empty();
+        for _ in 0..6 {
+            let fresh = a.next_batch(&data);
+            b.next_batch_into(&data, &mut buf);
+            assert_eq!(fresh.x.data, buf.x.data);
+            assert_eq!(fresh.y.data, buf.y.data);
+            assert_eq!(fresh.labels, buf.labels);
+        }
+        assert_eq!(a.epoch, b.epoch);
     }
 
     #[test]

@@ -119,7 +119,7 @@ pub fn train_reference_on(
 ) -> TrainedRef {
     let net = Mlp::new(spec, seed);
     let mut backend = NativeBackend::new(net, train, test, p.batch, seed);
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), p.momentum);
+    let mut opt = FlatNesterov::new(backend.layout(), p.momentum);
     // Nesterov with decaying lr, matching the paper's reference training.
     let chunk = 100.max(p.ref_steps / 20);
     let mut step = 0;

@@ -25,9 +25,26 @@
 //! Python never runs on the request path: after `make artifacts` the rust
 //! binary is self-contained.
 //!
-//! ## Quickstart: quantize → pack → serve
+//! ## The flat parameter plane
+//!
+//! Every backend stores its parameters in one contiguous arena
+//! ([`nn::params::ParamSet`]): all weights first, then all biases, with a
+//! [`nn::params::ParamLayout`] offset table handing out per-layer
+//! `&[f32]` views. The whole LC hot path runs on it in place:
+//!
+//! * [`coordinator::Backend::next_loss_grads_into`] streams gradients into
+//!   a reusable [`nn::params::GradBuffer`] (same layout);
+//! * [`nn::sgd::FlatNesterov::step`] is one fused loop over the arena —
+//!   penalty gradient `μ(w − w_C) − λ` included — so a minibatch step does
+//!   **zero heap allocation and zero full-parameter copies**
+//!   (`benches/bench_lstep.rs` measures this and emits `BENCH_lstep.json`);
+//! * the C step quantizes per-layer views and writes back through the same
+//!   layout; `w_C` and `λ` are flat buffers allocated once per LC run.
+//!
+//! ## Quickstart: train → quantize → pack → serve
 //!
 //! ```no_run
+//! use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
 //! use lcquant::coordinator::{lc_quantize, Backend, LcConfig, NativeBackend};
 //! use lcquant::data::synth_mnist::SynthMnist;
 //! use lcquant::nn::{Mlp, MlpSpec};
@@ -41,12 +58,19 @@
 //! let spec = MlpSpec::lenet300();
 //! let net = Mlp::new(&spec, 1);
 //! let mut backend = NativeBackend::new(net, data, None, 128, 1);
-//! // ... train the reference net (sgd_driver::run_sgd), then compress:
+//!
+//! // train the reference net: the optimizer state mirrors the flat arena
+//! let mut opt = FlatNesterov::new(backend.layout(), 0.95);
+//! run_sgd(&mut backend, &mut opt, 600, 0.1, None);
+//!
+//! // LC-quantize to 1 bit/weight (w_C, λ and the penalized SGD all run
+//! // over the flat parameter plane — no per-step parameter copies)
 //! let cfg = LcConfig { scheme: Scheme::AdaptiveCodebook { k: 2 }, ..LcConfig::default() };
 //! let lc = lc_quantize(&mut backend, &cfg);
 //!
-//! // pack the final C step (log2(K) bits/weight + codebook, paper §5)
-//! let model = PackedModel::from_lc("lenet300-k2", &spec, &lc, &backend.biases())?;
+//! // pack the final C step (log2(K) bits/weight + codebook, paper §5);
+//! // biases come straight from the backend's arena views
+//! let model = PackedModel::from_lc("lenet300-k2", &spec, &lc, backend.params())?;
 //! model.save(std::path::Path::new("models/lenet300-k2.lcq"))?;
 //!
 //! // serve it (lookup-based forward, micro-batched; paper §2.1)
@@ -57,6 +81,12 @@
 //! # Ok(())
 //! # }
 //! ```
+
+// The numeric kernels index several parallel slices per loop iteration and
+// pass warm-start `&mut Vec` buffers by design; clippy's
+// `needless_range_loop`/`ptr_arg` flag those idioms even where the
+// alternative is worse, so they are allowed crate-wide.
+#![allow(clippy::needless_range_loop, clippy::ptr_arg)]
 
 pub mod config;
 pub mod coordinator;

@@ -5,6 +5,14 @@
 //! a scalar of A times a row of B), which streams both B and C rows and
 //! autovectorizes. Blocking over k keeps the active B panel in L1/L2;
 //! threading splits the rows of C, which are disjoint, so no locks.
+//!
+//! The cores (`gemm_into`, `gemm_at_b_into`, `gemm_a_bt_into`) operate on
+//! raw `&[f32]` slices with explicit dimensions, so the flat parameter
+//! plane ([`crate::nn::params::ParamSet`]) feeds weight-arena views
+//! straight in and gradients accumulate straight into a
+//! [`crate::nn::params::GradBuffer`] — no `Mat` temporaries on the
+//! minibatch step path. The [`Mat`] wrappers below keep the ergonomic API
+//! for everything else.
 
 use super::{num_threads, Mat};
 
@@ -13,26 +21,40 @@ const PAR_MIN_ROWS: usize = 64;
 /// k-panel block size.
 const KC: usize = 256;
 
-/// C(m,n) = A(m,k) · B(k,n). `c` is overwritten.
-pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    assert_eq!(a.cols, b.rows, "inner dims");
-    assert_eq!(c.rows, a.rows);
-    assert_eq!(c.cols, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    c.data.fill(0.0);
+/// Split `c` (an `m × n` row-major buffer) into per-thread row bands.
+fn row_bands(c: &mut [f32], m: usize, n: usize, nt: usize) -> Vec<(std::ops::Range<usize>, &mut [f32])> {
+    let per = m.div_ceil(nt);
+    let mut out = Vec::new();
+    let mut rest = c;
+    let mut start = 0;
+    while start < m {
+        let end = (start + per).min(m);
+        let (head, tail) = rest.split_at_mut((end - start) * n);
+        out.push((start..end, head));
+        rest = tail;
+        start = end;
+    }
+    out
+}
+
+/// C(m,n) = A(m,k) · B(k,n), overwriting `c`. All slices row-major.
+pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    c.fill(0.0);
     let do_rows = |rows: std::ops::Range<usize>, cdata: &mut [f32]| {
-        // cdata covers rows `rows` of C.
         for kk in (0..k).step_by(KC) {
             let kend = (kk + KC).min(k);
             for (local_i, i) in rows.clone().enumerate() {
-                let arow = a.row(i);
+                let arow = &a[i * k..(i + 1) * k];
                 let crow = &mut cdata[local_i * n..(local_i + 1) * n];
                 for p in kk..kend {
                     let av = arow[p];
                     if av == 0.0 {
                         continue;
                     }
-                    let brow = b.row(p);
+                    let brow = &b[p * n..(p + 1) * n];
                     for j in 0..n {
                         crow[j] += av * brow[j];
                     }
@@ -42,51 +64,31 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     };
     let nt = num_threads();
     if m < PAR_MIN_ROWS || nt == 1 {
-        do_rows(0..m, &mut c.data);
+        do_rows(0..m, c);
         return;
     }
-    let rows_per = m.div_ceil(nt);
-    let chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = {
-        let mut out = Vec::new();
-        let mut rest = c.data.as_mut_slice();
-        let mut start = 0;
-        while start < m {
-            let end = (start + rows_per).min(m);
-            let (head, tail) = rest.split_at_mut((end - start) * n);
-            out.push((start..end, head));
-            rest = tail;
-            start = end;
-        }
-        out
-    };
+    let bands = row_bands(c, m, n, nt);
     std::thread::scope(|s| {
-        for (range, chunk) in chunks {
+        for (range, chunk) in bands {
             s.spawn(move || do_rows(range, chunk));
         }
     });
 }
 
-/// Allocating convenience wrapper.
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    let mut c = Mat::zeros(a.rows, b.cols);
-    matmul_into(a, b, &mut c);
-    c
-}
-
-/// C(k,n) = Aᵀ(k,m) · B(m,n) where A is (m,k). Used for weight gradients
-/// `dW = Xᵀ·dY` without materializing the transpose.
-pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows, b.rows, "inner dims (rows of A and B)");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(k, n);
-    // C[p, j] = sum_i A[i, p] * B[i, j]  — accumulate rank-1 updates row-wise
+/// C(k,n) = Aᵀ·B where A is (m,k) and B is (m,n), overwriting `c`. Used
+/// for weight gradients `dW = Xᵀ·dY` without materializing the transpose.
+pub fn gemm_at_b_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), m * n, "B shape");
+    assert_eq!(c.len(), k * n, "C shape");
+    c.fill(0.0);
+    // C[p, j] = sum_i A[i, p] * B[i, j] — accumulate rank-1 updates row-wise
     // over i; each i touches all of C, so for threading we split over the
     // columns p of A (rows of C).
-    let nt = num_threads();
     let do_cols = |cols: std::ops::Range<usize>, cdata: &mut [f32]| {
         for i in 0..m {
-            let arow = a.row(i);
-            let brow = b.row(i);
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
             for (local_p, p) in cols.clone().enumerate() {
                 let av = arow[p];
                 if av == 0.0 {
@@ -99,69 +101,75 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
             }
         }
     };
+    let nt = num_threads();
     if k < PAR_MIN_ROWS || nt == 1 {
-        do_cols(0..k, &mut c.data);
-        return c;
+        do_cols(0..k, c);
+        return;
     }
-    let per = k.div_ceil(nt);
-    let mut chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
-    {
-        let mut rest = c.data.as_mut_slice();
-        let mut start = 0;
-        while start < k {
-            let end = (start + per).min(k);
-            let (head, tail) = rest.split_at_mut((end - start) * n);
-            chunks.push((start..end, head));
-            rest = tail;
-            start = end;
-        }
-    }
+    let bands = row_bands(c, k, n, nt);
     std::thread::scope(|s| {
-        for (range, chunk) in chunks {
+        for (range, chunk) in bands {
             s.spawn(move || do_cols(range, chunk));
         }
     });
-    c
 }
 
-/// C(m,k) = A(m,n) · Bᵀ(n,k) where B is (k,n). Used for input gradients
-/// `dX = dY·Wᵀ` without materializing the transpose.
-pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols, "inner dims (cols of A and B)");
-    let (m, k) = (a.rows, b.rows);
-    let mut c = Mat::zeros(m, k);
+/// C(m,k) = A·Bᵀ where A is (m,n) and B is (k,n), overwriting `c`. Used
+/// for input gradients `dX = dY·Wᵀ` without materializing the transpose.
+pub fn gemm_a_bt_into(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * n, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * k, "C shape");
     let do_rows = |rows: std::ops::Range<usize>, cdata: &mut [f32]| {
         for (local_i, i) in rows.clone().enumerate() {
-            let arow = a.row(i);
+            let arow = &a[i * n..(i + 1) * n];
             let crow = &mut cdata[local_i * k..(local_i + 1) * k];
             for j in 0..k {
-                crow[j] = super::vecops::dot(arow, b.row(j));
+                crow[j] = super::vecops::dot(arow, &b[j * n..(j + 1) * n]);
             }
         }
     };
     let nt = num_threads();
     if m < PAR_MIN_ROWS || nt == 1 {
-        do_rows(0..m, &mut c.data);
-        return c;
+        do_rows(0..m, c);
+        return;
     }
-    let per = m.div_ceil(nt);
-    let mut chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
-    {
-        let mut rest = c.data.as_mut_slice();
-        let mut start = 0;
-        while start < m {
-            let end = (start + per).min(m);
-            let (head, tail) = rest.split_at_mut((end - start) * k);
-            chunks.push((start..end, head));
-            rest = tail;
-            start = end;
-        }
-    }
+    let bands = row_bands(c, m, k, nt);
     std::thread::scope(|s| {
-        for (range, chunk) in chunks {
+        for (range, chunk) in bands {
             s.spawn(move || do_rows(range, chunk));
         }
     });
+}
+
+/// C(m,n) = A(m,k) · B(k,n). `c` is overwritten.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    gemm_into(a.rows, a.cols, b.cols, &a.data, &b.data, &mut c.data);
+}
+
+/// Allocating convenience wrapper.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C(k,n) = Aᵀ(k,m) · B(m,n) where A is (m,k).
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "inner dims (rows of A and B)");
+    let mut c = Mat::zeros(a.cols, b.cols);
+    gemm_at_b_into(a.rows, a.cols, b.cols, &a.data, &b.data, &mut c.data);
+    c
+}
+
+/// C(m,k) = A(m,n) · Bᵀ(n,k) where B is (k,n).
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "inner dims (cols of A and B)");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    gemm_a_bt_into(a.rows, a.cols, b.rows, &a.data, &b.data, &mut c.data);
     c
 }
 
@@ -267,5 +275,29 @@ mod tests {
         let a = rand_mat(&mut rng, 10, 10);
         assert_close(&matmul(&a, &Mat::eye(10)), &a, 1e-6);
         assert_close(&matmul(&Mat::eye(10), &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn slice_cores_overwrite_dirty_output() {
+        // the `_into` forms must not accumulate into stale contents
+        let mut rng = Rng::new(9);
+        let a = rand_mat(&mut rng, 7, 5);
+        let b = rand_mat(&mut rng, 5, 6);
+        let want = naive(&a, &b);
+        let mut c = vec![123.0f32; 7 * 6];
+        gemm_into(7, 5, 6, &a.data, &b.data, &mut c);
+        assert_close(&Mat::from_vec(7, 6, c), &want, 1e-4);
+
+        let b2 = rand_mat(&mut rng, 7, 4);
+        let want2 = naive(&a.transpose(), &b2);
+        let mut c2 = vec![-9.0f32; 5 * 4];
+        gemm_at_b_into(7, 5, 4, &a.data, &b2.data, &mut c2);
+        assert_close(&Mat::from_vec(5, 4, c2), &want2, 1e-4);
+
+        let b3 = rand_mat(&mut rng, 9, 5);
+        let want3 = naive(&a, &b3.transpose());
+        let mut c3 = vec![42.0f32; 7 * 9];
+        gemm_a_bt_into(7, 5, 9, &a.data, &b3.data, &mut c3);
+        assert_close(&Mat::from_vec(7, 9, c3), &want3, 1e-4);
     }
 }

@@ -8,12 +8,21 @@ pub mod vecops;
 
 /// Worker-thread count for the data-parallel kernels, capped at 16 — one
 /// policy shared by gemm, the k-means assignment pass and the serve LUT
-/// engine, so a future change (e.g. an env override) lands everywhere.
+/// engine. Resolved **once** (the gemm hot path used to re-query
+/// `available_parallelism()` on every call) and overridable with the
+/// `LCQUANT_THREADS` environment variable (clamped to `1..=16`; useful for
+/// pinning benchmarks or forcing deterministic single-threaded runs).
 pub fn num_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(16)
+    static NUM_THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *NUM_THREADS.get_or_init(|| {
+        std::env::var("LCQUANT_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+            .clamp(1, 16)
+    })
 }
 
 /// Dense row-major `f32` matrix.

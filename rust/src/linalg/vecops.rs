@@ -151,6 +151,81 @@ pub fn update_multipliers(lambda: &mut [f32], w: &[f32], wc: &[f32], mu: f32) {
     }
 }
 
+/// (‖w − wc‖₂, ‖w‖₂) in one pass — the LC feasibility check.
+#[inline]
+pub fn feasibility(w: &[f32], wc: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(w.len(), wc.len());
+    let mut dist2 = 0.0f64;
+    let mut norm2 = 0.0f64;
+    for (a, b) in w.iter().zip(wc) {
+        dist2 += ((a - b) as f64).powi(2);
+        norm2 += (*a as f64).powi(2);
+    }
+    (dist2.sqrt() as f32, norm2.sqrt() as f32)
+}
+
+/// Fused multiplier update + feasibility: `λ −= μ(w − w_C)` while
+/// accumulating (‖w − wc‖₂, ‖w‖₂) in the same pass, so the LC outer loop
+/// streams the weight arena once instead of twice.
+#[inline]
+pub fn update_multipliers_fused(
+    lambda: &mut [f32],
+    w: &[f32],
+    wc: &[f32],
+    mu: f32,
+) -> (f32, f32) {
+    debug_assert_eq!(lambda.len(), w.len());
+    debug_assert_eq!(lambda.len(), wc.len());
+    let mut dist2 = 0.0f64;
+    let mut norm2 = 0.0f64;
+    for i in 0..lambda.len() {
+        let d = w[i] - wc[i];
+        lambda[i] -= mu * d;
+        dist2 += (d as f64).powi(2);
+        norm2 += (w[i] as f64).powi(2);
+    }
+    (dist2.sqrt() as f32, norm2.sqrt() as f32)
+}
+
+/// Fused Nesterov-momentum update (Lasagne formulation) over a flat
+/// parameter slice: `v ← m·v − lr·g; w ← w + m·v − lr·g`.
+#[inline]
+pub fn nesterov_step(w: &mut [f32], g: &[f32], v: &mut [f32], lr: f32, m: f32) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), v.len());
+    for i in 0..w.len() {
+        v[i] = m * v[i] - lr * g[i];
+        w[i] += m * v[i] - lr * g[i];
+    }
+}
+
+/// Nesterov update with the LC penalty gradient fused in:
+/// the effective gradient is `g + μ(w − w_C) − λ` (paper §3), computed
+/// inline so the penalized L step is one pass over the weight arena with
+/// zero temporary buffers.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn nesterov_step_penalized(
+    w: &mut [f32],
+    g: &[f32],
+    v: &mut [f32],
+    wc: &[f32],
+    lambda: &[f32],
+    mu: f32,
+    lr: f32,
+    m: f32,
+) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), v.len());
+    debug_assert_eq!(w.len(), wc.len());
+    debug_assert_eq!(w.len(), lambda.len());
+    for i in 0..w.len() {
+        let gi = g[i] + mu * (w[i] - wc[i]) - lambda[i];
+        v[i] = m * v[i] - lr * gi;
+        w[i] += m * v[i] - lr * gi;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +287,59 @@ mod tests {
                 assert!((lambda[i] - (before[i] - mu * (w[i] - wc[i]))).abs() < 1e-5);
             }
         });
+    }
+
+    #[test]
+    fn fused_multiplier_update_matches_split_ops() {
+        check("fused == split", 50, |g| {
+            let n = g.usize_in(1, 40);
+            let w: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let wc: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let lam0: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let mu = g.f32_in(0.01, 5.0);
+            let mut lam_a = lam0.clone();
+            let (dist, norm) = update_multipliers_fused(&mut lam_a, &w, &wc, mu);
+            let mut lam_b = lam0.clone();
+            update_multipliers(&mut lam_b, &w, &wc, mu);
+            assert_eq!(lam_a, lam_b);
+            assert!((dist - l2_dist(&w, &wc)).abs() < 1e-5);
+            assert!((norm - l2_norm(&w)).abs() < 1e-5);
+            let (d2, n2) = feasibility(&w, &wc);
+            assert_eq!(d2, dist);
+            assert_eq!(n2, norm);
+        });
+    }
+
+    #[test]
+    fn nesterov_step_matches_scalar_recurrence() {
+        let mut w = [1.0f32, -2.0];
+        let mut v = [0.1f32, 0.0];
+        let g = [0.5f32, -0.5];
+        let (lr, m) = (0.1f32, 0.9f32);
+        let mut we = w;
+        let mut ve = v;
+        for i in 0..2 {
+            ve[i] = m * ve[i] - lr * g[i];
+            we[i] += m * ve[i] - lr * g[i];
+        }
+        nesterov_step(&mut w, &g, &mut v, lr, m);
+        assert_eq!(w, we);
+        assert_eq!(v, ve);
+    }
+
+    #[test]
+    fn penalized_step_reduces_to_plain_when_mu_zero_and_lambda_zero() {
+        let g = [0.3f32, -0.7, 0.2];
+        let wc = [0.0f32; 3];
+        let lam = [0.0f32; 3];
+        let mut w_a = [0.5f32, -0.5, 1.0];
+        let mut v_a = [0.0f32; 3];
+        let mut w_b = w_a;
+        let mut v_b = v_a;
+        nesterov_step(&mut w_a, &g, &mut v_a, 0.05, 0.9);
+        nesterov_step_penalized(&mut w_b, &g, &mut v_b, &wc, &lam, 0.0, 0.05, 0.9);
+        assert_eq!(w_a, w_b);
+        assert_eq!(v_a, v_b);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! lcquant experiment <id|all> [--out results] [--scale quick|full] [--seed N]
 //! lcquant run --config configs/lenet300_k2.json [--out results]
 //! lcquant pack --config configs/lenet300_k2.json [--out models]
-//! lcquant serve-smoke --models models [--requests N] [--config FILE]
+//! lcquant serve-smoke --models models [--requests N] [--clients N] [--config FILE]
 //! lcquant pjrt-smoke [--artifacts artifacts]
 //! lcquant list
 //! ```
@@ -26,7 +26,7 @@ fn usage() -> ! {
       ids: {:?}
   lcquant run --config FILE [--out DIR]
   lcquant pack --config FILE [--out DIR]
-  lcquant serve-smoke --models DIR [--requests N] [--config FILE]
+  lcquant serve-smoke --models DIR [--requests N] [--clients N] [--config FILE]
   lcquant pjrt-smoke [--artifacts DIR]
   lcquant list",
         experiments::ALL
@@ -52,7 +52,7 @@ fn train_reference(
 ) {
     use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov};
     use lcquant::coordinator::Backend as _;
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), train.momentum);
+    let mut opt = FlatNesterov::new(backend.layout(), train.momentum);
     let chunk = 100usize;
     let mut step = 0;
     while step < train.ref_steps {
@@ -137,7 +137,7 @@ fn cmd_pack(args: &Args) -> Result<()> {
     let mut backend = NativeBackend::new(net, train, Some(test), cfg.train.batch, cfg.seed);
     train_reference(&mut backend, &cfg.train);
     let res = lc_quantize(&mut backend, &cfg.lc);
-    let model = PackedModel::from_lc(&cfg.name, &cfg.net, &res, &backend.biases())?;
+    let model = PackedModel::from_lc(&cfg.name, &cfg.net, &res, backend.params())?;
     let out = std::path::Path::new(args.get_or("out", "models"))
         .join(format!("{}.lcq", cfg.name));
     model.save(&out)?;
@@ -168,14 +168,17 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let registry = Arc::new(Registry::load_dir(&dir)?);
     let names = registry.names();
     println!(
-        "serving {} model(s): {names:?} (max_batch {}, max_wait {}ms)",
+        "serving {} model(s): {names:?} (max_batch {}, max_wait {}ms, {} client threads)",
         registry.len(),
         serve_cfg.max_batch,
-        serve_cfg.max_wait_ms
+        serve_cfg.max_wait_ms,
+        serve_cfg.smoke_clients,
     );
     let n_requests = args.get_usize("requests", 256).max(1);
     let server = MicroBatchServer::start(Arc::clone(&registry), serve_cfg.to_server_config());
-    let n_threads = 8usize;
+    // client-thread count comes from the config's "serve" section
+    // (`smoke_clients`), overridable with --clients N
+    let n_threads = args.get_usize("clients", serve_cfg.smoke_clients).max(1);
     let t = lcquant::util::timer::Timer::start();
     std::thread::scope(|s| {
         for th in 0..n_threads {
@@ -266,7 +269,10 @@ fn cmd_pjrt_smoke(args: &Args) -> Result<()> {
     let (train, test) = data.split(0.2, &mut rng);
     let mut backend = PjrtBackend::new(engine, "lenet300", train, Some(test), 3)?;
     let (loss, grads) = backend.next_loss_grads();
-    println!("pjrt grad step: loss={loss:.4}, {} layers", grads.dw.len());
+    println!(
+        "pjrt grad step: loss={loss:.4}, {} layers",
+        grads.layout().n_layers()
+    );
     let (el, ee) = backend.eval_train();
     println!("pjrt eval: loss={el:.4} err={ee:.2}%");
     println!("pjrt-smoke OK");

@@ -37,14 +37,42 @@ pub fn softmax_cross_entropy(logits: &Mat, targets: &Mat) -> (f32, Mat) {
     ((loss / probs.rows as f64) as f32, probs)
 }
 
+/// Non-allocating form of [`softmax_cross_entropy`]: writes the
+/// probabilities into `probs` (pre-sized to the logits' shape) and returns
+/// the loss. This is the minibatch-step-path variant.
+pub fn softmax_cross_entropy_into(logits: &Mat, targets: &Mat, probs: &mut Mat) -> f32 {
+    assert_eq!(logits.rows, targets.rows);
+    assert_eq!(logits.cols, targets.cols);
+    assert_eq!(probs.rows, logits.rows);
+    assert_eq!(probs.cols, logits.cols);
+    probs.data.copy_from_slice(&logits.data);
+    softmax_rows(probs);
+    let mut loss = 0.0f64;
+    for r in 0..probs.rows {
+        for c in 0..probs.cols {
+            if targets[(r, c)] > 0.0 {
+                loss -= (targets[(r, c)] as f64) * (probs[(r, c)].max(1e-12) as f64).ln();
+            }
+        }
+    }
+    (loss / probs.rows as f64) as f32
+}
+
 /// Gradient of average CE wrt logits: (probs - targets) / batch.
 pub fn cross_entropy_grad(probs: &Mat, targets: &Mat) -> Mat {
-    let b = probs.rows as f32;
     let mut g = probs.clone();
-    for i in 0..g.data.len() {
-        g.data[i] = (g.data[i] - targets.data[i]) / b;
-    }
+    cross_entropy_grad_inplace(&mut g, targets);
     g
+}
+
+/// In-place form of [`cross_entropy_grad`]: `probs ← (probs − targets)/B`.
+pub fn cross_entropy_grad_inplace(probs: &mut Mat, targets: &Mat) {
+    debug_assert_eq!(probs.rows, targets.rows);
+    debug_assert_eq!(probs.cols, targets.cols);
+    let b = probs.rows as f32;
+    for (g, t) in probs.data.iter_mut().zip(&targets.data) {
+        *g = (*g - t) / b;
+    }
 }
 
 /// Classification error rate (%) from logits and labels.
@@ -136,6 +164,26 @@ mod tests {
                 g.data[idx]
             );
         }
+    }
+
+    #[test]
+    fn into_forms_match_allocating_forms() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let mut logits = Mat::zeros(4, 6);
+        rng.fill_normal(&mut logits.data, 0.0, 1.5);
+        let mut targets = Mat::zeros(4, 6);
+        for r in 0..4 {
+            targets[(r, r)] = 1.0;
+        }
+        let (loss_a, probs_a) = softmax_cross_entropy(&logits, &targets);
+        let mut probs_b = Mat::zeros(4, 6);
+        let loss_b = softmax_cross_entropy_into(&logits, &targets, &mut probs_b);
+        assert_eq!(loss_a, loss_b);
+        assert_eq!(probs_a.data, probs_b.data);
+        let grad_a = cross_entropy_grad(&probs_a, &targets);
+        cross_entropy_grad_inplace(&mut probs_b, &targets);
+        assert_eq!(grad_a.data, probs_b.data);
     }
 
     #[test]

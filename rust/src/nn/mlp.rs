@@ -1,10 +1,21 @@
-//! Multi-layer perceptron with explicit forward/backward.
+//! Multi-layer perceptron with explicit forward/backward over the **flat
+//! parameter plane**: all weights and biases live in one contiguous
+//! [`ParamSet`] arena ([`crate::nn::params`]), and every layer operates on
+//! per-layer views of it.
 //!
 //! Matches the paper's LeNet300 (784-300-100-10, tanh) and the deep-MLP
 //! stand-in for LeNet5 (see DESIGN.md §5). Weights are `(in, out)`
 //! row-major so the forward pass is `X·W + b`.
+//!
+//! The hot path is [`Mlp::loss_grads_into`]: forward + loss + backward with
+//! all activations in a caller-owned [`MlpScratch`] and gradients
+//! accumulated into a [`GradBuffer`] — zero heap allocation once the
+//! scratch is warm. The tuple-returning conveniences (`forward`,
+//! `loss_and_grads`) allocate a fresh scratch and exist for tests, examples
+//! and evaluation, not for the SGD loop.
 
-use crate::linalg::gemm::{matmul, matmul_a_bt, matmul_at_b};
+use super::params::{GradBuffer, ParamLayout, ParamSet};
+use crate::linalg::gemm::{gemm_a_bt_into, gemm_at_b_into, gemm_into};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 
@@ -62,6 +73,11 @@ impl MlpSpec {
         self.sizes.len() - 1
     }
 
+    /// The flat-arena layout of this architecture.
+    pub fn layout(&self) -> ParamLayout {
+        ParamLayout::from_sizes(&self.sizes)
+    }
+
     /// Count of multiplicative weights (P1) and biases (P0).
     pub fn param_counts(&self) -> (usize, usize) {
         let mut p1 = 0;
@@ -74,109 +90,216 @@ impl MlpSpec {
     }
 }
 
-/// One dense layer.
-#[derive(Clone, Debug)]
-pub struct Dense {
-    /// (in, out) row-major.
-    pub w: Mat,
-    pub b: Vec<f32>,
-    pub act: Activation,
-    pub keep: f32,
+/// Reusable forward/backward workspace: per-layer activation buffers sized
+/// for one batch shape. `ensure` reallocates only when the batch size or
+/// architecture changes, so a steady minibatch loop never allocates.
+///
+/// During the backward pass the buffers are reused as delta storage (the
+/// input buffer of layer `l+1` holds the delta flowing into layer `l`), so
+/// backprop needs no additional scratch.
+pub struct MlpScratch {
+    batch: usize,
+    /// `inputs[l]`: input to layer `l` (post-dropout), `B × sizes[l]`.
+    inputs: Vec<Mat>,
+    /// `outputs[l]`: activation output of layer `l`, `B × sizes[l+1]`.
+    outputs: Vec<Mat>,
+    /// Dropout masks (empty when inactive).
+    masks: Vec<Vec<f32>>,
+    /// Softmax probabilities / logits gradient, `B × sizes[last]`.
+    probs: Mat,
 }
 
-/// Per-layer gradients.
-#[derive(Clone, Debug)]
-pub struct Grads {
-    pub dw: Vec<Mat>,
-    pub db: Vec<Vec<f32>>,
-}
-
-impl Grads {
-    pub fn zeros_like(net: &Mlp) -> Grads {
-        Grads {
-            dw: net.layers.iter().map(|l| Mat::zeros(l.w.rows, l.w.cols)).collect(),
-            db: net.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+impl MlpScratch {
+    pub fn new() -> MlpScratch {
+        MlpScratch {
+            batch: 0,
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            masks: Vec::new(),
+            probs: Mat::zeros(0, 0),
         }
+    }
+
+    fn ensure(&mut self, sizes: &[usize], batch: usize) {
+        let nl = sizes.len() - 1;
+        let fits = self.batch == batch
+            && self.inputs.len() == nl
+            && self.inputs.iter().zip(sizes).all(|(m, &s)| m.cols == s)
+            && self.outputs.iter().zip(&sizes[1..]).all(|(m, &s)| m.cols == s);
+        if fits {
+            return;
+        }
+        self.batch = batch;
+        self.inputs = (0..nl).map(|l| Mat::zeros(batch, sizes[l])).collect();
+        self.outputs = (0..nl).map(|l| Mat::zeros(batch, sizes[l + 1])).collect();
+        self.masks = vec![Vec::new(); nl];
+        self.probs = Mat::zeros(batch, sizes[nl]);
+    }
+
+    /// Logits of the last forward pass.
+    pub fn logits(&self) -> &Mat {
+        self.outputs.last().expect("no forward pass recorded")
     }
 }
 
-/// The MLP.
+impl Default for MlpScratch {
+    fn default() -> Self {
+        MlpScratch::new()
+    }
+}
+
+/// The MLP: spec + flat parameter arena + per-layer metadata.
 #[derive(Clone, Debug)]
 pub struct Mlp {
     pub spec: MlpSpec,
-    pub layers: Vec<Dense>,
-}
-
-/// Activations cached by `forward` for the backward pass.
-pub struct ForwardCache {
-    /// inputs[l] = input to layer l (post-dropout); inputs[0] = x.
-    inputs: Vec<Mat>,
-    /// outputs[l] = activation output of layer l.
-    outputs: Vec<Mat>,
-    /// dropout masks (empty when not training / keep == 1).
-    masks: Vec<Vec<f32>>,
+    params: ParamSet,
+    acts: Vec<Activation>,
+    keeps: Vec<f32>,
 }
 
 impl Mlp {
-    /// Glorot-uniform initialization.
-    pub fn new(spec: &MlpSpec, seed: u64) -> Mlp {
-        let mut rng = Rng::new(seed);
-        let mut layers = Vec::new();
+    /// Zero-initialized net: arena + per-layer metadata, no RNG traffic.
+    fn bare(spec: &MlpSpec) -> Mlp {
         let keeps = if spec.dropout_keep.is_empty() {
             vec![1.0; spec.n_layers()]
         } else {
             assert_eq!(spec.dropout_keep.len(), spec.n_layers());
             spec.dropout_keep.clone()
         };
+        let acts = (0..spec.n_layers())
+            .map(|li| {
+                if li + 1 == spec.n_layers() {
+                    Activation::Linear
+                } else {
+                    spec.hidden_activation
+                }
+            })
+            .collect();
+        Mlp { spec: spec.clone(), params: ParamSet::zeros(spec.layout()), acts, keeps }
+    }
+
+    /// Glorot-uniform initialization.
+    pub fn new(spec: &MlpSpec, seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        let mut net = Mlp::bare(spec);
         for (li, win) in spec.sizes.windows(2).enumerate() {
             let (fan_in, fan_out) = (win[0], win[1]);
             let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
-            let mut w = Mat::zeros(fan_in, fan_out);
-            for v in w.data.iter_mut() {
+            for v in net.params.w_layer_mut(li).iter_mut() {
                 *v = rng.uniform_in(-limit, limit);
             }
-            let act = if li + 1 == spec.n_layers() {
-                Activation::Linear
-            } else {
-                spec.hidden_activation
-            };
-            layers.push(Dense { w, b: vec![0.0; fan_out], act, keep: keeps[li] });
         }
-        Mlp { spec: spec.clone(), layers }
+        net
     }
 
     pub fn n_layers(&self) -> usize {
-        self.layers.len()
+        self.acts.len()
     }
 
     /// Rebuild a net from per-layer weight vectors and biases (e.g. the
     /// dense expansion of a packed model). Panics on shape mismatch.
     pub fn from_parts(spec: &MlpSpec, weights: &[Vec<f32>], biases: &[Vec<f32>]) -> Mlp {
-        let mut net = Mlp::new(spec, 0);
-        assert_eq!(weights.len(), net.n_layers());
-        assert_eq!(biases.len(), net.n_layers());
-        net.set_weights(weights);
-        for (l, b) in net.layers.iter_mut().zip(biases) {
-            assert_eq!(l.b.len(), b.len());
-            l.b.copy_from_slice(b);
-        }
+        let mut net = Mlp::bare(spec);
+        net.params.set_w_per_layer(weights);
+        net.params.set_b_per_layer(biases);
         net
     }
 
-    /// Forward pass. `train` enables dropout (inverted scaling); `rng` is
-    /// only used when dropout is active.
-    pub fn forward(&self, x: &Mat, train: bool, rng: Option<&mut Rng>) -> (Mat, ForwardCache) {
-        let mut cache = ForwardCache { inputs: Vec::new(), outputs: Vec::new(), masks: Vec::new() };
-        let mut cur = x.clone();
-        let mut local_rng = rng;
-        for layer in &self.layers {
+    // ---- parameter plane ------------------------------------------------
+
+    /// The flat parameter arena (weights then biases, contiguous).
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    pub fn params_mut(&mut self) -> &mut ParamSet {
+        &mut self.params
+    }
+
+    /// Layer `l`'s weight matrix, row-major `(sizes[l], sizes[l+1])`.
+    pub fn weight(&self, l: usize) -> &[f32] {
+        self.params.w_layer(l)
+    }
+
+    pub fn weight_mut(&mut self, l: usize) -> &mut [f32] {
+        self.params.w_layer_mut(l)
+    }
+
+    /// Layer `l`'s bias vector.
+    pub fn bias(&self, l: usize) -> &[f32] {
+        self.params.b_layer(l)
+    }
+
+    pub fn bias_mut(&mut self, l: usize) -> &mut [f32] {
+        self.params.b_layer_mut(l)
+    }
+
+    /// Per-layer multiplicative weight views (the quantized parameters;
+    /// biases stay full precision, paper §5).
+    pub fn weights(&self) -> Vec<&[f32]> {
+        (0..self.n_layers()).map(|l| self.params.w_layer(l)).collect()
+    }
+
+    /// Copy all multiplicative weights into per-layer owned vectors.
+    pub fn weights_cloned(&self) -> Vec<Vec<f32>> {
+        self.params.w_cloned()
+    }
+
+    /// Overwrite weights from per-layer vectors.
+    pub fn set_weights(&mut self, per_layer: &[Vec<f32>]) {
+        self.params.set_w_per_layer(per_layer);
+    }
+
+    /// Overwrite biases from per-layer vectors.
+    pub fn set_biases(&mut self, per_layer: &[Vec<f32>]) {
+        self.params.set_b_per_layer(per_layer);
+    }
+
+    pub fn activation(&self, l: usize) -> Activation {
+        self.acts[l]
+    }
+
+    /// Dropout keep-probability of layer `l`'s input.
+    pub fn keep(&self, l: usize) -> f32 {
+        self.keeps[l]
+    }
+
+    pub fn has_dropout(&self) -> bool {
+        self.keeps.iter().any(|&k| k < 1.0)
+    }
+
+    /// Total multiplicative weights (P1) and biases (P0).
+    pub fn param_counts(&self) -> (usize, usize) {
+        self.spec.param_counts()
+    }
+
+    // ---- forward / backward ---------------------------------------------
+
+    /// Forward pass into a reusable scratch. `train` enables dropout
+    /// (inverted scaling); `rng` is only used when dropout is active.
+    /// Logits land in `scratch.logits()`.
+    pub fn forward_into(
+        &self,
+        x: &Mat,
+        train: bool,
+        mut rng: Option<&mut Rng>,
+        scratch: &mut MlpScratch,
+    ) {
+        assert_eq!(x.cols, self.spec.sizes[0], "input dim");
+        scratch.ensure(&self.spec.sizes, x.rows);
+        scratch.inputs[0].data.copy_from_slice(&x.data);
+        for l in 0..self.n_layers() {
             // dropout on the layer input
-            let mask = if train && layer.keep < 1.0 {
-                let r = local_rng.as_deref_mut().expect("dropout needs rng");
-                let inv = 1.0 / layer.keep;
-                let mut m = vec![0.0f32; cur.data.len()];
-                for (mi, v) in m.iter_mut().zip(cur.data.iter_mut()) {
-                    if (r.uniform() as f32) < layer.keep {
+            let keep = self.keeps[l];
+            scratch.masks[l].clear();
+            if train && keep < 1.0 {
+                let r = rng.as_deref_mut().expect("dropout needs rng");
+                let inv = 1.0 / keep;
+                let cur = &mut scratch.inputs[l];
+                let mask = &mut scratch.masks[l];
+                mask.resize(cur.data.len(), 0.0);
+                for (mi, v) in mask.iter_mut().zip(cur.data.iter_mut()) {
+                    if (r.uniform() as f32) < keep {
                         *mi = inv;
                         *v *= inv;
                     } else {
@@ -184,20 +307,19 @@ impl Mlp {
                         *v = 0.0;
                     }
                 }
-                m
-            } else {
-                Vec::new()
-            };
-            cache.masks.push(mask);
-            cache.inputs.push(cur.clone());
-            let mut z = matmul(&cur, &layer.w);
+            }
+            let shape = self.params.layout().shape(l);
+            // z = X·W + b, activation in place
+            let xin = &scratch.inputs[l];
+            let z = &mut scratch.outputs[l];
+            gemm_into(xin.rows, xin.cols, shape.cols, &xin.data, self.params.w_layer(l), &mut z.data);
+            let bvec = self.params.b_layer(l);
             for r in 0..z.rows {
-                let row = z.row_mut(r);
-                for (v, b) in row.iter_mut().zip(&layer.b) {
+                for (v, b) in z.row_mut(r).iter_mut().zip(bvec) {
                     *v += b;
                 }
             }
-            match layer.act {
+            match self.acts[l] {
                 Activation::Tanh => {
                     for v in z.data.iter_mut() {
                         *v = v.tanh();
@@ -210,61 +332,105 @@ impl Mlp {
                 }
                 Activation::Linear => {}
             }
-            cache.outputs.push(z.clone());
-            cur = z;
+            if l + 1 < self.n_layers() {
+                let (outs, ins) = (&scratch.outputs[l], &mut scratch.inputs[l + 1]);
+                ins.data.copy_from_slice(&outs.data);
+            }
         }
-        (cur, cache)
     }
 
-    /// Backward pass from the loss gradient wrt logits. Returns parameter
-    /// gradients.
-    pub fn backward(&self, dlogits: &Mat, cache: &ForwardCache) -> Grads {
-        let mut grads = Grads::zeros_like(self);
-        let mut delta = dlogits.clone();
-        for l in (0..self.layers.len()).rev() {
-            let layer = &self.layers[l];
+    /// Allocating convenience forward: returns the logits and the scratch
+    /// (which holds the cached activations). Not for the SGD loop.
+    pub fn forward(&self, x: &Mat, train: bool, rng: Option<&mut Rng>) -> (Mat, MlpScratch) {
+        let mut scratch = MlpScratch::new();
+        self.forward_into(x, train, rng, &mut scratch);
+        (scratch.logits().clone(), scratch)
+    }
+
+    /// Backward pass from the logits gradient already stored in
+    /// `scratch.probs` (see [`Mlp::loss_grads_into`]). Parameter gradients
+    /// are written (overwriting) into `grads`; the scratch's input buffers
+    /// are consumed as delta storage.
+    fn backward_into(&self, scratch: &mut MlpScratch, grads: &mut GradBuffer) {
+        let nl = self.n_layers();
+        for l in (0..nl).rev() {
+            let (inputs_head, inputs_tail) = scratch.inputs.split_at_mut(l + 1);
+            // delta w.r.t. layer l's activation output: the logits gradient
+            // for the top layer, otherwise the dx written by layer l+1.
+            let delta: &mut Mat = if l + 1 == nl {
+                &mut scratch.probs
+            } else {
+                &mut inputs_tail[0]
+            };
             // activation derivative (output cached)
-            match layer.act {
+            match self.acts[l] {
                 Activation::Tanh => {
-                    let out = &cache.outputs[l];
-                    for i in 0..delta.data.len() {
-                        let a = out.data[i];
-                        delta.data[i] *= 1.0 - a * a;
+                    let out = &scratch.outputs[l];
+                    for (d, a) in delta.data.iter_mut().zip(&out.data) {
+                        *d *= 1.0 - a * a;
                     }
                 }
                 Activation::Relu => {
-                    let out = &cache.outputs[l];
-                    for i in 0..delta.data.len() {
-                        if out.data[i] <= 0.0 {
-                            delta.data[i] = 0.0;
+                    let out = &scratch.outputs[l];
+                    for (d, a) in delta.data.iter_mut().zip(&out.data) {
+                        if *a <= 0.0 {
+                            *d = 0.0;
                         }
                     }
                 }
                 Activation::Linear => {}
             }
-            // dW = Xᵀ·delta ; db = column sums of delta
-            grads.dw[l] = matmul_at_b(&cache.inputs[l], &delta);
-            let db = &mut grads.db[l];
+            // db = column sums of delta
+            let db = grads.b_layer_mut(l);
+            db.fill(0.0);
             for r in 0..delta.rows {
                 for (c, v) in delta.row(r).iter().enumerate() {
                     db[c] += v;
                 }
             }
+            // dW = Xᵀ·delta, straight into the gradient arena
+            let xin = &inputs_head[l];
+            gemm_at_b_into(xin.rows, xin.cols, delta.cols, &xin.data, &delta.data, grads.w_layer_mut(l));
             if l > 0 {
-                // dX = delta·Wᵀ, then dropout mask
-                let mut dx = matmul_a_bt(&delta, &layer.w);
-                if !cache.masks[l].is_empty() {
-                    for (v, m) in dx.data.iter_mut().zip(&cache.masks[l]) {
+                // dX = delta·Wᵀ, written into inputs[l] (no longer needed),
+                // then the dropout mask — this becomes layer l-1's delta.
+                let shape = self.params.layout().shape(l);
+                let dst = &mut inputs_head[l];
+                gemm_a_bt_into(delta.rows, delta.cols, shape.rows, &delta.data, self.params.w_layer(l), &mut dst.data);
+                if !scratch.masks[l].is_empty() {
+                    for (v, m) in dst.data.iter_mut().zip(&scratch.masks[l]) {
                         *v *= m;
                     }
                 }
-                delta = dx;
             }
         }
-        grads
     }
 
-    /// Convenience: loss + grads + error for a classification batch.
+    /// The minibatch step path: forward + softmax-CE loss + backward, with
+    /// every intermediate in `scratch` and gradients written into `grads`.
+    /// Returns (loss, error %). Zero heap allocation once `scratch` is
+    /// sized for this batch shape.
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_grads_into(
+        &self,
+        x: &Mat,
+        y_onehot: &Mat,
+        labels: &[u8],
+        train: bool,
+        rng: Option<&mut Rng>,
+        scratch: &mut MlpScratch,
+        grads: &mut GradBuffer,
+    ) -> (f32, f32) {
+        self.forward_into(x, train, rng, scratch);
+        let logits = scratch.outputs.last().unwrap();
+        let loss = super::loss::softmax_cross_entropy_into(logits, y_onehot, &mut scratch.probs);
+        let err = super::loss::error_rate(logits, labels);
+        super::loss::cross_entropy_grad_inplace(&mut scratch.probs, y_onehot);
+        self.backward_into(scratch, grads);
+        (loss, err)
+    }
+
+    /// Allocating convenience: loss + error + gradients for one batch.
     pub fn loss_and_grads(
         &self,
         x: &Mat,
@@ -272,12 +438,11 @@ impl Mlp {
         labels: &[u8],
         train: bool,
         rng: Option<&mut Rng>,
-    ) -> (f32, f32, Grads) {
-        let (logits, cache) = self.forward(x, train, rng);
-        let (loss, probs) = super::loss::softmax_cross_entropy(&logits, y_onehot);
-        let err = super::loss::error_rate(&logits, labels);
-        let dlogits = super::loss::cross_entropy_grad(&probs, y_onehot);
-        (loss, err, self.backward(&dlogits, &cache))
+    ) -> (f32, f32, GradBuffer) {
+        let mut scratch = MlpScratch::new();
+        let mut grads = GradBuffer::zeros(self.params.layout().clone());
+        let (loss, err) = self.loss_grads_into(x, y_onehot, labels, train, rng, &mut scratch, &mut grads);
+        (loss, err, grads)
     }
 
     /// Evaluate loss and error (no dropout).
@@ -310,37 +475,6 @@ impl Mlp {
             start = end;
         }
         ((loss_sum / n as f64) as f32, (err_sum / n as f64) as f32)
-    }
-
-    // ---- parameter views for the coordinator / quantizer ----------------
-
-    /// Per-layer multiplicative weight slices (the quantized parameters;
-    /// biases stay full precision, paper §5).
-    pub fn weights(&self) -> Vec<&[f32]> {
-        self.layers.iter().map(|l| l.w.data.as_slice()).collect()
-    }
-
-    pub fn weights_mut(&mut self) -> Vec<&mut [f32]> {
-        self.layers.iter_mut().map(|l| l.w.data.as_mut_slice()).collect()
-    }
-
-    /// Copy all multiplicative weights into per-layer owned vectors.
-    pub fn weights_cloned(&self) -> Vec<Vec<f32>> {
-        self.layers.iter().map(|l| l.w.data.clone()).collect()
-    }
-
-    /// Overwrite weights from per-layer vectors.
-    pub fn set_weights(&mut self, per_layer: &[Vec<f32>]) {
-        assert_eq!(per_layer.len(), self.layers.len());
-        for (l, w) in self.layers.iter_mut().zip(per_layer) {
-            assert_eq!(l.w.data.len(), w.len());
-            l.w.data.copy_from_slice(w);
-        }
-    }
-
-    /// Total multiplicative weights (P1) and biases (P0).
-    pub fn param_counts(&self) -> (usize, usize) {
-        self.spec.param_counts()
     }
 }
 
@@ -378,6 +512,9 @@ mod tests {
         let (p1, p0) = MlpSpec::lenet300().param_counts();
         assert_eq!(p1, 266_200); // paper: P1 = 266,200
         assert_eq!(p0, 410); // paper: P0 = 410
+        let layout = MlpSpec::lenet300().layout();
+        assert_eq!(layout.w_len(), p1);
+        assert_eq!(layout.b_len(), p0);
     }
 
     #[test]
@@ -385,11 +522,12 @@ mod tests {
         let net = toy_net(1);
         let mut rng = Rng::new(2);
         let (x, _, _) = toy_batch(&mut rng, 5);
-        let (logits, cache) = net.forward(&x, false, None);
+        let (logits, scratch) = net.forward(&x, false, None);
         assert_eq!(logits.rows, 5);
         assert_eq!(logits.cols, 3);
-        assert_eq!(cache.inputs.len(), 2);
-        assert_eq!(cache.outputs.len(), 2);
+        assert_eq!(scratch.inputs.len(), 2);
+        assert_eq!(scratch.outputs.len(), 2);
+        assert_eq!(scratch.logits().data, logits.data);
     }
 
     #[test]
@@ -402,34 +540,34 @@ mod tests {
         // check a scatter of weight and bias entries in every layer
         for l in 0..net.n_layers() {
             for &idx in &[0usize, 3, 11] {
-                if idx >= net.layers[l].w.data.len() {
+                if idx >= net.weight(l).len() {
                     continue;
                 }
-                let orig = net.layers[l].w.data[idx];
-                net.layers[l].w.data[idx] = orig + eps;
+                let orig = net.weight(l)[idx];
+                net.weight_mut(l)[idx] = orig + eps;
                 let (lp, _) = net.evaluate(&x, &y, &labels);
-                net.layers[l].w.data[idx] = orig - eps;
+                net.weight_mut(l)[idx] = orig - eps;
                 let (lm, _) = net.evaluate(&x, &y, &labels);
-                net.layers[l].w.data[idx] = orig;
+                net.weight_mut(l)[idx] = orig;
                 let fd = (lp - lm) / (2.0 * eps);
-                let an = grads.dw[l].data[idx];
+                let an = grads.w_layer(l)[idx];
                 assert!(
                     (fd - an).abs() < 2e-3,
                     "layer {l} w[{idx}]: fd {fd} vs analytic {an}"
                 );
             }
             for &idx in &[0usize, 2] {
-                if idx >= net.layers[l].b.len() {
+                if idx >= net.bias(l).len() {
                     continue;
                 }
-                let orig = net.layers[l].b[idx];
-                net.layers[l].b[idx] = orig + eps;
+                let orig = net.bias(l)[idx];
+                net.bias_mut(l)[idx] = orig + eps;
                 let (lp, _) = net.evaluate(&x, &y, &labels);
-                net.layers[l].b[idx] = orig - eps;
+                net.bias_mut(l)[idx] = orig - eps;
                 let (lm, _) = net.evaluate(&x, &y, &labels);
-                net.layers[l].b[idx] = orig;
+                net.bias_mut(l)[idx] = orig;
                 let fd = (lp - lm) / (2.0 * eps);
-                let an = grads.db[l][idx];
+                let an = grads.b_layer(l)[idx];
                 assert!(
                     (fd - an).abs() < 2e-3,
                     "layer {l} b[{idx}]: fd {fd} vs analytic {an}"
@@ -459,14 +597,14 @@ mod tests {
         let (_, _, grads) = net.loss_and_grads(&x, &y, &labels, false, None);
         let eps = 1e-3;
         for &idx in &[0usize, 7, 13] {
-            let orig = net.layers[0].w.data[idx];
-            net.layers[0].w.data[idx] = orig + eps;
+            let orig = net.weight(0)[idx];
+            net.weight_mut(0)[idx] = orig + eps;
             let (lp, _) = net.evaluate(&x, &y, &labels);
-            net.layers[0].w.data[idx] = orig - eps;
+            net.weight_mut(0)[idx] = orig - eps;
             let (lm, _) = net.evaluate(&x, &y, &labels);
-            net.layers[0].w.data[idx] = orig;
+            net.weight_mut(0)[idx] = orig;
             let fd = (lp - lm) / (2.0 * eps);
-            assert!((fd - grads.dw[0].data[idx]).abs() < 2e-3);
+            assert!((fd - grads.w_layer(0)[idx]).abs() < 2e-3);
         }
     }
 
@@ -483,9 +621,10 @@ mod tests {
         let mut rng = Rng::new(8);
         let mut acc = vec![0.0f64; 2];
         let n = 3000;
+        let mut scratch = MlpScratch::new();
         for _ in 0..n {
-            let (out, _) = net.forward(&x, true, Some(&mut rng));
-            for (a, v) in acc.iter_mut().zip(&out.data) {
+            net.forward_into(&x, true, Some(&mut rng), &mut scratch);
+            for (a, v) in acc.iter_mut().zip(&scratch.logits().data) {
                 *a += *v as f64;
             }
         }
@@ -500,28 +639,97 @@ mod tests {
     }
 
     #[test]
+    fn dropout_gradients_respect_mask() {
+        // With dropout active, the backward pass must route gradients
+        // through the same mask the forward pass drew.
+        let spec = MlpSpec {
+            sizes: vec![6, 5, 3],
+            hidden_activation: Activation::Tanh,
+            dropout_keep: vec![1.0, 0.5],
+        };
+        let net = Mlp::new(&spec, 17);
+        let mut rng = Rng::new(18);
+        let mut x = Mat::zeros(3, 6);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        let mut y = Mat::zeros(3, 3);
+        let labels = vec![0u8, 1, 2];
+        for (r, &l) in labels.iter().enumerate() {
+            y[(r, l as usize)] = 1.0;
+        }
+        let mut scratch = MlpScratch::new();
+        let mut grads = GradBuffer::zeros(net.params().layout().clone());
+        let mut drop_rng = Rng::new(99);
+        let (loss, _) = net.loss_grads_into(
+            &x, &y, &labels, true, Some(&mut drop_rng), &mut scratch, &mut grads,
+        );
+        assert!(loss.is_finite());
+        // layer-1 weight gradient rows for dropped inputs must be zero:
+        // dW[i, :] = Σ_r X[r, i]·delta[r, :], and X[r, i] = 0 when dropped.
+        let mask = scratch.masks[1].clone();
+        assert!(!mask.is_empty());
+        let dropped_everywhere: Vec<usize> = (0..5)
+            .filter(|i| (0..3).all(|r| mask[r * 5 + i] == 0.0))
+            .collect();
+        for &i in &dropped_everywhere {
+            for j in 0..3 {
+                assert_eq!(grads.w_layer(1)[i * 3 + j], 0.0, "dropped input {i} leaked");
+            }
+        }
+    }
+
+    #[test]
     fn set_weights_roundtrip() {
         let mut net = toy_net(9);
         let mut w = net.weights_cloned();
         w[0][0] = 123.0;
         net.set_weights(&w);
-        assert_eq!(net.layers[0].w.data[0], 123.0);
+        assert_eq!(net.weight(0)[0], 123.0);
         assert_eq!(net.weights()[0][0], 123.0);
+        assert_eq!(net.params().w_flat()[0], 123.0);
+    }
+
+    #[test]
+    fn from_parts_roundtrip() {
+        let net = toy_net(10);
+        let w = net.weights_cloned();
+        let b = net.params().b_cloned();
+        let rebuilt = Mlp::from_parts(&net.spec, &w, &b);
+        assert_eq!(rebuilt.params(), net.params());
     }
 
     #[test]
     fn training_reduces_loss_on_toy_problem() {
-        use crate::nn::sgd::{Nesterov, SgdConfig};
+        use crate::nn::sgd::FlatNesterov;
         let mut net = toy_net(11);
         let mut rng = Rng::new(12);
         let (x, y, labels) = toy_batch(&mut rng, 64);
         let (loss0, _) = net.evaluate(&x, &y, &labels);
-        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.5, momentum: 0.9 });
+        let mut opt = FlatNesterov::new(net.params().layout(), 0.9);
+        let mut scratch = MlpScratch::new();
+        let mut grads = GradBuffer::zeros(net.params().layout().clone());
         for _ in 0..100 {
-            let (_, _, g) = net.loss_and_grads(&x, &y, &labels, false, None);
-            opt.step(&mut net, &g, None);
+            net.loss_grads_into(&x, &y, &labels, false, None, &mut scratch, &mut grads);
+            opt.step(net.params_mut(), &grads, 0.5, None);
         }
         let (loss1, _) = net.evaluate(&x, &y, &labels);
         assert!(loss1 < loss0 * 0.5, "loss {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        // reusing a warm scratch across steps must give identical results
+        let net = toy_net(13);
+        let mut rng = Rng::new(14);
+        let (x, y, labels) = toy_batch(&mut rng, 9);
+        let (l_fresh, e_fresh, g_fresh) = net.loss_and_grads(&x, &y, &labels, false, None);
+        let mut scratch = MlpScratch::new();
+        let mut grads = GradBuffer::zeros(net.params().layout().clone());
+        // run twice through the same buffers; second pass must be identical
+        net.loss_grads_into(&x, &y, &labels, false, None, &mut scratch, &mut grads);
+        let (l2, e2) = net.loss_grads_into(&x, &y, &labels, false, None, &mut scratch, &mut grads);
+        assert_eq!(l_fresh, l2);
+        assert_eq!(e_fresh, e2);
+        assert_eq!(g_fresh.w_flat(), grads.w_flat());
+        assert_eq!(g_fresh.b_flat(), grads.b_flat());
     }
 }

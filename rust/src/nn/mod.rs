@@ -1,6 +1,7 @@
-//! Pure-rust neural network substrate: dense layers, activations,
-//! softmax/cross-entropy, full forward/backward, and SGD with Nesterov
-//! momentum + the paper's clipped learning-rate schedule.
+//! Pure-rust neural network substrate: dense layers over the flat
+//! [`params::ParamSet`] parameter arena, activations, softmax/cross-entropy,
+//! full forward/backward with reusable scratch ([`mlp::MlpScratch`]), and
+//! the fused flat Nesterov optimizer + clipped learning-rate schedule.
 //!
 //! This is the **native L-step backend**: it implements exactly the same
 //! math as the AOT JAX artifact (`python/compile/model.py`), letting every
@@ -9,8 +10,10 @@
 
 pub mod loss;
 pub mod mlp;
+pub mod params;
 pub mod sgd;
 
 pub use loss::{cross_entropy_grad, softmax_cross_entropy};
-pub use mlp::{Activation, Mlp, MlpSpec};
-pub use sgd::{Nesterov, SgdConfig};
+pub use mlp::{Activation, Mlp, MlpScratch, MlpSpec};
+pub use params::{GradBuffer, LayerShape, ParamLayout, ParamSet};
+pub use sgd::{ClippedLrSchedule, FlatNesterov, PenaltyState};

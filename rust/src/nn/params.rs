@@ -1,0 +1,369 @@
+//! The flat parameter plane: every learnable parameter of a net lives in
+//! **one contiguous `f32` arena** — all multiplicative weights first, then
+//! all biases — addressed through a [`ParamLayout`] offset/shape table.
+//!
+//! This is the representation the whole LC hot path runs on:
+//!
+//! * the L step's fused Nesterov update ([`crate::nn::sgd::FlatNesterov`])
+//!   is a single flat loop over `w_flat()`/`b_flat()` — no per-layer
+//!   dispatch, no `Vec<Vec<f32>>` traffic;
+//! * the penalty targets `w_C` and the multipliers `λ` are plain
+//!   weight-arena-length slices, so the penalized gradient
+//!   `∇L + μ(w − w_C) − λ` fuses into the same loop
+//!   ([`crate::linalg::vecops::nesterov_step_penalized`]);
+//! * the C step quantizes per-layer **views** (`w_layer(l)`) of the same
+//!   storage — no copies in, and the quantized result is written back
+//!   through the same layout;
+//! * gradients accumulate into a reusable [`GradBuffer`] with the identical
+//!   layout, so `backend.next_loss_grads_into(&mut grads)` performs zero
+//!   heap allocation in steady state.
+//!
+//! Per-layer `Vec<Vec<f32>>` forms survive only at API edges (results,
+//! serialization, tests) via the `*_cloned`/`set_*_per_layer` converters.
+
+use std::ops::Range;
+
+/// Shape of one dense layer's weight matrix: `(rows, cols)` = (fan-in,
+/// fan-out), row-major — identical to [`crate::linalg::Mat`] layout. The
+/// bias of the layer has `cols` entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl LayerShape {
+    /// Number of multiplicative weights in the layer.
+    pub fn w_len(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Offset/shape table mapping layer indices to ranges of the flat arenas.
+///
+/// Weight offsets index the weight arena (`w_flat`), bias offsets index the
+/// bias arena (`b_flat`); both are dense prefix sums, so per-layer views are
+/// O(1) subslices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamLayout {
+    shapes: Vec<LayerShape>,
+    /// Prefix sums of weight counts; `n_layers + 1` entries.
+    w_off: Vec<usize>,
+    /// Prefix sums of bias counts; `n_layers + 1` entries.
+    b_off: Vec<usize>,
+}
+
+impl ParamLayout {
+    pub fn new(shapes: Vec<LayerShape>) -> ParamLayout {
+        assert!(!shapes.is_empty(), "layout needs at least one layer");
+        let mut w_off = Vec::with_capacity(shapes.len() + 1);
+        let mut b_off = Vec::with_capacity(shapes.len() + 1);
+        w_off.push(0);
+        b_off.push(0);
+        for s in &shapes {
+            w_off.push(w_off.last().unwrap() + s.w_len());
+            b_off.push(b_off.last().unwrap() + s.cols);
+        }
+        ParamLayout { shapes, w_off, b_off }
+    }
+
+    /// Layout of an MLP given its layer widths (including the input), e.g.
+    /// `[784, 300, 100, 10]`.
+    pub fn from_sizes(sizes: &[usize]) -> ParamLayout {
+        ParamLayout::new(
+            sizes
+                .windows(2)
+                .map(|w| LayerShape { rows: w[0], cols: w[1] })
+                .collect(),
+        )
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.shapes.len()
+    }
+
+    pub fn shape(&self, l: usize) -> LayerShape {
+        self.shapes[l]
+    }
+
+    pub fn shapes(&self) -> &[LayerShape] {
+        &self.shapes
+    }
+
+    /// Total multiplicative weights (P1).
+    pub fn w_len(&self) -> usize {
+        *self.w_off.last().unwrap()
+    }
+
+    /// Total biases (P0).
+    pub fn b_len(&self) -> usize {
+        *self.b_off.last().unwrap()
+    }
+
+    /// Range of layer `l`'s weights within the weight arena.
+    pub fn w_range(&self, l: usize) -> Range<usize> {
+        self.w_off[l]..self.w_off[l + 1]
+    }
+
+    /// Range of layer `l`'s bias within the bias arena.
+    pub fn b_range(&self, l: usize) -> Range<usize> {
+        self.b_off[l]..self.b_off[l + 1]
+    }
+
+    /// Layer view of a weight-arena-length slice (e.g. `w_C`, `λ`).
+    pub fn w_slice<'a>(&self, flat: &'a [f32], l: usize) -> &'a [f32] {
+        &flat[self.w_range(l)]
+    }
+
+    pub fn w_slice_mut<'a>(&self, flat: &'a mut [f32], l: usize) -> &'a mut [f32] {
+        &mut flat[self.w_range(l)]
+    }
+
+    /// Split a weight-arena-length slice into its per-layer owned vectors
+    /// (API-edge conversion, e.g. for [`crate::coordinator::LcResult`]).
+    pub fn w_per_layer(&self, flat: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(flat.len(), self.w_len());
+        (0..self.n_layers())
+            .map(|l| flat[self.w_range(l)].to_vec())
+            .collect()
+    }
+}
+
+/// The contiguous parameter arena: one `Vec<f32>` holding
+/// `[w_0 | w_1 | … | b_0 | b_1 | …]`, plus the [`ParamLayout`] that
+/// addresses it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    layout: ParamLayout,
+    /// `[weights (w_len) | biases (b_len)]`.
+    data: Vec<f32>,
+}
+
+impl ParamSet {
+    pub fn zeros(layout: ParamLayout) -> ParamSet {
+        let n = layout.w_len() + layout.b_len();
+        ParamSet { layout, data: vec![0.0; n] }
+    }
+
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layout.n_layers()
+    }
+
+    /// All multiplicative weights, contiguous.
+    pub fn w_flat(&self) -> &[f32] {
+        &self.data[..self.layout.w_len()]
+    }
+
+    pub fn w_flat_mut(&mut self) -> &mut [f32] {
+        let n = self.layout.w_len();
+        &mut self.data[..n]
+    }
+
+    /// All biases, contiguous.
+    pub fn b_flat(&self) -> &[f32] {
+        &self.data[self.layout.w_len()..]
+    }
+
+    pub fn b_flat_mut(&mut self) -> &mut [f32] {
+        let n = self.layout.w_len();
+        &mut self.data[n..]
+    }
+
+    /// Disjoint mutable views of the weight and bias arenas — what the
+    /// fused optimizer step borrows.
+    pub fn split_mut(&mut self) -> (&mut [f32], &mut [f32]) {
+        self.data.split_at_mut(self.layout.w_len())
+    }
+
+    /// Layer `l`'s weight matrix, row-major `(rows, cols)`.
+    pub fn w_layer(&self, l: usize) -> &[f32] {
+        &self.data[self.layout.w_range(l)]
+    }
+
+    pub fn w_layer_mut(&mut self, l: usize) -> &mut [f32] {
+        let r = self.layout.w_range(l);
+        &mut self.data[r]
+    }
+
+    /// Layer `l`'s bias vector.
+    pub fn b_layer(&self, l: usize) -> &[f32] {
+        let r = self.layout.b_range(l);
+        let w = self.layout.w_len();
+        &self.data[w + r.start..w + r.end]
+    }
+
+    pub fn b_layer_mut(&mut self, l: usize) -> &mut [f32] {
+        let r = self.layout.b_range(l);
+        let w = self.layout.w_len();
+        &mut self.data[w + r.start..w + r.end]
+    }
+
+    // ---- API-edge conversions (allocating; not on the step path) --------
+
+    /// Clone the weights into per-layer vectors.
+    pub fn w_cloned(&self) -> Vec<Vec<f32>> {
+        self.layout.w_per_layer(self.w_flat())
+    }
+
+    /// Clone the biases into per-layer vectors.
+    pub fn b_cloned(&self) -> Vec<Vec<f32>> {
+        (0..self.n_layers()).map(|l| self.b_layer(l).to_vec()).collect()
+    }
+
+    /// Overwrite the weights from per-layer vectors (shape-checked).
+    pub fn set_w_per_layer(&mut self, w: &[Vec<f32>]) {
+        assert_eq!(w.len(), self.n_layers(), "layer count mismatch");
+        for (l, wl) in w.iter().enumerate() {
+            let dst = self.w_layer_mut(l);
+            assert_eq!(dst.len(), wl.len(), "layer {l} weight length");
+            dst.copy_from_slice(wl);
+        }
+    }
+
+    /// Overwrite the biases from per-layer vectors (shape-checked).
+    pub fn set_b_per_layer(&mut self, b: &[Vec<f32>]) {
+        assert_eq!(b.len(), self.n_layers(), "layer count mismatch");
+        for (l, bl) in b.iter().enumerate() {
+            let dst = self.b_layer_mut(l);
+            assert_eq!(dst.len(), bl.len(), "layer {l} bias length");
+            dst.copy_from_slice(bl);
+        }
+    }
+}
+
+/// Reusable gradient accumulator with the same arena layout as the
+/// [`ParamSet`] it mirrors. Backends write into it in place
+/// (`Backend::next_loss_grads_into`); the optimizer reads it as two flat
+/// slices. Allocated once per SGD run, never on the per-minibatch path.
+#[derive(Clone, Debug)]
+pub struct GradBuffer {
+    inner: ParamSet,
+}
+
+impl GradBuffer {
+    pub fn zeros(layout: ParamLayout) -> GradBuffer {
+        GradBuffer { inner: ParamSet::zeros(layout) }
+    }
+
+    pub fn layout(&self) -> &ParamLayout {
+        self.inner.layout()
+    }
+
+    /// Flat weight gradients (∂L/∂w, arena order).
+    pub fn w_flat(&self) -> &[f32] {
+        self.inner.w_flat()
+    }
+
+    /// Flat bias gradients.
+    pub fn b_flat(&self) -> &[f32] {
+        self.inner.b_flat()
+    }
+
+    pub fn w_layer(&self, l: usize) -> &[f32] {
+        self.inner.w_layer(l)
+    }
+
+    pub fn b_layer(&self, l: usize) -> &[f32] {
+        self.inner.b_layer(l)
+    }
+
+    pub fn w_layer_mut(&mut self, l: usize) -> &mut [f32] {
+        self.inner.w_layer_mut(l)
+    }
+
+    pub fn b_layer_mut(&mut self, l: usize) -> &mut [f32] {
+        self.inner.b_layer_mut(l)
+    }
+
+    pub fn zero(&mut self) {
+        self.inner.data.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout_4_3_2() -> ParamLayout {
+        ParamLayout::from_sizes(&[4, 3, 2])
+    }
+
+    #[test]
+    fn layout_offsets_and_lengths() {
+        let lo = layout_4_3_2();
+        assert_eq!(lo.n_layers(), 2);
+        assert_eq!(lo.shape(0), LayerShape { rows: 4, cols: 3 });
+        assert_eq!(lo.shape(1), LayerShape { rows: 3, cols: 2 });
+        assert_eq!(lo.w_len(), 12 + 6);
+        assert_eq!(lo.b_len(), 3 + 2);
+        assert_eq!(lo.w_range(0), 0..12);
+        assert_eq!(lo.w_range(1), 12..18);
+        assert_eq!(lo.b_range(0), 0..3);
+        assert_eq!(lo.b_range(1), 3..5);
+    }
+
+    #[test]
+    fn views_address_disjoint_regions() {
+        let mut p = ParamSet::zeros(layout_4_3_2());
+        p.w_layer_mut(0)[0] = 1.0;
+        p.w_layer_mut(1)[5] = 2.0;
+        p.b_layer_mut(0)[2] = 3.0;
+        p.b_layer_mut(1)[1] = 4.0;
+        assert_eq!(p.w_flat()[0], 1.0);
+        assert_eq!(p.w_flat()[17], 2.0);
+        assert_eq!(p.b_flat()[2], 3.0);
+        assert_eq!(p.b_flat()[4], 4.0);
+        let (w, b) = p.split_mut();
+        assert_eq!(w.len(), 18);
+        assert_eq!(b.len(), 5);
+        assert_eq!(w[17], 2.0);
+        assert_eq!(b[4], 4.0);
+    }
+
+    #[test]
+    fn per_layer_roundtrip() {
+        let mut p = ParamSet::zeros(layout_4_3_2());
+        let w = vec![(0..12).map(|i| i as f32).collect::<Vec<_>>(), vec![9.0; 6]];
+        let b = vec![vec![0.5; 3], vec![-0.5; 2]];
+        p.set_w_per_layer(&w);
+        p.set_b_per_layer(&b);
+        assert_eq!(p.w_cloned(), w);
+        assert_eq!(p.b_cloned(), b);
+        assert_eq!(p.w_layer(0)[3], 3.0);
+        assert_eq!(p.b_layer(1), &[-0.5, -0.5]);
+    }
+
+    #[test]
+    fn layout_slices_weight_length_buffers() {
+        let lo = layout_4_3_2();
+        let flat: Vec<f32> = (0..lo.w_len()).map(|i| i as f32).collect();
+        assert_eq!(lo.w_slice(&flat, 1), &flat[12..18]);
+        let per = lo.w_per_layer(&flat);
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0], flat[..12].to_vec());
+        assert_eq!(per[1], flat[12..].to_vec());
+    }
+
+    #[test]
+    fn grad_buffer_mirrors_layout() {
+        let mut g = GradBuffer::zeros(layout_4_3_2());
+        g.w_layer_mut(1)[0] = 7.0;
+        g.b_layer_mut(0)[1] = -1.0;
+        assert_eq!(g.w_flat()[12], 7.0);
+        assert_eq!(g.b_flat()[1], -1.0);
+        g.zero();
+        assert!(g.w_flat().iter().all(|&v| v == 0.0));
+        assert!(g.b_flat().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_w_per_layer_checks_shapes() {
+        let mut p = ParamSet::zeros(layout_4_3_2());
+        p.set_w_per_layer(&[vec![0.0; 11], vec![0.0; 6]]);
+    }
+}

@@ -1,91 +1,85 @@
 //! SGD with Nesterov momentum (the paper trains with Nesterov's accelerated
-//! gradient, §5.3) and the penalized L-step gradient.
+//! gradient, §5.3) over the **flat parameter plane**, and the paper's
+//! clipped learning-rate schedule.
 //!
 //! The L step of the LC algorithm minimizes
 //! `L(w) + μ/2 ‖w − w_C − λ/μ‖²`, whose gradient adds `μ(w − w_C) − λ`
 //! to the loss gradient **of the multiplicative weights only** (biases are
-//! not quantized). [`Penalty`] carries the per-layer targets.
+//! not quantized). [`PenaltyState`] borrows the flat `w_C` and `λ` arenas
+//! owned by the coordinator — no per-L-step clones — and
+//! [`FlatNesterov::step`] fuses the penalty gradient, the velocity update
+//! and the parameter update into one pass over each arena
+//! ([`crate::linalg::vecops::nesterov_step_penalized`]).
 
-use super::mlp::{Grads, Mlp};
-use crate::linalg::Mat;
+use super::params::{GradBuffer, ParamLayout, ParamSet};
+use crate::linalg::vecops;
 
-#[derive(Clone, Copy, Debug)]
-pub struct SgdConfig {
-    pub lr: f32,
-    pub momentum: f32,
-}
-
-/// Per-layer penalty targets for the L step.
-pub struct Penalty<'a> {
-    /// Quantized weights Δ(Θ), per layer.
-    pub wc: &'a [Vec<f32>],
-    /// Lagrange multiplier estimates, per layer (zeros for the
-    /// quadratic-penalty method).
-    pub lambda: &'a [Vec<f32>],
+/// Penalty targets for the L step, borrowed as weight-arena-length slices
+/// (`w_C` and `λ` live in the LC coordinator's flat buffers).
+pub struct PenaltyState<'a> {
+    /// Quantized weights Δ(Θ), flat arena order.
+    pub wc: &'a [f32],
+    /// Lagrange multiplier estimates (all zeros under the quadratic-penalty
+    /// method), flat arena order.
+    pub lambda: &'a [f32],
     pub mu: f32,
 }
 
-/// Nesterov-momentum optimizer (Lasagne formulation:
-/// `v ← m·v − lr·g; w ← w + m·v − lr·g`).
-pub struct Nesterov {
-    vw: Vec<Mat>,
-    vb: Vec<Vec<f32>>,
-    pub cfg: SgdConfig,
+/// Nesterov-momentum optimizer over the flat parameter arena (Lasagne
+/// formulation: `v ← m·v − lr·g; w ← w + m·v − lr·g`). Velocities are two
+/// contiguous buffers mirroring the weight and bias arenas.
+pub struct FlatNesterov {
+    vw: Vec<f32>,
+    vb: Vec<f32>,
+    pub momentum: f32,
 }
 
-impl Nesterov {
-    pub fn new(net: &Mlp, cfg: SgdConfig) -> Nesterov {
-        Nesterov {
-            vw: net.layers.iter().map(|l| Mat::zeros(l.w.rows, l.w.cols)).collect(),
-            vb: net.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
-            cfg,
+impl FlatNesterov {
+    pub fn new(layout: &ParamLayout, momentum: f32) -> FlatNesterov {
+        FlatNesterov {
+            vw: vec![0.0; layout.w_len()],
+            vb: vec![0.0; layout.b_len()],
+            momentum,
         }
     }
 
     /// Reset velocities (used when a new L step starts from a fresh w).
     pub fn reset(&mut self) {
-        for v in self.vw.iter_mut() {
-            v.data.fill(0.0);
-        }
-        for v in self.vb.iter_mut() {
-            v.fill(0.0);
-        }
+        self.vw.fill(0.0);
+        self.vb.fill(0.0);
     }
 
-    /// One update. `penalty` augments the weight gradients with
-    /// `μ(w − w_C) − λ`.
-    pub fn step(&mut self, net: &mut Mlp, grads: &Grads, penalty: Option<&Penalty>) {
-        let (lr, m) = (self.cfg.lr, self.cfg.momentum);
-        for l in 0..net.layers.len() {
-            let w = &mut net.layers[l].w.data;
-            let g = &grads.dw[l].data;
-            let v = &mut self.vw[l].data;
-            match penalty {
-                Some(p) => {
-                    let wc = &p.wc[l];
-                    let lam = &p.lambda[l];
-                    debug_assert_eq!(wc.len(), w.len());
-                    for i in 0..w.len() {
-                        let gi = g[i] + p.mu * (w[i] - wc[i]) - lam[i];
-                        v[i] = m * v[i] - lr * gi;
-                        w[i] += m * v[i] - lr * gi;
-                    }
-                }
-                None => {
-                    for i in 0..w.len() {
-                        v[i] = m * v[i] - lr * g[i];
-                        w[i] += m * v[i] - lr * g[i];
-                    }
-                }
-            }
-            let b = &mut net.layers[l].b;
-            let gb = &grads.db[l];
-            let vb = &mut self.vb[l];
-            for i in 0..b.len() {
-                vb[i] = m * vb[i] - lr * gb[i];
-                b[i] += m * vb[i] - lr * gb[i];
-            }
+    /// One fused in-place update of the parameter arena given gradients,
+    /// lr, and an optional penalty (applied to weights only). No heap
+    /// allocation, no parameter copies.
+    pub fn step(
+        &mut self,
+        params: &mut ParamSet,
+        grads: &GradBuffer,
+        lr: f32,
+        penalty: Option<&PenaltyState>,
+    ) {
+        let m = self.momentum;
+        let (w, b) = params.split_mut();
+        match penalty {
+            Some(p) if p.mu > 0.0 => vecops::nesterov_step_penalized(
+                w,
+                grads.w_flat(),
+                &mut self.vw,
+                p.wc,
+                p.lambda,
+                p.mu,
+                lr,
+                m,
+            ),
+            _ => vecops::nesterov_step(w, grads.w_flat(), &mut self.vw, lr, m),
         }
+        vecops::nesterov_step(b, grads.b_flat(), &mut self.vb, lr, m);
+    }
+
+    /// True when every velocity entry is zero (freshly built or reset).
+    pub fn is_reset(&self) -> bool {
+        self.vw.iter().all(|&v| v == 0.0) && self.vb.iter().all(|&v| v == 0.0)
     }
 }
 
@@ -113,6 +107,7 @@ impl ClippedLrSchedule {
 mod tests {
     use super::*;
     use crate::nn::mlp::MlpSpec;
+    use crate::nn::Mlp;
     use crate::util::rng::Rng;
 
     #[test]
@@ -137,48 +132,49 @@ mod tests {
 
     #[test]
     fn penalty_pulls_weights_toward_target() {
-        let spec = MlpSpec { sizes: vec![2, 3, 2], hidden_activation: crate::nn::Activation::Tanh, dropout_keep: vec![] };
+        let spec = MlpSpec {
+            sizes: vec![2, 3, 2],
+            hidden_activation: crate::nn::Activation::Tanh,
+            dropout_keep: vec![],
+        };
         let mut net = Mlp::new(&spec, 1);
-        let wc: Vec<Vec<f32>> = net
-            .weights()
-            .iter()
-            .map(|w| vec![0.5; w.len()])
-            .collect();
-        let lambda: Vec<Vec<f32>> = net.weights().iter().map(|w| vec![0.0; w.len()]).collect();
-        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.05, momentum: 0.9 });
+        let layout = net.params().layout().clone();
+        let wc = vec![0.5f32; layout.w_len()];
+        let lambda = vec![0.0f32; layout.w_len()];
+        let mut opt = FlatNesterov::new(&layout, 0.9);
         // zero loss gradient: only the penalty acts
-        let grads = crate::nn::mlp::Grads::zeros_like(&net);
-        let penalty = Penalty { wc: &wc, lambda: &lambda, mu: 1.0 };
-        let d0: f32 = net
-            .weights()
-            .iter()
-            .flat_map(|w| w.iter().map(|v| (v - 0.5).powi(2)))
-            .sum();
+        let grads = GradBuffer::zeros(layout.clone());
+        let dist = |p: &crate::nn::params::ParamSet| -> f32 {
+            p.w_flat().iter().map(|v| (v - 0.5).powi(2)).sum()
+        };
+        let d0 = dist(net.params());
         for _ in 0..200 {
-            opt.step(&mut net, &grads, Some(&penalty));
+            let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu: 1.0 };
+            opt.step(net.params_mut(), &grads, 0.05, Some(&penalty));
         }
-        let d1: f32 = net
-            .weights()
-            .iter()
-            .flat_map(|w| w.iter().map(|v| (v - 0.5).powi(2)))
-            .sum();
+        let d1 = dist(net.params());
         assert!(d1 < d0 * 0.01, "penalty distance {d0} -> {d1}");
     }
 
     #[test]
     fn lambda_shifts_the_attractor() {
         // With wc=0 and λ≠0, minimizing μ/2‖w − 0 − λ/μ‖² settles at λ/μ.
-        let spec = MlpSpec { sizes: vec![1, 1], hidden_activation: crate::nn::Activation::Tanh, dropout_keep: vec![] };
+        let spec = MlpSpec {
+            sizes: vec![1, 1],
+            hidden_activation: crate::nn::Activation::Tanh,
+            dropout_keep: vec![],
+        };
         let mut net = Mlp::new(&spec, 2);
-        let wc = vec![vec![0.0f32]];
-        let lambda = vec![vec![0.8f32]];
+        let wc = vec![0.0f32];
+        let lambda = vec![0.8f32];
         let mu = 2.0;
-        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.05, momentum: 0.9 });
-        let grads = crate::nn::mlp::Grads::zeros_like(&net);
+        let mut opt = FlatNesterov::new(net.params().layout(), 0.9);
+        let grads = GradBuffer::zeros(net.params().layout().clone());
         for _ in 0..500 {
-            opt.step(&mut net, &grads, Some(&Penalty { wc: &wc, lambda: &lambda, mu }));
+            let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu };
+            opt.step(net.params_mut(), &grads, 0.05, Some(&penalty));
         }
-        assert!((net.layers[0].w.data[0] - 0.4).abs() < 1e-3); // λ/μ = 0.4
+        assert!((net.weight(0)[0] - 0.4).abs() < 1e-3); // λ/μ = 0.4
     }
 
     #[test]
@@ -193,15 +189,20 @@ mod tests {
 
     #[test]
     fn reset_zeroes_velocity() {
-        let spec = MlpSpec { sizes: vec![2, 2], hidden_activation: crate::nn::Activation::Tanh, dropout_keep: vec![] };
+        let spec = MlpSpec {
+            sizes: vec![2, 2],
+            hidden_activation: crate::nn::Activation::Tanh,
+            dropout_keep: vec![],
+        };
         let mut net = Mlp::new(&spec, 3);
         let mut rng = Rng::new(4);
-        let mut g = crate::nn::mlp::Grads::zeros_like(&net);
-        rng.fill_normal(&mut g.dw[0].data, 0.0, 1.0);
-        let mut opt = Nesterov::new(&net, SgdConfig { lr: 0.1, momentum: 0.9 });
-        opt.step(&mut net, &g, None);
-        assert!(opt.vw[0].data.iter().any(|&v| v != 0.0));
+        let mut g = GradBuffer::zeros(net.params().layout().clone());
+        rng.fill_normal(g.w_layer_mut(0), 0.0, 1.0);
+        let mut opt = FlatNesterov::new(net.params().layout(), 0.9);
+        assert!(opt.is_reset());
+        opt.step(net.params_mut(), &g, 0.1, None);
+        assert!(!opt.is_reset());
         opt.reset();
-        assert!(opt.vw[0].data.iter().all(|&v| v == 0.0));
+        assert!(opt.is_reset());
     }
 }

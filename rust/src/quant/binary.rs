@@ -10,16 +10,36 @@ pub fn sgn(t: f32) -> f32 {
     }
 }
 
+/// Binarize into a reusable buffer (scale 1): `out[i] = sgn(w[i])`.
+pub fn binarize_into(w: &[f32], out: &mut Vec<f32>) {
+    scaled_binarize_into(w, 1.0, out);
+}
+
 /// Binarize to {−1, +1}.
 pub fn binarize(w: &[f32]) -> Vec<f32> {
-    w.iter().map(|&t| sgn(t)).collect()
+    let mut out = Vec::new();
+    binarize_into(w, &mut out);
+    out
+}
+
+/// The optimal binarization scale a = mean |wᵢ| (Thm A.2).
+pub fn optimal_scale(w: &[f32]) -> f32 {
+    crate::linalg::vecops::mean_abs(w)
+}
+
+/// `out[i] = a · sgn(w[i])` into a reusable buffer.
+pub fn scaled_binarize_into(w: &[f32], a: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(w.iter().map(|&t| a * sgn(t)));
 }
 
 /// Binarize to {−a, +a} with the optimal scale a = mean |wᵢ| (Thm A.2).
 /// Returns (a, quantized weights).
 pub fn binarize_with_scale(w: &[f32]) -> (f32, Vec<f32>) {
-    let a = crate::linalg::vecops::mean_abs(w);
-    (a, w.iter().map(|&t| a * sgn(t)).collect())
+    let a = optimal_scale(w);
+    let mut out = Vec::new();
+    scaled_binarize_into(w, a, &mut out);
+    (a, out)
 }
 
 #[cfg(test)]

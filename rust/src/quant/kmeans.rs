@@ -168,19 +168,30 @@ fn assign_pass(
     (changed, sums, counts)
 }
 
-/// Lloyd iterations until assignments stabilize. `centroids` is used as the
-/// warm start and overwritten with the final (sorted) codebook.
-pub fn kmeans_1d(data: &[f32], centroids: &mut Vec<f32>, max_iter: usize) -> KmeansResult {
+/// Lloyd iterations until assignments stabilize, writing the quantized
+/// weights and assignment indices into **reusable buffers** (the C step
+/// calls this once per layer per LC iteration; in steady state the buffers
+/// are already sized and nothing allocates). `centroids` is used as the
+/// warm start and overwritten with the final (sorted) codebook. Returns the
+/// iteration count.
+pub fn kmeans_1d_into(
+    data: &[f32],
+    centroids: &mut Vec<f32>,
+    max_iter: usize,
+    wc: &mut Vec<f32>,
+    assignments: &mut Vec<u32>,
+) -> usize {
     let k = centroids.len();
     assert!(k >= 1);
     centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut assignments: Vec<u32> = vec![u32::MAX; data.len()];
+    assignments.clear();
+    assignments.resize(data.len(), u32::MAX);
     let mut iterations = 0;
     for _ in 0..max_iter {
         iterations += 1;
         // assignment step: O(P log K), threaded (§Perf #3/#4)
         let mids = midpoints(centroids);
-        let (changed, sums, counts) = assign_pass(data, &mids, &mut assignments, k);
+        let (changed, sums, counts) = assign_pass(data, &mids, assignments, k);
         if !changed && iterations > 1 {
             iterations -= 1; // final pass only verified convergence
             break;
@@ -198,10 +209,17 @@ pub fn kmeans_1d(data: &[f32], centroids: &mut Vec<f32>, max_iter: usize) -> Kme
             break;
         }
     }
-    let wc = assignments
-        .iter()
-        .map(|&a| centroids[a as usize])
-        .collect();
+    wc.clear();
+    wc.extend(assignments.iter().map(|&a| centroids[a as usize]));
+    iterations
+}
+
+/// Lloyd iterations until assignments stabilize (allocating convenience
+/// around [`kmeans_1d_into`]).
+pub fn kmeans_1d(data: &[f32], centroids: &mut Vec<f32>, max_iter: usize) -> KmeansResult {
+    let mut wc = Vec::new();
+    let mut assignments = Vec::new();
+    let iterations = kmeans_1d_into(data, centroids, max_iter, &mut wc, &mut assignments);
     KmeansResult { wc, assignments, iterations }
 }
 
@@ -221,6 +239,22 @@ pub fn kmeans_1d_zero_pinned(
     centroids: &mut Vec<f32>,
     max_iter: usize,
 ) -> KmeansResult {
+    let mut wc = Vec::new();
+    let mut assignments = Vec::new();
+    let iterations =
+        kmeans_1d_zero_pinned_into(data, centroids, max_iter, &mut wc, &mut assignments);
+    KmeansResult { wc, assignments, iterations }
+}
+
+/// Buffer-reusing form of [`kmeans_1d_zero_pinned`]; returns the iteration
+/// count.
+pub fn kmeans_1d_zero_pinned_into(
+    data: &[f32],
+    centroids: &mut Vec<f32>,
+    max_iter: usize,
+    wc: &mut Vec<f32>,
+    assignments: &mut Vec<u32>,
+) -> usize {
     let k = centroids.len();
     assert!(k >= 1);
     // ensure exactly one entry is 0 (insert if absent, replacing nearest)
@@ -236,7 +270,8 @@ pub fn kmeans_1d_zero_pinned(
         centroids[nearest] = 0.0;
     }
     centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut assignments: Vec<u32> = vec![u32::MAX; data.len()];
+    assignments.clear();
+    assignments.resize(data.len(), u32::MAX);
     let mut iterations = 0;
     for _ in 0..max_iter {
         iterations += 1;
@@ -267,11 +302,9 @@ pub fn kmeans_1d_zero_pinned(
             break;
         }
     }
-    let wc = assignments
-        .iter()
-        .map(|&a| centroids[a as usize])
-        .collect();
-    KmeansResult { wc, assignments, iterations }
+    wc.clear();
+    wc.extend(assignments.iter().map(|&a| centroids[a as usize]));
+    iterations
 }
 
 #[cfg(test)]

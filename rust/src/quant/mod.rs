@@ -74,8 +74,11 @@ impl Scheme {
     }
 }
 
-/// Result of one C step on one layer.
-#[derive(Clone, Debug)]
+/// Result of one C step on one layer. The buffers are **reusable**: the LC
+/// loop keeps one `QuantOut` per layer and calls
+/// [`LayerQuantizer::compress_into`] every iteration, so the C step
+/// allocates nothing in steady state.
+#[derive(Clone, Debug, Default)]
 pub struct QuantOut {
     /// Quantized weights w_C = Δ(Θ), same length as the input.
     pub wc: Vec<f32>,
@@ -93,68 +96,102 @@ pub struct QuantOut {
 
 /// Stateful per-layer quantizer: adaptive codebooks warm-start from the
 /// previous C step's centroids (paper §3.3: "k-means is initialized from
-/// the previous iteration's codebook").
+/// the previous iteration's codebook"); fixed codebooks cache their sorted
+/// form + Voronoi midpoints.
 pub struct LayerQuantizer {
     pub scheme: Scheme,
     /// Warm-start centroids for the adaptive scheme.
     state: Option<Vec<f32>>,
+    /// (sorted codebook, midpoints) cache for `Scheme::FixedCodebook`.
+    fixed: Option<(Vec<f32>, Vec<f32>)>,
+    /// Codebook cache for `Scheme::PowersOfTwo`.
+    pow2_cb: Option<Vec<f32>>,
     rng: Rng,
 }
 
 impl LayerQuantizer {
     pub fn new(scheme: Scheme, seed: u64) -> LayerQuantizer {
-        LayerQuantizer { scheme, state: None, rng: Rng::new(seed) }
+        let fixed = if let Scheme::FixedCodebook { codebook } = &scheme {
+            let mut sorted = codebook.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mids = kmeans::midpoints(&sorted);
+            Some((sorted, mids))
+        } else {
+            None
+        };
+        let pow2_cb = if let Scheme::PowersOfTwo { c } = &scheme {
+            Some(pow2::codebook(*c))
+        } else {
+            None
+        };
+        LayerQuantizer { scheme, state: None, fixed, pow2_cb, rng: Rng::new(seed) }
     }
 
-    /// Solve the C step for this layer's (shifted) weights.
-    pub fn compress(&mut self, w: &[f32]) -> QuantOut {
+    /// Solve the C step for this layer's (shifted) weights, writing the
+    /// result into the reusable `out` buffers — the non-allocating form the
+    /// LC loop uses on its per-layer arena views.
+    pub fn compress_into(&mut self, w: &[f32], out: &mut QuantOut) {
+        out.iterations = 1;
         match &self.scheme {
             Scheme::AdaptiveCodebook { k } => {
                 let mut centroids = match self.state.take() {
                     Some(c) if c.len() == *k => c,
                     _ => kmeans::kmeans_pp_init(w, *k, &mut self.rng),
                 };
-                let result = kmeans::kmeans_1d(w, &mut centroids, 200);
-                self.state = Some(centroids.clone());
-                QuantOut {
-                    wc: result.wc,
-                    codebook: centroids,
-                    assignments: result.assignments,
-                    iterations: result.iterations,
-                }
+                out.iterations =
+                    kmeans::kmeans_1d_into(w, &mut centroids, 200, &mut out.wc, &mut out.assignments);
+                out.codebook.clear();
+                out.codebook.extend_from_slice(&centroids);
+                self.state = Some(centroids);
             }
-            Scheme::FixedCodebook { codebook } => {
-                let mut sorted = codebook.clone();
-                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                let assignments = fixed::assign_fixed(w, &sorted);
-                let wc = assignments.iter().map(|&a| sorted[a as usize]).collect();
-                QuantOut { wc, codebook: sorted, assignments, iterations: 1 }
+            Scheme::FixedCodebook { .. } => {
+                let (sorted, mids) = self.fixed.as_ref().expect("fixed codebook cache");
+                out.assignments.clear();
+                out.assignments
+                    .extend(w.iter().map(|&x| kmeans::nearest_via_mids(mids, x) as u32));
+                out.wc.clear();
+                out.wc.extend(out.assignments.iter().map(|&a| sorted[a as usize]));
+                out.codebook.clear();
+                out.codebook.extend_from_slice(sorted);
             }
             Scheme::Binary => {
-                let wc = binary::binarize(w);
-                let assignments = sign_assignments(&wc);
-                QuantOut { wc, codebook: vec![-1.0, 1.0], assignments, iterations: 1 }
+                binary::binarize_into(w, &mut out.wc);
+                sign_assignments_into(&out.wc, &mut out.assignments);
+                set_codebook(&mut out.codebook, &[-1.0, 1.0]);
             }
             Scheme::BinaryScale => {
-                let (a, wc) = binary::binarize_with_scale(w);
+                let a = binary::optimal_scale(w);
+                binary::scaled_binarize_into(w, a, &mut out.wc);
                 // a == mean|w| ≥ 0, so [-a, a] is sorted; the sign of the
                 // *input* picks the entry (wc is ±a, possibly ±0).
-                let assignments = sign_assignments(w);
-                QuantOut { wc, codebook: vec![-a, a], assignments, iterations: 1 }
+                sign_assignments_into(w, &mut out.assignments);
+                set_codebook(&mut out.codebook, &[-a, a]);
             }
             Scheme::Ternary => {
-                let wc = ternary::ternarize(w);
-                let assignments = ternary_assignments(&wc);
-                QuantOut { wc, codebook: vec![-1.0, 0.0, 1.0], assignments, iterations: 1 }
+                ternary::scaled_ternarize_into(w, 1.0, &mut out.wc);
+                ternary_assignments_into(&out.wc, &mut out.assignments);
+                set_codebook(&mut out.codebook, &[-1.0, 0.0, 1.0]);
             }
             Scheme::TernaryScale => {
-                let (a, wc) = ternary::ternarize_with_scale(w);
-                let assignments = ternary_assignments(&wc);
-                QuantOut { wc, codebook: vec![-a, 0.0, a], assignments, iterations: 1 }
+                let a = ternary::optimal_scale(w);
+                ternary::scaled_ternarize_into(w, a, &mut out.wc);
+                ternary_assignments_into(&out.wc, &mut out.assignments);
+                set_codebook(&mut out.codebook, &[-a, 0.0, a]);
             }
             Scheme::PowersOfTwo { c } => {
-                let (wc, assignments) = pow2::quantize_pow2_with_assignments(w, *c);
-                QuantOut { wc, codebook: pow2::codebook(*c), assignments, iterations: 1 }
+                out.wc.clear();
+                out.assignments.clear();
+                for &t in w {
+                    let v = pow2::q_pow2(t, *c);
+                    out.wc.push(v);
+                    out.assignments.push(pow2::index_in_codebook(v, *c));
+                }
+                let cb = self
+                    .pow2_cb
+                    .as_ref()
+                    .expect("pow2 codebook cache");
+                debug_assert_eq!(cb.len(), 2 * (*c as usize + 1) + 1);
+                set_codebook(&mut out.codebook, cb);
             }
             Scheme::AdaptiveWithZero { k } => {
                 let mut centroids = match self.state.take() {
@@ -169,16 +206,25 @@ impl LayerQuantizer {
                         c
                     }
                 };
-                let result = kmeans::kmeans_1d_zero_pinned(w, &mut centroids, 200);
-                self.state = Some(centroids.clone());
-                QuantOut {
-                    wc: result.wc,
-                    codebook: centroids,
-                    assignments: result.assignments,
-                    iterations: result.iterations,
-                }
+                out.iterations = kmeans::kmeans_1d_zero_pinned_into(
+                    w,
+                    &mut centroids,
+                    200,
+                    &mut out.wc,
+                    &mut out.assignments,
+                );
+                out.codebook.clear();
+                out.codebook.extend_from_slice(&centroids);
+                self.state = Some(centroids);
             }
         }
+    }
+
+    /// Solve the C step, returning fresh buffers (allocating convenience).
+    pub fn compress(&mut self, w: &[f32]) -> QuantOut {
+        let mut out = QuantOut::default();
+        self.compress_into(w, &mut out);
+        out
     }
 
     /// Reset warm-start state (e.g. when restarting the LC loop).
@@ -187,25 +233,31 @@ impl LayerQuantizer {
     }
 }
 
-/// Codebook index from the sign convention of eq. (12): negative → entry 0,
-/// non-negative (sgn(0) = +1) → entry 1 of a `[-a, a]` codebook.
-fn sign_assignments(w: &[f32]) -> Vec<u32> {
-    w.iter().map(|&t| (t >= 0.0) as u32).collect()
+/// Overwrite a reusable codebook buffer with the given entries.
+fn set_codebook(dst: &mut Vec<f32>, entries: &[f32]) {
+    dst.clear();
+    dst.extend_from_slice(entries);
 }
 
-/// Codebook index for a ternarized value in `[-a, 0, a]`.
-fn ternary_assignments(wc: &[f32]) -> Vec<u32> {
-    wc.iter()
-        .map(|&v| {
-            if v == 0.0 {
-                1
-            } else if v < 0.0 {
-                0
-            } else {
-                2
-            }
-        })
-        .collect()
+/// Codebook index from the sign convention of eq. (12): negative → entry 0,
+/// non-negative (sgn(0) = +1) → entry 1 of a `[-a, a]` codebook.
+fn sign_assignments_into(w: &[f32], out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(w.iter().map(|&t| (t >= 0.0) as u32));
+}
+
+/// Codebook index for ternarized values in `[-a, 0, a]`.
+fn ternary_assignments_into(wc: &[f32], out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(wc.iter().map(|&v| {
+        if v == 0.0 {
+            1u32
+        } else if v < 0.0 {
+            0
+        } else {
+            2
+        }
+    }));
 }
 
 /// Squared distortion ‖w − wc‖² — the quantity the C step minimizes.
@@ -293,6 +345,39 @@ mod tests {
                         "{scheme:?}: wc[{i}]={} != codebook[{a}]",
                         out.wc[i]
                     );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn compress_into_reuses_buffers_and_matches_compress() {
+        // one QuantOut recycled across schemes and inputs must equal the
+        // allocating form every time (the LC loop's usage pattern)
+        check("compress_into == compress", 40, |g| {
+            let schemes = [
+                Scheme::AdaptiveCodebook { k: g.usize_in(1, 6) },
+                Scheme::AdaptiveWithZero { k: g.usize_in(2, 6) },
+                Scheme::Binary,
+                Scheme::BinaryScale,
+                Scheme::Ternary,
+                Scheme::TernaryScale,
+                Scheme::PowersOfTwo { c: g.usize_in(0, 4) as u32 },
+                Scheme::FixedCodebook { codebook: vec![0.4, -0.7, 0.0] },
+            ];
+            for scheme in schemes {
+                let mut q_into = LayerQuantizer::new(scheme.clone(), 10 + g.case as u64);
+                let mut q_alloc = LayerQuantizer::new(scheme.clone(), 10 + g.case as u64);
+                let mut out = QuantOut::default();
+                // two rounds with different lengths: buffers shrink/grow
+                for len in [120usize, 80] {
+                    let w = g.weights(len, 1.0);
+                    q_into.compress_into(&w, &mut out);
+                    let fresh = q_alloc.compress(&w);
+                    assert_eq!(out.wc, fresh.wc, "{scheme:?} wc");
+                    assert_eq!(out.codebook, fresh.codebook, "{scheme:?} codebook");
+                    assert_eq!(out.assignments, fresh.assignments, "{scheme:?} assignments");
+                    assert_eq!(out.iterations, fresh.iterations, "{scheme:?} iterations");
                 }
             }
         });

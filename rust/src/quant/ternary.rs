@@ -9,18 +9,27 @@
 
 use super::binary::sgn;
 
-/// Ternarize to {−1, 0, +1}.
-pub fn ternarize(w: &[f32]) -> Vec<f32> {
-    w.iter()
-        .map(|&t| if t.abs() < 0.5 { 0.0 } else { sgn(t) })
-        .collect()
+/// `out[i] = 0 if |w[i]| < a/2 else a·sgn(w[i])` into a reusable buffer —
+/// the eq. (11) assignment for the {−a, 0, +a} codebook.
+pub fn scaled_ternarize_into(w: &[f32], a: f32, out: &mut Vec<f32>) {
+    let half = 0.5 * a;
+    out.clear();
+    out.extend(w.iter().map(|&t| if t.abs() < half { 0.0 } else { a * sgn(t) }));
 }
 
-/// Ternarize to {−a, 0, +a} with the exact optimal scale (Thm A.3).
-/// Returns (a, quantized weights). Runtime O(P log P) (dominated by sort).
-pub fn ternarize_with_scale(w: &[f32]) -> (f32, Vec<f32>) {
+/// Ternarize to {−1, 0, +1}.
+pub fn ternarize(w: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    scaled_ternarize_into(w, 1.0, &mut out);
+    out
+}
+
+/// The exact optimal ternarization scale (Thm A.3): sort |w| descending,
+/// j* = argmax_j (1/√j)·Σ_{i≤j}|w_i|, a* = mean magnitude of those j*.
+/// Runtime O(P log P) (dominated by the sort).
+pub fn optimal_scale(w: &[f32]) -> f32 {
     if w.is_empty() {
-        return (0.0, Vec::new());
+        return 0.0;
     }
     // Sort magnitudes descending. §Perf optimization #1: non-negative f32
     // order equals their bit-pattern order as u32, so sort integer keys
@@ -41,12 +50,15 @@ pub fn ternarize_with_scale(w: &[f32]) -> (f32, Vec<f32>) {
             best_prefix = prefix;
         }
     }
-    let a = (best_prefix / best_j as f64) as f32;
-    let half = 0.5 * a;
-    let wc = w
-        .iter()
-        .map(|&t| if t.abs() < half { 0.0 } else { a * sgn(t) })
-        .collect();
+    (best_prefix / best_j as f64) as f32
+}
+
+/// Ternarize to {−a, 0, +a} with the exact optimal scale (Thm A.3).
+/// Returns (a, quantized weights).
+pub fn ternarize_with_scale(w: &[f32]) -> (f32, Vec<f32>) {
+    let a = optimal_scale(w);
+    let mut wc = Vec::new();
+    scaled_ternarize_into(w, a, &mut wc);
     (a, wc)
 }
 

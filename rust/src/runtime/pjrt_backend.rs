@@ -1,6 +1,7 @@
 //! [`PjrtBackend`]: the production L-step backend. Loss/gradients come from
 //! the AOT-compiled JAX graph (L2) executed via PJRT; the coordinator keeps
-//! the parameters and optimizer state in rust, so the LC algorithm,
+//! the parameters and optimizer state in rust — as the same flat
+//! [`ParamSet`] arena the native backend uses, so the LC algorithm,
 //! BinaryConnect, DC and iDC all run unchanged on this backend.
 //!
 //! Artifact conventions (see `python/compile/aot.py`):
@@ -12,10 +13,11 @@
 //! remainder is skipped, which perturbs metrics by <0.1% at our sizes.
 
 use super::{literal_f32, scalar_f32, to_vec_f32, Engine};
-use crate::coordinator::{Backend, FlatGrads};
+use crate::coordinator::Backend;
 use crate::data::batcher::Batcher;
 use crate::data::Dataset;
 use crate::linalg::Mat;
+use crate::nn::params::{GradBuffer, LayerShape, ParamLayout, ParamSet};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 
@@ -23,9 +25,7 @@ pub struct PjrtBackend {
     engine: Engine,
     grad_name: String,
     eval_name: String,
-    w: Vec<Vec<f32>>,
-    b: Vec<Vec<f32>>,
-    w_shapes: Vec<Vec<usize>>,
+    params: ParamSet,
     batch: usize,
     n_classes: usize,
     pub train: Dataset,
@@ -56,10 +56,7 @@ impl PjrtBackend {
         }
         let n_layers = (n_inputs - 2) / 2;
         let batch = spec.meta.get("batch").copied().unwrap_or(128.0) as usize;
-        let mut rng = Rng::new(seed);
-        let mut w = Vec::new();
-        let mut b = Vec::new();
-        let mut w_shapes = Vec::new();
+        let mut shapes = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
             let ws = &spec.inputs[2 * l];
             let bs = &spec.inputs[2 * l + 1];
@@ -67,14 +64,24 @@ impl PjrtBackend {
                 return Err(anyhow!("weight input {} not rank-2", ws.name));
             }
             let (fan_in, fan_out) = (ws.shape[0], ws.shape[1]);
-            let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
-            let mut wl = vec![0.0f32; ws.numel()];
-            for v in wl.iter_mut() {
+            if bs.numel() != fan_out {
+                return Err(anyhow!(
+                    "bias input {} has {} entries, expected {fan_out}",
+                    bs.name,
+                    bs.numel()
+                ));
+            }
+            shapes.push(LayerShape { rows: fan_in, cols: fan_out });
+        }
+        let layout = ParamLayout::new(shapes);
+        let mut params = ParamSet::zeros(layout);
+        let mut rng = Rng::new(seed);
+        for l in 0..n_layers {
+            let shape = params.layout().shape(l);
+            let limit = (6.0 / (shape.rows + shape.cols) as f32).sqrt();
+            for v in params.w_layer_mut(l).iter_mut() {
                 *v = rng.uniform_in(-limit, limit);
             }
-            w.push(wl);
-            b.push(vec![0.0f32; bs.numel()]);
-            w_shapes.push(ws.shape.clone());
         }
         let n_classes = train.n_classes;
         let batcher = Batcher::new(train.len(), batch.min(train.len()), seed);
@@ -82,9 +89,7 @@ impl PjrtBackend {
             engine,
             grad_name,
             eval_name,
-            w,
-            b,
-            w_shapes,
+            params,
             batch,
             n_classes,
             train,
@@ -98,10 +103,12 @@ impl PjrtBackend {
     }
 
     fn param_literals(&self) -> Result<Vec<xla::Literal>> {
-        let mut lits = Vec::with_capacity(self.w.len() * 2);
-        for l in 0..self.w.len() {
-            lits.push(literal_f32(&self.w[l], &self.w_shapes[l])?);
-            lits.push(literal_f32(&self.b[l], &[self.b[l].len()])?);
+        let n_layers = self.params.n_layers();
+        let mut lits = Vec::with_capacity(n_layers * 2);
+        for l in 0..n_layers {
+            let shape = self.params.layout().shape(l);
+            lits.push(literal_f32(self.params.w_layer(l), &[shape.rows, shape.cols])?);
+            lits.push(literal_f32(self.params.b_layer(l), &[shape.cols])?);
         }
         Ok(lits)
     }
@@ -156,27 +163,13 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
-    fn n_layers(&self) -> usize {
-        self.w.len()
+    fn params(&self) -> &ParamSet {
+        &self.params
     }
-    fn weights(&self) -> Vec<Vec<f32>> {
-        self.w.clone()
+    fn params_mut(&mut self) -> &mut ParamSet {
+        &mut self.params
     }
-    fn set_weights(&mut self, w: &[Vec<f32>]) {
-        assert_eq!(w.len(), self.w.len());
-        for (dst, src) in self.w.iter_mut().zip(w) {
-            dst.copy_from_slice(src);
-        }
-    }
-    fn biases(&self) -> Vec<Vec<f32>> {
-        self.b.clone()
-    }
-    fn set_biases(&mut self, b: &[Vec<f32>]) {
-        for (dst, src) in self.b.iter_mut().zip(b) {
-            dst.copy_from_slice(src);
-        }
-    }
-    fn next_loss_grads(&mut self) -> (f32, FlatGrads) {
+    fn next_loss_grads_into(&mut self, grads: &mut GradBuffer) -> f32 {
         let batch = self.batcher.next_batch(&self.train);
         let (xl, yl) = self
             .batch_literals(&batch.x, &batch.y)
@@ -189,13 +182,13 @@ impl Backend for PjrtBackend {
             .execute(&self.grad_name, &inputs)
             .expect("grad artifact execution");
         let loss = scalar_f32(&out[0]).expect("loss scalar");
-        let mut dw = Vec::with_capacity(self.w.len());
-        let mut db = Vec::with_capacity(self.w.len());
-        for l in 0..self.w.len() {
-            dw.push(to_vec_f32(&out[1 + 2 * l]).expect("dw"));
-            db.push(to_vec_f32(&out[2 + 2 * l]).expect("db"));
+        for l in 0..self.params.n_layers() {
+            let dw = to_vec_f32(&out[1 + 2 * l]).expect("dw");
+            grads.w_layer_mut(l).copy_from_slice(&dw);
+            let db = to_vec_f32(&out[2 + 2 * l]).expect("db");
+            grads.b_layer_mut(l).copy_from_slice(&db);
         }
-        (loss, FlatGrads { dw, db })
+        loss
     }
     fn eval_train(&mut self) -> (f32, f32) {
         self.eval_dataset(false).expect("eval train")

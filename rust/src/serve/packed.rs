@@ -5,6 +5,7 @@
 //! [`crate::quant::ratio::quantized_bits`] bit for bit.
 
 use crate::coordinator::LcResult;
+use crate::nn::params::ParamSet;
 use crate::nn::{Mlp, MlpSpec};
 use crate::quant::ratio::{self, bits_per_weight};
 use crate::quant::Scheme;
@@ -157,14 +158,25 @@ impl PackedModel {
     }
 
     /// Package an [`LcResult`] — the final C step's assignments go straight
-    /// into the bit-packing, no re-quantization of the dense weights.
+    /// into the bit-packing, no re-quantization of the dense weights. The
+    /// full-precision biases are read as per-layer views of the backend's
+    /// flat [`ParamSet`] arena (paper §5: biases are not quantized).
     pub fn from_lc(
         name: &str,
         spec: &MlpSpec,
         lc: &LcResult,
-        biases: &[Vec<f32>],
+        params: &ParamSet,
     ) -> Result<PackedModel> {
-        PackedModel::from_parts(name, spec, &lc.scheme, &lc.codebooks, &lc.assignments, biases)
+        let n_layers = spec.n_layers();
+        if params.layout().n_layers() != n_layers {
+            return Err(anyhow!(
+                "param arena has {} layers, spec {n_layers}",
+                params.layout().n_layers()
+            ));
+        }
+        let biases: Vec<Vec<f32>> =
+            (0..n_layers).map(|l| params.b_layer(l).to_vec()).collect();
+        PackedModel::from_parts(name, spec, &lc.scheme, &lc.codebooks, &lc.assignments, &biases)
     }
 
     pub fn n_layers(&self) -> usize {
@@ -316,8 +328,8 @@ mod tests {
         let (m, wcs) = packed_from_scheme(&Scheme::AdaptiveCodebook { k: 4 }, &spec, 9);
         let net = m.to_mlp();
         assert_eq!(net.weights_cloned(), wcs);
-        for (l, pl) in net.layers.iter().zip(&m.layers) {
-            assert_eq!(l.b, pl.bias);
+        for (l, pl) in m.layers.iter().enumerate() {
+            assert_eq!(net.bias(l), pl.bias.as_slice());
         }
     }
 

@@ -17,7 +17,7 @@ fn trained(seed: u64) -> NativeBackend {
     let (train, test) = data.split(0.15, &mut rng);
     let net = Mlp::new(&MlpSpec::single_hidden(784, 20, 10), seed);
     let mut b = NativeBackend::new(net, train, Some(test), 64, seed);
-    let mut opt = FlatNesterov::new(&b.weights(), &b.biases(), 0.9);
+    let mut opt = FlatNesterov::new(b.layout(), 0.9);
     run_sgd(&mut b, &mut opt, 220, 0.1, None);
     b
 }

@@ -1,0 +1,355 @@
+//! Golden tests for the flat parameter-plane refactor:
+//!
+//! 1. the fused flat `FlatNesterov` + penalty step reproduces the
+//!    pre-refactor per-layer step **bit for bit** on a fixed seed;
+//! 2. `lc_quantize` (flat buffers, `compress_into`, fused multiplier
+//!    update) reproduces a per-layer reference implementation of the seed's
+//!    LC loop exactly — wc, codebooks and assignments unchanged;
+//! 3. the per-minibatch step path (`next_loss_grads_into` + `opt.step`)
+//!    performs **zero heap allocation** in steady state (verified with a
+//!    counting global allocator on sub-threading-threshold shapes);
+//! 4. `lc_quantize` is deterministic given a seed.
+//!
+//! The net shapes here keep every gemm dimension below the threading
+//! threshold (64 rows), so the step path is single-threaded and the
+//! thread-local allocation counter sees every allocation it makes.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use lcquant::coordinator::sgd_driver::{run_sgd, FlatNesterov, PenaltyState};
+use lcquant::coordinator::{lc_quantize, Backend, LcConfig, MuSchedule, NativeBackend, PenaltyMode};
+use lcquant::data::Dataset;
+use lcquant::linalg::{vecops, Mat};
+use lcquant::nn::sgd::ClippedLrSchedule;
+use lcquant::nn::{GradBuffer, Mlp, MlpSpec};
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::util::rng::Rng;
+
+// ---- counting allocator (thread-local, so parallel tests don't bleed) ----
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// ---- fixtures -----------------------------------------------------------
+
+/// Deterministic classification set with every dimension < 64 so the gemm
+/// kernels stay single-threaded.
+fn tiny_dataset(n: usize, dim: usize, classes: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = Mat::zeros(n, dim);
+    rng.fill_normal(&mut images.data, 0.0, 1.0);
+    let labels: Vec<u8> = (0..n).map(|_| rng.below(classes) as u8).collect();
+    Dataset { images, labels, n_classes: classes }
+}
+
+fn tiny_backend(seed: u64) -> NativeBackend {
+    let spec = MlpSpec {
+        sizes: vec![32, 16, 8],
+        hidden_activation: lcquant::nn::Activation::Tanh,
+        dropout_keep: vec![],
+    };
+    let net = Mlp::new(&spec, seed);
+    NativeBackend::new(net, tiny_dataset(64, 32, 8, seed ^ 0xDA7A), None, 32, seed)
+}
+
+// ---- the pre-refactor reference: per-layer parameter plane --------------
+
+struct LegacyNesterov {
+    vw: Vec<Vec<f32>>,
+    vb: Vec<Vec<f32>>,
+    momentum: f32,
+}
+
+impl LegacyNesterov {
+    fn new(w: &[Vec<f32>], b: &[Vec<f32>], momentum: f32) -> LegacyNesterov {
+        LegacyNesterov {
+            vw: w.iter().map(|l| vec![0.0; l.len()]).collect(),
+            vb: b.iter().map(|l| vec![0.0; l.len()]).collect(),
+            momentum,
+        }
+    }
+
+    fn reset(&mut self) {
+        for v in self.vw.iter_mut() {
+            v.fill(0.0);
+        }
+        for v in self.vb.iter_mut() {
+            v.fill(0.0);
+        }
+    }
+}
+
+/// The seed's `run_sgd`, verbatim semantics: clone the parameters into
+/// per-layer vectors, per step allocate gradients, run the per-layer
+/// Nesterov loop (penalty on weights only), then copy the full parameter
+/// set back with `set_weights`/`set_biases`. `benches/bench_lstep.rs`
+/// carries the same reference as `legacy_step` for its before/after
+/// numbers — keep the two in lockstep.
+fn legacy_run_sgd(
+    backend: &mut NativeBackend,
+    opt: &mut LegacyNesterov,
+    steps: usize,
+    lr: f32,
+    penalty: Option<(&[Vec<f32>], &[Vec<f32>], f32)>,
+) -> f32 {
+    let mut w = backend.weights();
+    let mut b = backend.biases();
+    let m = opt.momentum;
+    let mut loss_sum = 0.0f64;
+    for _ in 0..steps {
+        let (loss, grads) = backend.next_loss_grads();
+        loss_sum += loss as f64;
+        for l in 0..w.len() {
+            let (wl, vl) = (&mut w[l], &mut opt.vw[l]);
+            let gl = grads.w_layer(l);
+            match penalty {
+                Some((wc, lam, mu)) if mu > 0.0 => {
+                    for i in 0..wl.len() {
+                        let g = gl[i] + mu * (wl[i] - wc[l][i]) - lam[l][i];
+                        vl[i] = m * vl[i] - lr * g;
+                        wl[i] += m * vl[i] - lr * g;
+                    }
+                }
+                _ => {
+                    for i in 0..wl.len() {
+                        vl[i] = m * vl[i] - lr * gl[i];
+                        wl[i] += m * vl[i] - lr * gl[i];
+                    }
+                }
+            }
+            let (bl, vbl) = (&mut b[l], &mut opt.vb[l]);
+            let gbl = grads.b_layer(l);
+            for i in 0..bl.len() {
+                vbl[i] = m * vbl[i] - lr * gbl[i];
+                bl[i] += m * vbl[i] - lr * gbl[i];
+            }
+        }
+        backend.set_weights(&w);
+        backend.set_biases(&b);
+    }
+    (loss_sum / steps.max(1) as f64) as f32
+}
+
+// ---- 1. optimizer parity ------------------------------------------------
+
+#[test]
+fn fused_flat_step_matches_legacy_per_layer_step_bitwise() {
+    let seed = 2024;
+    let mut flat = tiny_backend(seed);
+    let mut legacy = tiny_backend(seed);
+    assert_eq!(flat.params(), legacy.params(), "fixtures must start identical");
+
+    let layout = flat.layout().clone();
+    // a non-trivial penalty target/multiplier pair, shared by both runs
+    let mut prng = Rng::new(77);
+    let mut wc_flat = vec![0.0f32; layout.w_len()];
+    let mut lam_flat = vec![0.0f32; layout.w_len()];
+    prng.fill_normal(&mut wc_flat, 0.0, 0.3);
+    prng.fill_normal(&mut lam_flat, 0.0, 0.05);
+    let wc_per = layout.w_per_layer(&wc_flat);
+    let lam_per = layout.w_per_layer(&lam_flat);
+    let (steps, lr, mu, momentum) = (40usize, 0.07f32, 0.12f32, 0.9f32);
+
+    let mut opt = FlatNesterov::new(&layout, momentum);
+    let penalty = PenaltyState { wc: &wc_flat, lambda: &lam_flat, mu };
+    let loss_flat = run_sgd(&mut flat, &mut opt, steps, lr, Some(&penalty));
+
+    let mut lopt = LegacyNesterov::new(&legacy.weights(), &legacy.biases(), momentum);
+    let loss_legacy =
+        legacy_run_sgd(&mut legacy, &mut lopt, steps, lr, Some((&wc_per, &lam_per, mu)));
+
+    assert_eq!(loss_flat, loss_legacy, "average L-step losses must match bitwise");
+    assert_eq!(
+        flat.params().w_flat(),
+        legacy.params().w_flat(),
+        "weights diverged from the per-layer reference"
+    );
+    assert_eq!(
+        flat.params().b_flat(),
+        legacy.params().b_flat(),
+        "biases diverged from the per-layer reference"
+    );
+
+    // and the unpenalized path
+    let mut flat2 = tiny_backend(seed + 1);
+    let mut legacy2 = tiny_backend(seed + 1);
+    let mut opt2 = FlatNesterov::new(&layout, momentum);
+    run_sgd(&mut flat2, &mut opt2, steps, lr, None);
+    let mut lopt2 = LegacyNesterov::new(&legacy2.weights(), &legacy2.biases(), momentum);
+    legacy_run_sgd(&mut legacy2, &mut lopt2, steps, lr, None);
+    assert_eq!(flat2.params().w_flat(), legacy2.params().w_flat());
+    assert_eq!(flat2.params().b_flat(), legacy2.params().b_flat());
+}
+
+// ---- 2. LC loop parity --------------------------------------------------
+
+fn parity_cfg() -> LcConfig {
+    LcConfig {
+        scheme: Scheme::AdaptiveCodebook { k: 4 },
+        mu: MuSchedule::new(0.002, 1.4),
+        iterations: 6,
+        l_steps: 20,
+        lr: ClippedLrSchedule { eta0: 0.05, decay: 0.98 },
+        momentum: 0.9,
+        mode: PenaltyMode::AugmentedLagrangian,
+        tol: 0.0,      // run every iteration in both implementations
+        seed: 7,
+        eval_every: 0, // metrics only at the end (no extra RNG traffic)
+        n_weight_samples: 0,
+    }
+}
+
+/// The seed's `lc_quantize` loop, reimplemented over per-layer vectors with
+/// the allocating `compress` — the pre-refactor semantics.
+fn legacy_lc(
+    backend: &mut NativeBackend,
+    cfg: &LcConfig,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<u32>>, Vec<Vec<f32>>) {
+    let n_layers = backend.n_layers();
+    let mut quantizers: Vec<LayerQuantizer> = (0..n_layers)
+        .map(|l| LayerQuantizer::new(cfg.scheme.clone(), cfg.seed.wrapping_add(l as u64)))
+        .collect();
+    let mut w = backend.weights();
+    let mut wc: Vec<Vec<f32>> = Vec::new();
+    let mut codebooks: Vec<Vec<f32>> = Vec::new();
+    let mut assignments: Vec<Vec<u32>> = Vec::new();
+    for (l, q) in quantizers.iter_mut().enumerate() {
+        let out = q.compress(&w[l]);
+        wc.push(out.wc);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+    }
+    let mut lambda: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
+    let mut shifted: Vec<Vec<f32>> = w.iter().map(|l| vec![0.0; l.len()]).collect();
+    let mut opt = LegacyNesterov::new(&w, &backend.biases(), cfg.momentum);
+
+    for j in 0..cfg.iterations {
+        let mu = cfg.mu.mu(j);
+        let lr = cfg.lr.lr(j, mu);
+        opt.reset();
+        legacy_run_sgd(backend, &mut opt, cfg.l_steps, lr, Some((&wc, &lambda, mu)));
+        w = backend.weights();
+        for l in 0..n_layers {
+            vecops::shift_by_multipliers(&w[l], &lambda[l], mu, &mut shifted[l]);
+            let out = quantizers[l].compress(&shifted[l]);
+            wc[l] = out.wc;
+            codebooks[l] = out.codebook;
+            assignments[l] = out.assignments;
+        }
+        for l in 0..n_layers {
+            vecops::update_multipliers(&mut lambda[l], &w[l], &wc[l], mu);
+        }
+    }
+    backend.set_weights(&wc);
+    (wc, codebooks, assignments, w)
+}
+
+#[test]
+fn lc_quantize_matches_legacy_reference_implementation() {
+    let seed = 515;
+    let cfg = parity_cfg();
+
+    // identical pre-trained starting points
+    let mut pre_a = tiny_backend(seed);
+    let mut pre_b = tiny_backend(seed);
+    let mut opt_a = FlatNesterov::new(pre_a.layout(), 0.9);
+    run_sgd(&mut pre_a, &mut opt_a, 60, 0.1, None);
+    let mut opt_b = FlatNesterov::new(pre_b.layout(), 0.9);
+    run_sgd(&mut pre_b, &mut opt_b, 60, 0.1, None);
+    assert_eq!(pre_a.params(), pre_b.params());
+
+    let res = lc_quantize(&mut pre_a, &cfg);
+    let (wc, codebooks, assignments, w) = legacy_lc(&mut pre_b, &cfg);
+
+    assert_eq!(res.wc, wc, "quantized weights changed under the refactor");
+    assert_eq!(res.codebooks, codebooks, "codebooks changed under the refactor");
+    assert_eq!(res.assignments, assignments, "assignments changed under the refactor");
+    assert_eq!(res.w, w, "continuous weights changed under the refactor");
+    // both leave the backend holding the quantized weights
+    assert_eq!(pre_a.params().w_flat(), pre_b.params().w_flat());
+}
+
+#[test]
+fn lc_quantize_is_deterministic_given_seed() {
+    let run = || {
+        let mut b = tiny_backend(99);
+        let mut opt = FlatNesterov::new(b.layout(), 0.9);
+        run_sgd(&mut b, &mut opt, 50, 0.1, None);
+        lc_quantize(&mut b, &parity_cfg())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.wc, b.wc);
+    assert_eq!(a.codebooks, b.codebooks);
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.train_loss, b.train_loss);
+}
+
+// ---- 3. allocation-free step path ---------------------------------------
+
+#[test]
+fn steady_state_minibatch_step_is_allocation_free() {
+    let mut backend = tiny_backend(31);
+    let layout = backend.layout().clone();
+    let mut opt = FlatNesterov::new(&layout, 0.9);
+    let mut grads = GradBuffer::zeros(layout.clone());
+    let wc = vec![0.1f32; layout.w_len()];
+    let lambda = vec![0.0f32; layout.w_len()];
+
+    // Warm up: sizes the batch buffer, activation scratch and label
+    // capacity, and crosses an epoch-reshuffle boundary (n=64, batch=32).
+    for _ in 0..5 {
+        backend.next_loss_grads_into(&mut grads);
+        let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu: 0.05 };
+        opt.step(backend.params_mut(), &grads, 0.05, Some(&penalty));
+    }
+
+    let before = thread_allocs();
+    for _ in 0..10 {
+        backend.next_loss_grads_into(&mut grads);
+        let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu: 0.05 };
+        opt.step(backend.params_mut(), &grads, 0.05, Some(&penalty));
+    }
+    let allocs = thread_allocs() - before;
+    assert_eq!(
+        allocs, 0,
+        "per-minibatch step path allocated {allocs} times over 10 steps"
+    );
+
+    // the unpenalized path must be allocation-free too
+    let before = thread_allocs();
+    for _ in 0..10 {
+        backend.next_loss_grads_into(&mut grads);
+        opt.step(backend.params_mut(), &grads, 0.05, None);
+    }
+    let allocs = thread_allocs() - before;
+    assert_eq!(
+        allocs, 0,
+        "unpenalized step path allocated {allocs} times over 10 steps"
+    );
+}

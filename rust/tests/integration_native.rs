@@ -17,7 +17,7 @@ fn trained_backend(h: usize, n: usize, steps: usize, seed: u64) -> NativeBackend
     let (train, test) = data.split(0.15, &mut rng);
     let net = Mlp::new(&MlpSpec::single_hidden(784, h, 10), seed);
     let mut backend = NativeBackend::new(net, train, Some(test), 64, seed);
-    let mut opt = FlatNesterov::new(&backend.weights(), &backend.biases(), 0.9);
+    let mut opt = FlatNesterov::new(backend.layout(), 0.9);
     run_sgd(&mut backend, &mut opt, steps, 0.1, None);
     backend
 }
@@ -233,7 +233,7 @@ fn pack_serve_pipeline_end_to_end() {
     let mut backend = trained_backend(16, 300, 150, 29);
     let lc = lc_quantize(&mut backend, &cfg(Scheme::AdaptiveCodebook { k: 4 }, 10));
     let spec = backend.net.spec.clone();
-    let model = PackedModel::from_lc("it-k4", &spec, &lc, &backend.biases()).unwrap();
+    let model = PackedModel::from_lc("it-k4", &spec, &lc, backend.params()).unwrap();
 
     // on-disk accounting matches eq. (14)
     let (p1, p0) = spec.param_counts();

@@ -58,16 +58,18 @@ fn grad_step_matches_native_backend() {
         (loss_n - loss_p).abs() < 1e-4 * loss_n.abs().max(1.0),
         "losses differ: native {loss_n} pjrt {loss_p}"
     );
-    for l in 0..g_n.dw.len() {
-        let max_dev = g_n.dw[l]
+    for l in 0..native.n_layers() {
+        let max_dev = g_n
+            .w_layer(l)
             .iter()
-            .zip(&g_p.dw[l])
+            .zip(g_p.w_layer(l))
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_dev < 1e-4, "layer {l} dw max dev {max_dev}");
-        let max_dev_b = g_n.db[l]
+        let max_dev_b = g_n
+            .b_layer(l)
             .iter()
-            .zip(&g_p.db[l])
+            .zip(g_p.b_layer(l))
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_dev_b < 1e-4, "layer {l} db max dev {max_dev_b}");
@@ -92,7 +94,7 @@ fn sgd_training_descends_on_pjrt() {
         return;
     };
     let (l0, _) = pjrt.eval_train();
-    let mut opt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.9);
+    let mut opt = FlatNesterov::new(pjrt.layout(), 0.9);
     run_sgd(&mut pjrt, &mut opt, 30, 0.1, None);
     let (l1, _) = pjrt.eval_train();
     assert!(l1 < l0 * 0.9, "pjrt SGD did not descend: {l0} -> {l1}");
@@ -104,7 +106,7 @@ fn lc_runs_end_to_end_on_pjrt_backend() {
         return;
     };
     // brief reference training then a short LC run at K=2
-    let mut opt = FlatNesterov::new(&pjrt.weights(), &pjrt.biases(), 0.9);
+    let mut opt = FlatNesterov::new(pjrt.layout(), 0.9);
     run_sgd(&mut pjrt, &mut opt, 40, 0.1, None);
     let cfg = LcConfig {
         scheme: Scheme::AdaptiveCodebook { k: 2 },
