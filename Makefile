@@ -4,15 +4,21 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test bench-build clippy fmt-check ci artifacts clean bench-lstep
+.PHONY: tier1 build test test-threaded bench-build clippy fmt-check ci artifacts clean bench-lstep bench-pool
 
-tier1: build test bench-build clippy fmt-check
+tier1: build test test-threaded bench-build clippy fmt-check
 
 build:
 	$(CARGO) build --release
 
 test:
 	$(CARGO) test -q
+
+# One extra pass with a pinned multi-thread policy so the persistent
+# worker-pool dispatch path (gemm bands, k-means, serve engine) is
+# exercised even on single-core CI runners.
+test-threaded:
+	LCQUANT_THREADS=2 $(CARGO) test -q
 
 # Benches are plain binaries (harness = false); --no-run keeps them
 # compiling in tier-1 without paying their runtime.
@@ -39,6 +45,10 @@ fmt-check:
 # BENCH_lstep.json next to the repo root.
 bench-lstep:
 	$(CARGO) bench --bench bench_lstep
+
+# Dispatch-substrate (thread::scope vs persistent pool) and SIMD-vs-scalar
+# vecops numbers; the bench_lstep binary also writes BENCH_pool.json.
+bench-pool: bench-lstep
 
 ci: tier1
 

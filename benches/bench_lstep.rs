@@ -15,10 +15,18 @@
 //!   `GradBuffer` and the fused `FlatNesterov::step` updates the backend's
 //!   `ParamSet` in place (zero copies, zero steady-state allocation).
 //!
-//! A counting global allocator reports allocations per step for both
-//! (thread-spawns inside the threaded gemm also allocate, so the flat
-//! number is small rather than zero here; the strict zero-allocation
-//! assertion lives in `rust/tests/flat_params.rs` on sub-threshold shapes).
+//! A counting global allocator reports allocations per step for both (the
+//! strict zero-allocation assertions — single-threaded *and* pooled —
+//! live in `rust/tests/flat_params.rs`).
+//!
+//! Two further head-to-head measurements are written to `BENCH_pool.json`:
+//!
+//! * **dispatch substrate** — the legacy per-call `thread::scope` band
+//!   fan-out (reconstructed here verbatim) vs the persistent
+//!   `linalg::pool` the kernels now dispatch through, on a gemm-shaped
+//!   band task;
+//! * **vecops substrate** — the 8-lane SIMD-explicit kernels vs their
+//!   `vecops::scalar` references on LeNet300-arena-sized buffers.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,8 +36,8 @@ use lcquant::coordinator::sgd_driver::{FlatNesterov, PenaltyState};
 use lcquant::coordinator::sgd_driver::run_sgd;
 use lcquant::coordinator::{Backend, NativeBackend};
 use lcquant::data::synth_mnist::SynthMnist;
+use lcquant::linalg::{pool, vecops};
 use lcquant::nn::{GradBuffer, Mlp, MlpSpec};
-#[cfg(feature = "pjrt")]
 use lcquant::util::rng::Rng;
 use lcquant::util::timer::bench;
 
@@ -121,6 +129,132 @@ fn measure<F: FnMut()>(name: &str, iters: usize, mut step: F) -> (f64, f64) {
     (1.0 / s.median_s, per_step)
 }
 
+/// The pre-pool dispatch, reconstructed verbatim: split the output into
+/// per-thread row bands (allocating the band table) and fan out with a
+/// fresh `thread::scope` — what every threaded kernel paid per call before
+/// the persistent pool.
+fn scoped_run_bands<F>(m: usize, n: usize, out: &mut [f32], f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    let nt = lcquant::linalg::num_threads();
+    let per = m.div_ceil(nt);
+    let mut bands = Vec::new();
+    let mut rest = out;
+    let mut start = 0;
+    while start < m {
+        let end = (start + per).min(m);
+        let (head, tail) = rest.split_at_mut((end - start) * n);
+        bands.push((start..end, head));
+        rest = tail;
+        start = end;
+    }
+    std::thread::scope(|s| {
+        for (range, chunk) in bands {
+            let fref = &f;
+            s.spawn(move || fref(range, chunk));
+        }
+    });
+}
+
+/// Dispatch-substrate and vecops-substrate head-to-heads → BENCH_pool.json.
+fn bench_pool_and_simd() {
+    let nt = lcquant::linalg::num_threads();
+    println!("\n== dispatch substrate ({nt} threads) ==");
+    // A gemm-band-shaped task: touch every output row once. Small enough
+    // that dispatch overhead dominates — exactly the regime of the
+    // per-minibatch L-step kernels.
+    let (m, n) = (256usize, 300usize);
+    let mut out = vec![0.0f32; m * n];
+    let touch = |rows: std::ops::Range<usize>, band: &mut [f32]| {
+        for (local, r) in rows.enumerate() {
+            let row = &mut band[local * n..(local + 1) * n];
+            for v in row.iter_mut() {
+                *v += r as f32;
+            }
+        }
+    };
+    let s_scoped = bench("band dispatch via thread::scope", 200, || {
+        scoped_run_bands(m, n, &mut out, touch);
+    });
+    println!("{}  ({:.0} dispatches/s)", s_scoped.report(), 1.0 / s_scoped.median_s);
+    let s_pool = bench("band dispatch via persistent pool", 200, || {
+        pool::run_bands(m, n, &mut out, touch);
+    });
+    println!("{}  ({:.0} dispatches/s)", s_pool.report(), 1.0 / s_pool.median_s);
+    let dispatch_speedup = s_scoped.median_s / s_pool.median_s;
+    println!("pool dispatch speedup: {dispatch_speedup:.2}x");
+
+    println!("\n== vecops substrate (LeNet300 weight arena, 266,200 f32) ==");
+    let p1 = 266_200usize;
+    let mut rng = Rng::new(7);
+    let mut w = vec![0.0f32; p1];
+    let mut v = vec![0.0f32; p1];
+    let mut g = vec![0.0f32; p1];
+    let mut wc = vec![0.0f32; p1];
+    let mut lam = vec![0.0f32; p1];
+    rng.fill_normal(&mut w, 0.0, 0.5);
+    rng.fill_normal(&mut g, 0.0, 0.1);
+    rng.fill_normal(&mut wc, 0.0, 0.5);
+    rng.fill_normal(&mut lam, 0.0, 0.05);
+    let s_scal = bench("nesterov_step_penalized (scalar ref)", 100, || {
+        vecops::scalar::nesterov_step_penalized(
+            &mut w, &g, &mut v, &wc, &lam, 0.01, 0.05, 0.9,
+        );
+    });
+    println!("{}  ({:.0}M elem/s)", s_scal.report(), p1 as f64 / s_scal.median_s / 1e6);
+    let s_simd = bench("nesterov_step_penalized (8-lane SIMD)", 100, || {
+        vecops::nesterov_step_penalized(&mut w, &g, &mut v, &wc, &lam, 0.01, 0.05, 0.9);
+    });
+    println!("{}  ({:.0}M elem/s)", s_simd.report(), p1 as f64 / s_simd.median_s / 1e6);
+    let step_speedup = s_scal.median_s / s_simd.median_s;
+
+    let idx: Vec<u32> = (0..p1).map(|_| rng.below(p1) as u32).collect();
+    let g_scal = bench("gather_sum (scalar ref)", 100, || {
+        vecops::scalar::gather_sum(&w, &idx)
+    });
+    println!("{}  ({:.0}M gathers/s)", g_scal.report(), p1 as f64 / g_scal.median_s / 1e6);
+    let g_simd = bench("gather_sum (8-accumulator)", 100, || {
+        vecops::gather_sum(&w, &idx)
+    });
+    println!("{}  ({:.0}M gathers/s)", g_simd.report(), p1 as f64 / g_simd.median_s / 1e6);
+    let gather_speedup = g_scal.median_s / g_simd.median_s;
+    println!(
+        "SIMD speedup: penalized step {step_speedup:.2}x, gather {gather_speedup:.2}x"
+    );
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"pool\",\n");
+    json.push_str(&format!("  \"threads\": {nt},\n"));
+    json.push_str("  \"dispatch\": {\n");
+    json.push_str(&format!(
+        "    \"task\": \"touch {m}x{n} row bands\",\n    \"scoped_spawn_us\": {:.2},\n",
+        s_scoped.median_s * 1e6
+    ));
+    json.push_str(&format!("    \"pool_us\": {:.2},\n", s_pool.median_s * 1e6));
+    json.push_str(&format!("    \"speedup\": {dispatch_speedup:.3}\n  }},\n"));
+    json.push_str("  \"vecops\": {\n");
+    json.push_str(&format!(
+        "    \"arena\": {p1},\n    \"penalized_step_scalar_melems_s\": {:.1},\n",
+        p1 as f64 / s_scal.median_s / 1e6
+    ));
+    json.push_str(&format!(
+        "    \"penalized_step_simd_melems_s\": {:.1},\n",
+        p1 as f64 / s_simd.median_s / 1e6
+    ));
+    json.push_str(&format!("    \"penalized_step_speedup\": {step_speedup:.3},\n"));
+    json.push_str(&format!(
+        "    \"gather_scalar_melems_s\": {:.1},\n    \"gather_simd_melems_s\": {:.1},\n",
+        p1 as f64 / g_scal.median_s / 1e6,
+        p1 as f64 / g_simd.median_s / 1e6
+    ));
+    json.push_str(&format!("    \"gather_speedup\": {gather_speedup:.3}\n  }}\n}}\n"));
+    match std::fs::write("BENCH_pool.json", &json) {
+        Ok(()) => println!("wrote BENCH_pool.json"),
+        Err(e) => eprintln!("could not write BENCH_pool.json: {e}"),
+    }
+}
+
 fn main() {
     println!("== bench_lstep ==");
     let mut data = SynthMnist::generate(1_024, 1);
@@ -204,6 +338,8 @@ fn main() {
         Ok(()) => println!("wrote BENCH_lstep.json"),
         Err(e) => eprintln!("could not write BENCH_lstep.json: {e}"),
     }
+
+    bench_pool_and_simd();
 
     // PJRT backend, if compiled in and artifacts were built
     #[cfg(feature = "pjrt")]

@@ -92,18 +92,17 @@ fn main() {
         );
         let n_threads = 8usize;
         let per_thread = 128usize;
+        let clients: Vec<_> = (0..n_threads).map(|_| server.client()).collect();
         let t = lcquant::util::timer::Timer::start();
-        std::thread::scope(|s| {
-            for th in 0..n_threads {
-                let client = server.client();
-                s.spawn(move || {
-                    let mut trng = Rng::new(100 + th as u64);
-                    let mut x = vec![0.0f32; 784];
-                    for _ in 0..per_thread {
-                        trng.fill_normal(&mut x, 0.0, 1.0);
-                        client.infer("binary", x.clone()).expect("infer");
-                    }
-                });
+        // blocking request drivers: scoped threads, not pool parts, so the
+        // engine being measured keeps the worker pool to itself
+        lcquant::linalg::pool::run_scoped(n_threads, |th| {
+            let client = &clients[th];
+            let mut trng = Rng::new(100 + th as u64);
+            let mut x = vec![0.0f32; 784];
+            for _ in 0..per_thread {
+                trng.fill_normal(&mut x, 0.0, 1.0);
+                client.infer("binary", x.clone()).expect("infer");
             }
         });
         let elapsed = t.elapsed_s();

@@ -6,6 +6,9 @@ set -eu
 
 cargo build --release
 cargo test -q
+# second pass with a pinned multi-thread policy: exercises the persistent
+# worker-pool dispatch path even on single-core runners
+LCQUANT_THREADS=2 cargo test -q
 cargo bench --no-run
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy -- -D warnings

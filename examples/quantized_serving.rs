@@ -120,19 +120,16 @@ fn main() -> Result<()> {
     let names = registry.names();
     let n_threads = 8usize;
     let per_thread = 64usize;
+    let clients: Vec<_> = (0..n_threads).map(|_| server.client()).collect();
     let t = Timer::start();
-    std::thread::scope(|s| {
-        for th in 0..n_threads {
-            let client = server.client();
-            let names = names.clone();
-            let xref = &x;
-            s.spawn(move || {
-                for i in 0..per_thread {
-                    let name = &names[(th + i) % names.len()];
-                    let row = xref.row((th * per_thread + i) % xref.rows).to_vec();
-                    client.infer(name, row).expect("inference failed");
-                }
-            });
+    // blocking request drivers: scoped threads, not pool parts, so the
+    // LUT engine under test keeps the worker pool to itself
+    lcquant::linalg::pool::run_scoped(n_threads, |th| {
+        let client = &clients[th];
+        for i in 0..per_thread {
+            let name = &names[(th + i) % names.len()];
+            let row = x.row((th * per_thread + i) % x.rows).to_vec();
+            client.infer(name, row).expect("inference failed");
         }
     });
     let elapsed = t.elapsed_s();

@@ -32,7 +32,7 @@ pub use schedule::MuSchedule;
 use crate::data::batcher::{Batch, Batcher};
 use crate::data::Dataset;
 use crate::nn::params::{GradBuffer, ParamLayout, ParamSet};
-use crate::nn::{Mlp, MlpScratch};
+use crate::nn::{EvalScratch, Mlp, MlpScratch};
 use crate::util::rng::Rng;
 
 /// A source of minibatch loss/gradients for the L step. Implementations
@@ -109,6 +109,9 @@ pub struct NativeBackend {
     rng: Rng,
     scratch: MlpScratch,
     batch_buf: Batch,
+    /// Staging buffers for chunked dataset evaluation (warm after the
+    /// first eval, so periodic evals stop allocating).
+    eval_scratch: EvalScratch,
     /// Chunk size for dataset evaluation.
     pub eval_chunk: usize,
 }
@@ -124,6 +127,7 @@ impl NativeBackend {
             rng: Rng::new(seed ^ 0xABCD),
             scratch: MlpScratch::new(),
             batch_buf: Batch::empty(),
+            eval_scratch: EvalScratch::new(),
             eval_chunk: 1024,
         }
     }
@@ -152,12 +156,14 @@ impl Backend for NativeBackend {
         loss
     }
     fn eval_train(&mut self) -> (f32, f32) {
-        self.net.evaluate_dataset(&self.train, self.eval_chunk)
+        self.net
+            .evaluate_dataset_into(&self.train, self.eval_chunk, &mut self.eval_scratch)
     }
     fn eval_test(&mut self) -> Option<(f32, f32)> {
+        let scratch = &mut self.eval_scratch;
         self.test
             .as_ref()
-            .map(|t| self.net.evaluate_dataset(t, self.eval_chunk))
+            .map(|t| self.net.evaluate_dataset_into(t, self.eval_chunk, scratch))
     }
 }
 

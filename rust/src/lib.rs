@@ -41,6 +41,25 @@
 //! * the C step quantizes per-layer views and writes back through the same
 //!   layout; `w_C` and `λ` are flat buffers allocated once per LC run.
 //!
+//! ## Threading: one persistent pool, explicit SIMD
+//!
+//! All data-parallel compute kernels — the gemm cores, the k-means
+//! assignment pass, the serve engine's LUT matvec — dispatch through one
+//! lazily-initialized persistent worker pool ([`linalg::pool`]), sized by
+//! [`linalg::num_threads`] (override with `LCQUANT_THREADS`, clamped
+//! `1..=16`). Dispatch takes *borrowed* closures over a lock-light epoch
+//! handshake: **no thread spawns and no heap allocation per call**, so the
+//! per-minibatch step path stays allocation-free even when threaded
+//! (asserted in `rust/tests/flat_params.rs`; measured against the old
+//! per-call `thread::scope` fan-out in `benches/bench_lstep.rs` →
+//! `BENCH_pool.json`). A dispatch issued from inside a running task runs
+//! inline, so nested parallelism degrades gracefully; blocking request
+//! drivers (the serve smoke clients) use [`linalg::pool::run_scoped`]
+//! instead, keeping the pool free for the engine. The [`linalg::vecops`]
+//! hot kernels are SIMD-explicit 8-lane forms with bit-exact
+//! [`linalg::vecops::scalar`] references (golden-pinned, so the LC parity
+//! tests stay bit-for-bit).
+//!
 //! ## Quickstart: train → quantize → pack → serve
 //!
 //! ```no_run

@@ -13,29 +13,21 @@
 //! [`crate::nn::params::GradBuffer`] — no `Mat` temporaries on the
 //! minibatch step path. The [`Mat`] wrappers below keep the ergonomic API
 //! for everything else.
+//!
+//! Above the `PAR_MIN_ROWS` threshold the cores fan their output row
+//! bands out through the persistent worker pool
+//! ([`crate::linalg::pool::run_bands`]): no thread spawns, no band table,
+//! no heap allocation — the threaded minibatch step path is as
+//! allocation-free as the serial one. The rank-1 inner update is the
+//! 8-lane [`vecops::axpy`] kernel.
 
-use super::{num_threads, Mat};
+use super::vecops;
+use super::{num_threads, pool, Mat};
 
 /// Rows-per-thread threshold below which we stay single-threaded.
 const PAR_MIN_ROWS: usize = 64;
 /// k-panel block size.
 const KC: usize = 256;
-
-/// Split `c` (an `m × n` row-major buffer) into per-thread row bands.
-fn row_bands(c: &mut [f32], m: usize, n: usize, nt: usize) -> Vec<(std::ops::Range<usize>, &mut [f32])> {
-    let per = m.div_ceil(nt);
-    let mut out = Vec::new();
-    let mut rest = c;
-    let mut start = 0;
-    while start < m {
-        let end = (start + per).min(m);
-        let (head, tail) = rest.split_at_mut((end - start) * n);
-        out.push((start..end, head));
-        rest = tail;
-        start = end;
-    }
-    out
-}
 
 /// C(m,n) = A(m,k) · B(k,n), overwriting `c`. All slices row-major.
 pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
@@ -54,25 +46,16 @@ pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f3
                     if av == 0.0 {
                         continue;
                     }
-                    let brow = &b[p * n..(p + 1) * n];
-                    for j in 0..n {
-                        crow[j] += av * brow[j];
-                    }
+                    vecops::axpy(av, &b[p * n..(p + 1) * n], crow);
                 }
             }
         }
     };
-    let nt = num_threads();
-    if m < PAR_MIN_ROWS || nt == 1 {
+    if m < PAR_MIN_ROWS || num_threads() == 1 {
         do_rows(0..m, c);
         return;
     }
-    let bands = row_bands(c, m, n, nt);
-    std::thread::scope(|s| {
-        for (range, chunk) in bands {
-            s.spawn(move || do_rows(range, chunk));
-        }
-    });
+    pool::run_bands(m, n, c, do_rows);
 }
 
 /// C(k,n) = Aᵀ·B where A is (m,k) and B is (m,n), overwriting `c`. Used
@@ -94,24 +77,15 @@ pub fn gemm_at_b_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mu
                 if av == 0.0 {
                     continue;
                 }
-                let crow = &mut cdata[local_p * n..(local_p + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
+                vecops::axpy(av, brow, &mut cdata[local_p * n..(local_p + 1) * n]);
             }
         }
     };
-    let nt = num_threads();
-    if k < PAR_MIN_ROWS || nt == 1 {
+    if k < PAR_MIN_ROWS || num_threads() == 1 {
         do_cols(0..k, c);
         return;
     }
-    let bands = row_bands(c, k, n, nt);
-    std::thread::scope(|s| {
-        for (range, chunk) in bands {
-            s.spawn(move || do_cols(range, chunk));
-        }
-    });
+    pool::run_bands(k, n, c, do_cols);
 }
 
 /// C(m,k) = A·Bᵀ where A is (m,n) and B is (k,n), overwriting `c`. Used
@@ -125,21 +99,15 @@ pub fn gemm_a_bt_into(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mu
             let arow = &a[i * n..(i + 1) * n];
             let crow = &mut cdata[local_i * k..(local_i + 1) * k];
             for j in 0..k {
-                crow[j] = super::vecops::dot(arow, &b[j * n..(j + 1) * n]);
+                crow[j] = vecops::dot(arow, &b[j * n..(j + 1) * n]);
             }
         }
     };
-    let nt = num_threads();
-    if m < PAR_MIN_ROWS || nt == 1 {
+    if m < PAR_MIN_ROWS || num_threads() == 1 {
         do_rows(0..m, c);
         return;
     }
-    let bands = row_bands(c, m, k, nt);
-    std::thread::scope(|s| {
-        for (range, chunk) in bands {
-            s.spawn(move || do_rows(range, chunk));
-        }
-    });
+    pool::run_bands(m, k, c, do_rows);
 }
 
 /// C(m,n) = A(m,k) · B(k,n). `c` is overwritten.

@@ -1,28 +1,56 @@
 //! Small dense linear-algebra substrate: a row-major matrix type, a blocked
-//! multi-threaded sgemm, vector ops used on the LC hot path, and a Cholesky
-//! solver for the linear-regression closed-form L step (experiment E2).
+//! multi-threaded sgemm, explicit-SIMD vector ops used on the LC hot path
+//! ([`vecops`]), a Cholesky solver for the linear-regression closed-form
+//! L step (experiment E2), and the **persistent worker pool** ([`pool`])
+//! that every data-parallel kernel in the crate dispatches through.
+//!
+//! # Threading model
+//!
+//! There is exactly one thread policy: [`num_threads`] (resolved once,
+//! `LCQUANT_THREADS`-overridable, clamped to `1..=16`) sizes the lazily
+//! initialized [`pool::global`] worker pool, and the gemm cores, the
+//! k-means assignment pass and the serve engine's LUT matvec all fan out
+//! through [`pool::run`] / [`pool::run_bands`] with *borrowed* closures.
+//! Nothing in the compute plane spawns a thread after the pool is warm:
+//! dispatch is a futex-backed epoch handshake with zero heap allocation,
+//! so the threaded per-minibatch L step stays allocation-free end to end
+//! (the single-threaded guarantee from the flat-parameter-plane refactor
+//! now holds for `LCQUANT_THREADS > 1` too — asserted in
+//! `rust/tests/flat_params.rs`). Blocking request drivers (serve smoke
+//! clients) use [`pool::run_scoped`] — scoped threads — so they never
+//! occupy the compute pool they are exercising. Kernels keep their serial
+//! fallbacks for small shapes; the pool's inline degenerate path makes
+//! `nt == 1` truly thread-free.
 
 pub mod gemm;
+pub mod pool;
 pub mod solve;
 pub mod vecops;
 
+/// The `LCQUANT_THREADS` parse/clamp policy, separated from the cached
+/// resolution so it stays unit-testable (the cache below is process-wide
+/// and can only be observed once per process): a parseable value is
+/// clamped to `1..=16`, anything else falls back to
+/// `available_parallelism`.
+pub fn resolve_threads(env: Option<&str>) -> usize {
+    env.and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .clamp(1, 16)
+}
+
 /// Worker-thread count for the data-parallel kernels, capped at 16 — one
-/// policy shared by gemm, the k-means assignment pass and the serve LUT
-/// engine. Resolved **once** (the gemm hot path used to re-query
+/// policy shared by the whole compute plane: it sizes [`pool::global`],
+/// and the kernels consult it for their serial-fallback thresholds.
+/// Resolved **once** (the gemm hot path used to re-query
 /// `available_parallelism()` on every call) and overridable with the
 /// `LCQUANT_THREADS` environment variable (clamped to `1..=16`; useful for
 /// pinning benchmarks or forcing deterministic single-threaded runs).
 pub fn num_threads() -> usize {
     static NUM_THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *NUM_THREADS.get_or_init(|| {
-        std::env::var("LCQUANT_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
-            .clamp(1, 16)
-    })
+    *NUM_THREADS
+        .get_or_init(|| resolve_threads(std::env::var("LCQUANT_THREADS").ok().as_deref()))
 }
 
 /// Dense row-major `f32` matrix.

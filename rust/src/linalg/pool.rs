@@ -1,0 +1,484 @@
+//! Persistent worker pool — the one threading substrate of the compute
+//! plane.
+//!
+//! Every data-parallel kernel in the crate (the gemm cores, the k-means
+//! assignment pass, the serve engine's LUT matvec, the smoke-client
+//! drivers) used to fan out with a fresh `std::thread::scope`, paying
+//! ~50µs of spawn latency plus a handful of heap allocations *per call* —
+//! on the per-minibatch L-step path that was the last remaining source of
+//! allocation and by far the largest fixed cost. This module replaces all
+//! of those call sites with one lazily-initialized pool of long-lived
+//! workers:
+//!
+//! * **Sizing** — [`global`] spawns `num_threads() − 1` workers on first
+//!   use (the dispatching caller is always participant #0, so a 1-thread
+//!   configuration spawns nothing and every dispatch runs inline).
+//!   [`crate::linalg::num_threads`] honors `LCQUANT_THREADS`, clamped to
+//!   `1..=16`.
+//! * **Dispatch** — [`Pool::run`] hands a *borrowed* closure to the
+//!   workers: the closure is type-erased to a `(data, trampoline)` pointer
+//!   pair that lives on the dispatcher's stack, and the dispatcher blocks
+//!   until every worker has finished, so non-`'static` captures (weight
+//!   arenas, gradient buffers, `&self`) are sound — the existing band
+//!   kernels ported unchanged. Release/collect is a mutex+condvar epoch
+//!   handshake (futex-backed on Linux: **no allocation**, no spawn), and
+//!   parts are pulled from one shared atomic counter so uneven bands
+//!   load-balance.
+//! * **Reentrancy** — one task is in flight at a time (`dispatch` lock).
+//!   A dispatch from inside a running task — same thread or a worker —
+//!   fails the `try_lock` and simply runs inline on the caller, so nested
+//!   parallelism degrades gracefully instead of deadlocking.
+//! * **Bands** — [`Pool::run_bands`] is the row-band form shared by the
+//!   gemm cores and the LUT engine: it splits an `m × n` output buffer
+//!   into at most [`Pool::width`] contiguous row bands by index arithmetic
+//!   (no per-call band `Vec` — the old `row_bands` allocation is gone) and
+//!   hands each part `(row_range, &mut band)`.
+//! * **Panics** — a panicking part poisons neither the pool nor its
+//!   siblings: remaining parts still run, the dispatcher re-raises after
+//!   the barrier, and the workers survive for the next dispatch.
+//!
+//! [`run_scoped`] is the second dispatch flavor, for **blocking** drivers
+//! (the serve smoke clients): real scoped threads per part, so blocking
+//! parts neither cap out at the pool width nor hold the pool's task slot
+//! while the kernels they exercise need it. [`DisjointMut`] is the escape
+//! hatch for call sites whose per-part mutable state is not a contiguous
+//! row band (k-means assignment chunks, per-client handles): it hands out
+//! disjoint `&mut` sub-slices of one buffer by index, with the
+//! disjointness obligation on the caller.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Total worker threads ever spawned by any [`Pool`] in this process.
+/// Tests use the delta across a measured region to assert "zero thread
+/// spawns after warm-up" on the threaded step path.
+static SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// See [`SPAWNED`].
+pub fn total_spawned() -> u64 {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+/// A dispatched task: a type-erased borrowed closure plus its part count.
+/// The raw pointer targets the dispatcher's stack frame; it stays valid
+/// because [`Pool::run`] does not return (or unwind) until every worker
+/// has left the task.
+#[derive(Clone, Copy)]
+struct Task {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    parts: usize,
+}
+
+// SAFETY: the closure behind `data` is `Sync` (enforced by `Pool::run`'s
+// bound) and outlives the dispatch (the dispatcher blocks on the barrier).
+unsafe impl Send for Task {}
+
+unsafe fn trampoline<F: Fn(usize) + Sync>(data: *const (), part: usize) {
+    (*data.cast::<F>())(part)
+}
+
+struct State {
+    /// Bumped once per dispatched task; a worker runs each epoch once.
+    epoch: u64,
+    task: Option<Task>,
+    /// Workers still inside the current task.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// The dispatcher waits here for `active == 0`.
+    done_cv: Condvar,
+    /// Next unclaimed part index of the current task.
+    next: AtomicUsize,
+    /// Set by a worker whose part panicked; the dispatcher re-raises.
+    panicked: AtomicBool,
+}
+
+/// Claim and run parts until the counter runs past `task.parts`.
+fn run_parts(shared: &Shared, task: Task) {
+    loop {
+        let part = shared.next.fetch_add(1, Ordering::Relaxed);
+        if part >= task.parts {
+            return;
+        }
+        // SAFETY: `task.data` is live for the whole dispatch (see `Task`).
+        unsafe { (task.call)(task.data, part) };
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.task.expect("epoch bumped without a task");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_parts(&shared, task);
+        }));
+        if result.is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+/// A persistent worker pool (see the module docs). Library code uses the
+/// process-wide [`global`] pool; tests build private pools of arbitrary
+/// width with [`Pool::new`].
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Spawned workers — participants minus the dispatching caller.
+    n_workers: usize,
+    /// One task in flight at a time; contenders (including reentrant
+    /// dispatches from inside a task) run inline instead of blocking.
+    /// An atomic flag rather than a `Mutex` so a panicking dispatch can
+    /// never poison the pool (the guard resets it during unwinding).
+    busy: AtomicBool,
+}
+
+/// Resets [`Pool::busy`] when the dispatch ends — including by panic.
+struct BusyGuard<'a>(&'a AtomicBool);
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+impl Pool {
+    /// Build a pool with `threads` total participants (the caller counts
+    /// as one, so this spawns `threads − 1` workers; `threads == 1` spawns
+    /// nothing and all dispatches run inline).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, task: None, active: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let n_workers = threads - 1;
+        for i in 0..n_workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("lcq-pool-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+            SPAWNED.fetch_add(1, Ordering::Relaxed);
+        }
+        Pool { shared, n_workers, busy: AtomicBool::new(false) }
+    }
+
+    /// Maximum concurrent participants of one task (workers + caller).
+    pub fn width(&self) -> usize {
+        self.n_workers + 1
+    }
+
+    /// Run `f(part)` for every `part` in `0..parts`, fanned out across the
+    /// workers and the calling thread; returns when all parts are done.
+    ///
+    /// The closure is borrowed, not `'static`: captures live on the
+    /// caller's stack for the whole dispatch. Parts are claimed from a
+    /// shared counter, so they load-balance but have no ordering
+    /// guarantee. Degenerate cases (one part, a 1-thread pool, a dispatch
+    /// already in flight — including from inside a running task) run
+    /// inline on the caller in part order. After warm-up this path
+    /// performs **zero heap allocations and zero thread spawns**.
+    pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, f: F) {
+        if parts == 0 {
+            return;
+        }
+        if parts == 1 || self.n_workers == 0 {
+            for part in 0..parts {
+                f(part);
+            }
+            return;
+        }
+        if self
+            .busy
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            // busy (or reentrant): degrade to inline execution
+            for part in 0..parts {
+                f(part);
+            }
+            return;
+        }
+        let _guard = BusyGuard(&self.busy);
+        let task =
+            Task { data: (&f as *const F).cast::<()>(), call: trampoline::<F>, parts };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.shared.next.store(0, Ordering::Relaxed);
+            self.shared.panicked.store(false, Ordering::Relaxed);
+            st.task = Some(task);
+            st.epoch += 1;
+            st.active = self.n_workers;
+            self.shared.work_cv.notify_all();
+        }
+        // Participate — but even if `f` panics here, the workers still hold
+        // pointers into this stack frame, so the unwind must not pass the
+        // barrier below.
+        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_parts(&self.shared, task);
+        }));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.task = None;
+        drop(st);
+        if let Err(payload) = mine {
+            std::panic::resume_unwind(payload);
+        }
+        if self.shared.panicked.swap(false, Ordering::Acquire) {
+            panic!("pool worker panicked during a dispatched task");
+        }
+    }
+
+    /// Row-banded dispatch over an `m × n` row-major output buffer: `out`
+    /// is split into at most [`Pool::width`] contiguous row bands (by
+    /// index arithmetic — no band table is allocated) and `f(rows, band)`
+    /// runs once per band with `band.len() == rows.len() * n`.
+    pub fn run_bands<F>(&self, m: usize, n: usize, out: &mut [f32], f: F)
+    where
+        F: Fn(Range<usize>, &mut [f32]) + Sync,
+    {
+        assert_eq!(out.len(), m * n, "band buffer shape");
+        if m == 0 {
+            return;
+        }
+        let parts = self.width().min(m);
+        let per = m.div_ceil(parts);
+        let bands = DisjointMut::new(out);
+        self.run(parts, |part| {
+            let start = part * per;
+            let end = m.min(start + per);
+            if start < end {
+                // SAFETY: row bands are disjoint across parts by
+                // construction, and each part index runs exactly once.
+                let band = unsafe { bands.take(start * n..end * n) };
+                f(start..end, band);
+            }
+        });
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.shutdown = true;
+        self.shared.work_cv.notify_all();
+        // Workers wake, observe `shutdown` and return; they own the
+        // `Shared` via `Arc`, so no join is needed.
+    }
+}
+
+/// The process-wide pool used by the library kernels, sized by
+/// [`crate::linalg::num_threads`] on first use.
+pub fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool::new(super::num_threads()))
+}
+
+/// [`Pool::run`] on the [`global`] pool.
+pub fn run<F: Fn(usize) + Sync>(parts: usize, f: F) {
+    global().run(parts, f)
+}
+
+/// [`Pool::run_bands`] on the [`global`] pool.
+pub fn run_bands<F>(m: usize, n: usize, out: &mut [f32], f: F)
+where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    global().run_bands(m, n, out, f)
+}
+
+/// Scoped-thread fan-out for **blocking** drivers (serve smoke clients,
+/// request generators): every part gets its own OS thread for the duration
+/// of the call.
+///
+/// Unlike [`run`], parts here may block — on channel replies, I/O, the
+/// micro-batcher's `max_wait` window — without capping concurrency at the
+/// pool width or starving the compute plane: a blocking part parked inside
+/// a pool task would hold the pool's single task slot, forcing every
+/// concurrent kernel (including the serve engine the driver is exercising)
+/// onto its inline serial fallback. Spawn cost is irrelevant next to the
+/// blocking time these drivers measure; hot compute kernels belong on
+/// [`run`].
+pub fn run_scoped<F: Fn(usize) + Sync>(parts: usize, f: F) {
+    std::thread::scope(|s| {
+        for part in 0..parts {
+            let fref = &f;
+            s.spawn(move || fref(part));
+        }
+    });
+}
+
+/// Hands out disjoint `&mut` sub-slices of one buffer by index — the
+/// per-part mutable state of pool tasks whose partition is not a
+/// contiguous row band (k-means assignment chunks + per-part reduction
+/// slots, per-client handles in the serve drivers).
+pub struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: moving/sharing the handle across threads only moves the raw
+// pointer; actual access goes through `take`, whose disjointness
+// obligation is documented there. `T: Send` because the referents are
+// mutated from worker threads.
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    /// Wrap a buffer; the borrow lasts as long as the handle, so the
+    /// underlying slice cannot be touched while parts hold sub-slices.
+    pub fn new(slice: &'a mut [T]) -> DisjointMut<'a, T> {
+        DisjointMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Mutable access to `range` of the wrapped buffer.
+    ///
+    /// # Safety
+    /// Ranges taken by concurrently running parts must be pairwise
+    /// disjoint, and no range may be taken twice while a previous
+    /// sub-slice for an overlapping range is still alive.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn take(&self, range: Range<usize>) -> &'a mut [T] {
+        assert!(range.start <= range.end && range.end <= self.len, "part out of range");
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_part_runs_exactly_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+        pool.run(hits.len(), |p| {
+            hits[p].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline_in_order() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.width(), 1);
+        let order = Mutex::new(Vec::new());
+        pool.run(8, |p| order.lock().unwrap().push(p));
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrowed_captures_are_visible_after_dispatch() {
+        let pool = Pool::new(3);
+        let input: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; 64];
+        let parts = DisjointMut::new(&mut out);
+        pool.run(8, |p| {
+            let band = unsafe { parts.take(p * 8..(p + 1) * 8) };
+            for (o, i) in band.iter_mut().zip(&input[p * 8..(p + 1) * 8]) {
+                *o = 2.0 * i;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 2.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn run_bands_covers_every_row_once() {
+        let pool = Pool::new(4);
+        for m in [1usize, 2, 3, 7, 16, 33] {
+            let n = 5;
+            let mut out = vec![-1.0f32; m * n];
+            pool.run_bands(m, n, &mut out, |rows, band| {
+                assert_eq!(band.len(), rows.len() * n);
+                for (local, r) in rows.enumerate() {
+                    for v in &mut band[local * n..(local + 1) * n] {
+                        assert_eq!(*v, -1.0, "row {r} written twice");
+                        *v = r as f32;
+                    }
+                }
+            });
+            for r in 0..m {
+                for c in 0..n {
+                    assert_eq!(out[r * n + c], r as f32, "row {r} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nested_dispatch_degrades_to_inline() {
+        let pool = Pool::new(4);
+        let total = AtomicU32::new(0);
+        pool.run(4, |_| {
+            // reentrant dispatch from inside a running task: must not
+            // deadlock, must still run every inner part
+            pool.run(5, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_part() {
+        let pool = Pool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(6, |p| {
+                if p == 3 {
+                    panic!("part 3 exploded");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the dispatcher");
+        // the pool keeps working afterwards
+        let ok = AtomicU32::new(0);
+        pool.run(6, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn zero_parts_is_a_noop() {
+        let pool = Pool::new(2);
+        pool.run(0, |_| panic!("must not run"));
+        pool.run_bands(0, 4, &mut [], |_, _| panic!("must not run"));
+    }
+}

@@ -1,76 +1,251 @@
 //! Vector primitives used on the LC hot path (penalty gradients, multiplier
-//! updates, SGD). All operate on `&[f32]` slices; the compiler autovectorizes
-//! the simple loops, and the chunked forms below help it along.
+//! updates, SGD, the LUT gather) — **SIMD-explicit**.
+//!
+//! The hot kernels process 8 lanes per step over `[f32; 8]` blocks
+//! (`chunks_exact`), which the compiler lowers to one AVX register (or two
+//! NEON quads) without nightly `portable_simd` or arch intrinsics: the
+//! chunked shape removes bounds checks and loop-carried dependencies, so
+//! codegen is straight vector loads/ops/stores plus an unrolled reduction.
+//! Remainders fall through to the [`scalar`] reference forms.
+//!
+//! Two invariants keep the golden tests meaningful:
+//!
+//! * **Element-wise kernels** (`axpy`, `nesterov_step`,
+//!   `nesterov_step_penalized`, the λ half of `update_multipliers_fused`)
+//!   perform the *same per-element operation sequence* as their scalar
+//!   references — no FMA contraction, no reassociation — so they are
+//!   **bit-for-bit identical** to the scalar forms (and to the pre-SIMD
+//!   code), which is what keeps the LC-loop parity tests in
+//!   `rust/tests/flat_params.rs` exact.
+//! * **Reductions** (`dot`, `sum`, `gather_sum`, and the feasibility norms)
+//!   are *defined* by an 8-lane decomposition: element `i` accumulates
+//!   into lane `i % 8`, and lanes combine in the fixed tree
+//!   `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`. The [`scalar`] module
+//!   implements that definition as a plain indexed loop, so the chunked
+//!   kernels are bit-for-bit against it too (the 8 independent
+//!   accumulators are also what breaks the dependency chain — the actual
+//!   speedup for the gather).
 
-/// y += alpha * x
-#[inline]
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+/// SIMD width: 8 × f32 = one 256-bit vector.
+const LANES: usize = 8;
+type F32x8 = [f32; LANES];
+
+#[inline(always)]
+fn ld(s: &[f32]) -> F32x8 {
+    s.try_into().expect("8-lane load")
+}
+
+#[inline(always)]
+fn st(d: &mut [f32], v: F32x8) {
+    d.copy_from_slice(&v);
+}
+
+#[inline(always)]
+fn splat(x: f32) -> F32x8 {
+    [x; LANES]
+}
+
+#[inline(always)]
+fn vadd(a: F32x8, b: F32x8) -> F32x8 {
+    core::array::from_fn(|l| a[l] + b[l])
+}
+
+#[inline(always)]
+fn vsub(a: F32x8, b: F32x8) -> F32x8 {
+    core::array::from_fn(|l| a[l] - b[l])
+}
+
+#[inline(always)]
+fn vmul(a: F32x8, b: F32x8) -> F32x8 {
+    core::array::from_fn(|l| a[l] * b[l])
+}
+
+/// Fixed-order horizontal sum — part of the reduction definition above.
+#[inline(always)]
+fn hsum(a: F32x8) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// Fixed-order horizontal sum for the f64 accumulator pairs.
+#[inline(always)]
+fn hsum64(a: [f64; LANES]) -> f64 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// Bit-exact scalar reference forms of the SIMD kernels above: plain
+/// indexed loops implementing the same per-element operations (and, for
+/// reductions, the same 8-lane decomposition). They serve as the golden
+/// baseline for the parity tests, the tail path of the chunked kernels,
+/// and the "scalar" side of the `bench_lstep` SIMD-vs-scalar measurement.
+pub mod scalar {
+    use super::LANES;
+
+    /// Reference `y += alpha * x`.
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// Reference dot product (8-lane decomposition).
+    pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = [0.0f32; LANES];
+        for i in 0..x.len() {
+            acc[i % LANES] += x[i] * y[i];
+        }
+        super::hsum(acc)
+    }
+
+    /// Reference `Σᵢ x[idx[i]]` (8-lane decomposition).
+    pub fn gather_sum(x: &[f32], idx: &[u32]) -> f32 {
+        let mut acc = [0.0f32; LANES];
+        for (i, &j) in idx.iter().enumerate() {
+            acc[i % LANES] += x[j as usize];
+        }
+        super::hsum(acc)
+    }
+
+    /// Reference sum of all entries (8-lane decomposition).
+    pub fn sum(x: &[f32]) -> f32 {
+        let mut acc = [0.0f32; LANES];
+        for (i, &v) in x.iter().enumerate() {
+            acc[i % LANES] += v;
+        }
+        super::hsum(acc)
+    }
+
+    /// Reference fused Nesterov step.
+    pub fn nesterov_step(w: &mut [f32], g: &[f32], v: &mut [f32], lr: f32, m: f32) {
+        debug_assert_eq!(w.len(), g.len());
+        debug_assert_eq!(w.len(), v.len());
+        for i in 0..w.len() {
+            v[i] = m * v[i] - lr * g[i];
+            w[i] += m * v[i] - lr * g[i];
+        }
+    }
+
+    /// Reference fused Nesterov step with the LC penalty gradient.
+    #[allow(clippy::too_many_arguments)]
+    pub fn nesterov_step_penalized(
+        w: &mut [f32],
+        g: &[f32],
+        v: &mut [f32],
+        wc: &[f32],
+        lambda: &[f32],
+        mu: f32,
+        lr: f32,
+        m: f32,
+    ) {
+        debug_assert_eq!(w.len(), g.len());
+        debug_assert_eq!(w.len(), v.len());
+        debug_assert_eq!(w.len(), wc.len());
+        debug_assert_eq!(w.len(), lambda.len());
+        for i in 0..w.len() {
+            let gi = g[i] + mu * (w[i] - wc[i]) - lambda[i];
+            v[i] = m * v[i] - lr * gi;
+            w[i] += m * v[i] - lr * gi;
+        }
+    }
+
+    /// Reference fused multiplier update + feasibility norms (8-lane f64
+    /// accumulators).
+    pub fn update_multipliers_fused(
+        lambda: &mut [f32],
+        w: &[f32],
+        wc: &[f32],
+        mu: f32,
+    ) -> (f32, f32) {
+        debug_assert_eq!(lambda.len(), w.len());
+        debug_assert_eq!(lambda.len(), wc.len());
+        let mut dist2 = [0.0f64; LANES];
+        let mut norm2 = [0.0f64; LANES];
+        for i in 0..lambda.len() {
+            let d = w[i] - wc[i];
+            lambda[i] -= mu * d;
+            dist2[i % LANES] += (d as f64) * (d as f64);
+            norm2[i % LANES] += (w[i] as f64) * (w[i] as f64);
+        }
+        (super::hsum64(dist2).sqrt() as f32, super::hsum64(norm2).sqrt() as f32)
+    }
+
+    /// Reference `(‖w − wc‖₂, ‖w‖₂)` (8-lane f64 accumulators).
+    pub fn feasibility(w: &[f32], wc: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(w.len(), wc.len());
+        let mut dist2 = [0.0f64; LANES];
+        let mut norm2 = [0.0f64; LANES];
+        for i in 0..w.len() {
+            let d = w[i] - wc[i];
+            dist2[i % LANES] += (d as f64) * (d as f64);
+            norm2[i % LANES] += (w[i] as f64) * (w[i] as f64);
+        }
+        (super::hsum64(dist2).sqrt() as f32, super::hsum64(norm2).sqrt() as f32)
     }
 }
 
-/// Dot product.
+/// y += alpha * x — 8-lane chunked; also the gemm cores' rank-1 update.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let main = x.len() - x.len() % LANES;
+    let a8 = splat(alpha);
+    let (xm, xt) = x.split_at(main);
+    let (ym, yt) = y.split_at_mut(main);
+    for (yc, xc) in ym.chunks_exact_mut(LANES).zip(xm.chunks_exact(LANES)) {
+        st(yc, vadd(ld(yc), vmul(a8, ld(xc))));
+    }
+    scalar::axpy(alpha, xt, yt);
+}
+
+/// Dot product — 8 independent accumulator lanes.
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
-    // 4 independent accumulators to break the dependency chain.
-    let mut acc = [0.0f32; 4];
-    let chunks = x.len() / 4;
-    for i in 0..chunks {
-        let b = i * 4;
-        acc[0] += x[b] * y[b];
-        acc[1] += x[b + 1] * y[b + 1];
-        acc[2] += x[b + 2] * y[b + 2];
-        acc[3] += x[b + 3] * y[b + 3];
+    let main = x.len() - x.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for (xc, yc) in x[..main].chunks_exact(LANES).zip(y[..main].chunks_exact(LANES)) {
+        acc = vadd(acc, vmul(ld(xc), ld(yc)));
     }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..x.len() {
-        s += x[i] * y[i];
+    for (l, i) in (main..x.len()).enumerate() {
+        acc[l] += x[i] * y[i];
     }
-    s
+    hsum(acc)
 }
 
 /// Σᵢ x[idx[i]] — the gather-accumulate primitive of the LUT forward pass
 /// ([`crate::serve::engine`]): per-centroid partial sums are gathers, the
-/// multiply happens once per centroid instead of once per weight.
+/// multiply happens once per centroid instead of once per weight. The
+/// gather itself cannot vectorize without AVX2 `vgatherdps`, but 8
+/// independent accumulator lanes keep the loads pipelined instead of
+/// serialized behind one add chain.
 #[inline]
 pub fn gather_sum(x: &[f32], idx: &[u32]) -> f32 {
-    // 4 accumulators, same rationale as `dot`.
-    let mut acc = [0.0f32; 4];
-    let chunks = idx.len() / 4;
-    for i in 0..chunks {
-        let b = i * 4;
-        acc[0] += x[idx[b] as usize];
-        acc[1] += x[idx[b + 1] as usize];
-        acc[2] += x[idx[b + 2] as usize];
-        acc[3] += x[idx[b + 3] as usize];
+    let main = idx.len() - idx.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in idx[..main].chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] += x[c[l] as usize];
+        }
     }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for &i in &idx[chunks * 4..] {
-        s += x[i as usize];
+    for (l, &j) in idx[main..].iter().enumerate() {
+        acc[l] += x[j as usize];
     }
-    s
+    hsum(acc)
 }
 
-/// Sum of all entries.
+/// Sum of all entries — 8 accumulator lanes.
 #[inline]
 pub fn sum(x: &[f32]) -> f32 {
-    let mut acc = [0.0f32; 4];
-    let chunks = x.len() / 4;
-    for i in 0..chunks {
-        let b = i * 4;
-        acc[0] += x[b];
-        acc[1] += x[b + 1];
-        acc[2] += x[b + 2];
-        acc[3] += x[b + 3];
+    let main = x.len() - x.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in x[..main].chunks_exact(LANES) {
+        acc = vadd(acc, ld(c));
     }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for v in &x[chunks * 4..] {
-        s += v;
+    for (l, &v) in x[main..].iter().enumerate() {
+        acc[l] += v;
     }
-    s
+    hsum(acc)
 }
 
 /// ||x - y||_2
@@ -151,22 +326,37 @@ pub fn update_multipliers(lambda: &mut [f32], w: &[f32], wc: &[f32], mu: f32) {
     }
 }
 
-/// (‖w − wc‖₂, ‖w‖₂) in one pass — the LC feasibility check.
+/// (‖w − wc‖₂, ‖w‖₂) in one pass — the LC feasibility check. Same 8-lane
+/// f64 accumulation as [`update_multipliers_fused`], so the two agree
+/// bit-for-bit on identical inputs.
 #[inline]
 pub fn feasibility(w: &[f32], wc: &[f32]) -> (f32, f32) {
     debug_assert_eq!(w.len(), wc.len());
-    let mut dist2 = 0.0f64;
-    let mut norm2 = 0.0f64;
-    for (a, b) in w.iter().zip(wc) {
-        dist2 += ((a - b) as f64).powi(2);
-        norm2 += (*a as f64).powi(2);
+    let n = w.len();
+    let main = n - n % LANES;
+    let mut dist2 = [0.0f64; LANES];
+    let mut norm2 = [0.0f64; LANES];
+    for (wch, cch) in w[..main].chunks_exact(LANES).zip(wc[..main].chunks_exact(LANES)) {
+        let wv = ld(wch);
+        let d = vsub(wv, ld(cch));
+        for l in 0..LANES {
+            dist2[l] += (d[l] as f64) * (d[l] as f64);
+            norm2[l] += (wv[l] as f64) * (wv[l] as f64);
+        }
     }
-    (dist2.sqrt() as f32, norm2.sqrt() as f32)
+    for (l, i) in (main..n).enumerate() {
+        let d = w[i] - wc[i];
+        dist2[l] += (d as f64) * (d as f64);
+        norm2[l] += (w[i] as f64) * (w[i] as f64);
+    }
+    (hsum64(dist2).sqrt() as f32, hsum64(norm2).sqrt() as f32)
 }
 
 /// Fused multiplier update + feasibility: `λ −= μ(w − w_C)` while
 /// accumulating (‖w − wc‖₂, ‖w‖₂) in the same pass, so the LC outer loop
-/// streams the weight arena once instead of twice.
+/// streams the weight arena once instead of twice. The λ update is
+/// element-wise-exact (same ops as [`update_multipliers`]); the norms use
+/// the 8-lane f64 accumulation shared with [`feasibility`].
 #[inline]
 pub fn update_multipliers_fused(
     lambda: &mut [f32],
@@ -176,33 +366,65 @@ pub fn update_multipliers_fused(
 ) -> (f32, f32) {
     debug_assert_eq!(lambda.len(), w.len());
     debug_assert_eq!(lambda.len(), wc.len());
-    let mut dist2 = 0.0f64;
-    let mut norm2 = 0.0f64;
-    for i in 0..lambda.len() {
-        let d = w[i] - wc[i];
-        lambda[i] -= mu * d;
-        dist2 += (d as f64).powi(2);
-        norm2 += (w[i] as f64).powi(2);
+    let n = w.len();
+    let main = n - n % LANES;
+    let mu8 = splat(mu);
+    let mut dist2 = [0.0f64; LANES];
+    let mut norm2 = [0.0f64; LANES];
+    let (lm, lt) = lambda.split_at_mut(main);
+    for ((lc, wch), cch) in lm
+        .chunks_exact_mut(LANES)
+        .zip(w[..main].chunks_exact(LANES))
+        .zip(wc[..main].chunks_exact(LANES))
+    {
+        let wv = ld(wch);
+        let d = vsub(wv, ld(cch));
+        st(lc, vsub(ld(lc), vmul(mu8, d)));
+        for l in 0..LANES {
+            dist2[l] += (d[l] as f64) * (d[l] as f64);
+            norm2[l] += (wv[l] as f64) * (wv[l] as f64);
+        }
     }
-    (dist2.sqrt() as f32, norm2.sqrt() as f32)
+    for (l, i) in (main..n).enumerate() {
+        let d = w[i] - wc[i];
+        lt[l] -= mu * d;
+        dist2[l] += (d as f64) * (d as f64);
+        norm2[l] += (w[i] as f64) * (w[i] as f64);
+    }
+    (hsum64(dist2).sqrt() as f32, hsum64(norm2).sqrt() as f32)
 }
 
 /// Fused Nesterov-momentum update (Lasagne formulation) over a flat
-/// parameter slice: `v ← m·v − lr·g; w ← w + m·v − lr·g`.
+/// parameter slice: `v ← m·v − lr·g; w ← w + m·v − lr·g` — 8-lane
+/// chunked, per-element ops identical to [`scalar::nesterov_step`].
 #[inline]
 pub fn nesterov_step(w: &mut [f32], g: &[f32], v: &mut [f32], lr: f32, m: f32) {
     debug_assert_eq!(w.len(), g.len());
     debug_assert_eq!(w.len(), v.len());
-    for i in 0..w.len() {
-        v[i] = m * v[i] - lr * g[i];
-        w[i] += m * v[i] - lr * g[i];
+    let main = w.len() - w.len() % LANES;
+    let m8 = splat(m);
+    let lr8 = splat(lr);
+    let (wm, wt) = w.split_at_mut(main);
+    let (gm, gt) = g.split_at(main);
+    let (vm, vt) = v.split_at_mut(main);
+    for ((wc, gc), vc) in wm
+        .chunks_exact_mut(LANES)
+        .zip(gm.chunks_exact(LANES))
+        .zip(vm.chunks_exact_mut(LANES))
+    {
+        let lrg = vmul(lr8, ld(gc));
+        let vnew = vsub(vmul(m8, ld(vc)), lrg);
+        st(vc, vnew);
+        st(wc, vadd(ld(wc), vsub(vmul(m8, vnew), lrg)));
     }
+    scalar::nesterov_step(wt, gt, vt, lr, m);
 }
 
 /// Nesterov update with the LC penalty gradient fused in:
 /// the effective gradient is `g + μ(w − w_C) − λ` (paper §3), computed
 /// inline so the penalized L step is one pass over the weight arena with
-/// zero temporary buffers.
+/// zero temporary buffers — 8-lane chunked, per-element ops identical to
+/// [`scalar::nesterov_step_penalized`].
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub fn nesterov_step_penalized(
@@ -219,11 +441,38 @@ pub fn nesterov_step_penalized(
     debug_assert_eq!(w.len(), v.len());
     debug_assert_eq!(w.len(), wc.len());
     debug_assert_eq!(w.len(), lambda.len());
-    for i in 0..w.len() {
-        let gi = g[i] + mu * (w[i] - wc[i]) - lambda[i];
-        v[i] = m * v[i] - lr * gi;
-        w[i] += m * v[i] - lr * gi;
+    let main = w.len() - w.len() % LANES;
+    let m8 = splat(m);
+    let lr8 = splat(lr);
+    let mu8 = splat(mu);
+    let (wm, wt) = w.split_at_mut(main);
+    let (gm, gt) = g.split_at(main);
+    let (vm, vt) = v.split_at_mut(main);
+    for (i, ((wch, gc), vc)) in wm
+        .chunks_exact_mut(LANES)
+        .zip(gm.chunks_exact(LANES))
+        .zip(vm.chunks_exact_mut(LANES))
+        .enumerate()
+    {
+        let base = i * LANES;
+        let wv = ld(wch);
+        let pen = vmul(mu8, vsub(wv, ld(&wc[base..base + LANES])));
+        let gi = vsub(vadd(ld(gc), pen), ld(&lambda[base..base + LANES]));
+        let lrg = vmul(lr8, gi);
+        let vnew = vsub(vmul(m8, ld(vc)), lrg);
+        st(vc, vnew);
+        st(wch, vadd(wv, vsub(vmul(m8, vnew), lrg)));
     }
+    scalar::nesterov_step_penalized(
+        wt,
+        gt,
+        vt,
+        &wc[main..],
+        &lambda[main..],
+        mu,
+        lr,
+        m,
+    );
 }
 
 #[cfg(test)]
@@ -349,5 +598,97 @@ mod tests {
         let mut out = [0.0; 2];
         shift_by_multipliers(&w, &lam, 2.0, &mut out);
         assert_eq!(out, [0.75, -1.25]);
+    }
+
+    // ---- golden SIMD/scalar parity: every chunked kernel must be
+    //      bit-for-bit against its scalar reference, across lengths that
+    //      cover empty, sub-lane, exact-multiple and ragged cases --------
+
+    fn parity_lens(g: &mut crate::util::prop::Gen) -> usize {
+        // bias towards the interesting boundaries
+        *[0usize, 1, 7, 8, 9, 15, 16, 17, 64, g.usize_in(0, 201)]
+            .get(g.usize_in(0, 9))
+            .unwrap()
+    }
+
+    #[test]
+    fn simd_axpy_bitwise_matches_scalar() {
+        check("axpy simd==scalar", 60, |g| {
+            let n = parity_lens(g);
+            let alpha = g.f32_in(-2.0, 2.0);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let y0: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let mut ya = y0.clone();
+            axpy(alpha, &x, &mut ya);
+            let mut yb = y0.clone();
+            scalar::axpy(alpha, &x, &mut yb);
+            assert_eq!(ya, yb);
+        });
+    }
+
+    #[test]
+    fn simd_reductions_bitwise_match_scalar() {
+        check("reductions simd==scalar", 60, |g| {
+            let n = parity_lens(g).max(1);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let y: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            assert_eq!(dot(&x, &y).to_bits(), scalar::dot(&x, &y).to_bits());
+            assert_eq!(sum(&x).to_bits(), scalar::sum(&x).to_bits());
+            let m = g.usize_in(0, 3 * n);
+            let idx: Vec<u32> = (0..m).map(|_| g.usize_in(0, n - 1) as u32).collect();
+            assert_eq!(
+                gather_sum(&x, &idx).to_bits(),
+                scalar::gather_sum(&x, &idx).to_bits()
+            );
+        });
+    }
+
+    #[test]
+    fn simd_nesterov_steps_bitwise_match_scalar() {
+        check("nesterov simd==scalar", 60, |g| {
+            let n = parity_lens(g);
+            let (lr, m, mu) = (g.f32_in(0.001, 0.5), g.f32_in(0.0, 0.99), g.f32_in(0.0, 2.0));
+            let w0: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let v0: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let gr: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let wc: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let lam: Vec<f32> = (0..n).map(|_| g.f32_in(-0.2, 0.2)).collect();
+
+            let (mut wa, mut va) = (w0.clone(), v0.clone());
+            nesterov_step(&mut wa, &gr, &mut va, lr, m);
+            let (mut wb, mut vb) = (w0.clone(), v0.clone());
+            scalar::nesterov_step(&mut wb, &gr, &mut vb, lr, m);
+            assert_eq!(wa, wb);
+            assert_eq!(va, vb);
+
+            let (mut wa, mut va) = (w0.clone(), v0.clone());
+            nesterov_step_penalized(&mut wa, &gr, &mut va, &wc, &lam, mu, lr, m);
+            let (mut wb, mut vb) = (w0.clone(), v0.clone());
+            scalar::nesterov_step_penalized(&mut wb, &gr, &mut vb, &wc, &lam, mu, lr, m);
+            assert_eq!(wa, wb);
+            assert_eq!(va, vb);
+        });
+    }
+
+    #[test]
+    fn simd_fused_multiplier_update_bitwise_matches_scalar() {
+        check("fused simd==scalar", 60, |g| {
+            let n = parity_lens(g);
+            let mu = g.f32_in(0.01, 5.0);
+            let w: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let wc: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let lam0: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let mut lam_a = lam0.clone();
+            let (da, na) = update_multipliers_fused(&mut lam_a, &w, &wc, mu);
+            let mut lam_b = lam0.clone();
+            let (db, nb) = scalar::update_multipliers_fused(&mut lam_b, &w, &wc, mu);
+            assert_eq!(lam_a, lam_b);
+            assert_eq!(da.to_bits(), db.to_bits());
+            assert_eq!(na.to_bits(), nb.to_bits());
+            let (fa, fb) = feasibility(&w, &wc);
+            let (sa, sb) = scalar::feasibility(&w, &wc);
+            assert_eq!(fa.to_bits(), sa.to_bits());
+            assert_eq!(fb.to_bits(), sb.to_bits());
+        });
     }
 }

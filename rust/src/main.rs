@@ -176,27 +176,25 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     );
     let n_requests = args.get_usize("requests", 256).max(1);
     let server = MicroBatchServer::start(Arc::clone(&registry), serve_cfg.to_server_config());
-    // client-thread count comes from the config's "serve" section
-    // (`smoke_clients`), overridable with --clients N
+    // client count comes from the config's "serve" section
+    // (`smoke_clients`), overridable with --clients N; clients are blocking
+    // request drivers, so they fan out on scoped threads (pool::run_scoped)
+    // and leave the worker pool free for the engine they exercise
     let n_threads = args.get_usize("clients", serve_cfg.smoke_clients).max(1);
+    let clients: Vec<lcquant::serve::Client> =
+        (0..n_threads).map(|_| server.client()).collect();
     let t = lcquant::util::timer::Timer::start();
-    std::thread::scope(|s| {
-        for th in 0..n_threads {
-            let client = server.client();
-            let names = names.clone();
-            let registry = Arc::clone(&registry);
-            // spread the remainder so exactly n_requests are sent
-            let quota = n_requests / n_threads + usize::from(th < n_requests % n_threads);
-            s.spawn(move || {
-                let mut rng = Rng::new(1000 + th as u64);
-                for i in 0..quota {
-                    let name = &names[(th + i) % names.len()];
-                    let in_dim = registry.get(name).unwrap().engine.in_dim();
-                    let mut x = vec![0.0f32; in_dim];
-                    rng.fill_normal(&mut x, 0.0, 1.0);
-                    client.infer(name, x).expect("inference failed");
-                }
-            });
+    lcquant::linalg::pool::run_scoped(n_threads, |th| {
+        let client = &clients[th];
+        let mut rng = Rng::new(1000 + th as u64);
+        // spread the remainder so exactly n_requests are sent
+        let quota = n_requests / n_threads + usize::from(th < n_requests % n_threads);
+        for i in 0..quota {
+            let name = &names[(th + i) % names.len()];
+            let in_dim = registry.get(name).unwrap().engine.in_dim();
+            let mut x = vec![0.0f32; in_dim];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            client.infer(name, x).expect("inference failed");
         }
     });
     let elapsed = t.elapsed_s();

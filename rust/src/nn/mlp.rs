@@ -452,29 +452,98 @@ impl Mlp {
         (loss, super::loss::error_rate(&logits, labels))
     }
 
-    /// Evaluate over a dataset in chunks (memory-bounded).
-    pub fn evaluate_dataset(&self, data: &crate::data::Dataset, chunk: usize) -> (f32, f32) {
+    /// Evaluate over a dataset in chunks (memory-bounded), staging every
+    /// chunk through a caller-owned [`EvalScratch`]: after the first call
+    /// the whole evaluation pass is allocation-free, so the LC loop's
+    /// periodic train/test evaluation no longer churns the allocator
+    /// (`eval_every` used to be the last un-scratched path).
+    pub fn evaluate_dataset_into(
+        &self,
+        data: &crate::data::Dataset,
+        chunk: usize,
+        scratch: &mut EvalScratch,
+    ) -> (f32, f32) {
         let n = data.len();
+        let chunk = chunk.max(1);
         let mut loss_sum = 0.0f64;
         let mut err_sum = 0.0f64;
         let mut start = 0;
         while start < n {
             let end = (start + chunk).min(n);
             let b = end - start;
-            let mut x = Mat::zeros(b, data.dim());
-            let mut y = Mat::zeros(b, data.n_classes);
-            let mut labels = Vec::with_capacity(b);
+            let bufs = scratch.bufs(b, data.dim(), data.n_classes);
+            bufs.y.data.fill(0.0);
+            bufs.labels.clear();
             for (r, i) in (start..end).enumerate() {
-                x.row_mut(r).copy_from_slice(data.images.row(i));
-                y[(r, data.labels[i] as usize)] = 1.0;
-                labels.push(data.labels[i]);
+                bufs.x.row_mut(r).copy_from_slice(data.images.row(i));
+                bufs.y[(r, data.labels[i] as usize)] = 1.0;
+                bufs.labels.push(data.labels[i]);
             }
-            let (l, e) = self.evaluate(&x, &y, &labels);
-            loss_sum += l as f64 * b as f64;
-            err_sum += e as f64 * b as f64;
+            self.forward_into(&bufs.x, false, None, &mut bufs.fwd);
+            let fwd = &mut bufs.fwd;
+            let logits = fwd.outputs.last().expect("forward pass recorded");
+            let loss =
+                super::loss::softmax_cross_entropy_into(logits, &bufs.y, &mut fwd.probs);
+            let err = super::loss::error_rate(logits, &bufs.labels);
+            loss_sum += loss as f64 * b as f64;
+            err_sum += err as f64 * b as f64;
             start = end;
         }
         ((loss_sum / n as f64) as f32, (err_sum / n as f64) as f32)
+    }
+
+    /// Evaluate over a dataset in chunks (allocating convenience around
+    /// [`Mlp::evaluate_dataset_into`]).
+    pub fn evaluate_dataset(&self, data: &crate::data::Dataset, chunk: usize) -> (f32, f32) {
+        let mut scratch = EvalScratch::new();
+        self.evaluate_dataset_into(data, chunk, &mut scratch)
+    }
+}
+
+/// Reusable dataset-evaluation workspace for [`Mlp::evaluate_dataset_into`]:
+/// one staging set (batch matrix, one-hot targets, labels, forward scratch)
+/// per distinct chunk row-count. A pass over a dataset sees at most two —
+/// the full chunk and the final remainder — so a steady evaluation cadence
+/// allocates only on its first call.
+pub struct EvalScratch {
+    sets: Vec<EvalBufs>,
+}
+
+struct EvalBufs {
+    x: Mat,
+    y: Mat,
+    labels: Vec<u8>,
+    fwd: MlpScratch,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch { sets: Vec::new() }
+    }
+
+    /// The staging set for a `b × dim` chunk with `classes` targets
+    /// (created on first sight of this shape, reused thereafter).
+    fn bufs(&mut self, b: usize, dim: usize, classes: usize) -> &mut EvalBufs {
+        if let Some(i) = self
+            .sets
+            .iter()
+            .position(|s| s.x.rows == b && s.x.cols == dim && s.y.cols == classes)
+        {
+            return &mut self.sets[i];
+        }
+        self.sets.push(EvalBufs {
+            x: Mat::zeros(b, dim),
+            y: Mat::zeros(b, classes),
+            labels: Vec::with_capacity(b),
+            fwd: MlpScratch::new(),
+        });
+        self.sets.last_mut().expect("just pushed")
+    }
+}
+
+impl Default for EvalScratch {
+    fn default() -> Self {
+        EvalScratch::new()
     }
 }
 
@@ -713,6 +782,49 @@ mod tests {
         }
         let (loss1, _) = net.evaluate(&x, &y, &labels);
         assert!(loss1 < loss0 * 0.5, "loss {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn eval_scratch_reuse_matches_per_chunk_evaluate() {
+        // evaluate_dataset_into (reused EvalScratch, non-allocating loss
+        // path) must reproduce the per-chunk evaluate() reference exactly,
+        // including across repeated calls and ragged final chunks.
+        let net = toy_net(21);
+        let mut rng = Rng::new(22);
+        let n = 23; // chunk=10 → chunks of 10, 10, 3
+        let mut images = Mat::zeros(n, 4);
+        rng.fill_normal(&mut images.data, 0.0, 1.0);
+        let labels: Vec<u8> = (0..n).map(|_| rng.below(3) as u8).collect();
+        let data = crate::data::Dataset { images, labels, n_classes: 3 };
+
+        // reference: the pre-scratch implementation, chunk by chunk
+        let chunk = 10usize;
+        let (mut loss_sum, mut err_sum) = (0.0f64, 0.0f64);
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let b = end - start;
+            let mut x = Mat::zeros(b, 4);
+            let mut y = Mat::zeros(b, 3);
+            let mut lbl = Vec::new();
+            for (r, i) in (start..end).enumerate() {
+                x.row_mut(r).copy_from_slice(data.images.row(i));
+                y[(r, data.labels[i] as usize)] = 1.0;
+                lbl.push(data.labels[i]);
+            }
+            let (l, e) = net.evaluate(&x, &y, &lbl);
+            loss_sum += l as f64 * b as f64;
+            err_sum += e as f64 * b as f64;
+            start = end;
+        }
+        let want = ((loss_sum / n as f64) as f32, (err_sum / n as f64) as f32);
+
+        let mut scratch = EvalScratch::new();
+        let first = net.evaluate_dataset_into(&data, chunk, &mut scratch);
+        let second = net.evaluate_dataset_into(&data, chunk, &mut scratch);
+        assert_eq!(first, want);
+        assert_eq!(second, want, "warm EvalScratch must not change results");
+        assert_eq!(net.evaluate_dataset(&data, chunk), want);
     }
 
     #[test]

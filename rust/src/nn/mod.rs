@@ -14,6 +14,6 @@ pub mod params;
 pub mod sgd;
 
 pub use loss::{cross_entropy_grad, softmax_cross_entropy};
-pub use mlp::{Activation, Mlp, MlpScratch, MlpSpec};
+pub use mlp::{Activation, EvalScratch, Mlp, MlpScratch, MlpSpec};
 pub use params::{GradBuffer, LayerShape, ParamLayout, ParamSet};
 pub use sgd::{ClippedLrSchedule, FlatNesterov, PenaltyState};

@@ -96,11 +96,13 @@ pub fn nearest_via_mids(mids: &[f32], x: f32) -> usize {
     }
 }
 
-/// Data size above which the assignment step fans out across threads.
-/// Spawn cost (~50µs/thread) is paid per Lloyd iteration, so threading
-/// only wins when each pass is ≫ 1ms — i.e. at VGG scale (14M weights),
-/// not at LeNet scale (266k, where the midpoint scan already runs in
-/// ~1.5ms). Measured crossover ≈ 2M (§Perf optimization #4).
+/// Data size above which the assignment step fans out across the worker
+/// pool. Dispatch through the persistent pool costs only a few µs (no
+/// spawns — cf. the ~50µs/thread `thread::scope` it replaced), but each
+/// part still pays a per-part `sums`/`counts` reduction buffer + the
+/// merge, so threading only wins when each Lloyd pass is ≫ the scan cost
+/// of a LeNet-scale layer (266k weights ≈ 1.5ms). Crossover measured at
+/// ≈ 2M — VGG-scale layers (§Perf optimization #4).
 const PAR_MIN_DATA: usize = 2_000_000;
 
 /// One parallel assignment+accumulate pass. Returns (changed, sums, counts).
@@ -126,39 +128,40 @@ fn assign_pass(
         }
         return (changed, sums, counts);
     }
-    let chunk = data.len().div_ceil(nt);
-    let results: Vec<(bool, Vec<f64>, Vec<usize>)> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        let mut arest = &mut assignments[..];
-        let mut drest = data;
-        while !drest.is_empty() {
-            let n = chunk.min(drest.len());
-            let (dhead, dtail) = drest.split_at(n);
-            let (ahead, atail) = arest.split_at_mut(n);
-            drest = dtail;
-            arest = atail;
-            handles.push(s.spawn(move || {
-                let mut sums = vec![0.0f64; k];
-                let mut counts = vec![0usize; k];
-                let mut changed = false;
-                for (i, &x) in dhead.iter().enumerate() {
-                    let a = nearest_via_mids(mids, x) as u32;
-                    if a != ahead[i] {
-                        ahead[i] = a;
-                        changed = true;
-                    }
-                    sums[a as usize] += x as f64;
-                    counts[a as usize] += 1;
+    let pool = crate::linalg::pool::global();
+    let parts = pool.width();
+    let chunk = data.len().div_ceil(parts);
+    let mut partials: Vec<(bool, Vec<f64>, Vec<usize>)> =
+        (0..parts).map(|_| (false, vec![0.0f64; k], vec![0usize; k])).collect();
+    {
+        use crate::linalg::pool::DisjointMut;
+        let assign_parts = DisjointMut::new(assignments);
+        let partial_parts = DisjointMut::new(&mut partials);
+        pool.run(parts, |p| {
+            let lo = p * chunk;
+            let hi = data.len().min(lo + chunk);
+            if lo >= hi {
+                return;
+            }
+            // SAFETY: part `p` runs exactly once and owns data chunk
+            // `lo..hi` and partial slot `p` exclusively.
+            let (changed, sums, counts) = unsafe { &mut partial_parts.take(p..p + 1)[0] };
+            let ahead = unsafe { assign_parts.take(lo..hi) };
+            for (i, &x) in data[lo..hi].iter().enumerate() {
+                let a = nearest_via_mids(mids, x) as u32;
+                if a != ahead[i] {
+                    ahead[i] = a;
+                    *changed = true;
                 }
-                (changed, sums, counts)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+                sums[a as usize] += x as f64;
+                counts[a as usize] += 1;
+            }
+        });
+    }
     let mut sums = vec![0.0f64; k];
     let mut counts = vec![0usize; k];
     let mut changed = false;
-    for (c, s, n) in results {
+    for (c, s, n) in partials {
         changed |= c;
         for j in 0..k {
             sums[j] += s[j];

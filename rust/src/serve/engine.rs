@@ -24,16 +24,18 @@
 //!   by shifting the f32 exponent instead of a float multiply.
 
 use super::packed::{PackedLayer, PackedModel};
-use crate::linalg::{num_threads, vecops, Mat};
+use crate::linalg::{num_threads, pool, vecops, Mat};
 use crate::nn::Activation;
 use crate::quant::Scheme;
 use anyhow::{anyhow, Result};
 
 /// Total adds (batch · in · out) below which a layer forward stays
-/// single-threaded: spawn cost is ~50µs/thread (measured for the k-means
-/// assignment pass, see `quant::kmeans::PAR_MIN_DATA`), so threading only
-/// wins once a layer pass is ≫ 1ms — batch 256 on LeNet300's 784×300
-/// layer qualifies, a micro-batch through the 100×10 layer does not.
+/// single-threaded. Row bands dispatch through the persistent worker pool
+/// (a few µs, no spawns, no allocation — the per-request latency floor the
+/// old ~50µs `thread::scope` spawns used to set is gone), but splitting a
+/// batch still costs cache locality, so tiny layer passes stay serial:
+/// batch 256 on LeNet300's 784×300 layer qualifies, a micro-batch through
+/// the 100×10 layer does not.
 const PAR_MIN_WORK: usize = 2_000_000;
 
 /// Multiply a finite f32 by 2^e via exponent arithmetic (the "shift path").
@@ -187,28 +189,10 @@ impl LutLayer {
                 self.forward_row(x.row(r), &mut odata[local * n..(local + 1) * n]);
             }
         };
-        let nt = num_threads();
-        if m < 2 || m * self.in_dim * n < PAR_MIN_WORK || nt == 1 {
+        if m < 2 || m * self.in_dim * n < PAR_MIN_WORK || num_threads() == 1 {
             do_rows(0..m, &mut out.data);
         } else {
-            let per = m.div_ceil(nt);
-            let mut chunks: Vec<(std::ops::Range<usize>, &mut [f32])> = Vec::new();
-            {
-                let mut rest = out.data.as_mut_slice();
-                let mut start = 0;
-                while start < m {
-                    let end = (start + per).min(m);
-                    let (head, tail) = rest.split_at_mut((end - start) * n);
-                    chunks.push((start..end, head));
-                    rest = tail;
-                    start = end;
-                }
-            }
-            std::thread::scope(|s| {
-                for (range, chunk) in chunks {
-                    s.spawn(move || do_rows(range, chunk));
-                }
-            });
+            pool::run_bands(m, n, &mut out.data, do_rows);
         }
         match self.act {
             Activation::Tanh => {

@@ -8,11 +8,16 @@
 //! 3. the per-minibatch step path (`next_loss_grads_into` + `opt.step`)
 //!    performs **zero heap allocation** in steady state (verified with a
 //!    counting global allocator on sub-threading-threshold shapes);
-//! 4. `lc_quantize` is deterministic given a seed.
+//! 4. `lc_quantize` is deterministic given a seed;
+//! 5. with `LCQUANT_THREADS=2`, the *threaded* step path (gemm row bands
+//!    dispatched through the persistent `linalg::pool`) performs **zero
+//!    heap allocations and zero thread spawns** after warm-up.
 //!
-//! The net shapes here keep every gemm dimension below the threading
-//! threshold (64 rows), so the step path is single-threaded and the
-//! thread-local allocation counter sees every allocation it makes.
+//! Every test pins `LCQUANT_THREADS=2` (via [`pin_threads`], before the
+//! first `linalg` call resolves the cached thread count): the golden and
+//! allocation fixtures use net shapes below the 64-row threading threshold
+//! so they stay single-threaded regardless, while the threaded test uses
+//! shapes above it so every gemm core crosses the pool.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -26,7 +31,11 @@ use lcquant::nn::{GradBuffer, Mlp, MlpSpec};
 use lcquant::quant::{LayerQuantizer, Scheme};
 use lcquant::util::rng::Rng;
 
-// ---- counting allocator (thread-local, so parallel tests don't bleed) ----
+// ---- counting allocator: a thread-local counter (so the single-threaded
+//      assertions are immune to sibling test threads) plus a process-wide
+//      counter (so the threaded assertion also sees what pool *worker*
+//      threads allocate — a dispatcher-local counter alone would be blind
+//      to allocations inside dispatched band closures) -------------------
 
 struct CountingAlloc;
 
@@ -34,13 +43,20 @@ thread_local! {
     static ALLOCS: Cell<u64> = const { Cell::new(0) };
 }
 
+static PROCESS_ALLOCS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
 fn thread_allocs() -> u64 {
     ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+fn process_allocs() -> u64 {
+    PROCESS_ALLOCS.load(std::sync::atomic::Ordering::Relaxed)
 }
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, l: Layout) -> *mut u8 {
         let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        PROCESS_ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         System.alloc(l)
     }
     unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
@@ -48,6 +64,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
     }
     unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
         let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        PROCESS_ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         System.realloc(p, l, new_size)
     }
 }
@@ -55,7 +72,25 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
+/// Serializes the test bodies in this binary: the process-wide counter is
+/// only meaningful while no sibling test is allocating concurrently.
+/// (Poison is ignored — a failed sibling must not mask this binary's
+/// other assertions.)
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial_guard() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 // ---- fixtures -----------------------------------------------------------
+
+/// Pin the worker-thread policy to 2 for this whole test binary. Must run
+/// before anything touches `linalg::num_threads()` (cached in a
+/// `OnceLock`), so every test calls this first.
+fn pin_threads() {
+    static PIN: std::sync::Once = std::sync::Once::new();
+    PIN.call_once(|| std::env::set_var("LCQUANT_THREADS", "2"));
+}
 
 /// Deterministic classification set with every dimension < 64 so the gemm
 /// kernels stay single-threaded.
@@ -159,6 +194,8 @@ fn legacy_run_sgd(
 
 #[test]
 fn fused_flat_step_matches_legacy_per_layer_step_bitwise() {
+    pin_threads();
+    let _serial = serial_guard();
     let seed = 2024;
     let mut flat = tiny_backend(seed);
     let mut legacy = tiny_backend(seed);
@@ -271,6 +308,8 @@ fn legacy_lc(
 
 #[test]
 fn lc_quantize_matches_legacy_reference_implementation() {
+    pin_threads();
+    let _serial = serial_guard();
     let seed = 515;
     let cfg = parity_cfg();
 
@@ -296,6 +335,8 @@ fn lc_quantize_matches_legacy_reference_implementation() {
 
 #[test]
 fn lc_quantize_is_deterministic_given_seed() {
+    pin_threads();
+    let _serial = serial_guard();
     let run = || {
         let mut b = tiny_backend(99);
         let mut opt = FlatNesterov::new(b.layout(), 0.9);
@@ -314,6 +355,8 @@ fn lc_quantize_is_deterministic_given_seed() {
 
 #[test]
 fn steady_state_minibatch_step_is_allocation_free() {
+    pin_threads();
+    let _serial = serial_guard();
     let mut backend = tiny_backend(31);
     let layout = backend.layout().clone();
     let mut opt = FlatNesterov::new(&layout, 0.9);
@@ -351,5 +394,74 @@ fn steady_state_minibatch_step_is_allocation_free() {
     assert_eq!(
         allocs, 0,
         "unpenalized step path allocated {allocs} times over 10 steps"
+    );
+}
+
+#[test]
+fn threaded_minibatch_step_is_allocation_and_spawn_free() {
+    pin_threads();
+    let _serial = serial_guard();
+    assert_eq!(lcquant::linalg::num_threads(), 2, "LCQUANT_THREADS pin failed");
+    // every dimension ≥ the 64-row threading threshold, so all three gemm
+    // cores (forward, dW, dX) dispatch row bands through the pool on every
+    // minibatch step
+    let spec = MlpSpec {
+        sizes: vec![96, 80, 10],
+        hidden_activation: lcquant::nn::Activation::Tanh,
+        dropout_keep: vec![],
+    };
+    let net = Mlp::new(&spec, 7);
+    let mut backend =
+        NativeBackend::new(net, tiny_dataset(256, 96, 10, 0xF00D), None, 128, 7);
+    let layout = backend.layout().clone();
+    let mut opt = FlatNesterov::new(&layout, 0.9);
+    let mut grads = GradBuffer::zeros(layout.clone());
+    let wc = vec![0.1f32; layout.w_len()];
+    let lambda = vec![0.0f32; layout.w_len()];
+
+    // Warm up: initializes the global pool (the one place threads are
+    // spawned), sizes the batch/activation scratch, and crosses an
+    // epoch-reshuffle boundary (n=256, batch=128).
+    for _ in 0..5 {
+        backend.next_loss_grads_into(&mut grads);
+        let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu: 0.05 };
+        opt.step(backend.params_mut(), &grads, 0.05, Some(&penalty));
+    }
+
+    let spawned_before = lcquant::linalg::pool::total_spawned();
+    // The *process-wide* counter sees dispatcher and pool-worker threads
+    // alike (a dispatcher-local counter would be blind to allocations
+    // inside dispatched band closures). `SERIAL` excludes sibling test
+    // bodies; the libtest harness itself may still allocate on its own
+    // threads at arbitrary moments (starting a queued test), so measure
+    // several windows and take the minimum: a genuinely allocating step
+    // path allocates in *every* window, while one-off harness noise
+    // cannot hit all of them.
+    let mut min_allocs = u64::MAX;
+    let mut min_thread_allocs = u64::MAX;
+    for _ in 0..5 {
+        let before = process_allocs();
+        let t_before = thread_allocs();
+        for _ in 0..10 {
+            backend.next_loss_grads_into(&mut grads);
+            let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu: 0.05 };
+            opt.step(backend.params_mut(), &grads, 0.05, Some(&penalty));
+        }
+        min_allocs = min_allocs.min(process_allocs() - before);
+        min_thread_allocs = min_thread_allocs.min(thread_allocs() - t_before);
+    }
+    let spawned = lcquant::linalg::pool::total_spawned() - spawned_before;
+    assert_eq!(
+        min_thread_allocs, 0,
+        "threaded step path allocated {min_thread_allocs} times on the dispatcher over 10 steps"
+    );
+    assert_eq!(
+        min_allocs, 0,
+        "threaded step path allocated {min_allocs} times process-wide over 10 steps \
+         (pool dispatch and worker band kernels must be allocation-free)"
+    );
+    assert_eq!(
+        spawned, 0,
+        "threaded step path spawned {spawned} pool workers after warm-up"
     );
 }

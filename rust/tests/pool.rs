@@ -1,0 +1,237 @@
+//! Stress and policy tests for the persistent worker pool
+//! (`linalg::pool`) — the threading substrate of the whole compute plane.
+//!
+//! Covers: nested/reentrant dispatch (from the dispatcher thread and from
+//! inside worker-run parts), the 1-thread degenerate case, concurrent
+//! dispatchers hammering one pool from many threads, `LCQUANT_THREADS`
+//! clamping policy, band partitioning edge shapes, and end-to-end parity
+//! of the pool-dispatched gemm/serve kernels against their serial paths.
+//!
+//! This binary pins `LCQUANT_THREADS=3` (before anything resolves the
+//! cached thread count) so the *global* pool genuinely fans out; private
+//! `Pool::new(n)` instances cover the other widths in-process.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use lcquant::linalg::pool::{self, DisjointMut, Pool};
+use lcquant::linalg::{gemm, resolve_threads, Mat};
+use lcquant::util::rng::Rng;
+
+/// Pin the global thread policy for this test binary; every test calls
+/// this before touching linalg.
+fn pin_threads() {
+    static PIN: std::sync::Once = std::sync::Once::new();
+    PIN.call_once(|| std::env::set_var("LCQUANT_THREADS", "3"));
+}
+
+#[test]
+fn resolve_threads_clamps_and_falls_back() {
+    pin_threads();
+    // parseable values clamp to 1..=16
+    assert_eq!(resolve_threads(Some("4")), 4);
+    assert_eq!(resolve_threads(Some(" 7 ")), 7);
+    assert_eq!(resolve_threads(Some("0")), 1);
+    assert_eq!(resolve_threads(Some("1")), 1);
+    assert_eq!(resolve_threads(Some("16")), 16);
+    assert_eq!(resolve_threads(Some("64")), 16);
+    assert_eq!(resolve_threads(Some("9999999")), 16);
+    // garbage and absence fall back to available_parallelism (≥ 1, ≤ 16)
+    for env in [None, Some(""), Some("abc"), Some("-3"), Some("2.5")] {
+        let n = resolve_threads(env);
+        assert!((1..=16).contains(&n), "{env:?} -> {n}");
+    }
+    assert_eq!(resolve_threads(None), resolve_threads(Some("junk")));
+}
+
+#[test]
+fn global_pool_width_matches_pinned_policy() {
+    pin_threads();
+    assert_eq!(lcquant::linalg::num_threads(), 3);
+    assert_eq!(pool::global().width(), 3);
+}
+
+#[test]
+fn deeply_nested_dispatch_terminates_and_covers_all_parts() {
+    pin_threads();
+    // three levels of nesting: outer parts run pooled, inner levels
+    // degrade to inline — the count must still be exact
+    let count = AtomicUsize::new(0);
+    pool::run(4, |_| {
+        pool::run(3, |_| {
+            pool::run(2, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+    });
+    assert_eq!(count.load(Ordering::Relaxed), 4 * 3 * 2);
+}
+
+#[test]
+fn concurrent_dispatchers_from_scoped_threads() {
+    pin_threads();
+    // several OS threads race dispatches into one pool: whoever loses the
+    // busy flag runs inline, and every part of every dispatch still runs
+    // exactly once
+    let pool = Pool::new(4);
+    let hits: Vec<AtomicUsize> = (0..8 * 100).map(|_| AtomicUsize::new(0)).collect();
+    std::thread::scope(|s| {
+        for t in 0..8usize {
+            let pool = &pool;
+            let hits = &hits;
+            s.spawn(move || {
+                for round in 0..10usize {
+                    pool.run(10, |p| {
+                        hits[t * 100 + round * 10 + p].fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+    });
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::Relaxed), 1, "slot {i}");
+    }
+}
+
+#[test]
+fn one_thread_pool_is_sequential_and_ordered() {
+    pin_threads();
+    let pool = Pool::new(1);
+    assert_eq!(pool.width(), 1);
+    let order = Mutex::new(Vec::new());
+    pool.run(16, |p| order.lock().unwrap().push(p));
+    assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
+    // run_bands with a 1-thread pool covers all rows serially
+    let mut out = vec![0.0f32; 9 * 3];
+    pool.run_bands(9, 3, &mut out, |rows, band| {
+        for (local, r) in rows.enumerate() {
+            band[local * 3..(local + 1) * 3].fill(r as f32);
+        }
+    });
+    for r in 0..9 {
+        assert!(out[r * 3..(r + 1) * 3].iter().all(|&v| v == r as f32));
+    }
+}
+
+#[test]
+fn wide_pool_with_few_rows_leaves_no_row_unwritten() {
+    pin_threads();
+    let pool = Pool::new(8);
+    for (m, n) in [(1usize, 4usize), (2, 1), (5, 3), (7, 0), (8, 2), (9, 2), (63, 7)] {
+        let mut out = vec![f32::NAN; m * n];
+        pool.run_bands(m, n, &mut out, |rows, band| {
+            assert_eq!(band.len(), rows.len() * n);
+            for v in band.iter_mut() {
+                *v = 1.0;
+            }
+        });
+        assert!(out.iter().all(|v| *v == 1.0), "m={m} n={n}");
+    }
+}
+
+#[test]
+fn disjoint_mut_parts_land_in_the_right_slots() {
+    pin_threads();
+    let pool = Pool::new(4);
+    let mut slots = vec![0usize; 23];
+    {
+        let parts = DisjointMut::new(&mut slots);
+        pool.run(23, |p| {
+            let cell = unsafe { parts.take(p..p + 1) };
+            cell[0] = p + 1;
+        });
+    }
+    for (i, v) in slots.iter().enumerate() {
+        assert_eq!(*v, i + 1);
+    }
+}
+
+#[test]
+#[should_panic(expected = "part out of range")]
+fn disjoint_mut_rejects_out_of_range_parts() {
+    let mut buf = vec![0u8; 4];
+    let parts = DisjointMut::new(&mut buf);
+    let _ = unsafe { parts.take(2..5) };
+}
+
+#[test]
+fn run_scoped_gives_every_part_its_own_thread() {
+    pin_threads();
+    // parts may all block simultaneously (here: a barrier none could pass
+    // if parts shared threads), and pooled kernels must stay usable from
+    // inside a scoped part — the serve smoke-client shape
+    let n = 6usize;
+    let barrier = std::sync::Barrier::new(n);
+    let done = AtomicUsize::new(0);
+    pool::run_scoped(n, |_| {
+        barrier.wait(); // deadlocks unless all n parts run concurrently
+        let mut out = vec![0.0f32; 4];
+        pool::run_bands(4, 1, &mut out, |rows, band| {
+            for (local, r) in rows.enumerate() {
+                band[local] = r as f32;
+            }
+        });
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0]);
+        done.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(done.load(Ordering::Relaxed), n);
+}
+
+#[test]
+fn pooled_gemm_matches_serial_reference() {
+    pin_threads();
+    // m ≥ 64 rows ⇒ all three cores cross the pool (global width 3);
+    // compare against a naive f64 reference
+    let mut rng = Rng::new(99);
+    let (m, k, n) = (96usize, 70usize, 33usize);
+    let mut a = Mat::zeros(m, k);
+    let mut b = Mat::zeros(k, n);
+    rng.fill_normal(&mut a.data, 0.0, 1.0);
+    rng.fill_normal(&mut b.data, 0.0, 1.0);
+    let c = gemm::matmul(&a, &b);
+    for i in 0..m {
+        for j in 0..n {
+            let want: f64 =
+                (0..k).map(|p| (a[(i, p)] as f64) * (b[(p, j)] as f64)).sum();
+            assert!(
+                (c[(i, j)] - want as f32).abs() < 1e-3,
+                "({i},{j}): {} vs {want}",
+                c[(i, j)]
+            );
+        }
+    }
+    // transposed cores through the pool, against the explicit-transpose
+    // route: AᵀC is (k, n) threaded over k = 70; CBᵀ is (m, k) over m = 96
+    let atc = gemm::matmul_at_b(&a, &c);
+    let want_atc = gemm::matmul(&a.transpose(), &c);
+    for (x, y) in atc.data.iter().zip(&want_atc.data) {
+        assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+    }
+    let cbt = gemm::matmul_a_bt(&c, &b);
+    let want_cbt = gemm::matmul(&c, &b.transpose());
+    for (x, y) in cbt.data.iter().zip(&want_cbt.data) {
+        assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn panic_in_worker_part_propagates_and_pool_recovers() {
+    pin_threads();
+    let pool = Pool::new(4);
+    for _ in 0..3 {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(64, |p| {
+                if p % 17 == 5 {
+                    panic!("boom at {p}");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // the same pool must keep dispatching correctly afterwards
+        let ok = AtomicUsize::new(0);
+        pool.run(64, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 64);
+    }
+}
