@@ -4,9 +4,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test test-threaded bench-build clippy fmt-check ci artifacts clean bench-lstep bench-pool
+.PHONY: tier1 build test test-threaded bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve
 
-tier1: build test test-threaded bench-build clippy fmt-check
+tier1: build test test-threaded bench-build doc clippy fmt-check
 
 build:
 	$(CARGO) build --release
@@ -24,6 +24,12 @@ test-threaded:
 # compiling in tier-1 without paying their runtime.
 bench-build:
 	$(CARGO) bench --no-run
+
+# Documentation gate: rustdoc warnings (missing docs on the gated modules,
+# broken intra-doc links anywhere in the crate) are errors. The standalone
+# docs live in docs/ (ARCHITECTURE.md, lcq-format.md).
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --quiet
 
 # Lint gate: warnings are errors. Skips (with a note) when the clippy
 # component is not installed; when it runs, failures fail the target.
@@ -49,6 +55,11 @@ bench-lstep:
 # Dispatch-substrate (thread::scope vs persistent pool) and SIMD-vs-scalar
 # vecops numbers; the bench_lstep binary also writes BENCH_pool.json.
 bench-pool: bench-lstep
+
+# Serve-plane benches: LUT-vs-dense, micro-batch server at pipeline depth
+# 1 vs 4, and the multi-client saturation sweep → BENCH_serve_pipeline.json.
+bench-serve:
+	$(CARGO) bench --bench bench_serve
 
 ci: tier1
 

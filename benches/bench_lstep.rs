@@ -22,8 +22,9 @@
 //! Two further head-to-head measurements are written to `BENCH_pool.json`:
 //!
 //! * **dispatch substrate** — the legacy per-call `thread::scope` band
-//!   fan-out (reconstructed here verbatim) vs the persistent
-//!   `linalg::pool` the kernels now dispatch through, on a gemm-shaped
+//!   fan-out (reconstructed here verbatim) vs the persistent multi-task
+//!   `linalg::pool` the kernels now dispatch through (publish into a task
+//!   slot + lock-free generation-tagged part claims), on a gemm-shaped
 //!   band task;
 //! * **vecops substrate** — the 8-lane SIMD-explicit kernels vs their
 //!   `vecops::scalar` references on LeNet300-arena-sized buffers.

@@ -3,16 +3,25 @@
 //! * packed-LUT forward vs dense f32 GEMM forward at batch 1 / 32 / 256,
 //!   across the codebook families (binary sign path, adaptive K=4/K=64
 //!   grouped path, pow2 shift path) — the §2.1 lookup-vs-multiply claim;
-//! * micro-batching server throughput under concurrent single-image load;
+//! * micro-batching server throughput under concurrent single-image load,
+//!   at pipeline depth 1 vs 4;
+//! * a **multi-client saturation sweep** (1/2/4/8 concurrent batch-256
+//!   requests straight into the LUT engine) → `BENCH_serve_pipeline.json`:
+//!   under the old single-task pool, concurrent forwards degraded to
+//!   inline serial execution the moment one request owned the pool; the
+//!   multi-task queue lets their layer-band tasks interleave, so aggregate
+//!   throughput must scale past the single-client baseline;
 //! * the PJRT artifact for comparison when built with `--features pjrt`
 //!   and `make artifacts`.
 
-use lcquant::linalg::Mat;
+use lcquant::linalg::{pool, Mat};
 use lcquant::nn::MlpSpec;
 use lcquant::quant::{LayerQuantizer, Scheme};
-use lcquant::serve::{LutEngine, MicroBatchServer, PackedModel, Registry, ServerConfig};
+use lcquant::serve::{
+    EngineScratch, LutEngine, MicroBatchServer, PackedModel, Registry, ServerConfig,
+};
 use lcquant::util::rng::Rng;
-use lcquant::util::timer::bench;
+use lcquant::util::timer::{bench, Timer};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -85,18 +94,25 @@ fn main() {
     let mut registry = Registry::new();
     registry.insert(models[0].clone()).unwrap();
     let registry = Arc::new(registry);
-    for (max_batch, max_wait_ms) in [(1usize, 0u64), (64, 2)] {
+    let mut server_rows: Vec<(usize, f64, f32, f32, f64)> = Vec::new();
+    for (max_batch, max_wait_ms, depth) in
+        [(1usize, 0u64, 1usize), (64, 2, 1), (64, 2, 4)]
+    {
         let server = MicroBatchServer::start(
             Arc::clone(&registry),
-            ServerConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                pipeline_depth: depth,
+            },
         );
         let n_threads = 8usize;
         let per_thread = 128usize;
         let clients: Vec<_> = (0..n_threads).map(|_| server.client()).collect();
-        let t = lcquant::util::timer::Timer::start();
+        let t = Timer::start();
         // blocking request drivers: scoped threads, not pool parts, so the
         // engine being measured keeps the worker pool to itself
-        lcquant::linalg::pool::run_scoped(n_threads, |th| {
+        pool::run_scoped(n_threads, |th| {
             let client = &clients[th];
             let mut trng = Rng::new(100 + th as u64);
             let mut x = vec![0.0f32; 784];
@@ -109,17 +125,90 @@ fn main() {
         let mut server = server;
         server.stop();
         let stats = server.stats();
+        let req_s = stats.requests as f64 / elapsed;
         println!(
-            "max_batch={max_batch:<3} wait={max_wait_ms}ms: {:>6.0} req/s  p50 {:.2}ms  \
-             p99 {:.2}ms  mean batch {:.1}",
-            stats.requests as f64 / elapsed,
+            "max_batch={max_batch:<3} wait={max_wait_ms}ms depth={depth}: {req_s:>6.0} req/s  \
+             p50 {:.2}ms  p99 {:.2}ms  mean batch {:.1}",
             stats.p50_ms,
             stats.p99_ms,
             stats.mean_batch,
         );
+        if max_batch == 64 {
+            server_rows.push((depth, req_s, stats.p50_ms, stats.p99_ms, stats.mean_batch));
+        }
     }
 
+    bench_pipeline_sweep(&models[1], &server_rows);
+
     // ---- PJRT artifact, when available --------------------------------
+    run_pjrt_section();
+}
+
+/// 1/2/4/8 concurrent batch-256 requests straight into one engine: the
+/// multi-task-pool saturation proof, written to `BENCH_serve_pipeline.json`
+/// together with the depth-1-vs-4 server numbers.
+fn bench_pipeline_sweep(model: &PackedModel, server_rows: &[(usize, f64, f32, f32, f64)]) {
+    println!("\n== multi-client saturation sweep ({}, batch 256) ==", model.name);
+    let engine = LutEngine::new(model).unwrap();
+    let batch = 256usize;
+    let reps = 8usize;
+    let mut rng = Rng::new(17);
+    let mut x = Mat::zeros(batch, 784);
+    rng.fill_normal(&mut x.data, 0.0, 1.0);
+    // warm: pool spawn + gather structures touched
+    let _ = engine.forward(&x);
+    let mut rows: Vec<(usize, f64)> = Vec::new();
+    for clients in [1usize, 2, 4, 8] {
+        let t = Timer::start();
+        // concurrent *requests* are blocking drivers (each waits for its
+        // own forward), so they fan out on scoped threads; every forward's
+        // layer bands land as tasks on the multi-task worker pool
+        pool::run_scoped(clients, |_| {
+            let mut scratch = EngineScratch::new();
+            for _ in 0..reps {
+                let out = engine.forward_into(&x, &mut scratch);
+                std::hint::black_box(out.data.len());
+            }
+        });
+        let elapsed = t.elapsed_s();
+        let imgs_s = (clients * reps * batch) as f64 / elapsed;
+        rows.push((clients, imgs_s));
+        let scaling = imgs_s / rows[0].1;
+        println!("clients={clients}: {imgs_s:>9.0} img/s aggregate  ({scaling:.2}x vs 1 client)");
+    }
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"serve_pipeline\",\n");
+    json.push_str(&format!(
+        "  \"threads\": {},\n  \"engine_sweep\": {{\n    \"model\": \"{}\",\n    \
+         \"batch\": {batch},\n    \"reps_per_client\": {reps},\n    \"clients\": [\n",
+        lcquant::linalg::num_threads(),
+        model.name
+    ));
+    for (i, (clients, imgs_s)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "      {{\"clients\": {clients}, \"imgs_per_s\": {imgs_s:.0}, \
+             \"scaling_vs_1\": {:.3}}}{comma}\n",
+            imgs_s / rows[0].1
+        ));
+    }
+    json.push_str("    ]\n  },\n  \"server_sweep\": [\n");
+    for (i, (depth, req_s, p50, p99, mean_batch)) in server_rows.iter().enumerate() {
+        let comma = if i + 1 == server_rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"pipeline_depth\": {depth}, \"req_per_s\": {req_s:.0}, \
+             \"p50_ms\": {p50:.3}, \"p99_ms\": {p99:.3}, \"mean_batch\": {mean_batch:.2}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_serve_pipeline.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve_pipeline.json"),
+        Err(e) => eprintln!("could not write BENCH_serve_pipeline.json: {e}"),
+    }
+}
+
+fn run_pjrt_section() {
     #[cfg(feature = "pjrt")]
     {
         let dir = lcquant::runtime::Engine::default_dir();

@@ -10,6 +10,9 @@ cargo test -q
 # worker-pool dispatch path even on single-core runners
 LCQUANT_THREADS=2 cargo test -q
 cargo bench --no-run
+# Documentation gate: rustdoc must build clean (missing docs on the gated
+# modules, broken intra-doc links anywhere) — warnings are errors.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy -- -D warnings
 else

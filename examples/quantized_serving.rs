@@ -115,7 +115,13 @@ fn main() -> Result<()> {
     //    routing across both family members.
     let server = MicroBatchServer::start(
         Arc::clone(&registry),
-        ServerConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            // two executors: a batch of one model can execute while a batch
+            // of the other is still in flight (multi-task pool underneath)
+            pipeline_depth: 2,
+        },
     );
     let names = registry.names();
     let n_threads = 8usize;

@@ -23,18 +23,22 @@ pub struct RunConfig {
     pub seed: u64,
 }
 
-/// Micro-batching knobs for the serving subsystem (`"serve"` section).
+/// Micro-batching and pipelining knobs for the serving subsystem
+/// (`"serve"` section).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeSettings {
     pub max_batch: usize,
     pub max_wait_ms: f64,
+    /// Executor threads running coalesced batches concurrently (the serve
+    /// pipeline depth; batches overlap on the multi-task worker pool).
+    pub pipeline_depth: usize,
     /// Client threads the `serve-smoke` CLI drives traffic with.
     pub smoke_clients: usize,
 }
 
 impl Default for ServeSettings {
     fn default() -> ServeSettings {
-        ServeSettings { max_batch: 64, max_wait_ms: 2.0, smoke_clients: 8 }
+        ServeSettings { max_batch: 64, max_wait_ms: 2.0, pipeline_depth: 2, smoke_clients: 8 }
     }
 }
 
@@ -43,6 +47,7 @@ impl ServeSettings {
         crate::serve::ServerConfig {
             max_batch: self.max_batch,
             max_wait: std::time::Duration::from_secs_f64(self.max_wait_ms / 1e3),
+            pipeline_depth: self.pipeline_depth,
         }
     }
 }
@@ -204,6 +209,7 @@ impl RunConfig {
             Some(n) => ServeSettings {
                 max_batch: get_u(n, "max_batch", d.serve.max_batch),
                 max_wait_ms: get_f(n, "max_wait_ms", d.serve.max_wait_ms),
+                pipeline_depth: get_u(n, "pipeline_depth", d.serve.pipeline_depth).max(1),
                 smoke_clients: get_u(n, "smoke_clients", d.serve.smoke_clients).max(1),
             },
             None => d.serve.clone(),
@@ -277,18 +283,24 @@ mod tests {
     #[test]
     fn serve_section_parses() {
         let c = RunConfig::from_json(
-            r#"{"serve": {"max_batch": 8, "max_wait_ms": 0.5, "smoke_clients": 3}}"#,
+            r#"{"serve": {"max_batch": 8, "max_wait_ms": 0.5, "pipeline_depth": 4,
+                          "smoke_clients": 3}}"#,
         )
         .unwrap();
         assert_eq!(c.serve.max_batch, 8);
         assert_eq!(c.serve.max_wait_ms, 0.5);
+        assert_eq!(c.serve.pipeline_depth, 4);
         assert_eq!(c.serve.smoke_clients, 3);
         let sc = c.serve.to_server_config();
         assert_eq!(sc.max_batch, 8);
         assert_eq!(sc.max_wait, std::time::Duration::from_micros(500));
-        // omitted -> default 8
+        assert_eq!(sc.pipeline_depth, 4);
+        // omitted -> defaults; zero depth clamps to 1
         let d = RunConfig::from_json(r#"{"serve": {"max_batch": 4}}"#).unwrap();
         assert_eq!(d.serve.smoke_clients, 8);
+        assert_eq!(d.serve.pipeline_depth, 2);
+        let z = RunConfig::from_json(r#"{"serve": {"pipeline_depth": 0}}"#).unwrap();
+        assert_eq!(z.serve.pipeline_depth, 1);
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //!
 //! Two interchangeable backends compute loss/gradients:
 //! * [`NativeBackend`] — the pure-rust MLP ([`crate::nn`]);
-//! * [`crate::runtime::PjrtBackend`] — the AOT JAX artifact via PJRT.
+//! * `crate::runtime::PjrtBackend` — the AOT JAX artifact via PJRT
+//!   (behind the `pjrt` cargo feature).
 //!
 //! The coordinator owns the optimizer state, so BinaryConnect (gradient at
 //! quantized weights, update to continuous weights) works identically on

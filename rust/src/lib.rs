@@ -41,24 +41,42 @@
 //! * the C step quantizes per-layer views and writes back through the same
 //!   layout; `w_C` and `λ` are flat buffers allocated once per LC run.
 //!
-//! ## Threading: one persistent pool, explicit SIMD
+//! ## Threading: one persistent multi-task pool, explicit SIMD
 //!
 //! All data-parallel compute kernels — the gemm cores, the k-means
 //! assignment pass, the serve engine's LUT matvec — dispatch through one
 //! lazily-initialized persistent worker pool ([`linalg::pool`]), sized by
 //! [`linalg::num_threads`] (override with `LCQUANT_THREADS`, clamped
-//! `1..=16`). Dispatch takes *borrowed* closures over a lock-light epoch
-//! handshake: **no thread spawns and no heap allocation per call**, so the
-//! per-minibatch step path stays allocation-free even when threaded
-//! (asserted in `rust/tests/flat_params.rs`; measured against the old
-//! per-call `thread::scope` fan-out in `benches/bench_lstep.rs` →
-//! `BENCH_pool.json`). A dispatch issued from inside a running task runs
-//! inline, so nested parallelism degrades gracefully; blocking request
-//! drivers (the serve smoke clients) use [`linalg::pool::run_scoped`]
-//! instead, keeping the pool free for the engine. The [`linalg::vecops`]
-//! hot kernels are SIMD-explicit 8-lane forms with bit-exact
-//! [`linalg::vecops::scalar`] references (golden-pinned, so the LC parity
-//! tests stay bit-for-bit).
+//! `1..=16`). Dispatch takes *borrowed* closures published into a small
+//! ring of task slots: **no thread spawns and no heap allocation per
+//! call**, so the per-minibatch step path stays allocation-free even when
+//! threaded (asserted in `rust/tests/flat_params.rs`; measured against the
+//! old per-call `thread::scope` fan-out in `benches/bench_lstep.rs` →
+//! `BENCH_pool.json`). The pool runs up to [`linalg::pool::TASK_SLOTS`]
+//! tasks **concurrently** — workers claim parts across all live tasks and
+//! completion is per-task — so the serve plane pipelines layer bands of
+//! different requests (`benches/bench_serve.rs` →
+//! `BENCH_serve_pipeline.json`), and nested dispatch fans out instead of
+//! serializing (a full ring degrades to inline execution, never a
+//! deadlock). Blocking request drivers (the serve smoke clients) use
+//! [`linalg::pool::run_scoped`], keeping the pool free for the engine.
+//! The [`linalg::vecops`] hot kernels are SIMD-explicit 8-lane forms with
+//! bit-exact [`linalg::vecops::scalar`] references (golden-pinned, so the
+//! LC parity tests stay bit-for-bit); `gather_sum` upgrades itself to an
+//! AVX2 `vgatherdps` form at runtime, same 8-lane reduction definition.
+//!
+//! ## Documentation plane
+//!
+//! Standalone documents live in `docs/` and are kept in lockstep with the
+//! code by CI (`cargo doc --no-deps` runs with `-D warnings`; format tests
+//! pin the written spec):
+//!
+//! * `docs/ARCHITECTURE.md` — module map, the L step → C step → pack →
+//!   serve dataflow, the [`nn::params::ParamSet`] arena layout, and the
+//!   pool dispatch state machine;
+//! * `docs/lcq-format.md` — the byte-level `.lcq` specification for
+//!   third-party readers, including the exact size equation cross-checked
+//!   against [`quant::ratio`] (eq. 14) in unit tests.
 //!
 //! ## Quickstart: train → quantize → pack → serve
 //!

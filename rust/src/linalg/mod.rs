@@ -11,16 +11,22 @@
 //! initialized [`pool::global`] worker pool, and the gemm cores, the
 //! k-means assignment pass and the serve engine's LUT matvec all fan out
 //! through [`pool::run`] / [`pool::run_bands`] with *borrowed* closures.
-//! Nothing in the compute plane spawns a thread after the pool is warm:
-//! dispatch is a futex-backed epoch handshake with zero heap allocation,
-//! so the threaded per-minibatch L step stays allocation-free end to end
-//! (the single-threaded guarantee from the flat-parameter-plane refactor
-//! now holds for `LCQUANT_THREADS > 1` too — asserted in
-//! `rust/tests/flat_params.rs`). Blocking request drivers (serve smoke
-//! clients) use [`pool::run_scoped`] — scoped threads — so they never
-//! occupy the compute pool they are exercising. Kernels keep their serial
-//! fallbacks for small shapes; the pool's inline degenerate path makes
-//! `nt == 1` truly thread-free.
+//! The pool is **multi-task**: up to [`pool::TASK_SLOTS`] dispatches may
+//! be live at once (from different threads or nested inside a running
+//! part), workers claim parts across all of them, and completion is
+//! per-task — so the serve engine pipelines layer bands of concurrent
+//! requests instead of serializing behind a single task slot. Nothing in
+//! the compute plane spawns a thread after the pool is warm: publishing a
+//! task is one futex-backed lock + notify and part claiming is a lock-free
+//! generation-tagged counter, all with zero heap allocation, so the
+//! threaded per-minibatch L step stays allocation-free end to end (the
+//! single-threaded guarantee from the flat-parameter-plane refactor holds
+//! for `LCQUANT_THREADS > 1` too — asserted in `rust/tests/flat_params.rs`).
+//! Blocking request drivers (serve smoke clients) use [`pool::run_scoped`]
+//! — scoped threads — so they never occupy the compute pool they are
+//! exercising. Kernels keep their serial fallbacks for small shapes; the
+//! pool's inline degenerate path makes `nt == 1` truly thread-free. The
+//! dispatch state machine is drawn out in `docs/ARCHITECTURE.md`.
 
 pub mod gemm;
 pub mod pool;

@@ -1,14 +1,17 @@
 //! Persistent worker pool — the one threading substrate of the compute
-//! plane.
+//! plane, with a **multi-task work queue**.
 //!
 //! Every data-parallel kernel in the crate (the gemm cores, the k-means
 //! assignment pass, the serve engine's LUT matvec, the smoke-client
 //! drivers) used to fan out with a fresh `std::thread::scope`, paying
-//! ~50µs of spawn latency plus a handful of heap allocations *per call* —
-//! on the per-minibatch L-step path that was the last remaining source of
-//! allocation and by far the largest fixed cost. This module replaces all
-//! of those call sites with one lazily-initialized pool of long-lived
-//! workers:
+//! ~50µs of spawn latency plus a handful of heap allocations *per call*.
+//! This module replaces all of those call sites with one lazily-initialized
+//! pool of long-lived workers. Since the multi-task refactor the pool runs
+//! **several tasks concurrently**: dispatchers enqueue into a small fixed
+//! ring of task slots ([`TASK_SLOTS`]) and workers claim parts across *all*
+//! live tasks, so the serve engine can pipeline layer bands of different
+//! requests instead of serializing behind whichever request dispatched
+//! first.
 //!
 //! * **Sizing** — [`global`] spawns `num_threads() − 1` workers on first
 //!   use (the dispatching caller is always participant #0, so a 1-thread
@@ -17,53 +20,75 @@
 //!   `1..=16`.
 //! * **Dispatch** — [`Pool::run`] hands a *borrowed* closure to the
 //!   workers: the closure is type-erased to a `(data, trampoline)` pointer
-//!   pair that lives on the dispatcher's stack, and the dispatcher blocks
-//!   until every worker has finished, so non-`'static` captures (weight
-//!   arenas, gradient buffers, `&self`) are sound — the existing band
-//!   kernels ported unchanged. Release/collect is a mutex+condvar epoch
-//!   handshake (futex-backed on Linux: **no allocation**, no spawn), and
-//!   parts are pulled from one shared atomic counter so uneven bands
-//!   load-balance.
-//! * **Reentrancy** — one task is in flight at a time (`dispatch` lock).
-//!   A dispatch from inside a running task — same thread or a worker —
-//!   fails the `try_lock` and simply runs inline on the caller, so nested
-//!   parallelism degrades gracefully instead of deadlocking.
+//!   pair that lives on the dispatcher's stack, published into a free task
+//!   slot, and the dispatcher blocks until every part of *its* task has
+//!   finished, so non-`'static` captures (weight arenas, gradient buffers,
+//!   `&self`) stay sound. Publishing is one mutex lock + condvar notify
+//!   (futex-backed on Linux: **no allocation**, no spawn); parts are
+//!   claimed lock-free from a generation-tagged atomic counter per slot, so
+//!   uneven bands load-balance and stale claims on a recycled slot are
+//!   impossible.
+//! * **Multi-task** — up to [`TASK_SLOTS`] tasks are live at once. Workers
+//!   scan the ring and take parts from any live task; completion is
+//!   **per-task** (a mutex+condvar pair per slot — a futex per slot on
+//!   Linux) rather than a pool-wide epoch barrier, so one long task never
+//!   gates another task's completion. Every dispatcher participates in its
+//!   own task, which also makes the queue deadlock-free: a task drains even
+//!   if every worker is busy elsewhere.
+//! * **Exhaustion & reentrancy** — a dispatch that finds no free slot
+//!   (including deeply nested dispatch storms) degrades to inline execution
+//!   on the caller; it never blocks waiting for a slot, so slot exhaustion
+//!   cannot deadlock. A *nested* dispatch from inside a running part takes
+//!   its own slot when one is free — nested parallelism now actually fans
+//!   out instead of always running inline.
 //! * **Bands** — [`Pool::run_bands`] is the row-band form shared by the
 //!   gemm cores and the LUT engine: it splits an `m × n` output buffer
 //!   into at most [`Pool::width`] contiguous row bands by index arithmetic
-//!   (no per-call band `Vec` — the old `row_bands` allocation is gone) and
-//!   hands each part `(row_range, &mut band)`.
-//! * **Panics** — a panicking part poisons neither the pool nor its
-//!   siblings: remaining parts still run, the dispatcher re-raises after
-//!   the barrier, and the workers survive for the next dispatch.
+//!   (no per-call band `Vec`) and hands each part `(row_range, &mut band)`.
+//! * **Panics** — a panicking part poisons neither its own task, its
+//!   siblings, nor any *concurrent* task: remaining parts still run, the
+//!   owning dispatcher re-raises after its task completes, other tasks are
+//!   untouched, and the workers survive for the next dispatch.
 //!
 //! [`run_scoped`] is the second dispatch flavor, for **blocking** drivers
 //! (the serve smoke clients): real scoped threads per part, so blocking
-//! parts neither cap out at the pool width nor hold the pool's task slot
-//! while the kernels they exercise need it. [`DisjointMut`] is the escape
-//! hatch for call sites whose per-part mutable state is not a contiguous
-//! row band (k-means assignment chunks, per-client handles): it hands out
-//! disjoint `&mut` sub-slices of one buffer by index, with the
-//! disjointness obligation on the caller.
+//! parts neither cap out at the pool width nor pin a task slot while they
+//! sleep. [`DisjointMut`] is the escape hatch for call sites whose
+//! per-part mutable state is not a contiguous row band (k-means assignment
+//! chunks + reduction slots, per-client handles): it hands out disjoint
+//! `&mut` sub-slices of one buffer by index, with the disjointness
+//! obligation on the caller.
+//!
+//! The dispatch state machine is documented in prose form in
+//! `docs/ARCHITECTURE.md` (§ "Pool dispatch state machine").
+#![warn(missing_docs)]
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Size of the task-slot ring: the maximum number of concurrently live
+/// tasks per pool. Small on purpose — live tasks beyond the worker count
+/// only add scan cost, and a dispatch that finds the ring full simply runs
+/// inline. Eight covers the deepest realistic stack: a handful of
+/// pipelined serve requests plus a nested kernel or two.
+pub const TASK_SLOTS: usize = 8;
 
 /// Total worker threads ever spawned by any [`Pool`] in this process.
 /// Tests use the delta across a measured region to assert "zero thread
 /// spawns after warm-up" on the threaded step path.
 static SPAWNED: AtomicU64 = AtomicU64::new(0);
 
-/// See [`SPAWNED`].
+/// Total worker threads ever spawned by any pool in this process (the
+/// zero-spawn-after-warm-up test hook; see `SPAWNED`).
 pub fn total_spawned() -> u64 {
     SPAWNED.load(Ordering::Relaxed)
 }
 
 /// A dispatched task: a type-erased borrowed closure plus its part count.
 /// The raw pointer targets the dispatcher's stack frame; it stays valid
-/// because [`Pool::run`] does not return (or unwind) until every worker
-/// has left the task.
+/// because [`Pool::run`] does not return (or unwind) until every part of
+/// its task has completed.
 #[derive(Clone, Copy)]
 struct Task {
     data: *const (),
@@ -72,97 +97,166 @@ struct Task {
 }
 
 // SAFETY: the closure behind `data` is `Sync` (enforced by `Pool::run`'s
-// bound) and outlives the dispatch (the dispatcher blocks on the barrier).
+// bound) and outlives the dispatch (the dispatcher blocks until the task's
+// last part completes).
 unsafe impl Send for Task {}
 
 unsafe fn trampoline<F: Fn(usize) + Sync>(data: *const (), part: usize) {
     (*data.cast::<F>())(part)
 }
 
-struct State {
-    /// Bumped once per dispatched task; a worker runs each epoch once.
-    epoch: u64,
-    task: Option<Task>,
-    /// Workers still inside the current task.
-    active: usize,
+/// One entry of the task ring. Control-plane fields (`Ctrl::tasks`,
+/// `Ctrl::gens`) live under the pool's control mutex; the fields here are
+/// the lock-free data plane of a live task.
+struct Slot {
+    /// Packed claim word: `generation-tag (high 32) | next-part (low 32)`.
+    /// Parts are claimed by a gen-checked CAS increment, so a worker
+    /// holding a stale task copy can never claim into a recycled slot
+    /// (the tag changes on every publish).
+    claim: AtomicU64,
+    /// Parts of the current generation not yet *completed*. The decrement
+    /// that reaches zero retires the task and wakes the dispatcher.
+    remaining: AtomicUsize,
+    /// Set when any part of the current generation panicked; read by the
+    /// owning dispatcher after completion, before the slot is freed.
+    panicked: AtomicBool,
+    /// Last generation whose task fully completed. Paired with `done_cv`,
+    /// this is the per-task completion futex.
+    done: Mutex<u64>,
+    /// The owning dispatcher waits here for `done >= its generation`.
+    done_cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            claim: AtomicU64::new(0),
+            remaining: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Claim the next unclaimed part of generation `tag`, lock-free.
+    /// Fails once the task's parts are exhausted or the slot has been
+    /// republished for a newer generation.
+    fn try_claim(&self, tag: u32, parts: usize) -> Option<usize> {
+        let mut cur = self.claim.load(Ordering::Acquire);
+        loop {
+            if (cur >> 32) as u32 != tag {
+                return None;
+            }
+            let next = (cur & 0xffff_ffff) as usize;
+            if next >= parts {
+                return None;
+            }
+            match self.claim.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(next),
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Mark one claimed part complete; the finishing participant (worker
+    /// *or* dispatcher) retires the task and wakes the owning dispatcher.
+    fn finish_part(&self, gen: u64) {
+        if self.remaining.fetch_sub(1, Ordering::Release) == 1 {
+            // Synchronize with every other participant's part writes
+            // before the dispatcher can observe completion.
+            fence(Ordering::Acquire);
+            let mut done = self.done.lock().unwrap();
+            *done = gen;
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Control plane, guarded by `Shared::ctrl`: which slots hold live tasks
+/// and at which generation. Task bodies are *copied out* under this lock
+/// and then executed lock-free.
+struct Ctrl {
+    /// `Some(task)` while the slot's current generation is live (published
+    /// by a dispatcher, cleared by the same dispatcher after completion).
+    tasks: [Option<Task>; TASK_SLOTS],
+    /// Per-slot publish generation; its low 32 bits tag `Slot::claim`.
+    gens: [u64; TASK_SLOTS],
     shutdown: bool,
 }
 
 struct Shared {
-    state: Mutex<State>,
-    /// Workers wait here for a new epoch.
+    ctrl: Mutex<Ctrl>,
+    /// Workers wait here for new live tasks.
     work_cv: Condvar,
-    /// The dispatcher waits here for `active == 0`.
-    done_cv: Condvar,
-    /// Next unclaimed part index of the current task.
-    next: AtomicUsize,
-    /// Set by a worker whose part panicked; the dispatcher re-raises.
-    panicked: AtomicBool,
+    slots: [Slot; TASK_SLOTS],
 }
 
-/// Claim and run parts until the counter runs past `task.parts`.
-fn run_parts(shared: &Shared, task: Task) {
-    loop {
-        let part = shared.next.fetch_add(1, Ordering::Relaxed);
-        if part >= task.parts {
-            return;
+/// Run parts of one task until its claim counter is exhausted, catching
+/// per-part panics so a panicking part neither kills the worker nor skips
+/// the completion accounting of its siblings.
+fn run_claimed_parts(slot: &Slot, task: Task, tag: u32, gen: u64) {
+    while let Some(part) = slot.try_claim(tag, task.parts) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: `task.data` is live for the whole dispatch: claiming
+            // succeeded, so the owning dispatcher is still blocked.
+            unsafe { (task.call)(task.data, part) };
+        }));
+        if result.is_err() {
+            slot.panicked.store(true, Ordering::Release);
         }
-        // SAFETY: `task.data` is live for the whole dispatch (see `Task`).
-        unsafe { (task.call)(task.data, part) };
+        slot.finish_part(gen);
     }
 }
 
 fn worker_loop(shared: Arc<Shared>) {
-    let mut seen = 0u64;
     loop {
-        let task = {
-            let mut st = shared.state.lock().unwrap();
+        // Find a live task with unclaimed parts (or sleep until one is
+        // published). Task bodies are copied out under the control lock,
+        // which is also what makes the publisher's plain-field writes
+        // visible here.
+        let found = {
+            let mut ctrl = shared.ctrl.lock().unwrap();
             loop {
-                if st.shutdown {
+                if ctrl.shutdown {
                     return;
                 }
-                if st.epoch != seen {
-                    seen = st.epoch;
-                    break st.task.expect("epoch bumped without a task");
+                let mut hit = None;
+                for (i, task) in ctrl.tasks.iter().enumerate() {
+                    if let Some(task) = task {
+                        let tag = ctrl.gens[i] as u32;
+                        let cur = shared.slots[i].claim.load(Ordering::Relaxed);
+                        if (cur >> 32) as u32 == tag
+                            && ((cur & 0xffff_ffff) as usize) < task.parts
+                        {
+                            hit = Some((i, *task, ctrl.gens[i]));
+                            break;
+                        }
+                    }
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                if let Some(found) = hit {
+                    break found;
+                }
+                ctrl = shared.work_cv.wait(ctrl).unwrap();
             }
         };
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_parts(&shared, task);
-        }));
-        if result.is_err() {
-            shared.panicked.store(true, Ordering::Release);
-        }
-        let mut st = shared.state.lock().unwrap();
-        st.active -= 1;
-        if st.active == 0 {
-            shared.done_cv.notify_one();
-        }
+        let (i, task, gen) = found;
+        run_claimed_parts(&shared.slots[i], task, gen as u32, gen);
+        // Loop back: rescan for more work across *all* live tasks.
     }
 }
 
-/// A persistent worker pool (see the module docs). Library code uses the
-/// process-wide [`global`] pool; tests build private pools of arbitrary
-/// width with [`Pool::new`].
+/// A persistent worker pool with a multi-task queue (see the module docs).
+/// Library code uses the process-wide [`global`] pool; tests build private
+/// pools of arbitrary width with [`Pool::new`].
 pub struct Pool {
     shared: Arc<Shared>,
     /// Spawned workers — participants minus the dispatching caller.
     n_workers: usize,
-    /// One task in flight at a time; contenders (including reentrant
-    /// dispatches from inside a task) run inline instead of blocking.
-    /// An atomic flag rather than a `Mutex` so a panicking dispatch can
-    /// never poison the pool (the guard resets it during unwinding).
-    busy: AtomicBool,
-}
-
-/// Resets [`Pool::busy`] when the dispatch ends — including by panic.
-struct BusyGuard<'a>(&'a AtomicBool);
-
-impl Drop for BusyGuard<'_> {
-    fn drop(&mut self) {
-        self.0.store(false, Ordering::Release);
-    }
 }
 
 impl Pool {
@@ -172,11 +266,13 @@ impl Pool {
     pub fn new(threads: usize) -> Pool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
-            state: Mutex::new(State { epoch: 0, task: None, active: 0, shutdown: false }),
+            ctrl: Mutex::new(Ctrl {
+                tasks: [None; TASK_SLOTS],
+                gens: [0; TASK_SLOTS],
+                shutdown: false,
+            }),
             work_cv: Condvar::new(),
-            done_cv: Condvar::new(),
-            next: AtomicUsize::new(0),
-            panicked: AtomicBool::new(false),
+            slots: std::array::from_fn(|_| Slot::new()),
         });
         let n_workers = threads - 1;
         for i in 0..n_workers {
@@ -187,7 +283,7 @@ impl Pool {
                 .expect("spawn pool worker");
             SPAWNED.fetch_add(1, Ordering::Relaxed);
         }
-        Pool { shared, n_workers, busy: AtomicBool::new(false) }
+        Pool { shared, n_workers }
     }
 
     /// Maximum concurrent participants of one task (workers + caller).
@@ -200,12 +296,15 @@ impl Pool {
     ///
     /// The closure is borrowed, not `'static`: captures live on the
     /// caller's stack for the whole dispatch. Parts are claimed from a
-    /// shared counter, so they load-balance but have no ordering
-    /// guarantee. Degenerate cases (one part, a 1-thread pool, a dispatch
-    /// already in flight — including from inside a running task) run
-    /// inline on the caller in part order. After warm-up this path
-    /// performs **zero heap allocations and zero thread spawns**.
+    /// generation-tagged counter, so they load-balance but have no
+    /// ordering guarantee. Up to [`TASK_SLOTS`] dispatches may be live
+    /// concurrently — from different threads *or* nested from inside a
+    /// running part — and workers serve all of them. Degenerate cases
+    /// (one part, a 1-thread pool, a full task ring) run inline on the
+    /// caller in part order. After warm-up this path performs **zero heap
+    /// allocations and zero thread spawns**.
     pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, f: F) {
+        debug_assert!(parts < u32::MAX as usize, "part count overflows the claim tag");
         if parts == 0 {
             return;
         }
@@ -215,45 +314,68 @@ impl Pool {
             }
             return;
         }
-        if self
-            .busy
-            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
-            .is_err()
-        {
-            // busy (or reentrant): degrade to inline execution
-            for part in 0..parts {
-                f(part);
-            }
-            return;
-        }
-        let _guard = BusyGuard(&self.busy);
         let task =
             Task { data: (&f as *const F).cast::<()>(), call: trampoline::<F>, parts };
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            self.shared.next.store(0, Ordering::Relaxed);
-            self.shared.panicked.store(false, Ordering::Relaxed);
-            st.task = Some(task);
-            st.epoch += 1;
-            st.active = self.n_workers;
+        // Acquire and publish a task slot (one lock, one notify).
+        let (slot_idx, gen) = {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            let Some(i) = (0..TASK_SLOTS).find(|&i| ctrl.tasks[i].is_none()) else {
+                // ring full: degrade to inline execution — never block on a
+                // slot (a blocked dispatcher could itself be occupying one)
+                drop(ctrl);
+                for part in 0..parts {
+                    f(part);
+                }
+                return;
+            };
+            let gen = ctrl.gens[i] + 1;
+            ctrl.gens[i] = gen;
+            let slot = &self.shared.slots[i];
+            slot.remaining.store(parts, Ordering::Relaxed);
+            slot.panicked.store(false, Ordering::Relaxed);
+            slot.claim.store((gen as u32 as u64) << 32, Ordering::Release);
+            ctrl.tasks[i] = Some(task);
             self.shared.work_cv.notify_all();
+            (i, gen)
+        };
+        let slot = &self.shared.slots[slot_idx];
+        let tag = gen as u32;
+        // Participate in our own task. A panic in `f` on this thread is
+        // held until the task completes — the workers still hold pointers
+        // into this stack frame, so the unwind must not pass the wait
+        // below. Remaining parts still run (matching worker behaviour).
+        let mut my_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        while let Some(part) = slot.try_claim(tag, parts) {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(part))) {
+                Ok(()) => {}
+                Err(payload) => {
+                    slot.panicked.store(true, Ordering::Release);
+                    if my_panic.is_none() {
+                        my_panic = Some(payload);
+                    }
+                }
+            }
+            slot.finish_part(gen);
         }
-        // Participate — but even if `f` panics here, the workers still hold
-        // pointers into this stack frame, so the unwind must not pass the
-        // barrier below.
-        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_parts(&self.shared, task);
-        }));
-        let mut st = self.shared.state.lock().unwrap();
-        while st.active > 0 {
-            st = self.shared.done_cv.wait(st).unwrap();
+        // Per-task completion wait: the finisher (possibly this thread)
+        // stores our generation into the slot's done word.
+        {
+            let mut done = slot.done.lock().unwrap();
+            while *done < gen {
+                done = slot.done_cv.wait(done).unwrap();
+            }
         }
-        st.task = None;
-        drop(st);
-        if let Err(payload) = mine {
+        // Free the slot only now: `panicked` must be read before any
+        // republish could reset it.
+        let worker_panicked = slot.panicked.swap(false, Ordering::Acquire);
+        {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            ctrl.tasks[slot_idx] = None;
+        }
+        if let Some(payload) = my_panic {
             std::panic::resume_unwind(payload);
         }
-        if self.shared.panicked.swap(false, Ordering::Acquire) {
+        if worker_panicked {
             panic!("pool worker panicked during a dispatched task");
         }
     }
@@ -288,8 +410,8 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        let mut st = self.shared.state.lock().unwrap();
-        st.shutdown = true;
+        let mut ctrl = self.shared.ctrl.lock().unwrap();
+        ctrl.shutdown = true;
         self.shared.work_cv.notify_all();
         // Workers wake, observe `shutdown` and return; they own the
         // `Shared` via `Arc`, so no join is needed.
@@ -323,11 +445,9 @@ where
 /// Unlike [`run`], parts here may block — on channel replies, I/O, the
 /// micro-batcher's `max_wait` window — without capping concurrency at the
 /// pool width or starving the compute plane: a blocking part parked inside
-/// a pool task would hold the pool's single task slot, forcing every
-/// concurrent kernel (including the serve engine the driver is exercising)
-/// onto its inline serial fallback. Spawn cost is irrelevant next to the
-/// blocking time these drivers measure; hot compute kernels belong on
-/// [`run`].
+/// a pool task would pin one of the [`TASK_SLOTS`] task slots and a worker
+/// for its whole sleep. Spawn cost is irrelevant next to the blocking time
+/// these drivers measure; hot compute kernels belong on [`run`].
 pub fn run_scoped<F: Fn(usize) + Sync>(parts: usize, f: F) {
     std::thread::scope(|s| {
         for part in 0..parts {
@@ -443,12 +563,13 @@ mod tests {
     }
 
     #[test]
-    fn nested_dispatch_degrades_to_inline() {
+    fn nested_dispatch_completes_and_covers_all_parts() {
+        // Nested dispatch from inside a running part now *enqueues* into a
+        // free task slot (inline only when the ring is full) — either way
+        // the count must be exact and nothing may deadlock.
         let pool = Pool::new(4);
         let total = AtomicU32::new(0);
         pool.run(4, |_| {
-            // reentrant dispatch from inside a running task: must not
-            // deadlock, must still run every inner part
             pool.run(5, |_| {
                 total.fetch_add(1, Ordering::Relaxed);
             });
@@ -480,5 +601,21 @@ mod tests {
         let pool = Pool::new(2);
         pool.run(0, |_| panic!("must not run"));
         pool.run_bands(0, 4, &mut [], |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn slot_generations_do_not_leak_across_dispatches() {
+        // Hammer one pool with many sequential dispatches so slots are
+        // recycled many times; every dispatch must still be exact.
+        let pool = Pool::new(3);
+        for round in 0..200u32 {
+            let hits: Vec<AtomicU32> = (0..7).map(|_| AtomicU32::new(0)).collect();
+            pool.run(hits.len(), |p| {
+                hits[p].fetch_add(1, Ordering::Relaxed);
+            });
+            for (p, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} part {p}");
+            }
+        }
     }
 }

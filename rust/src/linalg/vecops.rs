@@ -24,7 +24,10 @@
 //!   implements that definition as a plain indexed loop, so the chunked
 //!   kernels are bit-for-bit against it too (the 8 independent
 //!   accumulators are also what breaks the dependency chain — the actual
-//!   speedup for the gather).
+//!   speedup for the gather). `gather_sum` additionally has a true AVX2
+//!   `vgatherdps` form behind a `std::arch` runtime feature gate; it
+//!   implements the *same* decomposition, so it is bit-for-bit against
+//!   the scalar reference as well (property-tested below).
 
 /// SIMD width: 8 × f32 = one 256-bit vector.
 const LANES: usize = 8;
@@ -215,12 +218,43 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 
 /// Σᵢ x[idx[i]] — the gather-accumulate primitive of the LUT forward pass
 /// ([`crate::serve::engine`]): per-centroid partial sums are gathers, the
-/// multiply happens once per centroid instead of once per weight. The
-/// gather itself cannot vectorize without AVX2 `vgatherdps`, but 8
-/// independent accumulator lanes keep the loads pipelined instead of
-/// serialized behind one add chain.
+/// multiply happens once per centroid instead of once per weight.
+///
+/// Two implementations share the *same* 8-lane reduction definition (lane
+/// `l` accumulates element `8i + l`; fixed `hsum` combine tree), so they
+/// are bit-for-bit interchangeable:
+///
+/// * on `x86_64` with AVX2 detected at runtime (`std::arch` feature gate),
+///   a true `vgatherdps` form: each 8-index chunk is bounds-checked
+///   against `x` with two vector ops and then gathered in one
+///   `_mm256_i32gather_ps`, keeping the loads fully pipelined;
+/// * everywhere else, the portable 8-accumulator scalar-load form — the
+///   independent lanes still break the add dependency chain.
+///
+/// Out-of-range indices panic in both paths (the AVX2 path validates each
+/// chunk against the slice bounds *before* its gather issues, so no
+/// out-of-bounds load is ever performed).
 #[inline]
 pub fn gather_sum(x: &[f32], idx: &[u32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if idx.len() >= LANES
+        && !x.is_empty()
+        // the hardware gather sign-extends index lanes, so the unsigned
+        // range gate inside is only sound while every valid index fits i32
+        && x.len() <= i32::MAX as usize
+        && avx2_available()
+    {
+        // SAFETY: AVX2 presence is checked at runtime; indices are
+        // validated against `x` inside before each gather.
+        return unsafe { gather_sum_avx2(x, idx) };
+    }
+    gather_sum_lanes(x, idx)
+}
+
+/// Portable 8-accumulator form of [`gather_sum`] (also the sub-8-element
+/// and no-AVX2 path).
+#[inline]
+fn gather_sum_lanes(x: &[f32], idx: &[u32]) -> f32 {
     let main = idx.len() - idx.len() % LANES;
     let mut acc = [0.0f32; LANES];
     for c in idx[..main].chunks_exact(LANES) {
@@ -232,6 +266,65 @@ pub fn gather_sum(x: &[f32], idx: &[u32]) -> f32 {
         acc[l] += x[j as usize];
     }
     hsum(acc)
+}
+
+/// Cached runtime AVX2 detection (`std::arch`'s detector already caches;
+/// this keeps the hot-path check to one relaxed atomic load).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static AVX2: AtomicU8 = AtomicU8::new(0); // 0 = unknown, 1 = yes, 2 = no
+    match AVX2.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            AVX2.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// `vgatherdps` gather-sum: same 8-lane decomposition as
+/// [`gather_sum_lanes`], with the per-chunk loads issued as one hardware
+/// gather. Each chunk's indices are range-checked (vector `min`/`cmpeq` +
+/// movemask) *before* its gather, so a bad index panics exactly like the
+/// checked scalar form instead of reading out of bounds.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available and `1 <= x.len() <= i32::MAX`
+/// (the gather sign-extends its index lanes, so larger slices would let
+/// an unsigned-valid index wrap negative).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_sum_avx2(x: &[f32], idx: &[u32]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert!(!x.is_empty() && x.len() <= i32::MAX as usize);
+    let main = idx.len() - idx.len() % LANES;
+    let max_idx = _mm256_set1_epi32((x.len() - 1) as u32 as i32);
+    let mut acc = _mm256_setzero_ps();
+    for c in idx[..main].chunks_exact(LANES) {
+        let iv = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+        // unsigned range gate: min(iv, max_idx) == iv ⇔ every lane ≤ max_idx
+        let ok = _mm256_cmpeq_epi32(_mm256_min_epu32(iv, max_idx), iv);
+        if _mm256_movemask_epi8(ok) != -1 {
+            // panic like the checked scalar form would (first offending
+            // index, in order) — reached before any load of this chunk
+            let bad = c
+                .iter()
+                .find(|&&j| j as usize >= x.len())
+                .expect("range gate fired but all indices were in bounds");
+            panic!("gather_sum: index {bad} out of range for slice of len {}", x.len());
+        }
+        acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(x.as_ptr(), iv));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for (l, &j) in idx[main..].iter().enumerate() {
+        lanes[l] += x[j as usize];
+    }
+    hsum(lanes)
 }
 
 /// Sum of all entries — 8 accumulator lanes.
@@ -641,6 +734,42 @@ mod tests {
                 scalar::gather_sum(&x, &idx).to_bits()
             );
         });
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_gather_bitwise_matches_scalar_reference() {
+        if !avx2_available() {
+            eprintln!("(avx2 not detected; gather parity covered by the portable path)");
+            return;
+        }
+        check("gather avx2==scalar", 80, |g| {
+            // lengths straddle the 8-lane boundaries so both the gathered
+            // chunks and the lane-tail path are exercised
+            let n = g.usize_in(1, 70);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let m = *[8usize, 9, 15, 16, 17, 64, g.usize_in(8, 201)]
+                .get(g.usize_in(0, 6))
+                .unwrap();
+            let idx: Vec<u32> = (0..m).map(|_| g.usize_in(0, n - 1) as u32).collect();
+            let fast = unsafe { gather_sum_avx2(&x, &idx) };
+            assert_eq!(fast.to_bits(), scalar::gather_sum(&x, &idx).to_bits());
+            // and the public entry point routes to the same result
+            assert_eq!(gather_sum(&x, &idx).to_bits(), fast.to_bits());
+        });
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_gather_panics_on_out_of_range_like_the_scalar_form() {
+        if !avx2_available() {
+            return;
+        }
+        let x = vec![1.0f32; 10];
+        let mut idx: Vec<u32> = (0..16).map(|i| i % 10).collect();
+        idx[11] = 10; // out of range, inside the second gathered chunk
+        let r = std::panic::catch_unwind(|| unsafe { gather_sum_avx2(&x, &idx) });
+        assert!(r.is_err(), "out-of-range index must panic, not gather");
     }
 
     #[test]

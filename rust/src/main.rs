@@ -4,7 +4,7 @@
 //! lcquant experiment <id|all> [--out results] [--scale quick|full] [--seed N]
 //! lcquant run --config configs/lenet300_k2.json [--out results]
 //! lcquant pack --config configs/lenet300_k2.json [--out models]
-//! lcquant serve-smoke --models models [--requests N] [--clients N] [--config FILE]
+//! lcquant serve-smoke --models models [--requests N] [--clients N] [--depth N] [--config FILE]
 //! lcquant pjrt-smoke [--artifacts artifacts]
 //! lcquant list
 //! ```
@@ -26,7 +26,7 @@ fn usage() -> ! {
       ids: {:?}
   lcquant run --config FILE [--out DIR]
   lcquant pack --config FILE [--out DIR]
-  lcquant serve-smoke --models DIR [--requests N] [--clients N] [--config FILE]
+  lcquant serve-smoke --models DIR [--requests N] [--clients N] [--depth N] [--config FILE]
   lcquant pjrt-smoke [--artifacts DIR]
   lcquant list",
         experiments::ALL
@@ -161,17 +161,22 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(
         args.get("models").ok_or_else(|| anyhow!("serve-smoke requires --models DIR"))?,
     );
-    let serve_cfg = match args.get("config") {
+    let mut serve_cfg = match args.get("config") {
         Some(path) => RunConfig::from_file(path)?.serve,
         None => lcquant::config::ServeSettings::default(),
     };
+    // --depth N overrides the config's serve.pipeline_depth (number of
+    // concurrent batch executors; batches overlap on the multi-task pool)
+    serve_cfg.pipeline_depth = args.get_usize("depth", serve_cfg.pipeline_depth).max(1);
     let registry = Arc::new(Registry::load_dir(&dir)?);
     let names = registry.names();
     println!(
-        "serving {} model(s): {names:?} (max_batch {}, max_wait {}ms, {} client threads)",
+        "serving {} model(s): {names:?} (max_batch {}, max_wait {}ms, pipeline depth {}, \
+         {} client threads)",
         registry.len(),
         serve_cfg.max_batch,
         serve_cfg.max_wait_ms,
+        serve_cfg.pipeline_depth,
         serve_cfg.smoke_clients,
     );
     let n_requests = args.get_usize("requests", 256).max(1);

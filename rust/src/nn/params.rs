@@ -21,6 +21,8 @@
 //! Per-layer `Vec<Vec<f32>>` forms survive only at API edges (results,
 //! serialization, tests) via the `*_cloned`/`set_*_per_layer` converters.
 
+#![warn(missing_docs)]
+
 use std::ops::Range;
 
 /// Shape of one dense layer's weight matrix: `(rows, cols)` = (fan-in,
@@ -28,7 +30,9 @@ use std::ops::Range;
 /// bias of the layer has `cols` entries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LayerShape {
+    /// Fan-in: rows of the row-major weight matrix.
     pub rows: usize,
+    /// Fan-out: columns of the weight matrix (and bias length).
     pub cols: usize,
 }
 
@@ -54,6 +58,7 @@ pub struct ParamLayout {
 }
 
 impl ParamLayout {
+    /// Layout from explicit per-layer shapes (at least one).
     pub fn new(shapes: Vec<LayerShape>) -> ParamLayout {
         assert!(!shapes.is_empty(), "layout needs at least one layer");
         let mut w_off = Vec::with_capacity(shapes.len() + 1);
@@ -78,14 +83,17 @@ impl ParamLayout {
         )
     }
 
+    /// Number of weight layers.
     pub fn n_layers(&self) -> usize {
         self.shapes.len()
     }
 
+    /// Shape of layer `l`.
     pub fn shape(&self, l: usize) -> LayerShape {
         self.shapes[l]
     }
 
+    /// All layer shapes, in layer order.
     pub fn shapes(&self) -> &[LayerShape] {
         &self.shapes
     }
@@ -115,6 +123,7 @@ impl ParamLayout {
         &flat[self.w_range(l)]
     }
 
+    /// Mutable layer view of a weight-arena-length slice.
     pub fn w_slice_mut<'a>(&self, flat: &'a mut [f32], l: usize) -> &'a mut [f32] {
         &mut flat[self.w_range(l)]
     }
@@ -140,15 +149,18 @@ pub struct ParamSet {
 }
 
 impl ParamSet {
+    /// Zero-initialized arena for the given layout.
     pub fn zeros(layout: ParamLayout) -> ParamSet {
         let n = layout.w_len() + layout.b_len();
         ParamSet { layout, data: vec![0.0; n] }
     }
 
+    /// The offset/shape table addressing this arena.
     pub fn layout(&self) -> &ParamLayout {
         &self.layout
     }
 
+    /// Number of weight layers.
     pub fn n_layers(&self) -> usize {
         self.layout.n_layers()
     }
@@ -158,6 +170,7 @@ impl ParamSet {
         &self.data[..self.layout.w_len()]
     }
 
+    /// Mutable view of all multiplicative weights.
     pub fn w_flat_mut(&mut self) -> &mut [f32] {
         let n = self.layout.w_len();
         &mut self.data[..n]
@@ -168,6 +181,7 @@ impl ParamSet {
         &self.data[self.layout.w_len()..]
     }
 
+    /// Mutable view of all biases.
     pub fn b_flat_mut(&mut self) -> &mut [f32] {
         let n = self.layout.w_len();
         &mut self.data[n..]
@@ -184,6 +198,7 @@ impl ParamSet {
         &self.data[self.layout.w_range(l)]
     }
 
+    /// Mutable view of layer `l`'s weight matrix.
     pub fn w_layer_mut(&mut self, l: usize) -> &mut [f32] {
         let r = self.layout.w_range(l);
         &mut self.data[r]
@@ -196,6 +211,7 @@ impl ParamSet {
         &self.data[w + r.start..w + r.end]
     }
 
+    /// Mutable view of layer `l`'s bias vector.
     pub fn b_layer_mut(&mut self, l: usize) -> &mut [f32] {
         let r = self.layout.b_range(l);
         let w = self.layout.w_len();
@@ -245,10 +261,12 @@ pub struct GradBuffer {
 }
 
 impl GradBuffer {
+    /// Zero-initialized gradient arena for the given layout.
     pub fn zeros(layout: ParamLayout) -> GradBuffer {
         GradBuffer { inner: ParamSet::zeros(layout) }
     }
 
+    /// The offset/shape table addressing this buffer.
     pub fn layout(&self) -> &ParamLayout {
         self.inner.layout()
     }
@@ -263,22 +281,28 @@ impl GradBuffer {
         self.inner.b_flat()
     }
 
+    /// Layer `l`'s weight gradients.
     pub fn w_layer(&self, l: usize) -> &[f32] {
         self.inner.w_layer(l)
     }
 
+    /// Layer `l`'s bias gradients.
     pub fn b_layer(&self, l: usize) -> &[f32] {
         self.inner.b_layer(l)
     }
 
+    /// Mutable view of layer `l`'s weight gradients (backends accumulate
+    /// here in place).
     pub fn w_layer_mut(&mut self, l: usize) -> &mut [f32] {
         self.inner.w_layer_mut(l)
     }
 
+    /// Mutable view of layer `l`'s bias gradients.
     pub fn b_layer_mut(&mut self, l: usize) -> &mut [f32] {
         self.inner.b_layer_mut(l)
     }
 
+    /// Reset every gradient to zero.
     pub fn zero(&mut self) {
         self.inner.data.fill(0.0);
     }

@@ -73,10 +73,16 @@ pub fn nearest_sorted(centroids: &[f32], x: f32) -> usize {
 /// Voronoi boundaries (midpoints) of a sorted codebook — precompute once,
 /// assign many (§Perf optimization #3).
 pub fn midpoints(centroids: &[f32]) -> Vec<f32> {
-    centroids
-        .windows(2)
-        .map(|p| 0.5 * (p[0] + p[1]))
-        .collect()
+    let mut out = Vec::new();
+    midpoints_into(centroids, &mut out);
+    out
+}
+
+/// [`midpoints`] into a reusable buffer (the per-Lloyd-pass form: no
+/// allocation once the buffer is warm).
+pub fn midpoints_into(centroids: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(centroids.windows(2).map(|p| 0.5 * (p[0] + p[1])));
 }
 
 /// Cell index from precomputed midpoints: count of boundaries ≤ x
@@ -98,54 +104,89 @@ pub fn nearest_via_mids(mids: &[f32], x: f32) -> usize {
 
 /// Data size above which the assignment step fans out across the worker
 /// pool. Dispatch through the persistent pool costs only a few µs (no
-/// spawns — cf. the ~50µs/thread `thread::scope` it replaced), but each
-/// part still pays a per-part `sums`/`counts` reduction buffer + the
-/// merge, so threading only wins when each Lloyd pass is ≫ the scan cost
-/// of a LeNet-scale layer (266k weights ≈ 1.5ms). Crossover measured at
-/// ≈ 2M — VGG-scale layers (§Perf optimization #4).
+/// spawns — cf. the ~50µs/thread `thread::scope` it replaced), and the
+/// per-part `sums`/`counts` reduction regions live in a reusable
+/// [`AssignScratch`] (no allocation when warm) — but the O(parts·K) merge
+/// and the cache cost of splitting the scan remain, so threading only wins
+/// when each Lloyd pass is ≫ the scan cost of a LeNet-scale layer (266k
+/// weights ≈ 1.5ms). Crossover measured at ≈ 2M — VGG-scale layers
+/// (§Perf optimization #4).
 const PAR_MIN_DATA: usize = 2_000_000;
 
-/// One parallel assignment+accumulate pass. Returns (changed, sums, counts).
+/// Reusable buffers for the assignment+accumulate pass: Voronoi midpoints
+/// plus flat `parts × K` per-part reduction regions (`sums`/`counts`) and
+/// per-part changed flags. One scratch lives on each
+/// [`crate::quant::LayerQuantizer`], so steady-state Lloyd passes allocate
+/// nothing — including the threaded passes above the 2M-weight threshold
+/// (asserted with the counting allocator in `rust/tests/flat_params.rs`).
+#[derive(Default)]
+pub struct AssignScratch {
+    mids: Vec<f32>,
+    /// Flat `parts × K` partial sums; region `0..K` holds the merged total
+    /// after a pass.
+    sums: Vec<f64>,
+    /// Flat `parts × K` partial counts, merged like `sums`.
+    counts: Vec<usize>,
+    /// Per-part "some assignment changed" flags.
+    changed: Vec<bool>,
+}
+
+/// One assignment+accumulate pass (threaded above [`PAR_MIN_DATA`]).
+/// Returns whether any assignment changed; the merged per-centroid sums
+/// and counts are left in `scratch.sums[..k]` / `scratch.counts[..k]`.
 fn assign_pass(
     data: &[f32],
-    mids: &[f32],
+    centroids: &[f32],
     assignments: &mut [u32],
-    k: usize,
-) -> (bool, Vec<f64>, Vec<usize>) {
+    scratch: &mut AssignScratch,
+) -> bool {
+    let k = centroids.len();
+    let AssignScratch { mids, sums, counts, changed } = scratch;
+    midpoints_into(centroids, mids);
     let nt = crate::linalg::num_threads();
-    if data.len() < PAR_MIN_DATA || nt == 1 {
-        let mut sums = vec![0.0f64; k];
-        let mut counts = vec![0usize; k];
-        let mut changed = false;
+    let parts = if data.len() < PAR_MIN_DATA || nt == 1 {
+        1
+    } else {
+        crate::linalg::pool::global().width()
+    };
+    sums.clear();
+    sums.resize(parts * k, 0.0);
+    counts.clear();
+    counts.resize(parts * k, 0);
+    changed.clear();
+    changed.resize(parts, false);
+    if parts == 1 {
         for (i, &x) in data.iter().enumerate() {
             let a = nearest_via_mids(mids, x) as u32;
             if a != assignments[i] {
                 assignments[i] = a;
-                changed = true;
+                changed[0] = true;
             }
             sums[a as usize] += x as f64;
             counts[a as usize] += 1;
         }
-        return (changed, sums, counts);
+        return changed[0];
     }
-    let pool = crate::linalg::pool::global();
-    let parts = pool.width();
     let chunk = data.len().div_ceil(parts);
-    let mut partials: Vec<(bool, Vec<f64>, Vec<usize>)> =
-        (0..parts).map(|_| (false, vec![0.0f64; k], vec![0usize; k])).collect();
     {
         use crate::linalg::pool::DisjointMut;
         let assign_parts = DisjointMut::new(assignments);
-        let partial_parts = DisjointMut::new(&mut partials);
-        pool.run(parts, |p| {
+        let sum_parts = DisjointMut::new(sums);
+        let count_parts = DisjointMut::new(counts);
+        let changed_parts = DisjointMut::new(changed);
+        let mids: &[f32] = mids;
+        crate::linalg::pool::run(parts, |p| {
             let lo = p * chunk;
             let hi = data.len().min(lo + chunk);
             if lo >= hi {
                 return;
             }
             // SAFETY: part `p` runs exactly once and owns data chunk
-            // `lo..hi` and partial slot `p` exclusively.
-            let (changed, sums, counts) = unsafe { &mut partial_parts.take(p..p + 1)[0] };
+            // `lo..hi`, reduction region `p*k..(p+1)*k` and changed slot
+            // `p` exclusively.
+            let sums = unsafe { sum_parts.take(p * k..(p + 1) * k) };
+            let counts = unsafe { count_parts.take(p * k..(p + 1) * k) };
+            let changed = unsafe { &mut changed_parts.take(p..p + 1)[0] };
             let ahead = unsafe { assign_parts.take(lo..hi) };
             for (i, &x) in data[lo..hi].iter().enumerate() {
                 let a = nearest_via_mids(mids, x) as u32;
@@ -158,17 +199,17 @@ fn assign_pass(
             }
         });
     }
-    let mut sums = vec![0.0f64; k];
-    let mut counts = vec![0usize; k];
-    let mut changed = false;
-    for (c, s, n) in partials {
-        changed |= c;
+    // merge part regions 1.. into region 0 (fixed order: deterministic for
+    // a given thread policy)
+    let (head_s, tail_s) = sums.split_at_mut(k);
+    let (head_c, tail_c) = counts.split_at_mut(k);
+    for p in 0..parts - 1 {
         for j in 0..k {
-            sums[j] += s[j];
-            counts[j] += n[j];
+            head_s[j] += tail_s[p * k + j];
+            head_c[j] += tail_c[p * k + j];
         }
     }
-    (changed, sums, counts)
+    changed.iter().any(|&c| c)
 }
 
 /// Lloyd iterations until assignments stabilize, writing the quantized
@@ -184,6 +225,22 @@ pub fn kmeans_1d_into(
     wc: &mut Vec<f32>,
     assignments: &mut Vec<u32>,
 ) -> usize {
+    let mut scratch = AssignScratch::default();
+    kmeans_1d_scratch(data, centroids, max_iter, wc, assignments, &mut scratch)
+}
+
+/// [`kmeans_1d_into`] with caller-owned [`AssignScratch`] — the fully
+/// non-allocating form: warm-started C steps reuse the midpoint and
+/// reduction buffers across Lloyd passes *and* across LC iterations
+/// ([`crate::quant::LayerQuantizer`] owns one scratch per layer).
+pub fn kmeans_1d_scratch(
+    data: &[f32],
+    centroids: &mut Vec<f32>,
+    max_iter: usize,
+    wc: &mut Vec<f32>,
+    assignments: &mut Vec<u32>,
+    scratch: &mut AssignScratch,
+) -> usize {
     let k = centroids.len();
     assert!(k >= 1);
     centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -193,16 +250,15 @@ pub fn kmeans_1d_into(
     for _ in 0..max_iter {
         iterations += 1;
         // assignment step: O(P log K), threaded (§Perf #3/#4)
-        let mids = midpoints(centroids);
-        let (changed, sums, counts) = assign_pass(data, &mids, assignments, k);
+        let changed = assign_pass(data, centroids, assignments, scratch);
         if !changed && iterations > 1 {
             iterations -= 1; // final pass only verified convergence
             break;
         }
         // centroid step: empty clusters keep their previous value
         for j in 0..k {
-            if counts[j] > 0 {
-                centroids[j] = (sums[j] / counts[j] as f64) as f32;
+            if scratch.counts[j] > 0 {
+                centroids[j] = (scratch.sums[j] / scratch.counts[j] as f64) as f32;
             }
         }
         // means of ordered cells stay ordered, but empty-cluster carry-over
@@ -258,6 +314,23 @@ pub fn kmeans_1d_zero_pinned_into(
     wc: &mut Vec<f32>,
     assignments: &mut Vec<u32>,
 ) -> usize {
+    let mut scratch = AssignScratch::default();
+    kmeans_1d_zero_pinned_scratch(data, centroids, max_iter, wc, assignments, &mut scratch)
+}
+
+/// [`kmeans_1d_zero_pinned_into`] with caller-owned [`AssignScratch`].
+/// Shares the assignment pass with the free-codebook form, so the
+/// zero-pinned C step also threads above the 2M threshold and allocates
+/// nothing when warm; only the centroid step differs (the zero entry
+/// never moves).
+pub fn kmeans_1d_zero_pinned_scratch(
+    data: &[f32],
+    centroids: &mut Vec<f32>,
+    max_iter: usize,
+    wc: &mut Vec<f32>,
+    assignments: &mut Vec<u32>,
+    scratch: &mut AssignScratch,
+) -> usize {
     let k = centroids.len();
     assert!(k >= 1);
     // ensure exactly one entry is 0 (insert if absent, replacing nearest)
@@ -278,26 +351,14 @@ pub fn kmeans_1d_zero_pinned_into(
     let mut iterations = 0;
     for _ in 0..max_iter {
         iterations += 1;
-        let mids = midpoints(centroids);
-        let mut changed = false;
-        let mut sums = vec![0.0f64; k];
-        let mut counts = vec![0usize; k];
-        for (i, &x) in data.iter().enumerate() {
-            let a = nearest_via_mids(&mids, x) as u32;
-            if a != assignments[i] {
-                assignments[i] = a;
-                changed = true;
-            }
-            sums[a as usize] += x as f64;
-            counts[a as usize] += 1;
-        }
+        let changed = assign_pass(data, centroids, assignments, scratch);
         if !changed && iterations > 1 {
             iterations -= 1;
             break;
         }
         for j in 0..k {
-            if centroids[j] != 0.0 && counts[j] > 0 {
-                centroids[j] = (sums[j] / counts[j] as f64) as f32;
+            if centroids[j] != 0.0 && scratch.counts[j] > 0 {
+                centroids[j] = (scratch.sums[j] / scratch.counts[j] as f64) as f32;
             }
         }
         centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());

@@ -106,6 +106,10 @@ pub struct LayerQuantizer {
     fixed: Option<(Vec<f32>, Vec<f32>)>,
     /// Codebook cache for `Scheme::PowersOfTwo`.
     pow2_cb: Option<Vec<f32>>,
+    /// Reusable Lloyd-pass buffers (midpoints + per-part reductions), so
+    /// steady-state adaptive C steps allocate nothing — even the threaded
+    /// assignment passes above the 2M-weight threshold.
+    scratch: kmeans::AssignScratch,
     rng: Rng,
 }
 
@@ -124,7 +128,14 @@ impl LayerQuantizer {
         } else {
             None
         };
-        LayerQuantizer { scheme, state: None, fixed, pow2_cb, rng: Rng::new(seed) }
+        LayerQuantizer {
+            scheme,
+            state: None,
+            fixed,
+            pow2_cb,
+            scratch: kmeans::AssignScratch::default(),
+            rng: Rng::new(seed),
+        }
     }
 
     /// Solve the C step for this layer's (shifted) weights, writing the
@@ -138,8 +149,14 @@ impl LayerQuantizer {
                     Some(c) if c.len() == *k => c,
                     _ => kmeans::kmeans_pp_init(w, *k, &mut self.rng),
                 };
-                out.iterations =
-                    kmeans::kmeans_1d_into(w, &mut centroids, 200, &mut out.wc, &mut out.assignments);
+                out.iterations = kmeans::kmeans_1d_scratch(
+                    w,
+                    &mut centroids,
+                    200,
+                    &mut out.wc,
+                    &mut out.assignments,
+                    &mut self.scratch,
+                );
                 out.codebook.clear();
                 out.codebook.extend_from_slice(&centroids);
                 self.state = Some(centroids);
@@ -206,12 +223,13 @@ impl LayerQuantizer {
                         c
                     }
                 };
-                out.iterations = kmeans::kmeans_1d_zero_pinned_into(
+                out.iterations = kmeans::kmeans_1d_zero_pinned_scratch(
                     w,
                     &mut centroids,
                     200,
                     &mut out.wc,
                     &mut out.assignments,
+                    &mut self.scratch,
                 );
                 out.codebook.clear();
                 out.codebook.extend_from_slice(&centroids);

@@ -22,6 +22,18 @@
 //!   popcount-style trick in float form).
 //! * **Pow2** — `PowersOfTwo` (codebook `{0, ±2⁻ⁱ}`): the combine multiplies
 //!   by shifting the f32 exponent instead of a float multiply.
+//!
+//! # Pipelining
+//!
+//! Each layer pass submits its row bands as one task on the **multi-task**
+//! worker pool ([`crate::linalg::pool`]), so when several requests are in
+//! flight (the micro-batching server's `pipeline_depth` executors, or any
+//! concurrent callers of [`LutEngine::forward`]), layer N of request A
+//! overlaps layer M of request B: workers drain bands across all live
+//! tasks instead of serializing whole forward passes behind a single task
+//! slot. Steady-state engines should reuse an [`EngineScratch`] via
+//! [`LutEngine::forward_into`] so concurrent passes also allocate nothing
+//! for activations.
 
 use super::packed::{PackedLayer, PackedModel};
 use crate::linalg::{num_threads, pool, vecops, Mat};
@@ -179,11 +191,16 @@ impl LutLayer {
         }
     }
 
-    fn forward(&self, x: &Mat) -> Mat {
+    /// One layer pass into a reusable output buffer (resized in place; no
+    /// allocation once warm). The band sweep is one task on the multi-task
+    /// pool, so concurrent layer passes of different requests interleave.
+    fn forward_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.in_dim, "input dim mismatch");
         let m = x.rows;
         let n = self.out_dim;
-        let mut out = Mat::zeros(m, n);
+        out.rows = m;
+        out.cols = n;
+        out.data.resize(m * n, 0.0);
         let do_rows = |rows: std::ops::Range<usize>, odata: &mut [f32]| {
             for (local, r) in rows.enumerate() {
                 self.forward_row(x.row(r), &mut odata[local * n..(local + 1) * n]);
@@ -207,7 +224,27 @@ impl LutLayer {
             }
             Activation::Linear => {}
         }
-        out
+    }
+}
+
+/// Reusable activation buffers for [`LutEngine::forward_into`]: two
+/// ping-pong matrices that layer passes alternate between, sized lazily and
+/// kept warm across requests so a steady-state serve executor allocates
+/// nothing per batch.
+pub struct EngineScratch {
+    bufs: [Mat; 2],
+}
+
+impl EngineScratch {
+    /// Empty scratch; buffers grow to the largest activation shape seen.
+    pub fn new() -> EngineScratch {
+        EngineScratch { bufs: [Mat::zeros(0, 0), Mat::zeros(0, 0)] }
+    }
+}
+
+impl Default for EngineScratch {
+    fn default() -> EngineScratch {
+        EngineScratch::new()
     }
 }
 
@@ -262,12 +299,36 @@ impl LutEngine {
     }
 
     /// Batched forward pass: (batch, in_dim) → (batch, out_dim) logits.
+    ///
+    /// Allocating convenience around [`LutEngine::forward_into`]; hot
+    /// callers (the serve executors) hold an [`EngineScratch`] instead.
     pub fn forward(&self, x: &Mat) -> Mat {
-        let mut cur = self.layers[0].forward(x);
+        let mut scratch = EngineScratch::new();
+        self.forward_into(x, &mut scratch).clone()
+    }
+
+    /// Batched forward pass into reusable scratch buffers: returns a view
+    /// of the logits living inside `scratch`, valid until the next call.
+    /// Zero heap allocation once the scratch is warm, so pipelined
+    /// executors can run concurrent batches without touching the
+    /// allocator.
+    pub fn forward_into<'s>(&self, x: &Mat, scratch: &'s mut EngineScratch) -> &'s Mat {
+        let [a, b] = &mut scratch.bufs;
+        self.layers[0].forward_into(x, a);
+        let mut in_a = true;
         for layer in &self.layers[1..] {
-            cur = layer.forward(&cur);
+            if in_a {
+                layer.forward_into(a, b);
+            } else {
+                layer.forward_into(b, a);
+            }
+            in_a = !in_a;
         }
-        cur
+        if in_a {
+            a
+        } else {
+            b
+        }
     }
 }
 
@@ -378,6 +439,26 @@ mod tests {
         // subnormal input falls back to the multiply
         let tiny = f32::MIN_POSITIVE / 4.0;
         assert_eq!(mul_pow2(tiny, 1), tiny * 2.0);
+    }
+
+    #[test]
+    fn forward_into_matches_forward_across_batch_shapes() {
+        // one scratch recycled across growing and shrinking batches (the
+        // pipelined executor's usage pattern) must equal the allocating
+        // form bit for bit
+        let model = packed_net(&Scheme::AdaptiveCodebook { k: 4 }, vec![12, 9, 5], 71);
+        let engine = LutEngine::new(&model).unwrap();
+        let mut scratch = EngineScratch::new();
+        let mut rng = Rng::new(72);
+        for batch in [3usize, 7, 1, 5] {
+            let mut x = Mat::zeros(batch, engine.in_dim());
+            rng.fill_normal(&mut x.data, 0.0, 1.0);
+            let want = engine.forward(&x);
+            let got = engine.forward_into(&x, &mut scratch);
+            assert_eq!(got.rows, want.rows);
+            assert_eq!(got.cols, want.cols);
+            assert_eq!(got.data, want.data, "batch {batch}");
+        }
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //! both detected at load. The payload is the paper-§5 storage: ⌈log₂K⌉
 //! bits per weight plus a K-entry f32 codebook and f32 biases per layer —
 //! no dense weights ever touch the disk.
+//!
+//! The full byte-level specification (field tables, bit-packing rules,
+//! reader validation obligations, and the exact size equation) is
+//! maintained for third-party implementors in `docs/lcq-format.md`; the
+//! tests below pin this file to that document.
 
 use super::packed::{PackedLayer, PackedModel};
 use crate::nn::{Activation, MlpSpec};
@@ -381,6 +386,73 @@ mod tests {
         let (p1, p0) = m.spec.param_counts();
         assert_eq!(m.payload_bits(), ratio::quantized_bits(p1, p0, 4, m.n_layers()));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The size equation documented in `docs/lcq-format.md`, computed
+    /// field by field. Any change to the wire format must update both the
+    /// document and this function together.
+    fn documented_file_size(m: &PackedModel) -> usize {
+        let scheme_bytes = match &m.scheme {
+            Scheme::Binary | Scheme::BinaryScale | Scheme::Ternary | Scheme::TernaryScale => 1,
+            Scheme::AdaptiveCodebook { .. }
+            | Scheme::AdaptiveWithZero { .. }
+            | Scheme::PowersOfTwo { .. } => 1 + 4,
+            Scheme::FixedCodebook { codebook } => 1 + 4 + 4 * codebook.len(),
+        };
+        let mut total = 4 + 4; // magic + version
+        total += 4 + m.name.len(); // name string
+        total += 4 + 8 * m.spec.sizes.len() + 1 + 4 + 4 * m.spec.dropout_keep.len(); // spec
+        total += scheme_bytes;
+        total += 4; // layer count
+        for l in &m.layers {
+            total += 8 + 8 + 4; // rows, cols, bits
+            total += 4 + 4 * l.codebook.len(); // codebook list
+            total += 4 + 4 * l.bias.len(); // bias list
+            total += 8 + 8 * (l.weight_count() * l.bits).div_ceil(64); // packed words
+        }
+        total + 8 // checksum
+    }
+
+    #[test]
+    fn spec_size_equation_matches_written_bytes() {
+        // docs/lcq-format.md's size equation must hold byte-exactly for
+        // every scheme family and codebook size, and its payload term must
+        // agree with quant::ratio (eq. 14) — the cross-check that keeps
+        // the written spec, the writer, and the paper accounting in sync.
+        let schemes = [
+            Scheme::AdaptiveCodebook { k: 2 },
+            Scheme::AdaptiveCodebook { k: 5 },
+            Scheme::AdaptiveCodebook { k: 256 },
+            Scheme::AdaptiveWithZero { k: 4 },
+            Scheme::FixedCodebook { codebook: vec![-0.5, 0.0, 0.25, 0.75] },
+            Scheme::Binary,
+            Scheme::BinaryScale,
+            Scheme::Ternary,
+            Scheme::TernaryScale,
+            Scheme::PowersOfTwo { c: 3 },
+        ];
+        for (i, scheme) in schemes.iter().enumerate() {
+            let m = toy_model(scheme, 500 + i as u64);
+            let bytes = m.to_bytes();
+            assert_eq!(
+                bytes.len(),
+                documented_file_size(&m),
+                "{scheme:?}: file size diverged from docs/lcq-format.md"
+            );
+            // payload term of the equation ⇔ eq. (14) accounting
+            let payload: usize = m
+                .layers
+                .iter()
+                .map(|l| {
+                    l.weight_count() * l.bits + (l.codebook.len() + l.bias.len()) * ratio::FLOAT_BITS
+                })
+                .sum();
+            assert_eq!(payload, m.payload_bits(), "{scheme:?}");
+        }
+        // and uniform-K payloads collapse to ratio::quantized_bits exactly
+        let m = toy_model(&Scheme::AdaptiveCodebook { k: 16 }, 77);
+        let (p1, p0) = m.spec.param_counts();
+        assert_eq!(m.payload_bits(), ratio::quantized_bits(p1, p0, 16, m.n_layers()));
     }
 
     #[test]

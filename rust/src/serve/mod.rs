@@ -18,20 +18,27 @@
 //!   multiply per weight). Sign and exponent-shift specializations for the
 //!   binary and powers-of-two codebooks; exact-zero centroids cost
 //!   nothing.
-//! * [`server`] — a micro-batching request queue
+//! * [`server`] — a micro-batching, **pipelined** request queue
 //!   ([`MicroBatchServer`]): single requests coalesce up to a deadline
-//!   into engine-friendly batches, with p50/p90/p99 latency reporting.
+//!   into engine-friendly batches, `pipeline_depth` executor threads run
+//!   coalesced batches concurrently (their layer passes overlap on the
+//!   multi-task worker pool), with p50/p90/p99 latency reporting.
 //! * [`registry`] — a [`Registry`] of many packed variants of a net
 //!   (binary / ternary / pow2 / adaptive-K), routed per-request by name,
 //!   so one process serves a whole compression-tradeoff family.
+//!
+//! The `.lcq` byte-level format is specified for third-party readers in
+//! `docs/lcq-format.md`; the surrounding dataflow (L step → C step → pack
+//! → serve) is drawn out in `docs/ARCHITECTURE.md`.
 //!
 //! ```no_run
 //! use lcquant::serve::{MicroBatchServer, PackedModel, Registry, ServerConfig};
 //! use std::sync::Arc;
 //! # fn demo(lc: &lcquant::coordinator::LcResult, spec: &lcquant::nn::MlpSpec,
-//! #         biases: &[Vec<f32>]) -> anyhow::Result<()> {
-//! // pack the LC result and save the deployable artifact
-//! let model = PackedModel::from_lc("lenet300-k2", spec, lc, biases)?;
+//! #         params: &lcquant::nn::ParamSet) -> anyhow::Result<()> {
+//! // pack the LC result (biases come from the flat parameter arena) and
+//! // save the deployable artifact
+//! let model = PackedModel::from_lc("lenet300-k2", spec, lc, params)?;
 //! model.save(std::path::Path::new("models/lenet300-k2.lcq"))?;
 //! // later / elsewhere: load the family and serve
 //! let registry = Arc::new(Registry::load_dir(std::path::Path::new("models"))?);
@@ -40,6 +47,7 @@
 //! # Ok(())
 //! # }
 //! ```
+#![warn(missing_docs)]
 
 pub mod engine;
 pub mod format;
@@ -47,7 +55,7 @@ pub mod packed;
 pub mod registry;
 pub mod server;
 
-pub use engine::LutEngine;
+pub use engine::{EngineScratch, LutEngine};
 pub use packed::{PackedLayer, PackedModel};
 pub use registry::{LoadedModel, Registry};
 pub use server::{Client, MicroBatchServer, ServerConfig, StatsSnapshot};

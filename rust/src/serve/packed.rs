@@ -114,8 +114,12 @@ impl PackedLayer {
 pub struct PackedModel {
     /// Registry key (e.g. `"lenet300-binary"`).
     pub name: String,
+    /// Architecture of the packed net (layer sizes, hidden activation).
     pub spec: MlpSpec,
+    /// Quantization scheme the net was compressed with (drives the LUT
+    /// engine's sign/shift specializations at load).
     pub scheme: Scheme,
+    /// One packed layer per weight layer, in forward order.
     pub layers: Vec<PackedLayer>,
 }
 
@@ -179,6 +183,7 @@ impl PackedModel {
         PackedModel::from_parts(name, spec, &lc.scheme, &lc.codebooks, &lc.assignments, &biases)
     }
 
+    /// Number of weight layers.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }

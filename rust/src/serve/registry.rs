@@ -14,7 +14,9 @@ use std::sync::Arc;
 
 /// A packed model plus its ready-to-serve engine.
 pub struct LoadedModel {
+    /// The deserialized `.lcq` artifact (kept for metadata/accounting).
     pub packed: PackedModel,
+    /// The grouped-gather engine built from it at registration time.
     pub engine: LutEngine,
 }
 
@@ -26,6 +28,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Empty registry.
     pub fn new() -> Registry {
         Registry::default()
     }
@@ -57,18 +60,22 @@ impl Registry {
         Ok(reg)
     }
 
+    /// Look up a model (and its engine) by registry name.
     pub fn get(&self, name: &str) -> Option<Arc<LoadedModel>> {
         self.models.get(name).cloned()
     }
 
+    /// Registered model names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }
 
+    /// Number of registered models.
     pub fn len(&self) -> usize {
         self.models.len()
     }
 
+    /// Whether no models are registered.
     pub fn is_empty(&self) -> bool {
         self.models.is_empty()
     }

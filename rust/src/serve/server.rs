@@ -1,20 +1,34 @@
-//! Micro-batching server: coalesces single-image requests into batches.
+//! Micro-batching server: coalesces single-image requests into batches and
+//! **pipelines** batch execution across a pool of executor threads.
 //!
 //! Single requests are latency-bound; the LUT engine (like any GEMM-shaped
 //! kernel) is throughput-bound. The batcher thread takes the first queued
 //! request, then keeps draining the channel until either `max_batch`
 //! requests are in hand or `max_wait` has elapsed since the first one —
-//! the classic latency/throughput knob. Batches are grouped per model name
-//! (the registry serves a whole compression family) and per-request
-//! latency is recorded (bounded sample window) for p50/p90/p99 reporting.
+//! the classic latency/throughput knob. Coalesced batches are grouped per
+//! model name (the registry serves a whole compression family) and handed
+//! to [`ServerConfig::pipeline_depth`] executor threads, so:
+//!
+//! * the batcher is already coalescing the *next* batch while the previous
+//!   one executes, and
+//! * up to `pipeline_depth` batches run concurrently — their layer passes
+//!   land as independent tasks on the multi-task worker pool
+//!   ([`crate::linalg::pool`]), so layer N of request A overlaps layer M
+//!   of request B instead of serializing behind one task slot.
+//!
+//! Each executor owns a reusable input matrix and an
+//! [`EngineScratch`](crate::serve::engine::EngineScratch), so steady-state
+//! batch execution performs no activation allocations. Per-request latency
+//! is recorded (bounded sample window) for p50/p90/p99 reporting.
 //!
 //! Plain `std::thread` + `mpsc` channels, matching the crate's threading
 //! idiom (no async runtime in the vendored crate set).
 
+use super::engine::EngineScratch;
 use super::registry::Registry;
 use crate::linalg::Mat;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SendError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -29,18 +43,28 @@ const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
 /// towards recent traffic. Totals are tracked separately in counters.
 const STATS_CAP: usize = 65_536;
 
-/// Batching knobs.
+/// Batching and pipelining knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Hard cap on coalesced batch size.
     pub max_batch: usize,
     /// How long the first request in a batch may wait for company.
     pub max_wait: Duration,
+    /// Executor threads running coalesced batches concurrently (clamped to
+    /// ≥ 1). Depth 1 reproduces strictly serial execution (though batch
+    /// N+1 still coalesces while batch N runs); deeper pipelines let
+    /// concurrent batches overlap on the multi-task worker pool. Values
+    /// past the pool width mostly add queueing, not throughput.
+    pub pipeline_depth: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { max_batch: 64, max_wait: Duration::from_millis(2) }
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            pipeline_depth: 2,
+        }
     }
 }
 
@@ -49,6 +73,12 @@ struct Job {
     input: Vec<f32>,
     enqueued: Instant,
     reply: Sender<Result<Vec<f32>, String>>,
+}
+
+/// One per-model group of coalesced jobs, the unit handed to an executor.
+struct BatchGroup {
+    model: String,
+    jobs: Vec<Job>,
 }
 
 #[derive(Default)]
@@ -75,13 +105,21 @@ impl Stats {
 /// Point-in-time summary of server behaviour.
 #[derive(Clone, Debug)]
 pub struct StatsSnapshot {
+    /// Requests answered so far (success or error).
     pub requests: usize,
+    /// Per-model batch groups executed.
     pub batches: usize,
+    /// Requests answered with an error.
     pub errors: usize,
+    /// Median request latency over the retained sample window, in ms.
     pub p50_ms: f32,
+    /// 90th-percentile request latency, in ms.
     pub p90_ms: f32,
+    /// 99th-percentile request latency, in ms.
     pub p99_ms: f32,
+    /// Worst retained request latency, in ms.
     pub max_ms: f32,
+    /// Mean requests per executed batch group.
     pub mean_batch: f64,
 }
 
@@ -108,26 +146,49 @@ impl Client {
     }
 }
 
-/// The batcher thread plus its stats. Stops (draining nothing further)
-/// when dropped or [`MicroBatchServer::stop`] is called.
+/// The batcher thread, its executor pool, and their stats. Stops (draining
+/// nothing further) when dropped or [`MicroBatchServer::stop`] is called.
 pub struct MicroBatchServer {
     tx: Option<Sender<Job>>,
-    worker: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+    executors: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<Stats>>,
     shutdown: Arc<AtomicBool>,
 }
 
 impl MicroBatchServer {
-    /// Spawn the batcher over a shared registry.
+    /// Spawn the batcher and `cfg.pipeline_depth` executors over a shared
+    /// registry.
     pub fn start(registry: Arc<Registry>, cfg: ServerConfig) -> MicroBatchServer {
         let (tx, rx) = mpsc::channel::<Job>();
+        let (exec_tx, exec_rx) = mpsc::channel::<BatchGroup>();
+        let exec_rx = Arc::new(Mutex::new(exec_rx));
         let stats = Arc::new(Mutex::new(Stats::default()));
-        let stats_w = Arc::clone(&stats);
         let shutdown = Arc::new(AtomicBool::new(false));
+        let depth = cfg.pipeline_depth.max(1);
+        let executors = (0..depth)
+            .map(|i| {
+                let rx = Arc::clone(&exec_rx);
+                let registry = Arc::clone(&registry);
+                let stats = Arc::clone(&stats);
+                std::thread::Builder::new()
+                    .name(format!("lcq-serve-exec-{i}"))
+                    .spawn(move || executor_loop(rx, registry, stats))
+                    .expect("spawn serve executor")
+            })
+            .collect();
         let shutdown_w = Arc::clone(&shutdown);
-        let worker =
-            std::thread::spawn(move || batcher_loop(rx, registry, cfg, stats_w, shutdown_w));
-        MicroBatchServer { tx: Some(tx), worker: Some(worker), stats, shutdown }
+        let batcher = std::thread::Builder::new()
+            .name("lcq-serve-batch".to_string())
+            .spawn(move || batcher_loop(rx, exec_tx, cfg, shutdown_w))
+            .expect("spawn serve batcher");
+        MicroBatchServer {
+            tx: Some(tx),
+            batcher: Some(batcher),
+            executors,
+            stats,
+            shutdown,
+        }
     }
 
     /// A request handle (cloneable, thread-safe).
@@ -138,7 +199,7 @@ impl MicroBatchServer {
     /// Latency/batching summary so far (percentiles over the retained
     /// sample window, counters over the server's lifetime).
     pub fn stats(&self) -> StatsSnapshot {
-        // sort once outside the lock so the batcher is not stalled
+        // sort once outside the lock so the executors are not stalled
         let (mut lat, requests, batches, batched_requests, errors) = {
             let s = self.stats.lock().unwrap();
             (s.latencies_ms.clone(), s.requests, s.batches, s.batched_requests, s.errors)
@@ -160,12 +221,18 @@ impl MicroBatchServer {
         }
     }
 
-    /// Stop accepting requests and join the batcher (already-coalesced
-    /// requests are answered first; later ones get a clean error).
+    /// Stop accepting requests and join the batcher and executors
+    /// (already-coalesced requests are answered first; later ones get a
+    /// clean error).
     pub fn stop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         drop(self.tx.take());
-        if let Some(h) = self.worker.take() {
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+        // the batcher owned the executor channel's sender; executors drain
+        // what it already queued, then exit on disconnect
+        for h in self.executors.drain(..) {
             let _ = h.join();
         }
     }
@@ -179,9 +246,8 @@ impl Drop for MicroBatchServer {
 
 fn batcher_loop(
     rx: Receiver<Job>,
-    registry: Arc<Registry>,
+    exec_tx: Sender<BatchGroup>,
     cfg: ServerConfig,
-    stats: Arc<Mutex<Stats>>,
     shutdown: Arc<AtomicBool>,
 ) {
     let max_batch = cfg.max_batch.max(1);
@@ -210,59 +276,113 @@ fn batcher_loop(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        run_batch(&registry, jobs, &stats);
+        // stable grouping by model name (preserves request order per
+        // model); each group is one executor work unit
+        let mut groups: Vec<BatchGroup> = Vec::new();
+        for job in jobs {
+            match groups.iter_mut().find(|g| g.model == job.model) {
+                Some(g) => g.jobs.push(job),
+                None => groups.push(BatchGroup { model: job.model.clone(), jobs: vec![job] }),
+            }
+        }
+        for group in groups {
+            if let Err(SendError(group)) = exec_tx.send(group) {
+                // executors already gone (shutdown race): fail cleanly
+                for job in &group.jobs {
+                    let _ = job.reply.send(Err("server stopped".to_string()));
+                }
+                return;
+            }
+        }
     }
 }
 
-/// Group coalesced jobs per model, forward each group in one batched call,
-/// and answer every request.
-fn run_batch(registry: &Registry, jobs: Vec<Job>, stats: &Arc<Mutex<Stats>>) {
-    // stable grouping by model name (preserves request order per model)
-    let mut groups: Vec<(String, Vec<Job>)> = Vec::new();
-    for job in jobs {
-        match groups.iter_mut().find(|(m, _)| *m == job.model) {
-            Some((_, g)) => g.push(job),
-            None => groups.push((job.model.clone(), vec![job])),
-        }
+/// One pipeline executor: pull per-model groups off the shared queue and
+/// run them. The queue mutex is held only across `recv`, so up to
+/// `pipeline_depth` groups execute concurrently while the batcher keeps
+/// coalescing.
+fn executor_loop(
+    rx: Arc<Mutex<Receiver<BatchGroup>>>,
+    registry: Arc<Registry>,
+    stats: Arc<Mutex<Stats>>,
+) {
+    let mut x = Mat::zeros(0, 0);
+    let mut scratch = EngineScratch::new();
+    let mut latencies = Vec::new();
+    loop {
+        let group = {
+            let rx = rx.lock().unwrap();
+            match rx.recv() {
+                Ok(g) => g,
+                Err(_) => return, // batcher gone and queue drained
+            }
+        };
+        run_group(&registry, group, &stats, &mut x, &mut scratch, &mut latencies);
     }
-    for (model, group) in groups {
-        let outcome: Result<Mat, String> = (|| {
-            let loaded = registry
-                .get(&model)
-                .ok_or_else(|| format!("model '{model}' not registered"))?;
+}
+
+/// Forward one per-model group in a single batched engine call and answer
+/// every request. `x`, `scratch` and `latencies` are the executor's
+/// reusable buffers.
+fn run_group(
+    registry: &Registry,
+    group: BatchGroup,
+    stats: &Arc<Mutex<Stats>>,
+    x: &mut Mat,
+    scratch: &mut EngineScratch,
+    latencies: &mut Vec<f32>,
+) {
+    let BatchGroup { model, jobs } = group;
+    let outcome: Result<&Mat, String> = match registry.get(&model) {
+        None => Err(format!("model '{model}' not registered")),
+        Some(loaded) => {
             let in_dim = loaded.engine.in_dim();
-            for job in &group {
-                if job.input.len() != in_dim {
-                    return Err(format!(
-                        "model '{model}' expects {in_dim} features, got {}",
-                        job.input.len()
-                    ));
-                }
-            }
-            let mut x = Mat::zeros(group.len(), in_dim);
-            for (r, job) in group.iter().enumerate() {
-                x.row_mut(r).copy_from_slice(&job.input);
-            }
-            Ok(loaded.engine.forward(&x))
-        })();
-        let mut s = stats.lock().unwrap();
-        s.batches += 1;
-        s.batched_requests += group.len();
-        match outcome {
-            Ok(y) => {
-                for (r, job) in group.iter().enumerate() {
-                    s.push_latency(job.enqueued.elapsed().as_secs_f32() * 1e3);
-                    let _ = job.reply.send(Ok(y.row(r).to_vec()));
-                }
-            }
-            Err(e) => {
-                for job in &group {
-                    s.errors += 1;
-                    s.push_latency(job.enqueued.elapsed().as_secs_f32() * 1e3);
-                    let _ = job.reply.send(Err(e.clone()));
+            match jobs.iter().find(|j| j.input.len() != in_dim) {
+                Some(bad) => Err(format!(
+                    "model '{model}' expects {in_dim} features, got {}",
+                    bad.input.len()
+                )),
+                None => {
+                    x.rows = jobs.len();
+                    x.cols = in_dim;
+                    // no clear(): resize handles grow and shrink, and every
+                    // row 0..jobs.len() is overwritten below
+                    x.data.resize(jobs.len() * in_dim, 0.0);
+                    for (r, job) in jobs.iter().enumerate() {
+                        x.row_mut(r).copy_from_slice(&job.input);
+                    }
+                    Ok(loaded.engine.forward_into(x, scratch))
                 }
             }
         }
+    };
+    // Answer every request and measure latencies *outside* the stats lock:
+    // the per-job row clones and channel sends are O(batch), and holding
+    // the shared mutex across them would serialize the pipeline executors
+    // at the end of every batch.
+    latencies.clear();
+    let errors = match outcome {
+        Ok(y) => {
+            for (r, job) in jobs.iter().enumerate() {
+                latencies.push(job.enqueued.elapsed().as_secs_f32() * 1e3);
+                let _ = job.reply.send(Ok(y.row(r).to_vec()));
+            }
+            0
+        }
+        Err(e) => {
+            for job in &jobs {
+                latencies.push(job.enqueued.elapsed().as_secs_f32() * 1e3);
+                let _ = job.reply.send(Err(e.clone()));
+            }
+            jobs.len()
+        }
+    };
+    let mut s = stats.lock().unwrap();
+    s.batches += 1;
+    s.batched_requests += jobs.len();
+    s.errors += errors;
+    for &ms in latencies.iter() {
+        s.push_latency(ms);
     }
 }
 
@@ -313,7 +433,11 @@ mod tests {
         let engine = crate::serve::LutEngine::new(&packed).unwrap();
         let mut server = MicroBatchServer::start(
             reg,
-            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                pipeline_depth: 1,
+            },
         );
         let client = server.client();
         let mut rng = Rng::new(31);
@@ -337,7 +461,11 @@ mod tests {
         let (reg, _) = toy_registry();
         let mut server = MicroBatchServer::start(
             reg,
-            ServerConfig { max_batch: 32, max_wait: Duration::from_millis(100) },
+            ServerConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(100),
+                pipeline_depth: 2,
+            },
         );
         let client = server.client();
         let n_threads = 12;
@@ -357,6 +485,46 @@ mod tests {
         // once: fewer batches than requests ⇔ some batch had size ≥ 2
         assert!(stats.batches < stats.requests, "no coalescing: {stats:?}");
         assert!(stats.mean_batch > 1.0, "{stats:?}");
+    }
+
+    #[test]
+    fn pipelined_burst_is_answered_correctly_at_depth() {
+        // small max_batch + several executors: many groups in flight at
+        // once; every reply must still match the direct engine forward
+        let (reg, packed) = toy_registry();
+        let engine = crate::serve::LutEngine::new(&packed).unwrap();
+        let mut server = MicroBatchServer::start(
+            reg,
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                pipeline_depth: 3,
+            },
+        );
+        let client = server.client();
+        let n_threads = 16usize;
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let c = client.clone();
+                let engine = &engine;
+                s.spawn(move || {
+                    let mut rng = Rng::new(900 + t as u64);
+                    for _ in 0..4 {
+                        let input: Vec<f32> =
+                            (0..8).map(|_| rng.normal(0.0, 1.0)).collect();
+                        let got = c.infer("toy", input.clone()).unwrap();
+                        let mut x = Mat::zeros(1, 8);
+                        x.row_mut(0).copy_from_slice(&input);
+                        let want = engine.forward(&x);
+                        assert_eq!(got, want.row(0).to_vec(), "client {t}");
+                    }
+                });
+            }
+        });
+        server.stop();
+        let stats = server.stats();
+        assert_eq!(stats.requests, n_threads * 4);
+        assert_eq!(stats.errors, 0);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use lcquant::data::Dataset;
 use lcquant::linalg::{vecops, Mat};
 use lcquant::nn::sgd::ClippedLrSchedule;
 use lcquant::nn::{GradBuffer, Mlp, MlpSpec};
-use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::quant::{LayerQuantizer, QuantOut, Scheme};
 use lcquant::util::rng::Rng;
 
 // ---- counting allocator: a thread-local counter (so the single-threaded
@@ -395,6 +395,50 @@ fn steady_state_minibatch_step_is_allocation_free() {
         allocs, 0,
         "unpenalized step path allocated {allocs} times over 10 steps"
     );
+}
+
+#[test]
+fn warm_threaded_cstep_lloyd_passes_are_allocation_free() {
+    pin_threads();
+    let _serial = serial_guard();
+    assert_eq!(lcquant::linalg::num_threads(), 2, "LCQUANT_THREADS pin failed");
+    // Above the k-means 2M threading threshold, so every Lloyd assignment
+    // pass fans out across the worker pool — the per-part `sums`/`counts`
+    // reduction regions and the midpoint buffer must all come from the
+    // quantizer's reusable AssignScratch, not per-pass allocations.
+    let n = 2_100_000usize;
+    let mut rng = Rng::new(0xC57E9);
+    let mut data = vec![0.0f32; n];
+    rng.fill_normal(&mut data, 0.0, 1.0);
+    let mut q = LayerQuantizer::new(Scheme::AdaptiveCodebook { k: 4 }, 11);
+    let mut out = QuantOut::default();
+    // Warm up: k-means++ init, output/scratch buffer sizing, pool spawn.
+    q.compress_into(&data, &mut out);
+    q.compress_into(&data, &mut out);
+    let spawned_before = lcquant::linalg::pool::total_spawned();
+    // Same windowed-minimum discipline as the threaded L-step test below:
+    // the libtest harness may allocate on its own threads at arbitrary
+    // moments, but a genuinely allocating Lloyd pass allocates in *every*
+    // window.
+    let mut min_allocs = u64::MAX;
+    for _ in 0..5 {
+        let before = process_allocs();
+        q.compress_into(&data, &mut out);
+        min_allocs = min_allocs.min(process_allocs() - before);
+    }
+    assert_eq!(
+        min_allocs, 0,
+        "warm threaded C step allocated {min_allocs} times in one compress"
+    );
+    assert_eq!(
+        lcquant::linalg::pool::total_spawned() - spawned_before,
+        0,
+        "threaded assignment passes must not spawn threads after warm-up"
+    );
+    // and the result is still a valid 4-entry codebook quantization
+    assert_eq!(out.codebook.len(), 4);
+    assert_eq!(out.wc.len(), n);
+    assert!(out.assignments.iter().all(|&a| a < 4));
 }
 
 #[test]

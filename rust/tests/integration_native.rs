@@ -258,7 +258,11 @@ fn pack_serve_pipeline_end_to_end() {
 
     let mut server = MicroBatchServer::start(
         Arc::clone(&registry),
-        ServerConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+        ServerConfig {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(1),
+            pipeline_depth: 2,
+        },
     );
     let client = server.client();
     for r in 0..n {

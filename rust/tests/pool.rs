@@ -1,20 +1,23 @@
 //! Stress and policy tests for the persistent worker pool
 //! (`linalg::pool`) — the threading substrate of the whole compute plane.
 //!
-//! Covers: nested/reentrant dispatch (from the dispatcher thread and from
-//! inside worker-run parts), the 1-thread degenerate case, concurrent
-//! dispatchers hammering one pool from many threads, `LCQUANT_THREADS`
-//! clamping policy, band partitioning edge shapes, and end-to-end parity
-//! of the pool-dispatched gemm/serve kernels against their serial paths.
+//! Covers: the multi-task queue (concurrent two-task dispatch from scoped
+//! threads, task-slot exhaustion falling back inline without deadlock,
+//! panic isolation between concurrent tasks), nested/reentrant dispatch
+//! (from the dispatcher thread and from inside worker-run parts), the
+//! 1-thread degenerate case, concurrent dispatchers hammering one pool
+//! from many threads, `LCQUANT_THREADS` clamping policy, band partitioning
+//! edge shapes, and end-to-end parity of the pool-dispatched gemm/serve
+//! kernels against their serial paths.
 //!
 //! This binary pins `LCQUANT_THREADS=3` (before anything resolves the
 //! cached thread count) so the *global* pool genuinely fans out; private
 //! `Pool::new(n)` instances cover the other widths in-process.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use lcquant::linalg::pool::{self, DisjointMut, Pool};
+use lcquant::linalg::pool::{self, DisjointMut, Pool, TASK_SLOTS};
 use lcquant::linalg::{gemm, resolve_threads, Mat};
 use lcquant::util::rng::Rng;
 
@@ -70,9 +73,9 @@ fn deeply_nested_dispatch_terminates_and_covers_all_parts() {
 #[test]
 fn concurrent_dispatchers_from_scoped_threads() {
     pin_threads();
-    // several OS threads race dispatches into one pool: whoever loses the
-    // busy flag runs inline, and every part of every dispatch still runs
-    // exactly once
+    // several OS threads race dispatches into one pool: each takes its own
+    // task slot (or, if the ring ever fills, runs inline), and every part
+    // of every dispatch still runs exactly once
     let pool = Pool::new(4);
     let hits: Vec<AtomicUsize> = (0..8 * 100).map(|_| AtomicUsize::new(0)).collect();
     std::thread::scope(|s| {
@@ -211,6 +214,139 @@ fn pooled_gemm_matches_serial_reference() {
     let want_cbt = gemm::matmul(&c, &b.transpose());
     for (x, y) in cbt.data.iter().zip(&want_cbt.data) {
         assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+    }
+}
+
+/// Bounded spin-wait (yields): turns a logic error in the concurrency
+/// tests into a clean panic instead of a hung test binary.
+fn spin_until(f: impl Fn() -> bool) {
+    for _ in 0..50_000_000u64 {
+        if f() {
+            return;
+        }
+        std::thread::yield_now();
+    }
+    panic!("spin_until timed out — expected concurrency never materialized");
+}
+
+#[test]
+fn two_tasks_run_concurrently_with_worker_participation() {
+    pin_threads();
+    // 1 dispatcher-slot thread (scoped) + 2 workers. Task A blocks one
+    // thread and holds its task slot; task B then *requires* two threads
+    // to rendezvous. Under the old single-task pool, B would degrade to
+    // inline serial execution (its dispatcher owns both parts) and the
+    // rendezvous could never complete — the multi-task queue is exactly
+    // what lets a worker join B while A is still live.
+    let pool = Pool::new(3);
+    let release = AtomicBool::new(false);
+    let a_blocked = AtomicUsize::new(0);
+    let b_entered = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        let pool = &pool;
+        let release = &release;
+        let a_blocked = &a_blocked;
+        let b_entered = &b_entered;
+        s.spawn(move || {
+            pool.run(2, |p| {
+                if p == 0 {
+                    a_blocked.fetch_add(1, Ordering::SeqCst);
+                    spin_until(|| release.load(Ordering::SeqCst));
+                }
+            });
+        });
+        // task A is live: one part parked, its slot held
+        spin_until(|| a_blocked.load(Ordering::SeqCst) == 1);
+        // task B: two parts that only finish if two threads run them
+        // concurrently — dispatcher (this thread) plus a pool worker
+        pool.run(2, |_| {
+            b_entered.fetch_add(1, Ordering::SeqCst);
+            spin_until(|| b_entered.load(Ordering::SeqCst) == 2);
+        });
+        // B completed while A was still parked: tasks overlapped
+        assert!(!release.load(Ordering::SeqCst));
+        assert_eq!(b_entered.load(Ordering::SeqCst), 2);
+        release.store(true, Ordering::SeqCst);
+    });
+}
+
+#[test]
+fn task_slot_exhaustion_falls_back_inline_without_deadlock() {
+    pin_threads();
+    let pool = Pool::new(2); // 1 worker: most parts of the fillers park
+    let release = AtomicBool::new(false);
+    let occupied: Vec<AtomicUsize> = (0..TASK_SLOTS).map(|_| AtomicUsize::new(0)).collect();
+    std::thread::scope(|s| {
+        let pool = &pool;
+        let release = &release;
+        let occupied = &occupied;
+        // TASK_SLOTS dispatchers, each parking a task in one ring slot
+        for t in 0..TASK_SLOTS {
+            s.spawn(move || {
+                pool.run(2, |_| {
+                    occupied[t].fetch_add(1, Ordering::SeqCst);
+                    spin_until(|| release.load(Ordering::SeqCst));
+                });
+            });
+        }
+        // every filler task has at least one part running ⇒ all
+        // TASK_SLOTS ring slots are held
+        spin_until(|| occupied.iter().all(|o| o.load(Ordering::SeqCst) >= 1));
+        // a further dispatch must find no slot, run inline on this very
+        // thread, and complete — never block waiting for a slot
+        let me = std::thread::current().id();
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |p| {
+            assert_eq!(
+                std::thread::current().id(),
+                me,
+                "ring-full dispatch must run inline on the caller"
+            );
+            hits[p].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert!(!release.load(Ordering::SeqCst), "inline fallback finished first");
+        release.store(true, Ordering::SeqCst);
+    });
+}
+
+#[test]
+fn panic_in_one_task_does_not_poison_a_concurrent_task() {
+    pin_threads();
+    let pool = Pool::new(4);
+    for round in 0..20 {
+        let good = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let good = &good;
+            let bad = s.spawn(move || {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    pool.run(8, |p| {
+                        if p % 2 == 0 {
+                            panic!("bad task part {p}");
+                        }
+                    });
+                }))
+            });
+            // the concurrent task must complete cleanly: a panic leaking
+            // across slots would make this dispatch re-raise and unwind
+            // the scope
+            s.spawn(move || {
+                pool.run(64, |_| {
+                    good.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+            let bad_result = bad.join().expect("bad dispatcher thread survived");
+            assert!(
+                bad_result.is_err(),
+                "round {round}: panic must reach the panicking task's own dispatcher"
+            );
+        });
+        assert_eq!(
+            good.load(Ordering::Relaxed),
+            64,
+            "round {round}: concurrent task lost parts to a foreign panic"
+        );
     }
 }
 
