@@ -4,9 +4,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test test-threaded bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve
+.PHONY: tier1 build test test-threaded smoke-net bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net
 
-tier1: build test test-threaded bench-build doc clippy fmt-check
+tier1: build test test-threaded smoke-net bench-build doc clippy fmt-check
 
 build:
 	$(CARGO) build --release
@@ -19,6 +19,15 @@ test:
 # exercised even on single-core CI runners.
 test-threaded:
 	LCQUANT_THREADS=2 $(CARGO) test -q
+
+# Loopback network smoke: the LCQ-RPC end-to-end suite (real TCP sockets
+# on 127.0.0.1, responses bit-identical to the in-process engine, overload
+# shed paths), under the default thread policy and the pinned 2-thread
+# pool. Redundant with `test`/`test-threaded` by construction — kept as an
+# explicit gate so the serving path cannot be skipped.
+smoke-net:
+	$(CARGO) test -q --test net
+	LCQUANT_THREADS=2 $(CARGO) test -q --test net
 
 # Benches are plain binaries (harness = false); --no-run keeps them
 # compiling in tier-1 without paying their runtime.
@@ -57,9 +66,14 @@ bench-lstep:
 bench-pool: bench-lstep
 
 # Serve-plane benches: LUT-vs-dense, micro-batch server at pipeline depth
-# 1 vs 4, and the multi-client saturation sweep → BENCH_serve_pipeline.json.
+# 1 vs 4, the multi-client saturation sweep → BENCH_serve_pipeline.json,
+# and the loopback LCQ-RPC sweep → BENCH_net.json.
 bench-serve:
 	$(CARGO) bench --bench bench_serve
+
+# Loopback TCP sweep (connections × pipeline depth → BENCH_net.json); the
+# same binary also refreshes BENCH_serve_pipeline.json.
+bench-net: bench-serve
 
 ci: tier1
 

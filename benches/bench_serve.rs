@@ -11,6 +11,10 @@
 //!   inline serial execution the moment one request owned the pool; the
 //!   multi-task queue lets their layer-band tasks interleave, so aggregate
 //!   throughput must scale past the single-client baseline;
+//! * a **loopback LCQ-RPC sweep** (`NetServer` on 127.0.0.1, the loadgen
+//!   driving 1/2/4/8 connections, plus pipeline depth 1 vs 4 at 8
+//!   connections) → `BENCH_net.json`: what the wire + connection plane
+//!   cost on top of the in-process micro-batcher;
 //! * the PJRT artifact for comparison when built with `--features pjrt`
 //!   and `make artifacts`.
 
@@ -140,8 +144,78 @@ fn main() {
 
     bench_pipeline_sweep(&models[1], &server_rows);
 
+    bench_net_sweep(&models[0]);
+
     // ---- PJRT artifact, when available --------------------------------
     run_pjrt_section();
+}
+
+/// Loopback TCP sweep: the same micro-batcher behind the LCQ-RPC
+/// connection plane, driven by the multi-connection load generator.
+/// Writes `BENCH_net.json` (connections × depth → req/s, p50/p99, shed).
+fn bench_net_sweep(model: &PackedModel) {
+    use lcquant::net::{loadgen, LoadGenConfig, NetConfig, NetServer};
+    println!("\n== loopback LCQ-RPC sweep ({}) ==", model.name);
+    let mut registry = Registry::new();
+    registry.insert(model.clone()).unwrap();
+    let registry = Arc::new(registry);
+    let per_conn = 128usize;
+    let mut rows: Vec<(usize, usize, f64, f32, f32, usize)> = Vec::new();
+    for (conns, depth) in [(1usize, 2usize), (2, 2), (4, 2), (8, 2), (8, 1), (8, 4)] {
+        let server = NetServer::start(
+            Arc::clone(&registry),
+            ServerConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(2),
+                pipeline_depth: depth,
+            },
+            NetConfig {
+                bind_addr: "127.0.0.1:0".to_string(),
+                max_connections: 16,
+                ..NetConfig::default()
+            },
+        )
+        .expect("bind loopback bench server");
+        let mut lg = LoadGenConfig::new(&server.local_addr().to_string());
+        lg.connections = conns;
+        lg.requests_per_conn = per_conn;
+        lg.seed = 7;
+        let report = loadgen::run(&lg).expect("loadgen");
+        println!(
+            "conns={conns} depth={depth}: {:>6.0} req/s  p50 {:.2}ms  p99 {:.2}ms  \
+             ({} ok, {} shed)",
+            report.req_per_s(),
+            report.p50_ms,
+            report.p99_ms,
+            report.ok,
+            report.shed,
+        );
+        rows.push((conns, depth, report.req_per_s(), report.p50_ms, report.p99_ms, report.shed));
+        let mut server = server;
+        server.stop();
+    }
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"net\",\n");
+    json.push_str(&format!(
+        "  \"threads\": {},\n  \"model\": \"{}\",\n  \"requests_per_conn\": {per_conn},\n  \
+         \"sweep\": [\n",
+        lcquant::linalg::num_threads(),
+        model.name
+    ));
+    for (i, (conns, depth, req_s, p50, p99, shed)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"connections\": {conns}, \"pipeline_depth\": {depth}, \
+             \"req_per_s\": {req_s:.0}, \"p50_ms\": {p50:.3}, \"p99_ms\": {p99:.3}, \
+             \"shed\": {shed}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_net.json", &json) {
+        Ok(()) => println!("wrote BENCH_net.json"),
+        Err(e) => eprintln!("could not write BENCH_net.json: {e}"),
+    }
 }
 
 /// 1/2/4/8 concurrent batch-256 requests straight into one engine: the

@@ -9,6 +9,12 @@ cargo test -q
 # second pass with a pinned multi-thread policy: exercises the persistent
 # worker-pool dispatch path even on single-core runners
 LCQUANT_THREADS=2 cargo test -q
+# loopback network smoke: the LCQ-RPC end-to-end suite over real TCP
+# sockets (responses bit-identical to the in-process engine, overload
+# shed paths), again under both thread policies — explicit so the serving
+# path cannot be skipped
+cargo test -q --test net
+LCQUANT_THREADS=2 cargo test -q --test net
 cargo bench --no-run
 # Documentation gate: rustdoc must build clean (missing docs on the gated
 # modules, broken intra-doc links anywhere) — warnings are errors.

@@ -3,7 +3,10 @@
 //! adaptive K=4), save the `.lcq` artifacts (paper §5's ⌈log₂K⌉ bits per
 //! weight + codebook — the compression ratio is measured on disk), load
 //! them back through the model [`Registry`], and push concurrent traffic
-//! through the micro-batching server. Reports latency percentiles,
+//! through the micro-batching server — then serve the same registry to
+//! **network** clients over loopback TCP (the LCQ-RPC plane), checking
+//! that a wire round-trip returns bit-identical logits and driving a
+//! multi-connection load-generation pass. Reports latency percentiles,
 //! throughput, on-disk compression ratios, and agreement of the LUT engine
 //! with the native dense forward.
 //!
@@ -154,7 +157,40 @@ fn main() -> Result<()> {
         stats.batches,
     );
 
-    // 5. Optional PJRT backend: the same assignments through the AOT
+    // 5. The same registry over loopback TCP: the LCQ-RPC network plane.
+    //    A wire round-trip must return logits bit-identical to the
+    //    in-process engine (the protocol ships f32 bit patterns verbatim
+    //    and the server feeds decoded rows to the engine in place).
+    use lcquant::net::{loadgen, LoadGenConfig, NetClient, NetConfig, NetServer};
+    let net_server = NetServer::start(
+        Arc::clone(&registry),
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            pipeline_depth: 2,
+        },
+        NetConfig { bind_addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+    )?;
+    let addr = net_server.local_addr().to_string();
+    let mut tcp_client = NetClient::connect(&addr).map_err(|e| anyhow!("{e}"))?;
+    let row = x.row(0).to_vec();
+    let via_tcp = tcp_client.infer(&names[0], &row).map_err(|e| anyhow!("{e}"))?;
+    let mut one = Mat::zeros(1, 784);
+    one.row_mut(0).copy_from_slice(&row);
+    let direct = registry.get(&names[0]).unwrap().engine.forward(&one);
+    if via_tcp != direct.row(0).to_vec() {
+        return Err(anyhow!("TCP logits differ from the in-process engine"));
+    }
+    println!("TCP round-trip on {addr}: logits bit-identical to the in-process engine");
+    let mut lg = LoadGenConfig::new(&addr);
+    lg.connections = 4;
+    lg.requests_per_conn = 32;
+    let report = loadgen::run(&lg)?;
+    println!("loadgen: {}", report.summary());
+    let mut net_server = net_server;
+    net_server.stop();
+
+    // 6. Optional PJRT backend: the same assignments through the AOT
     //    Pallas codebook-matmul artifact.
     #[cfg(feature = "pjrt")]
     pjrt_cross_check(&backend, &lc_results, &spec)?;

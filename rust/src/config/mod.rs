@@ -20,7 +20,44 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub lc: LcConfig,
     pub serve: ServeSettings,
+    pub net_serve: NetSettings,
     pub seed: u64,
+}
+
+/// Network serving knobs (`"net"` object inside the `"serve"` section —
+/// the top-level `"net"` key already names the MLP architecture): where
+/// the LCQ-RPC listener binds and how much concurrency it admits before
+/// shedding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetSettings {
+    /// Listen address (`host:port`; port 0 = ephemeral).
+    pub bind_addr: String,
+    /// Concurrent connections served (one handler thread each).
+    pub max_connections: usize,
+    /// In-flight request budget, in rows; excess is shed with an
+    /// `Overloaded` error frame.
+    pub inflight_budget: usize,
+}
+
+impl Default for NetSettings {
+    fn default() -> NetSettings {
+        NetSettings {
+            bind_addr: "127.0.0.1:7070".into(),
+            max_connections: 64,
+            inflight_budget: 256,
+        }
+    }
+}
+
+impl NetSettings {
+    pub fn to_net_config(&self) -> crate::net::NetConfig {
+        crate::net::NetConfig {
+            bind_addr: self.bind_addr.clone(),
+            max_connections: self.max_connections,
+            inflight_budget: self.inflight_budget,
+            max_frame_bytes: crate::net::proto::DEFAULT_MAX_FRAME,
+        }
+    }
 }
 
 /// Micro-batching and pipelining knobs for the serving subsystem
@@ -79,6 +116,7 @@ impl Default for RunConfig {
             train: TrainConfig { ref_steps: 800, batch: 128, lr0: 0.1, lr_decay: 0.99, momentum: 0.95 },
             lc: LcConfig::default(),
             serve: ServeSettings::default(),
+            net_serve: NetSettings::default(),
             seed: 42,
         }
     }
@@ -215,6 +253,17 @@ impl RunConfig {
             None => d.serve.clone(),
         };
 
+        let net_serve = match j.get("serve").and_then(|s| s.get("net")) {
+            Some(n) => NetSettings {
+                bind_addr: get_s(n, "bind_addr", &d.net_serve.bind_addr).to_string(),
+                max_connections: get_u(n, "max_connections", d.net_serve.max_connections)
+                    .max(1),
+                inflight_budget: get_u(n, "inflight_budget", d.net_serve.inflight_budget)
+                    .max(1),
+            },
+            None => d.net_serve.clone(),
+        };
+
         Ok(RunConfig {
             name: get_s(&j, "name", &d.name).to_string(),
             net,
@@ -222,6 +271,7 @@ impl RunConfig {
             train,
             lc,
             serve,
+            net_serve,
             seed: get_u(&j, "seed", d.seed as usize) as u64,
         })
     }
@@ -301,6 +351,37 @@ mod tests {
         assert_eq!(d.serve.pipeline_depth, 2);
         let z = RunConfig::from_json(r#"{"serve": {"pipeline_depth": 0}}"#).unwrap();
         assert_eq!(z.serve.pipeline_depth, 1);
+    }
+
+    #[test]
+    fn net_section_parses() {
+        // the network knobs nest under "serve" (top-level "net" is the
+        // MLP architecture) and coexist with the batching knobs
+        let c = RunConfig::from_json(
+            r#"{"net": {"sizes": [4, 2]},
+                "serve": {"max_batch": 8,
+                          "net": {"bind_addr": "0.0.0.0:9000", "max_connections": 16,
+                                  "inflight_budget": 32}}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.net.sizes, vec![4, 2]);
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.net_serve.bind_addr, "0.0.0.0:9000");
+        assert_eq!(c.net_serve.max_connections, 16);
+        assert_eq!(c.net_serve.inflight_budget, 32);
+        let nc = c.net_serve.to_net_config();
+        assert_eq!(nc.bind_addr, "0.0.0.0:9000");
+        assert_eq!(nc.max_connections, 16);
+        assert_eq!(nc.inflight_budget, 32);
+        // omitted -> defaults; zero knobs clamp to 1
+        let d = RunConfig::from_json("{}").unwrap();
+        assert_eq!(d.net_serve, NetSettings::default());
+        let z = RunConfig::from_json(
+            r#"{"serve": {"net": {"max_connections": 0, "inflight_budget": 0}}}"#,
+        )
+        .unwrap();
+        assert_eq!(z.net_serve.max_connections, 1);
+        assert_eq!(z.net_serve.inflight_budget, 1);
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //!   the **serving subsystem** ([`serve`]: packed `.lcq` model artifacts
 //!   at ⌈log₂K⌉ bits/weight, a LUT inference engine that never expands
 //!   dense weights, a micro-batching server and a multi-model registry),
+//!   the **network plane** ([`net`]: the LCQ-RPC framed wire protocol
+//!   over TCP, a connection plane with bounded in-flight budgets and
+//!   explicit overload shedding, a blocking client library and a load
+//!   generator — see `docs/wire-protocol.md`),
 //!   and every substrate they need ([`linalg`], [`nn`], [`data`],
 //!   [`util`], [`config`], [`metrics`]).
 //! * **L2** — a JAX training graph (`python/compile/model.py`), lowered once
@@ -131,6 +135,7 @@ pub mod data;
 pub mod experiments;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod nn;
 pub mod quant;
 pub mod report;

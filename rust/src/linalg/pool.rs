@@ -29,7 +29,10 @@
 //!   uneven bands load-balance and stale claims on a recycled slot are
 //!   impossible.
 //! * **Multi-task** — up to [`TASK_SLOTS`] tasks are live at once. Workers
-//!   scan the ring and take parts from any live task; completion is
+//!   scan the ring starting from a **claim hint** (the last-published slot
+//!   index, advisory) so a wake-up probes the fresh task first instead of
+//!   sweeping from slot 0 every time, and take parts from any live task;
+//!   completion is
 //!   **per-task** (a mutex+condvar pair per slot — a futex per slot on
 //!   Linux) rather than a pool-wide epoch barrier, so one long task never
 //!   gates another task's completion. Every dispatcher participates in its
@@ -194,6 +197,12 @@ struct Shared {
     /// Workers wait here for new live tasks.
     work_cv: Condvar,
     slots: [Slot; TASK_SLOTS],
+    /// Claim hint: the most recently published slot index. Workers start
+    /// their ring scan here instead of always from slot 0, so a wake-up
+    /// finds the fresh task on its first probe instead of sweeping over
+    /// however many stale/busy slots precede it. Purely advisory (Relaxed;
+    /// a stale hint only costs scan steps, never correctness).
+    hint: AtomicUsize,
 }
 
 /// Run parts of one task until its claim counter is exhausted, catching
@@ -226,14 +235,18 @@ fn worker_loop(shared: Arc<Shared>) {
                     return;
                 }
                 let mut hit = None;
-                for (i, task) in ctrl.tasks.iter().enumerate() {
-                    if let Some(task) = task {
+                // start the ring sweep at the last-published slot (claim
+                // hint) so a fresh wake probes the new task first
+                let start = shared.hint.load(Ordering::Relaxed) % TASK_SLOTS;
+                for off in 0..TASK_SLOTS {
+                    let i = (start + off) % TASK_SLOTS;
+                    if let Some(task) = ctrl.tasks[i] {
                         let tag = ctrl.gens[i] as u32;
                         let cur = shared.slots[i].claim.load(Ordering::Relaxed);
                         if (cur >> 32) as u32 == tag
                             && ((cur & 0xffff_ffff) as usize) < task.parts
                         {
-                            hit = Some((i, *task, ctrl.gens[i]));
+                            hit = Some((i, task, ctrl.gens[i]));
                             break;
                         }
                     }
@@ -273,6 +286,7 @@ impl Pool {
             }),
             work_cv: Condvar::new(),
             slots: std::array::from_fn(|_| Slot::new()),
+            hint: AtomicUsize::new(0),
         });
         let n_workers = threads - 1;
         for i in 0..n_workers {
@@ -335,6 +349,7 @@ impl Pool {
             slot.panicked.store(false, Ordering::Relaxed);
             slot.claim.store((gen as u32 as u64) << 32, Ordering::Release);
             ctrl.tasks[i] = Some(task);
+            self.shared.hint.store(i, Ordering::Relaxed);
             self.shared.work_cv.notify_all();
             (i, gen)
         };

@@ -10,8 +10,9 @@
 //!
 //! Two invariants keep the golden tests meaningful:
 //!
-//! * **Element-wise kernels** (`axpy`, `nesterov_step`,
-//!   `nesterov_step_penalized`, the λ half of `update_multipliers_fused`)
+//! * **Element-wise kernels** (`axpy`, `sub_into`, `shift_by_multipliers`,
+//!   `nesterov_step`, `nesterov_step_penalized`, the λ half of
+//!   `update_multipliers_fused`)
 //!   perform the *same per-element operation sequence* as their scalar
 //!   references — no FMA contraction, no reassociation — so they are
 //!   **bit-for-bit identical** to the scalar forms (and to the pre-SIMD
@@ -149,6 +150,26 @@ pub mod scalar {
             let gi = g[i] + mu * (w[i] - wc[i]) - lambda[i];
             v[i] = m * v[i] - lr * gi;
             w[i] += m * v[i] - lr * gi;
+        }
+    }
+
+    /// Reference `out = x - y`.
+    pub fn sub_into(x: &[f32], y: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        debug_assert_eq!(x.len(), out.len());
+        for i in 0..x.len() {
+            out[i] = x[i] - y[i];
+        }
+    }
+
+    /// Reference `out[i] = w[i] - lambda[i] * (1/mu)` (the reciprocal is
+    /// computed once, exactly as in the chunked form).
+    pub fn shift_by_multipliers(w: &[f32], lambda: &[f32], mu: f32, out: &mut [f32]) {
+        debug_assert_eq!(w.len(), lambda.len());
+        debug_assert_eq!(w.len(), out.len());
+        let inv_mu = 1.0 / mu;
+        for i in 0..w.len() {
+            out[i] = w[i] - lambda[i] * inv_mu;
         }
     }
 
@@ -387,25 +408,43 @@ pub fn sub(x: &[f32], y: &[f32]) -> Vec<f32> {
     x.iter().zip(y).map(|(a, b)| a - b).collect()
 }
 
-/// z = x - y, written into `out` (non-allocating hot-path form).
+/// z = x - y, written into `out` (non-allocating hot-path form) — 8-lane
+/// chunked, per-element ops identical to [`scalar::sub_into`].
 #[inline]
 pub fn sub_into(x: &[f32], y: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     debug_assert_eq!(x.len(), out.len());
-    for i in 0..x.len() {
-        out[i] = x[i] - y[i];
+    let main = x.len() - x.len() % LANES;
+    let (om, ot) = out.split_at_mut(main);
+    for ((oc, xc), yc) in om
+        .chunks_exact_mut(LANES)
+        .zip(x[..main].chunks_exact(LANES))
+        .zip(y[..main].chunks_exact(LANES))
+    {
+        st(oc, vsub(ld(xc), ld(yc)));
     }
+    scalar::sub_into(&x[main..], &y[main..], ot);
 }
 
-/// out[i] = w[i] - lambda[i] / mu — the shifted weights the C step quantizes.
+/// out[i] = w[i] - lambda[i] / mu — the shifted weights the C step
+/// quantizes. 8-lane chunked; the reciprocal is computed once and the
+/// per-element ops are identical to [`scalar::shift_by_multipliers`].
 #[inline]
 pub fn shift_by_multipliers(w: &[f32], lambda: &[f32], mu: f32, out: &mut [f32]) {
     debug_assert_eq!(w.len(), lambda.len());
     debug_assert_eq!(w.len(), out.len());
     let inv_mu = 1.0 / mu;
-    for i in 0..w.len() {
-        out[i] = w[i] - lambda[i] * inv_mu;
+    let main = w.len() - w.len() % LANES;
+    let inv8 = splat(inv_mu);
+    let (om, ot) = out.split_at_mut(main);
+    for ((oc, wc), lc) in om
+        .chunks_exact_mut(LANES)
+        .zip(w[..main].chunks_exact(LANES))
+        .zip(lambda[..main].chunks_exact(LANES))
+    {
+        st(oc, vsub(ld(wc), vmul(ld(lc), inv8)));
     }
+    scalar::shift_by_multipliers(&w[main..], &lambda[main..], mu, ot);
 }
 
 /// lambda[i] -= mu * (w[i] - wc[i]) — the augmented-Lagrangian multiplier
@@ -796,6 +835,28 @@ mod tests {
             scalar::nesterov_step_penalized(&mut wb, &gr, &mut vb, &wc, &lam, mu, lr, m);
             assert_eq!(wa, wb);
             assert_eq!(va, vb);
+        });
+    }
+
+    #[test]
+    fn simd_sub_and_shift_bitwise_match_scalar() {
+        check("sub/shift simd==scalar", 60, |g| {
+            let n = parity_lens(g);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let y: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let mut oa = vec![0.0f32; n];
+            sub_into(&x, &y, &mut oa);
+            let mut ob = vec![0.0f32; n];
+            scalar::sub_into(&x, &y, &mut ob);
+            assert_eq!(oa, ob);
+
+            let lam: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let mu = g.f32_in(0.01, 5.0);
+            let mut sa = vec![0.0f32; n];
+            shift_by_multipliers(&x, &lam, mu, &mut sa);
+            let mut sb = vec![0.0f32; n];
+            scalar::shift_by_multipliers(&x, &lam, mu, &mut sb);
+            assert_eq!(sa, sb);
         });
     }
 

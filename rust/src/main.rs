@@ -5,6 +5,9 @@
 //! lcquant run --config configs/lenet300_k2.json [--out results]
 //! lcquant pack --config configs/lenet300_k2.json [--out models]
 //! lcquant serve-smoke --models models [--requests N] [--clients N] [--depth N] [--config FILE]
+//! lcquant serve-net --models models [--addr HOST:PORT] [--depth N] [--config FILE]
+//!                   [--smoke-requests N [--connections N] [--model NAME]]
+//! lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
 //! lcquant pjrt-smoke [--artifacts artifacts]
 //! lcquant list
 //! ```
@@ -27,6 +30,9 @@ fn usage() -> ! {
   lcquant run --config FILE [--out DIR]
   lcquant pack --config FILE [--out DIR]
   lcquant serve-smoke --models DIR [--requests N] [--clients N] [--depth N] [--config FILE]
+  lcquant serve-net --models DIR [--addr HOST:PORT] [--depth N] [--config FILE]
+                    [--smoke-requests N [--connections N] [--model NAME]]
+  lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
   lcquant pjrt-smoke [--artifacts DIR]
   lcquant list",
         experiments::ALL
@@ -220,6 +226,99 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve a directory of packed models over LCQ-RPC (framed TCP). With
+/// `--smoke-requests N` the command also drives its own loopback load
+/// generator and exits (a self-contained pack → serve → round-trip demo);
+/// without it, the server runs until the process is killed.
+fn cmd_serve_net(args: &Args) -> Result<()> {
+    use lcquant::net::{loadgen, LoadGenConfig, NetServer};
+    use lcquant::serve::Registry;
+    use std::sync::Arc;
+    let dir = std::path::PathBuf::from(
+        args.get("models").ok_or_else(|| anyhow!("serve-net requires --models DIR"))?,
+    );
+    let (mut serve_cfg, mut net_cfg) = match args.get("config") {
+        Some(path) => {
+            let c = RunConfig::from_file(path)?;
+            (c.serve, c.net_serve)
+        }
+        None => (
+            lcquant::config::ServeSettings::default(),
+            lcquant::config::NetSettings::default(),
+        ),
+    };
+    serve_cfg.pipeline_depth = args.get_usize("depth", serve_cfg.pipeline_depth).max(1);
+    if let Some(addr) = args.get("addr") {
+        net_cfg.bind_addr = addr.to_string();
+    }
+    let registry = Arc::new(Registry::load_dir(&dir)?);
+    let names = registry.names();
+    let server = NetServer::start(
+        Arc::clone(&registry),
+        serve_cfg.to_server_config(),
+        net_cfg.to_net_config(),
+    )?;
+    println!(
+        "serving {} model(s) {names:?} on {} (pipeline depth {}, max {} connections, \
+         in-flight budget {} rows)",
+        registry.len(),
+        server.local_addr(),
+        serve_cfg.pipeline_depth,
+        net_cfg.max_connections,
+        net_cfg.inflight_budget,
+    );
+    let smoke = args.get_usize("smoke-requests", 0);
+    if smoke == 0 {
+        // serve until killed; the handler pool does all the work
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let mut lg = LoadGenConfig::new(&server.local_addr().to_string());
+    lg.connections = args.get_usize("connections", serve_cfg.smoke_clients).max(1);
+    lg.requests_per_conn = (smoke / lg.connections).max(1);
+    lg.model = args.get("model").map(String::from);
+    let report = loadgen::run(&lg)?;
+    println!("{}", report.summary());
+    let mut server = server;
+    server.stop();
+    let b = server.batch_stats();
+    let n = server.stats();
+    println!(
+        "batch plane: {} requests over {} batches (mean batch {:.1}); \
+         net plane: {} connections, {} shed requests",
+        b.requests, b.batches, b.mean_batch, n.connections, n.requests_shed,
+    );
+    if report.failed > 0 {
+        return Err(anyhow!("{} requests failed", report.failed));
+    }
+    println!("serve-net smoke OK");
+    Ok(())
+}
+
+/// Drive a remote LCQ-RPC server with the multi-connection load generator
+/// and print latency percentiles + throughput.
+fn cmd_client_smoke(args: &Args) -> Result<()> {
+    use lcquant::net::{loadgen, LoadGenConfig};
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("client-smoke requires --addr HOST:PORT"))?;
+    let mut lg = LoadGenConfig::new(addr);
+    lg.connections = args.get_usize("connections", 4).max(1);
+    let total = args.get_usize("requests", 256).max(1);
+    lg.requests_per_conn = (total / lg.connections).max(1);
+    lg.model = args.get("model").map(String::from);
+    lg.batch = args.get_usize("batch", 1).max(1);
+    lg.seed = args.get_u64("seed", 1);
+    let report = loadgen::run(&lg)?;
+    println!("{}", report.summary());
+    if report.failed > 0 {
+        return Err(anyhow!("{} requests failed", report.failed));
+    }
+    println!("client-smoke OK");
+    Ok(())
+}
+
 #[cfg(feature = "pjrt")]
 fn pjrt_backend(
     args: &Args,
@@ -297,6 +396,8 @@ fn main() {
         "run" => cmd_run(&args),
         "pack" => cmd_pack(&args),
         "serve-smoke" => cmd_serve_smoke(&args),
+        "serve-net" => cmd_serve_net(&args),
+        "client-smoke" => cmd_client_smoke(&args),
         "pjrt-smoke" => cmd_pjrt_smoke(&args),
         "list" => {
             println!("experiments: {:?}", experiments::ALL);

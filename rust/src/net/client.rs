@@ -1,0 +1,250 @@
+//! Blocking LCQ-RPC client: connect, handshake, `infer`/`infer_batch`,
+//! transparent reconnect-on-drop.
+//!
+//! One [`NetClient`] owns one TCP connection (plus the model catalog the
+//! server sent in its hello frame) and issues one request at a time —
+//! thread-per-connection on both ends, matching the crate's no-async
+//! idiom. Fan-out belongs to callers: the load generator
+//! ([`crate::net::loadgen`]) opens one client per scoped thread.
+//!
+//! A dropped connection (server restart, idle timeout, network blip) is
+//! retried **once** per call with a fresh connection before the error
+//! surfaces. Inference is idempotent, so the retry is safe even when the
+//! failure struck after the request was sent.
+
+use crate::net::proto::{
+    self, ErrorCode, Frame, FrameReader, ModelEntry, RequestFrame, WireError,
+};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Client-side failure modes, split by where the fault lies.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport-level failure (connect/send/receive). Retried once per
+    /// call before surfacing.
+    Io(String),
+    /// The server answered with a structured error frame.
+    Remote {
+        /// The wire error code.
+        code: ErrorCode,
+        /// The server's diagnostic message.
+        message: String,
+    },
+    /// The peer violated the protocol (or an API misuse, e.g. rows that
+    /// do not divide the data length).
+    Protocol(String),
+}
+
+impl ClientError {
+    /// Whether the server shed this request/connection for overload —
+    /// the signal load generators count separately and callers may retry
+    /// with backoff.
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, ClientError::Remote { code: ErrorCode::Overloaded, .. })
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(m) => write!(f, "connection error: {m}"),
+            ClientError::Remote { code, message } => {
+                write!(f, "server error [{code}]: {message}")
+            }
+            ClientError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// One live connection: socket, frame reassembly state, and the server's
+/// model catalog.
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+    models: Vec<ModelEntry>,
+}
+
+/// Blocking LCQ-RPC client (see module docs).
+pub struct NetClient {
+    addr: String,
+    max_frame: usize,
+    next_id: u64,
+    conn: Option<Conn>,
+}
+
+impl NetClient {
+    /// Connect and complete the handshake (preamble exchange + hello).
+    /// A server shedding connections surfaces here as
+    /// [`ClientError::Remote`] with [`ErrorCode::Overloaded`].
+    pub fn connect(addr: &str) -> Result<NetClient, ClientError> {
+        let mut client = NetClient {
+            addr: addr.to_string(),
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            next_id: 1,
+            conn: None,
+        };
+        client.ensure_conn()?;
+        Ok(client)
+    }
+
+    /// The model catalog from the server's hello frame (reconnecting if
+    /// the connection was dropped).
+    pub fn models(&mut self) -> Result<Vec<ModelEntry>, ClientError> {
+        self.ensure_conn()?;
+        Ok(self.conn.as_ref().expect("connected").models.clone())
+    }
+
+    /// Infer one row: `row.len()` must match the model's input dimension
+    /// (check [`NetClient::models`]). Returns the logits row.
+    pub fn infer(&mut self, model: &str, row: &[f32]) -> Result<Vec<f32>, ClientError> {
+        self.infer_batch(model, 1, row)
+    }
+
+    /// Infer a batch: `data` holds `rows` row-major input rows. Returns
+    /// `rows * out_dim` row-major logits.
+    pub fn infer_batch(
+        &mut self,
+        model: &str,
+        rows: usize,
+        data: &[f32],
+    ) -> Result<Vec<f32>, ClientError> {
+        if rows == 0 || rows > u32::MAX as usize || data.len() % rows != 0 {
+            return Err(ClientError::Protocol(format!(
+                "rows ({rows}) must be 1..=u32::MAX and divide data length ({})",
+                data.len()
+            )));
+        }
+        let cols = (data.len() / rows) as u32;
+        // one transparent reconnect for dropped connections
+        let mut last_io: Option<ClientError> = None;
+        for _attempt in 0..2 {
+            self.ensure_conn()?;
+            match self.round_trip(model, rows as u32, cols, data) {
+                Ok(logits) => return Ok(logits),
+                Err(e @ ClientError::Io(_)) => {
+                    self.conn = None; // reconnect on the next attempt
+                    last_io = Some(e);
+                }
+                Err(e @ ClientError::Protocol(_)) => {
+                    // the stream is no longer framed (corruption, id
+                    // desync): drop it so the *next* call reconnects
+                    // cleanly, but surface this error — a protocol
+                    // violation is not transparently retryable
+                    self.conn = None;
+                    return Err(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_io.expect("loop exits early unless an Io error occurred"))
+    }
+
+    fn round_trip(
+        &mut self,
+        model: &str,
+        rows: u32,
+        cols: u32,
+        data: &[f32],
+    ) -> Result<Vec<f32>, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let conn = self.conn.as_mut().expect("connected");
+        let frame = Frame::Request(RequestFrame {
+            id,
+            model: model.to_string(),
+            rows,
+            cols,
+            data: data.to_vec(),
+        });
+        proto::write_frame(&mut conn.stream, &frame)
+            .map_err(|e| ClientError::Io(format!("send: {e}")))?;
+        loop {
+            match conn.reader.poll_frame(&mut conn.stream) {
+                Ok(None) => continue, // only if a read timeout is set
+                Ok(Some(Frame::Response(resp))) => {
+                    if resp.id != id {
+                        return Err(ClientError::Protocol(format!(
+                            "response id {} for request {id}",
+                            resp.id
+                        )));
+                    }
+                    if resp.rows != rows {
+                        return Err(ClientError::Protocol(format!(
+                            "response carries {} rows for a {rows}-row request",
+                            resp.rows
+                        )));
+                    }
+                    return Ok(resp.data);
+                }
+                Ok(Some(Frame::Error(e))) => {
+                    // id 0 marks connection-level errors (shed/shutdown)
+                    if e.id != id && e.id != 0 {
+                        return Err(ClientError::Protocol(format!(
+                            "error frame for foreign request {}",
+                            e.id
+                        )));
+                    }
+                    return Err(ClientError::Remote { code: e.code, message: e.message });
+                }
+                Ok(Some(_)) => {
+                    return Err(ClientError::Protocol(
+                        "unexpected frame while awaiting a response".to_string(),
+                    ))
+                }
+                Err(WireError::Closed) => {
+                    return Err(ClientError::Io("connection closed by server".to_string()))
+                }
+                Err(WireError::Io(e)) => return Err(ClientError::Io(e.to_string())),
+                Err(e) => return Err(ClientError::Protocol(e.to_string())),
+            }
+        }
+    }
+
+    fn ensure_conn(&mut self) -> Result<(), ClientError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut stream = TcpStream::connect(&self.addr)
+            .map_err(|e| ClientError::Io(format!("connect {}: {e}", self.addr)))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .write_all(&proto::encode_preamble())
+            .map_err(|e| ClientError::Io(format!("handshake send: {e}")))?;
+        let mut pre = [0u8; proto::PREAMBLE_LEN];
+        stream
+            .read_exact(&mut pre)
+            .map_err(|e| ClientError::Io(format!("handshake read: {e}")))?;
+        let version =
+            proto::decode_preamble(&pre).map_err(|e| ClientError::Protocol(e.to_string()))?;
+        if version != proto::VERSION {
+            return Err(ClientError::Protocol(format!(
+                "server speaks LCQ-RPC v{version}, this client v{}",
+                proto::VERSION
+            )));
+        }
+        let mut reader = FrameReader::new(self.max_frame);
+        let first = loop {
+            match reader.poll_frame(&mut stream) {
+                Ok(Some(f)) => break f,
+                Ok(None) => continue,
+                Err(WireError::Closed) => {
+                    return Err(ClientError::Io("closed during handshake".to_string()))
+                }
+                Err(WireError::Io(e)) => return Err(ClientError::Io(e.to_string())),
+                Err(e) => return Err(ClientError::Protocol(e.to_string())),
+            }
+        };
+        match first {
+            Frame::Hello(h) => {
+                self.conn = Some(Conn { stream, reader, models: h.models });
+                Ok(())
+            }
+            // connection-shed and version rejection arrive as error frames
+            Frame::Error(e) => Err(ClientError::Remote { code: e.code, message: e.message }),
+            _ => Err(ClientError::Protocol("expected hello frame".to_string())),
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Multi-connection load generator for LCQ-RPC servers: drive N blocking
+//! connections at a target, count outcomes, report latency percentiles
+//! and throughput.
+//!
+//! Connections are blocking request drivers, so they fan out on scoped
+//! threads ([`crate::linalg::pool::run_scoped`]) and leave the worker
+//! pool to the engine under test — the same discipline as the in-process
+//! smoke clients. Overload sheds ([`ErrorCode::Overloaded`]
+//! handshakes or error frames) are counted separately from hard failures:
+//! shedding is the server *working as designed* under pressure, and a
+//! sweep that never sheds never found the saturation point.
+//!
+//! [`ErrorCode::Overloaded`]: crate::net::proto::ErrorCode::Overloaded
+
+use crate::linalg::pool;
+use crate::net::client::NetClient;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use anyhow::{anyhow, Result};
+use std::sync::Mutex;
+
+/// What to drive at the server.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Target address, `host:port`.
+    pub addr: String,
+    /// Concurrent connections (one scoped thread + one [`NetClient`]
+    /// each).
+    pub connections: usize,
+    /// Requests each connection issues.
+    pub requests_per_conn: usize,
+    /// Model to request; `None` picks the first catalog entry.
+    pub model: Option<String>,
+    /// Rows per request (1 = single-image latency traffic; larger values
+    /// exercise the batch path).
+    pub batch: usize,
+    /// Seed for the per-connection input generators.
+    pub seed: u64,
+}
+
+impl LoadGenConfig {
+    /// Defaults: 4 connections × 64 single-row requests, first model.
+    pub fn new(addr: &str) -> LoadGenConfig {
+        LoadGenConfig {
+            addr: addr.to_string(),
+            connections: 4,
+            requests_per_conn: 64,
+            model: None,
+            batch: 1,
+            seed: 1,
+        }
+    }
+}
+
+/// Aggregate outcome of one load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Connections driven.
+    pub connections: usize,
+    /// Requests actually issued over live connections.
+    pub sent: usize,
+    /// Requests answered with logits.
+    pub ok: usize,
+    /// Overload sheds: shed requests, plus one event per connection the
+    /// server refused with an `Overloaded` handshake (those connections
+    /// issue no requests, so `sent` excludes their quota).
+    pub shed: usize,
+    /// Failures: failed requests, plus one event per connection that
+    /// could not be established for any non-overload reason.
+    pub failed: usize,
+    /// Wall-clock of the whole run, seconds.
+    pub elapsed_s: f64,
+    /// Median latency of successful requests, ms.
+    pub p50_ms: f32,
+    /// 90th-percentile latency, ms.
+    pub p90_ms: f32,
+    /// 99th-percentile latency, ms.
+    pub p99_ms: f32,
+    /// Worst successful-request latency, ms.
+    pub max_ms: f32,
+}
+
+impl LoadReport {
+    /// Issued requests per second over the run's wall clock.
+    pub fn req_per_s(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.sent as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests over {} conns in {:.2}s ({:.0} req/s): {} ok, {} shed, {} failed; \
+             p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms max {:.2}ms",
+            self.sent,
+            self.connections,
+            self.elapsed_s,
+            self.req_per_s(),
+            self.ok,
+            self.shed,
+            self.failed,
+            self.p50_ms,
+            self.p90_ms,
+            self.p99_ms,
+            self.max_ms,
+        )
+    }
+}
+
+#[derive(Default)]
+struct ConnOutcome {
+    sent: usize,
+    ok: usize,
+    shed: usize,
+    failed: usize,
+    lat_ms: Vec<f32>,
+}
+
+/// Run one load generation pass against a live server.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
+    // resolve the target model (and its input dimension) from the
+    // server's own catalog, via a probe connection
+    let mut probe =
+        NetClient::connect(&cfg.addr).map_err(|e| anyhow!("loadgen connect {}: {e}", cfg.addr))?;
+    let catalog = probe.models().map_err(|e| anyhow!("loadgen handshake: {e}"))?;
+    let entry = match &cfg.model {
+        Some(name) => catalog
+            .iter()
+            .find(|m| &m.name == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = catalog.iter().map(|m| m.name.as_str()).collect();
+                anyhow!("model '{name}' not served (catalog: {names:?})")
+            })?
+            .clone(),
+        None => catalog
+            .first()
+            .ok_or_else(|| anyhow!("server serves no models"))?
+            .clone(),
+    };
+    drop(probe);
+
+    let connections = cfg.connections.max(1);
+    let per_conn = cfg.requests_per_conn.max(1);
+    let batch = cfg.batch.max(1);
+    let in_dim = entry.in_dim as usize;
+    let outcomes: Mutex<Vec<ConnOutcome>> = Mutex::new(Vec::with_capacity(connections));
+    let t = Timer::start();
+    // blocking drivers → scoped threads, never pool task slots
+    pool::run_scoped(connections, |c| {
+        let mut o = ConnOutcome { lat_ms: Vec::with_capacity(per_conn), ..Default::default() };
+        let mut rng = Rng::new(cfg.seed ^ 0xC0DE ^ ((c as u64) * 0x9E37_79B9));
+        let mut input = vec![0.0f32; in_dim * batch];
+        match NetClient::connect(&cfg.addr) {
+            Ok(mut client) => {
+                for _ in 0..per_conn {
+                    rng.fill_normal(&mut input, 0.0, 1.0);
+                    let rt = Timer::start();
+                    let result = if batch == 1 {
+                        client.infer(&entry.name, &input)
+                    } else {
+                        client.infer_batch(&entry.name, batch, &input)
+                    };
+                    o.sent += 1;
+                    match result {
+                        Ok(_) => {
+                            o.ok += 1;
+                            o.lat_ms.push(rt.elapsed_ms() as f32);
+                        }
+                        Err(e) if e.is_overloaded() => o.shed += 1,
+                        Err(_) => o.failed += 1,
+                    }
+                }
+            }
+            Err(e) => {
+                // the connection never came up, so its quota was never
+                // issued: `sent` stays 0 (keeping req/s honest — these
+                // cost ~0 wall-clock) and the refusal is counted as ONE
+                // connection-level event, shed when the server refused
+                // it by design (Overloaded handshake), failed otherwise
+                if e.is_overloaded() {
+                    o.shed = 1;
+                } else {
+                    o.failed = 1;
+                }
+            }
+        }
+        outcomes.lock().unwrap().push(o);
+    });
+    let elapsed_s = t.elapsed_s();
+
+    let outcomes = outcomes.into_inner().unwrap();
+    let mut lat: Vec<f32> = Vec::new();
+    let (mut sent, mut ok, mut shed, mut failed) = (0, 0, 0, 0);
+    for o in outcomes {
+        sent += o.sent;
+        ok += o.ok;
+        shed += o.shed;
+        failed += o.failed;
+        lat.extend_from_slice(&o.lat_ms);
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(LoadReport {
+        connections,
+        sent,
+        ok,
+        shed,
+        failed,
+        elapsed_s,
+        p50_ms: crate::metrics::percentile_sorted(&lat, 50.0),
+        p90_ms: crate::metrics::percentile_sorted(&lat, 90.0),
+        p99_ms: crate::metrics::percentile_sorted(&lat, 99.0),
+        max_ms: lat.last().copied().unwrap_or(0.0),
+    })
+}

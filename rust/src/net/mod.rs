@@ -1,0 +1,58 @@
+//! L4 network plane: serve the packed models to **remote** clients over
+//! framed TCP (LCQ-RPC).
+//!
+//! PRs 1–4 built the deployable artifact (`.lcq`), the LUT engine and the
+//! pipelined in-process [`MicroBatchServer`] — but its only clients were
+//! threads in the same process. This module is the step that turns the
+//! serve stack into a *system*: a versioned wire protocol, a connection
+//! plane with explicit overload shedding, a client library, and a load
+//! generator.
+//!
+//! * [`proto`] — the LCQ-RPC wire format: magic/version preamble, then
+//!   length-prefixed frames with an FNV-1a 64 checksum (the same
+//!   corruption discipline as the `.lcq` file format). Requests carry a
+//!   model id + row-major f32 input; responses carry logits or a
+//!   structured [`ErrorCode`]. Byte-level spec: `docs/wire-protocol.md`.
+//! * [`server`] — [`NetServer`]: a `std::net::TcpListener` acceptor, a
+//!   fixed pool of blocking connection handlers on scoped threads (never
+//!   the compute pool), a bounded in-flight row budget that shed-replies
+//!   instead of queueing unboundedly, and decoded request rows submitted
+//!   to the micro-batcher **in place** — over the wire, a request's
+//!   floats are copied exactly once (socket → frame buffer), then the
+//!   engine gathers from that buffer.
+//! * [`client`] — [`NetClient`]: blocking connect/infer/infer_batch with
+//!   the server's model catalog from the hello frame and transparent
+//!   reconnect-on-drop.
+//! * [`loadgen`] — multi-connection load generator reporting p50/p90/p99
+//!   latency, throughput, and shed counts (`bench_serve` uses it for the
+//!   loopback TCP sweep → `BENCH_net.json`).
+//!
+//! ```no_run
+//! use lcquant::net::{LoadGenConfig, NetClient, NetConfig, NetServer};
+//! use lcquant::serve::{Registry, ServerConfig};
+//! use std::sync::Arc;
+//! # fn demo() -> anyhow::Result<()> {
+//! let registry = Arc::new(Registry::load_dir(std::path::Path::new("models"))?);
+//! let server =
+//!     NetServer::start(registry, ServerConfig::default(), NetConfig::default())?;
+//! let addr = server.local_addr().to_string();
+//! // elsewhere (another process / machine):
+//! let mut client = NetClient::connect(&addr).map_err(|e| anyhow::anyhow!("{e}"))?;
+//! let logits = client.infer("lenet300-k2", &[0.0; 784]);
+//! # let _ = logits;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`MicroBatchServer`]: crate::serve::MicroBatchServer
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::{ClientError, NetClient};
+pub use loadgen::{LoadGenConfig, LoadReport};
+pub use proto::{ErrorCode, Frame, WireError};
+pub use server::{NetConfig, NetServer, NetStatsSnapshot};

@@ -1,0 +1,785 @@
+//! LCQ-RPC wire protocol, version 1: length-prefixed, checksummed binary
+//! frames over a byte stream.
+//!
+//! The framing mirrors the `.lcq` file discipline (`docs/lcq-format.md`):
+//! little-endian integers, strings as `u32 length + UTF-8 bytes`, and an
+//! FNV-1a 64 checksum so corruption and truncation fail loudly on the
+//! reading side. The full byte-level specification for third-party
+//! implementors lives in `docs/wire-protocol.md`; the round-trip and
+//! rejection tests below pin this module to that document.
+//!
+//! ```text
+//! connection:  client preamble | server preamble | Hello frame | frames…
+//! preamble:    magic "LCQR" | version u32
+//! frame:       payload_len u32 | payload | fnv1a-64(payload) u64
+//! payload:     tag u8 | tag-specific fields    (Request/Response/Error/Hello)
+//! ```
+//!
+//! Decoding never panics on hostile input: every length is bounds-checked
+//! before any allocation ([`FrameReader`] rejects oversized frames from
+//! the 4-byte prefix alone), every integer cross-checked before size
+//! arithmetic, and failures come back as typed [`WireError`]s so the
+//! connection plane can answer with the right [`ErrorCode`].
+
+use crate::serve::format::fnv1a;
+use std::io::{ErrorKind, Read, Write};
+
+/// Protocol magic, first on the wire in both directions (`"LCQR"`).
+pub const MAGIC: &[u8; 4] = b"LCQR";
+
+/// Protocol version spoken by this implementation.
+pub const VERSION: u32 = 1;
+
+/// Preamble length: magic + version.
+pub const PREAMBLE_LEN: usize = 8;
+
+/// Default cap on a frame's payload size (16 MiB — a 2 M-float batch,
+/// far above any sane request). Both sides reject larger frames before
+/// allocating.
+pub const DEFAULT_MAX_FRAME: usize = 16 << 20;
+
+/// Structured error codes carried by [`ErrorFrame`]s — the wire contract
+/// for "what went wrong", so clients can react without parsing messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// The requested model id is not in the server's registry.
+    UnknownModel = 1,
+    /// Request columns do not match the model's input dimension.
+    WrongDims = 2,
+    /// The server shed the request (in-flight budget or connection limit
+    /// exhausted) — the backpressure signal; retry later or elsewhere.
+    Overloaded = 3,
+    /// The frame failed to decode (bad checksum, bad lengths, unknown
+    /// tag). The server closes the connection after sending this.
+    Malformed = 4,
+    /// The request was valid but execution failed server-side.
+    Internal = 5,
+    /// The peer speaks an incompatible protocol version.
+    UnsupportedVersion = 6,
+    /// The server is shutting down; no further requests will be answered.
+    ShuttingDown = 7,
+}
+
+impl ErrorCode {
+    /// Wire tag of this code.
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire tag; `None` for tags this version does not know.
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::UnknownModel,
+            2 => ErrorCode::WrongDims,
+            3 => ErrorCode::Overloaded,
+            4 => ErrorCode::Malformed,
+            5 => ErrorCode::Internal,
+            6 => ErrorCode::UnsupportedVersion,
+            7 => ErrorCode::ShuttingDown,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ErrorCode::UnknownModel => "unknown model",
+            ErrorCode::WrongDims => "wrong dimensions",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Malformed => "malformed frame",
+            ErrorCode::Internal => "internal error",
+            ErrorCode::UnsupportedVersion => "unsupported version",
+            ErrorCode::ShuttingDown => "shutting down",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Inference request: `rows × cols` row-major f32 input for one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestFrame {
+    /// Client-chosen id, echoed verbatim in the response.
+    pub id: u64,
+    /// Registry model name (the wire model id).
+    pub model: String,
+    /// Batch rows (≥ 1; enforced at decode).
+    pub rows: u32,
+    /// Features per row; must match the model's input dimension.
+    pub cols: u32,
+    /// Row-major input, `rows * cols` values.
+    pub data: Vec<f32>,
+}
+
+/// Successful inference response: `rows × cols` row-major f32 logits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResponseFrame {
+    /// Echo of the request id.
+    pub id: u64,
+    /// Batch rows (equals the request's).
+    pub rows: u32,
+    /// Logits per row (the model's output dimension).
+    pub cols: u32,
+    /// Row-major logits, `rows * cols` values.
+    pub data: Vec<f32>,
+}
+
+/// Structured failure response. `id == 0` marks connection-level errors
+/// not tied to a particular request (handshake rejection, shutdown).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorFrame {
+    /// Echo of the request id, or 0 for connection-level errors.
+    pub id: u64,
+    /// What went wrong, as a wire enum.
+    pub code: ErrorCode,
+    /// Human-readable detail (diagnostic only; never parse it).
+    pub message: String,
+}
+
+/// One model catalog entry in the server's [`HelloFrame`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelEntry {
+    /// Registry model name (the wire model id).
+    pub name: String,
+    /// Features per request row.
+    pub in_dim: u32,
+    /// Logits per request row.
+    pub out_dim: u32,
+}
+
+/// The server's first frame after the preamble: the model catalog, so
+/// clients can pick a model and validate arity before sending data.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HelloFrame {
+    /// Every served model, sorted by name.
+    pub models: Vec<ModelEntry>,
+}
+
+/// Any LCQ-RPC frame (the payload tag selects the variant).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Tag 1: inference request (client → server).
+    Request(RequestFrame),
+    /// Tag 2: inference response (server → client).
+    Response(ResponseFrame),
+    /// Tag 3: structured error (server → client).
+    Error(ErrorFrame),
+    /// Tag 4: model catalog (server → client, once, after the preamble).
+    Hello(HelloFrame),
+}
+
+/// Everything that can go wrong reading or decoding the wire.
+#[derive(Debug)]
+pub enum WireError {
+    /// Transport failure (other than the timeouts [`FrameReader`] absorbs).
+    Io(std::io::Error),
+    /// The preamble does not start with [`MAGIC`] — not our protocol.
+    BadMagic([u8; 4]),
+    /// A frame announced a payload larger than the reader's cap.
+    Oversized {
+        /// Announced payload length.
+        len: usize,
+        /// The reader's configured cap.
+        max: usize,
+    },
+    /// Frame checksum mismatch — bytes were corrupted in flight.
+    Checksum {
+        /// Checksum carried by the frame.
+        stored: u64,
+        /// Checksum computed over the received payload.
+        computed: u64,
+    },
+    /// The payload violates the spec (bad lengths, unknown tag, non-UTF-8
+    /// string, truncated fields, trailing bytes…).
+    Malformed(String),
+    /// The peer closed the connection at a frame boundary.
+    Closed,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad magic {m:02x?} (not LCQ-RPC)"),
+            WireError::Oversized { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds cap {max}")
+            }
+            WireError::Checksum { stored, computed } => write!(
+                f,
+                "frame checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            WireError::Closed => write!(f, "connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+fn malformed(msg: impl Into<String>) -> WireError {
+    WireError::Malformed(msg.into())
+}
+
+// ---- preamble ---------------------------------------------------------
+
+/// The 8-byte preamble each side sends first: magic + version.
+pub fn encode_preamble() -> [u8; PREAMBLE_LEN] {
+    let mut out = [0u8; PREAMBLE_LEN];
+    out[..4].copy_from_slice(MAGIC);
+    out[4..].copy_from_slice(&VERSION.to_le_bytes());
+    out
+}
+
+/// Validate the magic and return the peer's version (callers decide
+/// whether a different version is acceptable — v1 servers reply with
+/// [`ErrorCode::UnsupportedVersion`] and close).
+pub fn decode_preamble(bytes: &[u8; PREAMBLE_LEN]) -> Result<u32, WireError> {
+    if &bytes[..4] != MAGIC {
+        return Err(WireError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
+    }
+    Ok(u32::from_le_bytes(bytes[4..8].try_into().unwrap()))
+}
+
+// ---- little-endian payload codec --------------------------------------
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(malformed(format!(
+                "wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|e| malformed(format!("bad utf8 string: {e}")))
+    }
+    /// Read exactly `n` f32 values. The byte count is overflow-checked:
+    /// a hostile `rows × cols` that survives the product check can still
+    /// overflow `× 4`, and the contract is Err, never panic/wrap.
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let nbytes = n
+            .checked_mul(4)
+            .ok_or_else(|| malformed("f32 payload size overflows"))?;
+        let bytes = self.take(nbytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(malformed(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    buf.reserve(vs.len() * 4);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Validate a `rows × cols` shape against an f32 payload that is supposed
+/// to fill the rest of the frame.
+fn checked_count(rows: u32, cols: u32) -> Result<usize, WireError> {
+    if rows == 0 {
+        return Err(malformed("empty batch (rows = 0)"));
+    }
+    (rows as usize)
+        .checked_mul(cols as usize)
+        .ok_or_else(|| malformed("rows * cols overflows"))
+}
+
+impl Frame {
+    /// Encode this frame's payload (tag byte + fields; no envelope).
+    pub fn payload(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Frame::Request(r) => {
+                buf.push(1);
+                put_u64(&mut buf, r.id);
+                put_str(&mut buf, &r.model);
+                put_u32(&mut buf, r.rows);
+                put_u32(&mut buf, r.cols);
+                put_f32s(&mut buf, &r.data);
+            }
+            Frame::Response(r) => {
+                buf.push(2);
+                put_u64(&mut buf, r.id);
+                put_u32(&mut buf, r.rows);
+                put_u32(&mut buf, r.cols);
+                put_f32s(&mut buf, &r.data);
+            }
+            Frame::Error(e) => {
+                buf.push(3);
+                put_u64(&mut buf, e.id);
+                buf.push(e.code.as_u8());
+                put_str(&mut buf, &e.message);
+            }
+            Frame::Hello(h) => {
+                buf.push(4);
+                put_u32(&mut buf, h.models.len() as u32);
+                for m in &h.models {
+                    put_str(&mut buf, &m.name);
+                    put_u32(&mut buf, m.in_dim);
+                    put_u32(&mut buf, m.out_dim);
+                }
+            }
+        }
+        buf
+    }
+
+    /// Encode the full on-wire envelope: `len | payload | fnv1a(payload)`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut out = Vec::with_capacity(4 + payload.len() + 8);
+        put_u32(&mut out, payload.len() as u32);
+        let checksum = fnv1a(&payload);
+        out.extend_from_slice(&payload);
+        put_u64(&mut out, checksum);
+        out
+    }
+
+    /// Decode a payload (envelope already stripped and checksum verified
+    /// by [`FrameReader`]). Rejects unknown tags, bad shapes, non-UTF-8
+    /// strings and trailing bytes — never panics on hostile input.
+    pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+        let mut c = Cur { buf: payload, pos: 0 };
+        let frame = match c.u8()? {
+            1 => {
+                let id = c.u64()?;
+                let model = c.str()?;
+                let rows = c.u32()?;
+                let cols = c.u32()?;
+                let data = c.f32s(checked_count(rows, cols)?)?;
+                Frame::Request(RequestFrame { id, model, rows, cols, data })
+            }
+            2 => {
+                let id = c.u64()?;
+                let rows = c.u32()?;
+                let cols = c.u32()?;
+                let data = c.f32s(checked_count(rows, cols)?)?;
+                Frame::Response(ResponseFrame { id, rows, cols, data })
+            }
+            3 => {
+                let id = c.u64()?;
+                let raw = c.u8()?;
+                let code = ErrorCode::from_u8(raw)
+                    .ok_or_else(|| malformed(format!("unknown error code {raw}")))?;
+                let message = c.str()?;
+                Frame::Error(ErrorFrame { id, code, message })
+            }
+            4 => {
+                let n = c.u32()? as usize;
+                // each entry is ≥ 12 bytes; bound n before reserving
+                if n > payload.len() / 12 {
+                    return Err(malformed(format!("hello advertises {n} models")));
+                }
+                let mut models = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = c.str()?;
+                    let in_dim = c.u32()?;
+                    let out_dim = c.u32()?;
+                    models.push(ModelEntry { name, in_dim, out_dim });
+                }
+                Frame::Hello(HelloFrame { models })
+            }
+            t => return Err(malformed(format!("unknown frame tag {t}"))),
+        };
+        c.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Write one framed message to a stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.to_bytes())
+}
+
+/// Read exactly `buf.len()` bytes across potentially many `read` calls,
+/// tolerating read-timeout ticks: returns `Ok(false)` on a timeout (call
+/// again; `filled` tracks progress across calls), `Ok(true)` once full.
+/// Used for the fixed-size preamble; frames go through [`FrameReader`].
+pub fn poll_exact<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    filled: &mut usize,
+) -> Result<bool, WireError> {
+    while *filled < buf.len() {
+        match r.read(&mut buf[*filled..]) {
+            Ok(0) => return Err(WireError::Closed),
+            Ok(n) => *filled += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Ok(false)
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Incremental frame decoder that survives read timeouts.
+///
+/// Sockets on the serving side carry a read timeout so connection handlers
+/// can poll a shutdown flag — but a timeout can strike mid-frame, after
+/// some bytes arrived. `FrameReader` owns the partial state: every call to
+/// [`poll_frame`](FrameReader::poll_frame) appends whatever the stream
+/// yields and returns `Ok(None)` on a timeout tick, so no byte is ever
+/// lost and framing never desynchronizes. Oversized frames are rejected
+/// from the 4-byte length prefix, before any payload is buffered.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_frame: usize,
+}
+
+impl FrameReader {
+    /// A reader rejecting payloads larger than `max_frame` bytes.
+    pub fn new(max_frame: usize) -> FrameReader {
+        FrameReader { buf: Vec::new(), max_frame }
+    }
+
+    /// Pull bytes from `r` until a full frame is buffered, then decode it.
+    ///
+    /// * `Ok(Some(frame))` — one frame decoded (more may still be
+    ///   buffered; call again before blocking on the socket).
+    /// * `Ok(None)` — the read timed out (`WouldBlock`/`TimedOut`); call
+    ///   again, buffered partial state is kept.
+    /// * `Err(WireError::Closed)` — EOF at a frame boundary (clean close).
+    /// * other errors — protocol violation or transport failure; the
+    ///   stream is no longer framed and must be dropped.
+    pub fn poll_frame<R: Read>(&mut self, r: &mut R) -> Result<Option<Frame>, WireError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if self.buf.len() >= 4 {
+                let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+                if len > self.max_frame {
+                    return Err(WireError::Oversized { len, max: self.max_frame });
+                }
+                let total = 4 + len + 8;
+                if self.buf.len() >= total {
+                    let payload = &self.buf[4..4 + len];
+                    let stored =
+                        u64::from_le_bytes(self.buf[4 + len..total].try_into().unwrap());
+                    let computed = fnv1a(payload);
+                    if stored != computed {
+                        return Err(WireError::Checksum { stored, computed });
+                    }
+                    let frame = Frame::decode_payload(payload)?;
+                    self.buf.drain(..total);
+                    return Ok(Some(frame));
+                }
+            }
+            match r.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(if self.buf.is_empty() {
+                        WireError::Closed
+                    } else {
+                        malformed("connection closed mid-frame")
+                    })
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Ok(None)
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WireError::Io(e)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Request(RequestFrame {
+                id: 7,
+                model: "lenet300-k2".into(),
+                rows: 2,
+                cols: 3,
+                data: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 1e30, -0.125],
+            }),
+            Frame::Response(ResponseFrame {
+                id: 7,
+                rows: 2,
+                cols: 2,
+                data: vec![0.5, -0.5, 3.25, 0.0],
+            }),
+            Frame::Error(ErrorFrame {
+                id: 9,
+                code: ErrorCode::Overloaded,
+                message: "in-flight budget 256 exhausted".into(),
+            }),
+            Frame::Hello(HelloFrame {
+                models: vec![
+                    ModelEntry { name: "binary".into(), in_dim: 784, out_dim: 10 },
+                    ModelEntry { name: "k4".into(), in_dim: 784, out_dim: 10 },
+                ],
+            }),
+        ]
+    }
+
+    fn decode_bytes(bytes: &[u8]) -> Result<Frame, WireError> {
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        let mut cur = std::io::Cursor::new(bytes);
+        match reader.poll_frame(&mut cur) {
+            Ok(Some(f)) => Ok(f),
+            Ok(None) => panic!("cursor cannot time out"),
+            Err(e) => Err(e),
+        }
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        for frame in sample_frames() {
+            let back = decode_bytes(&frame.to_bytes()).unwrap();
+            assert_eq!(back, frame);
+        }
+    }
+
+    #[test]
+    fn floats_round_trip_bitwise() {
+        let specials = vec![0.0f32, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1e-42];
+        let frame = Frame::Response(ResponseFrame {
+            id: 1,
+            rows: 1,
+            cols: specials.len() as u32,
+            data: specials.clone(),
+        });
+        let Frame::Response(back) = decode_bytes(&frame.to_bytes()).unwrap() else {
+            panic!("wrong frame type");
+        };
+        for (a, b) in back.data.iter().zip(&specials) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn preamble_round_trip_and_bad_magic() {
+        let pre = encode_preamble();
+        assert_eq!(decode_preamble(&pre).unwrap(), VERSION);
+        let mut bad = pre;
+        bad[0] = b'X';
+        assert!(matches!(decode_preamble(&bad), Err(WireError::BadMagic(_))));
+        // a foreign version still decodes (the caller decides what to do)
+        let mut v9 = pre;
+        v9[4..8].copy_from_slice(&9u32.to_le_bytes());
+        assert_eq!(decode_preamble(&v9).unwrap(), 9);
+    }
+
+    #[test]
+    fn corrupted_checksum_is_rejected() {
+        for frame in sample_frames() {
+            let mut bytes = frame.to_bytes();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x20;
+            match decode_bytes(&bytes) {
+                Err(WireError::Checksum { .. }) | Err(WireError::Malformed(_)) => {}
+                // a flipped byte in the length prefix may instead announce
+                // a giant frame — also a rejection, never a panic
+                Err(WireError::Oversized { .. }) => {}
+                other => panic!("corruption not detected: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_mid_frame_is_detected() {
+        let bytes = sample_frames()[0].to_bytes();
+        for cut in [1usize, 5, bytes.len() - 1] {
+            let err = decode_bytes(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Malformed(_)),
+                "cut at {cut}: {err:?}"
+            );
+        }
+        // empty stream is a clean close, not a truncation
+        assert!(matches!(decode_bytes(&[]), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn oversized_frame_rejected_from_prefix_alone() {
+        // announce a 1 GiB payload; only the 4-byte prefix is supplied —
+        // the reader must reject before trying to buffer anything
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        let prefix = (1u32 << 30).to_le_bytes();
+        let mut cur = std::io::Cursor::new(&prefix[..]);
+        match reader.poll_frame(&mut cur) {
+            Err(WireError::Oversized { len, max }) => {
+                assert_eq!(len, 1 << 30);
+                assert_eq!(max, DEFAULT_MAX_FRAME);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_rejected_without_panic() {
+        // helper: wrap a raw payload in a valid envelope (correct checksum)
+        // so decode_payload is what rejects it
+        fn envelope(payload: &[u8]) -> Vec<u8> {
+            let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+            out.extend_from_slice(payload);
+            out.extend_from_slice(&fnv1a(payload).to_le_bytes());
+            out
+        }
+        // unknown tag
+        assert!(matches!(decode_bytes(&envelope(&[99])), Err(WireError::Malformed(_))));
+        // empty payload
+        assert!(matches!(decode_bytes(&envelope(&[])), Err(WireError::Malformed(_))));
+        // request with rows = 0
+        let mut p = vec![1u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes()); // name len
+        p.push(b'm');
+        p.extend_from_slice(&0u32.to_le_bytes()); // rows = 0
+        p.extend_from_slice(&4u32.to_le_bytes()); // cols
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // request whose data is shorter than rows*cols
+        let mut p = vec![1u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.push(b'm');
+        p.extend_from_slice(&2u32.to_le_bytes()); // rows
+        p.extend_from_slice(&3u32.to_le_bytes()); // cols -> wants 24 bytes
+        p.extend_from_slice(&[0u8; 8]); // only 2 floats
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // trailing garbage after a valid error frame
+        let mut p = sample_frames()[2].payload();
+        p.push(0xAB);
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // error frame with an unknown code
+        let mut p = vec![3u8];
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.push(200); // no such code
+        p.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // rows × cols chosen so the f32 *byte* count wraps usize even
+        // though the element count does not — must be Err, never a wrap
+        let mut p = vec![1u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.push(b'm');
+        p.extend_from_slice(&u32::MAX.to_le_bytes()); // rows
+        p.extend_from_slice(&u32::MAX.to_le_bytes()); // cols
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // non-utf8 model name
+        let mut p = vec![1u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&[0xFF, 0xFE]);
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&0.0f32.to_le_bytes());
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+    }
+
+    /// A reader that yields its bytes in dribs, interleaving WouldBlock
+    /// "timeouts" — the shape of a socket with a read timeout set.
+    struct Dribble {
+        bytes: Vec<u8>,
+        pos: usize,
+        tick: usize,
+    }
+
+    impl Read for Dribble {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            self.tick += 1;
+            if self.tick % 2 == 0 {
+                return Err(std::io::Error::new(ErrorKind::WouldBlock, "tick"));
+            }
+            if self.pos >= self.bytes.len() {
+                return Ok(0);
+            }
+            let n = buf.len().min(3).min(self.bytes.len() - self.pos);
+            buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn poll_frame_reassembles_across_timeouts_and_packets() {
+        let frames = sample_frames();
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&f.to_bytes());
+        }
+        let mut r = Dribble { bytes, pos: 0, tick: 0 };
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        let mut got = Vec::new();
+        loop {
+            match reader.poll_frame(&mut r) {
+                Ok(Some(f)) => got.push(f),
+                Ok(None) => continue, // timeout tick: partial state kept
+                Err(WireError::Closed) => break,
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(got, frames);
+    }
+
+    #[test]
+    fn poll_exact_survives_timeouts() {
+        let mut r = Dribble { bytes: encode_preamble().to_vec(), pos: 0, tick: 0 };
+        let mut buf = [0u8; PREAMBLE_LEN];
+        let mut filled = 0;
+        loop {
+            match poll_exact(&mut r, &mut buf, &mut filled) {
+                Ok(true) => break,
+                Ok(false) => continue,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert_eq!(decode_preamble(&buf).unwrap(), VERSION);
+    }
+}

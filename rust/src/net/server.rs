@@ -1,0 +1,611 @@
+//! LCQ-RPC connection plane: a TCP listener feeding the in-process
+//! micro-batch server.
+//!
+//! Layout (drawn out in `docs/ARCHITECTURE.md`):
+//!
+//! * an **acceptor** thread blocks in `accept()` and hands sockets to a
+//!   bounded connection queue; when every handler is busy and the queue is
+//!   full, the connection is **shed** at the door with an
+//!   [`ErrorCode::Overloaded`] handshake instead of being silently queued
+//!   forever;
+//! * a fixed set of `max_connections` **handler** threads (one blocking
+//!   connection each, fanned out via [`crate::linalg::pool::run_scoped`] —
+//!   real scoped threads, so parked connections never occupy the compute
+//!   pool's task slots) runs the handshake and request loop;
+//! * decoded request rows are submitted to the shared
+//!   [`MicroBatchServer`] **in place** ([`Client::submit`] hands the
+//!   frame-decoded `Vec<f32>` straight to the engine), so the wire → batch
+//!   path performs no per-request input copy;
+//! * a **bounded in-flight budget** (`NetConfig::inflight_budget`, counted
+//!   in rows) sheds excess requests with [`ErrorCode::Overloaded`] before
+//!   they touch the compute plane — explicit backpressure instead of
+//!   unbounded queueing.
+//!
+//! Handler sockets carry a short read timeout so every blocking read
+//! doubles as a shutdown poll; [`NetServer::stop`] (also run on drop)
+//! stops the acceptor, joins the handlers, then stops the batch server —
+//! in-flight requests are answered before the engine goes away.
+
+use crate::net::proto::{
+    self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, ModelEntry, RequestFrame,
+    WireError,
+};
+use crate::serve::{Client, MicroBatchServer, Registry, ServerConfig, StatsSnapshot};
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Read-timeout tick at which connection handlers re-check the shutdown
+/// flag (mirrors the micro-batcher's poll).
+const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
+
+/// Cap on any single write (handshakes, shed notices, responses): a
+/// stalled peer must not pin a handler forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Deadline for the unauthenticated pre-hello phase: a connection that
+/// has not delivered its preamble within this window is dropped. Without
+/// it, `max_connections` silent connects (`nc host port`) would pin every
+/// handler forever and shed all future traffic.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Connection-plane knobs (config file: the `"net"` object **inside the
+/// `"serve"` section** — the top-level `"net"` key names the MLP
+/// architecture; see [`crate::config::NetSettings`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    /// Listen address, `host:port`. Port 0 binds an ephemeral port
+    /// (report it with [`NetServer::local_addr`]) — the loopback tests and
+    /// benches rely on this.
+    pub bind_addr: String,
+    /// Concurrent connections served; one handler thread each. Beyond
+    /// this (plus a same-sized accept backlog), connections are shed with
+    /// [`ErrorCode::Overloaded`] at handshake time.
+    pub max_connections: usize,
+    /// In-flight request budget in **rows**: rows submitted to the batch
+    /// server but not yet answered. Requests that would exceed it are
+    /// shed with [`ErrorCode::Overloaded`] — the backpressure signal.
+    pub inflight_budget: usize,
+    /// Largest accepted frame payload, bytes (guards allocation).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            bind_addr: "127.0.0.1:7070".to_string(),
+            max_connections: 64,
+            inflight_budget: 256,
+            max_frame_bytes: proto::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// Monotonic connection-plane counters (all-time, point-in-time read).
+#[derive(Clone, Debug, Default)]
+pub struct NetStatsSnapshot {
+    /// Connections accepted by the listener.
+    pub connections: u64,
+    /// Connections shed at the door (handler pool + backlog full).
+    pub connections_shed: u64,
+    /// Requests answered with logits.
+    pub requests_ok: u64,
+    /// Requests shed by the in-flight budget.
+    pub requests_shed: u64,
+    /// Requests answered with a non-overload error.
+    pub requests_failed: u64,
+}
+
+#[derive(Default)]
+struct NetStats {
+    connections: AtomicU64,
+    connections_shed: AtomicU64,
+    requests_ok: AtomicU64,
+    requests_shed: AtomicU64,
+    requests_failed: AtomicU64,
+}
+
+impl NetStats {
+    fn snapshot(&self) -> NetStatsSnapshot {
+        NetStatsSnapshot {
+            connections: self.connections.load(Ordering::Relaxed),
+            connections_shed: self.connections_shed.load(Ordering::Relaxed),
+            requests_ok: self.requests_ok.load(Ordering::Relaxed),
+            requests_shed: self.requests_shed.load(Ordering::Relaxed),
+            requests_failed: self.requests_failed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Everything a connection handler needs, shared by `Arc`.
+struct ConnCtx {
+    registry: Arc<Registry>,
+    client: Client,
+    shutdown: AtomicBool,
+    /// Rows currently submitted to the batch server and unanswered.
+    inflight: AtomicUsize,
+    inflight_max: usize,
+    max_frame: usize,
+    stats: NetStats,
+    /// Precomputed server preamble + hello frame (catalog), written to
+    /// every accepted connection.
+    hello: Vec<u8>,
+}
+
+/// The TCP serving front end: listener + handler pool + micro-batch
+/// server, one self-contained unit (see module docs).
+pub struct NetServer {
+    ctx: Arc<ConnCtx>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    conn_plane: Option<JoinHandle<()>>,
+    batch: Option<MicroBatchServer>,
+    /// Final batch-plane snapshot, captured when [`NetServer::stop`]
+    /// retires the micro-batch server (so stats survive the stop).
+    final_batch_stats: Option<StatsSnapshot>,
+}
+
+impl NetServer {
+    /// Bind `net_cfg.bind_addr`, start the micro-batch server with
+    /// `serve_cfg`, and begin accepting LCQ-RPC connections.
+    pub fn start(
+        registry: Arc<Registry>,
+        serve_cfg: ServerConfig,
+        net_cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(&net_cfg.bind_addr)
+            .with_context(|| format!("binding {}", net_cfg.bind_addr))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        let batch = MicroBatchServer::start(Arc::clone(&registry), serve_cfg);
+        let max_conns = net_cfg.max_connections.max(1);
+        let ctx = Arc::new(ConnCtx {
+            hello: hello_bytes(&registry),
+            client: batch.client(),
+            registry,
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            inflight_max: net_cfg.inflight_budget.max(1),
+            max_frame: net_cfg.max_frame_bytes.max(1024),
+            stats: NetStats::default(),
+        });
+        // bounded hand-off from the acceptor to the handlers; its slack
+        // doubles as the accept backlog before connections are shed
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(max_conns);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let conn_plane = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("lcq-net-conns".to_string())
+                .spawn(move || handler_pool(ctx, conn_rx, max_conns))
+                .context("spawning connection plane")?
+        };
+        let acceptor = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("lcq-net-accept".to_string())
+                .spawn(move || acceptor_loop(listener, conn_tx, ctx))
+                .context("spawning acceptor")?
+        };
+        Ok(NetServer {
+            ctx,
+            local_addr,
+            acceptor: Some(acceptor),
+            conn_plane: Some(conn_plane),
+            batch: Some(batch),
+            final_batch_stats: None,
+        })
+    }
+
+    /// The bound listen address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Connection-plane counters.
+    pub fn stats(&self) -> NetStatsSnapshot {
+        self.ctx.stats.snapshot()
+    }
+
+    /// The underlying micro-batch server's latency/batching summary
+    /// (after [`NetServer::stop`], the final snapshot).
+    pub fn batch_stats(&self) -> StatsSnapshot {
+        match &self.batch {
+            Some(b) => b.stats(),
+            None => self
+                .final_batch_stats
+                .clone()
+                .expect("snapshot captured when the batch server was stopped"),
+        }
+    }
+
+    /// Stop accepting, join every handler (in-flight requests are
+    /// answered), then stop the batch server. Idempotent; also run on
+    /// drop.
+    pub fn stop(&mut self) {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        // the acceptor blocks in accept(): poke it with a throwaway
+        // connection so it observes the flag
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // the acceptor owned the connection queue's sender; handlers
+        // finish their current connection (bounded by the shutdown poll),
+        // then exit on the disconnected queue
+        if let Some(h) = self.conn_plane.take() {
+            let _ = h.join();
+        }
+        if let Some(mut b) = self.batch.take() {
+            b.stop();
+            self.final_batch_stats = Some(b.stats());
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Server preamble + hello frame, encoded once at startup.
+fn hello_bytes(registry: &Registry) -> Vec<u8> {
+    let models = registry
+        .catalog()
+        .into_iter()
+        .map(|m| ModelEntry {
+            name: m.name,
+            in_dim: m.in_dim as u32,
+            out_dim: m.out_dim as u32,
+        })
+        .collect();
+    let mut out = proto::encode_preamble().to_vec();
+    out.extend_from_slice(&Frame::Hello(HelloFrame { models }).to_bytes());
+    out
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    conn_tx: mpsc::SyncSender<TcpStream>,
+    ctx: Arc<ConnCtx>,
+) {
+    for stream in listener.incoming() {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            return; // drops conn_tx: handlers drain the backlog and exit
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // accept failures (EMFILE under fd pressure, transient
+                // network errors) can repeat instantly: back off briefly
+                // instead of busy-spinning a core exactly when the
+                // process is already overloaded
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        ctx.stats.connections.fetch_add(1, Ordering::Relaxed);
+        let _ = stream.set_nodelay(true);
+        match conn_tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(stream)) => {
+                // every handler busy and the backlog full: shed at the
+                // door with an explicit overload handshake
+                ctx.stats.connections_shed.fetch_add(1, Ordering::Relaxed);
+                shed_connection(stream, ctx.inflight_max);
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+/// Best-effort overload handshake for a connection the plane cannot take:
+/// preamble + `Overloaded` error frame, then close.
+fn shed_connection(mut stream: TcpStream, budget: usize) {
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut bytes = proto::encode_preamble().to_vec();
+    bytes.extend_from_slice(
+        &Frame::Error(ErrorFrame {
+            id: 0,
+            code: ErrorCode::Overloaded,
+            message: format!("connection limit reached (in-flight budget {budget})"),
+        })
+        .to_bytes(),
+    );
+    let _ = stream.write_all(&bytes);
+}
+
+/// `max_conns` blocking connection handlers on scoped threads. Handlers
+/// block on sockets and channel replies, so they use `run_scoped` (real
+/// threads), never the compute pool's task slots.
+fn handler_pool(
+    ctx: Arc<ConnCtx>,
+    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
+    max_conns: usize,
+) {
+    crate::linalg::pool::run_scoped(max_conns, |_| loop {
+        let next = { conn_rx.lock().unwrap().recv() };
+        match next {
+            Ok(stream) => handle_conn(stream, &ctx),
+            Err(_) => return, // acceptor gone and backlog drained
+        }
+    });
+}
+
+/// One connection, handshake to close.
+fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    let _ = stream.set_read_timeout(Some(SHUTDOWN_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    // --- handshake: read the client preamble (polling for shutdown,
+    //     bounded by HANDSHAKE_TIMEOUT so silent connects free the
+    //     handler instead of pinning it) ------------------------------
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    let mut filled = 0;
+    let handshake_start = std::time::Instant::now();
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed)
+            || handshake_start.elapsed() > HANDSHAKE_TIMEOUT
+        {
+            return;
+        }
+        match proto::poll_exact(&mut stream, &mut pre, &mut filled) {
+            Ok(true) => break,
+            Ok(false) => continue,
+            Err(_) => return,
+        }
+    }
+    match proto::decode_preamble(&pre) {
+        Ok(v) if v == proto::VERSION => {}
+        Ok(v) => {
+            // speaks LCQ-RPC but a different version: say so, then close
+            let mut bytes = proto::encode_preamble().to_vec();
+            bytes.extend_from_slice(
+                &Frame::Error(ErrorFrame {
+                    id: 0,
+                    code: ErrorCode::UnsupportedVersion,
+                    message: format!("server speaks v{}, client sent v{v}", proto::VERSION),
+                })
+                .to_bytes(),
+            );
+            let _ = stream.write_all(&bytes);
+            return;
+        }
+        Err(_) => return, // not our protocol: close without a reply
+    }
+    // --- hello: preamble + model catalog (precomputed) -----------------
+    if stream.write_all(&ctx.hello).is_err() {
+        return;
+    }
+    // --- request loop ---------------------------------------------------
+    let mut reader = FrameReader::new(ctx.max_frame);
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            let _ = proto::write_frame(
+                &mut stream,
+                &Frame::Error(ErrorFrame {
+                    id: 0,
+                    code: ErrorCode::ShuttingDown,
+                    message: "server shutting down".to_string(),
+                }),
+            );
+            return;
+        }
+        match reader.poll_frame(&mut stream) {
+            Ok(None) => continue, // read-timeout tick
+            Ok(Some(Frame::Request(req))) => {
+                if !answer_request(&mut stream, ctx, req) {
+                    return;
+                }
+            }
+            Ok(Some(_)) => {
+                // clients may only send requests
+                let _ = proto::write_frame(
+                    &mut stream,
+                    &Frame::Error(ErrorFrame {
+                        id: 0,
+                        code: ErrorCode::Malformed,
+                        message: "unexpected frame type from client".to_string(),
+                    }),
+                );
+                return;
+            }
+            Err(WireError::Closed) => return, // clean close
+            Err(WireError::Io(_)) => return,
+            Err(e) => {
+                // protocol violation: the stream is no longer framed —
+                // report once and close
+                let _ = proto::write_frame(
+                    &mut stream,
+                    &Frame::Error(ErrorFrame {
+                        id: 0,
+                        code: ErrorCode::Malformed,
+                        message: e.to_string(),
+                    }),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Validate, budget, submit and answer one request. Returns `false` when
+/// the connection should close (write failure).
+fn answer_request(stream: &mut TcpStream, ctx: &ConnCtx, req: RequestFrame) -> bool {
+    let id = req.id;
+    let fail = |stream: &mut TcpStream, code: ErrorCode, message: String| -> bool {
+        proto::write_frame(stream, &Frame::Error(ErrorFrame { id, code, message })).is_ok()
+    };
+    // validate against the registry *before* spending compute
+    let Some(loaded) = ctx.registry.get(&req.model) else {
+        ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+        return fail(
+            stream,
+            ErrorCode::UnknownModel,
+            format!("model '{}' not registered", req.model),
+        );
+    };
+    let in_dim = loaded.engine.in_dim();
+    let out_dim = loaded.engine.out_dim();
+    let rows = req.rows as usize;
+    if req.cols as usize != in_dim {
+        ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+        return fail(
+            stream,
+            ErrorCode::WrongDims,
+            format!("model '{}' expects {in_dim} features, got {}", req.model, req.cols),
+        );
+    }
+    // reject requests whose *response* could not be framed: without this
+    // a small-input/large-output model could make the server pay the full
+    // forward pass only to emit a frame every conforming client must
+    // reject as oversized
+    let response_bytes = rows
+        .checked_mul(out_dim)
+        .and_then(|n| n.checked_mul(4))
+        .and_then(|n| n.checked_add(64)); // envelope + header slack
+    let response_fits = matches!(response_bytes, Some(n) if n <= ctx.max_frame);
+    if !response_fits {
+        ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+        return fail(
+            stream,
+            ErrorCode::WrongDims,
+            format!(
+                "a {rows}-row response ({out_dim} logits/row) would exceed the \
+                 frame cap of {} bytes",
+                ctx.max_frame
+            ),
+        );
+    }
+    // bounded in-flight budget (counted in rows): shed, don't queue
+    if !try_acquire(&ctx.inflight, ctx.inflight_max, rows) {
+        ctx.stats.requests_shed.fetch_add(1, Ordering::Relaxed);
+        return fail(
+            stream,
+            ErrorCode::Overloaded,
+            format!(
+                "in-flight budget exhausted ({} rows in flight, budget {}, request {rows})",
+                ctx.inflight.load(Ordering::Relaxed),
+                ctx.inflight_max
+            ),
+        );
+    }
+    let outcome = submit_rows(ctx, req);
+    ctx.inflight.fetch_sub(rows, Ordering::Relaxed);
+    match outcome {
+        Ok(data) => {
+            ctx.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
+            let frame = Frame::Response(proto::ResponseFrame {
+                id,
+                rows: rows as u32,
+                cols: out_dim as u32,
+                data,
+            });
+            proto::write_frame(stream, &frame).is_ok()
+        }
+        Err((code, message)) => {
+            ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+            fail(stream, code, message)
+        }
+    }
+}
+
+/// Submit a request's rows to the batch server and collect the logits.
+///
+/// The single-row fast path moves the frame-decoded `Vec<f32>` straight
+/// into the job — the engine gathers from that buffer in place, so the
+/// socket → logits path copies input floats exactly once (the kernel read
+/// into the frame buffer). Multi-row requests split into per-row jobs
+/// (they coalesce back into one engine batch via the model group) and pay
+/// one row copy each; batch clients are the convenience path.
+///
+/// Every submission gets a **fresh** reply channel: if the batch plane
+/// ever drops a job without answering (an executor panic), the channel
+/// disconnects and `recv` errors instead of blocking this handler — and
+/// [`NetServer::stop`] — forever. The per-request channel allocation is
+/// the price of that liveness guarantee.
+fn submit_rows(
+    ctx: &ConnCtx,
+    req: RequestFrame,
+) -> std::result::Result<Vec<f32>, (ErrorCode, String)> {
+    let rows = req.rows as usize;
+    let stopping = |e: String| (ErrorCode::ShuttingDown, e);
+    let dropped = || (ErrorCode::Internal, "server dropped the request".to_string());
+    if rows == 1 {
+        let (tx, rx) = mpsc::channel();
+        ctx.client.submit(&req.model, req.data, tx).map_err(stopping)?;
+        return match rx.recv() {
+            Ok(Ok(logits)) => Ok(logits),
+            Ok(Err(msg)) => Err((ErrorCode::Internal, msg)),
+            Err(_) => Err(dropped()),
+        };
+    }
+    let cols = req.cols as usize;
+    let mut pending = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let (tx, rx) = mpsc::channel();
+        let row = req.data[r * cols..(r + 1) * cols].to_vec();
+        ctx.client.submit(&req.model, row, tx).map_err(stopping)?;
+        pending.push(rx);
+    }
+    let mut out = Vec::new();
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(logits)) => out.extend_from_slice(&logits),
+            Ok(Err(msg)) => return Err((ErrorCode::Internal, msg)),
+            Err(_) => return Err(dropped()),
+        }
+    }
+    Ok(out)
+}
+
+/// Claim `n` rows of the in-flight budget; `false` (shed) when the budget
+/// cannot cover them. A request larger than the whole budget is always
+/// shed — by construction it can never fit.
+fn try_acquire(inflight: &AtomicUsize, max: usize, n: usize) -> bool {
+    let mut cur = inflight.load(Ordering::Relaxed);
+    loop {
+        if cur + n > max {
+            return false;
+        }
+        match inflight.compare_exchange_weak(
+            cur,
+            cur + n,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return true,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_acquire_and_shed() {
+        let b = AtomicUsize::new(0);
+        assert!(try_acquire(&b, 4, 3));
+        assert!(try_acquire(&b, 4, 1));
+        assert!(!try_acquire(&b, 4, 1), "budget exhausted must shed");
+        b.fetch_sub(3, Ordering::Relaxed);
+        assert!(try_acquire(&b, 4, 2));
+        // a request larger than the whole budget can never fit
+        let b = AtomicUsize::new(0);
+        assert!(!try_acquire(&b, 4, 5));
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = NetConfig::default();
+        assert!(c.max_connections >= 1);
+        assert!(c.inflight_budget >= 1);
+        assert_eq!(c.max_frame_bytes, proto::DEFAULT_MAX_FRAME);
+    }
+}

@@ -34,6 +34,16 @@
 //! slot. Steady-state engines should reuse an [`EngineScratch`] via
 //! [`LutEngine::forward_into`] so concurrent passes also allocate nothing
 //! for activations.
+//!
+//! # Pre-staged rows
+//!
+//! Only the first layer ever reads the batch input, row by row — so the
+//! input rows never need to live in one contiguous matrix.
+//! [`LutEngine::forward_rows_into`] takes a row accessor instead of a
+//! `Mat`; the micro-batch server feeds it each request's decoded buffer in
+//! place, which removes the last per-request copy from the serve hot path
+//! (wire bytes → request `Vec<f32>` → engine, no batch-staging copy in
+//! between).
 
 use super::packed::{PackedLayer, PackedModel};
 use crate::linalg::{num_threads, pool, vecops, Mat};
@@ -196,14 +206,26 @@ impl LutLayer {
     /// pool, so concurrent layer passes of different requests interleave.
     fn forward_into(&self, x: &Mat, out: &mut Mat) {
         assert_eq!(x.cols, self.in_dim, "input dim mismatch");
-        let m = x.rows;
+        self.forward_rows_into(x.rows, &|r| x.row(r), out);
+    }
+
+    /// One layer pass over **pre-staged rows**: input row `r` is whatever
+    /// slice `row(r)` returns, so the rows need not live in one contiguous
+    /// matrix — the micro-batcher hands the engine its request buffers in
+    /// place instead of copying them into a batch `Mat` first.
+    fn forward_rows_into<'a, F>(&self, m: usize, row: &F, out: &mut Mat)
+    where
+        F: Fn(usize) -> &'a [f32] + Sync,
+    {
         let n = self.out_dim;
         out.rows = m;
         out.cols = n;
         out.data.resize(m * n, 0.0);
         let do_rows = |rows: std::ops::Range<usize>, odata: &mut [f32]| {
             for (local, r) in rows.enumerate() {
-                self.forward_row(x.row(r), &mut odata[local * n..(local + 1) * n]);
+                let x = row(r);
+                assert_eq!(x.len(), self.in_dim, "input dim mismatch");
+                self.forward_row(x, &mut odata[local * n..(local + 1) * n]);
             }
         };
         if m < 2 || m * self.in_dim * n < PAR_MIN_WORK || num_threads() == 1 {
@@ -313,8 +335,29 @@ impl LutEngine {
     /// executors can run concurrent batches without touching the
     /// allocator.
     pub fn forward_into<'s>(&self, x: &Mat, scratch: &'s mut EngineScratch) -> &'s Mat {
+        assert_eq!(x.cols, self.in_dim(), "input dim mismatch");
+        self.forward_rows_into(x.rows, |r| x.row(r), scratch)
+    }
+
+    /// Batched forward pass over **pre-staged rows**: row `r` of the batch
+    /// is whatever slice `row(r)` returns (each must be `in_dim` long), so
+    /// callers holding per-request buffers — the micro-batcher's decoded
+    /// jobs, wire payloads deserialized straight off a socket — feed the
+    /// engine in place, with no copy into a contiguous batch matrix. Only
+    /// the first layer reads the input; everything downstream runs on the
+    /// scratch activations exactly like [`LutEngine::forward_into`], and
+    /// the result is bit-identical to staging the same rows in a `Mat`.
+    pub fn forward_rows_into<'a, 's, F>(
+        &self,
+        rows: usize,
+        row: F,
+        scratch: &'s mut EngineScratch,
+    ) -> &'s Mat
+    where
+        F: Fn(usize) -> &'a [f32] + Sync,
+    {
         let [a, b] = &mut scratch.bufs;
-        self.layers[0].forward_into(x, a);
+        self.layers[0].forward_rows_into(rows, &row, a);
         let mut in_a = true;
         for layer in &self.layers[1..] {
             if in_a {
@@ -459,6 +502,47 @@ mod tests {
             assert_eq!(got.cols, want.cols);
             assert_eq!(got.data, want.data, "batch {batch}");
         }
+    }
+
+    #[test]
+    fn forward_rows_into_matches_mat_forward_bitwise() {
+        // pre-staged rows scattered across separate Vecs (the micro-batch
+        // server's job buffers) must produce bit-identical logits to the
+        // same rows staged contiguously in a Mat — including across the
+        // threaded first-layer band split
+        for sizes in [vec![12, 9, 5], vec![200, 180, 4]] {
+            let model = packed_net(&Scheme::AdaptiveCodebook { k: 4 }, sizes, 81);
+            let engine = LutEngine::new(&model).unwrap();
+            let batch = 64usize;
+            let mut rng = Rng::new(82);
+            let rows: Vec<Vec<f32>> = (0..batch)
+                .map(|_| {
+                    let mut r = vec![0.0f32; engine.in_dim()];
+                    rng.fill_normal(&mut r, 0.0, 1.0);
+                    r
+                })
+                .collect();
+            let mut x = Mat::zeros(batch, engine.in_dim());
+            for (r, row) in rows.iter().enumerate() {
+                x.row_mut(r).copy_from_slice(row);
+            }
+            let want = engine.forward(&x);
+            let mut scratch = EngineScratch::new();
+            let got = engine.forward_rows_into(batch, |r| rows[r].as_slice(), &mut scratch);
+            assert_eq!(got.rows, want.rows);
+            assert_eq!(got.cols, want.cols);
+            assert_eq!(got.data, want.data);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "input dim mismatch")]
+    fn forward_rows_into_rejects_short_rows() {
+        let model = packed_net(&Scheme::Binary, vec![6, 4, 2], 9);
+        let engine = LutEngine::new(&model).unwrap();
+        let bad = vec![0.0f32; 3]; // engine expects 6 features
+        let mut scratch = EngineScratch::new();
+        let _ = engine.forward_rows_into(1, |_| bad.as_slice(), &mut scratch);
     }
 
     #[test]

@@ -28,7 +28,9 @@ const VERSION: u32 = 1;
 /// File extension used by [`crate::serve::Registry::load_dir`].
 pub const EXTENSION: &str = "lcq";
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a 64 — the checksum shared by the `.lcq` file format and the
+/// LCQ-RPC wire frames ([`crate::net::proto`]).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;

@@ -29,7 +29,9 @@
 //!
 //! The `.lcq` byte-level format is specified for third-party readers in
 //! `docs/lcq-format.md`; the surrounding dataflow (L step → C step → pack
-//! → serve) is drawn out in `docs/ARCHITECTURE.md`.
+//! → serve) is drawn out in `docs/ARCHITECTURE.md`. The network front end
+//! that exposes this stack to remote clients over framed TCP is
+//! [`crate::net`] (LCQ-RPC, `docs/wire-protocol.md`).
 //!
 //! ```no_run
 //! use lcquant::serve::{MicroBatchServer, PackedModel, Registry, ServerConfig};
@@ -57,5 +59,5 @@ pub mod server;
 
 pub use engine::{EngineScratch, LutEngine};
 pub use packed::{PackedLayer, PackedModel};
-pub use registry::{LoadedModel, Registry};
+pub use registry::{LoadedModel, ModelInfo, Registry};
 pub use server::{Client, MicroBatchServer, ServerConfig, StatsSnapshot};

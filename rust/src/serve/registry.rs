@@ -12,6 +12,19 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
+/// Name and dimensions of one registered model — the per-model entry of
+/// the catalog the network plane advertises to connecting clients in the
+/// LCQ-RPC hello frame (`docs/wire-protocol.md`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelInfo {
+    /// Registry key (the wire format's model id).
+    pub name: String,
+    /// Features per request row.
+    pub in_dim: usize,
+    /// Logits per request row.
+    pub out_dim: usize,
+}
+
 /// A packed model plus its ready-to-serve engine.
 pub struct LoadedModel {
     /// The deserialized `.lcq` artifact (kept for metadata/accounting).
@@ -68,6 +81,20 @@ impl Registry {
     /// Registered model names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
+    }
+
+    /// Name + dimensions for every registered model, sorted by name — the
+    /// model-id catalog the network plane hands to connecting clients, so
+    /// they can validate request arity before any bytes hit the engine.
+    pub fn catalog(&self) -> Vec<ModelInfo> {
+        self.models
+            .values()
+            .map(|m| ModelInfo {
+                name: m.packed.name.clone(),
+                in_dim: m.engine.in_dim(),
+                out_dim: m.engine.out_dim(),
+            })
+            .collect()
     }
 
     /// Number of registered models.
@@ -134,6 +161,16 @@ mod tests {
             .unwrap();
         assert_eq!(reg.len(), 3);
         assert_eq!(reg.names(), vec!["adaptive4", "binary", "ternary"]);
+        // the wire-facing catalog carries name + dims, sorted like names()
+        let cat = reg.catalog();
+        assert_eq!(
+            cat,
+            vec![
+                ModelInfo { name: "adaptive4".into(), in_dim: 8, out_dim: 3 },
+                ModelInfo { name: "binary".into(), in_dim: 8, out_dim: 3 },
+                ModelInfo { name: "ternary".into(), in_dim: 8, out_dim: 3 },
+            ]
+        );
 
         let mut x = Mat::zeros(2, 8);
         let mut rng = Rng::new(9);

@@ -16,19 +16,29 @@
 //!   ([`crate::linalg::pool`]), so layer N of request A overlaps layer M
 //!   of request B instead of serializing behind one task slot.
 //!
-//! Each executor owns a reusable input matrix and an
-//! [`EngineScratch`](crate::serve::engine::EngineScratch), so steady-state
-//! batch execution performs no activation allocations. Per-request latency
-//! is recorded (bounded sample window) for p50/p90/p99 reporting.
+//! Each executor owns an
+//! [`EngineScratch`](crate::serve::engine::EngineScratch) and forwards its
+//! group's **pre-staged rows in place**
+//! ([`LutEngine::forward_rows_into`](crate::serve::LutEngine::forward_rows_into)
+//! reads each job's decoded buffer directly), so steady-state batch
+//! execution performs no activation allocations *and no per-request input
+//! copy* — the buffer a client (or the network plane's frame decoder)
+//! hands to [`Client::submit`] is the buffer the engine gathers from.
+//! Per-request latency is recorded (bounded sample window) for p50/p90/p99
+//! reporting.
 //!
-//! Plain `std::thread` + `mpsc` channels, matching the crate's threading
-//! idiom (no async runtime in the vendored crate set).
+//! Requests travel client → batcher over `mpsc`; coalesced groups travel
+//! batcher → executors over a **lock-free bounded MPMC ring**
+//! ([`crate::util::mpmc::RingQueue`]) — the executors used to share one
+//! `Mutex<Receiver>`, which serialized every hand-off behind a lock held
+//! across `recv`; the ring claims cells with a CAS and parks on a futex
+//! only when empty. No async runtime anywhere (vendored crate set).
 
 use super::engine::EngineScratch;
 use super::registry::Registry;
-use crate::linalg::Mat;
+use crate::util::mpmc::RingQueue;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SendError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -134,15 +144,39 @@ impl Client {
     /// Send one input and block for its logits.
     pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>, String> {
         let (reply_tx, reply_rx) = mpsc::channel();
+        self.submit(model, input, reply_tx)?;
+        reply_rx.recv().map_err(|_| "server dropped request".to_string())?
+    }
+
+    /// Submit one **pre-staged** input row without blocking for the reply;
+    /// the logits (or an error string) arrive on `reply`.
+    ///
+    /// The row `Vec` is handed to the engine as-is: the executors gather
+    /// straight from it via
+    /// [`LutEngine::forward_rows_into`](crate::serve::LutEngine::forward_rows_into),
+    /// so a caller that deserializes wire floats directly into `input`
+    /// (the network plane's frame decoder does) pays **zero further
+    /// copies** between the socket and the batched forward pass. A reply
+    /// channel may be reused across sequential submissions, but note the
+    /// tradeoff: while the caller holds its own `Sender` clone the
+    /// channel can never disconnect, so a job dropped without an answer
+    /// blocks `recv` instead of erroring — callers that must stay live
+    /// through server faults (the network plane) use a fresh channel per
+    /// request.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        reply: Sender<Result<Vec<f32>, String>>,
+    ) -> Result<(), String> {
         self.tx
             .send(Job {
                 model: model.to_string(),
                 input,
                 enqueued: Instant::now(),
-                reply: reply_tx,
+                reply,
             })
-            .map_err(|_| "server stopped".to_string())?;
-        reply_rx.recv().map_err(|_| "server dropped request".to_string())?
+            .map_err(|_| "server stopped".to_string())
     }
 }
 
@@ -161,26 +195,27 @@ impl MicroBatchServer {
     /// registry.
     pub fn start(registry: Arc<Registry>, cfg: ServerConfig) -> MicroBatchServer {
         let (tx, rx) = mpsc::channel::<Job>();
-        let (exec_tx, exec_rx) = mpsc::channel::<BatchGroup>();
-        let exec_rx = Arc::new(Mutex::new(exec_rx));
+        let depth = cfg.pipeline_depth.max(1);
+        // a few groups of slack beyond the executor count: the batcher can
+        // stay ahead without the ring ever becoming an unbounded buffer
+        let queue = Arc::new(RingQueue::<BatchGroup>::new((depth * 2).max(8)));
         let stats = Arc::new(Mutex::new(Stats::default()));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let depth = cfg.pipeline_depth.max(1);
         let executors = (0..depth)
             .map(|i| {
-                let rx = Arc::clone(&exec_rx);
+                let queue = Arc::clone(&queue);
                 let registry = Arc::clone(&registry);
                 let stats = Arc::clone(&stats);
                 std::thread::Builder::new()
                     .name(format!("lcq-serve-exec-{i}"))
-                    .spawn(move || executor_loop(rx, registry, stats))
+                    .spawn(move || executor_loop(queue, registry, stats))
                     .expect("spawn serve executor")
             })
             .collect();
         let shutdown_w = Arc::clone(&shutdown);
         let batcher = std::thread::Builder::new()
             .name("lcq-serve-batch".to_string())
-            .spawn(move || batcher_loop(rx, exec_tx, cfg, shutdown_w))
+            .spawn(move || batcher_loop(rx, queue, cfg, shutdown_w))
             .expect("spawn serve batcher");
         MicroBatchServer {
             tx: Some(tx),
@@ -230,8 +265,8 @@ impl MicroBatchServer {
         if let Some(h) = self.batcher.take() {
             let _ = h.join();
         }
-        // the batcher owned the executor channel's sender; executors drain
-        // what it already queued, then exit on disconnect
+        // the batcher closed the group ring on exit; executors drain what
+        // it already queued, then see the closed+empty ring and exit
         for h in self.executors.drain(..) {
             let _ = h.join();
         }
@@ -246,9 +281,21 @@ impl Drop for MicroBatchServer {
 
 fn batcher_loop(
     rx: Receiver<Job>,
-    exec_tx: Sender<BatchGroup>,
+    queue: Arc<RingQueue<BatchGroup>>,
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
+) {
+    batcher_run(&rx, &queue, &cfg, &shutdown);
+    // no more groups will ever be produced: executors drain what is
+    // already queued, then exit on the closed+empty ring
+    queue.close();
+}
+
+fn batcher_run(
+    rx: &Receiver<Job>,
+    queue: &RingQueue<BatchGroup>,
+    cfg: &ServerConfig,
+    shutdown: &AtomicBool,
 ) {
     let max_batch = cfg.max_batch.max(1);
     loop {
@@ -286,8 +333,10 @@ fn batcher_loop(
             }
         }
         for group in groups {
-            if let Err(SendError(group)) = exec_tx.send(group) {
-                // executors already gone (shutdown race): fail cleanly
+            // blocking MPMC push: backpressure when all executors are busy
+            // and the ring is full. Only this thread closes the queue, so
+            // a failed push means a shutdown race lost — fail cleanly.
+            if let Err(group) = queue.push(group) {
                 for job in &group.jobs {
                     let _ = job.reply.send(Err("server stopped".to_string()));
                 }
@@ -297,43 +346,36 @@ fn batcher_loop(
     }
 }
 
-/// One pipeline executor: pull per-model groups off the shared queue and
-/// run them. The queue mutex is held only across `recv`, so up to
-/// `pipeline_depth` groups execute concurrently while the batcher keeps
-/// coalescing.
+/// One pipeline executor: pull per-model groups off the lock-free MPMC
+/// ring and run them. Cell claims are a CAS (no lock is ever held across
+/// the hand-off), so up to `pipeline_depth` groups execute concurrently
+/// while the batcher keeps coalescing.
 fn executor_loop(
-    rx: Arc<Mutex<Receiver<BatchGroup>>>,
+    queue: Arc<RingQueue<BatchGroup>>,
     registry: Arc<Registry>,
     stats: Arc<Mutex<Stats>>,
 ) {
-    let mut x = Mat::zeros(0, 0);
     let mut scratch = EngineScratch::new();
     let mut latencies = Vec::new();
-    loop {
-        let group = {
-            let rx = rx.lock().unwrap();
-            match rx.recv() {
-                Ok(g) => g,
-                Err(_) => return, // batcher gone and queue drained
-            }
-        };
-        run_group(&registry, group, &stats, &mut x, &mut scratch, &mut latencies);
+    // pop returns None only once the batcher closed the ring and every
+    // queued group has been drained
+    while let Some(group) = queue.pop() {
+        run_group(&registry, group, &stats, &mut scratch, &mut latencies);
     }
 }
 
 /// Forward one per-model group in a single batched engine call and answer
-/// every request. `x`, `scratch` and `latencies` are the executor's
-/// reusable buffers.
+/// every request. `scratch` and `latencies` are the executor's reusable
+/// buffers.
 fn run_group(
     registry: &Registry,
     group: BatchGroup,
     stats: &Arc<Mutex<Stats>>,
-    x: &mut Mat,
     scratch: &mut EngineScratch,
     latencies: &mut Vec<f32>,
 ) {
     let BatchGroup { model, jobs } = group;
-    let outcome: Result<&Mat, String> = match registry.get(&model) {
+    let outcome: Result<&crate::linalg::Mat, String> = match registry.get(&model) {
         None => Err(format!("model '{model}' not registered")),
         Some(loaded) => {
             let in_dim = loaded.engine.in_dim();
@@ -342,17 +384,11 @@ fn run_group(
                     "model '{model}' expects {in_dim} features, got {}",
                     bad.input.len()
                 )),
-                None => {
-                    x.rows = jobs.len();
-                    x.cols = in_dim;
-                    // no clear(): resize handles grow and shrink, and every
-                    // row 0..jobs.len() is overwritten below
-                    x.data.resize(jobs.len() * in_dim, 0.0);
-                    for (r, job) in jobs.iter().enumerate() {
-                        x.row_mut(r).copy_from_slice(&job.input);
-                    }
-                    Ok(loaded.engine.forward_into(x, scratch))
-                }
+                // pre-staged rows: the engine gathers straight from each
+                // job's decoded buffer — no copy into a batch matrix
+                None => Ok(loaded
+                    .engine
+                    .forward_rows_into(jobs.len(), |r| jobs[r].input.as_slice(), scratch)),
             }
         }
     };
@@ -389,6 +425,7 @@ fn run_group(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat;
     use crate::nn::{Activation, MlpSpec};
     use crate::quant::{LayerQuantizer, Scheme};
     use crate::serve::packed::PackedModel;
@@ -525,6 +562,29 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.requests, n_threads * 4);
         assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn submit_with_reusable_reply_channel() {
+        // the network plane's usage pattern: one reply channel per
+        // connection, reused across sequential submissions
+        let (reg, packed) = toy_registry();
+        let engine = crate::serve::LutEngine::new(&packed).unwrap();
+        let mut server = MicroBatchServer::start(reg, ServerConfig::default());
+        let client = server.client();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut rng = Rng::new(55);
+        for _ in 0..6 {
+            let input: Vec<f32> = (0..8).map(|_| rng.normal(0.0, 1.0)).collect();
+            client.submit("toy", input.clone(), reply_tx.clone()).unwrap();
+            let got = reply_rx.recv().unwrap().unwrap();
+            let mut x = Mat::zeros(1, 8);
+            x.row_mut(0).copy_from_slice(&input);
+            let want = engine.forward(&x);
+            assert_eq!(got, want.row(0).to_vec());
+        }
+        server.stop();
+        assert_eq!(server.stats().requests, 6);
     }
 
     #[test]

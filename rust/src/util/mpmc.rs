@@ -1,0 +1,420 @@
+//! Bounded lock-free MPMC ring queue — the serve plane's batch hand-off.
+//!
+//! The micro-batch server used to hand coalesced batch groups to its
+//! executor threads through an `mpsc` channel wrapped in a `Mutex`, which
+//! serialized every executor behind one lock held across `recv`. Fine at
+//! `pipeline_depth ≤ 8`; with the network plane multiplying producers and
+//! consumers, the hand-off itself should not be a lock. This queue is the
+//! classic Vyukov bounded MPMC ring: each cell carries a sequence number,
+//! producers and consumers claim cells with a single CAS on their own
+//! cursor, and the element move happens without any lock. A `Mutex` +
+//! `Condvar` pair exists **only for parking**: blocked
+//! [`push`](RingQueue::push)/[`pop`](RingQueue::pop) callers sleep on it
+//! (futex on Linux). The fast path never touches that lock at all — a
+//! waiter count (SeqCst, fence-paired with the wakers) tells an
+//! uncontended push/pop that nobody is parked, and waiters raise the
+//! count and re-check the ring *before* sleeping, so notify-after-publish
+//! can never be missed (see the race argument on `wake`).
+//!
+//! Shutdown is explicit: [`close`](RingQueue::close) wakes everyone;
+//! `pop` keeps draining queued items after close and returns `None` only
+//! once the ring is empty, so "answer everything already coalesced, then
+//! stop" falls out of the queue semantics.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// One ring cell: `seq` encodes whose turn the cell is (Vyukov protocol —
+/// `seq == pos` ⇒ free for the producer of ticket `pos`; `seq == pos + 1`
+/// ⇒ holds the value for the consumer of ticket `pos`).
+struct Cell<T> {
+    seq: AtomicUsize,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded multi-producer multi-consumer ring queue (see module docs).
+pub struct RingQueue<T> {
+    cells: Box<[Cell<T>]>,
+    mask: usize,
+    /// Next pop ticket.
+    head: AtomicUsize,
+    /// Next push ticket.
+    tail: AtomicUsize,
+    closed: AtomicBool,
+    /// Parking lot only — never guards the cells themselves.
+    park: Mutex<()>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Poppers currently parked (or committing to park) on `not_empty`.
+    /// Lets the push fast path skip the park lock entirely when nobody is
+    /// waiting — the common case — so an uncontended hand-off touches no
+    /// lock at all. See `wake` for the fencing argument.
+    waiting_poppers: AtomicUsize,
+    /// Pushers currently parked (or committing to park) on `not_full`.
+    waiting_pushers: AtomicUsize,
+}
+
+// SAFETY: cells are handed off between threads through the seq protocol
+// (Acquire/Release pairs on `seq` order the value writes); `T: Send` is
+// all that moving values between threads requires.
+unsafe impl<T: Send> Send for RingQueue<T> {}
+unsafe impl<T: Send> Sync for RingQueue<T> {}
+
+impl<T> RingQueue<T> {
+    /// A queue holding at most `capacity` items (rounded up to a power of
+    /// two, minimum 2).
+    pub fn new(capacity: usize) -> RingQueue<T> {
+        let cap = capacity.max(2).next_power_of_two();
+        let cells = (0..cap)
+            .map(|i| Cell {
+                seq: AtomicUsize::new(i),
+                value: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        RingQueue {
+            cells,
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            park: Mutex::new(()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            waiting_poppers: AtomicUsize::new(0),
+            waiting_pushers: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of cells (the rounded-up capacity).
+    pub fn capacity(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Whether [`close`](RingQueue::close) has been called. Items already
+    /// queued are still delivered by `pop`.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Non-blocking push; returns the value back when the ring is full.
+    pub fn try_push(&self, value: T) -> Result<(), T> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let cell = &self.cells[pos & self.mask];
+            let seq = cell.seq.load(Ordering::Acquire);
+            match seq.wrapping_sub(pos) as isize {
+                // our turn: claim the cell by advancing the tail cursor
+                0 => match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: the CAS gave this thread exclusive
+                        // ownership of the cell for ticket `pos`; the
+                        // Release store below publishes the write.
+                        unsafe { (*cell.value.get()).write(value) };
+                        cell.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(p) => pos = p,
+                },
+                // consumer of ticket `pos − cap` has not emptied the cell
+                d if d < 0 => return Err(value),
+                // another producer claimed this ticket: reload and retry
+                _ => pos = self.tail.load(Ordering::Relaxed),
+            }
+        }
+    }
+
+    /// Non-blocking pop; `None` when the ring is empty.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let cell = &self.cells[pos & self.mask];
+            let seq = cell.seq.load(Ordering::Acquire);
+            match seq.wrapping_sub(pos.wrapping_add(1)) as isize {
+                // a value is ready: claim it by advancing the head cursor
+                0 => match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: the CAS gave this thread exclusive
+                        // ownership of the filled cell; the producer's
+                        // Release/our Acquire on `seq` ordered the write.
+                        let value = unsafe { (*cell.value.get()).assume_init_read() };
+                        cell.seq
+                            .store(pos.wrapping_add(self.mask).wrapping_add(1), Ordering::Release);
+                        return Some(value);
+                    }
+                    Err(p) => pos = p,
+                },
+                // producer of ticket `pos` has not filled the cell yet
+                d if d < 0 => return None,
+                // another consumer claimed this ticket: reload and retry
+                _ => pos = self.head.load(Ordering::Relaxed),
+            }
+        }
+    }
+
+    /// Blocking push: parks until a cell frees up. Returns the value back
+    /// (like a failed send) once the queue is closed.
+    pub fn push(&self, value: T) -> Result<(), T> {
+        if self.is_closed() {
+            return Err(value);
+        }
+        let mut value = value;
+        // fast path: lock-free claim; the lock is touched only if a
+        // popper is (about to be) parked
+        match self.try_push(value) {
+            Ok(()) => {
+                self.wake(&self.waiting_poppers, &self.not_empty);
+                return Ok(());
+            }
+            Err(back) => value = back,
+        }
+        let mut guard = self.park.lock().unwrap();
+        loop {
+            if self.closed.load(Ordering::Acquire) {
+                return Err(value);
+            }
+            match self.try_push(value) {
+                Ok(()) => {
+                    self.not_empty.notify_one();
+                    return Ok(());
+                }
+                // still full: commit to parking. The waiter count is
+                // raised (SeqCst) *before* the final recheck, so a pop
+                // that frees a cell either sees the count and takes the
+                // lock to notify (delivered once we wait — we hold the
+                // lock until then) or completed early enough that our
+                // recheck sees the free cell. Either way, no lost wakeup.
+                Err(back) => {
+                    value = back;
+                    self.waiting_pushers.fetch_add(1, Ordering::SeqCst);
+                    fence(Ordering::SeqCst); // pairs with the fence in `wake`
+                    match self.try_push(value) {
+                        Ok(()) => {
+                            self.waiting_pushers.fetch_sub(1, Ordering::SeqCst);
+                            self.not_empty.notify_one();
+                            return Ok(());
+                        }
+                        Err(back) => value = back,
+                    }
+                    guard = self.not_full.wait(guard).unwrap();
+                    self.waiting_pushers.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+
+    /// Blocking pop: parks until an item arrives. Returns `None` only
+    /// when the queue is closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        // fast path: lock-free claim; the lock is touched only if a
+        // pusher is (about to be) parked
+        if let Some(v) = self.try_pop() {
+            self.wake(&self.waiting_pushers, &self.not_full);
+            return Some(v);
+        }
+        let mut guard = self.park.lock().unwrap();
+        loop {
+            if let Some(v) = self.try_pop() {
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            // still empty: commit to parking (same fencing argument as
+            // the push slow path, with the roles swapped)
+            self.waiting_poppers.fetch_add(1, Ordering::SeqCst);
+            fence(Ordering::SeqCst); // pairs with the fence in `wake`
+            if let Some(v) = self.try_pop() {
+                self.waiting_poppers.fetch_sub(1, Ordering::SeqCst);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            guard = self.not_empty.wait(guard).unwrap();
+            self.waiting_poppers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Close the queue: pending and future `push` calls fail, `pop`
+    /// drains what is queued and then returns `None`.
+    pub fn close(&self) {
+        let _guard = self.park.lock().unwrap();
+        self.closed.store(true, Ordering::Release);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Wake one waiter of `cv`, but only when `waiting` says someone is
+    /// (or is about to be) parked — the common no-waiter case touches no
+    /// lock at all.
+    ///
+    /// Race argument (Dekker-style): the waiter raises its count, issues
+    /// a SeqCst fence, then rechecks the ring — all while holding the
+    /// park lock; this waker completed its ring operation, issues a
+    /// SeqCst fence, then loads the count. In the fence total order one
+    /// of the two fences comes first: if the waker's does, the waiter's
+    /// post-fence recheck sees the ring operation and never parks; if the
+    /// waiter's does, the waker's post-fence load sees the raised count,
+    /// takes the lock (serializing behind the waiter's hold, which the
+    /// waiter only releases by entering `wait`) and the notify is
+    /// delivered. Either way, no lost wakeup.
+    fn wake(&self, waiting: &AtomicUsize, cv: &Condvar) {
+        fence(Ordering::SeqCst); // pairs with the fence before parking
+        if waiting.load(Ordering::SeqCst) > 0 {
+            let _guard = self.park.lock().unwrap();
+            cv.notify_one();
+        }
+    }
+}
+
+impl<T> Drop for RingQueue<T> {
+    fn drop(&mut self) {
+        // run the destructors of anything still queued
+        while self.try_pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = RingQueue::new(4);
+        assert_eq!(q.capacity(), 4);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        assert!(q.try_push(99).is_err(), "ring must report full");
+        for i in 0..4 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+        // wrap around several times: sequence numbers must recycle cleanly
+        for round in 0..10 {
+            for i in 0..3 {
+                q.try_push(round * 10 + i).unwrap();
+            }
+            for i in 0..3 {
+                assert_eq!(q.try_pop(), Some(round * 10 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = RingQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.push(3).is_err(), "push after close must fail");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(RingQueue::new(2));
+        for i in 0..q.capacity() {
+            q.push(i).unwrap();
+        }
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || qp.push(777));
+        // give the producer time to park on the full ring, then drain
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let first = q.pop().unwrap();
+        assert_eq!(first, 0);
+        producer.join().unwrap().unwrap();
+        // remaining items: 1 then the late 777
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(777));
+    }
+
+    #[test]
+    fn mpmc_stress_every_item_exactly_once() {
+        const PRODUCERS: u64 = 4;
+        const CONSUMERS: usize = 4;
+        const PER: u64 = 2_000;
+        let q = Arc::new(RingQueue::new(8));
+        let sum = Arc::new(AtomicU64::new(0));
+        let count = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for c in 0..CONSUMERS {
+            let q = Arc::clone(&q);
+            let sum = Arc::clone(&sum);
+            let count = Arc::clone(&count);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mpmc-pop-{c}"))
+                    .spawn(move || {
+                        while let Some(v) = q.pop() {
+                            sum.fetch_add(v, Ordering::Relaxed);
+                            count.fetch_add(1, Ordering::Relaxed);
+                        }
+                    })
+                    .unwrap(),
+            );
+        }
+        let mut producers = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = Arc::clone(&q);
+            producers.push(
+                std::thread::Builder::new()
+                    .name(format!("mpmc-push-{p}"))
+                    .spawn(move || {
+                        for i in 0..PER {
+                            q.push(p * PER + i).unwrap();
+                        }
+                    })
+                    .unwrap(),
+            );
+        }
+        for h in producers {
+            h.join().unwrap();
+        }
+        q.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let n = PRODUCERS * PER;
+        assert_eq!(count.load(Ordering::Relaxed), n);
+        assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn drop_releases_queued_items() {
+        struct Token(Arc<AtomicU64>);
+        impl Drop for Token {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let drops = Arc::new(AtomicU64::new(0));
+        {
+            let q = RingQueue::new(4);
+            for _ in 0..3 {
+                q.try_push(Token(Arc::clone(&drops))).unwrap();
+            }
+            let popped = q.try_pop().unwrap();
+            drop(popped);
+            assert_eq!(drops.load(Ordering::Relaxed), 1);
+        }
+        // the two still-queued tokens are dropped with the queue
+        assert_eq!(drops.load(Ordering::Relaxed), 3);
+    }
+}
