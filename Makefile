@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test test-threaded smoke-net bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net
+.PHONY: tier1 build test test-threaded smoke-net bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs
 
 tier1: build test test-threaded smoke-net bench-build doc clippy fmt-check
 
@@ -74,6 +74,12 @@ bench-serve:
 # Loopback TCP sweep (connections × pipeline depth → BENCH_net.json); the
 # same binary also refreshes BENCH_serve_pipeline.json.
 bench-net: bench-serve
+
+# Observability overhead A/B: serve-engine throughput with the metrics
+# registry + tracing enabled vs disabled, plus raw hot-path costs
+# (histogram record, trace-ring record) → BENCH_obs.json.
+bench-obs:
+	$(CARGO) bench --bench bench_obs
 
 ci: tier1
 

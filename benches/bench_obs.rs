@@ -1,0 +1,130 @@
+//! Observability-plane overhead benchmarks → `BENCH_obs.json`:
+//!
+//! * raw hot-path costs: one `Histogram::record_ns` (two relaxed
+//!   fetch-adds) and one `TraceRing::record` (CAS claim + nine relaxed
+//!   stores), in ns/op;
+//! * the number that matters: micro-batch server throughput with the
+//!   global registry + tracing **enabled vs disabled**
+//!   (`obs::set_enabled`), same model, same 8-thread client load — the
+//!   instrumentation's end-to-end tax on req/s.
+
+use lcquant::linalg::pool;
+use lcquant::nn::MlpSpec;
+use lcquant::obs::{self, Histogram, Stage, Trace, TraceRing};
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{MicroBatchServer, PackedModel, Registry, ServerConfig};
+use lcquant::util::rng::Rng;
+use lcquant::util::timer::Timer;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Quantize random LeNet300-shaped weights (the bench cares about the
+/// serving path's instrumentation cost, not accuracy).
+fn packed_lenet300(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec::lenet300();
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.1)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.05)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+/// ns/op for `n` repetitions of `f`.
+fn per_op_ns<F: FnMut(u64)>(n: u64, mut f: F) -> f64 {
+    let t = Timer::start();
+    for i in 0..n {
+        f(i);
+    }
+    t.elapsed_s() * 1e9 / n as f64
+}
+
+/// One instrumented-or-not serve pass: 8 client threads × `per_thread`
+/// single-image requests against a fresh server. Returns req/s.
+fn serve_pass(registry: &Arc<Registry>, per_thread: usize) -> f64 {
+    let server = MicroBatchServer::start(
+        Arc::clone(registry),
+        ServerConfig { max_batch: 64, max_wait: Duration::from_millis(2), pipeline_depth: 2 },
+    );
+    let n_threads = 8usize;
+    let clients: Vec<_> = (0..n_threads).map(|_| server.client()).collect();
+    let t = Timer::start();
+    // blocking request drivers: scoped threads, the engine keeps the pool
+    pool::run_scoped(n_threads, |th| {
+        let client = &clients[th];
+        let mut trng = Rng::new(300 + th as u64);
+        let mut x = vec![0.0f32; 784];
+        for _ in 0..per_thread {
+            trng.fill_normal(&mut x, 0.0, 1.0);
+            client.infer("binary", x.clone()).expect("infer");
+        }
+    });
+    let elapsed = t.elapsed_s();
+    let mut server = server;
+    server.stop();
+    (n_threads * per_thread) as f64 / elapsed
+}
+
+fn main() {
+    println!("== bench_obs: observability hot-path + end-to-end overhead ==");
+
+    // ---- raw hot-path costs -------------------------------------------
+    let n = 4_000_000u64;
+    let hist = Histogram::new();
+    let hist_ns = per_op_ns(n, |i| hist.record_ns(i.wrapping_mul(2654435761) & 0xff_ffff));
+    std::hint::black_box(hist.snapshot().count());
+    println!("histogram record_ns:   {hist_ns:>7.2} ns/op  ({n} ops)");
+
+    let ring = TraceRing::new(1024);
+    let mut trace = Trace::from_parts(0, [0; obs::STAGES]);
+    let ring_ns = per_op_ns(n, |i| {
+        trace.id = i;
+        trace.set(Stage::Compute, i & 0xffff);
+        ring.record(&trace);
+    });
+    std::hint::black_box(ring.snapshot().len());
+    println!("trace-ring record:     {ring_ns:>7.2} ns/op  ({n} ops, {} dropped)", ring.dropped());
+
+    // ---- end-to-end A/B: instrumented vs not --------------------------
+    let model = packed_lenet300("binary", &Scheme::BinaryScale, 11);
+    let mut registry = Registry::new();
+    registry.insert(model).unwrap();
+    let registry = Arc::new(registry);
+    let per_thread = 128usize;
+    // warm both paths once (pool spawn, gather structures)
+    obs::set_enabled(true);
+    let _ = serve_pass(&registry, 16);
+
+    // interleave passes so drift (thermal, page cache) hits both arms
+    let (mut on_best, mut off_best) = (0.0f64, 0.0f64);
+    for _ in 0..3 {
+        obs::set_enabled(true);
+        on_best = on_best.max(serve_pass(&registry, per_thread));
+        obs::set_enabled(false);
+        off_best = off_best.max(serve_pass(&registry, per_thread));
+    }
+    obs::set_enabled(true);
+    let overhead_pct = (off_best / on_best - 1.0) * 100.0;
+    println!("serve, obs enabled:  {on_best:>8.0} req/s");
+    println!("serve, obs disabled: {off_best:>8.0} req/s  (instrumentation tax {overhead_pct:.1}%)");
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs\",\n  \"threads\": {},\n  \
+         \"histogram_record_ns\": {hist_ns:.2},\n  \"trace_record_ns\": {ring_ns:.2},\n  \
+         \"serve_req_per_s_enabled\": {on_best:.0},\n  \
+         \"serve_req_per_s_disabled\": {off_best:.0},\n  \
+         \"overhead_pct\": {overhead_pct:.2}\n}}\n",
+        lcquant::linalg::num_threads(),
+    );
+    match std::fs::write("BENCH_obs.json", &json) {
+        Ok(()) => println!("wrote BENCH_obs.json"),
+        Err(e) => eprintln!("could not write BENCH_obs.json: {e}"),
+    }
+}

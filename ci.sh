@@ -15,6 +15,12 @@ LCQUANT_THREADS=2 cargo test -q
 # path cannot be skipped
 cargo test -q --test net
 LCQUANT_THREADS=2 cargo test -q --test net
+# observability smoke: the stats-frame loopback round-trip (registry
+# snapshot over real TCP, exact loadgen-count match, hostile stats frames
+# rejected) plus the zero-alloc hot-path assertions, under both thread
+# policies
+cargo test -q --test obs
+LCQUANT_THREADS=2 cargo test -q --test obs
 cargo bench --no-run
 # Documentation gate: rustdoc must build clean (missing docs on the gated
 # modules, broken intra-doc links anywhere) — warnings are errors.

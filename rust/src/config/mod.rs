@@ -21,7 +21,31 @@ pub struct RunConfig {
     pub lc: LcConfig,
     pub serve: ServeSettings,
     pub net_serve: NetSettings,
+    pub obs: ObsSettings,
     pub seed: u64,
+}
+
+/// Observability knobs (`"obs"` section): whether the process mirrors its
+/// per-server stats into the global metrics registry, how many trace slots
+/// the serving plane rings through, and how often long-running serve
+/// processes dump a registry snapshot to stderr.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsSettings {
+    /// Master switch for global-registry mirroring and request tracing
+    /// (per-server stats always record).
+    pub enabled: bool,
+    /// Trace-ring capacity per network server (rounded up to a power of
+    /// two; overwrite-oldest).
+    pub trace_slots: usize,
+    /// Seconds between periodic snapshot dumps while serving
+    /// (0 = never dump).
+    pub snapshot_every_s: f64,
+}
+
+impl Default for ObsSettings {
+    fn default() -> ObsSettings {
+        ObsSettings { enabled: true, trace_slots: 256, snapshot_every_s: 0.0 }
+    }
 }
 
 /// Network serving knobs (`"net"` object inside the `"serve"` section —
@@ -56,7 +80,16 @@ impl NetSettings {
             max_connections: self.max_connections,
             inflight_budget: self.inflight_budget,
             max_frame_bytes: crate::net::proto::DEFAULT_MAX_FRAME,
+            trace_slots: ObsSettings::default().trace_slots,
         }
+    }
+
+    /// Like [`NetSettings::to_net_config`], but sized by the run's
+    /// observability settings (trace-ring capacity).
+    pub fn to_net_config_with_obs(&self, obs: &ObsSettings) -> crate::net::NetConfig {
+        let mut cfg = self.to_net_config();
+        cfg.trace_slots = obs.trace_slots.max(2);
+        cfg
     }
 }
 
@@ -117,6 +150,7 @@ impl Default for RunConfig {
             lc: LcConfig::default(),
             serve: ServeSettings::default(),
             net_serve: NetSettings::default(),
+            obs: ObsSettings::default(),
             seed: 42,
         }
     }
@@ -168,6 +202,9 @@ fn get_u(j: &Json, key: &str, default: usize) -> usize {
 }
 fn get_s<'a>(j: &'a Json, key: &str, default: &'a str) -> &'a str {
     j.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+}
+fn get_b(j: &Json, key: &str, default: bool) -> bool {
+    j.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
 }
 
 impl RunConfig {
@@ -264,6 +301,15 @@ impl RunConfig {
             None => d.net_serve.clone(),
         };
 
+        let obs = match j.get("obs") {
+            Some(n) => ObsSettings {
+                enabled: get_b(n, "enabled", d.obs.enabled),
+                trace_slots: get_u(n, "trace_slots", d.obs.trace_slots).max(2),
+                snapshot_every_s: get_f(n, "snapshot_every_s", d.obs.snapshot_every_s).max(0.0),
+            },
+            None => d.obs.clone(),
+        };
+
         Ok(RunConfig {
             name: get_s(&j, "name", &d.name).to_string(),
             net,
@@ -272,6 +318,7 @@ impl RunConfig {
             lc,
             serve,
             net_serve,
+            obs,
             seed: get_u(&j, "seed", d.seed as usize) as u64,
         })
     }
@@ -382,6 +429,30 @@ mod tests {
         .unwrap();
         assert_eq!(z.net_serve.max_connections, 1);
         assert_eq!(z.net_serve.inflight_budget, 1);
+    }
+
+    #[test]
+    fn obs_section_parses() {
+        let c = RunConfig::from_json(
+            r#"{"obs": {"enabled": false, "trace_slots": 64, "snapshot_every_s": 2.5}}"#,
+        )
+        .unwrap();
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.trace_slots, 64);
+        assert_eq!(c.obs.snapshot_every_s, 2.5);
+        // the trace ring feeds the net config
+        let nc = c.net_serve.to_net_config_with_obs(&c.obs);
+        assert_eq!(nc.trace_slots, 64);
+        // omitted -> defaults; degenerate knobs clamp
+        let d = RunConfig::from_json("{}").unwrap();
+        assert_eq!(d.obs, ObsSettings::default());
+        assert!(d.obs.enabled);
+        let z = RunConfig::from_json(
+            r#"{"obs": {"trace_slots": 0, "snapshot_every_s": -1.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(z.obs.trace_slots, 2);
+        assert_eq!(z.obs.snapshot_every_s, 0.0);
     }
 
     #[test]

@@ -179,12 +179,15 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
         // ---- L step: SGD on L(w) + μ/2 ‖w − w_C − λ/μ‖² ----
         // fresh velocities: the penalized objective changed (new μ, w_C, λ)
         opt.reset();
+        let lstep_t = std::time::Instant::now();
         let lstep_loss = {
             let penalty = PenaltyState { wc: &wc, lambda: &lambda, mu };
             run_sgd(backend, &mut opt, cfg.l_steps, lr, Some(&penalty))
         };
+        let lstep_ns = u64::try_from(lstep_t.elapsed().as_nanos()).unwrap_or(u64::MAX);
 
         // ---- C step: Θ = Π(w − λ/μ) ----
+        let cstep_t = std::time::Instant::now();
         let mut kmeans_iters = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
             let range = layout.w_range(l);
@@ -216,6 +219,12 @@ pub fn lc_quantize(backend: &mut dyn Backend, cfg: &LcConfig) -> LcResult {
                 vecops::feasibility(backend.params().w_flat(), &wc)
             }
         };
+        let cstep_ns = u64::try_from(cstep_t.elapsed().as_nanos()).unwrap_or(u64::MAX);
+
+        // Live observability: mirror this iteration into the global metrics
+        // registry (gauges hold the exact f64 bit patterns of the same casts
+        // the run history records, so snapshots are bit-identical to it).
+        crate::obs::lc_iteration(j, mu as f64, lstep_loss as f64, dist as f64, lstep_ns, cstep_ns);
 
         let do_eval = cfg.eval_every > 0 && (j % cfg.eval_every == 0 || j + 1 == cfg.iterations);
         let (tl, te, tst) = if do_eval {

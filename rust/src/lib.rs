@@ -80,7 +80,13 @@
 //!   pool dispatch state machine;
 //! * `docs/lcq-format.md` — the byte-level `.lcq` specification for
 //!   third-party readers, including the exact size equation cross-checked
-//!   against [`quant::ratio`] (eq. 14) in unit tests.
+//!   against [`quant::ratio`] (eq. 14) in unit tests;
+//! * `docs/wire-protocol.md` — the LCQ-RPC v2 byte-level contract,
+//!   including the `Stats` exposition frames;
+//! * `docs/OBSERVABILITY.md` — the metrics registry, trace spans and
+//!   snapshot schema served by the [`obs`] plane (its claims — zero-alloc
+//!   hot path, percentile parity, exact-count Stats round-trips — are
+//!   pinned by `rust/tests/obs.rs`).
 //!
 //! ## Quickstart: train → quantize → pack → serve
 //!
@@ -137,6 +143,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod report;
 #[cfg(feature = "pjrt")]

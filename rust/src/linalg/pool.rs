@@ -88,6 +88,66 @@ pub fn total_spawned() -> u64 {
     SPAWNED.load(Ordering::Relaxed)
 }
 
+/// Worker lanes tracked by the per-worker profile counters. Workers with
+/// an id past the last lane fold into it (wider pools are rare; the tail
+/// lane stays meaningful as "everything else").
+pub const PROFILE_WORKERS: usize = 16;
+
+// Process-wide profiling counters (relaxed; observability only — shared by
+// every pool in the process, like `SPAWNED`).
+#[allow(clippy::declare_interior_mutable_const)]
+const PROFILE_ZERO: AtomicU64 = AtomicU64::new(0);
+/// Parts executed by each worker lane (dispatcher-claimed parts are not
+/// counted here — they run on the caller's thread).
+static PARTS_CLAIMED: [AtomicU64; PROFILE_WORKERS] = [PROFILE_ZERO; PROFILE_WORKERS];
+/// Dispatches that ran inline because they were trivial (one part) or the
+/// pool has no workers.
+static INLINE_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+/// Dispatches that ran inline because every task slot was occupied.
+static SLOT_EXHAUSTED: AtomicU64 = AtomicU64::new(0);
+
+/// Point-in-time pool profile: where parts ran and how often dispatch
+/// degraded to inline execution. All-time, process-wide.
+#[derive(Clone, Debug)]
+pub struct PoolProfile {
+    /// Parts executed per worker lane (see [`PROFILE_WORKERS`]).
+    pub parts_claimed: Vec<u64>,
+    /// Inline dispatches (one part / no workers).
+    pub inline_dispatches: u64,
+    /// Inline fallbacks because the task ring was full.
+    pub slot_exhausted: u64,
+    /// Worker threads ever spawned ([`total_spawned`]).
+    pub total_spawned: u64,
+}
+
+impl PoolProfile {
+    /// Render for the observability snapshot.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "parts_claimed",
+                Json::Arr(
+                    self.parts_claimed.iter().map(|&n| Json::from(n as usize)).collect(),
+                ),
+            ),
+            ("inline_dispatches", Json::from(self.inline_dispatches as usize)),
+            ("slot_exhausted", Json::from(self.slot_exhausted as usize)),
+            ("total_spawned", Json::from(self.total_spawned as usize)),
+        ])
+    }
+}
+
+/// Snapshot the process-wide pool profile counters.
+pub fn profile() -> PoolProfile {
+    PoolProfile {
+        parts_claimed: PARTS_CLAIMED.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        inline_dispatches: INLINE_DISPATCHES.load(Ordering::Relaxed),
+        slot_exhausted: SLOT_EXHAUSTED.load(Ordering::Relaxed),
+        total_spawned: total_spawned(),
+    }
+}
+
 /// A dispatched task: a type-erased borrowed closure plus its part count.
 /// The raw pointer targets the dispatcher's stack frame; it stays valid
 /// because [`Pool::run`] does not return (or unwind) until every part of
@@ -207,8 +267,10 @@ struct Shared {
 
 /// Run parts of one task until its claim counter is exhausted, catching
 /// per-part panics so a panicking part neither kills the worker nor skips
-/// the completion accounting of its siblings.
-fn run_claimed_parts(slot: &Slot, task: Task, tag: u32, gen: u64) {
+/// the completion accounting of its siblings. Returns how many parts this
+/// call executed (feeds the per-worker profile lanes).
+fn run_claimed_parts(slot: &Slot, task: Task, tag: u32, gen: u64) -> u64 {
+    let mut ran = 0u64;
     while let Some(part) = slot.try_claim(tag, task.parts) {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             // SAFETY: `task.data` is live for the whole dispatch: claiming
@@ -219,10 +281,13 @@ fn run_claimed_parts(slot: &Slot, task: Task, tag: u32, gen: u64) {
             slot.panicked.store(true, Ordering::Release);
         }
         slot.finish_part(gen);
+        ran += 1;
     }
+    ran
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    let lane = &PARTS_CLAIMED[id.min(PROFILE_WORKERS - 1)];
     loop {
         // Find a live task with unclaimed parts (or sleep until one is
         // published). Task bodies are copied out under the control lock,
@@ -258,7 +323,10 @@ fn worker_loop(shared: Arc<Shared>) {
             }
         };
         let (i, task, gen) = found;
-        run_claimed_parts(&shared.slots[i], task, gen as u32, gen);
+        let ran = run_claimed_parts(&shared.slots[i], task, gen as u32, gen);
+        if ran > 0 {
+            lane.fetch_add(ran, Ordering::Relaxed);
+        }
         // Loop back: rescan for more work across *all* live tasks.
     }
 }
@@ -293,7 +361,7 @@ impl Pool {
             let sh = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name(format!("lcq-pool-{i}"))
-                .spawn(move || worker_loop(sh))
+                .spawn(move || worker_loop(sh, i))
                 .expect("spawn pool worker");
             SPAWNED.fetch_add(1, Ordering::Relaxed);
         }
@@ -323,6 +391,7 @@ impl Pool {
             return;
         }
         if parts == 1 || self.n_workers == 0 {
+            INLINE_DISPATCHES.fetch_add(1, Ordering::Relaxed);
             for part in 0..parts {
                 f(part);
             }
@@ -337,6 +406,7 @@ impl Pool {
                 // ring full: degrade to inline execution — never block on a
                 // slot (a blocked dispatcher could itself be occupying one)
                 drop(ctrl);
+                SLOT_EXHAUSTED.fetch_add(1, Ordering::Relaxed);
                 for part in 0..parts {
                     f(part);
                 }
@@ -616,6 +686,38 @@ mod tests {
         let pool = Pool::new(2);
         pool.run(0, |_| panic!("must not run"));
         pool.run_bands(0, 4, &mut [], |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn profile_counters_observe_dispatch_modes() {
+        // Counters are process-wide, so assert on deltas (other tests run
+        // concurrently and may also bump them).
+        let before = profile();
+        assert_eq!(before.parts_claimed.len(), PROFILE_WORKERS);
+
+        // Inline path: single-part dispatch.
+        let pool = Pool::new(4);
+        pool.run(1, |_| {});
+        let after_inline = profile();
+        assert!(after_inline.inline_dispatches > before.inline_dispatches);
+
+        // Worker path: enough parts that at least one lands off-caller.
+        let solo = Pool::new(1);
+        for _ in 0..4 {
+            solo.run(64, |_| std::thread::yield_now());
+            pool.run(64, |_| std::thread::yield_now());
+        }
+        let after = profile();
+        let claimed_before: u64 = before.parts_claimed.iter().sum();
+        let claimed_after: u64 = after.parts_claimed.iter().sum();
+        assert!(
+            claimed_after > claimed_before,
+            "workers claimed no parts across 4×64-part dispatches"
+        );
+        assert!(after.total_spawned >= 3, "Pool::new(4) spawned 3 workers");
+        // slot_exhausted only moves under ring pressure; just check it
+        // never runs backwards.
+        assert!(after.slot_exhausted >= before.slot_exhausted);
     }
 
     #[test]

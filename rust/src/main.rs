@@ -8,6 +8,7 @@
 //! lcquant serve-net --models models [--addr HOST:PORT] [--depth N] [--config FILE]
 //!                   [--smoke-requests N [--connections N] [--model NAME]]
 //! lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
+//! lcquant stats --addr HOST:PORT
 //! lcquant pjrt-smoke [--artifacts artifacts]
 //! lcquant list
 //! ```
@@ -33,6 +34,7 @@ fn usage() -> ! {
   lcquant serve-net --models DIR [--addr HOST:PORT] [--depth N] [--config FILE]
                     [--smoke-requests N [--connections N] [--model NAME]]
   lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
+  lcquant stats --addr HOST:PORT
   lcquant pjrt-smoke [--artifacts DIR]
   lcquant list",
         experiments::ALL
@@ -237,26 +239,28 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(
         args.get("models").ok_or_else(|| anyhow!("serve-net requires --models DIR"))?,
     );
-    let (mut serve_cfg, mut net_cfg) = match args.get("config") {
+    let (mut serve_cfg, mut net_cfg, obs_cfg) = match args.get("config") {
         Some(path) => {
             let c = RunConfig::from_file(path)?;
-            (c.serve, c.net_serve)
+            (c.serve, c.net_serve, c.obs)
         }
         None => (
             lcquant::config::ServeSettings::default(),
             lcquant::config::NetSettings::default(),
+            lcquant::config::ObsSettings::default(),
         ),
     };
     serve_cfg.pipeline_depth = args.get_usize("depth", serve_cfg.pipeline_depth).max(1);
     if let Some(addr) = args.get("addr") {
         net_cfg.bind_addr = addr.to_string();
     }
+    lcquant::obs::set_enabled(obs_cfg.enabled);
     let registry = Arc::new(Registry::load_dir(&dir)?);
     let names = registry.names();
     let server = NetServer::start(
         Arc::clone(&registry),
         serve_cfg.to_server_config(),
-        net_cfg.to_net_config(),
+        net_cfg.to_net_config_with_obs(&obs_cfg),
     )?;
     println!(
         "serving {} model(s) {names:?} on {} (pipeline depth {}, max {} connections, \
@@ -269,9 +273,20 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     );
     let smoke = args.get_usize("smoke-requests", 0);
     if smoke == 0 {
-        // serve until killed; the handler pool does all the work
+        // serve until killed; the handler pool does all the work. With
+        // `obs.snapshot_every_s` set, the main thread becomes the snapshot
+        // dumper: one registry+trace JSON document to stderr per period
+        // (stdout stays clean for the banner/scripting).
+        let period = if obs_cfg.snapshot_every_s > 0.0 {
+            std::time::Duration::from_secs_f64(obs_cfg.snapshot_every_s)
+        } else {
+            std::time::Duration::from_secs(3600)
+        };
         loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+            std::thread::sleep(period);
+            if obs_cfg.snapshot_every_s > 0.0 {
+                eprintln!("{}", server.snapshot_json());
+            }
         }
     }
     let mut lg = LoadGenConfig::new(&server.local_addr().to_string());
@@ -316,6 +331,20 @@ fn cmd_client_smoke(args: &Args) -> Result<()> {
         return Err(anyhow!("{} requests failed", report.failed));
     }
     println!("client-smoke OK");
+    Ok(())
+}
+
+/// Fetch and print a live server's observability snapshot (the v2 `Stats`
+/// frame): per-server wire/batch counters, process-wide registry, pool
+/// profile, and the slowest recent request traces, as one JSON document.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("stats requires --addr HOST:PORT"))?;
+    let mut client = lcquant::net::NetClient::connect(addr)
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let json = client.stats().map_err(|e| anyhow!("stats request: {e}"))?;
+    println!("{json}");
     Ok(())
 }
 
@@ -398,6 +427,7 @@ fn main() {
         "serve-smoke" => cmd_serve_smoke(&args),
         "serve-net" => cmd_serve_net(&args),
         "client-smoke" => cmd_client_smoke(&args),
+        "stats" => cmd_stats(&args),
         "pjrt-smoke" => cmd_pjrt_smoke(&args),
         "list" => {
             println!("experiments: {:?}", experiments::ALL);

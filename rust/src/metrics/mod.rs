@@ -71,7 +71,13 @@ pub fn summary(xs: &[f32]) -> BTreeMap<String, f64> {
     m.insert("std".into(), var.sqrt());
     m.insert("min".into(), sorted[0] as f64);
     m.insert("max".into(), *sorted.last().unwrap() as f64);
-    m.insert("median".into(), sorted[sorted.len() / 2] as f64);
+    let mid = sorted.len() / 2;
+    let median = if sorted.len() % 2 == 0 {
+        (sorted[mid - 1] as f64 + sorted[mid] as f64) / 2.0
+    } else {
+        sorted[mid] as f64
+    };
+    m.insert("median".into(), median);
     m
 }
 
@@ -136,11 +142,21 @@ mod tests {
 
     #[test]
     fn summary_stats() {
+        // even length: median averages the two middle elements
         let s = summary(&[1.0, 2.0, 3.0, 4.0]);
         assert!((s["mean"] - 2.5).abs() < 1e-9);
         assert_eq!(s["min"], 1.0);
         assert_eq!(s["max"], 4.0);
+        assert_eq!(s["median"], 2.5);
+        // odd length: median is the middle element
+        let s = summary(&[5.0, 1.0, 3.0]);
         assert_eq!(s["median"], 3.0);
+        // two elements
+        let s = summary(&[1.0, 2.0]);
+        assert_eq!(s["median"], 1.5);
+        // singleton
+        let s = summary(&[7.0]);
+        assert_eq!(s["median"], 7.0);
         assert!(summary(&[]).is_empty());
     }
 

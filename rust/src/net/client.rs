@@ -13,7 +13,7 @@
 //! failure struck after the request was sent.
 
 use crate::net::proto::{
-    self, ErrorCode, Frame, FrameReader, ModelEntry, RequestFrame, WireError,
+    self, ErrorCode, Frame, FrameReader, ModelEntry, RequestFrame, StatsRequestFrame, WireError,
 };
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -140,6 +140,70 @@ impl NetClient {
             }
         }
         Err(last_io.expect("loop exits early unless an Io error occurred"))
+    }
+
+    /// Fetch the server's observability snapshot (v2 `Stats` frame) as a
+    /// JSON document. Same one-reconnect discipline as
+    /// [`NetClient::infer_batch`].
+    pub fn stats(&mut self) -> Result<String, ClientError> {
+        let mut last_io: Option<ClientError> = None;
+        for _attempt in 0..2 {
+            self.ensure_conn()?;
+            match self.stats_round_trip() {
+                Ok(json) => return Ok(json),
+                Err(e @ ClientError::Io(_)) => {
+                    self.conn = None; // reconnect on the next attempt
+                    last_io = Some(e);
+                }
+                Err(e @ ClientError::Protocol(_)) => {
+                    self.conn = None;
+                    return Err(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_io.expect("loop exits early unless an Io error occurred"))
+    }
+
+    fn stats_round_trip(&mut self) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let conn = self.conn.as_mut().expect("connected");
+        proto::write_frame(&mut conn.stream, &Frame::StatsRequest(StatsRequestFrame { id }))
+            .map_err(|e| ClientError::Io(format!("send: {e}")))?;
+        loop {
+            match conn.reader.poll_frame(&mut conn.stream) {
+                Ok(None) => continue, // only if a read timeout is set
+                Ok(Some(Frame::StatsResponse(resp))) => {
+                    if resp.id != id {
+                        return Err(ClientError::Protocol(format!(
+                            "stats response id {} for request {id}",
+                            resp.id
+                        )));
+                    }
+                    return Ok(resp.json);
+                }
+                Ok(Some(Frame::Error(e))) => {
+                    if e.id != id && e.id != 0 {
+                        return Err(ClientError::Protocol(format!(
+                            "error frame for foreign request {}",
+                            e.id
+                        )));
+                    }
+                    return Err(ClientError::Remote { code: e.code, message: e.message });
+                }
+                Ok(Some(_)) => {
+                    return Err(ClientError::Protocol(
+                        "unexpected frame while awaiting a stats response".to_string(),
+                    ))
+                }
+                Err(WireError::Closed) => {
+                    return Err(ClientError::Io("connection closed by server".to_string()))
+                }
+                Err(WireError::Io(e)) => return Err(ClientError::Io(e.to_string())),
+                Err(e) => return Err(ClientError::Protocol(e.to_string())),
+            }
+        }
     }
 
     fn round_trip(

@@ -10,14 +10,21 @@
 //! shedding is the server *working as designed* under pressure, and a
 //! sweep that never sheds never found the saturation point.
 //!
+//! Outcome accounting is contention-free: counters are shared relaxed
+//! atomics and latencies land in one [`obs::Histogram`] — no mutex on the
+//! driver threads' hot path, no latency `Vec` to merge and sort at the
+//! end. Percentiles follow the histogram's nearest-rank discipline, the
+//! same methodology as the server side's stats.
+//!
 //! [`ErrorCode::Overloaded`]: crate::net::proto::ErrorCode::Overloaded
 
 use crate::linalg::pool;
 use crate::net::client::NetClient;
+use crate::obs::Histogram;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use anyhow::{anyhow, Result};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// What to drive at the server.
 #[derive(Clone, Debug)]
@@ -70,13 +77,14 @@ pub struct LoadReport {
     pub failed: usize,
     /// Wall-clock of the whole run, seconds.
     pub elapsed_s: f64,
-    /// Median latency of successful requests, ms.
+    /// Median latency of successful requests, ms (log₂-histogram
+    /// percentile, within one bucket width of the exact sample value).
     pub p50_ms: f32,
     /// 90th-percentile latency, ms.
     pub p90_ms: f32,
     /// 99th-percentile latency, ms.
     pub p99_ms: f32,
-    /// Worst successful-request latency, ms.
+    /// Worst successful-request latency, ms (bucket upper edge).
     pub max_ms: f32,
 }
 
@@ -110,13 +118,15 @@ impl LoadReport {
     }
 }
 
+/// Shared run-wide tallies: relaxed atomics + one latency histogram, so
+/// driver threads never contend on a lock.
 #[derive(Default)]
-struct ConnOutcome {
-    sent: usize,
-    ok: usize,
-    shed: usize,
-    failed: usize,
-    lat_ms: Vec<f32>,
+struct RunTallies {
+    sent: AtomicU64,
+    ok: AtomicU64,
+    shed: AtomicU64,
+    failed: AtomicU64,
+    latency: Histogram,
 }
 
 /// Run one load generation pass against a live server.
@@ -146,11 +156,10 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
     let per_conn = cfg.requests_per_conn.max(1);
     let batch = cfg.batch.max(1);
     let in_dim = entry.in_dim as usize;
-    let outcomes: Mutex<Vec<ConnOutcome>> = Mutex::new(Vec::with_capacity(connections));
+    let tallies = RunTallies::default();
     let t = Timer::start();
     // blocking drivers → scoped threads, never pool task slots
     pool::run_scoped(connections, |c| {
-        let mut o = ConnOutcome { lat_ms: Vec::with_capacity(per_conn), ..Default::default() };
         let mut rng = Rng::new(cfg.seed ^ 0xC0DE ^ ((c as u64) * 0x9E37_79B9));
         let mut input = vec![0.0f32; in_dim * batch];
         match NetClient::connect(&cfg.addr) {
@@ -163,14 +172,18 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
                     } else {
                         client.infer_batch(&entry.name, batch, &input)
                     };
-                    o.sent += 1;
+                    tallies.sent.fetch_add(1, Ordering::Relaxed);
                     match result {
                         Ok(_) => {
-                            o.ok += 1;
-                            o.lat_ms.push(rt.elapsed_ms() as f32);
+                            tallies.ok.fetch_add(1, Ordering::Relaxed);
+                            tallies.latency.record_ns((rt.elapsed_s() * 1e9) as u64);
                         }
-                        Err(e) if e.is_overloaded() => o.shed += 1,
-                        Err(_) => o.failed += 1,
+                        Err(e) if e.is_overloaded() => {
+                            tallies.shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            tallies.failed.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                 }
             }
@@ -181,37 +194,26 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
                 // connection-level event, shed when the server refused
                 // it by design (Overloaded handshake), failed otherwise
                 if e.is_overloaded() {
-                    o.shed = 1;
+                    tallies.shed.fetch_add(1, Ordering::Relaxed);
                 } else {
-                    o.failed = 1;
+                    tallies.failed.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
-        outcomes.lock().unwrap().push(o);
     });
     let elapsed_s = t.elapsed_s();
 
-    let outcomes = outcomes.into_inner().unwrap();
-    let mut lat: Vec<f32> = Vec::new();
-    let (mut sent, mut ok, mut shed, mut failed) = (0, 0, 0, 0);
-    for o in outcomes {
-        sent += o.sent;
-        ok += o.ok;
-        shed += o.shed;
-        failed += o.failed;
-        lat.extend_from_slice(&o.lat_ms);
-    }
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lat = tallies.latency.snapshot();
     Ok(LoadReport {
         connections,
-        sent,
-        ok,
-        shed,
-        failed,
+        sent: tallies.sent.load(Ordering::Relaxed) as usize,
+        ok: tallies.ok.load(Ordering::Relaxed) as usize,
+        shed: tallies.shed.load(Ordering::Relaxed) as usize,
+        failed: tallies.failed.load(Ordering::Relaxed) as usize,
         elapsed_s,
-        p50_ms: crate::metrics::percentile_sorted(&lat, 50.0),
-        p90_ms: crate::metrics::percentile_sorted(&lat, 90.0),
-        p99_ms: crate::metrics::percentile_sorted(&lat, 99.0),
-        max_ms: lat.last().copied().unwrap_or(0.0),
+        p50_ms: lat.percentile_ms(50.0),
+        p90_ms: lat.percentile_ms(90.0),
+        p99_ms: lat.percentile_ms(99.0),
+        max_ms: lat.max_ms(),
     })
 }

@@ -27,6 +27,12 @@
 //!   latency, throughput, and shed counts (`bench_serve` uses it for the
 //!   loopback TCP sweep → `BENCH_net.json`).
 //!
+//! LCQ-RPC v2 adds a `Stats` frame pair: any live connection can request a
+//! JSON observability snapshot — per-server wire counters, batch-plane
+//! stats, the process-wide [`crate::obs`] registry, the compute-pool
+//! profile, and the slowest recent request traces (`lcquant stats --addr
+//! HOST:PORT` prints one; see `docs/OBSERVABILITY.md`).
+//!
 //! ```no_run
 //! use lcquant::net::{LoadGenConfig, NetClient, NetConfig, NetServer};
 //! use lcquant::serve::{Registry, ServerConfig};

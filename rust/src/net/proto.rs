@@ -1,4 +1,4 @@
-//! LCQ-RPC wire protocol, version 1: length-prefixed, checksummed binary
+//! LCQ-RPC wire protocol, version 2: length-prefixed, checksummed binary
 //! frames over a byte stream.
 //!
 //! The framing mirrors the `.lcq` file discipline (`docs/lcq-format.md`):
@@ -12,7 +12,8 @@
 //! connection:  client preamble | server preamble | Hello frame | frames…
 //! preamble:    magic "LCQR" | version u32
 //! frame:       payload_len u32 | payload | fnv1a-64(payload) u64
-//! payload:     tag u8 | tag-specific fields    (Request/Response/Error/Hello)
+//! payload:     tag u8 | tag-specific fields
+//!              (Request/Response/Error/Hello/StatsRequest/StatsResponse)
 //! ```
 //!
 //! Decoding never panics on hostile input: every length is bounds-checked
@@ -27,8 +28,10 @@ use std::io::{ErrorKind, Read, Write};
 /// Protocol magic, first on the wire in both directions (`"LCQR"`).
 pub const MAGIC: &[u8; 4] = b"LCQR";
 
-/// Protocol version spoken by this implementation.
-pub const VERSION: u32 = 1;
+/// Protocol version spoken by this implementation. v2 added the stats
+/// exposition frames (tags 5/6); see `docs/wire-protocol.md` for the
+/// version history.
+pub const VERSION: u32 = 2;
 
 /// Preamble length: magic + version.
 pub const PREAMBLE_LEN: usize = 8;
@@ -156,6 +159,26 @@ pub struct HelloFrame {
     pub models: Vec<ModelEntry>,
 }
 
+/// Observability snapshot request (v2): ask the server for its current
+/// stats. Carries only an id, echoed in the response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StatsRequestFrame {
+    /// Client-chosen id, echoed verbatim in the response.
+    pub id: u64,
+}
+
+/// Observability snapshot response (v2): a JSON document rendering the
+/// server's metrics registry, batch-server stats, pool profile and
+/// slowest recent traces (schema documented in `docs/OBSERVABILITY.md`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StatsResponseFrame {
+    /// Echo of the request id.
+    pub id: u64,
+    /// The snapshot, as a JSON document (diagnostic schema; fields may be
+    /// added in later versions without a protocol bump).
+    pub json: String,
+}
+
 /// Any LCQ-RPC frame (the payload tag selects the variant).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -167,6 +190,10 @@ pub enum Frame {
     Error(ErrorFrame),
     /// Tag 4: model catalog (server → client, once, after the preamble).
     Hello(HelloFrame),
+    /// Tag 5 (v2): stats snapshot request (client → server).
+    StatsRequest(StatsRequestFrame),
+    /// Tag 6 (v2): stats snapshot response (server → client).
+    StatsResponse(StatsResponseFrame),
 }
 
 /// Everything that can go wrong reading or decoding the wire.
@@ -238,8 +265,8 @@ pub fn encode_preamble() -> [u8; PREAMBLE_LEN] {
 }
 
 /// Validate the magic and return the peer's version (callers decide
-/// whether a different version is acceptable — v1 servers reply with
-/// [`ErrorCode::UnsupportedVersion`] and close).
+/// whether a different version is acceptable — the server replies with
+/// [`ErrorCode::UnsupportedVersion`] and closes on a mismatch).
 pub fn decode_preamble(bytes: &[u8; PREAMBLE_LEN]) -> Result<u32, WireError> {
     if &bytes[..4] != MAGIC {
         return Err(WireError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
@@ -371,6 +398,15 @@ impl Frame {
                     put_u32(&mut buf, m.out_dim);
                 }
             }
+            Frame::StatsRequest(s) => {
+                buf.push(5);
+                put_u64(&mut buf, s.id);
+            }
+            Frame::StatsResponse(s) => {
+                buf.push(6);
+                put_u64(&mut buf, s.id);
+                put_str(&mut buf, &s.json);
+            }
         }
         buf
     }
@@ -430,6 +466,12 @@ impl Frame {
                 }
                 Frame::Hello(HelloFrame { models })
             }
+            5 => Frame::StatsRequest(StatsRequestFrame { id: c.u64()? }),
+            6 => {
+                let id = c.u64()?;
+                let json = c.str()?;
+                Frame::StatsResponse(StatsResponseFrame { id, json })
+            }
             t => return Err(malformed(format!("unknown frame tag {t}"))),
         };
         c.finish()?;
@@ -477,12 +519,20 @@ pub fn poll_exact<R: Read>(
 pub struct FrameReader {
     buf: Vec<u8>,
     max_frame: usize,
+    last_decode_ns: u64,
 }
 
 impl FrameReader {
     /// A reader rejecting payloads larger than `max_frame` bytes.
     pub fn new(max_frame: usize) -> FrameReader {
-        FrameReader { buf: Vec::new(), max_frame }
+        FrameReader { buf: Vec::new(), max_frame, last_decode_ns: 0 }
+    }
+
+    /// CPU time spent verifying + decoding the most recently returned
+    /// frame, in nanoseconds (checksum + payload decode only — socket
+    /// wait time is excluded). Feeds the per-request trace's decode span.
+    pub fn last_decode_ns(&self) -> u64 {
+        self.last_decode_ns
     }
 
     /// Pull bytes from `r` until a full frame is buffered, then decode it.
@@ -504,6 +554,7 @@ impl FrameReader {
                 }
                 let total = 4 + len + 8;
                 if self.buf.len() >= total {
+                    let t0 = std::time::Instant::now();
                     let payload = &self.buf[4..4 + len];
                     let stored =
                         u64::from_le_bytes(self.buf[4 + len..total].try_into().unwrap());
@@ -513,6 +564,8 @@ impl FrameReader {
                     }
                     let frame = Frame::decode_payload(payload)?;
                     self.buf.drain(..total);
+                    self.last_decode_ns =
+                        u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
                     return Ok(Some(frame));
                 }
             }
@@ -564,6 +617,11 @@ mod tests {
                     ModelEntry { name: "binary".into(), in_dim: 784, out_dim: 10 },
                     ModelEntry { name: "k4".into(), in_dim: 784, out_dim: 10 },
                 ],
+            }),
+            Frame::StatsRequest(StatsRequestFrame { id: 42 }),
+            Frame::StatsResponse(StatsResponseFrame {
+                id: 42,
+                json: r#"{"counters":{"net_requests_ok":3}}"#.into(),
             }),
         ]
     }
@@ -721,6 +779,59 @@ mod tests {
         p.extend_from_slice(&1u32.to_le_bytes());
         p.extend_from_slice(&0.0f32.to_le_bytes());
         assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // stats request with trailing bytes
+        let mut p = vec![5u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.push(0x00);
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // truncated stats request (id cut short)
+        let mut p = vec![5u8];
+        p.extend_from_slice(&[0u8; 4]);
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // stats response whose json length overruns the payload
+        let mut p = vec![6u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 bytes
+        p.extend_from_slice(b"{}"); // supplies 2
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // stats response with non-utf8 json
+        let mut p = vec![6u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn oversized_stats_response_rejected_from_prefix() {
+        // a stats response announcing a payload beyond the cap is rejected
+        // from the 4-byte prefix, same as any other frame
+        let mut reader = FrameReader::new(1024);
+        let prefix = (4096u32).to_le_bytes();
+        let mut cur = std::io::Cursor::new(&prefix[..]);
+        assert!(matches!(
+            reader.poll_frame(&mut cur),
+            Err(WireError::Oversized { len: 4096, max: 1024 })
+        ));
+    }
+
+    #[test]
+    fn decode_time_is_tracked_per_frame() {
+        // big enough that checksum + decode takes measurable time on any
+        // monotonic clock
+        let frame = Frame::Request(RequestFrame {
+            id: 1,
+            model: "m".into(),
+            rows: 100,
+            cols: 100,
+            data: vec![0.5; 10_000],
+        });
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        assert_eq!(reader.last_decode_ns(), 0);
+        let mut cur = std::io::Cursor::new(frame.to_bytes());
+        let got = reader.poll_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(got, frame);
+        assert!(reader.last_decode_ns() > 0);
     }
 
     /// A reader that yields its bytes in dribs, interleaving WouldBlock

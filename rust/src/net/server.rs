@@ -21,6 +21,17 @@
 //!   they touch the compute plane — explicit backpressure instead of
 //!   unbounded queueing.
 //!
+//! Every answered request leaves a [`Trace`](crate::obs::Trace) — accept →
+//! decode → queue wait → batch assembly → pool compute → frame → write —
+//! in a bounded overwrite-oldest ring, and every counter bump mirrors into
+//! the process-wide [`obs`] registry. The whole picture (per-server
+//! counters + batch-plane stats + pool profile + slowest traces) is served
+//! over the wire as a v2 `Stats` frame and rendered by
+//! [`NetServer::snapshot_json`]; the snapshot path reads shared atomics,
+//! so it is valid at **every** lifecycle point — before the first request,
+//! mid-traffic, after [`NetServer::stop`], even after the batch server is
+//! gone.
+//!
 //! Handler sockets carry a short read timeout so every blocking read
 //! doubles as a shutdown poll; [`NetServer::stop`] (also run on drop)
 //! stops the acceptor, joins the handlers, then stops the batch server —
@@ -28,9 +39,11 @@
 
 use crate::net::proto::{
     self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, ModelEntry, RequestFrame,
-    WireError,
+    StatsResponseFrame, WireError,
 };
-use crate::serve::{Client, MicroBatchServer, Registry, ServerConfig, StatsSnapshot};
+use crate::obs::{self, CounterId, HistId, Stage, Trace, TraceRing};
+use crate::serve::{Client, MicroBatchServer, Registry, ServeStats, ServerConfig, StatsSnapshot};
+use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -38,7 +51,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Read-timeout tick at which connection handlers re-check the shutdown
 /// flag (mirrors the micro-batcher's poll).
@@ -73,6 +86,10 @@ pub struct NetConfig {
     pub inflight_budget: usize,
     /// Largest accepted frame payload, bytes (guards allocation).
     pub max_frame_bytes: usize,
+    /// Recent-trace ring capacity (rounded up to a power of two). Each
+    /// slot is ~80 bytes of atomics; the default keeps the last 256
+    /// request traces.
+    pub trace_slots: usize,
 }
 
 impl Default for NetConfig {
@@ -82,6 +99,7 @@ impl Default for NetConfig {
             max_connections: 64,
             inflight_budget: 256,
             max_frame_bytes: proto::DEFAULT_MAX_FRAME,
+            trace_slots: 256,
         }
     }
 }
@@ -99,8 +117,15 @@ pub struct NetStatsSnapshot {
     pub requests_shed: u64,
     /// Requests answered with a non-overload error.
     pub requests_failed: u64,
+    /// Stats snapshot frames served.
+    pub stats_requests: u64,
 }
 
+/// Per-server exact counters. Every bump also mirrors into the global
+/// [`obs`] registry (when enabled), but the per-instance values are the
+/// source of truth a test or a client can match against its own
+/// accounting — many servers can coexist in one process without their
+/// counts blending.
 #[derive(Default)]
 struct NetStats {
     connections: AtomicU64,
@@ -108,9 +133,35 @@ struct NetStats {
     requests_ok: AtomicU64,
     requests_shed: AtomicU64,
     requests_failed: AtomicU64,
+    stats_requests: AtomicU64,
 }
 
 impl NetStats {
+    fn bump(own: &AtomicU64, id: CounterId) {
+        own.fetch_add(1, Ordering::Relaxed);
+        if obs::enabled() {
+            obs::counter(id).inc();
+        }
+    }
+    fn inc_connections(&self) {
+        NetStats::bump(&self.connections, CounterId::NetConnections);
+    }
+    fn inc_connections_shed(&self) {
+        NetStats::bump(&self.connections_shed, CounterId::NetConnectionsShed);
+    }
+    fn inc_ok(&self) {
+        NetStats::bump(&self.requests_ok, CounterId::NetRequestsOk);
+    }
+    fn inc_shed(&self) {
+        NetStats::bump(&self.requests_shed, CounterId::NetRequestsShed);
+    }
+    fn inc_failed(&self) {
+        NetStats::bump(&self.requests_failed, CounterId::NetRequestsFailed);
+    }
+    fn inc_stats(&self) {
+        NetStats::bump(&self.stats_requests, CounterId::NetStatsRequests);
+    }
+
     fn snapshot(&self) -> NetStatsSnapshot {
         NetStatsSnapshot {
             connections: self.connections.load(Ordering::Relaxed),
@@ -118,7 +169,20 @@ impl NetStats {
             requests_ok: self.requests_ok.load(Ordering::Relaxed),
             requests_shed: self.requests_shed.load(Ordering::Relaxed),
             requests_failed: self.requests_failed.load(Ordering::Relaxed),
+            stats_requests: self.stats_requests.load(Ordering::Relaxed),
         }
+    }
+
+    fn to_json(&self) -> Json {
+        let s = self.snapshot();
+        Json::obj(vec![
+            ("connections", Json::from(s.connections as usize)),
+            ("connections_shed", Json::from(s.connections_shed as usize)),
+            ("requests_ok", Json::from(s.requests_ok as usize)),
+            ("requests_shed", Json::from(s.requests_shed as usize)),
+            ("requests_failed", Json::from(s.requests_failed as usize)),
+            ("stats_requests", Json::from(s.stats_requests as usize)),
+        ])
     }
 }
 
@@ -132,6 +196,12 @@ struct ConnCtx {
     inflight_max: usize,
     max_frame: usize,
     stats: NetStats,
+    /// Batch-plane stats, shared with the micro-batch server's executors.
+    /// Outlives the batch server itself, so snapshots are valid at every
+    /// lifecycle point.
+    serve_stats: Arc<ServeStats>,
+    /// Recent request traces (overwrite-oldest; never blocks a handler).
+    traces: TraceRing,
     /// Precomputed server preamble + hello frame (catalog), written to
     /// every accepted connection.
     hello: Vec<u8>,
@@ -145,9 +215,6 @@ pub struct NetServer {
     acceptor: Option<JoinHandle<()>>,
     conn_plane: Option<JoinHandle<()>>,
     batch: Option<MicroBatchServer>,
-    /// Final batch-plane snapshot, captured when [`NetServer::stop`]
-    /// retires the micro-batch server (so stats survive the stop).
-    final_batch_stats: Option<StatsSnapshot>,
 }
 
 impl NetServer {
@@ -166,12 +233,14 @@ impl NetServer {
         let ctx = Arc::new(ConnCtx {
             hello: hello_bytes(&registry),
             client: batch.client(),
+            serve_stats: batch.stats_handle(),
             registry,
             shutdown: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
             inflight_max: net_cfg.inflight_budget.max(1),
             max_frame: net_cfg.max_frame_bytes.max(1024),
             stats: NetStats::default(),
+            traces: TraceRing::new(net_cfg.trace_slots.max(2)),
         });
         // bounded hand-off from the acceptor to the handlers; its slack
         // doubles as the accept backlog before connections are shed
@@ -197,7 +266,6 @@ impl NetServer {
             acceptor: Some(acceptor),
             conn_plane: Some(conn_plane),
             batch: Some(batch),
-            final_batch_stats: None,
         })
     }
 
@@ -211,16 +279,19 @@ impl NetServer {
         self.ctx.stats.snapshot()
     }
 
-    /// The underlying micro-batch server's latency/batching summary
-    /// (after [`NetServer::stop`], the final snapshot).
+    /// The micro-batch plane's latency/batching summary. Reads the stats
+    /// shared with the executors directly, so the same path is valid
+    /// before, during and after [`NetServer::stop`] — there is no cached
+    /// "final" snapshot to race against.
     pub fn batch_stats(&self) -> StatsSnapshot {
-        match &self.batch {
-            Some(b) => b.stats(),
-            None => self
-                .final_batch_stats
-                .clone()
-                .expect("snapshot captured when the batch server was stopped"),
-        }
+        self.ctx.serve_stats.snapshot()
+    }
+
+    /// The full observability snapshot this server exposes over the wire
+    /// (per-server counters, batch-plane stats, process registry, pool
+    /// profile, slowest traces), as a JSON document.
+    pub fn snapshot_json(&self) -> String {
+        snapshot_json(&self.ctx)
     }
 
     /// Stop accepting, join every handler (in-flight requests are
@@ -242,7 +313,7 @@ impl NetServer {
         }
         if let Some(mut b) = self.batch.take() {
             b.stop();
-            self.final_batch_stats = Some(b.stats());
+            // stats live on in ctx.serve_stats — nothing to capture
         }
     }
 }
@@ -251,6 +322,20 @@ impl Drop for NetServer {
     fn drop(&mut self) {
         self.stop();
     }
+}
+
+/// Render the full stats snapshot for one server (the `Stats` frame body;
+/// schema in `docs/OBSERVABILITY.md`).
+fn snapshot_json(ctx: &ConnCtx) -> String {
+    Json::obj(vec![
+        ("server", ctx.stats.to_json()),
+        ("batch", ctx.serve_stats.to_json()),
+        ("process", obs::global().snapshot_json()),
+        ("pool", crate::linalg::pool::profile().to_json()),
+        ("traces", obs::traces_json(&ctx.traces.slowest(8))),
+        ("traces_dropped", Json::from(ctx.traces.dropped() as usize)),
+    ])
+    .to_string()
 }
 
 /// Server preamble + hello frame, encoded once at startup.
@@ -289,14 +374,14 @@ fn acceptor_loop(
                 continue;
             }
         };
-        ctx.stats.connections.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.inc_connections();
         let _ = stream.set_nodelay(true);
         match conn_tx.try_send(stream) {
             Ok(()) => {}
             Err(TrySendError::Full(stream)) => {
                 // every handler busy and the backlog full: shed at the
                 // door with an explicit overload handshake
-                ctx.stats.connections_shed.fetch_add(1, Ordering::Relaxed);
+                ctx.stats.inc_connections_shed();
                 shed_connection(stream, ctx.inflight_max);
             }
             Err(TrySendError::Disconnected(_)) => return,
@@ -337,6 +422,11 @@ fn handler_pool(
     });
 }
 
+#[inline]
+fn dur_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
 /// One connection, handshake to close.
 fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     let _ = stream.set_read_timeout(Some(SHUTDOWN_POLL));
@@ -346,7 +436,7 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     //     handler instead of pinning it) ------------------------------
     let mut pre = [0u8; proto::PREAMBLE_LEN];
     let mut filled = 0;
-    let handshake_start = std::time::Instant::now();
+    let handshake_start = Instant::now();
     loop {
         if ctx.shutdown.load(Ordering::Relaxed)
             || handshake_start.elapsed() > HANDSHAKE_TIMEOUT
@@ -381,6 +471,13 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     if stream.write_all(&ctx.hello).is_err() {
         return;
     }
+    // the accept span (handshake duration) is shared by every request on
+    // this connection; the wait above is client-paced, so it measures the
+    // peer's preamble latency, not server work
+    let accept_ns = dur_ns(handshake_start.elapsed());
+    if obs::enabled() {
+        obs::hist(HistId::NetHandshake).record_ns(accept_ns);
+    }
     // --- request loop ---------------------------------------------------
     let mut reader = FrameReader::new(ctx.max_frame);
     loop {
@@ -398,7 +495,20 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
         match reader.poll_frame(&mut stream) {
             Ok(None) => continue, // read-timeout tick
             Ok(Some(Frame::Request(req))) => {
-                if !answer_request(&mut stream, ctx, req) {
+                let decode_ns = reader.last_decode_ns();
+                if !answer_request(&mut stream, ctx, req, accept_ns, decode_ns) {
+                    return;
+                }
+            }
+            Ok(Some(Frame::StatsRequest(s))) => {
+                ctx.stats.inc_stats();
+                let json = snapshot_json(ctx);
+                if proto::write_frame(
+                    &mut stream,
+                    &Frame::StatsResponse(StatsResponseFrame { id: s.id, json }),
+                )
+                .is_err()
+                {
                     return;
                 }
             }
@@ -433,16 +543,33 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     }
 }
 
+/// Batch-plane span times aggregated over a request's rows (single-row
+/// requests: the one job's spans; multi-row: the worst row, since the
+/// response waits for the slowest).
+#[derive(Default, Clone, Copy)]
+struct PipelineSpans {
+    queue_ns: u64,
+    assembly_ns: u64,
+    compute_ns: u64,
+}
+
 /// Validate, budget, submit and answer one request. Returns `false` when
-/// the connection should close (write failure).
-fn answer_request(stream: &mut TcpStream, ctx: &ConnCtx, req: RequestFrame) -> bool {
+/// the connection should close (write failure). `accept_ns`/`decode_ns`
+/// seed the request's trace span.
+fn answer_request(
+    stream: &mut TcpStream,
+    ctx: &ConnCtx,
+    req: RequestFrame,
+    accept_ns: u64,
+    decode_ns: u64,
+) -> bool {
     let id = req.id;
     let fail = |stream: &mut TcpStream, code: ErrorCode, message: String| -> bool {
         proto::write_frame(stream, &Frame::Error(ErrorFrame { id, code, message })).is_ok()
     };
     // validate against the registry *before* spending compute
     let Some(loaded) = ctx.registry.get(&req.model) else {
-        ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.inc_failed();
         return fail(
             stream,
             ErrorCode::UnknownModel,
@@ -453,7 +580,7 @@ fn answer_request(stream: &mut TcpStream, ctx: &ConnCtx, req: RequestFrame) -> b
     let out_dim = loaded.engine.out_dim();
     let rows = req.rows as usize;
     if req.cols as usize != in_dim {
-        ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.inc_failed();
         return fail(
             stream,
             ErrorCode::WrongDims,
@@ -470,7 +597,7 @@ fn answer_request(stream: &mut TcpStream, ctx: &ConnCtx, req: RequestFrame) -> b
         .and_then(|n| n.checked_add(64)); // envelope + header slack
     let response_fits = matches!(response_bytes, Some(n) if n <= ctx.max_frame);
     if !response_fits {
-        ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.inc_failed();
         return fail(
             stream,
             ErrorCode::WrongDims,
@@ -483,7 +610,7 @@ fn answer_request(stream: &mut TcpStream, ctx: &ConnCtx, req: RequestFrame) -> b
     }
     // bounded in-flight budget (counted in rows): shed, don't queue
     if !try_acquire(&ctx.inflight, ctx.inflight_max, rows) {
-        ctx.stats.requests_shed.fetch_add(1, Ordering::Relaxed);
+        ctx.stats.inc_shed();
         return fail(
             stream,
             ErrorCode::Overloaded,
@@ -497,24 +624,50 @@ fn answer_request(stream: &mut TcpStream, ctx: &ConnCtx, req: RequestFrame) -> b
     let outcome = submit_rows(ctx, req);
     ctx.inflight.fetch_sub(rows, Ordering::Relaxed);
     match outcome {
-        Ok(data) => {
-            ctx.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
+        Ok((data, spans)) => {
+            ctx.stats.inc_ok();
             let frame = Frame::Response(proto::ResponseFrame {
                 id,
                 rows: rows as u32,
                 cols: out_dim as u32,
                 data,
             });
-            proto::write_frame(stream, &frame).is_ok()
+            let t_frame = Instant::now();
+            let bytes = frame.to_bytes();
+            let frame_ns = dur_ns(t_frame.elapsed());
+            let t_write = Instant::now();
+            let ok = stream.write_all(&bytes).is_ok();
+            if obs::enabled() {
+                let mut trace = Trace::begin(id);
+                trace.set(Stage::Accept, accept_ns);
+                trace.set(Stage::Decode, decode_ns);
+                trace.set(Stage::QueueWait, spans.queue_ns);
+                trace.set(Stage::Assembly, spans.assembly_ns);
+                trace.set(Stage::Compute, spans.compute_ns);
+                trace.set(Stage::Frame, frame_ns);
+                trace.set(Stage::Write, dur_ns(t_write.elapsed()));
+                // server-side request time: everything except the peer's
+                // handshake pacing
+                obs::hist(HistId::NetRequest).record_ns(
+                    trace.total_ns().saturating_sub(accept_ns),
+                );
+                if ctx.traces.record(&trace) {
+                    obs::counter(CounterId::TracesRecorded).inc();
+                } else {
+                    obs::counter(CounterId::TracesDropped).inc();
+                }
+            }
+            ok
         }
         Err((code, message)) => {
-            ctx.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.inc_failed();
             fail(stream, code, message)
         }
     }
 }
 
-/// Submit a request's rows to the batch server and collect the logits.
+/// Submit a request's rows to the batch server and collect the logits
+/// plus the batch-plane span times.
 ///
 /// The single-row fast path moves the frame-decoded `Vec<f32>` straight
 /// into the job — the engine gathers from that buffer in place, so the
@@ -531,16 +684,24 @@ fn answer_request(stream: &mut TcpStream, ctx: &ConnCtx, req: RequestFrame) -> b
 fn submit_rows(
     ctx: &ConnCtx,
     req: RequestFrame,
-) -> std::result::Result<Vec<f32>, (ErrorCode, String)> {
+) -> std::result::Result<(Vec<f32>, PipelineSpans), (ErrorCode, String)> {
     let rows = req.rows as usize;
     let stopping = |e: String| (ErrorCode::ShuttingDown, e);
     let dropped = || (ErrorCode::Internal, "server dropped the request".to_string());
+    let mut spans = PipelineSpans::default();
     if rows == 1 {
         let (tx, rx) = mpsc::channel();
         ctx.client.submit(&req.model, req.data, tx).map_err(stopping)?;
         return match rx.recv() {
-            Ok(Ok(logits)) => Ok(logits),
-            Ok(Err(msg)) => Err((ErrorCode::Internal, msg)),
+            Ok(o) => {
+                spans.queue_ns = o.queue_ns;
+                spans.assembly_ns = o.assembly_ns;
+                spans.compute_ns = o.compute_ns;
+                match o.result {
+                    Ok(logits) => Ok((logits, spans)),
+                    Err(msg) => Err((ErrorCode::Internal, msg)),
+                }
+            }
             Err(_) => Err(dropped()),
         };
     }
@@ -555,12 +716,20 @@ fn submit_rows(
     let mut out = Vec::new();
     for rx in pending {
         match rx.recv() {
-            Ok(Ok(logits)) => out.extend_from_slice(&logits),
-            Ok(Err(msg)) => return Err((ErrorCode::Internal, msg)),
+            Ok(o) => {
+                // the response waits on the slowest row: keep the worst span
+                spans.queue_ns = spans.queue_ns.max(o.queue_ns);
+                spans.assembly_ns = spans.assembly_ns.max(o.assembly_ns);
+                spans.compute_ns = spans.compute_ns.max(o.compute_ns);
+                match o.result {
+                    Ok(logits) => out.extend_from_slice(&logits),
+                    Err(msg) => return Err((ErrorCode::Internal, msg)),
+                }
+            }
             Err(_) => return Err(dropped()),
         }
     }
-    Ok(out)
+    Ok((out, spans))
 }
 
 /// Claim `n` rows of the in-flight budget; `false` (shed) when the budget
@@ -607,5 +776,6 @@ mod tests {
         assert!(c.max_connections >= 1);
         assert!(c.inflight_budget >= 1);
         assert_eq!(c.max_frame_bytes, proto::DEFAULT_MAX_FRAME);
+        assert!(c.trace_slots >= 2);
     }
 }

@@ -1,0 +1,218 @@
+//! Log₂-bucketed latency histograms over relaxed atomics.
+//!
+//! A [`Histogram`] is a fixed array of [`HIST_BUCKETS`] counters: bucket
+//! `i ≥ 1` counts recorded values in `[2^(i-1), 2^i)` nanoseconds (bucket
+//! 0 counts exact zeros; the last bucket absorbs everything above its
+//! floor). Recording is **one relaxed `fetch_add` per value plus one for
+//! the running sum — zero allocation, no lock, no CAS loop** — which is
+//! what lets the serve and net hot paths record every request instead of
+//! retaining a bounded `Vec<f32>` sample window and sorting it on read.
+//!
+//! Percentiles come out of a [`HistogramSnapshot`] by the same
+//! nearest-rank discipline as [`crate::metrics::percentile_sorted`]
+//! (`rank = round(q/100 · (n−1))`, walk the cumulative counts to the
+//! bucket holding that rank), quantized to the bucket's inclusive upper
+//! edge — so a histogram percentile is within one bucket width of the
+//! exact sample percentile, pinned by the parity tests in
+//! `rust/tests/obs.rs`.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log₂ buckets. 64 covers `[1 ns, 2^62 ns ≈ 146 years)` —
+/// every latency this process can observe lands in exactly one bucket.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Bucket index of a nanosecond value: 0 for 0, else `64 − lz(ns)`
+/// clamped into the table (bucket `i ≥ 1` covers `[2^(i-1), 2^i)` ns).
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    ((u64::BITS - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper edge of bucket `idx`, in nanoseconds (0 for bucket 0).
+/// This is the representative a percentile query returns, and it lies in
+/// the same bucket as every value the bucket counted.
+#[inline]
+pub fn bucket_max_ns(idx: usize) -> u64 {
+    if idx == 0 {
+        0
+    } else {
+        (1u64 << idx.min(63)) - 1
+    }
+}
+
+/// A lock-free log₂ latency histogram (see module docs). `const`-
+/// constructible, so registries of histograms are plain `static`s.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub const fn new() -> Histogram {
+        // interior-mutable const: the idiomatic pre-inline-const way to
+        // build an array of atomics; each element is a fresh atomic
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram { buckets: [ZERO; HIST_BUCKETS], sum_ns: AtomicU64::new(0) }
+    }
+
+    /// Record one value, in nanoseconds. Hot path: two relaxed
+    /// `fetch_add`s, zero allocation (asserted in `rust/tests/obs.rs`).
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one [`Duration`] (saturating at `u64::MAX` ns).
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Point-in-time copy of the bucket counts (relaxed reads; counts
+    /// recorded concurrently may or may not be included).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for (c, b) in counts.iter_mut().zip(&self.buckets) {
+            *c = b.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot { counts, sum_ns: self.sum_ns.load(Ordering::Relaxed) }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Frozen bucket counts; all derived statistics read from here so one
+/// snapshot yields a consistent set of percentiles.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    /// Count per log₂ bucket (see [`bucket_index`]).
+    pub counts: [u64; HIST_BUCKETS],
+    /// Sum of every recorded value, nanoseconds.
+    pub sum_ns: u64,
+}
+
+impl HistogramSnapshot {
+    /// Total values recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Nearest-rank percentile (`q ∈ [0, 100]`), quantized to the holding
+    /// bucket's inclusive upper edge, in nanoseconds. Same rank formula as
+    /// [`crate::metrics::percentile_sorted`]; 0 on an empty histogram.
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q / 100.0) * (total - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_max_ns(i);
+            }
+        }
+        bucket_max_ns(HIST_BUCKETS - 1)
+    }
+
+    /// [`HistogramSnapshot::percentile_ns`] in milliseconds.
+    pub fn percentile_ms(&self, q: f64) -> f32 {
+        (self.percentile_ns(q) as f64 / 1e6) as f32
+    }
+
+    /// Upper edge of the highest non-empty bucket, nanoseconds (an upper
+    /// bound on the worst recorded value, within one bucket width).
+    pub fn max_ns(&self) -> u64 {
+        match self.counts.iter().rposition(|&c| c > 0) {
+            Some(i) => bucket_max_ns(i),
+            None => 0,
+        }
+    }
+
+    /// [`HistogramSnapshot::max_ns`] in milliseconds.
+    pub fn max_ms(&self) -> f32 {
+        (self.max_ns() as f64 / 1e6) as f32
+    }
+
+    /// Mean recorded value, nanoseconds (exact — from the running sum, not
+    /// the buckets); 0.0 when empty.
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / n as f64
+        }
+    }
+
+    /// Summary object for the stats snapshot: count, mean and tail
+    /// percentiles in milliseconds.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count() as usize)),
+            ("mean_ms", Json::from(self.mean_ns() / 1e6)),
+            ("p50_ms", Json::from(self.percentile_ms(50.0) as f64)),
+            ("p90_ms", Json::from(self.percentile_ms(90.0) as f64)),
+            ("p99_ms", Json::from(self.percentile_ms(99.0) as f64)),
+            ("max_ms", Json::from(self.max_ms() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // every power of two starts a fresh bucket, and the inclusive
+        // upper edge lies in the bucket it represents
+        for i in 1..63usize {
+            assert_eq!(bucket_index(1u64 << (i - 1)), i, "floor of bucket {i}");
+            assert_eq!(bucket_index(bucket_max_ns(i)), i, "edge of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn percentiles_walk_the_cumulative_counts() {
+        let h = Histogram::new();
+        // 10 values in bucket 4 ([8, 16)), 10 in bucket 8 ([128, 256))
+        for _ in 0..10 {
+            h.record_ns(10);
+            h.record_ns(200);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 20);
+        assert_eq!(s.percentile_ns(0.0), bucket_max_ns(bucket_index(10)));
+        assert_eq!(s.percentile_ns(100.0), bucket_max_ns(bucket_index(200)));
+        assert_eq!(s.max_ns(), bucket_max_ns(bucket_index(200)));
+        assert_eq!(s.sum_ns, 10 * 10 + 10 * 200);
+        assert!((s.mean_ns() - 105.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.percentile_ns(50.0), 0);
+        assert_eq!(s.max_ns(), 0);
+        assert_eq!(s.mean_ns(), 0.0);
+    }
+}

@@ -1,0 +1,469 @@
+//! Process-wide observability plane: metrics registry, trace ring, and
+//! snapshot exposition.
+//!
+//! The plane has three pieces, threaded through every serving layer:
+//!
+//! * **Registry** — statically-registered [`Counter`]s, [`Gauge`]s and
+//!   log₂-bucketed latency [`Histogram`]s (see [`hist`]), addressed by
+//!   the [`CounterId`]/[`GaugeId`]/[`HistId`] enums. The whole registry
+//!   is one `static` of fixed-size atomic arrays: recording is a relaxed
+//!   `fetch_add` — zero-alloc, lock-free — so hot paths record every
+//!   event instead of sampling into a `Vec<f32>` and sorting on read.
+//! * **Trace spans** — per-request [`trace::Trace`] records carrying the
+//!   wire request id through accept → decode → queue wait → assembly →
+//!   compute → frame → write, retained in a bounded overwrite-oldest
+//!   [`trace::TraceRing`].
+//! * **Exposition** — [`Registry::snapshot_json`] renders the registry
+//!   for the LCQ-RPC `Stats` frame (`net::proto`), the `stats` CLI
+//!   command, and periodic dumps driven by the config `obs` section.
+//!
+//! Subsystems that need *exact* per-instance counts (the net server's
+//! shed accounting, the batch server's request totals) keep their own
+//! per-instance atomics and additionally mirror into this global
+//! registry; the registry is the process-wide aggregate view. Global
+//! mirroring and tracing can be switched off wholesale with
+//! [`set_enabled`] — `benches/bench_obs.rs` uses this for the
+//! instrumented-vs-uninstrumented A/B.
+
+#![warn(missing_docs)]
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Histogram, HistogramSnapshot, HIST_BUCKETS};
+pub use trace::{Stage, Trace, TraceRing, STAGES};
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Monotonic event counters, one per enum variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum CounterId {
+    /// TCP connections accepted by the net server.
+    NetConnections = 0,
+    /// Connections shed at accept (connection limit).
+    NetConnectionsShed = 1,
+    /// Wire requests answered successfully.
+    NetRequestsOk = 2,
+    /// Wire requests shed (inflight budget exhausted).
+    NetRequestsShed = 3,
+    /// Wire requests answered with an error frame.
+    NetRequestsFailed = 4,
+    /// Stats frames served.
+    NetStatsRequests = 5,
+    /// Requests entering the micro-batch server.
+    ServeRequests = 6,
+    /// Batches executed by the micro-batch server.
+    ServeBatches = 7,
+    /// Requests that rode in a batch (sum of batch sizes).
+    ServeBatchedRequests = 8,
+    /// Requests answered with an error by the micro-batch server.
+    ServeErrors = 9,
+    /// Traces published into the global ring.
+    TracesRecorded = 10,
+    /// Traces dropped by the ring (slot contention).
+    TracesDropped = 11,
+    /// LC outer iterations completed.
+    LcIterations = 12,
+}
+
+/// Number of [`CounterId`] variants.
+pub const COUNTERS: usize = 13;
+
+impl CounterId {
+    /// All counters, declaration order.
+    pub const ALL: [CounterId; COUNTERS] = [
+        CounterId::NetConnections,
+        CounterId::NetConnectionsShed,
+        CounterId::NetRequestsOk,
+        CounterId::NetRequestsShed,
+        CounterId::NetRequestsFailed,
+        CounterId::NetStatsRequests,
+        CounterId::ServeRequests,
+        CounterId::ServeBatches,
+        CounterId::ServeBatchedRequests,
+        CounterId::ServeErrors,
+        CounterId::TracesRecorded,
+        CounterId::TracesDropped,
+        CounterId::LcIterations,
+    ];
+
+    /// Stable snake_case name (the JSON key in snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            CounterId::NetConnections => "net_connections",
+            CounterId::NetConnectionsShed => "net_connections_shed",
+            CounterId::NetRequestsOk => "net_requests_ok",
+            CounterId::NetRequestsShed => "net_requests_shed",
+            CounterId::NetRequestsFailed => "net_requests_failed",
+            CounterId::NetStatsRequests => "net_stats_requests",
+            CounterId::ServeRequests => "serve_requests",
+            CounterId::ServeBatches => "serve_batches",
+            CounterId::ServeBatchedRequests => "serve_batched_requests",
+            CounterId::ServeErrors => "serve_errors",
+            CounterId::TracesRecorded => "traces_recorded",
+            CounterId::TracesDropped => "traces_dropped",
+            CounterId::LcIterations => "lc_iterations",
+        }
+    }
+}
+
+/// Last-value gauges (stored as `f64` bits), one per enum variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum GaugeId {
+    /// Current LC outer iteration (1-based).
+    LcIter = 0,
+    /// Current LC penalty parameter μ.
+    LcMu = 1,
+    /// L-step loss of the latest LC iteration.
+    LcLoss = 2,
+    /// Feasibility norm ‖w − Δ(θ)‖ of the latest LC iteration.
+    LcFeasibility = 3,
+    /// Wall time of the latest L step, milliseconds.
+    LcLstepMs = 4,
+    /// Wall time of the latest C step, milliseconds.
+    LcCstepMs = 5,
+}
+
+/// Number of [`GaugeId`] variants.
+pub const GAUGES: usize = 6;
+
+impl GaugeId {
+    /// All gauges, declaration order.
+    pub const ALL: [GaugeId; GAUGES] = [
+        GaugeId::LcIter,
+        GaugeId::LcMu,
+        GaugeId::LcLoss,
+        GaugeId::LcFeasibility,
+        GaugeId::LcLstepMs,
+        GaugeId::LcCstepMs,
+    ];
+
+    /// Stable snake_case name (the JSON key in snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            GaugeId::LcIter => "lc_iter",
+            GaugeId::LcMu => "lc_mu",
+            GaugeId::LcLoss => "lc_loss",
+            GaugeId::LcFeasibility => "lc_feasibility",
+            GaugeId::LcLstepMs => "lc_lstep_ms",
+            GaugeId::LcCstepMs => "lc_cstep_ms",
+        }
+    }
+}
+
+/// Latency histograms, one per enum variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum HistId {
+    /// Micro-batch server: request enqueue → reply, end to end.
+    ServeLatency = 0,
+    /// Micro-batch server: time waiting in the batcher queue.
+    ServeQueueWait = 1,
+    /// Micro-batch server: batch cut → executor pickup.
+    ServeAssembly = 2,
+    /// Micro-batch server: forward pass wall time.
+    ServeCompute = 3,
+    /// Net server: request decode → response written.
+    NetRequest = 4,
+    /// Net server: connection handshake duration.
+    NetHandshake = 5,
+    /// LC loop: L-step wall time.
+    LcLstep = 6,
+    /// LC loop: C-step wall time.
+    LcCstep = 7,
+}
+
+/// Number of [`HistId`] variants.
+pub const HISTS: usize = 8;
+
+impl HistId {
+    /// All histograms, declaration order.
+    pub const ALL: [HistId; HISTS] = [
+        HistId::ServeLatency,
+        HistId::ServeQueueWait,
+        HistId::ServeAssembly,
+        HistId::ServeCompute,
+        HistId::NetRequest,
+        HistId::NetHandshake,
+        HistId::LcLstep,
+        HistId::LcCstep,
+    ];
+
+    /// Stable snake_case name (the JSON key in snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            HistId::ServeLatency => "serve_latency",
+            HistId::ServeQueueWait => "serve_queue_wait",
+            HistId::ServeAssembly => "serve_assembly",
+            HistId::ServeCompute => "serve_compute",
+            HistId::NetRequest => "net_request",
+            HistId::NetHandshake => "net_handshake",
+            HistId::LcLstep => "lc_lstep",
+            HistId::LcCstep => "lc_cstep",
+        }
+    }
+}
+
+/// One monotonic counter (relaxed atomic).
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter.
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// One last-value gauge: an `f64` stored as bits in a relaxed atomic.
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A gauge reading 0.0.
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+    /// Store a value (exact — the f64 bits are kept verbatim, so reads
+    /// are bit-identical to what was written; the LC parity test in
+    /// `rust/tests/obs.rs` depends on this).
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// The metrics registry: fixed arrays of counters, gauges and histograms
+/// indexed by the id enums. Fully `const`-constructible.
+pub struct Registry {
+    counters: [Counter; COUNTERS],
+    gauges: [Gauge; GAUGES],
+    hists: [Histogram; HISTS],
+}
+
+impl Registry {
+    /// An all-zero registry.
+    pub const fn new() -> Registry {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const C: Counter = Counter::new();
+        #[allow(clippy::declare_interior_mutable_const)]
+        const G: Gauge = Gauge::new();
+        #[allow(clippy::declare_interior_mutable_const)]
+        const H: Histogram = Histogram::new();
+        Registry { counters: [C; COUNTERS], gauges: [G; GAUGES], hists: [H; HISTS] }
+    }
+
+    /// The counter for `id`.
+    #[inline]
+    pub fn counter(&self, id: CounterId) -> &Counter {
+        &self.counters[id as usize]
+    }
+
+    /// The gauge for `id`.
+    #[inline]
+    pub fn gauge(&self, id: GaugeId) -> &Gauge {
+        &self.gauges[id as usize]
+    }
+
+    /// The histogram for `id`.
+    #[inline]
+    pub fn hist(&self, id: HistId) -> &Histogram {
+        &self.hists[id as usize]
+    }
+
+    /// Render the registry as a JSON object:
+    /// `{"counters": {name: n, ...}, "gauges": {...}, "histograms":
+    /// {name: {count, mean_ms, p50_ms, p90_ms, p99_ms, max_ms}, ...}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let counters = CounterId::ALL
+            .iter()
+            .map(|&id| (id.name(), Json::from(self.counter(id).get() as usize)))
+            .collect();
+        let gauges =
+            GaugeId::ALL.iter().map(|&id| (id.name(), Json::from(self.gauge(id).get()))).collect();
+        let hists = HistId::ALL
+            .iter()
+            .map(|&id| (id.name(), self.hist(id).snapshot().to_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::obj(counters)),
+            ("gauges", Json::obj(gauges)),
+            ("histograms", Json::obj(hists)),
+        ])
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+/// The process-wide registry.
+static GLOBAL: Registry = Registry::new();
+
+/// Whether global mirroring + tracing is on (default: on). Per-instance
+/// stats in `serve`/`net` always record regardless.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// The process-wide [`Registry`].
+#[inline]
+pub fn global() -> &'static Registry {
+    &GLOBAL
+}
+
+/// Shorthand for `global().counter(id)`.
+#[inline]
+pub fn counter(id: CounterId) -> &'static Counter {
+    GLOBAL.counter(id)
+}
+
+/// Shorthand for `global().gauge(id)`.
+#[inline]
+pub fn gauge(id: GaugeId) -> &'static Gauge {
+    GLOBAL.gauge(id)
+}
+
+/// Shorthand for `global().hist(id)`.
+#[inline]
+pub fn hist(id: HistId) -> &'static Histogram {
+    GLOBAL.hist(id)
+}
+
+/// Is global mirroring + tracing enabled?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Switch global mirroring + tracing on/off process-wide (the
+/// instrumented-vs-uninstrumented bench toggle).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Record one LC outer iteration into the registry: counters, gauges and
+/// the L/C step histograms. The gauge values are stored bit-exact so they
+/// match `metrics::History` records produced from the same `f64` casts.
+pub fn lc_iteration(iter: usize, mu: f64, loss: f64, feasibility: f64, lstep_ns: u64, cstep_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    counter(CounterId::LcIterations).inc();
+    gauge(GaugeId::LcIter).set(iter as f64);
+    gauge(GaugeId::LcMu).set(mu);
+    gauge(GaugeId::LcLoss).set(loss);
+    gauge(GaugeId::LcFeasibility).set(feasibility);
+    gauge(GaugeId::LcLstepMs).set(lstep_ns as f64 / 1e6);
+    gauge(GaugeId::LcCstepMs).set(cstep_ns as f64 / 1e6);
+    hist(HistId::LcLstep).record_ns(lstep_ns);
+    hist(HistId::LcCstep).record_ns(cstep_ns);
+}
+
+/// Render a slice of traces for the stats snapshot: each trace becomes
+/// `{"id": n, "total_ms": x, "stages": {accept: ms, ...}}`.
+pub fn traces_json(traces: &[Trace]) -> Json {
+    let items: Vec<Json> = traces
+        .iter()
+        .map(|t| {
+            let stages = Stage::ALL
+                .iter()
+                .map(|&s| (s.name(), Json::from(t.stage_ns[s as usize] as f64 / 1e6)))
+                .collect();
+            Json::obj(vec![
+                ("id", Json::from(t.id as usize)),
+                ("total_ms", Json::from(t.total_ns() as f64 / 1e6)),
+                ("stages", Json::obj(stages)),
+            ])
+        })
+        .collect();
+    Json::Arr(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_enums_are_dense_and_named() {
+        for (i, id) in CounterId::ALL.iter().enumerate() {
+            assert_eq!(*id as usize, i);
+            assert!(!id.name().is_empty());
+        }
+        for (i, id) in GaugeId::ALL.iter().enumerate() {
+            assert_eq!(*id as usize, i);
+            assert!(!id.name().is_empty());
+        }
+        for (i, id) in HistId::ALL.iter().enumerate() {
+            assert_eq!(*id as usize, i);
+            assert!(!id.name().is_empty());
+        }
+        // names are unique (they are JSON keys)
+        let mut names: Vec<&str> = CounterId::ALL.iter().map(|i| i.name()).collect();
+        names.extend(GaugeId::ALL.iter().map(|i| i.name()));
+        names.extend(HistId::ALL.iter().map(|i| i.name()));
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate metric name");
+    }
+
+    #[test]
+    fn gauge_round_trips_bits() {
+        let g = Gauge::new();
+        for v in [0.0, -0.0, 1.5, f64::MIN_POSITIVE, 1e300, f64::INFINITY] {
+            g.set(v);
+            assert_eq!(g.get().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn registry_snapshot_contains_every_metric() {
+        let r = Registry::new();
+        r.counter(CounterId::ServeRequests).add(3);
+        r.gauge(GaugeId::LcMu).set(0.25);
+        r.hist(HistId::ServeLatency).record_ns(1000);
+        let j = r.snapshot_json();
+        let counters = j.get("counters").unwrap();
+        for id in CounterId::ALL {
+            assert!(counters.get(id.name()).is_some(), "missing counter {}", id.name());
+        }
+        assert_eq!(counters.get("serve_requests").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("gauges").unwrap().get("lc_mu").unwrap().as_f64().unwrap(), 0.25);
+        let h = j.get("histograms").unwrap().get("serve_latency").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64().unwrap(), 1.0);
+    }
+}

@@ -1,0 +1,306 @@
+//! Per-request trace spans and the bounded ring that retains them.
+//!
+//! A [`Trace`] follows one wire request through the serving pipeline,
+//! timing each [`Stage`]: accept (connection handshake), decode, queue
+//! wait, batch assembly, pool compute, frame, write. Finished traces are
+//! recorded into a [`TraceRing`] — a fixed-size ring of slots claimed by
+//! a single atomic cursor `fetch_add`, the same cell-claim idiom as
+//! `util::mpmc` — that **overwrites oldest and never blocks**: a writer
+//! that loses the race for a slot (the previous writer is still mid-
+//! publish) drops the trace and bumps the `TracesDropped` counter rather
+//! than spinning.
+//!
+//! Each slot is a sequence counter plus a fixed array of plain atomic
+//! words (request id, total, per-stage nanoseconds). The sequence is a
+//! publication guard in the seqlock style — even = stable, odd = being
+//! written — but the payload words are themselves relaxed atomics, so a
+//! torn read is impossible at the language level; the sequence check only
+//! rejects *mixed* (partly-old, partly-new) snapshots.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Pipeline stages a request passes through, in order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// Connection handshake (shared by every request on the connection).
+    Accept = 0,
+    /// Frame checksum verification + payload decode.
+    Decode = 1,
+    /// Waiting in the batcher queue before a batch was cut.
+    QueueWait = 2,
+    /// Batch assembly: batch cut until the executor picked it up.
+    Assembly = 3,
+    /// Forward pass in the compute pool.
+    Compute = 4,
+    /// Response frame encode.
+    Frame = 5,
+    /// Response write to the socket.
+    Write = 6,
+}
+
+/// Number of [`Stage`] variants.
+pub const STAGES: usize = 7;
+
+impl Stage {
+    /// All stages, pipeline order.
+    pub const ALL: [Stage; STAGES] = [
+        Stage::Accept,
+        Stage::Decode,
+        Stage::QueueWait,
+        Stage::Assembly,
+        Stage::Compute,
+        Stage::Frame,
+        Stage::Write,
+    ];
+
+    /// Stable display name (used as the JSON key in snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Decode => "decode",
+            Stage::QueueWait => "queue_wait",
+            Stage::Assembly => "assembly",
+            Stage::Compute => "compute",
+            Stage::Frame => "frame",
+            Stage::Write => "write",
+        }
+    }
+}
+
+/// One request's span record, built up stage by stage on the connection
+/// thread and published to a [`TraceRing`] when the response is written.
+/// Plain value type — building and finishing a trace allocates nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct Trace {
+    /// Wire request id (`RequestFrame::id`).
+    pub id: u64,
+    /// Per-stage wall time, nanoseconds, indexed by [`Stage`].
+    pub stage_ns: [u64; STAGES],
+    start: Option<Instant>,
+}
+
+impl Trace {
+    /// Start a trace for wire request `id`.
+    pub fn begin(id: u64) -> Trace {
+        Trace { id, stage_ns: [0; STAGES], start: Some(Instant::now()) }
+    }
+
+    /// A trace with no timing clock (for decoded/stored records).
+    pub fn from_parts(id: u64, stage_ns: [u64; STAGES]) -> Trace {
+        Trace { id, stage_ns, start: None }
+    }
+
+    /// Set one stage's duration directly.
+    #[inline]
+    pub fn set(&mut self, stage: Stage, ns: u64) {
+        self.stage_ns[stage as usize] = ns;
+    }
+
+    /// Total across all stages, nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.stage_ns.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    /// Wall time since [`Trace::begin`], nanoseconds (0 without a clock).
+    pub fn elapsed_ns(&self) -> u64 {
+        match self.start {
+            Some(t) => u64::try_from(t.elapsed().as_nanos()).unwrap_or(u64::MAX),
+            None => 0,
+        }
+    }
+}
+
+/// Words per ring slot: request id, total, then one word per stage.
+const SLOT_WORDS: usize = 2 + STAGES;
+
+struct TraceSlot {
+    /// Even = stable, odd = mid-write, 0 = never written.
+    seq: AtomicU64,
+    words: [AtomicU64; SLOT_WORDS],
+}
+
+impl TraceSlot {
+    const fn new() -> TraceSlot {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        TraceSlot { seq: AtomicU64::new(0), words: [ZERO; SLOT_WORDS] }
+    }
+}
+
+/// Bounded lock-free ring of recent traces (see module docs). Capacity is
+/// rounded up to a power of two so the claim cursor can mask instead of
+/// divide.
+pub struct TraceRing {
+    slots: Vec<TraceSlot>,
+    mask: u64,
+    cursor: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    /// A ring retaining the most recent `capacity.next_power_of_two()`
+    /// traces (minimum 2).
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.max(2).next_power_of_two();
+        let mut slots = Vec::with_capacity(cap);
+        for _ in 0..cap {
+            slots.push(TraceSlot::new());
+        }
+        TraceRing { slots, mask: (cap as u64) - 1, cursor: AtomicU64::new(0), dropped: AtomicU64::new(0) }
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Traces dropped because a slot was still being published.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Publish a finished trace. Never blocks: claims a slot by a single
+    /// `fetch_add`, and if that slot is mid-publish by a lapped writer the
+    /// trace is counted as dropped instead. Zero-alloc (asserted in
+    /// `rust/tests/obs.rs`).
+    pub fn record(&self, trace: &Trace) -> bool {
+        let idx = (self.cursor.fetch_add(1, Ordering::Relaxed) & self.mask) as usize;
+        let slot = &self.slots[idx];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        if seq & 1 == 1
+            || slot
+                .seq
+                .compare_exchange(seq, seq + 1, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        slot.words[0].store(trace.id, Ordering::Relaxed);
+        slot.words[1].store(trace.total_ns(), Ordering::Relaxed);
+        for (w, &ns) in slot.words[2..].iter().zip(trace.stage_ns.iter()) {
+            w.store(ns, Ordering::Relaxed);
+        }
+        slot.seq.store(seq + 2, Ordering::Release);
+        true
+    }
+
+    /// Stable snapshot of every published trace, unordered. Slots caught
+    /// mid-write are skipped (they will appear in a later snapshot).
+    pub fn snapshot(&self) -> Vec<Trace> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue;
+            }
+            let id = slot.words[0].load(Ordering::Relaxed);
+            let mut stage_ns = [0u64; STAGES];
+            for (ns, w) in stage_ns.iter_mut().zip(&slot.words[2..]) {
+                *ns = w.load(Ordering::Relaxed);
+            }
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue;
+            }
+            out.push(Trace::from_parts(id, stage_ns));
+        }
+        out
+    }
+
+    /// The `n` slowest published traces by total time, slowest first.
+    pub fn slowest(&self, n: usize) -> Vec<Trace> {
+        let mut all = self.snapshot();
+        all.sort_by(|a, b| b.total_ns().cmp(&a.total_ns()));
+        all.truncate(n);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(id: u64, base: u64) -> Trace {
+        let mut t = Trace::begin(id);
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            t.set(*st, base + i as u64);
+        }
+        t
+    }
+
+    #[test]
+    fn record_and_snapshot_round_trip() {
+        let ring = TraceRing::new(8);
+        assert!(ring.record(&mk(7, 100)));
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 7);
+        assert_eq!(got[0].stage_ns[Stage::Compute as usize], 104);
+        assert_eq!(got[0].total_ns(), (100..107).sum::<u64>());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let ring = TraceRing::new(4);
+        for id in 0..10u64 {
+            ring.record(&mk(id, 0));
+        }
+        let ids: Vec<u64> = ring.snapshot().iter().map(|t| t.id).collect();
+        assert_eq!(ids.len(), 4);
+        // last 4 records survive
+        for id in 6..10u64 {
+            assert!(ids.contains(&id), "missing id {id} in {ids:?}");
+        }
+    }
+
+    #[test]
+    fn slowest_sorts_by_total() {
+        let ring = TraceRing::new(8);
+        ring.record(&mk(1, 10));
+        ring.record(&mk(2, 1000));
+        ring.record(&mk(3, 100));
+        let top = ring.slowest(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].id, 2);
+        assert_eq!(top[1].id, 3);
+    }
+
+    #[test]
+    fn concurrent_writers_never_block_and_snapshots_stay_consistent() {
+        let ring = std::sync::Arc::new(TraceRing::new(16));
+        let mut handles = Vec::new();
+        for w in 0..4u64 {
+            let r = std::sync::Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    // stage values derived from id so a mixed snapshot is detectable
+                    let id = w * 1_000_000 + i;
+                    let mut t = Trace::begin(id);
+                    for st in Stage::ALL {
+                        t.set(st, id);
+                    }
+                    r.record(&t);
+                }
+            }));
+        }
+        let reader = {
+            let r = std::sync::Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for _ in 0..200 {
+                    for t in r.snapshot() {
+                        for st in Stage::ALL {
+                            assert_eq!(t.stage_ns[st as usize], t.id, "torn trace");
+                        }
+                    }
+                }
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        reader.join().unwrap();
+    }
+}

@@ -60,4 +60,4 @@ pub mod server;
 pub use engine::{EngineScratch, LutEngine};
 pub use packed::{PackedLayer, PackedModel};
 pub use registry::{LoadedModel, ModelInfo, Registry};
-pub use server::{Client, MicroBatchServer, ServerConfig, StatsSnapshot};
+pub use server::{Client, JobOutcome, MicroBatchServer, ServeStats, ServerConfig, StatsSnapshot};

@@ -24,8 +24,13 @@
 //! execution performs no activation allocations *and no per-request input
 //! copy* — the buffer a client (or the network plane's frame decoder)
 //! hands to [`Client::submit`] is the buffer the engine gathers from.
-//! Per-request latency is recorded (bounded sample window) for p50/p90/p99
-//! reporting.
+//!
+//! Per-request observability rides the reply path: every answer is a
+//! [`JobOutcome`] carrying queue-wait / batch-assembly / compute span
+//! times alongside the logits, and the server records every request into
+//! a lock-free [`ServeStats`] (atomic counters + [`obs`] log₂ latency
+//! histograms — no mutex, no retained sample `Vec`, no sort on read) that
+//! also mirrors into the process-wide [`obs`] registry.
 //!
 //! Requests travel client → batcher over `mpsc`; coalesced groups travel
 //! batcher → executors over a **lock-free bounded MPMC ring**
@@ -36,10 +41,12 @@
 
 use super::engine::EngineScratch;
 use super::registry::Registry;
+use crate::obs::{self, CounterId, Histogram, HistId};
+use crate::util::json::Json;
 use crate::util::mpmc::RingQueue;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -47,11 +54,6 @@ use std::time::{Duration, Instant};
 /// hold live `Sender` clones, so channel disconnection alone cannot signal
 /// shutdown).
 const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
-
-/// Cap on retained latency samples: when full, the oldest half is dropped,
-/// so memory stays bounded on a long-running server and percentiles lean
-/// towards recent traffic. Totals are tracked separately in counters.
-const STATS_CAP: usize = 65_536;
 
 /// Batching and pipelining knobs.
 #[derive(Clone, Debug)]
@@ -78,37 +80,137 @@ impl Default for ServerConfig {
     }
 }
 
+/// What comes back on a reply channel: the result plus the request's span
+/// times through the batching pipeline, so the caller (e.g. the network
+/// plane's trace recorder) sees where the latency went without any side
+/// channel.
+#[derive(Debug)]
+pub struct JobOutcome {
+    /// The logits, or an error string.
+    pub result: Result<Vec<f32>, String>,
+    /// Time spent waiting in the batcher queue (enqueue → batch cut), ns.
+    pub queue_ns: u64,
+    /// Batch assembly time (batch cut → executor pickup), ns.
+    pub assembly_ns: u64,
+    /// Batched forward-pass wall time, ns.
+    pub compute_ns: u64,
+    /// Size of the batch this request rode in.
+    pub batch_size: u32,
+}
+
 struct Job {
     model: String,
     input: Vec<f32>,
     enqueued: Instant,
-    reply: Sender<Result<Vec<f32>, String>>,
+    reply: Sender<JobOutcome>,
 }
 
 /// One per-model group of coalesced jobs, the unit handed to an executor.
 struct BatchGroup {
     model: String,
     jobs: Vec<Job>,
+    /// When the batcher cut this group (queue wait ends, assembly begins).
+    assembled: Instant,
 }
 
+/// Lock-free request statistics: all-time counters plus log₂ latency
+/// histograms, every field a relaxed atomic. The recording path (one
+/// `fetch_add` per counter/bucket) is zero-alloc and lock-free — asserted
+/// by the counting-allocator test in `rust/tests/obs.rs`. Shared between
+/// the executors, [`MicroBatchServer::stats`], and (via
+/// [`MicroBatchServer::stats_handle`]) the network plane's `Stats` frame —
+/// so a snapshot is valid at every lifecycle point, including after the
+/// server stopped.
 #[derive(Default)]
-struct Stats {
-    /// Recent per-request latencies (bounded by [`STATS_CAP`]).
-    latencies_ms: Vec<f32>,
-    /// All-time counters.
-    requests: usize,
-    batches: usize,
-    batched_requests: usize,
-    errors: usize,
+pub struct ServeStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    errors: AtomicU64,
+    /// End-to-end request latency (enqueue → reply).
+    latency: Histogram,
+    queue_wait: Histogram,
+    assembly: Histogram,
+    compute: Histogram,
 }
 
-impl Stats {
-    fn push_latency(&mut self, ms: f32) {
-        if self.latencies_ms.len() >= STATS_CAP {
-            self.latencies_ms.drain(..STATS_CAP / 2);
+impl ServeStats {
+    /// Record one executed group: `ns` spans apply batch-wide, the latency
+    /// histogram gets one sample per job.
+    fn record_group(
+        &self,
+        batch: usize,
+        errors: usize,
+        queue_ns: &[u64],
+        latency_ns: &[u64],
+        assembly_ns: u64,
+        compute_ns: u64,
+    ) {
+        self.requests.fetch_add(batch as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(batch as u64, Ordering::Relaxed);
+        self.errors.fetch_add(errors as u64, Ordering::Relaxed);
+        self.assembly.record_ns(assembly_ns);
+        self.compute.record_ns(compute_ns);
+        for (&q, &l) in queue_ns.iter().zip(latency_ns) {
+            self.queue_wait.record_ns(q);
+            self.latency.record_ns(l);
         }
-        self.latencies_ms.push(ms);
-        self.requests += 1;
+        if obs::enabled() {
+            obs::counter(CounterId::ServeRequests).add(batch as u64);
+            obs::counter(CounterId::ServeBatches).inc();
+            obs::counter(CounterId::ServeBatchedRequests).add(batch as u64);
+            obs::counter(CounterId::ServeErrors).add(errors as u64);
+            obs::hist(HistId::ServeAssembly).record_ns(assembly_ns);
+            obs::hist(HistId::ServeCompute).record_ns(compute_ns);
+            for (&q, &l) in queue_ns.iter().zip(latency_ns) {
+                obs::hist(HistId::ServeQueueWait).record_ns(q);
+                obs::hist(HistId::ServeLatency).record_ns(l);
+            }
+        }
+    }
+
+    /// Requests answered so far.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time summary (histogram percentiles, exact counters).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let lat = self.latency.snapshot();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_requests.load(Ordering::Relaxed);
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed) as usize,
+            batches: batches as usize,
+            errors: self.errors.load(Ordering::Relaxed) as usize,
+            p50_ms: lat.percentile_ms(50.0),
+            p90_ms: lat.percentile_ms(90.0),
+            p99_ms: lat.percentile_ms(99.0),
+            max_ms: lat.max_ms(),
+            mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+        }
+    }
+
+    /// Full JSON rendering for the wire `Stats` snapshot: counters plus
+    /// every span histogram.
+    pub fn to_json(&self) -> Json {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_requests.load(Ordering::Relaxed);
+        Json::obj(vec![
+            ("requests", Json::from(self.requests.load(Ordering::Relaxed) as usize)),
+            ("batches", Json::from(batches as usize)),
+            ("batched_requests", Json::from(batched as usize)),
+            ("errors", Json::from(self.errors.load(Ordering::Relaxed) as usize)),
+            (
+                "mean_batch",
+                Json::from(if batches == 0 { 0.0 } else { batched as f64 / batches as f64 }),
+            ),
+            ("latency", self.latency.snapshot().to_json()),
+            ("queue_wait", self.queue_wait.snapshot().to_json()),
+            ("assembly", self.assembly.snapshot().to_json()),
+            ("compute", self.compute.snapshot().to_json()),
+        ])
     }
 }
 
@@ -121,13 +223,13 @@ pub struct StatsSnapshot {
     pub batches: usize,
     /// Requests answered with an error.
     pub errors: usize,
-    /// Median request latency over the retained sample window, in ms.
+    /// Median request latency (log₂-histogram percentile), in ms.
     pub p50_ms: f32,
     /// 90th-percentile request latency, in ms.
     pub p90_ms: f32,
     /// 99th-percentile request latency, in ms.
     pub p99_ms: f32,
-    /// Worst retained request latency, in ms.
+    /// Worst recorded request latency (bucket upper edge), in ms.
     pub max_ms: f32,
     /// Mean requests per executed batch group.
     pub mean_batch: f64,
@@ -145,11 +247,12 @@ impl Client {
     pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Vec<f32>, String> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.submit(model, input, reply_tx)?;
-        reply_rx.recv().map_err(|_| "server dropped request".to_string())?
+        reply_rx.recv().map_err(|_| "server dropped request".to_string())?.result
     }
 
     /// Submit one **pre-staged** input row without blocking for the reply;
-    /// the logits (or an error string) arrive on `reply`.
+    /// a [`JobOutcome`] (logits or error, plus pipeline span times)
+    /// arrives on `reply`.
     ///
     /// The row `Vec` is handed to the engine as-is: the executors gather
     /// straight from it via
@@ -167,7 +270,7 @@ impl Client {
         &self,
         model: &str,
         input: Vec<f32>,
-        reply: Sender<Result<Vec<f32>, String>>,
+        reply: Sender<JobOutcome>,
     ) -> Result<(), String> {
         self.tx
             .send(Job {
@@ -186,7 +289,7 @@ pub struct MicroBatchServer {
     tx: Option<Sender<Job>>,
     batcher: Option<JoinHandle<()>>,
     executors: Vec<JoinHandle<()>>,
-    stats: Arc<Mutex<Stats>>,
+    stats: Arc<ServeStats>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -199,7 +302,7 @@ impl MicroBatchServer {
         // a few groups of slack beyond the executor count: the batcher can
         // stay ahead without the ring ever becoming an unbounded buffer
         let queue = Arc::new(RingQueue::<BatchGroup>::new((depth * 2).max(8)));
-        let stats = Arc::new(Mutex::new(Stats::default()));
+        let stats = Arc::new(ServeStats::default());
         let shutdown = Arc::new(AtomicBool::new(false));
         let executors = (0..depth)
             .map(|i| {
@@ -231,29 +334,18 @@ impl MicroBatchServer {
         Client { tx: self.tx.as_ref().expect("server running").clone() }
     }
 
-    /// Latency/batching summary so far (percentiles over the retained
-    /// sample window, counters over the server's lifetime).
+    /// Latency/batching summary so far (histogram percentiles, lifetime
+    /// counters). Lock-free: never stalls the executors.
     pub fn stats(&self) -> StatsSnapshot {
-        // sort once outside the lock so the executors are not stalled
-        let (mut lat, requests, batches, batched_requests, errors) = {
-            let s = self.stats.lock().unwrap();
-            (s.latencies_ms.clone(), s.requests, s.batches, s.batched_requests, s.errors)
-        };
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        StatsSnapshot {
-            requests,
-            batches,
-            errors,
-            p50_ms: crate::metrics::percentile_sorted(&lat, 50.0),
-            p90_ms: crate::metrics::percentile_sorted(&lat, 90.0),
-            p99_ms: crate::metrics::percentile_sorted(&lat, 99.0),
-            max_ms: lat.last().copied().unwrap_or(0.0),
-            mean_batch: if batches == 0 {
-                0.0
-            } else {
-                batched_requests as f64 / batches as f64
-            },
-        }
+        self.stats.snapshot()
+    }
+
+    /// A shared handle to the live stats. The handle stays valid after
+    /// [`MicroBatchServer::stop`] — and even after the server is dropped —
+    /// so exposition paths (the network plane's `Stats` frame) can snapshot
+    /// at any lifecycle point without racing the shutdown sequence.
+    pub fn stats_handle(&self) -> Arc<ServeStats> {
+        Arc::clone(&self.stats)
     }
 
     /// Stop accepting requests and join the batcher and executors
@@ -291,6 +383,19 @@ fn batcher_loop(
     queue.close();
 }
 
+/// Answer every job in a group with the same error (shutdown path).
+fn fail_group(group: &BatchGroup, msg: &str) {
+    for job in &group.jobs {
+        let _ = job.reply.send(JobOutcome {
+            result: Err(msg.to_string()),
+            queue_ns: 0,
+            assembly_ns: 0,
+            compute_ns: 0,
+            batch_size: group.jobs.len() as u32,
+        });
+    }
+}
+
 fn batcher_run(
     rx: &Receiver<Job>,
     queue: &RingQueue<BatchGroup>,
@@ -324,12 +429,18 @@ fn batcher_run(
             }
         }
         // stable grouping by model name (preserves request order per
-        // model); each group is one executor work unit
+        // model); each group is one executor work unit. The cut instant
+        // marks the end of every member's queue wait.
+        let assembled = Instant::now();
         let mut groups: Vec<BatchGroup> = Vec::new();
         for job in jobs {
             match groups.iter_mut().find(|g| g.model == job.model) {
                 Some(g) => g.jobs.push(job),
-                None => groups.push(BatchGroup { model: job.model.clone(), jobs: vec![job] }),
+                None => groups.push(BatchGroup {
+                    model: job.model.clone(),
+                    jobs: vec![job],
+                    assembled,
+                }),
             }
         }
         for group in groups {
@@ -337,9 +448,7 @@ fn batcher_run(
             // and the ring is full. Only this thread closes the queue, so
             // a failed push means a shutdown race lost — fail cleanly.
             if let Err(group) = queue.push(group) {
-                for job in &group.jobs {
-                    let _ = job.reply.send(Err("server stopped".to_string()));
-                }
+                fail_group(&group, "server stopped");
                 return;
             }
         }
@@ -353,28 +462,37 @@ fn batcher_run(
 fn executor_loop(
     queue: Arc<RingQueue<BatchGroup>>,
     registry: Arc<Registry>,
-    stats: Arc<Mutex<Stats>>,
+    stats: Arc<ServeStats>,
 ) {
     let mut scratch = EngineScratch::new();
-    let mut latencies = Vec::new();
+    let mut queue_ns = Vec::new();
+    let mut latency_ns = Vec::new();
     // pop returns None only once the batcher closed the ring and every
     // queued group has been drained
     while let Some(group) = queue.pop() {
-        run_group(&registry, group, &stats, &mut scratch, &mut latencies);
+        run_group(&registry, group, &stats, &mut scratch, &mut queue_ns, &mut latency_ns);
     }
 }
 
+#[inline]
+fn dur_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
 /// Forward one per-model group in a single batched engine call and answer
-/// every request. `scratch` and `latencies` are the executor's reusable
-/// buffers.
+/// every request. `scratch` and the span buffers are the executor's
+/// reusable scratch.
 fn run_group(
     registry: &Registry,
     group: BatchGroup,
-    stats: &Arc<Mutex<Stats>>,
+    stats: &Arc<ServeStats>,
     scratch: &mut EngineScratch,
-    latencies: &mut Vec<f32>,
+    queue_ns: &mut Vec<u64>,
+    latency_ns: &mut Vec<u64>,
 ) {
-    let BatchGroup { model, jobs } = group;
+    let BatchGroup { model, jobs, assembled } = group;
+    let picked = Instant::now();
+    let assembly_ns = dur_ns(picked.saturating_duration_since(assembled));
     let outcome: Result<&crate::linalg::Mat, String> = match registry.get(&model) {
         None => Err(format!("model '{model}' not registered")),
         Some(loaded) => {
@@ -392,34 +510,46 @@ fn run_group(
             }
         }
     };
-    // Answer every request and measure latencies *outside* the stats lock:
-    // the per-job row clones and channel sends are O(batch), and holding
-    // the shared mutex across them would serialize the pipeline executors
-    // at the end of every batch.
-    latencies.clear();
+    let compute_ns = dur_ns(picked.elapsed());
+    // Answer every request; span times are reused from the executor's
+    // scratch buffers, and the stats path is all relaxed atomics, so the
+    // pipeline executors never serialize behind a lock at batch end.
+    queue_ns.clear();
+    latency_ns.clear();
+    let batch = jobs.len();
     let errors = match outcome {
         Ok(y) => {
             for (r, job) in jobs.iter().enumerate() {
-                latencies.push(job.enqueued.elapsed().as_secs_f32() * 1e3);
-                let _ = job.reply.send(Ok(y.row(r).to_vec()));
+                let q = dur_ns(assembled.saturating_duration_since(job.enqueued));
+                queue_ns.push(q);
+                latency_ns.push(dur_ns(job.enqueued.elapsed()));
+                let _ = job.reply.send(JobOutcome {
+                    result: Ok(y.row(r).to_vec()),
+                    queue_ns: q,
+                    assembly_ns,
+                    compute_ns,
+                    batch_size: batch as u32,
+                });
             }
             0
         }
         Err(e) => {
             for job in &jobs {
-                latencies.push(job.enqueued.elapsed().as_secs_f32() * 1e3);
-                let _ = job.reply.send(Err(e.clone()));
+                let q = dur_ns(assembled.saturating_duration_since(job.enqueued));
+                queue_ns.push(q);
+                latency_ns.push(dur_ns(job.enqueued.elapsed()));
+                let _ = job.reply.send(JobOutcome {
+                    result: Err(e.clone()),
+                    queue_ns: q,
+                    assembly_ns,
+                    compute_ns,
+                    batch_size: batch as u32,
+                });
             }
-            jobs.len()
+            batch
         }
     };
-    let mut s = stats.lock().unwrap();
-    s.batches += 1;
-    s.batched_requests += jobs.len();
-    s.errors += errors;
-    for &ms in latencies.iter() {
-        s.push_latency(ms);
-    }
+    stats.record_group(batch, errors, queue_ns, latency_ns, assembly_ns, compute_ns);
 }
 
 #[cfg(test)]
@@ -577,7 +707,9 @@ mod tests {
         for _ in 0..6 {
             let input: Vec<f32> = (0..8).map(|_| rng.normal(0.0, 1.0)).collect();
             client.submit("toy", input.clone(), reply_tx.clone()).unwrap();
-            let got = reply_rx.recv().unwrap().unwrap();
+            let outcome = reply_rx.recv().unwrap();
+            assert!(outcome.batch_size >= 1);
+            let got = outcome.result.unwrap();
             let mut x = Mat::zeros(1, 8);
             x.row_mut(0).copy_from_slice(&input);
             let want = engine.forward(&x);
@@ -600,5 +732,37 @@ mod tests {
         assert_eq!(server.stats().errors, 2);
         // after stop, requests fail cleanly instead of hanging
         assert!(client.infer("toy", vec![0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn stats_handle_outlives_the_server() {
+        let (reg, _) = toy_registry();
+        let mut server = MicroBatchServer::start(reg, ServerConfig::default());
+        let client = server.client();
+        client.infer("toy", vec![0.0; 8]).unwrap();
+        let handle = server.stats_handle();
+        server.stop();
+        drop(server);
+        // the shared stats remain readable after stop + drop
+        let snap = handle.snapshot();
+        assert_eq!(snap.requests, 1);
+        assert!(handle.to_json().get("requests").is_some());
+    }
+
+    #[test]
+    fn outcome_carries_pipeline_spans() {
+        let (reg, _) = toy_registry();
+        let mut server = MicroBatchServer::start(reg, ServerConfig::default());
+        let client = server.client();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        client.submit("toy", vec![0.0; 8], reply_tx).unwrap();
+        let o = reply_rx.recv().unwrap();
+        assert!(o.result.is_ok());
+        assert_eq!(o.batch_size, 1);
+        // spans are measured (compute covers a real forward pass; queue
+        // wait covers at least the max_wait coalescing window)
+        assert!(o.compute_ns > 0);
+        assert!(o.queue_ns > 0);
+        server.stop();
     }
 }

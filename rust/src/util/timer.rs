@@ -30,17 +30,24 @@ pub struct BenchStats {
     pub mean_s: f64,
     pub min_s: f64,
     pub max_s: f64,
+    /// Tail percentiles (nearest-rank via `metrics::percentile_sorted`,
+    /// the same discipline as the obs histogram plane).
+    pub p90_s: f64,
+    pub p99_s: f64,
 }
 
 impl BenchStats {
     pub fn report(&self) -> String {
         format!(
-            "{:<44} {:>10}  median {:>12}  mean {:>12}  min {:>12}",
+            "{:<44} {:>10}  median {:>12}  mean {:>12}  min {:>12}  p90 {:>12}  p99 {:>12}  max {:>12}",
             self.name,
             format!("n={}", self.iters),
             human_time(self.median_s),
             human_time(self.mean_s),
             human_time(self.min_s),
+            human_time(self.p90_s),
+            human_time(self.p99_s),
+            human_time(self.max_s),
         )
     }
 
@@ -84,6 +91,7 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> BenchSta
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median_s = times[times.len() / 2];
     let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    let sorted_f32: Vec<f32> = times.iter().map(|&t| t as f32).collect();
     BenchStats {
         name: name.to_string(),
         iters,
@@ -91,6 +99,8 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, iters: usize, mut f: F) -> BenchSta
         mean_s,
         min_s: times[0],
         max_s: *times.last().unwrap(),
+        p90_s: crate::metrics::percentile_sorted(&sorted_f32, 90.0) as f64,
+        p99_s: crate::metrics::percentile_sorted(&sorted_f32, 99.0) as f64,
     }
 }
 
@@ -109,7 +119,11 @@ mod tests {
         });
         assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
         assert!(s.median_s > 0.0);
+        assert!(s.median_s <= s.p90_s + 1e-12 && s.p90_s <= s.p99_s + 1e-12);
+        assert!(s.p99_s <= s.max_s + 1e-12);
         assert_eq!(s.iters, 10);
+        let line = s.report();
+        assert!(line.contains("p90") && line.contains("p99") && line.contains("max"));
     }
 
     #[test]

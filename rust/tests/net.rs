@@ -21,6 +21,7 @@ use lcquant::net::{ClientError, NetClient, NetConfig, NetServer};
 use lcquant::nn::{Activation, MlpSpec};
 use lcquant::quant::{LayerQuantizer, Scheme};
 use lcquant::serve::{EngineScratch, LutEngine, PackedModel, Registry, ServerConfig};
+use lcquant::util::json::Json;
 use lcquant::util::rng::Rng;
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -329,6 +330,32 @@ fn truncated_frame_then_close_is_survived() {
     }
     let mut client = NetClient::connect(&addr).expect("fresh connection after abuse");
     assert!(client.infer("toy-k4", &[0.0; 12]).is_ok());
+}
+
+#[test]
+fn stats_frame_and_snapshots_survive_stop() {
+    let (reg, _) = toy_registry();
+    let mut server = start_server(Arc::clone(&reg), loopback_cfg());
+    let addr = server.local_addr().to_string();
+    let mut client = NetClient::connect(&addr).unwrap();
+    assert!(client.infer("toy-k4", &[0.0; 12]).is_ok());
+    // live: the v2 stats frame answers on the inference connection
+    let body = client.stats().expect("stats over the wire");
+    let snap = Json::parse(&body).expect("snapshot JSON");
+    assert_eq!(
+        snap.get("server").unwrap().get("requests_ok").unwrap().as_f64().unwrap(),
+        1.0
+    );
+    server.stop();
+    // the snapshot path reads stats shared with the (now stopped) batch
+    // server, so it stays valid after stop — no stale cached copy
+    let snap = Json::parse(&server.snapshot_json()).expect("post-stop snapshot JSON");
+    assert_eq!(
+        snap.get("batch").unwrap().get("requests").unwrap().as_f64().unwrap(),
+        1.0
+    );
+    assert_eq!(server.batch_stats().requests, 1);
+    assert_eq!(server.stats().stats_requests, 1);
 }
 
 #[test]

@@ -1,0 +1,555 @@
+//! Integration tests for the observability plane (`lcquant::obs`), the
+//! properties `docs/OBSERVABILITY.md` claims:
+//!
+//! 1. the recording hot path (histogram + trace ring + counters + gauges)
+//!    performs **zero heap allocation** — verified with a counting global
+//!    allocator, the same discipline as `rust/tests/flat_params.rs`;
+//! 2. log₂ bucket boundaries hold for arbitrary values, and every
+//!    bucket's representative (inclusive upper edge) lies in its own
+//!    bucket;
+//! 3. histogram percentiles land **within one bucket** of the exact
+//!    nearest-rank sample percentile (`metrics::percentile_sorted`'s rank
+//!    rule);
+//! 4. a real `lc_quantize` run mirrors its telemetry into the global
+//!    registry **bit-identically** to the run's own history records;
+//! 5. the v2 `Stats` frame round-trips over loopback TCP and its counters
+//!    match a load generator's observed outcome counts **exactly** — the
+//!    books balance, not approximately balance;
+//! 6. hostile `StatsRequest` frames (trailing bytes, truncated fields)
+//!    are rejected with `Malformed` and a closed connection;
+//! 7. the docs that describe all of the above actually name the metrics,
+//!    stages and wire tags that exist in the code.
+//!
+//! `ci.sh` and `make tier1` run this file under the default thread policy
+//! and again with `LCQUANT_THREADS=2`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use lcquant::coordinator::{lc_quantize, LcConfig, MuSchedule, NativeBackend, PenaltyMode};
+use lcquant::data::Dataset;
+use lcquant::linalg::Mat;
+use lcquant::net::loadgen::{self, LoadGenConfig};
+use lcquant::net::proto::{self, ErrorCode, ErrorFrame, Frame, FrameReader, StatsRequestFrame};
+use lcquant::net::{NetClient, NetConfig, NetServer};
+use lcquant::nn::sgd::ClippedLrSchedule;
+use lcquant::nn::{Activation, Mlp, MlpSpec};
+use lcquant::obs::hist::{bucket_index, bucket_max_ns};
+use lcquant::obs::{self, CounterId, GaugeId, HistId, Histogram, Stage, Trace, TraceRing};
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{PackedModel, Registry, ServerConfig};
+use lcquant::util::json::Json;
+use lcquant::util::rng::Rng;
+
+// ---- counting allocator (flat_params.rs discipline): a thread-local
+//      counter so the hot-path assertions are immune to sibling test
+//      threads allocating concurrently -----------------------------------
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Serializes tests that assert exact deltas on the process-global
+/// registry (gauges, the LC counters). Poison is ignored — a failed
+/// sibling must not mask this binary's other assertions.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial_guard() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---- 1. zero-alloc hot path --------------------------------------------
+
+#[test]
+fn recording_hot_path_performs_zero_allocations() {
+    // build everything (histogram, ring, one trace) *before* measuring
+    let hist = Histogram::new();
+    let ring = TraceRing::new(64);
+    let mut trace = Trace::from_parts(0, [0; obs::STAGES]);
+    // warm one pass so any lazy init is behind us
+    hist.record_ns(1);
+    ring.record(&trace);
+    obs::counter(CounterId::TracesRecorded).get();
+
+    let before = thread_allocs();
+    for i in 0..10_000u64 {
+        hist.record_ns(i.wrapping_mul(2_654_435_761) & 0xff_ffff);
+        trace.id = i;
+        trace.set(Stage::Compute, i & 0xffff);
+        ring.record(&trace);
+        obs::gauge(GaugeId::LcMu).set(i as f64);
+        obs::counter(CounterId::TracesRecorded).add(0);
+        obs::hist(HistId::ServeLatency).record_ns(i & 0xfff);
+    }
+    let delta = thread_allocs() - before;
+    assert_eq!(delta, 0, "metrics hot path allocated {delta} times in 10k records");
+    assert!(hist.snapshot().count() >= 10_000);
+}
+
+// ---- 2. bucket boundary properties -------------------------------------
+
+#[test]
+fn bucket_boundaries_hold_for_arbitrary_values() {
+    // bucket 0 is exactly {0}; bucket i ≥ 1 covers [2^(i-1), 2^i), with
+    // the top bucket absorbing everything above its floor
+    assert_eq!(bucket_index(0), 0);
+    let mut rng = Rng::new(0x0B5);
+    for _ in 0..20_000 {
+        // log-uniform-ish: random bucket magnitude, random offset inside
+        let e = rng.below(63) as u32;
+        let v = (1u64 << e) | ((rng.below(usize::MAX) as u64) & ((1u64 << e) - 1));
+        let i = bucket_index(v);
+        assert!(i >= 1, "nonzero value {v} in the zero bucket");
+        assert!(v >= 1u64 << (i - 1), "{v} below the floor of bucket {i}");
+        if i < 63 {
+            assert!(v < 1u64 << i, "{v} above the ceiling of bucket {i}");
+        }
+    }
+    // every bucket's representative (inclusive upper edge) lies in the
+    // bucket it represents — so percentile answers index back correctly
+    for i in 0..obs::HIST_BUCKETS {
+        assert_eq!(
+            bucket_index(bucket_max_ns(i)),
+            i,
+            "representative of bucket {i} escapes its bucket"
+        );
+    }
+    // adjacent buckets never overlap: each floor is the previous edge + 1
+    for i in 2..obs::HIST_BUCKETS {
+        assert_eq!(bucket_max_ns(i - 1) + 1, 1u64 << (i - 1));
+    }
+}
+
+// ---- 3. percentile parity with the exact-sample discipline -------------
+
+#[test]
+fn histogram_percentile_within_one_bucket_of_exact_sample() {
+    let hist = Histogram::new();
+    let mut samples: Vec<u64> = Vec::new();
+    let mut rng = Rng::new(0xCAFE);
+    for _ in 0..5_000 {
+        // latencies spanning ~1 µs to ~100 ms, log-distributed like real
+        // request latencies
+        let e = 10 + rng.below(17) as u32;
+        let v = (1u64 << e) | ((rng.below(usize::MAX) as u64) & ((1u64 << e) - 1));
+        hist.record_ns(v);
+        samples.push(v);
+    }
+    samples.sort_unstable();
+    let snap = hist.snapshot();
+    assert_eq!(snap.count(), samples.len() as u64);
+    assert_eq!(snap.sum_ns, samples.iter().sum::<u64>());
+
+    for q in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+        // the exact nearest-rank answer, metrics::percentile_sorted's rule
+        let rank = ((q / 100.0) * (samples.len() - 1) as f64).round() as usize;
+        let exact = samples[rank.min(samples.len() - 1)];
+        let approx = snap.percentile_ns(q);
+        // same discipline ⇒ the histogram answer is the exact answer's
+        // bucket edge: identical bucket, i.e. within one bucket width
+        assert_eq!(
+            bucket_index(approx),
+            bucket_index(exact),
+            "p{q}: histogram {approx} vs exact {exact} disagree beyond one bucket"
+        );
+    }
+    // the reported max bounds the true max from above, within its bucket
+    let true_max = *samples.last().unwrap();
+    assert!(snap.max_ns() >= true_max);
+    assert_eq!(bucket_index(snap.max_ns()), bucket_index(true_max));
+
+    // and the f32-ms path agrees with metrics::percentile_sorted run on
+    // the same data quantized the same way
+    let sorted_ms: Vec<f32> = samples.iter().map(|&v| (v as f64 / 1e6) as f32).collect();
+    let exact_p50_ms = lcquant::metrics::percentile_sorted(&sorted_ms, 50.0);
+    let hist_p50_ms = snap.percentile_ms(50.0);
+    assert!(
+        hist_p50_ms >= exact_p50_ms && hist_p50_ms <= exact_p50_ms * 2.0 + 1e-6,
+        "p50 {hist_p50_ms}ms not within one log₂ bucket of exact {exact_p50_ms}ms"
+    );
+}
+
+// ---- 4. LC loop mirrors its history into the registry bit-exactly ------
+
+fn tiny_dataset(n: usize, dim: usize, classes: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = Mat::zeros(n, dim);
+    rng.fill_normal(&mut images.data, 0.0, 1.0);
+    let labels: Vec<u8> = (0..n).map(|_| rng.below(classes) as u8).collect();
+    Dataset { images, labels, n_classes: classes }
+}
+
+#[test]
+fn lc_run_mirrors_history_into_registry_bit_exact() {
+    let _guard = serial_guard();
+    obs::set_enabled(true);
+    let spec = MlpSpec {
+        sizes: vec![32, 16, 8],
+        hidden_activation: Activation::Tanh,
+        dropout_keep: vec![],
+    };
+    let seed = 42u64;
+    let net = Mlp::new(&spec, seed);
+    let mut backend = NativeBackend::new(net, tiny_dataset(64, 32, 8, seed ^ 0xDA7A), None, 32, seed);
+
+    let cfg = LcConfig {
+        scheme: Scheme::AdaptiveCodebook { k: 4 },
+        mu: MuSchedule::new(0.001, 1.4),
+        iterations: 5,
+        l_steps: 10,
+        lr: ClippedLrSchedule { eta0: 0.05, decay: 0.98 },
+        momentum: 0.9,
+        mode: PenaltyMode::AugmentedLagrangian,
+        tol: 0.0, // never stop early: the counter delta below is exact
+        seed: 7,
+        eval_every: 0,
+        n_weight_samples: 0,
+    };
+    let iters_before = obs::counter(CounterId::LcIterations).get();
+    let lstep_count_before = obs::hist(HistId::LcLstep).snapshot().count();
+    let res = lc_quantize(&mut backend, &cfg);
+    let last = res.history.last().expect("history");
+
+    // gauges hold the *exact bit patterns* of the history's f64 casts —
+    // the registry is a live mirror of the run record, not a re-derivation
+    assert_eq!(obs::gauge(GaugeId::LcIter).get().to_bits(), (last.iter as f64).to_bits());
+    assert_eq!(obs::gauge(GaugeId::LcMu).get().to_bits(), (last.mu as f64).to_bits());
+    assert_eq!(obs::gauge(GaugeId::LcLoss).get().to_bits(), (last.lstep_loss as f64).to_bits());
+    assert_eq!(
+        obs::gauge(GaugeId::LcFeasibility).get().to_bits(),
+        (last.feasibility as f64).to_bits()
+    );
+    // step-time gauges are wall-clock (not comparable to history) but must
+    // be finite, non-negative milliseconds
+    assert!(obs::gauge(GaugeId::LcLstepMs).get() >= 0.0);
+    assert!(obs::gauge(GaugeId::LcCstepMs).get() >= 0.0);
+    // one counter bump + one L-step histogram record per outer iteration
+    assert_eq!(
+        obs::counter(CounterId::LcIterations).get() - iters_before,
+        res.history.len() as u64
+    );
+    assert_eq!(
+        obs::hist(HistId::LcLstep).snapshot().count() - lstep_count_before,
+        res.history.len() as u64
+    );
+}
+
+// ---- loopback fixtures (mirrors rust/tests/net.rs) ---------------------
+
+fn toy_packed(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec {
+        sizes: vec![12, 8, 4],
+        hidden_activation: Activation::Tanh,
+        dropout_keep: vec![],
+    };
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.5)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.1)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+fn start_toy_server() -> NetServer {
+    let mut reg = Registry::new();
+    reg.insert(toy_packed("toy-k4", &Scheme::AdaptiveCodebook { k: 4 }, 11)).unwrap();
+    let serve = ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+        pipeline_depth: 2,
+    };
+    let net = NetConfig {
+        bind_addr: "127.0.0.1:0".to_string(),
+        max_connections: 8,
+        ..NetConfig::default()
+    };
+    NetServer::start(Arc::new(reg), serve, net).expect("bind loopback server")
+}
+
+/// Fetch `path` under `key` or panic with a schema message.
+fn field<'j>(j: &'j Json, key: &str) -> &'j Json {
+    j.get(key).unwrap_or_else(|| panic!("snapshot missing key '{key}'"))
+}
+
+fn field_u64(j: &Json, key: &str) -> u64 {
+    field(j, key).as_f64().unwrap_or_else(|| panic!("key '{key}' not a number")) as u64
+}
+
+// ---- 5. the Stats frame balances the books exactly ---------------------
+
+#[test]
+fn stats_frame_round_trip_matches_loadgen_counts_exactly() {
+    obs::set_enabled(true);
+    let server = start_toy_server();
+    let addr = server.local_addr().to_string();
+
+    let connections = 3usize;
+    let per_conn = 16usize;
+    let report = loadgen::run(&LoadGenConfig {
+        addr: addr.clone(),
+        connections,
+        requests_per_conn: per_conn,
+        model: Some("toy-k4".to_string()),
+        batch: 1,
+        seed: 5,
+    })
+    .expect("loadgen run");
+    // an unloaded loopback server must answer everything
+    assert_eq!(report.sent, connections * per_conn);
+    assert_eq!(report.ok, connections * per_conn);
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.failed, 0);
+
+    // the wire snapshot, via the v2 Stats frame pair
+    let mut client = NetClient::connect(&addr).expect("stats connection");
+    let body = client.stats().expect("stats round trip");
+    let snap = Json::parse(&body).expect("snapshot must be valid JSON");
+
+    // server section: exact match against what the loadgen observed
+    let srv = field(&snap, "server");
+    assert_eq!(field_u64(srv, "requests_ok"), report.ok as u64, "requests_ok must balance");
+    assert_eq!(field_u64(srv, "requests_shed"), report.shed as u64);
+    assert_eq!(field_u64(srv, "requests_failed"), report.failed as u64);
+    assert_eq!(field_u64(srv, "stats_requests"), 1, "exactly this Stats frame");
+    // loadgen probe + drivers + this stats connection
+    assert!(field_u64(srv, "connections") >= (connections + 2) as u64);
+
+    // batch section: every ok single-row request crossed the micro-batcher
+    let batch = field(&snap, "batch");
+    assert_eq!(field_u64(batch, "requests"), report.ok as u64);
+    assert_eq!(field_u64(batch, "errors"), 0);
+    assert!(field_u64(batch, "batches") >= 1);
+    assert!(field_u64(field(batch, "latency"), "count") >= report.ok as u64);
+
+    // process registry: all three metric families present and named
+    let process = field(&snap, "process");
+    for id in CounterId::ALL {
+        assert!(
+            field(process, "counters").get(id.name()).is_some(),
+            "registry snapshot missing counter '{}'",
+            id.name()
+        );
+    }
+    for id in GaugeId::ALL {
+        assert!(field(process, "gauges").get(id.name()).is_some());
+    }
+    for id in HistId::ALL {
+        assert!(field(process, "histograms").get(id.name()).is_some());
+    }
+
+    // pool profile: one lane per worker slot, plus the dispatch counters
+    let pool = field(&snap, "pool");
+    let lanes = field(pool, "parts_claimed").as_arr().expect("parts_claimed array");
+    assert_eq!(lanes.len(), lcquant::linalg::pool::PROFILE_WORKERS);
+    field_u64(pool, "inline_dispatches");
+    field_u64(pool, "slot_exhausted");
+    field_u64(pool, "total_spawned");
+
+    // traces: recorded requests carry all seven pipeline stages
+    let traces = field(&snap, "traces").as_arr().expect("traces array");
+    assert!(!traces.is_empty(), "48 answered requests must leave traces");
+    for t in traces {
+        field_u64(t, "id");
+        assert!(field(t, "total_ms").as_f64().unwrap() >= 0.0);
+        let stages = field(t, "stages");
+        for s in Stage::ALL {
+            assert!(
+                stages.get(s.name()).is_some(),
+                "trace missing stage '{}'",
+                s.name()
+            );
+        }
+    }
+    field_u64(&snap, "traces_dropped");
+
+    // the per-instance snapshot agrees with the wire document
+    let stats = server.stats();
+    assert_eq!(stats.requests_ok, report.ok as u64);
+    assert_eq!(stats.stats_requests, 1);
+}
+
+// ---- 6. hostile stats frames -------------------------------------------
+
+/// FNV-1a 64 (the envelope checksum, per docs/wire-protocol.md).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hand-rolled envelope around an arbitrary (possibly malformed) payload,
+/// with a *correct* length prefix and checksum — so the rejection under
+/// test is the payload decoder's, not the envelope's.
+fn raw_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 12);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out
+}
+
+/// Raw-socket handshake: client preamble out, server preamble + hello in.
+fn raw_handshake(addr: &str) -> (TcpStream, FrameReader) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(&proto::encode_preamble()).unwrap();
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    stream.read_exact(&mut pre).unwrap();
+    assert_eq!(proto::decode_preamble(&pre).unwrap(), proto::VERSION);
+    let mut reader = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+    loop {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::Hello(_))) => return (stream, reader),
+            Ok(Some(f)) => panic!("expected hello, got {f:?}"),
+            Ok(None) => continue,
+            Err(e) => panic!("handshake failed: {e}"),
+        }
+    }
+}
+
+/// Read frames until the peer closes; returns the last error frame seen.
+fn read_error_then_eof(stream: &mut TcpStream, reader: &mut FrameReader) -> Option<ErrorFrame> {
+    let mut last = None;
+    loop {
+        match reader.poll_frame(stream) {
+            Ok(Some(Frame::Error(e))) => last = Some(e),
+            Ok(Some(f)) => panic!("unexpected frame {f:?}"),
+            Ok(None) => continue,
+            Err(_) => return last, // closed (or mid-frame EOF)
+        }
+    }
+}
+
+#[test]
+fn stats_request_echoes_id_over_raw_socket() {
+    let server = start_toy_server();
+    let (mut stream, mut reader) = raw_handshake(&server.local_addr().to_string());
+    let id = 0xDEAD_BEEF_u64;
+    stream
+        .write_all(&Frame::StatsRequest(StatsRequestFrame { id }).to_bytes())
+        .unwrap();
+    loop {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::StatsResponse(r))) => {
+                assert_eq!(r.id, id, "response must echo the request id");
+                let snap = Json::parse(&r.json).expect("snapshot JSON");
+                for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+                    assert!(snap.get(key).is_some(), "snapshot missing '{key}'");
+                }
+                return;
+            }
+            Ok(Some(f)) => panic!("expected StatsResponse, got {f:?}"),
+            Ok(None) => continue,
+            Err(e) => panic!("stats round trip failed: {e}"),
+        }
+    }
+}
+
+#[test]
+fn stats_request_with_trailing_bytes_is_malformed() {
+    let server = start_toy_server();
+    let (mut stream, mut reader) = raw_handshake(&server.local_addr().to_string());
+    // tag 5 + id + one illegal trailing byte, valid checksum
+    let mut payload = vec![5u8];
+    payload.extend_from_slice(&7u64.to_le_bytes());
+    payload.push(0xAA);
+    stream.write_all(&raw_frame(&payload)).unwrap();
+    let err = read_error_then_eof(&mut stream, &mut reader).expect("server must report");
+    assert_eq!(err.code, ErrorCode::Malformed);
+}
+
+#[test]
+fn stats_request_with_truncated_id_is_malformed() {
+    let server = start_toy_server();
+    let (mut stream, mut reader) = raw_handshake(&server.local_addr().to_string());
+    // tag 5 but only half the id field, valid checksum
+    let mut payload = vec![5u8];
+    payload.extend_from_slice(&[1, 2, 3, 4]);
+    stream.write_all(&raw_frame(&payload)).unwrap();
+    let err = read_error_then_eof(&mut stream, &mut reader).expect("server must report");
+    assert_eq!(err.code, ErrorCode::Malformed);
+}
+
+// ---- 7. the docs name what the code ships ------------------------------
+
+fn doc(path: &str) -> String {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+#[test]
+fn observability_doc_names_every_metric_and_stage() {
+    let text = doc("docs/OBSERVABILITY.md");
+    for id in CounterId::ALL {
+        assert!(text.contains(id.name()), "OBSERVABILITY.md missing counter '{}'", id.name());
+    }
+    for id in GaugeId::ALL {
+        assert!(text.contains(id.name()), "OBSERVABILITY.md missing gauge '{}'", id.name());
+    }
+    for id in HistId::ALL {
+        assert!(text.contains(id.name()), "OBSERVABILITY.md missing histogram '{}'", id.name());
+    }
+    for s in Stage::ALL {
+        assert!(text.contains(s.name()), "OBSERVABILITY.md missing stage '{}'", s.name());
+    }
+    // the snapshot schema keys the wire clients depend on
+    for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+        assert!(text.contains(key), "OBSERVABILITY.md missing snapshot key '{key}'");
+    }
+}
+
+#[test]
+fn wire_protocol_doc_matches_the_shipped_version_and_tags() {
+    let text = doc("docs/wire-protocol.md");
+    assert!(
+        text.contains(&format!("version {}", proto::VERSION)),
+        "wire-protocol.md title must carry the shipped version"
+    );
+    assert!(text.contains(&format!("version = {}", proto::VERSION)));
+    for needle in ["StatsRequest", "StatsResponse", "tag = 5", "tag = 6", "Version history"] {
+        assert!(text.contains(needle), "wire-protocol.md missing '{needle}'");
+    }
+}
+
+#[test]
+fn architecture_doc_covers_the_observability_plane() {
+    let text = doc("docs/ARCHITECTURE.md");
+    assert!(text.contains("Observability plane"));
+    assert!(text.contains("obs"));
+}
