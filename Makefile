@@ -4,9 +4,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test test-threaded smoke-net bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs
+.PHONY: tier1 build test test-threaded smoke-net smoke-bitslice bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs bench-bitslice
 
-tier1: build test test-threaded smoke-net bench-build doc clippy fmt-check
+tier1: build test test-threaded smoke-net smoke-bitslice bench-build doc clippy fmt-check
 
 build:
 	$(CARGO) build --release
@@ -28,6 +28,14 @@ test-threaded:
 smoke-net:
 	$(CARGO) test -q --test net
 	LCQUANT_THREADS=2 $(CARGO) test -q --test net
+
+# Bit-sliced serving tier + zero-copy .lcq load smoke: tier parity across
+# every scheme (in-process and over loopback TCP), mmap-vs-eager
+# bit-identity, lazy checksum rejection, the zero-alloc warm path, under
+# both thread policies.
+smoke-bitslice:
+	$(CARGO) test -q --test bitslice
+	LCQUANT_THREADS=2 $(CARGO) test -q --test bitslice
 
 # Benches are plain binaries (harness = false); --no-run keeps them
 # compiling in tier-1 without paying their runtime.
@@ -80,6 +88,11 @@ bench-net: bench-serve
 # (histogram record, trace-ring record) → BENCH_obs.json.
 bench-obs:
 	$(CARGO) bench --bench bench_obs
+
+# Bit-sliced tier vs LUT gather tier per scheme (batch 1/32/256) plus
+# eager-vs-mmap cold model load → BENCH_bitslice.json.
+bench-bitslice:
+	$(CARGO) bench --bench bench_bitslice
 
 ci: tier1
 

@@ -1,0 +1,122 @@
+//! Bit-sliced serving tier vs the LUT gather tier, LeNet300 shapes
+//! (784-300-100-10), plus the cold-load cost of the zero-copy `.lcq`
+//! path:
+//!
+//! * per-scheme forward sweep at batch 1 / 32 / 256: the same
+//!   `PackedModel` served by `EngineMode::Lut` (grouped per-centroid
+//!   gathers) and `EngineMode::BitSliced` (popcount / two-plane /
+//!   K-accumulator / exponent-shift kernels straight on the packed `u64`
+//!   plane words) — the tentpole claim is that the bit-sliced tier wins
+//!   at low K by replacing per-weight index reads with word-parallel
+//!   plane arithmetic;
+//! * cold model load, eager (`PackedModel::load`: read + verify every
+//!   section) vs zero-copy (`PackedModel::load_mmap`: map + verify the
+//!   header only, sections lazily on first touch);
+//!
+//! → `BENCH_bitslice.json`. Run via `make bench-bitslice`.
+
+use lcquant::linalg::Mat;
+use lcquant::nn::MlpSpec;
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{EngineMode, EngineScratch, LutEngine, PackedModel};
+use lcquant::util::rng::Rng;
+use lcquant::util::timer::bench;
+
+fn packed_lenet300(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec::lenet300();
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.1)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.05)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+fn main() {
+    println!("== bench_bitslice: bit-sliced tier vs LUT gather tier (LeNet300) ==");
+    let variants: Vec<(&str, Scheme)> = vec![
+        ("binary", Scheme::BinaryScale),
+        ("ternary", Scheme::TernaryScale),
+        ("pow2-c6", Scheme::PowersOfTwo { c: 6 }),
+        ("adaptive-k4", Scheme::AdaptiveCodebook { k: 4 }),
+    ];
+    let models: Vec<PackedModel> = variants
+        .iter()
+        .enumerate()
+        .map(|(i, (name, scheme))| packed_lenet300(name, scheme, 20 + i as u64))
+        .collect();
+
+    let mut rows = String::new();
+    let mut rng = Rng::new(9);
+    for batch in [1usize, 32, 256] {
+        let mut x = Mat::zeros(batch, 784);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        let iters = if batch >= 256 { 12 } else { 40 };
+        for model in &models {
+            let mut pair = Vec::new();
+            for mode in [EngineMode::Lut, EngineMode::BitSliced] {
+                let engine = LutEngine::with_mode(model, mode).unwrap();
+                let paths = engine.layer_paths().join(",");
+                let mut scratch = EngineScratch::new();
+                let _ = engine.forward_into(&x, &mut scratch).unwrap(); // warm
+                let s = bench(
+                    &format!("{:<12} {:<9} batch={batch}", model.name, mode.name()),
+                    iters,
+                    || {
+                        let y = engine.forward_into(&x, &mut scratch).unwrap();
+                        y.data[0]
+                    },
+                );
+                println!("{}  ({:.0} img/s)  [{paths}]", s.report(), s.per_sec(batch));
+                pair.push(s.median_s);
+            }
+            let speedup = pair[0] / pair[1];
+            println!("    bit-sliced speedup over LUT: {speedup:.2}x");
+            if !rows.is_empty() {
+                rows.push_str(",\n");
+            }
+            rows.push_str(&format!(
+                "    {{\"model\": \"{}\", \"batch\": {batch}, \"lut_median_s\": {:.6e}, \
+                 \"bitsliced_median_s\": {:.6e}, \"speedup\": {:.3}}}",
+                model.name, pair[0], pair[1], speedup
+            ));
+        }
+    }
+
+    // cold load: eager (read + verify every section) vs zero-copy mmap
+    // (header only; section checksums deferred to first touch)
+    println!("\n== cold .lcq load: eager vs mmap ==");
+    let dir = std::env::temp_dir().join("lcquant_bench_bitslice");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("adaptive-k4.lcq");
+    models[3].save(&path).unwrap();
+    let se = bench("eager load (read+verify) ", 40, || PackedModel::load(&path).unwrap().layers.len());
+    println!("{}", se.report());
+    let sm = bench("mmap load (header only)  ", 40, || {
+        PackedModel::load_mmap(&path).unwrap().layers.len()
+    });
+    println!("{}", sm.report());
+    println!("    mmap cold-load speedup: {:.2}x", se.median_s / sm.median_s);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let json = format!(
+        "{{\n  \"bench\": \"bitslice\",\n  \"threads\": {},\n  \"forward_sweep\": [\n{rows}\n  ],\n  \
+         \"cold_load\": {{\"eager_median_s\": {:.6e}, \"mmap_median_s\": {:.6e}, \"speedup\": {:.3}}}\n}}\n",
+        lcquant::linalg::num_threads(),
+        se.median_s,
+        sm.median_s,
+        se.median_s / sm.median_s
+    );
+    match std::fs::write("BENCH_bitslice.json", &json) {
+        Ok(()) => println!("wrote BENCH_bitslice.json"),
+        Err(e) => eprintln!("could not write BENCH_bitslice.json: {e}"),
+    }
+}

@@ -80,7 +80,7 @@ fn main() {
             let s = bench(
                 &format!("packed-LUT {:<11} batch={batch}", model.name),
                 iters,
-                || engine.forward(&x),
+                || engine.forward(&x).unwrap(),
             );
             println!(
                 "{}  ({:.0} img/s, {:.2}x dense time, ×{:.1} on disk)",
@@ -230,7 +230,7 @@ fn bench_pipeline_sweep(model: &PackedModel, server_rows: &[(usize, f64, f32, f3
     let mut x = Mat::zeros(batch, 784);
     rng.fill_normal(&mut x.data, 0.0, 1.0);
     // warm: pool spawn + gather structures touched
-    let _ = engine.forward(&x);
+    let _ = engine.forward(&x).unwrap();
     let mut rows: Vec<(usize, f64)> = Vec::new();
     for clients in [1usize, 2, 4, 8] {
         let t = Timer::start();
@@ -240,7 +240,7 @@ fn bench_pipeline_sweep(model: &PackedModel, server_rows: &[(usize, f64, f32, f3
         pool::run_scoped(clients, |_| {
             let mut scratch = EngineScratch::new();
             for _ in 0..reps {
-                let out = engine.forward_into(&x, &mut scratch);
+                let out = engine.forward_into(&x, &mut scratch).unwrap();
                 std::hint::black_box(out.data.len());
             }
         });

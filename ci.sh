@@ -21,6 +21,12 @@ LCQUANT_THREADS=2 cargo test -q --test net
 # policies
 cargo test -q --test obs
 LCQUANT_THREADS=2 cargo test -q --test obs
+# bit-sliced serving tier + zero-copy .lcq load smoke: tier parity across
+# every scheme (in-process and over loopback TCP), mmap-vs-eager
+# bit-identity, lazy checksum rejection, the zero-alloc warm path, again
+# under both thread policies
+cargo test -q --test bitslice
+LCQUANT_THREADS=2 cargo test -q --test bitslice
 cargo bench --no-run
 # Documentation gate: rustdoc must build clean (missing docs on the gated
 # modules, broken intra-doc links anywhere) — warnings are errors.

@@ -101,7 +101,7 @@ fn main() -> Result<()> {
     }
     for name in registry.names() {
         let loaded = registry.get(&name).unwrap();
-        let lut = loaded.engine.forward(&x);
+        let lut = loaded.engine.forward(&x)?;
         let dense_net = loaded.packed.to_mlp();
         let (dense, _) = dense_net.forward(&x, false, None);
         let mut max_dev = 0.0f32;
@@ -177,7 +177,7 @@ fn main() -> Result<()> {
     let via_tcp = tcp_client.infer(&names[0], &row).map_err(|e| anyhow!("{e}"))?;
     let mut one = Mat::zeros(1, 784);
     one.row_mut(0).copy_from_slice(&row);
-    let direct = registry.get(&names[0]).unwrap().engine.forward(&one);
+    let direct = registry.get(&names[0]).unwrap().engine.forward(&one)?;
     if via_tcp != direct.row(0).to_vec() {
         return Err(anyhow!("TCP logits differ from the in-process engine"));
     }

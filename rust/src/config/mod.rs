@@ -104,11 +104,21 @@ pub struct ServeSettings {
     pub pipeline_depth: usize,
     /// Client threads the `serve-smoke` CLI drives traffic with.
     pub smoke_clients: usize,
+    /// Engine execution tier (`"auto"` | `"lut"` | `"bitsliced"`): which
+    /// kernels layer passes run on — bit-sliced plane kernels wherever
+    /// possible (auto, the default), or a forced tier for A/B comparison.
+    pub engine_mode: crate::serve::EngineMode,
 }
 
 impl Default for ServeSettings {
     fn default() -> ServeSettings {
-        ServeSettings { max_batch: 64, max_wait_ms: 2.0, pipeline_depth: 2, smoke_clients: 8 }
+        ServeSettings {
+            max_batch: 64,
+            max_wait_ms: 2.0,
+            pipeline_depth: 2,
+            smoke_clients: 8,
+            engine_mode: crate::serve::EngineMode::Auto,
+        }
     }
 }
 
@@ -286,6 +296,7 @@ impl RunConfig {
                 max_wait_ms: get_f(n, "max_wait_ms", d.serve.max_wait_ms),
                 pipeline_depth: get_u(n, "pipeline_depth", d.serve.pipeline_depth).max(1),
                 smoke_clients: get_u(n, "smoke_clients", d.serve.smoke_clients).max(1),
+                engine_mode: get_s(n, "engine_mode", d.serve.engine_mode.name()).parse()?,
             },
             None => d.serve.clone(),
         };
@@ -388,6 +399,7 @@ mod tests {
         assert_eq!(c.serve.max_wait_ms, 0.5);
         assert_eq!(c.serve.pipeline_depth, 4);
         assert_eq!(c.serve.smoke_clients, 3);
+        assert_eq!(c.serve.engine_mode, crate::serve::EngineMode::Auto);
         let sc = c.serve.to_server_config();
         assert_eq!(sc.max_batch, 8);
         assert_eq!(sc.max_wait, std::time::Duration::from_micros(500));
@@ -398,6 +410,20 @@ mod tests {
         assert_eq!(d.serve.pipeline_depth, 2);
         let z = RunConfig::from_json(r#"{"serve": {"pipeline_depth": 0}}"#).unwrap();
         assert_eq!(z.serve.pipeline_depth, 1);
+    }
+
+    #[test]
+    fn engine_mode_parses() {
+        for (s, want) in [
+            ("auto", crate::serve::EngineMode::Auto),
+            ("lut", crate::serve::EngineMode::Lut),
+            ("bitsliced", crate::serve::EngineMode::BitSliced),
+        ] {
+            let c = RunConfig::from_json(&format!(r#"{{"serve": {{"engine_mode": "{s}"}}}}"#))
+                .unwrap();
+            assert_eq!(c.serve.engine_mode, want);
+        }
+        assert!(RunConfig::from_json(r#"{"serve": {"engine_mode": "xnor"}}"#).is_err());
     }
 
     #[test]

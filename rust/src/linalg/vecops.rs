@@ -206,6 +206,114 @@ pub mod scalar {
         }
         (super::hsum64(dist2).sqrt() as f32, super::hsum64(norm2).sqrt() as f32)
     }
+
+    // ---- popcount kernel family references (bit-sliced serve tier) ----
+    //
+    // These implement the decompositions documented on the public kernels
+    // with plain positional loops: every bit k in 0..n_b is tested
+    // explicitly, so the add sequence is spelled out rather than derived
+    // from `trailing_zeros` arithmetic. The public forms must match them
+    // bit-for-bit.
+
+    /// Reference per-64-element block sums: block `wi` is
+    /// `scalar::sum(&x[64wi .. 64wi+n_b])` — the same 8-lane reduction
+    /// definition as every other sum in this module.
+    pub fn block_sums(x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), x.len().div_ceil(64));
+        for (wi, o) in out.iter_mut().enumerate() {
+            let base = wi * 64;
+            let end = (base + 64).min(x.len());
+            *o = sum(&x[base..end]);
+        }
+    }
+
+    /// Reference single-plane masked word sum: ascending-bit-order scan of
+    /// the set bits of `w` (already masked to the block's valid bits),
+    /// taking the complement branch when the plane is dense. Identical
+    /// branch rule and add order as the optimized `plane_sum`.
+    fn plane_sum(xs: &[f32], w: u64, valid: u64, block: f32) -> f32 {
+        let pc = w.count_ones() as usize;
+        if 2 * pc <= xs.len() {
+            scan_sum(xs, w)
+        } else {
+            block - scan_sum(xs, !w & valid)
+        }
+    }
+
+    /// Reference ascending set-bit scan: test every bit position in order.
+    fn scan_sum(xs: &[f32], w: u64) -> f32 {
+        let mut s = 0.0f32;
+        for (k, &v) in xs.iter().enumerate() {
+            if (w >> k) & 1 == 1 {
+                s += v;
+            }
+        }
+        s
+    }
+
+    /// Reference [`super::masked_sum_pc`]: per-word plane sums accumulate
+    /// into lane `wi % 8`, combined with the fixed `hsum` tree.
+    pub fn masked_sum_pc(x: &[f32], mask: &[u64], blocks: &[f32]) -> f32 {
+        let n = x.len();
+        let n_words = n.div_ceil(64);
+        debug_assert_eq!(mask.len(), n_words);
+        debug_assert_eq!(blocks.len(), n_words);
+        let mut acc = [0.0f32; LANES];
+        for wi in 0..n_words {
+            let base = wi * 64;
+            let n_b = (n - base).min(64);
+            let valid = super::valid_mask(n_b);
+            acc[wi % LANES] += plane_sum(&x[base..base + n_b], mask[wi] & valid, valid, blocks[wi]);
+        }
+        super::hsum(acc)
+    }
+
+    /// Reference [`super::ternary_sums`]: positive plane `s & m`, negative
+    /// plane `!s & m`, each summed per word with the `plane_sum` branch
+    /// rule and accumulated into lane `wi % 8`.
+    pub fn ternary_sums(
+        x: &[f32],
+        sign: &[u64],
+        mask: &[u64],
+        blocks: &[f32],
+    ) -> (f32, f32) {
+        let n = x.len();
+        let n_words = n.div_ceil(64);
+        debug_assert_eq!(sign.len(), n_words);
+        debug_assert_eq!(mask.len(), n_words);
+        debug_assert_eq!(blocks.len(), n_words);
+        let mut pos = [0.0f32; LANES];
+        let mut neg = [0.0f32; LANES];
+        for wi in 0..n_words {
+            let base = wi * 64;
+            let n_b = (n - base).min(64);
+            let valid = super::valid_mask(n_b);
+            let xs = &x[base..base + n_b];
+            pos[wi % LANES] += plane_sum(xs, sign[wi] & mask[wi] & valid, valid, blocks[wi]);
+            neg[wi % LANES] += plane_sum(xs, !sign[wi] & mask[wi] & valid, valid, blocks[wi]);
+        }
+        (super::hsum(pos), super::hsum(neg))
+    }
+
+    /// Reference [`super::code_accumulate`]: code `i` is extracted
+    /// positionally (bit offset `i·bits`, LSB-first, straddling words as
+    /// needed) and `acc[code] += x[i]` runs in ascending `i` order.
+    pub fn code_accumulate(x: &[f32], codes: &[u64], bits: u32, acc: &mut [f32]) {
+        let bits = bits as usize;
+        debug_assert!((1..=16).contains(&bits));
+        debug_assert!(acc.len() >= 1 << bits);
+        debug_assert!(codes.len() >= (x.len() * bits).div_ceil(64));
+        let m = (1u64 << bits) - 1;
+        for (i, &xi) in x.iter().enumerate() {
+            let bitpos = i * bits;
+            let (wi, off) = (bitpos >> 6, bitpos & 63);
+            let mut c = codes[wi] >> off;
+            if off + bits > 64 {
+                c |= codes[wi + 1] << (64 - off);
+            }
+            acc[(c & m) as usize] += xi;
+        }
+    }
 }
 
 /// y += alpha * x — 8-lane chunked; also the gemm cores' rank-1 update.
@@ -607,6 +715,168 @@ pub fn nesterov_step_penalized(
     );
 }
 
+// ---- popcount kernel family (bit-sliced serve tier) ----------------------
+//
+// These four kernels let `serve::bitslice` compute layer outputs directly
+// on packed `u64` assignment planes — popcount bookkeeping instead of
+// per-weight f32 centroid gathers. Like the reductions above, each has a
+// *documented decomposition* that the [`scalar`] references implement with
+// plain positional loops, and the parity property tests below pin the two
+// bit-for-bit. The decompositions:
+//
+// * **Per-word plane sum** (`masked_sum_pc`, `ternary_sums`): word `wi`
+//   covers elements `64wi .. 64wi + n_b` with valid-bit mask `valid`. For
+//   a plane word `w` (pre-masked to `valid`) with popcount `pc`:
+//   if `2·pc ≤ n_b` the word's value is the **ascending-bit-order scan**
+//   `Σ x[64wi+k]` over set bits `k` of `w`; otherwise it is
+//   `blocks[wi] − scan(!w & valid)` — the precomputed block sum minus the
+//   scan of the complement. The branch rule is part of the definition:
+//   the complement form yields different float rounding than the direct
+//   scan, so both implementations take the identical branch and add in
+//   the identical order. Per-word values accumulate into lane `wi % 8`
+//   and combine with the fixed `hsum` tree.
+// * **Block sums** (`block_sums`): block `wi` is `sum(&x[64wi..64wi+n_b])`
+//   — the module's standard 8-lane sum of that sub-slice.
+// * **Code accumulate** (`code_accumulate`): codes are `bits` wide,
+//   LSB-first, packed contiguously (code `i` at bit offset `i·bits`,
+//   straddling word boundaries); `acc[code_i] += x[i]` executes in
+//   ascending `i` order.
+
+/// Mask selecting the low `n_b` valid bits of a 64-element block word.
+#[inline(always)]
+fn valid_mask(n_b: usize) -> u64 {
+    debug_assert!((1..=64).contains(&n_b));
+    if n_b == 64 {
+        !0
+    } else {
+        (1u64 << n_b) - 1
+    }
+}
+
+/// Ascending set-bit scan via `trailing_zeros` + clear-lowest-bit: visits
+/// exactly the set bits of `w` in ascending order, so the add sequence is
+/// identical to the positional reference scan in [`scalar`].
+#[inline(always)]
+fn scan_sum(xs: &[f32], mut w: u64) -> f32 {
+    let mut s = 0.0f32;
+    while w != 0 {
+        s += xs[w.trailing_zeros() as usize];
+        w &= w - 1;
+    }
+    s
+}
+
+/// One plane word's sum under the documented branch rule (`w` pre-masked
+/// to `valid`): sparse → direct scan; dense → block sum minus complement
+/// scan.
+#[inline(always)]
+fn plane_sum(xs: &[f32], w: u64, valid: u64, block: f32) -> f32 {
+    let pc = w.count_ones() as usize;
+    if 2 * pc <= xs.len() {
+        scan_sum(xs, w)
+    } else {
+        block - scan_sum(xs, !w & valid)
+    }
+}
+
+/// Per-64-element block sums of `x` into `out`
+/// (`out.len() == x.len().div_ceil(64)`): the dense-word fallback operand
+/// for [`masked_sum_pc`] / [`ternary_sums`], computed once per input row
+/// and shared across every output column. Block `wi` is [`sum`] of the
+/// sub-slice, so it is bit-for-bit against [`scalar::block_sums`].
+#[inline]
+pub fn block_sums(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), x.len().div_ceil(64));
+    for (wi, o) in out.iter_mut().enumerate() {
+        let base = wi * 64;
+        let end = (base + 64).min(x.len());
+        *o = sum(&x[base..end]);
+    }
+}
+
+/// `Σ x[i]` over set bits of the packed 1-bit plane `mask` — the binary
+/// (sign-plane) kernel: with `S⁺ = masked_sum_pc(x, sign_plane, blocks)`
+/// and `T = sum(x)`, a ±a binary column is `a·(2S⁺ − T)`. `blocks` must be
+/// [`block_sums`] of `x`. Decomposition documented on the family header
+/// above; bit-for-bit against [`scalar::masked_sum_pc`].
+#[inline]
+pub fn masked_sum_pc(x: &[f32], mask: &[u64], blocks: &[f32]) -> f32 {
+    let n = x.len();
+    let n_words = n.div_ceil(64);
+    debug_assert_eq!(mask.len(), n_words);
+    debug_assert_eq!(blocks.len(), n_words);
+    let mut acc = [0.0f32; LANES];
+    for wi in 0..n_words {
+        let base = wi * 64;
+        let n_b = (n - base).min(64);
+        let valid = valid_mask(n_b);
+        acc[wi % LANES] += plane_sum(&x[base..base + n_b], mask[wi] & valid, valid, blocks[wi]);
+    }
+    hsum(acc)
+}
+
+/// Two-plane ternary kernel: returns `(Σ x over positive weights, Σ x
+/// over negative weights)` where positive bits are `sign & mask` and
+/// negative bits are `!sign & mask` (the sign plane is only meaningful
+/// under the nonzero mask — the intersection makes hostile sign bits
+/// outside the mask irrelevant). A ±a/0 ternary column is then
+/// `a·(pos − neg)`. `blocks` must be [`block_sums`] of `x`. Bit-for-bit
+/// against [`scalar::ternary_sums`].
+#[inline]
+pub fn ternary_sums(x: &[f32], sign: &[u64], mask: &[u64], blocks: &[f32]) -> (f32, f32) {
+    let n = x.len();
+    let n_words = n.div_ceil(64);
+    debug_assert_eq!(sign.len(), n_words);
+    debug_assert_eq!(mask.len(), n_words);
+    debug_assert_eq!(blocks.len(), n_words);
+    let mut pos = [0.0f32; LANES];
+    let mut neg = [0.0f32; LANES];
+    for wi in 0..n_words {
+        let base = wi * 64;
+        let n_b = (n - base).min(64);
+        let valid = valid_mask(n_b);
+        let xs = &x[base..base + n_b];
+        let s = sign[wi];
+        let m = mask[wi];
+        pos[wi % LANES] += plane_sum(xs, s & m & valid, valid, blocks[wi]);
+        neg[wi % LANES] += plane_sum(xs, !s & m & valid, valid, blocks[wi]);
+    }
+    (hsum(pos), hsum(neg))
+}
+
+/// Gather-free K-accumulator kernel for small coded codebooks:
+/// `acc[code_i] += x[i]` in ascending `i` order, with code `i` read from
+/// the contiguous LSB-first `bits`-wide stream in `codes`. The caller
+/// finishes with one multiply per *centroid* (`Σ_c codebook[c]·acc[c]`)
+/// instead of one gather per *weight*. Codes are masked to `bits`, so
+/// `acc.len() ≥ 2^bits` guarantees in-bounds accumulation even for
+/// streams whose codes exceed the model's K (those slots are simply
+/// never combined). The optimized form streams a 128-bit refill buffer;
+/// the positional [`scalar::code_accumulate`] reference extracts each
+/// code independently — identical codes, identical add order, so the two
+/// are bit-for-bit.
+#[inline]
+pub fn code_accumulate(x: &[f32], codes: &[u64], bits: u32, acc: &mut [f32]) {
+    let bits = bits as usize;
+    debug_assert!((1..=16).contains(&bits));
+    debug_assert!(acc.len() >= 1 << bits);
+    debug_assert!(codes.len() >= (x.len() * bits).div_ceil(64));
+    let m = (1u64 << bits) - 1;
+    let mut buf: u128 = 0;
+    let mut avail = 0usize;
+    let mut next = 0usize;
+    for &xi in x {
+        if avail < bits {
+            buf |= (codes[next] as u128) << avail;
+            next += 1;
+            avail += 64;
+        }
+        acc[(buf as u64 & m) as usize] += xi;
+        buf >>= bits;
+        avail -= bits;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -880,5 +1150,160 @@ mod tests {
             assert_eq!(fa.to_bits(), sa.to_bits());
             assert_eq!(fb.to_bits(), sb.to_bits());
         });
+    }
+
+    // ---- popcount kernel family: bit-for-bit parity against the scalar
+    //      references across word-boundary lengths and mask densities ----
+
+    /// Length distribution biased to the 64-bit word boundaries the
+    /// popcount kernels care about (plus the 8-lane ones).
+    fn word_parity_lens(g: &mut crate::util::prop::Gen) -> usize {
+        *[0usize, 1, 7, 8, 63, 64, 65, 127, 128, 129, g.usize_in(0, 400)]
+            .get(g.usize_in(0, 10))
+            .unwrap()
+    }
+
+    /// Mask words with varied density so both branches of the documented
+    /// popcount rule (direct scan vs block-minus-complement) are hit.
+    fn random_plane(g: &mut crate::util::prop::Gen, n_words: usize) -> Vec<u64> {
+        (0..n_words)
+            .map(|_| {
+                let a = (g.usize_in(0, u32::MAX as usize) as u64) << 32
+                    | g.usize_in(0, u32::MAX as usize) as u64;
+                match g.usize_in(0, 3) {
+                    0 => 0,                       // empty word
+                    1 => !0,                      // full word (dense branch)
+                    2 => a & ((g.usize_in(0, u32::MAX as usize) as u64) << 32
+                        | g.usize_in(0, u32::MAX as usize) as u64), // sparse
+                    _ => a,                       // ~half density
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn block_sums_bitwise_match_scalar() {
+        check("block_sums simd==scalar", 60, |g| {
+            let n = word_parity_lens(g);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let n_words = n.div_ceil(64);
+            let mut a = vec![0.0f32; n_words];
+            block_sums(&x, &mut a);
+            let mut b = vec![0.0f32; n_words];
+            scalar::block_sums(&x, &mut b);
+            assert_eq!(a, b);
+            // and each block agrees with the module's standard sum
+            for wi in 0..n_words {
+                let base = wi * 64;
+                let end = (base + 64).min(n);
+                assert_eq!(a[wi].to_bits(), sum(&x[base..end]).to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn masked_sum_pc_bitwise_matches_scalar_and_naive() {
+        check("masked_sum_pc simd==scalar", 80, |g| {
+            let n = word_parity_lens(g);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let n_words = n.div_ceil(64);
+            let mask = random_plane(g, n_words);
+            let mut blocks = vec![0.0f32; n_words];
+            block_sums(&x, &mut blocks);
+            let fast = masked_sum_pc(&x, &mask, &blocks);
+            let refv = scalar::masked_sum_pc(&x, &mask, &blocks);
+            assert_eq!(fast.to_bits(), refv.to_bits());
+            let naive: f64 = (0..n)
+                .filter(|&i| (mask[i / 64] >> (i % 64)) & 1 == 1)
+                .map(|i| x[i] as f64)
+                .sum();
+            assert!(
+                (fast as f64 - naive).abs() < 1e-2,
+                "masked_sum_pc {fast} vs naive {naive} (n={n})"
+            );
+        });
+    }
+
+    #[test]
+    fn ternary_sums_bitwise_match_scalar_and_naive() {
+        check("ternary_sums simd==scalar", 80, |g| {
+            let n = word_parity_lens(g);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let n_words = n.div_ceil(64);
+            let sign = random_plane(g, n_words);
+            let mask = random_plane(g, n_words);
+            let mut blocks = vec![0.0f32; n_words];
+            block_sums(&x, &mut blocks);
+            let (pf, nf) = ternary_sums(&x, &sign, &mask, &blocks);
+            let (ps, ns) = scalar::ternary_sums(&x, &sign, &mask, &blocks);
+            assert_eq!(pf.to_bits(), ps.to_bits());
+            assert_eq!(nf.to_bits(), ns.to_bits());
+            let mut pos = 0.0f64;
+            let mut neg = 0.0f64;
+            for i in 0..n {
+                let (w, b) = (i / 64, i % 64);
+                if (mask[w] >> b) & 1 == 1 {
+                    if (sign[w] >> b) & 1 == 1 {
+                        pos += x[i] as f64;
+                    } else {
+                        neg += x[i] as f64;
+                    }
+                }
+            }
+            assert!((pf as f64 - pos).abs() < 1e-2);
+            assert!((nf as f64 - neg).abs() < 1e-2);
+        });
+    }
+
+    #[test]
+    fn code_accumulate_bitwise_matches_scalar_and_naive() {
+        check("code_accumulate simd==scalar", 80, |g| {
+            let n = word_parity_lens(g);
+            let bits = g.usize_in(1, 4) as u32;
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let codes_raw: Vec<u64> = (0..n)
+                .map(|_| g.usize_in(0, (1usize << bits) - 1) as u64)
+                .collect();
+            // pack LSB-first at `bits` per code, straddling words
+            let n_words = (n * bits as usize).div_ceil(64);
+            let mut codes = vec![0u64; n_words.max(1)];
+            for (i, &c) in codes_raw.iter().enumerate() {
+                let bitpos = i * bits as usize;
+                let (wi, off) = (bitpos >> 6, bitpos & 63);
+                codes[wi] |= c << off;
+                if off + bits as usize > 64 {
+                    codes[wi + 1] |= c >> (64 - off);
+                }
+            }
+            let k = 1usize << bits;
+            let mut acc_a = vec![0.0f32; k];
+            code_accumulate(&x, &codes, bits, &mut acc_a);
+            let mut acc_b = vec![0.0f32; k];
+            scalar::code_accumulate(&x, &codes, bits, &mut acc_b);
+            assert_eq!(acc_a, acc_b);
+            let mut naive = vec![0.0f64; k];
+            for i in 0..n {
+                naive[codes_raw[i] as usize] += x[i] as f64;
+            }
+            for c in 0..k {
+                assert!((acc_a[c] as f64 - naive[c]).abs() < 1e-2);
+            }
+        });
+    }
+
+    #[test]
+    fn popcount_branch_rule_covers_both_forms() {
+        // deterministic check that the dense branch really engages: a full
+        // mask over 64 elements must equal block − scan(∅) = block exactly
+        let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.25 - 8.0).collect();
+        let mut blocks = vec![0.0f32; 1];
+        block_sums(&x, &mut blocks);
+        let full = masked_sum_pc(&x, &[!0u64], &blocks);
+        assert_eq!(full.to_bits(), blocks[0].to_bits());
+        // and the sparse branch: a single bit is exactly that element
+        let one = masked_sum_pc(&x, &[1u64 << 17], &blocks);
+        assert_eq!(one.to_bits(), x[17].to_bits());
+        // empty mask sums nothing
+        assert_eq!(masked_sum_pc(&x, &[0u64], &blocks), 0.0);
     }
 }

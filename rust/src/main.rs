@@ -176,7 +176,8 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     // --depth N overrides the config's serve.pipeline_depth (number of
     // concurrent batch executors; batches overlap on the multi-task pool)
     serve_cfg.pipeline_depth = args.get_usize("depth", serve_cfg.pipeline_depth).max(1);
-    let registry = Arc::new(Registry::load_dir(&dir)?);
+    // zero-copy mmap load; engine tier from serve.engine_mode (default auto)
+    let registry = Arc::new(Registry::load_dir_with(&dir, serve_cfg.engine_mode)?);
     let names = registry.names();
     println!(
         "serving {} model(s): {names:?} (max_batch {}, max_wait {}ms, pipeline depth {}, \
@@ -255,7 +256,8 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         net_cfg.bind_addr = addr.to_string();
     }
     lcquant::obs::set_enabled(obs_cfg.enabled);
-    let registry = Arc::new(Registry::load_dir(&dir)?);
+    // zero-copy mmap load; engine tier from serve.engine_mode (default auto)
+    let registry = Arc::new(Registry::load_dir_with(&dir, serve_cfg.engine_mode)?);
     let names = registry.names();
     let server = NetServer::start(
         Arc::clone(&registry),

@@ -66,10 +66,19 @@ pub enum CounterId {
     TracesDropped = 11,
     /// LC outer iterations completed.
     LcIterations = 12,
+    /// `.lcq` models loaded zero-copy via a page-cache mapping (the heap
+    /// fallback and eager loads don't count).
+    LcqMmapLoads = 13,
+    /// `.lcq` plane sections whose FNV checksum was actually computed
+    /// (lazy first touch, or eager load).
+    LcqSectionVerifies = 14,
+    /// Plane verification calls answered from an already-verified section
+    /// — the work the lazy checksum scheme avoided.
+    LcqLazyVerifyHits = 15,
 }
 
 /// Number of [`CounterId`] variants.
-pub const COUNTERS: usize = 13;
+pub const COUNTERS: usize = 16;
 
 impl CounterId {
     /// All counters, declaration order.
@@ -87,6 +96,9 @@ impl CounterId {
         CounterId::TracesRecorded,
         CounterId::TracesDropped,
         CounterId::LcIterations,
+        CounterId::LcqMmapLoads,
+        CounterId::LcqSectionVerifies,
+        CounterId::LcqLazyVerifyHits,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -105,6 +117,9 @@ impl CounterId {
             CounterId::TracesRecorded => "traces_recorded",
             CounterId::TracesDropped => "traces_dropped",
             CounterId::LcIterations => "lc_iterations",
+            CounterId::LcqMmapLoads => "lcq_mmap_loads",
+            CounterId::LcqSectionVerifies => "lcq_section_verifies",
+            CounterId::LcqLazyVerifyHits => "lcq_lazy_verify_hits",
         }
     }
 }
@@ -174,10 +189,12 @@ pub enum HistId {
     LcLstep = 6,
     /// LC loop: C-step wall time.
     LcCstep = 7,
+    /// Registry: `.lcq` cold load, file open → engine ready.
+    ModelLoad = 8,
 }
 
 /// Number of [`HistId`] variants.
-pub const HISTS: usize = 8;
+pub const HISTS: usize = 9;
 
 impl HistId {
     /// All histograms, declaration order.
@@ -190,6 +207,7 @@ impl HistId {
         HistId::NetHandshake,
         HistId::LcLstep,
         HistId::LcCstep,
+        HistId::ModelLoad,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -203,6 +221,7 @@ impl HistId {
             HistId::NetHandshake => "net_handshake",
             HistId::LcLstep => "lc_lstep",
             HistId::LcCstep => "lc_cstep",
+            HistId::ModelLoad => "model_load",
         }
     }
 }

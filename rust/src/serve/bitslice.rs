@@ -1,0 +1,385 @@
+//! Bit-sliced serve kernels: forward passes computed **directly on the
+//! packed `u64` plane words** of a [`crate::serve::packed::PackedLayer`]
+//! — no dense f32 weights, no per-weight index gathers, no unpacking.
+//!
+//! Where the LUT tier ([`crate::serve::LutEngine`]'s gather paths) turns
+//! the paper-§2.1 identity into *per-centroid index gathers* built at
+//! load time, the bit-sliced tier reads the storage representation
+//! itself: each output column is a run of `words_per_column` contiguous
+//! `u64` words, and the per-centroid partial sums fall out of popcount-
+//! style masked reductions over those words
+//! ([`crate::linalg::vecops::masked_sum_pc`] and friends, each pinned to
+//! a scalar reference decomposition by property tests). The win is
+//! memory traffic: a binary 300×100 layer is read as ~4.7 KB of sign
+//! plane instead of a 120 KB `u32` gather list — the whole working set of
+//! LeNet300-class models fits in L1/L2, and with
+//! [`crate::serve::PackedModel::load_mmap`] those words are served
+//! zero-copy out of the page cache.
+//!
+//! Four row kernels, one per representable plane shape:
+//!
+//! * [`sign_row`] — binary codebooks `{−a, +a}` ([`PlaneKind::Sign`]):
+//!   `y_j = b_j + a·(2·S⁺_j − T)` with `S⁺_j` a masked block-compensated
+//!   sum over column `j`'s sign words and `T = Σ x_i` shared by every
+//!   column.
+//! * [`ternary_row`] — ternary codebooks `{−a, 0, +a}`
+//!   ([`PlaneKind::SignMask`]): two planes (sign, nonzero mask) give
+//!   `y_j = b_j + a·(S⁺_j − S⁻_j)`; pruned weights are 0-bits in the mask
+//!   and cost nothing.
+//! * [`coded_row`] — general small-K codebooks ([`PlaneKind::Coded`],
+//!   `bits ≤ `[`MAX_CODED_BITS`]): a gather-free K-accumulator —
+//!   [`crate::linalg::vecops::code_accumulate`] streams the column's
+//!   packed codes once, binning `x_i` into `acc[code_i]`, then a K-entry
+//!   combine multiplies each bin by its centroid.
+//! * [`pow2_row`] — coded layers whose codebook is `{0, ±2^e}`
+//!   (`PowersOfTwo`): same accumulator, but the combine shifts each bin's
+//!   f32 exponent ([`crate::serve::engine::mul_pow2`]) and applies signs
+//!   by add/subtract — no float multiplies at all.
+//!
+//! # Hostile-input safety
+//!
+//! These kernels are the first consumers of **lazily verified** plane
+//! words (mmap'd sections are checksummed on first touch, not at load),
+//! so they must be memory-safe under arbitrary bit patterns even though
+//! the checksum will reject them: the popcount kernels mask every word to
+//! its row-covering bits, and the coded accumulators are sized `2^bits`
+//! (≥ K), so out-of-range codes land in bins the combine never reads.
+//!
+//! [`PlaneKind::Sign`]: crate::serve::packed::PlaneKind::Sign
+//! [`PlaneKind::SignMask`]: crate::serve::packed::PlaneKind::SignMask
+//! [`PlaneKind::Coded`]: crate::serve::packed::PlaneKind::Coded
+
+use super::engine::mul_pow2;
+use crate::linalg::vecops;
+
+/// Largest `bits` (= ⌈log₂K⌉) the coded kernels accept: the per-row
+/// accumulator is a fixed `[f32; 64]` on the stack, zeroed only up to
+/// `2^bits` per column. K ≤ 64 covers every small-codebook scheme worth
+/// bit-slicing (including `PowersOfTwo` up to c = 31); larger codebooks
+/// fall back to the LUT tier, whose gather cost is amortized at that K.
+pub const MAX_CODED_BITS: usize = 6;
+
+/// Which bit-sliced kernel a layer dispatches to, chosen once at engine
+/// build from the layer's [`crate::serve::packed::PlaneKind`] and
+/// codebook shape (see `LutEngine`'s auto-dispatch table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BitPath {
+    /// [`sign_row`] over the single sign plane.
+    SignPop {
+        /// The binary magnitude `a` (`codebook == [-a, +a]`).
+        scale: f32,
+    },
+    /// [`ternary_row`] over the (sign, mask) plane pair.
+    TernaryPop {
+        /// The ternary magnitude `a` (`codebook == [-a, 0, +a]`).
+        scale: f32,
+    },
+    /// [`coded_row`]: gather-free K-accumulator + codebook combine.
+    CodedK,
+    /// [`pow2_row`]: K-accumulator + exponent-shift combine.
+    CodedPow2 {
+        /// Per-centroid exponent `e` with `|codebook[c]| = 2^e`
+        /// (unused when `signs[c] == 0`).
+        exps: Vec<i32>,
+        /// Per-centroid sign: `-1.0`, `0.0` (zero centroid) or `+1.0`.
+        signs: Vec<f32>,
+    },
+}
+
+impl BitPath {
+    /// Stable label for dispatch introspection (`LutEngine::layer_paths`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            BitPath::SignPop { .. } => "sign-pop",
+            BitPath::TernaryPop { .. } => "ternary-pop",
+            BitPath::CodedK => "coded-k",
+            BitPath::CodedPow2 { .. } => "coded-pow2",
+        }
+    }
+}
+
+/// If `codebook` is exactly `{0, ±2^e}`-shaped (every entry zero or a
+/// normal power of two), return the `(exps, signs)` tables for
+/// [`pow2_row`]; otherwise `None`. Shape-driven, like
+/// [`crate::serve::packed::PlaneKind::for_codebook`]: any scheme that
+/// happens to land on a pow2 codebook gets the multiply-free combine.
+pub fn pow2_tables(codebook: &[f32]) -> Option<(Vec<i32>, Vec<f32>)> {
+    let mut exps = vec![0i32; codebook.len()];
+    let mut signs = vec![0.0f32; codebook.len()];
+    for (c, &v) in codebook.iter().enumerate() {
+        if v == 0.0 {
+            continue;
+        }
+        let bits = v.abs().to_bits();
+        let exp = ((bits >> 23) & 0xff) as i32;
+        // normal power of two: zero mantissa, exponent in the normal range
+        if bits & 0x007f_ffff != 0 || exp == 0 || exp == 0xff {
+            return None;
+        }
+        exps[c] = exp - 127;
+        signs[c] = if v < 0.0 { -1.0 } else { 1.0 };
+    }
+    Some((exps, signs))
+}
+
+/// Binary row kernel: `y[j] = bias[j] + scale·(2·S⁺_j − T)` where
+/// `S⁺_j` sums `x` over the set bits of column `j`'s sign words and
+/// `T = Σ x` (computed once per row). `plane` is the sign plane,
+/// `blocks` this row's precomputed 64-element block sums
+/// ([`vecops::block_sums`]) — shared across all output columns so the
+/// complement branch of the masked sum never re-reads `x`.
+pub fn sign_row(
+    x: &[f32],
+    blocks: &[f32],
+    plane: &[u64],
+    wpc: usize,
+    scale: f32,
+    bias: &[f32],
+    y: &mut [f32],
+) {
+    debug_assert_eq!(plane.len(), y.len() * wpc);
+    let total = vecops::sum(x);
+    for (j, out) in y.iter_mut().enumerate() {
+        let s_pos = vecops::masked_sum_pc(x, &plane[j * wpc..][..wpc], blocks);
+        *out = bias[j] + scale * (2.0 * s_pos - total);
+    }
+}
+
+/// Ternary row kernel: `y[j] = bias[j] + scale·(S⁺_j − S⁻_j)` from the
+/// (sign, mask) plane pair; weights outside the mask (the 0 centroid —
+/// pruned weights) contribute nothing and cost nothing.
+pub fn ternary_row(
+    x: &[f32],
+    blocks: &[f32],
+    sign: &[u64],
+    mask: &[u64],
+    wpc: usize,
+    scale: f32,
+    bias: &[f32],
+    y: &mut [f32],
+) {
+    debug_assert_eq!(sign.len(), y.len() * wpc);
+    debug_assert_eq!(mask.len(), y.len() * wpc);
+    for (j, out) in y.iter_mut().enumerate() {
+        let col = j * wpc..(j + 1) * wpc;
+        let (pos, neg) = vecops::ternary_sums(x, &sign[col.clone()], &mask[col], blocks);
+        *out = bias[j] + scale * (pos - neg);
+    }
+}
+
+/// Coded row kernel: per column, stream the packed codes once binning
+/// `x_i` into `acc[code_i]` ([`vecops::code_accumulate`]), then combine
+/// `y[j] = bias[j] + Σ_c codebook[c]·acc[c]` (zero centroids skipped).
+/// K multiplies per output unit, zero gather indices.
+pub fn coded_row(
+    x: &[f32],
+    codes: &[u64],
+    wpc: usize,
+    bits: usize,
+    codebook: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+) {
+    debug_assert!(bits >= 1 && bits <= MAX_CODED_BITS);
+    debug_assert_eq!(codes.len(), y.len() * wpc);
+    let mut acc = [0.0f32; 1 << MAX_CODED_BITS];
+    let slots = 1usize << bits; // ≥ K: hostile codes land in unread bins
+    for (j, out) in y.iter_mut().enumerate() {
+        let a = &mut acc[..slots];
+        a.fill(0.0);
+        vecops::code_accumulate(x, &codes[j * wpc..][..wpc], bits as u32, a);
+        let mut s = bias[j];
+        for (c, &v) in codebook.iter().enumerate() {
+            if v != 0.0 {
+                s += v * a[c];
+            }
+        }
+        *out = s;
+    }
+}
+
+/// Power-of-two row kernel: like [`coded_row`], but each bin's combine is
+/// an exponent shift ([`mul_pow2`]) applied by add/subtract — the layer
+/// pass performs no float multiplies at all (§5's hardware argument for
+/// power-of-two codebooks, taken to its end).
+pub fn pow2_row(
+    x: &[f32],
+    codes: &[u64],
+    wpc: usize,
+    bits: usize,
+    exps: &[i32],
+    signs: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+) {
+    debug_assert!(bits >= 1 && bits <= MAX_CODED_BITS);
+    debug_assert_eq!(codes.len(), y.len() * wpc);
+    let mut acc = [0.0f32; 1 << MAX_CODED_BITS];
+    let slots = 1usize << bits;
+    for (j, out) in y.iter_mut().enumerate() {
+        let a = &mut acc[..slots];
+        a.fill(0.0);
+        vecops::code_accumulate(x, &codes[j * wpc..][..wpc], bits as u32, a);
+        let mut s = bias[j];
+        for (c, (&e, &sg)) in exps.iter().zip(signs).enumerate() {
+            if sg > 0.0 {
+                s += mul_pow2(a[c], e);
+            } else if sg < 0.0 {
+                s -= mul_pow2(a[c], e);
+            }
+        }
+        *out = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::scalar;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pow2_tables_accept_exact_pow2_codebooks_only() {
+        // the PowersOfTwo scheme shape: {0, ±2^-i}
+        let (exps, signs) = pow2_tables(&[-1.0, -0.5, -0.25, 0.0, 0.25, 0.5, 1.0]).unwrap();
+        assert_eq!(exps, vec![0, -1, -2, 0, -2, -1, 0]);
+        assert_eq!(signs, vec![-1.0, -1.0, -1.0, 0.0, 1.0, 1.0, 1.0]);
+        // binary-style {−a, +a} with pow2 magnitude also qualifies
+        assert!(pow2_tables(&[-2.0, 2.0]).is_some());
+        // non-pow2 magnitudes, subnormals and non-finite entries do not
+        assert!(pow2_tables(&[-0.3, 0.3]).is_none());
+        assert!(pow2_tables(&[0.75]).is_none());
+        assert!(pow2_tables(&[f32::MIN_POSITIVE / 2.0]).is_none());
+        assert!(pow2_tables(&[f32::INFINITY]).is_none());
+        assert!(pow2_tables(&[f32::NAN]).is_none());
+        // all-zero degenerates fine
+        assert_eq!(pow2_tables(&[0.0]).unwrap().1, vec![0.0]);
+    }
+
+    /// The row kernels must be *exactly* the scalar-reference
+    /// decomposition composed per column — this is the contract that lets
+    /// `tests/bitslice.rs` pin the whole engine to `vecops::scalar`.
+    #[test]
+    fn row_kernels_match_scalar_reference_composition_bitwise() {
+        check("bitslice rows == scalar composition", 40, |g| {
+            let rows = g.usize_in(1, 130);
+            let cols = g.usize_in(1, 6);
+            let wpc = rows.div_ceil(64);
+            let mut rng = Rng::new(2000 + g.case as u64);
+            let mut x = vec![0.0f32; rows];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut blocks = vec![0.0f32; wpc];
+            scalar::block_sums(&x, &mut blocks);
+            let bias: Vec<f32> = (0..cols).map(|_| rng.normal(0.0, 0.2)).collect();
+            let plane: Vec<u64> = (0..cols * wpc)
+                .map(|i| {
+                    let m = if i % 64 >= 63 { !0 } else { (1u64 << (i % 64 + 1)) - 1 };
+                    (rng.next_u64() & rng.next_u64()) ^ (rng.next_u64() & m)
+                })
+                .map(|w| w & if rows % 64 == 0 { !0 } else { (1u64 << (rows % 64)) - 1 })
+                .collect();
+            let scale = rng.normal(0.0, 1.0).abs() + 0.1;
+
+            // sign_row == bias + scale·(2·masked_sum − total), per column
+            let mut y = vec![0.0f32; cols];
+            sign_row(&x, &blocks, &plane, wpc, scale, &bias, &mut y);
+            let total = vecops::sum(&x);
+            for j in 0..cols {
+                let s = scalar::masked_sum_pc(&x, &plane[j * wpc..][..wpc], &blocks);
+                let want = bias[j] + scale * (2.0 * s - total);
+                assert_eq!(y[j].to_bits(), want.to_bits(), "sign col {j}");
+            }
+
+            // ternary_row: sign = plane ∩ fresh mask superset
+            let mask: Vec<u64> = plane.iter().map(|&s| s | (rng.next_u64() & rng.next_u64())).collect();
+            let mask: Vec<u64> = mask
+                .iter()
+                .map(|w| w & if rows % 64 == 0 { !0 } else { (1u64 << (rows % 64)) - 1 })
+                .collect();
+            let mut y = vec![0.0f32; cols];
+            ternary_row(&x, &blocks, &plane, &mask, wpc, scale, &bias, &mut y);
+            for j in 0..cols {
+                let (p, n) =
+                    scalar::ternary_sums(&x, &plane[j * wpc..][..wpc], &mask[j * wpc..][..wpc], &blocks);
+                let want = bias[j] + scale * (p - n);
+                assert_eq!(y[j].to_bits(), want.to_bits(), "ternary col {j}");
+            }
+
+            // coded_row / pow2_row vs scalar code_accumulate composition
+            let bits = g.usize_in(1, 3);
+            let k = 1usize << bits;
+            let cwpc = (rows * bits).div_ceil(64);
+            let codes: Vec<u64> = {
+                let mut v = vec![0u64; cols * cwpc];
+                for c in 0..cols {
+                    for r in 0..rows {
+                        let code = (rng.next_u64() as usize % k) as u64;
+                        let bitpos = r * bits;
+                        let (w, off) = (bitpos / 64, bitpos % 64);
+                        v[c * cwpc + w] |= code << off;
+                        if off + bits > 64 {
+                            v[c * cwpc + w + 1] |= code >> (64 - off);
+                        }
+                    }
+                }
+                v
+            };
+            let codebook: Vec<f32> = (0..k).map(|_| rng.normal(0.0, 0.8)).collect();
+            let mut y = vec![0.0f32; cols];
+            coded_row(&x, &codes, cwpc, bits, &codebook, &bias, &mut y);
+            for j in 0..cols {
+                let mut acc = vec![0.0f32; k];
+                scalar::code_accumulate(&x, &codes[j * cwpc..][..cwpc], bits as u32, &mut acc);
+                let mut want = bias[j];
+                for c in 0..k {
+                    if codebook[c] != 0.0 {
+                        want += codebook[c] * acc[c];
+                    }
+                }
+                assert_eq!(y[j].to_bits(), want.to_bits(), "coded col {j}");
+            }
+
+            let pow2_cb: Vec<f32> = (0..k)
+                .map(|c| {
+                    let e = (c % 5) as i32 - 2;
+                    let sg = if c % 3 == 0 { 0.0 } else if c % 3 == 1 { 1.0 } else { -1.0 };
+                    sg * 2.0f32.powi(e)
+                })
+                .collect();
+            let (exps, signs) = pow2_tables(&pow2_cb).unwrap();
+            let mut y = vec![0.0f32; cols];
+            pow2_row(&x, &codes, cwpc, bits, &exps, &signs, &bias, &mut y);
+            for j in 0..cols {
+                let mut acc = vec![0.0f32; k];
+                scalar::code_accumulate(&x, &codes[j * cwpc..][..cwpc], bits as u32, &mut acc);
+                let mut want = bias[j];
+                for c in 0..k {
+                    if signs[c] > 0.0 {
+                        want += mul_pow2(acc[c], exps[c]);
+                    } else if signs[c] < 0.0 {
+                        want -= mul_pow2(acc[c], exps[c]);
+                    }
+                }
+                assert_eq!(y[j].to_bits(), want.to_bits(), "pow2 col {j}");
+            }
+        });
+    }
+
+    #[test]
+    fn coded_kernels_ignore_out_of_range_codes() {
+        // lazy mmap planes may carry arbitrary (pre-verification) bits:
+        // codes ≥ K must bin into unread accumulator slots, not crash or
+        // perturb the combine. bits=2, K=3 → code 3 is hostile.
+        let x = vec![1.0f32, 2.0, 4.0, 8.0];
+        let bits = 2usize;
+        // codes per row: [0, 3, 1, 3] — rows 1 and 3 are out of range
+        let codes = vec![0b11_01_11_00u64];
+        let codebook = vec![0.5f32, -1.0, 2.0]; // K=3
+        let bias = vec![10.0f32];
+        let mut y = vec![0.0f32; 1];
+        coded_row(&x, &codes, 1, bits, &codebook, &bias, &mut y);
+        // only rows 0 (code 0) and 2 (code 1) contribute
+        assert_eq!(y[0], 10.0 + 0.5 * 1.0 + (-1.0) * 4.0);
+    }
+}

@@ -1,4 +1,4 @@
-//! LUT inference engine: forward passes straight off the packed
+//! Quantized inference engine: forward passes straight off the packed
 //! representation — dense f32 weight matrices are never materialized.
 //!
 //! The core identity (paper §2.1's hardware argument): with w[i,j] =
@@ -8,20 +8,32 @@
 //! y_j = b_j + Σ_i x_i·c[a_ij] = b_j + Σ_k c_k · (Σ_{i: a_ij = k} x_i)
 //! ```
 //!
-//! so the inner loop is *additions into K per-centroid partial sums*
-//! (gathers over columns grouped by centroid, built once at load), followed
-//! by a K-entry LUT combine — K multiplies per output unit instead of one
-//! per weight. Three specializations:
+//! so the inner loop is *additions into K per-centroid partial sums*,
+//! followed by a K-entry combine — K multiplies per output unit instead
+//! of one per weight. Two execution tiers realize the identity:
 //!
-//! * **Grouped** — the general path; groups for exactly-zero centroids are
-//!   skipped entirely, so pruned weights (`AdaptiveWithZero`, `Ternary`)
-//!   cost nothing at inference.
-//! * **Signed** — `Binary`/`BinaryScale` (codebook `{−a, +a}`): with
-//!   S⁺ = Σ_{+} x_i and T = Σ x_i, y = b + a·(2S⁺ − T); only the positive
-//!   group is stored (half the index memory, ~half the adds — the
-//!   popcount-style trick in float form).
-//! * **Pow2** — `PowersOfTwo` (codebook `{0, ±2⁻ⁱ}`): the combine multiplies
-//!   by shifting the f32 exponent instead of a float multiply.
+//! * **Bit-sliced** ([`crate::serve::bitslice`], the default wherever a
+//!   layer's planes permit): the partial sums are computed **directly on
+//!   the packed `u64` plane words** — XNOR/popcount-style masked sums for
+//!   binary, two-plane sign/mask reductions for ternary, gather-free
+//!   K-accumulators for small coded codebooks, and an exponent-shift
+//!   combine for power-of-two codebooks. No unpacking, no index gathers,
+//!   ~32–64× less weight traffic than a gather list; with
+//!   [`PackedModel::load_mmap`] the words stream zero-copy from the page
+//!   cache, checksum-verified lazily on first touch (which is why every
+//!   forward is fallible).
+//! * **LUT gathers** (the v1 tier, kept for large-K layers and as the
+//!   [`EngineMode::Lut`] reference): per-centroid index gathers built
+//!   once at load. `Grouped` skips exactly-zero centroids, `Signed`
+//!   stores only the positive group (`y = b + a·(2S⁺ − T)`), `Pow2`
+//!   combines by exponent shifts.
+//!
+//! [`EngineMode`] selects the tier: `Auto` (default) bit-slices every
+//! representable layer and falls back to LUT gathers for the rest
+//! (`bits > `[`bitslice::MAX_CODED_BITS`], or K = 1); `Lut` and
+//! `BitSliced` force a tier for A/B benchmarking (`BitSliced` still
+//! falls back where no bit-sliced kernel exists, so it never errors on a
+//! valid model). [`LutEngine::layer_paths`] reports what was chosen.
 //!
 //! # Pipelining
 //!
@@ -33,7 +45,8 @@
 //! tasks instead of serializing whole forward passes behind a single task
 //! slot. Steady-state engines should reuse an [`EngineScratch`] via
 //! [`LutEngine::forward_into`] so concurrent passes also allocate nothing
-//! for activations.
+//! for activations (the scratch now also carries the bit-sliced tier's
+//! per-row block sums).
 //!
 //! # Pre-staged rows
 //!
@@ -45,7 +58,8 @@
 //! (wire bytes → request `Vec<f32>` → engine, no batch-staging copy in
 //! between).
 
-use super::packed::{PackedLayer, PackedModel};
+use super::bitslice::{self, BitPath};
+use super::packed::{PackedLayer, PackedModel, PlaneKind, Words};
 use crate::linalg::{num_threads, pool, vecops, Mat};
 use crate::nn::Activation;
 use crate::quant::Scheme;
@@ -59,6 +73,49 @@ use anyhow::{anyhow, Result};
 /// batch 256 on LeNet300's 784×300 layer qualifies, a micro-batch through
 /// the 100×10 layer does not.
 const PAR_MIN_WORK: usize = 2_000_000;
+
+/// Which execution tier [`LutEngine`] builds for each layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineMode {
+    /// Bit-sliced kernels wherever the layer's planes permit, LUT gathers
+    /// for the rest. The right choice outside A/B experiments.
+    #[default]
+    Auto,
+    /// Force the v1 per-centroid gather tier everywhere.
+    Lut,
+    /// Force bit-sliced kernels; layers with no bit-sliced form (K = 1,
+    /// `bits > `[`bitslice::MAX_CODED_BITS`]) still fall back to LUT.
+    BitSliced,
+}
+
+impl EngineMode {
+    /// Stable lowercase name (config files, stats wire payloads).
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineMode::Auto => "auto",
+            EngineMode::Lut => "lut",
+            EngineMode::BitSliced => "bitsliced",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<EngineMode> {
+        match s {
+            "auto" => Ok(EngineMode::Auto),
+            "lut" => Ok(EngineMode::Lut),
+            "bitsliced" => Ok(EngineMode::BitSliced),
+            _ => Err(anyhow!("unknown engine mode {s:?} (auto|lut|bitsliced)")),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Multiply a finite f32 by 2^e via exponent arithmetic (the "shift path").
 /// Falls back to a float multiply for zeros/subnormals/overflow.
@@ -75,7 +132,7 @@ pub fn mul_pow2(x: f32, e: i32) -> f32 {
     f32::from_bits((bits & 0x807f_ffff) | ((ne as u32) << 23))
 }
 
-/// Per-centroid gather structure for one layer (see module docs).
+/// Per-centroid gather structure for one layer (the LUT tier).
 enum LutPath {
     /// `indices[offsets[j*k + c] .. offsets[j*k + c + 1]]` are the input
     /// rows assigned to centroid `c` in output column `j`.
@@ -87,21 +144,31 @@ enum LutPath {
     Pow2 { indices: Vec<u32>, offsets: Vec<usize>, exps: Vec<i32>, signs: Vec<f32> },
 }
 
-struct LutLayer {
+/// How one layer executes: gather lists, or the packed planes themselves.
+enum Exec {
+    Lut(LutPath),
+    /// `planes` are shared handles onto the packed (possibly mmap'd)
+    /// sections; verified once per layer pass, then read in place.
+    Bit { path: BitPath, planes: Vec<Words>, wpc: usize },
+}
+
+struct EngineLayer {
     in_dim: usize,
     out_dim: usize,
     k: usize,
+    bits: usize,
     codebook: Vec<f32>,
     bias: Vec<f32>,
     act: Activation,
-    path: LutPath,
+    exec: Exec,
 }
 
 /// Group a layer's assignments by (output column, centroid): counting sort,
 /// O(P). Returns (indices, offsets) with `offsets.len() == cols*k + 1`.
-fn group_by_column(layer: &PackedLayer) -> (Vec<u32>, Vec<usize>) {
+/// Fallible because unpacking verifies lazily-checksummed plane sections.
+fn group_by_column(layer: &PackedLayer) -> Result<(Vec<u32>, Vec<usize>)> {
     let (rows, cols, k) = (layer.rows, layer.cols, layer.codebook.len());
-    let assigns = layer.unpack_assignments();
+    let assigns = layer.try_unpack_assignments()?;
     let mut counts = vec![0usize; cols * k];
     for (idx, &a) in assigns.iter().enumerate() {
         counts[(idx % cols) * k + a as usize] += 1;
@@ -117,52 +184,94 @@ fn group_by_column(layer: &PackedLayer) -> (Vec<u32>, Vec<usize>) {
         indices[cursor[g]] = (idx / cols) as u32;
         cursor[g] += 1;
     }
-    (indices, offsets)
+    Ok((indices, offsets))
 }
 
-impl LutLayer {
-    fn build(layer: &PackedLayer, act: Activation, scheme: &Scheme) -> LutLayer {
-        let k = layer.codebook.len();
-        let signed = matches!(scheme, Scheme::Binary | Scheme::BinaryScale)
-            && k == 2
-            && layer.codebook[0] == -layer.codebook[1];
-        let (indices, offsets) = group_by_column(layer);
-        let path = if signed {
-            // keep only each column's positive group (centroid index 1)
-            let mut pos = Vec::with_capacity(indices.len() / 2);
-            let mut pos_offsets = vec![0usize; layer.cols + 1];
-            for j in 0..layer.cols {
-                pos.extend_from_slice(&indices[offsets[j * 2 + 1]..offsets[j * 2 + 2]]);
-                pos_offsets[j + 1] = pos.len();
+/// Build the LUT-tier gather path for one layer (the v1 construction).
+fn lut_path(layer: &PackedLayer, scheme: &Scheme) -> Result<LutPath> {
+    let k = layer.codebook.len();
+    let signed = matches!(scheme, Scheme::Binary | Scheme::BinaryScale)
+        && k == 2
+        && layer.codebook[0] == -layer.codebook[1];
+    let (indices, offsets) = group_by_column(layer)?;
+    Ok(if signed {
+        // keep only each column's positive group (centroid index 1)
+        let mut pos = Vec::with_capacity(indices.len() / 2);
+        let mut pos_offsets = vec![0usize; layer.cols + 1];
+        for j in 0..layer.cols {
+            pos.extend_from_slice(&indices[offsets[j * 2 + 1]..offsets[j * 2 + 2]]);
+            pos_offsets[j + 1] = pos.len();
+        }
+        LutPath::Signed { pos, offsets: pos_offsets, scale: layer.codebook[1] }
+    } else if matches!(scheme, Scheme::PowersOfTwo { .. }) {
+        let mut exps = vec![0i32; k];
+        let mut signs = vec![0.0f32; k];
+        for (c, &v) in layer.codebook.iter().enumerate() {
+            if v != 0.0 {
+                exps[c] = ((v.abs().to_bits() >> 23) & 0xff) as i32 - 127;
+                signs[c] = if v < 0.0 { -1.0 } else { 1.0 };
             }
-            LutPath::Signed { pos, offsets: pos_offsets, scale: layer.codebook[1] }
-        } else if matches!(scheme, Scheme::PowersOfTwo { .. }) {
-            let mut exps = vec![0i32; k];
-            let mut signs = vec![0.0f32; k];
-            for (c, &v) in layer.codebook.iter().enumerate() {
-                if v != 0.0 {
-                    exps[c] = ((v.abs().to_bits() >> 23) & 0xff) as i32 - 127;
-                    signs[c] = if v < 0.0 { -1.0 } else { 1.0 };
-                }
+        }
+        LutPath::Pow2 { indices, offsets, exps, signs }
+    } else {
+        LutPath::Grouped { indices, offsets }
+    })
+}
+
+/// Pick the bit-sliced kernel for a layer, if its planes permit one.
+/// Purely shape-driven (plane kind + codebook), independent of scheme.
+fn bit_path(layer: &PackedLayer) -> Option<BitPath> {
+    if layer.bits == 0 {
+        return None; // K = 1: constant weight matrix, LUT handles it
+    }
+    match layer.kind {
+        PlaneKind::Sign => Some(BitPath::SignPop { scale: layer.codebook[1] }),
+        PlaneKind::SignMask => Some(BitPath::TernaryPop { scale: layer.codebook[2] }),
+        PlaneKind::Coded => {
+            if layer.bits > bitslice::MAX_CODED_BITS {
+                return None; // large K: gather lists amortize better
             }
-            LutPath::Pow2 { indices, offsets, exps, signs }
-        } else {
-            LutPath::Grouped { indices, offsets }
+            match bitslice::pow2_tables(&layer.codebook) {
+                Some((exps, signs)) => Some(BitPath::CodedPow2 { exps, signs }),
+                None => Some(BitPath::CodedK),
+            }
+        }
+    }
+}
+
+impl EngineLayer {
+    fn build(
+        layer: &PackedLayer,
+        act: Activation,
+        scheme: &Scheme,
+        mode: EngineMode,
+    ) -> Result<EngineLayer> {
+        let exec = match mode {
+            EngineMode::Lut => Exec::Lut(lut_path(layer, scheme)?),
+            EngineMode::Auto | EngineMode::BitSliced => match bit_path(layer) {
+                Some(path) => Exec::Bit {
+                    path,
+                    planes: layer.planes().to_vec(),
+                    wpc: layer.words_per_column(),
+                },
+                None => Exec::Lut(lut_path(layer, scheme)?),
+            },
         };
-        LutLayer {
+        Ok(EngineLayer {
             in_dim: layer.rows,
             out_dim: layer.cols,
-            k,
+            k: layer.codebook.len(),
+            bits: layer.bits,
             codebook: layer.codebook.clone(),
             bias: layer.bias.clone(),
             act,
-            path,
-        }
+            exec,
+        })
     }
 
-    /// One input row → one output row (pre-activation handled by caller).
-    fn forward_row(&self, x: &[f32], y: &mut [f32]) {
-        match &self.path {
+    /// One input row → one output row through the LUT gather tier.
+    fn lut_row(&self, path: &LutPath, x: &[f32], y: &mut [f32]) {
+        match path {
             LutPath::Grouped { indices, offsets } => {
                 for j in 0..self.out_dim {
                     let mut acc = self.bias[j];
@@ -201,19 +310,19 @@ impl LutLayer {
         }
     }
 
-    /// One layer pass into a reusable output buffer (resized in place; no
-    /// allocation once warm). The band sweep is one task on the multi-task
-    /// pool, so concurrent layer passes of different requests interleave.
-    fn forward_into(&self, x: &Mat, out: &mut Mat) {
-        assert_eq!(x.cols, self.in_dim, "input dim mismatch");
-        self.forward_rows_into(x.rows, &|r| x.row(r), out);
-    }
-
-    /// One layer pass over **pre-staged rows**: input row `r` is whatever
-    /// slice `row(r)` returns, so the rows need not live in one contiguous
-    /// matrix — the micro-batcher hands the engine its request buffers in
-    /// place instead of copying them into a batch `Mat` first.
-    fn forward_rows_into<'a, F>(&self, m: usize, row: &F, out: &mut Mat)
+    /// One layer pass over **pre-staged rows** into a reusable output
+    /// buffer (resized in place; no allocation once warm). The band sweep
+    /// is one task on the multi-task pool, so concurrent layer passes of
+    /// different requests interleave. Fallible: bit-sliced layers verify
+    /// their (possibly mmap'd, lazily checksummed) plane sections once
+    /// per pass before any band reads them.
+    fn forward_rows_into<'a, F>(
+        &self,
+        m: usize,
+        row: &F,
+        out: &mut Mat,
+        blocks: &mut Vec<f32>,
+    ) -> Result<()>
     where
         F: Fn(usize) -> &'a [f32] + Sync,
     {
@@ -221,11 +330,56 @@ impl LutLayer {
         out.rows = m;
         out.cols = n;
         out.data.resize(m * n, 0.0);
+        // verify plane sections once per layer pass (lazy checksum memo);
+        // after this the band closures read plain `&[u64]`
+        let (p0, p1): (&[u64], &[u64]) = match &self.exec {
+            Exec::Bit { planes, .. } => (
+                planes[0].verify()?,
+                if planes.len() > 1 { planes[1].verify()? } else { &[] },
+            ),
+            Exec::Lut(_) => (&[], &[]),
+        };
+        // the popcount paths share one set of per-row block sums across
+        // all output columns; computed up front into pool scratch so band
+        // closures allocate nothing
+        let n_b = self.in_dim.div_ceil(64);
+        let needs_blocks = matches!(
+            &self.exec,
+            Exec::Bit { path: BitPath::SignPop { .. } | BitPath::TernaryPop { .. }, .. }
+        );
+        if needs_blocks {
+            blocks.resize(m * n_b, 0.0);
+            for r in 0..m {
+                let x = row(r);
+                assert_eq!(x.len(), self.in_dim, "input dim mismatch");
+                vecops::block_sums(x, &mut blocks[r * n_b..(r + 1) * n_b]);
+            }
+        }
+        let blocks: &[f32] = blocks;
         let do_rows = |rows: std::ops::Range<usize>, odata: &mut [f32]| {
             for (local, r) in rows.enumerate() {
                 let x = row(r);
                 assert_eq!(x.len(), self.in_dim, "input dim mismatch");
-                self.forward_row(x, &mut odata[local * n..(local + 1) * n]);
+                let y = &mut odata[local * n..(local + 1) * n];
+                match &self.exec {
+                    Exec::Lut(path) => self.lut_row(path, x, y),
+                    Exec::Bit { path, wpc, .. } => match path {
+                        BitPath::SignPop { scale } => {
+                            let b = &blocks[r * n_b..][..n_b];
+                            bitslice::sign_row(x, b, p0, *wpc, *scale, &self.bias, y);
+                        }
+                        BitPath::TernaryPop { scale } => {
+                            let b = &blocks[r * n_b..][..n_b];
+                            bitslice::ternary_row(x, b, p0, p1, *wpc, *scale, &self.bias, y);
+                        }
+                        BitPath::CodedK => {
+                            bitslice::coded_row(x, p0, *wpc, self.bits, &self.codebook, &self.bias, y);
+                        }
+                        BitPath::CodedPow2 { exps, signs } => {
+                            bitslice::pow2_row(x, p0, *wpc, self.bits, exps, signs, &self.bias, y);
+                        }
+                    },
+                }
             }
         };
         if m < 2 || m * self.in_dim * n < PAR_MIN_WORK || num_threads() == 1 {
@@ -246,21 +400,23 @@ impl LutLayer {
             }
             Activation::Linear => {}
         }
+        Ok(())
     }
 }
 
-/// Reusable activation buffers for [`LutEngine::forward_into`]: two
-/// ping-pong matrices that layer passes alternate between, sized lazily and
-/// kept warm across requests so a steady-state serve executor allocates
-/// nothing per batch.
+/// Reusable buffers for [`LutEngine::forward_into`]: two ping-pong
+/// activation matrices plus the bit-sliced tier's per-row block sums, all
+/// sized lazily and kept warm across requests so a steady-state serve
+/// executor allocates nothing per batch.
 pub struct EngineScratch {
     bufs: [Mat; 2],
+    blocks: Vec<f32>,
 }
 
 impl EngineScratch {
-    /// Empty scratch; buffers grow to the largest activation shape seen.
+    /// Empty scratch; buffers grow to the largest shapes seen.
     pub fn new() -> EngineScratch {
-        EngineScratch { bufs: [Mat::zeros(0, 0), Mat::zeros(0, 0)] }
+        EngineScratch { bufs: [Mat::zeros(0, 0), Mat::zeros(0, 0)], blocks: Vec::new() }
     }
 }
 
@@ -270,16 +426,25 @@ impl Default for EngineScratch {
     }
 }
 
-/// The engine: grouped-gather structures for every layer of one
-/// [`PackedModel`], ready for batched forward passes.
+/// The engine: per-layer execution paths (bit-sliced plane kernels and/or
+/// LUT gather structures) for one [`PackedModel`], ready for batched
+/// forward passes.
 pub struct LutEngine {
-    layers: Vec<LutLayer>,
+    layers: Vec<EngineLayer>,
+    mode: EngineMode,
 }
 
 impl LutEngine {
-    /// Build from a packed model (O(P) counting sort per layer; no dense
-    /// weights are created).
+    /// Build with [`EngineMode::Auto`] dispatch (O(P) per layer worst
+    /// case; no dense weights are created). Note: building LUT-tier
+    /// layers from an mmap'd model unpacks (and therefore verifies) their
+    /// sections; bit-sliced layers stay unverified until first forward.
     pub fn new(model: &PackedModel) -> Result<LutEngine> {
+        LutEngine::with_mode(model, EngineMode::Auto)
+    }
+
+    /// Build with an explicit execution tier (see [`EngineMode`]).
+    pub fn with_mode(model: &PackedModel, mode: EngineMode) -> Result<LutEngine> {
         if model.layers.is_empty() {
             return Err(anyhow!("packed model has no layers"));
         }
@@ -304,10 +469,30 @@ impl LutEngine {
                 } else {
                     model.spec.hidden_activation
                 };
-                LutLayer::build(pl, act, &model.scheme)
+                EngineLayer::build(pl, act, &model.scheme, mode)
             })
-            .collect();
-        Ok(LutEngine { layers })
+            .collect::<Result<_>>()?;
+        Ok(LutEngine { layers, mode })
+    }
+
+    /// The mode this engine was built with.
+    pub fn mode(&self) -> EngineMode {
+        self.mode
+    }
+
+    /// Per-layer execution path labels, in layer order: `"sign-pop"`,
+    /// `"ternary-pop"`, `"coded-k"`, `"coded-pow2"` (bit-sliced tier) or
+    /// `"lut-grouped"`, `"lut-signed"`, `"lut-pow2"` (gather tier).
+    pub fn layer_paths(&self) -> Vec<&'static str> {
+        self.layers
+            .iter()
+            .map(|l| match &l.exec {
+                Exec::Lut(LutPath::Grouped { .. }) => "lut-grouped",
+                Exec::Lut(LutPath::Signed { .. }) => "lut-signed",
+                Exec::Lut(LutPath::Pow2 { .. }) => "lut-pow2",
+                Exec::Bit { path, .. } => path.label(),
+            })
+            .collect()
     }
 
     /// Input dimension (features per request).
@@ -324,9 +509,11 @@ impl LutEngine {
     ///
     /// Allocating convenience around [`LutEngine::forward_into`]; hot
     /// callers (the serve executors) hold an [`EngineScratch`] instead.
-    pub fn forward(&self, x: &Mat) -> Mat {
+    /// `Err` means a lazily verified plane section failed its checksum
+    /// (corrupt model data), never a transient condition.
+    pub fn forward(&self, x: &Mat) -> Result<Mat> {
         let mut scratch = EngineScratch::new();
-        self.forward_into(x, &mut scratch).clone()
+        Ok(self.forward_into(x, &mut scratch)?.clone())
     }
 
     /// Batched forward pass into reusable scratch buffers: returns a view
@@ -334,7 +521,7 @@ impl LutEngine {
     /// Zero heap allocation once the scratch is warm, so pipelined
     /// executors can run concurrent batches without touching the
     /// allocator.
-    pub fn forward_into<'s>(&self, x: &Mat, scratch: &'s mut EngineScratch) -> &'s Mat {
+    pub fn forward_into<'s>(&self, x: &Mat, scratch: &'s mut EngineScratch) -> Result<&'s Mat> {
         assert_eq!(x.cols, self.in_dim(), "input dim mismatch");
         self.forward_rows_into(x.rows, |r| x.row(r), scratch)
     }
@@ -352,26 +539,24 @@ impl LutEngine {
         rows: usize,
         row: F,
         scratch: &'s mut EngineScratch,
-    ) -> &'s Mat
+    ) -> Result<&'s Mat>
     where
         F: Fn(usize) -> &'a [f32] + Sync,
     {
-        let [a, b] = &mut scratch.bufs;
-        self.layers[0].forward_rows_into(rows, &row, a);
+        let EngineScratch { bufs: [a, b], blocks } = scratch;
+        self.layers[0].forward_rows_into(rows, &row, a, blocks)?;
         let mut in_a = true;
         for layer in &self.layers[1..] {
             if in_a {
-                layer.forward_into(a, b);
+                let m = a.rows;
+                layer.forward_rows_into(m, &|r| a.row(r), b, blocks)?;
             } else {
-                layer.forward_into(b, a);
+                let m = b.rows;
+                layer.forward_rows_into(m, &|r| b.row(r), a, blocks)?;
             }
             in_a = !in_a;
         }
-        if in_a {
-            a
-        } else {
-            b
-        }
+        Ok(if in_a { a } else { b })
     }
 }
 
@@ -404,25 +589,29 @@ mod tests {
         PackedModel::from_parts("net", &spec, scheme, &codebooks, &assignments, &biases).unwrap()
     }
 
-    fn max_logit_dev(model: &PackedModel, batch: usize, seed: u64) -> f32 {
-        let engine = LutEngine::new(model).unwrap();
+    fn max_logit_dev_mode(model: &PackedModel, batch: usize, seed: u64, mode: EngineMode) -> f32 {
+        let engine = LutEngine::with_mode(model, mode).unwrap();
         let net = model.to_mlp();
         let mut rng = Rng::new(seed);
         let mut x = Mat::zeros(batch, engine.in_dim());
         rng.fill_normal(&mut x.data, 0.0, 1.0);
-        let lut = engine.forward(&x);
+        let got = engine.forward(&x).unwrap();
         let (dense, _) = net.forward(&x, false, None);
-        assert_eq!(lut.rows, dense.rows);
-        assert_eq!(lut.cols, dense.cols);
+        assert_eq!(got.rows, dense.rows);
+        assert_eq!(got.cols, dense.cols);
         let mut dev = 0.0f32;
-        for (a, b) in lut.data.iter().zip(&dense.data) {
+        for (a, b) in got.data.iter().zip(&dense.data) {
             dev = dev.max((a - b).abs());
         }
         dev
     }
 
+    fn max_logit_dev(model: &PackedModel, batch: usize, seed: u64) -> f32 {
+        max_logit_dev_mode(model, batch, seed, EngineMode::Auto)
+    }
+
     #[test]
-    fn lut_forward_matches_dense_all_schemes() {
+    fn forward_matches_dense_all_schemes_all_modes() {
         let schemes = [
             Scheme::AdaptiveCodebook { k: 4 },
             Scheme::AdaptiveCodebook { k: 16 },
@@ -434,25 +623,71 @@ mod tests {
             Scheme::TernaryScale,
             Scheme::PowersOfTwo { c: 3 },
         ];
-        for (i, scheme) in schemes.iter().enumerate() {
-            let model = packed_net(scheme, vec![15, 10, 6], 200 + i as u64);
-            let dev = max_logit_dev(&model, 7, 300 + i as u64);
-            assert!(dev <= 1e-3, "{scheme:?}: max logit deviation {dev}");
+        for mode in [EngineMode::Auto, EngineMode::Lut, EngineMode::BitSliced] {
+            for (i, scheme) in schemes.iter().enumerate() {
+                let model = packed_net(scheme, vec![15, 10, 6], 200 + i as u64);
+                let dev = max_logit_dev_mode(&model, 7, 300 + i as u64, mode);
+                assert!(dev <= 1e-3, "{scheme:?} {mode:?}: max logit deviation {dev}");
+            }
         }
     }
 
     #[test]
-    fn lut_forward_matches_dense_threaded_batch() {
+    fn auto_dispatch_picks_bit_sliced_paths_per_layer() {
+        let cases: [(Scheme, &str); 6] = [
+            (Scheme::Binary, "sign-pop"),
+            (Scheme::BinaryScale, "sign-pop"),
+            (Scheme::Ternary, "ternary-pop"),
+            (Scheme::TernaryScale, "ternary-pop"),
+            (Scheme::PowersOfTwo { c: 3 }, "coded-pow2"),
+            (Scheme::AdaptiveCodebook { k: 4 }, "coded-k"),
+        ];
+        for (scheme, want) in &cases {
+            let model = packed_net(scheme, vec![15, 10, 6], 900);
+            let engine = LutEngine::new(&model).unwrap();
+            assert_eq!(engine.layer_paths(), vec![*want; 2], "{scheme:?}");
+            assert_eq!(engine.mode(), EngineMode::Auto);
+        }
+        // large K has no bit-sliced form: Auto falls back to gathers
+        let model = packed_net(&Scheme::AdaptiveCodebook { k: 256 }, vec![15, 10, 6], 901);
+        assert_eq!(
+            LutEngine::new(&model).unwrap().layer_paths(),
+            vec!["lut-grouped"; 2]
+        );
+        // and BitSliced mode falls back the same way instead of erroring
+        let engine = LutEngine::with_mode(&model, EngineMode::BitSliced).unwrap();
+        assert_eq!(engine.layer_paths(), vec!["lut-grouped"; 2]);
+        // forcing Lut forces gathers even for binary
+        let model = packed_net(&Scheme::Binary, vec![15, 10, 6], 902);
+        let engine = LutEngine::with_mode(&model, EngineMode::Lut).unwrap();
+        assert_eq!(engine.layer_paths(), vec!["lut-signed"; 2]);
+    }
+
+    #[test]
+    fn engine_mode_names_roundtrip() {
+        for mode in [EngineMode::Auto, EngineMode::Lut, EngineMode::BitSliced] {
+            assert_eq!(mode.name().parse::<EngineMode>().unwrap(), mode);
+            assert_eq!(format!("{mode}"), mode.name());
+        }
+        assert!("xnor".parse::<EngineMode>().is_err());
+        assert_eq!(EngineMode::default(), EngineMode::Auto);
+    }
+
+    #[test]
+    fn forward_matches_dense_threaded_batch() {
         // first layer: 64·200·180 ≈ 2.3M adds > PAR_MIN_WORK, so this
-        // exercises the threaded row split (second layer stays serial)
+        // exercises the threaded row split (second layer stays serial) on
+        // both tiers
         let model = packed_net(&Scheme::BinaryScale, vec![200, 180, 4], 41);
-        let dev = max_logit_dev(&model, 64, 42);
-        assert!(dev <= 1e-3, "threaded: {dev}");
+        for mode in [EngineMode::BitSliced, EngineMode::Lut] {
+            let dev = max_logit_dev_mode(&model, 64, 42, mode);
+            assert!(dev <= 1e-3, "threaded {mode:?}: {dev}");
+        }
     }
 
     #[test]
     fn lut_forward_property() {
-        check("lut == dense", 25, |g| {
+        check("engine == dense", 25, |g| {
             let sizes = vec![g.usize_in(2, 12), g.usize_in(1, 10), g.usize_in(1, 6)];
             let k = g.usize_in(1, 8);
             let model = packed_net(
@@ -488,19 +723,21 @@ mod tests {
     fn forward_into_matches_forward_across_batch_shapes() {
         // one scratch recycled across growing and shrinking batches (the
         // pipelined executor's usage pattern) must equal the allocating
-        // form bit for bit
+        // form bit for bit — on both tiers
         let model = packed_net(&Scheme::AdaptiveCodebook { k: 4 }, vec![12, 9, 5], 71);
-        let engine = LutEngine::new(&model).unwrap();
-        let mut scratch = EngineScratch::new();
-        let mut rng = Rng::new(72);
-        for batch in [3usize, 7, 1, 5] {
-            let mut x = Mat::zeros(batch, engine.in_dim());
-            rng.fill_normal(&mut x.data, 0.0, 1.0);
-            let want = engine.forward(&x);
-            let got = engine.forward_into(&x, &mut scratch);
-            assert_eq!(got.rows, want.rows);
-            assert_eq!(got.cols, want.cols);
-            assert_eq!(got.data, want.data, "batch {batch}");
+        for mode in [EngineMode::Auto, EngineMode::Lut] {
+            let engine = LutEngine::with_mode(&model, mode).unwrap();
+            let mut scratch = EngineScratch::new();
+            let mut rng = Rng::new(72);
+            for batch in [3usize, 7, 1, 5] {
+                let mut x = Mat::zeros(batch, engine.in_dim());
+                rng.fill_normal(&mut x.data, 0.0, 1.0);
+                let want = engine.forward(&x).unwrap();
+                let got = engine.forward_into(&x, &mut scratch).unwrap();
+                assert_eq!(got.rows, want.rows);
+                assert_eq!(got.cols, want.cols);
+                assert_eq!(got.data, want.data, "batch {batch} {mode:?}");
+            }
         }
     }
 
@@ -509,29 +746,33 @@ mod tests {
         // pre-staged rows scattered across separate Vecs (the micro-batch
         // server's job buffers) must produce bit-identical logits to the
         // same rows staged contiguously in a Mat — including across the
-        // threaded first-layer band split
+        // threaded first-layer band split, on both tiers
         for sizes in [vec![12, 9, 5], vec![200, 180, 4]] {
-            let model = packed_net(&Scheme::AdaptiveCodebook { k: 4 }, sizes, 81);
-            let engine = LutEngine::new(&model).unwrap();
-            let batch = 64usize;
-            let mut rng = Rng::new(82);
-            let rows: Vec<Vec<f32>> = (0..batch)
-                .map(|_| {
-                    let mut r = vec![0.0f32; engine.in_dim()];
-                    rng.fill_normal(&mut r, 0.0, 1.0);
-                    r
-                })
-                .collect();
-            let mut x = Mat::zeros(batch, engine.in_dim());
-            for (r, row) in rows.iter().enumerate() {
-                x.row_mut(r).copy_from_slice(row);
+            for mode in [EngineMode::Auto, EngineMode::Lut] {
+                let model = packed_net(&Scheme::TernaryScale, sizes.clone(), 81);
+                let engine = LutEngine::with_mode(&model, mode).unwrap();
+                let batch = 64usize;
+                let mut rng = Rng::new(82);
+                let rows: Vec<Vec<f32>> = (0..batch)
+                    .map(|_| {
+                        let mut r = vec![0.0f32; engine.in_dim()];
+                        rng.fill_normal(&mut r, 0.0, 1.0);
+                        r
+                    })
+                    .collect();
+                let mut x = Mat::zeros(batch, engine.in_dim());
+                for (r, row) in rows.iter().enumerate() {
+                    x.row_mut(r).copy_from_slice(row);
+                }
+                let want = engine.forward(&x).unwrap();
+                let mut scratch = EngineScratch::new();
+                let got = engine
+                    .forward_rows_into(batch, |r| rows[r].as_slice(), &mut scratch)
+                    .unwrap();
+                assert_eq!(got.rows, want.rows);
+                assert_eq!(got.cols, want.cols);
+                assert_eq!(got.data, want.data, "{mode:?}");
             }
-            let want = engine.forward(&x);
-            let mut scratch = EngineScratch::new();
-            let got = engine.forward_rows_into(batch, |r| rows[r].as_slice(), &mut scratch);
-            assert_eq!(got.rows, want.rows);
-            assert_eq!(got.cols, want.cols);
-            assert_eq!(got.data, want.data);
         }
     }
 
@@ -555,10 +796,21 @@ mod tests {
 
     #[test]
     fn pruned_centroids_cost_no_groups() {
-        // Ternary groups only ±1; the zero centroid is skipped in the
-        // combine, so heavily pruned nets do proportionally less work.
+        // Ternary stores pruned weights as 0-bits in the mask plane (or
+        // skipped groups on the LUT tier), so they do proportionally less
+        // work on both tiers.
         let model = packed_net(&Scheme::TernaryScale, vec![10, 8, 3], 11);
         let dev = max_logit_dev(&model, 3, 12);
+        assert!(dev <= 1e-3, "{dev}");
+    }
+
+    #[test]
+    fn k1_models_serve_via_lut_fallback() {
+        // K = 1 packs to zero planes; Auto must fall back and still match
+        let model = packed_net(&Scheme::AdaptiveCodebook { k: 1 }, vec![8, 5, 3], 13);
+        let engine = LutEngine::new(&model).unwrap();
+        assert_eq!(engine.layer_paths(), vec!["lut-grouped"; 2]);
+        let dev = max_logit_dev(&model, 4, 14);
         assert!(dev <= 1e-3, "{dev}");
     }
 }

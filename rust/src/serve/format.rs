@@ -1,29 +1,52 @@
-//! Binary on-disk format for [`PackedModel`] (`.lcq` files).
+//! Binary on-disk format for [`PackedModel`] (`.lcq` files), version 2.
 //!
 //! ```text
-//! magic "LCQP" | version u32 | name | spec | scheme | layers | fnv1a-64
+//! header:   magic "LCQP" | version u32 | name | spec | scheme
+//!           | layer metadata (incl. per-plane offset/words/fnv) | fnv1a-64
+//! padding:  zero bytes to the next 64-byte boundary
+//! sections: one 64-byte-aligned section of u64 plane words per plane,
+//!           zero padding between sections
 //! ```
 //!
-//! All integers little-endian. The trailing checksum is FNV-1a 64 over
-//! every preceding byte (magic included), so truncation and corruption are
-//! both detected at load. The payload is the paper-§5 storage: ⌈log₂K⌉
-//! bits per weight plus a K-entry f32 codebook and f32 biases per layer —
-//! no dense weights ever touch the disk.
+//! All integers little-endian. Version 2 replaces v1's row-major packed
+//! stream + whole-file trailing checksum with **column-major plane
+//! sections** (the layouts in [`crate::serve::packed`]) that are 64-byte
+//! aligned and **individually FNV-checksummed**: the header carries each
+//! section's absolute byte offset, word count and expected checksum, and
+//! is itself checksummed. That split is what makes zero-copy loading
+//! possible — [`PackedModel::load_mmap`] maps the file, parses and
+//! verifies only the header, and serves plane words straight from the
+//! page cache; each section's checksum is verified lazily on first touch
+//! ([`crate::serve::packed::Words::verify`]). The eager
+//! [`PackedModel::from_bytes`] path verifies everything up front and
+//! additionally validates plane contents (padding bits zero, codes in
+//! codebook range, ternary sign ⊆ mask).
 //!
-//! The full byte-level specification (field tables, bit-packing rules,
-//! reader validation obligations, and the exact size equation) is
-//! maintained for third-party implementors in `docs/lcq-format.md`; the
-//! tests below pin this file to that document.
+//! The payload is the paper-§5 storage: ⌈log₂K⌉ bits per weight plus a
+//! K-entry f32 codebook and f32 biases per layer — no dense weights ever
+//! touch the disk. Alignment padding is format overhead, not payload.
+//!
+//! The full byte-level specification (field tables, plane layouts,
+//! alignment and lazy-checksum semantics, reader validation obligations,
+//! and the exact size equation) is maintained for third-party
+//! implementors in `docs/lcq-format.md`; the tests below pin this file to
+//! that document.
 
-use super::packed::{PackedLayer, PackedModel};
+use super::packed::{PackedLayer, PackedModel, PlaneKind, Words};
 use crate::nn::{Activation, MlpSpec};
+use crate::obs::{self, CounterId};
 use crate::quant::ratio::bits_per_weight;
 use crate::quant::Scheme;
+use crate::util::mmap::MmapRegion;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"LCQP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Plane sections start on multiples of this (cache-line / word friendly;
+/// keeps mmap'd sections castable to `&[u64]`).
+const SECTION_ALIGN: usize = 64;
 
 /// File extension used by [`crate::serve::Registry::load_dir`].
 pub const EXTENSION: &str = "lcq";
@@ -37,6 +60,10 @@ pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+fn align_up(v: usize, a: usize) -> usize {
+    v.div_ceil(a) * a
 }
 
 // ---- little-endian writer/reader --------------------------------------
@@ -111,7 +138,7 @@ impl<'a> Reader<'a> {
     }
 }
 
-// ---- scheme / activation codecs ---------------------------------------
+// ---- scheme / activation / plane-kind codecs ---------------------------
 
 fn write_scheme(w: &mut Writer, s: &Scheme) {
     match s {
@@ -169,127 +196,370 @@ fn activation_from_tag(t: u8) -> Result<Activation> {
     })
 }
 
-impl PackedModel {
-    /// Serialize (header + payload + checksum).
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let mut w = Writer::default();
-        w.buf.extend_from_slice(MAGIC);
-        w.u32(VERSION);
-        w.str(&self.name);
-        // spec
-        w.u32(self.spec.sizes.len() as u32);
-        for &s in &self.spec.sizes {
-            w.u64(s as u64);
-        }
-        w.u8(activation_tag(self.spec.hidden_activation));
-        w.f32s(&self.spec.dropout_keep);
-        write_scheme(&mut w, &self.scheme);
-        // layers
-        w.u32(self.layers.len() as u32);
-        for l in &self.layers {
-            w.u64(l.rows as u64);
-            w.u64(l.cols as u64);
-            w.u32(l.bits as u32);
-            w.f32s(&l.codebook);
-            w.f32s(&l.bias);
-            w.u64(l.packed.len() as u64);
-            for &word in &l.packed {
-                w.u64(word);
-            }
-        }
-        let checksum = fnv1a(&w.buf);
-        w.u64(checksum);
-        w.buf
+fn kind_tag(k: PlaneKind) -> u8 {
+    match k {
+        PlaneKind::Coded => 0,
+        PlaneKind::Sign => 1,
+        PlaneKind::SignMask => 2,
     }
+}
 
-    /// Deserialize and verify magic, version and checksum.
-    pub fn from_bytes(bytes: &[u8]) -> Result<PackedModel> {
-        if bytes.len() < MAGIC.len() + 4 + 8 {
-            return Err(anyhow!("model file too short ({} bytes)", bytes.len()));
+fn kind_from_tag(t: u8) -> Result<PlaneKind> {
+    Ok(match t {
+        0 => PlaneKind::Coded,
+        1 => PlaneKind::Sign,
+        2 => PlaneKind::SignMask,
+        _ => return Err(anyhow!("unknown plane kind tag {t}")),
+    })
+}
+
+// ---- parsed header ------------------------------------------------------
+
+struct PlaneMeta {
+    offset: usize,
+    words: usize,
+    fnv: u64,
+}
+
+struct LayerMeta {
+    rows: usize,
+    cols: usize,
+    bits: usize,
+    kind: PlaneKind,
+    codebook: Vec<f32>,
+    bias: Vec<f32>,
+    planes: Vec<PlaneMeta>,
+}
+
+struct Header {
+    name: String,
+    spec: MlpSpec,
+    scheme: Scheme,
+    layers: Vec<LayerMeta>,
+    /// End of the zero-padded header = offset of the first section.
+    header_end: usize,
+}
+
+impl LayerMeta {
+    fn words_per_column(&self) -> usize {
+        if self.bits == 0 {
+            0
+        } else {
+            match self.kind {
+                PlaneKind::Sign | PlaneKind::SignMask => self.rows.div_ceil(64),
+                PlaneKind::Coded => (self.rows * self.bits).div_ceil(64),
+            }
         }
-        let (body, tail) = bytes.split_at(bytes.len() - 8);
-        let stored = u64::from_le_bytes(tail.try_into().unwrap());
-        let computed = fnv1a(body);
-        if stored != computed {
+    }
+}
+
+/// Parse and fully validate the v2 header against `bytes` (the whole
+/// file): magic, version, header checksum, shapes vs spec, kind vs
+/// codebook shape, plane counts/sizes, and the canonical aligned section
+/// layout (each section exactly at the 64-byte alignment of its
+/// predecessor's end, the last ending exactly at EOF). Section *contents*
+/// are not touched — both the lazy mmap path and the eager path build on
+/// this, and the eager path layers its own payload validation on top.
+fn parse_header(bytes: &[u8]) -> Result<Header> {
+    if bytes.len() < MAGIC.len() + 4 + 8 {
+        return Err(anyhow!("model file too short ({} bytes)", bytes.len()));
+    }
+    let mut r = Reader { buf: bytes, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(anyhow!("bad magic (not an .lcq packed model)"));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(anyhow!("unsupported format version {version} (expected {VERSION})"));
+    }
+    let name = r.str()?;
+    let n_sizes = r.u32()? as usize;
+    let sizes: Vec<usize> =
+        (0..n_sizes).map(|_| r.u64().map(|v| v as usize)).collect::<Result<_>>()?;
+    if sizes.len() < 2 {
+        return Err(anyhow!("spec needs >= 2 sizes, got {sizes:?}"));
+    }
+    let hidden_activation = activation_from_tag(r.u8()?)?;
+    let dropout_keep = r.f32s()?;
+    let spec = MlpSpec { sizes, hidden_activation, dropout_keep };
+    let scheme = read_scheme(&mut r)?;
+    let n_layers = r.u32()? as usize;
+    if n_layers != spec.n_layers() {
+        return Err(anyhow!("layer count {n_layers} does not match spec {}", spec.n_layers()));
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let rows = r.u64()? as usize;
+        let cols = r.u64()? as usize;
+        let bits = r.u32()? as usize;
+        let kind = kind_from_tag(r.u8()?)?;
+        let codebook = r.f32s()?;
+        let bias = r.f32s()?;
+        // validate shapes BEFORE any size arithmetic: header integers are
+        // attacker-controlled until tied back to the spec, and the
+        // contract is Err, not panic/overflow
+        if rows != spec.sizes[l] || cols != spec.sizes[l + 1] {
             return Err(anyhow!(
-                "checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+                "layer {l}: {rows}x{cols} does not match spec {}x{}",
+                spec.sizes[l],
+                spec.sizes[l + 1]
             ));
         }
-        let mut r = Reader { buf: body, pos: 0 };
-        if r.take(4)? != MAGIC {
-            return Err(anyhow!("bad magic (not an .lcq packed model)"));
+        if bias.len() != cols || codebook.is_empty() {
+            return Err(anyhow!("layer {l}: bad bias/codebook lengths"));
         }
-        let version = r.u32()?;
-        if version != VERSION {
-            return Err(anyhow!("unsupported format version {version} (expected {VERSION})"));
-        }
-        let name = r.str()?;
-        let n_sizes = r.u32()? as usize;
-        let sizes: Vec<usize> =
-            (0..n_sizes).map(|_| r.u64().map(|v| v as usize)).collect::<Result<_>>()?;
-        if sizes.len() < 2 {
-            return Err(anyhow!("spec needs >= 2 sizes, got {sizes:?}"));
-        }
-        let hidden_activation = activation_from_tag(r.u8()?)?;
-        let dropout_keep = r.f32s()?;
-        let spec = MlpSpec { sizes, hidden_activation, dropout_keep };
-        let scheme = read_scheme(&mut r)?;
-        let n_layers = r.u32()? as usize;
-        if n_layers != spec.n_layers() {
+        if bits != bits_per_weight(codebook.len()) {
             return Err(anyhow!(
-                "layer count {n_layers} does not match spec {}",
-                spec.n_layers()
+                "layer {l}: {bits} bits/weight inconsistent with K={}",
+                codebook.len()
             ));
         }
-        let mut layers = Vec::with_capacity(n_layers);
-        for l in 0..n_layers {
-            let rows = r.u64()? as usize;
-            let cols = r.u64()? as usize;
-            let bits = r.u32()? as usize;
-            let codebook = r.f32s()?;
-            let bias = r.f32s()?;
-            let n_words = r.u64()? as usize;
-            // validate shapes BEFORE any size arithmetic: header integers
-            // are attacker-controlled until tied back to the spec, and the
-            // contract is Err, not panic/overflow
-            if rows != spec.sizes[l] || cols != spec.sizes[l + 1] {
+        if kind != PlaneKind::for_codebook(&codebook) {
+            return Err(anyhow!(
+                "layer {l}: plane kind {kind:?} does not match the codebook shape"
+            ));
+        }
+        rows.checked_mul(cols)
+            .and_then(|n| n.checked_mul(bits))
+            .ok_or_else(|| anyhow!("layer {l}: dimension overflow"))?;
+        let n_planes = r.u8()? as usize;
+        let expected_planes = if bits == 0 {
+            0
+        } else if kind == PlaneKind::SignMask {
+            2
+        } else {
+            1
+        };
+        if n_planes != expected_planes {
+            return Err(anyhow!(
+                "layer {l}: {n_planes} planes, expected {expected_planes} for {kind:?}"
+            ));
+        }
+        let mut planes = Vec::with_capacity(n_planes);
+        for _ in 0..n_planes {
+            let offset = r.u64()? as usize;
+            let words = r.u64()? as usize;
+            let fnv = r.u64()?;
+            planes.push(PlaneMeta { offset, words, fnv });
+        }
+        let meta = LayerMeta { rows, cols, bits, kind, codebook, bias, planes };
+        let expected_words = meta.cols * meta.words_per_column();
+        if meta.planes.iter().any(|p| p.words != expected_words) {
+            return Err(anyhow!(
+                "layer {l}: plane word count does not match cols × words/column = {expected_words}"
+            ));
+        }
+        layers.push(meta);
+    }
+    // header checksum covers every byte before it
+    let body_end = r.pos;
+    let stored = r.u64()?;
+    let computed = fnv1a(&bytes[..body_end]);
+    if stored != computed {
+        return Err(anyhow!(
+            "header checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+        ));
+    }
+    let header_end = align_up(r.pos, SECTION_ALIGN);
+    if bytes.len() < header_end {
+        return Err(anyhow!("file ends inside header padding"));
+    }
+    if bytes[r.pos..header_end].iter().any(|&b| b != 0) {
+        return Err(anyhow!("nonzero header padding"));
+    }
+    // sections must sit exactly at the canonical aligned layout
+    let mut cursor = header_end;
+    for (l, meta) in layers.iter().enumerate() {
+        for (p, plane) in meta.planes.iter().enumerate() {
+            cursor = align_up(cursor, SECTION_ALIGN);
+            if plane.offset != cursor {
                 return Err(anyhow!(
-                    "layer {l}: {rows}x{cols} does not match spec {}x{}",
-                    spec.sizes[l],
-                    spec.sizes[l + 1]
+                    "layer {l} plane {p}: section offset {} breaks the canonical layout \
+                     (expected {cursor})",
+                    plane.offset
                 ));
             }
-            if bias.len() != cols || codebook.is_empty() {
-                return Err(anyhow!("layer {l}: bad bias/codebook lengths"));
+            let len = plane
+                .words
+                .checked_mul(8)
+                .ok_or_else(|| anyhow!("layer {l} plane {p}: section size overflow"))?;
+            cursor = cursor
+                .checked_add(len)
+                .ok_or_else(|| anyhow!("layer {l} plane {p}: section end overflow"))?;
+            if cursor > bytes.len() {
+                return Err(anyhow!("layer {l} plane {p}: section extends past end of file"));
             }
-            if bits != bits_per_weight(codebook.len()) {
-                return Err(anyhow!(
-                    "layer {l}: {bits} bits/weight inconsistent with K={}",
-                    codebook.len()
-                ));
+        }
+    }
+    if cursor != bytes.len() {
+        return Err(anyhow!("{} trailing bytes after the last section", bytes.len() - cursor));
+    }
+    Ok(Header { name, spec, scheme, layers, header_end })
+}
+
+/// Eager payload validation for one parsed layer: per-column padding bits
+/// zero, ternary sign ⊆ mask, coded codes inside the codebook.
+fn validate_layer_payload(l: usize, layer: &PackedLayer) -> Result<()> {
+    if layer.bits == 0 {
+        return Ok(());
+    }
+    let wpc = layer.words_per_column();
+    let pad_bits = match layer.kind {
+        PlaneKind::Sign | PlaneKind::SignMask => layer.rows % 64,
+        PlaneKind::Coded => (layer.rows * layer.bits) % 64,
+    };
+    if pad_bits != 0 {
+        let pad_mask = !((1u64 << pad_bits) - 1);
+        for plane in layer.planes() {
+            let words = plane.raw();
+            for c in 0..layer.cols {
+                if words[c * wpc + wpc - 1] & pad_mask != 0 {
+                    return Err(anyhow!("layer {l}: nonzero padding bits in column {c}"));
+                }
             }
-            let total_bits = rows
-                .checked_mul(cols)
-                .and_then(|n| n.checked_mul(bits))
-                .ok_or_else(|| anyhow!("layer {l}: dimension overflow"))?;
-            let expected_words = total_bits.div_ceil(64);
-            if n_words != expected_words {
-                return Err(anyhow!(
-                    "layer {l}: {n_words} packed words, expected {expected_words}"
-                ));
+        }
+    }
+    match layer.kind {
+        PlaneKind::SignMask => {
+            let sign = layer.planes()[0].raw();
+            let mask = layer.planes()[1].raw();
+            if sign.iter().zip(mask).any(|(s, m)| s & !m != 0) {
+                return Err(anyhow!("layer {l}: sign plane not a subset of the nonzero mask"));
             }
-            let packed: Vec<u64> = (0..n_words).map(|_| r.u64()).collect::<Result<_>>()?;
-            let layer = PackedLayer { rows, cols, bits, codebook, bias, packed };
+        }
+        PlaneKind::Coded => {
             let k = layer.codebook.len() as u32;
-            if (0..layer.weight_count()).any(|i| layer.assignment(i) >= k) {
+            if layer.unpack_assignments().iter().any(|&a| a >= k) {
                 return Err(anyhow!("layer {l}: assignment index out of codebook range"));
             }
+        }
+        PlaneKind::Sign => {}
+    }
+    Ok(())
+}
+
+impl PackedModel {
+    /// Serialize: header (with per-section offsets and checksums patched
+    /// in on a second pass), zero padding, then the 64-byte-aligned plane
+    /// sections.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let write_header = |metas: &[Vec<(u64, u64, u64)>]| -> Writer {
+            let mut w = Writer::default();
+            w.buf.extend_from_slice(MAGIC);
+            w.u32(VERSION);
+            w.str(&self.name);
+            w.u32(self.spec.sizes.len() as u32);
+            for &s in &self.spec.sizes {
+                w.u64(s as u64);
+            }
+            w.u8(activation_tag(self.spec.hidden_activation));
+            w.f32s(&self.spec.dropout_keep);
+            write_scheme(&mut w, &self.scheme);
+            w.u32(self.layers.len() as u32);
+            for (l, layer) in self.layers.iter().enumerate() {
+                w.u64(layer.rows as u64);
+                w.u64(layer.cols as u64);
+                w.u32(layer.bits as u32);
+                w.u8(kind_tag(layer.kind));
+                w.f32s(&layer.codebook);
+                w.f32s(&layer.bias);
+                w.u8(layer.n_planes() as u8);
+                for &(off, words, fnv) in &metas[l] {
+                    w.u64(off);
+                    w.u64(words);
+                    w.u64(fnv);
+                }
+            }
+            w
+        };
+        // pass 1: placeholder metas fix the header length (offsets are
+        // fixed-width), which fixes every section offset
+        let placeholder: Vec<Vec<(u64, u64, u64)>> =
+            self.layers.iter().map(|l| vec![(0, 0, 0); l.n_planes()]).collect();
+        let header_len = write_header(&placeholder).buf.len() + 8; // + header fnv
+        let header_end = align_up(header_len, SECTION_ALIGN);
+        // lay out sections, serializing each plane's words LE
+        let mut cursor = header_end;
+        let mut metas: Vec<Vec<(u64, u64, u64)>> = Vec::with_capacity(self.layers.len());
+        let mut sections: Vec<(usize, Vec<u8>)> = Vec::new();
+        for layer in &self.layers {
+            let mut lm = Vec::with_capacity(layer.n_planes());
+            for plane in layer.planes() {
+                cursor = align_up(cursor, SECTION_ALIGN);
+                let words = plane.raw();
+                let mut bytes = Vec::with_capacity(words.len() * 8);
+                for &word in words {
+                    bytes.extend_from_slice(&word.to_le_bytes());
+                }
+                lm.push((cursor as u64, words.len() as u64, fnv1a(&bytes)));
+                let start = cursor;
+                cursor += bytes.len();
+                sections.push((start, bytes));
+            }
+            metas.push(lm);
+        }
+        // pass 2: real header + checksum + padding + sections
+        let mut w = write_header(&metas);
+        let sum = fnv1a(&w.buf);
+        w.u64(sum);
+        debug_assert_eq!(w.buf.len(), header_len);
+        let mut buf = w.buf;
+        for (start, bytes) in sections {
+            buf.resize(start, 0);
+            buf.extend_from_slice(&bytes);
+        }
+        buf.resize(buf.len().max(header_end), 0); // plane-less models still pad
+        buf
+    }
+
+    /// Deserialize **eagerly**: parse + verify the header, verify every
+    /// section checksum, materialize owned plane words, and validate the
+    /// payload (padding bits zero, sign ⊆ mask, codes in range). The
+    /// strict counterpart of [`PackedModel::load_mmap`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<PackedModel> {
+        let header = parse_header(bytes)?;
+        // inter-section padding must be zero (canonical writer output)
+        let mut cursor = header.header_end;
+        for meta in &header.layers {
+            for plane in &meta.planes {
+                if bytes[cursor..plane.offset].iter().any(|&b| b != 0) {
+                    return Err(anyhow!("nonzero inter-section padding"));
+                }
+                cursor = plane.offset + plane.words * 8;
+            }
+        }
+        let mut layers = Vec::with_capacity(header.layers.len());
+        for (l, meta) in header.layers.iter().enumerate() {
+            let mut planes = Vec::with_capacity(meta.planes.len());
+            for (p, pm) in meta.planes.iter().enumerate() {
+                let section = &bytes[pm.offset..pm.offset + pm.words * 8];
+                let computed = fnv1a(section);
+                if computed != pm.fnv {
+                    return Err(anyhow!(
+                        "layer {l} plane {p}: section checksum mismatch \
+                         (stored {:#018x}, computed {computed:#018x})",
+                        pm.fnv
+                    ));
+                }
+                let words: Vec<u64> = section
+                    .chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                planes.push(Words::owned(words));
+            }
+            let layer = PackedLayer {
+                rows: meta.rows,
+                cols: meta.cols,
+                bits: meta.bits,
+                kind: meta.kind,
+                codebook: meta.codebook.clone(),
+                bias: meta.bias.clone(),
+                planes,
+            };
+            validate_layer_payload(l, &layer)?;
             layers.push(layer);
         }
-        if r.pos != r.buf.len() {
-            return Err(anyhow!("{} trailing bytes after model", r.buf.len() - r.pos));
-        }
-        Ok(PackedModel { name, spec, scheme, layers })
+        Ok(PackedModel { name: header.name, spec: header.spec, scheme: header.scheme, layers })
     }
 
     /// Write to a file (creating parent directories).
@@ -301,10 +571,59 @@ impl PackedModel {
         Ok(())
     }
 
-    /// Read from a file.
+    /// Read from a file, eagerly verified ([`PackedModel::from_bytes`]).
     pub fn load(path: &Path) -> Result<PackedModel> {
         let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
         PackedModel::from_bytes(&bytes).with_context(|| format!("parsing {path:?}"))
+    }
+
+    /// Map a `.lcq` file and serve its plane sections **zero-copy** from
+    /// the page cache: only the header is parsed, checksum-verified and
+    /// copied; plane words stay in the mapping and each section's FNV is
+    /// verified lazily on first touch ([`crate::serve::packed::Words`]).
+    /// Cold-load cost is therefore O(header), not O(file).
+    ///
+    /// Plane *contents* are not pre-validated on this path — the serve
+    /// kernels are written to be safe under arbitrary section bytes (bit
+    /// planes mask to the row-covering bits; coded accumulators are sized
+    /// to 2^bits) — while a checksum mismatch surfaces as an error from
+    /// the first forward pass that touches the section.
+    ///
+    /// On big-endian targets (where the mapped bytes can't be viewed as
+    /// words) and when mapping itself is unavailable, this transparently
+    /// degrades: the heap-backed region still avoids re-parsing, or the
+    /// eager loader takes over entirely. `lcq_mmap_loads` counts only true
+    /// page-cache mappings.
+    pub fn load_mmap(path: &Path) -> Result<PackedModel> {
+        if cfg!(target_endian = "big") {
+            return PackedModel::load(path);
+        }
+        let region = Arc::new(
+            MmapRegion::map_file(path).with_context(|| format!("mapping {path:?}"))?,
+        );
+        let header =
+            parse_header(region.bytes()).with_context(|| format!("parsing {path:?}"))?;
+        if region.is_mapped() && obs::enabled() {
+            obs::counter(CounterId::LcqMmapLoads).inc();
+        }
+        let mut layers = Vec::with_capacity(header.layers.len());
+        for meta in &header.layers {
+            let planes = meta
+                .planes
+                .iter()
+                .map(|pm| Words::mapped(Arc::clone(&region), pm.offset, pm.words, pm.fnv))
+                .collect();
+            layers.push(PackedLayer {
+                rows: meta.rows,
+                cols: meta.cols,
+                bits: meta.bits,
+                kind: meta.kind,
+                codebook: meta.codebook.clone(),
+                bias: meta.bias.clone(),
+                planes,
+            });
+        }
+        Ok(PackedModel { name: header.name, spec: header.spec, scheme: header.scheme, layers })
     }
 }
 
@@ -376,14 +695,21 @@ mod tests {
         let back = PackedModel::load(&path).unwrap();
         assert_eq!(back, m);
         // on-disk bytes = eq.(14) payload + format overhead (header, name,
-        // spec, per-layer framing, word padding, checksum) — the payload
-        // dominates and the overhead is small and accountable.
+        // spec, per-layer framing + plane tables, section alignment,
+        // per-column word padding) — the payload dominates and the
+        // overhead is small and accountable:
+        //   header + header padding      < 256 + Σ 24·planes
+        //   section alignment            ≤ 63 per plane
+        //   column padding               < 8 bytes per column per plane
         let file_bytes = std::fs::metadata(&path).unwrap().len() as usize;
         let payload_bytes = m.payload_bits().div_ceil(8);
         assert!(file_bytes >= payload_bytes, "{file_bytes} < {payload_bytes}");
         let overhead = file_bytes - payload_bytes;
-        // generous fixed bound: framing is O(layers), not O(weights)
-        assert!(overhead < 256, "format overhead {overhead} bytes");
+        let n_planes: usize = m.layers.iter().map(|l| l.n_planes()).sum();
+        let col_slots: usize =
+            m.layers.iter().map(|l| l.cols * l.n_planes()).sum();
+        let bound = 256 + 88 * n_planes + 8 * col_slots;
+        assert!(overhead < bound, "format overhead {overhead} ≥ bound {bound}");
         // and the ratio accounting matches quant::ratio exactly
         let (p1, p0) = m.spec.param_counts();
         assert_eq!(m.payload_bits(), ratio::quantized_bits(p1, p0, 4, m.n_layers()));
@@ -401,18 +727,27 @@ mod tests {
             | Scheme::PowersOfTwo { .. } => 1 + 4,
             Scheme::FixedCodebook { codebook } => 1 + 4 + 4 * codebook.len(),
         };
-        let mut total = 4 + 4; // magic + version
-        total += 4 + m.name.len(); // name string
-        total += 4 + 8 * m.spec.sizes.len() + 1 + 4 + 4 * m.spec.dropout_keep.len(); // spec
-        total += scheme_bytes;
-        total += 4; // layer count
+        let mut header = 4 + 4; // magic + version
+        header += 4 + m.name.len(); // name string
+        header += 4 + 8 * m.spec.sizes.len() + 1 + 4 + 4 * m.spec.dropout_keep.len(); // spec
+        header += scheme_bytes;
+        header += 4; // layer count
         for l in &m.layers {
-            total += 8 + 8 + 4; // rows, cols, bits
-            total += 4 + 4 * l.codebook.len(); // codebook list
-            total += 4 + 4 * l.bias.len(); // bias list
-            total += 8 + 8 * (l.weight_count() * l.bits).div_ceil(64); // packed words
+            header += 8 + 8 + 4 + 1; // rows, cols, bits, kind
+            header += 4 + 4 * l.codebook.len(); // codebook list
+            header += 4 + 4 * l.bias.len(); // bias list
+            header += 1 + 24 * l.n_planes(); // plane count + plane table
         }
-        total + 8 // checksum
+        header += 8; // header checksum
+        // sections: 64-byte-aligned, words/column × cols words each
+        let mut cursor = header.div_ceil(64) * 64;
+        for l in &m.layers {
+            for _ in 0..l.n_planes() {
+                cursor = cursor.div_ceil(64) * 64;
+                cursor += 8 * l.cols * l.words_per_column();
+            }
+        }
+        cursor
     }
 
     #[test]
@@ -461,21 +796,28 @@ mod tests {
     fn corruption_is_detected() {
         let m = toy_model(&Scheme::Ternary, 88);
         let good = m.to_bytes();
-        // flip one payload byte
+        // flip one byte in the last section (eager load: section checksum)
         let mut bad = good.clone();
-        let mid = bad.len() / 2;
-        bad[mid] ^= 0x40;
-        assert!(PackedModel::from_bytes(&bad).is_err());
-        // truncate
+        let n = bad.len();
+        bad[n - 3] ^= 0x40;
+        let err = PackedModel::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // flip one header byte (model name): header checksum
+        let mut bad = good.clone();
+        bad[12] ^= 0x20;
+        let err = PackedModel::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("magic"), "{err}");
+        // truncate: the last section no longer fits
         assert!(PackedModel::from_bytes(&good[..good.len() - 3]).is_err());
-        // bad magic (re-checksummed so it reaches the magic check)
+        // bad magic
         let mut nomagic = good.clone();
         nomagic[0] = b'X';
-        let n = nomagic.len();
-        let sum = fnv1a(&nomagic[..n - 8]);
-        nomagic[n - 8..].copy_from_slice(&sum.to_le_bytes());
         let err = PackedModel::from_bytes(&nomagic).unwrap_err().to_string();
         assert!(err.contains("magic"), "{err}");
+        // trailing garbage
+        let mut long = good.clone();
+        long.extend_from_slice(&[0u8; 64]);
+        assert!(PackedModel::from_bytes(&long).is_err());
         // empty / tiny input
         assert!(PackedModel::from_bytes(&[]).is_err());
         assert!(PackedModel::from_bytes(b"LCQP").is_err());
@@ -486,10 +828,87 @@ mod tests {
         let m = toy_model(&Scheme::Binary, 99);
         let mut bytes = m.to_bytes();
         bytes[4] = 9; // version LE byte
-        let n = bytes.len();
-        let sum = fnv1a(&bytes[..n - 8]);
-        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
         let err = PackedModel::from_bytes(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn sections_are_aligned_and_planes_word_counted() {
+        for scheme in [Scheme::Binary, Scheme::Ternary, Scheme::AdaptiveCodebook { k: 4 }] {
+            let m = toy_model(&scheme, 123);
+            let bytes = m.to_bytes();
+            let header = parse_header(&bytes).unwrap();
+            for (meta, layer) in header.layers.iter().zip(&m.layers) {
+                assert_eq!(meta.planes.len(), layer.n_planes());
+                for pm in &meta.planes {
+                    assert_eq!(pm.offset % SECTION_ALIGN, 0, "{scheme:?}");
+                    assert_eq!(pm.words, layer.cols * layer.words_per_column());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mmap_load_is_identical_and_lazily_verified() {
+        let dir = std::env::temp_dir().join("lcquant_format_mmap_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        for (i, scheme) in [
+            Scheme::Binary,
+            Scheme::TernaryScale,
+            Scheme::AdaptiveCodebook { k: 4 },
+            Scheme::PowersOfTwo { c: 3 },
+            Scheme::AdaptiveCodebook { k: 1 },
+        ]
+        .iter()
+        .enumerate()
+        {
+            let m = toy_model(scheme, 200 + i as u64);
+            let path = dir.join(format!("m{i}.lcq"));
+            m.save(&path).unwrap();
+            let mapped = PackedModel::load_mmap(&path).unwrap();
+            // metadata identical, planes verify clean, contents identical
+            assert_eq!(mapped.name, m.name);
+            assert_eq!(mapped.spec, m.spec);
+            assert_eq!(mapped.scheme, m.scheme);
+            for (lm, le) in mapped.layers.iter().zip(&m.layers) {
+                for p in 0..lm.n_planes() {
+                    assert_eq!(lm.plane_words(p).unwrap(), le.planes()[p].raw());
+                }
+                assert_eq!(
+                    lm.try_unpack_assignments().unwrap(),
+                    le.unpack_assignments(),
+                    "{scheme:?}"
+                );
+            }
+            assert_eq!(mapped, m, "{scheme:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_section_is_rejected_lazily_not_at_load() {
+        let dir = std::env::temp_dir().join("lcquant_format_lazy_corrupt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let m = toy_model(&Scheme::Binary, 321);
+        let mut bytes = m.to_bytes();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01; // inside the last plane section
+        let path = dir.join("corrupt.lcq");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, &bytes).unwrap();
+        // eager load rejects immediately…
+        assert!(PackedModel::load(&path).is_err());
+        // …the lazy path loads fine (header is intact)…
+        let mapped = PackedModel::load_mmap(&path).unwrap();
+        // …and the corruption surfaces on first verified touch of the
+        // damaged plane, stickily
+        let last = mapped.layers.last().unwrap();
+        let p = last.n_planes() - 1;
+        assert!(last.plane_words(p).is_err());
+        assert!(last.plane_words(p).is_err());
+        assert!(last.try_unpack_assignments().is_err());
+        // undamaged layers keep verifying clean
+        assert!(mapped.layers[0].plane_words(0).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -10,14 +10,23 @@
 //!   [`PackedModel::compression_ratio`] reproduces the paper's ρ(K)
 //!   numbers (×30.5 for LeNet300 at K=2, etc.) *as measured on disk*, not
 //!   just in a formula.
-//! * [`format`] — versioned little-endian binary `.lcq` files with an
-//!   FNV-1a checksum; corruption and truncation fail loudly at load.
-//! * [`engine`] — the [`LutEngine`] forward pass off the packed form:
-//!   per-centroid partial sums (gathers) + a K-entry LUT combine, the
-//!   hardware argument of §2.1 (additions and lookups instead of one
-//!   multiply per weight). Sign and exponent-shift specializations for the
-//!   binary and powers-of-two codebooks; exact-zero centroids cost
-//!   nothing.
+//! * [`format`] — versioned little-endian binary `.lcq` files (v2:
+//!   64-byte-aligned, per-section FNV-checksummed plane sections behind a
+//!   checksummed header); corruption and truncation fail loudly — at load
+//!   on the eager path, on first touch on the zero-copy
+//!   [`PackedModel::load_mmap`] path, which serves plane words straight
+//!   from the page cache with lazy per-section verification.
+//! * [`engine`] — the [`LutEngine`] forward pass off the packed form,
+//!   realizing §2.1's hardware argument (additions and lookups instead of
+//!   one multiply per weight) in two tiers selected by [`EngineMode`]:
+//!   **bit-sliced** kernels ([`bitslice`]) that compute popcount-style
+//!   masked sums, gather-free K-accumulators and exponent-shift combines
+//!   *directly on the packed `u64` plane words*, and the per-centroid
+//!   **LUT gather** tier for layers outside the bit-sliced envelope.
+//!   Exact-zero centroids cost nothing on either tier.
+//! * [`bitslice`] — the bit-sliced row kernels themselves, each pinned
+//!   bit-for-bit to a scalar reference decomposition in
+//!   [`crate::linalg::vecops`].
 //! * [`server`] — a micro-batching, **pipelined** request queue
 //!   ([`MicroBatchServer`]): single requests coalesce up to a deadline
 //!   into engine-friendly batches, `pipeline_depth` executor threads run
@@ -51,13 +60,14 @@
 //! ```
 #![warn(missing_docs)]
 
+pub mod bitslice;
 pub mod engine;
 pub mod format;
 pub mod packed;
 pub mod registry;
 pub mod server;
 
-pub use engine::{EngineScratch, LutEngine};
-pub use packed::{PackedLayer, PackedModel};
+pub use engine::{EngineMode, EngineScratch, LutEngine};
+pub use packed::{PackedLayer, PackedModel, PlaneKind};
 pub use registry::{LoadedModel, ModelInfo, Registry};
 pub use server::{Client, JobOutcome, MicroBatchServer, ServeStats, ServerConfig, StatsSnapshot};

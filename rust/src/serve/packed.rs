@@ -1,19 +1,266 @@
-//! The packed model artifact: per-layer bit-packed codebook assignments at
-//! ⌈log₂K⌉ bits per weight, plus the codebook, biases and architecture —
-//! exactly the storage the paper's compression-ratio formula (eq. 14)
-//! counts, so [`PackedModel::payload_bits`] agrees with
+//! The packed model artifact: per-layer codebook assignments stored as
+//! column-major bit **planes** in `u64` words, plus the codebook, biases
+//! and architecture — exactly the storage the paper's compression-ratio
+//! formula (eq. 14) counts, so [`PackedModel::payload_bits`] agrees with
 //! [`crate::quant::ratio::quantized_bits`] bit for bit.
+//!
+//! # Plane layouts
+//!
+//! Assignments are packed **per output column** so the bit-sliced serve
+//! tier ([`crate::serve::bitslice`]) can run popcount kernels straight
+//! over a column's words. Each column occupies
+//! [`PackedLayer::words_per_column`] consecutive `u64`s; layouts by
+//! [`PlaneKind`]:
+//!
+//! * **`Sign`** (symmetric binary codebook `[-a, +a]`): one plane, one
+//!   bit per weight. Bit `r % 64` of word `c·wpc + r/64` is weight
+//!   `(r, c)`; a set bit means centroid index 1 (`+a`).
+//! * **`SignMask`** (symmetric ternary codebook `[-a, 0, +a]`): two
+//!   planes with the `Sign` bit geometry. Plane 0 is the *sign* plane (set
+//!   = `+a` among the nonzero weights), plane 1 is the *nonzero mask*
+//!   (set = weight is `±a`, clear = the 0 centroid). Packing maintains
+//!   sign ⊆ mask; consumers intersect the planes, so the mask stays
+//!   authoritative even for hostile inputs.
+//! * **`Coded`** (everything else): one plane of ⌈log₂K⌉-bit codes,
+//!   LSB-first within a column — the code for row `r` of column `c`
+//!   starts at column-local bit offset `r·bits` and may straddle a word
+//!   boundary.
+//!
+//! Unused bits of a column's last word are zero. `K = 1` layers
+//! (`bits == 0`) have no planes at all.
+//!
+//! # Plane storage and lazy verification
+//!
+//! Plane words live in [`Words`] handles that either own a `Vec<u64>`
+//! (freshly packed / eagerly loaded, already validated) or borrow a
+//! section of an mmap'd `.lcq` file ([`crate::util::mmap::MmapRegion`]).
+//! Mapped sections carry their expected FNV-1a checksum and are verified
+//! **lazily on first touch** by [`Words::verify`] — the cold-load path
+//! never streams the payload, so model load cost is (number of planes) ×
+//! header bytes, not file size.
 
 use crate::coordinator::LcResult;
 use crate::nn::params::ParamSet;
 use crate::nn::{Mlp, MlpSpec};
+use crate::obs::{self, CounterId};
 use crate::quant::ratio::{self, bits_per_weight};
 use crate::quant::Scheme;
+use crate::util::mmap::MmapRegion;
 use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
 
-/// One layer: `rows × cols` assignments bit-packed into `u64` words
-/// (row-major, matching [`crate::linalg::Mat`] layout, LSB-first within a
-/// word), a K-entry codebook, and the full-precision bias.
+/// How a layer's assignments are laid out in planes (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaneKind {
+    /// One plane of ⌈log₂K⌉-bit codes per column.
+    Coded,
+    /// One 1-bit sign plane (symmetric binary codebook).
+    Sign,
+    /// Sign + nonzero-mask planes (symmetric ternary codebook).
+    SignMask,
+}
+
+impl PlaneKind {
+    /// Decide the layout from the codebook shape alone — the decision is
+    /// therefore stable across pack → save → load regardless of scheme
+    /// metadata. Codebooks come out of the C step sorted ascending.
+    pub fn for_codebook(cb: &[f32]) -> PlaneKind {
+        if cb.len() == 2 && cb[0] == -cb[1] && cb[1] > 0.0 {
+            PlaneKind::Sign
+        } else if cb.len() == 3 && cb[1] == 0.0 && cb[0] == -cb[2] && cb[2] > 0.0 {
+            PlaneKind::SignMask
+        } else {
+            PlaneKind::Coded
+        }
+    }
+}
+
+/// [`Words`] verification state: not yet checked against its checksum.
+const STATE_UNVERIFIED: u8 = 0;
+/// [`Words`] verification state: checksum matched (or owned data).
+const STATE_VERIFIED: u8 = 1;
+/// [`Words`] verification state: checksum mismatch — section is corrupt.
+const STATE_CORRUPT: u8 = 2;
+
+enum Storage {
+    /// Owned words (freshly packed, or eagerly parsed + validated).
+    Owned(Vec<u64>),
+    /// A section of a mapped `.lcq` file: `n_words` little-endian words
+    /// at `offset` bytes (8-byte aligned; the format aligns sections to
+    /// 64). Only constructed on little-endian targets, where the byte
+    /// view *is* the word view.
+    Mapped { region: Arc<MmapRegion>, offset: usize, n_words: usize },
+}
+
+struct WordsInner {
+    storage: Storage,
+    /// Expected FNV-1a of the section bytes; `None` for pre-verified
+    /// owned words.
+    expected_fnv: Option<u64>,
+    /// One of the `STATE_*` constants. Relaxed ordering everywhere: the
+    /// words themselves are immutable, the state is a memo, and a
+    /// concurrent double-verify is benign (both sides compute the same
+    /// verdict).
+    state: AtomicU8,
+}
+
+/// A shareable, cheaply clonable handle to one plane's `u64` words, with
+/// lazy per-section checksum verification (see module docs).
+#[derive(Clone)]
+pub struct Words {
+    inner: Arc<WordsInner>,
+}
+
+impl Words {
+    /// Wrap owned, already-trusted words (no checksum, pre-verified).
+    pub(crate) fn owned(words: Vec<u64>) -> Words {
+        Words {
+            inner: Arc::new(WordsInner {
+                storage: Storage::Owned(words),
+                expected_fnv: None,
+                state: AtomicU8::new(STATE_VERIFIED),
+            }),
+        }
+    }
+
+    /// Wrap a mapped file section, to be verified lazily against
+    /// `expected_fnv` on first [`Words::verify`]. `offset` must be
+    /// 8-byte aligned and in bounds (the format reader validates both,
+    /// plus the 64-byte section alignment, before constructing this).
+    pub(crate) fn mapped(
+        region: Arc<MmapRegion>,
+        offset: usize,
+        n_words: usize,
+        expected_fnv: u64,
+    ) -> Words {
+        assert!(offset % 8 == 0, "plane section offset must be word-aligned");
+        assert!(
+            offset + n_words * 8 <= region.len(),
+            "plane section out of file bounds"
+        );
+        Words {
+            inner: Arc::new(WordsInner {
+                storage: Storage::Mapped { region, offset, n_words },
+                expected_fnv: Some(expected_fnv),
+                state: AtomicU8::new(STATE_UNVERIFIED),
+            }),
+        }
+    }
+
+    /// Number of words.
+    pub fn len(&self) -> usize {
+        match &self.inner.storage {
+            Storage::Owned(v) => v.len(),
+            Storage::Mapped { n_words, .. } => *n_words,
+        }
+    }
+
+    /// Whether the plane holds no words.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this plane is served from a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.inner.storage, Storage::Mapped { .. })
+    }
+
+    /// The section bytes (the unit the checksum covers).
+    fn section_bytes(&self) -> &[u8] {
+        match &self.inner.storage {
+            Storage::Owned(v) => {
+                // SAFETY: the Vec owns v.len()*8 initialized bytes.
+                unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 8) }
+            }
+            Storage::Mapped { region, offset, n_words } => {
+                &region.bytes()[*offset..*offset + n_words * 8]
+            }
+        }
+    }
+
+    /// The words **without** checksum verification. Hot accessors
+    /// ([`PackedLayer::assignment`], bulk unpack) use this; serving paths
+    /// call [`Words::verify`] once per layer pass first, so a corrupt
+    /// mapped section is rejected before its garbage is ever interpreted.
+    pub fn raw(&self) -> &[u64] {
+        match &self.inner.storage {
+            Storage::Owned(v) => v,
+            Storage::Mapped { region, offset, n_words } => {
+                let bytes = &region.bytes()[*offset..*offset + n_words * 8];
+                debug_assert_eq!(bytes.as_ptr() as usize % 8, 0);
+                // SAFETY: in-bounds (checked at construction), 8-byte
+                // aligned (aligned offset + 8-byte-aligned region base),
+                // immutable for the region's lifetime; only constructed
+                // on little-endian targets so the words read correctly.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u64, *n_words) }
+            }
+        }
+    }
+
+    /// The words, checksum-verified: on first touch of a mapped section
+    /// the FNV-1a of its bytes is computed and compared (counted as
+    /// `lcq_section_verifies`); later calls reuse the memoized verdict
+    /// (`lcq_lazy_verify_hits`). A mismatch is sticky — every subsequent
+    /// call keeps failing.
+    pub fn verify(&self) -> Result<&[u64]> {
+        match self.inner.state.load(Ordering::Relaxed) {
+            STATE_VERIFIED => {
+                if self.inner.expected_fnv.is_some() && obs::enabled() {
+                    obs::counter(CounterId::LcqLazyVerifyHits).inc();
+                }
+                Ok(self.raw())
+            }
+            STATE_CORRUPT => Err(anyhow!("plane section checksum mismatch (corrupt .lcq data)")),
+            _ => {
+                let expected =
+                    self.inner.expected_fnv.expect("unverified plane must carry a checksum");
+                if obs::enabled() {
+                    obs::counter(CounterId::LcqSectionVerifies).inc();
+                }
+                let ok = crate::serve::format::fnv1a(self.section_bytes()) == expected;
+                self.inner
+                    .state
+                    .store(if ok { STATE_VERIFIED } else { STATE_CORRUPT }, Ordering::Relaxed);
+                if ok {
+                    Ok(self.raw())
+                } else {
+                    Err(anyhow!("plane section checksum mismatch (corrupt .lcq data)"))
+                }
+            }
+        }
+    }
+}
+
+impl PartialEq for Words {
+    fn eq(&self, other: &Words) -> bool {
+        self.raw() == other.raw()
+    }
+}
+
+impl std::fmt::Debug for Words {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Words")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+/// Mask selecting the valid (row-covering) low bits of a 1-bit plane
+/// word whose block holds `n_b ≤ 64` rows.
+#[inline(always)]
+fn valid_mask(n_b: usize) -> u64 {
+    if n_b >= 64 {
+        !0
+    } else {
+        (1u64 << n_b) - 1
+    }
+}
+
+/// One layer: `rows × cols` assignments packed into column-major bit
+/// planes (see module docs), a K-entry codebook, and the full-precision
+/// bias.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedLayer {
     /// Input dimension (weight matrix rows).
@@ -22,12 +269,15 @@ pub struct PackedLayer {
     pub cols: usize,
     /// Bits per assignment: ⌈log₂K⌉ (0 when K = 1).
     pub bits: usize,
+    /// Plane layout, decided from the codebook shape at pack time.
+    pub kind: PlaneKind,
     /// The K codebook entries (sorted ascending, as the C step emits them).
     pub codebook: Vec<f32>,
     /// Full-precision bias (paper §5: biases are not quantized).
     pub bias: Vec<f32>,
-    /// Bit-packed assignments, `⌈rows·cols·bits / 64⌉` words.
-    pub packed: Vec<u64>,
+    /// The assignment planes (`kind`-dependent count; empty when
+    /// `bits == 0`).
+    pub(crate) planes: Vec<Words>,
 }
 
 impl PackedLayer {
@@ -53,23 +303,89 @@ impl PackedLayer {
             return Err(anyhow!("bias len {} != cols {cols}", bias.len()));
         }
         let k = codebook.len();
-        let bits = bits_per_weight(k);
-        let mut packed = vec![0u64; (n * bits).div_ceil(64)];
-        for (i, &a) in assignments.iter().enumerate() {
-            if a as usize >= k {
-                return Err(anyhow!("assignment {a} out of range for K={k}"));
-            }
-            if bits == 0 {
-                continue;
-            }
-            let bitpos = i * bits;
-            let (word, off) = (bitpos / 64, bitpos % 64);
-            packed[word] |= (a as u64) << off;
-            if off + bits > 64 {
-                packed[word + 1] |= (a as u64) >> (64 - off);
-            }
+        if let Some(&bad) = assignments.iter().find(|&&a| a as usize >= k) {
+            return Err(anyhow!("assignment {bad} out of range for K={k}"));
         }
-        Ok(PackedLayer { rows, cols, bits, codebook, bias, packed })
+        let bits = bits_per_weight(k);
+        let kind = PlaneKind::for_codebook(&codebook);
+        let wpc = Self::wpc(kind, rows, bits);
+        let planes = if bits == 0 {
+            Vec::new()
+        } else {
+            match kind {
+                PlaneKind::Sign => {
+                    let mut sign = vec![0u64; cols * wpc];
+                    for (i, &a) in assignments.iter().enumerate() {
+                        if a == 1 {
+                            let (r, c) = (i / cols, i % cols);
+                            sign[c * wpc + r / 64] |= 1u64 << (r % 64);
+                        }
+                    }
+                    vec![Words::owned(sign)]
+                }
+                PlaneKind::SignMask => {
+                    let mut sign = vec![0u64; cols * wpc];
+                    let mut mask = vec![0u64; cols * wpc];
+                    for (i, &a) in assignments.iter().enumerate() {
+                        if a != 1 {
+                            let (r, c) = (i / cols, i % cols);
+                            let (w, b) = (c * wpc + r / 64, r % 64);
+                            mask[w] |= 1u64 << b;
+                            if a == 2 {
+                                sign[w] |= 1u64 << b;
+                            }
+                        }
+                    }
+                    vec![Words::owned(sign), Words::owned(mask)]
+                }
+                PlaneKind::Coded => {
+                    let mut words = vec![0u64; cols * wpc];
+                    for (i, &a) in assignments.iter().enumerate() {
+                        let (r, c) = (i / cols, i % cols);
+                        let bitpos = r * bits;
+                        let (w, off) = (c * wpc + bitpos / 64, bitpos % 64);
+                        words[w] |= (a as u64) << off;
+                        if off + bits > 64 {
+                            words[w + 1] |= (a as u64) >> (64 - off);
+                        }
+                    }
+                    vec![Words::owned(words)]
+                }
+            }
+        };
+        Ok(PackedLayer { rows, cols, bits, kind, codebook, bias, planes })
+    }
+
+    /// `u64` words each column occupies in a plane.
+    pub fn words_per_column(&self) -> usize {
+        Self::wpc(self.kind, self.rows, self.bits)
+    }
+
+    fn wpc(kind: PlaneKind, rows: usize, bits: usize) -> usize {
+        if bits == 0 {
+            return 0;
+        }
+        match kind {
+            PlaneKind::Sign | PlaneKind::SignMask => rows.div_ceil(64),
+            PlaneKind::Coded => (rows * bits).div_ceil(64),
+        }
+    }
+
+    /// Number of planes this layer stores (0 when `bits == 0`, 2 for
+    /// `SignMask`, 1 otherwise).
+    pub fn n_planes(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// The raw plane handles (unverified access; serving paths go through
+    /// [`PackedLayer::plane_words`]).
+    pub fn planes(&self) -> &[Words] {
+        &self.planes
+    }
+
+    /// Plane `p`'s words, checksum-verified ([`Words::verify`]).
+    pub fn plane_words(&self, p: usize) -> Result<&[u64]> {
+        self.planes[p].verify()
     }
 
     /// Number of weights (P1 contribution) in this layer.
@@ -77,33 +393,137 @@ impl PackedLayer {
         self.rows * self.cols
     }
 
-    /// Read one assignment.
+    /// Read one assignment (`i` is the row-major index `r·cols + c`,
+    /// matching [`crate::linalg::Mat`]). Reads plane words without
+    /// checksum verification — see [`Words::raw`].
     #[inline]
     pub fn assignment(&self, i: usize) -> u32 {
         debug_assert!(i < self.weight_count());
         if self.bits == 0 {
             return 0;
         }
-        let mask = (1u64 << self.bits) - 1;
-        let bitpos = i * self.bits;
-        let (word, off) = (bitpos / 64, bitpos % 64);
-        let mut v = self.packed[word] >> off;
-        if off + self.bits > 64 {
-            v |= self.packed[word + 1] << (64 - off);
+        let (r, c) = (i / self.cols, i % self.cols);
+        let wpc = self.words_per_column();
+        match self.kind {
+            PlaneKind::Sign => {
+                ((self.planes[0].raw()[c * wpc + r / 64] >> (r % 64)) & 1) as u32
+            }
+            PlaneKind::SignMask => {
+                let (w, b) = (c * wpc + r / 64, r % 64);
+                if (self.planes[1].raw()[w] >> b) & 1 == 0 {
+                    1 // the 0 centroid
+                } else if (self.planes[0].raw()[w] >> b) & 1 == 1 {
+                    2 // +a
+                } else {
+                    0 // -a
+                }
+            }
+            PlaneKind::Coded => {
+                let words = self.planes[0].raw();
+                let bitpos = r * self.bits;
+                let (w, off) = (c * wpc + bitpos / 64, bitpos % 64);
+                let mut v = words[w] >> off;
+                if off + self.bits > 64 {
+                    v |= words[w + 1] << (64 - off);
+                }
+                (v & ((1u64 << self.bits) - 1)) as u32
+            }
         }
-        (v & mask) as u32
     }
 
-    /// Unpack every assignment index.
+    /// Unpack every assignment index (row-major), word at a time: each
+    /// plane word is loaded once and its bits streamed out, instead of
+    /// re-deriving word/offset per index as [`PackedLayer::assignment`]
+    /// does. Bit planes only write their set bits (via
+    /// `trailing_zeros`); the coded plane streams each column through a
+    /// 128-bit refill buffer. Reads plane words without checksum
+    /// verification — use [`PackedLayer::try_unpack_assignments`] for
+    /// untrusted mapped data.
     pub fn unpack_assignments(&self) -> Vec<u32> {
-        (0..self.weight_count()).map(|i| self.assignment(i)).collect()
+        let n = self.weight_count();
+        if self.bits == 0 {
+            return vec![0u32; n];
+        }
+        let (rows, cols) = (self.rows, self.cols);
+        let wpc = self.words_per_column();
+        match self.kind {
+            PlaneKind::Sign => {
+                let mut out = vec![0u32; n];
+                let words = self.planes[0].raw();
+                for c in 0..cols {
+                    for wi in 0..wpc {
+                        // mask to the row-covering bits so hostile padding
+                        // bits can't index past `rows`
+                        let mut w = words[c * wpc + wi] & valid_mask(rows - wi * 64);
+                        while w != 0 {
+                            let r = wi * 64 + w.trailing_zeros() as usize;
+                            out[r * cols + c] = 1;
+                            w &= w - 1;
+                        }
+                    }
+                }
+                out
+            }
+            PlaneKind::SignMask => {
+                let mut out = vec![1u32; n]; // default: the 0 centroid
+                let sign = self.planes[0].raw();
+                let mask = self.planes[1].raw();
+                for c in 0..cols {
+                    for wi in 0..wpc {
+                        let idx = c * wpc + wi;
+                        let s = sign[idx];
+                        let mut m = mask[idx] & valid_mask(rows - wi * 64);
+                        while m != 0 {
+                            let b = m.trailing_zeros();
+                            let r = wi * 64 + b as usize;
+                            out[r * cols + c] = if (s >> b) & 1 == 1 { 2 } else { 0 };
+                            m &= m - 1;
+                        }
+                    }
+                }
+                out
+            }
+            PlaneKind::Coded => {
+                let mut out = vec![0u32; n];
+                let words = self.planes[0].raw();
+                let m = (1u64 << self.bits) - 1;
+                for c in 0..cols {
+                    let col = &words[c * wpc..(c + 1) * wpc];
+                    let mut buf: u128 = 0;
+                    let mut avail = 0usize;
+                    let mut next = 0usize;
+                    for r in 0..rows {
+                        if avail < self.bits {
+                            buf |= (col[next] as u128) << avail;
+                            next += 1;
+                            avail += 64;
+                        }
+                        out[r * cols + c] = (buf as u64 & m) as u32;
+                        buf >>= self.bits;
+                        avail -= self.bits;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// [`PackedLayer::unpack_assignments`] with every plane
+    /// checksum-verified first — the form engine construction uses on
+    /// mapped models.
+    pub fn try_unpack_assignments(&self) -> Result<Vec<u32>> {
+        for p in &self.planes {
+            p.verify()?;
+        }
+        Ok(self.unpack_assignments())
     }
 
     /// Expand to dense f32 weights (row-major) — only for validation and
     /// interop; the serving path never calls this.
     pub fn unpack_weights(&self) -> Vec<f32> {
-        (0..self.weight_count())
-            .map(|i| self.codebook[self.assignment(i) as usize])
+        self.unpack_assignments()
+            .into_iter()
+            .map(|a| self.codebook[a as usize])
             .collect()
     }
 }
@@ -204,7 +624,9 @@ impl PackedModel {
     /// Stored bits under eq. (14)'s accounting: Σ_l P1_l·⌈log₂K_l⌉ +
     /// (P0 + Σ_l K_l)·b. Equals
     /// [`ratio::quantized_bits`]`(P1, P0, K, n_layers)` when every layer
-    /// shares one K.
+    /// shares one K. (The plane layout stores exactly `bits` payload bits
+    /// per weight — `SignMask`'s two 1-bit planes are ⌈log₂3⌉ = 2 —
+    /// column padding words are format overhead, not payload.)
     pub fn payload_bits(&self) -> usize {
         self.layers
             .iter()
@@ -310,6 +732,82 @@ mod tests {
     }
 
     #[test]
+    fn plane_kind_follows_codebook_shape() {
+        assert_eq!(PlaneKind::for_codebook(&[-0.7, 0.7]), PlaneKind::Sign);
+        assert_eq!(PlaneKind::for_codebook(&[-0.7, 0.0, 0.7]), PlaneKind::SignMask);
+        // asymmetric, zero-scale, or larger codebooks stay coded
+        assert_eq!(PlaneKind::for_codebook(&[-0.7, 0.9]), PlaneKind::Coded);
+        assert_eq!(PlaneKind::for_codebook(&[0.0, 0.0]), PlaneKind::Coded);
+        assert_eq!(PlaneKind::for_codebook(&[-0.7, 0.1, 0.7]), PlaneKind::Coded);
+        assert_eq!(PlaneKind::for_codebook(&[-1.0, -0.5, 0.5, 1.0]), PlaneKind::Coded);
+        assert_eq!(PlaneKind::for_codebook(&[0.5]), PlaneKind::Coded);
+        // schemes land on the expected layouts end to end
+        let spec = toy_spec(vec![9, 7, 4]);
+        let (m, _) = packed_from_scheme(&Scheme::Binary, &spec, 41);
+        assert!(m.layers.iter().all(|l| l.kind == PlaneKind::Sign && l.n_planes() == 1));
+        let (m, _) = packed_from_scheme(&Scheme::TernaryScale, &spec, 42);
+        assert!(m.layers.iter().all(|l| l.kind == PlaneKind::SignMask && l.n_planes() == 2));
+        let (m, _) = packed_from_scheme(&Scheme::AdaptiveCodebook { k: 4 }, &spec, 43);
+        assert!(m.layers.iter().all(|l| l.kind == PlaneKind::Coded && l.n_planes() == 1));
+    }
+
+    #[test]
+    fn column_major_plane_layout_is_pinned() {
+        // 3×2 sign layer: weight (r, c) lives at bit r of word c (wpc = 1)
+        let a = [1u32, 0, 0, 1, 1, 1]; // row-major: (0,0)=1 (0,1)=0 (1,0)=0 (1,1)=1 (2,0)=1 (2,1)=1
+        let l = PackedLayer::pack(3, 2, vec![-0.5, 0.5], vec![0.0; 2], &a).unwrap();
+        assert_eq!(l.kind, PlaneKind::Sign);
+        assert_eq!(l.words_per_column(), 1);
+        assert_eq!(l.planes()[0].raw(), &[0b101u64, 0b110]); // col 0: rows 0,2; col 1: rows 1,2
+        // ternary: sign ⊆ mask by construction
+        // row-major 3×2: (0,0)=-a (0,1)=0 (1,0)=+a (1,1)=0 (2,0)=+a (2,1)=-a
+        let a = [0u32, 1, 2, 1, 2, 0];
+        let l = PackedLayer::pack(3, 2, vec![-0.5, 0.0, 0.5], vec![0.0; 2], &a).unwrap();
+        let sign = l.planes()[0].raw();
+        let mask = l.planes()[1].raw();
+        assert_eq!(mask, &[0b111u64, 0b100]); // col 0: all nonzero; col 1: row 2 only
+        assert_eq!(sign, &[0b110u64, 0b000]); // +a at col 0 rows 1,2
+        for (s, m) in sign.iter().zip(mask) {
+            assert_eq!(s & !m, 0, "sign plane must be a subset of the mask plane");
+        }
+        // coded, bits=3, 50 rows × 1 col: 150 bits → 3 words per column
+        let k = 5;
+        let assignments: Vec<u32> = (0..50).map(|i| (i * 7 % k) as u32).collect();
+        let codebook: Vec<f32> = (0..k).map(|i| i as f32).collect();
+        let l = PackedLayer::pack(50, 1, codebook, vec![0.0], &assignments).unwrap();
+        assert_eq!((l.kind, l.bits), (PlaneKind::Coded, 3));
+        assert_eq!(l.words_per_column(), 3);
+        assert_eq!(l.planes()[0].len(), 3);
+        assert_eq!(l.unpack_assignments(), assignments);
+    }
+
+    #[test]
+    fn bulk_unpack_matches_per_index_assignment() {
+        check("bulk unpack == assignment()", 40, |g| {
+            let rows = g.usize_in(1, 140); // straddles the 64-row word boundary
+            let cols = g.usize_in(1, 6);
+            let (codebook, k): (Vec<f32>, usize) = match g.usize_in(0, 2) {
+                0 => (vec![-0.5, 0.5], 2),
+                1 => (vec![-0.5, 0.0, 0.5], 3),
+                _ => {
+                    let k = g.usize_in(4, 9);
+                    ((0..k).map(|i| i as f32 * 0.3 - 1.0).collect(), k)
+                }
+            };
+            let assignments: Vec<u32> =
+                (0..rows * cols).map(|_| g.usize_in(0, k - 1) as u32).collect();
+            let l =
+                PackedLayer::pack(rows, cols, codebook, vec![0.0; cols], &assignments).unwrap();
+            let bulk = l.unpack_assignments();
+            assert_eq!(bulk, assignments);
+            for i in 0..rows * cols {
+                assert_eq!(l.assignment(i), assignments[i], "i={i}");
+            }
+            assert_eq!(l.try_unpack_assignments().unwrap(), assignments);
+        });
+    }
+
+    #[test]
     fn payload_bits_match_ratio_accounting() {
         // eq. (14): on-disk payload for uniform K equals quantized_bits()
         let spec = toy_spec(vec![30, 20, 10]);
@@ -325,6 +823,12 @@ mod tests {
             let expect = ratio::compression_ratio(p1, p0, k, spec.n_layers());
             assert!((rho - expect).abs() < 1e-12, "K={k}: {rho} vs {expect}");
         }
+        // the symmetric layouts keep eq.-14 accounting too: ⌈log₂2⌉ = 1
+        // bit (Sign), ⌈log₂3⌉ = 2 bits (SignMask's two 1-bit planes)
+        let (m, _) = packed_from_scheme(&Scheme::Binary, &spec, 8);
+        assert_eq!(m.payload_bits(), ratio::quantized_bits(p1, p0, 2, spec.n_layers()));
+        let (m, _) = packed_from_scheme(&Scheme::Ternary, &spec, 9);
+        assert_eq!(m.payload_bits(), ratio::quantized_bits(p1, p0, 3, spec.n_layers()));
     }
 
     #[test]
@@ -350,19 +854,8 @@ mod tests {
     fn k1_packs_to_zero_bits() {
         let layer = PackedLayer::pack(3, 2, vec![0.5], vec![0.0; 2], &[0; 6]).unwrap();
         assert_eq!(layer.bits, 0);
-        assert!(layer.packed.is_empty());
+        assert_eq!(layer.n_planes(), 0);
+        assert_eq!(layer.words_per_column(), 0);
         assert_eq!(layer.unpack_weights(), vec![0.5f32; 6]);
-    }
-
-    #[test]
-    fn word_boundary_straddling() {
-        // bits=3 over >64 bits exercises the two-word read/write path
-        let k = 5; // 3 bits
-        let assignments: Vec<u32> = (0..50).map(|i| (i * 7 % k) as u32).collect();
-        let codebook: Vec<f32> = (0..k).map(|i| i as f32).collect();
-        let layer = PackedLayer::pack(50, 1, codebook, vec![0.0], &assignments).unwrap();
-        assert_eq!(layer.bits, 3);
-        assert_eq!(layer.packed.len(), 3); // 150 bits → 3 words
-        assert_eq!(layer.unpack_assignments(), assignments);
     }
 }

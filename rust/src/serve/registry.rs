@@ -4,9 +4,10 @@
 //! therefore expose a whole compression-tradeoff family and let callers
 //! pick their accuracy/latency point.
 
-use super::engine::LutEngine;
+use super::engine::{EngineMode, LutEngine};
 use super::format::EXTENSION;
 use super::packed::PackedModel;
+use crate::obs::{self, HistId};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -29,7 +30,8 @@ pub struct ModelInfo {
 pub struct LoadedModel {
     /// The deserialized `.lcq` artifact (kept for metadata/accounting).
     pub packed: PackedModel,
-    /// The grouped-gather engine built from it at registration time.
+    /// The engine built from it at registration time (bit-sliced and/or
+    /// gather tiers per [`EngineMode`]).
     pub engine: LutEngine,
 }
 
@@ -46,25 +48,47 @@ impl Registry {
         Registry::default()
     }
 
-    /// Register a model under its own name, building the LUT engine.
-    /// Replaces any previous model of the same name.
+    /// Register a model under its own name, building its engine with
+    /// [`EngineMode::Auto`] dispatch. Replaces any previous model of the
+    /// same name.
     pub fn insert(&mut self, packed: PackedModel) -> Result<()> {
-        let engine = LutEngine::new(&packed)
+        self.insert_with_mode(packed, EngineMode::Auto)
+    }
+
+    /// Register a model with an explicit engine execution tier.
+    pub fn insert_with_mode(&mut self, packed: PackedModel, mode: EngineMode) -> Result<()> {
+        let engine = LutEngine::with_mode(&packed, mode)
             .with_context(|| format!("building engine for '{}'", packed.name))?;
         self.models
             .insert(packed.name.clone(), Arc::new(LoadedModel { packed, engine }));
         Ok(())
     }
 
-    /// Load every `*.lcq` file in a directory.
+    /// Load every `*.lcq` file in a directory with [`EngineMode::Auto`]
+    /// engines (see [`Registry::load_dir_with`]).
     pub fn load_dir(dir: &Path) -> Result<Registry> {
+        Registry::load_dir_with(dir, EngineMode::Auto)
+    }
+
+    /// Load every `*.lcq` file in a directory, **zero-copy**: each file is
+    /// memory-mapped ([`PackedModel::load_mmap`]) so its plane sections
+    /// are served straight from the page cache and checksum-verified
+    /// lazily on first touch, making cold load O(header) per model. Per
+    /// model, the open→engine-ready wall time lands in the `model_load`
+    /// histogram; `lcq_mmap_loads` counts true mappings (the observability
+    /// plane exposes both over the stats wire).
+    pub fn load_dir_with(dir: &Path, mode: EngineMode) -> Result<Registry> {
         let mut reg = Registry::new();
         let entries =
             std::fs::read_dir(dir).with_context(|| format!("reading model dir {dir:?}"))?;
         for entry in entries {
             let path = entry?.path();
             if path.extension().and_then(|e| e.to_str()) == Some(EXTENSION) {
-                reg.insert(PackedModel::load(&path)?)?;
+                let start = std::time::Instant::now();
+                reg.insert_with_mode(PackedModel::load_mmap(&path)?, mode)?;
+                if obs::enabled() {
+                    obs::hist(HistId::ModelLoad).record_ns(start.elapsed().as_nanos() as u64);
+                }
             }
         }
         if reg.is_empty() {
@@ -119,7 +143,7 @@ impl Registry {
                 x.cols
             ));
         }
-        Ok(m.engine.forward(x))
+        m.engine.forward(x)
     }
 }
 

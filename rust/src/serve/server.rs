@@ -502,11 +502,14 @@ fn run_group(
                     "model '{model}' expects {in_dim} features, got {}",
                     bad.input.len()
                 )),
-                // pre-staged rows: the engine gathers straight from each
-                // job's decoded buffer — no copy into a batch matrix
-                None => Ok(loaded
+                // pre-staged rows: the engine reads straight from each
+                // job's decoded buffer — no copy into a batch matrix. An
+                // Err here means a lazily verified plane section failed
+                // its checksum (corrupt model data), reported per request.
+                None => loaded
                     .engine
-                    .forward_rows_into(jobs.len(), |r| jobs[r].input.as_slice(), scratch)),
+                    .forward_rows_into(jobs.len(), |r| jobs[r].input.as_slice(), scratch)
+                    .map_err(|e| format!("model '{model}': {e:#}")),
             }
         }
     };
@@ -613,7 +616,7 @@ mod tests {
             let got = client.infer("toy", input.clone()).unwrap();
             let mut x = Mat::zeros(1, 8);
             x.row_mut(0).copy_from_slice(&input);
-            let want = engine.forward(&x);
+            let want = engine.forward(&x).unwrap();
             assert_eq!(got, want.row(0).to_vec());
         }
         server.stop();
@@ -682,7 +685,7 @@ mod tests {
                         let got = c.infer("toy", input.clone()).unwrap();
                         let mut x = Mat::zeros(1, 8);
                         x.row_mut(0).copy_from_slice(&input);
-                        let want = engine.forward(&x);
+                        let want = engine.forward(&x).unwrap();
                         assert_eq!(got, want.row(0).to_vec(), "client {t}");
                     }
                 });
@@ -712,7 +715,7 @@ mod tests {
             let got = outcome.result.unwrap();
             let mut x = Mat::zeros(1, 8);
             x.row_mut(0).copy_from_slice(&input);
-            let want = engine.forward(&x);
+            let want = engine.forward(&x).unwrap();
             assert_eq!(got, want.row(0).to_vec());
         }
         server.stop();

@@ -1,0 +1,220 @@
+//! Read-only memory-mapped file regions for zero-copy model loading.
+//!
+//! [`MmapRegion::map_file`] maps a whole file with `mmap(PROT_READ,
+//! MAP_PRIVATE)` so its bytes are served straight from the page cache: no
+//! read-time copy, no resident heap until a page is actually touched, and
+//! identical mappings across processes share physical pages. The crate
+//! vendors no `libc`, so the two syscalls are declared directly against
+//! the C library the standard library already links.
+//!
+//! On targets where the mapping path is not compiled in (non-unix, or a
+//! 32-bit address space where a large model may not fit), or when `mmap`
+//! itself fails at runtime, the region transparently falls back to a
+//! heap buffer read with ordinary file I/O. The fallback buffer is backed
+//! by a `Vec<u64>`, which guarantees the 8-byte base alignment the `.lcq`
+//! reader needs to view plane sections as `&[u64]` — a plain `Vec<u8>`
+//! would not. Callers can distinguish the two with
+//! [`MmapRegion::is_mapped`] (the observability counters do), but the
+//! byte contract is identical.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub fn map_failed(p: *mut c_void) -> bool {
+        p as isize == -1
+    }
+}
+
+enum Inner {
+    /// A live `mmap` mapping; unmapped on drop.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap fallback. The `Vec<u64>` backing guarantees 8-byte alignment;
+    /// `len` is the real byte length (the last word may be partial).
+    Heap { words: Vec<u64>, len: usize },
+}
+
+/// A read-only byte region backed by a file mapping (or a heap buffer
+/// when mapping is unavailable). See the module docs for the contract.
+pub struct MmapRegion {
+    inner: Inner,
+}
+
+// SAFETY: the region is immutable after construction — `bytes()` hands out
+// only shared references and nothing ever writes through the mapping — so
+// shared access from multiple threads is sound.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl MmapRegion {
+    /// Map `path` read-only, falling back to a heap read if mapping is
+    /// unavailable on this target or refused by the kernel. Empty files
+    /// are an error (an `.lcq` file is never empty, and `mmap` rejects
+    /// zero-length mappings).
+    pub fn map_file(path: &Path) -> Result<MmapRegion> {
+        let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        let len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        if len == 0 {
+            return Err(anyhow!("{path:?} is empty"));
+        }
+        let len = usize::try_from(len).map_err(|_| anyhow!("{path:?} exceeds address space"))?;
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::fd::AsRawFd;
+            // SAFETY: fd is a valid open file descriptor for `len` bytes;
+            // a PROT_READ MAP_PRIVATE mapping of it aliases nothing
+            // writable. Failure is reported via MAP_FAILED, checked below.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if !sys::map_failed(ptr) {
+                return Ok(MmapRegion { inner: Inner::Mapped { ptr: ptr as *const u8, len } });
+            }
+            // fall through to the heap read — e.g. a filesystem that
+            // refuses mappings; the byte contract is unchanged
+        }
+        Self::read_heap(&file, len).with_context(|| format!("reading {path:?}"))
+    }
+
+    /// Heap fallback: read the whole file into a `Vec<u64>`-backed buffer
+    /// (8-byte aligned so `.lcq` plane sections can be viewed as words).
+    fn read_heap(file: &std::fs::File, len: usize) -> Result<MmapRegion> {
+        use std::io::Read;
+        let mut words = vec![0u64; len.div_ceil(8)];
+        // SAFETY: the Vec owns `len.div_ceil(8) * 8 >= len` initialized
+        // bytes; viewing them as &mut [u8] for the read is sound.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len)
+        };
+        let mut reader = file;
+        reader.read_exact(bytes)?;
+        Ok(MmapRegion { inner: Inner::Heap { words, len } })
+    }
+
+    /// The mapped (or buffered) bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            // SAFETY: ptr/len describe the live mapping created in
+            // `map_file`, valid until Drop unmaps it.
+            Inner::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Heap { words, len } => {
+                // SAFETY: the Vec owns at least `len` initialized bytes.
+                unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u8, *len) }
+            }
+        }
+    }
+
+    /// Region length in bytes.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Inner::Mapped { len, .. } => *len,
+            Inner::Heap { len, .. } => *len,
+        }
+    }
+
+    /// Whether the region has any bytes (always true for regions built by
+    /// [`MmapRegion::map_file`], which rejects empty files).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `true` when the region is a real page-cache mapping, `false` on
+    /// the heap fallback — the distinction the `lcq_mmap_loads` counter
+    /// records.
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Inner::Mapped { .. } => true,
+            Inner::Heap { .. } => false,
+        }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Inner::Mapped { ptr, len } = self.inner {
+            // SAFETY: exactly the mapping created in `map_file`; after
+            // Drop no reference into it can exist (`bytes` borrows self).
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, data: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("lcquant_mmap_{name}"));
+        std::fs::write(&p, data).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_bytes_identical_to_read() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 7 % 251) as u8).collect();
+        let p = tmp("roundtrip", &data);
+        let r = MmapRegion::map_file(&p).unwrap();
+        assert_eq!(r.len(), data.len());
+        assert!(!r.is_empty());
+        assert_eq!(r.bytes(), &data[..]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn heap_fallback_is_byte_identical_and_word_aligned() {
+        let data: Vec<u8> = (0..777u32).map(|i| (i % 256) as u8).collect();
+        let p = tmp("heap", &data);
+        let f = std::fs::File::open(&p).unwrap();
+        let r = MmapRegion::read_heap(&f, data.len()).unwrap();
+        assert!(!r.is_mapped());
+        assert_eq!(r.bytes(), &data[..]);
+        assert_eq!(r.bytes().as_ptr() as usize % 8, 0, "heap fallback must be 8-byte aligned");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn empty_file_is_an_error() {
+        let p = tmp("empty", &[]);
+        assert!(MmapRegion::map_file(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let p = std::env::temp_dir().join("lcquant_mmap_definitely_missing");
+        let _ = std::fs::remove_file(&p);
+        assert!(MmapRegion::map_file(&p).is_err());
+    }
+}

@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod mmap;
 pub mod mpmc;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,383 @@
+//! Integration tests for the bit-sliced serving tier and the zero-copy
+//! `.lcq` load path, end to end:
+//!
+//! * the bit-sliced engine agrees with the LUT gather tier (small
+//!   tolerance — the two tiers sum in different orders) across **every**
+//!   quantization scheme, in-process and over a real TCP loopback;
+//! * a memory-mapped model serves **bit-identically** to the same model
+//!   loaded eagerly (same kernels, same plane bytes);
+//! * a corrupt plane section is *not* rejected at `load_mmap` time — the
+//!   registry loads, and the damage surfaces as a checksum **error** (not
+//!   a panic) on the first forward pass, in-process and through the
+//!   micro-batch server;
+//! * the warm serve path performs **zero heap allocations** on both
+//!   tiers (counting-allocator discipline from `rust/tests/obs.rs`);
+//! * `EngineMode::Auto` dispatch picks the documented per-layer paths
+//!   when models arrive through `Registry::load_dir_with`;
+//! * `docs/lcq-format.md` v2 and `docs/ARCHITECTURE.md` keep describing
+//!   the on-disk contract and the two-tier engine (doc pinning).
+//!
+//! `ci.sh` and `make tier1` run this file under the default thread policy
+//! and again with `LCQUANT_THREADS=2`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use lcquant::linalg::Mat;
+use lcquant::net::{NetClient, NetConfig, NetServer};
+use lcquant::nn::{Activation, MlpSpec};
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{
+    EngineMode, EngineScratch, LutEngine, MicroBatchServer, PackedModel, Registry, ServerConfig,
+};
+use lcquant::util::rng::Rng;
+
+// ---- counting allocator (obs.rs discipline): thread-local counter so
+//      sibling test threads can't perturb the zero-alloc assertions ------
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// ---- fixtures -----------------------------------------------------------
+
+/// Every scheme the quantizer knows, named for use as registry keys.
+fn all_schemes() -> Vec<(&'static str, Scheme)> {
+    vec![
+        ("binary", Scheme::Binary),
+        ("binary-scale", Scheme::BinaryScale),
+        ("ternary", Scheme::Ternary),
+        ("ternary-scale", Scheme::TernaryScale),
+        ("pow2", Scheme::PowersOfTwo { c: 3 }),
+        ("adaptive4", Scheme::AdaptiveCodebook { k: 4 }),
+        ("adaptive16", Scheme::AdaptiveCodebook { k: 16 }),
+        ("fixed", Scheme::FixedCodebook { codebook: vec![-0.5, 0.0, 0.5, 1.0] }),
+        ("adaptive-zero4", Scheme::AdaptiveWithZero { k: 4 }),
+    ]
+}
+
+fn toy_packed(name: &str, scheme: &Scheme, seed: u64, sizes: &[usize]) -> PackedModel {
+    let spec = MlpSpec {
+        sizes: sizes.to_vec(),
+        hidden_activation: Activation::Tanh,
+        dropout_keep: vec![],
+    };
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.5)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.1)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+fn random_batch(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut x = Mat::zeros(rows, cols);
+    Rng::new(seed).fill_normal(&mut x.data, 0.0, 1.0);
+    x
+}
+
+/// Fresh temp dir; callers clean it up themselves.
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lcquant_bitslice_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Max |a−b| scaled by magnitude: the two tiers reduce in different
+/// orders, so agreement is to float tolerance, not bit-exact.
+fn assert_close(a: &Mat, b: &Mat, tol: f32, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (&x, &y)) in a.data.iter().zip(&b.data).enumerate() {
+        let scale = 1.0f32.max(x.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{ctx}: logit {i} diverges: lut={x} bitsliced={y}"
+        );
+    }
+}
+
+// ---- 1. tier parity across every scheme ---------------------------------
+
+#[test]
+fn bitsliced_matches_lut_within_tolerance_all_schemes() {
+    for (name, scheme) in all_schemes() {
+        let packed = toy_packed(name, &scheme, 31, &[13, 9, 5]);
+        let lut = LutEngine::with_mode(&packed, EngineMode::Lut).unwrap();
+        let bit = LutEngine::with_mode(&packed, EngineMode::BitSliced).unwrap();
+        let auto = LutEngine::with_mode(&packed, EngineMode::Auto).unwrap();
+        let x = random_batch(7, 13, 77);
+        let want = lut.forward(&x).unwrap();
+        assert_close(&want, &bit.forward(&x).unwrap(), 1e-3, name);
+        // Auto must agree with the explicit bit-sliced tier bit for bit:
+        // it picks the same per-layer paths
+        let a = auto.forward(&x).unwrap();
+        let b = bit.forward(&x).unwrap();
+        assert_eq!(auto.layer_paths(), bit.layer_paths(), "{name}: auto vs bitsliced dispatch");
+        for (p, q) in a.data.iter().zip(&b.data) {
+            assert_eq!(p.to_bits(), q.to_bits(), "{name}: auto must equal bitsliced bitwise");
+        }
+    }
+}
+
+// ---- 2. mmap load is bit-identical to eager load ------------------------
+
+#[test]
+fn mmap_engine_is_bit_identical_to_eager_engine() {
+    let dir = temp_dir("mmap_parity");
+    for (name, scheme) in all_schemes() {
+        let packed = toy_packed(name, &scheme, 41, &[12, 8, 4]);
+        let path = dir.join(format!("{name}.lcq"));
+        packed.save(&path).unwrap();
+        let eager = PackedModel::load(&path).unwrap();
+        let mapped = PackedModel::load_mmap(&path).unwrap();
+        let x = random_batch(5, 12, 99);
+        for mode in [EngineMode::Auto, EngineMode::Lut, EngineMode::BitSliced] {
+            let ye = LutEngine::with_mode(&eager, mode).unwrap().forward(&x).unwrap();
+            let ym = LutEngine::with_mode(&mapped, mode).unwrap().forward(&x).unwrap();
+            for (e, m) in ye.data.iter().zip(&ym.data) {
+                assert_eq!(
+                    e.to_bits(),
+                    m.to_bits(),
+                    "{name}/{mode}: mmap and eager loads must serve identically"
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- 3. loopback e2e: bit-sliced registry over real TCP -----------------
+
+#[test]
+fn loopback_e2e_bitsliced_serves_all_schemes() {
+    let dir = temp_dir("loopback");
+    let mut reference = Vec::new();
+    for (name, scheme) in all_schemes() {
+        let packed = toy_packed(name, &scheme, 51, &[10, 7, 3]);
+        packed.save(&dir.join(format!("{name}.lcq"))).unwrap();
+        reference.push((name, LutEngine::with_mode(&packed, EngineMode::Lut).unwrap()));
+    }
+    let reg = Arc::new(Registry::load_dir_with(&dir, EngineMode::BitSliced).unwrap());
+    let _ = std::fs::remove_dir_all(&dir); // mapped pages outlive the unlink
+    let serve = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        pipeline_depth: 2,
+    };
+    let net = NetConfig {
+        bind_addr: "127.0.0.1:0".to_string(),
+        max_connections: 4,
+        ..NetConfig::default()
+    };
+    let mut server = NetServer::start(reg, serve, net).expect("bind loopback server");
+    let addr = server.local_addr().to_string();
+
+    let mut client = NetClient::connect(&addr).expect("connect");
+    let mut rng = Rng::new(500);
+    for (name, lut) in &reference {
+        for _ in 0..3 {
+            let mut input = vec![0.0f32; lut.in_dim()];
+            rng.fill_normal(&mut input, 0.0, 1.0);
+            let got = client.infer(name, &input).expect("infer over TCP");
+            let mut x = Mat::zeros(1, lut.in_dim());
+            x.row_mut(0).copy_from_slice(&input);
+            let want = lut.forward(&x).unwrap();
+            assert_eq!(got.len(), want.cols);
+            let mut y = Mat::zeros(1, want.cols);
+            y.data.copy_from_slice(&got);
+            assert_close(&want, &y, 1e-3, name);
+        }
+    }
+    drop(client);
+    server.stop();
+}
+
+// ---- 4. corruption surfaces lazily, as an error, never a panic ----------
+
+#[test]
+fn corrupt_section_loads_but_fails_at_forward_with_checksum_error() {
+    let dir = temp_dir("corrupt");
+    // binary → every layer takes the sign-pop bit path, so engine build
+    // never touches the plane words and the damage stays latent
+    toy_packed("damaged", &Scheme::Binary, 61, &[12, 8, 4])
+        .save(&dir.join("damaged.lcq"))
+        .unwrap();
+    toy_packed("healthy", &Scheme::TernaryScale, 62, &[12, 8, 4])
+        .save(&dir.join("healthy.lcq"))
+        .unwrap();
+    // flip one byte in the last plane section (the file ends exactly at
+    // the last section's end, so the final byte is section payload)
+    let path = dir.join("damaged.lcq");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+
+    // eager load rejects up front …
+    let err = PackedModel::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "eager: {err:#}");
+
+    // … the zero-copy registry load succeeds (header is intact) …
+    let reg = Arc::new(Registry::load_dir_with(&dir, EngineMode::Auto).unwrap());
+    assert_eq!(reg.names(), vec!["damaged", "healthy"]);
+
+    // … and the first forward through the damaged plane is a loud error
+    let x = random_batch(2, 12, 7);
+    let err = reg.infer("damaged", &x).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "forward: {err:#}");
+    // sticky: it keeps failing, and the healthy sibling is unaffected
+    assert!(reg.infer("damaged", &x).is_err());
+    assert!(reg.infer("healthy", &x).is_ok());
+
+    // the micro-batch server reports the same failure as a typed error
+    // string instead of dying
+    let server = MicroBatchServer::start(
+        Arc::clone(&reg),
+        ServerConfig { max_batch: 4, max_wait: Duration::from_millis(1), pipeline_depth: 1 },
+    );
+    let client = server.client();
+    let err = client.infer("damaged", vec![0.0; 12]).unwrap_err();
+    assert!(err.contains("checksum"), "server error: {err}");
+    let ok = client.infer("healthy", vec![0.0; 12]);
+    assert!(ok.is_ok(), "healthy model must keep serving: {ok:?}");
+    drop(client);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- 5. warm serve path allocates nothing -------------------------------
+
+#[test]
+fn warm_forward_into_performs_zero_allocations_on_both_tiers() {
+    // ternary-scale exercises the block-sums scratch; adaptive-4 takes
+    // the coded-k accumulator; the LUT tier is the gather baseline.
+    // Batch work (4·12·8) is far below the parallel threshold, so every
+    // forward runs on the calling thread and the thread-local counter
+    // sees all of it.
+    for (scheme, mode) in [
+        (Scheme::TernaryScale, EngineMode::BitSliced),
+        (Scheme::AdaptiveCodebook { k: 4 }, EngineMode::BitSliced),
+        (Scheme::Binary, EngineMode::BitSliced),
+        (Scheme::PowersOfTwo { c: 3 }, EngineMode::BitSliced),
+        (Scheme::AdaptiveCodebook { k: 4 }, EngineMode::Lut),
+    ] {
+        let packed = toy_packed("warm", &scheme, 71, &[12, 8, 4]);
+        let engine = LutEngine::with_mode(&packed, mode).unwrap();
+        let x = random_batch(4, 12, 13);
+        let mut scratch = EngineScratch::new();
+        // warm: scratch buffers and block sums size themselves here
+        let _ = engine.forward_into(&x, &mut scratch).unwrap();
+        let _ = engine.forward_into(&x, &mut scratch).unwrap();
+        let before = thread_allocs();
+        for _ in 0..50 {
+            let y = engine.forward_into(&x, &mut scratch).unwrap();
+            assert_eq!(y.rows, 4);
+        }
+        let delta = thread_allocs() - before;
+        assert_eq!(delta, 0, "warm serve path must not allocate ({scheme:?} {mode})");
+    }
+}
+
+// ---- 6. auto dispatch through the registry ------------------------------
+
+#[test]
+fn registry_auto_dispatch_picks_documented_paths() {
+    let dir = temp_dir("dispatch");
+    for (name, scheme) in [
+        ("binary", Scheme::Binary),
+        ("ternary", Scheme::Ternary),
+        ("pow2", Scheme::PowersOfTwo { c: 3 }),
+        ("adaptive4", Scheme::AdaptiveCodebook { k: 4 }),
+    ] {
+        toy_packed(name, &scheme, 81, &[12, 8, 4]).save(&dir.join(format!("{name}.lcq"))).unwrap();
+    }
+    let auto = Registry::load_dir_with(&dir, EngineMode::Auto).unwrap();
+    let expect = [
+        ("binary", "sign-pop"),
+        ("ternary", "ternary-pop"),
+        ("pow2", "coded-pow2"),
+        ("adaptive4", "coded-k"),
+    ];
+    for (name, path) in expect {
+        let m = auto.get(name).unwrap();
+        assert_eq!(m.engine.mode(), EngineMode::Auto);
+        assert_eq!(m.engine.layer_paths(), vec![path; 2], "auto dispatch for {name}");
+    }
+    // forcing the gather tier flips every layer to a lut-* path
+    let lut = Registry::load_dir_with(&dir, EngineMode::Lut).unwrap();
+    for name in ["binary", "ternary", "pow2", "adaptive4"] {
+        for p in lut.get(name).unwrap().engine.layer_paths() {
+            assert!(p.starts_with("lut-"), "{name}: forced LUT tier got '{p}'");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- 7. doc pinning -----------------------------------------------------
+
+fn doc(path: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+#[test]
+fn format_doc_pins_the_v2_contract() {
+    let text = doc("docs/lcq-format.md");
+    for needle in [
+        "version: u32 = 2",
+        "64-byte",
+        "column-major",
+        "FNV-1a 64",
+        "plane 0 = sign",
+        "plane 1 = mask",
+        "canonical",
+        "spec_size_equation_matches_written_bytes",
+        "payload_bits_match_ratio_accounting",
+        "column_major_plane_layout_is_pinned",
+        "load_mmap",
+    ] {
+        assert!(text.contains(needle), "lcq-format.md lost '{needle}'");
+    }
+}
+
+#[test]
+fn architecture_doc_describes_the_two_tier_engine() {
+    let text = doc("docs/ARCHITECTURE.md");
+    for needle in ["bit-sliced", "load_mmap", "sign-pop", "lazily"] {
+        assert!(text.contains(needle), "ARCHITECTURE.md lost '{needle}'");
+    }
+}

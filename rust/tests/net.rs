@@ -98,7 +98,7 @@ fn loopback_roundtrip_bit_identical_to_engine() {
             let got = client.infer("toy-k4", &input).expect("infer over TCP");
             let mut x = Mat::zeros(1, engine.in_dim());
             x.row_mut(0).copy_from_slice(&input);
-            let want = engine.forward_into(&x, &mut scratch);
+            let want = engine.forward_into(&x, &mut scratch).unwrap();
             assert_eq!(got.len(), want.cols);
             for (g, w) in got.iter().zip(&want.data) {
                 assert_eq!(g.to_bits(), w.to_bits(), "conn {c}: logits must be bit-identical");
@@ -141,7 +141,7 @@ fn batch_request_matches_batched_engine_forward() {
     let mut x = Mat::zeros(rows, engine.in_dim());
     rng.fill_normal(&mut x.data, 0.0, 1.0);
     let got = client.infer_batch("toy-k4", rows, &x.data).unwrap();
-    let want = engine.forward(&x);
+    let want = engine.forward(&x).unwrap();
     assert_eq!(got.len(), rows * engine.out_dim());
     for (g, w) in got.iter().zip(&want.data) {
         assert_eq!(g.to_bits(), w.to_bits());
@@ -369,7 +369,7 @@ fn stop_is_clean_and_idempotent() {
     let got = client.infer("toy-k4", &input).unwrap();
     let mut x = Mat::zeros(1, engine.in_dim());
     x.row_mut(0).copy_from_slice(&input);
-    assert_eq!(got, engine.forward(&x).row(0).to_vec());
+    assert_eq!(got, engine.forward(&x).unwrap().row(0).to_vec());
     server.stop();
     server.stop(); // idempotent
     // stats survive the stop: the one answered request is on record
