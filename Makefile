@@ -4,9 +4,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test test-threaded smoke-net smoke-bitslice bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs bench-bitslice
+.PHONY: tier1 build test test-threaded smoke-net smoke-bitslice smoke-fabric bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs bench-bitslice bench-fabric
 
-tier1: build test test-threaded smoke-net smoke-bitslice bench-build doc clippy fmt-check
+tier1: build test test-threaded smoke-net smoke-bitslice smoke-fabric bench-build doc clippy fmt-check
 
 build:
 	$(CARGO) build --release
@@ -36,6 +36,14 @@ smoke-net:
 smoke-bitslice:
 	$(CARGO) test -q --test bitslice
 	LCQUANT_THREADS=2 $(CARGO) test -q --test bitslice
+
+# Serve-fabric smoke: loopback cluster e2e (RouterServer over two backend
+# replicas, kill-one-mid-run failover with bit-identical answers, exact
+# injected-fault accounting under a pinned seed, slow-loris shedding),
+# under both thread policies.
+smoke-fabric:
+	$(CARGO) test -q --test fabric
+	LCQUANT_THREADS=2 $(CARGO) test -q --test fabric
 
 # Benches are plain binaries (harness = false); --no-run keeps them
 # compiling in tier-1 without paying their runtime.
@@ -93,6 +101,11 @@ bench-obs:
 # eager-vs-mmap cold model load → BENCH_bitslice.json.
 bench-bitslice:
 	$(CARGO) bench --bench bench_bitslice
+
+# Router overhead (direct vs routed loadgen) and the failover-blip tail
+# (kill 1 of 2 replicas mid-run) → BENCH_fabric.json.
+bench-fabric:
+	$(CARGO) bench --bench bench_fabric
 
 ci: tier1
 

@@ -1,0 +1,205 @@
+//! Fabric-router benchmarks (LeNet300 shapes, loopback TCP):
+//!
+//! * **router overhead**: the loadgen driving the same backend directly
+//!   vs through a `RouterServer` — what the extra hop (decode, pick,
+//!   re-frame, pooled backend connection) costs in req/s and tail
+//!   latency;
+//! * **failover blip**: the loadgen cluster scenario killing one of two
+//!   replicas mid-run — every request must still be answered (failover)
+//!   or shed typed, and the p99/max tail shows the cost of the blip;
+//!
+//! Results land in `BENCH_fabric.json` (`make bench-fabric`).
+
+use lcquant::net::{
+    loadgen, ClusterConfig, FabricConfig, LoadGenConfig, NetConfig, NetServer, RouterConfig,
+    RouterServer, ShardConfig,
+};
+use lcquant::nn::MlpSpec;
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{PackedModel, Registry, ServerConfig};
+use lcquant::util::backoff::BackoffCfg;
+use lcquant::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Quantize random LeNet300-shaped weights (no training: the bench cares
+/// about wire + routing cost, not accuracy).
+fn packed_lenet300(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec::lenet300();
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.1)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.05)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig { max_batch: 64, max_wait: Duration::from_millis(2), pipeline_depth: 2 }
+}
+
+fn backend(reg: Arc<Registry>) -> NetServer {
+    NetServer::start(
+        reg,
+        server_cfg(),
+        NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 16,
+            ..NetConfig::default()
+        },
+    )
+    .expect("bind backend")
+}
+
+fn router(replicas: Vec<String>, probe_every: Duration) -> RouterServer {
+    RouterServer::start(RouterConfig {
+        net: NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 16,
+            ..NetConfig::default()
+        },
+        fabric: FabricConfig {
+            shards: vec![ShardConfig { models: Vec::new(), replicas }],
+            retry_budget: 4,
+            deadline: Duration::from_secs(10),
+            backoff: BackoffCfg { base: Duration::from_millis(1), cap: Duration::from_millis(10) },
+            probe_every,
+            connect_timeout: Duration::from_secs(1),
+            seed: 7,
+        },
+    })
+    .expect("bind router")
+}
+
+fn main() {
+    println!("== bench_fabric: router overhead + failover blip (LeNet300) ==");
+    let model = packed_lenet300("binary", &Scheme::BinaryScale, 10);
+    let mut registry = Registry::new();
+    registry.insert(model).unwrap();
+    let registry = Arc::new(registry);
+    let per_conn = 128usize;
+
+    // ---- router overhead: direct vs routed, 1/4/8 connections ----------
+    let mut rows: Vec<(String, usize, f64, f32, f32, usize)> = Vec::new();
+    for conns in [1usize, 4, 8] {
+        // direct: loadgen straight at one backend
+        let mut direct = backend(Arc::clone(&registry));
+        let mut lg = LoadGenConfig::new(&direct.local_addr().to_string());
+        lg.connections = conns;
+        lg.requests_per_conn = per_conn;
+        lg.seed = 7;
+        let d = loadgen::run(&lg).expect("direct loadgen");
+        println!(
+            "direct  conns={conns}: {:>6.0} req/s  p50 {:.2}ms  p99 {:.2}ms  ({} ok, {} shed)",
+            d.req_per_s(),
+            d.p50_ms,
+            d.p99_ms,
+            d.ok,
+            d.shed,
+        );
+        rows.push(("direct".into(), conns, d.req_per_s(), d.p50_ms, d.p99_ms, d.shed));
+        direct.stop();
+
+        // routed: the same load through a router over two replicas
+        let b0 = backend(Arc::clone(&registry));
+        let b1 = backend(Arc::clone(&registry));
+        let mut rt =
+            router(vec![b0.local_addr().to_string(), b1.local_addr().to_string()], Duration::ZERO);
+        let mut lg = LoadGenConfig::new(&rt.local_addr().to_string());
+        lg.connections = conns;
+        lg.requests_per_conn = per_conn;
+        lg.seed = 7;
+        let r = loadgen::run(&lg).expect("routed loadgen");
+        println!(
+            "routed  conns={conns}: {:>6.0} req/s  p50 {:.2}ms  p99 {:.2}ms  \
+             ({} ok, {} shed, {:.2}x direct p50)",
+            r.req_per_s(),
+            r.p50_ms,
+            r.p99_ms,
+            r.ok,
+            r.shed,
+            r.p50_ms / d.p50_ms.max(1e-6),
+        );
+        rows.push(("routed".into(), conns, r.req_per_s(), r.p50_ms, r.p99_ms, r.shed));
+        rt.stop();
+        let (mut b0, mut b1) = (b0, b1);
+        b0.stop();
+        b1.stop();
+    }
+
+    // ---- failover blip: kill one of two replicas mid-run ---------------
+    println!("\n== failover blip: kill 1 of 2 replicas mid-run ==");
+    let b0 = backend(Arc::clone(&registry));
+    let b1 = backend(Arc::clone(&registry));
+    let mut rt =
+        router(vec![b0.local_addr().to_string(), b1.local_addr().to_string()], Duration::ZERO);
+    let victim = Arc::new(Mutex::new(Some(b0)));
+    let kill_slot = Arc::clone(&victim);
+    let total = 8 * per_conn as u64;
+    let mut lg = LoadGenConfig::new(&rt.local_addr().to_string());
+    lg.connections = 8;
+    lg.requests_per_conn = per_conn;
+    lg.seed = 7;
+    let report = loadgen::run_cluster(
+        &ClusterConfig { load: lg, kill_at: Some(total / 4), restart_at: None },
+        move || {
+            if let Some(mut s) = kill_slot.lock().unwrap().take() {
+                s.stop();
+            }
+        },
+        || {},
+    )
+    .expect("cluster loadgen");
+    println!("{}", report.summary());
+    let snap = rt.stats();
+    assert_eq!(report.load.failed, 0, "failover must leave no un-typed failures");
+    rt.stop();
+    let mut b1 = b1;
+    b1.stop();
+    if let Some(mut s) = victim.lock().unwrap().take() {
+        s.stop();
+    }
+
+    // ---- BENCH_fabric.json ---------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"fabric\",\n");
+    json.push_str(&format!(
+        "  \"threads\": {},\n  \"requests_per_conn\": {per_conn},\n  \"overhead_sweep\": [\n",
+        lcquant::linalg::num_threads(),
+    ));
+    for (i, (path, conns, req_s, p50, p99, shed)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"path\": \"{path}\", \"connections\": {conns}, \"req_per_s\": {req_s:.0}, \
+             \"p50_ms\": {p50:.3}, \"p99_ms\": {p99:.3}, \"shed\": {shed}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ],\n  \"failover_blip\": {\n");
+    json.push_str(&format!(
+        "    \"requests\": {total}, \"kill_at\": {}, \"ok\": {}, \"shed\": {}, \
+         \"failed\": {}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"max_ms\": {:.3},\n",
+        total / 4,
+        report.load.ok,
+        report.load.shed,
+        report.load.failed,
+        report.load.p50_ms,
+        report.load.p99_ms,
+        report.load.max_ms,
+    ));
+    json.push_str(&format!(
+        "    \"router_retries\": {}, \"router_failovers\": {}, \
+         \"router_health_transitions\": {}\n  }}\n}}\n",
+        snap.retries, snap.failovers, snap.health_transitions,
+    ));
+    match std::fs::write("BENCH_fabric.json", &json) {
+        Ok(()) => println!("wrote BENCH_fabric.json"),
+        Err(e) => eprintln!("could not write BENCH_fabric.json: {e}"),
+    }
+}

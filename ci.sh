@@ -27,6 +27,11 @@ LCQUANT_THREADS=2 cargo test -q --test obs
 # under both thread policies
 cargo test -q --test bitslice
 LCQUANT_THREADS=2 cargo test -q --test bitslice
+# serve-fabric smoke: loopback cluster e2e (router over two replicas,
+# kill-mid-run failover, exact injected-fault accounting, slow-loris
+# shedding), again under both thread policies
+cargo test -q --test fabric
+LCQUANT_THREADS=2 cargo test -q --test fabric
 cargo bench --no-run
 # Documentation gate: rustdoc must build clean (missing docs on the gated
 # modules, broken intra-doc links anywhere) — warnings are errors.

@@ -21,8 +21,91 @@ pub struct RunConfig {
     pub lc: LcConfig,
     pub serve: ServeSettings,
     pub net_serve: NetSettings,
+    pub fabric: FabricSettings,
     pub obs: ObsSettings,
     pub seed: u64,
+}
+
+/// One shard of the serve fabric (`"shards"` array entries inside
+/// `serve.fabric`): which models it owns and the replica addresses that
+/// can answer for them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSettings {
+    /// Model names this shard owns (empty = wildcard: route by the
+    /// replica's hello catalog).
+    pub models: Vec<String>,
+    /// Backend replica addresses (`host:port`) serving this shard.
+    pub replicas: Vec<String>,
+}
+
+/// Router-tier knobs (`"fabric"` object inside the `"serve"` section):
+/// the static shard map plus failover/health policy for the router
+/// process. See `docs/FABRIC.md` for semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricSettings {
+    /// Shard map; empty means the router has no backends (every request
+    /// sheds `UnknownModel`/`Overloaded`).
+    pub shards: Vec<ShardSettings>,
+    /// Forward attempts per request before shedding `Overloaded`
+    /// (clamped to >= 1).
+    pub retry_budget: usize,
+    /// Per-request wall-clock deadline in milliseconds; exceeding it
+    /// sheds a typed `Timeout` error.
+    pub deadline_ms: f64,
+    /// Decorrelated-jitter backoff floor between retries, milliseconds
+    /// (0 with a 0 cap disables backoff sleeps).
+    pub backoff_base_ms: f64,
+    /// Backoff ceiling, milliseconds.
+    pub backoff_cap_ms: f64,
+    /// Active hello-probe period, milliseconds (0 disables the prober;
+    /// `Down` backends then only recover via operator restart).
+    pub probe_every_ms: f64,
+    /// Backend dial timeout, milliseconds.
+    pub connect_timeout_ms: f64,
+    /// Seed for backoff jitter (per-request streams derive from it).
+    pub seed: u64,
+}
+
+impl Default for FabricSettings {
+    fn default() -> FabricSettings {
+        let d = crate::net::FabricConfig::default();
+        FabricSettings {
+            shards: Vec::new(),
+            retry_budget: d.retry_budget,
+            deadline_ms: d.deadline.as_secs_f64() * 1e3,
+            backoff_base_ms: d.backoff.base.as_secs_f64() * 1e3,
+            backoff_cap_ms: d.backoff.cap.as_secs_f64() * 1e3,
+            probe_every_ms: d.probe_every.as_secs_f64() * 1e3,
+            connect_timeout_ms: d.connect_timeout.as_secs_f64() * 1e3,
+            seed: d.seed,
+        }
+    }
+}
+
+impl FabricSettings {
+    /// Lower into the runtime [`crate::net::FabricConfig`].
+    pub fn to_fabric_config(&self) -> crate::net::FabricConfig {
+        let ms = |v: f64| std::time::Duration::from_secs_f64(v.max(0.0) / 1e3);
+        crate::net::FabricConfig {
+            shards: self
+                .shards
+                .iter()
+                .map(|s| crate::net::ShardConfig {
+                    models: s.models.clone(),
+                    replicas: s.replicas.clone(),
+                })
+                .collect(),
+            retry_budget: self.retry_budget.max(1),
+            deadline: ms(self.deadline_ms),
+            backoff: crate::util::backoff::BackoffCfg {
+                base: ms(self.backoff_base_ms),
+                cap: ms(self.backoff_cap_ms),
+            },
+            probe_every: ms(self.probe_every_ms),
+            connect_timeout: ms(self.connect_timeout_ms),
+            seed: self.seed,
+        }
+    }
 }
 
 /// Observability knobs (`"obs"` section): whether the process mirrors its
@@ -160,6 +243,7 @@ impl Default for RunConfig {
             lc: LcConfig::default(),
             serve: ServeSettings::default(),
             net_serve: NetSettings::default(),
+            fabric: FabricSettings::default(),
             obs: ObsSettings::default(),
             seed: 42,
         }
@@ -215,6 +299,12 @@ fn get_s<'a>(j: &'a Json, key: &str, default: &'a str) -> &'a str {
 }
 fn get_b(j: &Json, key: &str, default: bool) -> bool {
     j.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+}
+fn get_str_arr(j: &Json, key: &str) -> Vec<String> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_str()).map(str::to_string).collect())
+        .unwrap_or_default()
 }
 
 impl RunConfig {
@@ -312,6 +402,33 @@ impl RunConfig {
             None => d.net_serve.clone(),
         };
 
+        let fabric = match j.get("serve").and_then(|s| s.get("fabric")) {
+            Some(n) => FabricSettings {
+                shards: n
+                    .get("shards")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .map(|s| ShardSettings {
+                                models: get_str_arr(s, "models"),
+                                replicas: get_str_arr(s, "replicas"),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                retry_budget: get_u(n, "retry_budget", d.fabric.retry_budget).max(1),
+                deadline_ms: get_f(n, "deadline_ms", d.fabric.deadline_ms).max(0.0),
+                backoff_base_ms: get_f(n, "backoff_base_ms", d.fabric.backoff_base_ms)
+                    .max(0.0),
+                backoff_cap_ms: get_f(n, "backoff_cap_ms", d.fabric.backoff_cap_ms).max(0.0),
+                probe_every_ms: get_f(n, "probe_every_ms", d.fabric.probe_every_ms).max(0.0),
+                connect_timeout_ms: get_f(n, "connect_timeout_ms", d.fabric.connect_timeout_ms)
+                    .max(0.0),
+                seed: get_u(n, "seed", d.fabric.seed as usize) as u64,
+            },
+            None => d.fabric.clone(),
+        };
+
         let obs = match j.get("obs") {
             Some(n) => ObsSettings {
                 enabled: get_b(n, "enabled", d.obs.enabled),
@@ -329,6 +446,7 @@ impl RunConfig {
             lc,
             serve,
             net_serve,
+            fabric,
             obs,
             seed: get_u(&j, "seed", d.seed as usize) as u64,
         })
@@ -479,6 +597,49 @@ mod tests {
         .unwrap();
         assert_eq!(z.obs.trace_slots, 2);
         assert_eq!(z.obs.snapshot_every_s, 0.0);
+    }
+
+    #[test]
+    fn fabric_section_parses() {
+        let c = RunConfig::from_json(
+            r#"{"serve": {"fabric": {
+                  "shards": [
+                    {"models": ["lenet300-k2"], "replicas": ["127.0.0.1:7071", "127.0.0.1:7072"]},
+                    {"replicas": ["127.0.0.1:7073"]}
+                  ],
+                  "retry_budget": 6, "deadline_ms": 250.0,
+                  "backoff_base_ms": 2.0, "backoff_cap_ms": 20.0,
+                  "probe_every_ms": 0, "connect_timeout_ms": 100.0, "seed": 9}}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fabric.shards.len(), 2);
+        assert_eq!(c.fabric.shards[0].models, vec!["lenet300-k2".to_string()]);
+        assert_eq!(c.fabric.shards[0].replicas.len(), 2);
+        // omitted models array = wildcard shard
+        assert!(c.fabric.shards[1].models.is_empty());
+        assert_eq!(c.fabric.retry_budget, 6);
+        assert_eq!(c.fabric.seed, 9);
+        let fc = c.fabric.to_fabric_config();
+        assert_eq!(fc.shards.len(), 2);
+        assert_eq!(fc.retry_budget, 6);
+        assert_eq!(fc.deadline, std::time::Duration::from_millis(250));
+        assert_eq!(fc.backoff.base, std::time::Duration::from_millis(2));
+        assert_eq!(fc.backoff.cap, std::time::Duration::from_millis(20));
+        // probe_every_ms 0 disables the prober
+        assert!(fc.probe_every.is_zero());
+        assert_eq!(fc.connect_timeout, std::time::Duration::from_millis(100));
+        assert_eq!(fc.seed, 9);
+        // omitted -> defaults mirror the runtime defaults
+        let d = RunConfig::from_json("{}").unwrap();
+        assert_eq!(d.fabric, FabricSettings::default());
+        let dc = d.fabric.to_fabric_config();
+        let rt = crate::net::FabricConfig::default();
+        assert_eq!(dc.retry_budget, rt.retry_budget);
+        assert_eq!(dc.deadline, rt.deadline);
+        assert_eq!(dc.probe_every, rt.probe_every);
+        // degenerate retry budget clamps to 1
+        let z = RunConfig::from_json(r#"{"serve": {"fabric": {"retry_budget": 0}}}"#).unwrap();
+        assert_eq!(z.fabric.to_fabric_config().retry_budget, 1);
     }
 
     #[test]

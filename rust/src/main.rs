@@ -7,6 +7,9 @@
 //! lcquant serve-smoke --models models [--requests N] [--clients N] [--depth N] [--config FILE]
 //! lcquant serve-net --models models [--addr HOST:PORT] [--depth N] [--config FILE]
 //!                   [--smoke-requests N [--connections N] [--model NAME]]
+//! lcquant serve-fabric --models DIR [--addr HOST:PORT] [--config FILE] [--smoke-backends N]
+//!                      [--smoke-requests N [--connections N] [--model NAME]
+//!                       [--kill-backend-at N] [--restart-backend-at N]]
 //! lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
 //! lcquant stats --addr HOST:PORT
 //! lcquant pjrt-smoke [--artifacts artifacts]
@@ -33,6 +36,9 @@ fn usage() -> ! {
   lcquant serve-smoke --models DIR [--requests N] [--clients N] [--depth N] [--config FILE]
   lcquant serve-net --models DIR [--addr HOST:PORT] [--depth N] [--config FILE]
                     [--smoke-requests N [--connections N] [--model NAME]]
+  lcquant serve-fabric --models DIR [--addr HOST:PORT] [--config FILE] [--smoke-backends N]
+                       [--smoke-requests N [--connections N] [--model NAME]
+                        [--kill-backend-at N] [--restart-backend-at N]]
   lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
   lcquant stats --addr HOST:PORT
   lcquant pjrt-smoke [--artifacts DIR]
@@ -313,6 +319,161 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve through the fabric router. With no shard map in the config (or
+/// when `--smoke-backends N` forces it) the command spins up N in-process
+/// backend replicas on ephemeral loopback ports — a self-contained
+/// cluster demo. `--smoke-requests N` drives the loadgen cluster scenario
+/// at the router and exits; `--kill-backend-at N` kills backend 0 when
+/// the run-wide sent count reaches N (`--restart-backend-at M` brings it
+/// back), printing failover counts and the latency tail.
+fn cmd_serve_fabric(args: &Args) -> Result<()> {
+    use lcquant::net::{loadgen, ClusterConfig, LoadGenConfig, NetServer, RouterConfig, RouterServer};
+    use lcquant::serve::Registry;
+    use std::sync::{Arc, Mutex};
+    let dir = std::path::PathBuf::from(
+        args.get("models").ok_or_else(|| anyhow!("serve-fabric requires --models DIR"))?,
+    );
+    let (serve_cfg, mut net_cfg, fabric_cfg, obs_cfg) = match args.get("config") {
+        Some(path) => {
+            let c = RunConfig::from_file(path)?;
+            (c.serve, c.net_serve, c.fabric, c.obs)
+        }
+        None => (
+            lcquant::config::ServeSettings::default(),
+            lcquant::config::NetSettings::default(),
+            lcquant::config::FabricSettings::default(),
+            lcquant::config::ObsSettings::default(),
+        ),
+    };
+    if let Some(addr) = args.get("addr") {
+        net_cfg.bind_addr = addr.to_string();
+    }
+    lcquant::obs::set_enabled(obs_cfg.enabled);
+    let mut fabric = fabric_cfg.to_fabric_config();
+
+    // with no configured shard map (or --smoke-backends N), spin up an
+    // in-process cluster of backend replicas on ephemeral loopback ports
+    let n_backends = args.get_usize("smoke-backends", 0);
+    let want_local = fabric.shards.is_empty() || n_backends > 0;
+    let mut backends: Vec<Arc<Mutex<Option<NetServer>>>> = Vec::new();
+    let mut backend_addrs: Vec<String> = Vec::new();
+    let registry = Arc::new(Registry::load_dir_with(&dir, serve_cfg.engine_mode)?);
+    if want_local {
+        let n = n_backends.max(2);
+        let mut backend_net = net_cfg.to_net_config_with_obs(&obs_cfg);
+        backend_net.bind_addr = "127.0.0.1:0".into();
+        for _ in 0..n {
+            let s = NetServer::start(
+                Arc::clone(&registry),
+                serve_cfg.to_server_config(),
+                backend_net.clone(),
+            )?;
+            backend_addrs.push(s.local_addr().to_string());
+            backends.push(Arc::new(Mutex::new(Some(s))));
+        }
+        fabric.shards = vec![lcquant::net::ShardConfig {
+            models: Vec::new(), // wildcard: route by hello catalog
+            replicas: backend_addrs.clone(),
+        }];
+        println!("spun up {n} in-process backend replicas: {backend_addrs:?}");
+    }
+
+    let mut router = RouterServer::start(RouterConfig {
+        net: net_cfg.to_net_config_with_obs(&obs_cfg),
+        fabric,
+    })?;
+    println!(
+        "fabric router on {} fronting {} replica(s); catalog: {:?}",
+        router.local_addr(),
+        router.fabric().backends().len(),
+        router.fabric().merged_catalog().iter().map(|m| m.name.clone()).collect::<Vec<_>>(),
+    );
+
+    let smoke = args.get_usize("smoke-requests", 0);
+    if smoke == 0 {
+        let period = if obs_cfg.snapshot_every_s > 0.0 {
+            std::time::Duration::from_secs_f64(obs_cfg.snapshot_every_s)
+        } else {
+            std::time::Duration::from_secs(3600)
+        };
+        loop {
+            std::thread::sleep(period);
+            if obs_cfg.snapshot_every_s > 0.0 {
+                eprintln!("{}", router.snapshot_json());
+            }
+        }
+    }
+
+    let mut lg = LoadGenConfig::new(&router.local_addr().to_string());
+    lg.connections = args.get_usize("connections", serve_cfg.smoke_clients).max(1);
+    lg.requests_per_conn = (smoke / lg.connections).max(1);
+    lg.model = args.get("model").map(String::from);
+    let cluster = ClusterConfig {
+        load: lg,
+        kill_at: match args.get_usize("kill-backend-at", 0) {
+            0 => None,
+            n => Some(n as u64),
+        },
+        restart_at: match args.get_usize("restart-backend-at", 0) {
+            0 => None,
+            n => Some(n as u64),
+        },
+    };
+    // the kill/restart hooks target backend 0 (only meaningful for the
+    // in-process cluster; against remote shards they are no-ops)
+    let victim = backends.first().cloned();
+    let victim_addr = backend_addrs.first().cloned();
+    let victim_restart = victim.clone();
+    let kill_registry = Arc::clone(&registry);
+    let kill_serve = serve_cfg.clone();
+    let kill_net = net_cfg.to_net_config_with_obs(&obs_cfg);
+    let report = loadgen::run_cluster(
+        &cluster,
+        move || {
+            if let Some(v) = victim {
+                if let Some(mut s) = v.lock().unwrap().take() {
+                    s.stop();
+                }
+            }
+        },
+        move || {
+            if let (Some(v), Some(addr)) = (victim_restart, victim_addr) {
+                let mut net = kill_net;
+                net.bind_addr = addr; // rebind the killed replica's port
+                if let Ok(s) =
+                    NetServer::start(kill_registry, kill_serve.to_server_config(), net)
+                {
+                    *v.lock().unwrap() = Some(s);
+                }
+            }
+        },
+    )?;
+    println!("{}", report.summary());
+    let snap = router.stats();
+    router.stop();
+    for b in &backends {
+        if let Some(mut s) = b.lock().unwrap().take() {
+            s.stop();
+        }
+    }
+    println!(
+        "router plane: {} ok, {} failed, {} shed; {} retries, {} failovers, \
+         {} health transitions, {} probes",
+        snap.requests_ok,
+        snap.requests_failed,
+        snap.requests_shed,
+        snap.retries,
+        snap.failovers,
+        snap.health_transitions,
+        snap.probes,
+    );
+    if report.load.failed > 0 {
+        return Err(anyhow!("{} requests failed un-typed", report.load.failed));
+    }
+    println!("serve-fabric smoke OK");
+    Ok(())
+}
+
 /// Drive a remote LCQ-RPC server with the multi-connection load generator
 /// and print latency percentiles + throughput.
 fn cmd_client_smoke(args: &Args) -> Result<()> {
@@ -428,6 +589,7 @@ fn main() {
         "pack" => cmd_pack(&args),
         "serve-smoke" => cmd_serve_smoke(&args),
         "serve-net" => cmd_serve_net(&args),
+        "serve-fabric" => cmd_serve_fabric(&args),
         "client-smoke" => cmd_client_smoke(&args),
         "stats" => cmd_stats(&args),
         "pjrt-smoke" => cmd_pjrt_smoke(&args),

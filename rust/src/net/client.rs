@@ -8,15 +8,40 @@
 //! ([`crate::net::loadgen`]) opens one client per scoped thread.
 //!
 //! A dropped connection (server restart, idle timeout, network blip) is
-//! retried **once** per call with a fresh connection before the error
-//! surfaces. Inference is idempotent, so the retry is safe even when the
-//! failure struck after the request was sent.
+//! retried with a fresh connection before the error surfaces, governed by
+//! a configurable [`RetryPolicy`] (default: one transparent retry, no
+//! backoff — exactly the historical behavior). Inference is idempotent,
+//! so retries are safe even when the failure struck after the request was
+//! sent. Each retry bumps the `net_client_retries` counter in the global
+//! [`obs`](crate::obs) registry.
 
 use crate::net::proto::{
     self, ErrorCode, Frame, FrameReader, ModelEntry, RequestFrame, StatsRequestFrame, WireError,
 };
+use crate::obs::{self, CounterId};
+use crate::util::backoff::{Backoff, BackoffCfg};
 use std::io::{Read, Write};
 use std::net::TcpStream;
+
+/// How a [`NetClient`] retries transport failures: total attempt budget
+/// plus the jittered backoff between attempts. The default (2 attempts,
+/// zero backoff) is the historical single transparent reconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per call (first try included). Clamped to ≥ 1.
+    pub attempts: usize,
+    /// Decorrelated-jitter backoff between attempts ([`BackoffCfg::ZERO`]
+    /// retries immediately).
+    pub backoff: BackoffCfg,
+    /// Seed for the backoff jitter (pin it for reproducible delays).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { attempts: 2, backoff: BackoffCfg::ZERO, seed: 0 }
+    }
+}
 
 /// Client-side failure modes, split by where the fault lies.
 #[derive(Debug)]
@@ -73,21 +98,43 @@ pub struct NetClient {
     max_frame: usize,
     next_id: u64,
     conn: Option<Conn>,
+    retry: RetryPolicy,
+    backoff: Backoff,
 }
 
 impl NetClient {
-    /// Connect and complete the handshake (preamble exchange + hello).
+    /// Connect and complete the handshake (preamble exchange + hello)
+    /// with the default [`RetryPolicy`] (one transparent reconnect).
     /// A server shedding connections surfaces here as
     /// [`ClientError::Remote`] with [`ErrorCode::Overloaded`].
     pub fn connect(addr: &str) -> Result<NetClient, ClientError> {
+        NetClient::connect_with(addr, RetryPolicy::default())
+    }
+
+    /// Connect with an explicit retry policy.
+    pub fn connect_with(addr: &str, retry: RetryPolicy) -> Result<NetClient, ClientError> {
         let mut client = NetClient {
             addr: addr.to_string(),
             max_frame: proto::DEFAULT_MAX_FRAME,
             next_id: 1,
             conn: None,
+            backoff: Backoff::new(retry.backoff, retry.seed),
+            retry,
         };
         client.ensure_conn()?;
         Ok(client)
+    }
+
+    /// Bookkeeping for one re-attempt: count it and sleep the jittered
+    /// backoff delay.
+    fn before_retry(&mut self) {
+        if obs::enabled() {
+            obs::counter(CounterId::NetClientRetries).inc();
+        }
+        let delay = self.backoff.next_delay();
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
     }
 
     /// The model catalog from the server's hello frame (reconnecting if
@@ -118,9 +165,15 @@ impl NetClient {
             )));
         }
         let cols = (data.len() / rows) as u32;
-        // one transparent reconnect for dropped connections
+        // transparent reconnects for dropped connections, within the
+        // retry budget (backoff-jittered between attempts)
+        self.backoff.reset();
+        let attempts = self.retry.attempts.max(1);
         let mut last_io: Option<ClientError> = None;
-        for _attempt in 0..2 {
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.before_retry();
+            }
             self.ensure_conn()?;
             match self.round_trip(model, rows as u32, cols, data) {
                 Ok(logits) => return Ok(logits),
@@ -143,11 +196,16 @@ impl NetClient {
     }
 
     /// Fetch the server's observability snapshot (v2 `Stats` frame) as a
-    /// JSON document. Same one-reconnect discipline as
+    /// JSON document. Same retry discipline as
     /// [`NetClient::infer_batch`].
     pub fn stats(&mut self) -> Result<String, ClientError> {
+        self.backoff.reset();
+        let attempts = self.retry.attempts.max(1);
         let mut last_io: Option<ClientError> = None;
-        for _attempt in 0..2 {
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.before_retry();
+            }
             self.ensure_conn()?;
             match self.stats_round_trip() {
                 Ok(json) => return Ok(json),

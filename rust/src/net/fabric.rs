@@ -1,0 +1,637 @@
+//! Serve-fabric substrate: the static shard map, per-backend connection
+//! pools, and the backend health state machine the router routes by.
+//!
+//! A **fabric** is a set of backend LCQ-RPC servers (each a plain
+//! [`NetServer`](crate::net::NetServer)) described by a static shard map
+//! from config (`serve.fabric`): each shard names the models it holds
+//! (empty list = wildcard, "whatever the backend's hello catalog says")
+//! and the replica addresses serving them. The router
+//! ([`crate::net::router`]) holds one [`Backend`] per unique address and
+//! consults this module for three things:
+//!
+//! * **candidates** — which backends can serve a model
+//!   ([`Fabric::candidates`]), from the shard map plus the hello catalogs
+//!   learned at handshake/probe time;
+//! * **replica choice** — [`Fabric::pick`], a rotor scan preferring
+//!   `Healthy` replicas, then `Suspect`, never `Down`, avoiding the
+//!   backend that just failed when an alternative exists;
+//! * **health** — a three-state machine per backend
+//!   ([`HealthState`]), driven by passive signals (connect/IO errors ⇒
+//!   `Down`, `Overloaded`/`ShuttingDown` frames ⇒ `Suspect`/`Down`,
+//!   success ⇒ `Healthy`) and an active hello-probe loop
+//!   ([`Fabric::probe_all`]) that both recovers `Down` backends and
+//!   refreshes their catalogs. Every transition is counted per backend
+//!   and in the global `fabric_health_transitions` counter, and the
+//!   `fabric_backends_healthy`/`fabric_backends_down` gauges are
+//!   recomputed on each transition.
+//!
+//! The state machine and pool discipline are documented (and doc-pinned
+//! by `rust/tests/fabric.rs`) in `docs/FABRIC.md`.
+
+use crate::net::proto::{self, Frame, FrameReader, ModelEntry};
+use crate::obs::{self, CounterId, GaugeId};
+use crate::util::backoff::BackoffCfg;
+use crate::util::json::Json;
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Read-timeout tick used on backend sockets (mirrors the server's
+/// shutdown poll so deadline checks run even against a silent peer).
+pub(crate) const BACKEND_POLL: Duration = Duration::from_millis(25);
+
+/// Cap on any single backend write.
+const BACKEND_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Idle connections kept per backend.
+const POOL_CAP: usize = 8;
+
+/// One shard of the map: the models a replica set holds. An empty
+/// `models` list is a wildcard — route by the backend's hello catalog.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Model names this shard serves (registry names, as on the wire).
+    pub models: Vec<String>,
+    /// Replica addresses (`host:port`), one backend process each.
+    pub replicas: Vec<String>,
+}
+
+/// Fabric-wide routing knobs (config file: the `"fabric"` object inside
+/// the `"serve"` section; see [`crate::config::FabricSettings`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FabricConfig {
+    /// The static shard map.
+    pub shards: Vec<ShardConfig>,
+    /// Total forward attempts per request (first try included).
+    pub retry_budget: usize,
+    /// Per-request end-to-end deadline at the router: retries (and their
+    /// backoff sleeps) never exceed it, so the client's patience bounds
+    /// the router's persistence.
+    pub deadline: Duration,
+    /// Decorrelated-jitter backoff between forward attempts.
+    pub backoff: BackoffCfg,
+    /// Active hello-probe period (zero disables the probe loop; passive
+    /// signals still drive health, but `Down` backends then only recover
+    /// via a probe — keep it on outside tests).
+    pub probe_every: Duration,
+    /// TCP connect + handshake timeout for backend dials.
+    pub connect_timeout: Duration,
+    /// Seed for backoff jitter (per-request streams derive from it).
+    pub seed: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> FabricConfig {
+        FabricConfig {
+            shards: Vec::new(),
+            retry_budget: 4,
+            deadline: Duration::from_secs(5),
+            backoff: BackoffCfg {
+                base: Duration::from_millis(1),
+                cap: Duration::from_millis(50),
+            },
+            probe_every: Duration::from_millis(500),
+            connect_timeout: Duration::from_secs(1),
+            seed: 0,
+        }
+    }
+}
+
+/// Backend health, the router's routing signal. Stored per backend in an
+/// atomic so handlers and the prober share it lock-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum HealthState {
+    /// Answering normally; preferred by [`Fabric::pick`].
+    Healthy = 0,
+    /// Recently shed with `Overloaded` (or a router-side framing upset):
+    /// used only when no `Healthy` replica exists.
+    Suspect = 1,
+    /// Connect/IO failure or `ShuttingDown`: never picked; only a
+    /// successful hello probe promotes it back to `Healthy`.
+    Down = 2,
+}
+
+impl HealthState {
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Healthy,
+            1 => HealthState::Suspect,
+            _ => HealthState::Down,
+        }
+    }
+
+    /// Stable lowercase name (used in stats JSON and docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Down => "down",
+        }
+    }
+}
+
+/// One pooled backend connection: socket plus frame reassembly state.
+pub(crate) struct BackendConn {
+    pub(crate) stream: TcpStream,
+    pub(crate) reader: FrameReader,
+}
+
+/// One backend replica: address, health, idle-connection pool, learned
+/// catalog, and exact per-backend counters.
+pub struct Backend {
+    addr: String,
+    /// Model-name filter from the shard map; empty = wildcard.
+    filter: Vec<String>,
+    state: AtomicU8,
+    pool: Mutex<Vec<BackendConn>>,
+    catalog: Mutex<Vec<ModelEntry>>,
+    forwards_ok: AtomicU64,
+    forwards_failed: AtomicU64,
+    health_transitions: AtomicU64,
+    probes_ok: AtomicU64,
+    probes_failed: AtomicU64,
+}
+
+impl Backend {
+    fn new(addr: String, filter: Vec<String>) -> Backend {
+        Backend {
+            addr,
+            filter,
+            state: AtomicU8::new(HealthState::Healthy as u8),
+            pool: Mutex::new(Vec::new()),
+            catalog: Mutex::new(Vec::new()),
+            forwards_ok: AtomicU64::new(0),
+            forwards_failed: AtomicU64::new(0),
+            health_transitions: AtomicU64::new(0),
+            probes_ok: AtomicU64::new(0),
+            probes_failed: AtomicU64::new(0),
+        }
+    }
+
+    /// The backend's address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Current health state.
+    pub fn state(&self) -> HealthState {
+        HealthState::from_u8(self.state.load(Ordering::Relaxed))
+    }
+
+    /// Health transitions this backend has undergone.
+    pub fn health_transitions(&self) -> u64 {
+        self.health_transitions.load(Ordering::Relaxed)
+    }
+
+    /// Requests this backend answered (any typed frame counts as an
+    /// answer; only transport-level failures count as failed).
+    pub fn forwards_ok(&self) -> u64 {
+        self.forwards_ok.load(Ordering::Relaxed)
+    }
+
+    /// Forward attempts that failed at the transport or timed out.
+    pub fn forwards_failed(&self) -> u64 {
+        self.forwards_failed.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn inc_forward_ok(&self) {
+        self.forwards_ok.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn inc_forward_failed(&self) {
+        self.forwards_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The hello catalog learned from this backend (last handshake or
+    /// probe; empty until first contact).
+    pub fn catalog(&self) -> Vec<ModelEntry> {
+        self.catalog.lock().unwrap().clone()
+    }
+
+    fn set_catalog(&self, models: Vec<ModelEntry>) {
+        *self.catalog.lock().unwrap() = models;
+    }
+
+    /// Take an idle pooled connection, if any.
+    pub(crate) fn checkout_pooled(&self) -> Option<BackendConn> {
+        self.pool.lock().unwrap().pop()
+    }
+
+    /// Return a still-framed connection to the idle pool (dropped if the
+    /// pool is full).
+    pub(crate) fn checkin(&self, conn: BackendConn) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(conn);
+        }
+    }
+
+    /// Drop every pooled connection (after an IO failure the pool may
+    /// hold more sockets to a dead process — fail fast instead of
+    /// retrying each one).
+    pub(crate) fn drain_pool(&self) {
+        self.pool.lock().unwrap().clear();
+    }
+}
+
+/// Dial a backend and run the client-side handshake: preamble exchange,
+/// then the hello frame. Returns the framed connection and the catalog.
+pub(crate) fn dial_backend(
+    addr: &str,
+    connect_timeout: Duration,
+    max_frame: usize,
+) -> Result<(BackendConn, Vec<ModelEntry>), String> {
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no addresses"))?;
+    let stream = TcpStream::connect_timeout(&sock, connect_timeout.max(BACKEND_POLL))
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(BACKEND_POLL));
+    let _ = stream.set_write_timeout(Some(BACKEND_WRITE_TIMEOUT));
+    let mut stream = stream;
+    stream
+        .write_all(&proto::encode_preamble())
+        .map_err(|e| format!("handshake send {addr}: {e}"))?;
+    let deadline = Instant::now() + connect_timeout.max(BACKEND_POLL) * 4;
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    let mut filled = 0;
+    loop {
+        if Instant::now() > deadline {
+            return Err(format!("handshake timeout for {addr}"));
+        }
+        match proto::poll_exact(&mut stream, &mut pre, &mut filled) {
+            Ok(true) => break,
+            Ok(false) => continue,
+            Err(e) => return Err(format!("handshake read {addr}: {e}")),
+        }
+    }
+    let version =
+        proto::decode_preamble(&pre).map_err(|e| format!("bad preamble from {addr}: {e}"))?;
+    if version != proto::VERSION {
+        return Err(format!("{addr} speaks LCQ-RPC v{version}, router v{}", proto::VERSION));
+    }
+    let mut reader = FrameReader::new(max_frame);
+    loop {
+        if Instant::now() > deadline {
+            return Err(format!("hello timeout for {addr}"));
+        }
+        match reader.poll_frame(&mut stream) {
+            Ok(None) => continue,
+            Ok(Some(Frame::Hello(h))) => {
+                return Ok((BackendConn { stream, reader }, h.models));
+            }
+            Ok(Some(Frame::Error(e))) => {
+                return Err(format!("{addr} refused: [{}] {}", e.code, e.message));
+            }
+            Ok(Some(_)) => return Err(format!("{addr}: expected hello frame")),
+            Err(e) => return Err(format!("hello read {addr}: {e}")),
+        }
+    }
+}
+
+/// The shard map resolved into live backends, plus the pick rotor.
+pub struct Fabric {
+    backends: Vec<Backend>,
+    rr: AtomicUsize,
+    cfg: FabricConfig,
+    max_frame: usize,
+}
+
+impl Fabric {
+    /// Build the fabric from config. Addresses appearing in several
+    /// shards collapse into one backend whose filter is the union (a
+    /// wildcard shard makes the merged filter wildcard).
+    pub fn new(cfg: FabricConfig, max_frame: usize) -> Fabric {
+        let mut backends: Vec<Backend> = Vec::new();
+        for shard in &cfg.shards {
+            for addr in &shard.replicas {
+                if let Some(b) = backends.iter_mut().find(|b| &b.addr == addr) {
+                    if shard.models.is_empty() {
+                        b.filter.clear(); // wildcard absorbs everything
+                    } else if !b.filter.is_empty() {
+                        for m in &shard.models {
+                            if !b.filter.contains(m) {
+                                b.filter.push(m.clone());
+                            }
+                        }
+                    }
+                } else {
+                    backends.push(Backend::new(addr.clone(), shard.models.clone()));
+                }
+            }
+        }
+        let fabric = Fabric { backends, rr: AtomicUsize::new(0), cfg, max_frame };
+        fabric.update_gauges();
+        fabric
+    }
+
+    /// The fabric's routing knobs.
+    pub fn cfg(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    /// All backends, shard-map order.
+    pub fn backends(&self) -> &[Backend] {
+        &self.backends
+    }
+
+    /// Indices of backends that can serve `model`: explicit shard matches
+    /// first; otherwise wildcard backends whose catalog contains the
+    /// model (or is still unknown — the backend itself answers
+    /// `UnknownModel` if we guessed wrong, which is typed and relayed).
+    pub fn candidates(&self, model: &str) -> Vec<usize> {
+        let explicit: Vec<usize> = self
+            .backends
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.filter.iter().any(|m| m == model))
+            .map(|(i, _)| i)
+            .collect();
+        if !explicit.is_empty() {
+            return explicit;
+        }
+        self.backends
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| {
+                if !b.filter.is_empty() {
+                    return false;
+                }
+                let cat = b.catalog.lock().unwrap();
+                cat.is_empty() || cat.iter().any(|m| m.name == model)
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Choose a replica from `candidates`: rotor scan preferring
+    /// `Healthy`, then `Suspect`; `Down` is never picked. The backend in
+    /// `avoid` (the one that just failed) is skipped while any
+    /// alternative exists.
+    pub fn pick(&self, candidates: &[usize], avoid: Option<usize>) -> Option<usize> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let scan = |want: HealthState, skip_avoid: bool| -> Option<usize> {
+            for i in 0..candidates.len() {
+                let idx = candidates[(start + i) % candidates.len()];
+                if skip_avoid && Some(idx) == avoid {
+                    continue;
+                }
+                if self.backends[idx].state() == want {
+                    return Some(idx);
+                }
+            }
+            None
+        };
+        scan(HealthState::Healthy, true)
+            .or_else(|| scan(HealthState::Suspect, true))
+            .or_else(|| scan(HealthState::Healthy, false))
+            .or_else(|| scan(HealthState::Suspect, false))
+    }
+
+    /// Record a health transition for backend `idx`. No-op if the state
+    /// is unchanged; otherwise bumps the per-backend and global
+    /// transition counters and refreshes the health gauges. Returns
+    /// whether a transition happened.
+    pub fn set_state(&self, idx: usize, new: HealthState) -> bool {
+        let b = &self.backends[idx];
+        let old = b.state.swap(new as u8, Ordering::Relaxed);
+        if old == new as u8 {
+            return false;
+        }
+        b.health_transitions.fetch_add(1, Ordering::Relaxed);
+        if obs::enabled() {
+            obs::counter(CounterId::FabricHealthTransitions).inc();
+        }
+        self.update_gauges();
+        true
+    }
+
+    /// Total health transitions across all backends.
+    pub fn health_transitions_total(&self) -> u64 {
+        self.backends.iter().map(|b| b.health_transitions()).sum()
+    }
+
+    fn update_gauges(&self) {
+        if !obs::enabled() {
+            return;
+        }
+        let healthy =
+            self.backends.iter().filter(|b| b.state() == HealthState::Healthy).count();
+        let down = self.backends.iter().filter(|b| b.state() == HealthState::Down).count();
+        obs::gauge(GaugeId::FabricBackendsHealthy).set(healthy as f64);
+        obs::gauge(GaugeId::FabricBackendsDown).set(down as f64);
+    }
+
+    /// Take a connection to backend `idx`: pooled if available, else a
+    /// fresh dial (which also refreshes the backend's catalog).
+    pub(crate) fn checkout(&self, idx: usize) -> Result<BackendConn, String> {
+        let b = &self.backends[idx];
+        if let Some(conn) = b.checkout_pooled() {
+            return Ok(conn);
+        }
+        let (conn, models) = dial_backend(&b.addr, self.cfg.connect_timeout, self.max_frame)?;
+        b.set_catalog(models);
+        Ok(conn)
+    }
+
+    /// Hello-probe one backend: fresh dial + handshake. Success promotes
+    /// to `Healthy` and refreshes the catalog (the probe connection is
+    /// donated to the idle pool); failure demotes to `Down`. Each probe
+    /// bumps the per-backend and global probe counters.
+    pub fn probe(&self, idx: usize) -> bool {
+        let b = &self.backends[idx];
+        if obs::enabled() {
+            obs::counter(CounterId::FabricProbes).inc();
+        }
+        match dial_backend(&b.addr, self.cfg.connect_timeout, self.max_frame) {
+            Ok((conn, models)) => {
+                b.probes_ok.fetch_add(1, Ordering::Relaxed);
+                b.set_catalog(models);
+                self.set_state(idx, HealthState::Healthy);
+                b.checkin(conn);
+                true
+            }
+            Err(_) => {
+                b.probes_failed.fetch_add(1, Ordering::Relaxed);
+                self.set_state(idx, HealthState::Down);
+                b.drain_pool();
+                false
+            }
+        }
+    }
+
+    /// Probe every backend once (startup warm-up and the prober loop's
+    /// body). Returns how many probes succeeded.
+    pub fn probe_all(&self) -> usize {
+        (0..self.backends.len()).filter(|&i| self.probe(i)).count()
+    }
+
+    /// Total probes across all backends (success + failure).
+    pub fn probes_total(&self) -> u64 {
+        self.backends
+            .iter()
+            .map(|b| {
+                b.probes_ok.load(Ordering::Relaxed) + b.probes_failed.load(Ordering::Relaxed)
+            })
+            .sum()
+    }
+
+    /// Union of the backend catalogs, name-deduplicated and sorted — the
+    /// router's own hello catalog, so a [`crate::net::NetClient`] sees
+    /// one merged model list and needs no fabric awareness.
+    pub fn merged_catalog(&self) -> Vec<ModelEntry> {
+        let mut merged: Vec<ModelEntry> = Vec::new();
+        for b in &self.backends {
+            for m in b.catalog.lock().unwrap().iter() {
+                if !merged.iter().any(|e| e.name == m.name) {
+                    merged.push(m.clone());
+                }
+            }
+        }
+        merged.sort_by(|a, b| a.name.cmp(&b.name));
+        merged
+    }
+
+    /// Per-backend stats array for the router's snapshot JSON (schema in
+    /// `docs/FABRIC.md`).
+    pub fn backends_json(&self) -> Json {
+        let items = self
+            .backends
+            .iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("addr", Json::Str(b.addr.clone())),
+                    ("state", Json::Str(b.state().name().to_string())),
+                    ("forwards_ok", Json::from(b.forwards_ok() as usize)),
+                    ("forwards_failed", Json::from(b.forwards_failed() as usize)),
+                    (
+                        "health_transitions",
+                        Json::from(b.health_transitions() as usize),
+                    ),
+                    (
+                        "probes_ok",
+                        Json::from(b.probes_ok.load(Ordering::Relaxed) as usize),
+                    ),
+                    (
+                        "probes_failed",
+                        Json::from(b.probes_failed.load(Ordering::Relaxed) as usize),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Arr(items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg(shards: Vec<ShardConfig>) -> FabricConfig {
+        FabricConfig { shards, ..FabricConfig::default() }
+    }
+
+    #[test]
+    fn duplicate_addrs_merge_filters() {
+        let cfg = test_cfg(vec![
+            ShardConfig {
+                models: vec!["a".into()],
+                replicas: vec!["h:1".into(), "h:2".into()],
+            },
+            ShardConfig { models: vec!["b".into()], replicas: vec!["h:1".into()] },
+        ]);
+        let f = Fabric::new(cfg, proto::DEFAULT_MAX_FRAME);
+        assert_eq!(f.backends().len(), 2);
+        assert_eq!(f.candidates("a"), vec![0, 1]);
+        assert_eq!(f.candidates("b"), vec![0]);
+        assert!(f.candidates("c").is_empty());
+    }
+
+    #[test]
+    fn wildcard_routes_by_catalog() {
+        let cfg = test_cfg(vec![ShardConfig {
+            models: vec![],
+            replicas: vec!["h:1".into(), "h:2".into()],
+        }]);
+        let f = Fabric::new(cfg, proto::DEFAULT_MAX_FRAME);
+        // unknown catalogs: every wildcard backend is a candidate
+        assert_eq!(f.candidates("m"), vec![0, 1]);
+        f.backends()[0].set_catalog(vec![ModelEntry {
+            name: "m".into(),
+            in_dim: 4,
+            out_dim: 2,
+        }]);
+        f.backends()[1].set_catalog(vec![ModelEntry {
+            name: "other".into(),
+            in_dim: 4,
+            out_dim: 2,
+        }]);
+        assert_eq!(f.candidates("m"), vec![0]);
+        assert_eq!(f.candidates("other"), vec![1]);
+        // both catalogs known, neither holds it: no candidates
+        assert!(f.candidates("missing").is_empty());
+    }
+
+    #[test]
+    fn pick_prefers_healthy_and_avoids_failed() {
+        let cfg = test_cfg(vec![ShardConfig {
+            models: vec!["m".into()],
+            replicas: vec!["h:1".into(), "h:2".into(), "h:3".into()],
+        }]);
+        let f = Fabric::new(cfg, proto::DEFAULT_MAX_FRAME);
+        let cands = f.candidates("m");
+        // all healthy: avoid is honored
+        for _ in 0..8 {
+            let p = f.pick(&cands, Some(1)).unwrap();
+            assert_ne!(p, 1);
+        }
+        // suspects are fallback only
+        f.set_state(0, HealthState::Suspect);
+        f.set_state(2, HealthState::Suspect);
+        assert_eq!(f.pick(&cands, None), Some(1));
+        // down is never picked
+        f.set_state(0, HealthState::Down);
+        f.set_state(1, HealthState::Down);
+        assert_eq!(f.pick(&cands, None), Some(2));
+        f.set_state(2, HealthState::Down);
+        assert_eq!(f.pick(&cands, None), None);
+    }
+
+    #[test]
+    fn transitions_are_counted_once_per_change() {
+        let cfg = test_cfg(vec![ShardConfig {
+            models: vec!["m".into()],
+            replicas: vec!["h:1".into()],
+        }]);
+        let f = Fabric::new(cfg, proto::DEFAULT_MAX_FRAME);
+        assert_eq!(f.health_transitions_total(), 0);
+        assert!(f.set_state(0, HealthState::Down));
+        assert!(!f.set_state(0, HealthState::Down), "no-op must not count");
+        assert!(f.set_state(0, HealthState::Healthy));
+        assert_eq!(f.health_transitions_total(), 2);
+    }
+
+    #[test]
+    fn merged_catalog_dedupes_and_sorts() {
+        let cfg = test_cfg(vec![ShardConfig {
+            models: vec![],
+            replicas: vec!["h:1".into(), "h:2".into()],
+        }]);
+        let f = Fabric::new(cfg, proto::DEFAULT_MAX_FRAME);
+        let m = |n: &str| ModelEntry { name: n.into(), in_dim: 4, out_dim: 2 };
+        f.backends()[0].set_catalog(vec![m("b"), m("a")]);
+        f.backends()[1].set_catalog(vec![m("a"), m("c")]);
+        let names: Vec<String> =
+            f.merged_catalog().into_iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+    }
+}

@@ -18,13 +18,22 @@
 //!
 //! [`ErrorCode::Overloaded`]: crate::net::proto::ErrorCode::Overloaded
 
+//! The **cluster scenario** ([`run_cluster`]) drives the same load at a
+//! fabric router while killing (and optionally restarting) a backend at
+//! pinned request counts — the hooks fire exactly once, on the driver
+//! thread that crosses the threshold — then augments the report with the
+//! router's failover counters fetched over the wire (`Stats` frame), so
+//! a failover blip shows up as numbers, not anecdotes.
+
 use crate::linalg::pool;
 use crate::net::client::NetClient;
 use crate::obs::Histogram;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// What to drive at the server.
 #[derive(Clone, Debug)]
@@ -129,8 +138,47 @@ struct RunTallies {
     latency: Histogram,
 }
 
+/// A one-shot lifecycle hook: fires at most once, on whichever driver
+/// thread crosses its request-count threshold first.
+struct HookCell(Mutex<Option<Box<dyn FnOnce() + Send>>>);
+
+impl HookCell {
+    fn empty() -> HookCell {
+        HookCell(Mutex::new(None))
+    }
+    fn some(f: impl FnOnce() + Send + 'static) -> HookCell {
+        HookCell(Mutex::new(Some(Box::new(f))))
+    }
+    /// Fire if still armed; `true` the first time.
+    fn fire(&self) -> bool {
+        if let Some(f) = self.0.lock().unwrap().take() {
+            f();
+            true
+        } else {
+            false
+        }
+    }
+    /// Still holding an unfired hook? (Does not fire it.)
+    fn armed(&self) -> bool {
+        self.0.lock().unwrap().is_some()
+    }
+}
+
 /// Run one load generation pass against a live server.
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
+    drive(cfg, None, None, &HookCell::empty(), &HookCell::empty())
+}
+
+/// Core driver shared by [`run`] and [`run_cluster`]: the hooks fire when
+/// the run-wide sent counter crosses the matching threshold (`fetch_add`
+/// hands every driver a unique count, so exactly one thread fires each).
+fn drive(
+    cfg: &LoadGenConfig,
+    kill_at: Option<u64>,
+    restart_at: Option<u64>,
+    on_kill: &HookCell,
+    on_restart: &HookCell,
+) -> Result<LoadReport> {
     // resolve the target model (and its input dimension) from the
     // server's own catalog, via a probe connection
     let mut probe =
@@ -172,7 +220,13 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
                     } else {
                         client.infer_batch(&entry.name, batch, &input)
                     };
-                    tallies.sent.fetch_add(1, Ordering::Relaxed);
+                    let n = tallies.sent.fetch_add(1, Ordering::Relaxed) + 1;
+                    if Some(n) == kill_at {
+                        on_kill.fire();
+                    }
+                    if Some(n) == restart_at {
+                        on_restart.fire();
+                    }
                     match result {
                         Ok(_) => {
                             tallies.ok.fetch_add(1, Ordering::Relaxed);
@@ -216,4 +270,98 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
         p99_ms: lat.percentile_ms(99.0),
         max_ms: lat.max_ms(),
     })
+}
+
+/// The cluster scenario: [`LoadGenConfig`] plus the request counts at
+/// which to kill and (optionally) restart a backend mid-run.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// The load to drive (typically at a fabric router).
+    pub load: LoadGenConfig,
+    /// Fire the kill hook when the run-wide sent count reaches this
+    /// (`--kill-backend-at N` on the CLI). `None` = never.
+    pub kill_at: Option<u64>,
+    /// Fire the restart hook at this sent count. `None` = never.
+    pub restart_at: Option<u64>,
+}
+
+/// Outcome of a [`run_cluster`] pass: the plain load report plus the
+/// target's fabric counters (fetched over the wire after the run; `None`
+/// when the target is not a router). Router counters are all-time, so
+/// drive a fresh router per scenario for per-run numbers.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Shed/failure tallies and the latency tail, as in [`run`].
+    pub load: LoadReport,
+    /// Whether the kill hook fired.
+    pub killed: bool,
+    /// Whether the restart hook fired.
+    pub restarted: bool,
+    /// Router forward re-attempts (`fabric_retries`), if the target
+    /// exposes fabric stats.
+    pub router_retries: Option<u64>,
+    /// Router backend switches (`fabric_failovers`).
+    pub router_failovers: Option<u64>,
+    /// Backend health transitions observed by the router.
+    pub router_health_transitions: Option<u64>,
+}
+
+impl ClusterReport {
+    /// One-line human summary (load line + fabric counters).
+    pub fn summary(&self) -> String {
+        let fabric = match (self.router_retries, self.router_failovers) {
+            (Some(r), Some(f)) => format!(
+                "; fabric: {r} retries, {f} failovers, {} health transitions",
+                self.router_health_transitions.unwrap_or(0)
+            ),
+            _ => "; fabric: target exposes no fabric stats".to_string(),
+        };
+        format!(
+            "{}{}{}{}",
+            self.load.summary(),
+            if self.killed { " [backend killed mid-run]" } else { "" },
+            if self.restarted { " [backend restarted]" } else { "" },
+            fabric
+        )
+    }
+}
+
+/// Run the cluster scenario: drive the load, kill a backend at
+/// `kill_at` sent requests (the hook runs on the driver thread that
+/// crosses the threshold), optionally restart it at `restart_at`, then
+/// fetch the router's failover counters over the wire.
+pub fn run_cluster(
+    cfg: &ClusterConfig,
+    on_kill: impl FnOnce() + Send + 'static,
+    on_restart: impl FnOnce() + Send + 'static,
+) -> Result<ClusterReport> {
+    let kill = HookCell::some(on_kill);
+    let restart = HookCell::some(on_restart);
+    let load = drive(&cfg.load, cfg.kill_at, cfg.restart_at, &kill, &restart)?;
+    // a hook that is no longer armed was consumed (fired) by the run
+    let killed = cfg.kill_at.is_some() && !kill.armed();
+    let restarted = cfg.restart_at.is_some() && !restart.armed();
+    let fabric = fetch_fabric_stats(&cfg.load.addr);
+    Ok(ClusterReport {
+        load,
+        killed,
+        restarted,
+        router_retries: fabric.map(|f| f.0),
+        router_failovers: fabric.map(|f| f.1),
+        router_health_transitions: fabric.map(|f| f.2),
+    })
+}
+
+/// Ask the target for its stats frame and pull the router counters out,
+/// if it is a fabric router (`{"router": {...}}` envelope).
+fn fetch_fabric_stats(addr: &str) -> Option<(u64, u64, u64)> {
+    let mut client = NetClient::connect(addr).ok()?;
+    let json = client.stats().ok()?;
+    let j = Json::parse(&json).ok()?;
+    let r = j.get("router")?;
+    Some((
+        r.get("retries")?.as_f64()? as u64,
+        r.get("failovers")?.as_f64()? as u64,
+        r.get("health_transitions")?.as_f64()? as u64,
+    ))
 }

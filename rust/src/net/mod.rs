@@ -33,6 +33,24 @@
 //! profile, and the slowest recent request traces (`lcquant stats --addr
 //! HOST:PORT` prints one; see `docs/OBSERVABILITY.md`).
 //!
+//! PR 8 adds the **serve fabric** — the multi-node tier:
+//!
+//! * [`fabric`] — the static shard map (`serve.fabric` config), one
+//!   health-tracked, connection-pooled [`fabric::Backend`] per replica
+//!   address, and the replica-pick policy (healthy first, never down).
+//! * [`router`] — [`RouterServer`]: a front process that speaks plain
+//!   LCQ-RPC to clients (its hello is the **merged** backend catalog, so
+//!   `NetClient` needs no fabric awareness) and fails requests over
+//!   between replicas on drop/overload within a bounded retry budget and
+//!   per-request deadline, shedding typed `Overloaded`/`Timeout` errors
+//!   when the fabric is exhausted — never a hang. Health/failover
+//!   semantics: `docs/FABRIC.md`.
+//!
+//! Failure paths are exercised deterministically via
+//! [`crate::util::fault`], a seeded fault-injection registry wired into
+//! the router's forward path and the loadgen's cluster scenario
+//! ([`loadgen::run_cluster`]).
+//!
 //! ```no_run
 //! use lcquant::net::{LoadGenConfig, NetClient, NetConfig, NetServer};
 //! use lcquant::serve::{Registry, ServerConfig};
@@ -54,11 +72,15 @@
 #![warn(missing_docs)]
 
 pub mod client;
+pub mod fabric;
 pub mod loadgen;
 pub mod proto;
+pub mod router;
 pub mod server;
 
-pub use client::{ClientError, NetClient};
-pub use loadgen::{LoadGenConfig, LoadReport};
+pub use client::{ClientError, NetClient, RetryPolicy};
+pub use fabric::{Fabric, FabricConfig, HealthState, ShardConfig};
+pub use loadgen::{ClusterConfig, ClusterReport, LoadGenConfig, LoadReport};
 pub use proto::{ErrorCode, Frame, WireError};
+pub use router::{RouterConfig, RouterServer, RouterStatsSnapshot};
 pub use server::{NetConfig, NetServer, NetStatsSnapshot};

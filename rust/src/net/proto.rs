@@ -62,6 +62,11 @@ pub enum ErrorCode {
     UnsupportedVersion = 6,
     /// The server is shutting down; no further requests will be answered.
     ShuttingDown = 7,
+    /// A deadline expired before the work completed: a request frame made
+    /// no progress within the server's per-frame deadline (the connection
+    /// is shed and closed), or a routed request exhausted its end-to-end
+    /// deadline at the fabric router. Retrying later is safe.
+    Timeout = 8,
 }
 
 impl ErrorCode {
@@ -80,6 +85,7 @@ impl ErrorCode {
             5 => ErrorCode::Internal,
             6 => ErrorCode::UnsupportedVersion,
             7 => ErrorCode::ShuttingDown,
+            8 => ErrorCode::Timeout,
             _ => return None,
         })
     }
@@ -95,6 +101,7 @@ impl std::fmt::Display for ErrorCode {
             ErrorCode::Internal => "internal error",
             ErrorCode::UnsupportedVersion => "unsupported version",
             ErrorCode::ShuttingDown => "shutting down",
+            ErrorCode::Timeout => "deadline exceeded",
         };
         f.write_str(s)
     }
@@ -533,6 +540,14 @@ impl FrameReader {
     /// wait time is excluded). Feeds the per-request trace's decode span.
     pub fn last_decode_ns(&self) -> u64 {
         self.last_decode_ns
+    }
+
+    /// Bytes of partial-frame state currently buffered. Zero at a frame
+    /// boundary. The server's per-frame progress deadline keys off this:
+    /// a connection that holds partial bytes without completing a frame is
+    /// a slow-loris suspect, while an idle one (zero buffered) is fine.
+    pub fn buffered_len(&self) -> usize {
+        self.buf.len()
     }
 
     /// Pull bytes from `r` until a full frame is buffered, then decode it.

@@ -1,0 +1,787 @@
+//! Fabric router: a front LCQ-RPC process that owns the shard map and
+//! relays client requests to healthy backend replicas.
+//!
+//! The router is `NetServer`-shaped on its client side — same preamble
+//! handshake, same hello frame (the **merged** backend catalog from
+//! [`Fabric::merged_catalog`]), same typed error frames, same per-frame
+//! slow-loris deadline — so a [`crate::net::NetClient`] works against a
+//! router unchanged. Behind it, each request is forwarded over a pooled
+//! backend connection with this discipline (full state machine in
+//! `docs/FABRIC.md`):
+//!
+//! * a **per-request deadline** starts when the request frame decodes;
+//!   retries and their backoff sleeps are clamped to the remaining
+//!   deadline, so the router never outlasts the client's patience;
+//! * forward failures are classified: connection drop / IO error marks
+//!   the backend `Down` and retries elsewhere; a backend `Overloaded` or
+//!   `ShuttingDown` frame marks it `Suspect`/`Down` and retries; model
+//!   errors (`UnknownModel`, `WrongDims`, `Internal`) are **relayed** to
+//!   the client as-is (another replica would answer the same);
+//! * retries draw decorrelated-jitter delays from
+//!   [`crate::util::backoff`], seeded per request for reproducibility,
+//!   within a bounded retry budget;
+//! * when every replica is down or the budget/deadline is exhausted, the
+//!   client gets the existing typed `Overloaded`/`Timeout` error frame —
+//!   graceful degradation, never a hang or a panic.
+//!
+//! Fault injection ([`crate::util::fault`]) is consulted at the forward
+//! point (connection drops, forced `Overloaded`, response delays, frame
+//! corruption), so the failover paths above are exercised determin-
+//! istically by `rust/tests/fabric.rs` — with injection disabled the cost
+//! is one relaxed atomic load per request.
+
+use crate::net::fabric::{BackendConn, Fabric, FabricConfig, HealthState};
+use crate::net::proto::{
+    self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, StatsResponseFrame, WireError,
+};
+use crate::net::server::NetConfig;
+use crate::obs::{self, CounterId, HistId};
+use crate::util::backoff::Backoff;
+use crate::util::fault::{self, FaultKind};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Read-timeout tick for client-side sockets (shutdown poll).
+const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
+
+/// Cap on any single client-side write.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Deadline for the client's pre-hello phase (as in `net::server`).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Router configuration: the client-facing connection plane plus the
+/// fabric behind it.
+#[derive(Clone, Debug, Default)]
+pub struct RouterConfig {
+    /// Client-side knobs (bind address, connection limit, frame cap,
+    /// per-frame deadline). `inflight_budget` is unused by the router —
+    /// backpressure is the backends' `Overloaded` signal.
+    pub net: NetConfig,
+    /// Shard map + routing/health knobs.
+    pub fabric: FabricConfig,
+}
+
+/// Monotonic router counters (all-time, point-in-time read).
+#[derive(Clone, Debug, Default)]
+pub struct RouterStatsSnapshot {
+    /// Client connections accepted.
+    pub connections: u64,
+    /// Client connections shed at the door (handler pool full).
+    pub connections_shed: u64,
+    /// Requests answered with a backend response.
+    pub requests_ok: u64,
+    /// Requests answered with a typed error relayed from a backend.
+    pub requests_failed: u64,
+    /// Requests shed by the router itself (all replicas down, retry
+    /// budget or deadline exhausted).
+    pub requests_shed: u64,
+    /// Forward re-attempts (any backend).
+    pub retries: u64,
+    /// Forward re-attempts that switched backend.
+    pub failovers: u64,
+    /// Backend health transitions (sum over backends).
+    pub health_transitions: u64,
+    /// Hello probes run (sum over backends, success + failure).
+    pub probes: u64,
+    /// Stats frames served.
+    pub stats_requests: u64,
+    /// Client connections shed by the per-frame progress deadline.
+    pub frame_timeouts: u64,
+}
+
+/// Per-router exact counters, mirroring into the global `fabric_*`
+/// counters (connection counts stay router-local so they never blend
+/// with backend servers sharing the process).
+#[derive(Default)]
+struct RouterStats {
+    connections: AtomicU64,
+    connections_shed: AtomicU64,
+    requests_ok: AtomicU64,
+    requests_failed: AtomicU64,
+    requests_shed: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    stats_requests: AtomicU64,
+    frame_timeouts: AtomicU64,
+}
+
+impl RouterStats {
+    fn bump(own: &AtomicU64, id: Option<CounterId>) {
+        own.fetch_add(1, Ordering::Relaxed);
+        if let Some(id) = id {
+            if obs::enabled() {
+                obs::counter(id).inc();
+            }
+        }
+    }
+    fn inc_connections(&self) {
+        RouterStats::bump(&self.connections, None);
+    }
+    fn inc_connections_shed(&self) {
+        RouterStats::bump(&self.connections_shed, None);
+    }
+    fn inc_ok(&self) {
+        RouterStats::bump(&self.requests_ok, Some(CounterId::FabricRequestsOk));
+    }
+    fn inc_failed(&self) {
+        RouterStats::bump(&self.requests_failed, Some(CounterId::FabricRequestsFailed));
+    }
+    fn inc_shed(&self) {
+        RouterStats::bump(&self.requests_shed, Some(CounterId::FabricRequestsShed));
+    }
+    fn inc_retry(&self) {
+        RouterStats::bump(&self.retries, Some(CounterId::FabricRetries));
+    }
+    fn inc_failover(&self) {
+        RouterStats::bump(&self.failovers, Some(CounterId::FabricFailovers));
+    }
+    fn inc_stats(&self) {
+        RouterStats::bump(&self.stats_requests, None);
+    }
+    fn inc_frame_timeout(&self) {
+        RouterStats::bump(&self.frame_timeouts, Some(CounterId::NetFrameTimeouts));
+    }
+}
+
+struct RouterCtx {
+    fabric: Fabric,
+    shutdown: AtomicBool,
+    max_frame: usize,
+    frame_deadline: Duration,
+    stats: RouterStats,
+}
+
+/// The fabric front end: listener + handler pool + backend fabric + the
+/// hello-probe loop, one self-contained unit (see module docs).
+pub struct RouterServer {
+    ctx: Arc<RouterCtx>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    conn_plane: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+}
+
+impl RouterServer {
+    /// Bind the client-facing listener, probe every backend once (so the
+    /// first hello already carries the merged catalog), and start
+    /// accepting. Backends that are down at startup are marked `Down`
+    /// and recovered by the probe loop — starting order is free.
+    pub fn start(cfg: RouterConfig) -> Result<RouterServer> {
+        let listener = TcpListener::bind(&cfg.net.bind_addr)
+            .with_context(|| format!("binding {}", cfg.net.bind_addr))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        let max_frame = cfg.net.max_frame_bytes.max(1024);
+        let fabric = Fabric::new(cfg.fabric, max_frame);
+        fabric.probe_all();
+        let max_conns = cfg.net.max_connections.max(1);
+        let ctx = Arc::new(RouterCtx {
+            fabric,
+            shutdown: AtomicBool::new(false),
+            max_frame,
+            frame_deadline: cfg.net.frame_deadline.max(SHUTDOWN_POLL),
+            stats: RouterStats::default(),
+        });
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(max_conns);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let conn_plane = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("lcq-router-conns".to_string())
+                .spawn(move || handler_pool(ctx, conn_rx, max_conns))
+                .context("spawning router connection plane")?
+        };
+        let acceptor = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("lcq-router-accept".to_string())
+                .spawn(move || acceptor_loop(listener, conn_tx, ctx))
+                .context("spawning router acceptor")?
+        };
+        let prober = if ctx.fabric.cfg().probe_every.is_zero() {
+            None
+        } else {
+            let ctx = Arc::clone(&ctx);
+            Some(
+                std::thread::Builder::new()
+                    .name("lcq-router-probe".to_string())
+                    .spawn(move || prober_loop(ctx))
+                    .context("spawning router prober")?,
+            )
+        };
+        Ok(RouterServer {
+            ctx,
+            local_addr,
+            acceptor: Some(acceptor),
+            conn_plane: Some(conn_plane),
+            prober,
+        })
+    }
+
+    /// The bound listen address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Router counters (exact, per instance).
+    pub fn stats(&self) -> RouterStatsSnapshot {
+        let s = &self.ctx.stats;
+        RouterStatsSnapshot {
+            connections: s.connections.load(Ordering::Relaxed),
+            connections_shed: s.connections_shed.load(Ordering::Relaxed),
+            requests_ok: s.requests_ok.load(Ordering::Relaxed),
+            requests_failed: s.requests_failed.load(Ordering::Relaxed),
+            requests_shed: s.requests_shed.load(Ordering::Relaxed),
+            retries: s.retries.load(Ordering::Relaxed),
+            failovers: s.failovers.load(Ordering::Relaxed),
+            health_transitions: self.ctx.fabric.health_transitions_total(),
+            probes: self.ctx.fabric.probes_total(),
+            stats_requests: s.stats_requests.load(Ordering::Relaxed),
+            frame_timeouts: s.frame_timeouts.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The fabric behind this router (tests inspect backend health).
+    pub fn fabric(&self) -> &Fabric {
+        &self.ctx.fabric
+    }
+
+    /// The full router snapshot (counters + per-backend states + process
+    /// registry) as a JSON document — also served over the wire for
+    /// `Stats` frames.
+    pub fn snapshot_json(&self) -> String {
+        snapshot_json(&self.ctx)
+    }
+
+    /// Stop accepting, join handlers and the prober. Idempotent; also
+    /// run on drop. Backends are *not* stopped — the router does not own
+    /// them.
+    pub fn stop(&mut self) {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.conn_plane.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RouterServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Render the router snapshot (schema in `docs/FABRIC.md`).
+fn snapshot_json(ctx: &RouterCtx) -> String {
+    let s = &ctx.stats;
+    let router = Json::obj(vec![
+        ("connections", Json::from(s.connections.load(Ordering::Relaxed) as usize)),
+        (
+            "connections_shed",
+            Json::from(s.connections_shed.load(Ordering::Relaxed) as usize),
+        ),
+        ("requests_ok", Json::from(s.requests_ok.load(Ordering::Relaxed) as usize)),
+        (
+            "requests_failed",
+            Json::from(s.requests_failed.load(Ordering::Relaxed) as usize),
+        ),
+        ("requests_shed", Json::from(s.requests_shed.load(Ordering::Relaxed) as usize)),
+        ("retries", Json::from(s.retries.load(Ordering::Relaxed) as usize)),
+        ("failovers", Json::from(s.failovers.load(Ordering::Relaxed) as usize)),
+        (
+            "health_transitions",
+            Json::from(ctx.fabric.health_transitions_total() as usize),
+        ),
+        ("probes", Json::from(ctx.fabric.probes_total() as usize)),
+        ("stats_requests", Json::from(s.stats_requests.load(Ordering::Relaxed) as usize)),
+        ("frame_timeouts", Json::from(s.frame_timeouts.load(Ordering::Relaxed) as usize)),
+    ]);
+    Json::obj(vec![
+        ("router", router),
+        ("backends", ctx.fabric.backends_json()),
+        ("process", obs::global().snapshot_json()),
+    ])
+    .to_string()
+}
+
+fn prober_loop(ctx: Arc<RouterCtx>) {
+    let period = ctx.fabric.cfg().probe_every;
+    let mut last = Instant::now();
+    while !ctx.shutdown.load(Ordering::Relaxed) {
+        std::thread::sleep(SHUTDOWN_POLL.min(period));
+        if last.elapsed() >= period {
+            ctx.fabric.probe_all();
+            last = Instant::now();
+        }
+    }
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    conn_tx: mpsc::SyncSender<TcpStream>,
+    ctx: Arc<RouterCtx>,
+) {
+    for stream in listener.incoming() {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        ctx.stats.inc_connections();
+        let _ = stream.set_nodelay(true);
+        match conn_tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(stream)) => {
+                ctx.stats.inc_connections_shed();
+                shed_connection(stream);
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+/// Best-effort overload handshake for a connection the router cannot
+/// take: preamble + `Overloaded` error frame, then close.
+fn shed_connection(mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut bytes = proto::encode_preamble().to_vec();
+    bytes.extend_from_slice(
+        &Frame::Error(ErrorFrame {
+            id: 0,
+            code: ErrorCode::Overloaded,
+            message: "router connection limit reached".to_string(),
+        })
+        .to_bytes(),
+    );
+    let _ = stream.write_all(&bytes);
+}
+
+fn handler_pool(
+    ctx: Arc<RouterCtx>,
+    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
+    max_conns: usize,
+) {
+    crate::linalg::pool::run_scoped(max_conns, |_| loop {
+        let next = { conn_rx.lock().unwrap().recv() };
+        match next {
+            Ok(stream) => handle_conn(stream, &ctx),
+            Err(_) => return,
+        }
+    });
+}
+
+#[inline]
+fn dur_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// One client connection, handshake to close (the client side mirrors
+/// `net::server::handle_conn`, including the per-frame deadline).
+fn handle_conn(mut stream: TcpStream, ctx: &RouterCtx) {
+    let _ = stream.set_read_timeout(Some(SHUTDOWN_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    let mut filled = 0;
+    let handshake_start = Instant::now();
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed)
+            || handshake_start.elapsed() > HANDSHAKE_TIMEOUT
+        {
+            return;
+        }
+        match proto::poll_exact(&mut stream, &mut pre, &mut filled) {
+            Ok(true) => break,
+            Ok(false) => continue,
+            Err(_) => return,
+        }
+    }
+    match proto::decode_preamble(&pre) {
+        Ok(v) if v == proto::VERSION => {}
+        Ok(v) => {
+            let mut bytes = proto::encode_preamble().to_vec();
+            bytes.extend_from_slice(
+                &Frame::Error(ErrorFrame {
+                    id: 0,
+                    code: ErrorCode::UnsupportedVersion,
+                    message: format!("router speaks v{}, client sent v{v}", proto::VERSION),
+                })
+                .to_bytes(),
+            );
+            let _ = stream.write_all(&bytes);
+            return;
+        }
+        Err(_) => return,
+    }
+    // hello: the merged backend catalog, computed per connection so probe
+    // refreshes are visible to new clients
+    let mut hello = proto::encode_preamble().to_vec();
+    hello.extend_from_slice(
+        &Frame::Hello(HelloFrame { models: ctx.fabric.merged_catalog() }).to_bytes(),
+    );
+    if stream.write_all(&hello).is_err() {
+        return;
+    }
+    // request loop with the slow-loris per-frame deadline
+    let mut reader = FrameReader::new(ctx.max_frame);
+    let mut frame_started: Option<Instant> = None;
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            let _ = proto::write_frame(
+                &mut stream,
+                &Frame::Error(ErrorFrame {
+                    id: 0,
+                    code: ErrorCode::ShuttingDown,
+                    message: "router shutting down".to_string(),
+                }),
+            );
+            return;
+        }
+        match reader.poll_frame(&mut stream) {
+            Ok(None) => {
+                if reader.buffered_len() == 0 {
+                    frame_started = None;
+                    continue;
+                }
+                let started = *frame_started.get_or_insert_with(Instant::now);
+                if started.elapsed() > ctx.frame_deadline {
+                    ctx.stats.inc_frame_timeout();
+                    let _ = proto::write_frame(
+                        &mut stream,
+                        &Frame::Error(ErrorFrame {
+                            id: 0,
+                            code: ErrorCode::Timeout,
+                            message: format!(
+                                "request frame made no progress within {:?}; closing",
+                                ctx.frame_deadline
+                            ),
+                        }),
+                    );
+                    return;
+                }
+                continue;
+            }
+            Ok(Some(Frame::Request(req))) => {
+                frame_started = None;
+                if !route_request(&mut stream, ctx, req) {
+                    return;
+                }
+            }
+            Ok(Some(Frame::StatsRequest(s))) => {
+                frame_started = None;
+                ctx.stats.inc_stats();
+                let json = snapshot_json(ctx);
+                if proto::write_frame(
+                    &mut stream,
+                    &Frame::StatsResponse(StatsResponseFrame { id: s.id, json }),
+                )
+                .is_err()
+                {
+                    return;
+                }
+            }
+            Ok(Some(_)) => {
+                let _ = proto::write_frame(
+                    &mut stream,
+                    &Frame::Error(ErrorFrame {
+                        id: 0,
+                        code: ErrorCode::Malformed,
+                        message: "unexpected frame type from client".to_string(),
+                    }),
+                );
+                return;
+            }
+            Err(WireError::Closed) | Err(WireError::Io(_)) => return,
+            Err(e) => {
+                let _ = proto::write_frame(
+                    &mut stream,
+                    &Frame::Error(ErrorFrame {
+                        id: 0,
+                        code: ErrorCode::Malformed,
+                        message: e.to_string(),
+                    }),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// What one forward attempt produced.
+enum Forward {
+    /// Backend answered; relay these frame bytes to the client verbatim
+    /// (response or typed model error — another replica would say the
+    /// same, so this ends the request).
+    Answer { frame: Frame, ok: bool },
+    /// Connection-level failure (dial/IO/protocol/desync). Drop the
+    /// conn, mark the backend `Down`, retry elsewhere.
+    ConnFailed(String),
+    /// Backend shed with `Overloaded`. Conn stays framed; mark the
+    /// backend `Suspect`, retry elsewhere.
+    Overloaded,
+    /// Backend answered `ShuttingDown`. Drop the conn, mark `Down`,
+    /// retry elsewhere.
+    ShuttingDown,
+    /// The per-request deadline expired while waiting on the backend.
+    /// Drop the conn (an unread response would desync it), mark
+    /// `Suspect`.
+    DeadlineMidRead,
+}
+
+/// Route one request: pick → forward → classify, within the retry budget
+/// and deadline. Returns `false` when the client connection should close
+/// (client-side write failure).
+fn route_request(
+    stream: &mut TcpStream,
+    ctx: &RouterCtx,
+    req: proto::RequestFrame,
+) -> bool {
+    let t_start = Instant::now();
+    let cfg = ctx.fabric.cfg();
+    let deadline = t_start + cfg.deadline;
+    let req_id = req.id;
+    let model = req.model.clone();
+    let shed = |stream: &mut TcpStream, ctx: &RouterCtx, code: ErrorCode, msg: String| -> bool {
+        ctx.stats.inc_shed();
+        proto::write_frame(stream, &Frame::Error(ErrorFrame { id: req_id, code, message: msg }))
+            .is_ok()
+    };
+    let candidates = ctx.fabric.candidates(&model);
+    if candidates.is_empty() {
+        ctx.stats.inc_failed();
+        return proto::write_frame(
+            stream,
+            &Frame::Error(ErrorFrame {
+                id: req_id,
+                code: ErrorCode::UnknownModel,
+                message: format!("no shard serves model '{model}'"),
+            }),
+        )
+        .is_ok();
+    }
+    // the forwarded bytes are encoded once; retries resend them verbatim
+    let bytes = Frame::Request(req).to_bytes();
+    // per-request backoff stream: reproducible given (fabric seed, id)
+    let mut backoff = Backoff::new(cfg.backoff, cfg.seed ^ req_id.wrapping_mul(0x9E37_79B9));
+    let mut last_failed: Option<usize> = None;
+    for attempt in 0..cfg.retry_budget.max(1) {
+        if attempt > 0 {
+            ctx.stats.inc_retry();
+            let delay = backoff.next_delay();
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return shed(
+                    stream,
+                    ctx,
+                    ErrorCode::Timeout,
+                    format!("deadline exhausted after {attempt} attempts for '{model}'"),
+                );
+            }
+            if !delay.is_zero() {
+                std::thread::sleep(delay.min(remaining));
+            }
+        }
+        let Some(idx) = ctx.fabric.pick(&candidates, last_failed) else {
+            return shed(
+                stream,
+                ctx,
+                ErrorCode::Overloaded,
+                format!("all replicas for '{model}' are down"),
+            );
+        };
+        if attempt > 0 && Some(idx) != last_failed {
+            ctx.stats.inc_failover();
+        }
+        let t_fwd = Instant::now();
+        let outcome = forward_once(ctx, idx, &bytes, req_id, deadline);
+        if obs::enabled() {
+            obs::hist(HistId::FabricBackendRtt).record_ns(dur_ns(t_fwd.elapsed()));
+        }
+        match outcome {
+            Forward::Answer { frame, ok } => {
+                ctx.fabric.set_state(idx, HealthState::Healthy);
+                ctx.fabric.backends()[idx].inc_forward_ok();
+                if ok {
+                    ctx.stats.inc_ok();
+                } else {
+                    ctx.stats.inc_failed();
+                }
+                if obs::enabled() {
+                    obs::hist(HistId::FabricRequest).record_ns(dur_ns(t_start.elapsed()));
+                }
+                return proto::write_frame(stream, &frame).is_ok();
+            }
+            Forward::ConnFailed(_) => {
+                ctx.fabric.backends()[idx].inc_forward_failed();
+                ctx.fabric.backends()[idx].drain_pool();
+                ctx.fabric.set_state(idx, HealthState::Down);
+                last_failed = Some(idx);
+            }
+            Forward::Overloaded => {
+                ctx.fabric.backends()[idx].inc_forward_failed();
+                ctx.fabric.set_state(idx, HealthState::Suspect);
+                last_failed = Some(idx);
+            }
+            Forward::ShuttingDown => {
+                ctx.fabric.backends()[idx].inc_forward_failed();
+                ctx.fabric.backends()[idx].drain_pool();
+                ctx.fabric.set_state(idx, HealthState::Down);
+                last_failed = Some(idx);
+            }
+            Forward::DeadlineMidRead => {
+                ctx.fabric.backends()[idx].inc_forward_failed();
+                ctx.fabric.set_state(idx, HealthState::Suspect);
+                return shed(
+                    stream,
+                    ctx,
+                    ErrorCode::Timeout,
+                    format!("deadline exhausted waiting on a replica for '{model}'"),
+                );
+            }
+        }
+        if Instant::now() >= deadline {
+            return shed(
+                stream,
+                ctx,
+                ErrorCode::Timeout,
+                format!("deadline exhausted after {} attempts for '{model}'", attempt + 1),
+            );
+        }
+    }
+    shed(
+        stream,
+        ctx,
+        ErrorCode::Overloaded,
+        format!("retry budget ({}) exhausted for '{model}'", cfg.retry_budget.max(1)),
+    )
+}
+
+/// One forward attempt against backend `idx`: checkout (pooled or fresh
+/// dial), send the encoded request, await the matching frame. Fault
+/// injection is consulted here — the router-side points are response
+/// delay, synthetic connection drop, forced `Overloaded`, and one-byte
+/// frame corruption (the backend then answers `Malformed`, which the
+/// router treats as a poisoned connection).
+fn forward_once(
+    ctx: &RouterCtx,
+    idx: usize,
+    bytes: &[u8],
+    req_id: u64,
+    deadline: Instant,
+) -> Forward {
+    if fault::enabled() {
+        if fault::should_inject(FaultKind::Delay) {
+            std::thread::sleep(fault::delay_duration());
+        }
+        if fault::should_inject(FaultKind::ConnDrop) {
+            return Forward::ConnFailed("injected connection drop".to_string());
+        }
+        if fault::should_inject(FaultKind::Overload) {
+            return Forward::Overloaded;
+        }
+    }
+    let mut conn: BackendConn = match ctx.fabric.checkout(idx) {
+        Ok(c) => c,
+        Err(e) => return Forward::ConnFailed(e),
+    };
+    let send_result = if fault::enabled() && fault::should_inject(FaultKind::Corrupt) {
+        let mut copy = bytes.to_vec();
+        let last = copy.len() - 1;
+        copy[last] ^= 0xFF; // checksum byte: backend sees a checksum error
+        conn.stream.write_all(&copy)
+    } else {
+        conn.stream.write_all(bytes)
+    };
+    if let Err(e) = send_result {
+        return Forward::ConnFailed(format!("send: {e}"));
+    }
+    loop {
+        if Instant::now() >= deadline {
+            return Forward::DeadlineMidRead;
+        }
+        match conn.reader.poll_frame(&mut conn.stream) {
+            Ok(None) => continue, // BACKEND_POLL tick
+            Ok(Some(Frame::Response(resp))) => {
+                if resp.id != req_id {
+                    return Forward::ConnFailed(format!(
+                        "response id {} for request {req_id}",
+                        resp.id
+                    ));
+                }
+                let frame = Frame::Response(resp);
+                ctx.fabric.backends()[idx].checkin(conn);
+                return Forward::Answer { frame, ok: true };
+            }
+            Ok(Some(Frame::Error(e))) => {
+                if e.id != req_id && e.id != 0 {
+                    return Forward::ConnFailed(format!(
+                        "error frame for foreign request {}",
+                        e.id
+                    ));
+                }
+                return match e.code {
+                    ErrorCode::Overloaded => {
+                        // request-level shed keeps the conn framed
+                        ctx.fabric.backends()[idx].checkin(conn);
+                        Forward::Overloaded
+                    }
+                    ErrorCode::ShuttingDown => Forward::ShuttingDown,
+                    ErrorCode::Malformed | ErrorCode::UnsupportedVersion => {
+                        // the *router's* frame upset the backend (e.g.
+                        // injected corruption): never relay, the conn is
+                        // closed on the far side
+                        Forward::ConnFailed(format!("backend rejected frame: {}", e.message))
+                    }
+                    _ => {
+                        // model-level errors are identical on every
+                        // replica: relay, request over
+                        let frame = Frame::Error(ErrorFrame {
+                            id: req_id,
+                            code: e.code,
+                            message: e.message,
+                        });
+                        ctx.fabric.backends()[idx].checkin(conn);
+                        Forward::Answer { frame, ok: false }
+                    }
+                };
+            }
+            Ok(Some(_)) => {
+                return Forward::ConnFailed("unexpected frame from backend".to_string());
+            }
+            Err(WireError::Closed) => {
+                return Forward::ConnFailed("backend closed the connection".to_string());
+            }
+            Err(e) => return Forward::ConnFailed(e.to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_router_config_is_sane() {
+        let c = RouterConfig::default();
+        assert!(c.fabric.retry_budget >= 1);
+        assert!(!c.fabric.deadline.is_zero());
+        assert!(c.net.max_connections >= 1);
+    }
+}

@@ -90,6 +90,13 @@ pub struct NetConfig {
     /// slot is ~80 bytes of atomics; the default keeps the last 256
     /// request traces.
     pub trace_slots: usize,
+    /// Per-frame progress deadline: once the first byte of a request
+    /// frame arrives, the whole frame must complete within this window or
+    /// the connection is shed with [`ErrorCode::Timeout`] (slow-loris
+    /// defense — the handshake deadline alone leaves the request loop
+    /// holdable forever by dribbling one byte per read tick). Idle
+    /// connections (no partial frame) are unaffected.
+    pub frame_deadline: Duration,
 }
 
 impl Default for NetConfig {
@@ -100,6 +107,7 @@ impl Default for NetConfig {
             inflight_budget: 256,
             max_frame_bytes: proto::DEFAULT_MAX_FRAME,
             trace_slots: 256,
+            frame_deadline: Duration::from_secs(10),
         }
     }
 }
@@ -119,6 +127,8 @@ pub struct NetStatsSnapshot {
     pub requests_failed: u64,
     /// Stats snapshot frames served.
     pub stats_requests: u64,
+    /// Connections shed by the per-frame progress deadline (slow-loris).
+    pub frame_timeouts: u64,
 }
 
 /// Per-server exact counters. Every bump also mirrors into the global
@@ -134,6 +144,7 @@ struct NetStats {
     requests_shed: AtomicU64,
     requests_failed: AtomicU64,
     stats_requests: AtomicU64,
+    frame_timeouts: AtomicU64,
 }
 
 impl NetStats {
@@ -161,6 +172,9 @@ impl NetStats {
     fn inc_stats(&self) {
         NetStats::bump(&self.stats_requests, CounterId::NetStatsRequests);
     }
+    fn inc_frame_timeout(&self) {
+        NetStats::bump(&self.frame_timeouts, CounterId::NetFrameTimeouts);
+    }
 
     fn snapshot(&self) -> NetStatsSnapshot {
         NetStatsSnapshot {
@@ -170,6 +184,7 @@ impl NetStats {
             requests_shed: self.requests_shed.load(Ordering::Relaxed),
             requests_failed: self.requests_failed.load(Ordering::Relaxed),
             stats_requests: self.stats_requests.load(Ordering::Relaxed),
+            frame_timeouts: self.frame_timeouts.load(Ordering::Relaxed),
         }
     }
 
@@ -182,6 +197,7 @@ impl NetStats {
             ("requests_shed", Json::from(s.requests_shed as usize)),
             ("requests_failed", Json::from(s.requests_failed as usize)),
             ("stats_requests", Json::from(s.stats_requests as usize)),
+            ("frame_timeouts", Json::from(s.frame_timeouts as usize)),
         ])
     }
 }
@@ -195,6 +211,8 @@ struct ConnCtx {
     inflight: AtomicUsize,
     inflight_max: usize,
     max_frame: usize,
+    /// Per-frame progress deadline (see [`NetConfig::frame_deadline`]).
+    frame_deadline: Duration,
     stats: NetStats,
     /// Batch-plane stats, shared with the micro-batch server's executors.
     /// Outlives the batch server itself, so snapshots are valid at every
@@ -239,6 +257,7 @@ impl NetServer {
             inflight: AtomicUsize::new(0),
             inflight_max: net_cfg.inflight_budget.max(1),
             max_frame: net_cfg.max_frame_bytes.max(1024),
+            frame_deadline: net_cfg.frame_deadline.max(SHUTDOWN_POLL),
             stats: NetStats::default(),
             traces: TraceRing::new(net_cfg.trace_slots.max(2)),
         });
@@ -480,6 +499,12 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     }
     // --- request loop ---------------------------------------------------
     let mut reader = FrameReader::new(ctx.max_frame);
+    // Slow-loris defense: once the first bytes of a frame arrive, the
+    // whole frame must land within `frame_deadline`. Dribbling one byte
+    // per read tick resets nothing — the clock runs from the first byte
+    // until the frame completes. Idle connections (no partial frame)
+    // never time out here.
+    let mut frame_started: Option<Instant> = None;
     loop {
         if ctx.shutdown.load(Ordering::Relaxed) {
             let _ = proto::write_frame(
@@ -493,14 +518,41 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
             return;
         }
         match reader.poll_frame(&mut stream) {
-            Ok(None) => continue, // read-timeout tick
+            Ok(None) => {
+                // read-timeout tick: check partial-frame progress
+                if reader.buffered_len() == 0 {
+                    frame_started = None;
+                    continue;
+                }
+                let started = *frame_started.get_or_insert_with(Instant::now);
+                if started.elapsed() > ctx.frame_deadline {
+                    ctx.stats.inc_frame_timeout();
+                    let _ = proto::write_frame(
+                        &mut stream,
+                        &Frame::Error(ErrorFrame {
+                            id: 0,
+                            code: ErrorCode::Timeout,
+                            message: format!(
+                                "request frame made no progress within {:?} \
+                                 ({} bytes buffered); closing",
+                                ctx.frame_deadline,
+                                reader.buffered_len()
+                            ),
+                        }),
+                    );
+                    return;
+                }
+                continue;
+            }
             Ok(Some(Frame::Request(req))) => {
+                frame_started = None;
                 let decode_ns = reader.last_decode_ns();
                 if !answer_request(&mut stream, ctx, req, accept_ns, decode_ns) {
                     return;
                 }
             }
             Ok(Some(Frame::StatsRequest(s))) => {
+                frame_started = None;
                 ctx.stats.inc_stats();
                 let json = snapshot_json(ctx);
                 if proto::write_frame(

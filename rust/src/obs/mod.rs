@@ -75,10 +75,33 @@ pub enum CounterId {
     /// Plane verification calls answered from an already-verified section
     /// — the work the lazy checksum scheme avoided.
     LcqLazyVerifyHits = 15,
+    /// `NetClient` retry attempts after a failed round trip (the first
+    /// attempt of a request is not a retry).
+    NetClientRetries = 16,
+    /// Connections shed by the net server's per-frame progress deadline
+    /// (slow-loris defense): a request frame held partial bytes without
+    /// completing for longer than `frame_deadline`.
+    NetFrameTimeouts = 17,
+    /// Routed requests answered with a backend response.
+    FabricRequestsOk = 18,
+    /// Routed requests answered with a typed error relayed from a backend.
+    FabricRequestsFailed = 19,
+    /// Routed requests shed by the router itself (all replicas down,
+    /// retry budget or deadline exhausted).
+    FabricRequestsShed = 20,
+    /// Router re-attempts of a request after a failed forward (any
+    /// backend, including the same one).
+    FabricRetries = 21,
+    /// Router re-attempts that switched to a *different* backend.
+    FabricFailovers = 22,
+    /// Backend health state transitions observed by the router.
+    FabricHealthTransitions = 23,
+    /// Active hello probes completed (success or failure) by the router.
+    FabricProbes = 24,
 }
 
 /// Number of [`CounterId`] variants.
-pub const COUNTERS: usize = 16;
+pub const COUNTERS: usize = 25;
 
 impl CounterId {
     /// All counters, declaration order.
@@ -99,6 +122,15 @@ impl CounterId {
         CounterId::LcqMmapLoads,
         CounterId::LcqSectionVerifies,
         CounterId::LcqLazyVerifyHits,
+        CounterId::NetClientRetries,
+        CounterId::NetFrameTimeouts,
+        CounterId::FabricRequestsOk,
+        CounterId::FabricRequestsFailed,
+        CounterId::FabricRequestsShed,
+        CounterId::FabricRetries,
+        CounterId::FabricFailovers,
+        CounterId::FabricHealthTransitions,
+        CounterId::FabricProbes,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -120,6 +152,15 @@ impl CounterId {
             CounterId::LcqMmapLoads => "lcq_mmap_loads",
             CounterId::LcqSectionVerifies => "lcq_section_verifies",
             CounterId::LcqLazyVerifyHits => "lcq_lazy_verify_hits",
+            CounterId::NetClientRetries => "net_client_retries",
+            CounterId::NetFrameTimeouts => "net_frame_timeouts",
+            CounterId::FabricRequestsOk => "fabric_requests_ok",
+            CounterId::FabricRequestsFailed => "fabric_requests_failed",
+            CounterId::FabricRequestsShed => "fabric_requests_shed",
+            CounterId::FabricRetries => "fabric_retries",
+            CounterId::FabricFailovers => "fabric_failovers",
+            CounterId::FabricHealthTransitions => "fabric_health_transitions",
+            CounterId::FabricProbes => "fabric_probes",
         }
     }
 }
@@ -140,10 +181,14 @@ pub enum GaugeId {
     LcLstepMs = 4,
     /// Wall time of the latest C step, milliseconds.
     LcCstepMs = 5,
+    /// Router: backends currently in the `Healthy` state.
+    FabricBackendsHealthy = 6,
+    /// Router: backends currently in the `Down` state.
+    FabricBackendsDown = 7,
 }
 
 /// Number of [`GaugeId`] variants.
-pub const GAUGES: usize = 6;
+pub const GAUGES: usize = 8;
 
 impl GaugeId {
     /// All gauges, declaration order.
@@ -154,6 +199,8 @@ impl GaugeId {
         GaugeId::LcFeasibility,
         GaugeId::LcLstepMs,
         GaugeId::LcCstepMs,
+        GaugeId::FabricBackendsHealthy,
+        GaugeId::FabricBackendsDown,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -165,6 +212,8 @@ impl GaugeId {
             GaugeId::LcFeasibility => "lc_feasibility",
             GaugeId::LcLstepMs => "lc_lstep_ms",
             GaugeId::LcCstepMs => "lc_cstep_ms",
+            GaugeId::FabricBackendsHealthy => "fabric_backends_healthy",
+            GaugeId::FabricBackendsDown => "fabric_backends_down",
         }
     }
 }
@@ -191,10 +240,14 @@ pub enum HistId {
     LcCstep = 7,
     /// Registry: `.lcq` cold load, file open → engine ready.
     ModelLoad = 8,
+    /// Router: request decode → response written (includes retries).
+    FabricRequest = 9,
+    /// Router: one backend round trip (forward → backend reply).
+    FabricBackendRtt = 10,
 }
 
 /// Number of [`HistId`] variants.
-pub const HISTS: usize = 9;
+pub const HISTS: usize = 11;
 
 impl HistId {
     /// All histograms, declaration order.
@@ -208,6 +261,8 @@ impl HistId {
         HistId::LcLstep,
         HistId::LcCstep,
         HistId::ModelLoad,
+        HistId::FabricRequest,
+        HistId::FabricBackendRtt,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -222,6 +277,8 @@ impl HistId {
             HistId::LcLstep => "lc_lstep",
             HistId::LcCstep => "lc_cstep",
             HistId::ModelLoad => "model_load",
+            HistId::FabricRequest => "fabric_request",
+            HistId::FabricBackendRtt => "fabric_backend_rtt",
         }
     }
 }

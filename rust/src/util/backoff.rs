@@ -1,0 +1,161 @@
+//! Decorrelated-jitter retry backoff.
+//!
+//! Implements the "decorrelated jitter" policy (Brooker, AWS architecture
+//! blog): each delay is drawn uniformly from `[base, prev * 3]`, clamped to
+//! `[base, cap]`. Compared to plain exponential backoff this spreads
+//! retries of many independent clients apart in time, which matters when a
+//! backend restart makes an entire fleet retry at once (thundering herd).
+//!
+//! All randomness comes from [`crate::util::rng::Rng`], so a pinned seed
+//! gives a fully reproducible delay sequence — fabric tests rely on this.
+//!
+//! A zero configuration (`base == cap == 0`) always yields zero delays,
+//! which is how callers encode "retry immediately, no backoff" (the
+//! [`crate::net::NetClient`] default preserving its historical single
+//! instant reconnect).
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Backoff policy parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackoffCfg {
+    /// Minimum (and first) delay. `0` disables backoff entirely.
+    pub base: Duration,
+    /// Upper clamp for every delay.
+    pub cap: Duration,
+}
+
+impl BackoffCfg {
+    /// No waiting between retries (every delay is zero).
+    pub const ZERO: BackoffCfg = BackoffCfg {
+        base: Duration::ZERO,
+        cap: Duration::ZERO,
+    };
+
+    /// True if this config always yields zero delays.
+    pub fn is_zero(&self) -> bool {
+        self.base.is_zero() || self.cap.is_zero()
+    }
+}
+
+impl Default for BackoffCfg {
+    /// Default tuned for LAN-scale fabrics: 5 ms base, 200 ms cap.
+    fn default() -> Self {
+        BackoffCfg {
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Stateful delay generator. One instance per retry loop; call
+/// [`Backoff::next_delay`] before each re-attempt and [`Backoff::reset`]
+/// after a success so the next failure starts from `base` again.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    cfg: BackoffCfg,
+    prev: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// New generator with the given policy and seed.
+    pub fn new(cfg: BackoffCfg, seed: u64) -> Self {
+        Backoff {
+            cfg,
+            prev: cfg.base,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Draw the next delay: uniform in `[base, prev * 3]`, clamped to `cap`.
+    pub fn next_delay(&mut self) -> Duration {
+        if self.cfg.is_zero() {
+            return Duration::ZERO;
+        }
+        let lo = self.cfg.base.as_secs_f64();
+        let hi = (self.prev.as_secs_f64() * 3.0).min(self.cfg.cap.as_secs_f64());
+        let hi = hi.max(lo);
+        let d = Duration::from_secs_f64(lo + self.rng.uniform() * (hi - lo));
+        let d = d.clamp(self.cfg.base, self.cfg.cap);
+        self.prev = d;
+        d
+    }
+
+    /// Forget accumulated growth: the next delay is drawn near `base` again.
+    pub fn reset(&mut self) {
+        self.prev = self.cfg.base;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_cfg_yields_zero_delays() {
+        let mut b = Backoff::new(BackoffCfg::ZERO, 1);
+        for _ in 0..8 {
+            assert_eq!(b.next_delay(), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn delays_stay_within_bounds() {
+        let cfg = BackoffCfg {
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(50),
+        };
+        let mut b = Backoff::new(cfg, 42);
+        for _ in 0..200 {
+            let d = b.next_delay();
+            assert!(d >= cfg.base, "delay {d:?} below base");
+            assert!(d <= cfg.cap, "delay {d:?} above cap");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_sequence() {
+        let cfg = BackoffCfg::default();
+        let mut a = Backoff::new(cfg, 7);
+        let mut b = Backoff::new(cfg, 7);
+        for _ in 0..32 {
+            assert_eq!(a.next_delay(), b.next_delay());
+        }
+    }
+
+    #[test]
+    fn reset_returns_to_base_scale() {
+        let cfg = BackoffCfg {
+            base: Duration::from_millis(1),
+            cap: Duration::from_secs(10),
+        };
+        let mut b = Backoff::new(cfg, 3);
+        // Grow the window.
+        for _ in 0..20 {
+            b.next_delay();
+        }
+        b.reset();
+        // After reset the window is [base, base*3].
+        let d = b.next_delay();
+        assert!(d <= cfg.base * 3, "post-reset delay {d:?}");
+    }
+
+    #[test]
+    fn grows_toward_cap() {
+        let cfg = BackoffCfg {
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(64),
+        };
+        let mut b = Backoff::new(cfg, 11);
+        let mut hit_upper_half = false;
+        for _ in 0..64 {
+            if b.next_delay() > cfg.cap / 2 {
+                hit_upper_half = true;
+            }
+        }
+        assert!(hit_upper_half, "backoff never grew past cap/2");
+    }
+}

@@ -1,0 +1,381 @@
+//! Seeded, deterministic fault injection for robustness tests.
+//!
+//! The fabric's failover claims ("survives a dropped backend", "sheds
+//! typed errors under overload") are only trustworthy if the failures can
+//! be manufactured on demand and *counted*. This module is a process-wide
+//! fault registry that the net plane consults at well-known injection
+//! points (see `docs/FABRIC.md`): connection drops, read/write stalls
+//! (slow-loris), delayed responses, corrupt frames, and forced
+//! `Overloaded` responses.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Off means free.** When no plan is installed, every injection point
+//!    costs a single relaxed atomic load. Release hot paths never pay for
+//!    a test-only facility.
+//! 2. **Deterministic totals.** Faults trigger on a count-based schedule,
+//!    not a random draw per call: for kind `k` with rate `r` and phase
+//!    `p`, call number `n` (a process-wide atomic counter) fires iff
+//!    `floor((n + 1) * r + p) > floor(n * r + p)`. Every call observes a
+//!    distinct `n`, so the *total* number of injected faults after `N`
+//!    calls is exactly `floor(N * r + p) - floor(p)` regardless of thread
+//!    interleaving — tests can assert exact counts under a pinned seed.
+//! 3. **Seeded placement.** The seed only shifts the phase `p`, i.e.
+//!    *which* calls fire, never how many. Re-running with the same seed
+//!    reproduces the same placement bit-for-bit.
+//!
+//! Injected faults are tallied per kind ([`injected`]); fabric tests match
+//! those tallies against the router's failover/retry counters exactly.
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::splitmix64;
+
+/// Kinds of injectable faults. Each names one injection point in the net
+/// plane; `docs/FABRIC.md` documents where each is consulted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum FaultKind {
+    /// Abruptly sever a connection (reset instead of a clean write).
+    ConnDrop = 0,
+    /// Stall before a read makes progress (slow-loris on the inbound side).
+    ReadStall = 1,
+    /// Stall before a write makes progress (slow-loris on the outbound side).
+    WriteStall = 2,
+    /// Delay a response by the plan's `delay` before sending it.
+    Delay = 3,
+    /// Flip a byte in an outgoing frame so the peer sees a checksum error.
+    Corrupt = 4,
+    /// Answer with a forced `Overloaded` error instead of serving.
+    Overload = 5,
+}
+
+/// Number of fault kinds (size of the per-kind counter arrays).
+pub const KINDS: usize = 6;
+
+impl FaultKind {
+    /// Every kind, for iteration in tests and reports.
+    pub const ALL: [FaultKind; KINDS] = [
+        FaultKind::ConnDrop,
+        FaultKind::ReadStall,
+        FaultKind::WriteStall,
+        FaultKind::Delay,
+        FaultKind::Corrupt,
+        FaultKind::Overload,
+    ];
+
+    /// Stable snake_case name (used in loadgen cluster reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::ConnDrop => "conn_drop",
+            FaultKind::ReadStall => "read_stall",
+            FaultKind::WriteStall => "write_stall",
+            FaultKind::Delay => "delay",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Overload => "overload",
+        }
+    }
+}
+
+/// A fault plan: per-kind rates plus the durations the stall/delay kinds
+/// use. Build with the chainable setters, then [`install`] it.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: [f64; KINDS],
+    delay: Duration,
+    stall: Duration,
+}
+
+impl FaultPlan {
+    /// Empty plan (no faults) with the given placement seed.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            rates: [0.0; KINDS],
+            delay: Duration::from_millis(20),
+            stall: Duration::from_millis(50),
+        }
+    }
+
+    /// Set the rate for one kind (clamped to `[0, 1]`; `0.5` = every
+    /// second consultation of that injection point fires).
+    pub fn with(mut self, kind: FaultKind, rate: f64) -> Self {
+        self.rates[kind as usize] = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Duration used by [`FaultKind::Delay`] injections.
+    pub fn delay(mut self, d: Duration) -> Self {
+        self.delay = d;
+        self
+    }
+
+    /// Duration used by the stall kinds.
+    pub fn stall(mut self, d: Duration) -> Self {
+        self.stall = d;
+        self
+    }
+}
+
+struct State {
+    rates: [AtomicU64; KINDS],  // f64 bits
+    phases: [AtomicU64; KINDS], // f64 bits, in [0, 1)
+    calls: [AtomicU64; KINDS],
+    injected: [AtomicU64; KINDS],
+    delay_ns: AtomicU64,
+    stall_ns: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: State = State {
+    rates: [ZERO; KINDS],
+    phases: [ZERO; KINDS],
+    calls: [ZERO; KINDS],
+    injected: [ZERO; KINDS],
+    delay_ns: AtomicU64::new(0),
+    stall_ns: AtomicU64::new(0),
+};
+
+/// Install a plan and enable injection. Resets all call/injected counters.
+/// Process-wide: tests using this must hold a serialization lock or run in
+/// their own process (the fabric suite serializes via a static mutex).
+pub fn install(plan: &FaultPlan) {
+    ENABLED.store(false, Ordering::SeqCst);
+    let mut s = plan.seed;
+    for k in 0..KINDS {
+        STATE.rates[k].store(plan.rates[k].to_bits(), Ordering::SeqCst);
+        // Per-kind phase in [0, 1): decides *which* calls fire, not how many.
+        let p = (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        STATE.phases[k].store(p.to_bits(), Ordering::SeqCst);
+        STATE.calls[k].store(0, Ordering::SeqCst);
+        STATE.injected[k].store(0, Ordering::SeqCst);
+    }
+    STATE
+        .delay_ns
+        .store(plan.delay.as_nanos() as u64, Ordering::SeqCst);
+    STATE
+        .stall_ns
+        .store(plan.stall.as_nanos() as u64, Ordering::SeqCst);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disable injection and zero every rate and counter.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    for k in 0..KINDS {
+        STATE.rates[k].store(0, Ordering::SeqCst);
+        STATE.phases[k].store(0, Ordering::SeqCst);
+        STATE.calls[k].store(0, Ordering::SeqCst);
+        STATE.injected[k].store(0, Ordering::SeqCst);
+    }
+}
+
+/// Is any plan installed? (The one relaxed load on the disabled path.)
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Consult an injection point: returns `true` iff this call should fault.
+/// The schedule is count-based (see module docs), so totals are exact and
+/// deterministic under any thread interleaving.
+#[inline]
+pub fn should_inject(kind: FaultKind) -> bool {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return false;
+    }
+    should_inject_slow(kind)
+}
+
+#[cold]
+fn should_inject_slow(kind: FaultKind) -> bool {
+    let k = kind as usize;
+    let rate = f64::from_bits(STATE.rates[k].load(Ordering::Relaxed));
+    if rate <= 0.0 {
+        return false;
+    }
+    let phase = f64::from_bits(STATE.phases[k].load(Ordering::Relaxed));
+    let n = STATE.calls[k].fetch_add(1, Ordering::Relaxed) as f64;
+    let fire = ((n + 1.0) * rate + phase).floor() > (n * rate + phase).floor();
+    if fire {
+        STATE.injected[k].fetch_add(1, Ordering::Relaxed);
+    }
+    fire
+}
+
+/// How many faults of this kind have been injected since [`install`].
+pub fn injected(kind: FaultKind) -> u64 {
+    STATE.injected[kind as usize].load(Ordering::Relaxed)
+}
+
+/// Total injected faults across all kinds.
+pub fn injected_total() -> u64 {
+    FaultKind::ALL.iter().map(|&k| injected(k)).sum()
+}
+
+/// The installed plan's delay duration (for [`FaultKind::Delay`]).
+pub fn delay_duration() -> Duration {
+    Duration::from_nanos(STATE.delay_ns.load(Ordering::Relaxed))
+}
+
+/// The installed plan's stall duration (for the stall kinds).
+pub fn stall_duration() -> Duration {
+    Duration::from_nanos(STATE.stall_ns.load(Ordering::Relaxed))
+}
+
+/// Stream adapter that consults the registry around every read/write.
+/// Used by tests and `net::loadgen` to abuse a socket from the client
+/// side: reads may stall ([`FaultKind::ReadStall`]); writes may stall
+/// ([`FaultKind::WriteStall`]), get a byte flipped ([`FaultKind::Corrupt`],
+/// so the peer sees a checksum failure), or fail outright with
+/// `ConnectionReset` ([`FaultKind::ConnDrop`]).
+pub struct FaultStream<S> {
+    inner: S,
+}
+
+impl<S> FaultStream<S> {
+    /// Wrap a stream. With injection disabled this is a zero-cost
+    /// pass-through (one relaxed load per call).
+    pub fn new(inner: S) -> Self {
+        FaultStream { inner }
+    }
+
+    /// The wrapped stream.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if should_inject(FaultKind::ReadStall) {
+            std::thread::sleep(stall_duration());
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if should_inject(FaultKind::ConnDrop) {
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "injected connection drop",
+            ));
+        }
+        if should_inject(FaultKind::WriteStall) {
+            std::thread::sleep(stall_duration());
+        }
+        if !buf.is_empty() && should_inject(FaultKind::Corrupt) {
+            let mut copy = buf.to_vec();
+            let last = copy.len() - 1;
+            copy[last] ^= 0xFF;
+            return self.inner.write(&copy);
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // The registry is process-wide state; serialize the tests that touch it.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_is_inert() {
+        let _g = LOCK.lock().unwrap();
+        clear();
+        assert!(!enabled());
+        for _ in 0..100 {
+            assert!(!should_inject(FaultKind::ConnDrop));
+        }
+        assert_eq!(injected_total(), 0);
+    }
+
+    #[test]
+    fn count_based_totals_are_exact() {
+        let _g = LOCK.lock().unwrap();
+        install(&FaultPlan::new(99).with(FaultKind::Overload, 0.25));
+        let mut fired = 0u64;
+        for _ in 0..1000 {
+            if should_inject(FaultKind::Overload) {
+                fired += 1;
+            }
+        }
+        // floor(1000*r + p) - floor(p) with r=0.25: exactly 250.
+        assert_eq!(fired, 250);
+        assert_eq!(injected(FaultKind::Overload), 250);
+        // Other kinds untouched.
+        assert_eq!(injected(FaultKind::ConnDrop), 0);
+        clear();
+    }
+
+    #[test]
+    fn seed_pins_placement() {
+        let _g = LOCK.lock().unwrap();
+        let run = |seed: u64| -> Vec<bool> {
+            install(&FaultPlan::new(seed).with(FaultKind::Corrupt, 0.3));
+            let v: Vec<bool> = (0..64).map(|_| should_inject(FaultKind::Corrupt)).collect();
+            clear();
+            v
+        };
+        assert_eq!(run(5), run(5));
+        // A different seed shifts the phase; totals stay within 1 of each
+        // other but placement (almost surely) moves.
+        let a = run(1);
+        let b = run(2);
+        let ca = a.iter().filter(|&&x| x).count() as i64;
+        let cb = b.iter().filter(|&&x| x).count() as i64;
+        assert!((ca - cb).abs() <= 1, "totals drifted: {ca} vs {cb}");
+    }
+
+    #[test]
+    fn rate_one_fires_always() {
+        let _g = LOCK.lock().unwrap();
+        install(&FaultPlan::new(0).with(FaultKind::Delay, 1.0));
+        for _ in 0..32 {
+            assert!(should_inject(FaultKind::Delay));
+        }
+        assert_eq!(injected(FaultKind::Delay), 32);
+        clear();
+    }
+
+    #[test]
+    fn fault_stream_passthrough_when_disabled() {
+        let _g = LOCK.lock().unwrap();
+        clear();
+        let mut s = FaultStream::new(std::io::Cursor::new(vec![1u8, 2, 3]));
+        let mut buf = [0u8; 3];
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(buf, [1, 2, 3]);
+    }
+
+    #[test]
+    fn fault_stream_corrupts_last_byte() {
+        let _g = LOCK.lock().unwrap();
+        install(&FaultPlan::new(7).with(FaultKind::Corrupt, 1.0));
+        let mut s = FaultStream::new(std::io::Cursor::new(Vec::new()));
+        s.write_all(&[0xAA, 0xBB]).unwrap();
+        clear();
+        let out = s.into_inner().into_inner();
+        assert_eq!(out, vec![0xAA, 0x44]); // 0xBB ^ 0xFF
+    }
+}

@@ -2,7 +2,9 @@
 //! only `xla` + `anyhow`, so PRNG, JSON, CLI parsing, logging and the
 //! property-test harness are all implemented here).
 
+pub mod backoff;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod mmap;

@@ -1,0 +1,637 @@
+//! Loopback cluster e2e for the serve fabric: real TCP on 127.0.0.1,
+//! backend replicas (`NetServer`) behind a `RouterServer`, driven by a
+//! plain `NetClient` — the client needs no fabric awareness.
+//!
+//! The load-bearing assertions:
+//!
+//! * routed responses are **bit-identical** to a direct
+//!   `LutEngine::forward_into` on the same input (the router relays
+//!   backend frames verbatim);
+//! * killing a replica mid-run loses nothing: every request is answered
+//!   via failover or shed with a typed error — never a hang or a panic;
+//! * under a pinned fault seed ([`lcquant::util::fault`]) the router's
+//!   failover/health-transition counters match the injected fault counts
+//!   **exactly** (the fault registry is count-based, so totals are
+//!   deterministic regardless of timing);
+//! * a slow-loris client (partial frame, no progress) is shed with a
+//!   typed `Timeout` error by both the backend server and the router;
+//! * `docs/FABRIC.md` names the stats keys and config knobs the code
+//!   ships.
+//!
+//! `ci.sh` and `make tier1` run this file under the default thread policy
+//! and again with `LCQUANT_THREADS=2`.
+//!
+//! The process-global fault registry is shared by every test in this
+//! binary, so tests that start routers serialize on [`lock`].
+
+use lcquant::linalg::Mat;
+use lcquant::net::loadgen;
+use lcquant::net::proto::{
+    self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, RequestFrame,
+};
+use lcquant::net::{
+    ClientError, ClusterConfig, FabricConfig, HealthState, LoadGenConfig, NetClient, NetConfig,
+    NetServer, RetryPolicy, RouterConfig, RouterServer, ShardConfig,
+};
+use lcquant::nn::{Activation, MlpSpec};
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{EngineScratch, LutEngine, PackedModel, Registry, ServerConfig};
+use lcquant::util::backoff::BackoffCfg;
+use lcquant::util::fault::{self, FaultKind, FaultPlan};
+use lcquant::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serialize router-starting tests: the fault registry is process-global,
+/// and the exact-count assertions need the only forward traffic to be
+/// their own.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn toy_packed(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec {
+        sizes: vec![12, 8, 4],
+        hidden_activation: Activation::Tanh,
+        dropout_keep: vec![],
+    };
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.5)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.1)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+fn toy_registry() -> (Arc<Registry>, PackedModel) {
+    let packed = toy_packed("toy-k4", &Scheme::AdaptiveCodebook { k: 4 }, 11);
+    let mut reg = Registry::new();
+    reg.insert(packed.clone()).unwrap();
+    reg.insert(toy_packed("toy-binary", &Scheme::BinaryScale, 12)).unwrap();
+    (Arc::new(reg), packed)
+}
+
+/// One backend replica on an ephemeral loopback port.
+fn start_backend(reg: Arc<Registry>) -> NetServer {
+    let serve = ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+        pipeline_depth: 2,
+    };
+    let net = NetConfig {
+        bind_addr: "127.0.0.1:0".to_string(),
+        max_connections: 8,
+        ..NetConfig::default()
+    };
+    NetServer::start(reg, serve, net).expect("bind backend")
+}
+
+/// A deterministic router fronting `replicas`: zero backoff, no active
+/// prober (health changes only through request traffic), generous
+/// deadline.
+fn router_over(replicas: &[String]) -> RouterServer {
+    RouterServer::start(RouterConfig {
+        net: NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 8,
+            ..NetConfig::default()
+        },
+        fabric: FabricConfig {
+            shards: vec![ShardConfig { models: Vec::new(), replicas: replicas.to_vec() }],
+            retry_budget: 4,
+            deadline: Duration::from_secs(30),
+            backoff: BackoffCfg::ZERO,
+            probe_every: Duration::ZERO,
+            connect_timeout: Duration::from_secs(1),
+            seed: 7,
+        },
+    })
+    .expect("bind router")
+}
+
+fn infer_bit_identical(client: &mut NetClient, engine: &LutEngine, rng: &mut Rng) {
+    let mut input = vec![0.0f32; engine.in_dim()];
+    rng.fill_normal(&mut input, 0.0, 1.0);
+    let got = client.infer("toy-k4", &input).expect("routed infer");
+    let mut x = Mat::zeros(1, engine.in_dim());
+    x.row_mut(0).copy_from_slice(&input);
+    let mut scratch = EngineScratch::new();
+    let want = engine.forward_into(&x, &mut scratch).unwrap();
+    assert_eq!(got.len(), want.cols);
+    for (g, w) in got.iter().zip(&want.data) {
+        assert_eq!(g.to_bits(), w.to_bits(), "routed logits must be bit-identical");
+    }
+}
+
+// ---- 1. plain serving through the router -------------------------------
+
+#[test]
+fn routed_roundtrip_bit_identical_with_merged_catalog() {
+    let _g = lock();
+    fault::clear();
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let b0 = start_backend(Arc::clone(&reg));
+    let b1 = start_backend(Arc::clone(&reg));
+    let router =
+        router_over(&[b0.local_addr().to_string(), b1.local_addr().to_string()]);
+
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+    // the router's hello is the merged backend catalog: both replicas
+    // serve the same registry, so the union is the plain catalog
+    let models = client.models().unwrap();
+    let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+    assert_eq!(names, vec!["toy-binary", "toy-k4"]);
+    for m in &models {
+        assert_eq!(m.in_dim, 12);
+        assert_eq!(m.out_dim, 4);
+    }
+
+    let mut rng = Rng::new(500);
+    for _ in 0..16 {
+        infer_bit_identical(&mut client, &engine, &mut rng);
+    }
+
+    // model-level errors are relayed typed (identical on every replica —
+    // no retry, no failover)
+    match client.infer("ghost", &[0.0; 12]) {
+        Err(ClientError::Remote { code: ErrorCode::UnknownModel, .. }) => {}
+        other => panic!("expected UnknownModel through the router, got {other:?}"),
+    }
+    match client.infer("toy-k4", &[0.0; 3]) {
+        Err(ClientError::Remote { code: ErrorCode::WrongDims, .. }) => {}
+        other => panic!("expected WrongDims through the router, got {other:?}"),
+    }
+    // the connection survives typed errors
+    infer_bit_identical(&mut client, &engine, &mut rng);
+
+    let snap = router.stats();
+    assert_eq!(snap.requests_ok, 17);
+    assert_eq!(snap.requests_failed, 2, "ghost + wrong-dims relay as failed");
+    assert_eq!(snap.requests_shed, 0);
+    assert_eq!(snap.retries, 0, "healthy fabric needs no retries");
+    assert_eq!(snap.failovers, 0);
+    assert_eq!(snap.health_transitions, 0);
+    // the startup probe pass touched both backends
+    assert_eq!(snap.probes, 2);
+    for b in router.fabric().backends() {
+        assert_eq!(b.state(), HealthState::Healthy);
+    }
+}
+
+// ---- 2. injected faults match router counters exactly ------------------
+
+#[test]
+fn injected_fault_counts_match_router_counters_exactly() {
+    let _g = lock();
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let b0 = start_backend(Arc::clone(&reg));
+    let b1 = start_backend(Arc::clone(&reg));
+    // start (and probe) the fabric *before* arming faults, so the
+    // injected counts cover exactly the request traffic below
+    let router =
+        router_over(&[b0.local_addr().to_string(), b1.local_addr().to_string()]);
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+
+    // forced Overloaded on every 4th forward attempt: count-based
+    // injection, so the total is exact however the attempts interleave.
+    // The rate stays below 1/2 so a retry (the very next forward call)
+    // never lands on another injection.
+    fault::install(&FaultPlan::new(42).with(FaultKind::Overload, 0.25));
+
+    let n = 60u64;
+    let mut rng = Rng::new(900);
+    for _ in 0..n {
+        // every request must still be answered, bit-identically: the
+        // retry budget (4) absorbs every injected shed
+        infer_bit_identical(&mut client, &engine, &mut rng);
+    }
+    let injected = fault::injected(FaultKind::Overload);
+    fault::clear();
+
+    // n requests with one retry per injection ⇒ n + injected forward
+    // calls, every 4th injected
+    assert!(injected >= n / 4, "rate 0.25 over ≥{n} calls, got {injected}");
+    let snap = router.stats();
+    assert_eq!(snap.requests_ok, n, "every request answered despite injection");
+    assert_eq!(snap.requests_shed, 0);
+    assert_eq!(snap.requests_failed, 0);
+    // each injection costs exactly one retry, and with two replicas the
+    // retry always switches backend
+    assert_eq!(snap.retries, injected, "retries must match injected faults exactly");
+    assert_eq!(snap.failovers, injected, "failovers must match injected faults exactly");
+    // the first injection suspects its victim while the rescuer is still
+    // healthy (1 transition); every later injection suspects the current
+    // healthy replica *and* heals the suspect one (2 transitions)
+    assert_eq!(
+        snap.health_transitions,
+        2 * injected - 1,
+        "health transitions must match injected faults exactly"
+    );
+    // nothing was ever marked Down: overload is a Suspect-grade signal
+    for b in router.fabric().backends() {
+        assert_ne!(b.state(), HealthState::Down);
+    }
+}
+
+// ---- 3. killing replicas mid-run ---------------------------------------
+
+#[test]
+fn killed_replica_fails_over_then_exhausted_fabric_sheds_typed() {
+    let _g = lock();
+    fault::clear();
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let b0 = start_backend(Arc::clone(&reg));
+    let b1 = start_backend(Arc::clone(&reg));
+    let b0_addr = b0.local_addr().to_string();
+    let router = router_over(&[b0_addr.clone(), b1.local_addr().to_string()]);
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+
+    let mut rng = Rng::new(77);
+    for _ in 0..10 {
+        infer_bit_identical(&mut client, &engine, &mut rng);
+    }
+
+    // kill replica 0 mid-run: the next request that lands on it fails
+    // over; every request still gets a bit-identical answer
+    let mut b0 = b0;
+    b0.stop();
+    for _ in 0..30 {
+        infer_bit_identical(&mut client, &engine, &mut rng);
+    }
+    let snap = router.stats();
+    assert_eq!(snap.requests_ok, 40, "no request may be lost to the kill");
+    assert_eq!(snap.requests_shed, 0);
+    assert_eq!(snap.requests_failed, 0);
+    assert!(snap.retries >= 1, "the kill must surface as at least one retry");
+    assert!(snap.failovers >= 1, "…and that retry must switch replica");
+    let dead = router
+        .fabric()
+        .backends()
+        .iter()
+        .find(|b| b.addr() == b0_addr)
+        .expect("killed backend in fabric");
+    assert_eq!(dead.state(), HealthState::Down, "dead replica must be marked Down");
+
+    // kill the last replica too: the router sheds typed, never hangs
+    let mut b1 = b1;
+    b1.stop();
+    match client.infer("toy-k4", &[0.0; 12]) {
+        Err(e) if e.is_overloaded() => {}
+        other => panic!("expected typed Overloaded with the fabric down, got {other:?}"),
+    }
+    assert_eq!(router.stats().requests_shed, 1);
+    for b in router.fabric().backends() {
+        assert_eq!(b.state(), HealthState::Down);
+    }
+}
+
+// ---- 4. the loadgen cluster scenario -----------------------------------
+
+#[test]
+fn cluster_scenario_kill_and_restart_reports_failover_counters() {
+    let _g = lock();
+    fault::clear();
+    let (reg, _) = toy_registry();
+    let b0 = start_backend(Arc::clone(&reg));
+    let b1 = start_backend(Arc::clone(&reg));
+    let b0_addr = b0.local_addr().to_string();
+    // a live prober this time, so the restarted replica rejoins
+    let mut router = RouterServer::start(RouterConfig {
+        net: NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 8,
+            ..NetConfig::default()
+        },
+        fabric: FabricConfig {
+            shards: vec![ShardConfig {
+                models: Vec::new(),
+                replicas: vec![b0_addr.clone(), b1.local_addr().to_string()],
+            }],
+            retry_budget: 4,
+            deadline: Duration::from_secs(30),
+            backoff: BackoffCfg::ZERO,
+            probe_every: Duration::from_millis(50),
+            connect_timeout: Duration::from_secs(1),
+            seed: 3,
+        },
+    })
+    .expect("bind router");
+
+    let victim = Arc::new(Mutex::new(Some(b0)));
+    let restarted_slot = Arc::clone(&victim);
+    let kill_slot = Arc::clone(&victim);
+    let restart_reg = Arc::clone(&reg);
+    let restart_addr = b0_addr.clone();
+
+    let mut load = LoadGenConfig::new(&router.local_addr().to_string());
+    load.connections = 4;
+    load.requests_per_conn = 25;
+    load.seed = 5;
+    let report = loadgen::run_cluster(
+        &ClusterConfig { load, kill_at: Some(20), restart_at: Some(60) },
+        move || {
+            if let Some(mut s) = kill_slot.lock().unwrap().take() {
+                s.stop();
+            }
+        },
+        move || {
+            let serve = ServerConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                pipeline_depth: 2,
+            };
+            let net = NetConfig {
+                bind_addr: restart_addr.clone(),
+                max_connections: 8,
+                ..NetConfig::default()
+            };
+            if let Ok(s) = NetServer::start(restart_reg, serve, net) {
+                *restarted_slot.lock().unwrap() = Some(s);
+            }
+        },
+    )
+    .expect("cluster run");
+
+    assert!(report.killed, "the kill hook must fire at 20 sent requests");
+    assert!(report.restarted, "the restart hook must fire at 60 sent requests");
+    assert_eq!(report.load.sent, 100);
+    assert_eq!(report.load.failed, 0, "every request must be answered or shed typed");
+    assert_eq!(report.load.ok + report.load.shed, 100);
+    // the wire-fetched counters are the router's own (retries/failovers
+    // only move with request traffic, which has ended; health transitions
+    // may still tick — the prober heals the restarted replica)
+    let snap = router.stats();
+    assert_eq!(report.router_retries, Some(snap.retries));
+    assert_eq!(report.router_failovers, Some(snap.failovers));
+    assert!(snap.health_transitions >= report.router_health_transitions.unwrap());
+    assert!(
+        snap.retries >= 1 && snap.failovers >= 1,
+        "a mid-run kill must surface as failover: {snap:?}"
+    );
+    router.stop();
+    if let Some(mut s) = victim.lock().unwrap().take() {
+        s.stop();
+    }
+}
+
+// ---- 5. slow-loris shedding (server and router) ------------------------
+
+/// Raw-socket handshake helper (from `tests/net.rs`): preamble exchange +
+/// hello consumed.
+fn raw_handshake(addr: &str) -> (TcpStream, FrameReader) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(&proto::encode_preamble()).unwrap();
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    stream.read_exact(&mut pre).unwrap();
+    assert_eq!(proto::decode_preamble(&pre).unwrap(), proto::VERSION);
+    let mut reader = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+    loop {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::Hello(_))) => return (stream, reader),
+            Ok(Some(f)) => panic!("expected hello, got {f:?}"),
+            Ok(None) => continue,
+            Err(e) => panic!("handshake failed: {e}"),
+        }
+    }
+}
+
+/// Read frames until the peer closes; returns the last error frame seen.
+fn read_error_then_eof(stream: &mut TcpStream, reader: &mut FrameReader) -> Option<ErrorFrame> {
+    let mut last = None;
+    loop {
+        match reader.poll_frame(stream) {
+            Ok(Some(Frame::Error(e))) => last = Some(e),
+            Ok(Some(f)) => panic!("unexpected frame {f:?}"),
+            Ok(None) => continue,
+            Err(_) => return last, // closed (or mid-frame EOF)
+        }
+    }
+}
+
+/// Dribble half a request frame at `addr`, then stall: the peer must shed
+/// with a typed `Timeout` error and close — not wait forever.
+fn assert_slow_loris_shed(addr: &str) {
+    let (mut stream, mut reader) = raw_handshake(addr);
+    let bytes = Frame::Request(RequestFrame {
+        id: 9,
+        model: "toy-k4".to_string(),
+        rows: 1,
+        cols: 12,
+        data: vec![0.0; 12],
+    })
+    .to_bytes();
+    stream.write_all(&bytes[..bytes.len() / 2]).unwrap();
+    // no further bytes: the frame-progress deadline (100ms here) fires
+    let err = read_error_then_eof(&mut stream, &mut reader)
+        .expect("peer must report before closing");
+    assert_eq!(err.code, ErrorCode::Timeout);
+}
+
+#[test]
+fn slow_loris_is_shed_with_typed_timeout_by_server_and_router() {
+    let _g = lock();
+    fault::clear();
+    let (reg, _) = toy_registry();
+    let serve = ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+        pipeline_depth: 2,
+    };
+    let server = NetServer::start(
+        Arc::clone(&reg),
+        serve,
+        NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 8,
+            frame_deadline: Duration::from_millis(100),
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    assert_slow_loris_shed(&server.local_addr().to_string());
+    assert_eq!(server.stats().frame_timeouts, 1);
+
+    // the router's client side applies the same per-frame deadline
+    let router = RouterServer::start(RouterConfig {
+        net: NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 8,
+            frame_deadline: Duration::from_millis(100),
+            ..NetConfig::default()
+        },
+        fabric: FabricConfig {
+            shards: vec![ShardConfig {
+                models: Vec::new(),
+                replicas: vec![server.local_addr().to_string()],
+            }],
+            probe_every: Duration::ZERO,
+            ..FabricConfig::default()
+        },
+    })
+    .unwrap();
+    assert_slow_loris_shed(&router.local_addr().to_string());
+    assert_eq!(router.stats().frame_timeouts, 1);
+
+    // an interrupted frame does not poison the listener: a fresh client
+    // still round-trips
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+    assert!(client.infer("toy-k4", &[0.0; 12]).is_ok());
+}
+
+// ---- 6. the client retry budget ----------------------------------------
+
+/// A scripted LCQ-RPC server: completes the handshake on every accepted
+/// connection, drops the first `flaky` connections right after hello, and
+/// answers one request on the next connection with a typed `Internal`
+/// error carrying `marker`.
+fn scripted_server(flaky: usize, marker: &'static str) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        for i in 0..=flaky {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut pre = [0u8; proto::PREAMBLE_LEN];
+            stream.read_exact(&mut pre).unwrap();
+            stream.write_all(&proto::encode_preamble()).unwrap();
+            stream
+                .write_all(&Frame::Hello(HelloFrame { models: vec![] }).to_bytes())
+                .unwrap();
+            if i < flaky {
+                continue; // drop right after the handshake
+            }
+            // answer exactly one request, typed
+            let mut reader = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+            loop {
+                match reader.poll_frame(&mut stream) {
+                    Ok(Some(Frame::Request(req))) => {
+                        proto::write_frame(
+                            &mut stream,
+                            &Frame::Error(ErrorFrame {
+                                id: req.id,
+                                code: ErrorCode::Internal,
+                                message: marker.to_string(),
+                            }),
+                        )
+                        .unwrap();
+                        break;
+                    }
+                    Ok(Some(f)) => panic!("unexpected frame {f:?}"),
+                    Ok(None) => continue,
+                    Err(e) => panic!("scripted server read: {e}"),
+                }
+            }
+        }
+    });
+    (addr, handle)
+}
+
+#[test]
+fn client_retry_budget_governs_transparent_reconnect() {
+    let _g = lock();
+    fault::clear();
+    // default policy (2 attempts): the dropped connection is retried
+    // transparently, and the second connection's typed answer surfaces
+    let (addr, handle) = scripted_server(1, "answered on the retry");
+    let mut client = NetClient::connect(&addr).unwrap();
+    match client.infer("toy-k4", &[0.0; 12]) {
+        Err(ClientError::Remote { code: ErrorCode::Internal, message }) => {
+            assert_eq!(message, "answered on the retry");
+        }
+        other => panic!("expected the retried connection's answer, got {other:?}"),
+    }
+    handle.join().unwrap();
+
+    // attempts = 1 disables the reconnect: the same drop surfaces as Io
+    let (addr, handle) = scripted_server(1, "never reached");
+    let mut client = NetClient::connect_with(
+        &addr,
+        RetryPolicy { attempts: 1, backoff: BackoffCfg::ZERO, seed: 0 },
+    )
+    .unwrap();
+    match client.infer("toy-k4", &[0.0; 12]) {
+        Err(ClientError::Io(_)) => {}
+        other => panic!("expected a surfaced Io error with attempts=1, got {other:?}"),
+    }
+    // the next call dials fresh and reaches the scripted answer, so the
+    // server thread can finish
+    match client.infer("toy-k4", &[0.0; 12]) {
+        Err(ClientError::Remote { code: ErrorCode::Internal, .. }) => {}
+        other => panic!("expected the fresh connection's answer, got {other:?}"),
+    }
+    handle.join().unwrap();
+
+    // a deeper budget absorbs repeated drops in one call
+    let (addr, handle) = scripted_server(3, "answered on the third retry");
+    let mut client = NetClient::connect_with(
+        &addr,
+        RetryPolicy { attempts: 4, backoff: BackoffCfg::ZERO, seed: 0 },
+    )
+    .unwrap();
+    match client.infer("toy-k4", &[0.0; 12]) {
+        Err(ClientError::Remote { code: ErrorCode::Internal, message }) => {
+            assert_eq!(message, "answered on the third retry");
+        }
+        other => panic!("expected the third retry's answer, got {other:?}"),
+    }
+    handle.join().unwrap();
+}
+
+// ---- 7. the docs name what the code ships ------------------------------
+
+fn doc(path: &str) -> String {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+#[test]
+fn fabric_doc_names_states_faults_stats_and_config_keys() {
+    let text = doc("docs/FABRIC.md");
+    for s in [HealthState::Healthy, HealthState::Suspect, HealthState::Down] {
+        assert!(text.contains(s.name()), "FABRIC.md missing health state '{}'", s.name());
+    }
+    for k in FaultKind::ALL {
+        assert!(text.contains(k.name()), "FABRIC.md missing fault kind '{}'", k.name());
+    }
+    // the router snapshot keys wire clients (and run_cluster) depend on
+    for key in [
+        "router",
+        "backends",
+        "requests_ok",
+        "requests_failed",
+        "requests_shed",
+        "retries",
+        "failovers",
+        "health_transitions",
+        "probes",
+        "frame_timeouts",
+    ] {
+        assert!(text.contains(key), "FABRIC.md missing snapshot key '{key}'");
+    }
+    // the `serve.fabric` config knobs
+    for key in [
+        "shards",
+        "models",
+        "replicas",
+        "retry_budget",
+        "deadline_ms",
+        "backoff_base_ms",
+        "backoff_cap_ms",
+        "probe_every_ms",
+        "connect_timeout_ms",
+    ] {
+        assert!(text.contains(key), "FABRIC.md missing config key '{key}'");
+    }
+}
