@@ -4,9 +4,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test test-threaded smoke-net smoke-bitslice smoke-fabric bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs bench-bitslice bench-fabric
+.PHONY: tier1 build test test-threaded smoke-net smoke-bitslice smoke-fabric smoke-c10k bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs bench-bitslice bench-fabric bench-c10k
 
-tier1: build test test-threaded smoke-net smoke-bitslice smoke-fabric bench-build doc clippy fmt-check
+tier1: build test test-threaded smoke-net smoke-bitslice smoke-fabric smoke-c10k bench-build doc clippy fmt-check
 
 build:
 	$(CARGO) build --release
@@ -44,6 +44,15 @@ smoke-bitslice:
 smoke-fabric:
 	$(CARGO) test -q --test fabric
 	LCQUANT_THREADS=2 $(CARGO) test -q --test fabric
+
+# C10K event-plane smoke: pipelined round trips matched by id, the
+# bounded write queue shedding typed per request, exact fault-tally
+# reconciliation through the router, open-loop Poisson / idle-army /
+# slow-loris scenarios, and the RLIMIT_NOFILE-gated 1000-connection
+# army, under both thread policies.
+smoke-c10k:
+	$(CARGO) test -q --test c10k
+	LCQUANT_THREADS=2 $(CARGO) test -q --test c10k
 
 # Benches are plain binaries (harness = false); --no-run keeps them
 # compiling in tier-1 without paying their runtime.
@@ -106,6 +115,12 @@ bench-bitslice:
 # (kill 1 of 2 replicas mid-run) → BENCH_fabric.json.
 bench-fabric:
 	$(CARGO) bench --bench bench_fabric
+
+# Connection-count scaling curve of the epoll plane (64/512/2048
+# connections × pipeline 1/8, camped idle herd + active drivers)
+# → BENCH_net.json.
+bench-c10k:
+	$(CARGO) bench --bench bench_c10k
 
 ci: tier1
 

@@ -1,0 +1,185 @@
+//! C10K connection-plane benchmark (LeNet300 shapes, loopback TCP):
+//! the connection-count scaling curve of the event-driven plane.
+//!
+//! For each point, a herd of raw idle connections camps on the server
+//! (handshaken, then silent — they cost the plane a slab slot and a
+//! `FrameReader`, not a thread), while 8 active connections drive
+//! pipelined traffic through `loadgen::run`. The sweep crosses total
+//! connection count (64 / 512 / 2048) with pipeline window (1 / 8):
+//! a flat req/s and p99 across the herd axis is the epoll plane doing
+//! its job; the pipeline axis shows what in-flight ids buy on loopback
+//! RTTs.
+//!
+//! Points whose file-descriptor bill exceeds the process's
+//! `RLIMIT_NOFILE` soft limit are skipped with a note (both socket ends
+//! live in this process, so a point costs ~2x its connection count).
+//!
+//! Results land in `BENCH_net.json` (`make bench-c10k`).
+
+use lcquant::net::proto::{self, Frame, FrameReader};
+use lcquant::net::{loadgen, LoadGenConfig, NetConfig, NetServer};
+use lcquant::nn::MlpSpec;
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{PackedModel, Registry, ServerConfig};
+use lcquant::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Quantize random LeNet300-shaped weights (no training: the bench cares
+/// about connection-plane cost, not accuracy).
+fn packed_lenet300(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec::lenet300();
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.1)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.05)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+/// Handshake one raw connection (client preamble out, server preamble +
+/// hello in) and return it to be camped.
+fn camp_one(addr: &str) -> std::io::Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(&proto::encode_preamble())?;
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    stream.read_exact(&mut pre)?;
+    proto::decode_preamble(&pre)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    let mut reader = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+    loop {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::Hello(_))) => return Ok(stream),
+            Ok(Some(f)) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("expected hello, got {f:?}"),
+                ))
+            }
+            Ok(None) => continue,
+            Err(e) => {
+                return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+            }
+        }
+    }
+}
+
+/// Soft `RLIMIT_NOFILE` from `/proc/self/limits` (`None` off-Linux).
+fn nofile_soft_limit() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/limits").ok()?;
+    for line in text.lines() {
+        if line.starts_with("Max open files") {
+            let soft = line.split_whitespace().nth(3)?;
+            if soft == "unlimited" {
+                return Some(u64::MAX);
+            }
+            return soft.parse().ok();
+        }
+    }
+    None
+}
+
+fn main() {
+    println!("== bench_c10k: connection-count scaling of the epoll plane (LeNet300) ==");
+    let mut registry = Registry::new();
+    registry.insert(packed_lenet300("binary", &Scheme::BinaryScale, 10)).unwrap();
+    let registry = Arc::new(registry);
+    let active = 8usize;
+    let per_conn = 128usize;
+    let limit = nofile_soft_limit();
+
+    let mut rows: Vec<(usize, usize, f64, f32, f32, usize)> = Vec::new();
+    for conns in [64usize, 512, 2048] {
+        let need = (2 * conns + 256) as u64;
+        if let Some(l) = limit {
+            if l < need {
+                println!("conns={conns}: skipped (RLIMIT_NOFILE soft limit {l} < {need} needed)");
+                continue;
+            }
+        }
+        let mut server = NetServer::start(
+            Arc::clone(&registry),
+            ServerConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(2),
+                pipeline_depth: 2,
+            },
+            NetConfig {
+                bind_addr: "127.0.0.1:0".to_string(),
+                max_connections: conns + 64,
+                net_threads: 2,
+                max_inflight: 32,
+                ..NetConfig::default()
+            },
+        )
+        .expect("bind server");
+        let addr = server.local_addr().to_string();
+
+        // camp the herd: total connection count = herd + active drivers
+        let herd_n = conns.saturating_sub(active);
+        let mut herd = Vec::with_capacity(herd_n);
+        for _ in 0..herd_n {
+            match camp_one(&addr) {
+                Ok(s) => herd.push(s),
+                Err(e) => {
+                    eprintln!("conns={conns}: herd handshake failed: {e}");
+                    break;
+                }
+            }
+        }
+
+        for window in [1usize, 8] {
+            let mut lg = LoadGenConfig::new(&addr);
+            lg.connections = active;
+            lg.requests_per_conn = per_conn;
+            lg.pipeline = window;
+            lg.seed = 7;
+            let r = loadgen::run(&lg).expect("loadgen");
+            println!(
+                "conns={conns:>4} (herd {:>4}) pipeline={window}: {:>7.0} req/s  \
+                 p50 {:.2}ms  p99 {:.2}ms  ({} ok, {} shed, {} failed)",
+                herd.len(),
+                r.req_per_s(),
+                r.p50_ms,
+                r.p99_ms,
+                r.ok,
+                r.shed,
+                r.failed,
+            );
+            rows.push((conns, window, r.req_per_s(), r.p50_ms, r.p99_ms, r.shed));
+        }
+        drop(herd);
+        server.stop();
+    }
+
+    // ---- BENCH_net.json -------------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"net\",\n");
+    json.push_str(&format!(
+        "  \"threads\": {},\n  \"active_connections\": {active},\n  \
+         \"requests_per_conn\": {per_conn},\n  \"c10k_sweep\": [\n",
+        lcquant::linalg::num_threads(),
+    ));
+    for (i, (conns, window, req_s, p50, p99, shed)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"connections\": {conns}, \"pipeline\": {window}, \
+             \"req_per_s\": {req_s:.0}, \"p50_ms\": {p50:.3}, \"p99_ms\": {p99:.3}, \
+             \"shed\": {shed}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_net.json", &json) {
+        Ok(()) => println!("wrote BENCH_net.json"),
+        Err(e) => eprintln!("could not write BENCH_net.json: {e}"),
+    }
+}

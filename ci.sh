@@ -32,6 +32,13 @@ LCQUANT_THREADS=2 cargo test -q --test bitslice
 # shedding), again under both thread policies
 cargo test -q --test fabric
 LCQUANT_THREADS=2 cargo test -q --test fabric
+# C10K event-plane smoke: pipelined ids matched out of order, bounded
+# write-queue sheds typed per request, fault tallies reconciled exactly
+# with router retry counters, open-loop Poisson / idle-army / slow-loris
+# scenarios (1000-connection army gated on RLIMIT_NOFILE), again under
+# both thread policies
+cargo test -q --test c10k
+LCQUANT_THREADS=2 cargo test -q --test c10k
 cargo bench --no-run
 # Documentation gate: rustdoc must build clean (missing docs on the gated
 # modules, broken intra-doc links anywhere) — warnings are errors.

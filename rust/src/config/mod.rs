@@ -139,8 +139,14 @@ impl Default for ObsSettings {
 pub struct NetSettings {
     /// Listen address (`host:port`; port 0 = ephemeral).
     pub bind_addr: String,
-    /// Concurrent connections served (one handler thread each).
+    /// Concurrent connections served across the net threads (plus a
+    /// same-sized accept backlog); beyond that, handshakes are shed.
     pub max_connections: usize,
+    /// Event-loop (net) threads multiplexing the connections.
+    pub net_threads: usize,
+    /// Per-connection pipeline bound: requests in flight plus replies
+    /// queued for write before the connection is shed.
+    pub max_inflight: usize,
     /// In-flight request budget, in rows; excess is shed with an
     /// `Overloaded` error frame.
     pub inflight_budget: usize,
@@ -151,6 +157,8 @@ impl Default for NetSettings {
         NetSettings {
             bind_addr: "127.0.0.1:7070".into(),
             max_connections: 64,
+            net_threads: 2,
+            max_inflight: 8,
             inflight_budget: 256,
         }
     }
@@ -161,9 +169,10 @@ impl NetSettings {
         crate::net::NetConfig {
             bind_addr: self.bind_addr.clone(),
             max_connections: self.max_connections,
+            net_threads: self.net_threads,
+            max_inflight: self.max_inflight,
             inflight_budget: self.inflight_budget,
-            max_frame_bytes: crate::net::proto::DEFAULT_MAX_FRAME,
-            trace_slots: ObsSettings::default().trace_slots,
+            ..crate::net::NetConfig::default()
         }
     }
 
@@ -396,6 +405,8 @@ impl RunConfig {
                 bind_addr: get_s(n, "bind_addr", &d.net_serve.bind_addr).to_string(),
                 max_connections: get_u(n, "max_connections", d.net_serve.max_connections)
                     .max(1),
+                net_threads: get_u(n, "net_threads", d.net_serve.net_threads).max(1),
+                max_inflight: get_u(n, "max_inflight", d.net_serve.max_inflight).max(1),
                 inflight_budget: get_u(n, "inflight_budget", d.net_serve.inflight_budget)
                     .max(1),
             },
@@ -552,6 +563,7 @@ mod tests {
             r#"{"net": {"sizes": [4, 2]},
                 "serve": {"max_batch": 8,
                           "net": {"bind_addr": "0.0.0.0:9000", "max_connections": 16,
+                                  "net_threads": 3, "max_inflight": 4,
                                   "inflight_budget": 32}}}"#,
         )
         .unwrap();
@@ -559,19 +571,26 @@ mod tests {
         assert_eq!(c.serve.max_batch, 8);
         assert_eq!(c.net_serve.bind_addr, "0.0.0.0:9000");
         assert_eq!(c.net_serve.max_connections, 16);
+        assert_eq!(c.net_serve.net_threads, 3);
+        assert_eq!(c.net_serve.max_inflight, 4);
         assert_eq!(c.net_serve.inflight_budget, 32);
         let nc = c.net_serve.to_net_config();
         assert_eq!(nc.bind_addr, "0.0.0.0:9000");
         assert_eq!(nc.max_connections, 16);
+        assert_eq!(nc.net_threads, 3);
+        assert_eq!(nc.max_inflight, 4);
         assert_eq!(nc.inflight_budget, 32);
         // omitted -> defaults; zero knobs clamp to 1
         let d = RunConfig::from_json("{}").unwrap();
         assert_eq!(d.net_serve, NetSettings::default());
         let z = RunConfig::from_json(
-            r#"{"serve": {"net": {"max_connections": 0, "inflight_budget": 0}}}"#,
+            r#"{"serve": {"net": {"max_connections": 0, "net_threads": 0,
+                                  "max_inflight": 0, "inflight_budget": 0}}}"#,
         )
         .unwrap();
         assert_eq!(z.net_serve.max_connections, 1);
+        assert_eq!(z.net_serve.net_threads, 1);
+        assert_eq!(z.net_serve.max_inflight, 1);
         assert_eq!(z.net_serve.inflight_budget, 1);
     }
 

@@ -1,11 +1,16 @@
 //! Blocking LCQ-RPC client: connect, handshake, `infer`/`infer_batch`,
-//! transparent reconnect-on-drop.
+//! pipelined `infer_pipelined`, transparent reconnect-on-drop.
 //!
 //! One [`NetClient`] owns one TCP connection (plus the model catalog the
-//! server sent in its hello frame) and issues one request at a time —
-//! thread-per-connection on both ends, matching the crate's no-async
-//! idiom. Fan-out belongs to callers: the load generator
-//! ([`crate::net::loadgen`]) opens one client per scoped thread.
+//! server sent in its hello frame). The classic calls issue one request
+//! at a time; [`NetClient::infer_pipelined`] keeps up to a window of
+//! request ids **in flight on the same connection** and matches replies
+//! by id, so a single connection can saturate the server's pipeline
+//! bound without fan-out threads (the wire format needed no change —
+//! ids were u64 from v1; the ordering contract is documented in
+//! `docs/wire-protocol.md`). Fan-out across connections still belongs to
+//! callers: the load generator ([`crate::net::loadgen`]) opens one
+//! client per scoped thread.
 //!
 //! A dropped connection (server restart, idle timeout, network blip) is
 //! retried with a fresh connection before the error surfaces, governed by
@@ -20,6 +25,7 @@ use crate::net::proto::{
 };
 use crate::obs::{self, CounterId};
 use crate::util::backoff::{Backoff, BackoffCfg};
+use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
@@ -193,6 +199,77 @@ impl NetClient {
             }
         }
         Err(last_io.expect("loop exits early unless an Io error occurred"))
+    }
+
+    /// Infer many single-row requests **pipelined** on this connection:
+    /// up to `window` request ids are kept in flight at once, and replies
+    /// are matched by id (the server may interleave them with other
+    /// traffic, but per connection it answers in submission order — see
+    /// `docs/wire-protocol.md`). Returns one result per input row, in
+    /// input order: logits, or the typed error the server answered for
+    /// that id.
+    ///
+    /// Transport failures drop the connection and transparently re-issue
+    /// the **unanswered** ids on a fresh one, within the retry budget
+    /// (inference is idempotent; each re-attempt bumps
+    /// `net_client_retries`). A connection-level error frame (id 0 —
+    /// shed, shutdown, frame timeout) resolves every in-flight id with
+    /// that error; ids not yet written are retried on reconnect.
+    pub fn infer_pipelined(
+        &mut self,
+        model: &str,
+        rows: &[&[f32]],
+        window: usize,
+    ) -> Vec<Result<Vec<f32>, ClientError>> {
+        let mut results: Vec<Option<Result<Vec<f32>, ClientError>>> =
+            (0..rows.len()).map(|_| None).collect();
+        if rows.is_empty() {
+            return Vec::new();
+        }
+        self.backoff.reset();
+        let attempts = self.retry.attempts.max(1);
+        // (fatal, message): fatal = protocol violation, not retryable
+        let mut last_fail: Option<(bool, String)> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.before_retry();
+            }
+            if let Err(e) = self.ensure_conn() {
+                last_fail = Some((matches!(e, ClientError::Protocol(_)), e.to_string()));
+                continue;
+            }
+            let mut conn = self.conn.take().expect("connected");
+            match drive_pipeline(
+                &mut conn,
+                &mut self.next_id,
+                model,
+                rows,
+                window.max(1),
+                &mut results,
+            ) {
+                Ok(()) => {
+                    self.conn = Some(conn);
+                    last_fail = None;
+                    break;
+                }
+                // conn stays dropped: the next attempt reconnects
+                Err(PipelineFailure::Transport(m)) => last_fail = Some((false, m)),
+                Err(PipelineFailure::Protocol(m)) => {
+                    last_fail = Some((true, m));
+                    break; // a protocol violation is not transparently retryable
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|slot| {
+                slot.unwrap_or_else(|| match &last_fail {
+                    Some((true, m)) => Err(ClientError::Protocol(m.clone())),
+                    Some((false, m)) => Err(ClientError::Io(m.clone())),
+                    None => Err(ClientError::Io("pipeline incomplete".to_string())),
+                })
+            })
+            .collect()
     }
 
     /// Fetch the server's observability snapshot (v2 `Stats` frame) as a
@@ -369,4 +446,108 @@ impl NetClient {
             _ => Err(ClientError::Protocol("expected hello frame".to_string())),
         }
     }
+}
+
+/// Why one pipelined drive over a connection ended early.
+enum PipelineFailure {
+    /// Transport-level: reconnect and re-issue the unanswered ids.
+    Transport(String),
+    /// The stream violated the protocol: surface, do not retry.
+    Protocol(String),
+}
+
+/// Drive unanswered rows through one connection with a bounded in-flight
+/// window. Fills `results` slots as replies land (matched by id, possibly
+/// ahead of older traffic the server already shed); returns `Ok` when
+/// every slot is resolved.
+fn drive_pipeline(
+    conn: &mut Conn,
+    next_id: &mut u64,
+    model: &str,
+    rows: &[&[f32]],
+    window: usize,
+    results: &mut [Option<Result<Vec<f32>, ClientError>>],
+) -> Result<(), PipelineFailure> {
+    let mut queue: std::collections::VecDeque<usize> =
+        (0..rows.len()).filter(|&i| results[i].is_none()).collect();
+    let mut inflight: HashMap<u64, usize> = HashMap::new();
+    while !queue.is_empty() || !inflight.is_empty() {
+        // fill the window before blocking on a reply
+        while inflight.len() < window {
+            let Some(i) = queue.pop_front() else { break };
+            let id = *next_id;
+            *next_id += 1;
+            let row = rows[i];
+            let frame = Frame::Request(RequestFrame {
+                id,
+                model: model.to_string(),
+                rows: 1,
+                cols: row.len() as u32,
+                data: row.to_vec(),
+            });
+            proto::write_frame(&mut conn.stream, &frame)
+                .map_err(|e| PipelineFailure::Transport(format!("send: {e}")))?;
+            inflight.insert(id, i);
+        }
+        match conn.reader.poll_frame(&mut conn.stream) {
+            Ok(None) => continue, // only if a read timeout is set
+            Ok(Some(Frame::Response(resp))) => {
+                let Some(i) = inflight.remove(&resp.id) else {
+                    return Err(PipelineFailure::Protocol(format!(
+                        "response id {} matches no in-flight request",
+                        resp.id
+                    )));
+                };
+                results[i] = Some(if resp.rows == 1 {
+                    Ok(resp.data)
+                } else {
+                    Err(ClientError::Protocol(format!(
+                        "response carries {} rows for a 1-row request",
+                        resp.rows
+                    )))
+                });
+            }
+            Ok(Some(Frame::Error(e))) => {
+                if e.id == 0 {
+                    // connection-level error (shed, shutdown, frame
+                    // timeout): it resolves everything in flight; the
+                    // server closes after it, so unsent ids go back to
+                    // the caller's retry loop
+                    for (_, i) in inflight.drain() {
+                        results[i] = Some(Err(ClientError::Remote {
+                            code: e.code,
+                            message: e.message.clone(),
+                        }));
+                    }
+                    if queue.is_empty() {
+                        return Ok(());
+                    }
+                    return Err(PipelineFailure::Transport(format!(
+                        "connection-level error [{}]: {}",
+                        e.code, e.message
+                    )));
+                }
+                let Some(i) = inflight.remove(&e.id) else {
+                    return Err(PipelineFailure::Protocol(format!(
+                        "error frame for foreign request {}",
+                        e.id
+                    )));
+                };
+                results[i] = Some(Err(ClientError::Remote { code: e.code, message: e.message }));
+            }
+            Ok(Some(_)) => {
+                return Err(PipelineFailure::Protocol(
+                    "unexpected frame while awaiting pipelined responses".to_string(),
+                ))
+            }
+            Err(WireError::Closed) => {
+                return Err(PipelineFailure::Transport(
+                    "connection closed by server".to_string(),
+                ))
+            }
+            Err(WireError::Io(e)) => return Err(PipelineFailure::Transport(e.to_string())),
+            Err(e) => return Err(PipelineFailure::Protocol(e.to_string())),
+        }
+    }
+    Ok(())
 }

@@ -24,16 +24,41 @@
 //! thread that crosses the threshold — then augments the report with the
 //! router's failover counters fetched over the wire (`Stats` frame), so
 //! a failover blip shows up as numbers, not anecdotes.
+//!
+//! PR 9 adds the **open-loop scenarios** that pin the event-driven
+//! connection plane's C10K behavior:
+//!
+//! * [`run_poisson`] — bursty open-loop arrivals: each connection draws
+//!   exponential inter-arrival gaps from its seeded generator and fires
+//!   a pipelined window per arrival, so offered load is set by the
+//!   clock, not by the server's response rate.
+//! * [`run_idle_army`] — thousands of mostly-idle connections held open
+//!   by **one** holder thread (raw handshaken sockets, no thread per
+//!   connection) while a few active drivers push pipelined traffic
+//!   through the same plane; proves the fixed net-thread pool serves
+//!   live traffic with an army camped on its poller.
+//! * [`run_slow_loris`] — partial request frames trickled a byte at a
+//!   time, then stalled; the plane's frame deadline (anchored at the
+//!   *first* partial byte, so slow progress never resets it) must
+//!   answer each with a typed `Timeout` error, never a hang.
+//!
+//! All three are seed-deterministic in their outcome *counts* (not
+//! their timings), which is what the scenario tests pin.
 
 use crate::linalg::pool;
-use crate::net::client::NetClient;
+use crate::net::client::{ClientError, NetClient};
+use crate::net::proto::{self, ErrorCode, Frame, FrameReader, RequestFrame, WireError};
 use crate::obs::Histogram;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
 
 /// What to drive at the server.
 #[derive(Clone, Debug)]
@@ -52,10 +77,16 @@ pub struct LoadGenConfig {
     pub batch: usize,
     /// Seed for the per-connection input generators.
     pub seed: u64,
+    /// Request ids kept in flight per connection
+    /// ([`NetClient::infer_pipelined`] window). `1` = classic
+    /// request/response lockstep; larger values only apply to single-row
+    /// traffic (`batch == 1`) and drive the server's pipelined path.
+    pub pipeline: usize,
 }
 
 impl LoadGenConfig {
-    /// Defaults: 4 connections × 64 single-row requests, first model.
+    /// Defaults: 4 connections × 64 single-row requests, first model,
+    /// no pipelining.
     pub fn new(addr: &str) -> LoadGenConfig {
         LoadGenConfig {
             addr: addr.to_string(),
@@ -64,6 +95,7 @@ impl LoadGenConfig {
             model: None,
             batch: 1,
             seed: 1,
+            pipeline: 1,
         }
     }
 }
@@ -179,64 +211,64 @@ fn drive(
     on_kill: &HookCell,
     on_restart: &HookCell,
 ) -> Result<LoadReport> {
-    // resolve the target model (and its input dimension) from the
-    // server's own catalog, via a probe connection
-    let mut probe =
-        NetClient::connect(&cfg.addr).map_err(|e| anyhow!("loadgen connect {}: {e}", cfg.addr))?;
-    let catalog = probe.models().map_err(|e| anyhow!("loadgen handshake: {e}"))?;
-    let entry = match &cfg.model {
-        Some(name) => catalog
-            .iter()
-            .find(|m| &m.name == name)
-            .ok_or_else(|| {
-                let names: Vec<&str> = catalog.iter().map(|m| m.name.as_str()).collect();
-                anyhow!("model '{name}' not served (catalog: {names:?})")
-            })?
-            .clone(),
-        None => catalog
-            .first()
-            .ok_or_else(|| anyhow!("server serves no models"))?
-            .clone(),
-    };
-    drop(probe);
+    let (model, in_dim) = resolve_model(&cfg.addr, cfg.model.as_deref())?;
 
     let connections = cfg.connections.max(1);
     let per_conn = cfg.requests_per_conn.max(1);
     let batch = cfg.batch.max(1);
-    let in_dim = entry.in_dim as usize;
+    // pipelining drives single-row traffic; batch requests stay lockstep
+    let window = if batch == 1 { cfg.pipeline.max(1) } else { 1 };
     let tallies = RunTallies::default();
     let t = Timer::start();
     // blocking drivers → scoped threads, never pool task slots
     pool::run_scoped(connections, |c| {
         let mut rng = Rng::new(cfg.seed ^ 0xC0DE ^ ((c as u64) * 0x9E37_79B9));
-        let mut input = vec![0.0f32; in_dim * batch];
+        let mut input = vec![0.0f32; in_dim * batch.max(window)];
         match NetClient::connect(&cfg.addr) {
             Ok(mut client) => {
-                for _ in 0..per_conn {
-                    rng.fill_normal(&mut input, 0.0, 1.0);
+                let mut issued = 0usize;
+                while issued < per_conn {
+                    let w = window.min(per_conn - issued);
+                    issued += w;
+                    rng.fill_normal(&mut input[..in_dim * batch.max(w)], 0.0, 1.0);
                     let rt = Timer::start();
-                    let result = if batch == 1 {
-                        client.infer(&entry.name, &input)
+                    // one result per request: a window of pipelined
+                    // single-row requests, or one (possibly batched)
+                    // lockstep round trip
+                    let results: Vec<Result<(), ClientError>> = if w > 1 {
+                        let rows: Vec<&[f32]> = input[..in_dim * w].chunks(in_dim).collect();
+                        client
+                            .infer_pipelined(&model, &rows, w)
+                            .into_iter()
+                            .map(|r| r.map(|_| ()))
+                            .collect()
+                    } else if batch == 1 {
+                        vec![client.infer(&model, &input[..in_dim]).map(|_| ())]
                     } else {
-                        client.infer_batch(&entry.name, batch, &input)
+                        vec![client.infer_batch(&model, batch, &input).map(|_| ())]
                     };
-                    let n = tallies.sent.fetch_add(1, Ordering::Relaxed) + 1;
-                    if Some(n) == kill_at {
-                        on_kill.fire();
-                    }
-                    if Some(n) == restart_at {
-                        on_restart.fire();
-                    }
-                    match result {
-                        Ok(_) => {
-                            tallies.ok.fetch_add(1, Ordering::Relaxed);
-                            tallies.latency.record_ns((rt.elapsed_s() * 1e9) as u64);
+                    let elapsed_ns = (rt.elapsed_s() * 1e9) as u64;
+                    for result in results {
+                        let n = tallies.sent.fetch_add(1, Ordering::Relaxed) + 1;
+                        if Some(n) == kill_at {
+                            on_kill.fire();
                         }
-                        Err(e) if e.is_overloaded() => {
-                            tallies.shed.fetch_add(1, Ordering::Relaxed);
+                        if Some(n) == restart_at {
+                            on_restart.fire();
                         }
-                        Err(_) => {
-                            tallies.failed.fetch_add(1, Ordering::Relaxed);
+                        match result {
+                            Ok(()) => {
+                                tallies.ok.fetch_add(1, Ordering::Relaxed);
+                                // pipelined slots share the window's
+                                // round-trip wall clock
+                                tallies.latency.record_ns(elapsed_ns);
+                            }
+                            Err(e) if e.is_overloaded() => {
+                                tallies.shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                tallies.failed.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
                     }
                 }
@@ -364,4 +396,511 @@ fn fetch_fabric_stats(addr: &str) -> Option<(u64, u64, u64)> {
         r.get("failovers")?.as_f64()? as u64,
         r.get("health_transitions")?.as_f64()? as u64,
     ))
+}
+
+/// Resolve the target model name and input dimension from the server's
+/// own catalog, via a probe connection (closed before the run starts).
+fn resolve_model(addr: &str, want: Option<&str>) -> Result<(String, usize)> {
+    let mut probe = NetClient::connect(addr).map_err(|e| anyhow!("loadgen connect {addr}: {e}"))?;
+    let catalog = probe.models().map_err(|e| anyhow!("loadgen handshake: {e}"))?;
+    let entry = match want {
+        Some(name) => catalog.iter().find(|m| m.name == name).ok_or_else(|| {
+            let names: Vec<&str> = catalog.iter().map(|m| m.name.as_str()).collect();
+            anyhow!("model '{name}' not served (catalog: {names:?})")
+        })?,
+        None => catalog.first().ok_or_else(|| anyhow!("server serves no models"))?,
+    };
+    Ok((entry.name.clone(), entry.in_dim as usize))
+}
+
+// ---------------------------------------------------------------------------
+// open-loop scenarios (PR 9)
+// ---------------------------------------------------------------------------
+
+/// Open-loop Poisson-burst arrivals: each connection draws exponential
+/// inter-arrival gaps at `rate_hz` and fires a window of
+/// `load.pipeline` pipelined single-row requests per arrival.
+#[derive(Clone, Debug)]
+pub struct PoissonConfig {
+    /// Target, connection count, model, seed and pipeline window.
+    /// `requests_per_conn` and `batch` are ignored (arrivals are bursts
+    /// of single-row requests).
+    pub load: LoadGenConfig,
+    /// Mean arrival rate per connection, bursts per second. Gaps are
+    /// clamped to 250 ms so a pathological draw cannot stall a run.
+    pub rate_hz: f64,
+    /// Bursts each connection fires.
+    pub bursts: usize,
+}
+
+impl PoissonConfig {
+    /// Defaults: 4 connections × 16 bursts of 4 pipelined requests at a
+    /// mean 200 bursts/s per connection.
+    pub fn new(addr: &str) -> PoissonConfig {
+        let mut load = LoadGenConfig::new(addr);
+        load.pipeline = 4;
+        PoissonConfig { load, rate_hz: 200.0, bursts: 16 }
+    }
+}
+
+/// Run the Poisson-burst scenario. The report's `sent` is exactly
+/// `connections × bursts × pipeline` whenever every connection comes up
+/// (arrival *times* vary; offered request *counts* do not).
+pub fn run_poisson(cfg: &PoissonConfig) -> Result<LoadReport> {
+    let (model, in_dim) = resolve_model(&cfg.load.addr, cfg.load.model.as_deref())?;
+    let connections = cfg.load.connections.max(1);
+    let bursts = cfg.bursts.max(1);
+    let window = cfg.load.pipeline.max(1);
+    let rate = if cfg.rate_hz > 0.0 { cfg.rate_hz } else { 200.0 };
+    let tallies = RunTallies::default();
+    let t = Timer::start();
+    pool::run_scoped(connections, |c| {
+        let mut rng = Rng::new(cfg.load.seed ^ 0xC0DE ^ ((c as u64) * 0x9E37_79B9));
+        let mut input = vec![0.0f32; in_dim * window];
+        match NetClient::connect(&cfg.load.addr) {
+            Ok(mut client) => {
+                for _ in 0..bursts {
+                    // exponential inter-arrival gap: the arrival clock is
+                    // independent of the server's response rate
+                    let gap_s = (-(1.0 - rng.uniform()).ln() / rate).min(0.25);
+                    thread::sleep(Duration::from_secs_f64(gap_s));
+                    rng.fill_normal(&mut input, 0.0, 1.0);
+                    let rows: Vec<&[f32]> = input.chunks(in_dim).collect();
+                    let rt = Timer::start();
+                    let results = client.infer_pipelined(&model, &rows, window);
+                    let elapsed_ns = (rt.elapsed_s() * 1e9) as u64;
+                    for result in results {
+                        tallies.sent.fetch_add(1, Ordering::Relaxed);
+                        match result {
+                            Ok(_) => {
+                                tallies.ok.fetch_add(1, Ordering::Relaxed);
+                                tallies.latency.record_ns(elapsed_ns);
+                            }
+                            Err(e) if e.is_overloaded() => {
+                                tallies.shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                tallies.failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
+            Err(e) if e.is_overloaded() => {
+                tallies.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                tallies.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    });
+    let elapsed_s = t.elapsed_s();
+    let lat = tallies.latency.snapshot();
+    Ok(LoadReport {
+        connections,
+        sent: tallies.sent.load(Ordering::Relaxed) as usize,
+        ok: tallies.ok.load(Ordering::Relaxed) as usize,
+        shed: tallies.shed.load(Ordering::Relaxed) as usize,
+        failed: tallies.failed.load(Ordering::Relaxed) as usize,
+        elapsed_s,
+        p50_ms: lat.percentile_ms(50.0),
+        p90_ms: lat.percentile_ms(90.0),
+        p99_ms: lat.percentile_ms(99.0),
+        max_ms: lat.max_ms(),
+    })
+}
+
+/// The idle-army scenario: a herd of mostly-idle connections camped on
+/// the server's pollers while a few active drivers push traffic.
+#[derive(Clone, Debug)]
+pub struct IdleArmyConfig {
+    /// Target address, `host:port`.
+    pub addr: String,
+    /// Idle herd size. One holder thread raw-handshakes each socket
+    /// sequentially and keeps **all of them** open until the active
+    /// drivers finish — no thread-per-connection, so thousands are
+    /// cheap.
+    pub connections: usize,
+    /// Active traffic connections (one scoped thread + [`NetClient`]
+    /// each). They wait for the whole herd to be camped before issuing
+    /// their first request. `0` = pure camp: the herd is held only
+    /// until the last handshake lands, then released.
+    pub active: usize,
+    /// Requests each active connection issues.
+    pub requests_per_active: usize,
+    /// Model for the active traffic; `None` picks the first catalog
+    /// entry.
+    pub model: Option<String>,
+    /// Pipeline window for the active traffic.
+    pub pipeline: usize,
+    /// Seed for the active drivers' input generators.
+    pub seed: u64,
+    /// Per-socket cap on waiting for the server's hello. A herd socket
+    /// that exceeds it counts as `idle_failed`, never blocks the run.
+    pub handshake_timeout: Duration,
+}
+
+impl IdleArmyConfig {
+    /// Defaults: 64-strong herd, 4 active drivers × 16 requests
+    /// pipelined 4-deep.
+    pub fn new(addr: &str) -> IdleArmyConfig {
+        IdleArmyConfig {
+            addr: addr.to_string(),
+            connections: 64,
+            active: 4,
+            requests_per_active: 16,
+            model: None,
+            pipeline: 4,
+            seed: 1,
+            handshake_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Outcome of [`run_idle_army`]: herd bookkeeping plus the active
+/// drivers' load tallies.
+#[derive(Clone, Debug)]
+pub struct IdleArmyReport {
+    /// Herd size asked for.
+    pub idle_connections: usize,
+    /// Herd sockets that handshook and stayed camped to the end.
+    pub idle_held: usize,
+    /// Herd sockets the server refused by design (`Overloaded`
+    /// handshake at the door).
+    pub idle_refused: usize,
+    /// Herd sockets that failed for any other reason (connect error,
+    /// handshake timeout, unexpected frame).
+    pub idle_failed: usize,
+    /// Active requests issued.
+    pub sent: usize,
+    /// Active requests answered with logits.
+    pub ok: usize,
+    /// Active requests shed with a typed `Overloaded`.
+    pub shed: usize,
+    /// Active requests failed.
+    pub failed: usize,
+    /// Wall-clock of the whole run, seconds.
+    pub elapsed_s: f64,
+}
+
+impl IdleArmyReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "idle army: {}/{} camped ({} refused, {} failed); active traffic: \
+             {} sent, {} ok, {} shed, {} failed in {:.2}s",
+            self.idle_held,
+            self.idle_connections,
+            self.idle_refused,
+            self.idle_failed,
+            self.sent,
+            self.ok,
+            self.shed,
+            self.failed,
+            self.elapsed_s,
+        )
+    }
+}
+
+/// One raw-socket handshake outcome for the idle herd.
+enum RawHandshake {
+    Open(TcpStream),
+    Refused,
+    Failed,
+}
+
+/// Handshake a bare socket: send the client preamble, read the server's
+/// preamble and its first frame. `Hello` = open, a typed `Overloaded`
+/// error = refused at the door, anything else (including `timeout`
+/// elapsing) = failed.
+fn raw_handshake(addr: &str, timeout: Duration) -> RawHandshake {
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => return RawHandshake::Failed,
+    };
+    let timeout = timeout.max(Duration::from_millis(10));
+    if stream.set_read_timeout(Some(timeout)).is_err() {
+        return RawHandshake::Failed;
+    }
+    if stream.write_all(&proto::encode_preamble()).is_err() {
+        return RawHandshake::Failed;
+    }
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    if stream.read_exact(&mut pre).is_err() || proto::decode_preamble(&pre).is_err() {
+        return RawHandshake::Failed;
+    }
+    let mut reader = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+    let deadline = Instant::now() + timeout;
+    loop {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::Hello(_))) => return RawHandshake::Open(stream),
+            Ok(Some(Frame::Error(e))) if e.code == ErrorCode::Overloaded => {
+                return RawHandshake::Refused
+            }
+            Ok(Some(_)) => return RawHandshake::Failed,
+            Ok(None) => {
+                if Instant::now() >= deadline {
+                    return RawHandshake::Failed;
+                }
+            }
+            Err(_) => return RawHandshake::Failed,
+        }
+    }
+}
+
+/// Run the idle-army scenario. Sequencing: the holder thread camps the
+/// whole herd first; the active drivers wait for it, run their traffic,
+/// and the last one to finish releases the herd. Every count in the
+/// report is deterministic for a fixed config against an unloaded
+/// server with capacity for the herd.
+pub fn run_idle_army(cfg: &IdleArmyConfig) -> Result<IdleArmyReport> {
+    let active = cfg.active;
+    let resolved = if active > 0 {
+        Some(resolve_model(&cfg.addr, cfg.model.as_deref())?)
+    } else {
+        None
+    };
+    let herd = cfg.connections;
+    let window = cfg.pipeline.max(1);
+    let per_active = cfg.requests_per_active.max(1);
+
+    let herd_up = AtomicBool::new(false);
+    let release = AtomicBool::new(active == 0);
+    let actives_done = AtomicUsize::new(0);
+    let idle_held = AtomicUsize::new(0);
+    let idle_refused = AtomicUsize::new(0);
+    let idle_failed = AtomicUsize::new(0);
+    let tallies = RunTallies::default();
+    let t = Timer::start();
+
+    // thread 0 is the herd holder; threads 1..=active drive traffic
+    pool::run_scoped(active + 1, |i| {
+        if i == 0 {
+            let mut held: Vec<TcpStream> = Vec::with_capacity(herd);
+            for _ in 0..herd {
+                match raw_handshake(&cfg.addr, cfg.handshake_timeout) {
+                    RawHandshake::Open(s) => held.push(s),
+                    RawHandshake::Refused => {
+                        idle_refused.fetch_add(1, Ordering::Relaxed);
+                    }
+                    RawHandshake::Failed => {
+                        idle_failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            idle_held.store(held.len(), Ordering::Relaxed);
+            herd_up.store(true, Ordering::Release);
+            while !release.load(Ordering::Acquire) {
+                thread::sleep(Duration::from_millis(1));
+            }
+            drop(held); // the army decamps only after the traffic is done
+            return;
+        }
+
+        // active driver: wait until the army is camped, then drive
+        while !herd_up.load(Ordering::Acquire) {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let (model, in_dim) = resolved.as_ref().expect("active > 0 resolved a model");
+        let in_dim = *in_dim;
+        let mut rng = Rng::new(cfg.seed ^ 0xC0DE ^ (((i - 1) as u64) * 0x9E37_79B9));
+        let mut input = vec![0.0f32; in_dim * window];
+        match NetClient::connect(&cfg.addr) {
+            Ok(mut client) => {
+                let mut issued = 0usize;
+                while issued < per_active {
+                    let w = window.min(per_active - issued);
+                    issued += w;
+                    rng.fill_normal(&mut input[..in_dim * w], 0.0, 1.0);
+                    let rows: Vec<&[f32]> = input[..in_dim * w].chunks(in_dim).collect();
+                    for result in client.infer_pipelined(model, &rows, w) {
+                        tallies.sent.fetch_add(1, Ordering::Relaxed);
+                        match result {
+                            Ok(_) => {
+                                tallies.ok.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) if e.is_overloaded() => {
+                                tallies.shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                tallies.failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
+            Err(e) if e.is_overloaded() => {
+                tallies.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                tallies.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // last driver out releases the herd — every exit path lands here
+        if actives_done.fetch_add(1, Ordering::AcqRel) + 1 == active {
+            release.store(true, Ordering::Release);
+        }
+    });
+
+    Ok(IdleArmyReport {
+        idle_connections: herd,
+        idle_held: idle_held.load(Ordering::Relaxed),
+        idle_refused: idle_refused.load(Ordering::Relaxed),
+        idle_failed: idle_failed.load(Ordering::Relaxed),
+        sent: tallies.sent.load(Ordering::Relaxed) as usize,
+        ok: tallies.ok.load(Ordering::Relaxed) as usize,
+        shed: tallies.shed.load(Ordering::Relaxed) as usize,
+        failed: tallies.failed.load(Ordering::Relaxed) as usize,
+        elapsed_s: t.elapsed_s(),
+    })
+}
+
+/// The slow-loris scenario: trickle a valid request frame a byte at a
+/// time, then stall mid-frame and wait for the server's verdict.
+#[derive(Clone, Debug)]
+pub struct SlowLorisConfig {
+    /// Target address, `host:port`.
+    pub addr: String,
+    /// Loris connections (one scoped thread each).
+    pub connections: usize,
+    /// Frame-prefix bytes trickled after the handshake. Clamped so the
+    /// frame is **never** completed; the run always ends with a stalled
+    /// partial frame on the server.
+    pub trickle_bytes: usize,
+    /// Pause between trickled bytes.
+    pub gap: Duration,
+    /// How long to wait for the server's `Timeout` verdict after the
+    /// stall before declaring the connection hung.
+    pub response_timeout: Duration,
+}
+
+impl SlowLorisConfig {
+    /// Defaults: 4 lorises trickling 6 bytes, 10 ms apart, 10 s verdict
+    /// window.
+    pub fn new(addr: &str) -> SlowLorisConfig {
+        SlowLorisConfig {
+            addr: addr.to_string(),
+            connections: 4,
+            trickle_bytes: 6,
+            gap: Duration::from_millis(10),
+            response_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Outcome of [`run_slow_loris`]: how every loris connection ended.
+/// Against a healthy plane, `timed_out == connections` exactly — a
+/// typed verdict for every attack, never a hang.
+#[derive(Clone, Debug)]
+pub struct SlowLorisReport {
+    /// Loris connections driven.
+    pub connections: usize,
+    /// Connections answered with a typed `Timeout` error frame.
+    pub timed_out: usize,
+    /// Connections the server closed without any error frame.
+    pub closed_unanswered: usize,
+    /// Connections that failed some other way — including still hanging
+    /// when `response_timeout` elapsed, the one outcome a correct plane
+    /// never produces.
+    pub failed: usize,
+    /// Wall-clock of the whole run, seconds.
+    pub elapsed_s: f64,
+}
+
+impl SlowLorisReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "slow-loris: {} connections → {} timed out (typed), {} closed unanswered, \
+             {} failed/hung in {:.2}s",
+            self.connections, self.timed_out, self.closed_unanswered, self.failed, self.elapsed_s,
+        )
+    }
+}
+
+/// Run the slow-loris scenario against a live server or router.
+pub fn run_slow_loris(cfg: &SlowLorisConfig) -> Result<SlowLorisReport> {
+    let connections = cfg.connections.max(1);
+    // a plausible frame to trickle a prefix of: the bytes are valid
+    // LCQ-RPC right up to the stall, so this is indistinguishable from a
+    // slow legitimate client — which is exactly the attack
+    let frame = Frame::Request(RequestFrame {
+        id: 1,
+        model: "slow-loris".to_string(),
+        rows: 1,
+        cols: 16,
+        data: vec![0.0; 16],
+    })
+    .to_bytes();
+    let trickle = cfg.trickle_bytes.clamp(1, frame.len() - 1);
+    let timed_out = AtomicUsize::new(0);
+    let closed_unanswered = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
+    let t = Timer::start();
+    pool::run_scoped(connections, |_| {
+        match loris_once(cfg, &frame[..trickle]) {
+            LorisOutcome::TimedOut => timed_out.fetch_add(1, Ordering::Relaxed),
+            LorisOutcome::ClosedUnanswered => closed_unanswered.fetch_add(1, Ordering::Relaxed),
+            LorisOutcome::Failed => failed.fetch_add(1, Ordering::Relaxed),
+        };
+    });
+    Ok(SlowLorisReport {
+        connections,
+        timed_out: timed_out.load(Ordering::Relaxed),
+        closed_unanswered: closed_unanswered.load(Ordering::Relaxed),
+        failed: failed.load(Ordering::Relaxed),
+        elapsed_s: t.elapsed_s(),
+    })
+}
+
+enum LorisOutcome {
+    TimedOut,
+    ClosedUnanswered,
+    Failed,
+}
+
+/// One loris connection: handshake, trickle `prefix` a byte at a time,
+/// stall, then read until the server's verdict (skipping the hello).
+fn loris_once(cfg: &SlowLorisConfig, prefix: &[u8]) -> LorisOutcome {
+    let mut stream = match TcpStream::connect(&cfg.addr) {
+        Ok(s) => s,
+        Err(_) => return LorisOutcome::Failed,
+    };
+    if stream.set_read_timeout(Some(Duration::from_millis(50))).is_err() {
+        return LorisOutcome::Failed;
+    }
+    if stream.write_all(&proto::encode_preamble()).is_err() {
+        return LorisOutcome::Failed;
+    }
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    if stream.read_exact(&mut pre).is_err() || proto::decode_preamble(&pre).is_err() {
+        return LorisOutcome::Failed;
+    }
+    // the trickle: one byte per gap, never the whole frame
+    for b in prefix {
+        if stream.write_all(std::slice::from_ref(b)).is_err() {
+            // the server already gave up on us — go read its verdict
+            break;
+        }
+        thread::sleep(cfg.gap);
+    }
+    // the stall: wait for the typed verdict
+    let mut reader = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+    let deadline = Instant::now() + cfg.response_timeout;
+    loop {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::Hello(_))) => {} // handshake hello, not the verdict
+            Ok(Some(Frame::Error(e))) if e.code == ErrorCode::Timeout => {
+                return LorisOutcome::TimedOut
+            }
+            Ok(Some(_)) => return LorisOutcome::Failed,
+            Ok(None) => {
+                if Instant::now() >= deadline {
+                    return LorisOutcome::Failed; // the one forbidden outcome: a hang
+                }
+            }
+            Err(WireError::Closed) => return LorisOutcome::ClosedUnanswered,
+            Err(_) => return LorisOutcome::Failed,
+        }
+    }
 }

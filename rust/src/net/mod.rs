@@ -13,19 +13,25 @@
 //!   corruption discipline as the `.lcq` file format). Requests carry a
 //!   model id + row-major f32 input; responses carry logits or a
 //!   structured [`ErrorCode`]. Byte-level spec: `docs/wire-protocol.md`.
-//! * [`server`] — [`NetServer`]: a `std::net::TcpListener` acceptor, a
-//!   fixed pool of blocking connection handlers on scoped threads (never
-//!   the compute pool), a bounded in-flight row budget that shed-replies
-//!   instead of queueing unboundedly, and decoded request rows submitted
-//!   to the micro-batcher **in place** — over the wire, a request's
-//!   floats are copied exactly once (socket → frame buffer), then the
-//!   engine gathers from that buffer.
+//! * [`server`] — [`NetServer`]: an event-driven connection plane (PR 9)
+//!   — one non-blocking acceptor plus a small fixed pool of net threads,
+//!   each multiplexing thousands of sockets through an epoll readiness
+//!   loop ([`crate::util::epoll`]) with per-connection partial-frame
+//!   state and a bounded write queue — plus a bounded in-flight row
+//!   budget that shed-replies instead of queueing unboundedly, and
+//!   decoded request rows submitted to the micro-batcher off the net
+//!   threads (the event loop never blocks on compute).
 //! * [`client`] — [`NetClient`]: blocking connect/infer/infer_batch with
-//!   the server's model catalog from the hello frame and transparent
-//!   reconnect-on-drop.
+//!   the server's model catalog from the hello frame, transparent
+//!   reconnect-on-drop, and pipelined batch mode: up to `max_inflight`
+//!   request ids in flight per connection, matched by id on return
+//!   (ordering contract: `docs/wire-protocol.md`).
 //! * [`loadgen`] — multi-connection load generator reporting p50/p90/p99
 //!   latency, throughput, and shed counts (`bench_serve` uses it for the
-//!   loopback TCP sweep → `BENCH_net.json`).
+//!   loopback TCP sweep → `BENCH_net.json`), plus the PR 9 open-loop
+//!   scenarios: Poisson bursts, a mostly-idle connection army, and
+//!   slow-loris partial frames ([`loadgen::run_poisson`],
+//!   [`loadgen::run_idle_army`], [`loadgen::run_slow_loris`]).
 //!
 //! LCQ-RPC v2 adds a `Stats` frame pair: any live connection can request a
 //! JSON observability snapshot — per-server wire counters, batch-plane
@@ -74,13 +80,17 @@
 pub mod client;
 pub mod fabric;
 pub mod loadgen;
+pub(crate) mod plane;
 pub mod proto;
 pub mod router;
 pub mod server;
 
 pub use client::{ClientError, NetClient, RetryPolicy};
 pub use fabric::{Fabric, FabricConfig, HealthState, ShardConfig};
-pub use loadgen::{ClusterConfig, ClusterReport, LoadGenConfig, LoadReport};
+pub use loadgen::{
+    ClusterConfig, ClusterReport, IdleArmyConfig, IdleArmyReport, LoadGenConfig, LoadReport,
+    PoissonConfig, SlowLorisConfig, SlowLorisReport,
+};
 pub use proto::{ErrorCode, Frame, WireError};
 pub use router::{RouterConfig, RouterServer, RouterStatsSnapshot};
 pub use server::{NetConfig, NetServer, NetStatsSnapshot};

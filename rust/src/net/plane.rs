@@ -1,0 +1,869 @@
+//! The event-driven connection plane shared by [`crate::net::server`] and
+//! [`crate::net::router`]: one acceptor plus a small fixed pool of net
+//! threads, each running an epoll readiness loop
+//! ([`crate::util::epoll::Poller`]) over thousands of non-blocking
+//! sockets.
+//!
+//! The old plane was thread-per-connection: `max_connections` blocking
+//! handler threads, one request in flight per socket. This module
+//! multiplexes instead (diagram in `docs/ARCHITECTURE.md`):
+//!
+//! * the **acceptor** owns the (non-blocking) listener and a bounded
+//!   unserviced backlog; live connections are handed round-robin to the
+//!   net threads, and beyond `max_connections + backlog` the door shed
+//!   (`Overloaded` handshake) is explicit, exactly as before;
+//! * each **net thread** owns a [`Poller`], a slab of connection states
+//!   (generation-tagged tokens, so a stale completion can never write
+//!   into a recycled slot), and a completion inbox. Per connection it
+//!   keeps the existing [`FrameReader`] partial-frame state — framing
+//!   survives arbitrary split points — plus a **bounded write queue**:
+//!   replies are queued and flushed on writability, and a request that
+//!   arrives while `pending + queued ≥ max_inflight` is shed typed
+//!   (`Overloaded`, counted in `net_writeq_sheds`) instead of buffering
+//!   without bound;
+//! * requests leave the net thread immediately: the [`Dispatch`] owner
+//!   either answers inline (validation errors, sheds) or routes the work
+//!   (batch executors, forward workers) and later posts a [`Completion`]
+//!   through a [`CompletionSink`], which wakes the owning poller. Net
+//!   threads never block on compute — that is what lets a handful of
+//!   them carry a C10K connection count.
+//!
+//! Deadlines are scanned on the poll tick: the handshake window, the
+//! per-frame progress deadline (slow-loris, typed `Timeout` shed), and a
+//! write-stall window for peers that stop reading their replies.
+
+use crate::net::proto::{
+    self, ErrorCode, ErrorFrame, Frame, FrameReader, RequestFrame, StatsResponseFrame, WireError,
+};
+use crate::obs::{self, CounterId, HistId, Stage, Trace};
+use crate::util::epoll::{raw_fd, Event, Interest, Poller, RawFd, Waker};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Poll-loop tick: upper bound on how long a net thread sleeps before
+/// re-checking shutdown and connection deadlines.
+const POLL_TICK: Duration = Duration::from_millis(10);
+
+/// Acceptor sleep between empty non-blocking `accept` sweeps.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// A connection whose write queue makes no byte progress for this long
+/// (peer stopped reading) is dropped — queued replies must drain or die.
+const WRITE_STALL: Duration = Duration::from_secs(5);
+
+/// Deadline for the pre-hello phase: a connection that has not delivered
+/// its preamble within this window is dropped, so silent connects cannot
+/// occupy slots forever.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Resolved knobs the plane runs with (derived from `NetConfig`).
+#[derive(Clone)]
+pub(crate) struct PlaneConfig {
+    /// Thread-name prefix (`lcq-net`, `lcq-router`).
+    pub name: &'static str,
+    /// Connection slots across all net threads; beyond this plus a
+    /// same-sized backlog, connections are shed at the door.
+    pub max_connections: usize,
+    /// Net (event-loop) threads.
+    pub net_threads: usize,
+    /// Per-connection pipeline bound: in-flight requests plus queued
+    /// reply frames. The write-queue backpressure limit.
+    pub max_inflight: usize,
+    /// Largest accepted frame payload, bytes.
+    pub max_frame: usize,
+    /// Per-frame progress deadline (slow-loris shed).
+    pub frame_deadline: Duration,
+}
+
+/// Identifies one live connection: slab slot plus generation. Stale keys
+/// (connection closed and slot recycled) are detected and dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct ConnKey {
+    pub slot: u32,
+    pub gen: u32,
+}
+
+/// Per-request context handed to [`Dispatch::on_request`].
+#[derive(Clone, Copy)]
+pub(crate) struct RequestCtx {
+    /// The connection the reply must go back to.
+    pub key: ConnKey,
+    /// Handshake span of this connection, ns (shared by its requests).
+    pub accept_ns: u64,
+    /// Frame decode CPU time for this request, ns.
+    pub decode_ns: u64,
+}
+
+/// Stage spans a dispatcher measured off the net thread; the plane adds
+/// the write span and publishes the trace via [`Dispatch::record_trace`].
+pub(crate) struct TraceDraft {
+    pub id: u64,
+    pub accept_ns: u64,
+    pub decode_ns: u64,
+    pub queue_ns: u64,
+    pub assembly_ns: u64,
+    pub compute_ns: u64,
+    pub frame_ns: u64,
+}
+
+/// A finished asynchronous request: encoded reply bytes routed back to
+/// the owning net thread.
+pub(crate) struct Completion {
+    pub key: ConnKey,
+    pub bytes: Vec<u8>,
+    /// Present on successful responses when tracing is enabled.
+    pub trace: Option<TraceDraft>,
+}
+
+/// Cloneable route for [`Completion`]s into one net thread: an unbounded
+/// channel send plus a poller wake. Safe to call from any thread (serve
+/// executors, forward workers); if the net thread is gone the completion
+/// is silently dropped — the connection it addressed is gone too.
+#[derive(Clone)]
+pub(crate) struct CompletionSink {
+    tx: Sender<Completion>,
+    waker: Waker,
+}
+
+impl CompletionSink {
+    /// Post one completion and wake the owning poller.
+    pub fn send(&self, completion: Completion) {
+        if self.tx.send(completion).is_ok() {
+            self.waker.wake();
+        }
+    }
+}
+
+/// What [`Dispatch::on_request`] decided.
+pub(crate) enum RequestAction {
+    /// Answer now with these encoded frame bytes (validation errors,
+    /// sheds); does not count against the connection's pipeline bound.
+    Reply(Vec<u8>),
+    /// The request was admitted and will answer through the sink; the
+    /// plane counts it in-flight until its [`Completion`] arrives.
+    Async,
+}
+
+/// Counter-relevant plane events, mapped by the dispatcher onto its own
+/// per-instance stats (and their global mirrors).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PlaneEvent {
+    /// A connection was accepted by the listener.
+    Connection,
+    /// A connection was shed at the door (slots + backlog full).
+    ConnectionShed,
+    /// A connection was shed by the per-frame progress deadline.
+    FrameTimeout,
+    /// A stats snapshot frame was served.
+    StatsServed,
+    /// A request was shed by the per-connection pipeline bound.
+    WriteqShed,
+}
+
+/// The protocol owner plugged into the plane: the net server (micro-batch
+/// engine behind it) or the router (serve fabric behind it).
+pub(crate) trait Dispatch: Send + Sync + 'static {
+    /// Server preamble + hello frame for a freshly handshaken connection.
+    fn hello_bytes(&self) -> Vec<u8>;
+    /// Handle one decoded request: reply inline or admit it and answer
+    /// later through `sink`.
+    fn on_request(&self, rctx: RequestCtx, req: RequestFrame, sink: &CompletionSink)
+        -> RequestAction;
+    /// The stats snapshot document served for `StatsRequest` frames.
+    fn snapshot_json(&self) -> String;
+    /// Map a plane event onto the dispatcher's counters.
+    fn event(&self, ev: PlaneEvent);
+    /// Detail line for door sheds (`Overloaded` handshake).
+    fn shed_message(&self) -> String;
+    /// Detail line for the `ShuttingDown` notice open connections get at
+    /// plane stop.
+    fn shutdown_message(&self) -> String {
+        "server shutting down".to_string()
+    }
+    /// Publish one finished request trace (servers keep a ring; the
+    /// router has per-request fabric histograms instead).
+    fn record_trace(&self, _trace: &Trace) {}
+}
+
+/// Shared liveness state between the acceptor, the net threads and
+/// [`Plane::stop`].
+struct Shared {
+    shutdown: AtomicBool,
+    /// Connections currently owned by net threads (dispatched and not
+    /// yet closed); the acceptor's admission gate.
+    active: AtomicUsize,
+}
+
+/// The running plane: acceptor + net threads. Stop (idempotent) sets the
+/// flag, wakes every poller, and joins.
+pub(crate) struct Plane {
+    shared: Arc<Shared>,
+    wakers: Vec<Waker>,
+    acceptor: Option<JoinHandle<()>>,
+    io_threads: Vec<JoinHandle<()>>,
+}
+
+impl Plane {
+    /// Spawn the net threads and the acceptor over a bound listener.
+    /// Fails cleanly (no threads leaked) if readiness polling is
+    /// unavailable on this platform.
+    pub fn start(
+        listener: TcpListener,
+        dispatch: Arc<dyn Dispatch>,
+        cfg: PlaneConfig,
+    ) -> Result<Plane> {
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let n_threads = cfg.net_threads.max(1);
+        let shared = Arc::new(Shared {
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let mut pollers = Vec::with_capacity(n_threads);
+        for _ in 0..n_threads {
+            pollers.push(Poller::new().context("creating readiness poller")?);
+        }
+        let wakers: Vec<Waker> = pollers.iter().map(|p| p.waker()).collect();
+        let inboxes: Vec<Arc<Mutex<VecDeque<TcpStream>>>> =
+            (0..n_threads).map(|_| Arc::new(Mutex::new(VecDeque::new()))).collect();
+        let mut io_threads = Vec::with_capacity(n_threads);
+        for (i, poller) in pollers.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Completion>();
+            let sink = CompletionSink { tx, waker: poller.waker() };
+            let mut io = IoThread {
+                poller,
+                dispatch: Arc::clone(&dispatch),
+                shared: Arc::clone(&shared),
+                cfg: cfg.clone(),
+                sink,
+                conns: Vec::new(),
+                gens: Vec::new(),
+                free: Vec::new(),
+            };
+            let inbox = Arc::clone(&inboxes[i]);
+            let handle = std::thread::Builder::new()
+                .name(format!("{}-io{i}", cfg.name))
+                .spawn(move || io.run(inbox, rx))
+                .context("spawning net thread")?;
+            io_threads.push(handle);
+        }
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            let dispatch = Arc::clone(&dispatch);
+            let wakers = wakers.clone();
+            let max_conns = cfg.max_connections.max(1);
+            std::thread::Builder::new()
+                .name(format!("{}-accept", cfg.name))
+                .spawn(move || acceptor_loop(listener, shared, dispatch, inboxes, wakers, max_conns))
+                .context("spawning acceptor")?
+        };
+        Ok(Plane { shared, wakers, acceptor: Some(acceptor), io_threads })
+    }
+
+    /// Stop accepting, wake and join every net thread (open connections
+    /// get a best-effort `ShuttingDown` notice and are closed).
+    pub fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for w in &self.wakers {
+            w.wake();
+        }
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.io_threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Plane {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Accept loop: non-blocking accept sweeps, an admission gate on the
+/// global active count, a bounded unserviced backlog, and explicit door
+/// sheds beyond it.
+fn acceptor_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    dispatch: Arc<dyn Dispatch>,
+    inboxes: Vec<Arc<Mutex<VecDeque<TcpStream>>>>,
+    wakers: Vec<Waker>,
+    max_conns: usize,
+) {
+    // Parked connections waiting for a slot: accepted by the kernel but
+    // not yet handshaken (no preamble written). Bounded by max_conns,
+    // like the old sync-channel backlog.
+    let mut parked: VecDeque<TcpStream> = VecDeque::new();
+    let mut rotor = 0usize;
+    let mut hand_off = |stream: TcpStream, rotor: &mut usize| {
+        shared.active.fetch_add(1, Ordering::Relaxed);
+        let t = *rotor % inboxes.len();
+        *rotor = rotor.wrapping_add(1);
+        inboxes[t].lock().unwrap().push_back(stream);
+        wakers[t].wake();
+    };
+    loop {
+        if shared.shutdown.load(Ordering::Relaxed) {
+            return; // parked connections are dropped unanswered
+        }
+        // promote parked connections into freed slots first — FIFO
+        while shared.active.load(Ordering::Relaxed) < max_conns {
+            match parked.pop_front() {
+                Some(s) => hand_off(s, &mut rotor),
+                None => break,
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                dispatch.event(PlaneEvent::Connection);
+                let _ = stream.set_nodelay(true);
+                if shared.active.load(Ordering::Relaxed) < max_conns {
+                    hand_off(stream, &mut rotor);
+                } else if parked.len() < max_conns {
+                    parked.push_back(stream);
+                } else {
+                    // every slot and the backlog full: shed at the door
+                    // with an explicit overload handshake
+                    dispatch.event(PlaneEvent::ConnectionShed);
+                    shed_connection(stream, dispatch.shed_message());
+                }
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => {
+                // accept failures (EMFILE under fd pressure) can repeat
+                // instantly: back off instead of busy-spinning a core
+                // exactly when the process is already overloaded
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Best-effort overload handshake for a connection the plane cannot take:
+/// preamble + `Overloaded` error frame, then close.
+fn shed_connection(mut stream: TcpStream, message: String) {
+    let _ = stream.set_write_timeout(Some(WRITE_STALL));
+    let mut bytes = proto::encode_preamble().to_vec();
+    bytes.extend_from_slice(
+        &Frame::Error(ErrorFrame { id: 0, code: ErrorCode::Overloaded, message }).to_bytes(),
+    );
+    let _ = stream.write_all(&bytes);
+}
+
+/// Encode one error frame to wire bytes.
+pub(crate) fn error_bytes(id: u64, code: ErrorCode, message: String) -> Vec<u8> {
+    Frame::Error(ErrorFrame { id, code, message }).to_bytes()
+}
+
+#[inline]
+fn dur_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+enum ConnState {
+    /// Waiting for the 8-byte client preamble.
+    Handshake { buf: [u8; proto::PREAMBLE_LEN], filled: usize },
+    /// Handshaken; framed request loop.
+    Open,
+}
+
+/// One multiplexed connection owned by a net thread.
+struct Conn {
+    stream: TcpStream,
+    fd: RawFd,
+    token: u64,
+    reader: FrameReader,
+    state: ConnState,
+    /// When the connection reached this net thread (handshake clock).
+    opened: Instant,
+    /// Handshake span, set when the preamble lands.
+    accept_ns: u64,
+    /// First-byte instant of the currently partial request frame.
+    frame_started: Option<Instant>,
+    /// Encoded reply frames not yet (fully) written; `front_written`
+    /// bytes of the front entry are already on the wire.
+    writeq: VecDeque<Vec<u8>>,
+    front_written: usize,
+    /// Admitted requests whose completion has not yet arrived.
+    pending: usize,
+    /// Write interest currently registered with the poller.
+    want_write: bool,
+    /// Flush the queue, then close (error replies that end the stream).
+    close_after_flush: bool,
+    /// Last instant the write queue made byte progress.
+    last_write_progress: Instant,
+}
+
+/// Outcome of driving one connection's readable side.
+enum ReadStep {
+    Idle,
+    Frame(Frame),
+    Close,
+    Protocol(String),
+}
+
+struct IoThread {
+    poller: Poller,
+    dispatch: Arc<dyn Dispatch>,
+    shared: Arc<Shared>,
+    cfg: PlaneConfig,
+    sink: CompletionSink,
+    conns: Vec<Option<Conn>>,
+    gens: Vec<u32>,
+    free: Vec<usize>,
+}
+
+impl IoThread {
+    fn run(&mut self, inbox: Arc<Mutex<VecDeque<TcpStream>>>, completions: Receiver<Completion>) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            let woken = match self.poller.wait(&mut events, Some(POLL_TICK)) {
+                Ok(w) => w,
+                Err(_) => {
+                    // a failing wait would otherwise busy-spin; yield
+                    std::thread::sleep(POLL_TICK);
+                    false
+                }
+            };
+            if (woken || !events.is_empty()) && obs::enabled() {
+                obs::counter(CounterId::NetEpollWakeups).inc();
+            }
+            if self.shared.shutdown.load(Ordering::Relaxed) {
+                // flush what already completed, notify, tear down
+                while let Ok(c) = completions.try_recv() {
+                    self.apply_completion(c);
+                }
+                self.shutdown_all();
+                return;
+            }
+            loop {
+                let next = inbox.lock().unwrap().pop_front();
+                match next {
+                    Some(stream) => self.register(stream),
+                    None => break,
+                }
+            }
+            while let Ok(c) = completions.try_recv() {
+                self.apply_completion(c);
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                self.on_event(ev);
+            }
+            self.scan_deadlines();
+        }
+    }
+
+    /// Adopt a connection handed over by the acceptor.
+    fn register(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            self.shared.active.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.conns.push(None);
+                self.gens.push(0);
+                self.conns.len() - 1
+            }
+        };
+        let gen = self.gens[slot];
+        let token = ((gen as u64) << 32) | slot as u64;
+        let fd = raw_fd(&stream);
+        if self.poller.add(fd, token, Interest::READ).is_err() {
+            self.free.push(slot);
+            self.shared.active.fetch_sub(1, Ordering::Relaxed);
+            return;
+        }
+        let now = Instant::now();
+        self.conns[slot] = Some(Conn {
+            stream,
+            fd,
+            token,
+            reader: FrameReader::new(self.cfg.max_frame),
+            state: ConnState::Handshake { buf: [0u8; proto::PREAMBLE_LEN], filled: 0 },
+            opened: now,
+            accept_ns: 0,
+            frame_started: None,
+            writeq: VecDeque::new(),
+            front_written: 0,
+            pending: 0,
+            want_write: false,
+            close_after_flush: false,
+            last_write_progress: now,
+        });
+    }
+
+    fn close(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            let _ = self.poller.delete(conn.fd);
+            self.gens[slot] = self.gens[slot].wrapping_add(1);
+            self.free.push(slot);
+            self.shared.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    fn on_event(&mut self, ev: Event) {
+        let slot = (ev.token & 0xFFFF_FFFF) as usize;
+        let gen = (ev.token >> 32) as u32;
+        if slot >= self.conns.len() || self.gens[slot] != gen || self.conns[slot].is_none() {
+            return; // stale event for a recycled slot
+        }
+        if ev.hangup && !ev.readable && !ev.writable {
+            self.close(slot);
+            return;
+        }
+        if ev.readable || ev.hangup {
+            // drive the read side first: it consumes pending bytes and
+            // observes EOF/hangup through the normal error path
+            if !self.drive_readable(slot) {
+                self.close(slot);
+                return;
+            }
+        }
+        if ev.writable && self.conns[slot].is_some() && !self.drive_writable(slot) {
+            self.close(slot);
+        }
+    }
+
+    /// Queue reply bytes and flush opportunistically. Returns `false`
+    /// when the connection must close now (write error, or the queue
+    /// drained with `close_after_flush` set).
+    fn enqueue(&mut self, slot: usize, bytes: Vec<u8>) -> bool {
+        let Some(conn) = self.conns[slot].as_mut() else { return false };
+        conn.writeq.push_back(bytes);
+        match flush_conn(&self.poller, conn) {
+            Err(_) => false,
+            Ok(()) => !(conn.writeq.is_empty() && conn.close_after_flush),
+        }
+    }
+
+    /// Queue a final reply: flush what we can, then close.
+    fn enqueue_closing(&mut self, slot: usize, bytes: Vec<u8>) -> bool {
+        if let Some(conn) = self.conns[slot].as_mut() {
+            conn.close_after_flush = true;
+        }
+        self.enqueue(slot, bytes)
+    }
+
+    fn drive_readable(&mut self, slot: usize) -> bool {
+        // a closing connection only flushes; reading more could enqueue
+        // duplicate error frames
+        match self.conns[slot].as_ref() {
+            None => return false,
+            Some(conn) if conn.close_after_flush => return true,
+            Some(_) => {}
+        }
+        // --- handshake phase -------------------------------------------
+        enum Hs {
+            AlreadyOpen,
+            More,
+            CloseSilent,
+            OpenOk,
+            BadVersion(u32),
+        }
+        let hs = {
+            let Some(conn) = self.conns[slot].as_mut() else { return false };
+            let Conn { ref mut stream, ref mut state, .. } = *conn;
+            match state {
+                ConnState::Open => Hs::AlreadyOpen,
+                ConnState::Handshake { buf, filled } => match proto::poll_exact(stream, buf, filled)
+                {
+                    Ok(false) => Hs::More,
+                    Err(_) => Hs::CloseSilent,
+                    Ok(true) => match proto::decode_preamble(buf) {
+                        Ok(v) if v == proto::VERSION => Hs::OpenOk,
+                        Ok(v) => Hs::BadVersion(v),
+                        // wrong magic: not our protocol, close silently
+                        Err(_) => Hs::CloseSilent,
+                    },
+                },
+            }
+        };
+        match hs {
+            Hs::AlreadyOpen => {}
+            Hs::More => return true,
+            Hs::CloseSilent => return false,
+            Hs::BadVersion(v) => {
+                let mut bytes = proto::encode_preamble().to_vec();
+                bytes.extend_from_slice(&error_bytes(
+                    0,
+                    ErrorCode::UnsupportedVersion,
+                    format!("server speaks v{}, client sent v{v}", proto::VERSION),
+                ));
+                return self.enqueue_closing(slot, bytes);
+            }
+            Hs::OpenOk => {
+                let accept_ns = {
+                    let conn = self.conns[slot].as_mut().expect("conn checked above");
+                    conn.state = ConnState::Open;
+                    conn.accept_ns = dur_ns(conn.opened.elapsed());
+                    conn.accept_ns
+                };
+                if obs::enabled() {
+                    obs::hist(HistId::NetHandshake).record_ns(accept_ns);
+                }
+                let hello = self.dispatch.hello_bytes();
+                if !self.enqueue(slot, hello) {
+                    return false;
+                }
+                // fall through: request bytes may already be buffered
+            }
+        }
+        // --- framed request loop ---------------------------------------
+        loop {
+            let step = {
+                let Some(conn) = self.conns[slot].as_mut() else { return false };
+                let Conn { ref mut stream, ref mut reader, ref mut frame_started, .. } = *conn;
+                match reader.poll_frame(stream) {
+                    Ok(None) => {
+                        // would-block: track partial-frame progress for
+                        // the slow-loris deadline
+                        if reader.buffered_len() == 0 {
+                            *frame_started = None;
+                        } else if frame_started.is_none() {
+                            *frame_started = Some(Instant::now());
+                        }
+                        ReadStep::Idle
+                    }
+                    Ok(Some(frame)) => {
+                        *frame_started = None;
+                        ReadStep::Frame(frame)
+                    }
+                    Err(WireError::Closed) => ReadStep::Close,
+                    Err(WireError::Io(_)) => ReadStep::Close,
+                    Err(e) => ReadStep::Protocol(e.to_string()),
+                }
+            };
+            match step {
+                ReadStep::Idle => return true,
+                ReadStep::Close => return false,
+                ReadStep::Protocol(msg) => {
+                    // protocol violation: the stream is no longer framed —
+                    // report once and close
+                    let bytes = error_bytes(0, ErrorCode::Malformed, msg);
+                    return self.enqueue_closing(slot, bytes);
+                }
+                ReadStep::Frame(frame) => {
+                    if !self.handle_frame(slot, frame) {
+                        return false;
+                    }
+                    match self.conns[slot].as_ref() {
+                        None => return true, // already torn down
+                        // stop reading once the connection is closing
+                        Some(conn) if conn.close_after_flush => return true,
+                        Some(_) => {}
+                    }
+                }
+            }
+        }
+    }
+
+    fn handle_frame(&mut self, slot: usize, frame: Frame) -> bool {
+        match frame {
+            Frame::Request(req) => {
+                let (key, accept_ns, decode_ns, over) = {
+                    let Some(conn) = self.conns[slot].as_ref() else { return false };
+                    let key = ConnKey { slot: slot as u32, gen: self.gens[slot] };
+                    let over = conn.pending + conn.writeq.len() >= self.cfg.max_inflight.max(1);
+                    (key, conn.accept_ns, conn.reader.last_decode_ns(), over)
+                };
+                if over {
+                    // bounded write queue: the pipeline bound is hit, shed
+                    // typed instead of buffering replies without limit
+                    let conn = self.conns[slot].as_ref().expect("conn checked above");
+                    let msg = format!(
+                        "pipeline bound reached ({} in flight, {} replies queued, \
+                         max_inflight {})",
+                        conn.pending,
+                        conn.writeq.len(),
+                        self.cfg.max_inflight.max(1)
+                    );
+                    self.dispatch.event(PlaneEvent::WriteqShed);
+                    return self.enqueue(slot, error_bytes(req.id, ErrorCode::Overloaded, msg));
+                }
+                let rctx = RequestCtx { key, accept_ns, decode_ns };
+                match self.dispatch.on_request(rctx, req, &self.sink) {
+                    RequestAction::Reply(bytes) => self.enqueue(slot, bytes),
+                    RequestAction::Async => {
+                        if let Some(conn) = self.conns[slot].as_mut() {
+                            conn.pending += 1;
+                        }
+                        true
+                    }
+                }
+            }
+            Frame::StatsRequest(s) => {
+                self.dispatch.event(PlaneEvent::StatsServed);
+                let json = self.dispatch.snapshot_json();
+                let bytes = Frame::StatsResponse(StatsResponseFrame { id: s.id, json }).to_bytes();
+                self.enqueue(slot, bytes)
+            }
+            _ => {
+                // clients may only send requests
+                let bytes = error_bytes(
+                    0,
+                    ErrorCode::Malformed,
+                    "unexpected frame type from client".to_string(),
+                );
+                self.enqueue_closing(slot, bytes)
+            }
+        }
+    }
+
+    fn drive_writable(&mut self, slot: usize) -> bool {
+        let Some(conn) = self.conns[slot].as_mut() else { return true };
+        match flush_conn(&self.poller, conn) {
+            Err(_) => false,
+            Ok(()) => !(conn.writeq.is_empty() && conn.close_after_flush),
+        }
+    }
+
+    fn apply_completion(&mut self, c: Completion) {
+        let slot = c.key.slot as usize;
+        if slot >= self.conns.len()
+            || self.gens[slot] != c.key.gen
+            || self.conns[slot].is_none()
+        {
+            return; // connection died first; the reply has nowhere to go
+        }
+        if let Some(conn) = self.conns[slot].as_mut() {
+            conn.pending = conn.pending.saturating_sub(1);
+        }
+        let t_write = Instant::now();
+        let alive = self.enqueue(slot, c.bytes);
+        if let Some(d) = c.trace {
+            if obs::enabled() {
+                let mut trace = Trace::begin(d.id);
+                trace.set(Stage::Accept, d.accept_ns);
+                trace.set(Stage::Decode, d.decode_ns);
+                trace.set(Stage::QueueWait, d.queue_ns);
+                trace.set(Stage::Assembly, d.assembly_ns);
+                trace.set(Stage::Compute, d.compute_ns);
+                trace.set(Stage::Frame, d.frame_ns);
+                trace.set(Stage::Write, dur_ns(t_write.elapsed()).max(1));
+                // server-side request time: everything except the peer's
+                // handshake pacing
+                obs::hist(HistId::NetRequest)
+                    .record_ns(trace.total_ns().saturating_sub(d.accept_ns));
+                self.dispatch.record_trace(&trace);
+            }
+        }
+        if !alive {
+            self.close(slot);
+        }
+    }
+
+    /// Periodic deadline sweep: handshake window, slow-loris frame
+    /// progress, write stalls.
+    fn scan_deadlines(&mut self) {
+        enum Act {
+            Close,
+            Loris(usize),
+        }
+        let now = Instant::now();
+        for slot in 0..self.conns.len() {
+            let act = match self.conns[slot].as_ref() {
+                None => continue,
+                Some(conn) => match conn.state {
+                    ConnState::Handshake { .. } => {
+                        if now.duration_since(conn.opened) > HANDSHAKE_TIMEOUT {
+                            Some(Act::Close)
+                        } else {
+                            None
+                        }
+                    }
+                    ConnState::Open => {
+                        let stalled_frame = conn
+                            .frame_started
+                            .map(|t| now.duration_since(t) > self.cfg.frame_deadline)
+                            .unwrap_or(false);
+                        let stalled_write = !conn.writeq.is_empty()
+                            && now.duration_since(conn.last_write_progress) > WRITE_STALL;
+                        if stalled_frame {
+                            Some(Act::Loris(conn.reader.buffered_len()))
+                        } else if stalled_write {
+                            Some(Act::Close)
+                        } else {
+                            None
+                        }
+                    }
+                },
+            };
+            match act {
+                None => {}
+                Some(Act::Close) => self.close(slot),
+                Some(Act::Loris(buffered)) => {
+                    self.dispatch.event(PlaneEvent::FrameTimeout);
+                    let msg = format!(
+                        "request frame made no progress within {:?} \
+                         ({buffered} bytes buffered); closing",
+                        self.cfg.frame_deadline
+                    );
+                    // best-effort typed notice, then drop the connection
+                    let _ = self.enqueue(slot, error_bytes(0, ErrorCode::Timeout, msg));
+                    self.close(slot);
+                }
+            }
+        }
+    }
+
+    /// Shutdown: best-effort `ShuttingDown` notice to every open
+    /// connection, then tear everything down.
+    fn shutdown_all(&mut self) {
+        for slot in 0..self.conns.len() {
+            let open = matches!(
+                self.conns[slot].as_ref().map(|c| &c.state),
+                Some(ConnState::Open)
+            );
+            if open {
+                let msg = self.dispatch.shutdown_message();
+                let _ = self.enqueue(slot, error_bytes(0, ErrorCode::ShuttingDown, msg));
+            }
+            self.close(slot);
+        }
+    }
+}
+
+/// Write the queue until it drains or the socket would block, and keep
+/// the poller's write interest in sync with queue emptiness.
+fn flush_conn(poller: &Poller, conn: &mut Conn) -> io::Result<()> {
+    loop {
+        let Some(front) = conn.writeq.front() else { break };
+        match conn.stream.write(&front[conn.front_written..]) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "peer gone")),
+            Ok(n) => {
+                conn.front_written += n;
+                conn.last_write_progress = Instant::now();
+                if conn.front_written == front.len() {
+                    conn.writeq.pop_front();
+                    conn.front_written = 0;
+                }
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let want = !conn.writeq.is_empty();
+    if want != conn.want_write {
+        let interest = if want { Interest::READ_WRITE } else { Interest::READ };
+        poller.modify(conn.fd, conn.token, interest)?;
+        conn.want_write = want;
+    }
+    Ok(())
+}

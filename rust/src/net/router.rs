@@ -1,13 +1,19 @@
 //! Fabric router: a front LCQ-RPC process that owns the shard map and
 //! relays client requests to healthy backend replicas.
 //!
-//! The router is `NetServer`-shaped on its client side — same preamble
-//! handshake, same hello frame (the **merged** backend catalog from
-//! [`Fabric::merged_catalog`]), same typed error frames, same per-frame
-//! slow-loris deadline — so a [`crate::net::NetClient`] works against a
-//! router unchanged. Behind it, each request is forwarded over a pooled
-//! backend connection with this discipline (full state machine in
-//! `docs/FABRIC.md`):
+//! The router is `NetServer`-shaped on its client side — it runs the same
+//! event-driven connection plane ([`crate::net::plane`]): epoll readiness
+//! loops on a fixed pool of net threads, the same preamble handshake,
+//! the same hello frame (the **merged** backend catalog from
+//! [`Fabric::merged_catalog`], computed per connection so probe refreshes
+//! are visible to new clients), the same typed error frames, the same
+//! per-frame slow-loris deadline and per-connection pipeline bound — so a
+//! [`crate::net::NetClient`] (including its pipelined batch mode) works
+//! against a router unchanged. Decoded requests hop from the net threads
+//! to a small **bounded forward-worker pool**; when its queue is full the
+//! request is shed typed `Overloaded` instead of stalling the event loop.
+//! Each worker forwards over a pooled backend connection with this
+//! discipline (full state machine in `docs/FABRIC.md`):
 //!
 //! * a **per-request deadline** starts when the request frame decodes;
 //!   retries and their backoff sleeps are clamped to the remaining
@@ -27,12 +33,16 @@
 //! Fault injection ([`crate::util::fault`]) is consulted at the forward
 //! point (connection drops, forced `Overloaded`, response delays, frame
 //! corruption), so the failover paths above are exercised determin-
-//! istically by `rust/tests/fabric.rs` — with injection disabled the cost
-//! is one relaxed atomic load per request.
+//! istically by `rust/tests/fabric.rs` and `rust/tests/c10k.rs` — with
+//! injection disabled the cost is one relaxed atomic load per request.
 
 use crate::net::fabric::{BackendConn, Fabric, FabricConfig, HealthState};
+use crate::net::plane::{
+    self, Completion, CompletionSink, ConnKey, Dispatch, Plane, PlaneConfig, PlaneEvent,
+    RequestAction, RequestCtx,
+};
 use crate::net::proto::{
-    self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, StatsResponseFrame, WireError,
+    self, ErrorCode, ErrorFrame, Frame, HelloFrame, RequestFrame, WireError,
 };
 use crate::net::server::NetConfig;
 use crate::obs::{self, CounterId, HistId};
@@ -41,29 +51,34 @@ use crate::util::fault::{self, FaultKind};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::Write;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, TrySendError};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Read-timeout tick for client-side sockets (shutdown poll).
+/// Shutdown-poll tick for the prober loop.
 const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
 
-/// Cap on any single client-side write.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Forward-worker threads relaying requests to backends. Workers block on
+/// backend sockets, so they are real threads, distinct from the net
+/// threads (which must never block).
+const FORWARD_WORKERS: usize = 8;
 
-/// Deadline for the client's pre-hello phase (as in `net::server`).
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Bound on the forward queue (requests decoded but not yet picked up by
+/// a worker). Beyond it, requests are shed typed `Overloaded` — explicit
+/// backpressure instead of an unbounded hop.
+const FORWARD_QUEUE: usize = 64;
 
 /// Router configuration: the client-facing connection plane plus the
 /// fabric behind it.
 #[derive(Clone, Debug, Default)]
 pub struct RouterConfig {
-    /// Client-side knobs (bind address, connection limit, frame cap,
-    /// per-frame deadline). `inflight_budget` is unused by the router —
-    /// backpressure is the backends' `Overloaded` signal.
+    /// Client-side knobs (bind address, connection limit, net threads,
+    /// pipeline bound, frame cap, per-frame deadline). `inflight_budget`
+    /// is unused by the router — backpressure is the backends'
+    /// `Overloaded` signal plus the bounded forward queue.
     pub net: NetConfig,
     /// Shard map + routing/health knobs.
     pub fabric: FabricConfig,
@@ -74,14 +89,15 @@ pub struct RouterConfig {
 pub struct RouterStatsSnapshot {
     /// Client connections accepted.
     pub connections: u64,
-    /// Client connections shed at the door (handler pool full).
+    /// Client connections shed at the door (slots + backlog full).
     pub connections_shed: u64,
     /// Requests answered with a backend response.
     pub requests_ok: u64,
     /// Requests answered with a typed error relayed from a backend.
     pub requests_failed: u64,
     /// Requests shed by the router itself (all replicas down, retry
-    /// budget or deadline exhausted).
+    /// budget or deadline exhausted, forward queue or pipeline bound
+    /// full).
     pub requests_shed: u64,
     /// Forward re-attempts (any backend).
     pub retries: u64,
@@ -95,6 +111,9 @@ pub struct RouterStatsSnapshot {
     pub stats_requests: u64,
     /// Client connections shed by the per-frame progress deadline.
     pub frame_timeouts: u64,
+    /// Requests shed by the per-connection pipeline bound (a subset of
+    /// `requests_shed`).
+    pub writeq_sheds: u64,
 }
 
 /// Per-router exact counters, mirroring into the global `fabric_*`
@@ -111,6 +130,7 @@ struct RouterStats {
     failovers: AtomicU64,
     stats_requests: AtomicU64,
     frame_timeouts: AtomicU64,
+    writeq_sheds: AtomicU64,
 }
 
 impl RouterStats {
@@ -149,23 +169,39 @@ impl RouterStats {
     fn inc_frame_timeout(&self) {
         RouterStats::bump(&self.frame_timeouts, Some(CounterId::NetFrameTimeouts));
     }
+    fn inc_writeq_shed(&self) {
+        RouterStats::bump(&self.writeq_sheds, Some(CounterId::NetWriteqSheds));
+    }
 }
 
 struct RouterCtx {
     fabric: Fabric,
     shutdown: AtomicBool,
-    max_frame: usize,
-    frame_deadline: Duration,
     stats: RouterStats,
 }
 
-/// The fabric front end: listener + handler pool + backend fabric + the
-/// hello-probe loop, one self-contained unit (see module docs).
+/// One decoded client request on its hop from a net thread to a forward
+/// worker.
+struct ForwardJob {
+    key: ConnKey,
+    req: RequestFrame,
+    /// Replica indices serving the model (validated non-empty on the net
+    /// thread).
+    candidates: Vec<usize>,
+    /// When the request frame decoded; the deadline anchors here, so
+    /// queue wait counts against it.
+    t_start: Instant,
+    sink: CompletionSink,
+}
+
+/// The fabric front end: event plane + forward workers + backend fabric +
+/// the hello-probe loop, one self-contained unit (see module docs).
 pub struct RouterServer {
     ctx: Arc<RouterCtx>,
     local_addr: SocketAddr,
-    acceptor: Option<JoinHandle<()>>,
-    conn_plane: Option<JoinHandle<()>>,
+    plane: Option<Plane>,
+    forward_tx: Option<SyncSender<ForwardJob>>,
+    workers: Vec<JoinHandle<()>>,
     prober: Option<JoinHandle<()>>,
 }
 
@@ -181,30 +217,38 @@ impl RouterServer {
         let max_frame = cfg.net.max_frame_bytes.max(1024);
         let fabric = Fabric::new(cfg.fabric, max_frame);
         fabric.probe_all();
-        let max_conns = cfg.net.max_connections.max(1);
         let ctx = Arc::new(RouterCtx {
             fabric,
             shutdown: AtomicBool::new(false),
-            max_frame,
-            frame_deadline: cfg.net.frame_deadline.max(SHUTDOWN_POLL),
             stats: RouterStats::default(),
         });
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(max_conns);
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let conn_plane = {
+        let (forward_tx, forward_rx) = mpsc::sync_channel::<ForwardJob>(FORWARD_QUEUE);
+        let forward_rx = Arc::new(Mutex::new(forward_rx));
+        let mut workers = Vec::with_capacity(FORWARD_WORKERS);
+        for i in 0..FORWARD_WORKERS {
             let ctx = Arc::clone(&ctx);
-            std::thread::Builder::new()
-                .name("lcq-router-conns".to_string())
-                .spawn(move || handler_pool(ctx, conn_rx, max_conns))
-                .context("spawning router connection plane")?
+            let rx = Arc::clone(&forward_rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lcq-router-fwd{i}"))
+                    .spawn(move || forward_worker(ctx, rx))
+                    .context("spawning forward worker")?,
+            );
+        }
+        let plane_cfg = PlaneConfig {
+            name: "lcq-router",
+            max_connections: cfg.net.max_connections.max(1),
+            net_threads: cfg.net.net_threads.max(1),
+            max_inflight: cfg.net.max_inflight.max(1),
+            max_frame,
+            frame_deadline: cfg.net.frame_deadline.max(SHUTDOWN_POLL),
         };
-        let acceptor = {
-            let ctx = Arc::clone(&ctx);
-            std::thread::Builder::new()
-                .name("lcq-router-accept".to_string())
-                .spawn(move || acceptor_loop(listener, conn_tx, ctx))
-                .context("spawning router acceptor")?
-        };
+        let dispatch: Arc<dyn Dispatch> = Arc::new(RouterDispatch {
+            ctx: Arc::clone(&ctx),
+            forward_tx: forward_tx.clone(),
+        });
+        let plane = Plane::start(listener, dispatch, plane_cfg)
+            .context("starting router event plane")?;
         let prober = if ctx.fabric.cfg().probe_every.is_zero() {
             None
         } else {
@@ -219,8 +263,9 @@ impl RouterServer {
         Ok(RouterServer {
             ctx,
             local_addr,
-            acceptor: Some(acceptor),
-            conn_plane: Some(conn_plane),
+            plane: Some(plane),
+            forward_tx: Some(forward_tx),
+            workers,
             prober,
         })
     }
@@ -245,6 +290,7 @@ impl RouterServer {
             probes: self.ctx.fabric.probes_total(),
             stats_requests: s.stats_requests.load(Ordering::Relaxed),
             frame_timeouts: s.frame_timeouts.load(Ordering::Relaxed),
+            writeq_sheds: s.writeq_sheds.load(Ordering::Relaxed),
         }
     }
 
@@ -260,16 +306,19 @@ impl RouterServer {
         snapshot_json(&self.ctx)
     }
 
-    /// Stop accepting, join handlers and the prober. Idempotent; also
-    /// run on drop. Backends are *not* stopped — the router does not own
-    /// them.
+    /// Stop the event plane, drain the forward workers, join the prober.
+    /// Idempotent; also run on drop. Backends are *not* stopped — the
+    /// router does not own them.
     pub fn stop(&mut self) {
         self.ctx.shutdown.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.local_addr);
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
+        if let Some(mut p) = self.plane.take() {
+            p.stop();
         }
-        if let Some(h) = self.conn_plane.take() {
+        // the plane's threads held the dispatcher (and its sender clone);
+        // dropping ours disconnects the queue and the workers drain out —
+        // their late completions land in dead sinks harmlessly
+        drop(self.forward_tx.take());
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
         if let Some(h) = self.prober.take() {
@@ -308,6 +357,7 @@ fn snapshot_json(ctx: &RouterCtx) -> String {
         ("probes", Json::from(ctx.fabric.probes_total() as usize)),
         ("stats_requests", Json::from(s.stats_requests.load(Ordering::Relaxed) as usize)),
         ("frame_timeouts", Json::from(s.frame_timeouts.load(Ordering::Relaxed) as usize)),
+        ("writeq_sheds", Json::from(s.writeq_sheds.load(Ordering::Relaxed) as usize)),
     ]);
     Json::obj(vec![
         ("router", router),
@@ -329,197 +379,112 @@ fn prober_loop(ctx: Arc<RouterCtx>) {
     }
 }
 
-fn acceptor_loop(
-    listener: TcpListener,
-    conn_tx: mpsc::SyncSender<TcpStream>,
-    ctx: Arc<RouterCtx>,
-) {
-    for stream in listener.incoming() {
-        if ctx.shutdown.load(Ordering::Relaxed) {
-            return;
-        }
-        let stream = match stream {
-            Ok(s) => s,
-            Err(_) => {
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
-            }
-        };
-        ctx.stats.inc_connections();
-        let _ = stream.set_nodelay(true);
-        match conn_tx.try_send(stream) {
-            Ok(()) => {}
-            Err(TrySendError::Full(stream)) => {
-                ctx.stats.inc_connections_shed();
-                shed_connection(stream);
-            }
-            Err(TrySendError::Disconnected(_)) => return,
-        }
-    }
-}
-
-/// Best-effort overload handshake for a connection the router cannot
-/// take: preamble + `Overloaded` error frame, then close.
-fn shed_connection(mut stream: TcpStream) {
-    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-    let mut bytes = proto::encode_preamble().to_vec();
-    bytes.extend_from_slice(
-        &Frame::Error(ErrorFrame {
-            id: 0,
-            code: ErrorCode::Overloaded,
-            message: "router connection limit reached".to_string(),
-        })
-        .to_bytes(),
-    );
-    let _ = stream.write_all(&bytes);
-}
-
-fn handler_pool(
-    ctx: Arc<RouterCtx>,
-    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
-    max_conns: usize,
-) {
-    crate::linalg::pool::run_scoped(max_conns, |_| loop {
-        let next = { conn_rx.lock().unwrap().recv() };
-        match next {
-            Ok(stream) => handle_conn(stream, &ctx),
-            Err(_) => return,
-        }
-    });
-}
-
 #[inline]
 fn dur_ns(d: Duration) -> u64 {
     u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
 }
 
-/// One client connection, handshake to close (the client side mirrors
-/// `net::server::handle_conn`, including the per-frame deadline).
-fn handle_conn(mut stream: TcpStream, ctx: &RouterCtx) {
-    let _ = stream.set_read_timeout(Some(SHUTDOWN_POLL));
-    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-    let mut pre = [0u8; proto::PREAMBLE_LEN];
-    let mut filled = 0;
-    let handshake_start = Instant::now();
+/// The router's [`Dispatch`] implementation: catalog validation on the
+/// net thread, then the hop to the forward workers.
+struct RouterDispatch {
+    ctx: Arc<RouterCtx>,
+    forward_tx: SyncSender<ForwardJob>,
+}
+
+impl Dispatch for RouterDispatch {
+    fn hello_bytes(&self) -> Vec<u8> {
+        // the merged backend catalog, computed per connection so probe
+        // refreshes are visible to new clients
+        let mut out = proto::encode_preamble().to_vec();
+        out.extend_from_slice(
+            &Frame::Hello(HelloFrame { models: self.ctx.fabric.merged_catalog() }).to_bytes(),
+        );
+        out
+    }
+
+    fn snapshot_json(&self) -> String {
+        snapshot_json(&self.ctx)
+    }
+
+    fn shed_message(&self) -> String {
+        "router connection limit reached".to_string()
+    }
+
+    fn shutdown_message(&self) -> String {
+        "router shutting down".to_string()
+    }
+
+    fn event(&self, ev: PlaneEvent) {
+        match ev {
+            PlaneEvent::Connection => self.ctx.stats.inc_connections(),
+            PlaneEvent::ConnectionShed => self.ctx.stats.inc_connections_shed(),
+            PlaneEvent::FrameTimeout => self.ctx.stats.inc_frame_timeout(),
+            PlaneEvent::StatsServed => self.ctx.stats.inc_stats(),
+            PlaneEvent::WriteqShed => {
+                self.ctx.stats.inc_shed();
+                self.ctx.stats.inc_writeq_shed();
+            }
+        }
+    }
+
+    fn on_request(
+        &self,
+        rctx: RequestCtx,
+        req: RequestFrame,
+        sink: &CompletionSink,
+    ) -> RequestAction {
+        let ctx = &self.ctx;
+        let candidates = ctx.fabric.candidates(&req.model);
+        if candidates.is_empty() {
+            ctx.stats.inc_failed();
+            return RequestAction::Reply(plane::error_bytes(
+                req.id,
+                ErrorCode::UnknownModel,
+                format!("no shard serves model '{}'", req.model),
+            ));
+        }
+        let job = ForwardJob {
+            key: rctx.key,
+            req,
+            candidates,
+            t_start: Instant::now(),
+            sink: sink.clone(),
+        };
+        match self.forward_tx.try_send(job) {
+            Ok(()) => RequestAction::Async,
+            Err(TrySendError::Full(job)) => {
+                // the worker pool is saturated: shed typed instead of
+                // stalling the net thread
+                ctx.stats.inc_shed();
+                RequestAction::Reply(plane::error_bytes(
+                    job.req.id,
+                    ErrorCode::Overloaded,
+                    format!("router forward queue full ({FORWARD_QUEUE} requests deep)"),
+                ))
+            }
+            Err(TrySendError::Disconnected(job)) => {
+                ctx.stats.inc_shed();
+                RequestAction::Reply(plane::error_bytes(
+                    job.req.id,
+                    ErrorCode::ShuttingDown,
+                    "router shutting down".to_string(),
+                ))
+            }
+        }
+    }
+}
+
+/// Forward-worker loop: route each job, post the encoded reply back to
+/// its net thread.
+fn forward_worker(ctx: Arc<RouterCtx>, rx: Arc<Mutex<Receiver<ForwardJob>>>) {
     loop {
-        if ctx.shutdown.load(Ordering::Relaxed)
-            || handshake_start.elapsed() > HANDSHAKE_TIMEOUT
-        {
-            return;
-        }
-        match proto::poll_exact(&mut stream, &mut pre, &mut filled) {
-            Ok(true) => break,
-            Ok(false) => continue,
-            Err(_) => return,
-        }
-    }
-    match proto::decode_preamble(&pre) {
-        Ok(v) if v == proto::VERSION => {}
-        Ok(v) => {
-            let mut bytes = proto::encode_preamble().to_vec();
-            bytes.extend_from_slice(
-                &Frame::Error(ErrorFrame {
-                    id: 0,
-                    code: ErrorCode::UnsupportedVersion,
-                    message: format!("router speaks v{}, client sent v{v}", proto::VERSION),
-                })
-                .to_bytes(),
-            );
-            let _ = stream.write_all(&bytes);
-            return;
-        }
-        Err(_) => return,
-    }
-    // hello: the merged backend catalog, computed per connection so probe
-    // refreshes are visible to new clients
-    let mut hello = proto::encode_preamble().to_vec();
-    hello.extend_from_slice(
-        &Frame::Hello(HelloFrame { models: ctx.fabric.merged_catalog() }).to_bytes(),
-    );
-    if stream.write_all(&hello).is_err() {
-        return;
-    }
-    // request loop with the slow-loris per-frame deadline
-    let mut reader = FrameReader::new(ctx.max_frame);
-    let mut frame_started: Option<Instant> = None;
-    loop {
-        if ctx.shutdown.load(Ordering::Relaxed) {
-            let _ = proto::write_frame(
-                &mut stream,
-                &Frame::Error(ErrorFrame {
-                    id: 0,
-                    code: ErrorCode::ShuttingDown,
-                    message: "router shutting down".to_string(),
-                }),
-            );
-            return;
-        }
-        match reader.poll_frame(&mut stream) {
-            Ok(None) => {
-                if reader.buffered_len() == 0 {
-                    frame_started = None;
-                    continue;
-                }
-                let started = *frame_started.get_or_insert_with(Instant::now);
-                if started.elapsed() > ctx.frame_deadline {
-                    ctx.stats.inc_frame_timeout();
-                    let _ = proto::write_frame(
-                        &mut stream,
-                        &Frame::Error(ErrorFrame {
-                            id: 0,
-                            code: ErrorCode::Timeout,
-                            message: format!(
-                                "request frame made no progress within {:?}; closing",
-                                ctx.frame_deadline
-                            ),
-                        }),
-                    );
-                    return;
-                }
-                continue;
+        let job = { rx.lock().unwrap().recv() };
+        match job {
+            Ok(job) => {
+                let bytes = route_job(&ctx, job.req, &job.candidates, job.t_start);
+                job.sink.send(Completion { key: job.key, bytes, trace: None });
             }
-            Ok(Some(Frame::Request(req))) => {
-                frame_started = None;
-                if !route_request(&mut stream, ctx, req) {
-                    return;
-                }
-            }
-            Ok(Some(Frame::StatsRequest(s))) => {
-                frame_started = None;
-                ctx.stats.inc_stats();
-                let json = snapshot_json(ctx);
-                if proto::write_frame(
-                    &mut stream,
-                    &Frame::StatsResponse(StatsResponseFrame { id: s.id, json }),
-                )
-                .is_err()
-                {
-                    return;
-                }
-            }
-            Ok(Some(_)) => {
-                let _ = proto::write_frame(
-                    &mut stream,
-                    &Frame::Error(ErrorFrame {
-                        id: 0,
-                        code: ErrorCode::Malformed,
-                        message: "unexpected frame type from client".to_string(),
-                    }),
-                );
-                return;
-            }
-            Err(WireError::Closed) | Err(WireError::Io(_)) => return,
-            Err(e) => {
-                let _ = proto::write_frame(
-                    &mut stream,
-                    &Frame::Error(ErrorFrame {
-                        id: 0,
-                        code: ErrorCode::Malformed,
-                        message: e.to_string(),
-                    }),
-                );
-                return;
-            }
+            Err(_) => return, // queue disconnected: router stopping
         }
     }
 }
@@ -546,36 +511,22 @@ enum Forward {
 }
 
 /// Route one request: pick → forward → classify, within the retry budget
-/// and deadline. Returns `false` when the client connection should close
-/// (client-side write failure).
-fn route_request(
-    stream: &mut TcpStream,
+/// and deadline. Returns the encoded reply frame for the client; counters
+/// bump here (before the reply travels), as they always have.
+fn route_job(
     ctx: &RouterCtx,
-    req: proto::RequestFrame,
-) -> bool {
-    let t_start = Instant::now();
+    req: RequestFrame,
+    candidates: &[usize],
+    t_start: Instant,
+) -> Vec<u8> {
     let cfg = ctx.fabric.cfg();
     let deadline = t_start + cfg.deadline;
     let req_id = req.id;
     let model = req.model.clone();
-    let shed = |stream: &mut TcpStream, ctx: &RouterCtx, code: ErrorCode, msg: String| -> bool {
+    let shed = |ctx: &RouterCtx, code: ErrorCode, msg: String| -> Vec<u8> {
         ctx.stats.inc_shed();
-        proto::write_frame(stream, &Frame::Error(ErrorFrame { id: req_id, code, message: msg }))
-            .is_ok()
+        plane::error_bytes(req_id, code, msg)
     };
-    let candidates = ctx.fabric.candidates(&model);
-    if candidates.is_empty() {
-        ctx.stats.inc_failed();
-        return proto::write_frame(
-            stream,
-            &Frame::Error(ErrorFrame {
-                id: req_id,
-                code: ErrorCode::UnknownModel,
-                message: format!("no shard serves model '{model}'"),
-            }),
-        )
-        .is_ok();
-    }
     // the forwarded bytes are encoded once; retries resend them verbatim
     let bytes = Frame::Request(req).to_bytes();
     // per-request backoff stream: reproducible given (fabric seed, id)
@@ -588,7 +539,6 @@ fn route_request(
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 return shed(
-                    stream,
                     ctx,
                     ErrorCode::Timeout,
                     format!("deadline exhausted after {attempt} attempts for '{model}'"),
@@ -598,9 +548,8 @@ fn route_request(
                 std::thread::sleep(delay.min(remaining));
             }
         }
-        let Some(idx) = ctx.fabric.pick(&candidates, last_failed) else {
+        let Some(idx) = ctx.fabric.pick(candidates, last_failed) else {
             return shed(
-                stream,
                 ctx,
                 ErrorCode::Overloaded,
                 format!("all replicas for '{model}' are down"),
@@ -626,7 +575,7 @@ fn route_request(
                 if obs::enabled() {
                     obs::hist(HistId::FabricRequest).record_ns(dur_ns(t_start.elapsed()));
                 }
-                return proto::write_frame(stream, &frame).is_ok();
+                return frame.to_bytes();
             }
             Forward::ConnFailed(_) => {
                 ctx.fabric.backends()[idx].inc_forward_failed();
@@ -649,7 +598,6 @@ fn route_request(
                 ctx.fabric.backends()[idx].inc_forward_failed();
                 ctx.fabric.set_state(idx, HealthState::Suspect);
                 return shed(
-                    stream,
                     ctx,
                     ErrorCode::Timeout,
                     format!("deadline exhausted waiting on a replica for '{model}'"),
@@ -658,7 +606,6 @@ fn route_request(
         }
         if Instant::now() >= deadline {
             return shed(
-                stream,
                 ctx,
                 ErrorCode::Timeout,
                 format!("deadline exhausted after {} attempts for '{model}'", attempt + 1),
@@ -666,7 +613,6 @@ fn route_request(
         }
     }
     shed(
-        stream,
         ctx,
         ErrorCode::Overloaded,
         format!("retry budget ({}) exhausted for '{model}'", cfg.retry_budget.max(1)),
@@ -783,5 +729,7 @@ mod tests {
         assert!(c.fabric.retry_budget >= 1);
         assert!(!c.fabric.deadline.is_zero());
         assert!(c.net.max_connections >= 1);
+        assert!(c.net.net_threads >= 1);
+        assert!(c.net.max_inflight >= 1);
     }
 }

@@ -1,25 +1,27 @@
-//! LCQ-RPC connection plane: a TCP listener feeding the in-process
-//! micro-batch server.
+//! LCQ-RPC serving front end: the event-driven connection plane feeding
+//! the in-process micro-batch server.
 //!
-//! Layout (drawn out in `docs/ARCHITECTURE.md`):
+//! Layout (drawn out in `docs/ARCHITECTURE.md`): the shared
+//! [`plane`](crate::net::plane) runs one non-blocking acceptor plus
+//! `net_threads` epoll readiness loops ([`crate::util::epoll`]), each
+//! multiplexing its share of up to `max_connections` sockets — no
+//! thread-per-connection, so thousands of mostly-idle connections cost
+//! file descriptors, not stacks. This module is the plane's *dispatcher*:
 //!
-//! * an **acceptor** thread blocks in `accept()` and hands sockets to a
-//!   bounded connection queue; when every handler is busy and the queue is
-//!   full, the connection is **shed** at the door with an
-//!   [`ErrorCode::Overloaded`] handshake instead of being silently queued
-//!   forever;
-//! * a fixed set of `max_connections` **handler** threads (one blocking
-//!   connection each, fanned out via [`crate::linalg::pool::run_scoped`] —
-//!   real scoped threads, so parked connections never occupy the compute
-//!   pool's task slots) runs the handshake and request loop;
-//! * decoded request rows are submitted to the shared
-//!   [`MicroBatchServer`] **in place** ([`Client::submit`] hands the
-//!   frame-decoded `Vec<f32>` straight to the engine), so the wire → batch
-//!   path performs no per-request input copy;
-//! * a **bounded in-flight budget** (`NetConfig::inflight_budget`, counted
-//!   in rows) sheds excess requests with [`ErrorCode::Overloaded`] before
-//!   they touch the compute plane — explicit backpressure instead of
-//!   unbounded queueing.
+//! * decoded requests are validated against the registry, claimed
+//!   against a **bounded in-flight budget** (`NetConfig::inflight_budget`,
+//!   counted in rows, mirrored in the `net_inflight` gauge) and submitted
+//!   to the shared [`MicroBatchServer`] via completion callbacks
+//!   ([`Client::submit_with`]) — the net threads never block on compute;
+//! * single-row requests hand the frame-decoded `Vec<f32>` straight to
+//!   the engine (no per-request input copy); multi-row requests split
+//!   into per-row jobs that coalesce back into engine batches;
+//! * finished requests post encoded reply bytes back to the owning net
+//!   thread, which queues them on the connection's **bounded write
+//!   queue**; a connection trying to hold more than
+//!   `NetConfig::max_inflight` requests-plus-queued-replies is shed typed
+//!   [`ErrorCode::Overloaded`] (counted in `writeq_sheds`) — explicit
+//!   backpressure at both the row and the connection scope.
 //!
 //! Every answered request leaves a [`Trace`](crate::obs::Trace) — accept →
 //! decode → queue wait → batch assembly → pool compute → frame → write —
@@ -29,43 +31,29 @@
 //! over the wire as a v2 `Stats` frame and rendered by
 //! [`NetServer::snapshot_json`]; the snapshot path reads shared atomics,
 //! so it is valid at **every** lifecycle point — before the first request,
-//! mid-traffic, after [`NetServer::stop`], even after the batch server is
-//! gone.
+//! mid-epoll-loop, after [`NetServer::stop`], even after the batch server
+//! is gone.
 //!
-//! Handler sockets carry a short read timeout so every blocking read
-//! doubles as a shutdown poll; [`NetServer::stop`] (also run on drop)
-//! stops the acceptor, joins the handlers, then stops the batch server —
-//! in-flight requests are answered before the engine goes away.
+//! [`NetServer::stop`] (also run on drop) stops the plane (open
+//! connections get a best-effort `ShuttingDown` notice), then stops the
+//! batch server; late executor callbacks complete into a disconnected
+//! sink and are dropped harmlessly after releasing their budget rows.
 
-use crate::net::proto::{
-    self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, ModelEntry, RequestFrame,
-    StatsResponseFrame, WireError,
+use crate::net::plane::{
+    self, Completion, CompletionSink, ConnKey, Dispatch, Plane, PlaneConfig, PlaneEvent,
+    RequestAction, RequestCtx, TraceDraft,
 };
-use crate::obs::{self, CounterId, HistId, Stage, Trace, TraceRing};
-use crate::serve::{Client, MicroBatchServer, Registry, ServeStats, ServerConfig, StatsSnapshot};
+use crate::net::proto::{self, ErrorCode, Frame, HelloFrame, ModelEntry, RequestFrame};
+use crate::obs::{self, CounterId, GaugeId, Trace, TraceRing};
+use crate::serve::{
+    Client, JobOutcome, MicroBatchServer, Registry, ServeStats, ServerConfig, StatsSnapshot,
+};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
-use std::io::Write;
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, TrySendError};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-
-/// Read-timeout tick at which connection handlers re-check the shutdown
-/// flag (mirrors the micro-batcher's poll).
-const SHUTDOWN_POLL: Duration = Duration::from_millis(25);
-
-/// Cap on any single write (handshakes, shed notices, responses): a
-/// stalled peer must not pin a handler forever.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
-
-/// Deadline for the unauthenticated pre-hello phase: a connection that
-/// has not delivered its preamble within this window is dropped. Without
-/// it, `max_connections` silent connects (`nc host port`) would pin every
-/// handler forever and shed all future traffic.
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Connection-plane knobs (config file: the `"net"` object **inside the
 /// `"serve"` section** — the top-level `"net"` key names the MLP
@@ -76,10 +64,18 @@ pub struct NetConfig {
     /// (report it with [`NetServer::local_addr`]) — the loopback tests and
     /// benches rely on this.
     pub bind_addr: String,
-    /// Concurrent connections served; one handler thread each. Beyond
+    /// Concurrent connections served across the net threads. Beyond
     /// this (plus a same-sized accept backlog), connections are shed with
     /// [`ErrorCode::Overloaded`] at handshake time.
     pub max_connections: usize,
+    /// Net (event-loop) threads multiplexing the connections. Two
+    /// suffice for thousands of sockets; compute happens elsewhere.
+    pub net_threads: usize,
+    /// Per-connection pipeline bound: requests in flight plus reply
+    /// frames queued for write. A connection exceeding it is shed typed
+    /// [`ErrorCode::Overloaded`] per excess request (the write-queue
+    /// backpressure limit, counted in `writeq_sheds`).
+    pub max_inflight: usize,
     /// In-flight request budget in **rows**: rows submitted to the batch
     /// server but not yet answered. Requests that would exceed it are
     /// shed with [`ErrorCode::Overloaded`] — the backpressure signal.
@@ -94,7 +90,7 @@ pub struct NetConfig {
     /// frame arrives, the whole frame must complete within this window or
     /// the connection is shed with [`ErrorCode::Timeout`] (slow-loris
     /// defense — the handshake deadline alone leaves the request loop
-    /// holdable forever by dribbling one byte per read tick). Idle
+    /// holdable forever by dribbling one byte per poll tick). Idle
     /// connections (no partial frame) are unaffected.
     pub frame_deadline: Duration,
 }
@@ -104,6 +100,8 @@ impl Default for NetConfig {
         NetConfig {
             bind_addr: "127.0.0.1:7070".to_string(),
             max_connections: 64,
+            net_threads: 2,
+            max_inflight: 8,
             inflight_budget: 256,
             max_frame_bytes: proto::DEFAULT_MAX_FRAME,
             trace_slots: 256,
@@ -117,11 +115,12 @@ impl Default for NetConfig {
 pub struct NetStatsSnapshot {
     /// Connections accepted by the listener.
     pub connections: u64,
-    /// Connections shed at the door (handler pool + backlog full).
+    /// Connections shed at the door (slots + backlog full).
     pub connections_shed: u64,
     /// Requests answered with logits.
     pub requests_ok: u64,
-    /// Requests shed by the in-flight budget.
+    /// Requests shed by backpressure (the in-flight row budget or the
+    /// per-connection pipeline bound).
     pub requests_shed: u64,
     /// Requests answered with a non-overload error.
     pub requests_failed: u64,
@@ -129,6 +128,9 @@ pub struct NetStatsSnapshot {
     pub stats_requests: u64,
     /// Connections shed by the per-frame progress deadline (slow-loris).
     pub frame_timeouts: u64,
+    /// Requests shed by the per-connection pipeline bound specifically
+    /// (a subset of `requests_shed`).
+    pub writeq_sheds: u64,
 }
 
 /// Per-server exact counters. Every bump also mirrors into the global
@@ -145,6 +147,7 @@ struct NetStats {
     requests_failed: AtomicU64,
     stats_requests: AtomicU64,
     frame_timeouts: AtomicU64,
+    writeq_sheds: AtomicU64,
 }
 
 impl NetStats {
@@ -175,6 +178,9 @@ impl NetStats {
     fn inc_frame_timeout(&self) {
         NetStats::bump(&self.frame_timeouts, CounterId::NetFrameTimeouts);
     }
+    fn inc_writeq_shed(&self) {
+        NetStats::bump(&self.writeq_sheds, CounterId::NetWriteqSheds);
+    }
 
     fn snapshot(&self) -> NetStatsSnapshot {
         NetStatsSnapshot {
@@ -185,6 +191,7 @@ impl NetStats {
             requests_failed: self.requests_failed.load(Ordering::Relaxed),
             stats_requests: self.stats_requests.load(Ordering::Relaxed),
             frame_timeouts: self.frame_timeouts.load(Ordering::Relaxed),
+            writeq_sheds: self.writeq_sheds.load(Ordering::Relaxed),
         }
     }
 
@@ -198,46 +205,56 @@ impl NetStats {
             ("requests_failed", Json::from(s.requests_failed as usize)),
             ("stats_requests", Json::from(s.stats_requests as usize)),
             ("frame_timeouts", Json::from(s.frame_timeouts as usize)),
+            ("writeq_sheds", Json::from(s.writeq_sheds as usize)),
         ])
     }
 }
 
-/// Everything a connection handler needs, shared by `Arc`.
+/// Everything the dispatcher needs, shared by `Arc` (the plane, the batch
+/// executors' completion callbacks, and [`NetServer`] itself).
 struct ConnCtx {
     registry: Arc<Registry>,
     client: Client,
-    shutdown: AtomicBool,
     /// Rows currently submitted to the batch server and unanswered.
     inflight: AtomicUsize,
     inflight_max: usize,
     max_frame: usize,
-    /// Per-frame progress deadline (see [`NetConfig::frame_deadline`]).
-    frame_deadline: Duration,
     stats: NetStats,
     /// Batch-plane stats, shared with the micro-batch server's executors.
     /// Outlives the batch server itself, so snapshots are valid at every
     /// lifecycle point.
     serve_stats: Arc<ServeStats>,
-    /// Recent request traces (overwrite-oldest; never blocks a handler).
+    /// Recent request traces (overwrite-oldest; never blocks a net
+    /// thread).
     traces: TraceRing,
     /// Precomputed server preamble + hello frame (catalog), written to
-    /// every accepted connection.
+    /// every handshaken connection.
     hello: Vec<u8>,
 }
 
-/// The TCP serving front end: listener + handler pool + micro-batch
-/// server, one self-contained unit (see module docs).
+impl ConnCtx {
+    /// Return `n` rows to the in-flight budget (and publish the gauge).
+    fn release_rows(&self, n: usize) {
+        let prev = self.inflight.fetch_sub(n, Ordering::Relaxed);
+        if obs::enabled() {
+            obs::gauge(GaugeId::NetInflight).set(prev.saturating_sub(n) as f64);
+        }
+    }
+}
+
+/// The TCP serving front end: event plane + micro-batch server, one
+/// self-contained unit (see module docs).
 pub struct NetServer {
     ctx: Arc<ConnCtx>,
     local_addr: SocketAddr,
-    acceptor: Option<JoinHandle<()>>,
-    conn_plane: Option<JoinHandle<()>>,
+    plane: Option<Plane>,
     batch: Option<MicroBatchServer>,
 }
 
 impl NetServer {
     /// Bind `net_cfg.bind_addr`, start the micro-batch server with
-    /// `serve_cfg`, and begin accepting LCQ-RPC connections.
+    /// `serve_cfg`, and begin accepting LCQ-RPC connections on the event
+    /// plane.
     pub fn start(
         registry: Arc<Registry>,
         serve_cfg: ServerConfig,
@@ -247,45 +264,35 @@ impl NetServer {
             .with_context(|| format!("binding {}", net_cfg.bind_addr))?;
         let local_addr = listener.local_addr().context("resolving bound address")?;
         let batch = MicroBatchServer::start(Arc::clone(&registry), serve_cfg);
-        let max_conns = net_cfg.max_connections.max(1);
         let ctx = Arc::new(ConnCtx {
             hello: hello_bytes(&registry),
             client: batch.client(),
             serve_stats: batch.stats_handle(),
             registry,
-            shutdown: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
             inflight_max: net_cfg.inflight_budget.max(1),
             max_frame: net_cfg.max_frame_bytes.max(1024),
-            frame_deadline: net_cfg.frame_deadline.max(SHUTDOWN_POLL),
             stats: NetStats::default(),
             traces: TraceRing::new(net_cfg.trace_slots.max(2)),
         });
-        // bounded hand-off from the acceptor to the handlers; its slack
-        // doubles as the accept backlog before connections are shed
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(max_conns);
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let conn_plane = {
-            let ctx = Arc::clone(&ctx);
-            std::thread::Builder::new()
-                .name("lcq-net-conns".to_string())
-                .spawn(move || handler_pool(ctx, conn_rx, max_conns))
-                .context("spawning connection plane")?
+        let plane_cfg = PlaneConfig {
+            name: "lcq-net",
+            max_connections: net_cfg.max_connections.max(1),
+            net_threads: net_cfg.net_threads.max(1),
+            max_inflight: net_cfg.max_inflight.max(1),
+            max_frame: net_cfg.max_frame_bytes.max(1024),
+            frame_deadline: net_cfg.frame_deadline.max(Duration::from_millis(25)),
         };
-        let acceptor = {
-            let ctx = Arc::clone(&ctx);
-            std::thread::Builder::new()
-                .name("lcq-net-accept".to_string())
-                .spawn(move || acceptor_loop(listener, conn_tx, ctx))
-                .context("spawning acceptor")?
+        let dispatch: Arc<dyn Dispatch> = Arc::new(ServerDispatch { ctx: Arc::clone(&ctx) });
+        let plane = match Plane::start(listener, dispatch, plane_cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                let mut batch = batch;
+                batch.stop();
+                return Err(e);
+            }
         };
-        Ok(NetServer {
-            ctx,
-            local_addr,
-            acceptor: Some(acceptor),
-            conn_plane: Some(conn_plane),
-            batch: Some(batch),
-        })
+        Ok(NetServer { ctx, local_addr, plane: Some(plane), batch: Some(batch) })
     }
 
     /// The bound listen address (resolves port 0 to the real port).
@@ -313,22 +320,12 @@ impl NetServer {
         snapshot_json(&self.ctx)
     }
 
-    /// Stop accepting, join every handler (in-flight requests are
-    /// answered), then stop the batch server. Idempotent; also run on
-    /// drop.
+    /// Stop the event plane (open connections get a best-effort
+    /// `ShuttingDown` notice), then stop the batch server. Idempotent;
+    /// also run on drop.
     pub fn stop(&mut self) {
-        self.ctx.shutdown.store(true, Ordering::SeqCst);
-        // the acceptor blocks in accept(): poke it with a throwaway
-        // connection so it observes the flag
-        let _ = TcpStream::connect(self.local_addr);
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
-        }
-        // the acceptor owned the connection queue's sender; handlers
-        // finish their current connection (bounded by the shutdown poll),
-        // then exit on the disconnected queue
-        if let Some(h) = self.conn_plane.take() {
-            let _ = h.join();
+        if let Some(mut p) = self.plane.take() {
+            p.stop();
         }
         if let Some(mut b) = self.batch.take() {
             b.stop();
@@ -373,415 +370,300 @@ fn hello_bytes(registry: &Registry) -> Vec<u8> {
     out
 }
 
-fn acceptor_loop(
-    listener: TcpListener,
-    conn_tx: mpsc::SyncSender<TcpStream>,
-    ctx: Arc<ConnCtx>,
-) {
-    for stream in listener.incoming() {
-        if ctx.shutdown.load(Ordering::Relaxed) {
-            return; // drops conn_tx: handlers drain the backlog and exit
-        }
-        let stream = match stream {
-            Ok(s) => s,
-            Err(_) => {
-                // accept failures (EMFILE under fd pressure, transient
-                // network errors) can repeat instantly: back off briefly
-                // instead of busy-spinning a core exactly when the
-                // process is already overloaded
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
-            }
-        };
-        ctx.stats.inc_connections();
-        let _ = stream.set_nodelay(true);
-        match conn_tx.try_send(stream) {
-            Ok(()) => {}
-            Err(TrySendError::Full(stream)) => {
-                // every handler busy and the backlog full: shed at the
-                // door with an explicit overload handshake
-                ctx.stats.inc_connections_shed();
-                shed_connection(stream, ctx.inflight_max);
-            }
-            Err(TrySendError::Disconnected(_)) => return,
-        }
-    }
-}
-
-/// Best-effort overload handshake for a connection the plane cannot take:
-/// preamble + `Overloaded` error frame, then close.
-fn shed_connection(mut stream: TcpStream, budget: usize) {
-    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-    let mut bytes = proto::encode_preamble().to_vec();
-    bytes.extend_from_slice(
-        &Frame::Error(ErrorFrame {
-            id: 0,
-            code: ErrorCode::Overloaded,
-            message: format!("connection limit reached (in-flight budget {budget})"),
-        })
-        .to_bytes(),
-    );
-    let _ = stream.write_all(&bytes);
-}
-
-/// `max_conns` blocking connection handlers on scoped threads. Handlers
-/// block on sockets and channel replies, so they use `run_scoped` (real
-/// threads), never the compute pool's task slots.
-fn handler_pool(
-    ctx: Arc<ConnCtx>,
-    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
-    max_conns: usize,
-) {
-    crate::linalg::pool::run_scoped(max_conns, |_| loop {
-        let next = { conn_rx.lock().unwrap().recv() };
-        match next {
-            Ok(stream) => handle_conn(stream, &ctx),
-            Err(_) => return, // acceptor gone and backlog drained
-        }
-    });
-}
-
 #[inline]
 fn dur_ns(d: Duration) -> u64 {
     u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
 }
 
-/// One connection, handshake to close.
-fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
-    let _ = stream.set_read_timeout(Some(SHUTDOWN_POLL));
-    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-    // --- handshake: read the client preamble (polling for shutdown,
-    //     bounded by HANDSHAKE_TIMEOUT so silent connects free the
-    //     handler instead of pinning it) ------------------------------
-    let mut pre = [0u8; proto::PREAMBLE_LEN];
-    let mut filled = 0;
-    let handshake_start = Instant::now();
-    loop {
-        if ctx.shutdown.load(Ordering::Relaxed)
-            || handshake_start.elapsed() > HANDSHAKE_TIMEOUT
-        {
-            return;
-        }
-        match proto::poll_exact(&mut stream, &mut pre, &mut filled) {
-            Ok(true) => break,
-            Ok(false) => continue,
-            Err(_) => return,
+/// The net server's [`Dispatch`] implementation: validation, row budget,
+/// batch submission, reply assembly.
+struct ServerDispatch {
+    ctx: Arc<ConnCtx>,
+}
+
+impl Dispatch for ServerDispatch {
+    fn hello_bytes(&self) -> Vec<u8> {
+        self.ctx.hello.clone()
+    }
+
+    fn snapshot_json(&self) -> String {
+        snapshot_json(&self.ctx)
+    }
+
+    fn shed_message(&self) -> String {
+        format!("connection limit reached (in-flight budget {})", self.ctx.inflight_max)
+    }
+
+    fn event(&self, ev: PlaneEvent) {
+        match ev {
+            PlaneEvent::Connection => self.ctx.stats.inc_connections(),
+            PlaneEvent::ConnectionShed => self.ctx.stats.inc_connections_shed(),
+            PlaneEvent::FrameTimeout => self.ctx.stats.inc_frame_timeout(),
+            PlaneEvent::StatsServed => self.ctx.stats.inc_stats(),
+            PlaneEvent::WriteqShed => {
+                // a pipeline-bound shed is a request shed with its own
+                // sub-counter
+                self.ctx.stats.inc_shed();
+                self.ctx.stats.inc_writeq_shed();
+            }
         }
     }
-    match proto::decode_preamble(&pre) {
-        Ok(v) if v == proto::VERSION => {}
-        Ok(v) => {
-            // speaks LCQ-RPC but a different version: say so, then close
-            let mut bytes = proto::encode_preamble().to_vec();
-            bytes.extend_from_slice(
-                &Frame::Error(ErrorFrame {
-                    id: 0,
-                    code: ErrorCode::UnsupportedVersion,
-                    message: format!("server speaks v{}, client sent v{v}", proto::VERSION),
-                })
-                .to_bytes(),
-            );
-            let _ = stream.write_all(&bytes);
-            return;
+
+    fn record_trace(&self, trace: &Trace) {
+        if self.ctx.traces.record(trace) {
+            obs::counter(CounterId::TracesRecorded).inc();
+        } else {
+            obs::counter(CounterId::TracesDropped).inc();
         }
-        Err(_) => return, // not our protocol: close without a reply
     }
-    // --- hello: preamble + model catalog (precomputed) -----------------
-    if stream.write_all(&ctx.hello).is_err() {
-        return;
-    }
-    // the accept span (handshake duration) is shared by every request on
-    // this connection; the wait above is client-paced, so it measures the
-    // peer's preamble latency, not server work
-    let accept_ns = dur_ns(handshake_start.elapsed());
-    if obs::enabled() {
-        obs::hist(HistId::NetHandshake).record_ns(accept_ns);
-    }
-    // --- request loop ---------------------------------------------------
-    let mut reader = FrameReader::new(ctx.max_frame);
-    // Slow-loris defense: once the first bytes of a frame arrive, the
-    // whole frame must land within `frame_deadline`. Dribbling one byte
-    // per read tick resets nothing — the clock runs from the first byte
-    // until the frame completes. Idle connections (no partial frame)
-    // never time out here.
-    let mut frame_started: Option<Instant> = None;
-    loop {
-        if ctx.shutdown.load(Ordering::Relaxed) {
-            let _ = proto::write_frame(
-                &mut stream,
-                &Frame::Error(ErrorFrame {
-                    id: 0,
-                    code: ErrorCode::ShuttingDown,
-                    message: "server shutting down".to_string(),
-                }),
-            );
-            return;
+
+    fn on_request(
+        &self,
+        rctx: RequestCtx,
+        req: RequestFrame,
+        sink: &CompletionSink,
+    ) -> RequestAction {
+        let ctx = &self.ctx;
+        let id = req.id;
+        // validate against the registry *before* spending compute
+        let Some(loaded) = ctx.registry.get(&req.model) else {
+            ctx.stats.inc_failed();
+            return RequestAction::Reply(plane::error_bytes(
+                id,
+                ErrorCode::UnknownModel,
+                format!("model '{}' not registered", req.model),
+            ));
+        };
+        let in_dim = loaded.engine.in_dim();
+        let out_dim = loaded.engine.out_dim();
+        let rows = req.rows as usize;
+        if req.cols as usize != in_dim {
+            ctx.stats.inc_failed();
+            return RequestAction::Reply(plane::error_bytes(
+                id,
+                ErrorCode::WrongDims,
+                format!("model '{}' expects {in_dim} features, got {}", req.model, req.cols),
+            ));
         }
-        match reader.poll_frame(&mut stream) {
-            Ok(None) => {
-                // read-timeout tick: check partial-frame progress
-                if reader.buffered_len() == 0 {
-                    frame_started = None;
-                    continue;
+        // reject requests whose *response* could not be framed: without
+        // this a small-input/large-output model could make the server pay
+        // the full forward pass only to emit a frame every conforming
+        // client must reject as oversized
+        let response_bytes = rows
+            .checked_mul(out_dim)
+            .and_then(|n| n.checked_mul(4))
+            .and_then(|n| n.checked_add(64)); // envelope + header slack
+        let response_fits = matches!(response_bytes, Some(n) if n <= ctx.max_frame);
+        if !response_fits {
+            ctx.stats.inc_failed();
+            return RequestAction::Reply(plane::error_bytes(
+                id,
+                ErrorCode::WrongDims,
+                format!(
+                    "a {rows}-row response ({out_dim} logits/row) would exceed the \
+                     frame cap of {} bytes",
+                    ctx.max_frame
+                ),
+            ));
+        }
+        // bounded in-flight budget (counted in rows): shed, don't queue
+        if !try_acquire(&ctx.inflight, ctx.inflight_max, rows) {
+            ctx.stats.inc_shed();
+            return RequestAction::Reply(plane::error_bytes(
+                id,
+                ErrorCode::Overloaded,
+                format!(
+                    "in-flight budget exhausted ({} rows in flight, budget {}, request {rows})",
+                    ctx.inflight.load(Ordering::Relaxed),
+                    ctx.inflight_max
+                ),
+            ));
+        }
+        if obs::enabled() {
+            obs::gauge(GaugeId::NetInflight).set(ctx.inflight.load(Ordering::Relaxed) as f64);
+        }
+        // submit row jobs with completion callbacks; the last row to
+        // settle assembles and posts the reply — this net thread moves on
+        // immediately
+        let agg = Arc::new(Mutex::new(PendingAgg {
+            id,
+            rows,
+            out_dim,
+            data: vec![0.0; rows * out_dim],
+            remaining: rows,
+            err: None,
+            queue_ns: 0,
+            assembly_ns: 0,
+            compute_ns: 0,
+            accept_ns: rctx.accept_ns,
+            decode_ns: rctx.decode_ns,
+        }));
+        let cols = req.cols as usize;
+        let mut data = req.data;
+        for r in 0..rows {
+            // single-row fast path: move the frame-decoded vector straight
+            // into the job (no input copy); multi-row pays one row copy
+            let row = if rows == 1 {
+                std::mem::take(&mut data)
+            } else {
+                data[r * cols..(r + 1) * cols].to_vec()
+            };
+            let mut guard = RowGuard {
+                ctx: Arc::clone(ctx),
+                agg: Arc::clone(&agg),
+                sink: sink.clone(),
+                key: rctx.key,
+                row: r,
+                done: false,
+            };
+            let submitted =
+                ctx.client.submit_with(&req.model, row, move |o| guard.settle(Some(o)));
+            if submitted.is_err() {
+                // the batch plane is gone. Row `r`'s callback was dropped
+                // unrun, so its guard already settled it (error recorded,
+                // budget row released); rows `r+1..` were never submitted
+                // — settle them here so the request still answers.
+                let unsent = rows - r - 1;
+                if unsent > 0 {
+                    ctx.release_rows(unsent);
+                    let finish = {
+                        let mut a = agg.lock().unwrap();
+                        a.remaining -= unsent;
+                        a.remaining == 0
+                    };
+                    if finish {
+                        send_completion(ctx, &agg, sink, rctx.key);
+                    }
                 }
-                let started = *frame_started.get_or_insert_with(Instant::now);
-                if started.elapsed() > ctx.frame_deadline {
-                    ctx.stats.inc_frame_timeout();
-                    let _ = proto::write_frame(
-                        &mut stream,
-                        &Frame::Error(ErrorFrame {
-                            id: 0,
-                            code: ErrorCode::Timeout,
-                            message: format!(
-                                "request frame made no progress within {:?} \
-                                 ({} bytes buffered); closing",
-                                ctx.frame_deadline,
-                                reader.buffered_len()
-                            ),
-                        }),
-                    );
-                    return;
-                }
-                continue;
-            }
-            Ok(Some(Frame::Request(req))) => {
-                frame_started = None;
-                let decode_ns = reader.last_decode_ns();
-                if !answer_request(&mut stream, ctx, req, accept_ns, decode_ns) {
-                    return;
-                }
-            }
-            Ok(Some(Frame::StatsRequest(s))) => {
-                frame_started = None;
-                ctx.stats.inc_stats();
-                let json = snapshot_json(ctx);
-                if proto::write_frame(
-                    &mut stream,
-                    &Frame::StatsResponse(StatsResponseFrame { id: s.id, json }),
-                )
-                .is_err()
-                {
-                    return;
-                }
-            }
-            Ok(Some(_)) => {
-                // clients may only send requests
-                let _ = proto::write_frame(
-                    &mut stream,
-                    &Frame::Error(ErrorFrame {
-                        id: 0,
-                        code: ErrorCode::Malformed,
-                        message: "unexpected frame type from client".to_string(),
-                    }),
-                );
-                return;
-            }
-            Err(WireError::Closed) => return, // clean close
-            Err(WireError::Io(_)) => return,
-            Err(e) => {
-                // protocol violation: the stream is no longer framed —
-                // report once and close
-                let _ = proto::write_frame(
-                    &mut stream,
-                    &Frame::Error(ErrorFrame {
-                        id: 0,
-                        code: ErrorCode::Malformed,
-                        message: e.to_string(),
-                    }),
-                );
-                return;
+                break;
             }
         }
+        RequestAction::Async
     }
 }
 
-/// Batch-plane span times aggregated over a request's rows (single-row
-/// requests: the one job's spans; multi-row: the worst row, since the
-/// response waits for the slowest).
-#[derive(Default, Clone, Copy)]
-struct PipelineSpans {
+/// Batch-plane aggregation state for one in-flight request: logits land
+/// row by row; the response waits on the slowest row, so span times keep
+/// the worst value.
+struct PendingAgg {
+    id: u64,
+    rows: usize,
+    out_dim: usize,
+    data: Vec<f32>,
+    /// Rows not yet settled (answered, failed, or dropped).
+    remaining: usize,
+    /// First error wins; its presence turns the reply into an error
+    /// frame.
+    err: Option<(ErrorCode, String)>,
     queue_ns: u64,
     assembly_ns: u64,
     compute_ns: u64,
-}
-
-/// Validate, budget, submit and answer one request. Returns `false` when
-/// the connection should close (write failure). `accept_ns`/`decode_ns`
-/// seed the request's trace span.
-fn answer_request(
-    stream: &mut TcpStream,
-    ctx: &ConnCtx,
-    req: RequestFrame,
     accept_ns: u64,
     decode_ns: u64,
-) -> bool {
-    let id = req.id;
-    let fail = |stream: &mut TcpStream, code: ErrorCode, message: String| -> bool {
-        proto::write_frame(stream, &Frame::Error(ErrorFrame { id, code, message })).is_ok()
-    };
-    // validate against the registry *before* spending compute
-    let Some(loaded) = ctx.registry.get(&req.model) else {
-        ctx.stats.inc_failed();
-        return fail(
-            stream,
-            ErrorCode::UnknownModel,
-            format!("model '{}' not registered", req.model),
-        );
-    };
-    let in_dim = loaded.engine.in_dim();
-    let out_dim = loaded.engine.out_dim();
-    let rows = req.rows as usize;
-    if req.cols as usize != in_dim {
-        ctx.stats.inc_failed();
-        return fail(
-            stream,
-            ErrorCode::WrongDims,
-            format!("model '{}' expects {in_dim} features, got {}", req.model, req.cols),
-        );
-    }
-    // reject requests whose *response* could not be framed: without this
-    // a small-input/large-output model could make the server pay the full
-    // forward pass only to emit a frame every conforming client must
-    // reject as oversized
-    let response_bytes = rows
-        .checked_mul(out_dim)
-        .and_then(|n| n.checked_mul(4))
-        .and_then(|n| n.checked_add(64)); // envelope + header slack
-    let response_fits = matches!(response_bytes, Some(n) if n <= ctx.max_frame);
-    if !response_fits {
-        ctx.stats.inc_failed();
-        return fail(
-            stream,
-            ErrorCode::WrongDims,
-            format!(
-                "a {rows}-row response ({out_dim} logits/row) would exceed the \
-                 frame cap of {} bytes",
-                ctx.max_frame
-            ),
-        );
-    }
-    // bounded in-flight budget (counted in rows): shed, don't queue
-    if !try_acquire(&ctx.inflight, ctx.inflight_max, rows) {
-        ctx.stats.inc_shed();
-        return fail(
-            stream,
-            ErrorCode::Overloaded,
-            format!(
-                "in-flight budget exhausted ({} rows in flight, budget {}, request {rows})",
-                ctx.inflight.load(Ordering::Relaxed),
-                ctx.inflight_max
-            ),
-        );
-    }
-    let outcome = submit_rows(ctx, req);
-    ctx.inflight.fetch_sub(rows, Ordering::Relaxed);
-    match outcome {
-        Ok((data, spans)) => {
-            ctx.stats.inc_ok();
-            let frame = Frame::Response(proto::ResponseFrame {
-                id,
-                rows: rows as u32,
-                cols: out_dim as u32,
-                data,
-            });
-            let t_frame = Instant::now();
-            let bytes = frame.to_bytes();
-            let frame_ns = dur_ns(t_frame.elapsed());
-            let t_write = Instant::now();
-            let ok = stream.write_all(&bytes).is_ok();
-            if obs::enabled() {
-                let mut trace = Trace::begin(id);
-                trace.set(Stage::Accept, accept_ns);
-                trace.set(Stage::Decode, decode_ns);
-                trace.set(Stage::QueueWait, spans.queue_ns);
-                trace.set(Stage::Assembly, spans.assembly_ns);
-                trace.set(Stage::Compute, spans.compute_ns);
-                trace.set(Stage::Frame, frame_ns);
-                trace.set(Stage::Write, dur_ns(t_write.elapsed()));
-                // server-side request time: everything except the peer's
-                // handshake pacing
-                obs::hist(HistId::NetRequest).record_ns(
-                    trace.total_ns().saturating_sub(accept_ns),
-                );
-                if ctx.traces.record(&trace) {
-                    obs::counter(CounterId::TracesRecorded).inc();
-                } else {
-                    obs::counter(CounterId::TracesDropped).inc();
+}
+
+/// Settles exactly one row of a pending request — normally through the
+/// batch executor's completion callback, or via `Drop` if the callback is
+/// discarded unrun (executor panic, shutdown race). Either way the budget
+/// row is released and the request can still answer: no path leaks budget
+/// or hangs a client.
+struct RowGuard {
+    ctx: Arc<ConnCtx>,
+    agg: Arc<Mutex<PendingAgg>>,
+    sink: CompletionSink,
+    key: ConnKey,
+    row: usize,
+    done: bool,
+}
+
+impl RowGuard {
+    fn settle(&mut self, outcome: Option<JobOutcome>) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        self.ctx.release_rows(1);
+        let finish = {
+            let mut a = self.agg.lock().unwrap();
+            match outcome {
+                Some(o) => {
+                    a.queue_ns = a.queue_ns.max(o.queue_ns);
+                    a.assembly_ns = a.assembly_ns.max(o.assembly_ns);
+                    a.compute_ns = a.compute_ns.max(o.compute_ns);
+                    match o.result {
+                        Ok(logits) => {
+                            let start = self.row * a.out_dim;
+                            let n = logits.len().min(a.out_dim);
+                            a.data[start..start + n].copy_from_slice(&logits[..n]);
+                        }
+                        Err(msg) => {
+                            if a.err.is_none() {
+                                a.err = Some((ErrorCode::Internal, msg));
+                            }
+                        }
+                    }
+                }
+                None => {
+                    if a.err.is_none() {
+                        a.err = Some((
+                            ErrorCode::Internal,
+                            "server dropped the request".to_string(),
+                        ));
+                    }
                 }
             }
-            ok
-        }
-        Err((code, message)) => {
-            ctx.stats.inc_failed();
-            fail(stream, code, message)
+            a.remaining -= 1;
+            a.remaining == 0
+        };
+        if finish {
+            send_completion(&self.ctx, &self.agg, &self.sink, self.key);
         }
     }
 }
 
-/// Submit a request's rows to the batch server and collect the logits
-/// plus the batch-plane span times.
-///
-/// The single-row fast path moves the frame-decoded `Vec<f32>` straight
-/// into the job — the engine gathers from that buffer in place, so the
-/// socket → logits path copies input floats exactly once (the kernel read
-/// into the frame buffer). Multi-row requests split into per-row jobs
-/// (they coalesce back into one engine batch via the model group) and pay
-/// one row copy each; batch clients are the convenience path.
-///
-/// Every submission gets a **fresh** reply channel: if the batch plane
-/// ever drops a job without answering (an executor panic), the channel
-/// disconnects and `recv` errors instead of blocking this handler — and
-/// [`NetServer::stop`] — forever. The per-request channel allocation is
-/// the price of that liveness guarantee.
-fn submit_rows(
-    ctx: &ConnCtx,
-    req: RequestFrame,
-) -> std::result::Result<(Vec<f32>, PipelineSpans), (ErrorCode, String)> {
-    let rows = req.rows as usize;
-    let stopping = |e: String| (ErrorCode::ShuttingDown, e);
-    let dropped = || (ErrorCode::Internal, "server dropped the request".to_string());
-    let mut spans = PipelineSpans::default();
-    if rows == 1 {
-        let (tx, rx) = mpsc::channel();
-        ctx.client.submit(&req.model, req.data, tx).map_err(stopping)?;
-        return match rx.recv() {
-            Ok(o) => {
-                spans.queue_ns = o.queue_ns;
-                spans.assembly_ns = o.assembly_ns;
-                spans.compute_ns = o.compute_ns;
-                match o.result {
-                    Ok(logits) => Ok((logits, spans)),
-                    Err(msg) => Err((ErrorCode::Internal, msg)),
-                }
-            }
-            Err(_) => Err(dropped()),
-        };
+impl Drop for RowGuard {
+    fn drop(&mut self) {
+        self.settle(None);
     }
-    let cols = req.cols as usize;
-    let mut pending = Vec::with_capacity(rows);
-    for r in 0..rows {
-        let (tx, rx) = mpsc::channel();
-        let row = req.data[r * cols..(r + 1) * cols].to_vec();
-        ctx.client.submit(&req.model, row, tx).map_err(stopping)?;
-        pending.push(rx);
-    }
-    let mut out = Vec::new();
-    for rx in pending {
-        match rx.recv() {
-            Ok(o) => {
-                // the response waits on the slowest row: keep the worst span
-                spans.queue_ns = spans.queue_ns.max(o.queue_ns);
-                spans.assembly_ns = spans.assembly_ns.max(o.assembly_ns);
-                spans.compute_ns = spans.compute_ns.max(o.compute_ns);
-                match o.result {
-                    Ok(logits) => out.extend_from_slice(&logits),
-                    Err(msg) => return Err((ErrorCode::Internal, msg)),
-                }
+}
+
+/// Assemble the final reply for a fully settled request and post it back
+/// to the owning net thread. Counters bump here (before the write), as
+/// they always have.
+fn send_completion(ctx: &ConnCtx, agg: &Mutex<PendingAgg>, sink: &CompletionSink, key: ConnKey) {
+    let (bytes, trace) = {
+        let mut a = agg.lock().unwrap();
+        match a.err.take() {
+            Some((code, message)) => {
+                ctx.stats.inc_failed();
+                (plane::error_bytes(a.id, code, message), None)
             }
-            Err(_) => return Err(dropped()),
+            None => {
+                ctx.stats.inc_ok();
+                let data = std::mem::take(&mut a.data);
+                let frame = Frame::Response(proto::ResponseFrame {
+                    id: a.id,
+                    rows: a.rows as u32,
+                    cols: a.out_dim as u32,
+                    data,
+                });
+                let t_frame = Instant::now();
+                let bytes = frame.to_bytes();
+                let frame_ns = dur_ns(t_frame.elapsed());
+                let trace = obs::enabled().then(|| TraceDraft {
+                    id: a.id,
+                    accept_ns: a.accept_ns,
+                    decode_ns: a.decode_ns,
+                    queue_ns: a.queue_ns,
+                    assembly_ns: a.assembly_ns,
+                    compute_ns: a.compute_ns,
+                    frame_ns,
+                });
+                (bytes, trace)
+            }
         }
-    }
-    Ok((out, spans))
+    };
+    sink.send(Completion { key, bytes, trace });
 }
 
 /// Claim `n` rows of the in-flight budget; `false` (shed) when the budget
@@ -826,6 +708,8 @@ mod tests {
     fn default_config_is_sane() {
         let c = NetConfig::default();
         assert!(c.max_connections >= 1);
+        assert!(c.net_threads >= 1);
+        assert!(c.max_inflight >= 1);
         assert!(c.inflight_budget >= 1);
         assert_eq!(c.max_frame_bytes, proto::DEFAULT_MAX_FRAME);
         assert!(c.trace_slots >= 2);

@@ -98,10 +98,17 @@ pub enum CounterId {
     FabricHealthTransitions = 23,
     /// Active hello probes completed (success or failure) by the router.
     FabricProbes = 24,
+    /// Epoll loop iterations of the event-driven connection plane that
+    /// delivered work (readiness events or a cross-thread wake).
+    NetEpollWakeups = 25,
+    /// Requests shed with `Overloaded` because the per-connection
+    /// pipeline bound (`max_inflight`: queued replies + in-flight rows)
+    /// was already full.
+    NetWriteqSheds = 26,
 }
 
 /// Number of [`CounterId`] variants.
-pub const COUNTERS: usize = 25;
+pub const COUNTERS: usize = 27;
 
 impl CounterId {
     /// All counters, declaration order.
@@ -131,6 +138,8 @@ impl CounterId {
         CounterId::FabricFailovers,
         CounterId::FabricHealthTransitions,
         CounterId::FabricProbes,
+        CounterId::NetEpollWakeups,
+        CounterId::NetWriteqSheds,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -161,6 +170,8 @@ impl CounterId {
             CounterId::FabricFailovers => "fabric_failovers",
             CounterId::FabricHealthTransitions => "fabric_health_transitions",
             CounterId::FabricProbes => "fabric_probes",
+            CounterId::NetEpollWakeups => "net_epoll_wakeups",
+            CounterId::NetWriteqSheds => "net_writeq_sheds",
         }
     }
 }
@@ -185,10 +196,13 @@ pub enum GaugeId {
     FabricBackendsHealthy = 6,
     /// Router: backends currently in the `Down` state.
     FabricBackendsDown = 7,
+    /// Net server: rows currently inside the in-flight budget (admitted
+    /// to the batcher, response not yet assembled).
+    NetInflight = 8,
 }
 
 /// Number of [`GaugeId`] variants.
-pub const GAUGES: usize = 8;
+pub const GAUGES: usize = 9;
 
 impl GaugeId {
     /// All gauges, declaration order.
@@ -201,6 +215,7 @@ impl GaugeId {
         GaugeId::LcCstepMs,
         GaugeId::FabricBackendsHealthy,
         GaugeId::FabricBackendsDown,
+        GaugeId::NetInflight,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -214,6 +229,7 @@ impl GaugeId {
             GaugeId::LcCstepMs => "lc_cstep_ms",
             GaugeId::FabricBackendsHealthy => "fabric_backends_healthy",
             GaugeId::FabricBackendsDown => "fabric_backends_down",
+            GaugeId::NetInflight => "net_inflight",
         }
     }
 }

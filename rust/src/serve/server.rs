@@ -98,11 +98,31 @@ pub struct JobOutcome {
     pub batch_size: u32,
 }
 
+/// How a job's [`JobOutcome`] travels back to its submitter: a channel
+/// send (blocking in-process clients) or a one-shot callback (the
+/// event-driven network plane, whose net threads must never block on a
+/// `recv`). Delivery consumes the route either way, so a job is answered
+/// exactly once.
+enum Reply {
+    Chan(Sender<JobOutcome>),
+    Cb(Box<dyn FnOnce(JobOutcome) + Send>),
+}
+
+impl Reply {
+    fn deliver(self, outcome: JobOutcome) {
+        match self {
+            // A gone receiver just means the submitter stopped waiting.
+            Reply::Chan(tx) => drop(tx.send(outcome)),
+            Reply::Cb(cb) => cb(outcome),
+        }
+    }
+}
+
 struct Job {
     model: String,
     input: Vec<f32>,
     enqueued: Instant,
-    reply: Sender<JobOutcome>,
+    reply: Reply,
 }
 
 /// One per-model group of coalesced jobs, the unit handed to an executor.
@@ -272,6 +292,28 @@ impl Client {
         input: Vec<f32>,
         reply: Sender<JobOutcome>,
     ) -> Result<(), String> {
+        self.push(model, input, Reply::Chan(reply))
+    }
+
+    /// Like [`Client::submit`], but the [`JobOutcome`] is delivered by
+    /// invoking `on_done` from whichever executor thread finished the
+    /// batch. This is the event-driven network plane's route: its net
+    /// threads park in a readiness wait, not a channel `recv`, so the
+    /// callback posts a completion and wakes the poller instead. The
+    /// callback runs exactly once (including on the shutdown path, where
+    /// it carries the batcher's error) unless the server's queue is
+    /// already gone, in which case this returns `Err` and `on_done` is
+    /// dropped unrun.
+    pub fn submit_with(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        on_done: impl FnOnce(JobOutcome) + Send + 'static,
+    ) -> Result<(), String> {
+        self.push(model, input, Reply::Cb(Box::new(on_done)))
+    }
+
+    fn push(&self, model: &str, input: Vec<f32>, reply: Reply) -> Result<(), String> {
         self.tx
             .send(Job {
                 model: model.to_string(),
@@ -384,14 +426,16 @@ fn batcher_loop(
 }
 
 /// Answer every job in a group with the same error (shutdown path).
-fn fail_group(group: &BatchGroup, msg: &str) {
-    for job in &group.jobs {
-        let _ = job.reply.send(JobOutcome {
+/// Consumes the group: reply delivery is one-shot.
+fn fail_group(group: BatchGroup, msg: &str) {
+    let batch = group.jobs.len() as u32;
+    for job in group.jobs {
+        job.reply.deliver(JobOutcome {
             result: Err(msg.to_string()),
             queue_ns: 0,
             assembly_ns: 0,
             compute_ns: 0,
-            batch_size: group.jobs.len() as u32,
+            batch_size: batch,
         });
     }
 }
@@ -448,7 +492,7 @@ fn batcher_run(
             // and the ring is full. Only this thread closes the queue, so
             // a failed push means a shutdown race lost — fail cleanly.
             if let Err(group) = queue.push(group) {
-                fail_group(&group, "server stopped");
+                fail_group(group, "server stopped");
                 return;
             }
         }
@@ -522,11 +566,11 @@ fn run_group(
     let batch = jobs.len();
     let errors = match outcome {
         Ok(y) => {
-            for (r, job) in jobs.iter().enumerate() {
+            for (r, job) in jobs.into_iter().enumerate() {
                 let q = dur_ns(assembled.saturating_duration_since(job.enqueued));
                 queue_ns.push(q);
                 latency_ns.push(dur_ns(job.enqueued.elapsed()));
-                let _ = job.reply.send(JobOutcome {
+                job.reply.deliver(JobOutcome {
                     result: Ok(y.row(r).to_vec()),
                     queue_ns: q,
                     assembly_ns,
@@ -537,11 +581,11 @@ fn run_group(
             0
         }
         Err(e) => {
-            for job in &jobs {
+            for job in jobs {
                 let q = dur_ns(assembled.saturating_duration_since(job.enqueued));
                 queue_ns.push(q);
                 latency_ns.push(dur_ns(job.enqueued.elapsed()));
-                let _ = job.reply.send(JobOutcome {
+                job.reply.deliver(JobOutcome {
                     result: Err(e.clone()),
                     queue_ns: q,
                     assembly_ns,
@@ -720,6 +764,33 @@ mod tests {
         }
         server.stop();
         assert_eq!(server.stats().requests, 6);
+    }
+
+    #[test]
+    fn submit_with_callback_delivers_once_and_rejects_after_stop() {
+        // the event plane's usage pattern: a one-shot callback instead of
+        // a reply channel, answered from an executor thread
+        let (reg, packed) = toy_registry();
+        let engine = crate::serve::LutEngine::new(&packed).unwrap();
+        let mut server = MicroBatchServer::start(reg, ServerConfig::default());
+        let client = server.client();
+        let (tx, rx) = mpsc::channel();
+        let input = vec![0.25f32; 8];
+        client
+            .submit_with("toy", input.clone(), move |o| {
+                let _ = tx.send(o);
+            })
+            .unwrap();
+        let outcome = rx.recv().unwrap();
+        let got = outcome.result.unwrap();
+        let mut x = Mat::zeros(1, 8);
+        x.row_mut(0).copy_from_slice(&input);
+        assert_eq!(got, engine.forward(&x).unwrap().row(0).to_vec());
+        server.stop();
+        // after stop the queue is gone: submission fails loudly and the
+        // callback is dropped unrun
+        assert!(client.submit_with("toy", vec![0.0; 8], |_| {}).is_err());
+        assert_eq!(server.stats().requests, 1);
     }
 
     #[test]

@@ -1,0 +1,665 @@
+//! A thin readiness-polling wrapper over the kernel's `epoll` facility —
+//! the substrate of the event-driven connection plane (`net::plane`).
+//!
+//! No async runtime and no `libc` crate: on Linux the four syscalls
+//! (`epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd`) are declared
+//! directly against the C library the standard library already links,
+//! exactly like `util::mmap` does for `mmap`/`munmap`. On other unix
+//! targets the same API is served by `poll(2)` (slower at thousands of
+//! fds, semantically identical at test scale); on non-unix targets
+//! [`Poller::new`] fails at runtime with `Unsupported` and the network
+//! plane reports a clean startup error instead of compiling the platform
+//! out.
+//!
+//! The API is deliberately tiny and level-triggered:
+//!
+//! * [`Poller::add`] / [`Poller::modify`] / [`Poller::delete`] manage the
+//!   interest set, addressed by raw fd and tagged with a caller-chosen
+//!   `u64` token (the connection plane packs a slab slot + generation
+//!   into it);
+//! * [`Poller::wait`] blocks for readiness and fills a reusable event
+//!   buffer with portable [`Event`]s;
+//! * [`Poller::waker`] hands out a cheap cloneable [`Waker`] that any
+//!   thread can use to interrupt a `wait` (an `eventfd` on Linux, a
+//!   loopback socket pair on the fallback). Waker traffic is drained
+//!   inside `wait` and never surfaces as an event — the `bool` in
+//!   `wait`'s return says whether a wake was consumed.
+//!
+//! Level-triggered means a socket with unread bytes (or writable space)
+//! reports ready on every `wait` until drained, so a connection handler
+//! that processes only part of the available input is never stranded —
+//! the simplest model that is correct, and plenty at the fan-in scale the
+//! C10K suite pins.
+
+use std::io;
+use std::time::Duration;
+
+/// Raw file-descriptor type used by the poller API.
+#[cfg(unix)]
+pub type RawFd = std::os::fd::RawFd;
+/// Raw file-descriptor placeholder on targets without descriptors; the
+/// poller itself fails at runtime there, so this is never a live fd.
+#[cfg(not(unix))]
+pub type RawFd = i32;
+
+/// Extract the raw fd of a TCP stream for registration with a [`Poller`].
+#[cfg(unix)]
+pub fn raw_fd(stream: &std::net::TcpStream) -> RawFd {
+    std::os::fd::AsRawFd::as_raw_fd(stream)
+}
+
+/// Non-unix placeholder; unreachable in practice because [`Poller::new`]
+/// fails before anything could be registered.
+#[cfg(not(unix))]
+pub fn raw_fd(_stream: &std::net::TcpStream) -> RawFd {
+    -1
+}
+
+/// Readiness interest for a registered fd. Level-triggered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    /// Wake when the fd has bytes to read (or a peer hangup to observe).
+    pub readable: bool,
+    /// Wake when the fd can accept more outgoing bytes.
+    pub writable: bool,
+}
+
+impl Interest {
+    /// Read-only interest — the steady state of an idle connection.
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    /// Read + write interest — while a connection's write queue is
+    /// non-empty.
+    pub const READ_WRITE: Interest = Interest { readable: true, writable: true };
+}
+
+/// One readiness event delivered by [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered under.
+    pub token: u64,
+    /// Bytes are available to read (or the peer closed — a read will
+    /// observe it).
+    pub readable: bool,
+    /// The socket can accept more outgoing bytes.
+    pub writable: bool,
+    /// Peer hangup / error condition; the connection should be driven to
+    /// a read (which will surface the close) or torn down.
+    pub hangup: bool,
+}
+
+/// Token reserved for the poller's internal waker; user registrations
+/// must not use it.
+const WAKE_TOKEN: u64 = u64::MAX;
+
+// ---------------------------------------------------------------------------
+// Linux backend: epoll + eventfd.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{Event, Interest, RawFd, WAKE_TOKEN};
+    use std::fs::File;
+    use std::io::{self, Read, Write};
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    mod sys {
+        use std::os::raw::{c_int, c_uint};
+
+        pub const EPOLLIN: u32 = 0x001;
+        pub const EPOLLOUT: u32 = 0x004;
+        pub const EPOLLERR: u32 = 0x008;
+        pub const EPOLLHUP: u32 = 0x010;
+        pub const EPOLLRDHUP: u32 = 0x2000;
+
+        pub const EPOLL_CTL_ADD: c_int = 1;
+        pub const EPOLL_CTL_DEL: c_int = 2;
+        pub const EPOLL_CTL_MOD: c_int = 3;
+
+        pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+        pub const EFD_CLOEXEC: c_int = 0o2000000;
+        pub const EFD_NONBLOCK: c_int = 0o4000;
+
+        /// The kernel's `struct epoll_event`. On x86-64 the kernel ABI
+        /// packs it (no padding between `events` and `data`); everywhere
+        /// else it has natural alignment — mirror both, like libc does.
+        #[repr(C)]
+        #[cfg_attr(target_arch = "x86_64", repr(packed))]
+        #[derive(Clone, Copy)]
+        pub struct EpollEvent {
+            pub events: u32,
+            pub data: u64,
+        }
+
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+            pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        }
+    }
+
+    fn interest_mask(interest: Interest) -> u32 {
+        let mut m = sys::EPOLLRDHUP;
+        if interest.readable {
+            m |= sys::EPOLLIN;
+        }
+        if interest.writable {
+            m |= sys::EPOLLOUT;
+        }
+        m
+    }
+
+    /// Readiness poller backed by an epoll instance plus an internal
+    /// eventfd waker.
+    pub struct Poller {
+        epfd: OwnedFd,
+        wake: Arc<File>,
+        buf: Vec<sys::EpollEvent>,
+    }
+
+    /// Cheap cloneable handle that interrupts this poller's `wait`.
+    #[derive(Clone)]
+    pub struct Waker {
+        wake: Arc<File>,
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            // An eventfd write only fails if the counter would overflow
+            // (the wait side drains it) or the poller is gone — both
+            // benign for a level-triggered wake: drop the error.
+            let _ = (&*self.wake).write(&1u64.to_le_bytes());
+        }
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers; a negative return is
+            // converted to the thread errno below.
+            let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            // SAFETY: epfd is a freshly created, owned descriptor.
+            let epfd = unsafe { OwnedFd::from_raw_fd(epfd) };
+
+            // SAFETY: plain syscall; error checked below.
+            let efd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+            if efd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            // SAFETY: efd is a freshly created, owned descriptor; File
+            // takes ownership and closes it on drop.
+            let wake = Arc::new(unsafe { File::from_raw_fd(efd) });
+
+            let poller = Poller { epfd, wake, buf: vec![sys::EpollEvent { events: 0, data: 0 }; 256] };
+            poller.ctl(sys::EPOLL_CTL_ADD, poller.wake.as_raw_fd(), sys::EPOLLIN, WAKE_TOKEN)?;
+            Ok(poller)
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker { wake: Arc::clone(&self.wake) }
+        }
+
+        fn ctl(&self, op: std::os::raw::c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = sys::EpollEvent { events, data: token };
+            // SAFETY: `ev` is a live stack value for the duration of the
+            // call; the kernel copies it and keeps no reference.
+            let rc = unsafe { sys::epoll_ctl(self.epfd.as_raw_fd(), op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            debug_assert_ne!(token, WAKE_TOKEN, "token u64::MAX is reserved for the waker");
+            self.ctl(sys::EPOLL_CTL_ADD, fd, interest_mask(interest), token)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(sys::EPOLL_CTL_MOD, fd, interest_mask(interest), token)
+        }
+
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            // Pre-2.6.9 kernels demanded a non-null event for DEL; every
+            // target we run on accepts it, and passing one costs nothing.
+            self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<bool> {
+            events.clear();
+            let timeout_ms: std::os::raw::c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_millis().min(i32::MAX as u128) as i32,
+            };
+            // SAFETY: `buf` is a live Vec of `buf.len()` properly
+            // initialized events; the kernel writes at most that many.
+            let n = unsafe {
+                sys::epoll_wait(
+                    self.epfd.as_raw_fd(),
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as std::os::raw::c_int,
+                    timeout_ms,
+                )
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(false);
+                }
+                return Err(err);
+            }
+            let mut woken = false;
+            for i in 0..n as usize {
+                // Copy out of the (possibly packed) kernel struct before
+                // touching fields — never take references into it.
+                let ev = self.buf[i];
+                let bits = ev.events;
+                let token = ev.data;
+                if token == WAKE_TOKEN {
+                    woken = true;
+                    let mut drain = [0u8; 8];
+                    // Nonblocking eventfd: one read resets the counter;
+                    // WouldBlock just means another wait already drained.
+                    let _ = (&*self.wake).read(&mut drain);
+                    continue;
+                }
+                events.push(Event {
+                    token,
+                    readable: bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0,
+                    writable: bits & sys::EPOLLOUT != 0,
+                    hangup: bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0,
+                });
+            }
+            Ok(woken)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable unix fallback: poll(2) over a registration table, woken by a
+// loopback socket pair. O(n) per wait — fine at test scale, and only
+// compiled where epoll does not exist.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::{Event, Interest, RawFd, WAKE_TOKEN};
+    use std::io::{self, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    mod sys {
+        use std::os::raw::{c_int, c_uint};
+
+        pub const POLLIN: i16 = 0x001;
+        pub const POLLOUT: i16 = 0x004;
+        pub const POLLERR: i16 = 0x008;
+        pub const POLLHUP: i16 = 0x010;
+        pub const POLLNVAL: i16 = 0x020;
+
+        #[repr(C)]
+        #[derive(Clone, Copy)]
+        pub struct PollFd {
+            pub fd: i32,
+            pub events: i16,
+            pub revents: i16,
+        }
+
+        extern "C" {
+            pub fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+        }
+    }
+
+    /// Readiness poller backed by `poll(2)`; see the Linux backend for
+    /// the contract.
+    pub struct Poller {
+        registry: Arc<Mutex<Vec<(RawFd, u64, Interest)>>>,
+        wake_rx: TcpStream,
+        wake_tx: Arc<TcpStream>,
+        buf: Vec<sys::PollFd>,
+    }
+
+    /// Cheap cloneable handle that interrupts this poller's `wait`.
+    #[derive(Clone)]
+    pub struct Waker {
+        wake_tx: Arc<TcpStream>,
+    }
+
+    impl Waker {
+        pub fn wake(&self) {
+            let _ = (&*self.wake_tx).write(&[1u8]);
+        }
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // A connected loopback pair stands in for eventfd: writing a
+            // byte to one end makes the other end poll readable.
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let wake_tx = TcpStream::connect(listener.local_addr()?)?;
+            let (wake_rx, _) = listener.accept()?;
+            wake_rx.set_nonblocking(true)?;
+            wake_tx.set_nonblocking(true)?;
+            Ok(Poller {
+                registry: Arc::new(Mutex::new(Vec::new())),
+                wake_rx,
+                wake_tx: Arc::new(wake_tx),
+                buf: Vec::new(),
+            })
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker { wake_tx: Arc::clone(&self.wake_tx) }
+        }
+
+        pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            debug_assert_ne!(token, WAKE_TOKEN, "token u64::MAX is reserved for the waker");
+            let mut reg = self.registry.lock().unwrap();
+            if reg.iter().any(|&(f, _, _)| f == fd) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd already registered"));
+            }
+            reg.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut reg = self.registry.lock().unwrap();
+            for slot in reg.iter_mut() {
+                if slot.0 == fd {
+                    *slot = (fd, token, interest);
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            let mut reg = self.registry.lock().unwrap();
+            let before = reg.len();
+            reg.retain(|&(f, _, _)| f != fd);
+            if reg.len() == before {
+                return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+            }
+            Ok(())
+        }
+
+        pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<bool> {
+            events.clear();
+            self.buf.clear();
+            self.buf.push(sys::PollFd { fd: self.wake_rx.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+            let tokens: Vec<u64> = {
+                let reg = self.registry.lock().unwrap();
+                for &(fd, _, interest) in reg.iter() {
+                    let mut mask = 0i16;
+                    if interest.readable {
+                        mask |= sys::POLLIN;
+                    }
+                    if interest.writable {
+                        mask |= sys::POLLOUT;
+                    }
+                    self.buf.push(sys::PollFd { fd, events: mask, revents: 0 });
+                }
+                reg.iter().map(|&(_, t, _)| t).collect()
+            };
+            let timeout_ms: std::os::raw::c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_millis().min(i32::MAX as u128) as i32,
+            };
+            // SAFETY: `buf` is a live Vec of `buf.len()` initialized
+            // pollfd records; the kernel writes only their `revents`.
+            let n = unsafe {
+                sys::poll(self.buf.as_mut_ptr(), self.buf.len() as std::os::raw::c_uint, timeout_ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(false);
+                }
+                return Err(err);
+            }
+            let mut woken = false;
+            if self.buf[0].revents & sys::POLLIN != 0 {
+                woken = true;
+                let mut drain = [0u8; 64];
+                while matches!((&self.wake_rx).read(&mut drain), Ok(n) if n > 0) {}
+            }
+            for (i, pfd) in self.buf.iter().enumerate().skip(1) {
+                let bits = pfd.revents;
+                if bits == 0 {
+                    continue;
+                }
+                events.push(Event {
+                    token: tokens[i - 1],
+                    readable: bits & sys::POLLIN != 0,
+                    writable: bits & sys::POLLOUT != 0,
+                    hangup: bits & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+                });
+            }
+            Ok(woken)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-unix stub: construction fails at runtime with a clean error, so the
+// network plane reports "unsupported platform" instead of hanging or
+// compiling out.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(unix))]
+mod imp {
+    use super::{Event, Interest, RawFd};
+    use std::io;
+    use std::time::Duration;
+
+    /// Stub poller for targets without readiness syscalls; `new` fails.
+    pub struct Poller {
+        _never: std::convert::Infallible,
+    }
+
+    /// Stub waker; never constructed because the stub poller cannot be.
+    #[derive(Clone)]
+    pub struct Waker {}
+
+    impl Waker {
+        pub fn wake(&self) {}
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "readiness polling is not available on this platform",
+            ))
+        }
+
+        pub fn waker(&self) -> Waker {
+            Waker {}
+        }
+
+        pub fn add(&self, _fd: RawFd, _token: u64, _interest: Interest) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn modify(&self, _fd: RawFd, _token: u64, _interest: Interest) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn delete(&self, _fd: RawFd) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        pub fn wait(&mut self, _events: &mut Vec<Event>, _timeout: Option<Duration>) -> io::Result<bool> {
+            unreachable!("stub poller cannot be constructed")
+        }
+    }
+}
+
+/// Readiness poller: a registered-interest set plus a blocking wait.
+///
+/// Backed by epoll on Linux, `poll(2)` on other unixes, and a
+/// runtime-`Unsupported` stub elsewhere. See the module docs for the
+/// contract; all backends are level-triggered.
+pub struct Poller {
+    imp: imp::Poller,
+}
+
+/// Cheap cloneable handle that interrupts a [`Poller::wait`] from any
+/// thread. Wakes are consumed inside `wait` (its `bool` return) and never
+/// surface as [`Event`]s.
+#[derive(Clone)]
+pub struct Waker {
+    imp: imp::Waker,
+}
+
+impl Waker {
+    /// Interrupt the poller's current (or next) `wait`. Never blocks,
+    /// never fails; redundant wakes coalesce.
+    pub fn wake(&self) {
+        self.imp.wake()
+    }
+}
+
+impl Poller {
+    /// Create a poller (and its internal waker fd). Fails with
+    /// `Unsupported` on platforms without readiness syscalls.
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller { imp: imp::Poller::new()? })
+    }
+
+    /// A cloneable waker bound to this poller.
+    pub fn waker(&self) -> Waker {
+        Waker { imp: self.imp.waker() }
+    }
+
+    /// Register `fd` under `token` with the given interest. `token` must
+    /// not be `u64::MAX` (reserved for the internal waker), and `fd` must
+    /// stay open until [`Poller::delete`].
+    pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.imp.add(fd, token, interest)
+    }
+
+    /// Replace the registration of `fd` (token and interest) in place.
+    pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.imp.modify(fd, token, interest)
+    }
+
+    /// Remove `fd` from the interest set. Call before closing the fd —
+    /// a closed fd auto-deregisters from epoll, but the fallback backend
+    /// keeps a table.
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.imp.delete(fd)
+    }
+
+    /// Block until readiness, a wake, or `timeout` (None = forever).
+    /// Fills `events` (cleared first) with ready registrations and
+    /// returns whether a [`Waker::wake`] was consumed. `EINTR` returns
+    /// `Ok(false)` with no events rather than an error.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<bool> {
+        self.imp.wait(events, timeout)
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn readable_event_fires_for_pending_bytes() {
+        let mut poller = Poller::new().unwrap();
+        let (mut a, b) = loopback_pair();
+        b.set_nonblocking(true).unwrap();
+        poller.add(raw_fd(&b), 7, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        // Nothing pending: times out with no events.
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+
+        a.write_all(b"ping").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        // Level-triggered: still readable until drained.
+        poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert_eq!(events.len(), 1, "level-triggered readiness must persist");
+        let mut buf = [0u8; 8];
+        assert_eq!((&b).read(&mut buf).unwrap(), 4);
+
+        poller.delete(raw_fd(&b)).unwrap();
+        drop(a);
+    }
+
+    #[test]
+    fn write_interest_toggles_via_modify() {
+        let mut poller = Poller::new().unwrap();
+        let (a, b) = loopback_pair();
+        b.set_nonblocking(true).unwrap();
+        poller.add(raw_fd(&b), 3, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "read-only interest on an idle socket is quiet");
+
+        poller.modify(raw_fd(&b), 3, Interest::READ_WRITE).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.writable));
+
+        poller.delete(raw_fd(&b)).unwrap();
+        drop(a);
+    }
+
+    #[test]
+    fn waker_interrupts_wait_from_another_thread() {
+        let mut poller = Poller::new().unwrap();
+        let waker = poller.waker();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            waker.wake();
+        });
+        let mut events = Vec::new();
+        let woken = poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(woken, "wake must interrupt the wait");
+        assert!(events.is_empty(), "the waker never surfaces as an event");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn hangup_or_readable_reported_on_peer_close() {
+        let mut poller = Poller::new().unwrap();
+        let (a, b) = loopback_pair();
+        b.set_nonblocking(true).unwrap();
+        poller.add(raw_fd(&b), 11, Interest::READ).unwrap();
+        drop(a);
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(events.len(), 1);
+        // A close may surface as readable-EOF, hangup, or both; either
+        // way a read observes it.
+        assert!(events[0].readable || events[0].hangup);
+        poller.delete(raw_fd(&b)).unwrap();
+    }
+}

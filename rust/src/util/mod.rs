@@ -4,6 +4,7 @@
 
 pub mod backoff;
 pub mod cli;
+pub mod epoll;
 pub mod fault;
 pub mod json;
 pub mod log;

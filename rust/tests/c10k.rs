@@ -1,0 +1,695 @@
+//! Adversarial C10K suite for the event-driven connection plane (PR 9):
+//! real TCP on 127.0.0.1, a pipelined `NetClient` (and raw sockets where
+//! determinism demands a single write), thousands of mostly-idle
+//! connections, and seeded fault schedules from [`lcquant::util::fault`].
+//!
+//! The load-bearing assertions:
+//!
+//! * a client holding `window` request ids in flight gets **every** slot
+//!   answered bit-identically to a direct `LutEngine` forward — replies
+//!   are matched by id, so out-of-order completion is safe;
+//! * the per-connection pipeline bound sheds excess requests with a
+//!   typed `Overloaded` error *per request id* and the connection
+//!   survives — never a hang, never a dropped id;
+//! * under a pinned fault seed the router's retry/failover counters
+//!   reconcile with the injected fault totals **exactly** (the fault
+//!   registry is count-based, so totals are deterministic regardless of
+//!   interleaving): with suspect-grade faults,
+//!   `injected == retries + requests_shed` and `failovers == retries`;
+//!   with down-grade faults (conn drop / corrupt) every injection is
+//!   accounted for by a retry or a shed — `retries <= injected <=
+//!   retries + requests_shed` — and every request is still answered
+//!   bit-identically or shed typed;
+//! * the open-loop scenarios ([`loadgen::run_poisson`],
+//!   [`loadgen::run_idle_army`], [`loadgen::run_slow_loris`]) report
+//!   exact shed-vs-answered counts under a fixed seed, including a
+//!   1000-connection idle army multiplexed onto two net threads (gated
+//!   behind an `RLIMIT_NOFILE` check that skips cleanly — it never
+//!   flakes on a small fd budget);
+//! * `docs/wire-protocol.md` and `docs/ARCHITECTURE.md` name the
+//!   pipelining contract and the event plane this suite pins.
+//!
+//! `ci.sh` and `make tier1` run this file under the default thread
+//! policy and again with `LCQUANT_THREADS=2` (`make smoke-c10k`).
+//!
+//! The process-global fault registry is shared by every test in this
+//! binary, so tests that install plans or forward through a router
+//! serialize on [`lock`].
+
+use lcquant::linalg::Mat;
+use lcquant::net::loadgen;
+use lcquant::net::proto::{self, ErrorCode, Frame, FrameReader, RequestFrame};
+use lcquant::net::{
+    FabricConfig, IdleArmyConfig, NetClient, NetConfig, NetServer, PoissonConfig, RouterConfig,
+    RouterServer, ShardConfig, SlowLorisConfig,
+};
+use lcquant::nn::{Activation, MlpSpec};
+use lcquant::quant::{LayerQuantizer, Scheme};
+use lcquant::serve::{EngineScratch, LutEngine, PackedModel, Registry, ServerConfig};
+use lcquant::util::backoff::BackoffCfg;
+use lcquant::util::fault::{self, FaultKind, FaultPlan, FaultStream};
+use lcquant::util::rng::Rng;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serialize fault-installing and router-forwarding tests: the fault
+/// registry is process-global, and the exact-count assertions need the
+/// only injected traffic to be their own.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn toy_packed(name: &str, scheme: &Scheme, seed: u64) -> PackedModel {
+    let spec = MlpSpec {
+        sizes: vec![12, 8, 4],
+        hidden_activation: Activation::Tanh,
+        dropout_keep: vec![],
+    };
+    let mut rng = Rng::new(seed);
+    let mut codebooks = Vec::new();
+    let mut assignments = Vec::new();
+    let mut biases = Vec::new();
+    for l in 0..spec.n_layers() {
+        let n = spec.sizes[l] * spec.sizes[l + 1];
+        let w: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.5)).collect();
+        let out = LayerQuantizer::new(scheme.clone(), seed + l as u64).compress(&w);
+        codebooks.push(out.codebook);
+        assignments.push(out.assignments);
+        biases.push((0..spec.sizes[l + 1]).map(|_| rng.normal(0.0, 0.1)).collect());
+    }
+    PackedModel::from_parts(name, &spec, scheme, &codebooks, &assignments, &biases).unwrap()
+}
+
+fn toy_registry() -> (Arc<Registry>, PackedModel) {
+    let packed = toy_packed("toy-k4", &Scheme::AdaptiveCodebook { k: 4 }, 11);
+    let mut reg = Registry::new();
+    reg.insert(packed.clone()).unwrap();
+    (Arc::new(reg), packed)
+}
+
+fn serve_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(1),
+        pipeline_depth: 2,
+    }
+}
+
+/// A server on an ephemeral loopback port with the given net knobs.
+fn start_server(reg: Arc<Registry>, net: NetConfig) -> NetServer {
+    NetServer::start(reg, serve_cfg(), net).expect("bind server")
+}
+
+fn loopback_net() -> NetConfig {
+    NetConfig {
+        bind_addr: "127.0.0.1:0".to_string(),
+        max_connections: 8,
+        ..NetConfig::default()
+    }
+}
+
+/// A deterministic router fronting `replicas`: zero backoff, no active
+/// prober (health changes only through request traffic), generous
+/// deadline, and a pipeline bound wide enough that the fault tests
+/// exercise the fabric, not the write queue.
+fn router_over(replicas: &[String], net: NetConfig) -> RouterServer {
+    RouterServer::start(RouterConfig {
+        net,
+        fabric: FabricConfig {
+            shards: vec![ShardConfig { models: Vec::new(), replicas: replicas.to_vec() }],
+            retry_budget: 4,
+            deadline: Duration::from_secs(30),
+            backoff: BackoffCfg::ZERO,
+            probe_every: Duration::ZERO,
+            connect_timeout: Duration::from_secs(1),
+            seed: 7,
+        },
+    })
+    .expect("bind router")
+}
+
+fn router_net() -> NetConfig {
+    NetConfig {
+        bind_addr: "127.0.0.1:0".to_string(),
+        max_connections: 8,
+        max_inflight: 32,
+        ..NetConfig::default()
+    }
+}
+
+fn expected_bits(engine: &LutEngine, input: &[f32]) -> Vec<u32> {
+    let mut x = Mat::zeros(1, engine.in_dim());
+    x.row_mut(0).copy_from_slice(input);
+    let mut scratch = EngineScratch::new();
+    let out = engine.forward_into(&x, &mut scratch).unwrap();
+    out.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Drive `total` distinct single-row requests through `infer_pipelined`
+/// with `window` ids in flight, asserting every slot is answered
+/// bit-identically or shed with a typed `Overloaded` error. Returns
+/// `(ok, shed)`.
+fn drive_pipelined_matrix(
+    client: &mut NetClient,
+    engine: &LutEngine,
+    rng: &mut Rng,
+    total: usize,
+    window: usize,
+) -> (usize, usize) {
+    let in_dim = engine.in_dim();
+    let (mut ok, mut shed) = (0usize, 0usize);
+    let mut issued = 0usize;
+    while issued < total {
+        let w = window.min(total - issued);
+        let mut inputs = vec![0.0f32; in_dim * w];
+        rng.fill_normal(&mut inputs, 0.0, 1.0);
+        let rows: Vec<&[f32]> = inputs.chunks(in_dim).collect();
+        let results = client.infer_pipelined("toy-k4", &rows, w);
+        assert_eq!(results.len(), w, "one result per submitted row");
+        for (slot, result) in results.into_iter().enumerate() {
+            match result {
+                Ok(got) => {
+                    let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        got_bits,
+                        expected_bits(engine, rows[slot]),
+                        "pipelined slot {slot} must be bit-identical",
+                    );
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(e.is_overloaded(), "slot {slot}: non-overload error {e:?}");
+                    shed += 1;
+                }
+            }
+        }
+        issued += w;
+    }
+    (ok, shed)
+}
+
+/// Raw-socket handshake: client preamble out, server preamble + hello
+/// consumed. Generic over the stream so [`FaultStream`] wraps it too.
+fn raw_handshake<S: Read + Write>(stream: &mut S) -> FrameReader {
+    stream.write_all(&proto::encode_preamble()).unwrap();
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    stream.read_exact(&mut pre).unwrap();
+    assert_eq!(proto::decode_preamble(&pre).unwrap(), proto::VERSION);
+    let mut reader = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+    loop {
+        match reader.poll_frame(stream) {
+            Ok(Some(Frame::Hello(_))) => return reader,
+            Ok(Some(f)) => panic!("expected hello, got {f:?}"),
+            Ok(None) => continue,
+            Err(e) => panic!("handshake failed: {e}"),
+        }
+    }
+}
+
+fn request_frame(id: u64, input: &[f32]) -> Vec<u8> {
+    Frame::Request(RequestFrame {
+        id,
+        model: "toy-k4".to_string(),
+        rows: 1,
+        cols: input.len() as u32,
+        data: input.to_vec(),
+    })
+    .to_bytes()
+}
+
+// ---- 1. pipelined round trips are out-of-order-safe --------------------
+
+#[test]
+fn pipelined_window_answers_every_slot_bit_identically() {
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let server = start_server(
+        Arc::clone(&reg),
+        NetConfig { max_inflight: 32, ..loopback_net() },
+    );
+    let mut client = NetClient::connect(&server.local_addr().to_string()).unwrap();
+    let mut rng = Rng::new(901);
+    // distinct inputs per slot: a response matched to the wrong id would
+    // fail the bit-identity check, so this pins id matching, not just
+    // transport health
+    let (ok, shed) = drive_pipelined_matrix(&mut client, &engine, &mut rng, 32, 8);
+    assert_eq!((ok, shed), (32, 0));
+    let snap = server.stats();
+    assert_eq!(snap.requests_ok, 32);
+    assert_eq!(snap.requests_shed, 0);
+    assert_eq!(snap.requests_failed, 0);
+    assert_eq!(snap.writeq_sheds, 0);
+    assert_eq!(snap.frame_timeouts, 0);
+}
+
+// ---- 2. the pipeline bound sheds typed, per id, and survives -----------
+
+#[test]
+fn pipeline_bound_sheds_excess_ids_typed_and_connection_survives() {
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let server = start_server(
+        Arc::clone(&reg),
+        NetConfig { max_inflight: 2, ..loopback_net() },
+    );
+    let mut rng = Rng::new(902);
+    let total = 16usize;
+    let in_dim = engine.in_dim();
+    let mut inputs = vec![0.0f32; in_dim * total];
+    rng.fill_normal(&mut inputs, 0.0, 1.0);
+    let rows: Vec<&[f32]> = inputs.chunks(in_dim).collect();
+
+    // one write_all of all 16 request frames (~1.5 KiB, a single
+    // loopback segment) so the server decodes them in one readable
+    // batch — the bound must trip, deterministically, before the first
+    // micro-batch completion can drain the pipeline
+    let mut burst = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        burst.extend_from_slice(&request_frame(i as u64 + 1, row));
+    }
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = raw_handshake(&mut stream);
+    stream.write_all(&burst).unwrap();
+
+    // collect one reply per id; shed errors for later ids are enqueued
+    // before the first responses complete, so replies arrive out of
+    // request order — id matching is what keeps the books straight
+    let mut outcomes: Vec<Option<Result<Vec<u32>, ErrorCode>>> = vec![None; total];
+    let mut seen = 0usize;
+    while seen < total {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::Response(r))) => {
+                let slot = (r.id - 1) as usize;
+                assert!(outcomes[slot].is_none(), "duplicate reply for id {}", r.id);
+                outcomes[slot] = Some(Ok(r.data.iter().map(|v| v.to_bits()).collect()));
+                seen += 1;
+            }
+            Ok(Some(Frame::Error(e))) => {
+                assert_ne!(e.id, 0, "unexpected connection-level error: {e:?}");
+                let slot = (e.id - 1) as usize;
+                assert!(outcomes[slot].is_none(), "duplicate reply for id {}", e.id);
+                outcomes[slot] = Some(Err(e.code));
+                seen += 1;
+            }
+            Ok(Some(f)) => panic!("unexpected frame {f:?}"),
+            Ok(None) => continue,
+            Err(e) => panic!("wire error mid-burst: {e}"),
+        }
+    }
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for (slot, outcome) in outcomes.iter().enumerate() {
+        match outcome.as_ref().expect("every id answered") {
+            Ok(bits) => {
+                assert_eq!(bits, &expected_bits(&engine, rows[slot]), "slot {slot}");
+                ok += 1;
+            }
+            Err(code) => {
+                assert_eq!(*code, ErrorCode::Overloaded, "slot {slot} shed must be typed");
+                shed += 1;
+            }
+        }
+    }
+    // the first two ids always fit under max_inflight = 2; the rest of
+    // the burst lands while they are still in compute, so at least one
+    // later id must hit the bound
+    assert!(outcomes[0].as_ref().unwrap().is_ok(), "id 1 fits under the bound");
+    assert!(outcomes[1].as_ref().unwrap().is_ok(), "id 2 fits under the bound");
+    assert!(shed >= 1, "a 16-id burst against max_inflight=2 must shed");
+    assert_eq!(ok + shed, total);
+
+    let snap = server.stats();
+    assert_eq!(snap.requests_ok, ok as u64);
+    assert_eq!(snap.requests_shed, shed as u64);
+    assert_eq!(snap.writeq_sheds, shed as u64, "every shed here is a pipeline-bound shed");
+    assert_eq!(snap.requests_failed, 0);
+
+    // the connection survives its sheds: a lockstep request still works
+    let follow = request_frame(17, rows[0]);
+    stream.write_all(&follow).unwrap();
+    loop {
+        match reader.poll_frame(&mut stream) {
+            Ok(Some(Frame::Response(r))) => {
+                assert_eq!(r.id, 17);
+                let bits: Vec<u32> = r.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, expected_bits(&engine, rows[0]));
+                break;
+            }
+            Ok(Some(f)) => panic!("unexpected frame {f:?}"),
+            Ok(None) => continue,
+            Err(e) => panic!("wire error on follow-up: {e}"),
+        }
+    }
+}
+
+// ---- 3. fault matrix: suspect-grade faults reconcile exactly -----------
+
+#[test]
+fn pipelined_overload_schedule_reconciles_with_retry_counters_exactly() {
+    let _g = lock();
+    fault::clear();
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let b0 = start_server(Arc::clone(&reg), loopback_net());
+    let b1 = start_server(Arc::clone(&reg), loopback_net());
+    let router = router_over(
+        &[b0.local_addr().to_string(), b1.local_addr().to_string()],
+        router_net(),
+    );
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+    fault::install(&FaultPlan::new(0xFEED).with(FaultKind::Overload, 0.25));
+
+    let mut rng = Rng::new(903);
+    let total = 64usize;
+    let (ok, shed) = drive_pipelined_matrix(&mut client, &engine, &mut rng, total, 8);
+    let injected = fault::injected(FaultKind::Overload);
+    fault::clear();
+
+    assert_eq!(ok + shed, total, "every id answered or shed — never lost");
+    let snap = router.stats();
+    assert_eq!(snap.requests_ok, ok as u64);
+    assert_eq!(snap.requests_shed, shed as u64);
+    assert_eq!(snap.requests_failed, 0);
+    // count-based injection makes the totals deterministic under ANY
+    // worker interleaving: an injected overload either triggers a retry
+    // (suspect-grade — the replica is never marked down, so the retry
+    // always has somewhere to go) or, on a request's last budgeted
+    // attempt, becomes a typed shed. Nothing else retries or sheds.
+    assert_eq!(
+        injected,
+        snap.retries + snap.requests_shed,
+        "every injected overload is a retry or a shed",
+    );
+    // with two live replicas the picker always avoids the one that just
+    // failed, so every retry is a failover
+    assert_eq!(snap.failovers, snap.retries);
+    // 64 requests guarantee >= 64 forward attempts at rate 0.25
+    assert!(injected >= 16, "schedule must actually fire (got {injected})");
+}
+
+// ---- 4. fault matrix: down-grade faults (conn drop + corrupt) ----------
+
+#[test]
+fn pipelined_conn_drop_corrupt_schedule_never_hangs_and_books_balance() {
+    let _g = lock();
+    fault::clear();
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let b0 = start_server(Arc::clone(&reg), loopback_net());
+    let b1 = start_server(Arc::clone(&reg), loopback_net());
+    let router = router_over(
+        &[b0.local_addr().to_string(), b1.local_addr().to_string()],
+        router_net(),
+    );
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+    fault::install(
+        &FaultPlan::new(0xD00F)
+            .with(FaultKind::ConnDrop, 0.1)
+            .with(FaultKind::Corrupt, 0.1),
+    );
+
+    // both kinds are down-grade: a drop fails the dial, a corrupt
+    // request makes the backend answer Malformed and the router treats
+    // the connection as poisoned. With no prober configured, each
+    // firing downs one replica for good — after two firings the fabric
+    // is exhausted and everything left sheds typed. The suite's bar:
+    // every id still gets an answer or a typed shed, and the books
+    // still reconcile with the injected totals.
+    let mut rng = Rng::new(904);
+    let total = 64usize;
+    let (ok, shed) = drive_pipelined_matrix(&mut client, &engine, &mut rng, total, 8);
+    let injected = fault::injected(FaultKind::ConnDrop) + fault::injected(FaultKind::Corrupt);
+    fault::clear();
+
+    assert_eq!(ok + shed, total, "every id answered or shed — never lost");
+    let snap = router.stats();
+    assert_eq!(snap.requests_ok, ok as u64);
+    assert_eq!(snap.requests_shed, shed as u64);
+    assert_eq!(snap.requests_failed, 0);
+    // every retry is caused by exactly one injection; an injection on a
+    // request's last budgeted attempt sheds instead of retrying, and
+    // fabric-exhausted requests shed without a preceding injection — so
+    // the tallies sandwich exactly:
+    assert!(snap.retries <= injected, "retries {} > injected {injected}", snap.retries);
+    assert!(
+        injected <= snap.retries + snap.requests_shed,
+        "injected {injected} unaccounted for ({} retries, {} sheds)",
+        snap.retries,
+        snap.requests_shed,
+    );
+    // 64 requests give the two firings needed to exhaust both replicas
+    assert!(injected >= 2, "schedule must down both replicas (got {injected})");
+    assert!(snap.requests_shed >= 1, "an exhausted fabric must shed");
+    assert!(snap.health_transitions >= 2, "both replicas must transition to down");
+
+    // post-collapse the client still gets typed sheds, never a hang or
+    // a transport error
+    let mut input = vec![0.0f32; engine.in_dim()];
+    rng.fill_normal(&mut input, 0.0, 1.0);
+    match client.infer("toy-k4", &input) {
+        Ok(_) => panic!("fabric is exhausted; an answer means health leaked"),
+        Err(e) => assert!(e.is_overloaded(), "post-collapse error must be typed: {e:?}"),
+    }
+}
+
+// ---- 5. stalled client streams (read/write stall schedule) -------------
+
+#[test]
+fn stalled_client_stream_round_trips_bit_identically() {
+    let _g = lock();
+    fault::clear();
+    let (reg, packed) = toy_registry();
+    let engine = LutEngine::new(&packed).unwrap();
+    let server = start_server(
+        Arc::clone(&reg),
+        NetConfig { max_inflight: 32, ..loopback_net() },
+    );
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    // every read and write through the wrapper stalls 2 ms: a client
+    // this slow dribbles request bytes across many server poll ticks,
+    // but keeps making progress — the frame deadline must not fire
+    fault::install(
+        &FaultPlan::new(0x51A1)
+            .with(FaultKind::ReadStall, 1.0)
+            .with(FaultKind::WriteStall, 1.0)
+            .stall(Duration::from_millis(2)),
+    );
+    let mut fs = FaultStream::new(stream);
+    let mut reader = raw_handshake(&mut fs);
+    let mut rng = Rng::new(905);
+    let in_dim = engine.in_dim();
+    let total = 8usize;
+    let mut inputs = vec![0.0f32; in_dim * total];
+    rng.fill_normal(&mut inputs, 0.0, 1.0);
+    let rows: Vec<&[f32]> = inputs.chunks(in_dim).collect();
+    for (i, row) in rows.iter().enumerate() {
+        fs.write_all(&request_frame(i as u64 + 1, row)).unwrap();
+    }
+    let mut seen = 0usize;
+    while seen < total {
+        match reader.poll_frame(&mut fs) {
+            Ok(Some(Frame::Response(r))) => {
+                let slot = (r.id - 1) as usize;
+                let bits: Vec<u32> = r.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, expected_bits(&engine, rows[slot]), "slot {slot}");
+                seen += 1;
+            }
+            Ok(Some(f)) => panic!("unexpected frame {f:?}"),
+            Ok(None) => continue,
+            Err(e) => panic!("wire error under stall schedule: {e}"),
+        }
+    }
+    let stalls = fault::injected(FaultKind::ReadStall) + fault::injected(FaultKind::WriteStall);
+    fault::clear();
+    assert!(stalls >= total as u64, "rate-1.0 stalls must fire every call (got {stalls})");
+    let snap = server.stats();
+    assert_eq!(snap.requests_ok, total as u64);
+    assert_eq!(snap.frame_timeouts, 0, "a slow-but-progressing client is not a loris");
+}
+
+// ---- 6. open-loop Poisson bursts: exact counts under a fixed seed ------
+
+#[test]
+fn poisson_open_loop_counts_are_exact() {
+    let (reg, _) = toy_registry();
+    let server = start_server(
+        Arc::clone(&reg),
+        NetConfig { max_connections: 16, ..loopback_net() },
+    );
+    let cfg = PoissonConfig::new(&server.local_addr().to_string());
+    let report = loadgen::run_poisson(&cfg).expect("poisson run");
+    // arrival *times* are random; offered *counts* are not
+    let want = cfg.load.connections * cfg.bursts * cfg.load.pipeline;
+    assert_eq!(report.sent, want);
+    assert_eq!(report.ok, want, "an unloaded server answers every burst");
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.failed, 0);
+    let snap = server.stats();
+    assert_eq!(snap.requests_ok, want as u64);
+    assert_eq!(snap.requests_shed, 0);
+    assert_eq!(snap.frame_timeouts, 0);
+}
+
+// ---- 7. slow-loris army: typed Timeout on server and router ------------
+
+#[test]
+fn slow_loris_army_is_shed_typed_by_server_and_router() {
+    let (reg, _) = toy_registry();
+    // 6 bytes x 10 ms = 60 ms of trickle, then a stall; the 300 ms
+    // frame deadline anchors at the FIRST partial byte and progress
+    // never resets it, so the verdict lands deterministically after
+    // the trickle has already finished — no write-vs-close race
+    let deadline = Duration::from_millis(300);
+    let server = start_server(
+        Arc::clone(&reg),
+        NetConfig { frame_deadline: deadline, ..loopback_net() },
+    );
+    let report =
+        loadgen::run_slow_loris(&SlowLorisConfig::new(&server.local_addr().to_string()))
+            .expect("loris run vs server");
+    assert_eq!(report.timed_out, report.connections, "every loris gets a typed Timeout");
+    assert_eq!(report.closed_unanswered, 0);
+    assert_eq!(report.failed, 0, "a hung loris means the deadline scanner is broken");
+    let snap = server.stats();
+    assert_eq!(snap.frame_timeouts, report.connections as u64);
+    assert_eq!(snap.requests_ok, 0, "a loris never completes a request");
+
+    // the router's front plane is the same event plane: same verdict,
+    // and the backends behind it never see a single frame
+    let backend = start_server(Arc::clone(&reg), loopback_net());
+    let router = router_over(
+        &[backend.local_addr().to_string()],
+        NetConfig { frame_deadline: deadline, ..router_net() },
+    );
+    let report =
+        loadgen::run_slow_loris(&SlowLorisConfig::new(&router.local_addr().to_string()))
+            .expect("loris run vs router");
+    assert_eq!(report.timed_out, report.connections);
+    assert_eq!(report.closed_unanswered, 0);
+    assert_eq!(report.failed, 0);
+    assert_eq!(router.stats().frame_timeouts, report.connections as u64);
+    assert_eq!(backend.stats().frame_timeouts, 0);
+    assert_eq!(backend.stats().requests_ok, 0);
+}
+
+// ---- 8. idle army: camped herd + live traffic on two net threads -------
+
+#[test]
+fn idle_army_camps_while_active_traffic_is_served() {
+    let (reg, _) = toy_registry();
+    let server = start_server(
+        Arc::clone(&reg),
+        NetConfig { max_connections: 96, ..loopback_net() },
+    );
+    let cfg = IdleArmyConfig::new(&server.local_addr().to_string());
+    let report = loadgen::run_idle_army(&cfg).expect("idle army run");
+    assert_eq!(report.idle_held, cfg.connections, "the whole herd must camp");
+    assert_eq!(report.idle_refused, 0);
+    assert_eq!(report.idle_failed, 0);
+    let want = cfg.active * cfg.requests_per_active;
+    assert_eq!(report.sent, want);
+    assert_eq!(report.ok, want, "a camped herd must not starve live traffic");
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.failed, 0);
+    assert_eq!(server.stats().requests_ok, want as u64);
+}
+
+/// Soft `RLIMIT_NOFILE` from `/proc/self/limits`; `None` when the file
+/// is absent or unparseable (non-Linux), which the gated test treats as
+/// "skip cleanly".
+fn nofile_soft_limit() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/limits").ok()?;
+    for line in text.lines() {
+        if line.starts_with("Max open files") {
+            let soft = line.split_whitespace().nth(3)?;
+            if soft == "unlimited" {
+                return Some(u64::MAX);
+            }
+            return soft.parse().ok();
+        }
+    }
+    None
+}
+
+// ---- 9. C10K: a 1000-connection army on a fixed net-thread pool --------
+
+#[test]
+fn c10k_thousand_idle_connections_on_two_net_threads() {
+    // both socket ends live in this process, so the fd bill is roughly
+    // 2x the herd plus listener/client/pool overhead
+    let herd = 1000usize;
+    let need = (2 * herd + 256) as u64;
+    match nofile_soft_limit() {
+        Some(limit) if limit >= need => {}
+        other => {
+            eprintln!(
+                "skipping c10k idle army: RLIMIT_NOFILE soft limit {:?} < {} needed",
+                other, need
+            );
+            return;
+        }
+    }
+    let (reg, _) = toy_registry();
+    let army = |addr: &str| IdleArmyConfig {
+        connections: herd,
+        handshake_timeout: Duration::from_secs(10),
+        ..IdleArmyConfig::new(addr)
+    };
+
+    // the epoll server: 1000 camped sockets + live traffic on the
+    // default two net threads — the fixed pool is the point
+    let server = start_server(
+        Arc::clone(&reg),
+        NetConfig { max_connections: 1100, net_threads: 2, ..loopback_net() },
+    );
+    let cfg = army(&server.local_addr().to_string());
+    let report = loadgen::run_idle_army(&cfg).expect("c10k army vs server");
+    assert_eq!(report.idle_held, herd, "server must hold the full herd");
+    assert_eq!(report.idle_refused, 0);
+    assert_eq!(report.idle_failed, 0);
+    let want = cfg.active * cfg.requests_per_active;
+    assert_eq!(report.ok, want, "live traffic must not starve behind the herd");
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.failed, 0);
+    drop(server);
+
+    // the router tier runs the same plane: same herd, same verdict
+    let backend = start_server(Arc::clone(&reg), loopback_net());
+    let router = router_over(
+        &[backend.local_addr().to_string()],
+        NetConfig { max_connections: 1100, net_threads: 2, ..router_net() },
+    );
+    let cfg = army(&router.local_addr().to_string());
+    let report = loadgen::run_idle_army(&cfg).expect("c10k army vs router");
+    assert_eq!(report.idle_held, herd, "router must hold the full herd");
+    assert_eq!(report.idle_refused, 0);
+    assert_eq!(report.idle_failed, 0);
+    assert_eq!(report.ok, want);
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.failed, 0);
+}
+
+// ---- 10. docs name what this suite pins --------------------------------
+
+fn doc(path: &str) -> String {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+#[test]
+fn docs_name_the_event_plane_and_the_pipelining_contract() {
+    let wire = doc("docs/wire-protocol.md");
+    for needle in ["Pipelining", "max_inflight", "submission order", "Overloaded"] {
+        assert!(wire.contains(needle), "wire-protocol.md must mention {needle:?}");
+    }
+    let arch = doc("docs/ARCHITECTURE.md");
+    for needle in ["epoll", "net thread", "acceptor", "frame_deadline"] {
+        assert!(arch.contains(needle), "ARCHITECTURE.md must mention {needle:?}");
+    }
+    let obs = doc("docs/OBSERVABILITY.md");
+    for needle in ["net_epoll_wakeups", "net_writeq_sheds", "net_inflight"] {
+        assert!(obs.contains(needle), "OBSERVABILITY.md must mention {needle:?}");
+    }
+}

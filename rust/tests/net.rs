@@ -16,7 +16,10 @@
 //! and again with `LCQUANT_THREADS=2` (the loopback smoke test).
 
 use lcquant::linalg::{pool, Mat};
-use lcquant::net::proto::{self, ErrorCode, ErrorFrame, Frame, FrameReader, RequestFrame};
+use lcquant::net::proto::{
+    self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, ModelEntry, RequestFrame,
+    ResponseFrame, StatsRequestFrame, StatsResponseFrame, WireError,
+};
 use lcquant::net::{ClientError, NetClient, NetConfig, NetServer};
 use lcquant::nn::{Activation, MlpSpec};
 use lcquant::quant::{LayerQuantizer, Scheme};
@@ -356,6 +359,216 @@ fn stats_frame_and_snapshots_survive_stop() {
     );
     assert_eq!(server.batch_stats().requests, 1);
     assert_eq!(server.stats().stats_requests, 1);
+}
+
+// ---- adversarial FrameReader split-point suite (PR 9) -------------------
+//
+// The event plane re-enters `FrameReader::poll_frame` with whatever bytes
+// the kernel happened to deliver, so the reader must reassemble frames
+// split at *any* byte boundary — and reject hostile bytes with a typed
+// `WireError`, never a panic and never a desync of the frames before
+// them. These tests run the reader against a byte stream served in
+// hostile slices (seeded PRNG chop points, a WouldBlock before every
+// slice — the nonblocking-socket waltz).
+
+/// Serves a fixed byte stream in slices: a `WouldBlock` at every cut
+/// position (each fires once), bytes between cuts, then `WouldBlock`
+/// forever — or EOF (`Ok(0)`), when `eof` is set.
+struct SplitReader {
+    data: Vec<u8>,
+    pos: usize,
+    cuts: Vec<usize>, // sorted ascending; consumed front-first
+    next_cut: usize,
+    eof: bool,
+}
+
+impl SplitReader {
+    fn new(data: Vec<u8>, mut cuts: Vec<usize>, eof: bool) -> SplitReader {
+        cuts.retain(|&c| c > 0 && c < data.len());
+        cuts.sort_unstable();
+        cuts.dedup();
+        SplitReader { data, pos: 0, cuts, next_cut: 0, eof }
+    }
+}
+
+impl Read for SplitReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            if self.eof {
+                return Ok(0);
+            }
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        if self.next_cut < self.cuts.len() && self.cuts[self.next_cut] == self.pos {
+            self.next_cut += 1;
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        let stop = if self.next_cut < self.cuts.len() {
+            self.cuts[self.next_cut]
+        } else {
+            self.data.len()
+        };
+        let n = stop.min(self.pos + buf.len()).min(self.data.len()) - self.pos;
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Drive one `FrameReader` over the sliced stream to the bitter end:
+/// every frame it produces, plus the terminal error if the stream ends
+/// in one (None = the reader just ran dry, which is the correct ending
+/// for a purely valid stream).
+fn run_reader(data: &[u8], cuts: Vec<usize>, eof: bool) -> (Vec<Frame>, Option<WireError>) {
+    let mut src = SplitReader::new(data.to_vec(), cuts, eof);
+    let mut fr = FrameReader::new(proto::DEFAULT_MAX_FRAME);
+    let mut frames = Vec::new();
+    let mut dry_polls = 0usize;
+    loop {
+        match fr.poll_frame(&mut src) {
+            Ok(Some(f)) => frames.push(f),
+            Ok(None) => {
+                dry_polls += 1;
+                if dry_polls > data.len() * 2 + 128 {
+                    return (frames, None);
+                }
+            }
+            Err(e) => return (frames, Some(e)),
+        }
+    }
+}
+
+/// One frame of every wire type, with awkward content on purpose:
+/// id extremes, a negative-zero f32 (its sign bit must survive), empty
+/// and non-ASCII strings, JSON with escapes.
+fn frame_menu(rng: &mut Rng) -> Vec<Frame> {
+    let data6: Vec<f32> = (0..6).map(|_| rng.normal(0.0, 1.0)).collect();
+    let data4: Vec<f32> = (0..4).map(|_| rng.normal(0.0, 1.0)).collect();
+    vec![
+        Frame::Hello(HelloFrame {
+            models: vec![
+                ModelEntry { name: "alpha".to_string(), in_dim: 12, out_dim: 4 },
+                ModelEntry { name: "βeta-µ".to_string(), in_dim: 300, out_dim: 10 },
+            ],
+        }),
+        Frame::Hello(HelloFrame { models: vec![] }),
+        Frame::Request(RequestFrame {
+            id: u64::MAX,
+            model: "toy-k4".to_string(),
+            rows: 2,
+            cols: 3,
+            data: data6,
+        }),
+        Frame::Request(RequestFrame {
+            id: 1,
+            model: "m".to_string(),
+            rows: 1,
+            cols: 1,
+            data: vec![-0.0],
+        }),
+        Frame::Response(ResponseFrame { id: 7, rows: 1, cols: 4, data: data4 }),
+        Frame::Error(ErrorFrame {
+            id: 0,
+            code: ErrorCode::Timeout,
+            message: "deadline — \"quoted\"\nsecond line".to_string(),
+        }),
+        Frame::StatsRequest(StatsRequestFrame { id: 42 }),
+        Frame::StatsResponse(StatsResponseFrame {
+            id: 42,
+            json: "{\"k\":[1,2,3],\"s\":\"\\\"✓\\\"\"}".to_string(),
+        }),
+    ]
+}
+
+#[test]
+fn frame_reader_decodes_every_frame_type_at_every_split_point() {
+    let mut rng = Rng::new(0xC10C);
+    for frame in frame_menu(&mut rng) {
+        let bytes = frame.to_bytes();
+        for split in 1..bytes.len() {
+            let (frames, err) = run_reader(&bytes, vec![split], false);
+            assert!(err.is_none(), "split {split}: unexpected error {err:?}");
+            assert_eq!(frames.len(), 1, "split {split}: exactly one frame");
+            // byte-identical decode: re-encoding reproduces the wire bytes
+            assert_eq!(frames[0].to_bytes(), bytes, "split {split} of {frame:?}");
+        }
+    }
+}
+
+#[test]
+fn frame_reader_survives_prng_chopped_streams() {
+    for round in 0..32u64 {
+        let mut rng = Rng::new(0xBEEF ^ round.wrapping_mul(0x9E37_79B9));
+        let menu = frame_menu(&mut rng);
+        // a random 12-frame sequence drawn from the menu, back to back
+        let mut stream = Vec::new();
+        let mut want: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..12 {
+            let bytes = menu[rng.below(menu.len())].to_bytes();
+            stream.extend_from_slice(&bytes);
+            want.push(bytes);
+        }
+        // 24 random stall points — frame boundaries carry no special
+        // protection; any of them may land mid-length-prefix, mid-f32,
+        // mid-checksum
+        let cuts: Vec<usize> = (0..24).map(|_| 1 + rng.below(stream.len() - 1)).collect();
+        let (frames, err) = run_reader(&stream, cuts, false);
+        assert!(err.is_none(), "round {round}: valid stream errored: {err:?}");
+        assert_eq!(frames.len(), want.len(), "round {round}: frame count");
+        for (i, (got, bytes)) in frames.iter().zip(&want).enumerate() {
+            assert_eq!(&got.to_bytes(), bytes, "round {round} frame {i} must decode bit-identical");
+        }
+    }
+}
+
+#[test]
+fn hostile_tails_error_typed_without_desyncing_the_valid_prefix() {
+    let mut rng = Rng::new(0xD00D);
+    let menu = frame_menu(&mut rng);
+    let valid: Vec<u8> = menu.iter().flat_map(|f| f.to_bytes()).collect();
+    let chop = |stream: &Vec<u8>, rng: &mut Rng| -> Vec<usize> {
+        (0..16).map(|_| 1 + rng.below(stream.len() - 1)).collect()
+    };
+
+    // (a) corrupt checksum: a bit flipped mid-payload after checksumming
+    let mut stream = valid.clone();
+    let mut bad = menu[2].to_bytes();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x01;
+    stream.extend_from_slice(&bad);
+    let cuts = chop(&stream, &mut rng);
+    let (frames, err) = run_reader(&stream, cuts, false);
+    assert_eq!(frames.len(), menu.len(), "every frame before the hostile one must decode");
+    for (got, f) in frames.iter().zip(&menu) {
+        assert_eq!(got.to_bytes(), f.to_bytes(), "no desync before the corruption");
+    }
+    assert!(
+        matches!(err, Some(WireError::Checksum { .. })),
+        "corruption must be a typed checksum error, got {err:?}"
+    );
+
+    // (b) oversized length prefix: rejected from the prefix alone
+    let mut stream = valid.clone();
+    stream.extend_from_slice(&((proto::DEFAULT_MAX_FRAME as u32) + 1).to_le_bytes());
+    let cuts = chop(&stream, &mut rng);
+    let (frames, err) = run_reader(&stream, cuts, false);
+    assert_eq!(frames.len(), menu.len());
+    assert!(
+        matches!(err, Some(WireError::Oversized { .. })),
+        "oversized prefix must be typed, got {err:?}"
+    );
+
+    // (c) truncated payload, then EOF: a peer dying mid-frame
+    let mut stream = valid.clone();
+    let partial = menu[0].to_bytes();
+    stream.extend_from_slice(&partial[..partial.len() * 3 / 5]);
+    let cuts = chop(&stream, &mut rng);
+    let (frames, err) = run_reader(&stream, cuts, true);
+    assert_eq!(frames.len(), menu.len());
+    assert!(
+        matches!(err, Some(WireError::Closed)),
+        "mid-frame EOF must be typed Closed, got {err:?}"
+    );
 }
 
 #[test]

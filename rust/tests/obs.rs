@@ -17,7 +17,11 @@
 //!    books balance, not approximately balance;
 //! 6. hostile `StatsRequest` frames (trailing bytes, truncated fields)
 //!    are rejected with `Malformed` and a closed connection;
-//! 7. the docs that describe all of the above actually name the metrics,
+//! 7. the snapshot stays valid at **every lifecycle point** of the epoll
+//!    plane — fresh, mid-traffic (with a second connection camped on a
+//!    partial frame), and after `stop()` — for both the `NetServer` and
+//!    the `RouterServer`;
+//! 8. the docs that describe all of the above actually name the metrics,
 //!    stages and wire tags that exist in the code.
 //!
 //! `ci.sh` and `make tier1` run this file under the default thread policy
@@ -35,13 +39,16 @@ use lcquant::data::Dataset;
 use lcquant::linalg::Mat;
 use lcquant::net::loadgen::{self, LoadGenConfig};
 use lcquant::net::proto::{self, ErrorCode, ErrorFrame, Frame, FrameReader, StatsRequestFrame};
-use lcquant::net::{NetClient, NetConfig, NetServer};
+use lcquant::net::{
+    FabricConfig, NetClient, NetConfig, NetServer, RouterConfig, RouterServer, ShardConfig,
+};
 use lcquant::nn::sgd::ClippedLrSchedule;
 use lcquant::nn::{Activation, Mlp, MlpSpec};
 use lcquant::obs::hist::{bucket_index, bucket_max_ns};
 use lcquant::obs::{self, CounterId, GaugeId, HistId, Histogram, Stage, Trace, TraceRing};
 use lcquant::quant::{LayerQuantizer, Scheme};
 use lcquant::serve::{PackedModel, Registry, ServerConfig};
+use lcquant::util::backoff::BackoffCfg;
 use lcquant::util::json::Json;
 use lcquant::util::rng::Rng;
 
@@ -326,6 +333,7 @@ fn stats_frame_round_trip_matches_loadgen_counts_exactly() {
         model: Some("toy-k4".to_string()),
         batch: 1,
         seed: 5,
+        pipeline: 1,
     })
     .expect("loadgen run");
     // an unloaded loopback server must answer everything
@@ -506,7 +514,99 @@ fn stats_request_with_truncated_id_is_malformed() {
     assert_eq!(err.code, ErrorCode::Malformed);
 }
 
-// ---- 7. the docs name what the code ships ------------------------------
+// ---- 7. snapshot validity across the plane lifecycle -------------------
+
+#[test]
+fn stats_snapshot_is_valid_at_every_lifecycle_point() {
+    // the epoll plane serves stats from its first poll tick to after
+    // stop: fresh, mid-traffic (with a second connection camped on a
+    // partial frame), and post-stop via the in-process snapshot
+    let mut server = start_toy_server();
+    let addr = server.local_addr().to_string();
+
+    // fresh: no traffic yet, the document is already complete
+    let snap = Json::parse(&server.snapshot_json()).expect("fresh snapshot JSON");
+    for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+        assert!(snap.get(key).is_some(), "fresh snapshot missing '{key}'");
+    }
+    assert_eq!(field_u64(field(&snap, "server"), "requests_ok"), 0);
+
+    // mid-traffic: one connection camps mid-frame while pipelined
+    // traffic completes on another — the snapshot must stay valid and
+    // balanced while partial-frame state is live
+    let (mut camper, _camper_reader) = raw_handshake(&addr);
+    camper.write_all(&[0xAB, 0xCD]).unwrap(); // partial length prefix, never completed
+
+    let mut client = NetClient::connect(&addr).expect("traffic connection");
+    let rows_flat = vec![0.25f32; 12 * 6];
+    let rows: Vec<&[f32]> = rows_flat.chunks(12).collect();
+    let results = client.infer_pipelined("toy-k4", &rows, 3);
+    assert!(results.iter().all(|r| r.is_ok()), "unloaded server answers every slot");
+    let body = client.stats().expect("mid-traffic stats round trip");
+    let snap = Json::parse(&body).expect("mid-traffic snapshot JSON");
+    for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+        assert!(snap.get(key).is_some(), "mid-traffic snapshot missing '{key}'");
+    }
+    assert_eq!(field_u64(field(&snap, "server"), "requests_ok"), 6);
+
+    // after stop: the wire is gone but the in-process snapshot survives
+    // with the final books
+    drop(camper);
+    server.stop();
+    let snap = Json::parse(&server.snapshot_json()).expect("post-stop snapshot JSON");
+    let srv = field(&snap, "server");
+    assert_eq!(field_u64(srv, "requests_ok"), 6);
+    assert_eq!(field_u64(srv, "stats_requests"), 1);
+
+    // the router runs the same event plane with its own schema — same
+    // three lifecycle points
+    let backend = start_toy_server();
+    let mut router = RouterServer::start(RouterConfig {
+        net: NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 8,
+            ..NetConfig::default()
+        },
+        fabric: FabricConfig {
+            shards: vec![ShardConfig {
+                models: Vec::new(),
+                replicas: vec![backend.local_addr().to_string()],
+            }],
+            retry_budget: 4,
+            deadline: Duration::from_secs(30),
+            backoff: BackoffCfg::ZERO,
+            probe_every: Duration::ZERO,
+            connect_timeout: Duration::from_secs(1),
+            seed: 7,
+        },
+    })
+    .expect("bind router");
+
+    let snap = Json::parse(&router.snapshot_json()).expect("fresh router snapshot JSON");
+    for key in ["router", "backends", "process"] {
+        assert!(snap.get(key).is_some(), "fresh router snapshot missing '{key}'");
+    }
+    assert_eq!(field_u64(field(&snap, "router"), "requests_ok"), 0);
+
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+    let rows: Vec<&[f32]> = rows_flat.chunks(12).take(4).collect();
+    let results = client.infer_pipelined("toy-k4", &rows, 2);
+    assert!(results.iter().all(|r| r.is_ok()), "routed slots must all answer");
+    let body = client.stats().expect("mid-traffic router stats");
+    let snap = Json::parse(&body).expect("mid-traffic router snapshot JSON");
+    for key in ["router", "backends", "process"] {
+        assert!(snap.get(key).is_some(), "mid-traffic router snapshot missing '{key}'");
+    }
+    assert_eq!(field_u64(field(&snap, "router"), "requests_ok"), 4);
+
+    router.stop();
+    let snap = Json::parse(&router.snapshot_json()).expect("post-stop router snapshot JSON");
+    let r = field(&snap, "router");
+    assert_eq!(field_u64(r, "requests_ok"), 4);
+    assert_eq!(field_u64(r, "stats_requests"), 1);
+}
+
+// ---- 8. the docs name what the code ships ------------------------------
 
 fn doc(path: &str) -> String {
     let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
