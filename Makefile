@@ -4,9 +4,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: tier1 build test test-threaded smoke-net smoke-bitslice smoke-fabric smoke-c10k bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs bench-bitslice bench-fabric bench-c10k
+.PHONY: tier1 build test test-threaded smoke-net smoke-bitslice smoke-fabric smoke-c10k smoke-obs-fleet bench-build doc clippy fmt-check ci artifacts clean bench-lstep bench-pool bench-serve bench-net bench-obs bench-bitslice bench-fabric bench-c10k
 
-tier1: build test test-threaded smoke-net smoke-bitslice smoke-fabric smoke-c10k bench-build doc clippy fmt-check
+tier1: build test test-threaded smoke-net smoke-bitslice smoke-fabric smoke-c10k smoke-obs-fleet bench-build doc clippy fmt-check
 
 build:
 	$(CARGO) build --release
@@ -53,6 +53,17 @@ smoke-fabric:
 smoke-c10k:
 	$(CARGO) test -q --test c10k
 	LCQUANT_THREADS=2 $(CARGO) test -q --test c10k
+
+# Fleet observability smoke (LCQ-RPC v3): cross-tier trace stitching
+# through a live two-replica fabric (every trace id resolves to a router
+# span AND a backend span), FleetStats merge reconciling EXACTLY with the
+# per-backend sums, bucket-exact Histogram::merge, windowed-rate
+# arithmetic, and loadgen trace coverage — under both thread policies.
+# Redundant with `test` by construction; explicit so the fleet path
+# cannot be skipped.
+smoke-obs-fleet:
+	$(CARGO) test -q --test obs -- stitch fleet_stats histogram_merge rate_window trace_coverage
+	LCQUANT_THREADS=2 $(CARGO) test -q --test obs -- stitch fleet_stats histogram_merge rate_window trace_coverage
 
 # Benches are plain binaries (harness = false); --no-run keeps them
 # compiling in tier-1 without paying their runtime.
@@ -101,8 +112,10 @@ bench-serve:
 bench-net: bench-serve
 
 # Observability overhead A/B: serve-engine throughput with the metrics
-# registry + tracing enabled vs disabled, plus raw hot-path costs
-# (histogram record, trace-ring record) → BENCH_obs.json.
+# registry + tracing enabled vs disabled, raw hot-path costs (histogram
+# record, trace-ring record), routed trace-stamping on-vs-off through a
+# two-replica router, and the FleetStats fan-out cost sweep
+# → BENCH_obs.json.
 bench-obs:
 	$(CARGO) bench --bench bench_obs
 

@@ -6,13 +6,23 @@
 //! * the number that matters: micro-batch server throughput with the
 //!   global registry + tracing **enabled vs disabled**
 //!   (`obs::set_enabled`), same model, same 8-thread client load — the
-//!   instrumentation's end-to-end tax on req/s.
+//!   instrumentation's end-to-end tax on req/s;
+//! * the v3 fleet numbers: routed loopback load through a two-replica
+//!   `RouterServer` with client trace stamping **on vs off** (the
+//!   cross-tier propagation tax rides the same wire bytes + one ring
+//!   record per tier), and a `FleetStatsRequest` fan-out cost sweep
+//!   over 1/2/4 backends (ms per aggregated snapshot).
 
 use lcquant::linalg::pool;
+use lcquant::net::{
+    loadgen, FabricConfig, LoadGenConfig, NetClient, NetConfig, NetServer, RouterConfig,
+    RouterServer, ShardConfig,
+};
 use lcquant::nn::MlpSpec;
 use lcquant::obs::{self, Histogram, Stage, Trace, TraceRing};
 use lcquant::quant::{LayerQuantizer, Scheme};
 use lcquant::serve::{MicroBatchServer, PackedModel, Registry, ServerConfig};
+use lcquant::util::backoff::BackoffCfg;
 use lcquant::util::rng::Rng;
 use lcquant::util::timer::Timer;
 use std::sync::Arc;
@@ -72,6 +82,42 @@ fn serve_pass(registry: &Arc<Registry>, per_thread: usize) -> f64 {
     (n_threads * per_thread) as f64 / elapsed
 }
 
+/// Bind one loopback backend over the shared registry.
+fn backend(reg: Arc<Registry>) -> NetServer {
+    NetServer::start(
+        reg,
+        ServerConfig { max_batch: 64, max_wait: Duration::from_millis(2), pipeline_depth: 2 },
+        NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 16,
+            ..NetConfig::default()
+        },
+    )
+    .expect("bind backend")
+}
+
+/// Bind a router over `replicas` (no health probing: the bench wants the
+/// steady-state forward path, not probe noise).
+fn router(replicas: Vec<String>) -> RouterServer {
+    RouterServer::start(RouterConfig {
+        net: NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 16,
+            ..NetConfig::default()
+        },
+        fabric: FabricConfig {
+            shards: vec![ShardConfig { models: Vec::new(), replicas }],
+            retry_budget: 4,
+            deadline: Duration::from_secs(10),
+            backoff: BackoffCfg { base: Duration::from_millis(1), cap: Duration::from_millis(10) },
+            probe_every: Duration::ZERO,
+            connect_timeout: Duration::from_secs(1),
+            seed: 7,
+        },
+    })
+    .expect("bind router")
+}
+
 fn main() {
     println!("== bench_obs: observability hot-path + end-to-end overhead ==");
 
@@ -83,7 +129,7 @@ fn main() {
     println!("histogram record_ns:   {hist_ns:>7.2} ns/op  ({n} ops)");
 
     let ring = TraceRing::new(1024);
-    let mut trace = Trace::from_parts(0, [0; obs::STAGES]);
+    let mut trace = Trace::from_parts(0, 0, [0; obs::STAGES]);
     let ring_ns = per_op_ns(n, |i| {
         trace.id = i;
         trace.set(Stage::Compute, i & 0xffff);
@@ -115,13 +161,89 @@ fn main() {
     println!("serve, obs enabled:  {on_best:>8.0} req/s");
     println!("serve, obs disabled: {off_best:>8.0} req/s  (instrumentation tax {overhead_pct:.1}%)");
 
+    // ---- routed A/B: trace stamping on vs off (v3) --------------------
+    println!("\n== routed loopback: client trace stamping on vs off ==");
+    let b0 = backend(Arc::clone(&registry));
+    let b1 = backend(Arc::clone(&registry));
+    let mut rt = router(vec![b0.local_addr().to_string(), b1.local_addr().to_string()]);
+    let routed_addr = rt.local_addr().to_string();
+    let routed_pass = |trace: bool, seed: u64| {
+        let mut lg = LoadGenConfig::new(&routed_addr);
+        lg.connections = 4;
+        lg.requests_per_conn = 128;
+        lg.seed = seed;
+        lg.trace = trace;
+        loadgen::run(&lg).expect("routed loadgen")
+    };
+    let _ = routed_pass(true, 3); // warm pooled backend connections
+    let (mut traced_best, mut plain_best) = (0.0f64, 0.0f64);
+    let (mut traced_p99, mut plain_p99) = (f32::MAX, f32::MAX);
+    let mut coverage = 1.0f64;
+    for round in 0..3u64 {
+        let t = routed_pass(true, 100 + round);
+        if t.req_per_s() > traced_best {
+            traced_best = t.req_per_s();
+            coverage = t.trace_coverage();
+        }
+        traced_p99 = traced_p99.min(t.p99_ms);
+        let p = routed_pass(false, 200 + round);
+        plain_best = plain_best.max(p.req_per_s());
+        plain_p99 = plain_p99.min(p.p99_ms);
+    }
+    let trace_tax_pct = (plain_best / traced_best - 1.0) * 100.0;
+    println!(
+        "routed, trace on:  {traced_best:>8.0} req/s  p99 {traced_p99:.2}ms  (coverage {:.0}%)",
+        100.0 * coverage
+    );
+    println!(
+        "routed, trace off: {plain_best:>8.0} req/s  p99 {plain_p99:.2}ms  \
+         (propagation tax {trace_tax_pct:.1}%)"
+    );
+    rt.stop();
+    let (mut b0, mut b1) = (b0, b1);
+    b0.stop();
+    b1.stop();
+
+    // ---- fleet-stats fan-out cost sweep -------------------------------
+    println!("\n== FleetStatsRequest fan-out: ms per aggregated snapshot ==");
+    let mut fanout_rows: Vec<(usize, f64)> = Vec::new();
+    for n_backends in [1usize, 2, 4] {
+        let mut backends: Vec<NetServer> =
+            (0..n_backends).map(|_| backend(Arc::clone(&registry))).collect();
+        let mut rt = router(backends.iter().map(|b| b.local_addr().to_string()).collect());
+        let mut client =
+            NetClient::connect(&rt.local_addr().to_string()).expect("connect router");
+        let _ = client.fleet_stats().expect("warm fleet stats");
+        let polls = 20u64;
+        let ms_per = per_op_ns(polls, |_| {
+            std::hint::black_box(client.fleet_stats().expect("fleet stats").len());
+        }) / 1e6;
+        println!("backends={n_backends}: {ms_per:>7.3} ms/snapshot  ({polls} polls)");
+        fanout_rows.push((n_backends, ms_per));
+        drop(client);
+        rt.stop();
+        for b in &mut backends {
+            b.stop();
+        }
+    }
+    let fanout_json: Vec<String> = fanout_rows
+        .iter()
+        .map(|(n, ms)| format!("{{\"backends\": {n}, \"ms_per_snapshot\": {ms:.3}}}"))
+        .collect();
+
     let json = format!(
         "{{\n  \"bench\": \"obs\",\n  \"threads\": {},\n  \
          \"histogram_record_ns\": {hist_ns:.2},\n  \"trace_record_ns\": {ring_ns:.2},\n  \
          \"serve_req_per_s_enabled\": {on_best:.0},\n  \
          \"serve_req_per_s_disabled\": {off_best:.0},\n  \
-         \"overhead_pct\": {overhead_pct:.2}\n}}\n",
+         \"overhead_pct\": {overhead_pct:.2},\n  \
+         \"routed_req_per_s_traced\": {traced_best:.0},\n  \
+         \"routed_req_per_s_untraced\": {plain_best:.0},\n  \
+         \"trace_tax_pct\": {trace_tax_pct:.2},\n  \
+         \"trace_coverage\": {coverage:.3},\n  \
+         \"fleet_fanout\": [{}]\n}}\n",
         lcquant::linalg::num_threads(),
+        fanout_json.join(", "),
     );
     match std::fs::write("BENCH_obs.json", &json) {
         Ok(()) => println!("wrote BENCH_obs.json"),

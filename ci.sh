@@ -21,6 +21,12 @@ LCQUANT_THREADS=2 cargo test -q --test net
 # policies
 cargo test -q --test obs
 LCQUANT_THREADS=2 cargo test -q --test obs
+# fleet observability smoke (v3): cross-tier trace stitching through a
+# live router, exact FleetStats merge reconciliation, windowed rates,
+# bucket-exact histogram merge, loadgen trace coverage — the filtered
+# subset `make smoke-obs-fleet` runs, again under both thread policies
+cargo test -q --test obs -- stitch fleet_stats histogram_merge rate_window trace_coverage
+LCQUANT_THREADS=2 cargo test -q --test obs -- stitch fleet_stats histogram_merge rate_window trace_coverage
 # bit-sliced serving tier + zero-copy .lcq load smoke: tier parity across
 # every scheme (in-process and over loopback TCP), mmap-vs-eager
 # bit-identity, lazy checksum rejection, the zero-alloc warm path, again

@@ -123,11 +123,15 @@ pub struct ObsSettings {
     /// Seconds between periodic snapshot dumps while serving
     /// (0 = never dump).
     pub snapshot_every_s: f64,
+    /// Samples retained by windowed-rate consumers such as `lcquant top`
+    /// (an [`crate::obs::RateWindow`] holds this many periodic snapshots;
+    /// minimum 2 — rates need a delta).
+    pub window_slots: usize,
 }
 
 impl Default for ObsSettings {
     fn default() -> ObsSettings {
-        ObsSettings { enabled: true, trace_slots: 256, snapshot_every_s: 0.0 }
+        ObsSettings { enabled: true, trace_slots: 256, snapshot_every_s: 0.0, window_slots: 16 }
     }
 }
 
@@ -445,6 +449,7 @@ impl RunConfig {
                 enabled: get_b(n, "enabled", d.obs.enabled),
                 trace_slots: get_u(n, "trace_slots", d.obs.trace_slots).max(2),
                 snapshot_every_s: get_f(n, "snapshot_every_s", d.obs.snapshot_every_s).max(0.0),
+                window_slots: get_u(n, "window_slots", d.obs.window_slots).max(2),
             },
             None => d.obs.clone(),
         };
@@ -597,12 +602,14 @@ mod tests {
     #[test]
     fn obs_section_parses() {
         let c = RunConfig::from_json(
-            r#"{"obs": {"enabled": false, "trace_slots": 64, "snapshot_every_s": 2.5}}"#,
+            r#"{"obs": {"enabled": false, "trace_slots": 64, "snapshot_every_s": 2.5,
+                 "window_slots": 8}}"#,
         )
         .unwrap();
         assert!(!c.obs.enabled);
         assert_eq!(c.obs.trace_slots, 64);
         assert_eq!(c.obs.snapshot_every_s, 2.5);
+        assert_eq!(c.obs.window_slots, 8);
         // the trace ring feeds the net config
         let nc = c.net_serve.to_net_config_with_obs(&c.obs);
         assert_eq!(nc.trace_slots, 64);
@@ -611,11 +618,12 @@ mod tests {
         assert_eq!(d.obs, ObsSettings::default());
         assert!(d.obs.enabled);
         let z = RunConfig::from_json(
-            r#"{"obs": {"trace_slots": 0, "snapshot_every_s": -1.0}}"#,
+            r#"{"obs": {"trace_slots": 0, "snapshot_every_s": -1.0, "window_slots": 1}}"#,
         )
         .unwrap();
         assert_eq!(z.obs.trace_slots, 2);
         assert_eq!(z.obs.snapshot_every_s, 0.0);
+        assert_eq!(z.obs.window_slots, 2);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!                       [--kill-backend-at N] [--restart-backend-at N]]
 //! lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
 //! lcquant stats --addr HOST:PORT
+//! lcquant top --addr HOST:PORT [--interval S] [--iters N] [--window N]
 //! lcquant pjrt-smoke [--artifacts artifacts]
 //! lcquant list
 //! ```
@@ -41,6 +42,7 @@ fn usage() -> ! {
                         [--kill-backend-at N] [--restart-backend-at N]]
   lcquant client-smoke --addr HOST:PORT [--requests N] [--connections N] [--model NAME] [--batch N]
   lcquant stats --addr HOST:PORT
+  lcquant top --addr HOST:PORT [--interval S] [--iters N] [--window N]
   lcquant pjrt-smoke [--artifacts DIR]
   lcquant list",
         experiments::ALL
@@ -511,6 +513,178 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Live fleet dashboard: poll a router's `FleetStats` frame and render a
+/// refreshing terminal view — rolling req/s, shed rate and windowed p99
+/// from an [`lcquant::obs::RateWindow`] over snapshot deltas, per-backend
+/// health and tail latency, and the stage breakdown of the slowest recent
+/// traced request anywhere in the fleet. Everything on screen derives
+/// from `FleetStatsRequest` alone; the target must speak LCQ-RPC v3.
+fn cmd_top(args: &Args) -> Result<()> {
+    use lcquant::obs::{HistogramSnapshot, RateWindow};
+    use lcquant::util::json::Json;
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow!("top requires --addr HOST:PORT (a fabric router)"))?;
+    let interval = args.get_f64("interval", 1.0).max(0.05);
+    let iters = args.get_usize("iters", 0); // 0 = refresh until killed
+    let mut client = lcquant::net::NetClient::connect(addr)
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let mut win = RateWindow::new(args.get_usize("window", 16).max(2));
+    let t0 = std::time::Instant::now();
+    let mut polls = 0usize;
+    loop {
+        let json = client.fleet_stats().map_err(|e| anyhow!("fleet stats: {e}"))?;
+        let doc = Json::parse(&json).map_err(|e| anyhow!("fleet stats parse: {e:?}"))?;
+        let counter = |k: &str| {
+            doc.get("fleet")
+                .and_then(|f| f.get("counters"))
+                .and_then(|c| c.get(k))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64
+        };
+        let latency = doc
+            .get("fleet")
+            .and_then(|f| f.get("latency"))
+            .and_then(HistogramSnapshot::from_json)
+            .unwrap_or_else(HistogramSnapshot::empty);
+        win.push(
+            t0.elapsed().as_secs_f64(),
+            counter("requests_ok") + counter("requests_failed"),
+            counter("requests_shed"),
+            latency,
+        );
+        polls += 1;
+        render_top(addr, &doc, &win, polls);
+        if iters > 0 && polls >= iters {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+    Ok(())
+}
+
+/// Paint one `lcquant top` frame: ANSI home + clear so the view refreshes
+/// in place (harmless noise when stdout is not a terminal).
+fn render_top(
+    addr: &str,
+    doc: &lcquant::util::json::Json,
+    win: &lcquant::obs::RateWindow,
+    polls: usize,
+) {
+    use lcquant::util::json::Json;
+    // walk a key path to a number, 0.0 when any hop is missing
+    let num = |path: &[&str]| -> f64 {
+        let mut cur = doc;
+        for k in path {
+            match cur.get(k) {
+                Some(next) => cur = next,
+                None => return 0.0,
+            }
+        }
+        cur.as_f64().unwrap_or(0.0)
+    };
+    print!("\x1b[H\x1b[2J");
+    println!("lcquant top — {addr} — poll #{polls}");
+    println!(
+        "fleet:   {:.0}/{:.0} backends answering (healthy {:.0}, suspect {:.0}, down {:.0})",
+        num(&["fleet", "backends_ok"]),
+        num(&["fleet", "backends_total"]),
+        num(&["fleet", "health", "healthy"]),
+        num(&["fleet", "health", "suspect"]),
+        num(&["fleet", "health", "down"]),
+    );
+    match win.rates() {
+        Some(r) => println!(
+            "rates:   {:.1} req/s, shed {:.2}/s ({:.1}%), p99 {:.2}ms over last {:.1}s \
+             ({} requests)",
+            r.qps,
+            r.shed_per_s,
+            r.shed_rate * 100.0,
+            r.p99_ms,
+            r.span_s,
+            r.delta_count,
+        ),
+        None => println!("rates:   warming up (needs a second poll)"),
+    }
+    println!(
+        "router:  ok {:.0}, failed {:.0}, shed {:.0}; retries {:.0}, failovers {:.0}, \
+         fleet-stats served {:.0}",
+        num(&["router", "requests_ok"]),
+        num(&["router", "requests_failed"]),
+        num(&["router", "requests_shed"]),
+        num(&["router", "retries"]),
+        num(&["router", "failovers"]),
+        num(&["router", "fleet_stats_requests"]),
+    );
+    println!("backends:");
+    let backends = doc.get("backends").and_then(Json::as_arr).unwrap_or(&[]);
+    // track the slowest traced request seen anywhere in the fleet
+    let mut worst: Option<(&Json, &str)> = None;
+    for b in backends {
+        let baddr = b.get("addr").and_then(Json::as_str).unwrap_or("?");
+        let state = b.get("state").and_then(Json::as_str).unwrap_or("?");
+        let ok = b.get("ok").and_then(Json::as_bool).unwrap_or(false);
+        if !ok {
+            let err = b.get("error").and_then(Json::as_str).unwrap_or("no answer");
+            println!("  {baddr:<21} {state:<8} — {err}");
+            continue;
+        }
+        let stats = |path: &[&str]| -> f64 {
+            let mut cur = match b.get("stats") {
+                Some(s) => s,
+                None => return 0.0,
+            };
+            for k in path {
+                match cur.get(k) {
+                    Some(next) => cur = next,
+                    None => return 0.0,
+                }
+            }
+            cur.as_f64().unwrap_or(0.0)
+        };
+        println!(
+            "  {baddr:<21} {state:<8} ok {:.0}, shed {:.0}, p99 {:.2}ms, mean batch {:.1}",
+            stats(&["server", "requests_ok"]),
+            stats(&["server", "requests_shed"]),
+            stats(&["batch", "latency", "p99"]),
+            stats(&["batch", "mean_batch"]),
+        );
+        if let Some(traces) = b.get("stats").and_then(|s| s.get("traces")).and_then(Json::as_arr)
+        {
+            for t in traces {
+                let total = t.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let cur_worst = worst
+                    .and_then(|(w, _)| w.get("total_ms"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(-1.0);
+                if total > cur_worst {
+                    worst = Some((t, baddr));
+                }
+            }
+        }
+    }
+    match worst {
+        Some((t, baddr)) => {
+            let trace_id = t.get("trace_id").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let total = t.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let stages = t
+                .get("stages")
+                .and_then(Json::as_obj)
+                .map(|o| {
+                    o.iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|ms| format!("{k} {ms:.2}ms")))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                })
+                .unwrap_or_default();
+            println!(
+                "slowest: trace {trace_id:.0} on {baddr} — {total:.2}ms total ({stages})"
+            );
+        }
+        None => println!("slowest: no traced requests in any backend ring yet"),
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn pjrt_backend(
     args: &Args,
@@ -592,6 +766,7 @@ fn main() {
         "serve-fabric" => cmd_serve_fabric(&args),
         "client-smoke" => cmd_client_smoke(&args),
         "stats" => cmd_stats(&args),
+        "top" => cmd_top(&args),
         "pjrt-smoke" => cmd_pjrt_smoke(&args),
         "list" => {
             println!("experiments: {:?}", experiments::ALL);

@@ -21,7 +21,8 @@
 //! [`obs`](crate::obs) registry.
 
 use crate::net::proto::{
-    self, ErrorCode, Frame, FrameReader, ModelEntry, RequestFrame, StatsRequestFrame, WireError,
+    self, ErrorCode, FleetStatsRequestFrame, Frame, FrameReader, ModelEntry, RequestFrame,
+    StatsRequestFrame, TraceContext, WireError,
 };
 use crate::obs::{self, CounterId};
 use crate::util::backoff::{Backoff, BackoffCfg};
@@ -90,12 +91,13 @@ impl std::fmt::Display for ClientError {
 
 impl std::error::Error for ClientError {}
 
-/// One live connection: socket, frame reassembly state, and the server's
-/// model catalog.
+/// One live connection: socket, frame reassembly state, the server's
+/// model catalog, and the protocol version negotiated at handshake.
 struct Conn {
     stream: TcpStream,
     reader: FrameReader,
     models: Vec<ModelEntry>,
+    version: u32,
 }
 
 /// Blocking LCQ-RPC client (see module docs).
@@ -106,6 +108,23 @@ pub struct NetClient {
     conn: Option<Conn>,
     retry: RetryPolicy,
     backoff: Backoff,
+    /// When set, requests carry a trace context (v3 servers only): ids
+    /// are `base + n` for the n-th traced request, `parent_span = 0`
+    /// (client origin).
+    trace_base: Option<u64>,
+    /// Traced requests issued so far (the `n` above).
+    trace_seq: u64,
+}
+
+/// Mint the next client-origin trace context, if tracing is on and the
+/// negotiated version carries it (a v2 server must never see the tail).
+fn mint_trace(base: Option<u64>, seq: &mut u64, version: u32) -> Option<TraceContext> {
+    let base = base?;
+    if version < proto::VERSION {
+        return None;
+    }
+    *seq += 1;
+    Some(TraceContext { trace_id: base.wrapping_add(*seq), parent_span: 0 })
 }
 
 impl NetClient {
@@ -126,9 +145,31 @@ impl NetClient {
             conn: None,
             backoff: Backoff::new(retry.backoff, retry.seed),
             retry,
+            trace_base: None,
+            trace_seq: 0,
         };
         client.ensure_conn()?;
         Ok(client)
+    }
+
+    /// Turn on client-origin trace contexts: subsequent requests to a v3
+    /// server carry trace id `base + n` (n = 1, 2, …) with
+    /// `parent_span = 0`. Pick disjoint bases across clients so ids stay
+    /// unique fleet-wide. No-op on a v2-negotiated connection.
+    pub fn set_trace_base(&mut self, base: u64) {
+        self.trace_base = Some(base);
+    }
+
+    /// Traced requests issued so far (trace ids `base + 1 ..= base + n`).
+    pub fn traces_issued(&self) -> u64 {
+        self.trace_seq
+    }
+
+    /// The protocol version negotiated with the server (reconnecting if
+    /// the connection was dropped).
+    pub fn server_version(&mut self) -> Result<u32, ClientError> {
+        self.ensure_conn()?;
+        Ok(self.conn.as_ref().expect("connected").version)
     }
 
     /// Bookkeeping for one re-attempt: count it and sleep the jittered
@@ -242,6 +283,7 @@ impl NetClient {
             match drive_pipeline(
                 &mut conn,
                 &mut self.next_id,
+                (self.trace_base, &mut self.trace_seq),
                 model,
                 rows,
                 window.max(1),
@@ -300,6 +342,87 @@ impl NetClient {
         Err(last_io.expect("loop exits early unless an Io error occurred"))
     }
 
+    /// Fetch the fleet-wide observability snapshot (v3 `FleetStats`
+    /// frame) as a JSON document. Only fabric routers answer this; a
+    /// plain backend rejects it with [`ErrorCode::Malformed`], which
+    /// surfaces as [`ClientError::Remote`]. Same retry discipline as
+    /// [`NetClient::infer_batch`].
+    pub fn fleet_stats(&mut self) -> Result<String, ClientError> {
+        self.backoff.reset();
+        let attempts = self.retry.attempts.max(1);
+        let mut last_io: Option<ClientError> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.before_retry();
+            }
+            self.ensure_conn()?;
+            match self.fleet_stats_round_trip() {
+                Ok(json) => return Ok(json),
+                Err(e @ ClientError::Io(_)) => {
+                    self.conn = None; // reconnect on the next attempt
+                    last_io = Some(e);
+                }
+                Err(e @ ClientError::Protocol(_)) => {
+                    self.conn = None;
+                    return Err(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_io.expect("loop exits early unless an Io error occurred"))
+    }
+
+    fn fleet_stats_round_trip(&mut self) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let conn = self.conn.as_mut().expect("connected");
+        if conn.version < proto::VERSION {
+            return Err(ClientError::Protocol(format!(
+                "fleet stats need LCQ-RPC v{}, server negotiated v{}",
+                proto::VERSION,
+                conn.version
+            )));
+        }
+        proto::write_frame(
+            &mut conn.stream,
+            &Frame::FleetStatsRequest(FleetStatsRequestFrame { id }),
+        )
+        .map_err(|e| ClientError::Io(format!("send: {e}")))?;
+        loop {
+            match conn.reader.poll_frame(&mut conn.stream) {
+                Ok(None) => continue, // only if a read timeout is set
+                Ok(Some(Frame::FleetStatsResponse(resp))) => {
+                    if resp.id != id {
+                        return Err(ClientError::Protocol(format!(
+                            "fleet stats response id {} for request {id}",
+                            resp.id
+                        )));
+                    }
+                    return Ok(resp.json);
+                }
+                Ok(Some(Frame::Error(e))) => {
+                    if e.id != id && e.id != 0 {
+                        return Err(ClientError::Protocol(format!(
+                            "error frame for foreign request {}",
+                            e.id
+                        )));
+                    }
+                    return Err(ClientError::Remote { code: e.code, message: e.message });
+                }
+                Ok(Some(_)) => {
+                    return Err(ClientError::Protocol(
+                        "unexpected frame while awaiting a fleet stats response".to_string(),
+                    ))
+                }
+                Err(WireError::Closed) => {
+                    return Err(ClientError::Io("connection closed by server".to_string()))
+                }
+                Err(WireError::Io(e)) => return Err(ClientError::Io(e.to_string())),
+                Err(e) => return Err(ClientError::Protocol(e.to_string())),
+            }
+        }
+    }
+
     fn stats_round_trip(&mut self) -> Result<String, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
@@ -351,12 +474,14 @@ impl NetClient {
         let id = self.next_id;
         self.next_id += 1;
         let conn = self.conn.as_mut().expect("connected");
+        let trace = mint_trace(self.trace_base, &mut self.trace_seq, conn.version);
         let frame = Frame::Request(RequestFrame {
             id,
             model: model.to_string(),
             rows,
             cols,
             data: data.to_vec(),
+            trace,
         });
         proto::write_frame(&mut conn.stream, &frame)
             .map_err(|e| ClientError::Io(format!("send: {e}")))?;
@@ -418,9 +543,10 @@ impl NetClient {
             .map_err(|e| ClientError::Io(format!("handshake read: {e}")))?;
         let version =
             proto::decode_preamble(&pre).map_err(|e| ClientError::Protocol(e.to_string()))?;
-        if version != proto::VERSION {
+        if !(proto::MIN_VERSION..=proto::VERSION).contains(&version) {
             return Err(ClientError::Protocol(format!(
-                "server speaks LCQ-RPC v{version}, this client v{}",
+                "server speaks LCQ-RPC v{version}, this client accepts v{}..=v{}",
+                proto::MIN_VERSION,
                 proto::VERSION
             )));
         }
@@ -438,7 +564,7 @@ impl NetClient {
         };
         match first {
             Frame::Hello(h) => {
-                self.conn = Some(Conn { stream, reader, models: h.models });
+                self.conn = Some(Conn { stream, reader, models: h.models, version });
                 Ok(())
             }
             // connection-shed and version rejection arrive as error frames
@@ -463,6 +589,7 @@ enum PipelineFailure {
 fn drive_pipeline(
     conn: &mut Conn,
     next_id: &mut u64,
+    (trace_base, trace_seq): (Option<u64>, &mut u64),
     model: &str,
     rows: &[&[f32]],
     window: usize,
@@ -478,12 +605,14 @@ fn drive_pipeline(
             let id = *next_id;
             *next_id += 1;
             let row = rows[i];
+            let trace = mint_trace(trace_base, trace_seq, conn.version);
             let frame = Frame::Request(RequestFrame {
                 id,
                 model: model.to_string(),
                 rows: 1,
                 cols: row.len() as u32,
                 data: row.to_vec(),
+                trace,
             });
             proto::write_frame(&mut conn.stream, &frame)
                 .map_err(|e| PipelineFailure::Transport(format!("send: {e}")))?;

@@ -133,10 +133,13 @@ impl HealthState {
     }
 }
 
-/// One pooled backend connection: socket plus frame reassembly state.
+/// One pooled backend connection: socket plus frame reassembly state and
+/// the protocol version negotiated at handshake (a v2 backend must never
+/// be sent a trace-context tail).
 pub(crate) struct BackendConn {
     pub(crate) stream: TcpStream,
     pub(crate) reader: FrameReader,
+    pub(crate) version: u32,
 }
 
 /// One backend replica: address, health, idle-connection pool, learned
@@ -273,8 +276,12 @@ pub(crate) fn dial_backend(
     }
     let version =
         proto::decode_preamble(&pre).map_err(|e| format!("bad preamble from {addr}: {e}"))?;
-    if version != proto::VERSION {
-        return Err(format!("{addr} speaks LCQ-RPC v{version}, router v{}", proto::VERSION));
+    if !(proto::MIN_VERSION..=proto::VERSION).contains(&version) {
+        return Err(format!(
+            "{addr} speaks LCQ-RPC v{version}, router accepts v{}..=v{}",
+            proto::MIN_VERSION,
+            proto::VERSION
+        ));
     }
     let mut reader = FrameReader::new(max_frame);
     loop {
@@ -284,7 +291,7 @@ pub(crate) fn dial_backend(
         match reader.poll_frame(&mut stream) {
             Ok(None) => continue,
             Ok(Some(Frame::Hello(h))) => {
-                return Ok((BackendConn { stream, reader }, h.models));
+                return Ok((BackendConn { stream, reader, version }, h.models));
             }
             Ok(Some(Frame::Error(e))) => {
                 return Err(format!("{addr} refused: [{}] {}", e.code, e.message));

@@ -82,6 +82,12 @@ pub struct LoadGenConfig {
     /// request/response lockstep; larger values only apply to single-row
     /// traffic (`batch == 1`) and drive the server's pipelined path.
     pub pipeline: usize,
+    /// Stamp every request with a client-origin trace context (v3
+    /// servers only; ignored on a v2-negotiated connection). Each
+    /// connection gets a disjoint trace-id base, and the report gains
+    /// trace coverage: the fraction of issued trace ids found in the
+    /// target's trace ring after the run.
+    pub trace: bool,
 }
 
 impl LoadGenConfig {
@@ -96,6 +102,7 @@ impl LoadGenConfig {
             batch: 1,
             seed: 1,
             pipeline: 1,
+            trace: false,
         }
     }
 }
@@ -127,6 +134,12 @@ pub struct LoadReport {
     pub p99_ms: f32,
     /// Worst successful-request latency, ms (bucket upper edge).
     pub max_ms: f32,
+    /// Trace ids issued (0 unless [`LoadGenConfig::trace`] is on).
+    pub trace_issued: usize,
+    /// Issued trace ids found in the target's trace ring after the run
+    /// (an overwrite-oldest ring: coverage below 1.0 means old traces
+    /// were evicted — the signal for tuning `obs.trace_slots`).
+    pub trace_found: usize,
 }
 
 impl LoadReport {
@@ -139,11 +152,31 @@ impl LoadReport {
         }
     }
 
+    /// Fraction of issued trace ids found in the target's trace ring
+    /// (0.0 when tracing was off or nothing was issued).
+    pub fn trace_coverage(&self) -> f64 {
+        if self.trace_issued == 0 {
+            0.0
+        } else {
+            self.trace_found as f64 / self.trace_issued as f64
+        }
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let trace = if self.trace_issued > 0 {
+            format!(
+                "; trace coverage {}/{} ({:.0}%)",
+                self.trace_found,
+                self.trace_issued,
+                100.0 * self.trace_coverage()
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} requests over {} conns in {:.2}s ({:.0} req/s): {} ok, {} shed, {} failed; \
-             p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms max {:.2}ms",
+             p50 {:.2}ms p90 {:.2}ms p99 {:.2}ms max {:.2}ms{}",
             self.sent,
             self.connections,
             self.elapsed_s,
@@ -155,6 +188,7 @@ impl LoadReport {
             self.p90_ms,
             self.p99_ms,
             self.max_ms,
+            trace,
         )
     }
 }
@@ -219,6 +253,9 @@ fn drive(
     // pipelining drives single-row traffic; batch requests stay lockstep
     let window = if batch == 1 { cfg.pipeline.max(1) } else { 1 };
     let tallies = RunTallies::default();
+    // per-connection (trace base, ids issued) pairs for the coverage
+    // lookup after the run — bases are 2³² apart, so ids never collide
+    let trace_spans: Mutex<Vec<(u64, u64)>> = Mutex::new(Vec::new());
     let t = Timer::start();
     // blocking drivers → scoped threads, never pool task slots
     pool::run_scoped(connections, |c| {
@@ -226,6 +263,10 @@ fn drive(
         let mut input = vec![0.0f32; in_dim * batch.max(window)];
         match NetClient::connect(&cfg.addr) {
             Ok(mut client) => {
+                let trace_base = ((c as u64 + 1) << 32) | (cfg.seed & 0xFFFF);
+                if cfg.trace {
+                    client.set_trace_base(trace_base);
+                }
                 let mut issued = 0usize;
                 while issued < per_conn {
                     let w = window.min(per_conn - issued);
@@ -272,6 +313,9 @@ fn drive(
                         }
                     }
                 }
+                if cfg.trace {
+                    trace_spans.lock().unwrap().push((trace_base, client.traces_issued()));
+                }
             }
             Err(e) => {
                 // the connection never came up, so its quota was never
@@ -289,6 +333,13 @@ fn drive(
     });
     let elapsed_s = t.elapsed_s();
 
+    // coverage: how many of the trace ids we issued survive in the
+    // target's (overwrite-oldest) trace ring
+    let spans = trace_spans.into_inner().unwrap();
+    let trace_issued: u64 = spans.iter().map(|&(_, n)| n).sum();
+    let trace_found =
+        if trace_issued > 0 { count_traces_in_target(&cfg.addr, &spans) } else { 0 };
+
     let lat = tallies.latency.snapshot();
     Ok(LoadReport {
         connections,
@@ -301,7 +352,26 @@ fn drive(
         p90_ms: lat.percentile_ms(90.0),
         p99_ms: lat.percentile_ms(99.0),
         max_ms: lat.max_ms(),
+        trace_issued: trace_issued as usize,
+        trace_found,
     })
+}
+
+/// Fetch the target's stats document and count how many of our issued
+/// trace ids (`base + 1 ..= base + n` per span) its `"trace_ids"` array
+/// still holds. Any failure reads as zero coverage — the loadgen never
+/// fails a run over a stats lookup.
+fn count_traces_in_target(addr: &str, spans: &[(u64, u64)]) -> usize {
+    let Ok(mut client) = NetClient::connect(addr) else { return 0 };
+    let Ok(json) = client.stats() else { return 0 };
+    let Ok(doc) = Json::parse(&json) else { return 0 };
+    let Some(ids) = doc.get("trace_ids").and_then(|j| j.as_arr()) else { return 0 };
+    let in_ring: std::collections::HashSet<u64> =
+        ids.iter().filter_map(|j| j.as_f64()).map(|n| n as u64).collect();
+    spans
+        .iter()
+        .map(|&(base, n)| (1..=n).filter(|i| in_ring.contains(&base.wrapping_add(*i))).count())
+        .sum()
 }
 
 /// The cluster scenario: [`LoadGenConfig`] plus the request counts at
@@ -507,6 +577,8 @@ pub fn run_poisson(cfg: &PoissonConfig) -> Result<LoadReport> {
         p90_ms: lat.percentile_ms(90.0),
         p99_ms: lat.percentile_ms(99.0),
         max_ms: lat.max_ms(),
+        trace_issued: 0,
+        trace_found: 0,
     })
 }
 
@@ -830,6 +902,7 @@ pub fn run_slow_loris(cfg: &SlowLorisConfig) -> Result<SlowLorisReport> {
         rows: 1,
         cols: 16,
         data: vec![0.0; 16],
+        trace: None,
     })
     .to_bytes();
     let trickle = cfg.trickle_bytes.clamp(1, frame.len() - 1);

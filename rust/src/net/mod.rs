@@ -39,6 +39,20 @@
 //! profile, and the slowest recent request traces (`lcquant stats --addr
 //! HOST:PORT` prints one; see `docs/OBSERVABILITY.md`).
 //!
+//! LCQ-RPC **v3** (this PR) makes observability fleet-wide:
+//!
+//! * `Request` frames may carry a [`proto::TraceContext`] tail (trace id +
+//!   parent span); the router adopts or mints the id, stamps it onto the
+//!   forwarded request, and records its own pick/forward/backend_wait/
+//!   relay span, so one id stitches client → router → backend stage
+//!   timings. A trace-less request encodes byte-identically to v2, and
+//!   v2-negotiated connections reject the tail as `Malformed`.
+//! * A `FleetStats` frame pair: the router answers by fanning `Stats` to
+//!   every backend over pooled connections and returns per-backend
+//!   sections plus a merged fleet view (summed counters, bucket-exact
+//!   [`crate::obs::Histogram`] merge, health census). `lcquant top --addr`
+//!   renders a refreshing dashboard from this frame alone.
+//!
 //! PR 8 adds the **serve fabric** — the multi-node tier:
 //!
 //! * [`fabric`] — the static shard map (`serve.fabric` config), one
@@ -91,6 +105,6 @@ pub use loadgen::{
     ClusterConfig, ClusterReport, IdleArmyConfig, IdleArmyReport, LoadGenConfig, LoadReport,
     PoissonConfig, SlowLorisConfig, SlowLorisReport,
 };
-pub use proto::{ErrorCode, Frame, WireError};
+pub use proto::{ErrorCode, Frame, TraceContext, WireError};
 pub use router::{RouterConfig, RouterServer, RouterStatsSnapshot};
 pub use server::{NetConfig, NetServer, NetStatsSnapshot};

@@ -35,13 +35,14 @@
 use crate::net::proto::{
     self, ErrorCode, ErrorFrame, Frame, FrameReader, RequestFrame, StatsResponseFrame, WireError,
 };
-use crate::obs::{self, CounterId, HistId, Stage, Trace};
+use crate::obs::{self, CounterId, GaugeId, HistId, Stage, Trace};
 use crate::util::epoll::{raw_fd, Event, Interest, Poller, RawFd, Waker};
+use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::io::{self, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -80,6 +81,67 @@ pub(crate) struct PlaneConfig {
     pub max_frame: usize,
     /// Per-frame progress deadline (slow-loris shed).
     pub frame_deadline: Duration,
+    /// Shared per-thread plane books (wakeups, writeq depth), rendered in
+    /// the owning dispatcher's snapshot.
+    pub stats: Arc<PlaneStats>,
+}
+
+/// Per-net-thread plane books: exact per-instance counts (the rule every
+/// serving stat follows — see `obs` module docs) exposed through the
+/// owning dispatcher's snapshot so `obs.trace_slots` and thread counts
+/// are tunable from observed numbers, not guesswork.
+pub(crate) struct PlaneStats {
+    /// Poll-loop iterations that delivered work, per net thread.
+    wakeups: Vec<AtomicU64>,
+    /// Replies queued in write queues at the last poll tick, per thread.
+    writeq_depth: Vec<AtomicU64>,
+}
+
+impl PlaneStats {
+    /// Zeroed books for `net_threads` threads.
+    pub fn new(net_threads: usize) -> PlaneStats {
+        let n = net_threads.max(1);
+        PlaneStats {
+            wakeups: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            writeq_depth: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Sum of the per-thread writeq depths stored at the last poll ticks.
+    pub fn total_writeq_depth(&self) -> u64 {
+        self.writeq_depth.iter().map(|d| d.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of per-thread wakeup counts.
+    pub fn total_wakeups(&self) -> u64 {
+        self.wakeups.iter().map(|w| w.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Snapshot object: `{"net_threads": n, "wakeups": [...],
+    /// "writeq_depth": [...]}` (arrays indexed by net thread).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("net_threads", Json::from(self.wakeups.len())),
+            (
+                "wakeups",
+                Json::Arr(
+                    self.wakeups
+                        .iter()
+                        .map(|w| Json::from(w.load(Ordering::Relaxed) as usize))
+                        .collect(),
+                ),
+            ),
+            (
+                "writeq_depth",
+                Json::Arr(
+                    self.writeq_depth
+                        .iter()
+                        .map(|d| Json::from(d.load(Ordering::Relaxed) as usize))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 /// Identifies one live connection: slab slot plus generation. Stale keys
@@ -105,6 +167,8 @@ pub(crate) struct RequestCtx {
 /// the write span and publishes the trace via [`Dispatch::record_trace`].
 pub(crate) struct TraceDraft {
     pub id: u64,
+    /// Fleet-wide trace id propagated on the wire (0 = untraced).
+    pub trace_id: u64,
     pub accept_ns: u64,
     pub decode_ns: u64,
     pub queue_ns: u64,
@@ -163,6 +227,8 @@ pub(crate) enum PlaneEvent {
     FrameTimeout,
     /// A stats snapshot frame was served.
     StatsServed,
+    /// A fleet-stats frame was answered (routers only).
+    FleetStatsServed,
     /// A request was shed by the per-connection pipeline bound.
     WriteqShed,
 }
@@ -190,6 +256,17 @@ pub(crate) trait Dispatch: Send + Sync + 'static {
     /// Publish one finished request trace (servers keep a ring; the
     /// router has per-request fabric histograms instead).
     fn record_trace(&self, _trace: &Trace) {}
+    /// Answer a `FleetStatsRequest`. The default (`None`) rejects the
+    /// frame as `Malformed` and closes — backends do not speak fleet
+    /// aggregation; only the fabric router overrides this.
+    fn on_fleet_stats(
+        &self,
+        _key: ConnKey,
+        _id: u64,
+        _sink: &CompletionSink,
+    ) -> Option<RequestAction> {
+        None
+    }
 }
 
 /// Shared liveness state between the acceptor, the net threads and
@@ -244,6 +321,7 @@ impl Plane {
                 shared: Arc::clone(&shared),
                 cfg: cfg.clone(),
                 sink,
+                index: i,
                 conns: Vec::new(),
                 gens: Vec::new(),
                 free: Vec::new(),
@@ -389,6 +467,8 @@ struct Conn {
     state: ConnState,
     /// When the connection reached this net thread (handshake clock).
     opened: Instant,
+    /// Negotiated peer protocol version (0 until the preamble lands).
+    peer_version: u32,
     /// Handshake span, set when the preamble lands.
     accept_ns: u64,
     /// First-byte instant of the currently partial request frame.
@@ -421,6 +501,8 @@ struct IoThread {
     shared: Arc<Shared>,
     cfg: PlaneConfig,
     sink: CompletionSink,
+    /// This thread's index into the [`PlaneStats`] per-thread arrays.
+    index: usize,
     conns: Vec<Option<Conn>>,
     gens: Vec<u32>,
     free: Vec<usize>,
@@ -438,8 +520,15 @@ impl IoThread {
                     false
                 }
             };
-            if (woken || !events.is_empty()) && obs::enabled() {
-                obs::counter(CounterId::NetEpollWakeups).inc();
+            if woken || !events.is_empty() {
+                // per-instance exact books always record; the global
+                // registry only mirrors when enabled
+                if let Some(w) = self.cfg.stats.wakeups.get(self.index) {
+                    w.fetch_add(1, Ordering::Relaxed);
+                }
+                if obs::enabled() {
+                    obs::counter(CounterId::NetEpollWakeups).inc();
+                }
             }
             if self.shared.shutdown.load(Ordering::Relaxed) {
                 // flush what already completed, notify, tear down
@@ -464,6 +553,17 @@ impl IoThread {
                 self.on_event(ev);
             }
             self.scan_deadlines();
+            // publish this thread's write-queue depth; the gauge mirrors
+            // the cross-thread sum so one stats read sees the whole plane
+            let depth: usize =
+                self.conns.iter().flatten().map(|c| c.writeq.len()).sum();
+            if let Some(d) = self.cfg.stats.writeq_depth.get(self.index) {
+                d.store(depth as u64, Ordering::Relaxed);
+            }
+            if obs::enabled() {
+                obs::gauge(GaugeId::NetWriteqDepth)
+                    .set(self.cfg.stats.total_writeq_depth() as f64);
+            }
         }
     }
 
@@ -497,6 +597,7 @@ impl IoThread {
             reader: FrameReader::new(self.cfg.max_frame),
             state: ConnState::Handshake { buf: [0u8; proto::PREAMBLE_LEN], filled: 0 },
             opened: now,
+            peer_version: 0,
             accept_ns: 0,
             frame_started: None,
             writeq: VecDeque::new(),
@@ -573,7 +674,7 @@ impl IoThread {
             AlreadyOpen,
             More,
             CloseSilent,
-            OpenOk,
+            OpenOk(u32),
             BadVersion(u32),
         }
         let hs = {
@@ -586,7 +687,9 @@ impl IoThread {
                     Ok(false) => Hs::More,
                     Err(_) => Hs::CloseSilent,
                     Ok(true) => match proto::decode_preamble(buf) {
-                        Ok(v) if v == proto::VERSION => Hs::OpenOk,
+                        Ok(v) if (proto::MIN_VERSION..=proto::VERSION).contains(&v) => {
+                            Hs::OpenOk(v)
+                        }
                         Ok(v) => Hs::BadVersion(v),
                         // wrong magic: not our protocol, close silently
                         Err(_) => Hs::CloseSilent,
@@ -603,14 +706,19 @@ impl IoThread {
                 bytes.extend_from_slice(&error_bytes(
                     0,
                     ErrorCode::UnsupportedVersion,
-                    format!("server speaks v{}, client sent v{v}", proto::VERSION),
+                    format!(
+                        "server speaks v{} (accepts ≥ v{}), client sent v{v}",
+                        proto::VERSION,
+                        proto::MIN_VERSION
+                    ),
                 ));
                 return self.enqueue_closing(slot, bytes);
             }
-            Hs::OpenOk => {
+            Hs::OpenOk(v) => {
                 let accept_ns = {
                     let conn = self.conns[slot].as_mut().expect("conn checked above");
                     conn.state = ConnState::Open;
+                    conn.peer_version = v;
                     conn.accept_ns = dur_ns(conn.opened.elapsed());
                     conn.accept_ns
                 };
@@ -676,12 +784,27 @@ impl IoThread {
     fn handle_frame(&mut self, slot: usize, frame: Frame) -> bool {
         match frame {
             Frame::Request(req) => {
-                let (key, accept_ns, decode_ns, over) = {
+                let (key, accept_ns, decode_ns, over, peer_version) = {
                     let Some(conn) = self.conns[slot].as_ref() else { return false };
                     let key = ConnKey { slot: slot as u32, gen: self.gens[slot] };
                     let over = conn.pending + conn.writeq.len() >= self.cfg.max_inflight.max(1);
-                    (key, conn.accept_ns, conn.reader.last_decode_ns(), over)
+                    (key, conn.accept_ns, conn.reader.last_decode_ns(), over, conn.peer_version)
                 };
+                if req.trace.is_some() && peer_version < proto::VERSION {
+                    // a v2-negotiated peer has no trace-context field in
+                    // its contract: reject as a protocol violation rather
+                    // than guessing at the 9 extra bytes' meaning
+                    let bytes = error_bytes(
+                        req.id,
+                        ErrorCode::Malformed,
+                        format!(
+                            "trace context on a v{peer_version}-negotiated connection \
+                             (requires v{})",
+                            proto::VERSION
+                        ),
+                    );
+                    return self.enqueue_closing(slot, bytes);
+                }
                 if over {
                     // bounded write queue: the pipeline bound is hit, shed
                     // typed instead of buffering replies without limit
@@ -712,6 +835,31 @@ impl IoThread {
                 let json = self.dispatch.snapshot_json();
                 let bytes = Frame::StatsResponse(StatsResponseFrame { id: s.id, json }).to_bytes();
                 self.enqueue(slot, bytes)
+            }
+            Frame::FleetStatsRequest(s) => {
+                let key = ConnKey { slot: slot as u32, gen: self.gens[slot] };
+                match self.dispatch.on_fleet_stats(key, s.id, &self.sink) {
+                    Some(RequestAction::Reply(bytes)) => {
+                        self.dispatch.event(PlaneEvent::FleetStatsServed);
+                        self.enqueue(slot, bytes)
+                    }
+                    Some(RequestAction::Async) => {
+                        self.dispatch.event(PlaneEvent::FleetStatsServed);
+                        if let Some(conn) = self.conns[slot].as_mut() {
+                            conn.pending += 1;
+                        }
+                        true
+                    }
+                    None => {
+                        // backends do not aggregate: only routers answer
+                        let bytes = error_bytes(
+                            s.id,
+                            ErrorCode::Malformed,
+                            "fleet stats are served by fabric routers only".to_string(),
+                        );
+                        self.enqueue_closing(slot, bytes)
+                    }
+                }
             }
             _ => {
                 // clients may only send requests
@@ -749,6 +897,7 @@ impl IoThread {
         if let Some(d) = c.trace {
             if obs::enabled() {
                 let mut trace = Trace::begin(d.id);
+                trace.trace_id = d.trace_id;
                 trace.set(Stage::Accept, d.accept_ns);
                 trace.set(Stage::Decode, d.decode_ns);
                 trace.set(Stage::QueueWait, d.queue_ns);

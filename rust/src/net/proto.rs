@@ -1,4 +1,4 @@
-//! LCQ-RPC wire protocol, version 2: length-prefixed, checksummed binary
+//! LCQ-RPC wire protocol, version 3: length-prefixed, checksummed binary
 //! frames over a byte stream.
 //!
 //! The framing mirrors the `.lcq` file discipline (`docs/lcq-format.md`):
@@ -13,8 +13,17 @@
 //! preamble:    magic "LCQR" | version u32
 //! frame:       payload_len u32 | payload | fnv1a-64(payload) u64
 //! payload:     tag u8 | tag-specific fields
-//!              (Request/Response/Error/Hello/StatsRequest/StatsResponse)
+//!              (Request/Response/Error/Hello/StatsRequest/StatsResponse/
+//!               FleetStatsRequest/FleetStatsResponse)
 //! ```
+//!
+//! v3 adds an optional 9-byte trace-context tail on `Request` frames
+//! (`trace_id u64 | parent_span u8` after the f32 data — absent means an
+//! untraced v2-shaped request) and the fleet-stats frame pair (tags 7/8)
+//! answered by the fabric router. Servers accept v2 peers
+//! ([`MIN_VERSION`]); a trace context arriving on a v2-negotiated
+//! connection is a protocol violation the plane rejects as
+//! [`ErrorCode::Malformed`].
 //!
 //! Decoding never panics on hostile input: every length is bounds-checked
 //! before any allocation ([`FrameReader`] rejects oversized frames from
@@ -29,9 +38,15 @@ use std::io::{ErrorKind, Read, Write};
 pub const MAGIC: &[u8; 4] = b"LCQR";
 
 /// Protocol version spoken by this implementation. v2 added the stats
-/// exposition frames (tags 5/6); see `docs/wire-protocol.md` for the
-/// version history.
-pub const VERSION: u32 = 2;
+/// exposition frames (tags 5/6); v3 adds the optional trace-context tail
+/// on requests and the fleet-stats frames (tags 7/8). See
+/// `docs/wire-protocol.md` for the version history.
+pub const VERSION: u32 = 3;
+
+/// Oldest peer version this implementation still accepts at the
+/// handshake. v2 peers simply never send trace contexts or fleet-stats
+/// frames; everything else is byte-identical.
+pub const MIN_VERSION: u32 = 2;
 
 /// Preamble length: magic + version.
 pub const PREAMBLE_LEN: usize = 8;
@@ -107,6 +122,18 @@ impl std::fmt::Display for ErrorCode {
     }
 }
 
+/// Distributed trace context riding on a v3 [`RequestFrame`]: a fleet-wide
+/// trace id plus which hop stamped it, so one id stitches the client's
+/// observed latency into router and backend stage timings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Fleet-wide trace identity (non-zero by convention; 0 is the
+    /// "untraced" sentinel in ring snapshots).
+    pub trace_id: u64,
+    /// Which hop stamped this context: 0 = client origin, 1 = router.
+    pub parent_span: u8,
+}
+
 /// Inference request: `rows × cols` row-major f32 input for one model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RequestFrame {
@@ -120,6 +147,9 @@ pub struct RequestFrame {
     pub cols: u32,
     /// Row-major input, `rows * cols` values.
     pub data: Vec<f32>,
+    /// Optional v3 trace context, encoded as a 9-byte tail after `data`.
+    /// `None` encodes byte-identically to a v2 request.
+    pub trace: Option<TraceContext>,
 }
 
 /// Successful inference response: `rows × cols` row-major f32 logits.
@@ -186,6 +216,27 @@ pub struct StatsResponseFrame {
     pub json: String,
 }
 
+/// Fleet stats request (v3): ask a fabric router to fan `StatsRequest`
+/// out to every known backend and return the merged fleet view. Backends
+/// reject this frame as [`ErrorCode::Malformed`] — only routers answer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetStatsRequestFrame {
+    /// Client-chosen id, echoed verbatim in the response.
+    pub id: u64,
+}
+
+/// Fleet stats response (v3): per-backend stats sections plus the merged
+/// fleet view (summed counters, bucket-merged histograms, health census).
+/// Schema documented in `docs/OBSERVABILITY.md`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetStatsResponseFrame {
+    /// Echo of the request id.
+    pub id: u64,
+    /// The merged fleet snapshot, as a JSON document (diagnostic schema;
+    /// fields may be added in later versions without a protocol bump).
+    pub json: String,
+}
+
 /// Any LCQ-RPC frame (the payload tag selects the variant).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -201,6 +252,10 @@ pub enum Frame {
     StatsRequest(StatsRequestFrame),
     /// Tag 6 (v2): stats snapshot response (server → client).
     StatsResponse(StatsResponseFrame),
+    /// Tag 7 (v3): fleet stats request (client → router).
+    FleetStatsRequest(FleetStatsRequestFrame),
+    /// Tag 8 (v3): fleet stats response (router → client).
+    FleetStatsResponse(FleetStatsResponseFrame),
 }
 
 /// Everything that can go wrong reading or decoding the wire.
@@ -328,6 +383,12 @@ impl<'a> Cur<'a> {
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
+    /// Bytes not yet consumed — drives the optional-tail decode: a v2
+    /// request ends exactly at the data, a v3 traced request leaves the
+    /// 9-byte trace context.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
     fn finish(&self) -> Result<(), WireError> {
         if self.pos != self.buf.len() {
             return Err(malformed(format!(
@@ -382,6 +443,10 @@ impl Frame {
                 put_u32(&mut buf, r.rows);
                 put_u32(&mut buf, r.cols);
                 put_f32s(&mut buf, &r.data);
+                if let Some(t) = r.trace {
+                    put_u64(&mut buf, t.trace_id);
+                    buf.push(t.parent_span);
+                }
             }
             Frame::Response(r) => {
                 buf.push(2);
@@ -414,6 +479,15 @@ impl Frame {
                 put_u64(&mut buf, s.id);
                 put_str(&mut buf, &s.json);
             }
+            Frame::FleetStatsRequest(s) => {
+                buf.push(7);
+                put_u64(&mut buf, s.id);
+            }
+            Frame::FleetStatsResponse(s) => {
+                buf.push(8);
+                put_u64(&mut buf, s.id);
+                put_str(&mut buf, &s.json);
+            }
         }
         buf
     }
@@ -441,7 +515,15 @@ impl Frame {
                 let rows = c.u32()?;
                 let cols = c.u32()?;
                 let data = c.f32s(checked_count(rows, cols)?)?;
-                Frame::Request(RequestFrame { id, model, rows, cols, data })
+                // v3 optional trace-context tail: exactly 9 more bytes or
+                // none at all. Any other remainder is Malformed (1–8 fail
+                // inside u64/u8, > 9 trips the trailing-bytes check).
+                let trace = if c.remaining() == 0 {
+                    None
+                } else {
+                    Some(TraceContext { trace_id: c.u64()?, parent_span: c.u8()? })
+                };
+                Frame::Request(RequestFrame { id, model, rows, cols, data, trace })
             }
             2 => {
                 let id = c.u64()?;
@@ -478,6 +560,12 @@ impl Frame {
                 let id = c.u64()?;
                 let json = c.str()?;
                 Frame::StatsResponse(StatsResponseFrame { id, json })
+            }
+            7 => Frame::FleetStatsRequest(FleetStatsRequestFrame { id: c.u64()? }),
+            8 => {
+                let id = c.u64()?;
+                let json = c.str()?;
+                Frame::FleetStatsResponse(FleetStatsResponseFrame { id, json })
             }
             t => return Err(malformed(format!("unknown frame tag {t}"))),
         };
@@ -615,6 +703,15 @@ mod tests {
                 rows: 2,
                 cols: 3,
                 data: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 1e30, -0.125],
+                trace: None,
+            }),
+            Frame::Request(RequestFrame {
+                id: 8,
+                model: "lenet300-k2".into(),
+                rows: 1,
+                cols: 3,
+                data: vec![0.25, -1.0, 2.0],
+                trace: Some(TraceContext { trace_id: 0xDEAD_BEEF_CAFE, parent_span: 1 }),
             }),
             Frame::Response(ResponseFrame {
                 id: 7,
@@ -637,6 +734,11 @@ mod tests {
             Frame::StatsResponse(StatsResponseFrame {
                 id: 42,
                 json: r#"{"counters":{"net_requests_ok":3}}"#.into(),
+            }),
+            Frame::FleetStatsRequest(FleetStatsRequestFrame { id: 43 }),
+            Frame::FleetStatsResponse(FleetStatsResponseFrame {
+                id: 43,
+                json: r#"{"fleet":{"backends_total":2}}"#.into(),
             }),
         ]
     }
@@ -767,7 +869,8 @@ mod tests {
         p.extend_from_slice(&[0u8; 8]); // only 2 floats
         assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
         // trailing garbage after a valid error frame
-        let mut p = sample_frames()[2].payload();
+        let mut p = sample_frames()[3].payload();
+        assert!(matches!(sample_frames()[3], Frame::Error(_)));
         p.push(0xAB);
         assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
         // error frame with an unknown code
@@ -815,6 +918,65 @@ mod tests {
         p.extend_from_slice(&2u32.to_le_bytes());
         p.extend_from_slice(&[0xFF, 0xFE]);
         assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // request with a partial trace tail: every length 1..=8 after the
+        // data is neither "no context" (0) nor a full context (9) — Err
+        let base = Frame::Request(RequestFrame {
+            id: 1,
+            model: "m".into(),
+            rows: 1,
+            cols: 1,
+            data: vec![0.5],
+            trace: None,
+        })
+        .payload();
+        for extra in 1usize..=8 {
+            let mut p = base.clone();
+            p.extend_from_slice(&[0u8; 8][..extra]);
+            assert!(
+                matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))),
+                "trace tail of {extra} bytes must be rejected"
+            );
+        }
+        // request with a full trace tail plus one trailing byte
+        let mut p = base.clone();
+        p.extend_from_slice(&[0u8; 10]);
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // truncated fleet stats request (id cut short)
+        let mut p = vec![7u8];
+        p.extend_from_slice(&[0u8; 4]);
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // fleet stats request with trailing bytes
+        let mut p = vec![7u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.push(0x00);
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+        // fleet stats response whose json length overruns the payload
+        let mut p = vec![8u8];
+        p.extend_from_slice(&1u64.to_le_bytes());
+        p.extend_from_slice(&1000u32.to_le_bytes());
+        p.extend_from_slice(b"{}");
+        assert!(matches!(decode_bytes(&envelope(&p)), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn trace_context_tail_is_byte_transparent() {
+        // a traced request is exactly the untraced encoding + 9 bytes, so
+        // v2 decoders that stop at the data never see ambiguity
+        let mut req = RequestFrame {
+            id: 5,
+            model: "m".into(),
+            rows: 1,
+            cols: 2,
+            data: vec![1.0, 2.0],
+            trace: None,
+        };
+        let bare = Frame::Request(req.clone()).payload();
+        req.trace = Some(TraceContext { trace_id: 77, parent_span: 0 });
+        let traced = Frame::Request(req).payload();
+        assert_eq!(traced.len(), bare.len() + 9);
+        assert_eq!(&traced[..bare.len()], &bare[..]);
+        assert_eq!(&traced[bare.len()..bare.len() + 8], &77u64.to_le_bytes());
+        assert_eq!(traced[bare.len() + 8], 0);
     }
 
     #[test]

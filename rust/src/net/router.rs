@@ -35,21 +35,42 @@
 //! corruption), so the failover paths above are exercised determin-
 //! istically by `rust/tests/fabric.rs` and `rust/tests/c10k.rs` — with
 //! injection disabled the cost is one relaxed atomic load per request.
+//!
+//! **Cross-tier tracing (v3).** When observability is on, the router
+//! stamps every forwarded request with a trace context: the client's
+//! trace id if it sent one, else a freshly minted id, with
+//! `parent_span = 1` (router hop). The backend records that id into its
+//! own trace ring, and the router records a 4-stage span of its own
+//! (`pick → forward → backend_wait → relay`, see
+//! [`crate::obs::RouterStage`]) under the same id — so one id stitches
+//! the client-observed latency into router and backend stage timings. A
+//! v2 backend is never sent the trace tail: the forward path lazily
+//! re-encodes the request without it for connections negotiated at v2.
+//!
+//! **Fleet stats (v3).** A `FleetStatsRequest` frame makes the router
+//! fan `StatsRequest` out to every known backend over its pooled
+//! connections and answer with per-backend sections plus a merged fleet
+//! view: counters summed key-wise, latency histograms merged bucket-wise
+//! ([`crate::obs::HistogramSnapshot::merge`]), and a health census.
 
 use crate::net::fabric::{BackendConn, Fabric, FabricConfig, HealthState};
 use crate::net::plane::{
     self, Completion, CompletionSink, ConnKey, Dispatch, Plane, PlaneConfig, PlaneEvent,
-    RequestAction, RequestCtx,
+    PlaneStats, RequestAction, RequestCtx,
 };
 use crate::net::proto::{
-    self, ErrorCode, ErrorFrame, Frame, HelloFrame, RequestFrame, WireError,
+    self, ErrorCode, ErrorFrame, FleetStatsResponseFrame, Frame, HelloFrame, RequestFrame,
+    StatsRequestFrame, TraceContext, WireError,
 };
 use crate::net::server::NetConfig;
-use crate::obs::{self, CounterId, HistId};
+use crate::obs::{
+    self, CounterId, HistId, HistogramSnapshot, RouterStage, Trace, TraceRing, STAGES,
+};
 use crate::util::backoff::Backoff;
 use crate::util::fault::{self, FaultKind};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -109,6 +130,8 @@ pub struct RouterStatsSnapshot {
     pub probes: u64,
     /// Stats frames served.
     pub stats_requests: u64,
+    /// Fleet-stats frames served (backend fan-out + merge).
+    pub fleet_stats_requests: u64,
     /// Client connections shed by the per-frame progress deadline.
     pub frame_timeouts: u64,
     /// Requests shed by the per-connection pipeline bound (a subset of
@@ -129,6 +152,7 @@ struct RouterStats {
     retries: AtomicU64,
     failovers: AtomicU64,
     stats_requests: AtomicU64,
+    fleet_stats_requests: AtomicU64,
     frame_timeouts: AtomicU64,
     writeq_sheds: AtomicU64,
 }
@@ -166,6 +190,9 @@ impl RouterStats {
     fn inc_stats(&self) {
         RouterStats::bump(&self.stats_requests, None);
     }
+    fn inc_fleet_stats(&self) {
+        RouterStats::bump(&self.fleet_stats_requests, Some(CounterId::NetFleetStatsRequests));
+    }
     fn inc_frame_timeout(&self) {
         RouterStats::bump(&self.frame_timeouts, Some(CounterId::NetFrameTimeouts));
     }
@@ -178,6 +205,13 @@ struct RouterCtx {
     fabric: Fabric,
     shutdown: AtomicBool,
     stats: RouterStats,
+    /// Router-side spans (pick/forward/backend_wait/relay), keyed by the
+    /// same trace id the backend records — the stitch point.
+    traces: TraceRing,
+    /// Mint for trace ids when the client did not send one.
+    next_trace: AtomicU64,
+    /// Per-net-thread plane books (wakeups, writeq depth).
+    plane_stats: Arc<PlaneStats>,
 }
 
 /// One decoded client request on its hop from a net thread to a forward
@@ -194,13 +228,29 @@ struct ForwardJob {
     sink: CompletionSink,
 }
 
+/// One fleet-stats fan-out on its hop to a forward worker (workers block
+/// on backend sockets; net threads must not).
+struct FleetJob {
+    key: ConnKey,
+    id: u64,
+    sink: CompletionSink,
+}
+
+/// Work items crossing the net-thread → forward-worker queue.
+enum Job {
+    /// Relay one client request to a backend.
+    Forward(ForwardJob),
+    /// Fan `StatsRequest` to every backend and merge.
+    Fleet(FleetJob),
+}
+
 /// The fabric front end: event plane + forward workers + backend fabric +
 /// the hello-probe loop, one self-contained unit (see module docs).
 pub struct RouterServer {
     ctx: Arc<RouterCtx>,
     local_addr: SocketAddr,
     plane: Option<Plane>,
-    forward_tx: Option<SyncSender<ForwardJob>>,
+    forward_tx: Option<SyncSender<Job>>,
     workers: Vec<JoinHandle<()>>,
     prober: Option<JoinHandle<()>>,
 }
@@ -217,12 +267,16 @@ impl RouterServer {
         let max_frame = cfg.net.max_frame_bytes.max(1024);
         let fabric = Fabric::new(cfg.fabric, max_frame);
         fabric.probe_all();
+        let plane_stats = Arc::new(PlaneStats::new(cfg.net.net_threads.max(1)));
         let ctx = Arc::new(RouterCtx {
             fabric,
             shutdown: AtomicBool::new(false),
             stats: RouterStats::default(),
+            traces: TraceRing::new(cfg.net.trace_slots.max(2)),
+            next_trace: AtomicU64::new(1),
+            plane_stats: Arc::clone(&plane_stats),
         });
-        let (forward_tx, forward_rx) = mpsc::sync_channel::<ForwardJob>(FORWARD_QUEUE);
+        let (forward_tx, forward_rx) = mpsc::sync_channel::<Job>(FORWARD_QUEUE);
         let forward_rx = Arc::new(Mutex::new(forward_rx));
         let mut workers = Vec::with_capacity(FORWARD_WORKERS);
         for i in 0..FORWARD_WORKERS {
@@ -242,6 +296,7 @@ impl RouterServer {
             max_inflight: cfg.net.max_inflight.max(1),
             max_frame,
             frame_deadline: cfg.net.frame_deadline.max(SHUTDOWN_POLL),
+            stats: plane_stats,
         };
         let dispatch: Arc<dyn Dispatch> = Arc::new(RouterDispatch {
             ctx: Arc::clone(&ctx),
@@ -289,9 +344,15 @@ impl RouterServer {
             health_transitions: self.ctx.fabric.health_transitions_total(),
             probes: self.ctx.fabric.probes_total(),
             stats_requests: s.stats_requests.load(Ordering::Relaxed),
+            fleet_stats_requests: s.fleet_stats_requests.load(Ordering::Relaxed),
             frame_timeouts: s.frame_timeouts.load(Ordering::Relaxed),
             writeq_sheds: s.writeq_sheds.load(Ordering::Relaxed),
         }
+    }
+
+    /// The router's trace ring (router-side spans keyed by trace id).
+    pub fn traces(&self) -> Vec<Trace> {
+        self.ctx.traces.snapshot()
     }
 
     /// The fabric behind this router (tests inspect backend health).
@@ -335,8 +396,24 @@ impl Drop for RouterServer {
 
 /// Render the router snapshot (schema in `docs/FABRIC.md`).
 fn snapshot_json(ctx: &RouterCtx) -> String {
+    let ring = ctx.traces.snapshot();
+    Json::obj(vec![
+        ("router", router_counters_json(ctx)),
+        ("backends", ctx.fabric.backends_json()),
+        ("process", obs::global().snapshot_json()),
+        ("plane", ctx.plane_stats.to_json()),
+        ("traces", obs::router_traces_json(&ctx.traces.slowest(8))),
+        ("traces_dropped", Json::from(ctx.traces.dropped() as usize)),
+        ("trace_ids", obs::trace_ids_json(&ring)),
+    ])
+    .to_string()
+}
+
+/// The `"router"` counter object shared by `Stats` and `FleetStats`
+/// replies.
+fn router_counters_json(ctx: &RouterCtx) -> Json {
     let s = &ctx.stats;
-    let router = Json::obj(vec![
+    Json::obj(vec![
         ("connections", Json::from(s.connections.load(Ordering::Relaxed) as usize)),
         (
             "connections_shed",
@@ -356,15 +433,13 @@ fn snapshot_json(ctx: &RouterCtx) -> String {
         ),
         ("probes", Json::from(ctx.fabric.probes_total() as usize)),
         ("stats_requests", Json::from(s.stats_requests.load(Ordering::Relaxed) as usize)),
+        (
+            "fleet_stats_requests",
+            Json::from(s.fleet_stats_requests.load(Ordering::Relaxed) as usize),
+        ),
         ("frame_timeouts", Json::from(s.frame_timeouts.load(Ordering::Relaxed) as usize)),
         ("writeq_sheds", Json::from(s.writeq_sheds.load(Ordering::Relaxed) as usize)),
-    ]);
-    Json::obj(vec![
-        ("router", router),
-        ("backends", ctx.fabric.backends_json()),
-        ("process", obs::global().snapshot_json()),
     ])
-    .to_string()
 }
 
 fn prober_loop(ctx: Arc<RouterCtx>) {
@@ -424,6 +499,7 @@ impl Dispatch for RouterDispatch {
                 self.ctx.stats.inc_shed();
                 self.ctx.stats.inc_writeq_shed();
             }
+            PlaneEvent::FleetStatsServed => self.ctx.stats.inc_fleet_stats(),
         }
     }
 
@@ -443,45 +519,101 @@ impl Dispatch for RouterDispatch {
                 format!("no shard serves model '{}'", req.model),
             ));
         }
-        let job = ForwardJob {
+        // trace context: adopt the client's id (it wants to stitch its
+        // own observations in) or mint one; either way the forwarded
+        // request is stamped `parent_span = 1` so the backend knows the
+        // hop came through a router
+        let mut req = req;
+        if obs::enabled() {
+            let trace_id = match req.trace {
+                Some(t) if t.trace_id != 0 => t.trace_id,
+                _ => ctx.next_trace.fetch_add(1, Ordering::Relaxed),
+            };
+            req.trace = Some(TraceContext { trace_id, parent_span: 1 });
+        } else if let Some(t) = req.trace.as_mut() {
+            t.parent_span = 1;
+        }
+        let req_id = req.id;
+        let job = Job::Forward(ForwardJob {
             key: rctx.key,
             req,
             candidates,
             t_start: Instant::now(),
             sink: sink.clone(),
-        };
+        });
         match self.forward_tx.try_send(job) {
             Ok(()) => RequestAction::Async,
-            Err(TrySendError::Full(job)) => {
+            Err(TrySendError::Full(_)) => {
                 // the worker pool is saturated: shed typed instead of
                 // stalling the net thread
                 ctx.stats.inc_shed();
                 RequestAction::Reply(plane::error_bytes(
-                    job.req.id,
+                    req_id,
                     ErrorCode::Overloaded,
                     format!("router forward queue full ({FORWARD_QUEUE} requests deep)"),
                 ))
             }
-            Err(TrySendError::Disconnected(job)) => {
+            Err(TrySendError::Disconnected(_)) => {
                 ctx.stats.inc_shed();
                 RequestAction::Reply(plane::error_bytes(
-                    job.req.id,
+                    req_id,
                     ErrorCode::ShuttingDown,
                     "router shutting down".to_string(),
                 ))
             }
         }
     }
+
+    fn on_fleet_stats(
+        &self,
+        key: ConnKey,
+        id: u64,
+        sink: &CompletionSink,
+    ) -> Option<RequestAction> {
+        // the fan-out blocks on backend sockets, so it rides the forward
+        // workers like any other backend-touching work
+        let job = Job::Fleet(FleetJob { key, id, sink: sink.clone() });
+        Some(match self.forward_tx.try_send(job) {
+            Ok(()) => RequestAction::Async,
+            Err(TrySendError::Full(_)) => {
+                self.ctx.stats.inc_shed();
+                RequestAction::Reply(plane::error_bytes(
+                    id,
+                    ErrorCode::Overloaded,
+                    format!("router forward queue full ({FORWARD_QUEUE} requests deep)"),
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.ctx.stats.inc_shed();
+                RequestAction::Reply(plane::error_bytes(
+                    id,
+                    ErrorCode::ShuttingDown,
+                    "router shutting down".to_string(),
+                ))
+            }
+        })
+    }
 }
 
 /// Forward-worker loop: route each job, post the encoded reply back to
 /// its net thread.
-fn forward_worker(ctx: Arc<RouterCtx>, rx: Arc<Mutex<Receiver<ForwardJob>>>) {
+fn forward_worker(ctx: Arc<RouterCtx>, rx: Arc<Mutex<Receiver<Job>>>) {
     loop {
         let job = { rx.lock().unwrap().recv() };
         match job {
-            Ok(job) => {
+            Ok(Job::Forward(job)) => {
                 let bytes = route_job(&ctx, job.req, &job.candidates, job.t_start);
+                job.sink.send(Completion { key: job.key, bytes, trace: None });
+            }
+            Ok(Job::Fleet(job)) => {
+                let t0 = Instant::now();
+                let json = fleet_stats_json(&ctx, job.id);
+                if obs::enabled() {
+                    obs::hist(HistId::FabricFleetFanout).record_ns(dur_ns(t0.elapsed()));
+                }
+                let bytes =
+                    Frame::FleetStatsResponse(FleetStatsResponseFrame { id: job.id, json })
+                        .to_bytes();
                 job.sink.send(Completion { key: job.key, bytes, trace: None });
             }
             Err(_) => return, // queue disconnected: router stopping
@@ -522,13 +654,20 @@ fn route_job(
     let cfg = ctx.fabric.cfg();
     let deadline = t_start + cfg.deadline;
     let req_id = req.id;
+    let trace_id = req.trace.map(|t| t.trace_id).unwrap_or(0);
     let model = req.model.clone();
     let shed = |ctx: &RouterCtx, code: ErrorCode, msg: String| -> Vec<u8> {
         ctx.stats.inc_shed();
         plane::error_bytes(req_id, code, msg)
     };
-    // the forwarded bytes are encoded once; retries resend them verbatim
-    let bytes = Frame::Request(req).to_bytes();
+    // the forwarded bytes are encoded once; retries resend them verbatim.
+    // The frame is kept around so a v2-negotiated backend can get a lazy
+    // re-encode without the trace tail (`compat`, computed at most once).
+    let fwd_frame = Frame::Request(req);
+    let bytes = fwd_frame.to_bytes();
+    let mut compat: Option<Vec<u8>> = None;
+    // router-side span accumulator (RouterStage indices 0..ROUTER_STAGES)
+    let mut spans = [0u64; STAGES];
     // per-request backoff stream: reproducible given (fabric seed, id)
     let mut backoff = Backoff::new(cfg.backoff, cfg.seed ^ req_id.wrapping_mul(0x9E37_79B9));
     let mut last_failed: Option<usize> = None;
@@ -548,7 +687,10 @@ fn route_job(
                 std::thread::sleep(delay.min(remaining));
             }
         }
-        let Some(idx) = ctx.fabric.pick(candidates, last_failed) else {
+        let t_pick = Instant::now();
+        let picked = ctx.fabric.pick(candidates, last_failed);
+        spans[RouterStage::Pick as usize] += dur_ns(t_pick.elapsed());
+        let Some(idx) = picked else {
             return shed(
                 ctx,
                 ErrorCode::Overloaded,
@@ -559,7 +701,8 @@ fn route_job(
             ctx.stats.inc_failover();
         }
         let t_fwd = Instant::now();
-        let outcome = forward_once(ctx, idx, &bytes, req_id, deadline);
+        let mut fwd = FwdBytes { frame: &fwd_frame, v3: &bytes, compat: &mut compat };
+        let outcome = forward_once(ctx, idx, &mut fwd, req_id, deadline, &mut spans);
         if obs::enabled() {
             obs::hist(HistId::FabricBackendRtt).record_ns(dur_ns(t_fwd.elapsed()));
         }
@@ -575,7 +718,13 @@ fn route_job(
                 if obs::enabled() {
                     obs::hist(HistId::FabricRequest).record_ns(dur_ns(t_start.elapsed()));
                 }
-                return frame.to_bytes();
+                let t_relay = Instant::now();
+                let out = frame.to_bytes();
+                spans[RouterStage::Relay as usize] += dur_ns(t_relay.elapsed());
+                if trace_id != 0 && obs::enabled() {
+                    record_router_trace(ctx, Trace::from_parts(req_id, trace_id, spans));
+                }
+                return out;
             }
             Forward::ConnFailed(_) => {
                 ctx.fabric.backends()[idx].inc_forward_failed();
@@ -619,18 +768,55 @@ fn route_job(
     )
 }
 
+/// Record a router-side span into the router's trace ring (exact
+/// per-instance books; global counters mirror the record/drop outcome).
+fn record_router_trace(ctx: &RouterCtx, trace: Trace) {
+    if ctx.traces.record(&trace) {
+        obs::counter(CounterId::TracesRecorded).inc();
+    } else {
+        obs::counter(CounterId::TracesDropped).inc();
+    }
+}
+
+/// The request being forwarded, in both encodings: the v3 bytes (with
+/// the trace tail when present) and a lazily built v2-compatible
+/// re-encode (trace stripped) for backends negotiated at v2.
+struct FwdBytes<'a> {
+    frame: &'a Frame,
+    v3: &'a [u8],
+    compat: &'a mut Option<Vec<u8>>,
+}
+
+impl FwdBytes<'_> {
+    /// The bytes to put on a connection negotiated at `version`.
+    fn for_version(&mut self, version: u32) -> &[u8] {
+        let traced = matches!(self.frame, Frame::Request(r) if r.trace.is_some());
+        if version >= proto::VERSION || !traced {
+            return self.v3;
+        }
+        self.compat.get_or_insert_with(|| {
+            let Frame::Request(r) = self.frame else { unreachable!() };
+            let mut bare = r.clone();
+            bare.trace = None;
+            Frame::Request(bare).to_bytes()
+        })
+    }
+}
+
 /// One forward attempt against backend `idx`: checkout (pooled or fresh
 /// dial), send the encoded request, await the matching frame. Fault
 /// injection is consulted here — the router-side points are response
 /// delay, synthetic connection drop, forced `Overloaded`, and one-byte
 /// frame corruption (the backend then answers `Malformed`, which the
-/// router treats as a poisoned connection).
+/// router treats as a poisoned connection). The checkout+send cost lands
+/// in the `forward` span; the read loop lands in `backend_wait`.
 fn forward_once(
     ctx: &RouterCtx,
     idx: usize,
-    bytes: &[u8],
+    fwd: &mut FwdBytes<'_>,
     req_id: u64,
     deadline: Instant,
+    spans: &mut [u64; STAGES],
 ) -> Forward {
     if fault::enabled() {
         if fault::should_inject(FaultKind::Delay) {
@@ -643,10 +829,12 @@ fn forward_once(
             return Forward::Overloaded;
         }
     }
+    let t_fwd = Instant::now();
     let mut conn: BackendConn = match ctx.fabric.checkout(idx) {
         Ok(c) => c,
         Err(e) => return Forward::ConnFailed(e),
     };
+    let bytes = fwd.for_version(conn.version);
     let send_result = if fault::enabled() && fault::should_inject(FaultKind::Corrupt) {
         let mut copy = bytes.to_vec();
         let last = copy.len() - 1;
@@ -658,31 +846,33 @@ fn forward_once(
     if let Err(e) = send_result {
         return Forward::ConnFailed(format!("send: {e}"));
     }
-    loop {
+    spans[RouterStage::Forward as usize] += dur_ns(t_fwd.elapsed());
+    let t_wait = Instant::now();
+    let outcome = 'wait: loop {
         if Instant::now() >= deadline {
-            return Forward::DeadlineMidRead;
+            break 'wait Forward::DeadlineMidRead;
         }
         match conn.reader.poll_frame(&mut conn.stream) {
             Ok(None) => continue, // BACKEND_POLL tick
             Ok(Some(Frame::Response(resp))) => {
                 if resp.id != req_id {
-                    return Forward::ConnFailed(format!(
+                    break 'wait Forward::ConnFailed(format!(
                         "response id {} for request {req_id}",
                         resp.id
                     ));
                 }
                 let frame = Frame::Response(resp);
                 ctx.fabric.backends()[idx].checkin(conn);
-                return Forward::Answer { frame, ok: true };
+                break 'wait Forward::Answer { frame, ok: true };
             }
             Ok(Some(Frame::Error(e))) => {
                 if e.id != req_id && e.id != 0 {
-                    return Forward::ConnFailed(format!(
+                    break 'wait Forward::ConnFailed(format!(
                         "error frame for foreign request {}",
                         e.id
                     ));
                 }
-                return match e.code {
+                break 'wait match e.code {
                     ErrorCode::Overloaded => {
                         // request-level shed keeps the conn framed
                         ctx.fabric.backends()[idx].checkin(conn);
@@ -709,12 +899,129 @@ fn forward_once(
                 };
             }
             Ok(Some(_)) => {
-                return Forward::ConnFailed("unexpected frame from backend".to_string());
+                break 'wait Forward::ConnFailed("unexpected frame from backend".to_string());
             }
             Err(WireError::Closed) => {
-                return Forward::ConnFailed("backend closed the connection".to_string());
+                break 'wait Forward::ConnFailed("backend closed the connection".to_string());
             }
-            Err(e) => return Forward::ConnFailed(e.to_string()),
+            Err(e) => break 'wait Forward::ConnFailed(e.to_string()),
+        }
+    };
+    spans[RouterStage::BackendWait as usize] += dur_ns(t_wait.elapsed());
+    outcome
+}
+
+/// Fan `StatsRequest` to every backend and merge: the body of a
+/// `FleetStatsRequest`. Returns the reply JSON document (schema in
+/// `docs/OBSERVABILITY.md` and `docs/FABRIC.md`): a `"fleet"` section
+/// (health census, counters summed key-wise over each backend's
+/// `"server"` object, latency histograms merged bucket-wise from each
+/// backend's canonical `"batch"."latency"` form), the router's own
+/// counters, and a per-backend array carrying each backend's full stats
+/// document or the error that kept it out of the merge.
+fn fleet_stats_json(ctx: &RouterCtx, id: u64) -> String {
+    let backends = ctx.fabric.backends();
+    let deadline = Instant::now() + ctx.fabric.cfg().deadline;
+    let mut per_backend = Vec::with_capacity(backends.len());
+    let mut merged_counters: BTreeMap<String, f64> = BTreeMap::new();
+    let mut merged_latency = HistogramSnapshot::empty();
+    let mut backends_ok = 0usize;
+    let (mut healthy, mut suspect, mut down) = (0usize, 0usize, 0usize);
+    for (i, b) in backends.iter().enumerate() {
+        match b.state() {
+            HealthState::Healthy => healthy += 1,
+            HealthState::Suspect => suspect += 1,
+            HealthState::Down => down += 1,
+        }
+        let mut entry = vec![
+            ("addr", Json::Str(b.addr().to_string())),
+            ("state", Json::Str(b.state().name().to_string())),
+        ];
+        match backend_stats_once(ctx, i, id, deadline) {
+            Ok(doc) => {
+                backends_ok += 1;
+                if let Some(server) = doc.get("server").and_then(|s| s.as_obj()) {
+                    for (k, v) in server {
+                        if let Some(n) = v.as_f64() {
+                            *merged_counters.entry(k.clone()).or_insert(0.0) += n;
+                        }
+                    }
+                }
+                if let Some(h) = doc
+                    .get("batch")
+                    .and_then(|s| s.get("latency"))
+                    .and_then(HistogramSnapshot::from_json)
+                {
+                    merged_latency.merge(&h);
+                }
+                entry.push(("ok", Json::Bool(true)));
+                entry.push(("stats", doc));
+            }
+            Err(e) => {
+                entry.push(("ok", Json::Bool(false)));
+                entry.push(("error", Json::Str(e)));
+            }
+        }
+        per_backend.push(Json::obj(entry));
+    }
+    let fleet = Json::obj(vec![
+        ("backends_total", Json::from(backends.len())),
+        ("backends_ok", Json::from(backends_ok)),
+        (
+            "health",
+            Json::obj(vec![
+                ("healthy", Json::from(healthy)),
+                ("suspect", Json::from(suspect)),
+                ("down", Json::from(down)),
+            ]),
+        ),
+        (
+            "counters",
+            Json::Obj(merged_counters.into_iter().map(|(k, v)| (k, Json::Num(v))).collect()),
+        ),
+        ("latency", merged_latency.to_json()),
+    ]);
+    Json::obj(vec![
+        ("fleet", fleet),
+        ("router", router_counters_json(ctx)),
+        ("backends", Json::Arr(per_backend)),
+    ])
+    .to_string()
+}
+
+/// One stats round trip against backend `idx` over a pooled connection
+/// (or a fresh dial), id-matched under the fleet deadline. Failures drop
+/// the connection (an unread response would desync it) but do not touch
+/// routing health — a slow stats answer is not a routing signal.
+fn backend_stats_once(
+    ctx: &RouterCtx,
+    idx: usize,
+    id: u64,
+    deadline: Instant,
+) -> std::result::Result<Json, String> {
+    let mut conn: BackendConn = ctx.fabric.checkout(idx)?;
+    let bytes = Frame::StatsRequest(StatsRequestFrame { id }).to_bytes();
+    conn.stream.write_all(&bytes).map_err(|e| format!("send: {e}"))?;
+    loop {
+        if Instant::now() >= deadline {
+            return Err("deadline exhausted waiting for backend stats".to_string());
+        }
+        match conn.reader.poll_frame(&mut conn.stream) {
+            Ok(None) => continue, // BACKEND_POLL tick
+            Ok(Some(Frame::StatsResponse(s))) => {
+                if s.id != id {
+                    return Err(format!("stats response id {} for request {id}", s.id));
+                }
+                let doc = Json::parse(&s.json).map_err(|e| format!("stats json: {e}"))?;
+                ctx.fabric.backends()[idx].checkin(conn);
+                return Ok(doc);
+            }
+            Ok(Some(Frame::Error(e))) => {
+                return Err(format!("backend refused stats: [{}] {}", e.code, e.message));
+            }
+            Ok(Some(_)) => return Err("unexpected frame from backend".to_string()),
+            Err(WireError::Closed) => return Err("backend closed the connection".to_string()),
+            Err(e) => return Err(e.to_string()),
         }
     }
 }

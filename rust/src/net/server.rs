@@ -41,7 +41,7 @@
 
 use crate::net::plane::{
     self, Completion, CompletionSink, ConnKey, Dispatch, Plane, PlaneConfig, PlaneEvent,
-    RequestAction, RequestCtx, TraceDraft,
+    PlaneStats, RequestAction, RequestCtx, TraceDraft,
 };
 use crate::net::proto::{self, ErrorCode, Frame, HelloFrame, ModelEntry, RequestFrame};
 use crate::obs::{self, CounterId, GaugeId, Trace, TraceRing};
@@ -227,6 +227,9 @@ struct ConnCtx {
     /// Recent request traces (overwrite-oldest; never blocks a net
     /// thread).
     traces: TraceRing,
+    /// Per-net-thread plane books (wakeups, writeq depth), shared with
+    /// the event plane.
+    plane_stats: Arc<PlaneStats>,
     /// Precomputed server preamble + hello frame (catalog), written to
     /// every handshaken connection.
     hello: Vec<u8>,
@@ -264,6 +267,7 @@ impl NetServer {
             .with_context(|| format!("binding {}", net_cfg.bind_addr))?;
         let local_addr = listener.local_addr().context("resolving bound address")?;
         let batch = MicroBatchServer::start(Arc::clone(&registry), serve_cfg);
+        let plane_stats = Arc::new(PlaneStats::new(net_cfg.net_threads.max(1)));
         let ctx = Arc::new(ConnCtx {
             hello: hello_bytes(&registry),
             client: batch.client(),
@@ -274,6 +278,7 @@ impl NetServer {
             max_frame: net_cfg.max_frame_bytes.max(1024),
             stats: NetStats::default(),
             traces: TraceRing::new(net_cfg.trace_slots.max(2)),
+            plane_stats: Arc::clone(&plane_stats),
         });
         let plane_cfg = PlaneConfig {
             name: "lcq-net",
@@ -282,6 +287,7 @@ impl NetServer {
             max_inflight: net_cfg.max_inflight.max(1),
             max_frame: net_cfg.max_frame_bytes.max(1024),
             frame_deadline: net_cfg.frame_deadline.max(Duration::from_millis(25)),
+            stats: plane_stats,
         };
         let dispatch: Arc<dyn Dispatch> = Arc::new(ServerDispatch { ctx: Arc::clone(&ctx) });
         let plane = match Plane::start(listener, dispatch, plane_cfg) {
@@ -343,13 +349,16 @@ impl Drop for NetServer {
 /// Render the full stats snapshot for one server (the `Stats` frame body;
 /// schema in `docs/OBSERVABILITY.md`).
 fn snapshot_json(ctx: &ConnCtx) -> String {
+    let ring = ctx.traces.snapshot();
     Json::obj(vec![
         ("server", ctx.stats.to_json()),
         ("batch", ctx.serve_stats.to_json()),
         ("process", obs::global().snapshot_json()),
         ("pool", crate::linalg::pool::profile().to_json()),
+        ("plane", ctx.plane_stats.to_json()),
         ("traces", obs::traces_json(&ctx.traces.slowest(8))),
         ("traces_dropped", Json::from(ctx.traces.dropped() as usize)),
+        ("trace_ids", obs::trace_ids_json(&ring)),
     ])
     .to_string()
 }
@@ -406,6 +415,10 @@ impl Dispatch for ServerDispatch {
                 self.ctx.stats.inc_shed();
                 self.ctx.stats.inc_writeq_shed();
             }
+            // backends never answer fleet queries (the plane rejects tag 7
+            // as malformed when the dispatch declines), so this is
+            // unreachable here — routers own the arm
+            PlaneEvent::FleetStatsServed => {}
         }
     }
 
@@ -487,6 +500,7 @@ impl Dispatch for ServerDispatch {
         // immediately
         let agg = Arc::new(Mutex::new(PendingAgg {
             id,
+            trace_id: req.trace.map(|t| t.trace_id).unwrap_or(0),
             rows,
             out_dim,
             data: vec![0.0; rows * out_dim],
@@ -547,6 +561,9 @@ impl Dispatch for ServerDispatch {
 /// the worst value.
 struct PendingAgg {
     id: u64,
+    /// Propagated trace id (0 = untraced); stitches this backend span to
+    /// the router/client span sharing the id.
+    trace_id: u64,
     rows: usize,
     out_dim: usize,
     data: Vec<f32>,
@@ -652,6 +669,7 @@ fn send_completion(ctx: &ConnCtx, agg: &Mutex<PendingAgg>, sink: &CompletionSink
                 let frame_ns = dur_ns(t_frame.elapsed());
                 let trace = obs::enabled().then(|| TraceDraft {
                     id: a.id,
+                    trace_id: a.trace_id,
                     accept_ns: a.accept_ns,
                     decode_ns: a.decode_ns,
                     queue_ns: a.queue_ns,

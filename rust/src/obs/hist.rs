@@ -74,6 +74,24 @@ impl Histogram {
         self.record_ns(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
     }
 
+    /// Fold a frozen snapshot into this histogram, bucket by bucket.
+    /// Because every histogram in the stack shares the same log₂ bucket
+    /// edges, merging is **lossless**: percentiles over the merged
+    /// counts equal percentiles over the pooled raw samples (pinned by a
+    /// property test in `rust/tests/obs.rs`). This is the aggregation
+    /// primitive behind the router's fleet-stats view; the serialized
+    /// twin is [`HistogramSnapshot::merge`].
+    pub fn merge(&self, other: &HistogramSnapshot) {
+        for (b, &c) in self.buckets.iter().zip(&other.counts) {
+            if c > 0 {
+                b.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        if other.sum_ns > 0 {
+            self.sum_ns.fetch_add(other.sum_ns, Ordering::Relaxed);
+        }
+    }
+
     /// Point-in-time copy of the bucket counts (relaxed reads; counts
     /// recorded concurrently may or may not be included).
     pub fn snapshot(&self) -> HistogramSnapshot {
@@ -156,9 +174,53 @@ impl HistogramSnapshot {
         }
     }
 
+    /// An empty snapshot (the identity element of [`merge`]).
+    ///
+    /// [`merge`]: HistogramSnapshot::merge
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot { counts: [0; HIST_BUCKETS], sum_ns: 0 }
+    }
+
+    /// Exact bucket-wise merge: after `a.merge(&b)`, every percentile of
+    /// `a` answers as if the two underlying sample streams had been
+    /// recorded into one histogram — log₂ buckets align across processes,
+    /// so merging is lossless (no re-bucketing, no interpolation).
+    /// Saturating adds keep hostile/huge inputs from wrapping.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a = a.saturating_add(*b);
+        }
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+    }
+
+    /// Bucket-wise difference against an earlier snapshot of the *same*
+    /// histogram: what was recorded in between. Saturating, so a restarted
+    /// peer (counters reset) degrades to the current totals instead of
+    /// wrapping. Feeds the [`crate::obs::window`] rolling rates.
+    pub fn delta_since(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::empty();
+        for (o, (now, then)) in
+            out.counts.iter_mut().zip(self.counts.iter().zip(&earlier.counts))
+        {
+            *o = now.saturating_sub(*then);
+        }
+        out.sum_ns = self.sum_ns.saturating_sub(earlier.sum_ns);
+        out
+    }
+
     /// Summary object for the stats snapshot: count, mean and tail
-    /// percentiles in milliseconds.
+    /// percentiles in milliseconds, plus the canonical mergeable form —
+    /// `sum_ns` and a sparse `buckets` array of `[index, count]` pairs
+    /// (non-empty buckets only, ascending index) that
+    /// [`HistogramSnapshot::from_json`] round-trips exactly.
     pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::from(i), Json::from(c as usize)]))
+            .collect();
         Json::obj(vec![
             ("count", Json::from(self.count() as usize)),
             ("mean_ms", Json::from(self.mean_ns() / 1e6)),
@@ -166,7 +228,35 @@ impl HistogramSnapshot {
             ("p90_ms", Json::from(self.percentile_ms(90.0) as f64)),
             ("p99_ms", Json::from(self.percentile_ms(99.0) as f64)),
             ("max_ms", Json::from(self.max_ms() as f64)),
+            ("sum_ns", Json::from(self.sum_ns as usize)),
+            ("buckets", Json::Arr(buckets)),
         ])
+    }
+
+    /// Rebuild a snapshot from the canonical form emitted by
+    /// [`HistogramSnapshot::to_json`]. Hostile documents degrade to `None`
+    /// (bad shapes, bucket index ≥ [`HIST_BUCKETS`]) — never a panic.
+    pub fn from_json(doc: &Json) -> Option<HistogramSnapshot> {
+        let mut out = HistogramSnapshot::empty();
+        out.sum_ns = doc.get("sum_ns")?.as_f64()? as u64;
+        let Json::Arr(pairs) = doc.get("buckets")? else {
+            return None;
+        };
+        for pair in pairs {
+            let Json::Arr(kv) = pair else {
+                return None;
+            };
+            if kv.len() != 2 {
+                return None;
+            }
+            let idx = kv[0].as_f64()? as usize;
+            let count = kv[1].as_f64()? as u64;
+            if idx >= HIST_BUCKETS {
+                return None;
+            }
+            out.counts[idx] = out.counts[idx].saturating_add(count);
+        }
+        Some(out)
     }
 }
 
@@ -214,5 +304,75 @@ mod tests {
         assert_eq!(s.percentile_ns(50.0), 0);
         assert_eq!(s.max_ns(), 0);
         assert_eq!(s.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_exact_and_commutative() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let pooled = Histogram::new();
+        for v in [3u64, 10, 200, 5000, 0] {
+            a.record_ns(v);
+            pooled.record_ns(v);
+        }
+        for v in [7u64, 180, 9000, 1 << 40] {
+            b.record_ns(v);
+            pooled.record_ns(v);
+        }
+        let mut ab = a.snapshot();
+        ab.merge(&b.snapshot());
+        let mut ba = b.snapshot();
+        ba.merge(&a.snapshot());
+        let p = pooled.snapshot();
+        assert_eq!(ab.counts, p.counts);
+        assert_eq!(ba.counts, p.counts);
+        assert_eq!(ab.sum_ns, p.sum_ns);
+        for q in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(ab.percentile_ns(q), p.percentile_ns(q), "q={q}");
+        }
+        // empty is the identity
+        let mut e = HistogramSnapshot::empty();
+        e.merge(&p);
+        assert_eq!(e.counts, p.counts);
+    }
+
+    #[test]
+    fn delta_since_recovers_the_interval() {
+        let h = Histogram::new();
+        h.record_ns(10);
+        h.record_ns(200);
+        let t0 = h.snapshot();
+        h.record_ns(10);
+        h.record_ns(3000);
+        let d = h.snapshot().delta_since(&t0);
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.counts[bucket_index(10)], 1);
+        assert_eq!(d.counts[bucket_index(3000)], 1);
+        assert_eq!(d.sum_ns, 3010);
+        // a reset peer (snapshot smaller than baseline) saturates to zero
+        let z = t0.delta_since(&h.snapshot());
+        assert_eq!(z.count(), 0);
+    }
+
+    #[test]
+    fn canonical_json_round_trips() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 10, 10, 200, 1 << 40] {
+            h.record_ns(v);
+        }
+        let s = h.snapshot();
+        let back = HistogramSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.counts, s.counts);
+        assert_eq!(back.sum_ns, s.sum_ns);
+        // hostile documents: bucket index out of range, bad shapes
+        let bad = crate::util::json::Json::parse(
+            r#"{"sum_ns":1,"buckets":[[99,1]]}"#,
+        )
+        .unwrap();
+        assert!(HistogramSnapshot::from_json(&bad).is_none());
+        let bad = crate::util::json::Json::parse(r#"{"sum_ns":1}"#).unwrap();
+        assert!(HistogramSnapshot::from_json(&bad).is_none());
+        let bad = crate::util::json::Json::parse(r#"{"sum_ns":1,"buckets":[[1]]}"#).unwrap();
+        assert!(HistogramSnapshot::from_json(&bad).is_none());
     }
 }

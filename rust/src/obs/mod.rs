@@ -29,9 +29,11 @@
 
 pub mod hist;
 pub mod trace;
+pub mod window;
 
 pub use hist::{Histogram, HistogramSnapshot, HIST_BUCKETS};
-pub use trace::{Stage, Trace, TraceRing, STAGES};
+pub use trace::{RouterStage, Stage, Trace, TraceRing, ROUTER_STAGES, STAGES};
+pub use window::{RateWindow, WindowRates};
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -105,10 +107,13 @@ pub enum CounterId {
     /// pipeline bound (`max_inflight`: queued replies + in-flight rows)
     /// was already full.
     NetWriteqSheds = 26,
+    /// Fleet-stats frames answered by a fabric router (one per
+    /// `FleetStatsRequest`, regardless of how many backends it fanned to).
+    NetFleetStatsRequests = 27,
 }
 
 /// Number of [`CounterId`] variants.
-pub const COUNTERS: usize = 27;
+pub const COUNTERS: usize = 28;
 
 impl CounterId {
     /// All counters, declaration order.
@@ -140,6 +145,7 @@ impl CounterId {
         CounterId::FabricProbes,
         CounterId::NetEpollWakeups,
         CounterId::NetWriteqSheds,
+        CounterId::NetFleetStatsRequests,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -172,6 +178,7 @@ impl CounterId {
             CounterId::FabricProbes => "fabric_probes",
             CounterId::NetEpollWakeups => "net_epoll_wakeups",
             CounterId::NetWriteqSheds => "net_writeq_sheds",
+            CounterId::NetFleetStatsRequests => "net_fleet_stats_requests",
         }
     }
 }
@@ -199,10 +206,13 @@ pub enum GaugeId {
     /// Net server: rows currently inside the in-flight budget (admitted
     /// to the batcher, response not yet assembled).
     NetInflight = 8,
+    /// Net server: replies queued in connection write queues, summed
+    /// across net threads at the last poll tick.
+    NetWriteqDepth = 9,
 }
 
 /// Number of [`GaugeId`] variants.
-pub const GAUGES: usize = 9;
+pub const GAUGES: usize = 10;
 
 impl GaugeId {
     /// All gauges, declaration order.
@@ -216,6 +226,7 @@ impl GaugeId {
         GaugeId::FabricBackendsHealthy,
         GaugeId::FabricBackendsDown,
         GaugeId::NetInflight,
+        GaugeId::NetWriteqDepth,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -230,6 +241,7 @@ impl GaugeId {
             GaugeId::FabricBackendsHealthy => "fabric_backends_healthy",
             GaugeId::FabricBackendsDown => "fabric_backends_down",
             GaugeId::NetInflight => "net_inflight",
+            GaugeId::NetWriteqDepth => "net_writeq_depth",
         }
     }
 }
@@ -260,10 +272,13 @@ pub enum HistId {
     FabricRequest = 9,
     /// Router: one backend round trip (forward → backend reply).
     FabricBackendRtt = 10,
+    /// Router: full fleet-stats fan-out wall time (all backends queried,
+    /// merged document built).
+    FabricFleetFanout = 11,
 }
 
 /// Number of [`HistId`] variants.
-pub const HISTS: usize = 11;
+pub const HISTS: usize = 12;
 
 impl HistId {
     /// All histograms, declaration order.
@@ -279,6 +294,7 @@ impl HistId {
         HistId::ModelLoad,
         HistId::FabricRequest,
         HistId::FabricBackendRtt,
+        HistId::FabricFleetFanout,
     ];
 
     /// Stable snake_case name (the JSON key in snapshots).
@@ -295,6 +311,7 @@ impl HistId {
             HistId::ModelLoad => "model_load",
             HistId::FabricRequest => "fabric_request",
             HistId::FabricBackendRtt => "fabric_backend_rtt",
+            HistId::FabricFleetFanout => "fabric_fleet_fanout",
         }
     }
 }
@@ -486,7 +503,7 @@ pub fn lc_iteration(iter: usize, mu: f64, loss: f64, feasibility: f64, lstep_ns:
 }
 
 /// Render a slice of traces for the stats snapshot: each trace becomes
-/// `{"id": n, "total_ms": x, "stages": {accept: ms, ...}}`.
+/// `{"id": n, "trace_id": n, "total_ms": x, "stages": {accept: ms, ...}}`.
 pub fn traces_json(traces: &[Trace]) -> Json {
     let items: Vec<Json> = traces
         .iter()
@@ -497,12 +514,48 @@ pub fn traces_json(traces: &[Trace]) -> Json {
                 .collect();
             Json::obj(vec![
                 ("id", Json::from(t.id as usize)),
+                ("trace_id", Json::from(t.trace_id as usize)),
                 ("total_ms", Json::from(t.total_ns() as f64 / 1e6)),
                 ("stages", Json::obj(stages)),
             ])
         })
         .collect();
     Json::Arr(items)
+}
+
+/// Render router-side spans: same shape as [`traces_json`] but the stage
+/// keys are the [`RouterStage`] hop names (`pick`/`forward`/`backend_wait`
+/// /`relay`) read from the first [`ROUTER_STAGES`] stage words.
+pub fn router_traces_json(traces: &[Trace]) -> Json {
+    let items: Vec<Json> = traces
+        .iter()
+        .map(|t| {
+            let stages = RouterStage::ALL
+                .iter()
+                .map(|&s| (s.name(), Json::from(t.stage_ns[s as usize] as f64 / 1e6)))
+                .collect();
+            Json::obj(vec![
+                ("id", Json::from(t.id as usize)),
+                ("trace_id", Json::from(t.trace_id as usize)),
+                ("total_ms", Json::from(t.total_ns() as f64 / 1e6)),
+                ("stages", Json::obj(stages)),
+            ])
+        })
+        .collect();
+    Json::Arr(items)
+}
+
+/// Render the trace ids currently resident in a ring (the loadgen trace-
+/// coverage probe reads this): an array of the non-zero fleet trace ids,
+/// unordered.
+pub fn trace_ids_json(traces: &[Trace]) -> Json {
+    Json::Arr(
+        traces
+            .iter()
+            .filter(|t| t.trace_id != 0)
+            .map(|t| Json::from(t.trace_id as usize))
+            .collect(),
+    )
 }
 
 #[cfg(test)]

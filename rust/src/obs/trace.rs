@@ -69,6 +69,46 @@ impl Stage {
     }
 }
 
+/// Router-side hop stages for a forwarded request, in order. A router
+/// span reuses the same [`TraceRing`] machinery as the backend's 7-stage
+/// pipeline but times the fabric hop instead; the two link up through the
+/// shared fleet-wide `trace_id`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum RouterStage {
+    /// Candidate filtering + health-aware replica pick.
+    Pick = 0,
+    /// Writing the forwarded request to the backend socket.
+    Forward = 1,
+    /// Waiting for the backend's reply (includes all retry attempts).
+    BackendWait = 2,
+    /// Relaying the backend's answer back toward the client.
+    Relay = 3,
+}
+
+/// Number of [`RouterStage`] variants.
+pub const ROUTER_STAGES: usize = 4;
+
+impl RouterStage {
+    /// All router stages, hop order.
+    pub const ALL: [RouterStage; ROUTER_STAGES] = [
+        RouterStage::Pick,
+        RouterStage::Forward,
+        RouterStage::BackendWait,
+        RouterStage::Relay,
+    ];
+
+    /// Stable display name (used as the JSON key in snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterStage::Pick => "pick",
+            RouterStage::Forward => "forward",
+            RouterStage::BackendWait => "backend_wait",
+            RouterStage::Relay => "relay",
+        }
+    }
+}
+
 /// One request's span record, built up stage by stage on the connection
 /// thread and published to a [`TraceRing`] when the response is written.
 /// Plain value type — building and finishing a trace allocates nothing.
@@ -76,20 +116,24 @@ impl Stage {
 pub struct Trace {
     /// Wire request id (`RequestFrame::id`).
     pub id: u64,
+    /// Fleet-wide trace id stitching this span to the other tiers' spans
+    /// for the same request (0 = untraced / pre-v3 record).
+    pub trace_id: u64,
     /// Per-stage wall time, nanoseconds, indexed by [`Stage`].
     pub stage_ns: [u64; STAGES],
     start: Option<Instant>,
 }
 
 impl Trace {
-    /// Start a trace for wire request `id`.
+    /// Start a trace for wire request `id` (untraced fleet identity; set
+    /// [`Trace::trace_id`] to link it across tiers).
     pub fn begin(id: u64) -> Trace {
-        Trace { id, stage_ns: [0; STAGES], start: Some(Instant::now()) }
+        Trace { id, trace_id: 0, stage_ns: [0; STAGES], start: Some(Instant::now()) }
     }
 
     /// A trace with no timing clock (for decoded/stored records).
-    pub fn from_parts(id: u64, stage_ns: [u64; STAGES]) -> Trace {
-        Trace { id, stage_ns, start: None }
+    pub fn from_parts(id: u64, trace_id: u64, stage_ns: [u64; STAGES]) -> Trace {
+        Trace { id, trace_id, stage_ns, start: None }
     }
 
     /// Set one stage's duration directly.
@@ -112,8 +156,9 @@ impl Trace {
     }
 }
 
-/// Words per ring slot: request id, total, then one word per stage.
-const SLOT_WORDS: usize = 2 + STAGES;
+/// Words per ring slot: request id, fleet trace id, total, then one word
+/// per stage.
+const SLOT_WORDS: usize = 3 + STAGES;
 
 struct TraceSlot {
     /// Even = stable, odd = mid-write, 0 = never written.
@@ -179,8 +224,9 @@ impl TraceRing {
             return false;
         }
         slot.words[0].store(trace.id, Ordering::Relaxed);
-        slot.words[1].store(trace.total_ns(), Ordering::Relaxed);
-        for (w, &ns) in slot.words[2..].iter().zip(trace.stage_ns.iter()) {
+        slot.words[1].store(trace.trace_id, Ordering::Relaxed);
+        slot.words[2].store(trace.total_ns(), Ordering::Relaxed);
+        for (w, &ns) in slot.words[3..].iter().zip(trace.stage_ns.iter()) {
             w.store(ns, Ordering::Relaxed);
         }
         slot.seq.store(seq + 2, Ordering::Release);
@@ -197,15 +243,16 @@ impl TraceRing {
                 continue;
             }
             let id = slot.words[0].load(Ordering::Relaxed);
+            let trace_id = slot.words[1].load(Ordering::Relaxed);
             let mut stage_ns = [0u64; STAGES];
-            for (ns, w) in stage_ns.iter_mut().zip(&slot.words[2..]) {
+            for (ns, w) in stage_ns.iter_mut().zip(&slot.words[3..]) {
                 *ns = w.load(Ordering::Relaxed);
             }
             std::sync::atomic::fence(Ordering::Acquire);
             if slot.seq.load(Ordering::Relaxed) != s1 {
                 continue;
             }
-            out.push(Trace::from_parts(id, stage_ns));
+            out.push(Trace::from_parts(id, trace_id, stage_ns));
         }
         out
     }
@@ -240,6 +287,23 @@ mod tests {
         assert_eq!(got[0].id, 7);
         assert_eq!(got[0].stage_ns[Stage::Compute as usize], 104);
         assert_eq!(got[0].total_ns(), (100..107).sum::<u64>());
+    }
+
+    #[test]
+    fn trace_id_round_trips_through_the_ring() {
+        let ring = TraceRing::new(4);
+        let mut t = mk(11, 50);
+        t.trace_id = 0xABCD;
+        assert!(ring.record(&t));
+        let got = ring.snapshot();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 11);
+        assert_eq!(got[0].trace_id, 0xABCD);
+        // untraced records report the 0 sentinel
+        assert_eq!(mk(12, 0).trace_id, 0);
+        for st in RouterStage::ALL {
+            assert!(!st.name().is_empty());
+        }
     }
 
     #[test]

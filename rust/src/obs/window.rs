@@ -1,0 +1,183 @@
+//! Windowed rates: turning monotonic counters into rolling req/s.
+//!
+//! Every counter and histogram in the plane is a monotonic total — cheap
+//! to record, trivially mergeable, but useless for "how fast right now".
+//! A [`RateWindow`] is a small ring of periodic samples (counter values +
+//! a histogram snapshot + a timestamp); subtracting the oldest retained
+//! sample from the newest yields the activity *inside the window*:
+//! rolling requests/s, shed rate, and a p99 over just the last N seconds
+//! via [`HistogramSnapshot::delta_since`] (bucket-wise, exact — log₂
+//! buckets make interval percentiles as honest as lifetime ones).
+//!
+//! The window is a poller-side structure (`lcquant top`, the periodic
+//! snapshot dump) — nothing on the serving hot path touches it.
+
+use super::hist::HistogramSnapshot;
+use std::collections::VecDeque;
+
+/// One periodic observation of a peer's monotonic books.
+#[derive(Clone, Debug)]
+struct Sample {
+    /// Caller-supplied timestamp, seconds from any fixed origin.
+    t_s: f64,
+    /// Requests answered OK, lifetime total.
+    requests: u64,
+    /// Requests shed, lifetime total.
+    shed: u64,
+    /// Latency histogram snapshot at the same instant.
+    hist: HistogramSnapshot,
+}
+
+/// Rolling rates derived from the oldest and newest retained samples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowRates {
+    /// Window span actually covered, seconds.
+    pub span_s: f64,
+    /// Requests answered per second over the window.
+    pub qps: f64,
+    /// Sheds per second over the window.
+    pub shed_per_s: f64,
+    /// Shed fraction over the window: `shed / (ok + shed)`, 0 when idle.
+    pub shed_rate: f64,
+    /// p99 latency of requests recorded *inside* the window, ms.
+    pub p99_ms: f32,
+    /// Requests recorded inside the window (the delta's sample count).
+    pub delta_count: u64,
+}
+
+/// Bounded ring of periodic counter/histogram samples (see module docs).
+pub struct RateWindow {
+    slots: usize,
+    samples: VecDeque<Sample>,
+}
+
+impl RateWindow {
+    /// A window retaining the most recent `slots` samples (minimum 2 —
+    /// rates need two points).
+    pub fn new(slots: usize) -> RateWindow {
+        let slots = slots.max(2);
+        RateWindow { slots, samples: VecDeque::with_capacity(slots) }
+    }
+
+    /// Number of samples retained at most.
+    pub fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    /// Samples currently held.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True until the first sample arrives.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Record one observation. `t_s` is a caller-supplied monotonic
+    /// timestamp in seconds (e.g. `Instant::elapsed` of the poller's
+    /// start); samples arriving with a timestamp older than the newest
+    /// retained one are dropped (a restarted poller starts a new window).
+    pub fn push(&mut self, t_s: f64, requests: u64, shed: u64, hist: HistogramSnapshot) {
+        if let Some(last) = self.samples.back() {
+            if t_s < last.t_s {
+                self.samples.clear();
+            }
+        }
+        if self.samples.len() == self.slots {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(Sample { t_s, requests, shed, hist });
+    }
+
+    /// Rates over the retained window: `None` until two samples exist or
+    /// while the span is not positive. Counter deltas saturate at zero, so
+    /// a peer restart (totals reset) reads as an idle window, not a spike.
+    pub fn rates(&self) -> Option<WindowRates> {
+        let oldest = self.samples.front()?;
+        let newest = self.samples.back()?;
+        let span_s = newest.t_s - oldest.t_s;
+        if span_s <= 0.0 {
+            return None;
+        }
+        let d_req = newest.requests.saturating_sub(oldest.requests);
+        let d_shed = newest.shed.saturating_sub(oldest.shed);
+        let delta = newest.hist.delta_since(&oldest.hist);
+        let offered = d_req + d_shed;
+        Some(WindowRates {
+            span_s,
+            qps: d_req as f64 / span_s,
+            shed_per_s: d_shed as f64 / span_s,
+            shed_rate: if offered == 0 { 0.0 } else { d_shed as f64 / offered as f64 },
+            p99_ms: delta.percentile_ms(99.0),
+            delta_count: delta.count(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::{bucket_index, bucket_max_ns, Histogram};
+
+    #[test]
+    fn rates_come_from_the_window_not_the_lifetime() {
+        let h = Histogram::new();
+        let mut w = RateWindow::new(4);
+        // lifetime history: 1000 fast requests before the window opened
+        for _ in 0..1000 {
+            h.record_ns(1_000); // ~1 µs
+        }
+        w.push(0.0, 1000, 0, h.snapshot());
+        // inside the window: 20 slow requests over 2 seconds
+        for _ in 0..20 {
+            h.record_ns(50_000_000); // 50 ms
+        }
+        w.push(2.0, 1020, 5, h.snapshot());
+        let r = w.rates().unwrap();
+        assert_eq!(r.span_s, 2.0);
+        assert_eq!(r.qps, 10.0);
+        assert_eq!(r.shed_per_s, 2.5);
+        assert!((r.shed_rate - 5.0 / 25.0).abs() < 1e-12);
+        assert_eq!(r.delta_count, 20);
+        // the window p99 sees only the slow bucket — the 1000 fast
+        // lifetime samples would have dragged a lifetime p99 to ~1 µs
+        let expect_ms = (bucket_max_ns(bucket_index(50_000_000)) as f64 / 1e6) as f32;
+        assert_eq!(r.p99_ms, expect_ms);
+    }
+
+    #[test]
+    fn window_is_bounded_and_slides() {
+        let mut w = RateWindow::new(3);
+        let h = Histogram::new();
+        for i in 0..10u64 {
+            w.push(i as f64, i * 100, 0, h.snapshot());
+        }
+        assert_eq!(w.len(), 3);
+        let r = w.rates().unwrap();
+        // oldest retained is t=7 (700), newest t=9 (900)
+        assert_eq!(r.span_s, 2.0);
+        assert_eq!(r.qps, 100.0);
+    }
+
+    #[test]
+    fn degenerate_windows_are_none_and_resets_are_absorbed() {
+        let h = Histogram::new();
+        let mut w = RateWindow::new(4);
+        assert!(w.rates().is_none());
+        w.push(1.0, 50, 0, h.snapshot());
+        assert!(w.rates().is_none(), "one sample has no span");
+        // same-timestamp second sample: still no positive span
+        w.push(1.0, 60, 0, h.snapshot());
+        assert!(w.rates().is_none());
+        // a peer restart: totals drop — saturating delta reads as idle
+        w.push(2.0, 5, 0, h.snapshot());
+        let r = w.rates().unwrap();
+        assert_eq!(r.qps, 0.0);
+        assert_eq!(r.shed_rate, 0.0);
+        // time going backwards starts a fresh window
+        w.push(0.5, 1000, 0, h.snapshot());
+        assert_eq!(w.len(), 1);
+        assert!(w.rates().is_none());
+    }
+}

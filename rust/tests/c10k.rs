@@ -216,6 +216,7 @@ fn request_frame(id: u64, input: &[f32]) -> Vec<u8> {
         rows: 1,
         cols: input.len() as u32,
         data: input.to_vec(),
+        trace: None,
     })
     .to_bytes()
 }

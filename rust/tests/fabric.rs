@@ -431,6 +431,7 @@ fn assert_slow_loris_shed(addr: &str) {
         rows: 1,
         cols: 12,
         data: vec![0.0; 12],
+        trace: None,
     })
     .to_bytes();
     stream.write_all(&bytes[..bytes.len() / 2]).unwrap();

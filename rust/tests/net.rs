@@ -17,8 +17,9 @@
 
 use lcquant::linalg::{pool, Mat};
 use lcquant::net::proto::{
-    self, ErrorCode, ErrorFrame, Frame, FrameReader, HelloFrame, ModelEntry, RequestFrame,
-    ResponseFrame, StatsRequestFrame, StatsResponseFrame, WireError,
+    self, ErrorCode, ErrorFrame, FleetStatsRequestFrame, FleetStatsResponseFrame, Frame,
+    FrameReader, HelloFrame, ModelEntry, RequestFrame, ResponseFrame, StatsRequestFrame,
+    StatsResponseFrame, TraceContext, WireError,
 };
 use lcquant::net::{ClientError, NetClient, NetConfig, NetServer};
 use lcquant::nn::{Activation, MlpSpec};
@@ -221,8 +222,17 @@ fn connection_limit_sheds_at_the_door() {
 /// Raw-socket handshake helper: returns the stream after the client
 /// preamble is sent and the server preamble + hello frame are consumed.
 fn raw_handshake(addr: &str) -> (TcpStream, FrameReader) {
+    raw_handshake_as(addr, proto::VERSION)
+}
+
+/// Like [`raw_handshake`] but announcing an arbitrary client protocol
+/// version in the preamble (the server accepts `MIN_VERSION..=VERSION`
+/// and records the peer's version for per-connection compat decisions).
+fn raw_handshake_as(addr: &str, version: u32) -> (TcpStream, FrameReader) {
     let mut stream = TcpStream::connect(addr).unwrap();
-    stream.write_all(&proto::encode_preamble()).unwrap();
+    let mut pre = proto::encode_preamble();
+    pre[4..8].copy_from_slice(&version.to_le_bytes());
+    stream.write_all(&pre).unwrap();
     let mut pre = [0u8; proto::PREAMBLE_LEN];
     stream.read_exact(&mut pre).unwrap();
     assert_eq!(proto::decode_preamble(&pre).unwrap(), proto::VERSION);
@@ -262,6 +272,7 @@ fn corrupt_checksum_answered_with_malformed_then_close() {
         rows: 1,
         cols: 12,
         data: vec![0.0; 12],
+        trace: None,
     })
     .to_bytes();
     let mid = bytes.len() / 2;
@@ -326,6 +337,7 @@ fn truncated_frame_then_close_is_survived() {
             rows: 1,
             cols: 12,
             data: vec![0.0; 12],
+            trace: None,
         })
         .to_bytes();
         stream.write_all(&bytes[..bytes.len() / 2]).unwrap();
@@ -458,6 +470,7 @@ fn frame_menu(rng: &mut Rng) -> Vec<Frame> {
             rows: 2,
             cols: 3,
             data: data6,
+            trace: None,
         }),
         Frame::Request(RequestFrame {
             id: 1,
@@ -465,6 +478,7 @@ fn frame_menu(rng: &mut Rng) -> Vec<Frame> {
             rows: 1,
             cols: 1,
             data: vec![-0.0],
+            trace: Some(TraceContext { trace_id: u64::MAX, parent_span: 1 }),
         }),
         Frame::Response(ResponseFrame { id: 7, rows: 1, cols: 4, data: data4 }),
         Frame::Error(ErrorFrame {
@@ -476,6 +490,11 @@ fn frame_menu(rng: &mut Rng) -> Vec<Frame> {
         Frame::StatsResponse(StatsResponseFrame {
             id: 42,
             json: "{\"k\":[1,2,3],\"s\":\"\\\"✓\\\"\"}".to_string(),
+        }),
+        Frame::FleetStatsRequest(FleetStatsRequestFrame { id: u64::MAX }),
+        Frame::FleetStatsResponse(FleetStatsResponseFrame {
+            id: u64::MAX,
+            json: "{\"fleet\":{\"backends_ok\":2},\"backends\":[]}".to_string(),
         }),
     ]
 }
@@ -569,6 +588,150 @@ fn hostile_tails_error_typed_without_desyncing_the_valid_prefix() {
         matches!(err, Some(WireError::Closed)),
         "mid-frame EOF must be typed Closed, got {err:?}"
     );
+}
+
+// ---- LCQ-RPC v3 compat + fleet-stats hostile input (PR 10) --------------
+
+/// Wrap an arbitrary payload in a valid envelope (`len | payload |
+/// fnv1a(payload)`), mirroring the byte spec in `docs/wire-protocol.md`.
+/// Putting hostile payloads behind a *correct* checksum ensures the
+/// decode-level rejection is what gets exercised, not the checksum gate.
+fn envelope(payload: &[u8]) -> Vec<u8> {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut out = Vec::with_capacity(payload.len() + 12);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&h.to_le_bytes());
+    out
+}
+
+#[test]
+fn v2_connection_roundtrips_but_rejects_trace_context() {
+    let (reg, _) = toy_registry();
+    let server = start_server(Arc::clone(&reg), loopback_cfg());
+    let addr = server.local_addr().to_string();
+
+    // a v2-negotiated connection still serves trace-less requests: the
+    // trace tail is the only v3 addition to the Request frame
+    {
+        let (mut stream, mut reader) = raw_handshake_as(&addr, 2);
+        let bytes = Frame::Request(RequestFrame {
+            id: 21,
+            model: "toy-k4".to_string(),
+            rows: 1,
+            cols: 12,
+            data: vec![0.0; 12],
+            trace: None,
+        })
+        .to_bytes();
+        stream.write_all(&bytes).unwrap();
+        loop {
+            match reader.poll_frame(&mut stream) {
+                Ok(Some(Frame::Response(r))) => {
+                    assert_eq!(r.id, 21);
+                    assert_eq!(r.cols, 4);
+                    break;
+                }
+                Ok(Some(f)) => panic!("expected response on v2 conn, got {f:?}"),
+                Ok(None) => continue,
+                Err(e) => panic!("v2 round trip failed: {e}"),
+            }
+        }
+    }
+
+    // a trace-context tail on that same negotiated version is a protocol
+    // violation: typed Malformed, then close — never a guess at the 9
+    // extra bytes' meaning
+    let (mut stream, mut reader) = raw_handshake_as(&addr, 2);
+    let bytes = Frame::Request(RequestFrame {
+        id: 22,
+        model: "toy-k4".to_string(),
+        rows: 1,
+        cols: 12,
+        data: vec![0.0; 12],
+        trace: Some(TraceContext { trace_id: 0xABCD, parent_span: 0 }),
+    })
+    .to_bytes();
+    stream.write_all(&bytes).unwrap();
+    let err = read_error_then_eof(&mut stream, &mut reader).expect("server must report");
+    assert_eq!(err.code, ErrorCode::Malformed);
+    // the abuse is contained: a fresh connection still serves
+    let mut client = NetClient::connect(&addr).expect("fresh connection after abuse");
+    assert!(client.infer("toy-k4", &[0.0; 12]).is_ok());
+}
+
+#[test]
+fn partial_trace_tails_reject_malformed_at_decode() {
+    // the v3 trace tail is all-or-nothing: exactly 9 bytes (u64 id + u8
+    // parent span) or absent. Every partial length must be Malformed.
+    let full = Frame::Request(RequestFrame {
+        id: 1,
+        model: "m".to_string(),
+        rows: 1,
+        cols: 1,
+        data: vec![0.5],
+        trace: Some(TraceContext { trace_id: 7, parent_span: 1 }),
+    })
+    .payload();
+    let bare_len = full.len() - 9;
+    for extra in 0..=9usize {
+        let res = Frame::decode_payload(&full[..bare_len + extra]);
+        if extra == 0 || extra == 9 {
+            assert!(res.is_ok(), "tail of {extra} bytes must decode, got {res:?}");
+        } else {
+            assert!(
+                matches!(res, Err(WireError::Malformed(_))),
+                "tail of {extra} bytes must be Malformed, got {res:?}"
+            );
+        }
+    }
+    // a 10th byte after a complete tail is trailing garbage
+    let mut over = full.clone();
+    over.push(0);
+    assert!(matches!(Frame::decode_payload(&over), Err(WireError::Malformed(_))));
+}
+
+#[test]
+fn hostile_fleet_stats_frames_reject_malformed_without_desync() {
+    let (reg, _) = toy_registry();
+    let server = start_server(Arc::clone(&reg), loopback_cfg());
+    let addr = server.local_addr().to_string();
+
+    // (a) truncated: tag 7 with a 4-byte id stub instead of 8
+    {
+        let (mut stream, mut reader) = raw_handshake(&addr);
+        let mut payload = vec![7u8];
+        payload.extend_from_slice(&42u32.to_le_bytes());
+        stream.write_all(&envelope(&payload)).unwrap();
+        let err = read_error_then_eof(&mut stream, &mut reader).expect("server must report");
+        assert_eq!(err.code, ErrorCode::Malformed);
+    }
+    // (b) trailing byte after a well-formed id
+    {
+        let (mut stream, mut reader) = raw_handshake(&addr);
+        let mut payload = vec![7u8];
+        payload.extend_from_slice(&42u64.to_le_bytes());
+        payload.push(0xFF);
+        stream.write_all(&envelope(&payload)).unwrap();
+        let err = read_error_then_eof(&mut stream, &mut reader).expect("server must report");
+        assert_eq!(err.code, ErrorCode::Malformed);
+    }
+    // (c) even a well-formed FleetStatsRequest is Malformed at a backend:
+    // fleet aggregation is served by fabric routers only
+    {
+        let (mut stream, mut reader) = raw_handshake(&addr);
+        let bytes = Frame::FleetStatsRequest(FleetStatsRequestFrame { id: 9 }).to_bytes();
+        stream.write_all(&bytes).unwrap();
+        let err = read_error_then_eof(&mut stream, &mut reader).expect("server must report");
+        assert_eq!(err.code, ErrorCode::Malformed);
+    }
+    // none of the abuse wedged the server
+    let mut client = NetClient::connect(&addr).expect("fresh connection after abuse");
+    assert!(client.infer("toy-k4", &[0.0; 12]).is_ok());
 }
 
 #[test]

@@ -22,10 +22,18 @@
 //!    partial frame), and after `stop()` — for both the `NetServer` and
 //!    the `RouterServer`;
 //! 8. the docs that describe all of the above actually name the metrics,
-//!    stages and wire tags that exist in the code.
+//!    stages and wire tags that exist in the code;
+//! 9. (v3) one trace id stitches the tiers: every traced request routed
+//!    through a `RouterServer` resolves to a router-side hop span AND a
+//!    backend-side 7-stage span by the same id, `Histogram::merge` is
+//!    bucket-exact (merging snapshots equals recording into one
+//!    histogram), the `FleetStats` merged view reconciles **exactly**
+//!    with the per-backend sections it was built from, and
+//!    `obs::RateWindow` turns successive fleet snapshots into exact
+//!    windowed rates.
 //!
 //! `ci.sh` and `make tier1` run this file under the default thread policy
-//! and again with `LCQUANT_THREADS=2`.
+//! and again with `LCQUANT_THREADS=2` (`smoke-obs-fleet`).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -45,7 +53,10 @@ use lcquant::net::{
 use lcquant::nn::sgd::ClippedLrSchedule;
 use lcquant::nn::{Activation, Mlp, MlpSpec};
 use lcquant::obs::hist::{bucket_index, bucket_max_ns};
-use lcquant::obs::{self, CounterId, GaugeId, HistId, Histogram, Stage, Trace, TraceRing};
+use lcquant::obs::{
+    self, CounterId, GaugeId, HistId, Histogram, HistogramSnapshot, RateWindow, RouterStage,
+    Stage, Trace, TraceRing,
+};
 use lcquant::quant::{LayerQuantizer, Scheme};
 use lcquant::serve::{PackedModel, Registry, ServerConfig};
 use lcquant::util::backoff::BackoffCfg;
@@ -96,28 +107,42 @@ fn serial_guard() -> std::sync::MutexGuard<'static, ()> {
 
 #[test]
 fn recording_hot_path_performs_zero_allocations() {
-    // build everything (histogram, ring, one trace) *before* measuring
+    // build everything (histogram, ring, one trace, a full rate window,
+    // a merge accumulator) *before* measuring
     let hist = Histogram::new();
     let ring = TraceRing::new(64);
-    let mut trace = Trace::from_parts(0, [0; obs::STAGES]);
+    let mut trace = Trace::from_parts(0, 0, [0; obs::STAGES]);
     // warm one pass so any lazy init is behind us
     hist.record_ns(1);
     ring.record(&trace);
     obs::counter(CounterId::TracesRecorded).get();
+    let mut win = RateWindow::new(4);
+    for t in 0..4u64 {
+        win.push(t as f64, t, 0, hist.snapshot());
+    }
+    let mut merged = hist.snapshot();
 
     let before = thread_allocs();
     for i in 0..10_000u64 {
         hist.record_ns(i.wrapping_mul(2_654_435_761) & 0xff_ffff);
         trace.id = i;
+        trace.trace_id = i + 1; // the traced (v3) record path
         trace.set(Stage::Compute, i & 0xffff);
         ring.record(&trace);
         obs::gauge(GaugeId::LcMu).set(i as f64);
         obs::counter(CounterId::TracesRecorded).add(0);
         obs::hist(HistId::ServeLatency).record_ns(i & 0xfff);
+        // snapshot → merge → window push: the fleet-stats aggregation
+        // path is fixed-size arithmetic, no heap
+        let snap = hist.snapshot();
+        merged.merge(&snap);
+        win.push((4 + i) as f64, i, 0, snap);
     }
     let delta = thread_allocs() - before;
     assert_eq!(delta, 0, "metrics hot path allocated {delta} times in 10k records");
     assert!(hist.snapshot().count() >= 10_000);
+    assert!(merged.count() > 0);
+    assert!(win.rates().is_some());
 }
 
 // ---- 2. bucket boundary properties -------------------------------------
@@ -334,6 +359,7 @@ fn stats_frame_round_trip_matches_loadgen_counts_exactly() {
         batch: 1,
         seed: 5,
         pipeline: 1,
+        trace: false,
     })
     .expect("loadgen run");
     // an unloaded loopback server must answer everything
@@ -477,7 +503,11 @@ fn stats_request_echoes_id_over_raw_socket() {
             Ok(Some(Frame::StatsResponse(r))) => {
                 assert_eq!(r.id, id, "response must echo the request id");
                 let snap = Json::parse(&r.json).expect("snapshot JSON");
-                for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+                let keys = [
+                    "server", "batch", "process", "pool", "plane", "traces", "traces_dropped",
+                    "trace_ids",
+                ];
+                for key in keys {
                     assert!(snap.get(key).is_some(), "snapshot missing '{key}'");
                 }
                 return;
@@ -526,7 +556,9 @@ fn stats_snapshot_is_valid_at_every_lifecycle_point() {
 
     // fresh: no traffic yet, the document is already complete
     let snap = Json::parse(&server.snapshot_json()).expect("fresh snapshot JSON");
-    for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+    let keys =
+        ["server", "batch", "process", "pool", "plane", "traces", "traces_dropped", "trace_ids"];
+    for key in keys {
         assert!(snap.get(key).is_some(), "fresh snapshot missing '{key}'");
     }
     assert_eq!(field_u64(field(&snap, "server"), "requests_ok"), 0);
@@ -544,7 +576,9 @@ fn stats_snapshot_is_valid_at_every_lifecycle_point() {
     assert!(results.iter().all(|r| r.is_ok()), "unloaded server answers every slot");
     let body = client.stats().expect("mid-traffic stats round trip");
     let snap = Json::parse(&body).expect("mid-traffic snapshot JSON");
-    for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+    let keys =
+        ["server", "batch", "process", "pool", "plane", "traces", "traces_dropped", "trace_ids"];
+    for key in keys {
         assert!(snap.get(key).is_some(), "mid-traffic snapshot missing '{key}'");
     }
     assert_eq!(field_u64(field(&snap, "server"), "requests_ok"), 6);
@@ -583,7 +617,7 @@ fn stats_snapshot_is_valid_at_every_lifecycle_point() {
     .expect("bind router");
 
     let snap = Json::parse(&router.snapshot_json()).expect("fresh router snapshot JSON");
-    for key in ["router", "backends", "process"] {
+    for key in ["router", "backends", "process", "plane", "traces", "traces_dropped", "trace_ids"] {
         assert!(snap.get(key).is_some(), "fresh router snapshot missing '{key}'");
     }
     assert_eq!(field_u64(field(&snap, "router"), "requests_ok"), 0);
@@ -594,7 +628,7 @@ fn stats_snapshot_is_valid_at_every_lifecycle_point() {
     assert!(results.iter().all(|r| r.is_ok()), "routed slots must all answer");
     let body = client.stats().expect("mid-traffic router stats");
     let snap = Json::parse(&body).expect("mid-traffic router snapshot JSON");
-    for key in ["router", "backends", "process"] {
+    for key in ["router", "backends", "process", "plane", "traces", "traces_dropped", "trace_ids"] {
         assert!(snap.get(key).is_some(), "mid-traffic router snapshot missing '{key}'");
     }
     assert_eq!(field_u64(field(&snap, "router"), "requests_ok"), 4);
@@ -604,6 +638,270 @@ fn stats_snapshot_is_valid_at_every_lifecycle_point() {
     let r = field(&snap, "router");
     assert_eq!(field_u64(r, "requests_ok"), 4);
     assert_eq!(field_u64(r, "stats_requests"), 1);
+}
+
+// ---- 9. cross-tier trace stitching + fleet stats (v3) -------------------
+
+fn start_router(replicas: &[String]) -> RouterServer {
+    RouterServer::start(RouterConfig {
+        net: NetConfig {
+            bind_addr: "127.0.0.1:0".to_string(),
+            max_connections: 8,
+            ..NetConfig::default()
+        },
+        fabric: FabricConfig {
+            shards: vec![ShardConfig { models: Vec::new(), replicas: replicas.to_vec() }],
+            retry_budget: 4,
+            deadline: Duration::from_secs(30),
+            backoff: BackoffCfg::ZERO,
+            probe_every: Duration::ZERO,
+            connect_timeout: Duration::from_secs(1),
+            seed: 7,
+        },
+    })
+    .expect("bind router")
+}
+
+#[test]
+fn histogram_merge_is_bucket_exact_and_preserves_percentile_discipline() {
+    let mut rng = Rng::new(0x4E46);
+    let h1 = Histogram::new();
+    let h2 = Histogram::new();
+    let pooled = Histogram::new();
+    let mut samples: Vec<u64> = Vec::new();
+    for i in 0..4_000usize {
+        let e = 8 + rng.below(20) as u32;
+        let v = (1u64 << e) | ((rng.below(usize::MAX) as u64) & ((1u64 << e) - 1));
+        if i % 3 == 0 {
+            h1.record_ns(v);
+        } else {
+            h2.record_ns(v);
+        }
+        pooled.record_ns(v);
+        samples.push(v);
+    }
+    samples.sort_unstable();
+
+    let mut merged = h1.snapshot();
+    merged.merge(&h2.snapshot());
+    let direct = pooled.snapshot();
+    // bucket-exact: merging two snapshots answers identically to having
+    // recorded both streams into one histogram (log₂ buckets align, so
+    // the merge is lossless — the fleet view is not an approximation)
+    assert_eq!(merged.count(), direct.count());
+    assert_eq!(merged.sum_ns, direct.sum_ns);
+    assert_eq!(merged.counts, direct.counts);
+    for q in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+        assert_eq!(merged.percentile_ns(q), direct.percentile_ns(q), "p{q} diverged");
+        // and the nearest-rank discipline vs the exact pooled samples
+        // still holds after the merge: same bucket as the true answer
+        let rank = ((q / 100.0) * (samples.len() - 1) as f64).round() as usize;
+        let exact = samples[rank.min(samples.len() - 1)];
+        assert_eq!(
+            bucket_index(merged.percentile_ns(q)),
+            bucket_index(exact),
+            "p{q}: merged histogram and exact samples disagree beyond one bucket"
+        );
+    }
+    assert_eq!(merged.max_ns(), direct.max_ns());
+
+    // merging an empty snapshot is the identity
+    let before = merged.clone();
+    merged.merge(&HistogramSnapshot::empty());
+    assert_eq!(merged.counts, before.counts);
+    assert_eq!(merged.sum_ns, before.sum_ns);
+
+    // the live-histogram fold agrees with the snapshot-side merge
+    let live = Histogram::new();
+    live.merge(&h1.snapshot());
+    live.merge(&h2.snapshot());
+    assert_eq!(live.snapshot().counts, direct.counts);
+    assert_eq!(live.snapshot().sum_ns, direct.sum_ns);
+
+    // the canonical serialized form round-trips count- and bucket-exact
+    let back = HistogramSnapshot::from_json(&merged.to_json()).expect("canonical form parses");
+    assert_eq!(back.counts, merged.counts);
+    assert_eq!(back.sum_ns, merged.sum_ns);
+    for q in [50.0, 99.0] {
+        assert_eq!(back.percentile_ns(q), merged.percentile_ns(q));
+    }
+}
+
+#[test]
+fn trace_ids_stitch_router_and_backend_spans_end_to_end() {
+    obs::set_enabled(true);
+    let b1 = start_toy_server();
+    let b2 = start_toy_server();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let router = start_router(&addrs);
+
+    // one client, a known trace base: request i carries id base + i
+    let n = 24u64;
+    let base = 0x7E5E_0000_0000u64;
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+    client.set_trace_base(base);
+    for _ in 0..n {
+        client.infer("toy-k4", &[0.1; 12]).expect("routed inference");
+    }
+    assert_eq!(client.traces_issued(), n);
+
+    // every issued id resolves to a router-side hop span…
+    let router_traces = router.traces();
+    for i in 1..=n {
+        let id = base.wrapping_add(i);
+        let span = router_traces
+            .iter()
+            .find(|t| t.trace_id == id)
+            .unwrap_or_else(|| panic!("trace {id:#x} missing from the router ring"));
+        let total = span.total_ns();
+        assert!(total > 0, "router span for {id:#x} must cover nonzero time");
+        for s in 0..obs::ROUTER_STAGES {
+            assert!(span.stage_ns[s] <= total, "hop stage {s} exceeds the span total");
+        }
+        // a real routed request spends real time waiting on its backend
+        assert!(span.stage_ns[RouterStage::BackendWait as usize] > 0);
+    }
+
+    // …AND a backend-side span: the union of the two rings holds every
+    // id, and each recorded trace accounts all seven pipeline stages
+    let mut backend_ids: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    for addr in &addrs {
+        let mut c = NetClient::connect(addr).unwrap();
+        let snap = Json::parse(&c.stats().unwrap()).expect("backend snapshot JSON");
+        for v in field(&snap, "trace_ids").as_arr().expect("trace_ids array") {
+            backend_ids.insert(v.as_f64().expect("trace id number") as u64);
+        }
+        for t in field(&snap, "traces").as_arr().expect("traces array") {
+            let total = field(t, "total_ms").as_f64().unwrap();
+            for s in Stage::ALL {
+                let ms = field(field(t, "stages"), s.name()).as_f64().unwrap();
+                assert!(
+                    ms >= 0.0 && ms <= total + 1e-9,
+                    "stage '{}' ({ms}ms) outside its trace total ({total}ms)",
+                    s.name()
+                );
+            }
+        }
+    }
+    for i in 1..=n {
+        let id = base.wrapping_add(i);
+        assert!(backend_ids.contains(&id), "trace {id:#x} not in any backend ring");
+    }
+}
+
+#[test]
+fn fleet_stats_merge_reconciles_exactly_with_per_backend_sums() {
+    obs::set_enabled(true);
+    let b1 = start_toy_server();
+    let b2 = start_toy_server();
+    let addrs = vec![b1.local_addr().to_string(), b2.local_addr().to_string()];
+    let router = start_router(&addrs);
+
+    // traffic through the router so the books have something in them
+    let traffic = 30u64;
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+    for _ in 0..traffic {
+        client.infer("toy-k4", &[0.2; 12]).expect("routed inference");
+    }
+
+    let body = client.fleet_stats().expect("fleet stats round trip");
+    let doc = Json::parse(&body).expect("fleet stats JSON");
+    let fleet = field(&doc, "fleet");
+    assert_eq!(field_u64(fleet, "backends_total"), 2);
+    assert_eq!(field_u64(fleet, "backends_ok"), 2);
+    assert_eq!(field_u64(field(fleet, "health"), "healthy"), 2);
+    assert_eq!(field_u64(field(fleet, "health"), "down"), 0);
+
+    // per-backend sections carry each backend's full stats document;
+    // sum their counters by hand
+    let sections = field(&doc, "backends").as_arr().expect("backends array");
+    assert_eq!(sections.len(), 2);
+    let (mut sum_ok, mut sum_shed, mut sum_failed, mut sum_lat) = (0u64, 0u64, 0u64, 0u64);
+    for s in sections {
+        assert!(field(s, "ok").as_bool().unwrap(), "backend section must be ok");
+        let stats = field(s, "stats");
+        let srv = field(stats, "server");
+        sum_ok += field_u64(srv, "requests_ok");
+        sum_shed += field_u64(srv, "requests_shed");
+        sum_failed += field_u64(srv, "requests_failed");
+        sum_lat += field_u64(field(field(stats, "batch"), "latency"), "count");
+    }
+    // the merged fleet view equals the sum of the sections it was built
+    // from — exactly, not approximately
+    let counters = field(fleet, "counters");
+    assert_eq!(field_u64(counters, "requests_ok"), sum_ok);
+    assert_eq!(field_u64(counters, "requests_shed"), sum_shed);
+    assert_eq!(field_u64(counters, "requests_failed"), sum_failed);
+    assert_eq!(field_u64(field(fleet, "latency"), "count"), sum_lat);
+    // and the books balance against the traffic: every routed request
+    // landed on exactly one backend
+    assert_eq!(sum_ok, traffic);
+    assert_eq!(sum_lat, traffic);
+    assert_eq!(sum_shed + sum_failed, 0);
+    // the router counts the fan-out it served
+    assert_eq!(field_u64(field(&doc, "router"), "fleet_stats_requests"), 1);
+    assert_eq!(field_u64(field(&doc, "router"), "requests_ok"), traffic);
+    assert_eq!(router.stats().fleet_stats_requests, 1);
+}
+
+#[test]
+fn rate_window_derives_exact_rates_from_fleet_snapshots() {
+    obs::set_enabled(true);
+    let b1 = start_toy_server();
+    let addrs = vec![b1.local_addr().to_string()];
+    let router = start_router(&addrs);
+    let mut client = NetClient::connect(&router.local_addr().to_string()).unwrap();
+
+    let fleet_sample = |client: &mut NetClient| -> (u64, u64, HistogramSnapshot) {
+        let doc = Json::parse(&client.fleet_stats().unwrap()).unwrap();
+        let fleet = field(&doc, "fleet");
+        let c = field(fleet, "counters");
+        let hist = HistogramSnapshot::from_json(field(fleet, "latency"))
+            .expect("canonical fleet latency");
+        (
+            field_u64(c, "requests_ok") + field_u64(c, "requests_failed"),
+            field_u64(c, "requests_shed"),
+            hist,
+        )
+    };
+
+    let mut win = RateWindow::new(8);
+    let (req0, shed0, h0) = fleet_sample(&mut client);
+    win.push(0.0, req0, shed0, h0);
+    let burst = 20u64;
+    for _ in 0..burst {
+        client.infer("toy-k4", &[0.3; 12]).expect("routed inference");
+    }
+    let (req1, shed1, h1) = fleet_sample(&mut client);
+    // timestamps are caller-supplied, so the books are exact: 20 requests
+    // over exactly one second of window span
+    win.push(1.0, req1, shed1, h1);
+    let r = win.rates().expect("two samples give rates");
+    assert_eq!(r.qps, burst as f64);
+    assert_eq!(r.shed_per_s, 0.0);
+    assert_eq!(r.shed_rate, 0.0);
+    assert_eq!(r.delta_count, burst);
+    assert!(r.p99_ms >= 0.0);
+}
+
+#[test]
+fn loadgen_reports_full_trace_coverage_against_a_v3_server() {
+    obs::set_enabled(true);
+    let server = start_toy_server(); // default trace ring: 256 slots ≥ 40 ids
+    let mut cfg = LoadGenConfig::new(&server.local_addr().to_string());
+    cfg.connections = 2;
+    cfg.requests_per_conn = 20;
+    cfg.model = Some("toy-k4".to_string());
+    cfg.trace = true;
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert_eq!(report.ok, 40);
+    assert_eq!(report.trace_issued, 40, "every issued request minted a trace id");
+    assert_eq!(
+        report.trace_found, 40,
+        "every issued trace id must be found in the target's ring"
+    );
+    assert!((report.trace_coverage() - 1.0).abs() < 1e-9);
+    assert!(report.summary().contains("trace coverage"));
 }
 
 // ---- 8. the docs name what the code ships ------------------------------
@@ -628,9 +926,22 @@ fn observability_doc_names_every_metric_and_stage() {
     for s in Stage::ALL {
         assert!(text.contains(s.name()), "OBSERVABILITY.md missing stage '{}'", s.name());
     }
+    for s in RouterStage::ALL {
+        assert!(
+            text.contains(s.name()),
+            "OBSERVABILITY.md missing router stage '{}'",
+            s.name()
+        );
+    }
     // the snapshot schema keys the wire clients depend on
-    for key in ["server", "batch", "process", "pool", "traces", "traces_dropped"] {
+    for key in
+        ["server", "batch", "process", "pool", "plane", "traces", "traces_dropped", "trace_ids"]
+    {
         assert!(text.contains(key), "OBSERVABILITY.md missing snapshot key '{key}'");
+    }
+    // the v3 fleet machinery is documented by name
+    for needle in ["Histogram::merge", "RateWindow", "FleetStats", "lcquant top", "wakeups"] {
+        assert!(text.contains(needle), "OBSERVABILITY.md missing '{needle}'");
     }
 }
 
@@ -643,6 +954,18 @@ fn wire_protocol_doc_matches_the_shipped_version_and_tags() {
     );
     assert!(text.contains(&format!("version = {}", proto::VERSION)));
     for needle in ["StatsRequest", "StatsResponse", "tag = 5", "tag = 6", "Version history"] {
+        assert!(text.contains(needle), "wire-protocol.md missing '{needle}'");
+    }
+    // v3: the trace tail, the fleet frame pair, and the v2 compat rule
+    for needle in [
+        "FleetStatsRequest",
+        "FleetStatsResponse",
+        "tag = 7",
+        "tag = 8",
+        "trace context",
+        "parent_span",
+        "v2 compatibility",
+    ] {
         assert!(text.contains(needle), "wire-protocol.md missing '{needle}'");
     }
 }
